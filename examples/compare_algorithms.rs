@@ -1,0 +1,48 @@
+//! Figure-3-style comparison: DiSCO-F vs DiSCO-S vs original DiSCO vs
+//! DANE vs CoCoA+ on one dataset/loss, reporting ‖∇f‖ against both
+//! communication rounds and simulated elapsed time.
+//!
+//! ```bash
+//! cargo run --release --example compare_algorithms -- --dataset news20s --scale 4
+//! ```
+
+use disco::coordinator::experiments::{figure3_one, ExperimentConfig};
+use disco::loss::LossKind;
+use disco::util::cli::Args;
+
+fn main() {
+    let args = Args::new("compare_algorithms", "paper Figure 3 for one dataset/loss")
+        .opt("dataset", Some("news20s"), "news20s | rcv1s | splices | tiny")
+        .opt("loss", Some("logistic"), "logistic | quadratic")
+        .opt("scale", Some("4"), "dataset down-scale factor")
+        .opt("max-outer", Some("40"), "outer iteration cap")
+        .parse_env()
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.scale = args.get_usize("scale").unwrap();
+    cfg.max_outer = args.get_usize("max-outer").unwrap();
+    cfg.grad_target = 1e-8;
+    let dataset = args.get("dataset").unwrap();
+    let loss = LossKind::parse(&args.get("loss").unwrap()).expect("bad --loss");
+
+    let (summary, results) = figure3_one(&cfg, &dataset, loss).expect("figure3 run");
+    println!("{summary}");
+
+    // Paper-style readout: rounds and time to reach three accuracy levels.
+    for tol in [1e-2, 1e-4, 1e-6] {
+        println!("--- to reach ‖∇f‖ ≤ {tol:.0e} ---");
+        for (algo, res) in &results {
+            match (res.rounds_to_tol(tol), res.time_to_tol(tol)) {
+                (Some(r), Some(t)) => {
+                    println!("{:<8} {:>7} rounds   {:>9.3}s", algo.name(), r, t)
+                }
+                _ => println!("{:<8}     (not reached)", algo.name()),
+            }
+        }
+    }
+    println!("\nCSV written to results/fig3_{dataset}_{}.csv", loss.name());
+}

@@ -1,0 +1,54 @@
+//! Figure 5: how many samples are needed to compute the Hessian?
+//! DiSCO-F with the HVP restricted to a uniformly resampled fraction of
+//! the data per outer iteration (the paper's §5.4 experiment, no theory).
+//!
+//! ```bash
+//! cargo run --release --example hessian_subsample -- --dataset rcv1s --scale 4
+//! ```
+
+use disco::algorithms::{run, AlgoKind, RunConfig};
+use disco::data::registry;
+use disco::loss::LossKind;
+use disco::util::cli::Args;
+
+fn main() {
+    let args = Args::new(
+        "hessian_subsample",
+        "paper Figure 5: Hessian subsampling sweep for DiSCO-F",
+    )
+    .opt("dataset", Some("rcv1s"), "dataset name")
+    .opt("scale", Some("4"), "dataset down-scale factor")
+    .opt("grad-tol", Some("1e-7"), "target accuracy")
+    .parse_env()
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let name = args.get("dataset").unwrap();
+    let ds = registry::load_scaled(&name, args.get_usize("scale").unwrap()).expect("dataset");
+    let lambda = registry::spec(&name).unwrap().lambda;
+    println!("{}\n", ds.describe());
+
+    println!(
+        "{:>9} {:>8} {:>12} {:>12} {:>10}",
+        "fraction", "rounds", "sim_time", "‖∇f‖", "converged"
+    );
+    for frac in [1.0, 0.5, 0.25, 0.125, 0.0625] {
+        let mut cfg = RunConfig::new(AlgoKind::DiscoF, LossKind::Logistic, lambda);
+        cfg.hessian_fraction = frac;
+        cfg.grad_tol = args.get_f64("grad-tol").unwrap();
+        cfg.max_outer = 80;
+        let res = run(&ds, &cfg);
+        println!(
+            "{:>8.2}% {:>8} {:>11.4}s {:>12.3e} {:>10}",
+            100.0 * frac,
+            res.stats.rounds(),
+            res.sim_seconds,
+            res.final_grad_norm(),
+            res.converged
+        );
+    }
+    println!(
+        "\nexpected shape (paper Fig. 5): for n ≫ d data (rcv1 regime) small\nfractions still converge and can win in time; for d ≫ n (news20) the\nsubsampled Hessian misses feature interactions and hurts."
+    );
+}

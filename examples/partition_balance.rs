@@ -1,0 +1,64 @@
+//! Ablation: nnz-balanced vs count-balanced feature partitioning.
+//!
+//! The paper's DiSCO-F claim is that all nodes do "exactly the same work";
+//! with contiguous equal-*count* feature shards on Zipf-distributed text
+//! data that is false — node 0 gets the head features and most of the
+//! nonzeros. `Partition::by_features_balanced` cuts at nnz quantiles
+//! instead. This example measures shard imbalance, per-node compute
+//! balance, and end-to-end simulated time for both strategies.
+//!
+//! ```bash
+//! cargo run --release --example partition_balance
+//! ```
+
+use disco::algorithms::{run, AlgoKind, RunConfig};
+use disco::data::{registry, Partition, SyntheticConfig};
+use disco::loss::LossKind;
+
+fn main() {
+    // Strongly Zipf-skewed corpus (exponent 1.3).
+    let ds = SyntheticConfig::new("zipfy", 4096, 8192)
+        .density(0.004)
+        .zipf(1.3)
+        .seed(31)
+        .generate();
+    println!("{}\n", ds.describe());
+
+    let tau = 100.0;
+    let show = |name: &str, p: &Partition| {
+        println!(
+            "{name:<22} nnz={:?} d_j={:?}  nnz-imbalance {:.2}",
+            p.shards.iter().map(|s| s.x.nnz()).collect::<Vec<_>>(),
+            p.shards.iter().map(|s| s.len()).collect::<Vec<_>>(),
+            p.imbalance()
+        );
+    };
+    show("count-balanced:", &Partition::by_features(&ds, 4));
+    show("nnz-balanced (κ=0):", &Partition::by_features_balanced(&ds, 4));
+    show(
+        "cost-balanced (κ=2τ):",
+        &Partition::by_features_cost_balanced(&ds, 4, 2.0 * tau + 10.0),
+    );
+    println!();
+
+    let lambda = registry::spec("news20s").unwrap().lambda;
+    for (name, flag) in [("count-balanced", false), ("nnz-balanced", true)] {
+        let mut cfg = RunConfig::new(AlgoKind::DiscoF, LossKind::Logistic, lambda);
+        cfg.balanced_partition = flag;
+        cfg.grad_tol = 1e-8;
+        cfg.max_outer = 40;
+        cfg.trace = true;
+        let res = run(&ds, &cfg);
+        println!(
+            "{name:<16} rounds={:>5} sim_time={:.3}s compute_balance={:.2} utilization={:.1}% converged={}",
+            res.stats.rounds(),
+            res.sim_seconds,
+            res.trace.compute_balance(),
+            100.0 * res.trace.utilization(),
+            res.converged
+        );
+    }
+    println!(
+        "\nfinding (recorded in EXPERIMENTS.md): pure-nnz balancing over-packs tail\nfeatures onto one node — its O(d_j·τ) Woodbury/vector work then dominates on\nsparse data. The κ=2τ cost model balances both terms."
+    );
+}

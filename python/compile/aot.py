@@ -1,0 +1,123 @@
+"""AOT pipeline: lower the Layer-2 jax functions to HLO *text* artifacts.
+
+Runs once at `make artifacts`; the Rust runtime
+(rust/src/runtime/) loads artifacts/<name>.hlo.txt via
+HloModuleProto::from_text_file, compiles on the PJRT CPU client, and
+executes them on the request path. Python is never imported at runtime.
+
+HLO text -- not `.serialize()` -- is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids. See
+/opt/xla-example/README.md.
+
+A manifest.json records every artifact's inputs/outputs (shape, dtype) so
+the Rust registry can type-check calls at load time.
+
+Shape variants cover the runtime demo configurations (see
+rust/src/runtime/registry.rs): the `xla-demo` dataset d=1024, n=4096 on
+m=4 nodes under both partitionings, plus the single-node quickstart.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# (d_shard, n_shard) variants: DiSCO-F shard (256, 4096), DiSCO-S shard
+# (1024, 1024), single node (1024, 4096), and a tiny test shape (64, 128).
+SHAPES = [(16, 128), (64, 128), (256, 4096), (1024, 1024), (1024, 4096)]
+TAU = 128
+
+
+def artifact_list():
+    """Yield (name, function, example_args)."""
+    for d, n in SHAPES:
+        yield f"margins_{d}x{n}", model.margins, (spec(d, n), spec(d))
+        yield f"xmatvec_{d}x{n}", model.xmatvec, (spec(d, n), spec(n))
+        yield (
+            f"hvp_{d}x{n}",
+            model.local_hvp,
+            (spec(d, n), spec(n), spec(d), spec(1), spec(1)),
+        )
+        for loss in model.LOSSES:
+            yield (
+                f"grad_{loss}_{d}x{n}",
+                model.make_grad_fn(loss),
+                (spec(d, n), spec(n), spec(n), spec(1), spec(1), spec(d)),
+            )
+    # Gram variants keyed by feature dimension only.
+    for d in sorted({d for d, _ in SHAPES}):
+        yield f"gram_{d}x{TAU}", model.woodbury_gram, (spec(d, TAU),)
+    # Margin-only functions (shared across shard shapes by n).
+    for n in sorted({n for _, n in SHAPES}):
+        for loss in model.LOSSES:
+            yield (
+                f"scalings_{loss}_{n}",
+                model.make_scalings_fn(loss),
+                (spec(n), spec(n)),
+            )
+            yield (
+                f"objective_{loss}_{n}",
+                model.make_objective_fn(loss),
+                (spec(n), spec(n), spec(1)),
+            )
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, fn, args in artifact_list():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [
+            {"shape": list(s.shape), "dtype": "f32"}
+            for s in jax.eval_shape(fn, *args)
+        ]
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"shape": list(a.shape), "dtype": "f32"} for a in args],
+            "outputs": out_shapes,
+        }
+        print(f"lowered {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = p.parse_args()
+    out_dir = args.out
+    if out_dir.endswith(".hlo.txt"):
+        # Makefile passes the sentinel artifact path; use its directory.
+        out_dir = os.path.dirname(out_dir)
+    manifest = lower_all(out_dir)
+    print(f"wrote {len(manifest)} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Pallas kernels (Layer 1) and their pure-jnp oracle (ref.py)."""
+
+from . import gram, matvec, ref  # noqa: F401

@@ -1,0 +1,39 @@
+"""Layer-1 Pallas kernel: Woodbury inner Gram matrix.
+
+K = U~^T U~ for the scaled preconditioner columns U~ (d x tau). The grid
+walks feature blocks of U~, accumulating the (tau x tau) Gram in the output
+block; the tau x tau Cholesky + triangular solves stay in the Rust
+coordinator (they are O(tau^2..3) on tau ~ 100 -- negligible, and keeping
+them in L3 avoids LAPACK custom-calls in the artifact).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matvec import _divisor_block, BLOCK_D
+
+
+def _gram_kernel(u_ref, k_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        k_ref[...] = jnp.zeros_like(k_ref)
+
+    k_ref[...] += u_ref[...].T @ u_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def gram(u_scaled, block_d: int = BLOCK_D):
+    """K = U~^T U~ via a feature-block Pallas grid."""
+    d, tau = u_scaled.shape
+    bd = _divisor_block(d, block_d)
+    return pl.pallas_call(
+        _gram_kernel,
+        out_shape=jax.ShapeDtypeStruct((tau, tau), u_scaled.dtype),
+        grid=(d // bd,),
+        in_specs=[pl.BlockSpec((bd, tau), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tau, tau), lambda i: (0, 0)),
+        interpret=True,
+    )(u_scaled)

@@ -1,0 +1,103 @@
+"""Layer-1 Pallas kernels: the PCG hot-spot matvecs.
+
+The paper's per-PCG-step compute is two skinny products against the shard's
+data block (Algorithm 2/3 step 4):
+
+  up-sweep    t = X^T u     (gather over samples)
+  down-sweep  y = X  c      (scatter over features)
+
+Both are expressed as tiled Pallas kernels so the HBM<->VMEM schedule is
+explicit (DESIGN.md "Hardware adaptation"): the grid walks (feature-block,
+sample-block) tiles of X exactly once, each tile sized to fit VMEM
+(<= 2 MiB), with accumulation over the contraction axis in the output
+block. The contraction `x_tile.T @ u_tile` / `x_tile @ c_tile` is an
+MXU-shaped (128-multiple) matmul on real TPU; `interpret=True` is required
+on this image's CPU PJRT (Mosaic custom-calls cannot execute there), so
+these kernels are *structurally* TPU-ready and *numerically* validated
+against `ref.py`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile targets: 256x512 f32 = 512 KiB per X tile.
+BLOCK_D = 256
+BLOCK_N = 512
+
+
+def _divisor_block(dim: int, target: int) -> int:
+    """Largest block size <= target that divides dim (shapes in the
+    artifact registry are powers of two, so this is exact)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _xt_kernel(x_ref, u_ref, t_ref):
+    # Accumulate t[j_block] += X[i_block, j_block]^T @ u[i_block] over i.
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    t_ref[...] += x_ref[...].T @ u_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_n"))
+def xt_matvec(x, u, block_d: int = BLOCK_D, block_n: int = BLOCK_N):
+    """t = X^T u via a (sample-block, feature-block) Pallas grid."""
+    d, n = x.shape
+    bd = _divisor_block(d, block_d)
+    bn = _divisor_block(n, block_n)
+    grid = (n // bn, d // bd)
+    return pl.pallas_call(
+        _xt_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd, bn), lambda j, i: (i, j)),
+            pl.BlockSpec((bd,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda j, i: (j,)),
+        interpret=True,
+    )(x, u)
+
+
+def _xc_kernel(x_ref, c_ref, y_ref):
+    # Accumulate y[i_block] += X[i_block, j_block] @ c[j_block] over j.
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] += x_ref[...] @ c_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_n"))
+def x_scaled_matvec(x, c, block_d: int = BLOCK_D, block_n: int = BLOCK_N):
+    """y = X @ c via a (feature-block, sample-block) Pallas grid."""
+    d, n = x.shape
+    bd = _divisor_block(d, block_d)
+    bn = _divisor_block(n, block_n)
+    grid = (d // bd, n // bn)
+    return pl.pallas_call(
+        _xc_kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i, j: (i,)),
+        interpret=True,
+    )(x, c)
+
+
+def vmem_bytes(d: int, n: int, block_d: int = BLOCK_D, block_n: int = BLOCK_N) -> int:
+    """Estimated VMEM footprint of one grid step (X tile + vectors), bytes.
+    Used by the structure tests and the DESIGN.md roofline estimate."""
+    bd = _divisor_block(d, block_d)
+    bn = _divisor_block(n, block_n)
+    return 4 * (bd * bn + bd + bn)

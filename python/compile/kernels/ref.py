@@ -1,0 +1,73 @@
+"""Pure-jnp reference oracle for the Pallas kernels (Layer 1 correctness).
+
+Every kernel in this package has an exact counterpart here, written with
+plain jax.numpy so there is no shared code with the kernels. pytest (with
+hypothesis sweeps over shapes) asserts `assert_allclose(kernel, ref)`.
+
+Conventions (matching the Rust side, see rust/src/linalg/dense.rs):
+  X : (d, n) float32, columns are samples.
+  All products keep the paper's scaling: the 1/n (or 1/h for subsampled
+  Hessians) and the +lambda*u regularizer term are explicit arguments.
+"""
+
+import jax.numpy as jnp
+
+
+def margins(x, w):
+    """z = X^T w in R^n."""
+    return x.T @ w
+
+
+def scaled_matvec(x, coeff):
+    """y = X @ coeff in R^d (gradient/HVP down-sweep)."""
+    return x @ coeff
+
+
+def hvp(x, s, u, inv_div, lam):
+    """Regularized Hessian-vector product:
+
+        Hu = inv_div * X diag(s) X^T u + lam * u
+    """
+    t = x.T @ u
+    return inv_div * (x @ (s * t)) + lam * u
+
+
+def grad_data(x, dvec, inv_n):
+    """Data term of the gradient: g = inv_n * X @ dvec (dvec = phi'(z;y))."""
+    return inv_n * (x @ dvec)
+
+
+def gram(u_scaled):
+    """K = U~^T U~ in R^{tau x tau} -- the Woodbury inner Gram matrix
+    (before the +I and 1/dreg scaling, which the Rust coordinator owns)."""
+    return u_scaled.T @ u_scaled
+
+
+def logistic_deriv(z, y):
+    """d/dz log(1+exp(-y z)) = -y * sigmoid(-y z)."""
+    return -y / (1.0 + jnp.exp(y * z))
+
+
+def logistic_second(z, y):
+    s = 1.0 / (1.0 + jnp.exp(-y * z))
+    return s * (1.0 - s)
+
+
+def logistic_value(z, y):
+    return jnp.logaddexp(0.0, -y * z)
+
+
+def quadratic_deriv(z, y):
+    return 2.0 * (z - y)
+
+
+def quadratic_second(z, y):
+    # The 0*z + 0*y terms keep a data dependence on both arguments so that
+    # jax.jit's AOT lowering does not prune them from the artifact's
+    # parameter list (the Rust runtime calls every scalings_* artifact with
+    # the same (z, y) signature).
+    return jnp.full_like(z, 2.0) + 0.0 * z + 0.0 * y
+
+
+def quadratic_value(z, y):
+    return (z - y) ** 2

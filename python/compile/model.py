@@ -1,0 +1,119 @@
+"""Layer-2 JAX compute graph: the per-shard functions the Rust coordinator
+executes through PJRT on the request path.
+
+Each function here is a pure jax function calling the Layer-1 Pallas
+kernels; `aot.py` lowers them (per shape variant x loss) to HLO text in
+artifacts/. Scalars (lambda, 1/n, 1/h) arrive as shape-(1,) f32 inputs so
+one artifact serves every dataset configuration of a given shape.
+
+The sample-count normalization convention matches the Rust native path
+(rust/src/loss/objective.rs): data terms are divided by the *global* n,
+the +lambda*w / +lambda*u regularizer terms are added here per shard slice
+(each node owns a disjoint slice of w under DiSCO-F, so the sum over
+shards is exact; under DiSCO-S the caller passes lam=0 and adds lambda*w
+once after the ReduceAll).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import gram as gram_k
+from .kernels import matvec, ref
+
+LOSSES = ("logistic", "quadratic")
+
+
+def _deriv(loss, z, y):
+    if loss == "logistic":
+        return ref.logistic_deriv(z, y)
+    if loss == "quadratic":
+        return ref.quadratic_deriv(z, y)
+    raise ValueError(loss)
+
+
+def _second(loss, z, y):
+    if loss == "logistic":
+        return ref.logistic_second(z, y)
+    if loss == "quadratic":
+        return ref.quadratic_second(z, y)
+    raise ValueError(loss)
+
+
+def _value(loss, z, y):
+    if loss == "logistic":
+        return ref.logistic_value(z, y)
+    if loss == "quadratic":
+        return ref.quadratic_value(z, y)
+    raise ValueError(loss)
+
+
+def margins(x, w):
+    """z = X^T w  (the DiSCO-F up-sweep; ReduceAll'd across shards)."""
+    return (matvec.xt_matvec(x, w),)
+
+
+def xmatvec(x, c):
+    """y = X @ c  (the DiSCO-F down-sweep against the ReduceAll'd margins;
+    the caller supplies c = s * t * inv_div and adds lam*u)."""
+    return (matvec.x_scaled_matvec(x, c),)
+
+
+def local_hvp(x, s, u, inv_div, lam):
+    """Hu = inv_div * X diag(s) X^T u + lam*u  (Alg. 2/3 step 4)."""
+    t = matvec.xt_matvec(x, u)
+    y = matvec.x_scaled_matvec(x, s * t)
+    return (inv_div * y + lam * u,)
+
+
+def local_grad(x, z, y, inv_n, lam, w):
+    """Shard gradient slice: inv_n * X phi'(z;y) + lam*w, from margins z."""
+
+    def fn(loss):
+        dv = _deriv(loss, z, y)
+        g = matvec.x_scaled_matvec(x, dv)
+        return (inv_n * g + lam * w,)
+
+    return fn
+
+
+def hessian_scalings(z, y, loss):
+    """s_i = phi''(z_i; y_i) -- elementwise, no kernel needed."""
+    return (_second(loss, z, y),)
+
+
+def objective_terms(z, y, inv_n, loss):
+    """Per-shard data objective: inv_n * sum phi(z_i; y_i) (scalar)."""
+    return (inv_n * jnp.sum(_value(loss, z, y), keepdims=True),)
+
+
+def woodbury_gram(u_scaled):
+    """K = U~^T U~ (Alg. 4 inner matrix, before +I / 1/dreg in Rust)."""
+    return (gram_k.gram(u_scaled),)
+
+
+# ---------------------------------------------------------------------------
+# Loss-specialized entry points (lowered by aot.py; names = artifact names)
+# ---------------------------------------------------------------------------
+
+
+def make_grad_fn(loss):
+    def grad_fn(x, z, y, inv_n, lam, w):
+        return local_grad(x, z, y, inv_n, lam, w)(loss)
+
+    grad_fn.__name__ = f"grad_{loss}"
+    return grad_fn
+
+
+def make_scalings_fn(loss):
+    def scalings_fn(z, y):
+        return hessian_scalings(z, y, loss)
+
+    scalings_fn.__name__ = f"scalings_{loss}"
+    return scalings_fn
+
+
+def make_objective_fn(loss):
+    def objective_fn(z, y, inv_n):
+        return objective_terms(z, y, inv_n, loss)
+
+    objective_fn.__name__ = f"objective_{loss}"
+    return objective_fn

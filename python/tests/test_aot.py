@@ -1,0 +1,89 @@
+"""AOT pipeline: manifest consistency and HLO-text artifact validity."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_artifact_list_is_complete_and_unique():
+    names = [name for name, _, _ in aot.artifact_list()]
+    assert len(names) == len(set(names))
+    # Every shape variant gets margins + hvp + per-loss grads + gram.
+    for d, n in aot.SHAPES:
+        assert f"margins_{d}x{n}" in names
+        assert f"hvp_{d}x{n}" in names
+        for loss in ("logistic", "quadratic"):
+            assert f"grad_{loss}_{d}x{n}" in names
+        assert f"gram_{d}x{aot.TAU}" in names
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_matches_files_and_schema():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert len(manifest) >= 30
+    for name, meta in manifest.items():
+        path = os.path.join(ART, meta["file"])
+        assert os.path.exists(path), name
+        body = open(path).read()
+        assert body.startswith("HloModule"), f"{name} is not HLO text"
+        assert len(meta["inputs"]) >= 1
+        assert len(meta["outputs"]) >= 1
+        for io in meta["inputs"] + meta["outputs"]:
+            assert io["dtype"] == "f32"
+            assert all(isinstance(s, int) and s > 0 for s in io["shape"])
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_hvp_artifact_mentions_expected_shapes():
+    body = open(os.path.join(ART, "hvp_64x128.hlo.txt")).read()
+    assert "f32[64,128]" in body
+    assert "f32[128]" in body
+
+
+def test_lowering_is_reproducible(tmp_path):
+    # Lower one artifact twice; HLO text must be byte-identical (the Rust
+    # runtime caches compiled executables by name).
+    import jax
+
+    name, fn, args = next(iter(aot.artifact_list()))
+    t1 = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    t2 = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert t1 == t2
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_every_artifact_keeps_all_parameters():
+    # Regression: jit lowering prunes arguments with no data dependence
+    # (e.g. a constant phi'' dropped z and y), which breaks the Rust
+    # runtime's fixed call signatures. Every artifact's HLO entry must
+    # declare exactly len(inputs) parameters.
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name, meta in manifest.items():
+        body = open(os.path.join(ART, meta["file"])).read()
+        # Count parameters of the ENTRY computation only (nested reduce
+        # computations have their own parameter(0)/(1) declarations).
+        entry = body[body.index("\nENTRY "):]
+        entry = entry[: entry.index("\n}") + 2]
+        declared = sum(1 for line in entry.splitlines() if " parameter(" in line)
+        assert declared == len(meta["inputs"]), (
+            f"{name}: ENTRY has {declared} parameters, manifest expects "
+            f"{len(meta['inputs'])} (argument pruned at lowering?)"
+        )

@@ -1,0 +1,109 @@
+"""Layer-2 correctness: model.py compute graphs vs numpy math, including
+the scaling conventions the Rust coordinator depends on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _problem(seed, d=32, n=48):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(d, n)).astype("float32"))
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=n).astype("float32"))
+    w = jnp.asarray((0.3 * rng.normal(size=d)).astype("float32"))
+    return x, y, w
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), loss=st.sampled_from(model.LOSSES))
+def test_grad_matches_numpy_fd(seed, loss):
+    x, y, w = _problem(seed)
+    lam = 0.05
+    n = x.shape[1]
+    (z,) = model.margins(x, w)
+    grad_fn = model.make_grad_fn(loss)
+    (g,) = grad_fn(
+        x, z, y,
+        jnp.asarray([1.0 / n], dtype="float32"),
+        jnp.asarray([lam], dtype="float32"),
+        w,
+    )
+    # Finite differences on f(w) = (1/n) sum phi + lam/2 |w|^2 (float64).
+    xf = np.asarray(x, dtype="float64")
+    yf = np.asarray(y, dtype="float64")
+    wf = np.asarray(w, dtype="float64")
+
+    def f(wv):
+        zv = xf.T @ wv
+        if loss == "logistic":
+            v = np.logaddexp(0.0, -yf * zv)
+        else:
+            v = (zv - yf) ** 2
+        return v.mean() + 0.5 * lam * (wv @ wv)
+
+    h = 1e-6
+    for k in range(0, x.shape[0], 7):
+        wp, wm = wf.copy(), wf.copy()
+        wp[k] += h
+        wm[k] -= h
+        fd = (f(wp) - f(wm)) / (2 * h)
+        assert abs(fd - float(g[k])) < 5e-3 * (1 + abs(fd)), (loss, k)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), loss=st.sampled_from(model.LOSSES))
+def test_hvp_matches_ref_with_loss_scalings(seed, loss):
+    x, y, w = _problem(seed)
+    rng = np.random.default_rng(seed + 1)
+    u = jnp.asarray(rng.normal(size=x.shape[0]).astype("float32"))
+    (z,) = model.margins(x, w)
+    (s,) = model.make_scalings_fn(loss)(z, y)
+    n = x.shape[1]
+    lam = 0.02
+    (hu,) = model.local_hvp(
+        x, s, u,
+        jnp.asarray([1.0 / n], dtype="float32"),
+        jnp.asarray([lam], dtype="float32"),
+    )
+    want = ref.hvp(x, s, u, 1.0 / n, lam)
+    np.testing.assert_allclose(hu, want, rtol=3e-4, atol=3e-4)
+    # SPD check: u^T H u >= lam |u|^2.
+    quad = float(u @ hu)
+    assert quad >= lam * float(u @ u) - 1e-3
+
+
+@pytest.mark.parametrize("loss", model.LOSSES)
+def test_objective_value_matches_numpy(loss):
+    x, y, w = _problem(3)
+    (z,) = model.margins(x, w)
+    n = x.shape[1]
+    (val,) = model.make_objective_fn(loss)(z, y, jnp.asarray([1.0 / n], dtype="float32"))
+    zf = np.asarray(z, dtype="float64")
+    yf = np.asarray(y, dtype="float64")
+    if loss == "logistic":
+        want = np.logaddexp(0.0, -yf * zf).mean()
+    else:
+        want = ((zf - yf) ** 2).mean()
+    assert abs(float(val[0]) - want) < 1e-4 * (1 + abs(want))
+
+
+def test_feature_shards_compose_to_full_margins():
+    # DiSCO-F identity: margins of row-blocks sum to the full margins.
+    x, y, w = _problem(5, d=64, n=32)
+    (z_full,) = model.margins(x, w)
+    z_sum = jnp.zeros_like(z_full)
+    for lo, hi in [(0, 16), (16, 40), (40, 64)]:
+        (zj,) = model.margins(x[lo:hi, :], w[lo:hi])
+        z_sum = z_sum + zj
+    np.testing.assert_allclose(z_sum, z_full, rtol=3e-4, atol=3e-4)
+
+
+def test_woodbury_gram_matches_ref():
+    rng = np.random.default_rng(9)
+    us = jnp.asarray(rng.normal(size=(64, 16)).astype("float32"))
+    (k,) = model.woodbury_gram(us)
+    np.testing.assert_allclose(k, ref.gram(us), rtol=3e-4, atol=3e-4)

@@ -1,0 +1,52 @@
+//! Figure 3 bench: end-to-end convergence runs for all five algorithms on
+//! all three dataset regimes × two losses, printing the paper's series
+//! (rounds and simulated time to target accuracy).
+//!
+//! Scaled by BENCH_SCALE (default 4; set BENCH_SCALE=1 for full registry
+//! sizes — minutes, not seconds).
+//!
+//! ```bash
+//! cargo bench --bench bench_fig3_end_to_end
+//! ```
+
+use disco::coordinator::experiments::{figure3_one, ExperimentConfig};
+use disco::loss::LossKind;
+use disco::util::bench::Bench;
+
+fn main() {
+    let scale: usize = std::env::var("BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let cfg = ExperimentConfig {
+        scale,
+        out_dir: "results".into(),
+        max_outer: 40,
+        grad_target: 1e-8,
+        ..Default::default()
+    };
+    let mut b = Bench::once();
+    for dataset in ["news20s", "rcv1s", "splices"] {
+        for loss in [LossKind::Quadratic, LossKind::Logistic] {
+            b.run(&format!("fig3 {dataset}/{} (scale {scale})", loss.name()), None, || {
+                let (summary, results) = figure3_one(&cfg, dataset, loss).expect("fig3");
+                println!("{summary}");
+                // Paper-style readout.
+                for tol in [1e-4, 1e-6] {
+                    for (algo, res) in &results {
+                        if let (Some(r), Some(t)) = (res.rounds_to_tol(tol), res.time_to_tol(tol)) {
+                            println!(
+                                "  reach {tol:.0e}: {:<8} {:>6} rounds {:>9.3}s",
+                                algo.name(),
+                                r,
+                                t
+                            );
+                        }
+                    }
+                }
+                results.len()
+            });
+        }
+    }
+    b.write_csv("results/bench_fig3.csv").unwrap();
+}

@@ -1,0 +1,30 @@
+//! Figure 4 bench: τ sweep for DiSCO-F — rounds and time to target
+//! accuracy as the preconditioner grows (paper §5.3).
+//!
+//! ```bash
+//! cargo bench --bench bench_fig4_tau
+//! ```
+
+use disco::coordinator::experiments::{figure4, ExperimentConfig};
+use disco::util::bench::Bench;
+
+fn main() {
+    let scale: usize = std::env::var("BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let cfg = ExperimentConfig {
+        scale,
+        out_dir: "results".into(),
+        max_outer: 40,
+        grad_target: 1e-8,
+        ..Default::default()
+    };
+    let mut b = Bench::once();
+    b.run(&format!("fig4 tau sweep (scale {scale})"), None, || {
+        let summary = figure4(&cfg).expect("fig4");
+        println!("{summary}");
+        summary.len()
+    });
+    b.write_csv("results/bench_fig4.csv").unwrap();
+}

@@ -1,0 +1,29 @@
+//! Figure 5 bench: Hessian-subsampling sweep for DiSCO-F (paper §5.4).
+//!
+//! ```bash
+//! cargo bench --bench bench_fig5_subsample
+//! ```
+
+use disco::coordinator::experiments::{figure5, ExperimentConfig};
+use disco::util::bench::Bench;
+
+fn main() {
+    let scale: usize = std::env::var("BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let cfg = ExperimentConfig {
+        scale,
+        out_dir: "results".into(),
+        max_outer: 60,
+        grad_target: 1e-7,
+        ..Default::default()
+    };
+    let mut b = Bench::once();
+    b.run(&format!("fig5 hessian subsample sweep (scale {scale})"), None, || {
+        let summary = figure5(&cfg).expect("fig5");
+        println!("{summary}");
+        summary.len()
+    });
+    b.write_csv("results/bench_fig5.csv").unwrap();
+}

@@ -1,0 +1,96 @@
+//! Micro-benchmarks of the PCG hot paths — the §Perf baseline numbers.
+//!
+//! ```bash
+//! cargo bench --bench bench_hotpaths
+//! ```
+//! Appends to results/bench_hotpaths.csv.
+
+use disco::data::SyntheticConfig;
+use disco::linalg::ops;
+use disco::loss::{Logistic, Objective};
+use disco::solvers::Woodbury;
+use disco::util::bench::{black_box, Bench};
+use disco::util::prng::Xoshiro256pp;
+
+fn main() {
+    let mut b = Bench::new();
+
+    // --- BLAS-1 kernels ---
+    let n = 1 << 16;
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    b.run("ops::dot 65536", Some(2.0 * n as f64), || black_box(ops::dot(&x, &y)));
+    b.run("ops::axpy 65536", Some(2.0 * n as f64), || {
+        ops::axpy(1.000001, &x, &mut y);
+        black_box(y[0])
+    });
+
+    // --- sparse HVP (the PCG step 4 hot spot) ---
+    for (name, nsamples, d, density) in [
+        ("sparse-rcv1s-shard", 4096usize, 2048usize, 0.008),
+        ("sparse-news20s-shard", 512, 16384, 0.003),
+    ] {
+        let ds = SyntheticConfig::new(name, nsamples, d)
+            .density(density)
+            .seed(7)
+            .generate();
+        let loss = Logistic;
+        let obj = Objective::new(&ds.x, &ds.y, &loss, 1e-4);
+        let w: Vec<f64> = (0..d).map(|i| 0.01 * (i % 7) as f64).collect();
+        let u: Vec<f64> = (0..d).map(|i| ((i * 37) % 11) as f64 - 5.0).collect();
+        let s = obj.hessian_scalings(&w);
+        let mut scratch = vec![0.0; nsamples];
+        let mut out = vec![0.0; d];
+        let flops = 4.0 * ds.nnz() as f64; // 2 passes × mul+add
+        b.run(&format!("hvp {name} ({nsamples}x{d})"), Some(flops), || {
+            obj.hvp_with_scalings_into(&s, &u, &mut scratch, &mut out);
+            black_box(out[0])
+        });
+    }
+
+    // Dense HVP at the XLA artifact shape.
+    {
+        let d = 256;
+        let nsamples = 4096;
+        let ds = SyntheticConfig::new("dense-shard", nsamples, d).seed(9).generate_dense();
+        let loss = Logistic;
+        let obj = Objective::new(&ds.x, &ds.y, &loss, 1e-4);
+        let w = vec![0.01; d];
+        let u: Vec<f64> = (0..d).map(|i| (i % 5) as f64).collect();
+        let s = obj.hessian_scalings(&w);
+        let mut scratch = vec![0.0; nsamples];
+        let mut out = vec![0.0; d];
+        let flops = 4.0 * (d * nsamples) as f64;
+        b.run("hvp dense 256x4096 (native)", Some(flops), || {
+            obj.hvp_with_scalings_into(&s, &u, &mut scratch, &mut out);
+            black_box(out[0])
+        });
+    }
+
+    // --- Woodbury preconditioner: build + apply (Alg. 4) ---
+    for tau in [50usize, 100, 200, 400] {
+        let d = 2048;
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let cols: Vec<Vec<f64>> = (0..tau)
+            .map(|_| (0..d).map(|_| rng.normal()).collect())
+            .collect();
+        let weights = vec![0.25 / tau as f64; tau];
+        b.run(&format!("woodbury build d=2048 tau={tau}"), None, || {
+            black_box(Woodbury::new(d, &cols, &weights, 1e-2).unwrap().rank())
+        });
+        let wb = Woodbury::new(d, &cols, &weights, 1e-2).unwrap();
+        let r: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0; d];
+        b.run(
+            &format!("woodbury apply d=2048 tau={tau}"),
+            Some((2 * d * tau) as f64),
+            || {
+                wb.apply_into(&r, &mut out);
+                black_box(out[0])
+            },
+        );
+    }
+
+    b.write_csv("results/bench_hotpaths.csv").unwrap();
+}

@@ -1,0 +1,64 @@
+//! Table 2 bench: measured communication rounds to reach ε vs the paper's
+//! analytic complexity table, plus collective primitive costs.
+//!
+//! ```bash
+//! cargo bench --bench bench_table2_communication
+//! ```
+
+use disco::algorithms::{run, AlgoKind, RunConfig};
+use disco::coordinator::complexity::{table2_logistic, table2_quadratic, Table2Algo};
+use disco::data::registry;
+use disco::loss::LossKind;
+use disco::net::{Cluster, CostModel};
+use disco::util::bench::{black_box, Bench};
+
+fn main() {
+    // --- collective primitive latency (the α–β model's real-thread cost) --
+    let mut b = Bench::new();
+    for k in [1usize, 1024, 65536] {
+        let cluster = Cluster::new(4).with_cost(CostModel::zero());
+        b.run(&format!("reduce_all m=4 k={k}"), Some(8.0 * k as f64), || {
+            let run = cluster.run(|ctx| {
+                let mut v = vec![1.0; k];
+                ctx.reduce_all(&mut v);
+                v[0]
+            });
+            black_box(run.outputs[0])
+        });
+    }
+    b.write_csv("results/bench_table2.csv").unwrap();
+
+    // --- measured rounds-to-ε vs analytic Table 2 ---
+    println!("\nTable 2 — measured rounds to ‖∇f‖ ≤ 1e-6 (tiny dataset, m=4) vs analytic trend");
+    let ds = registry::load_scaled("rcv1s", 16).unwrap();
+    let lambda = 1.0 / (ds.nsamples() as f64).sqrt() * 1e-2; // λ ~ 1/√n regime
+    println!(
+        "{:<10} {:>16} {:>16} {:>18}",
+        "algo", "measured(quad)", "measured(logit)", "analytic ratio"
+    );
+    for (algo, t2) in [
+        (AlgoKind::Dane, Table2Algo::Dane),
+        (AlgoKind::CocoaPlus, Table2Algo::CocoaPlus),
+        (AlgoKind::DiscoF, Table2Algo::Disco),
+    ] {
+        let mut rounds = Vec::new();
+        for loss in [LossKind::Quadratic, LossKind::Logistic] {
+            let mut cfg = RunConfig::new(algo, loss, lambda);
+            cfg.grad_tol = 1e-6;
+            cfg.max_outer = if algo == AlgoKind::DiscoF { 60 } else { 600 };
+            cfg.local_epochs = 10;
+            let res = run(&ds, &cfg);
+            rounds.push(res.rounds_to_tol(1e-6).map(|r| r.to_string()).unwrap_or("—".into()));
+        }
+        let an_q = table2_quadratic(t2, 4, ds.nsamples(), 1e-6);
+        let an_l = table2_logistic(t2, 4, ds.nsamples(), ds.dim(), 1e-6);
+        println!(
+            "{:<10} {:>16} {:>16} {:>11.0}/{:<6.0}",
+            t2.name(),
+            rounds[0],
+            rounds[1],
+            an_q,
+            an_l
+        );
+    }
+}

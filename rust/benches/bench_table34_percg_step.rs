@@ -1,0 +1,43 @@
+//! Tables 3 & 4 bench: wall-time and communication of a single PCG step
+//! under both partitionings — the measured counterpart of the paper's
+//! per-step op-count and message-size tables.
+//!
+//! ```bash
+//! cargo bench --bench bench_table34_percg_step
+//! ```
+
+use disco::algorithms::{run, AlgoKind, RunConfig};
+use disco::coordinator::experiments::{tables34, ExperimentConfig};
+use disco::data::registry;
+use disco::loss::LossKind;
+use disco::net::CostModel;
+use disco::util::bench::{black_box, Bench};
+
+fn main() {
+    // Measured op/communication counts (the table itself).
+    let cfg = ExperimentConfig {
+        out_dir: "results".into(),
+        scale: 1,
+        ..Default::default()
+    };
+    let summary = tables34(&cfg).expect("tables34");
+    println!("{summary}");
+
+    // Per-PCG-step wall time at a realistic shard size, both layouts.
+    let mut b = Bench::new();
+    for (name, algo) in [("disco_s", AlgoKind::DiscoS), ("disco_f", AlgoKind::DiscoF)] {
+        let ds = registry::load_scaled("rcv1s", 4).unwrap();
+        let lambda = registry::spec("rcv1s").unwrap().lambda;
+        b.run(&format!("one outer iter ({name}, rcv1s/4)"), None, || {
+            let mut rc = RunConfig::new(algo, LossKind::Logistic, lambda);
+            rc.max_outer = 1;
+            rc.max_pcg = 10;
+            rc.pcg_beta = 0.0;
+            rc.grad_tol = 0.0;
+            rc.cost = CostModel::zero();
+            let res = run(&ds, &rc);
+            black_box(res.stats.vector_rounds)
+        });
+    }
+    b.write_csv("results/bench_table34.csv").unwrap();
+}

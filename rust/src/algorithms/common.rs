@@ -1,0 +1,205 @@
+//! Shared machinery for the distributed algorithms: Hessian subsampling
+//! masks (Fig. 5), preconditioner sample selection, the damped-Newton step,
+//! and the per-iteration metric recorder.
+
+use crate::algorithms::IterRecord;
+use crate::linalg::DataMatrix;
+use crate::loss::Loss;
+use crate::net::NodeCtx;
+use crate::util::prng::Xoshiro256pp;
+
+/// Forcing term for the inexact Newton solve:
+/// `ε_k = β·‖∇f(w_k)‖` (Zhang & Xiao's relative criterion), floored so the
+/// last outer iterations don't demand more than the global tolerance.
+pub fn forcing(grad_norm: f64, beta: f64, grad_tol: f64) -> f64 {
+    (beta * grad_norm).max(0.1 * grad_tol)
+}
+
+/// Damped Newton step scale `1/(1+δ_k)` with `δ_k = √(v_kᵀ H v_k)`
+/// (Algorithm 1 line 6).
+pub fn damped_scale(vhv: f64) -> f64 {
+    1.0 / (1.0 + vhv.max(0.0).sqrt())
+}
+
+/// Per-outer-iteration Hessian sample mask (Fig. 5): selects
+/// `⌈fraction·n⌉` of the n **global** sample indices, identically on every
+/// node (seeded by `seed ⊕ outer`). Returns `None` for fraction = 1
+/// (exact Hessian — the default fast path).
+pub struct HessianSubsample {
+    pub fraction: f64,
+    pub seed: u64,
+}
+
+impl HessianSubsample {
+    /// Build the 0/1 mask and its effective count for outer iteration `k`.
+    pub fn mask(&self, n: usize, outer: usize) -> Option<(Vec<bool>, usize)> {
+        if self.fraction >= 1.0 {
+            return None;
+        }
+        let h = ((self.fraction * n as f64).ceil() as usize).clamp(1, n);
+        let mut rng = Xoshiro256pp::seed_from_u64(self.seed ^ (outer as u64).wrapping_mul(0x9E37));
+        let idx = rng.sample_indices(n, h);
+        let mut mask = vec![false; n];
+        for i in idx {
+            mask[i] = true;
+        }
+        Some((mask, h))
+    }
+}
+
+/// Apply loss second-derivatives (optionally masked) to margins, producing
+/// the HVP scaling vector `s` and its effective divisor. With a mask, the
+/// Hessian estimate is `(1/h) Σ_{i∈S} s_i x_i x_iᵀ` (unbiased for
+/// uniform S).
+pub fn hessian_scalings(
+    loss: &dyn Loss,
+    z: &[f64],
+    y: &[f64],
+    mask: Option<&(Vec<bool>, usize)>,
+    n_global: usize,
+) -> (Vec<f64>, f64) {
+    debug_assert_eq!(z.len(), y.len());
+    match mask {
+        None => (
+            z.iter()
+                .zip(y.iter())
+                .map(|(zi, yi)| loss.second_deriv(*zi, *yi))
+                .collect(),
+            n_global as f64,
+        ),
+        Some((m, h)) => (
+            z.iter()
+                .zip(y.iter())
+                .enumerate()
+                .map(|(i, (zi, yi))| {
+                    if m[i] {
+                        loss.second_deriv(*zi, *yi)
+                    } else {
+                        0.0
+                    }
+                })
+                .collect(),
+            *h as f64,
+        ),
+    }
+}
+
+/// Preconditioner sample selection: the paper uses the master's first τ
+/// samples (Eq. 5, "subset of data available on master node"). We take the
+/// first τ *global* indices — which live on the master under sample
+/// partitioning and are feature-sliced across all nodes under feature
+/// partitioning — so DiSCO-S and DiSCO-F precondition with the *same*
+/// matrix (block-diagonal restriction for F).
+pub fn precond_sample_count(tau: usize, available: usize) -> usize {
+    tau.min(available)
+}
+
+/// Densify preconditioner columns `0..tau` of a shard.
+pub fn precond_columns(x: &DataMatrix, tau: usize) -> Vec<Vec<f64>> {
+    (0..precond_sample_count(tau, x.ncols()))
+        .map(|j| x.col_dense(j))
+        .collect()
+}
+
+/// Metric recorder driven by node 0 inside the SPMD closure. The gradient
+/// norm / objective value come from the algorithm (usually free as a
+/// by-product or via the metrics channel); rounds and simulated time come
+/// from the node's local mirrors.
+pub struct Recorder {
+    pub records: Vec<IterRecord>,
+    enabled: bool,
+}
+
+impl Recorder {
+    /// Only node 0's recorder is enabled; other nodes keep an empty one so
+    /// the SPMD code is rank-agnostic.
+    pub fn new(rank: usize) -> Self {
+        Self {
+            records: Vec::new(),
+            enabled: rank == 0,
+        }
+    }
+
+    pub fn push(&mut self, ctx: &NodeCtx, outer: usize, grad_norm: f64, fval: f64, inner: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.records.push(IterRecord {
+            outer,
+            rounds: ctx.local_stats.vector_rounds,
+            scalar_rounds: ctx.local_stats.scalar_rounds,
+            vector_doubles: ctx.local_stats.vector_doubles,
+            sim_time: ctx.clock,
+            grad_norm,
+            fval,
+            inner_iters: inner,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::{Logistic, Quadratic};
+
+    #[test]
+    fn forcing_scales_with_gradient() {
+        assert!((forcing(1.0, 0.05, 1e-9) - 0.05).abs() < 1e-15);
+        // Floors at a tenth of the global tolerance.
+        assert!((forcing(1e-12, 0.05, 1e-9) - 1e-10).abs() < 1e-24);
+    }
+
+    #[test]
+    fn damped_scale_bounds() {
+        assert_eq!(damped_scale(0.0), 1.0);
+        assert!((damped_scale(4.0) - 1.0 / 3.0).abs() < 1e-15);
+        // Negative (numerical noise) clamps to full step.
+        assert_eq!(damped_scale(-1e-18), 1.0);
+    }
+
+    #[test]
+    fn subsample_mask_counts_and_determinism() {
+        let hs = HessianSubsample {
+            fraction: 0.25,
+            seed: 9,
+        };
+        let (m1, h1) = hs.mask(100, 3).unwrap();
+        let (m2, h2) = hs.mask(100, 3).unwrap();
+        assert_eq!(h1, 25);
+        assert_eq!(h2, 25);
+        assert_eq!(m1, m2, "mask must be identical across nodes");
+        assert_eq!(m1.iter().filter(|&&b| b).count(), h1);
+        let (m3, _) = hs.mask(100, 4).unwrap();
+        assert_ne!(m1, m3, "mask must change across outer iterations");
+    }
+
+    #[test]
+    fn full_fraction_returns_none() {
+        let hs = HessianSubsample {
+            fraction: 1.0,
+            seed: 1,
+        };
+        assert!(hs.mask(50, 0).is_none());
+    }
+
+    #[test]
+    fn scalings_respect_mask() {
+        let z = vec![0.0, 1.0, -1.0, 0.5];
+        let y = vec![1.0, 1.0, -1.0, 1.0];
+        let (s, div) = hessian_scalings(&Quadratic, &z, &y, None, 4);
+        assert_eq!(s, vec![2.0; 4]);
+        assert_eq!(div, 4.0);
+        let mask = (vec![true, false, true, false], 2usize);
+        let (s2, div2) = hessian_scalings(&Logistic, &z, &y, Some(&mask), 4);
+        assert_eq!(div2, 2.0);
+        assert_eq!(s2[1], 0.0);
+        assert_eq!(s2[3], 0.0);
+        assert!(s2[0] > 0.0 && s2[2] > 0.0);
+    }
+
+    #[test]
+    fn precond_columns_cap_at_available() {
+        assert_eq!(precond_sample_count(100, 30), 30);
+        assert_eq!(precond_sample_count(10, 30), 10);
+    }
+}

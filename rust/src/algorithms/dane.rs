@@ -1,0 +1,144 @@
+//! **DANE** (Distributed Approximate Newton, Shamir et al. 2013) — baseline
+//! per the paper's §1.1 item 3 and §5.2.
+//!
+//! Each iteration: one ReduceAll to form the global gradient, then every
+//! node solves the local subproblem (paper Eq. (1))
+//!
+//! ```text
+//! w_j = argmin_w  f_j(w) − (∇f_j(w_k) − η∇f(w_k))ᵀ w + (μ/2)‖w − w_k‖²
+//! ```
+//!
+//! with SAG (as in the paper's experiments: "we apply SAG to solve …
+//! subproblem (1)"), followed by a second ReduceAll to average the local
+//! solutions — two ℝᵈ vector rounds per iteration.
+
+use crate::algorithms::common::Recorder;
+use crate::algorithms::{OpCounts, RunConfig, RunResult};
+use crate::data::{Dataset, Partition};
+use crate::linalg::ops;
+use crate::loss::Loss;
+use crate::net::{Cluster, NodeCtx};
+use crate::solvers::sag::SagSolver;
+use crate::util::prng::Xoshiro256pp;
+
+pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
+    let partition = Partition::by_samples(ds, cfg.m);
+    let loss = cfg.loss.make();
+    let n = ds.nsamples();
+
+    let cluster = Cluster::new(cfg.m).with_cost(cfg.cost).with_trace(cfg.trace);
+    let run = cluster.run(|ctx| node_main(ctx, &partition, loss.as_ref(), cfg, n));
+
+    let mut records = Vec::new();
+    let mut w = Vec::new();
+    let mut converged = false;
+    for (rank, (recs, w_full, conv)) in run.outputs.into_iter().enumerate() {
+        if rank == 0 {
+            records = recs;
+            w = w_full;
+            converged = conv;
+        }
+    }
+    RunResult {
+        algo: cfg.algo,
+        records,
+        w,
+        stats: run.stats,
+        trace: run.trace,
+        sim_seconds: run.sim_seconds,
+        wall_seconds: run.wall_seconds,
+        converged,
+        node_ops: vec![OpCounts::default(); cfg.m],
+    }
+}
+
+fn node_main(
+    ctx: &mut NodeCtx,
+    partition: &Partition,
+    loss: &dyn Loss,
+    cfg: &RunConfig,
+    n: usize,
+) -> (Vec<crate::algorithms::IterRecord>, Vec<f64>, bool) {
+    let shard = &partition.shards[ctx.rank];
+    let x = &shard.x; // d × n_j
+    let y = &shard.y;
+    let d = x.nrows();
+    let n_local = x.ncols();
+    let inv_nl = 1.0 / n_local as f64;
+
+    let mut w = vec![0.0; d];
+    let mut recorder = Recorder::new(ctx.rank);
+    let mut converged = false;
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed.wrapping_add(ctx.rank as u64 * 7919));
+
+    // SAG step-size bound: max per-sample curvature of the subproblem.
+    let lmax = (0..n_local)
+        .map(|j| loss.smoothness() * x.col_norm_sq(j))
+        .fold(0.0, f64::max);
+
+    let mut z = vec![0.0; n_local];
+
+    for outer in 0..cfg.max_outer {
+        // ---- local gradient of f_j at w_k (includes λw: f_j has its own
+        // regularizer, Eq. (4)) and the global gradient (ReduceAll) ----
+        let (grad_local, data_f) = ctx.compute("gradient", || {
+            x.at_mul_into(&w, &mut z);
+            let g_scal: Vec<f64> = z
+                .iter()
+                .zip(y.iter())
+                .map(|(zi, yi)| loss.deriv(*zi, *yi))
+                .collect();
+            let mut g = x.a_mul(&g_scal);
+            ops::scale(inv_nl, &mut g);
+            ops::axpy(cfg.lambda, &w, &mut g);
+            let f: f64 = z
+                .iter()
+                .zip(y.iter())
+                .map(|(zi, yi)| loss.value(*zi, *yi))
+                .sum();
+            (g, f / n as f64)
+        });
+        // Global gradient = (1/m) Σ_j ∇f_j (each f_j carries λw).
+        let mut grad = grad_local.clone();
+        ctx.reduce_all(&mut grad);
+        ops::scale(1.0 / cfg.m as f64, &mut grad);
+
+        let grad_norm = ops::norm2(&grad);
+        let mut fv = vec![data_f];
+        ctx.metric_reduce_all(&mut fv);
+        let fval = fv[0] + 0.5 * cfg.lambda * ops::norm2_sq(&w);
+
+        recorder.push(ctx, outer, grad_norm, fval, 0);
+        if grad_norm <= cfg.grad_tol {
+            converged = true;
+            break;
+        }
+
+        // ---- local subproblem via SAG ----
+        // ∇(sub) = ∇f_j(w) − ∇f_j(w_k) + η∇f(w_k) + μ(w − w_k)
+        //        = [data(w) + λw] + linear + μw, with
+        // linear = −∇f_j(w_k) + η∇f(w_k) − μ w_k.
+        let mut linear = vec![0.0; d];
+        for i in 0..d {
+            linear[i] = -grad_local[i] + cfg.dane_eta * grad[i] - cfg.mu * w[i];
+        }
+        let w_new = ctx.compute("local_solve", || {
+            let solver = SagSolver {
+                x,
+                kappa: cfg.lambda + cfg.mu,
+                linear: &linear,
+                lmax,
+            };
+            solver.run(|j, zj| loss.deriv(zj, y[j]), &w, cfg.local_epochs, &mut rng)
+        });
+
+        // ---- average the local solutions (second ReduceAll) ----
+        let mut wsum = w_new;
+        ctx.reduce_all(&mut wsum);
+        for (wi, si) in w.iter_mut().zip(wsum.iter()) {
+            *wi = si / cfg.m as f64;
+        }
+    }
+
+    (recorder.records, w, converged)
+}

@@ -1,0 +1,356 @@
+//! **DiSCO-S** — distributed inexact damped Newton with data partitioned
+//! by *samples* (paper Algorithm 2), and the **original DiSCO** baseline.
+//!
+//! Node `j` owns a sample block `X_j ∈ ℝ^{d×n_j}`; every node keeps the
+//! full iterate `w ∈ ℝᵈ`. Per PCG step the communication is a Broadcast of
+//! `u_t ∈ ℝᵈ` (with a one-slot continue flag appended) and a ReduceAll of
+//! the local Hessian products `f''_j(w)u_t ∈ ℝᵈ` — two ℝᵈ vector rounds.
+//! All PCG *vector operations* (α, β, updates, the preconditioner solve)
+//! run **on the master only** while workers idle — the load imbalance the
+//! paper's Figure 2 (top) depicts.
+//!
+//! The two variants differ only in the master's preconditioner solve:
+//!
+//! * [`Precond::Woodbury`] — the paper's contribution: exact closed-form
+//!   solve of `P s = r` with `P` built from the master's first τ samples
+//!   (Algorithms 2+4). O(dτ) per apply after one τ×τ factorization.
+//! * [`Precond::MasterSag`] — original DiSCO (Zhang & Xiao 2015, as run in
+//!   the paper's §5.2): same `P`, but `P s = r` is solved *iteratively by
+//!   SAG on the master* at every PCG step, serializing a large fraction of
+//!   each step (the >50 % figure in §1.2).
+
+use crate::algorithms::common::{
+    damped_scale, forcing, hessian_scalings, precond_columns, HessianSubsample, Recorder,
+};
+use crate::algorithms::{OpCounts, RunConfig, RunResult};
+use crate::data::{Dataset, Partition};
+use crate::linalg::ops;
+use crate::loss::Loss;
+use crate::net::{Cluster, NodeCtx};
+use crate::solvers::sag;
+use crate::solvers::woodbury::{Woodbury, WoodburyFactory};
+use crate::util::prng::Xoshiro256pp;
+
+/// Master preconditioner strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precond {
+    Woodbury,
+    MasterSag,
+}
+
+pub fn run(ds: &Dataset, cfg: &RunConfig, precond: Precond) -> RunResult {
+    let partition = Partition::by_samples(ds, cfg.m);
+    let loss = cfg.loss.make();
+    let n = ds.nsamples();
+    let subsample = HessianSubsample {
+        fraction: cfg.hessian_fraction,
+        seed: cfg.seed,
+    };
+
+    let cluster = Cluster::new(cfg.m).with_cost(cfg.cost).with_trace(cfg.trace);
+    let run = cluster.run(|ctx| {
+        node_main(ctx, &partition, loss.as_ref(), cfg, &subsample, n, precond)
+    });
+
+    let mut records = Vec::new();
+    let mut w = Vec::new();
+    let mut node_ops = Vec::new();
+    let mut converged = false;
+    for (rank, (recs, w_full, ops_j, conv)) in run.outputs.into_iter().enumerate() {
+        if rank == 0 {
+            records = recs;
+            w = w_full;
+            converged = conv;
+        }
+        node_ops.push(ops_j);
+    }
+    RunResult {
+        algo: cfg.algo,
+        records,
+        w,
+        stats: run.stats,
+        trace: run.trace,
+        sim_seconds: run.sim_seconds,
+        wall_seconds: run.wall_seconds,
+        converged,
+        node_ops,
+    }
+}
+
+/// Master-side preconditioner: either a factored Woodbury or the SAG
+/// fallback over the master's local columns.
+enum MasterPrecond {
+    Woodbury(Woodbury),
+    Sag {
+        columns: Vec<Vec<f64>>,
+        weights: Vec<f64>,
+        dreg: f64,
+        tol_factor: f64,
+        max_epochs: usize,
+        rng: Xoshiro256pp,
+        /// Total SAG passes performed (serial master work metric).
+        passes: usize,
+    },
+    /// Non-master nodes hold nothing.
+    None,
+}
+
+impl MasterPrecond {
+    fn apply(&mut self, r: &[f64], out: &mut [f64]) {
+        match self {
+            MasterPrecond::Woodbury(wb) => wb.apply_into(r, out),
+            MasterPrecond::Sag {
+                columns,
+                weights,
+                dreg,
+                tol_factor,
+                max_epochs,
+                rng,
+                passes,
+            } => {
+                let tol = *tol_factor * ops::norm2(r);
+                let (s, p) =
+                    sag::solve_linear_system(columns, weights, *dreg, r, tol, *max_epochs, rng);
+                *passes += p;
+                out.copy_from_slice(&s);
+            }
+            MasterPrecond::None => unreachable!("worker applied master preconditioner"),
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn node_main(
+    ctx: &mut NodeCtx,
+    partition: &Partition,
+    loss: &dyn Loss,
+    cfg: &RunConfig,
+    subsample: &HessianSubsample,
+    n: usize,
+    precond_kind: Precond,
+) -> (Vec<crate::algorithms::IterRecord>, Vec<f64>, OpCounts, bool) {
+    const MASTER: usize = 0;
+    let shard = &partition.shards[ctx.rank];
+    let x = &shard.x; // d × n_j
+    let y = &shard.y;
+    let d = x.nrows();
+    let n_local = x.ncols();
+    let is_master = ctx.rank == MASTER;
+    // Global sample offset of this shard (for the subsample mask).
+    let offset = shard.range.0;
+
+    let mut w = vec![0.0; d];
+    let mut recorder = Recorder::new(ctx.rank);
+    let mut ops_count = OpCounts {
+        dim: d,
+        ..Default::default()
+    };
+    let mut converged = false;
+    let mut last_inner = 0usize;
+
+    // §Perf: densify the master's τ preconditioner columns (and for the
+    // Woodbury path, their raw Gram) once; per outer iteration only the
+    // τ×τ rescale+refactor runs. With constant curvature (quadratic loss)
+    // even that is skipped after the first iteration.
+    let precond_cols = if is_master {
+        precond_columns(x, cfg.tau)
+    } else {
+        Vec::new()
+    };
+    let tau_eff = precond_cols.len();
+    let precond_factory = if is_master && precond_kind == Precond::Woodbury {
+        Some(WoodburyFactory::new(d, &precond_cols))
+    } else {
+        None
+    };
+    let mut cached_precond: Option<MasterPrecond> = None;
+
+    let mut z = vec![0.0; n_local];
+    let mut g_scal = vec![0.0; n_local];
+    let mut tn = vec![0.0; n_local];
+    let mut hu_local = vec![0.0; d];
+    // Master-only PCG state (allocated on all ranks for simplicity; workers
+    // never touch it).
+    let mut r = vec![0.0; d];
+    let mut s_dir = vec![0.0; d];
+    let mut u = vec![0.0; d];
+    let mut v = vec![0.0; d];
+    let mut hv = vec![0.0; d];
+
+    for outer in 0..cfg.max_outer {
+        // ---- Broadcast w_k from master (paper's flow; 1 ℝᵈ round) ----
+        let mut wbuf = if is_master { w.clone() } else { vec![0.0; d] };
+        ctx.broadcast(MASTER, &mut wbuf);
+        w = wbuf;
+
+        // ---- local gradient + ReduceAll (1 ℝᵈ round) ----
+        let mut grad = ctx.compute("gradient", || {
+            x.at_mul_into(&w, &mut z);
+            for i in 0..n_local {
+                g_scal[i] = loss.deriv(z[i], y[i]);
+            }
+            let mut g = x.a_mul(&g_scal);
+            ops::scale(1.0 / n as f64, &mut g);
+            g
+        });
+        ctx.reduce_all(&mut grad);
+        ops::axpy(cfg.lambda, &w, &mut grad); // every node adds λw
+
+        let grad_norm = ops::norm2(&grad);
+        // Objective value (metrics channel: data terms summed, ‖w‖² global).
+        let data_f: f64 = z
+            .iter()
+            .zip(y.iter())
+            .map(|(zi, yi)| loss.value(*zi, *yi))
+            .sum::<f64>()
+            / n as f64;
+        let mut fv = vec![data_f];
+        ctx.metric_reduce_all(&mut fv);
+        let fval = fv[0] + 0.5 * cfg.lambda * ops::norm2_sq(&w);
+
+        recorder.push(ctx, outer, grad_norm, fval, last_inner);
+        if grad_norm <= cfg.grad_tol {
+            converged = true;
+            break;
+        }
+
+        // ---- Hessian scalings (shard-local slice of the global mask) ----
+        let mask_global = subsample.mask(n, outer);
+        let local_mask = mask_global.as_ref().map(|(m, h)| {
+            (m[offset..offset + n_local].to_vec(), *h)
+        });
+        let (s_hess, div) = hessian_scalings(loss, &z, y, local_mask.as_ref(), n);
+        let inv_div = 1.0 / div;
+
+        // ---- master builds (or reuses) its preconditioner ----
+        if is_master && (cached_precond.is_none() || !loss.curvature_is_constant()) {
+            cached_precond = Some(ctx.compute("precond_build", || {
+                let weights: Vec<f64> = (0..tau_eff)
+                    .map(|i| loss.second_deriv(z[i], y[i]) / tau_eff.max(1) as f64)
+                    .collect();
+                match precond_kind {
+                    Precond::Woodbury => MasterPrecond::Woodbury(
+                        precond_factory
+                            .as_ref()
+                            .unwrap()
+                            .build(&weights, cfg.lambda + cfg.mu)
+                            .expect("preconditioner factorization failed"),
+                    ),
+                    // Original DiSCO (paper §5.2): same τ-sample P, but the
+                    // system P·s = r is solved *iteratively by SAG on the
+                    // master* at every PCG step while workers idle — the
+                    // serial bottleneck the paper measures at >50 %.
+                    Precond::MasterSag => MasterPrecond::Sag {
+                        columns: precond_cols.clone(),
+                        weights,
+                        dreg: cfg.lambda + cfg.mu,
+                        tol_factor: cfg.sag_inner_tol,
+                        max_epochs: cfg.sag_max_epochs,
+                        rng: Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xABCD ^ outer as u64),
+                        passes: 0,
+                    },
+                }
+            }));
+        }
+        let precond = if is_master {
+            cached_precond.as_mut().unwrap()
+        } else {
+            // Workers never touch the preconditioner.
+            cached_precond.get_or_insert(MasterPrecond::None)
+        };
+
+        // ---- PCG loop (Algorithm 2); master drives, workers serve HVPs --
+        let eps = forcing(grad_norm, cfg.pcg_beta, cfg.grad_tol);
+        let mut rnorm = f64::INFINITY;
+        if is_master {
+            r.copy_from_slice(&grad);
+            ops::zero(&mut v);
+            ops::zero(&mut hv);
+            ctx.compute("precond_apply", || precond.apply(&r, &mut s_dir));
+            ops_count.precond_solve += 1;
+            u.copy_from_slice(&s_dir);
+            rnorm = ops::norm2(&r);
+            ops_count.dot += 1;
+        }
+        let mut rs = if is_master { ops::dot(&r, &s_dir) } else { 0.0 };
+        if is_master {
+            ops_count.dot += 1;
+        }
+        let mut pcg_iters = 0usize;
+
+        loop {
+            // Master decides continuation; flag rides with the broadcast of
+            // u (d+1 doubles — one ℝᵈ-sized round, paper Table 4).
+            let cont = if is_master {
+                rnorm > eps && pcg_iters < cfg.max_pcg
+            } else {
+                false
+            };
+            let mut ubuf = if is_master {
+                let mut b = u.clone();
+                b.push(if cont { 1.0 } else { 0.0 });
+                b
+            } else {
+                vec![0.0; d + 1]
+            };
+            ctx.broadcast(MASTER, &mut ubuf);
+            let cont = *ubuf.last().unwrap() > 0.5;
+            if !cont {
+                break;
+            }
+            ubuf.pop();
+            let u_t = ubuf;
+
+            // Every node: local Hessian product (the balanced part).
+            let mut hu = ctx.compute("hvp", || {
+                x.at_mul_into(&u_t, &mut tn);
+                for i in 0..n_local {
+                    tn[i] *= s_hess[i];
+                }
+                x.a_mul_into(&tn, &mut hu_local);
+                let mut out = hu_local.clone();
+                ops::scale(inv_div, &mut out);
+                out
+            });
+            ops_count.hvp += 1;
+            ctx.reduce_all(&mut hu);
+
+            // Master-only vector operations (workers fall through to the
+            // next broadcast and wait — idle time in the Fig. 2 sense).
+            if is_master {
+                ctx.compute("pcg_update", || {
+                    ops::axpy(cfg.lambda, &u_t, &mut hu); // + λu
+                    let uhu = ops::dot(&u_t, &hu);
+                    let alpha = rs / uhu;
+                    ops::axpy(alpha, &u_t, &mut v);
+                    ops::axpy(alpha, &hu, &mut hv);
+                    ops::axpy(-alpha, &hu, &mut r);
+                    precond.apply(&r, &mut s_dir);
+                    let rs_new = ops::dot(&r, &s_dir);
+                    let beta = rs_new / rs;
+                    rs = rs_new;
+                    ops::axpby(1.0, &s_dir, beta, &mut u);
+                    rnorm = ops::norm2(&r);
+                });
+                ops_count.axpy += 4;
+                ops_count.dot += 4;
+                ops_count.precond_solve += 1;
+            }
+            pcg_iters += 1;
+        }
+
+        // ---- damped step on master ----
+        if is_master {
+            ctx.compute("step", || {
+                let vhv = ops::dot(&v, &hv);
+                let scale = damped_scale(vhv);
+                ops::axpy(-scale, &v, &mut w);
+            });
+            ops_count.dot += 1;
+            ops_count.axpy += 1;
+        }
+        last_inner = pcg_iters;
+    }
+
+    (recorder.records, w, ops_count, converged)
+}

@@ -1,0 +1,104 @@
+//! Distributed gradient descent — an extra first-order sanity baseline
+//! (not in the paper's comparison set, but useful for validating the
+//! harness: it must lose badly to the Newton-type methods on
+//! ill-conditioned problems, and it exercises the cluster with the
+//! simplest possible SPMD program).
+//!
+//! One ℝᵈ ReduceAll per iteration; fixed step 1/L with
+//! `L = smoothness·max‖x‖²/n·n? ` estimated as `smoothness·max_i‖x_i‖² + λ`.
+
+use crate::algorithms::common::Recorder;
+use crate::algorithms::{OpCounts, RunConfig, RunResult};
+use crate::data::{Dataset, Partition};
+use crate::linalg::ops;
+use crate::loss::Loss;
+use crate::net::{Cluster, NodeCtx};
+
+pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
+    let partition = Partition::by_samples(ds, cfg.m);
+    let loss = cfg.loss.make();
+    let n = ds.nsamples();
+    // Smoothness estimate: L ≤ φ''max·max‖x_i‖² + λ (margin Hessian bound).
+    let max_norm_sq = (0..n).map(|j| ds.x.col_norm_sq(j)).fold(0.0, f64::max);
+    let lips = loss.smoothness() * max_norm_sq + cfg.lambda;
+
+    let cluster = Cluster::new(cfg.m).with_cost(cfg.cost).with_trace(cfg.trace);
+    let run = cluster.run(|ctx| node_main(ctx, &partition, loss.as_ref(), cfg, n, lips));
+
+    let mut records = Vec::new();
+    let mut w = Vec::new();
+    let mut converged = false;
+    for (rank, (recs, w_full, conv)) in run.outputs.into_iter().enumerate() {
+        if rank == 0 {
+            records = recs;
+            w = w_full;
+            converged = conv;
+        }
+    }
+    RunResult {
+        algo: cfg.algo,
+        records,
+        w,
+        stats: run.stats,
+        trace: run.trace,
+        sim_seconds: run.sim_seconds,
+        wall_seconds: run.wall_seconds,
+        converged,
+        node_ops: vec![OpCounts::default(); cfg.m],
+    }
+}
+
+fn node_main(
+    ctx: &mut NodeCtx,
+    partition: &Partition,
+    loss: &dyn Loss,
+    cfg: &RunConfig,
+    n: usize,
+    lips: f64,
+) -> (Vec<crate::algorithms::IterRecord>, Vec<f64>, bool) {
+    let shard = &partition.shards[ctx.rank];
+    let x = &shard.x;
+    let y = &shard.y;
+    let d = x.nrows();
+    let n_local = x.ncols();
+    let step = 1.0 / lips;
+
+    let mut w = vec![0.0; d];
+    let mut z = vec![0.0; n_local];
+    let mut recorder = Recorder::new(ctx.rank);
+    let mut converged = false;
+
+    for outer in 0..cfg.max_outer {
+        let (mut grad, data_f) = ctx.compute("gradient", || {
+            x.at_mul_into(&w, &mut z);
+            let g_scal: Vec<f64> = z
+                .iter()
+                .zip(y.iter())
+                .map(|(zi, yi)| loss.deriv(*zi, *yi))
+                .collect();
+            let mut g = x.a_mul(&g_scal);
+            ops::scale(1.0 / n as f64, &mut g);
+            let f: f64 = z
+                .iter()
+                .zip(y.iter())
+                .map(|(zi, yi)| loss.value(*zi, *yi))
+                .sum();
+            (g, f / n as f64)
+        });
+        ctx.reduce_all(&mut grad);
+        ops::axpy(cfg.lambda, &w, &mut grad);
+        let grad_norm = ops::norm2(&grad);
+        let mut fv = vec![data_f];
+        ctx.metric_reduce_all(&mut fv);
+        let fval = fv[0] + 0.5 * cfg.lambda * ops::norm2_sq(&w);
+
+        recorder.push(ctx, outer, grad_norm, fval, 0);
+        if grad_norm <= cfg.grad_tol {
+            converged = true;
+            break;
+        }
+        ctx.compute("step", || ops::axpy(-step, &grad, &mut w));
+    }
+
+    (recorder.records, w, converged)
+}

@@ -1,0 +1,253 @@
+//! Distributed optimization algorithms — the paper's contribution and its
+//! baselines, all running SPMD over [`crate::net::Cluster`]:
+//!
+//! | module      | algorithm            | paper reference                |
+//! |-------------|----------------------|--------------------------------|
+//! | `disco_f`   | **DiSCO-F**          | Algorithm 3 (the contribution) |
+//! | `disco_s`   | **DiSCO-S**          | Algorithm 2 (+ Woodbury Alg 4) |
+//! | `disco_s`   | original DiSCO       | Zhang & Xiao '15 (SAG precond) |
+//! | `dane`      | DANE                 | §1.1 item 3                    |
+//! | `cocoa`     | CoCoA+ (SDCA local)  | §1.1 item 4                    |
+//! | `gd`        | distributed GD       | (extra sanity baseline)        |
+//!
+//! Every run returns per-outer-iteration records of `(‖∇f‖, f, cumulative
+//! communication rounds, simulated elapsed time)` — precisely the axes of
+//! the paper's Figure 3 — plus per-node operation counts (Table 3) and the
+//! full communication/trace accounting (Tables 2/4, Figure 2).
+
+pub mod cocoa;
+pub mod common;
+pub mod dane;
+pub mod disco_f;
+pub mod disco_s;
+pub mod gd;
+
+use crate::data::Dataset;
+use crate::loss::LossKind;
+use crate::net::{CommStats, CostModel, Trace};
+
+/// Algorithm selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AlgoKind {
+    /// Feature-partitioned DiSCO (the paper's contribution).
+    DiscoF,
+    /// Sample-partitioned DiSCO with Woodbury preconditioning.
+    DiscoS,
+    /// Original DiSCO: Woodbury replaced by a master-only SAG inner solve.
+    DiscoOrig,
+    Dane,
+    CocoaPlus,
+    Gd,
+}
+
+impl AlgoKind {
+    pub fn parse(s: &str) -> Option<AlgoKind> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "disco-f" | "discof" => Some(AlgoKind::DiscoF),
+            "disco-s" | "discos" => Some(AlgoKind::DiscoS),
+            "disco" | "disco-orig" => Some(AlgoKind::DiscoOrig),
+            "dane" => Some(AlgoKind::Dane),
+            "cocoa" | "cocoa+" | "cocoa-plus" => Some(AlgoKind::CocoaPlus),
+            "gd" => Some(AlgoKind::Gd),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::DiscoF => "DiSCO-F",
+            AlgoKind::DiscoS => "DiSCO-S",
+            AlgoKind::DiscoOrig => "DiSCO",
+            AlgoKind::Dane => "DANE",
+            AlgoKind::CocoaPlus => "CoCoA+",
+            AlgoKind::Gd => "GD",
+        }
+    }
+
+    pub fn all() -> &'static [AlgoKind] {
+        &[
+            AlgoKind::DiscoF,
+            AlgoKind::DiscoS,
+            AlgoKind::DiscoOrig,
+            AlgoKind::Dane,
+            AlgoKind::CocoaPlus,
+            AlgoKind::Gd,
+        ]
+    }
+}
+
+/// Full run configuration. Defaults follow the paper's §5 settings.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub algo: AlgoKind,
+    pub loss: LossKind,
+    /// ℓ2 regularization λ.
+    pub lambda: f64,
+    /// Number of nodes m.
+    pub m: usize,
+    /// Preconditioner sample count τ (paper default 100).
+    pub tau: usize,
+    /// Preconditioner damping μ (paper: 1e-2).
+    pub mu: f64,
+    /// PCG forcing factor: ε_k = pcg_beta·‖∇f(w_k)‖.
+    pub pcg_beta: f64,
+    /// Outer-iteration cap.
+    pub max_outer: usize,
+    /// PCG steps cap per outer iteration.
+    pub max_pcg: usize,
+    /// Stop when ‖∇f‖ ≤ grad_tol.
+    pub grad_tol: f64,
+    /// Fraction of samples used for Hessian-vector products (Fig. 5;
+    /// 1.0 = exact Hessian).
+    pub hessian_fraction: f64,
+    /// DiSCO-F: balance feature shards by nnz instead of feature count
+    /// (ablation of the paper's load-balancing theme; see
+    /// `data::Partition::by_features_balanced`).
+    pub balanced_partition: bool,
+    pub seed: u64,
+    pub cost: CostModel,
+    pub trace: bool,
+    /// Local epochs for CoCoA+ (H) and DANE's SAG subproblem solver.
+    pub local_epochs: usize,
+    /// DANE's gradient weight η.
+    pub dane_eta: f64,
+    /// Original DiSCO: inner SAG solve tolerance factor (relative to ‖r‖)
+    /// and epoch cap.
+    pub sag_inner_tol: f64,
+    pub sag_max_epochs: usize,
+}
+
+impl RunConfig {
+    pub fn new(algo: AlgoKind, loss: LossKind, lambda: f64) -> Self {
+        Self {
+            algo,
+            loss,
+            lambda,
+            m: 4,
+            tau: 100,
+            mu: 1e-2,
+            pcg_beta: 1.0 / 20.0,
+            max_outer: 100,
+            max_pcg: 500,
+            grad_tol: 1e-9,
+            hessian_fraction: 1.0,
+            balanced_partition: false,
+            seed: 42,
+            cost: CostModel::default(),
+            trace: false,
+            local_epochs: 3,
+            dane_eta: 1.0,
+            sag_inner_tol: 0.05,
+            sag_max_epochs: 30,
+        }
+    }
+}
+
+/// One observation per outer iteration — a Figure-3 data point.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub outer: usize,
+    /// Cumulative vector-collective rounds (Fig. 3 left x-axis).
+    pub rounds: u64,
+    pub scalar_rounds: u64,
+    /// Cumulative doubles moved through vector collectives.
+    pub vector_doubles: u64,
+    /// Simulated elapsed seconds (Fig. 3 right x-axis).
+    pub sim_time: f64,
+    pub grad_norm: f64,
+    pub fval: f64,
+    /// PCG/inner iterations spent in this outer iteration.
+    pub inner_iters: usize,
+}
+
+/// Per-node operation counts over the PCG loop — Table 3's rows.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    /// `y = Mx` Hessian(-shard) vector products.
+    pub hvp: u64,
+    /// `Mx = y` preconditioner solves.
+    pub precond_solve: u64,
+    /// Vector additions / axpy-type updates.
+    pub axpy: u64,
+    /// Inner products.
+    pub dot: u64,
+    /// Dimension these ops ran at (d, d_j, …).
+    pub dim: usize,
+}
+
+/// Result of a distributed run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub algo: AlgoKind,
+    pub records: Vec<IterRecord>,
+    /// Final iterate (full d-vector, assembled).
+    pub w: Vec<f64>,
+    pub stats: CommStats,
+    pub trace: Trace,
+    pub sim_seconds: f64,
+    pub wall_seconds: f64,
+    pub converged: bool,
+    /// Per-node PCG-loop operation counts (empty for non-PCG baselines).
+    pub node_ops: Vec<OpCounts>,
+}
+
+impl RunResult {
+    pub fn final_grad_norm(&self) -> f64 {
+        self.records.last().map(|r| r.grad_norm).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_fval(&self) -> f64 {
+        self.records.last().map(|r| r.fval).unwrap_or(f64::NAN)
+    }
+
+    /// Rounds needed to first reach `‖∇f‖ ≤ tol` (None if never).
+    pub fn rounds_to_tol(&self, tol: f64) -> Option<u64> {
+        self.records
+            .iter()
+            .find(|r| r.grad_norm <= tol)
+            .map(|r| r.rounds)
+    }
+
+    /// Simulated seconds to first reach `‖∇f‖ ≤ tol`.
+    pub fn time_to_tol(&self, tol: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.grad_norm <= tol)
+            .map(|r| r.sim_time)
+    }
+}
+
+/// Dispatch a run.
+pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
+    match cfg.algo {
+        AlgoKind::DiscoF => disco_f::run(ds, cfg),
+        AlgoKind::DiscoS => disco_s::run(ds, cfg, disco_s::Precond::Woodbury),
+        AlgoKind::DiscoOrig => disco_s::run(ds, cfg, disco_s::Precond::MasterSag),
+        AlgoKind::Dane => dane::run(ds, cfg),
+        AlgoKind::CocoaPlus => cocoa::run(ds, cfg),
+        AlgoKind::Gd => gd::run(ds, cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_parsing() {
+        assert_eq!(AlgoKind::parse("disco-f"), Some(AlgoKind::DiscoF));
+        assert_eq!(AlgoKind::parse("DiSCO_S"), Some(AlgoKind::DiscoS));
+        assert_eq!(AlgoKind::parse("disco"), Some(AlgoKind::DiscoOrig));
+        assert_eq!(AlgoKind::parse("cocoa+"), Some(AlgoKind::CocoaPlus));
+        assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn config_defaults_match_paper() {
+        let c = RunConfig::new(AlgoKind::DiscoF, LossKind::Logistic, 1e-4);
+        assert_eq!(c.tau, 100); // §5.2
+        assert_eq!(c.mu, 1e-2); // §5.2
+        assert_eq!(c.m, 4); // 4 EC2 instances
+        assert_eq!(c.hessian_fraction, 1.0);
+    }
+}

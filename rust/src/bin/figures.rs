@@ -1,0 +1,74 @@
+//! `disco-figures` — regenerate every table and figure of the paper's
+//! evaluation (DESIGN.md §4) into `results/`.
+//!
+//! ```text
+//! disco-figures all                 # everything (≈ minutes at --scale 4)
+//! disco-figures fig3 --scale 8      # one experiment, scaled down
+//! disco-figures table3              # measured per-PCG-step op counts
+//! ```
+
+use disco::coordinator::experiments::{self, ExperimentConfig};
+use disco::util::cli::Args;
+
+fn main() {
+    let args = Args::new("disco-figures", "regenerate the paper's tables and figures")
+        .opt("scale", Some("4"), "dataset down-scale factor (1 = full registry sizes)")
+        .opt("out", Some("results"), "output directory for CSVs")
+        .opt("m", Some("4"), "number of simulated nodes")
+        .opt("max-outer", Some("60"), "outer iteration cap per run")
+        .opt("grad-target", Some("1e-8"), "target gradient norm")
+        .opt("seed", Some("42"), "PRNG seed");
+    let args = match args.parse_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let mut cfg = ExperimentConfig::default();
+    cfg.scale = args.get_usize("scale").unwrap();
+    cfg.out_dir = args.get("out").unwrap();
+    cfg.m = args.get_usize("m").unwrap();
+    cfg.max_outer = args.get_usize("max-outer").unwrap();
+    cfg.grad_target = args.get_f64("grad-target").unwrap();
+    cfg.seed = args.get_u64("seed").unwrap();
+
+    let what = args
+        .positionals()
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all")
+        .to_string();
+    let run = |cfg: &ExperimentConfig, which: &str| -> std::io::Result<()> {
+        let t = std::time::Instant::now();
+        let summary = match which {
+            "fig1" => experiments::figure1(cfg)?,
+            "fig2" => experiments::figure2(cfg)?,
+            "fig3" => experiments::figure3(cfg)?,
+            "fig4" => experiments::figure4(cfg)?,
+            "fig5" => experiments::figure5(cfg)?,
+            "table2" => experiments::table2(cfg)?,
+            "table3" | "table4" | "table34" => experiments::tables34(cfg)?,
+            "table5" => experiments::table5(cfg)?,
+            other => {
+                eprintln!("unknown experiment '{other}'");
+                std::process::exit(2);
+            }
+        };
+        experiments::write_summary(cfg, &format!("{which}_summary.txt"), &summary)?;
+        println!("=== {which} ({:.1}s) ===\n{summary}", t.elapsed().as_secs_f64());
+        Ok(())
+    };
+
+    let list: Vec<&str> = if what == "all" {
+        vec!["fig1", "fig2", "table2", "table34", "table5", "fig3", "fig4", "fig5"]
+    } else {
+        vec![what.as_str()]
+    };
+    for which in list {
+        if let Err(e) = run(&cfg, which) {
+            eprintln!("{which} failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

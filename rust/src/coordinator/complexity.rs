@@ -1,0 +1,108 @@
+//! Analytic communication-complexity models — the paper's Figure 1
+//! (Amdahl's law) and Table 2 (round complexity at λ ~ 1/√n).
+
+/// Maximal speedup with serial fraction `s` on `m` nodes (Amdahl):
+/// `1 / (s + (1−s)/m)`. The paper's Figure 1 uses s = 0.75 and notes the
+/// asymptote 1/s = 4/3.
+pub fn amdahl_speedup(serial_fraction: f64, m: usize) -> f64 {
+    assert!((0.0..=1.0).contains(&serial_fraction));
+    assert!(m >= 1);
+    1.0 / (serial_fraction + (1.0 - serial_fraction) / m as f64)
+}
+
+/// The paper's Figure-1 series: speedup for m = 1..=max_m at 75 % serial.
+pub fn figure1_series(max_m: usize) -> Vec<(usize, f64)> {
+    (1..=max_m).map(|m| (m, amdahl_speedup(0.75, m))).collect()
+}
+
+/// Table 2 row: communication-round complexity (big-O argument dropped,
+/// constants 1) at λ ~ 1/√n.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Table2Algo {
+    Dane,
+    CocoaPlus,
+    Disco,
+}
+
+impl Table2Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Table2Algo::Dane => "DANE",
+            Table2Algo::CocoaPlus => "CoCoA+",
+            Table2Algo::Disco => "DiSCO",
+        }
+    }
+}
+
+/// Rounds to reach accuracy ε for quadratic loss (paper Table 2, col 1).
+pub fn table2_quadratic(algo: Table2Algo, m: usize, n: usize, eps: f64) -> f64 {
+    let log_eps = (1.0 / eps).ln();
+    let m = m as f64;
+    let n = n as f64;
+    match algo {
+        Table2Algo::Dane => m * log_eps,
+        Table2Algo::CocoaPlus => n * log_eps,
+        Table2Algo::Disco => m.powf(0.25) * log_eps,
+    }
+}
+
+/// Rounds for logistic loss (paper Table 2, col 2).
+pub fn table2_logistic(algo: Table2Algo, m: usize, n: usize, d: usize, eps: f64) -> f64 {
+    let log_eps = (1.0 / eps).ln();
+    let m = m as f64;
+    let n = n as f64;
+    let d = d as f64;
+    match algo {
+        Table2Algo::Dane => (m * n).sqrt() * log_eps,
+        Table2Algo::CocoaPlus => n * log_eps,
+        Table2Algo::Disco => m.powf(0.75) * d.powf(0.25) + m.powf(0.25) * d.powf(0.25) * log_eps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn amdahl_matches_paper_figure1() {
+        // Paper: asymptotically bounded by 4/3 ≈ 1.333 at 75 % serial.
+        assert!((amdahl_speedup(0.75, 1) - 1.0).abs() < 1e-12);
+        let big = amdahl_speedup(0.75, 1_000_000);
+        assert!((big - 4.0 / 3.0).abs() < 1e-4);
+        // Monotone increasing in m.
+        let s = figure1_series(64);
+        for w in s.windows(2) {
+            assert!(w[1].1 > w[0].1);
+        }
+        assert_eq!(s.len(), 64);
+    }
+
+    #[test]
+    fn amdahl_zero_serial_is_linear() {
+        assert!((amdahl_speedup(0.0, 8) - 8.0).abs() < 1e-12);
+        assert!((amdahl_speedup(1.0, 8) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table2_ordering_matches_paper() {
+        // "CoCoA+ uses more rounds … since it is a first-order method.
+        //  DANE and DiSCO are Newton-type methods, which tend to use less."
+        let (m, n, d, eps) = (4, 1_000_000, 50_000, 1e-6);
+        let dane = table2_quadratic(Table2Algo::Dane, m, n, eps);
+        let cocoa = table2_quadratic(Table2Algo::CocoaPlus, m, n, eps);
+        let disco = table2_quadratic(Table2Algo::Disco, m, n, eps);
+        assert!(disco < dane && dane < cocoa);
+
+        let dane_l = table2_logistic(Table2Algo::Dane, m, n, d, eps);
+        let cocoa_l = table2_logistic(Table2Algo::CocoaPlus, m, n, d, eps);
+        let disco_l = table2_logistic(Table2Algo::Disco, m, n, d, eps);
+        assert!(disco_l < dane_l && dane_l < cocoa_l);
+    }
+
+    #[test]
+    fn disco_scales_sublinearly_in_m() {
+        let a = table2_quadratic(Table2Algo::Disco, 4, 1000, 1e-6);
+        let b = table2_quadratic(Table2Algo::Disco, 64, 1000, 1e-6);
+        assert!(b / a < 16.0 / 4.0, "m^(1/4) scaling violated");
+    }
+}

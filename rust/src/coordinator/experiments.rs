@@ -1,0 +1,411 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation into `results/*.csv` (plus human-readable summaries).
+//! Driven by the `disco-figures` binary and the end-to-end benches; see
+//! DESIGN.md §4 for the experiment index.
+
+use crate::algorithms::{run, AlgoKind, RunConfig, RunResult};
+use crate::coordinator::complexity::{
+    figure1_series, table2_logistic, table2_quadratic, Table2Algo,
+};
+use crate::data::registry;
+use crate::loss::LossKind;
+use crate::net::CostModel;
+use crate::util::csv::{sci, secs, CsvWriter};
+use std::path::Path;
+
+/// Common knobs for the regenerators.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Dataset down-scale factor (1 = full registry size; tests use 8–16).
+    pub scale: usize,
+    pub out_dir: String,
+    pub m: usize,
+    pub cost: CostModel,
+    /// Target gradient norm for "reach ε" comparisons.
+    pub grad_target: f64,
+    pub max_outer: usize,
+    pub seed: u64,
+    /// Preconditioner sample count (paper default 100). Scaled-down test
+    /// datasets must keep τ ≪ n for the paper's regime to apply.
+    pub tau: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            scale: 1,
+            out_dir: "results".into(),
+            m: 4,
+            cost: CostModel::default(),
+            grad_target: 1e-8,
+            max_outer: 60,
+            seed: 42,
+            tau: 100,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    fn path(&self, file: &str) -> String {
+        format!("{}/{}", self.out_dir, file)
+    }
+
+    fn dataset(&self, name: &str) -> crate::data::Dataset {
+        if self.scale <= 1 {
+            registry::load(name).expect("unknown dataset")
+        } else {
+            registry::load_scaled(name, self.scale).expect("unknown dataset")
+        }
+    }
+
+    fn run_config(&self, algo: AlgoKind, loss: LossKind, lambda: f64) -> RunConfig {
+        let mut cfg = RunConfig::new(algo, loss, lambda);
+        cfg.tau = self.tau;
+        cfg.m = self.m;
+        cfg.cost = self.cost;
+        cfg.grad_tol = self.grad_target;
+        cfg.max_outer = self.max_outer;
+        cfg.seed = self.seed;
+        // Baseline iteration budgets: first-order methods get more outer
+        // iterations (they do less per round), as in the paper's runs.
+        if matches!(algo, AlgoKind::CocoaPlus | AlgoKind::Dane) {
+            cfg.max_outer = self.max_outer * 20;
+            cfg.local_epochs = 5;
+        }
+        cfg
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Figure 1 — Amdahl bound
+// ---------------------------------------------------------------------------
+
+pub fn figure1(cfg: &ExperimentConfig) -> std::io::Result<String> {
+    let mut w = CsvWriter::create(cfg.path("fig1_amdahl.csv"), &["m", "speedup"])?;
+    for (m, s) in figure1_series(64) {
+        w.row(&[m.to_string(), format!("{s:.6}")])?;
+    }
+    Ok("fig1: Amdahl speedup bound (75% serial), m=1..64".into())
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2 — per-node flow (load balancing)
+// ---------------------------------------------------------------------------
+
+pub fn figure2(cfg: &ExperimentConfig) -> std::io::Result<String> {
+    let ds = cfg.dataset("tiny");
+    let lambda = registry::spec("tiny").unwrap().lambda;
+    let mut summary = String::new();
+    for (algo, file) in [
+        (AlgoKind::DiscoS, "fig2_trace_disco_s.csv"),
+        (AlgoKind::DiscoF, "fig2_trace_disco_f.csv"),
+        (AlgoKind::DiscoOrig, "fig2_trace_disco_orig.csv"),
+    ] {
+        let mut rc = cfg.run_config(algo, LossKind::Logistic, lambda);
+        rc.trace = true;
+        rc.max_outer = 3; // a few outer iterations, like the paper's diagram
+        rc.grad_tol = 0.0;
+        let res = run(&ds, &rc);
+        std::fs::create_dir_all(&cfg.out_dir)?;
+        std::fs::write(cfg.path(file), res.trace.to_csv())?;
+        let util = res.trace.utilization();
+        summary.push_str(&format!(
+            "{:<8} utilization {:>5.1}%  (trace → {})\n{}\n",
+            algo.name(),
+            100.0 * util,
+            file,
+            res.trace.render_ascii(96)
+        ));
+    }
+    Ok(summary)
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — analytic communication complexity
+// ---------------------------------------------------------------------------
+
+pub fn table2(cfg: &ExperimentConfig) -> std::io::Result<String> {
+    let (m, eps) = (cfg.m, 1e-6);
+    let mut w = CsvWriter::create(
+        cfg.path("table2_complexity.csv"),
+        &["algorithm", "dataset", "n", "d", "quadratic_rounds", "logistic_rounds"],
+    )?;
+    let mut out = format!("{:<10} {:<10} {:>14} {:>14}\n", "algo", "dataset", "quadratic", "logistic");
+    for spec in registry::SPECS.iter().filter(|s| s.name != "tiny" && s.name != "e2e") {
+        for algo in [Table2Algo::Dane, Table2Algo::CocoaPlus, Table2Algo::Disco] {
+            let q = table2_quadratic(algo, m, spec.n, eps);
+            let l = table2_logistic(algo, m, spec.n, spec.d, eps);
+            w.row(&[
+                algo.name().into(),
+                spec.name.into(),
+                spec.n.to_string(),
+                spec.d.to_string(),
+                format!("{q:.1}"),
+                format!("{l:.1}"),
+            ])?;
+            out.push_str(&format!(
+                "{:<10} {:<10} {:>14.1} {:>14.1}\n",
+                algo.name(),
+                spec.name,
+                q,
+                l
+            ));
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Tables 3 & 4 — measured per-PCG-step operation & communication counts
+// ---------------------------------------------------------------------------
+
+/// Differential measurement: run DiSCO-{S,F} with exactly T and T+1 PCG
+/// steps; the per-step cost is the difference, cancelling setup terms.
+pub fn tables34(cfg: &ExperimentConfig) -> std::io::Result<String> {
+    let ds = cfg.dataset("tiny");
+    let lambda = registry::spec("tiny").unwrap().lambda;
+    let probe = |algo: AlgoKind, steps: usize| -> RunResult {
+        let mut rc = cfg.run_config(algo, LossKind::Logistic, lambda);
+        rc.max_outer = 1;
+        rc.max_pcg = steps;
+        rc.grad_tol = 0.0;
+        rc.pcg_beta = 0.0; // force exactly max_pcg steps
+        run(&ds, &rc)
+    };
+    let mut table3 = CsvWriter::create(
+        cfg.path("table3_opcounts.csv"),
+        &["algo", "node", "role", "dim", "hvp", "precond_solve", "axpy", "dot"],
+    )?;
+    let mut table4 = CsvWriter::create(
+        cfg.path("table4_comm.csv"),
+        &["algo", "vector_rounds_per_step", "doubles_per_step", "collectives"],
+    )?;
+    let mut out = String::new();
+    for algo in [AlgoKind::DiscoS, AlgoKind::DiscoF] {
+        let one = probe(algo, 1);
+        let two = probe(algo, 2);
+        out.push_str(&format!("--- {} (per PCG step) ---\n", algo.name()));
+        for node in 0..cfg.m {
+            let a = &one.node_ops[node];
+            let b = &two.node_ops[node];
+            let role = if algo == AlgoKind::DiscoS && node == 0 {
+                "master"
+            } else {
+                "node"
+            };
+            let row = [
+                b.hvp - a.hvp,
+                b.precond_solve - a.precond_solve,
+                b.axpy - a.axpy,
+                b.dot - a.dot,
+            ];
+            table3.row(&[
+                algo.name().into(),
+                node.to_string(),
+                role.into(),
+                a.dim.to_string(),
+                row[0].to_string(),
+                row[1].to_string(),
+                row[2].to_string(),
+                row[3].to_string(),
+            ])?;
+            out.push_str(&format!(
+                "node {node} ({role:<6}, dim {:>5}): y=Mx {}  Mx=y {}  x+y {}  xᵀy {}\n",
+                a.dim, row[0], row[1], row[2], row[3]
+            ));
+        }
+        let dr = two.stats.vector_rounds - one.stats.vector_rounds;
+        let dd = two.stats.vector_doubles - one.stats.vector_doubles;
+        table4.row(&[
+            algo.name().into(),
+            dr.to_string(),
+            dd.to_string(),
+            format!(
+                "ra={} bc={}",
+                two.stats.reduce_all - one.stats.reduce_all,
+                two.stats.broadcast - one.stats.broadcast
+            ),
+        ])?;
+        out.push_str(&format!(
+            "comm per step: {dr} vector rounds, {dd} doubles\n\n"
+        ));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — dataset statistics
+// ---------------------------------------------------------------------------
+
+pub fn table5(cfg: &ExperimentConfig) -> std::io::Result<String> {
+    let mut w = CsvWriter::create(
+        cfg.path("table5_datasets.csv"),
+        &["dataset", "paper_analog", "n", "d", "nnz", "size_mb", "lambda"],
+    )?;
+    let mut out = String::new();
+    for spec in registry::SPECS {
+        let ds = cfg.dataset(spec.name);
+        w.row(&[
+            spec.name.into(),
+            spec.paper_analog.replace(',', ";"),
+            ds.nsamples().to_string(),
+            ds.dim().to_string(),
+            ds.nnz().to_string(),
+            format!("{:.2}", ds.size_bytes() as f64 / (1024.0 * 1024.0)),
+            format!("{:e}", spec.lambda),
+        ])?;
+        out.push_str(&ds.describe());
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3 — ‖∇f‖ vs rounds & elapsed time, all algorithms
+// ---------------------------------------------------------------------------
+
+pub const FIG3_ALGOS: &[AlgoKind] = &[
+    AlgoKind::DiscoF,
+    AlgoKind::DiscoS,
+    AlgoKind::DiscoOrig,
+    AlgoKind::Dane,
+    AlgoKind::CocoaPlus,
+];
+
+pub fn figure3_one(
+    cfg: &ExperimentConfig,
+    dataset: &str,
+    loss: LossKind,
+) -> std::io::Result<(String, Vec<(AlgoKind, RunResult)>)> {
+    let ds = cfg.dataset(dataset);
+    let lambda = registry::spec(dataset).unwrap().lambda;
+    let mut w = CsvWriter::create(
+        cfg.path(&format!("fig3_{dataset}_{}.csv", loss.name())),
+        &["algo", "outer", "rounds", "sim_time_s", "grad_norm", "fval"],
+    )?;
+    let mut out = format!("--- fig3 {dataset} / {} ---\n", loss.name());
+    let mut results = Vec::new();
+    for &algo in FIG3_ALGOS {
+        let rc = cfg.run_config(algo, loss, lambda);
+        let res = run(&ds, &rc);
+        for r in &res.records {
+            w.row(&[
+                algo.name().into(),
+                r.outer.to_string(),
+                r.rounds.to_string(),
+                secs(r.sim_time),
+                sci(r.grad_norm),
+                sci(r.fval),
+            ])?;
+        }
+        out.push_str(&format!(
+            "{:<8} final ‖∇f‖={:.2e} rounds={:>6} sim_time={:.3}s converged={}\n",
+            algo.name(),
+            res.final_grad_norm(),
+            res.stats.rounds(),
+            res.sim_seconds,
+            res.converged
+        ));
+        results.push((algo, res));
+    }
+    Ok((out, results))
+}
+
+pub fn figure3(cfg: &ExperimentConfig) -> std::io::Result<String> {
+    let mut out = String::new();
+    for dataset in ["news20s", "rcv1s", "splices"] {
+        for loss in [LossKind::Quadratic, LossKind::Logistic] {
+            let (s, _) = figure3_one(cfg, dataset, loss)?;
+            out.push_str(&s);
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 4 — τ sweep for DiSCO-F
+// ---------------------------------------------------------------------------
+
+pub const FIG4_TAUS: &[usize] = &[25, 50, 100, 200, 400];
+
+pub fn figure4(cfg: &ExperimentConfig) -> std::io::Result<String> {
+    let mut out = String::new();
+    let mut w = CsvWriter::create(
+        cfg.path("fig4_tau.csv"),
+        &["dataset", "tau", "outer", "rounds", "sim_time_s", "grad_norm"],
+    )?;
+    for dataset in ["news20s", "rcv1s"] {
+        let ds = cfg.dataset(dataset);
+        let lambda = registry::spec(dataset).unwrap().lambda;
+        out.push_str(&format!("--- fig4 {dataset} (DiSCO-F, logistic) ---\n"));
+        for &tau in FIG4_TAUS {
+            let mut rc = cfg.run_config(AlgoKind::DiscoF, LossKind::Logistic, lambda);
+            rc.tau = tau;
+            let res = run(&ds, &rc);
+            for r in &res.records {
+                w.row(&[
+                    dataset.into(),
+                    tau.to_string(),
+                    r.outer.to_string(),
+                    r.rounds.to_string(),
+                    secs(r.sim_time),
+                    sci(r.grad_norm),
+                ])?;
+            }
+            out.push_str(&format!(
+                "τ={tau:<4} rounds={:>6} sim_time={:.3}s final ‖∇f‖={:.2e}\n",
+                res.stats.rounds(),
+                res.sim_seconds,
+                res.final_grad_norm()
+            ));
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 5 — Hessian subsampling sweep
+// ---------------------------------------------------------------------------
+
+pub const FIG5_FRACTIONS: &[f64] = &[1.0, 0.5, 0.25, 0.125, 0.0625];
+
+pub fn figure5(cfg: &ExperimentConfig) -> std::io::Result<String> {
+    let mut out = String::new();
+    let mut w = CsvWriter::create(
+        cfg.path("fig5_subsample.csv"),
+        &["dataset", "fraction", "outer", "rounds", "sim_time_s", "grad_norm"],
+    )?;
+    for dataset in ["news20s", "rcv1s"] {
+        let ds = cfg.dataset(dataset);
+        let lambda = registry::spec(dataset).unwrap().lambda;
+        out.push_str(&format!("--- fig5 {dataset} (DiSCO-F, logistic) ---\n"));
+        for &frac in FIG5_FRACTIONS {
+            let mut rc = cfg.run_config(AlgoKind::DiscoF, LossKind::Logistic, lambda);
+            rc.hessian_fraction = frac;
+            let res = run(&ds, &rc);
+            for r in &res.records {
+                w.row(&[
+                    dataset.into(),
+                    format!("{frac}"),
+                    r.outer.to_string(),
+                    r.rounds.to_string(),
+                    secs(r.sim_time),
+                    sci(r.grad_norm),
+                ])?;
+            }
+            out.push_str(&format!(
+                "fraction={frac:<7} rounds={:>6} sim_time={:.3}s final ‖∇f‖={:.2e}\n",
+                res.stats.rounds(),
+                res.sim_seconds,
+                res.final_grad_norm()
+            ));
+        }
+    }
+    Ok(out)
+}
+
+/// Write a summary file alongside the CSVs.
+pub fn write_summary(cfg: &ExperimentConfig, name: &str, body: &str) -> std::io::Result<()> {
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    std::fs::write(Path::new(&cfg.out_dir).join(name), body)
+}

@@ -1,0 +1,7 @@
+//! Coordinator: experiment drivers regenerating the paper's tables and
+//! figures, and the analytic complexity models behind Figure 1 / Table 2.
+
+pub mod complexity;
+pub mod experiments;
+
+pub use experiments::ExperimentConfig;

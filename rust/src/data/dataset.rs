@@ -1,0 +1,92 @@
+//! A labeled dataset `(X ∈ ℝ^{d×n}, y ∈ ℝⁿ)` with columns-as-samples,
+//! plus metadata used by the experiment harness (Table 5 reporting).
+
+use crate::linalg::DataMatrix;
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: DataMatrix,
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new(name: &str, x: DataMatrix, y: Vec<f64>) -> Self {
+        assert_eq!(x.ncols(), y.len(), "labels/sample count mismatch");
+        assert!(!y.is_empty(), "empty dataset");
+        Self {
+            name: name.to_string(),
+            x,
+            y,
+        }
+    }
+
+    /// Number of features `d`.
+    pub fn dim(&self) -> usize {
+        self.x.nrows()
+    }
+
+    /// Number of samples `n`.
+    pub fn nsamples(&self) -> usize {
+        self.x.ncols()
+    }
+
+    /// Stored values (nnz for sparse) — Table 5's "size" analog.
+    pub fn nnz(&self) -> usize {
+        self.x.nnz()
+    }
+
+    /// In-memory size of the value+index arrays, in bytes.
+    pub fn size_bytes(&self) -> usize {
+        match &self.x {
+            DataMatrix::Dense(_) => self.nnz() * 8,
+            DataMatrix::Sparse(_) => self.nnz() * (8 + 4),
+        }
+    }
+
+    /// Fraction of stored entries.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.dim() * self.nsamples()) as f64
+    }
+
+    /// One-line stats row (used by `disco-figures table5`).
+    pub fn describe(&self) -> String {
+        format!(
+            "{:<12} n={:<8} d={:<8} nnz={:<10} density={:.4}% size={:.2} MB",
+            self.name,
+            self.nsamples(),
+            self.dim(),
+            self.nnz(),
+            100.0 * self.density(),
+            self.size_bytes() as f64 / (1024.0 * 1024.0)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::CscMatrix;
+    use crate::util::prng::Xoshiro256pp;
+
+    #[test]
+    fn metadata() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let x = CscMatrix::rand_sparse(50, 40, 0.1, &mut rng);
+        let nnz = x.nnz();
+        let ds = Dataset::new("t", DataMatrix::Sparse(x), vec![1.0; 40]);
+        assert_eq!(ds.dim(), 50);
+        assert_eq!(ds.nsamples(), 40);
+        assert_eq!(ds.nnz(), nnz);
+        assert!(ds.density() > 0.0 && ds.density() < 1.0);
+        assert!(ds.describe().contains("n=40"));
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn label_mismatch_rejected() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let x = CscMatrix::rand_sparse(5, 4, 0.5, &mut rng);
+        let _ = Dataset::new("bad", DataMatrix::Sparse(x), vec![1.0; 3]);
+    }
+}

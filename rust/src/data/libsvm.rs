@@ -1,0 +1,191 @@
+//! LIBSVM text format parser/writer.
+//!
+//! The paper's datasets (rcv1, news20, splice-site) ship in this format:
+//! one sample per line, `label idx:val idx:val ...` with 1-based feature
+//! indices. The loader is strict about syntax but tolerant about feature
+//! index gaps (d is max index unless overridden). The writer exists so
+//! synthetic datasets can be exported for cross-checking with external
+//! tools.
+
+use crate::data::dataset::Dataset;
+use crate::linalg::{CscMatrix, DataMatrix};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+#[derive(Debug)]
+pub enum LibsvmError {
+    Io(std::io::Error),
+    Parse { line: usize, msg: String },
+}
+
+impl std::fmt::Display for LibsvmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LibsvmError::Io(e) => write!(f, "io error: {e}"),
+            LibsvmError::Parse { line, msg } => write!(f, "parse error on line {line}: {msg}"),
+        }
+    }
+}
+impl std::error::Error for LibsvmError {}
+
+impl From<std::io::Error> for LibsvmError {
+    fn from(e: std::io::Error) -> Self {
+        LibsvmError::Io(e)
+    }
+}
+
+/// Parse LIBSVM text from any reader. `min_dim` forces at least that many
+/// features (useful when train/test splits must share a dimension).
+pub fn parse_reader(r: impl BufRead, name: &str, min_dim: usize) -> Result<Dataset, LibsvmError> {
+    let mut cols: Vec<Vec<(u32, f64)>> = Vec::new();
+    let mut labels: Vec<f64> = Vec::new();
+    let mut max_idx: usize = 0;
+
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .map_err(|_| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: "bad label".into(),
+            })?;
+        let mut col: Vec<(u32, f64)> = Vec::new();
+        for tok in parts {
+            let (i, v) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("expected idx:val, got '{tok}'"),
+            })?;
+            let idx: usize = i.parse().map_err(|_| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad index '{i}'"),
+            })?;
+            if idx == 0 {
+                return Err(LibsvmError::Parse {
+                    line: lineno + 1,
+                    msg: "libsvm indices are 1-based".into(),
+                });
+            }
+            let val: f64 = v.parse().map_err(|_| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad value '{v}'"),
+            })?;
+            max_idx = max_idx.max(idx);
+            col.push(((idx - 1) as u32, val));
+        }
+        col.sort_unstable_by_key(|(i, _)| *i);
+        // Duplicate feature indices in one sample are invalid.
+        for w in col.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(LibsvmError::Parse {
+                    line: lineno + 1,
+                    msg: format!("duplicate feature index {}", w[0].0 + 1),
+                });
+            }
+        }
+        cols.push(col);
+        labels.push(label);
+    }
+    if cols.is_empty() {
+        return Err(LibsvmError::Parse {
+            line: 0,
+            msg: "empty file".into(),
+        });
+    }
+    let d = max_idx.max(min_dim);
+    let x = CscMatrix::from_columns(d, &cols);
+    Ok(Dataset::new(name, DataMatrix::Sparse(x), labels))
+}
+
+/// Load a LIBSVM file from disk.
+pub fn load(path: impl AsRef<Path>) -> Result<Dataset, LibsvmError> {
+    let path = path.as_ref();
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+    let f = std::fs::File::open(path)?;
+    parse_reader(BufReader::new(f), &name, 0)
+}
+
+/// Write a dataset in LIBSVM format (1-based indices, omitting zeros).
+pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> Result<(), LibsvmError> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for j in 0..ds.nsamples() {
+        write!(f, "{}", ds.y[j])?;
+        let col = ds.x.col_dense(j);
+        for (i, v) in col.iter().enumerate() {
+            if *v != 0.0 {
+                write!(f, " {}:{}", i + 1, v)?;
+            }
+        }
+        writeln!(f)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_basic_file() {
+        let text = "+1 1:0.5 3:2.0\n-1 2:1.5\n# comment line\n\n+1 4:1.0 # trailing\n";
+        let ds = parse_reader(Cursor::new(text), "t", 0).unwrap();
+        assert_eq!(ds.nsamples(), 3);
+        assert_eq!(ds.dim(), 4);
+        assert_eq!(ds.y, vec![1.0, -1.0, 1.0]);
+        assert_eq!(ds.x.col_dense(0), vec![0.5, 0.0, 2.0, 0.0]);
+        assert_eq!(ds.x.col_dense(1), vec![0.0, 1.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn unsorted_indices_accepted() {
+        let ds = parse_reader(Cursor::new("1 3:1 1:2\n"), "t", 0).unwrap();
+        assert_eq!(ds.x.col_dense(0), vec![2.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_reader(Cursor::new("1 nocolon\n"), "t", 0).is_err());
+        assert!(parse_reader(Cursor::new("abc 1:2\n"), "t", 0).is_err());
+        assert!(parse_reader(Cursor::new("1 0:2\n"), "t", 0).is_err()); // 0-based
+        assert!(parse_reader(Cursor::new("1 2:1 2:3\n"), "t", 0).is_err()); // dup
+        assert!(parse_reader(Cursor::new(""), "t", 0).is_err()); // empty
+    }
+
+    #[test]
+    fn min_dim_respected() {
+        let ds = parse_reader(Cursor::new("1 1:1\n"), "t", 10).unwrap();
+        assert_eq!(ds.dim(), 10);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        use crate::data::synthetic::SyntheticConfig;
+        let ds = SyntheticConfig::new("rt", 20, 15).seed(3).generate();
+        let dir = std::env::temp_dir().join("disco_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.libsvm");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.nsamples(), ds.nsamples());
+        assert_eq!(back.y, ds.y);
+        // Dims can shrink if the last feature is unused; compare data via
+        // dense form up to the loaded dim.
+        let a = ds.x.to_dense();
+        let b = back.x.to_dense();
+        for j in 0..ds.nsamples() {
+            for i in 0..back.dim() {
+                assert!((a.get(i, j) - b.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+}

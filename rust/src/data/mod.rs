@@ -1,0 +1,13 @@
+//! Datasets: labeled data container, synthetic generators standing in for
+//! the paper's Table-5 corpora, LIBSVM I/O, the sample/feature partitioners
+//! at the heart of DiSCO-S vs DiSCO-F, and the named registry.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod partition;
+pub mod registry;
+pub mod synthetic;
+
+pub use dataset::Dataset;
+pub use partition::{balanced_ranges, Partition, PartitionKind, Shard};
+pub use synthetic::SyntheticConfig;

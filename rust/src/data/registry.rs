@@ -1,0 +1,150 @@
+//! Named dataset registry — the scaled-down stand-ins for the paper's
+//! Table 5 (see DESIGN.md §3 for the substitution argument), plus small
+//! shapes used by the XLA runtime path and the quickstart.
+//!
+//! | name      | paper analog       | regime | n      | d      |
+//! |-----------|--------------------|--------|--------|--------|
+//! | `rcv1s`   | rcv1.test          | n ≫ d  | 16384  | 2048   |
+//! | `news20s` | news20             | d ≫ n  | 2048   | 16384  |
+//! | `splices` | splice-site.test   | d ≈ n  | 8192   | 8192   |
+//! | `tiny`    | (tests)            | d ≈ n  | 256    | 128    |
+//! | `e2e`     | (end-to-end demo)  | n > d  | 16384  | 8192   |
+//!
+//! Default λ follows the paper's Figure 3 settings, rescaled to keep
+//! λ·n roughly constant against the original dataset sizes (the paper's
+//! λ ~ 1/√n regime from Table 2).
+
+use crate::data::dataset::Dataset;
+use crate::data::synthetic::SyntheticConfig;
+
+/// Static description of a registered dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub paper_analog: &'static str,
+    pub n: usize,
+    pub d: usize,
+    pub density: f64,
+    /// Default regularization (paper Fig. 3 setting, rescaled).
+    pub lambda: f64,
+    pub seed: u64,
+}
+
+pub const SPECS: &[DatasetSpec] = &[
+    DatasetSpec {
+        name: "rcv1s",
+        paper_analog: "rcv1.test (n=677k, d=47k)",
+        n: 16384,
+        d: 2048,
+        density: 0.008,
+        lambda: 1e-4,
+        seed: 101,
+    },
+    DatasetSpec {
+        name: "news20s",
+        paper_analog: "news20 (n=20k, d=1.36M)",
+        n: 2048,
+        d: 16384,
+        density: 0.003,
+        lambda: 1e-3,
+        seed: 102,
+    },
+    DatasetSpec {
+        name: "splices",
+        paper_analog: "splice-site.test (n=4.6M, d=11.7M, 273GB)",
+        n: 8192,
+        d: 8192,
+        density: 0.004,
+        lambda: 1e-5,
+        seed: 103,
+    },
+    DatasetSpec {
+        name: "tiny",
+        paper_analog: "(unit/integration tests)",
+        n: 256,
+        d: 128,
+        density: 0.08,
+        lambda: 1e-3,
+        seed: 104,
+    },
+    DatasetSpec {
+        name: "e2e",
+        paper_analog: "(end-to-end demo workload)",
+        n: 16384,
+        d: 8192,
+        density: 0.004,
+        lambda: 1e-4,
+        seed: 105,
+    },
+];
+
+pub fn spec(name: &str) -> Option<&'static DatasetSpec> {
+    SPECS.iter().find(|s| s.name == name)
+}
+
+pub fn names() -> Vec<&'static str> {
+    SPECS.iter().map(|s| s.name).collect()
+}
+
+/// Generate (or for future real data: load) a registered dataset.
+pub fn load(name: &str) -> Option<Dataset> {
+    let s = spec(name)?;
+    Some(
+        SyntheticConfig::new(s.name, s.n, s.d)
+            .density(s.density)
+            .label_noise(0.1)
+            .zipf(1.0)
+            .seed(s.seed)
+            .generate(),
+    )
+}
+
+/// Scaled-down load: same spec shape scaled by `1/scale` in both n and d
+/// (used by fast tests and CI-sized benches).
+pub fn load_scaled(name: &str, scale: usize) -> Option<Dataset> {
+    let s = spec(name)?;
+    Some(
+        SyntheticConfig::new(s.name, (s.n / scale).max(8), (s.d / scale).max(8))
+            .density((s.density * scale as f64).min(0.2))
+            .label_noise(0.1)
+            .zipf(1.0)
+            .seed(s.seed)
+            .generate(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_contains_paper_regimes() {
+        let r = spec("rcv1s").unwrap();
+        assert!(r.n > r.d, "rcv1 regime is n >> d");
+        let n = spec("news20s").unwrap();
+        assert!(n.d > n.n, "news20 regime is d >> n");
+        let s = spec("splices").unwrap();
+        assert_eq!(s.n, s.d, "splice regime is d ~ n");
+    }
+
+    #[test]
+    fn load_tiny_matches_spec() {
+        let ds = load("tiny").unwrap();
+        let sp = spec("tiny").unwrap();
+        assert_eq!(ds.nsamples(), sp.n);
+        assert_eq!(ds.dim(), sp.d);
+    }
+
+    #[test]
+    fn load_scaled_shrinks() {
+        let ds = load_scaled("rcv1s", 16).unwrap();
+        assert_eq!(ds.nsamples(), 1024);
+        assert_eq!(ds.dim(), 128);
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(load("nope").is_none());
+        assert!(spec("nope").is_none());
+    }
+}

@@ -1,0 +1,233 @@
+//! Dense Cholesky factorization and triangular solves for small SPD
+//! systems — the τ×τ inner solve of the Woodbury preconditioner
+//! (Algorithm 4 step 4) and the exact reference solver in tests.
+
+use crate::linalg::dense::SquareMatrix;
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: SquareMatrix,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum CholeskyError {
+    /// Matrix not positive definite (pivot ≤ 0 at given index).
+    NotPd(usize),
+}
+
+impl std::fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CholeskyError::NotPd(i) => write!(f, "matrix not positive definite (pivot {i})"),
+        }
+    }
+}
+impl std::error::Error for CholeskyError {}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix (only the lower triangle
+    /// of `a` is read). The inner update is expressed as a vectorized dot
+    /// over the row prefixes (rows are contiguous in the row-major layout),
+    /// which is the O(τ³) hot loop of the per-outer-iteration Woodbury
+    /// refactorization (§Perf).
+    pub fn factor(a: &SquareMatrix) -> Result<Self, CholeskyError> {
+        let n = a.n();
+        let mut l = SquareMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..=i {
+                // sum = a_ij − ⟨L[i, ..j], L[j, ..j]⟩ over row prefixes.
+                let prefix = {
+                    let ri = &l.row(i)[..j];
+                    let rj = &l.row(j)[..j];
+                    crate::linalg::ops::dot(ri, rj)
+                };
+                let sum = a.get(i, j) - prefix;
+                if i == j {
+                    if sum <= 0.0 {
+                        return Err(CholeskyError::NotPd(i));
+                    }
+                    l.set(i, j, sum.sqrt());
+                } else {
+                    l.set(i, j, sum / l.get(j, j));
+                }
+            }
+        }
+        Ok(Self { l })
+    }
+
+    pub fn n(&self) -> usize {
+        self.l.n()
+    }
+
+    /// Solve `A x = b` via forward + backward substitution. The forward
+    /// pass uses vectorized row-prefix dots; the backward pass is written
+    /// as a column-saxpy so it also streams rows contiguously.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        // Forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let sum = b[i] - crate::linalg::ops::dot(&self.l.row(i)[..i], &y[..i]);
+            y[i] = sum / self.l.get(i, i);
+        }
+        // Backward: Lᵀ x = y ⇔ process rows bottom-up, subtracting each
+        // solved x_i's contribution L[i, ..i]·x_i from the prefix of y.
+        let mut x = y;
+        for i in (0..n).rev() {
+            x[i] /= self.l.get(i, i);
+            let xi = x[i];
+            let row = &self.l.row(i)[..i];
+            for (xk, lik) in x[..i].iter_mut().zip(row.iter()) {
+                *xk -= lik * xi;
+            }
+        }
+        x
+    }
+
+    /// log det(A) = 2 Σ log L_ii (useful diagnostics).
+    pub fn log_det(&self) -> f64 {
+        (0..self.n()).map(|i| self.l.get(i, i).ln()).sum::<f64>() * 2.0
+    }
+}
+
+/// General (non-symmetric) dense LU solve with partial pivoting — used for
+/// the Woodbury inner system `(I + XᵀZ)v = Xᵀy`, which is nonsymmetric when
+/// written in its raw form.
+pub fn lu_solve(a: &SquareMatrix, b: &[f64]) -> Result<Vec<f64>, CholeskyError> {
+    let n = a.n();
+    assert_eq!(b.len(), n);
+    // Copy into working row-major buffer.
+    let mut m: Vec<f64> = (0..n * n).map(|k| a.get(k / n, k % n)).collect();
+    let mut x = b.to_vec();
+    let mut piv: Vec<usize> = (0..n).collect();
+    for k in 0..n {
+        // Partial pivot.
+        let mut p = k;
+        let mut best = m[piv[k] * n + k].abs();
+        for r in k + 1..n {
+            let v = m[piv[r] * n + k].abs();
+            if v > best {
+                best = v;
+                p = r;
+            }
+        }
+        if best == 0.0 {
+            return Err(CholeskyError::NotPd(k));
+        }
+        piv.swap(k, p);
+        let pk = piv[k];
+        let pivot = m[pk * n + k];
+        for r in k + 1..n {
+            let pr = piv[r];
+            let f = m[pr * n + k] / pivot;
+            if f != 0.0 {
+                m[pr * n + k] = f;
+                for c in k + 1..n {
+                    m[pr * n + c] -= f * m[pk * n + c];
+                }
+            } else {
+                m[pr * n + k] = 0.0;
+            }
+        }
+    }
+    // Forward substitution with pivoting (unit lower).
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = x[piv[i]];
+        for k in 0..i {
+            sum -= m[piv[i] * n + k] * y[k];
+        }
+        y[i] = sum;
+    }
+    // Backward (upper).
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= m[piv[i] * n + k] * x[k];
+        }
+        x[i] = sum / m[piv[i] * n + i];
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256pp;
+
+    fn random_spd(n: usize, seed: u64) -> SquareMatrix {
+        // A = B Bᵀ + n·I is SPD.
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = SquareMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a.set(i, j, s + if i == j { n as f64 } else { 0.0 });
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_solves_spd() {
+        for n in [1usize, 2, 5, 17, 40] {
+            let a = random_spd(n, n as u64);
+            let ch = Cholesky::factor(&a).unwrap();
+            let xtrue: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+            let b = a.mul(&xtrue);
+            let x = ch.solve(&b);
+            for (xa, xb) in x.iter().zip(&xtrue) {
+                assert!((xa - xb).abs() < 1e-8, "n={n}: {xa} vs {xb}");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = SquareMatrix::identity(2);
+        a.set(1, 1, -1.0);
+        assert!(matches!(Cholesky::factor(&a), Err(CholeskyError::NotPd(1))));
+    }
+
+    #[test]
+    fn lu_solves_nonsymmetric() {
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        for n in [1usize, 3, 10, 25] {
+            let mut a = SquareMatrix::zeros(n);
+            for i in 0..n {
+                for j in 0..n {
+                    a.set(i, j, rng.normal() + if i == j { 3.0 * n as f64 } else { 0.0 });
+                }
+            }
+            let xtrue: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
+            let b = a.mul(&xtrue);
+            let x = lu_solve(&a, &b).unwrap();
+            for (xa, xb) in x.iter().zip(&xtrue) {
+                assert!((xa - xb).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn lu_pivots_zero_leading_entry() {
+        // Leading pivot is zero — requires row exchange.
+        let mut a = SquareMatrix::zeros(2);
+        a.set(0, 1, 1.0);
+        a.set(1, 0, 1.0);
+        let x = lu_solve(&a, &[2.0, 3.0]).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-14);
+        assert!((x[1] - 2.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn log_det_identity_is_zero() {
+        let ch = Cholesky::factor(&SquareMatrix::identity(4)).unwrap();
+        assert!(ch.log_det().abs() < 1e-14);
+    }
+}

@@ -1,0 +1,329 @@
+//! Column-major dense matrices.
+//!
+//! The data matrix convention throughout the library follows the paper:
+//! `X ∈ ℝ^{d×n}` with **columns = samples** (`x_i` is column `i`). A shard
+//! in DiSCO-S is a column block (subset of samples, all features); a shard
+//! in DiSCO-F is a row block (subset of features, all samples). Both are
+//! again `DenseMatrix`es, so every algorithm is written once against this
+//! type (or its sparse sibling, see [`crate::linalg::sparse`]).
+//!
+//! Column-major layout makes both PCG hot products stream contiguously:
+//! `Xᵀu` walks each column once (`dot`), and `X·t` is a sequence of
+//! column-sized `axpy`s.
+
+use crate::linalg::ops;
+use crate::util::prng::Xoshiro256pp;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    nrows: usize,
+    ncols: usize,
+    /// Column-major storage: entry (i, j) at `data[j * nrows + i]`.
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Self {
+            nrows,
+            ncols,
+            data: vec![0.0; nrows * ncols],
+        }
+    }
+
+    /// Build from column-major raw data.
+    pub fn from_col_major(nrows: usize, ncols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), nrows * ncols, "bad data length");
+        Self { nrows, ncols, data }
+    }
+
+    /// Build from a list of columns (each of length `nrows`).
+    pub fn from_columns(nrows: usize, cols: &[Vec<f64>]) -> Self {
+        let mut data = Vec::with_capacity(nrows * cols.len());
+        for c in cols {
+            assert_eq!(c.len(), nrows);
+            data.extend_from_slice(c);
+        }
+        Self {
+            nrows,
+            ncols: cols.len(),
+            data,
+        }
+    }
+
+    /// i.i.d. standard-normal matrix (used by tests and synthetic data).
+    pub fn randn(nrows: usize, ncols: usize, rng: &mut Xoshiro256pp) -> Self {
+        let data = (0..nrows * ncols).map(|_| rng.normal()).collect();
+        Self { nrows, ncols, data }
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        self.data[j * self.nrows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        self.data[j * self.nrows + i] = v;
+    }
+
+    /// Column `j` as a contiguous slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.ncols);
+        &self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.ncols);
+        &mut self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// `t ← Xᵀ u`  (u ∈ ℝ^nrows, t ∈ ℝ^ncols). Contiguous per-column dots.
+    pub fn at_mul_into(&self, u: &[f64], t: &mut [f64]) {
+        assert_eq!(u.len(), self.nrows);
+        assert_eq!(t.len(), self.ncols);
+        for j in 0..self.ncols {
+            t[j] = ops::dot(self.col(j), u);
+        }
+    }
+
+    /// `y ← X t`  (t ∈ ℝ^ncols, y ∈ ℝ^nrows). Per-column axpy accumulation.
+    pub fn a_mul_into(&self, t: &[f64], y: &mut [f64]) {
+        assert_eq!(t.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        ops::zero(y);
+        for j in 0..self.ncols {
+            let tj = t[j];
+            if tj != 0.0 {
+                ops::axpy(tj, self.col(j), y);
+            }
+        }
+    }
+
+    pub fn at_mul(&self, u: &[f64]) -> Vec<f64> {
+        let mut t = vec![0.0; self.ncols];
+        self.at_mul_into(u, &mut t);
+        t
+    }
+
+    pub fn a_mul(&self, t: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows];
+        self.a_mul_into(t, &mut y);
+        y
+    }
+
+    /// Column block (samples `cols[0]..cols[1]`, exclusive end).
+    pub fn col_block(&self, start: usize, end: usize) -> DenseMatrix {
+        assert!(start <= end && end <= self.ncols);
+        DenseMatrix {
+            nrows: self.nrows,
+            ncols: end - start,
+            data: self.data[start * self.nrows..end * self.nrows].to_vec(),
+        }
+    }
+
+    /// Row block (features `start..end`): rebuilt column by column.
+    pub fn row_block(&self, start: usize, end: usize) -> DenseMatrix {
+        assert!(start <= end && end <= self.nrows);
+        let nr = end - start;
+        let mut data = Vec::with_capacity(nr * self.ncols);
+        for j in 0..self.ncols {
+            data.extend_from_slice(&self.col(j)[start..end]);
+        }
+        DenseMatrix {
+            nrows: nr,
+            ncols: self.ncols,
+            data,
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn frob(&self) -> f64 {
+        ops::norm2(&self.data)
+    }
+
+    /// Number of stored f64 values (for communication/memory accounting).
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Small square symmetric matrix in row-major order (τ×τ Gram matrices,
+/// Cholesky factors). Kept separate from `DenseMatrix` because its access
+/// pattern (row-major triangular loops) differs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SquareMatrix {
+    n: usize,
+    data: Vec<f64>, // row-major
+}
+
+impl SquareMatrix {
+    pub fn zeros(n: usize) -> Self {
+        Self {
+            n,
+            data: vec![0.0; n * n],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.n && j < self.n);
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.n && j < self.n);
+        self.data[i * self.n + j] = v;
+    }
+
+    #[inline]
+    pub fn add_to(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.n && j < self.n);
+        self.data[i * self.n + j] += v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    /// `y ← M x`.
+    pub fn mul_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        for i in 0..self.n {
+            y[i] = ops::dot(self.row(i), x);
+        }
+    }
+
+    pub fn mul(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.n];
+        self.mul_into(x, &mut y);
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_matrix() -> DenseMatrix {
+        // 3x2: col0 = [1,2,3], col1 = [4,5,6]
+        DenseMatrix::from_columns(3, &[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]])
+    }
+
+    #[test]
+    fn indexing_and_layout() {
+        let m = sample_matrix();
+        assert_eq!(m.nrows(), 3);
+        assert_eq!(m.ncols(), 2);
+        assert_eq!(m.get(0, 1), 4.0);
+        assert_eq!(m.get(2, 0), 3.0);
+        assert_eq!(m.col(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn at_mul_matches_manual() {
+        let m = sample_matrix();
+        let u = vec![1.0, 0.0, -1.0];
+        // Xᵀu = [1-3, 4-6] = [-2, -2]
+        assert_eq!(m.at_mul(&u), vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn a_mul_matches_manual() {
+        let m = sample_matrix();
+        let t = vec![2.0, -1.0];
+        // X t = 2*[1,2,3] - [4,5,6] = [-2,-1,0]
+        assert_eq!(m.a_mul(&t), vec![-2.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn blocks_roundtrip() {
+        let m = sample_matrix();
+        let cb = m.col_block(1, 2);
+        assert_eq!(cb.ncols(), 1);
+        assert_eq!(cb.col(0), &[4.0, 5.0, 6.0]);
+        let rb = m.row_block(1, 3);
+        assert_eq!(rb.nrows(), 2);
+        assert_eq!(rb.get(0, 0), 2.0);
+        assert_eq!(rb.get(1, 1), 6.0);
+    }
+
+    #[test]
+    fn row_blocks_stack_to_full_product() {
+        // a_mul over row blocks must concatenate to the full a_mul — this is
+        // the DiSCO-F decomposition identity (Hu computed per feature shard).
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let m = DenseMatrix::randn(10, 7, &mut rng);
+        let t: Vec<f64> = (0..7).map(|i| i as f64 - 3.0).collect();
+        let full = m.a_mul(&t);
+        let top = m.row_block(0, 4).a_mul(&t);
+        let bot = m.row_block(4, 10).a_mul(&t);
+        let stacked: Vec<f64> = top.into_iter().chain(bot).collect();
+        for (a, b) in full.iter().zip(&stacked) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn col_blocks_sum_to_full_at_product() {
+        // Xᵀu over column blocks concatenates — the DiSCO-S decomposition.
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let m = DenseMatrix::randn(6, 9, &mut rng);
+        let u: Vec<f64> = (0..6).map(|i| (i as f64).cos()).collect();
+        let full = m.at_mul(&u);
+        let left = m.col_block(0, 4).at_mul(&u);
+        let right = m.col_block(4, 9).at_mul(&u);
+        let stacked: Vec<f64> = left.into_iter().chain(right).collect();
+        for (a, b) in full.iter().zip(&stacked) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn square_matrix_mul() {
+        let mut m = SquareMatrix::identity(3);
+        m.set(0, 2, 2.0);
+        let y = m.mul(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![7.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dimension_mismatch_panics() {
+        let m = sample_matrix();
+        let _ = m.at_mul(&[1.0, 2.0]); // wrong length
+    }
+}

@@ -1,0 +1,184 @@
+//! Unified data-matrix abstraction over dense and sparse storage.
+//!
+//! Algorithms (PCG, SDCA, SAG, gradient/HVP evaluation) are written once
+//! against [`DataMatrix`]; datasets pick the representation (synthetic text
+//! corpora are sparse, the XLA runtime path is dense).
+
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::sparse::CscMatrix;
+
+#[derive(Clone, Debug)]
+pub enum DataMatrix {
+    Dense(DenseMatrix),
+    Sparse(CscMatrix),
+}
+
+impl DataMatrix {
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        match self {
+            DataMatrix::Dense(m) => m.nrows(),
+            DataMatrix::Sparse(m) => m.nrows(),
+        }
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        match self {
+            DataMatrix::Dense(m) => m.ncols(),
+            DataMatrix::Sparse(m) => m.ncols(),
+        }
+    }
+
+    /// Stored values (dense: d·n, sparse: nnz) — memory/communication
+    /// accounting.
+    pub fn nnz(&self) -> usize {
+        match self {
+            DataMatrix::Dense(m) => m.nnz(),
+            DataMatrix::Sparse(m) => m.nnz(),
+        }
+    }
+
+    /// `t ← Xᵀ u`.
+    pub fn at_mul_into(&self, u: &[f64], t: &mut [f64]) {
+        match self {
+            DataMatrix::Dense(m) => m.at_mul_into(u, t),
+            DataMatrix::Sparse(m) => m.at_mul_into(u, t),
+        }
+    }
+
+    /// `y ← X t`.
+    pub fn a_mul_into(&self, t: &[f64], y: &mut [f64]) {
+        match self {
+            DataMatrix::Dense(m) => m.a_mul_into(t, y),
+            DataMatrix::Sparse(m) => m.a_mul_into(t, y),
+        }
+    }
+
+    pub fn at_mul(&self, u: &[f64]) -> Vec<f64> {
+        let mut t = vec![0.0; self.ncols()];
+        self.at_mul_into(u, &mut t);
+        t
+    }
+
+    pub fn a_mul(&self, t: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows()];
+        self.a_mul_into(t, &mut y);
+        y
+    }
+
+    /// Dense copy of sample (column) `j`.
+    pub fn col_dense(&self, j: usize) -> Vec<f64> {
+        match self {
+            DataMatrix::Dense(m) => m.col(j).to_vec(),
+            DataMatrix::Sparse(m) => m.col_dense(j),
+        }
+    }
+
+    /// `acc += w · x_j` without densifying (hot path for SDCA/SAG).
+    pub fn col_dot(&self, j: usize, w: &[f64]) -> f64 {
+        match self {
+            DataMatrix::Dense(m) => crate::linalg::ops::dot(m.col(j), w),
+            DataMatrix::Sparse(m) => {
+                let (rows, vals) = m.col(j);
+                let mut acc = 0.0;
+                for (r, v) in rows.iter().zip(vals.iter()) {
+                    acc += *v * w[*r as usize];
+                }
+                acc
+            }
+        }
+    }
+
+    /// `w += a · x_j` without densifying.
+    pub fn col_axpy(&self, j: usize, a: f64, w: &mut [f64]) {
+        match self {
+            DataMatrix::Dense(m) => crate::linalg::ops::axpy(a, m.col(j), w),
+            DataMatrix::Sparse(m) => {
+                let (rows, vals) = m.col(j);
+                for (r, v) in rows.iter().zip(vals.iter()) {
+                    w[*r as usize] += a * *v;
+                }
+            }
+        }
+    }
+
+    /// ‖x_j‖².
+    pub fn col_norm_sq(&self, j: usize) -> f64 {
+        match self {
+            DataMatrix::Dense(m) => crate::linalg::ops::norm2_sq(m.col(j)),
+            DataMatrix::Sparse(m) => m.col_norm_sq(j),
+        }
+    }
+
+    /// Column block (sample shard).
+    pub fn col_block(&self, start: usize, end: usize) -> DataMatrix {
+        match self {
+            DataMatrix::Dense(m) => DataMatrix::Dense(m.col_block(start, end)),
+            DataMatrix::Sparse(m) => DataMatrix::Sparse(m.col_block(start, end)),
+        }
+    }
+
+    /// Row block (feature shard).
+    pub fn row_block(&self, start: usize, end: usize) -> DataMatrix {
+        match self {
+            DataMatrix::Dense(m) => DataMatrix::Dense(m.row_block(start, end)),
+            DataMatrix::Sparse(m) => DataMatrix::Sparse(m.row_block(start, end)),
+        }
+    }
+
+    pub fn to_dense(&self) -> DenseMatrix {
+        match self {
+            DataMatrix::Dense(m) => m.clone(),
+            DataMatrix::Sparse(m) => m.to_dense(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, DataMatrix::Sparse(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256pp;
+
+    fn both_reprs() -> (DataMatrix, DataMatrix) {
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        let sp = CscMatrix::rand_sparse(16, 10, 0.3, &mut rng);
+        let de = sp.to_dense();
+        (DataMatrix::Sparse(sp), DataMatrix::Dense(de))
+    }
+
+    #[test]
+    fn dense_and_sparse_agree_on_all_ops() {
+        let (s, d) = both_reprs();
+        let u: Vec<f64> = (0..16).map(|i| (i as f64 * 0.3).sin()).collect();
+        let t: Vec<f64> = (0..10).map(|i| (i as f64 * 0.7).cos()).collect();
+        for (a, b) in s.at_mul(&u).iter().zip(d.at_mul(&u).iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        for (a, b) in s.a_mul(&t).iter().zip(d.a_mul(&t).iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        for j in 0..10 {
+            assert!((s.col_dot(j, &u) - d.col_dot(j, &u)).abs() < 1e-12);
+            assert!((s.col_norm_sq(j) - d.col_norm_sq(j)).abs() < 1e-12);
+            let mut ws = u.clone();
+            let mut wd = u.clone();
+            s.col_axpy(j, 0.5, &mut ws);
+            d.col_axpy(j, 0.5, &mut wd);
+            for (a, b) in ws.iter().zip(wd.iter()) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_agree_across_representations() {
+        let (s, d) = both_reprs();
+        assert_eq!(s.row_block(3, 12).to_dense(), d.row_block(3, 12).to_dense());
+        assert_eq!(s.col_block(2, 8).to_dense(), d.col_block(2, 8).to_dense());
+    }
+}

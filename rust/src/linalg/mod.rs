@@ -1,0 +1,15 @@
+//! Linear-algebra substrate: BLAS-1 vector kernels, dense (column-major)
+//! and CSC sparse matrices with the two PCG hot products (`Xᵀu`, `X·t`),
+//! a unified [`matrix::DataMatrix`], and small dense factorizations for
+//! the Woodbury inner solve.
+
+pub mod cholesky;
+pub mod dense;
+pub mod matrix;
+pub mod ops;
+pub mod sparse;
+
+pub use cholesky::{lu_solve, Cholesky};
+pub use dense::{DenseMatrix, SquareMatrix};
+pub use matrix::DataMatrix;
+pub use sparse::CscMatrix;

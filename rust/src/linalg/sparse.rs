@@ -1,0 +1,329 @@
+//! Compressed sparse column (CSC) matrices.
+//!
+//! Same `d×n`, columns-are-samples convention as [`crate::linalg::dense`].
+//! CSC is the natural layout for ERM data: each column (sample) is a sparse
+//! feature vector, exactly what libsvm files store. Both PCG hot products
+//! stream the column arrays once:
+//!
+//! * `Xᵀu`  — gather:  `t[j] = Σ_k vals[k] · u[rows[k]]`
+//! * `X·t`  — scatter: `y[rows[k]] += vals[k] · t[j]`
+//!
+//! Row blocks (DiSCO-F shards) are extracted by filtering row indices,
+//! producing a CSC with re-based rows; column blocks (DiSCO-S shards) are
+//! pointer-range slices.
+
+use crate::util::prng::Xoshiro256pp;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    nrows: usize,
+    ncols: usize,
+    /// `colptr[j]..colptr[j+1]` indexes `rowidx`/`values` for column `j`.
+    colptr: Vec<usize>,
+    rowidx: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from per-column (row, value) lists. Rows within a column must
+    /// be strictly increasing (checked).
+    pub fn from_columns(nrows: usize, cols: &[Vec<(u32, f64)>]) -> Self {
+        let mut colptr = Vec::with_capacity(cols.len() + 1);
+        let mut rowidx = Vec::new();
+        let mut values = Vec::new();
+        colptr.push(0);
+        for col in cols {
+            let mut last: Option<u32> = None;
+            for &(r, v) in col {
+                assert!((r as usize) < nrows, "row {r} out of bounds ({nrows})");
+                if let Some(l) = last {
+                    assert!(r > l, "rows must be strictly increasing within a column");
+                }
+                last = Some(r);
+                rowidx.push(r);
+                values.push(v);
+            }
+            colptr.push(rowidx.len());
+        }
+        Self {
+            nrows,
+            ncols: cols.len(),
+            colptr,
+            rowidx,
+            values,
+        }
+    }
+
+    /// Random sparse matrix with expected density `p`, standard-normal
+    /// values — used by synthetic datasets and tests.
+    pub fn rand_sparse(nrows: usize, ncols: usize, p: f64, rng: &mut Xoshiro256pp) -> Self {
+        let mut cols = Vec::with_capacity(ncols);
+        for _ in 0..ncols {
+            let mut col = Vec::new();
+            for i in 0..nrows {
+                if rng.next_f64() < p {
+                    col.push((i as u32, rng.normal()));
+                }
+            }
+            // Guarantee at least one entry per sample so no column is empty.
+            if col.is_empty() {
+                let i = rng.index(nrows) as u32;
+                col.push((i, rng.normal()));
+            }
+            cols.push(col);
+        }
+        Self::from_columns(nrows, &cols)
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.nrows * self.ncols) as f64
+    }
+
+    /// Sparse column `j` as (rows, values) slices.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
+        let lo = self.colptr[j];
+        let hi = self.colptr[j + 1];
+        (&self.rowidx[lo..hi], &self.values[lo..hi])
+    }
+
+    /// `t ← Xᵀ u` (gather). 4-way unrolled accumulators break the serial
+    /// FP dependency chain of the gather reduction (§Perf).
+    pub fn at_mul_into(&self, u: &[f64], t: &mut [f64]) {
+        assert_eq!(u.len(), self.nrows);
+        assert_eq!(t.len(), self.ncols);
+        for j in 0..self.ncols {
+            let (rows, vals) = self.col(j);
+            let k = rows.len();
+            let chunks = k / 4;
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0, 0.0, 0.0, 0.0);
+            for c in 0..chunks {
+                let i = c * 4;
+                a0 += vals[i] * u[rows[i] as usize];
+                a1 += vals[i + 1] * u[rows[i + 1] as usize];
+                a2 += vals[i + 2] * u[rows[i + 2] as usize];
+                a3 += vals[i + 3] * u[rows[i + 3] as usize];
+            }
+            let mut tail = 0.0;
+            for i in chunks * 4..k {
+                tail += vals[i] * u[rows[i] as usize];
+            }
+            t[j] = (a0 + a1) + (a2 + a3) + tail;
+        }
+    }
+
+    /// `y ← X t` (scatter).
+    pub fn a_mul_into(&self, t: &[f64], y: &mut [f64]) {
+        assert_eq!(t.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for v in y.iter_mut() {
+            *v = 0.0;
+        }
+        // §Perf note: a 4-wide unroll of this scatter (targets are distinct
+        // since rows strictly increase within a column) measured within
+        // noise (<5 %) and was reverted — the loop is store-port bound.
+        for j in 0..self.ncols {
+            let tj = t[j];
+            if tj == 0.0 {
+                continue;
+            }
+            let (rows, vals) = self.col(j);
+            for (r, v) in rows.iter().zip(vals.iter()) {
+                y[*r as usize] += *v * tj;
+            }
+        }
+    }
+
+    pub fn at_mul(&self, u: &[f64]) -> Vec<f64> {
+        let mut t = vec![0.0; self.ncols];
+        self.at_mul_into(u, &mut t);
+        t
+    }
+
+    pub fn a_mul(&self, t: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows];
+        self.a_mul_into(t, &mut y);
+        y
+    }
+
+    /// Dense copy of column `j` (used by preconditioner construction where
+    /// τ columns are densified once).
+    pub fn col_dense(&self, j: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.nrows];
+        let (rows, vals) = self.col(j);
+        for (r, v) in rows.iter().zip(vals.iter()) {
+            out[*r as usize] = *v;
+        }
+        out
+    }
+
+    /// Squared Euclidean norm of column `j` (SDCA needs ‖x_i‖²).
+    pub fn col_norm_sq(&self, j: usize) -> f64 {
+        let (_, vals) = self.col(j);
+        vals.iter().map(|v| v * v).sum()
+    }
+
+    /// Column block `[start, end)` — a sample shard (DiSCO-S).
+    pub fn col_block(&self, start: usize, end: usize) -> CscMatrix {
+        assert!(start <= end && end <= self.ncols);
+        let lo = self.colptr[start];
+        let hi = self.colptr[end];
+        let colptr = self.colptr[start..=end].iter().map(|p| p - lo).collect();
+        CscMatrix {
+            nrows: self.nrows,
+            ncols: end - start,
+            colptr,
+            rowidx: self.rowidx[lo..hi].to_vec(),
+            values: self.values[lo..hi].to_vec(),
+        }
+    }
+
+    /// Row block `[start, end)` — a feature shard (DiSCO-F). Row indices
+    /// are re-based to the block.
+    pub fn row_block(&self, start: usize, end: usize) -> CscMatrix {
+        assert!(start <= end && end <= self.nrows);
+        let mut colptr = Vec::with_capacity(self.ncols + 1);
+        let mut rowidx = Vec::new();
+        let mut values = Vec::new();
+        colptr.push(0);
+        for j in 0..self.ncols {
+            let (rows, vals) = self.col(j);
+            for (r, v) in rows.iter().zip(vals.iter()) {
+                let ri = *r as usize;
+                if ri >= start && ri < end {
+                    rowidx.push((ri - start) as u32);
+                    values.push(*v);
+                }
+            }
+            colptr.push(rowidx.len());
+        }
+        CscMatrix {
+            nrows: end - start,
+            ncols: self.ncols,
+            colptr,
+            rowidx,
+            values,
+        }
+    }
+
+    /// Dense materialization (tests / small problems only).
+    pub fn to_dense(&self) -> crate::linalg::dense::DenseMatrix {
+        let mut m = crate::linalg::dense::DenseMatrix::zeros(self.nrows, self.ncols);
+        for j in 0..self.ncols {
+            let (rows, vals) = self.col(j);
+            for (r, v) in rows.iter().zip(vals.iter()) {
+                m.set(*r as usize, j, *v);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CscMatrix {
+        // 4x3:
+        // col0: (0, 1.0), (2, 2.0)
+        // col1: (1, 3.0)
+        // col2: (0, -1.0), (3, 4.0)
+        CscMatrix::from_columns(
+            4,
+            &[
+                vec![(0, 1.0), (2, 2.0)],
+                vec![(1, 3.0)],
+                vec![(0, -1.0), (3, 4.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn construction_and_access() {
+        let m = sample();
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.col(0), (&[0u32, 2][..], &[1.0, 2.0][..]));
+        assert_eq!(m.col_dense(2), vec![-1.0, 0.0, 0.0, 4.0]);
+        assert!((m.density() - 5.0 / 12.0).abs() < 1e-15);
+        assert!((m.col_norm_sq(2) - 17.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn products_match_dense() {
+        let m = sample();
+        let d = m.to_dense();
+        let u = vec![1.0, -2.0, 0.5, 3.0];
+        let t = vec![2.0, -1.0, 0.0];
+        assert_eq!(m.at_mul(&u), d.at_mul(&u));
+        assert_eq!(m.a_mul(&t), d.a_mul(&t));
+    }
+
+    #[test]
+    fn random_products_match_dense() {
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let m = CscMatrix::rand_sparse(30, 20, 0.2, &mut rng);
+        let d = m.to_dense();
+        let u: Vec<f64> = (0..30).map(|i| (i as f64 * 0.17).sin()).collect();
+        let t: Vec<f64> = (0..20).map(|i| (i as f64 * 0.31).cos()).collect();
+        for (a, b) in m.at_mul(&u).iter().zip(d.at_mul(&u).iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        for (a, b) in m.a_mul(&t).iter().zip(d.a_mul(&t).iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn col_block_matches_dense_block() {
+        let mut rng = Xoshiro256pp::seed_from_u64(10);
+        let m = CscMatrix::rand_sparse(12, 9, 0.3, &mut rng);
+        let blk = m.col_block(3, 7);
+        assert_eq!(blk.ncols(), 4);
+        assert_eq!(blk.to_dense(), m.to_dense().col_block(3, 7));
+    }
+
+    #[test]
+    fn row_block_matches_dense_block() {
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let m = CscMatrix::rand_sparse(12, 9, 0.3, &mut rng);
+        let blk = m.row_block(2, 8);
+        assert_eq!(blk.nrows(), 6);
+        assert_eq!(blk.to_dense(), m.to_dense().row_block(2, 8));
+    }
+
+    #[test]
+    fn row_blocks_partition_nnz() {
+        let mut rng = Xoshiro256pp::seed_from_u64(12);
+        let m = CscMatrix::rand_sparse(20, 15, 0.25, &mut rng);
+        let a = m.row_block(0, 7);
+        let b = m.row_block(7, 20);
+        assert_eq!(a.nnz() + b.nnz(), m.nnz());
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn unsorted_rows_rejected() {
+        let _ = CscMatrix::from_columns(4, &[vec![(2, 1.0), (0, 2.0)]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_range_row_rejected() {
+        let _ = CscMatrix::from_columns(2, &[vec![(5, 1.0)]]);
+    }
+}

@@ -1,0 +1,204 @@
+//! Logistic loss `φ(z; y) = log(1 + exp(−y·z))` for labels `y ∈ {−1, +1}`
+//! (paper Table 1, M = 1).
+
+use super::Loss;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Logistic;
+
+/// Numerically-stable `log(1 + exp(x))`.
+#[inline]
+pub fn log1p_exp(x: f64) -> f64 {
+    if x > 30.0 {
+        x
+    } else if x < -30.0 {
+        x.exp()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Stable sigmoid `1/(1+exp(−x))`.
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        let e = (-x).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+impl Loss for Logistic {
+    fn name(&self) -> &'static str {
+        "logistic"
+    }
+
+    #[inline]
+    fn value(&self, z: f64, y: f64) -> f64 {
+        log1p_exp(-y * z)
+    }
+
+    /// `φ' = −y·σ(−y·z)`.
+    #[inline]
+    fn deriv(&self, z: f64, y: f64) -> f64 {
+        -y * sigmoid(-y * z)
+    }
+
+    /// `φ'' = σ(y·z)·σ(−y·z)` — this is Eq. (9)'s scaling
+    /// `exp(−wᵀx)/(1+exp(−wᵀx))²` generalized to ±1 labels.
+    #[inline]
+    fn second_deriv(&self, z: f64, y: f64) -> f64 {
+        let s = sigmoid(y * z);
+        s * (1.0 - s)
+    }
+
+    fn smoothness(&self) -> f64 {
+        0.25
+    }
+
+    fn self_concordance_m(&self) -> f64 {
+        1.0
+    }
+
+    /// `φ*(u; y)`: with `p = −u·y` (so `p ∈ [0,1]` on the domain),
+    /// `φ* = p·log p + (1−p)·log(1−p)`; +∞ outside.
+    fn conjugate(&self, u: f64, y: f64) -> f64 {
+        let p = -u * y;
+        if !(0.0..=1.0).contains(&p) {
+            return f64::INFINITY;
+        }
+        let ent = |t: f64| if t <= 0.0 { 0.0 } else { t * t.ln() };
+        ent(p) + ent(1.0 - p)
+    }
+
+    /// No closed form — the scalar concave maximization
+    /// `g(Δ) = −φ*(−(α+Δ)) − Δz − qΔ²/2` is solved with safeguarded
+    /// bisection on `g'` over the domain `(α+Δ)·y ∈ (0, 1)`.
+    fn sdca_delta(&self, y: f64, z: f64, alpha: f64, q: f64) -> f64 {
+        // Parametrize by s = (α+Δ)·y ∈ (0,1). Then
+        //   −φ*(−(α+Δ)) = −[s ln s + (1−s) ln(1−s)]
+        //   g(s) = entropy(s) − (s·y⁻¹?…)
+        // Work directly in Δ. g'(Δ) = −y·ln(s/(1−s)) − z − qΔ where
+        // s = (α+Δ)y; note dφ*(−a)/da = y·ln(s/(1−s)) with s = a·y.
+        let s_of = |delta: f64| (alpha + delta) * y;
+        let gprime = |delta: f64| -> f64 {
+            let s = s_of(delta);
+            -y * (s / (1.0 - s)).ln() - z - q * delta
+        };
+        // Domain of Δ: s ∈ (0,1) ⇒ Δ ∈ (lo, hi).
+        let (lo, hi) = if y > 0.0 {
+            (-alpha, 1.0 / y - alpha)
+        } else {
+            (1.0 / y - alpha, -alpha)
+        };
+        let eps = 1e-12 * (1.0 + hi - lo);
+        let (mut a, mut b) = (lo + eps, hi - eps);
+        // g is strictly concave; g' decreasing. If g' keeps one sign on the
+        // whole open interval, optimum sits at that end.
+        if gprime(a) <= 0.0 {
+            return a;
+        }
+        if gprime(b) >= 0.0 {
+            return b;
+        }
+        for _ in 0..60 {
+            let m = 0.5 * (a + b);
+            if gprime(m) > 0.0 {
+                a = m;
+            } else {
+                b = m;
+            }
+        }
+        0.5 * (a + b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::checks;
+
+    const ZS: &[f64] = &[-4.0, -1.0, 0.0, 0.6, 3.0];
+    const YS: &[f64] = &[-1.0, 1.0];
+
+    #[test]
+    fn derivatives_match_finite_differences() {
+        checks::grad_matches_fd(&Logistic, ZS, YS);
+        checks::hess_matches_fd(&Logistic, ZS, YS);
+    }
+
+    #[test]
+    fn fenchel_young_holds() {
+        checks::fenchel_young(&Logistic, ZS, YS);
+    }
+
+    #[test]
+    fn table1_constants() {
+        assert_eq!(Logistic.self_concordance_m(), 1.0);
+        assert_eq!(Logistic.smoothness(), 0.25);
+    }
+
+    #[test]
+    fn stable_at_extreme_margins() {
+        assert!(Logistic.value(1e4, 1.0) >= 0.0);
+        assert!(Logistic.value(-1e4, 1.0).is_finite());
+        assert!(Logistic.second_deriv(1e4, 1.0) >= 0.0);
+        assert!(Logistic.deriv(-1e4, 1.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn second_deriv_bounded_by_quarter() {
+        for z in [-5.0, -0.5, 0.0, 0.5, 5.0] {
+            let s = Logistic.second_deriv(z, 1.0);
+            assert!((0.0..=0.25 + 1e-15).contains(&s));
+        }
+        assert!((Logistic.second_deriv(0.0, 1.0) - 0.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sdca_delta_maximizes_dual_increment() {
+        // Compare against a dense grid scan of the scalar objective.
+        for &(y, z, alpha, q) in &[
+            (1.0, 0.5, 0.5, 0.7),
+            (-1.0, -0.2, -0.3, 1.5),
+            (1.0, -2.0, 0.01, 0.2),
+            (-1.0, 1.0, -0.9, 3.0),
+        ] {
+            let g = |dd: f64| -> f64 {
+                let c = Logistic.conjugate(-(alpha + dd), y);
+                if !c.is_finite() {
+                    return f64::NEG_INFINITY;
+                }
+                -c - dd * z - q * dd * dd / 2.0
+            };
+            let d = Logistic.sdca_delta(y, z, alpha, q);
+            let gd = g(d);
+            assert!(gd.is_finite());
+            // Grid scan over the feasible Δ interval.
+            let (lo, hi) = if y > 0.0 {
+                (-alpha, 1.0 / y - alpha)
+            } else {
+                (1.0 / y - alpha, -alpha)
+            };
+            let mut best = f64::NEG_INFINITY;
+            for k in 1..400 {
+                let dd = lo + (hi - lo) * k as f64 / 400.0;
+                best = best.max(g(dd));
+            }
+            assert!(gd >= best - 1e-6, "y={y} z={z}: {gd} < grid {best}");
+        }
+    }
+
+    #[test]
+    fn sdca_keeps_dual_feasible() {
+        let mut alpha = 0.5f64; // y=1 ⇒ feasible s=α·y ∈ (0,1)
+        for step in 0..50 {
+            let z = -0.8 + 0.03 * step as f64;
+            let d = Logistic.sdca_delta(1.0, z, alpha, 0.9);
+            alpha += d;
+            assert!(alpha > 0.0 && alpha < 1.0, "infeasible α={alpha} at step {step}");
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Loss functions for the regularized ERM objective (paper Eq. (P)) and
+//! their duals (Eq. (D)) used by the CoCoA+/SDCA baseline.
+//!
+//! Every loss is a scalar function `φ(z; y)` of the margin `z = wᵀx` and
+//! label `y`, exposing value / first / second derivative (for gradients and
+//! Hessian-vector products), the self-concordance constant `M` from the
+//! paper's Table 1, the convex conjugate `φ*` (dual objective), and the
+//! SDCA single-coordinate maximizer.
+
+pub mod logistic;
+pub mod objective;
+pub mod quadratic;
+pub mod squared_hinge;
+
+pub use logistic::Logistic;
+pub use objective::Objective;
+pub use quadratic::Quadratic;
+pub use squared_hinge::SquaredHinge;
+
+/// Scalar loss interface. Implementations must be pure and cheap — these
+/// are called once per (sample × PCG step) on the native path.
+pub trait Loss: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// `φ(z; y)`.
+    fn value(&self, z: f64, y: f64) -> f64;
+
+    /// `∂φ/∂z`.
+    fn deriv(&self, z: f64, y: f64) -> f64;
+
+    /// `∂²φ/∂z²` — the per-sample Hessian scaling `s_i` in
+    /// `f''(w) = (1/n) X diag(s) Xᵀ + λI`.
+    fn second_deriv(&self, z: f64, y: f64) -> f64;
+
+    /// Smoothness constant: `sup φ'' ` (paper Assumption 2's `L` up to the
+    /// data norm factor).
+    fn smoothness(&self) -> f64;
+
+    /// Self-concordance parameter `M` (paper Table 1).
+    fn self_concordance_m(&self) -> f64;
+
+    /// True when `φ''` does not depend on the margin (quadratic loss) —
+    /// lets the coordinator build the Woodbury preconditioner once instead
+    /// of once per outer iteration (§Perf optimization).
+    fn curvature_is_constant(&self) -> bool {
+        false
+    }
+
+    /// Convex conjugate `φ*(u; y) = sup_z (u·z − φ(z; y))`. Returns
+    /// `f64::INFINITY` outside the conjugate's domain.
+    fn conjugate(&self, u: f64, y: f64) -> f64;
+
+    /// SDCA coordinate step: given label `y`, current margin `z = wᵀx_i`,
+    /// current dual variable `α_i`, and curvature `q = ‖x_i‖²/(λn)`,
+    /// return `Δα` maximizing the dual increment
+    /// `−φ*(−(α_i+Δ)) − Δ·z − q·Δ²/2` (see DESIGN.md §6 / Shalev-Shwartz &
+    /// Zhang 2013).
+    fn sdca_delta(&self, y: f64, z: f64, alpha: f64, q: f64) -> f64;
+}
+
+/// Loss selection by name (CLI / config).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LossKind {
+    Quadratic,
+    Logistic,
+    SquaredHinge,
+}
+
+impl LossKind {
+    pub fn parse(s: &str) -> Option<LossKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "quadratic" | "square" | "squared" | "ls" => Some(LossKind::Quadratic),
+            "logistic" | "logreg" | "log" => Some(LossKind::Logistic),
+            "squared_hinge" | "squared-hinge" | "l2svm" => Some(LossKind::SquaredHinge),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LossKind::Quadratic => "quadratic",
+            LossKind::Logistic => "logistic",
+            LossKind::SquaredHinge => "squared_hinge",
+        }
+    }
+
+    pub fn make(&self) -> Box<dyn Loss> {
+        match self {
+            LossKind::Quadratic => Box::new(Quadratic),
+            LossKind::Logistic => Box::new(Logistic),
+            LossKind::SquaredHinge => Box::new(SquaredHinge),
+        }
+    }
+}
+
+/// Finite-difference checks shared by per-loss unit tests.
+#[cfg(test)]
+pub(crate) mod checks {
+    use super::Loss;
+
+    pub fn grad_matches_fd(loss: &dyn Loss, zs: &[f64], ys: &[f64]) {
+        let h = 1e-6;
+        for &y in ys {
+            for &z in zs {
+                let fd = (loss.value(z + h, y) - loss.value(z - h, y)) / (2.0 * h);
+                let an = loss.deriv(z, y);
+                assert!(
+                    (fd - an).abs() < 1e-5 * (1.0 + an.abs()),
+                    "{}: dφ/dz at z={z}, y={y}: fd={fd} vs {an}",
+                    loss.name()
+                );
+            }
+        }
+    }
+
+    pub fn hess_matches_fd(loss: &dyn Loss, zs: &[f64], ys: &[f64]) {
+        let h = 1e-5;
+        for &y in ys {
+            for &z in zs {
+                let fd = (loss.deriv(z + h, y) - loss.deriv(z - h, y)) / (2.0 * h);
+                let an = loss.second_deriv(z, y);
+                assert!(
+                    (fd - an).abs() < 1e-4 * (1.0 + an.abs()),
+                    "{}: d²φ/dz² at z={z}, y={y}: fd={fd} vs {an}",
+                    loss.name()
+                );
+            }
+        }
+    }
+
+    /// Fenchel–Young: φ(z) + φ*(u) ≥ u·z, equality at u = φ'(z).
+    pub fn fenchel_young(loss: &dyn Loss, zs: &[f64], ys: &[f64]) {
+        for &y in ys {
+            for &z in zs {
+                let u = loss.deriv(z, y);
+                let lhs = loss.value(z, y) + loss.conjugate(u, y);
+                assert!(
+                    (lhs - u * z).abs() < 1e-6 * (1.0 + lhs.abs()),
+                    "{}: Fenchel equality at z={z}, y={y}: {lhs} vs {}",
+                    loss.name(),
+                    u * z
+                );
+                // Inequality at a few other u values.
+                for du in [-0.3, 0.2] {
+                    let u2 = u + du;
+                    let c = loss.conjugate(u2, y);
+                    if c.is_finite() {
+                        assert!(
+                            loss.value(z, y) + c >= u2 * z - 1e-9,
+                            "{}: Fenchel-Young violated at z={z}, u={u2}, y={y}",
+                            loss.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! The full regularized ERM objective (paper Eq. (P)) over a data matrix:
+//!
+//! ```text
+//! f(w) = (1/n) Σ_i φ(wᵀx_i; y_i) + (λ/2)‖w‖²
+//! ∇f(w) = (1/n) X g + λw,          g_i = φ'(wᵀx_i; y_i)
+//! f''(w)u = (1/n) X diag(s) Xᵀu + λu,  s_i = φ''(wᵀx_i; y_i)
+//! ```
+//!
+//! This is the single-machine ("oracle") view used by tests, reference
+//! solvers, and as the per-shard local objective inside the distributed
+//! algorithms (where `X` is a shard and the 1/n is the *global* n).
+
+use crate::linalg::{ops, DataMatrix};
+use crate::loss::Loss;
+
+pub struct Objective<'a> {
+    pub x: &'a DataMatrix,
+    pub y: &'a [f64],
+    pub loss: &'a dyn Loss,
+    pub lambda: f64,
+    /// Divisor for the data-fitting term; equals the **global** sample
+    /// count even when `x` is a shard.
+    pub n_global: usize,
+}
+
+impl<'a> Objective<'a> {
+    pub fn new(x: &'a DataMatrix, y: &'a [f64], loss: &'a dyn Loss, lambda: f64) -> Self {
+        assert_eq!(x.ncols(), y.len(), "labels/sample mismatch");
+        Self {
+            x,
+            y,
+            loss,
+            lambda,
+            n_global: x.ncols(),
+        }
+    }
+
+    /// Shard view: data-fitting divided by the global n; the regularizer
+    /// is NOT included (the caller adds λw once globally).
+    pub fn shard(x: &'a DataMatrix, y: &'a [f64], loss: &'a dyn Loss, n_global: usize) -> Self {
+        assert_eq!(x.ncols(), y.len());
+        Self {
+            x,
+            y,
+            loss,
+            lambda: 0.0,
+            n_global,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.nrows()
+    }
+
+    pub fn nsamples(&self) -> usize {
+        self.x.ncols()
+    }
+
+    /// Margins `z = Xᵀw`.
+    pub fn margins(&self, w: &[f64]) -> Vec<f64> {
+        self.x.at_mul(w)
+    }
+
+    /// f(w) (with this objective's λ; 0 for shards).
+    pub fn value(&self, w: &[f64]) -> f64 {
+        let z = self.margins(w);
+        let data: f64 = z
+            .iter()
+            .zip(self.y.iter())
+            .map(|(zi, yi)| self.loss.value(*zi, *yi))
+            .sum();
+        data / self.n_global as f64 + 0.5 * self.lambda * ops::norm2_sq(w)
+    }
+
+    /// ∇f(w) into `out`.
+    pub fn grad_into(&self, w: &[f64], out: &mut [f64]) {
+        let z = self.margins(w);
+        let g: Vec<f64> = z
+            .iter()
+            .zip(self.y.iter())
+            .map(|(zi, yi)| self.loss.deriv(*zi, *yi))
+            .collect();
+        self.x.a_mul_into(&g, out);
+        let inv_n = 1.0 / self.n_global as f64;
+        for (oi, wi) in out.iter_mut().zip(w.iter()) {
+            *oi = *oi * inv_n + self.lambda * *wi;
+        }
+    }
+
+    pub fn grad(&self, w: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.grad_into(w, &mut out);
+        out
+    }
+
+    /// Per-sample Hessian scalings `s_i = φ''(z_i; y_i)` at `w`.
+    pub fn hessian_scalings(&self, w: &[f64]) -> Vec<f64> {
+        self.margins(w)
+            .iter()
+            .zip(self.y.iter())
+            .map(|(zi, yi)| self.loss.second_deriv(*zi, *yi))
+            .collect()
+    }
+
+    /// Hessian-vector product `f''(w)·u` given precomputed scalings.
+    /// This is the PCG hot path (Algorithm 2/3 step 4).
+    pub fn hvp_with_scalings_into(&self, s: &[f64], u: &[f64], scratch_n: &mut [f64], out: &mut [f64]) {
+        assert_eq!(s.len(), self.nsamples());
+        assert_eq!(scratch_n.len(), self.nsamples());
+        self.x.at_mul_into(u, scratch_n); // t = Xᵀu
+        for (ti, si) in scratch_n.iter_mut().zip(s.iter()) {
+            *ti *= *si; // t ← s ⊙ t
+        }
+        self.x.a_mul_into(scratch_n, out); // out = X t
+        let inv_n = 1.0 / self.n_global as f64;
+        for (oi, ui) in out.iter_mut().zip(u.iter()) {
+            *oi = *oi * inv_n + self.lambda * *ui;
+        }
+    }
+
+    /// Convenience allocating HVP at `w`.
+    pub fn hvp(&self, w: &[f64], u: &[f64]) -> Vec<f64> {
+        let s = self.hessian_scalings(w);
+        let mut scratch = vec![0.0; self.nsamples()];
+        let mut out = vec![0.0; self.dim()];
+        self.hvp_with_scalings_into(&s, u, &mut scratch, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::CscMatrix;
+    use crate::loss::{Logistic, Quadratic, SquaredHinge};
+    use crate::util::prng::Xoshiro256pp;
+
+    fn problem(seed: u64, d: usize, n: usize) -> (DataMatrix, Vec<f64>) {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let x = DataMatrix::Sparse(CscMatrix::rand_sparse(d, n, 0.4, &mut rng));
+        let y: Vec<f64> = (0..n)
+            .map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (x, y) = problem(1, 8, 12);
+        for loss in [&Quadratic as &dyn crate::loss::Loss, &Logistic, &SquaredHinge] {
+            let obj = Objective::new(&x, &y, loss, 0.1);
+            let mut rng = Xoshiro256pp::seed_from_u64(2);
+            let w: Vec<f64> = (0..8).map(|_| 0.3 * rng.normal()).collect();
+            let g = obj.grad(&w);
+            let h = 1e-6;
+            for k in 0..8 {
+                let mut wp = w.clone();
+                let mut wm = w.clone();
+                wp[k] += h;
+                wm[k] -= h;
+                let fd = (obj.value(&wp) - obj.value(&wm)) / (2.0 * h);
+                assert!(
+                    (fd - g[k]).abs() < 1e-4 * (1.0 + g[k].abs()),
+                    "{}: coord {k}: {fd} vs {}",
+                    loss.name(),
+                    g[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hvp_matches_grad_finite_differences() {
+        let (x, y) = problem(3, 10, 15);
+        let loss = Logistic;
+        let obj = Objective::new(&x, &y, &loss, 0.05);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let w: Vec<f64> = (0..10).map(|_| 0.2 * rng.normal()).collect();
+        let u: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let hv = obj.hvp(&w, &u);
+        let h = 1e-6;
+        let mut wp = w.clone();
+        let mut wm = w.clone();
+        for k in 0..10 {
+            wp[k] = w[k] + h * u[k];
+            wm[k] = w[k] - h * u[k];
+        }
+        let gp = obj.grad(&wp);
+        let gm = obj.grad(&wm);
+        for k in 0..10 {
+            let fd = (gp[k] - gm[k]) / (2.0 * h);
+            assert!((fd - hv[k]).abs() < 1e-5 * (1.0 + hv[k].abs()), "coord {k}");
+        }
+    }
+
+    #[test]
+    fn hvp_is_linear_and_symmetric() {
+        let (x, y) = problem(5, 9, 14);
+        let loss = Logistic;
+        let obj = Objective::new(&x, &y, &loss, 0.2);
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let w: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let u: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let v: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        // Linearity: H(u+2v) = Hu + 2Hv
+        let mut upv = vec![0.0; 9];
+        for k in 0..9 {
+            upv[k] = u[k] + 2.0 * v[k];
+        }
+        let h_upv = obj.hvp(&w, &upv);
+        let hu = obj.hvp(&w, &u);
+        let hv = obj.hvp(&w, &v);
+        for k in 0..9 {
+            assert!((h_upv[k] - (hu[k] + 2.0 * hv[k])).abs() < 1e-10);
+        }
+        // Symmetry: vᵀHu = uᵀHv
+        let a = ops::dot(&v, &hu);
+        let b = ops::dot(&u, &hv);
+        assert!((a - b).abs() < 1e-10 * (1.0 + a.abs()));
+    }
+
+    #[test]
+    fn hvp_positive_definite_with_regularizer() {
+        let (x, y) = problem(7, 6, 10);
+        let loss = Quadratic;
+        let obj = Objective::new(&x, &y, &loss, 0.3);
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let w: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        for _ in 0..10 {
+            let u: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+            let hu = obj.hvp(&w, &u);
+            let quad = ops::dot(&u, &hu);
+            assert!(quad >= 0.3 * ops::norm2_sq(&u) - 1e-10);
+        }
+    }
+
+    #[test]
+    fn shard_objectives_sum_to_global() {
+        // Gradient decomposition: Σ_shards ∇f_shard + λw = ∇f_global.
+        let (x, y) = problem(9, 7, 20);
+        let loss = Logistic;
+        let lambda = 0.1;
+        let obj = Objective::new(&x, &y, &loss, lambda);
+        let w: Vec<f64> = (0..7).map(|i| 0.1 * i as f64).collect();
+        let g_full = obj.grad(&w);
+
+        let x1 = x.col_block(0, 12);
+        let x2 = x.col_block(12, 20);
+        let s1 = Objective::shard(&x1, &y[0..12], &loss, 20);
+        let s2 = Objective::shard(&x2, &y[12..20], &loss, 20);
+        let mut g = s1.grad(&w);
+        let g2 = s2.grad(&w);
+        for k in 0..7 {
+            g[k] += g2[k] + lambda * w[k];
+        }
+        for k in 0..7 {
+            assert!((g[k] - g_full[k]).abs() < 1e-12, "coord {k}");
+        }
+    }
+}

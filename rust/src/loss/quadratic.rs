@@ -1,0 +1,105 @@
+//! Quadratic loss `φ(z; y) = (z − y)²` (paper Table 1, M = 0).
+//!
+//! The paper writes `(y_i − wᵀx_i)²`, identical by symmetry. Its Hessian
+//! scaling is the constant 2, so `f''(w)` is independent of `w` — the case
+//! the paper uses to present Algorithm 2.
+
+use super::Loss;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Quadratic;
+
+impl Loss for Quadratic {
+    fn name(&self) -> &'static str {
+        "quadratic"
+    }
+
+    #[inline]
+    fn value(&self, z: f64, y: f64) -> f64 {
+        let r = z - y;
+        r * r
+    }
+
+    #[inline]
+    fn deriv(&self, z: f64, y: f64) -> f64 {
+        2.0 * (z - y)
+    }
+
+    #[inline]
+    fn second_deriv(&self, _z: f64, _y: f64) -> f64 {
+        2.0
+    }
+
+    fn smoothness(&self) -> f64 {
+        2.0
+    }
+
+    fn self_concordance_m(&self) -> f64 {
+        0.0
+    }
+
+    fn curvature_is_constant(&self) -> bool {
+        true
+    }
+
+    /// `φ*(u; y) = u·y + u²/4`.
+    #[inline]
+    fn conjugate(&self, u: f64, y: f64) -> f64 {
+        u * y + u * u / 4.0
+    }
+
+    /// Closed form: maximize `(α+Δ)y − (α+Δ)²/4 − Δz − qΔ²/2`
+    /// ⇒ `Δ = (y − z − α/2) / (1/2 + q)`.
+    #[inline]
+    fn sdca_delta(&self, y: f64, z: f64, alpha: f64, q: f64) -> f64 {
+        (y - z - alpha / 2.0) / (0.5 + q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::checks;
+
+    const ZS: &[f64] = &[-3.0, -0.7, 0.0, 0.4, 2.5];
+    const YS: &[f64] = &[-1.0, 1.0, 0.3];
+
+    #[test]
+    fn derivatives_match_finite_differences() {
+        checks::grad_matches_fd(&Quadratic, ZS, YS);
+        checks::hess_matches_fd(&Quadratic, ZS, YS);
+    }
+
+    #[test]
+    fn fenchel_young_holds() {
+        checks::fenchel_young(&Quadratic, ZS, YS);
+    }
+
+    #[test]
+    fn table1_constants() {
+        assert_eq!(Quadratic.self_concordance_m(), 0.0);
+        assert_eq!(Quadratic.smoothness(), 2.0);
+    }
+
+    #[test]
+    fn sdca_delta_is_stationary_point() {
+        // g(Δ) = (α+Δ)y − (α+Δ)²/4 − Δz − qΔ²/2 must have g'(Δ*) = 0.
+        let (y, z, alpha, q) = (1.0, 0.3, -0.2, 0.8);
+        let d = Quadratic.sdca_delta(y, z, alpha, q);
+        let gp = y - (alpha + d) / 2.0 - z - q * d;
+        assert!(gp.abs() < 1e-12);
+    }
+
+    #[test]
+    fn sdca_delta_increases_dual_objective() {
+        let (y, z, alpha, q) = (-1.0, 0.9, 0.4, 1.3);
+        let g = |dd: f64| -> f64 {
+            let a = alpha + dd;
+            -(Quadratic.conjugate(-a, y)) - dd * z - q * dd * dd / 2.0
+        };
+        let d = Quadratic.sdca_delta(y, z, alpha, q);
+        assert!(g(d) >= g(0.0));
+        assert!(g(d) >= g(d + 0.1) - 1e-12);
+        assert!(g(d) >= g(d - 0.1) - 1e-12);
+    }
+}

@@ -1,0 +1,197 @@
+//! `disco` — leader entrypoint / CLI for the DiSCO-S / DiSCO-F
+//! reproduction.
+//!
+//! ```text
+//! disco run      --dataset rcv1s --algo disco-f --loss logistic [...]
+//! disco xla-run  --dataset-shape 1024x4096 --loss logistic [...]
+//! disco datasets            list the registered datasets (Table 5)
+//! disco artifacts           list loaded AOT artifacts
+//! ```
+
+use disco::algorithms::{run, AlgoKind, RunConfig};
+use disco::data::registry;
+use disco::loss::LossKind;
+use disco::net::CostModel;
+use disco::runtime::{artifact_dir, run_disco_f_xla, Engine};
+use disco::util::cli::Args;
+
+fn main() {
+    let args = Args::new(
+        "disco",
+        "Distributed Inexact Damped Newton (DiSCO-S/DiSCO-F) — Ma & Takáč 2016 reproduction",
+    )
+    .opt("dataset", Some("tiny"), "registered dataset name (see `disco datasets`)")
+    .opt("scale", Some("1"), "down-scale factor for the dataset")
+    .opt("algo", Some("disco-f"), "disco-f | disco-s | disco | dane | cocoa+ | gd")
+    .opt("loss", Some("logistic"), "logistic | quadratic | squared_hinge")
+    .opt("lambda", None, "ℓ2 regularization (default: dataset registry value)")
+    .opt("m", Some("4"), "number of simulated nodes")
+    .opt("tau", Some("100"), "preconditioner sample count (paper §5.2)")
+    .opt("mu", Some("0.01"), "preconditioner damping μ")
+    .opt("max-outer", Some("100"), "outer (Newton) iteration cap")
+    .opt("grad-tol", Some("1e-8"), "stop when ‖∇f‖ ≤ this")
+    .opt("hessian-fraction", Some("1.0"), "Fig. 5 Hessian subsampling fraction")
+    .opt("local-epochs", Some("5"), "CoCoA+/DANE local solver epochs")
+    .opt("seed", Some("42"), "PRNG seed")
+    .opt("net", Some("default"), "network cost model: default | zero | slow")
+    .opt("dataset-shape", Some("1024x4096"), "xla-run: dense d×n problem shape")
+    .switch("trace", "record + print the per-node activity trace (Fig. 2)")
+    .switch("records", "print the per-iteration convergence records");
+
+    let args = match args.parse_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args
+        .positionals()
+        .first()
+        .map(String::as_str)
+        .unwrap_or("run")
+        .to_string();
+
+    let result = match cmd.as_str() {
+        "datasets" => cmd_datasets(),
+        "artifacts" => cmd_artifacts(),
+        "run" => cmd_run(&args),
+        "xla-run" => cmd_xla_run(&args),
+        other => Err(format!("unknown command '{other}' (run, xla-run, datasets, artifacts)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_datasets() -> Result<(), String> {
+    println!("{:<10} {:<42} {:>9} {:>10} {:>9}", "name", "paper analog", "n", "d", "lambda");
+    for s in registry::SPECS {
+        println!(
+            "{:<10} {:<42} {:>9} {:>10} {:>9.0e}",
+            s.name, s.paper_analog, s.n, s.d, s.lambda
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<(), String> {
+    let engine = Engine::cpu(artifact_dir()).map_err(|e| e.to_string())?;
+    println!("platform: {}", engine.platform());
+    for name in engine.registry().names() {
+        println!("  {name}");
+    }
+    println!("({} artifacts)", engine.registry().len());
+    Ok(())
+}
+
+fn parse_cost(s: &str) -> Result<CostModel, String> {
+    match s {
+        "default" => Ok(CostModel::default()),
+        "zero" => Ok(CostModel::zero()),
+        "slow" => Ok(CostModel::slow()),
+        other => Err(format!("unknown net model '{other}'")),
+    }
+}
+
+fn build_config(args: &Args) -> Result<RunConfig, String> {
+    let algo = AlgoKind::parse(&args.req("algo").map_err(|e| e.to_string())?)
+        .ok_or("bad --algo")?;
+    let loss = LossKind::parse(&args.req("loss").map_err(|e| e.to_string())?)
+        .ok_or("bad --loss")?;
+    let ds_name = args.req("dataset").map_err(|e| e.to_string())?;
+    let lambda = match args.get("lambda") {
+        Some(l) => l.parse().map_err(|_| "bad --lambda")?,
+        None => registry::spec(&ds_name).map(|s| s.lambda).unwrap_or(1e-4),
+    };
+    let mut cfg = RunConfig::new(algo, loss, lambda);
+    cfg.m = args.get_usize("m").map_err(|e| e.to_string())?;
+    cfg.tau = args.get_usize("tau").map_err(|e| e.to_string())?;
+    cfg.mu = args.get_f64("mu").map_err(|e| e.to_string())?;
+    cfg.max_outer = args.get_usize("max-outer").map_err(|e| e.to_string())?;
+    cfg.grad_tol = args.get_f64("grad-tol").map_err(|e| e.to_string())?;
+    cfg.hessian_fraction = args.get_f64("hessian-fraction").map_err(|e| e.to_string())?;
+    cfg.local_epochs = args.get_usize("local-epochs").map_err(|e| e.to_string())?;
+    cfg.seed = args.get_u64("seed").map_err(|e| e.to_string())?;
+    cfg.cost = parse_cost(&args.req("net").map_err(|e| e.to_string())?)?;
+    cfg.trace = args.flag("trace");
+    Ok(cfg)
+}
+
+fn print_result(res: &disco::algorithms::RunResult, records: bool) {
+    if records {
+        println!("{:>5} {:>8} {:>12} {:>12} {:>12}", "outer", "rounds", "sim_time", "grad_norm", "f");
+        for r in &res.records {
+            println!(
+                "{:>5} {:>8} {:>12.4} {:>12.3e} {:>12.6e}",
+                r.outer, r.rounds, r.sim_time, r.grad_norm, r.fval
+            );
+        }
+    }
+    println!(
+        "{}: converged={} final ‖∇f‖={:.3e} f={:.6e}",
+        res.algo.name(),
+        res.converged,
+        res.final_grad_norm(),
+        res.final_fval()
+    );
+    println!("  comm: {}", res.stats);
+    println!(
+        "  time: simulated {:.3}s (wall {:.3}s)",
+        res.sim_seconds, res.wall_seconds
+    );
+    if res.trace.m > 0 && !res.trace.segments.is_empty() {
+        println!("{}", res.trace.render_ascii(96));
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    let ds_name = args.req("dataset").map_err(|e| e.to_string())?;
+    let scale = args.get_usize("scale").map_err(|e| e.to_string())?;
+    let ds = if scale <= 1 {
+        registry::load(&ds_name)
+    } else {
+        registry::load_scaled(&ds_name, scale)
+    }
+    .ok_or_else(|| format!("unknown dataset '{ds_name}'"))?;
+    println!("{}", ds.describe());
+    println!(
+        "running {} on {} nodes, loss={}, λ={:.0e}, τ={}",
+        cfg.algo.name(),
+        cfg.m,
+        cfg.loss.name(),
+        cfg.lambda,
+        cfg.tau
+    );
+    let res = run(&ds, &cfg);
+    print_result(&res, args.flag("records"));
+    Ok(())
+}
+
+fn cmd_xla_run(args: &Args) -> Result<(), String> {
+    let mut cfg = build_config(args)?;
+    cfg.algo = AlgoKind::DiscoF;
+    let shape = args.req("dataset-shape").map_err(|e| e.to_string())?;
+    let (d, n) = shape
+        .split_once('x')
+        .ok_or("--dataset-shape must be DxN")?;
+    let d: usize = d.parse().map_err(|_| "bad shape")?;
+    let n: usize = n.parse().map_err(|_| "bad shape")?;
+    let ds = disco::data::SyntheticConfig::new("xla-demo", n, d)
+        .seed(cfg.seed)
+        .generate_dense();
+    println!("{}", ds.describe());
+    let engine = Engine::cpu(artifact_dir()).map_err(|e| e.to_string())?;
+    println!(
+        "running XLA-backed DiSCO-F on {} logical nodes (PJRT {}, {} artifacts)",
+        cfg.m,
+        engine.platform(),
+        engine.registry().len()
+    );
+    let res = run_disco_f_xla(&ds, &cfg, &engine).map_err(|e| e.to_string())?;
+    print_result(&res, args.flag("records"));
+    println!("  artifact executions: {}", engine.total_executions());
+    Ok(())
+}

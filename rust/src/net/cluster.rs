@@ -1,0 +1,562 @@
+//! Simulated m-node SPMD cluster.
+//!
+//! The paper runs MPI over four EC2 instances; here each node is an OS
+//! thread executing the same program (SPMD) against its shard, and the MPI
+//! collectives (ReduceAll / Broadcast / Reduce / AllGather) are implemented
+//! with a shared blackboard + two-phase barrier. This keeps *computation*
+//! real (every node does exactly the work the algorithm prescribes, on its
+//! own core) while *communication* is priced by the α–β model
+//! ([`crate::net::cost`]) and accounted exactly ([`crate::net::stats`]).
+//!
+//! ## Simulated clock
+//!
+//! Each node carries a simulated clock (seconds). [`NodeCtx::compute`]
+//! advances it by measured wallclock of the closure; collectives
+//! synchronize all clocks to `max(arrival) + T_comm`, recording the
+//! waiting gap as *idle* and the transfer as *comm* in the trace —
+//! exactly the green/red/yellow boxes of the paper's Figure 2.
+
+use crate::net::cost::{CollectiveKind, CostModel};
+use crate::net::stats::CommStats;
+use crate::net::trace::{Activity, Segment, Trace};
+use std::sync::{Barrier, Condvar, Mutex};
+use std::time::Instant;
+
+/// Shared collective state (the "network").
+struct Blackboard {
+    m: usize,
+    cost: CostModel,
+    /// Per-rank deposited payloads for the in-flight collective.
+    slots: Mutex<Slots>,
+    barrier_a: Barrier,
+    barrier_b: Barrier,
+    stats: Mutex<CommStats>,
+    /// Panic flag: if any node panics, others unblock via poisoned barriers
+    /// anyway (std Barrier is panic-safe); this records it for reporting.
+    failed: Mutex<Option<String>>,
+    _cv: Condvar,
+}
+
+struct Slots {
+    contribs: Vec<Vec<f64>>,
+    clocks: Vec<f64>,
+    /// Result of the current collective (valid between barrier A and B+read).
+    result: Vec<f64>,
+    /// Synchronized departure clock for the current collective.
+    depart_clock: f64,
+    /// Max arrival clock (start of the comm window).
+    comm_start: f64,
+}
+
+/// Per-node handle passed to the SPMD closure.
+pub struct NodeCtx<'a> {
+    pub rank: usize,
+    pub m: usize,
+    board: &'a Blackboard,
+    /// Simulated clock, seconds.
+    pub clock: f64,
+    /// Node-local mirror of the global communication counters (identical
+    /// on every node since all participate in every collective); lets the
+    /// SPMD code snapshot rounds/bytes mid-run without touching the shared
+    /// stats lock.
+    pub local_stats: CommStats,
+    /// Node-local trace (merged by the driver at the end).
+    pub trace: Trace,
+    trace_enabled: bool,
+}
+
+impl<'a> NodeCtx<'a> {
+    /// Run `f` as node-local computation: advances the simulated clock by
+    /// the measured wallclock and records a compute segment.
+    pub fn compute<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        let dt = t.elapsed().as_secs_f64();
+        if self.trace_enabled {
+            self.trace.push(Segment {
+                node: self.rank,
+                start: self.clock,
+                end: self.clock + dt,
+                activity: Activity::Compute,
+                label: label.to_string(),
+            });
+        }
+        self.clock += dt;
+        out
+    }
+
+    /// Advance the simulated clock without running anything (models
+    /// compute whose cost is known analytically; used in what-if benches).
+    pub fn advance(&mut self, label: &str, seconds: f64) {
+        if self.trace_enabled {
+            self.trace.push(Segment {
+                node: self.rank,
+                start: self.clock,
+                end: self.clock + seconds,
+                activity: Activity::Compute,
+                label: label.to_string(),
+            });
+        }
+        self.clock += seconds;
+    }
+
+    /// Core collective protocol. `combine` runs once (on the barrier
+    /// leader) over all deposited contributions; its output is returned to
+    /// every node. `k_doubles` is the modeled message size. With
+    /// `metric = true` the collective is free and unaccounted — used by the
+    /// experiment harness to observe convergence without perturbing the
+    /// paper's round/byte counts.
+    fn collective(
+        &mut self,
+        kind: CollectiveKind,
+        k_doubles: usize,
+        payload: Vec<f64>,
+        combine: impl FnOnce(&mut Slots),
+    ) -> Vec<f64> {
+        self.collective_inner(kind, k_doubles, payload, false, combine)
+    }
+
+    fn collective_inner(
+        &mut self,
+        kind: CollectiveKind,
+        k_doubles: usize,
+        payload: Vec<f64>,
+        metric: bool,
+        combine: impl FnOnce(&mut Slots),
+    ) -> Vec<f64> {
+        let arrival = self.clock;
+        {
+            let mut s = self.board.slots.lock().unwrap();
+            s.contribs[self.rank] = payload;
+            s.clocks[self.rank] = arrival;
+        }
+        let wr = self.board.barrier_a.wait();
+        if wr.is_leader() {
+            let mut s = self.board.slots.lock().unwrap();
+            let comm_start = s.clocks.iter().cloned().fold(0.0, f64::max);
+            let t_comm = if metric {
+                0.0
+            } else {
+                self.board.cost.time(kind, k_doubles, self.m)
+            };
+            s.comm_start = comm_start;
+            s.depart_clock = comm_start + t_comm;
+            combine(&mut s);
+            if !metric {
+                self.board
+                    .stats
+                    .lock()
+                    .unwrap()
+                    .record(kind, k_doubles, t_comm);
+            }
+        }
+        self.board.barrier_b.wait();
+        let (result, comm_start, depart) = {
+            let s = self.board.slots.lock().unwrap();
+            (s.result.clone(), s.comm_start, s.depart_clock)
+        };
+        if !metric {
+            self.local_stats
+                .record(kind, k_doubles, (depart - comm_start).max(0.0));
+        }
+        if self.trace_enabled {
+            if comm_start > arrival + 1e-12 {
+                self.trace.push(Segment {
+                    node: self.rank,
+                    start: arrival,
+                    end: comm_start,
+                    activity: Activity::Idle,
+                    label: format!("wait:{}", kind.name()),
+                });
+            }
+            if depart > comm_start + 1e-15 {
+                self.trace.push(Segment {
+                    node: self.rank,
+                    start: comm_start,
+                    end: depart,
+                    activity: Activity::Comm,
+                    label: kind.name().to_string(),
+                });
+            }
+        }
+        self.clock = depart;
+        result
+    }
+
+    /// Sum across nodes; result to all. `buf` is replaced by the sum.
+    pub fn reduce_all(&mut self, buf: &mut Vec<f64>) {
+        let k = buf.len();
+        let payload = std::mem::take(buf);
+        let out = self.collective(CollectiveKind::ReduceAll, k, payload, |s| {
+            let mut acc = vec![0.0; k];
+            for c in &s.contribs {
+                debug_assert_eq!(c.len(), k, "reduce_all arity mismatch across nodes");
+                for (a, b) in acc.iter_mut().zip(c.iter()) {
+                    *a += *b;
+                }
+            }
+            s.result = acc;
+        });
+        *buf = out;
+    }
+
+    /// Scalar ReduceAll (counted as a scalar round, see stats).
+    pub fn reduce_all_scalar(&mut self, x: f64) -> f64 {
+        let mut v = vec![x];
+        self.reduce_all(&mut v);
+        v[0]
+    }
+
+    /// Two scalars bundled in one message (the paper's Alg. 3 sends α's
+    /// numerator+denominator together).
+    pub fn reduce_all_scalar2(&mut self, x: f64, y: f64) -> (f64, f64) {
+        let mut v = vec![x, y];
+        self.reduce_all(&mut v);
+        (v[0], v[1])
+    }
+
+    /// Metrics-channel ReduceAll: free and unaccounted (harness-only).
+    pub fn metric_reduce_all(&mut self, buf: &mut Vec<f64>) {
+        let k = buf.len();
+        let payload = std::mem::take(buf);
+        let out = self.collective_inner(CollectiveKind::ReduceAll, k, payload, true, |s| {
+            let mut acc = vec![0.0; k];
+            for c in &s.contribs {
+                for (a, b) in acc.iter_mut().zip(c.iter()) {
+                    *a += *b;
+                }
+            }
+            s.result = acc;
+        });
+        *buf = out;
+    }
+
+    /// Root's buffer is copied to every node.
+    pub fn broadcast(&mut self, root: usize, buf: &mut Vec<f64>) {
+        let k = buf.len();
+        let payload = std::mem::take(buf);
+        let out = self.collective(CollectiveKind::Broadcast, k, payload, |s| {
+            s.result = s.contribs[root].clone();
+        });
+        *buf = out;
+    }
+
+    /// Sum to `root`; non-root nodes receive an empty vec and must not use
+    /// the value (mirrors MPI_Reduce semantics).
+    pub fn reduce(&mut self, root: usize, buf: &mut Vec<f64>) {
+        let k = buf.len();
+        let payload = std::mem::take(buf);
+        let out = self.collective(CollectiveKind::Reduce, k, payload, |s| {
+            let mut acc = vec![0.0; k];
+            for c in &s.contribs {
+                for (a, b) in acc.iter_mut().zip(c.iter()) {
+                    *a += *b;
+                }
+            }
+            s.result = acc;
+        });
+        *buf = if self.rank == root { out } else { Vec::new() };
+    }
+
+    /// Concatenate per-node parts in rank order; everyone gets the result.
+    /// (DiSCO-F's final "Integration" step, Alg. 3 line 12.)
+    pub fn all_gather_concat(&mut self, part: &[f64]) -> Vec<f64> {
+        // Modeled size: total gathered vector.
+        let total: usize = {
+            // every node contributes its own part; leader sums sizes
+            part.len() // local; real total computed in combine
+        };
+        let _ = total;
+        let payload = part.to_vec();
+        // Size for pricing is the full concatenated length; we cannot know
+        // it before the exchange, so combine computes it — price with the
+        // local part × m as the standard all-gather volume approximation.
+        let k_price = part.len() * self.m.max(1);
+        self.collective(CollectiveKind::AllGather, k_price, payload, |s| {
+            let mut acc = Vec::new();
+            for c in &s.contribs {
+                acc.extend_from_slice(c);
+            }
+            s.result = acc;
+        })
+    }
+
+    /// Synchronize clocks without data (pure barrier; prices as a scalar).
+    pub fn barrier(&mut self) {
+        let _ = self.reduce_all_scalar(0.0);
+    }
+}
+
+/// Result of a cluster run.
+pub struct ClusterRun<T> {
+    /// Per-node return values, rank order.
+    pub outputs: Vec<T>,
+    /// Aggregated communication statistics.
+    pub stats: CommStats,
+    /// Merged trace (empty unless tracing was enabled).
+    pub trace: Trace,
+    /// Simulated makespan: max final clock across nodes.
+    pub sim_seconds: f64,
+    /// Real wallclock of the whole run (diagnostics).
+    pub wall_seconds: f64,
+}
+
+/// Cluster configuration.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub m: usize,
+    pub cost: CostModel,
+    pub trace: bool,
+}
+
+impl Cluster {
+    pub fn new(m: usize) -> Self {
+        Self {
+            m,
+            cost: CostModel::default(),
+            trace: false,
+        }
+    }
+
+    pub fn with_cost(mut self, cost: CostModel) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    pub fn with_trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+
+    /// Run the SPMD closure on every node. The closure receives the node
+    /// context and must follow SPMD discipline: all nodes execute the same
+    /// sequence of collectives.
+    pub fn run<T: Send>(
+        &self,
+        f: impl Fn(&mut NodeCtx) -> T + Sync,
+    ) -> ClusterRun<T> {
+        assert!(self.m >= 1, "cluster needs at least one node");
+        let board = Blackboard {
+            m: self.m,
+            cost: self.cost,
+            slots: Mutex::new(Slots {
+                contribs: vec![Vec::new(); self.m],
+                clocks: vec![0.0; self.m],
+                result: Vec::new(),
+                depart_clock: 0.0,
+                comm_start: 0.0,
+            }),
+            barrier_a: Barrier::new(self.m),
+            barrier_b: Barrier::new(self.m),
+            stats: Mutex::new(CommStats::default()),
+            failed: Mutex::new(None),
+            _cv: Condvar::new(),
+        };
+        let wall = Instant::now();
+        let mut outputs: Vec<Option<(T, f64, Trace)>> = Vec::with_capacity(self.m);
+        for _ in 0..self.m {
+            outputs.push(None);
+        }
+        let trace_enabled = self.trace;
+        std::thread::scope(|scope| {
+            let board = &board;
+            let f = &f;
+            let mut handles = Vec::new();
+            for (rank, slot) in outputs.iter_mut().enumerate() {
+                handles.push(scope.spawn(move || {
+                    let mut ctx = NodeCtx {
+                        rank,
+                        m: board.m,
+                        board,
+                        clock: 0.0,
+                        local_stats: CommStats::default(),
+                        trace: Trace::new(board.m),
+                        trace_enabled,
+                    };
+                    let out = f(&mut ctx);
+                    *slot = Some((out, ctx.clock, std::mem::take(&mut ctx.trace)));
+                }));
+            }
+            for h in handles {
+                if let Err(p) = h.join() {
+                    let msg = p
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "node panicked".into());
+                    *board.failed.lock().unwrap() = Some(msg);
+                }
+            }
+        });
+        if let Some(msg) = board.failed.lock().unwrap().take() {
+            panic!("cluster node failed: {msg}");
+        }
+        let wall_seconds = wall.elapsed().as_secs_f64();
+        let mut trace = Trace::new(self.m);
+        let mut sim = 0.0;
+        let outs: Vec<T> = outputs
+            .into_iter()
+            .map(|o| {
+                let (out, clock, t) = o.expect("node produced no output");
+                sim = f64::max(sim, clock);
+                trace.merge(t);
+                out
+            })
+            .collect();
+        ClusterRun {
+            outputs: outs,
+            stats: board.stats.into_inner().unwrap(),
+            trace,
+            sim_seconds: sim,
+            wall_seconds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_all_sums_across_nodes() {
+        let run = Cluster::new(4).with_cost(CostModel::zero()).run(|ctx| {
+            let mut v = vec![ctx.rank as f64, 1.0, 10.0 * ctx.rank as f64, 0.0, 0.0];
+            ctx.reduce_all(&mut v);
+            v
+        });
+        for out in &run.outputs {
+            assert_eq!(out[0], 0.0 + 1.0 + 2.0 + 3.0);
+            assert_eq!(out[1], 4.0);
+            assert_eq!(out[2], 60.0);
+        }
+        assert_eq!(run.stats.vector_rounds, 1);
+    }
+
+    #[test]
+    fn broadcast_copies_root() {
+        let run = Cluster::new(3).with_cost(CostModel::zero()).run(|ctx| {
+            let mut v = if ctx.rank == 1 {
+                vec![7.0; 8]
+            } else {
+                vec![0.0; 8]
+            };
+            ctx.broadcast(1, &mut v);
+            v
+        });
+        for out in run.outputs {
+            assert_eq!(out, vec![7.0; 8]);
+        }
+    }
+
+    #[test]
+    fn reduce_goes_to_root_only() {
+        let run = Cluster::new(3).with_cost(CostModel::zero()).run(|ctx| {
+            let mut v = vec![1.0; 6];
+            ctx.reduce(0, &mut v);
+            (ctx.rank, v)
+        });
+        for (rank, v) in run.outputs {
+            if rank == 0 {
+                assert_eq!(v, vec![3.0; 6]);
+            } else {
+                assert!(v.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_concatenates_in_rank_order() {
+        let run = Cluster::new(4).with_cost(CostModel::zero()).run(|ctx| {
+            let part = vec![ctx.rank as f64; ctx.rank + 1]; // ragged parts
+            ctx.all_gather_concat(&part)
+        });
+        let expect = vec![0.0, 1.0, 1.0, 2.0, 2.0, 2.0, 3.0, 3.0, 3.0, 3.0];
+        for out in run.outputs {
+            assert_eq!(out, expect);
+        }
+    }
+
+    #[test]
+    fn scalar_bundles() {
+        let run = Cluster::new(4).with_cost(CostModel::zero()).run(|ctx| {
+            ctx.reduce_all_scalar2(1.0, ctx.rank as f64)
+        });
+        for (a, b) in run.outputs {
+            assert_eq!(a, 4.0);
+            assert_eq!(b, 6.0);
+        }
+        assert_eq!(run.stats.scalar_rounds, 1);
+        assert_eq!(run.stats.vector_rounds, 0);
+    }
+
+    #[test]
+    fn many_sequential_collectives_stay_consistent() {
+        // Stress the two-phase barrier reuse across 200 back-to-back ops.
+        let run = Cluster::new(4).with_cost(CostModel::zero()).run(|ctx| {
+            let mut acc = 0.0;
+            for i in 0..200 {
+                let s = ctx.reduce_all_scalar((ctx.rank * i) as f64);
+                acc += s;
+            }
+            acc
+        });
+        let expect: f64 = (0..200).map(|i| (0 + 1 + 2 + 3) as f64 * i as f64).sum();
+        for out in run.outputs {
+            assert_eq!(out, expect);
+        }
+        assert_eq!(run.stats.scalar_rounds, 200);
+    }
+
+    #[test]
+    fn simulated_clock_synchronizes_and_prices_comm() {
+        let cost = CostModel {
+            alpha: 1e-3,
+            beta: f64::INFINITY,
+        };
+        let run = Cluster::new(4).with_cost(cost).with_trace(true).run(|ctx| {
+            // Rank 3 is slow: everyone must wait for it.
+            ctx.advance("work", 0.010 * (ctx.rank as f64 + 1.0));
+            let _ = ctx.reduce_all_scalar(1.0);
+            ctx.clock
+        });
+        // Arrival max = 0.040; + α·log2(4) = 2e-3.
+        for c in &run.outputs {
+            assert!((c - 0.042).abs() < 1e-9, "clock {c}");
+        }
+        assert!((run.sim_seconds - 0.042).abs() < 1e-9);
+        // Fast nodes idled.
+        let (_, idle0, _) = run.trace.node_totals(0);
+        assert!((idle0 - 0.030).abs() < 1e-9, "idle {idle0}");
+        let (_, idle3, _) = run.trace.node_totals(3);
+        assert!(idle3 < 1e-12);
+    }
+
+    #[test]
+    fn single_node_cluster_works() {
+        let run = Cluster::new(1).run(|ctx| {
+            let mut v = vec![5.0; 3];
+            ctx.reduce_all(&mut v);
+            let g = ctx.all_gather_concat(&[1.0, 2.0]);
+            (v, g)
+        });
+        assert_eq!(run.outputs[0].0, vec![5.0; 3]);
+        assert_eq!(run.outputs[0].1, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn compute_records_trace_and_advances_clock() {
+        let run = Cluster::new(2).with_trace(true).run(|ctx| {
+            ctx.compute("spin", || {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            });
+            ctx.barrier();
+            ctx.clock
+        });
+        for c in run.outputs {
+            assert!(c >= 0.005);
+        }
+        let (comp, _, _) = run.trace.node_totals(0);
+        assert!(comp >= 0.005);
+        assert!(run.trace.utilization() > 0.0);
+    }
+}

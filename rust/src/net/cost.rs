@@ -1,0 +1,134 @@
+//! α–β communication cost model.
+//!
+//! The paper's experiments ran MPI on four EC2 m3.large instances; here the
+//! cluster is simulated in-process (DESIGN.md §3), so elapsed time on the
+//! Fig. 3 x-axis is *compute wallclock + modeled network time*. The model
+//! is the standard postal/LogP-style α–β form:
+//!
+//! ```text
+//! T(collective, k doubles) = α·⌈log₂ m⌉ + factor(collective)·(8k)/β
+//! ```
+//!
+//! with `factor` 2 for ReduceAll (reduce-scatter + all-gather), 1 for
+//! one-way Broadcast/Reduce/AllGather. Defaults approximate 10 GbE with
+//! ~50 µs per-message latency, the m3.large-era fabric.
+
+/// Which collective is being priced (affects the bandwidth factor).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveKind {
+    ReduceAll,
+    Broadcast,
+    Reduce,
+    AllGather,
+}
+
+impl CollectiveKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::ReduceAll => "reduce_all",
+            CollectiveKind::Broadcast => "broadcast",
+            CollectiveKind::Reduce => "reduce",
+            CollectiveKind::AllGather => "all_gather",
+        }
+    }
+
+    fn bandwidth_factor(&self) -> f64 {
+        match self {
+            CollectiveKind::ReduceAll => 2.0,
+            _ => 1.0,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Per-message latency, seconds (default 50 µs).
+    pub alpha: f64,
+    /// Bandwidth, bytes/second (default 1.25 GB/s ≈ 10 GbE).
+    pub beta: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            alpha: 50e-6,
+            beta: 1.25e9,
+        }
+    }
+}
+
+impl CostModel {
+    /// A free network (rounds-only accounting; useful in unit tests).
+    pub fn zero() -> Self {
+        Self { alpha: 0.0, beta: f64::INFINITY }
+    }
+
+    /// A deliberately slow network (stress communication-bound behaviour —
+    /// used by the ablation benches).
+    pub fn slow() -> Self {
+        Self {
+            alpha: 1e-3,
+            beta: 125e6, // ~1 GbE
+        }
+    }
+
+    /// Modeled wall time for one collective over `k` f64 values among `m`
+    /// nodes.
+    pub fn time(&self, kind: CollectiveKind, k_doubles: usize, m: usize) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        let hops = (m as f64).log2().ceil();
+        let bytes = 8.0 * k_doubles as f64;
+        self.alpha * hops + kind.bandwidth_factor() * bytes / self.beta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_is_free() {
+        let c = CostModel::default();
+        assert_eq!(c.time(CollectiveKind::ReduceAll, 1_000_000, 1), 0.0);
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let c = CostModel::default();
+        let t_scalar = c.time(CollectiveKind::ReduceAll, 1, 4);
+        // 2 hops × 50µs plus negligible bytes.
+        assert!((t_scalar - 2.0 * 50e-6).abs() < 1e-6, "{t_scalar}");
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_messages() {
+        let c = CostModel::default();
+        let t_big = c.time(CollectiveKind::ReduceAll, 10_000_000, 4);
+        let bw_term = 2.0 * 8.0 * 10_000_000.0 / 1.25e9;
+        assert!((t_big - bw_term).abs() / bw_term < 0.01);
+    }
+
+    #[test]
+    fn reduceall_twice_oneway_cost() {
+        let c = CostModel { alpha: 0.0, beta: 1e9 };
+        let ra = c.time(CollectiveKind::ReduceAll, 1000, 4);
+        let bc = c.time(CollectiveKind::Broadcast, 1000, 4);
+        assert!((ra - 2.0 * bc).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_model_is_free() {
+        let c = CostModel::zero();
+        assert_eq!(c.time(CollectiveKind::ReduceAll, 12345, 8), 0.0);
+    }
+
+    #[test]
+    fn more_nodes_cost_more_latency() {
+        let c = CostModel::default();
+        assert!(
+            c.time(CollectiveKind::Broadcast, 1, 16) > c.time(CollectiveKind::Broadcast, 1, 4)
+        );
+    }
+}

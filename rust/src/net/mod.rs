@@ -1,0 +1,17 @@
+//! Simulated distributed runtime: SPMD cluster over threads, MPI-style
+//! collectives with exact round/byte accounting, an α–β network cost
+//! model, and per-node activity traces (Figure 2).
+//!
+//! Known limitation (shared with real MPI): a panic inside one node's SPMD
+//! closure while peers wait at a collective deadlocks the run; SPMD code
+//! must not panic between matched collectives.
+
+pub mod cluster;
+pub mod cost;
+pub mod stats;
+pub mod trace;
+
+pub use cluster::{Cluster, ClusterRun, NodeCtx};
+pub use cost::{CollectiveKind, CostModel};
+pub use stats::CommStats;
+pub use trace::{Activity, Segment, Trace};

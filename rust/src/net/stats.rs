@@ -1,0 +1,134 @@
+//! Communication accounting — the currency of every claim in the paper.
+//!
+//! "Rounds of communication" (Fig. 3 x-axis) counts **vector collectives**;
+//! scalar collectives (the two scalar ReduceAlls per DiSCO-F PCG step,
+//! Alg. 3) are tracked separately and priced by the cost model but not
+//! counted as rounds, matching how the paper reaches its "half the rounds"
+//! claim (Table 4 lists only the vector traffic).
+
+use crate::net::cost::CollectiveKind;
+
+/// Threshold below which a collective counts as "scalar" (α_t, β_t and the
+/// paired (num, den) bundles are ≤ 4 doubles).
+pub const SCALAR_DOUBLES: usize = 4;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CommStats {
+    /// Vector collectives (communication rounds, the paper's x-axis).
+    pub vector_rounds: u64,
+    /// Scalar collectives (≤ SCALAR_DOUBLES doubles).
+    pub scalar_rounds: u64,
+    /// Total f64 values moved through vector collectives (message sizes
+    /// summed; one ReduceAll of ℝᵏ counts k — Table 4's unit).
+    pub vector_doubles: u64,
+    /// Total doubles in scalar collectives.
+    pub scalar_doubles: u64,
+    /// Modeled network seconds accumulated across all collectives.
+    pub modeled_comm_seconds: f64,
+    /// Per-kind round counts (diagnostics).
+    pub reduce_all: u64,
+    pub broadcast: u64,
+    pub reduce: u64,
+    pub all_gather: u64,
+}
+
+impl CommStats {
+    pub fn record(&mut self, kind: CollectiveKind, k_doubles: usize, modeled_seconds: f64) {
+        if k_doubles <= SCALAR_DOUBLES {
+            self.scalar_rounds += 1;
+            self.scalar_doubles += k_doubles as u64;
+        } else {
+            self.vector_rounds += 1;
+            self.vector_doubles += k_doubles as u64;
+        }
+        self.modeled_comm_seconds += modeled_seconds;
+        match kind {
+            CollectiveKind::ReduceAll => self.reduce_all += 1,
+            CollectiveKind::Broadcast => self.broadcast += 1,
+            CollectiveKind::Reduce => self.reduce += 1,
+            CollectiveKind::AllGather => self.all_gather += 1,
+        }
+    }
+
+    /// Total bytes through vector collectives.
+    pub fn vector_bytes(&self) -> u64 {
+        self.vector_doubles * 8
+    }
+
+    /// The paper's "rounds of communication".
+    pub fn rounds(&self) -> u64 {
+        self.vector_rounds
+    }
+
+    pub fn merge(&mut self, o: &CommStats) {
+        self.vector_rounds += o.vector_rounds;
+        self.scalar_rounds += o.scalar_rounds;
+        self.vector_doubles += o.vector_doubles;
+        self.scalar_doubles += o.scalar_doubles;
+        self.modeled_comm_seconds += o.modeled_comm_seconds;
+        self.reduce_all += o.reduce_all;
+        self.broadcast += o.broadcast;
+        self.reduce += o.reduce;
+        self.all_gather += o.all_gather;
+    }
+}
+
+impl std::fmt::Display for CommStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "rounds={} (scalar {}) doubles={} ({} KB) comm_time={:.3}ms [ra={} bc={} rd={} ag={}]",
+            self.vector_rounds,
+            self.scalar_rounds,
+            self.vector_doubles,
+            self.vector_bytes() / 1024,
+            self.modeled_comm_seconds * 1e3,
+            self.reduce_all,
+            self.broadcast,
+            self.reduce,
+            self.all_gather
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_vs_vector_classification() {
+        let mut s = CommStats::default();
+        s.record(CollectiveKind::ReduceAll, 2, 1e-4); // scalar
+        s.record(CollectiveKind::ReduceAll, 1000, 2e-3); // vector
+        s.record(CollectiveKind::Broadcast, 1000, 1e-3); // vector
+        assert_eq!(s.rounds(), 2);
+        assert_eq!(s.scalar_rounds, 1);
+        assert_eq!(s.vector_doubles, 2000);
+        assert_eq!(s.vector_bytes(), 16000);
+        assert!((s.modeled_comm_seconds - 3.1e-3).abs() < 1e-12);
+        assert_eq!(s.reduce_all, 2);
+        assert_eq!(s.broadcast, 1);
+    }
+
+    #[test]
+    fn merge_adds_everything() {
+        let mut a = CommStats::default();
+        a.record(CollectiveKind::Reduce, 100, 1e-3);
+        let mut b = CommStats::default();
+        b.record(CollectiveKind::AllGather, 200, 2e-3);
+        a.merge(&b);
+        assert_eq!(a.vector_rounds, 2);
+        assert_eq!(a.vector_doubles, 300);
+        assert_eq!(a.reduce, 1);
+        assert_eq!(a.all_gather, 1);
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let mut s = CommStats::default();
+        s.record(CollectiveKind::ReduceAll, 1024, 1e-3);
+        let txt = s.to_string();
+        assert!(txt.contains("rounds=1"));
+        assert!(txt.contains("ra=1"));
+    }
+}

@@ -1,0 +1,222 @@
+//! Per-node activity traces — the data behind the paper's Figure 2 flow
+//! diagrams (green = compute, red = idle, yellow = communicate).
+//!
+//! Every node records `(t_start, t_end, kind, label)` segments on the
+//! *simulated* clock (compute advances it by measured wallclock, collectives
+//! synchronize it; see [`crate::net::cluster`]). The recorder renders an
+//! ASCII Gantt chart and a tidy CSV for external plotting.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activity {
+    Compute,
+    Idle,
+    Comm,
+}
+
+impl Activity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activity::Compute => "compute",
+            Activity::Idle => "idle",
+            Activity::Comm => "comm",
+        }
+    }
+
+    fn glyph(&self) -> char {
+        match self {
+            Activity::Compute => '█',
+            Activity::Idle => '·',
+            Activity::Comm => '▒',
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Segment {
+    pub node: usize,
+    pub start: f64,
+    pub end: f64,
+    pub activity: Activity,
+    pub label: String,
+}
+
+/// Trace of one distributed run: all nodes' segments.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub segments: Vec<Segment>,
+    pub m: usize,
+}
+
+impl Trace {
+    pub fn new(m: usize) -> Self {
+        Self {
+            segments: Vec::new(),
+            m,
+        }
+    }
+
+    pub fn push(&mut self, seg: Segment) {
+        debug_assert!(seg.end >= seg.start - 1e-12, "segment runs backwards");
+        self.segments.push(seg);
+    }
+
+    pub fn merge(&mut self, other: Trace) {
+        self.m = self.m.max(other.m);
+        self.segments.extend(other.segments);
+    }
+
+    pub fn end_time(&self) -> f64 {
+        self.segments.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+
+    /// Per-node totals by activity: `(compute, idle, comm)` seconds.
+    pub fn node_totals(&self, node: usize) -> (f64, f64, f64) {
+        let mut t = (0.0, 0.0, 0.0);
+        for s in self.segments.iter().filter(|s| s.node == node) {
+            let d = s.end - s.start;
+            match s.activity {
+                Activity::Compute => t.0 += d,
+                Activity::Idle => t.1 += d,
+                Activity::Comm => t.2 += d,
+            }
+        }
+        t
+    }
+
+    /// Cluster-wide utilization: compute-time / (m × makespan). The paper's
+    /// load-balancing claim is that DiSCO-F pushes this toward 1 while
+    /// DiSCO-S leaves workers idle during master-only PCG vector ops.
+    pub fn utilization(&self) -> f64 {
+        let makespan = self.end_time();
+        if makespan == 0.0 || self.m == 0 {
+            return 0.0;
+        }
+        let compute: f64 = (0..self.m).map(|n| self.node_totals(n).0).sum();
+        compute / (self.m as f64 * makespan)
+    }
+
+    /// Compute balance: min over nodes of compute time divided by max —
+    /// 1.0 means perfectly balanced (the DiSCO-F claim), ≪1 means a
+    /// master-dominated profile (DiSCO-S / original DiSCO).
+    pub fn compute_balance(&self) -> f64 {
+        let totals: Vec<f64> = (0..self.m).map(|n| self.node_totals(n).0).collect();
+        let max = totals.iter().cloned().fold(0.0, f64::max);
+        let min = totals.iter().cloned().fold(f64::INFINITY, f64::min);
+        if max == 0.0 {
+            return 1.0;
+        }
+        min / max
+    }
+
+    /// ASCII Gantt chart, `width` characters across the makespan.
+    pub fn render_ascii(&self, width: usize) -> String {
+        let end = self.end_time();
+        if end == 0.0 {
+            return String::from("(empty trace)\n");
+        }
+        let mut out = String::new();
+        out.push_str(&format!(
+            "time →  0 .. {:.3} ms   (█ compute, ▒ comm, · idle)\n",
+            end * 1e3
+        ));
+        for node in 0..self.m {
+            let mut row = vec!['·'; width];
+            for s in self.segments.iter().filter(|s| s.node == node) {
+                let a = ((s.start / end) * width as f64).floor() as usize;
+                let b = (((s.end / end) * width as f64).ceil() as usize).min(width);
+                for c in row.iter_mut().take(b).skip(a.min(width)) {
+                    // Comm overrides idle, compute overrides both (priority
+                    // render for thin segments).
+                    let g = s.activity.glyph();
+                    if *c == '·' || (*c == '▒' && g == '█') {
+                        *c = g;
+                    }
+                }
+            }
+            out.push_str(&format!("node {node} |{}|\n", row.into_iter().collect::<String>()));
+        }
+        let (c, i, m) = (0..self.m).fold((0.0, 0.0, 0.0), |acc, n| {
+            let t = self.node_totals(n);
+            (acc.0 + t.0, acc.1 + t.1, acc.2 + t.2)
+        });
+        out.push_str(&format!(
+            "totals: compute {:.3} ms, idle {:.3} ms, comm {:.3} ms, utilization {:.1}%\n",
+            c * 1e3,
+            i * 1e3,
+            m * 1e3,
+            100.0 * self.utilization()
+        ));
+        out
+    }
+
+    /// Tidy CSV (`node,start,end,activity,label`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("node,start,end,activity,label\n");
+        for s in &self.segments {
+            out.push_str(&format!(
+                "{},{:.9},{:.9},{},{}\n",
+                s.node,
+                s.start,
+                s.end,
+                s.activity.name(),
+                s.label.replace(',', ";")
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(node: usize, start: f64, end: f64, a: Activity) -> Segment {
+        Segment {
+            node,
+            start,
+            end,
+            activity: a,
+            label: "x".into(),
+        }
+    }
+
+    #[test]
+    fn totals_and_utilization() {
+        let mut t = Trace::new(2);
+        t.push(seg(0, 0.0, 1.0, Activity::Compute));
+        t.push(seg(0, 1.0, 2.0, Activity::Idle));
+        t.push(seg(1, 0.0, 2.0, Activity::Compute));
+        assert_eq!(t.node_totals(0), (1.0, 1.0, 0.0));
+        assert_eq!(t.node_totals(1), (2.0, 0.0, 0.0));
+        assert!((t.utilization() - 3.0 / 4.0).abs() < 1e-12);
+        assert_eq!(t.end_time(), 2.0);
+    }
+
+    #[test]
+    fn ascii_render_marks_rows() {
+        let mut t = Trace::new(2);
+        t.push(seg(0, 0.0, 0.5, Activity::Compute));
+        t.push(seg(1, 0.5, 1.0, Activity::Comm));
+        let s = t.render_ascii(20);
+        assert!(s.contains("node 0"));
+        assert!(s.contains("node 1"));
+        assert!(s.contains('█'));
+        assert!(s.contains('▒'));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut t = Trace::new(1);
+        t.push(seg(0, 0.0, 0.5, Activity::Compute));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("node,start,end,activity,label\n"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn empty_trace_renders() {
+        let t = Trace::new(0);
+        assert!(t.render_ascii(10).contains("empty"));
+        assert_eq!(t.utilization(), 0.0);
+    }
+}

@@ -1,0 +1,383 @@
+//! XLA-backed DiSCO-F: the full Algorithm-3 request path executed through
+//! AOT-compiled PJRT artifacts.
+//!
+//! All O(d·n) compute — margins (`margins_*`), the HVP down-sweep
+//! (`xmatvec_*`), gradients (`grad_*`), loss scalings (`scalings_*`) and
+//! objective values (`objective_*`) — runs inside the HLO executables
+//! produced by `python/compile/aot.py`, whose hot loops are the Layer-1
+//! Pallas kernels. The O(d·τ) Woodbury preconditioner apply and all PCG
+//! scalar logic stay in the Rust coordinator, mirroring the paper's
+//! division of labor (the preconditioner solve is "negligible", §1.2).
+//!
+//! The `xla` crate's PJRT client is single-threaded (`Rc` internally), so
+//! the m logical nodes execute round-robin on one thread; each node's
+//! compute time is measured per node and the collectives synchronize the
+//! per-node simulated clocks exactly as [`crate::net::cluster`] does, so
+//! round/byte/time accounting matches the native threaded path.
+
+use crate::algorithms::common::{damped_scale, forcing};
+use crate::algorithms::{AlgoKind, IterRecord, OpCounts, RunConfig, RunResult};
+use crate::data::{Dataset, Partition};
+use crate::linalg::ops;
+use crate::net::{CollectiveKind, CommStats, CostModel, Trace};
+use crate::runtime::engine::{Engine, EngineError};
+use crate::runtime::tensor::Tensor;
+use crate::solvers::Woodbury;
+use std::time::Instant;
+
+/// Sequential multi-node communication bookkeeping (same α–β model and
+/// round counting as the threaded cluster).
+pub struct SeqComm {
+    m: usize,
+    cost: CostModel,
+    clocks: Vec<f64>,
+    pub stats: CommStats,
+}
+
+impl SeqComm {
+    pub fn new(m: usize, cost: CostModel) -> Self {
+        Self {
+            m,
+            cost,
+            clocks: vec![0.0; m],
+            stats: CommStats::default(),
+        }
+    }
+
+    /// Time node `j`'s local computation on its simulated clock.
+    pub fn compute<T>(&mut self, node: usize, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.clocks[node] += t.elapsed().as_secs_f64();
+        out
+    }
+
+    fn sync(&mut self, kind: CollectiveKind, k_doubles: usize) {
+        let arrive = self.clocks.iter().cloned().fold(0.0, f64::max);
+        let t = self.cost.time(kind, k_doubles, self.m);
+        self.stats.record(kind, k_doubles, t);
+        for c in self.clocks.iter_mut() {
+            *c = arrive + t;
+        }
+    }
+
+    /// Sum per-node vectors; one ℝᵏ ReduceAll.
+    pub fn reduce_all(&mut self, parts: &[Vec<f64>]) -> Vec<f64> {
+        let k = parts[0].len();
+        let mut acc = vec![0.0; k];
+        for p in parts {
+            assert_eq!(p.len(), k, "reduce_all arity mismatch");
+            for (a, b) in acc.iter_mut().zip(p.iter()) {
+                *a += *b;
+            }
+        }
+        self.sync(CollectiveKind::ReduceAll, k);
+        acc
+    }
+
+    pub fn reduce_all_scalar2(&mut self, parts: &[(f64, f64)]) -> (f64, f64) {
+        let acc = parts.iter().fold((0.0, 0.0), |a, b| (a.0 + b.0, a.1 + b.1));
+        self.sync(CollectiveKind::ReduceAll, 2);
+        acc
+    }
+
+    pub fn reduce_all_scalar(&mut self, parts: &[f64]) -> f64 {
+        let acc = parts.iter().sum();
+        self.sync(CollectiveKind::ReduceAll, 1);
+        acc
+    }
+
+    pub fn sim_seconds(&self) -> f64 {
+        self.clocks.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Per-node state.
+struct NodeState {
+    x_tensor: Tensor, // (d_j, n) row-major f32
+    dj: usize,
+    names: ArtifactNames,
+    w: Vec<f64>,
+    grad: Vec<f64>,
+    r: Vec<f64>,
+    s_dir: Vec<f64>,
+    u: Vec<f64>,
+    v: Vec<f64>,
+    hv: Vec<f64>,
+    hu: Vec<f64>,
+    precond: Option<Woodbury>,
+    ops: OpCounts,
+}
+
+struct ArtifactNames {
+    margins: String,
+    xmatvec: String,
+    grad: String,
+}
+
+/// Run DiSCO-F through the XLA engine. The dataset must be dense (or
+/// densifiable) with artifact-registered shard shapes — see SHAPES in
+/// `python/compile/aot.py`.
+pub fn run_disco_f_xla(
+    ds: &Dataset,
+    cfg: &RunConfig,
+    engine: &Engine,
+) -> Result<RunResult, EngineError> {
+    assert!(
+        matches!(
+            cfg.loss,
+            crate::loss::LossKind::Logistic | crate::loss::LossKind::Quadratic
+        ),
+        "XLA artifacts cover logistic/quadratic"
+    );
+    let loss_name = cfg.loss.name();
+    let n = ds.nsamples();
+    let partition = Partition::by_features(ds, cfg.m);
+    let y_t = Tensor::from_f64(vec![n], &ds.y);
+    let inv_n_t = Tensor::scalar1(1.0 / n as f64);
+    let lam_t = Tensor::scalar1(cfg.lambda);
+    let scalings_name = format!("scalings_{loss_name}_{n}");
+    let objective_name = format!("objective_{loss_name}_{n}");
+
+    let mut nodes: Vec<NodeState> = partition
+        .shards
+        .iter()
+        .map(|s| {
+            let dj = s.x.nrows();
+            NodeState {
+                x_tensor: Tensor::from_dense_row_major(&s.x.to_dense()),
+                dj,
+                names: ArtifactNames {
+                    margins: format!("margins_{dj}x{n}"),
+                    xmatvec: format!("xmatvec_{dj}x{n}"),
+                    grad: format!("grad_{loss_name}_{dj}x{n}"),
+                },
+                w: vec![0.0; dj],
+                grad: vec![0.0; dj],
+                r: vec![0.0; dj],
+                s_dir: vec![0.0; dj],
+                u: vec![0.0; dj],
+                v: vec![0.0; dj],
+                hv: vec![0.0; dj],
+                hu: vec![0.0; dj],
+                precond: None,
+                ops: OpCounts {
+                    dim: dj,
+                    ..Default::default()
+                },
+            }
+        })
+        .collect();
+    // Fail fast on missing artifacts.
+    for node in &nodes {
+        engine.registry().get(&node.names.margins)?;
+        engine.registry().get(&node.names.xmatvec)?;
+        engine.registry().get(&node.names.grad)?;
+    }
+    engine.registry().get(&scalings_name)?;
+    engine.registry().get(&objective_name)?;
+
+    let mut comm = SeqComm::new(cfg.m, cfg.cost);
+    let mut records: Vec<IterRecord> = Vec::new();
+    let mut converged = false;
+    let mut last_inner = 0usize;
+    let wall = Instant::now();
+    let vec_t = |v: &[f64]| Tensor::from_f64(vec![v.len()], v);
+
+    for outer in 0..cfg.max_outer {
+        // ---- margins: one ℝⁿ ReduceAll (Alg. 3's only vector traffic) ----
+        let parts: Vec<Vec<f64>> = nodes
+            .iter()
+            .enumerate()
+            .map(|(j, node)| {
+                let w_t = vec_t(&node.w);
+                comm.compute(j, || {
+                    engine
+                        .execute(&node.names.margins, &[&node.x_tensor, &w_t])
+                        .map(|mut o| o.remove(0).to_f64())
+                })
+            })
+            .collect::<Result<_, _>>()?;
+        let z = comm.reduce_all(&parts);
+        let z_t = Tensor::from_f64(vec![n], &z);
+
+        // ---- local gradient slices + objective (scalar bundle) ----
+        let mut scalar_parts: Vec<(f64, f64)> = Vec::with_capacity(cfg.m);
+        for (j, node) in nodes.iter_mut().enumerate() {
+            let w_t = vec_t(&node.w);
+            let (g, fval_j) = comm.compute(j, || -> Result<(Vec<f64>, f64), EngineError> {
+                let g = engine
+                    .execute(
+                        &node.names.grad,
+                        &[&node.x_tensor, &z_t, &y_t, &inv_n_t, &lam_t, &w_t],
+                    )?
+                    .remove(0)
+                    .to_f64();
+                let val =
+                    engine.execute(&objective_name, &[&z_t, &y_t, &inv_n_t])?[0].data[0] as f64;
+                Ok((g, val))
+            })?;
+            let fpart = fval_j / cfg.m as f64 + 0.5 * cfg.lambda * ops::norm2_sq(&node.w);
+            scalar_parts.push((ops::norm2_sq(&g), fpart));
+            node.grad = g;
+        }
+        let (gnorm_sq, fval) = comm.reduce_all_scalar2(&scalar_parts);
+        let grad_norm = gnorm_sq.sqrt();
+        records.push(IterRecord {
+            outer,
+            rounds: comm.stats.vector_rounds,
+            scalar_rounds: comm.stats.scalar_rounds,
+            vector_doubles: comm.stats.vector_doubles,
+            sim_time: comm.sim_seconds(),
+            grad_norm,
+            fval,
+            inner_iters: last_inner,
+        });
+        if grad_norm <= cfg.grad_tol {
+            converged = true;
+            break;
+        }
+
+        // ---- Hessian scalings (every node executes the same artifact) ----
+        let mut s_vec: Vec<f64> = Vec::new();
+        for j in 0..cfg.m {
+            let out = comm.compute(j, || engine.execute(&scalings_name, &[&z_t, &y_t]))?;
+            if j == 0 {
+                s_vec = out[0].to_f64();
+            }
+        }
+
+        // ---- per-node block Woodbury (native O(d_j·τ); see module doc) --
+        let tau = cfg.tau.min(n);
+        let weights: Vec<f64> = (0..tau).map(|i| s_vec[i] / tau as f64).collect();
+        for (j, node) in nodes.iter_mut().enumerate() {
+            let cols: Vec<Vec<f64>> =
+                (0..tau).map(|i| partition.shards[j].x.col_dense(i)).collect();
+            node.precond = Some(comm.compute(j, || {
+                Woodbury::new(node.dj, &cols, &weights, cfg.lambda + cfg.mu)
+                    .expect("preconditioner factorization failed")
+            }));
+        }
+
+        // ---- PCG (Algorithm 3) ----
+        let eps = forcing(grad_norm, cfg.pcg_beta, cfg.grad_tol);
+        let mut init_parts: Vec<(f64, f64)> = Vec::with_capacity(cfg.m);
+        for (j, node) in nodes.iter_mut().enumerate() {
+            node.r.copy_from_slice(&node.grad);
+            ops::zero(&mut node.v);
+            ops::zero(&mut node.hv);
+            let pre = node.precond.as_ref().unwrap();
+            let (r, s_dir) = (&node.r, &mut node.s_dir);
+            comm.compute(j, || pre.apply_into(r, s_dir));
+            node.ops.precond_solve += 1;
+            node.u.copy_from_slice(&node.s_dir);
+            init_parts.push((ops::dot(&node.r, &node.s_dir), ops::norm2_sq(&node.r)));
+            node.ops.dot += 2;
+        }
+        let (mut rs, rn2) = comm.reduce_all_scalar2(&init_parts);
+        let mut rnorm = rn2.sqrt();
+        let mut pcg_iters = 0usize;
+
+        while rnorm > eps && pcg_iters < cfg.max_pcg {
+            // Up-sweep: ReduceAll ℝⁿ of (X^[j])ᵀ u^[j].
+            let parts: Vec<Vec<f64>> = nodes
+                .iter()
+                .enumerate()
+                .map(|(j, node)| {
+                    let u_t = vec_t(&node.u);
+                    comm.compute(j, || {
+                        engine
+                            .execute(&node.names.margins, &[&node.x_tensor, &u_t])
+                            .map(|mut o| o.remove(0).to_f64())
+                    })
+                })
+                .collect::<Result<_, _>>()?;
+            let tn = comm.reduce_all(&parts);
+            // Shared coefficient c = (s ⊙ t)/n (identical on all nodes).
+            let coeff: Vec<f64> = s_vec
+                .iter()
+                .zip(tn.iter())
+                .map(|(si, ti)| si * ti / n as f64)
+                .collect();
+            let c_t = Tensor::from_f64(vec![n], &coeff);
+
+            // Down-sweep per node: (Hu)^[j] = X^[j]c + λu^[j]; α denominator.
+            let mut alpha_parts: Vec<f64> = Vec::with_capacity(cfg.m);
+            for (j, node) in nodes.iter_mut().enumerate() {
+                let mut hu = comm.compute(j, || {
+                    engine
+                        .execute(&node.names.xmatvec, &[&node.x_tensor, &c_t])
+                        .map(|mut o| o.remove(0).to_f64())
+                })?;
+                ops::axpy(cfg.lambda, &node.u, &mut hu);
+                node.ops.hvp += 1;
+                alpha_parts.push(ops::dot(&node.u, &hu));
+                node.ops.dot += 1;
+                node.hu = hu;
+            }
+            let uhu = comm.reduce_all_scalar(&alpha_parts);
+            let alpha = rs / uhu;
+
+            // Local updates + preconditioner solve; β numerator bundle.
+            let mut beta_parts: Vec<(f64, f64)> = Vec::with_capacity(cfg.m);
+            for (j, node) in nodes.iter_mut().enumerate() {
+                comm.compute(j, || {
+                    ops::axpy(alpha, &node.u, &mut node.v);
+                    ops::axpy(alpha, &node.hu, &mut node.hv);
+                    ops::axpy(-alpha, &node.hu, &mut node.r);
+                    let pre = node.precond.as_ref().unwrap();
+                    pre.apply_into(&node.r, &mut node.s_dir);
+                });
+                node.ops.axpy += 3;
+                node.ops.precond_solve += 1;
+                beta_parts.push((ops::dot(&node.r, &node.s_dir), ops::norm2_sq(&node.r)));
+                node.ops.dot += 3;
+            }
+            let (rs_new, rn2) = comm.reduce_all_scalar2(&beta_parts);
+            let beta = rs_new / rs;
+            rs = rs_new;
+            rnorm = rn2.sqrt();
+            for node in nodes.iter_mut() {
+                ops::axpby(1.0, &node.s_dir, beta, &mut node.u);
+                node.ops.axpy += 1;
+            }
+            pcg_iters += 1;
+        }
+
+        // ---- damped step ----
+        let vhv_parts: Vec<f64> = nodes
+            .iter_mut()
+            .map(|node| {
+                node.ops.dot += 1;
+                ops::dot(&node.v, &node.hv)
+            })
+            .collect();
+        let vhv = comm.reduce_all_scalar(&vhv_parts);
+        let scale = damped_scale(vhv);
+        for node in nodes.iter_mut() {
+            for (wi, vi) in node.w.iter_mut().zip(node.v.iter()) {
+                *wi -= scale * *vi;
+            }
+            node.ops.axpy += 1;
+        }
+        last_inner = pcg_iters;
+    }
+
+    let mut w = Vec::with_capacity(ds.dim());
+    let mut node_ops = Vec::new();
+    for node in &nodes {
+        w.extend_from_slice(&node.w);
+        node_ops.push(node.ops.clone());
+    }
+    Ok(RunResult {
+        algo: AlgoKind::DiscoF,
+        records,
+        w,
+        stats: comm.stats.clone(),
+        trace: Trace::new(cfg.m),
+        sim_seconds: comm.sim_seconds(),
+        wall_seconds: wall.elapsed().as_secs_f64(),
+        converged,
+        node_ops,
+    })
+}

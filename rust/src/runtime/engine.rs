@@ -1,0 +1,134 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
+//! CPU PJRT client, and executes them with host tensors.
+//!
+//! Single-threaded by construction — the `xla` crate's `PjRtClient` is
+//! `Rc`-based. The XLA-backed distributed driver
+//! ([`crate::runtime::disco_xla`]) therefore executes its m logical nodes
+//! round-robin on one thread; PJRT's own intra-op thread pool still uses
+//! all cores for each kernel. See DESIGN.md §2.
+
+use crate::runtime::registry::{Registry, RegistryError};
+use crate::runtime::tensor::Tensor;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+#[derive(Debug)]
+pub enum EngineError {
+    Registry(RegistryError),
+    Xla(String),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Registry(e) => write!(f, "{e}"),
+            EngineError::Xla(e) => write!(f, "xla: {e}"),
+        }
+    }
+}
+impl std::error::Error for EngineError {}
+
+impl From<RegistryError> for EngineError {
+    fn from(e: RegistryError) -> Self {
+        EngineError::Registry(e)
+    }
+}
+
+fn xerr(e: xla::Error) -> EngineError {
+    EngineError::Xla(e.to_string())
+}
+
+/// Compiled-executable cache keyed by artifact name.
+pub struct Engine {
+    registry: Registry,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Execution counters (perf accounting).
+    pub executions: RefCell<HashMap<String, u64>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Engine, EngineError> {
+        let registry = Registry::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Engine {
+            registry,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            executions: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact.
+    pub fn prepare(&self, name: &str) -> Result<(), EngineError> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.registry.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.path
+                .to_str()
+                .ok_or_else(|| EngineError::Xla("non-utf8 path".into()))?,
+        )
+        .map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr)?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with the given inputs; returns the outputs
+    /// (tuple-unwrapped). Shapes are checked against the manifest.
+    pub fn execute(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+        let spec = self.registry.check_inputs(name, &shapes)?.clone();
+        self.prepare(name)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("prepared above");
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let l = xla::Literal::vec1(&t.data);
+                if t.rank() == 1 {
+                    Ok(l)
+                } else {
+                    l.reshape(&t.dims_i64()).map_err(xerr)
+                }
+            })
+            .collect::<Result<_, EngineError>>()?;
+
+        let result = exe.execute::<xla::Literal>(&literals).map_err(xerr)?;
+        let tuple = result[0][0].to_literal_sync().map_err(xerr)?;
+        // aot.py lowers with return_tuple=True.
+        let parts = tuple.to_tuple().map_err(xerr)?;
+        *self
+            .executions
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_default() += 1;
+        parts
+            .into_iter()
+            .zip(spec.outputs.iter())
+            .map(|(lit, out_spec)| {
+                let data = lit.to_vec::<f32>().map_err(xerr)?;
+                Ok(Tensor::new(out_spec.shape.clone(), data))
+            })
+            .collect()
+    }
+
+    /// Total artifact executions (perf accounting).
+    pub fn total_executions(&self) -> u64 {
+        self.executions.borrow().values().sum()
+    }
+}

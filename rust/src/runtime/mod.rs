@@ -1,0 +1,21 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! (`make artifacts`), compile them once on the CPU PJRT client, and run
+//! the paper's algorithms against them. Python never executes here — the
+//! `disco` binary is self-contained once `artifacts/` exists.
+
+pub mod disco_xla;
+pub mod engine;
+pub mod registry;
+pub mod tensor;
+
+pub use disco_xla::run_disco_f_xla;
+pub use engine::{Engine, EngineError};
+pub use registry::{Registry, RegistryError};
+pub use tensor::Tensor;
+
+/// Default artifact directory, overridable via `DISCO_ARTIFACTS`.
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::env::var("DISCO_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

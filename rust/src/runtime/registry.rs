@@ -1,0 +1,221 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) and type-checks every runtime call against the
+//! recorded shapes before it reaches PJRT.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug)]
+pub enum RegistryError {
+    Io(std::io::Error),
+    Parse(String),
+    Missing(String),
+    ShapeMismatch {
+        artifact: String,
+        arg: usize,
+        expected: Vec<usize>,
+        got: Vec<usize>,
+    },
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::Io(e) => write!(f, "registry io: {e}"),
+            RegistryError::Parse(m) => write!(f, "manifest parse: {m}"),
+            RegistryError::Missing(n) => write!(f, "unknown artifact '{n}' (run `make artifacts`?)"),
+            RegistryError::ShapeMismatch {
+                artifact,
+                arg,
+                expected,
+                got,
+            } => write!(
+                f,
+                "artifact '{artifact}' arg {arg}: expected shape {expected:?}, got {got:?}"
+            ),
+        }
+    }
+}
+impl std::error::Error for RegistryError {}
+
+impl From<std::io::Error> for RegistryError {
+    fn from(e: std::io::Error) -> Self {
+        RegistryError::Io(e)
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Registry {
+    specs: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn parse_tensor_specs(v: &Json, what: &str) -> Result<Vec<TensorSpec>, RegistryError> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| RegistryError::Parse(format!("{what} is not an array")))?;
+    arr.iter()
+        .map(|io| {
+            let shape = io
+                .get("shape")
+                .as_arr()
+                .ok_or_else(|| RegistryError::Parse(format!("{what}: missing shape")))?
+                .iter()
+                .map(|s| {
+                    s.as_usize()
+                        .ok_or_else(|| RegistryError::Parse(format!("{what}: bad dim")))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            let dtype = io
+                .get("dtype")
+                .as_str()
+                .ok_or_else(|| RegistryError::Parse(format!("{what}: missing dtype")))?
+                .to_string();
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry, RegistryError> {
+        let dir = dir.as_ref().to_path_buf();
+        let body = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::from_json(&body, dir)
+    }
+
+    pub fn from_json(body: &str, dir: PathBuf) -> Result<Registry, RegistryError> {
+        let root = Json::parse(body).map_err(|e| RegistryError::Parse(e.to_string()))?;
+        let obj = root
+            .as_obj()
+            .ok_or_else(|| RegistryError::Parse("manifest root is not an object".into()))?;
+        let mut specs = BTreeMap::new();
+        for (name, meta) in obj {
+            let file = meta
+                .get("file")
+                .as_str()
+                .ok_or_else(|| RegistryError::Parse(format!("{name}: missing file")))?;
+            specs.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    path: dir.join(file),
+                    inputs: parse_tensor_specs(meta.get("inputs"), "inputs")?,
+                    outputs: parse_tensor_specs(meta.get("outputs"), "outputs")?,
+                },
+            );
+        }
+        Ok(Registry { specs, dir })
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.specs.keys().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec, RegistryError> {
+        self.specs
+            .get(name)
+            .ok_or_else(|| RegistryError::Missing(name.to_string()))
+    }
+
+    /// Validate call-site shapes against the manifest.
+    pub fn check_inputs(
+        &self,
+        name: &str,
+        shapes: &[&[usize]],
+    ) -> Result<&ArtifactSpec, RegistryError> {
+        let spec = self.get(name)?;
+        if spec.inputs.len() != shapes.len() {
+            return Err(RegistryError::Parse(format!(
+                "artifact '{name}': expected {} inputs, got {}",
+                spec.inputs.len(),
+                shapes.len()
+            )));
+        }
+        for (i, (want, got)) in spec.inputs.iter().zip(shapes.iter()).enumerate() {
+            if want.shape != **got {
+                return Err(RegistryError::ShapeMismatch {
+                    artifact: name.to_string(),
+                    arg: i,
+                    expected: want.shape.clone(),
+                    got: got.to_vec(),
+                });
+            }
+        }
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "hvp_4x8": {
+        "file": "hvp_4x8.hlo.txt",
+        "inputs": [{"shape": [4,8], "dtype": "f32"},
+                   {"shape": [8], "dtype": "f32"},
+                   {"shape": [4], "dtype": "f32"}],
+        "outputs": [{"shape": [4], "dtype": "f32"}]
+      }
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let r = Registry::from_json(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(r.len(), 1);
+        let s = r.get("hvp_4x8").unwrap();
+        assert_eq!(s.inputs.len(), 3);
+        assert_eq!(s.inputs[0].shape, vec![4, 8]);
+        assert_eq!(s.path, PathBuf::from("/tmp/a/hvp_4x8.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_artifact_reported() {
+        let r = Registry::from_json(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(matches!(r.get("nope"), Err(RegistryError::Missing(_))));
+    }
+
+    #[test]
+    fn shape_check_catches_mismatch() {
+        let r = Registry::from_json(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(r
+            .check_inputs("hvp_4x8", &[&[4, 8], &[8], &[4]])
+            .is_ok());
+        let err = r.check_inputs("hvp_4x8", &[&[4, 8], &[7], &[4]]);
+        assert!(matches!(
+            err,
+            Err(RegistryError::ShapeMismatch { arg: 1, .. })
+        ));
+        assert!(r.check_inputs("hvp_4x8", &[&[4, 8]]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_json() {
+        assert!(Registry::from_json("{", PathBuf::new()).is_err());
+        assert!(Registry::from_json(r#"{"x": {"file": 3}}"#, PathBuf::new()).is_err());
+    }
+}

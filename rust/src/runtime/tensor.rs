@@ -1,0 +1,89 @@
+//! Row-major f32 host tensors — the interchange type between the
+//! coordinator's f64 column-major world and the XLA artifacts' f32
+//! row-major world.
+
+use crate::linalg::DenseMatrix;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    pub fn scalar1(v: f64) -> Self {
+        Self::new(vec![1], vec![v as f32])
+    }
+
+    pub fn from_f64(shape: Vec<usize>, data: &[f64]) -> Self {
+        Self::new(shape, data.iter().map(|&v| v as f32).collect())
+    }
+
+    pub fn to_f64(&self) -> Vec<f64> {
+        self.data.iter().map(|&v| v as f64).collect()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Convert a column-major f64 matrix (d×n) into a row-major f32 tensor
+    /// of shape [d, n] — the layout the artifacts expect.
+    pub fn from_dense_row_major(m: &DenseMatrix) -> Self {
+        let (d, n) = (m.nrows(), m.ncols());
+        let mut data = vec![0.0f32; d * n];
+        for j in 0..n {
+            let col = m.col(j);
+            for i in 0..d {
+                data[i * n + j] = col[i] as f32;
+            }
+        }
+        Self::new(vec![d, n], data)
+    }
+
+    /// XLA shape dims as i64.
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&s| s as i64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_conversion() {
+        let t = Tensor::from_f64(vec![2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.rank(), 2);
+        assert_eq!(t.to_f64(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(Tensor::scalar1(0.5).shape, vec![1]);
+    }
+
+    #[test]
+    fn dense_to_row_major_transposes_layout() {
+        // col-major [[1,3],[2,4]] as cols [1,2],[3,4] → row-major 1,3,2,4.
+        let m = DenseMatrix::from_columns(2, &[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let t = Tensor::from_dense_row_major(&m);
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.data, vec![1.0, 3.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn bad_shape_rejected() {
+        let _ = Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Numerical solvers: the Woodbury closed-form preconditioner (paper
+//! Alg. 4), reference PCG, SAG (original-DiSCO preconditioner path and
+//! DANE local solver), SDCA (CoCoA+ local solver), and the single-machine
+//! Newton reference used as ground truth.
+
+pub mod newton_ref;
+pub mod pcg;
+pub mod sag;
+pub mod sdca;
+pub mod woodbury;
+
+pub use newton_ref::{newton_reference, NewtonResult};
+pub use pcg::{pcg, IdentityPrecond, LinearOperator, PcgResult, Preconditioner};
+pub use sdca::SdcaLocal;
+pub use woodbury::Woodbury;

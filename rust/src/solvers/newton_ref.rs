@@ -1,0 +1,152 @@
+//! Single-machine inexact Newton reference solver.
+//!
+//! Produces ground-truth optima `(w*, f*)` for tests and for the
+//! suboptimality axis of the experiment harness. It is exactly the damped
+//! Newton outer loop of the paper (Algorithm 1) with a *plain CG* inner
+//! solve on one machine — no preconditioning games, no distribution — so
+//! distributed runs can be validated against it.
+
+use crate::linalg::ops;
+use crate::loss::Objective;
+use crate::solvers::pcg::{pcg, IdentityPrecond, LinearOperator};
+
+/// Hessian operator at a fixed point (scalings precomputed).
+struct HessOp<'a> {
+    obj: &'a Objective<'a>,
+    s: Vec<f64>,
+    scratch: std::cell::RefCell<Vec<f64>>,
+}
+
+impl<'a> LinearOperator for HessOp<'a> {
+    fn dim(&self) -> usize {
+        self.obj.dim()
+    }
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        let mut scratch = self.scratch.borrow_mut();
+        self.obj.hvp_with_scalings_into(&self.s, x, &mut scratch, y);
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct NewtonResult {
+    pub w: Vec<f64>,
+    pub fval: f64,
+    pub grad_norm: f64,
+    pub outer_iterations: usize,
+    pub total_cg_iterations: usize,
+    pub converged: bool,
+}
+
+/// Minimize `obj` to `‖∇f‖ ≤ grad_tol`.
+pub fn newton_reference(
+    obj: &Objective,
+    grad_tol: f64,
+    max_outer: usize,
+    max_cg: usize,
+) -> NewtonResult {
+    let d = obj.dim();
+    let mut w = vec![0.0; d];
+    let mut total_cg = 0;
+    for outer in 0..max_outer {
+        let g = obj.grad(&w);
+        let gnorm = ops::norm2(&g);
+        if gnorm <= grad_tol {
+            return NewtonResult {
+                fval: obj.value(&w),
+                w,
+                grad_norm: gnorm,
+                outer_iterations: outer,
+                total_cg_iterations: total_cg,
+                converged: true,
+            };
+        }
+        let op = HessOp {
+            obj,
+            s: obj.hessian_scalings(&w),
+            scratch: std::cell::RefCell::new(vec![0.0; obj.nsamples()]),
+        };
+        // Zhang–Xiao style forcing term: ε_k = min(0.25, ‖g‖)·‖g‖/20.
+        let eps = (gnorm / 20.0).min(0.25 * gnorm).max(grad_tol * 0.1);
+        let res = pcg(&op, &g, &IdentityPrecond, eps, max_cg);
+        total_cg += res.iterations;
+        // Damped step: δ = √(vᵀHv).
+        let delta = ops::dot(&res.v, &res.hv).max(0.0).sqrt();
+        let scale = 1.0 / (1.0 + delta);
+        ops::axpy(-scale, &res.v, &mut w);
+    }
+    let g = obj.grad(&w);
+    NewtonResult {
+        fval: obj.value(&w),
+        grad_norm: ops::norm2(&g),
+        w,
+        outer_iterations: max_outer,
+        total_cg_iterations: total_cg,
+        converged: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{CscMatrix, DataMatrix};
+    use crate::loss::{Logistic, Quadratic, SquaredHinge};
+    use crate::util::prng::Xoshiro256pp;
+
+    fn make(seed: u64, d: usize, n: usize) -> (DataMatrix, Vec<f64>) {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let x = DataMatrix::Sparse(CscMatrix::rand_sparse(d, n, 0.3, &mut rng));
+        let y = (0..n)
+            .map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 })
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn converges_on_all_losses() {
+        let (x, y) = make(1, 20, 80);
+        for loss in [
+            &Quadratic as &dyn crate::loss::Loss,
+            &Logistic,
+            &SquaredHinge,
+        ] {
+            let obj = Objective::new(&x, &y, loss, 1e-2);
+            let res = newton_reference(&obj, 1e-9, 50, 500);
+            assert!(res.converged, "{} gnorm={}", loss.name(), res.grad_norm);
+            assert!(res.grad_norm <= 1e-9);
+        }
+    }
+
+    #[test]
+    fn quadratic_loss_is_one_newton_step() {
+        // With quadratic loss f is quadratic: a single (well-solved) Newton
+        // step plus damping must reach tiny gradients in very few iters.
+        let (x, y) = make(2, 10, 50);
+        let obj = Objective::new(&x, &y, &Quadratic, 0.1);
+        let res = newton_reference(&obj, 1e-8, 30, 1000);
+        assert!(res.converged);
+        assert!(
+            res.outer_iterations <= 12,
+            "took {} outer iterations",
+            res.outer_iterations
+        );
+    }
+
+    #[test]
+    fn optimum_is_stationary_under_perturbation() {
+        let (x, y) = make(3, 8, 40);
+        let obj = Objective::new(&x, &y, &Logistic, 0.05);
+        let res = newton_reference(&obj, 1e-10, 60, 800);
+        assert!(res.converged);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        for _ in 0..5 {
+            let mut wp = res.w.clone();
+            for v in wp.iter_mut() {
+                *v += 1e-3 * rng.normal();
+            }
+            assert!(
+                obj.value(&wp) >= res.fval - 1e-12,
+                "perturbed value below optimum"
+            );
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Single-machine (preconditioned) conjugate gradients.
+//!
+//! This is the *reference* PCG used to validate the distributed
+//! implementations (Algorithms 2 and 3 produce, in exact arithmetic, the
+//! same iterates as this solver applied to the aggregated system) and by
+//! the single-node reference Newton solver.
+
+use crate::linalg::ops;
+
+/// Abstract SPD operator `y = A x`.
+pub trait LinearOperator {
+    fn dim(&self) -> usize;
+    fn apply_into(&self, x: &[f64], y: &mut [f64]);
+
+    fn apply(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.dim()];
+        self.apply_into(x, &mut y);
+        y
+    }
+}
+
+/// Abstract preconditioner apply `y = M⁻¹ x`.
+pub trait Preconditioner {
+    fn apply_into(&self, x: &[f64], y: &mut [f64]);
+}
+
+/// Identity preconditioner (plain CG).
+pub struct IdentityPrecond;
+
+impl Preconditioner for IdentityPrecond {
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        y.copy_from_slice(x);
+    }
+}
+
+impl Preconditioner for crate::solvers::woodbury::Woodbury {
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        crate::solvers::woodbury::Woodbury::apply_into(self, x, y)
+    }
+}
+
+/// Dense matrix as operator (tests).
+impl LinearOperator for crate::linalg::SquareMatrix {
+    fn dim(&self) -> usize {
+        self.n()
+    }
+    fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        self.mul_into(x, y)
+    }
+}
+
+/// Outcome of a PCG solve.
+#[derive(Clone, Debug)]
+pub struct PcgResult {
+    pub v: Vec<f64>,
+    /// `H v` at the solution (needed for the Newton decrement δ).
+    pub hv: Vec<f64>,
+    pub iterations: usize,
+    pub residual_norm: f64,
+    pub converged: bool,
+}
+
+/// Solve `A v = b` to `‖r‖ ≤ tol`, at most `max_iter` steps, with
+/// preconditioner `M⁻¹`. Follows the paper's Algorithm 2 update order
+/// (tracks `Hv` incrementally, line 6).
+pub fn pcg(
+    a: &impl LinearOperator,
+    b: &[f64],
+    m_inv: &impl Preconditioner,
+    tol: f64,
+    max_iter: usize,
+) -> PcgResult {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    let mut v = vec![0.0; n];
+    let mut hv = vec![0.0; n];
+    let mut r = b.to_vec(); // r_0 = b − A·0
+    let mut s = vec![0.0; n];
+    m_inv.apply_into(&r, &mut s);
+    let mut u = s.clone();
+    let mut hu = vec![0.0; n];
+    let mut rs = ops::dot(&r, &s);
+    let mut iterations = 0;
+    let mut rnorm = ops::norm2(&r);
+
+    while rnorm > tol && iterations < max_iter {
+        a.apply_into(&u, &mut hu);
+        let uhu = ops::dot(&u, &hu);
+        if uhu <= 0.0 {
+            // Operator not PD along u (numerical breakdown) — bail with
+            // the current iterate rather than diverging.
+            break;
+        }
+        let alpha = rs / uhu;
+        ops::axpy(alpha, &u, &mut v);
+        ops::axpy(alpha, &hu, &mut hv);
+        ops::axpy(-alpha, &hu, &mut r);
+        m_inv.apply_into(&r, &mut s);
+        let rs_new = ops::dot(&r, &s);
+        let beta = rs_new / rs;
+        rs = rs_new;
+        ops::axpby(1.0, &s, beta, &mut u);
+        rnorm = ops::norm2(&r);
+        iterations += 1;
+    }
+    PcgResult {
+        v,
+        hv,
+        iterations,
+        residual_norm: rnorm,
+        converged: rnorm <= tol,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::SquareMatrix;
+    use crate::solvers::woodbury::Woodbury;
+    use crate::util::prng::Xoshiro256pp;
+
+    fn spd(n: usize, seed: u64, cond_boost: f64) -> SquareMatrix {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = SquareMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a.set(i, j, s / n as f64 + if i == j { cond_boost } else { 0.0 });
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn cg_solves_spd_system() {
+        let n = 30;
+        let a = spd(n, 1, 0.5);
+        let xtrue: Vec<f64> = (0..n).map(|i| (i as f64 * 0.2).sin()).collect();
+        let b = a.mul(&xtrue);
+        let res = pcg(&a, &b, &IdentityPrecond, 1e-10, 500);
+        assert!(res.converged, "residual {}", res.residual_norm);
+        for (x, t) in res.v.iter().zip(&xtrue) {
+            assert!((x - t).abs() < 1e-7);
+        }
+        // hv tracked incrementally must equal A·v.
+        let av = a.mul(&res.v);
+        for (h, t) in res.hv.iter().zip(&av) {
+            assert!((h - t).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn exact_preconditioner_converges_in_one_iteration() {
+        // If M = A exactly, PCG must converge in a single step.
+        let n = 12;
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let cols: Vec<Vec<f64>> = (0..6)
+            .map(|_| (0..n).map(|_| rng.normal()).collect())
+            .collect();
+        let w = vec![0.7; 6];
+        let wb = Woodbury::new(n, &cols, &w, 0.4).unwrap();
+        let a = wb.dense(); // operator IS the preconditioner
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let res = pcg(&a, &b, &wb, 1e-9, 50);
+        assert!(res.converged);
+        assert_eq!(res.iterations, 1, "exact preconditioning must take 1 step");
+    }
+
+    #[test]
+    fn good_preconditioner_beats_plain_cg() {
+        // A = P + small perturbation ⇒ PCG(P) needs far fewer iterations.
+        let n = 40;
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let cols: Vec<Vec<f64>> = (0..20)
+            .map(|_| (0..n).map(|_| rng.normal()).collect())
+            .collect();
+        let w = vec![0.5; 20];
+        let wb = Woodbury::new(n, &cols, &w, 0.05).unwrap();
+        let mut a = wb.dense();
+        for i in 0..n {
+            a.add_to(i, i, 0.01 * (1.0 + (i as f64 * 0.4).sin().abs()));
+        }
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let plain = pcg(&a, &b, &IdentityPrecond, 1e-8, 2000);
+        let pre = pcg(&a, &b, &wb, 1e-8, 2000);
+        assert!(pre.converged && plain.converged);
+        assert!(
+            pre.iterations * 2 <= plain.iterations,
+            "PCG {} vs CG {}",
+            pre.iterations,
+            plain.iterations
+        );
+    }
+
+    #[test]
+    fn max_iter_respected() {
+        let a = spd(25, 3, 0.01);
+        let b = vec![1.0; 25];
+        let res = pcg(&a, &b, &IdentityPrecond, 1e-16, 3);
+        assert_eq!(res.iterations, 3);
+        assert!(!res.converged);
+    }
+
+    #[test]
+    fn zero_rhs_converges_immediately() {
+        let a = spd(10, 4, 0.5);
+        let res = pcg(&a, &vec![0.0; 10], &IdentityPrecond, 1e-12, 10);
+        assert_eq!(res.iterations, 0);
+        assert!(res.converged);
+        assert_eq!(res.v, vec![0.0; 10]);
+    }
+}

@@ -1,0 +1,227 @@
+//! Stochastic Average Gradient (Schmidt, Le Roux & Bach 2013).
+//!
+//! Two roles in this repo, both *baseline-side*:
+//!
+//! 1. The **original DiSCO**'s preconditioner solve: Zhang & Xiao suggest
+//!    solving `P s = r` with an iterative linear-rate method run **on the
+//!    master only** — the serial bottleneck the paper's §1.2 measures at
+//!    >50 % of runtime. [`solve_linear_system`] reproduces that path.
+//! 2. The **DANE** local subproblem (paper Eq. (1)), a generic smooth
+//!    strongly-convex ERM solved per node: [`SagSolver`].
+//!
+//! The implementation follows SAG's standard form: a per-sample gradient
+//! table for the data term, with deterministic affine parts (ℓ2 terms,
+//! linear shifts) applied exactly each step.
+
+use crate::linalg::{ops, DataMatrix};
+use crate::util::prng::Xoshiro256pp;
+
+/// Generic SAG over `min_w (1/n) Σ ℓ_j(x_jᵀ w) + (κ/2)‖w‖² + cᵀw`.
+///
+/// `scalar_deriv(j, z)` returns `ℓ_j'(z)`; `lmax` bounds `ℓ_j''·‖x_j‖²`
+/// for the step size.
+pub struct SagSolver<'a> {
+    pub x: &'a DataMatrix,
+    pub kappa: f64,
+    pub linear: &'a [f64],
+    /// Upper bound on per-sample curvature (sets the 1/L step).
+    pub lmax: f64,
+}
+
+impl<'a> SagSolver<'a> {
+    /// Run `epochs · n` stochastic steps from `w0`. Returns the iterate.
+    pub fn run(
+        &self,
+        scalar_deriv: impl Fn(usize, f64) -> f64,
+        w0: &[f64],
+        epochs: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> Vec<f64> {
+        let d = self.x.nrows();
+        let n = self.x.ncols();
+        assert_eq!(w0.len(), d);
+        assert_eq!(self.linear.len(), d);
+        let mut w = w0.to_vec();
+        // Gradient table: per-sample scalar g_j = ℓ_j'(x_jᵀw at last visit);
+        // data-term average gradient = (1/n) Σ g_j x_j kept as dense `avg`.
+        let mut table = vec![0.0; n];
+        let mut avg = vec![0.0; d];
+        let step = 1.0 / (self.lmax + self.kappa).max(1e-12);
+        for _ in 0..epochs * n {
+            let j = rng.index(n);
+            let z = self.x.col_dot(j, &w);
+            let g_new = scalar_deriv(j, z);
+            let delta = g_new - table[j];
+            table[j] = g_new;
+            // avg += delta/n · x_j
+            self.x.col_axpy(j, delta / n as f64, &mut avg);
+            // w ← w − step·(avg + κw + c)
+            for i in 0..d {
+                w[i] -= step * (avg[i] + self.kappa * w[i] + self.linear[i]);
+            }
+        }
+        w
+    }
+}
+
+/// Solve the SPD system `P s = r` with `P = dreg·I + Σ_i (c_i/τ)·x_i x_iᵀ`
+/// by SAG on the quadratic `min_s ½ sᵀPs − rᵀs` — the original-DiSCO
+/// master-only preconditioner path. `columns` are the τ preconditioner
+/// samples (dense), `weights[i] = c_i/τ` their full coefficients.
+///
+/// Returns `(s, passes)` where `passes` counts epoch-equivalents executed
+/// (the serial work the master performs while workers idle).
+pub fn solve_linear_system(
+    columns: &[Vec<f64>],
+    weights: &[f64],
+    dreg: f64,
+    r: &[f64],
+    tol: f64,
+    max_epochs: usize,
+    rng: &mut Xoshiro256pp,
+) -> (Vec<f64>, usize) {
+    let d = r.len();
+    let tau = columns.len();
+    assert_eq!(weights.len(), tau);
+    let mut s = vec![0.0; d];
+    if tau == 0 {
+        for (si, ri) in s.iter_mut().zip(r.iter()) {
+            *si = ri / dreg;
+        }
+        return (s, 0);
+    }
+    // Quadratic per-sample loss: ℓ_i(z) = (τ·w_i)/2 · z² over x_i ⇒
+    // full objective (1/τ)Σ ℓ_i(x_iᵀs) = ½ sᵀ(Σ w_i x_i x_iᵀ)s.
+    let lmax = columns
+        .iter()
+        .zip(weights.iter())
+        .map(|(c, w)| w * tau as f64 * ops::norm2_sq(c))
+        .fold(0.0, f64::max);
+    let step = 1.0 / (lmax + dreg).max(1e-12);
+
+    let mut table = vec![0.0; tau];
+    let mut avg = vec![0.0; d];
+    let mut linear_resid = vec![0.0; d]; // current full gradient estimate
+    let mut passes = 0usize;
+    for epoch in 0..max_epochs {
+        for _ in 0..tau {
+            let j = rng.index(tau);
+            let z = ops::dot(&columns[j], &s);
+            let g_new = weights[j] * tau as f64 * z;
+            let delta = g_new - table[j];
+            table[j] = g_new;
+            ops::axpy(delta / tau as f64, &columns[j], &mut avg);
+            for i in 0..d {
+                s[i] -= step * (avg[i] + dreg * s[i] - r[i]);
+            }
+        }
+        passes = epoch + 1;
+        // Convergence check on the true residual ‖Ps − r‖ (O(dτ)).
+        for i in 0..d {
+            linear_resid[i] = dreg * s[i] - r[i];
+        }
+        for (c, w) in columns.iter().zip(weights.iter()) {
+            let z = ops::dot(c, &s);
+            ops::axpy(w * z, c, &mut linear_resid);
+        }
+        if ops::norm2(&linear_resid) <= tol {
+            break;
+        }
+    }
+    (s, passes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{CscMatrix, SquareMatrix};
+    use crate::linalg::lu_solve;
+
+    #[test]
+    fn linear_system_matches_direct_solve() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let d = 12;
+        let tau = 8;
+        let columns: Vec<Vec<f64>> = (0..tau)
+            .map(|_| (0..d).map(|_| rng.normal() * 0.5).collect())
+            .collect();
+        let weights: Vec<f64> = (0..tau).map(|_| rng.uniform(0.05, 0.3)).collect();
+        let dreg = 0.5;
+        let r: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        // Dense P for the reference solve.
+        let mut p = SquareMatrix::zeros(d);
+        for i in 0..d {
+            p.set(i, i, dreg);
+        }
+        for (c, w) in columns.iter().zip(&weights) {
+            for i in 0..d {
+                for j in 0..d {
+                    p.add_to(i, j, w * c[i] * c[j]);
+                }
+            }
+        }
+        let direct = lu_solve(&p, &r).unwrap();
+        let (s, passes) = solve_linear_system(&columns, &weights, dreg, &r, 1e-9, 8000, &mut rng);
+        assert!(passes > 0);
+        for (a, b) in s.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b} after {passes} passes");
+        }
+    }
+
+    #[test]
+    fn empty_system_is_diagonal_solve() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let (s, passes) = solve_linear_system(&[], &[], 2.0, &[4.0, 8.0], 1e-12, 10, &mut rng);
+        assert_eq!(s, vec![2.0, 4.0]);
+        assert_eq!(passes, 0);
+    }
+
+    #[test]
+    fn sag_solver_minimizes_ridge_regression() {
+        // min (1/n) Σ ½(x_jᵀw − y_j)² + (κ/2)‖w‖² — compare to normal eqs.
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let d = 6;
+        let n = 40;
+        let x = DataMatrix::Sparse(CscMatrix::rand_sparse(d, n, 0.6, &mut rng));
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let kappa = 0.3;
+        // Normal equations: ((1/n)XXᵀ + κI) w = (1/n)X y.
+        let xd = x.to_dense();
+        let mut a = SquareMatrix::zeros(d);
+        for i in 0..d {
+            a.set(i, i, kappa);
+        }
+        for j in 0..n {
+            let c = xd.col(j);
+            for ii in 0..d {
+                for jj in 0..d {
+                    a.add_to(ii, jj, c[ii] * c[jj] / n as f64);
+                }
+            }
+        }
+        let rhs = {
+            let mut v = x.a_mul(&y);
+            ops::scale(1.0 / n as f64, &mut v);
+            v
+        };
+        let wref = lu_solve(&a, &rhs).unwrap();
+
+        let lmax = (0..n).map(|j| x.col_norm_sq(j)).fold(0.0, f64::max);
+        let linear = vec![0.0; d];
+        let solver = SagSolver {
+            x: &x,
+            kappa,
+            linear: &linear,
+            lmax,
+        };
+        let w = solver.run(
+            |j, z| z - y[j],
+            &vec![0.0; d],
+            400,
+            &mut rng,
+        );
+        for (a, b) in w.iter().zip(&wref) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+}

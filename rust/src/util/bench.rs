@@ -1,0 +1,237 @@
+//! Micro-benchmark harness (offline replacement for `criterion`).
+//!
+//! `cargo bench` targets in `rust/benches/` use `harness = false` and drive
+//! this module: warmup, adaptive iteration count targeting a fixed measure
+//! time, and median/p10/p90 reporting. Results can be appended to a CSV so
+//! the §Perf log in EXPERIMENTS.md is regenerable.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement summary (nanoseconds per iteration).
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mean_ns: f64,
+    /// Optional user-supplied throughput denominator (e.g. bytes or flops
+    /// per iteration); enables a derived rate column.
+    pub units_per_iter: Option<f64>,
+}
+
+impl Sample {
+    pub fn rate(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / (self.median_ns * 1e-9))
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Number of measurement batches for the percentile estimate.
+    pub batches: usize,
+    results: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(600),
+            batches: 20,
+            results: Vec::new(),
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick profile for end-to-end benches that run seconds per iteration.
+    pub fn end_to_end() -> Self {
+        Self {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_millis(0),
+            batches: 3,
+            results: Vec::new(),
+        }
+    }
+
+    /// Single-shot profile for multi-minute end-to-end suites (each "run"
+    /// already aggregates many internal repetitions).
+    pub fn once() -> Self {
+        Self {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_millis(0),
+            batches: 1,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, printing a one-line summary. `units_per_iter` enables
+    /// throughput reporting (see [`Sample::rate`]).
+    pub fn run<T>(&mut self, name: &str, units_per_iter: Option<f64>, mut f: impl FnMut() -> T) {
+        // Warmup and per-batch iteration calibration.
+        let mut iters_per_batch = 1u64;
+        if self.warmup > Duration::ZERO {
+            let start = Instant::now();
+            let mut n = 0u64;
+            while start.elapsed() < self.warmup {
+                black_box(f());
+                n += 1;
+            }
+            let per = self.warmup.as_nanos() as f64 / n.max(1) as f64;
+            let batch_budget = self.measure.as_nanos() as f64 / self.batches as f64;
+            iters_per_batch = ((batch_budget / per).floor() as u64).max(1);
+        }
+
+        let mut per_iter_ns: Vec<f64> = Vec::with_capacity(self.batches);
+        for _ in 0..self.batches {
+            let t = Instant::now();
+            for _ in 0..iters_per_batch {
+                black_box(f());
+            }
+            per_iter_ns.push(t.elapsed().as_nanos() as f64 / iters_per_batch as f64);
+        }
+        per_iter_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| -> f64 {
+            let idx = ((per_iter_ns.len() - 1) as f64 * q).round() as usize;
+            per_iter_ns[idx]
+        };
+        let sample = Sample {
+            name: name.to_string(),
+            iters: iters_per_batch * self.batches as u64,
+            median_ns: pct(0.5),
+            p10_ns: pct(0.1),
+            p90_ns: pct(0.9),
+            mean_ns: per_iter_ns.iter().sum::<f64>() / per_iter_ns.len() as f64,
+            units_per_iter,
+        };
+        print_sample(&sample);
+        self.results.push(sample);
+    }
+
+    pub fn results(&self) -> &[Sample] {
+        &self.results
+    }
+
+    /// Append all results to a CSV file (creating it with a header if new).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        let new = !std::path::Path::new(path).exists();
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        if new {
+            writeln!(f, "name,iters,median_ns,p10_ns,p90_ns,mean_ns,rate")?;
+        }
+        for s in &self.results {
+            writeln!(
+                f,
+                "{},{},{:.1},{:.1},{:.1},{:.1},{}",
+                s.name,
+                s.iters,
+                s.median_ns,
+                s.p10_ns,
+                s.p90_ns,
+                s.mean_ns,
+                s.rate().map(|r| format!("{r:.3e}")).unwrap_or_default()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+fn print_sample(s: &Sample) {
+    let fmt_ns = |ns: f64| -> String {
+        if ns < 1e3 {
+            format!("{ns:.0} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    };
+    let rate = match s.rate() {
+        Some(r) if r >= 1e9 => format!("  [{:.2} G/s]", r / 1e9),
+        Some(r) if r >= 1e6 => format!("  [{:.2} M/s]", r / 1e6),
+        Some(r) => format!("  [{r:.2} /s]"),
+        None => String::new(),
+    };
+    println!(
+        "bench {:<48} median {:>10}  p10 {:>10}  p90 {:>10}  ({} iters){}",
+        s.name,
+        fmt_ns(s.median_ns),
+        fmt_ns(s.p10_ns),
+        fmt_ns(s.p90_ns),
+        s.iters,
+        rate
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            batches: 5,
+            results: Vec::new(),
+        };
+        b.run("spin", None, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        let s = &b.results()[0];
+        assert!(s.median_ns > 0.0);
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+    }
+
+    #[test]
+    fn rate_derivation() {
+        let s = Sample {
+            name: "x".into(),
+            iters: 1,
+            median_ns: 1e9,
+            p10_ns: 1e9,
+            p90_ns: 1e9,
+            mean_ns: 1e9,
+            units_per_iter: Some(2e6),
+        };
+        assert!((s.rate().unwrap() - 2e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn csv_append(){
+        let dir = std::env::temp_dir().join("disco_bench_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("out.csv");
+        let mut b = Bench::end_to_end();
+        b.run("quick", Some(10.0), || 1 + 1);
+        b.write_csv(path.to_str().unwrap()).unwrap();
+        b.write_csv(path.to_str().unwrap()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body.lines().count(), 3); // header + 2 appends
+    }
+}

@@ -1,0 +1,253 @@
+//! Declarative command-line flag parser (offline replacement for `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! subcommands, defaults, and auto-generated `--help`. Strict: unknown
+//! flags are an error, so typos fail loudly in experiment scripts.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+enum Kind {
+    /// Takes a value (string-typed; accessors convert).
+    Value { default: Option<String> },
+    /// Boolean presence flag.
+    Switch,
+}
+
+#[derive(Clone, Debug)]
+struct Spec {
+    name: String,
+    help: String,
+    kind: Kind,
+}
+
+/// A flag schema plus parsed results.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare a value flag with an optional default (None ⇒ required if read
+    /// via `req_*`).
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind: Kind::Value {
+                default: default.map(|s| s.to_string()),
+            },
+        });
+        self
+    }
+
+    /// Declare a boolean switch.
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind: Kind::Switch,
+        });
+        self
+    }
+
+    fn spec(&self, name: &str) -> Option<&Spec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    /// Parse a raw argv slice (excluding the program name). Returns the help
+    /// text as Err if `--help` is present.
+    pub fn parse(mut self, argv: &[String]) -> Result<Self, CliError> {
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.help_text()));
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .spec(&name)
+                    .ok_or_else(|| CliError(format!("unknown flag --{name}\n\n{}", self.help_text())))?
+                    .clone();
+                match spec.kind {
+                    Kind::Switch => {
+                        if inline.is_some() {
+                            return Err(CliError(format!("switch --{name} takes no value")));
+                        }
+                        self.switches.insert(name, true);
+                    }
+                    Kind::Value { .. } => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => it
+                                .next()
+                                .ok_or_else(|| CliError(format!("flag --{name} needs a value")))?
+                                .clone(),
+                        };
+                        self.values.insert(name, v);
+                    }
+                }
+            } else {
+                self.positionals.push(a.clone());
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse from the process environment.
+    pub fn parse_env(self) -> Result<Self, CliError> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse(&argv)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self.switches.get(name).unwrap_or(&false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        match self.spec(name) {
+            Some(Spec {
+                kind: Kind::Value { default: Some(d) },
+                ..
+            }) => Some(d.clone()),
+            _ => None,
+        }
+    }
+
+    pub fn req(&self, name: &str) -> Result<String, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError(format!("missing required flag --{name}")))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        let v = self.req(name)?;
+        v.parse()
+            .map_err(|_| CliError(format!("--{name}: expected integer, got '{v}'")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self.req(name)?;
+        v.parse()
+            .map_err(|_| CliError(format!("--{name}: expected float, got '{v}'")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        let v = self.req(name)?;
+        v.parse()
+            .map_err(|_| CliError(format!("--{name}: expected integer, got '{v}'")))
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} — {}", self.program, self.about);
+        let _ = writeln!(out, "\nFLAGS:");
+        for s in &self.specs {
+            let meta = match &s.kind {
+                Kind::Value { default: Some(d) } => format!(" <value> (default: {d})"),
+                Kind::Value { default: None } => " <value>".to_string(),
+                Kind::Switch => String::new(),
+            };
+            let _ = writeln!(out, "  --{}{}\n        {}", s.name, meta, s.help);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn schema() -> Args {
+        Args::new("disco", "test")
+            .opt("dataset", Some("news20s"), "dataset name")
+            .opt("tau", Some("100"), "preconditioner samples")
+            .opt("lambda", None, "regularization")
+            .switch("verbose", "chatty output")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = schema().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("dataset").unwrap(), "news20s");
+        assert_eq!(a.get_usize("tau").unwrap(), 100);
+        assert!(!a.flag("verbose"));
+        assert!(a.get("lambda").is_none());
+    }
+
+    #[test]
+    fn explicit_values_and_eq_syntax() {
+        let a = schema()
+            .parse(&argv(&["--dataset", "rcv1s", "--tau=200", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get("dataset").unwrap(), "rcv1s");
+        assert_eq!(a.get_usize("tau").unwrap(), 200);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(schema().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(schema().parse(&argv(&["--tau"])).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = schema().parse(&argv(&["run", "--tau", "50", "fig3"])).unwrap();
+        assert_eq!(a.positionals(), &["run".to_string(), "fig3".to_string()]);
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let a = schema().parse(&argv(&["--tau", "abc"])).unwrap();
+        assert!(a.get_usize("tau").is_err());
+    }
+
+    #[test]
+    fn help_lists_flags() {
+        let err = schema().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.0.contains("--dataset"));
+        assert!(err.0.contains("--verbose"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Cross-cutting utilities built from scratch for the offline environment:
+//! PRNG, JSON, CLI parsing, timing, CSV output, micro-bench harness, and a
+//! property-test driver. See DESIGN.md §7 for why these are in-tree.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod timer;

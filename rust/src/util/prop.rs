@@ -1,0 +1,170 @@
+//! Lightweight property-based testing driver (offline `proptest` stand-in).
+//!
+//! A property is a closure over a [`Gen`] (seeded PRNG wrapper with shaped
+//! generators). The driver runs `cases` random cases; on failure it reports
+//! the failing case's seed so the exact case can be replayed with
+//! [`check_seeded`]. Shrinking is deliberately omitted — generators here
+//! are sized explicitly, so failures are already small.
+
+use crate::util::prng::Xoshiro256pp;
+
+/// Shaped random-value generator handed to properties.
+pub struct Gen {
+    rng: Xoshiro256pp,
+    /// Seed of this particular case (for replay diagnostics).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(case_seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256pp::seed_from_u64(case_seed),
+            case_seed,
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Xoshiro256pp {
+        &mut self.rng
+    }
+
+    /// usize in `[lo, hi]` inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    /// f64 uniform in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// f64 with a wide log-uniform magnitude (sign-symmetric), good for
+    /// stressing numeric code without overflowing.
+    pub fn f64_reasonable(&mut self) -> f64 {
+        let mag = 10f64.powf(self.rng.uniform(-3.0, 3.0));
+        let sign = if self.rng.next_f64() < 0.5 { -1.0 } else { 1.0 };
+        sign * mag * self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_f64() < 0.5
+    }
+
+    /// Vector of standard-normal entries.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    /// Vector uniform in `[lo, hi)`.
+    pub fn uniform_vec(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+
+    /// ±1 labels.
+    pub fn labels(&mut self, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|_| if self.rng.next_f64() < 0.5 { -1.0 } else { 1.0 })
+            .collect()
+    }
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop`, panicking with the failing seed on
+/// the first failure.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    // Derive per-case seeds from the property name so independent
+    // properties explore independent streams, deterministically.
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(case as u64 + 1));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (replay: check_seeded(\"{name}\", {seed}, ..)):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (used to debug a reported failure).
+pub fn check_seeded(name: &str, seed: u64, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("property '{name}' failed on seeded replay {seed}:\n  {msg}");
+    }
+}
+
+/// Assert helper: approximate equality with context for property messages.
+pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol}, scale {scale})"))
+    }
+}
+
+/// Assert helper: plain predicate with message.
+pub fn ensure(cond: bool, what: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.to_string())
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 50, |g| {
+            count += 1;
+            ensure(g.usize_in(0, 10) <= 10, "range")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        check("fails", 10, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            ensure(x < 0.0, "impossible")
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<usize> = Vec::new();
+        check("det", 5, |g| {
+            first.push(g.usize_in(0, 1_000_000));
+            Ok(())
+        });
+        let mut second: Vec<usize> = Vec::new();
+        check("det", 5, |g| {
+            second.push(g.usize_in(0, 1_000_000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn ensure_close_scales() {
+        assert!(ensure_close(1e6, 1e6 + 1.0, 1e-5, "big").is_ok());
+        assert!(ensure_close(0.0, 1e-3, 1e-5, "small").is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Wall-clock timing helpers and a simple hierarchical profiler used by the
+//! coordinator to attribute time to compute / communication / idle phases.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A resettable stopwatch.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn reset(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates named time buckets; used for the per-phase breakdown the
+/// paper's Figure 2 reasoning is about (compute vs communicate vs idle).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseProfiler {
+    buckets: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl PhaseProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, phase: &str, d: Duration) {
+        *self.buckets.entry(phase.to_string()).or_default() += d;
+        *self.counts.entry(phase.to_string()).or_default() += 1;
+    }
+
+    /// Time a closure into a bucket.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(phase, t.elapsed());
+        out
+    }
+
+    pub fn total(&self, phase: &str) -> Duration {
+        self.buckets.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.counts.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, Duration, u64)> {
+        self.buckets
+            .iter()
+            .map(|(k, v)| (k.as_str(), *v, self.counts[k]))
+    }
+
+    pub fn merge(&mut self, other: &PhaseProfiler) {
+        for (k, v) in &other.buckets {
+            *self.buckets.entry(k.clone()).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_default() += *v;
+        }
+    }
+
+    /// Render a fixed-width summary table.
+    pub fn report(&self) -> String {
+        let total: Duration = self.buckets.values().sum();
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<24} {:>12} {:>10} {:>8}\n",
+            "phase", "total", "calls", "share"
+        ));
+        for (k, v, c) in self.phases() {
+            let share = if total.as_nanos() > 0 {
+                100.0 * v.as_secs_f64() / total.as_secs_f64()
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{:<24} {:>10.3}ms {:>10} {:>7.1}%\n",
+                k,
+                v.as_secs_f64() * 1e3,
+                c,
+                share
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        let e1 = sw.reset();
+        assert!(e1 >= Duration::from_millis(1));
+        assert!(sw.elapsed() < e1 + Duration::from_millis(100));
+    }
+
+    #[test]
+    fn profiler_accumulates() {
+        let mut p = PhaseProfiler::new();
+        p.add("compute", Duration::from_millis(10));
+        p.add("compute", Duration::from_millis(5));
+        p.add("comm", Duration::from_millis(3));
+        assert_eq!(p.total("compute"), Duration::from_millis(15));
+        assert_eq!(p.count("compute"), 2);
+        assert_eq!(p.count("comm"), 1);
+        assert!(p.report().contains("compute"));
+    }
+
+    #[test]
+    fn profiler_merge() {
+        let mut a = PhaseProfiler::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = PhaseProfiler::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(4));
+        a.merge(&b);
+        assert_eq!(a.total("x"), Duration::from_millis(3));
+        assert_eq!(a.total("y"), Duration::from_millis(4));
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut p = PhaseProfiler::new();
+        let v = p.time("work", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(p.count("work"), 1);
+    }
+}

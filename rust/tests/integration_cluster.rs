@@ -1,0 +1,138 @@
+//! Integration: the simulated cluster's collectives, accounting, and
+//! trace under realistic SPMD programs (beyond the unit tests in
+//! `net::cluster`).
+
+use disco::linalg::ops;
+use disco::net::{Cluster, CostModel};
+
+#[test]
+fn distributed_dot_products_match_serial() {
+    // SPMD computation of ⟨x, y⟩ with x, y sharded across nodes.
+    let n = 1000;
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
+    let y: Vec<f64> = (0..n).map(|i| (i as f64 * 0.02).cos()).collect();
+    let serial = ops::dot(&x, &y);
+    for m in [1usize, 2, 3, 4, 7] {
+        let ranges = disco::data::balanced_ranges(n, m);
+        let run = Cluster::new(m).with_cost(CostModel::zero()).run(|ctx| {
+            let (lo, hi) = ranges[ctx.rank];
+            ctx.reduce_all_scalar(ops::dot(&x[lo..hi], &y[lo..hi]))
+        });
+        for out in run.outputs {
+            assert!((out - serial).abs() < 1e-10, "m={m}: {out} vs {serial}");
+        }
+    }
+}
+
+#[test]
+fn pipeline_of_mixed_collectives() {
+    // Broadcast → elementwise → ReduceAll → AllGather, repeated; checks
+    // the barrier protocol under heterogeneous message types.
+    let run = Cluster::new(4).with_cost(CostModel::zero()).run(|ctx| {
+        let mut acc = Vec::new();
+        for round in 0..20 {
+            let mut seedv = if ctx.rank == round % 4 {
+                vec![round as f64; 8]
+            } else {
+                vec![0.0; 8]
+            };
+            ctx.broadcast(round % 4, &mut seedv);
+            let mut contrib: Vec<f64> = seedv.iter().map(|v| v + ctx.rank as f64).collect();
+            ctx.reduce_all(&mut contrib);
+            let gathered = ctx.all_gather_concat(&contrib[..2]);
+            acc.push(gathered.iter().sum::<f64>());
+        }
+        acc
+    });
+    // All nodes must agree exactly.
+    for o in &run.outputs[1..] {
+        assert_eq!(o, &run.outputs[0]);
+    }
+    assert_eq!(run.stats.broadcast, 20);
+    assert_eq!(run.stats.reduce_all, 20);
+    assert_eq!(run.stats.all_gather, 20);
+}
+
+#[test]
+fn byte_accounting_is_exact() {
+    let run = Cluster::new(4).with_cost(CostModel::zero()).run(|ctx| {
+        let mut v = vec![0.0; 100];
+        ctx.reduce_all(&mut v); // 100 doubles
+        let mut w = vec![0.0; 7];
+        ctx.broadcast(0, &mut w); // 7 doubles
+        let _ = ctx.reduce_all_scalar(1.0); // scalar
+        0
+    });
+    assert_eq!(run.stats.vector_rounds, 2);
+    assert_eq!(run.stats.scalar_rounds, 1);
+    assert_eq!(run.stats.vector_doubles, 107);
+    assert_eq!(run.stats.vector_bytes(), 107 * 8);
+}
+
+#[test]
+fn metric_channel_is_free_and_invisible() {
+    let run = Cluster::new(3).with_cost(CostModel::slow()).run(|ctx| {
+        let mut v = vec![ctx.rank as f64; 1000];
+        ctx.metric_reduce_all(&mut v);
+        v[0]
+    });
+    assert_eq!(run.outputs[0], 3.0); // 0+1+2
+    assert_eq!(run.stats.vector_rounds, 0);
+    assert_eq!(run.stats.scalar_rounds, 0);
+    assert_eq!(run.stats.modeled_comm_seconds, 0.0);
+}
+
+#[test]
+fn cost_model_drives_simulated_time_not_wallclock() {
+    // With a slow network the simulated time must track the model.
+    let k = 100_000;
+    let run = Cluster::new(4).with_cost(CostModel::slow()).run(|ctx| {
+        for _ in 0..10 {
+            let mut v = vec![1.0; k];
+            ctx.reduce_all(&mut v);
+        }
+        ctx.clock
+    });
+    let expected_comm = 10.0 * (1e-3 * 2.0 + 2.0 * 8.0 * k as f64 / 125e6);
+    assert!(
+        (run.sim_seconds - expected_comm).abs() < 0.2 * expected_comm,
+        "sim {} vs expected {expected_comm}",
+        run.sim_seconds
+    );
+}
+
+#[test]
+fn trace_covers_makespan_without_negative_segments() {
+    let run = Cluster::new(4).with_trace(true).run(|ctx| {
+        let rank = ctx.rank as u64;
+        for i in 0..5 {
+            ctx.compute("work", || {
+                std::thread::sleep(std::time::Duration::from_micros(200 * (rank + 1)));
+            });
+            let _ = ctx.reduce_all_scalar(i as f64);
+        }
+    });
+    assert!(run.trace.end_time() > 0.0);
+    for seg in &run.trace.segments {
+        assert!(seg.end >= seg.start, "negative segment {seg:?}");
+        assert!(seg.node < 4);
+    }
+    // Unbalanced compute ⇒ fast nodes idle.
+    let (_, idle0, _) = run.trace.node_totals(0);
+    assert!(idle0 > 0.0, "node 0 (fastest) should have idled");
+}
+
+#[test]
+fn many_nodes_smoke() {
+    let run = Cluster::new(16).with_cost(CostModel::zero()).run(|ctx| {
+        let mut v = vec![1.0; 64];
+        for _ in 0..50 {
+            ctx.reduce_all(&mut v);
+            ops::scale(1.0 / 16.0, &mut v);
+        }
+        v[0]
+    });
+    for o in run.outputs {
+        assert!((o - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,178 @@
+//! Integration over the experiment harness: every figure/table
+//! regenerator runs at test scale, writes its CSVs, and the *shape* of
+//! each paper claim holds (who wins, by roughly what factor).
+
+use disco::algorithms::AlgoKind;
+use disco::coordinator::experiments::{self, ExperimentConfig};
+use disco::loss::LossKind;
+use disco::net::CostModel;
+
+fn test_cfg(out: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        scale: 16,
+        out_dir: format!("{}/disco_fig_test_{out}", std::env::temp_dir().display()),
+        m: 4,
+        cost: CostModel::default(),
+        grad_target: 1e-7,
+        max_outer: 30,
+        seed: 42,
+        // Keep τ ≪ n at test scale (paper: τ=100 ≪ n=20k..4.6M); with
+        // τ ≈ n the master preconditioner becomes near-exact and the
+        // regime comparison degenerates.
+        tau: 16,
+    }
+}
+
+#[test]
+fn fig1_writes_series() {
+    let cfg = test_cfg("fig1");
+    let s = experiments::figure1(&cfg).unwrap();
+    assert!(s.contains("Amdahl"));
+    let body = std::fs::read_to_string(format!("{}/fig1_amdahl.csv", cfg.out_dir)).unwrap();
+    assert_eq!(body.lines().count(), 65); // header + 64
+    // Last value approaches 4/3.
+    let last = body.lines().last().unwrap();
+    let speedup: f64 = last.split(',').nth(1).unwrap().parse().unwrap();
+    assert!((speedup - 4.0 / 3.0).abs() < 0.02);
+}
+
+#[test]
+fn fig2_load_balance_shape() {
+    let cfg = test_cfg("fig2");
+    let s = experiments::figure2(&cfg).unwrap();
+    assert!(s.contains("DiSCO-F"));
+    // Traces exist and DiSCO-F balances compute better than DiSCO-S.
+    for f in [
+        "fig2_trace_disco_s.csv",
+        "fig2_trace_disco_f.csv",
+        "fig2_trace_disco_orig.csv",
+    ] {
+        let body = std::fs::read_to_string(format!("{}/{f}", cfg.out_dir)).unwrap();
+        assert!(body.lines().count() > 5, "{f} empty");
+    }
+}
+
+#[test]
+fn table2_ordering() {
+    let cfg = test_cfg("table2");
+    let s = experiments::table2(&cfg).unwrap();
+    assert!(s.contains("DiSCO") && s.contains("CoCoA+") && s.contains("DANE"));
+    let body =
+        std::fs::read_to_string(format!("{}/table2_complexity.csv", cfg.out_dir)).unwrap();
+    assert!(body.lines().count() >= 9); // 3 datasets × 3 algos + header
+}
+
+#[test]
+fn tables34_match_paper_exactly() {
+    // The central structural tables: per-PCG-step op counts (Table 3) and
+    // message sizes (Table 4) must match the paper's entries exactly.
+    let cfg = test_cfg("t34");
+    let s = experiments::tables34(&cfg).unwrap();
+    // DiSCO-S: master (1,1,4,4); workers (1,0,0,0); 2 vector rounds.
+    assert!(s.contains("master"), "{s}");
+    let body = std::fs::read_to_string(format!("{}/table3_opcounts.csv", cfg.out_dir)).unwrap();
+    for line in body.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        let (algo, role) = (f[0], f[2]);
+        let counts: Vec<u64> = f[4..8].iter().map(|v| v.parse().unwrap()).collect();
+        match (algo, role) {
+            ("DiSCO-S", "master") => assert_eq!(counts, vec![1, 1, 4, 4], "{line}"),
+            ("DiSCO-S", "node") => assert_eq!(counts, vec![1, 0, 0, 0], "{line}"),
+            ("DiSCO-F", _) => assert_eq!(counts, vec![1, 1, 4, 4], "{line}"),
+            _ => panic!("unexpected row {line}"),
+        }
+    }
+    let t4 = std::fs::read_to_string(format!("{}/table4_comm.csv", cfg.out_dir)).unwrap();
+    let mut rounds = std::collections::BTreeMap::new();
+    for line in t4.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        rounds.insert(f[0].to_string(), f[1].parse::<u64>().unwrap());
+    }
+    assert_eq!(rounds["DiSCO-S"], 2, "S: broadcast + reduceAll per step");
+    assert_eq!(rounds["DiSCO-F"], 1, "F: single ℝⁿ reduceAll per step");
+}
+
+#[test]
+fn table5_lists_all_datasets() {
+    let cfg = test_cfg("t5");
+    let s = experiments::table5(&cfg).unwrap();
+    for name in ["rcv1s", "news20s", "splices"] {
+        assert!(s.contains(name), "missing {name}");
+    }
+}
+
+/// At test scale (datasets shrunk 16×) message sizes drop to a few KB and
+/// the default 50 µs latency term hides the bandwidth effect the paper
+/// measures (their news20 messages are ~10 MB). The regime tests therefore
+/// use a bandwidth-dominated cost model — the full-scale benches
+/// (`cargo bench --bench bench_fig3_end_to_end` with BENCH_SCALE=1) show
+/// the same shapes under the default model.
+fn bandwidth_cost() -> CostModel {
+    CostModel {
+        alpha: 2e-6,
+        beta: 1.25e9,
+    }
+}
+
+#[test]
+fn fig3_shape_news20_regime() {
+    // d ≫ n: DiSCO-F must need about half the rounds of DiSCO-S and win
+    // simulated time (ℝⁿ messages ≪ ℝᵈ messages).
+    let mut cfg = test_cfg("fig3");
+    cfg.cost = bandwidth_cost();
+    let (_, results) = experiments::figure3_one(&cfg, "news20s", LossKind::Logistic).unwrap();
+    let get = |a: AlgoKind| results.iter().find(|(x, _)| *x == a).map(|(_, r)| r).unwrap();
+    let f = get(AlgoKind::DiscoF);
+    let s = get(AlgoKind::DiscoS);
+    assert!(f.converged, "DiSCO-F must converge");
+    let tol = 1e-6;
+    let (fr, sr) = (f.rounds_to_tol(tol), s.rounds_to_tol(tol));
+    if let (Some(fr), Some(sr)) = (fr, sr) {
+        let ratio = sr as f64 / fr as f64;
+        assert!(ratio > 1.4, "rounds ratio S/F = {ratio}");
+    }
+    // Time: F's per-round ℝⁿ traffic is much smaller than S's ℝᵈ here.
+    if let (Some(ft), Some(st)) = (f.time_to_tol(tol), s.time_to_tol(tol)) {
+        assert!(ft < st, "F {ft}s should beat S {st}s when d ≫ n");
+    }
+    // CSV written.
+    assert!(std::path::Path::new(&format!("{}/fig3_news20s_logistic.csv", cfg.out_dir)).exists());
+}
+
+#[test]
+fn fig3_shape_rcv1_regime() {
+    // n ≫ d: DiSCO-F still wins rounds but pays ℝⁿ messages — DiSCO-S (or
+    // CoCoA+) should win on simulated time (the paper's rcv1 finding).
+    let mut cfg = test_cfg("fig3r");
+    cfg.cost = bandwidth_cost();
+    let (_, results) = experiments::figure3_one(&cfg, "rcv1s", LossKind::Logistic).unwrap();
+    let get = |a: AlgoKind| results.iter().find(|(x, _)| *x == a).map(|(_, r)| r).unwrap();
+    let f = get(AlgoKind::DiscoF);
+    let s = get(AlgoKind::DiscoS);
+    assert!(f.converged && s.converged);
+    let tol = 1e-6;
+    if let (Some(ft), Some(st)) = (f.time_to_tol(tol), s.time_to_tol(tol)) {
+        assert!(
+            st < ft,
+            "S should win elapsed time when n ≫ d (paper Fig. 3 rcv1): S {st}s vs F {ft}s"
+        );
+    }
+}
+
+#[test]
+fn fig4_tau_tradeoff() {
+    let cfg = test_cfg("fig4");
+    let s = experiments::figure4(&cfg).unwrap();
+    assert!(s.contains("τ=25") || s.contains("τ=400"), "{s}");
+    let body = std::fs::read_to_string(format!("{}/fig4_tau.csv", cfg.out_dir)).unwrap();
+    assert!(body.lines().count() > 10);
+}
+
+#[test]
+fn fig5_subsample_written() {
+    let cfg = test_cfg("fig5");
+    let s = experiments::figure5(&cfg).unwrap();
+    assert!(s.contains("fraction=1"));
+    let body = std::fs::read_to_string(format!("{}/fig5_subsample.csv", cfg.out_dir)).unwrap();
+    assert!(body.lines().count() > 10);
+}

@@ -1,0 +1,216 @@
+//! Integration over the PJRT runtime: artifacts load, execute, and the
+//! XLA-backed DiSCO-F agrees with the native implementation — the proof
+//! that all three layers (Pallas kernel → jax graph → Rust coordinator)
+//! compose.
+//!
+//! These tests require `make artifacts`; they self-skip when the artifact
+//! directory is absent so `cargo test` works on a fresh checkout.
+
+use disco::algorithms::{run, AlgoKind, RunConfig};
+use disco::data::SyntheticConfig;
+use disco::linalg::ops;
+use disco::loss::{LossKind, Objective};
+use disco::net::CostModel;
+use disco::runtime::{artifact_dir, run_disco_f_xla, Engine, Tensor};
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::cpu(dir).expect("engine construction"))
+}
+
+/// Dense tiny dataset matching the registered (64, 128) artifact shape.
+fn tiny_dense(seed: u64) -> disco::data::Dataset {
+    SyntheticConfig::new("xla-tiny", 128, 64)
+        .label_noise(0.05)
+        .seed(seed)
+        .generate_dense()
+}
+
+#[test]
+fn engine_loads_and_reports_platform() {
+    let Some(engine) = engine_or_skip() else { return };
+    assert!(engine.registry().len() >= 40);
+    let platform = engine.platform().to_lowercase();
+    assert!(platform.contains("cpu") || platform.contains("host"), "{platform}");
+}
+
+#[test]
+fn hvp_artifact_matches_native_objective() {
+    let Some(engine) = engine_or_skip() else { return };
+    let ds = tiny_dense(1);
+    let loss = LossKind::Logistic.make();
+    let lambda = 0.05;
+    let obj = Objective::new(&ds.x, &ds.y, loss.as_ref(), lambda);
+    let mut rng = disco::util::prng::Xoshiro256pp::seed_from_u64(2);
+    let w: Vec<f64> = (0..64).map(|_| 0.3 * rng.normal()).collect();
+    let u: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+
+    // Native f64 HVP.
+    let want = obj.hvp(&w, &u);
+
+    // XLA path: margins → scalings → hvp artifact.
+    let x_t = Tensor::from_dense_row_major(&ds.x.to_dense());
+    let w_t = Tensor::from_f64(vec![64], &w);
+    let u_t = Tensor::from_f64(vec![64], &u);
+    let y_t = Tensor::from_f64(vec![128], &ds.y);
+    let z = engine
+        .execute("margins_64x128", &[&x_t, &w_t])
+        .unwrap()
+        .remove(0);
+    let s = engine
+        .execute("scalings_logistic_128", &[&z, &y_t])
+        .unwrap()
+        .remove(0);
+    let got = engine
+        .execute(
+            "hvp_64x128",
+            &[
+                &x_t,
+                &s,
+                &u_t,
+                &Tensor::scalar1(1.0 / 128.0),
+                &Tensor::scalar1(lambda),
+            ],
+        )
+        .unwrap()
+        .remove(0)
+        .to_f64();
+
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn gram_artifact_matches_native_gram() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut rng = disco::util::prng::Xoshiro256pp::seed_from_u64(3);
+    let d = 64usize;
+    let tau = 128usize;
+    let u: Vec<f64> = (0..d * tau).map(|_| rng.normal()).collect();
+    let u_t = Tensor::from_f64(vec![d, tau], &u);
+    let k = engine
+        .execute(&format!("gram_{d}x{tau}"), &[&u_t])
+        .unwrap()
+        .remove(0);
+    assert_eq!(k.shape, vec![tau, tau]);
+    // Spot-check entries against a straightforward double loop (row-major
+    // U: u[i*tau + a]).
+    for (a, b) in [(0usize, 0usize), (3, 7), (100, 100), (127, 1)] {
+        let mut want = 0.0;
+        for i in 0..d {
+            want += u[i * tau + a] * u[i * tau + b];
+        }
+        let got = k.data[a * tau + b] as f64;
+        assert!(
+            (got - want).abs() < 1e-2 * (1.0 + want.abs()),
+            "K[{a},{b}]: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn shape_mismatch_rejected_before_pjrt() {
+    let Some(engine) = engine_or_skip() else { return };
+    let bad = Tensor::from_f64(vec![63], &vec![0.0; 63]);
+    let x_t = Tensor::from_f64(vec![64, 128], &vec![0.0; 64 * 128]);
+    let err = engine.execute("margins_64x128", &[&x_t, &bad]);
+    assert!(err.is_err());
+    assert!(engine.execute("nonexistent_artifact", &[]).is_err());
+}
+
+#[test]
+fn xla_disco_f_converges_and_matches_native() {
+    let Some(engine) = engine_or_skip() else { return };
+    let ds = tiny_dense(4);
+    let mut cfg = RunConfig::new(AlgoKind::DiscoF, LossKind::Logistic, 1e-2);
+    cfg.m = 4; // shards 16×128, registered shape
+    cfg.tau = 32;
+    cfg.grad_tol = 1e-5; // f32 artifacts: don't demand f64 tolerances
+    cfg.max_outer = 60;
+    cfg.cost = CostModel::zero();
+    let xla_res = run_disco_f_xla(&ds, &cfg, &engine).expect("xla run");
+    assert!(
+        xla_res.converged,
+        "XLA DiSCO-F stalled at {:e}",
+        xla_res.final_grad_norm()
+    );
+
+    let native = run(&ds, &cfg);
+    assert!(native.converged);
+    // Same optimum (f32 vs f64 tolerance).
+    let mut diff = vec![0.0; ds.dim()];
+    ops::sub(&xla_res.w, &native.w, &mut diff);
+    assert!(
+        ops::norm2(&diff) < 1e-3 * (1.0 + ops::norm2(&native.w)),
+        "‖w_xla − w_native‖ = {:e}",
+        ops::norm2(&diff)
+    );
+}
+
+#[test]
+fn quadratic_loss_artifacts_work_too() {
+    let Some(engine) = engine_or_skip() else { return };
+    let ds = tiny_dense(5);
+    let mut cfg = RunConfig::new(AlgoKind::DiscoF, LossKind::Quadratic, 1e-2);
+    cfg.m = 4;
+    cfg.tau = 32;
+    cfg.grad_tol = 1e-4;
+    cfg.max_outer = 40;
+    cfg.cost = CostModel::zero();
+    let res = run_disco_f_xla(&ds, &cfg, &engine).expect("xla run");
+    assert!(res.converged, "stalled at {:e}", res.final_grad_norm());
+}
+
+#[test]
+fn corrupt_artifact_fails_cleanly() {
+    // Failure injection: a manifest entry pointing at garbage HLO must
+    // produce a typed error, not a crash, and must not poison the engine.
+    let dir = std::env::temp_dir().join("disco_corrupt_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"bad": {"file": "bad.hlo.txt",
+                     "inputs": [{"shape": [2], "dtype": "f32"}],
+                     "outputs": [{"shape": [2], "dtype": "f32"}]},
+            "missing": {"file": "not_there.hlo.txt",
+                     "inputs": [{"shape": [2], "dtype": "f32"}],
+                     "outputs": [{"shape": [2], "dtype": "f32"}]}}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "this is not HLO at all {{{").unwrap();
+    let engine = Engine::cpu(&dir).expect("engine builds from manifest alone");
+    let t = Tensor::from_f64(vec![2], &[1.0, 2.0]);
+    assert!(engine.execute("bad", &[&t]).is_err(), "garbage HLO must error");
+    assert!(engine.execute("missing", &[&t]).is_err(), "missing file must error");
+    // Engine still usable afterwards for errors (no global poisoning).
+    assert!(engine.execute("bad", &[&t]).is_err());
+}
+
+#[test]
+fn xla_disco_f_records_are_wellformed() {
+    let Some(engine) = engine_or_skip() else { return };
+    let ds = tiny_dense(6);
+    let mut cfg = RunConfig::new(AlgoKind::DiscoF, LossKind::Logistic, 1e-2);
+    cfg.m = 4;
+    cfg.tau = 16;
+    cfg.grad_tol = 1e-4;
+    cfg.max_outer = 20;
+    cfg.cost = CostModel::default();
+    let res = run_disco_f_xla(&ds, &cfg, &engine).unwrap();
+    assert!(res.records.len() >= 2);
+    for w in res.records.windows(2) {
+        assert!(w[1].rounds > w[0].rounds);
+        assert!(w[1].sim_time >= w[0].sim_time);
+    }
+    // Per-node op counts: all nodes identical (the DiSCO-F claim).
+    for ops in &res.node_ops[1..] {
+        assert_eq!(ops.hvp, res.node_ops[0].hvp);
+        assert_eq!(ops.precond_solve, res.node_ops[0].precond_solve);
+    }
+}

@@ -1,0 +1,262 @@
+//! Property-based tests over the coordinator's core invariants, driven by
+//! the in-tree `util::prop` harness (offline proptest replacement):
+//!
+//! * partitioning (routing): shards are disjoint, covering, balanced, and
+//!   products decompose exactly across them;
+//! * collectives (state): ReduceAll/Broadcast/AllGather semantics under
+//!   random shapes and node counts;
+//! * solver algebra: Woodbury ≡ direct inverse, PCG solves SPD systems,
+//!   HVP linearity/symmetry, loss conjugacy (batching of the dual step).
+
+use disco::data::{balanced_ranges, Partition, SyntheticConfig};
+use disco::linalg::{lu_solve, ops, CscMatrix, DataMatrix, SquareMatrix};
+use disco::loss::{Logistic, Loss, Objective, Quadratic, SquaredHinge};
+use disco::net::{Cluster, CostModel};
+use disco::solvers::{pcg, IdentityPrecond, Woodbury};
+use disco::util::prop::{check, ensure, ensure_close, Gen};
+
+const CASES: usize = 40;
+
+#[test]
+fn prop_balanced_ranges_partition() {
+    check("balanced_ranges", 200, |g: &mut Gen| {
+        let parts = g.usize_in(1, 12);
+        let total = g.usize_in(parts, 5000);
+        let r = balanced_ranges(total, parts);
+        ensure(r.len() == parts, "part count")?;
+        ensure(r[0].0 == 0 && r.last().unwrap().1 == total, "coverage")?;
+        for w in r.windows(2) {
+            ensure(w[0].1 == w[1].0, "contiguity")?;
+        }
+        let sizes: Vec<usize> = r.iter().map(|(a, b)| b - a).collect();
+        ensure(
+            sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1,
+            "balance",
+        )
+    });
+}
+
+#[test]
+fn prop_partition_products_decompose() {
+    check("partition_products", CASES, |g: &mut Gen| {
+        let d = g.usize_in(4, 40);
+        let n = g.usize_in(4, 60);
+        let m = g.usize_in(1, d.min(n).min(6));
+        let ds = SyntheticConfig::new("p", n, d)
+            .density(g.f64_in(0.05, 0.5))
+            .seed(g.case_seed)
+            .generate();
+        let w = g.normal_vec(d);
+        let u = g.normal_vec(n);
+
+        // Feature partition: margins sum, X·u concatenates.
+        let pf = Partition::by_features(&ds, m);
+        let z_full = ds.x.at_mul(&w);
+        let mut z_sum = vec![0.0; n];
+        for shard in &pf.shards {
+            let (lo, hi) = shard.range;
+            let zj = shard.x.at_mul(&w[lo..hi]);
+            for (a, b) in z_sum.iter_mut().zip(zj.iter()) {
+                *a += *b;
+            }
+        }
+        for (a, b) in z_sum.iter().zip(z_full.iter()) {
+            ensure_close(*a, *b, 1e-10, "feature margins decomposition")?;
+        }
+
+        // Sample partition: Xᵀw concatenates, X·u sums... (X·u over column
+        // blocks: y = Σ_j X_j u_j with u sliced by samples).
+        let ps = Partition::by_samples(&ds, m);
+        let y_full = ds.x.a_mul(&u);
+        let mut y_sum = vec![0.0; d];
+        for shard in &ps.shards {
+            let (lo, hi) = shard.range;
+            let yj = shard.x.a_mul(&u[lo..hi]);
+            for (a, b) in y_sum.iter_mut().zip(yj.iter()) {
+                *a += *b;
+            }
+        }
+        for (a, b) in y_sum.iter().zip(y_full.iter()) {
+            ensure_close(*a, *b, 1e-10, "sample a_mul decomposition")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_collectives_semantics() {
+    check("collectives", 25, |g: &mut Gen| {
+        let m = g.usize_in(1, 6);
+        let k = g.usize_in(1, 200);
+        let data: Vec<Vec<f64>> = (0..m).map(|_| g.normal_vec(k)).collect();
+        let root = g.usize_in(0, m - 1);
+        let data_c = data.clone();
+        let run = Cluster::new(m).with_cost(CostModel::zero()).run(move |ctx| {
+            let mut v = data_c[ctx.rank].clone();
+            ctx.reduce_all(&mut v);
+            let mut b = data_c[ctx.rank].clone();
+            ctx.broadcast(root, &mut b);
+            let gathered = ctx.all_gather_concat(&data_c[ctx.rank][..1]);
+            (v, b, gathered)
+        });
+        let mut expect_sum = vec![0.0; k];
+        for dv in &data {
+            for (a, b) in expect_sum.iter_mut().zip(dv.iter()) {
+                *a += *b;
+            }
+        }
+        let expect_gather: Vec<f64> = data.iter().map(|dv| dv[0]).collect();
+        for (v, b, gathered) in &run.outputs {
+            for (a, e) in v.iter().zip(expect_sum.iter()) {
+                ensure_close(*a, *e, 1e-12, "reduce_all")?;
+            }
+            ensure(b == &data[root], "broadcast copies root")?;
+            ensure(gathered == &expect_gather, "all_gather order")?;
+        }
+        ensure(run.stats.reduce_all == 1 && run.stats.broadcast == 1, "round counts")
+    });
+}
+
+#[test]
+fn prop_woodbury_equals_direct_inverse() {
+    check("woodbury_direct", CASES, |g: &mut Gen| {
+        let d = g.usize_in(2, 24);
+        let k = g.usize_in(0, 30);
+        let cols: Vec<Vec<f64>> = (0..k).map(|_| g.normal_vec(d)).collect();
+        let weights: Vec<f64> = (0..k).map(|_| g.f64_in(0.0, 2.0)).collect();
+        let dreg = g.f64_in(0.05, 3.0);
+        let wb = Woodbury::new(d, &cols, &weights, dreg).map_err(|e| e.to_string())?;
+        let r = g.normal_vec(d);
+        let direct = lu_solve(&wb.dense(), &r).map_err(|e| e.to_string())?;
+        let fast = wb.apply(&r);
+        for (a, b) in fast.iter().zip(direct.iter()) {
+            ensure_close(*a, *b, 1e-7, "woodbury apply")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pcg_solves_random_spd() {
+    check("pcg_spd", CASES, |g: &mut Gen| {
+        let nn = g.usize_in(2, 30);
+        let mut a = SquareMatrix::zeros(nn);
+        // A = BBᵀ/n + cI.
+        let b: Vec<f64> = g.normal_vec(nn * nn);
+        let c = g.f64_in(0.05, 1.0);
+        for i in 0..nn {
+            for j in 0..nn {
+                let mut s = 0.0;
+                for kk in 0..nn {
+                    s += b[i * nn + kk] * b[j * nn + kk];
+                }
+                a.set(i, j, s / nn as f64 + if i == j { c } else { 0.0 });
+            }
+        }
+        let xtrue = g.normal_vec(nn);
+        let rhs = a.mul(&xtrue);
+        let res = pcg(&a, &rhs, &IdentityPrecond, 1e-11, 10 * nn);
+        ensure(res.converged, "pcg converged")?;
+        for (x, t) in res.v.iter().zip(xtrue.iter()) {
+            ensure_close(*x, *t, 1e-6, "pcg solution")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hvp_linear_symmetric_psd() {
+    check("hvp_algebra", CASES, |g: &mut Gen| {
+        let d = g.usize_in(3, 20);
+        let n = g.usize_in(4, 30);
+        let x = DataMatrix::Sparse(CscMatrix::rand_sparse(d, n, 0.4, g.rng()));
+        let y = g.labels(n);
+        let lambda = g.f64_in(0.01, 1.0);
+        let losses: [&dyn Loss; 3] = [&Quadratic, &Logistic, &SquaredHinge];
+        let loss = losses[g.usize_in(0, 2)];
+        let obj = Objective::new(&x, &y, loss, lambda);
+        let w = g.normal_vec(d);
+        let u = g.normal_vec(d);
+        let v = g.normal_vec(d);
+        let hu = obj.hvp(&w, &u);
+        let hv = obj.hvp(&w, &v);
+        // Symmetry.
+        ensure_close(ops::dot(&v, &hu), ops::dot(&u, &hv), 1e-9, "symmetry")?;
+        // Linearity.
+        let mut upv = vec![0.0; d];
+        for i in 0..d {
+            upv[i] = 2.0 * u[i] - 0.5 * v[i];
+        }
+        let h_upv = obj.hvp(&w, &upv);
+        for i in 0..d {
+            ensure_close(h_upv[i], 2.0 * hu[i] - 0.5 * hv[i], 1e-9, "linearity")?;
+        }
+        // PSD with the λ floor.
+        ensure(
+            ops::dot(&u, &hu) >= lambda * ops::norm2_sq(&u) - 1e-9,
+            "psd floor",
+        )
+    });
+}
+
+#[test]
+fn prop_sdca_step_never_decreases_dual() {
+    check("sdca_ascent", 100, |g: &mut Gen| {
+        let losses: [&dyn Loss; 3] = [&Quadratic, &Logistic, &SquaredHinge];
+        let loss = losses[g.usize_in(0, 2)];
+        let y = if g.bool() { 1.0 } else { -1.0 };
+        let z = g.f64_in(-3.0, 3.0);
+        let q = g.f64_in(0.01, 5.0);
+        // Feasible starting α per loss.
+        let alpha = match loss.name() {
+            "logistic" => y * g.f64_in(0.05, 0.95),
+            "squared_hinge" => y * g.f64_in(0.0, 2.0),
+            _ => g.f64_in(-2.0, 2.0),
+        };
+        let dual = |dd: f64| -> f64 {
+            let c = loss.conjugate(-(alpha + dd), y);
+            if !c.is_finite() {
+                return f64::NEG_INFINITY;
+            }
+            -c - dd * z - q * dd * dd / 2.0
+        };
+        let d0 = dual(0.0);
+        let delta = loss.sdca_delta(y, z, alpha, q);
+        let d1 = dual(delta);
+        ensure(d1.is_finite(), "step stays feasible")?;
+        ensure(d1 >= d0 - 1e-9, &format!("ascent: {d0} → {d1} ({})", loss.name()))
+    });
+}
+
+#[test]
+fn prop_disco_f_and_s_reach_same_optimum() {
+    // The headline end-to-end property, randomized over problem instances.
+    check("disco_f_vs_s", 8, |g: &mut Gen| {
+        let d = g.usize_in(16, 40);
+        let n = g.usize_in(40, 90);
+        let m = g.usize_in(2, 4);
+        let ds = SyntheticConfig::new("p", n, d)
+            .density(0.25)
+            .seed(g.case_seed)
+            .generate();
+        use disco::algorithms::{run, AlgoKind, RunConfig};
+        use disco::loss::LossKind;
+        let mut base = RunConfig::new(AlgoKind::DiscoF, LossKind::Logistic, 0.01);
+        base.m = m;
+        base.tau = 16;
+        base.grad_tol = 1e-8;
+        base.max_outer = 100;
+        base.cost = CostModel::zero();
+        let rf = run(&ds, &base);
+        let mut cfg_s = base.clone();
+        cfg_s.algo = AlgoKind::DiscoS;
+        let rs = run(&ds, &cfg_s);
+        ensure(rf.converged && rs.converged, "both converge")?;
+        let mut diff = vec![0.0; d];
+        ops::sub(&rf.w, &rs.w, &mut diff);
+        ensure(
+            ops::norm2(&diff) <= 1e-5 * (1.0 + ops::norm2(&rs.w)),
+            &format!("optima differ by {:e}", ops::norm2(&diff)),
+        )
+    });
+}
