@@ -2,18 +2,27 @@
 //!
 //! ```bash
 //! cargo bench --bench bench_hotpaths
+//! DISCO_BENCH_SMOKE=1 cargo bench --bench bench_hotpaths   # CI: 1 rep
 //! ```
 //! Appends to results/bench_hotpaths.csv.
+//!
+//! The sparse HVP section is an explicit A/B: the unfused CSC
+//! scatter pipeline (`hvp … unfused-csc`, the pre-hybrid baseline) versus
+//! the fused hybrid CSC/CSR kernel (`hvp … fused-hybrid`), plus the raw
+//! `X·t` scatter-vs-gather comparison that explains the difference.
 
 use disco::data::SyntheticConfig;
-use disco::linalg::ops;
+use disco::linalg::{ops, CsrMatrix, DataMatrix, HvpKernel};
 use disco::loss::{Logistic, Objective};
 use disco::solvers::Woodbury;
 use disco::util::bench::{black_box, Bench};
 use disco::util::prng::Xoshiro256pp;
 
 fn main() {
-    let mut b = Bench::new();
+    // CI smoke mode: a single un-calibrated rep per bench (seconds, not
+    // minutes) — enough to prove every kernel still runs.
+    let smoke = std::env::var_os("DISCO_BENCH_SMOKE").is_some();
+    let mut b = if smoke { Bench::once() } else { Bench::new() };
 
     // --- BLAS-1 kernels ---
     let n = 1 << 16;
@@ -26,7 +35,8 @@ fn main() {
         black_box(y[0])
     });
 
-    // --- sparse HVP (the PCG step 4 hot spot) ---
+    // --- sparse HVP (the PCG step 4 hot spot): unfused CSC vs fused
+    //     hybrid, serial vs intra-node threads ---
     for (name, nsamples, d, density) in [
         ("sparse-rcv1s-shard", 4096usize, 2048usize, 0.008),
         ("sparse-news20s-shard", 512, 16384, 0.003),
@@ -43,10 +53,55 @@ fn main() {
         let mut scratch = vec![0.0; nsamples];
         let mut out = vec![0.0; d];
         let flops = 4.0 * ds.nnz() as f64; // 2 passes × mul+add
-        b.run(&format!("hvp {name} ({nsamples}x{d})"), Some(flops), || {
+
+        // A: the pre-hybrid baseline (CSC gather + elementwise scale +
+        //    CSC scatter + epilogue sweep).
+        b.run(&format!("hvp {name} ({nsamples}x{d}) unfused-csc"), Some(flops), || {
             obj.hvp_with_scalings_into(&s, &u, &mut scratch, &mut out);
             black_box(out[0])
         });
+
+        // B: fused hybrid (CSC gather w/ fused scaling + CSR gather w/
+        //    fused epilogue). Mirror build cost is excluded — it is paid
+        //    once per shard, amortized over every PCG step of the run.
+        let kernel = HvpKernel::with_layout(&ds.x, true);
+        b.run(&format!("hvp {name} ({nsamples}x{d}) fused-hybrid"), Some(flops), || {
+            obj.hvp_with_kernel_into(&kernel, &s, &u, &mut scratch, &mut out);
+            black_box(out[0])
+        });
+
+        // B2: fused, CSC-only (no mirror) — isolates the fusion win from
+        //     the layout win.
+        let kernel_csc = HvpKernel::with_layout(&ds.x, false);
+        b.run(&format!("hvp {name} ({nsamples}x{d}) fused-csc"), Some(flops), || {
+            obj.hvp_with_kernel_into(&kernel_csc, &s, &u, &mut scratch, &mut out);
+            black_box(out[0])
+        });
+
+        // C: fused hybrid with 2 intra-node threads.
+        let kernel2 = HvpKernel::with_layout(&ds.x, true).with_threads(2);
+        b.run(&format!("hvp {name} ({nsamples}x{d}) fused-hybrid-2t"), Some(flops), || {
+            obj.hvp_with_kernel_into(&kernel2, &s, &u, &mut scratch, &mut out);
+            black_box(out[0])
+        });
+
+        // Raw X·t: the scatter-vs-gather mechanism behind the A/B.
+        if let DataMatrix::Sparse(csc) = &ds.x {
+            let csr = CsrMatrix::from_csc(csc);
+            // Offset keeps every t[j] nonzero: the CSC scatter skips
+            // exact-zero columns, which would waive ~1/7 of its work and
+            // skew the scatter-vs-gather A/B.
+            let t: Vec<f64> = (0..nsamples).map(|i| ((i * 13) % 7) as f64 - 3.25).collect();
+            let pass_flops = 2.0 * ds.nnz() as f64;
+            b.run(&format!("a_mul {name} csc-scatter"), Some(pass_flops), || {
+                csc.a_mul_into(&t, &mut out);
+                black_box(out[0])
+            });
+            b.run(&format!("a_mul {name} csr-gather"), Some(pass_flops), || {
+                csr.a_mul_into(&t, &mut out);
+                black_box(out[0])
+            });
+        }
     }
 
     // Dense HVP at the XLA artifact shape.

@@ -66,32 +66,31 @@ fn node_main(
     let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed.wrapping_add(ctx.rank as u64 * 104729));
     let mut local = SdcaLocal::new(x, y, loss, cfg.lambda, n, cfg.m as f64);
     let mut z = vec![0.0; n_local];
+    let mut g_scal = vec![0.0; n_local];
+    // Gradient slice + objective piece bundled in one metrics message.
+    let mut gplus = vec![0.0; d + 1];
 
     for outer in 0..cfg.max_outer {
         // ---- metrics: global gradient norm + objective (metrics channel,
         // CoCoA+ itself never forms the gradient) ----
-        let (mut gplus, data_f) = ctx.compute("metrics", || {
+        ctx.compute("metrics", || {
             x.at_mul_into(&w, &mut z);
-            let g_scal: Vec<f64> = z
-                .iter()
-                .zip(y.iter())
-                .map(|(zi, yi)| loss.deriv(*zi, *yi))
-                .collect();
-            let mut g = x.a_mul(&g_scal);
-            ops::scale(1.0 / n as f64, &mut g);
+            for i in 0..n_local {
+                g_scal[i] = loss.deriv(z[i], y[i]);
+            }
+            x.a_mul_into(&g_scal, &mut gplus[..d]);
+            ops::scale(1.0 / n as f64, &mut gplus[..d]);
             let f: f64 = z
                 .iter()
                 .zip(y.iter())
                 .map(|(zi, yi)| loss.value(*zi, *yi))
                 .sum();
-            g.push(f / n as f64);
-            (g, ())
+            gplus[d] = f / n as f64;
         });
-        let _ = data_f;
         ctx.metric_reduce_all(&mut gplus);
-        let data_sum = gplus.pop().unwrap();
-        ops::axpy(cfg.lambda, &w, &mut gplus);
-        let grad_norm = ops::norm2(&gplus);
+        let data_sum = gplus[d];
+        ops::axpy(cfg.lambda, &w, &mut gplus[..d]);
+        let grad_norm = ops::norm2(&gplus[..d]);
         let fval = data_sum + 0.5 * cfg.lambda * ops::norm2_sq(&w);
 
         recorder.push(ctx, outer, grad_norm, fval, 0);

@@ -77,26 +77,26 @@ fn node_main(
         .fold(0.0, f64::max);
 
     let mut z = vec![0.0; n_local];
+    let mut g_scal = vec![0.0; n_local];
+    let mut grad_local = vec![0.0; d];
 
     for outer in 0..cfg.max_outer {
         // ---- local gradient of f_j at w_k (includes λw: f_j has its own
         // regularizer, Eq. (4)) and the global gradient (ReduceAll) ----
-        let (grad_local, data_f) = ctx.compute("gradient", || {
+        let data_f = ctx.compute("gradient", || {
             x.at_mul_into(&w, &mut z);
-            let g_scal: Vec<f64> = z
-                .iter()
-                .zip(y.iter())
-                .map(|(zi, yi)| loss.deriv(*zi, *yi))
-                .collect();
-            let mut g = x.a_mul(&g_scal);
-            ops::scale(inv_nl, &mut g);
-            ops::axpy(cfg.lambda, &w, &mut g);
+            for i in 0..n_local {
+                g_scal[i] = loss.deriv(z[i], y[i]);
+            }
+            x.a_mul_into(&g_scal, &mut grad_local);
+            ops::scale(inv_nl, &mut grad_local);
+            ops::axpy(cfg.lambda, &w, &mut grad_local);
             let f: f64 = z
                 .iter()
                 .zip(y.iter())
                 .map(|(zi, yi)| loss.value(*zi, *yi))
                 .sum();
-            (g, f / n as f64)
+            f / n as f64
         });
         // Global gradient = (1/m) Σ_j ∇f_j (each f_j carries λw).
         let mut grad = grad_local.clone();

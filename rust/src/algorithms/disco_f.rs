@@ -18,7 +18,7 @@ use crate::algorithms::common::{
 };
 use crate::algorithms::{OpCounts, RunConfig, RunResult};
 use crate::data::{Dataset, Partition};
-use crate::linalg::ops;
+use crate::linalg::{ops, HvpKernel};
 use crate::loss::Loss;
 use crate::net::{Cluster, NodeCtx};
 use crate::solvers::woodbury::{Woodbury, WoodburyFactory};
@@ -100,8 +100,12 @@ fn node_main(
     let tau_eff = precond_factory.rank();
     let mut cached_precond: Option<Woodbury> = None;
 
-    // Preallocated buffers.
-    let mut z; // margins ℝⁿ (allocated by reduce)
+    // Fused hybrid HVP kernel for this feature slice (d_j × n): the tall
+    // sparse shards of DiSCO-F are exactly where the CSR mirror pays.
+    let kernel = HvpKernel::new(x).with_threads(cfg.node_threads);
+
+    // Preallocated buffers; `z` and `tn` double as ReduceAll buffers.
+    let mut z = vec![0.0; n]; // margins ℝⁿ
     let mut g_scal = vec![0.0; n];
     let mut grad = vec![0.0; dj];
     let mut tn = vec![0.0; n];
@@ -114,19 +118,17 @@ fn node_main(
 
     for outer in 0..cfg.max_outer {
         // ---- margins: z = Σ_j (X^[j])ᵀ w^[j] — ONE ℝⁿ ReduceAll ----
-        let mut z_local = ctx.compute("margins", || x.at_mul(&w));
-        ctx.reduce_all(&mut z_local);
-        z = z_local;
+        ctx.compute("margins", || kernel.up_plain_into(x, &w, &mut z));
+        ctx.reduce_all(&mut z);
 
         // ---- local gradient slice (no communication) ----
         let (gnorm, fval) = ctx.compute("gradient", || {
             for i in 0..n {
                 g_scal[i] = loss.deriv(z[i], y[i]);
             }
-            x.a_mul_into(&g_scal, &mut grad);
-            for (gi, wi) in grad.iter_mut().zip(w.iter()) {
-                *gi = *gi * inv_n + cfg.lambda * *wi;
-            }
+            // grad = (1/n)·X g + λw — fused epilogue (CSR gather when
+            // mirrored).
+            kernel.down_into(x, &g_scal, inv_n, cfg.lambda, &w, &mut grad);
             let data_f: f64 = z
                 .iter()
                 .zip(y.iter())
@@ -179,17 +181,15 @@ fn node_main(
 
         while rnorm > eps && pcg_iters < cfg.max_pcg {
             // (Hu)^[j]: ReduceAll ℝⁿ of (X^[j])ᵀu^[j], then local products.
-            let mut tn_local = ctx.compute("hvp_up", || x.at_mul(&u));
-            ctx.reduce_all(&mut tn_local);
-            tn = tn_local;
+            // Up pass writes straight into the reduce buffer; down pass is
+            // the fused gather with the (1/h)·(…)+λu epilogue folded in.
+            ctx.compute("hvp_up", || kernel.up_plain_into(x, &u, &mut tn));
+            ctx.reduce_all(&mut tn);
             ctx.compute("hvp_down", || {
                 for i in 0..n {
                     tn[i] *= s_hess[i];
                 }
-                x.a_mul_into(&tn, &mut hu);
-                for (hi, ui) in hu.iter_mut().zip(u.iter()) {
-                    *hi = *hi * inv_div + cfg.lambda * *ui;
-                }
+                kernel.down_into(x, &tn, inv_div, cfg.lambda, &u, &mut hu);
             });
             ops_count.hvp += 1;
 
@@ -197,6 +197,14 @@ fn node_main(
             let uhu_local = ops::dot(&u, &hu);
             ops_count.dot += 1;
             let uhu = ctx.reduce_all_scalar(uhu_local);
+            if uhu <= 0.0 {
+                // Curvature vanished along u (λ=0 with a flat-region loss,
+                // or numerical breakdown): α = rs/uhu would poison the
+                // iterate with inf/NaN. Same guard as the reference
+                // `pcg_into`; uhu is a reduced scalar, so every node
+                // breaks together (SPMD-safe).
+                break;
+            }
             let alpha = rs / uhu;
 
             ctx.compute("pcg_update", || {
@@ -215,12 +223,20 @@ fn node_main(
             let rn2_local = ops::norm2_sq(&r);
             ops_count.dot += 3;
             let (rs_new, rn2) = ctx.reduce_all_scalar2(rs_new_local, rn2_local);
+            rnorm = rn2.sqrt();
+            pcg_iters += 1;
+            if rs_new == 0.0 {
+                // Preconditioned residual vanished exactly (either done,
+                // or a degenerate block precondition) — β would be 0/0
+                // next; break with the current iterate. rs_new is a
+                // reduced scalar, so every node takes this branch
+                // together (SPMD-safe).
+                break;
+            }
             let beta = rs_new / rs;
             rs = rs_new;
-            rnorm = rn2.sqrt();
             ctx.compute("dir_update", || ops::axpby(1.0, &s_dir, beta, &mut u));
             ops_count.axpy += 1;
-            pcg_iters += 1;
         }
 
         // ---- damped step: δ² = Σ_j ⟨v,Hv⟩ (scalar), local update ----

@@ -24,7 +24,7 @@ use crate::algorithms::common::{
 };
 use crate::algorithms::{OpCounts, RunConfig, RunResult};
 use crate::data::{Dataset, Partition};
-use crate::linalg::ops;
+use crate::linalg::{ops, HvpKernel};
 use crate::loss::Loss;
 use crate::net::{Cluster, NodeCtx};
 use crate::solvers::sag;
@@ -165,10 +165,18 @@ fn node_main(
     };
     let mut cached_precond: Option<MasterPrecond> = None;
 
+    // Fused hybrid HVP kernel for this shard (CSR mirror per heuristic),
+    // built once and reused by every PCG step of every outer iteration.
+    let hvp_kernel = HvpKernel::new(x).with_threads(cfg.node_threads);
+
     let mut z = vec![0.0; n_local];
     let mut g_scal = vec![0.0; n_local];
     let mut tn = vec![0.0; n_local];
-    let mut hu_local = vec![0.0; d];
+    // HVP output; doubles as the ReduceAll buffer (summed in place).
+    let mut hu = vec![0.0; d];
+    let mut grad = vec![0.0; d];
+    // Broadcast buffer for u_t plus the continue flag (d+1 doubles).
+    let mut ubuf = vec![0.0; d + 1];
     // Master-only PCG state (allocated on all ranks for simplicity; workers
     // never touch it).
     let mut r = vec![0.0; d];
@@ -184,14 +192,13 @@ fn node_main(
         w = wbuf;
 
         // ---- local gradient + ReduceAll (1 ℝᵈ round) ----
-        let mut grad = ctx.compute("gradient", || {
+        ctx.compute("gradient", || {
             x.at_mul_into(&w, &mut z);
             for i in 0..n_local {
                 g_scal[i] = loss.deriv(z[i], y[i]);
             }
-            let mut g = x.a_mul(&g_scal);
-            ops::scale(1.0 / n as f64, &mut g);
-            g
+            x.a_mul_into(&g_scal, &mut grad);
+            ops::scale(1.0 / n as f64, &mut grad);
         });
         ctx.reduce_all(&mut grad);
         ops::axpy(cfg.lambda, &w, &mut grad); // every node adds λw
@@ -277,40 +284,34 @@ fn node_main(
             ops_count.dot += 1;
         }
         let mut pcg_iters = 0usize;
+        // Master-side breakdown flag: set when the preconditioned residual
+        // vanishes exactly (β would be 0/0 on the next step).
+        let mut breakdown = false;
 
         loop {
             // Master decides continuation; flag rides with the broadcast of
             // u (d+1 doubles — one ℝᵈ-sized round, paper Table 4).
             let cont = if is_master {
-                rnorm > eps && pcg_iters < cfg.max_pcg
+                !breakdown && rnorm > eps && pcg_iters < cfg.max_pcg
             } else {
                 false
             };
-            let mut ubuf = if is_master {
-                let mut b = u.clone();
-                b.push(if cont { 1.0 } else { 0.0 });
-                b
-            } else {
-                vec![0.0; d + 1]
-            };
+            if is_master {
+                ubuf[..d].copy_from_slice(&u);
+                ubuf[d] = if cont { 1.0 } else { 0.0 };
+            }
             ctx.broadcast(MASTER, &mut ubuf);
-            let cont = *ubuf.last().unwrap() > 0.5;
+            let cont = ubuf[d] > 0.5;
             if !cont {
                 break;
             }
-            ubuf.pop();
-            let u_t = ubuf;
+            let u_t = &ubuf[..d];
 
-            // Every node: local Hessian product (the balanced part).
-            let mut hu = ctx.compute("hvp", || {
-                x.at_mul_into(&u_t, &mut tn);
-                for i in 0..n_local {
-                    tn[i] *= s_hess[i];
-                }
-                x.a_mul_into(&tn, &mut hu_local);
-                let mut out = hu_local.clone();
-                ops::scale(inv_div, &mut out);
-                out
+            // Every node: local Hessian product (the balanced part) —
+            // one fused two-sweep kernel call, scratch reused across
+            // iterations, `hu` doubling as the ReduceAll buffer.
+            ctx.compute("hvp", || {
+                hvp_kernel.apply(x, &s_hess, u_t, inv_div, 0.0, &mut tn, &mut hu);
             });
             ops_count.hvp += 1;
             ctx.reduce_all(&mut hu);
@@ -318,23 +319,42 @@ fn node_main(
             // Master-only vector operations (workers fall through to the
             // next broadcast and wait — idle time in the Fig. 2 sense).
             if is_master {
-                ctx.compute("pcg_update", || {
-                    ops::axpy(cfg.lambda, &u_t, &mut hu); // + λu
-                    let uhu = ops::dot(&u_t, &hu);
+                let completed = ctx.compute("pcg_update", || {
+                    ops::axpy(cfg.lambda, u_t, &mut hu); // + λu
+                    let uhu = ops::dot(u_t, &hu);
+                    if uhu <= 0.0 {
+                        // Curvature vanished along u — α = rs/uhu would
+                        // poison the iterate (same guard as `pcg_into`).
+                        breakdown = true;
+                        return false;
+                    }
                     let alpha = rs / uhu;
-                    ops::axpy(alpha, &u_t, &mut v);
+                    ops::axpy(alpha, u_t, &mut v);
                     ops::axpy(alpha, &hu, &mut hv);
                     ops::axpy(-alpha, &hu, &mut r);
                     precond.apply(&r, &mut s_dir);
                     let rs_new = ops::dot(&r, &s_dir);
+                    rnorm = ops::norm2(&r);
+                    if rs_new == 0.0 {
+                        // β = rs_new/rs would be 0/0 next step — stop
+                        // cleanly with the current iterate.
+                        breakdown = true;
+                        return true;
+                    }
                     let beta = rs_new / rs;
                     rs = rs_new;
                     ops::axpby(1.0, &s_dir, beta, &mut u);
-                    rnorm = ops::norm2(&r);
+                    true
                 });
-                ops_count.axpy += 4;
-                ops_count.dot += 4;
-                ops_count.precond_solve += 1;
+                if completed {
+                    ops_count.axpy += 4;
+                    ops_count.dot += 4;
+                    ops_count.precond_solve += 1;
+                } else {
+                    // uhu breakdown: only the λu axpy and one dot ran.
+                    ops_count.axpy += 1;
+                    ops_count.dot += 1;
+                }
             }
             pcg_iters += 1;
         }

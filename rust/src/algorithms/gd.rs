@@ -65,25 +65,25 @@ fn node_main(
 
     let mut w = vec![0.0; d];
     let mut z = vec![0.0; n_local];
+    let mut g_scal = vec![0.0; n_local];
+    let mut grad = vec![0.0; d];
     let mut recorder = Recorder::new(ctx.rank);
     let mut converged = false;
 
     for outer in 0..cfg.max_outer {
-        let (mut grad, data_f) = ctx.compute("gradient", || {
+        let data_f = ctx.compute("gradient", || {
             x.at_mul_into(&w, &mut z);
-            let g_scal: Vec<f64> = z
-                .iter()
-                .zip(y.iter())
-                .map(|(zi, yi)| loss.deriv(*zi, *yi))
-                .collect();
-            let mut g = x.a_mul(&g_scal);
-            ops::scale(1.0 / n as f64, &mut g);
+            for i in 0..n_local {
+                g_scal[i] = loss.deriv(z[i], y[i]);
+            }
+            x.a_mul_into(&g_scal, &mut grad);
+            ops::scale(1.0 / n as f64, &mut grad);
             let f: f64 = z
                 .iter()
                 .zip(y.iter())
                 .map(|(zi, yi)| loss.value(*zi, *yi))
                 .sum();
-            (g, f / n as f64)
+            f / n as f64
         });
         ctx.reduce_all(&mut grad);
         ops::axpy(cfg.lambda, &w, &mut grad);

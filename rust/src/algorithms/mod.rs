@@ -104,6 +104,10 @@ pub struct RunConfig {
     /// (ablation of the paper's load-balancing theme; see
     /// `data::Partition::by_features_balanced`).
     pub balanced_partition: bool,
+    /// Intra-node threads for the HVP kernels (1 = serial). Each simulated
+    /// node fans its gather passes over this many OS threads with
+    /// nnz-balanced chunks — spare-core parallelism orthogonal to `m`.
+    pub node_threads: usize,
     pub seed: u64,
     pub cost: CostModel,
     pub trace: bool,
@@ -132,6 +136,7 @@ impl RunConfig {
             grad_tol: 1e-9,
             hessian_fraction: 1.0,
             balanced_partition: false,
+            node_threads: 1,
             seed: 42,
             cost: CostModel::default(),
             trace: false,

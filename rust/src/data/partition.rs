@@ -71,6 +71,9 @@ pub struct Partition {
 
 impl Partition {
     /// Split by samples (columns): node j gets `X[:, r_j]`, `y[r_j]`.
+    /// Sparse shards are zero-copy views sharing the dataset's nonzero
+    /// buffers (see `CscMatrix::col_block`) — partitioning costs O(m·n̄)
+    /// pointer work, not O(nnz) copies.
     pub fn by_samples(ds: &Dataset, m: usize) -> Partition {
         let ranges = balanced_ranges(ds.nsamples(), m);
         let shards = ranges
@@ -277,6 +280,31 @@ mod tests {
             }
         }
         assert_eq!(row, ds.dim());
+    }
+
+    #[test]
+    fn sample_shards_are_zero_copy_views() {
+        let ds = SyntheticConfig::new("t", 40, 12).seed(3).generate();
+        let p = Partition::by_samples(&ds, 4);
+        let full = match &ds.x {
+            DataMatrix::Sparse(sp) => sp,
+            _ => panic!("synthetic data is sparse"),
+        };
+        for shard in &p.shards {
+            match &shard.x {
+                DataMatrix::Sparse(blk) => {
+                    assert!(
+                        blk.shares_storage_with(full),
+                        "node {} shard deep-copied its nonzeros",
+                        shard.node
+                    );
+                }
+                _ => panic!("sparse dataset must shard sparsely"),
+            }
+        }
+        // nnz is partitioned exactly across the views.
+        let total: usize = p.shards.iter().map(|s| s.x.nnz()).sum();
+        assert_eq!(total, ds.x.nnz());
     }
 
     #[test]

@@ -1,0 +1,303 @@
+//! Compressed sparse row (CSR) mirror of a CSC data matrix.
+//!
+//! The CSC layout makes `Xᵀu` a gather but `X·t` a scatter, and the
+//! scatter is the store-port-bound half of every Hessian-vector product
+//! (see the §Perf note in [`crate::linalg::sparse`]). Mirroring a shard
+//! into CSR once — O(nnz), done at partition time, amortized over every
+//! PCG step of every outer iteration — turns `X·t` into a gather as well:
+//!
+//! * `X·t`  — gather:  `y[i] = Σ_k vals[k] · t[cols[k]]`
+//! * `Xᵀu`  — scatter: `t[cols[k]] += vals[k] · u[i]` (fallback only)
+//!
+//! Rows are independent in the gather, so the intra-node parallel variant
+//! chunks rows by nnz weight and writes disjoint output slices without
+//! synchronization ([`CsrMatrix::a_mul_axpby_into_par`]).
+
+use crate::linalg::ops;
+use crate::linalg::sparse::CscMatrix;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    nrows: usize,
+    ncols: usize,
+    /// `rowptr[i]..rowptr[i+1]` indexes `colidx`/`values` for row `i`.
+    rowptr: Vec<usize>,
+    colidx: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Transpose-free conversion: one counting pass + one placement pass,
+    /// O(nnz). Column indices within each row come out strictly increasing
+    /// because columns are swept in order.
+    pub fn from_csc(csc: &CscMatrix) -> Self {
+        let nrows = csc.nrows();
+        let ncols = csc.ncols();
+        assert!(ncols <= u32::MAX as usize, "column index overflows u32");
+        let nnz = csc.nnz();
+        let mut rowptr = vec![0usize; nrows + 1];
+        for j in 0..ncols {
+            let (rows, _) = csc.col(j);
+            for r in rows {
+                rowptr[*r as usize + 1] += 1;
+            }
+        }
+        for i in 0..nrows {
+            rowptr[i + 1] += rowptr[i];
+        }
+        let mut colidx = vec![0u32; nnz];
+        let mut values = vec![0.0f64; nnz];
+        let mut next = rowptr.clone();
+        for j in 0..ncols {
+            let (rows, vals) = csc.col(j);
+            for (r, v) in rows.iter().zip(vals.iter()) {
+                let slot = next[*r as usize];
+                colidx[slot] = j as u32;
+                values[slot] = *v;
+                next[*r as usize] += 1;
+            }
+        }
+        Self {
+            nrows,
+            ncols,
+            rowptr,
+            colidx,
+            values,
+        }
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Sparse row `i` as (cols, values) slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let lo = self.rowptr[i];
+        let hi = self.rowptr[i + 1];
+        (&self.colidx[lo..hi], &self.values[lo..hi])
+    }
+
+    /// `y ← X t` (gather, one [`ops::sparse_dot`] per row).
+    pub fn a_mul_into(&self, t: &[f64], y: &mut [f64]) {
+        assert_eq!(t.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            y[i] = ops::sparse_dot(cols, vals, t);
+        }
+    }
+
+    /// Fused pass 2 of the HVP pipeline: `y ← a·(X t) + b·u` — the 1/n
+    /// scaling and the λu regularizer term ride the gather epilogue, so no
+    /// separate elementwise sweep over `y` remains.
+    pub fn a_mul_axpby_into(&self, t: &[f64], a: f64, b: f64, u: &[f64], y: &mut [f64]) {
+        assert_eq!(t.len(), self.ncols);
+        assert_eq!(u.len(), self.nrows);
+        assert_eq!(y.len(), self.nrows);
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            y[i] = a * ops::sparse_dot(cols, vals, t) + b * u[i];
+        }
+    }
+
+    /// Parallel [`CsrMatrix::a_mul_axpby_into`]: rows chunked by nnz
+    /// weight, each thread writing its disjoint slice of `y`.
+    pub fn a_mul_axpby_into_par(
+        &self,
+        t: &[f64],
+        a: f64,
+        b: f64,
+        u: &[f64],
+        y: &mut [f64],
+        threads: usize,
+    ) {
+        assert_eq!(t.len(), self.ncols);
+        assert_eq!(u.len(), self.nrows);
+        assert_eq!(y.len(), self.nrows);
+        if threads <= 1 || self.nrows < 2 {
+            return self.a_mul_axpby_into(t, a, b, u, y);
+        }
+        let ranges = ops::balanced_weight_ranges(&self.rowptr, threads);
+        let (last, head) = ranges.split_last().expect("ranges nonempty");
+        std::thread::scope(|scope| {
+            let mut rest: &mut [f64] = y;
+            for &(lo, hi) in head {
+                let (chunk, tail) = rest.split_at_mut(hi - lo);
+                rest = tail;
+                scope.spawn(move || self.gather_rows_range(lo, hi, t, a, b, u, chunk));
+            }
+            // Last chunk on the calling thread (spawn N−1, not N).
+            self.gather_rows_range(last.0, last.1, t, a, b, u, rest);
+        });
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn gather_rows_range(
+        &self,
+        lo: usize,
+        hi: usize,
+        t: &[f64],
+        a: f64,
+        b: f64,
+        u: &[f64],
+        out: &mut [f64],
+    ) {
+        for i in lo..hi {
+            let (cols, vals) = self.row(i);
+            out[i - lo] = a * ops::sparse_dot(cols, vals, t) + b * u[i];
+        }
+    }
+
+    /// `t ← Xᵀ u` (scatter; completeness/fallback — the hybrid kernel uses
+    /// the CSC side for this pass, where it is a gather).
+    pub fn at_mul_into(&self, u: &[f64], t: &mut [f64]) {
+        assert_eq!(u.len(), self.nrows);
+        assert_eq!(t.len(), self.ncols);
+        for v in t.iter_mut() {
+            *v = 0.0;
+        }
+        for i in 0..self.nrows {
+            let ui = u[i];
+            if ui == 0.0 {
+                continue;
+            }
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals.iter()) {
+                t[*c as usize] += *v * ui;
+            }
+        }
+    }
+
+    pub fn a_mul(&self, t: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows];
+        self.a_mul_into(t, &mut y);
+        y
+    }
+
+    pub fn at_mul(&self, u: &[f64]) -> Vec<f64> {
+        let mut t = vec![0.0; self.ncols];
+        self.at_mul_into(u, &mut t);
+        t
+    }
+
+    /// Dense materialization (tests only).
+    pub fn to_dense(&self) -> crate::linalg::dense::DenseMatrix {
+        let mut m = crate::linalg::dense::DenseMatrix::zeros(self.nrows, self.ncols);
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals.iter()) {
+                m.set(i, *c as usize, *v);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256pp;
+
+    #[test]
+    fn from_csc_round_trips_through_dense() {
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let csc = CscMatrix::rand_sparse(14, 11, 0.3, &mut rng);
+        let csr = CsrMatrix::from_csc(&csc);
+        assert_eq!(csr.nnz(), csc.nnz());
+        assert_eq!(csr.to_dense(), csc.to_dense());
+        // Column indices strictly increase within each row.
+        for i in 0..csr.nrows() {
+            let (cols, _) = csr.row(i);
+            for w in cols.windows(2) {
+                assert!(w[0] < w[1], "row {i} not sorted: {cols:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn products_match_csc_and_dense() {
+        let mut rng = Xoshiro256pp::seed_from_u64(32);
+        let csc = CscMatrix::rand_sparse(20, 16, 0.25, &mut rng);
+        let csr = CsrMatrix::from_csc(&csc);
+        let de = csc.to_dense();
+        let u: Vec<f64> = (0..20).map(|i| (i as f64 * 0.23).sin()).collect();
+        let t: Vec<f64> = (0..16).map(|i| (i as f64 * 0.41).cos()).collect();
+        for ((a, b), c) in csr.a_mul(&t).iter().zip(csc.a_mul(&t)).zip(de.a_mul(&t)) {
+            assert!((a - b).abs() < 1e-12 && (a - c).abs() < 1e-12);
+        }
+        for ((a, b), c) in csr.at_mul(&u).iter().zip(csc.at_mul(&u)).zip(de.at_mul(&u)) {
+            assert!((a - b).abs() < 1e-12 && (a - c).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fused_axpby_matches_two_pass() {
+        let mut rng = Xoshiro256pp::seed_from_u64(33);
+        let csc = CscMatrix::rand_sparse(17, 13, 0.35, &mut rng);
+        let csr = CsrMatrix::from_csc(&csc);
+        let t: Vec<f64> = (0..13).map(|i| (i as f64 * 0.7).sin()).collect();
+        let u: Vec<f64> = (0..17).map(|i| (i as f64 * 0.3).cos()).collect();
+        let (a, b) = (0.125, 0.05);
+        let mut fused = vec![0.0; 17];
+        csr.a_mul_axpby_into(&t, a, b, &u, &mut fused);
+        let mut two_pass = csr.a_mul(&t);
+        for (yi, ui) in two_pass.iter_mut().zip(u.iter()) {
+            *yi = a * *yi + b * *ui;
+        }
+        assert_eq!(fused, two_pass);
+    }
+
+    #[test]
+    fn parallel_fused_matches_serial() {
+        let mut rng = Xoshiro256pp::seed_from_u64(34);
+        let csc = CscMatrix::rand_sparse(37, 21, 0.2, &mut rng);
+        let csr = CsrMatrix::from_csc(&csc);
+        let t: Vec<f64> = (0..21).map(|i| (i as f64 * 0.9).sin()).collect();
+        let u: Vec<f64> = (0..37).map(|i| i as f64 * 0.01).collect();
+        let mut serial = vec![0.0; 37];
+        csr.a_mul_axpby_into(&t, 0.5, 1e-3, &u, &mut serial);
+        for threads in [1, 2, 3, 5, 64] {
+            let mut par = vec![0.0; 37];
+            csr.a_mul_axpby_into_par(&t, 0.5, 1e-3, &u, &mut par, threads);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_rows_and_columns_handled() {
+        // 3 columns over 4 rows; row 2 empty, column 1 empty.
+        let csc = CscMatrix::from_columns(
+            4,
+            &[vec![(0, 1.0), (3, 2.0)], vec![], vec![(1, -1.0)]],
+        );
+        let csr = CsrMatrix::from_csc(&csc);
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.row(2), (&[][..], &[][..]));
+        assert_eq!(csr.to_dense(), csc.to_dense());
+        let y = csr.a_mul(&[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![1.0, -1.0, 0.0, 2.0]);
+        let t = csr.at_mul(&[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(t, vec![3.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn single_row_matrix() {
+        let csc = CscMatrix::from_columns(1, &[vec![(0, 2.0)], vec![], vec![(0, -3.0)]]);
+        let csr = CsrMatrix::from_csc(&csc);
+        assert_eq!(csr.nrows(), 1);
+        assert_eq!(csr.a_mul(&[1.0, 5.0, 1.0]), vec![-1.0]);
+        assert_eq!(csr.at_mul(&[2.0]), vec![4.0, 0.0, -6.0]);
+    }
+}

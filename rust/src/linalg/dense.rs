@@ -105,6 +105,17 @@ impl DenseMatrix {
         }
     }
 
+    /// Fused `t ← s ∘ (Xᵀ u)` — the HVP pipeline's pass 1 with the
+    /// per-sample scaling folded into the per-column dot epilogue.
+    pub fn at_mul_scaled_into(&self, u: &[f64], s: &[f64], t: &mut [f64]) {
+        assert_eq!(u.len(), self.nrows);
+        assert_eq!(s.len(), self.ncols);
+        assert_eq!(t.len(), self.ncols);
+        for j in 0..self.ncols {
+            t[j] = s[j] * ops::dot(self.col(j), u);
+        }
+    }
+
     /// `y ← X t`  (t ∈ ℝ^ncols, y ∈ ℝ^nrows). Per-column axpy accumulation.
     pub fn a_mul_into(&self, t: &[f64], y: &mut [f64]) {
         assert_eq!(t.len(), self.ncols);

@@ -1,0 +1,274 @@
+//! Hybrid fused Hessian-vector-product kernel — the compute spine under
+//! every PCG step of every algorithm (paper Algorithms 2/3 step 4).
+//!
+//! The HVP `a · X diag(s) Xᵀ u + b·u` is executed as exactly two sweeps
+//! over the nonzeros with no intermediate elementwise passes and no
+//! allocation:
+//!
+//! 1. **up**   `t ← s ∘ (Xᵀu)` — CSC gather with the scaling fused into
+//!    the per-column epilogue;
+//! 2. **down** `y ← a·(X t) + b·u` — CSR gather (over a row-major mirror
+//!    built once per shard) with the 1/n scaling and λu term fused into
+//!    the per-row epilogue. Without a mirror this falls back to the CSC
+//!    scatter + a separate `axpby` sweep.
+//!
+//! The mirror costs one extra copy of the nonzeros, so a layout heuristic
+//! (`csr_pays_off`) gates it: the scatter only loses once its
+//! output vector outgrows the L1 store window and there are enough
+//! nonzeros to amortize the mirror. Both passes optionally fan out over
+//! `std::thread::scope` with nnz-balanced chunks (disjoint output slices,
+//! no atomics) so a simulated node can use spare cores.
+
+use crate::linalg::csr::CsrMatrix;
+use crate::linalg::matrix::DataMatrix;
+use crate::linalg::ops;
+
+/// Prepared per-shard state for fused HVPs: the optional CSR mirror and
+/// the intra-node thread budget. Build once (per shard / per objective),
+/// apply every PCG step.
+pub struct HvpKernel {
+    csr: Option<CsrMatrix>,
+    /// Zero-copy handle to the CSC the mirror was built from; lets every
+    /// apply hard-reject a stale mirror (same-shaped but different
+    /// matrix), where the two passes would silently run over different
+    /// data.
+    src: Option<crate::linalg::sparse::CscMatrix>,
+    threads: usize,
+    nrows: usize,
+    ncols: usize,
+}
+
+impl HvpKernel {
+    /// Build for `x`, consulting the layout heuristic.
+    pub fn new(x: &DataMatrix) -> Self {
+        match x {
+            DataMatrix::Sparse(sp) if Self::csr_pays_off(sp.nrows(), sp.nnz()) => {
+                Self::mirrored(x, sp)
+            }
+            _ => Self::unmirrored(x),
+        }
+    }
+
+    /// Heuristic-free constructor for A/B benchmarking and tests.
+    pub fn with_layout(x: &DataMatrix, use_csr: bool) -> Self {
+        match x {
+            DataMatrix::Sparse(sp) if use_csr => Self::mirrored(x, sp),
+            _ => Self::unmirrored(x),
+        }
+    }
+
+    fn mirrored(x: &DataMatrix, sp: &crate::linalg::sparse::CscMatrix) -> Self {
+        Self {
+            csr: Some(CsrMatrix::from_csc(sp)),
+            src: Some(sp.clone()), // Arc clone of the view, not the data
+            threads: 1,
+            nrows: x.nrows(),
+            ncols: x.ncols(),
+        }
+    }
+
+    fn unmirrored(x: &DataMatrix) -> Self {
+        Self {
+            csr: None,
+            src: None,
+            threads: 1,
+            nrows: x.nrows(),
+            ncols: x.ncols(),
+        }
+    }
+
+    /// Mirror when the scatter target (d doubles) spills L1 (≥128 rows ≈
+    /// 1 KiB is already competitive; 4096 doubles = 32 KiB clearly spills)
+    /// and the shard has enough nonzeros to amortize the one-off O(nnz)
+    /// conversion within a handful of PCG steps. Tall-and-sparse shards
+    /// (DiSCO-F feature slices, d ≫ n) benefit the most; tiny or squat
+    /// shards keep the scatter and skip the memory overhead.
+    fn csr_pays_off(nrows: usize, nnz: usize) -> bool {
+        nrows >= 128 && nnz >= 2048
+    }
+
+    /// Set the intra-node thread budget (1 = serial; values are clamped to
+    /// the available chunkable work at call time).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn uses_csr(&self) -> bool {
+        self.csr.is_some()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Pass 1: `t ← s ∘ (Xᵀu)`.
+    pub fn up_into(&self, x: &DataMatrix, u: &[f64], s: &[f64], t: &mut [f64]) {
+        self.check(x);
+        match x {
+            DataMatrix::Sparse(sp) => sp.at_mul_scaled_into_par(u, s, t, self.threads),
+            DataMatrix::Dense(m) => m.at_mul_scaled_into(u, s, t),
+        }
+    }
+
+    /// Unscaled pass 1: `t ← Xᵀu` (DiSCO-F applies the scaling only after
+    /// the cross-node reduction of `t`).
+    pub fn up_plain_into(&self, x: &DataMatrix, u: &[f64], t: &mut [f64]) {
+        self.check(x);
+        match x {
+            DataMatrix::Sparse(sp) => sp.at_mul_into_par(u, t, self.threads),
+            DataMatrix::Dense(m) => m.at_mul_into(u, t),
+        }
+    }
+
+    /// Pass 2: `y ← a·(X t) + b·u`.
+    pub fn down_into(&self, x: &DataMatrix, t: &[f64], a: f64, b: f64, u: &[f64], y: &mut [f64]) {
+        self.check(x);
+        match &self.csr {
+            Some(csr) => csr.a_mul_axpby_into_par(t, a, b, u, y, self.threads),
+            None => {
+                x.a_mul_into(t, y);
+                ops::axpby(b, u, a, y);
+            }
+        }
+    }
+
+    /// Fused HVP: `out ← a · X diag(s) Xᵀ u + b·u`, allocation-free —
+    /// `scratch_n` (one ℝⁿ buffer) and `out` are caller-owned and reused
+    /// across PCG iterations.
+    pub fn apply(
+        &self,
+        x: &DataMatrix,
+        s: &[f64],
+        u: &[f64],
+        a: f64,
+        b: f64,
+        scratch_n: &mut [f64],
+        out: &mut [f64],
+    ) {
+        self.up_into(x, u, s, scratch_n);
+        self.down_into(x, scratch_n, a, b, u, out);
+    }
+
+    /// Hard (release-mode) guard: two usize compares plus, when
+    /// mirrored, an O(1) view-identity check — negligible next to the
+    /// O(nnz) sweeps, and the failure mode it prevents (pass 1 over one
+    /// matrix, pass 2 over another's mirror) is a silent wrong answer.
+    #[inline]
+    fn check(&self, x: &DataMatrix) {
+        assert_eq!(x.nrows(), self.nrows, "kernel built for a different matrix");
+        assert_eq!(x.ncols(), self.ncols, "kernel built for a different matrix");
+        if let (Some(src), DataMatrix::Sparse(sp)) = (&self.src, x) {
+            assert!(
+                sp.is_same_view(src),
+                "stale CSR mirror: kernel was built from a different matrix — rebuild the HvpKernel"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sparse::CscMatrix;
+    use crate::util::prng::Xoshiro256pp;
+
+    fn problem(seed: u64, d: usize, n: usize, p: f64) -> (DataMatrix, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let x = DataMatrix::Sparse(CscMatrix::rand_sparse(d, n, p, &mut rng));
+        let u: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let s: Vec<f64> = (0..n).map(|_| rng.next_f64() * 2.0).collect();
+        let scratch = vec![0.0; n];
+        (x, u, s, scratch)
+    }
+
+    /// Unfused three-pass reference: t = Xᵀu; t ← s∘t; y = a·Xt + b·u.
+    fn reference(x: &DataMatrix, s: &[f64], u: &[f64], a: f64, b: f64) -> Vec<f64> {
+        let mut t = x.at_mul(u);
+        for (ti, si) in t.iter_mut().zip(s.iter()) {
+            *ti *= *si;
+        }
+        let mut y = x.a_mul(&t);
+        for (yi, ui) in y.iter_mut().zip(u.iter()) {
+            *yi = a * *yi + b * *ui;
+        }
+        y
+    }
+
+    #[test]
+    fn fused_matches_reference_both_layouts() {
+        let (x, u, s, mut scratch) = problem(1, 30, 24, 0.3);
+        let expect = reference(&x, &s, &u, 0.25, 1e-2);
+        for use_csr in [false, true] {
+            let k = HvpKernel::with_layout(&x, use_csr);
+            assert_eq!(k.uses_csr(), use_csr);
+            let mut out = vec![0.0; 30];
+            k.apply(&x, &s, &u, 0.25, 1e-2, &mut scratch, &mut out);
+            for (a, b) in out.iter().zip(expect.iter()) {
+                assert!((a - b).abs() < 1e-12 * (1.0 + b.abs()), "csr={use_csr}");
+            }
+        }
+    }
+
+    #[test]
+    fn threads_do_not_change_results() {
+        let (x, u, s, mut scratch) = problem(2, 41, 29, 0.25);
+        let k1 = HvpKernel::with_layout(&x, true);
+        let mut serial = vec![0.0; 41];
+        k1.apply(&x, &s, &u, 0.5, 0.0, &mut scratch, &mut serial);
+        for threads in [2, 3, 16] {
+            let kt = HvpKernel::with_layout(&x, true).with_threads(threads);
+            let mut out = vec![0.0; 41];
+            kt.apply(&x, &s, &u, 0.5, 0.0, &mut scratch, &mut out);
+            assert_eq!(out, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn heuristic_mirrors_only_large_sparse() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        // Tiny shard: scatter stays.
+        let small = DataMatrix::Sparse(CscMatrix::rand_sparse(16, 12, 0.3, &mut rng));
+        assert!(!HvpKernel::new(&small).uses_csr());
+        // Tall sparse shard over the thresholds: mirrored.
+        let tall = DataMatrix::Sparse(CscMatrix::rand_sparse(512, 128, 0.05, &mut rng));
+        // 512 rows ≥ 128; nnz ≈ 512·128·0.05 ≈ 3277 ≥ 2048.
+        assert!(tall.nnz() >= 2048, "test matrix too sparse: {}", tall.nnz());
+        assert!(HvpKernel::new(&tall).uses_csr());
+        // Dense never mirrors.
+        let dense = DataMatrix::Dense(crate::linalg::dense::DenseMatrix::zeros(256, 64));
+        assert!(!HvpKernel::new(&dense).uses_csr());
+    }
+
+    #[test]
+    #[should_panic(expected = "stale CSR mirror")]
+    fn stale_mirror_rejected() {
+        // Same shape, different matrix: pass 1 would run over `b` while
+        // pass 2 runs over `a`'s mirror — must panic, not miscompute.
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let a = DataMatrix::Sparse(CscMatrix::rand_sparse(20, 15, 0.3, &mut rng));
+        let b = DataMatrix::Sparse(CscMatrix::rand_sparse(20, 15, 0.3, &mut rng));
+        let k = HvpKernel::with_layout(&a, true);
+        let s = vec![1.0; 15];
+        let u = vec![1.0; 20];
+        let mut scratch = vec![0.0; 15];
+        let mut out = vec![0.0; 20];
+        k.apply(&b, &s, &u, 1.0, 0.0, &mut scratch, &mut out);
+    }
+
+    #[test]
+    fn dense_path_matches_reference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let x = DataMatrix::Dense(crate::linalg::dense::DenseMatrix::randn(12, 9, &mut rng));
+        let u: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let s: Vec<f64> = (0..9).map(|_| rng.next_f64()).collect();
+        let expect = reference(&x, &s, &u, 0.1, 0.3);
+        let k = HvpKernel::new(&x);
+        let mut scratch = vec![0.0; 9];
+        let mut out = vec![0.0; 12];
+        k.apply(&x, &s, &u, 0.1, 0.3, &mut scratch, &mut out);
+        for (a, b) in out.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-12 * (1.0 + b.abs()));
+        }
+    }
+}

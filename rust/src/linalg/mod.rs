@@ -1,15 +1,20 @@
 //! Linear-algebra substrate: BLAS-1 vector kernels, dense (column-major)
-//! and CSC sparse matrices with the two PCG hot products (`Xᵀu`, `X·t`),
-//! a unified [`matrix::DataMatrix`], and small dense factorizations for
-//! the Woodbury inner solve.
+//! and CSC/CSR sparse matrices with the two PCG hot products (`Xᵀu`,
+//! `X·t`), the fused hybrid HVP kernel ([`kernel::HvpKernel`]), a unified
+//! [`matrix::DataMatrix`], and small dense factorizations for the
+//! Woodbury inner solve.
 
 pub mod cholesky;
+pub mod csr;
 pub mod dense;
+pub mod kernel;
 pub mod matrix;
 pub mod ops;
 pub mod sparse;
 
 pub use cholesky::{lu_solve, Cholesky};
+pub use csr::CsrMatrix;
 pub use dense::{DenseMatrix, SquareMatrix};
+pub use kernel::HvpKernel;
 pub use matrix::DataMatrix;
 pub use sparse::CscMatrix;

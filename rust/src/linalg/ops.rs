@@ -111,6 +111,63 @@ pub fn norm_inf(x: &[f64]) -> f64 {
     x.iter().fold(0.0, |m, v| m.max(v.abs()))
 }
 
+/// Sparse gather-dot `Σ_k vals[k] · v[idx[k]]` — the inner kernel of both
+/// the CSC `Xᵀu` and the CSR `X·t` products. 4-way unrolled accumulators
+/// break the serial FP dependency chain of the gather reduction (§Perf);
+/// the fixed reduction order keeps results bit-reproducible.
+#[inline]
+pub fn sparse_dot(idx: &[u32], vals: &[f64], v: &[f64]) -> f64 {
+    debug_assert_eq!(idx.len(), vals.len());
+    let k = idx.len();
+    let chunks = k / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        a0 += vals[i] * v[idx[i] as usize];
+        a1 += vals[i + 1] * v[idx[i + 1] as usize];
+        a2 += vals[i + 2] * v[idx[i + 2] as usize];
+        a3 += vals[i + 3] * v[idx[i + 3] as usize];
+    }
+    let mut tail = 0.0;
+    for i in chunks * 4..k {
+        tail += vals[i] * v[idx[i] as usize];
+    }
+    (a0 + a1) + (a2 + a3) + tail
+}
+
+/// Split the `ptr.len()-1` items of a CSC/CSR offset array into at most
+/// `parts` contiguous nonempty ranges of roughly equal nnz weight — the
+/// chunking used by the intra-node parallel kernels so threads get equal
+/// *work*, not equal item counts (Zipf rows make those very different).
+pub fn balanced_weight_ranges(ptr: &[usize], parts: usize) -> Vec<(usize, usize)> {
+    let n = ptr.len().saturating_sub(1);
+    if n == 0 {
+        return vec![(0, 0)];
+    }
+    let parts = parts.max(1).min(n);
+    let total = (ptr[n] - ptr[0]) as f64;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for p in 0..parts {
+        let end = if p == parts - 1 {
+            n
+        } else {
+            // Smallest end ≥ start+1 whose weight prefix reaches the
+            // (p+1)-th quantile, leaving ≥1 item per remaining part.
+            let target = total * (p as f64 + 1.0) / parts as f64;
+            let cap = n - (parts - p - 1);
+            let mut e = start + 1;
+            while e < cap && ((ptr[e] - ptr[0]) as f64) < target {
+                e += 1;
+            }
+            e
+        };
+        out.push((start, end));
+        start = end;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +216,50 @@ mod tests {
         assert_eq!(z, vec![1.0, 2.0]);
         zero(&mut z);
         assert_eq!(z, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn sparse_dot_matches_naive_all_lengths() {
+        for k in 0..19 {
+            let idx: Vec<u32> = (0..k).map(|i| ((i * 7) % 23) as u32).collect();
+            let vals: Vec<f64> = (0..k).map(|i| i as f64 * 0.3 - 1.0).collect();
+            let v: Vec<f64> = (0..23).map(|i| (i as f64 * 0.9).cos()).collect();
+            let naive: f64 = idx
+                .iter()
+                .zip(&vals)
+                .map(|(i, a)| a * v[*i as usize])
+                .sum();
+            assert!(
+                (sparse_dot(&idx, &vals, &v) - naive).abs() < 1e-12 * (1.0 + naive.abs()),
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn balanced_weight_ranges_cover_and_balance() {
+        // ptr for 6 items with weights [10, 1, 1, 1, 1, 10].
+        let ptr = vec![0usize, 10, 11, 12, 13, 14, 24];
+        for parts in 1..=6 {
+            let r = balanced_weight_ranges(&ptr, parts);
+            assert_eq!(r.len(), parts);
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r.last().unwrap().1, 6);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap/overlap");
+            }
+            assert!(r.iter().all(|(a, b)| b > a), "empty range in {r:?}");
+        }
+        // 2 parts must cut between the heavy ends, not at item 1.
+        let r2 = balanced_weight_ranges(&ptr, 2);
+        assert!(r2[0].1 >= 2 && r2[0].1 <= 5, "cut {r2:?}");
+        // More parts than items clamps to items.
+        assert_eq!(balanced_weight_ranges(&ptr, 100).len(), 6);
+        // Degenerate: no items.
+        assert_eq!(balanced_weight_ranges(&[0], 4), vec![(0, 0)]);
+        // All-zero weights still produce nonempty covering ranges.
+        let z = balanced_weight_ranges(&[5, 5, 5, 5], 2);
+        assert_eq!(z, vec![(0, 1), (1, 3)]);
     }
 
     #[test]

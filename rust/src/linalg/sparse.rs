@@ -8,20 +8,42 @@
 //! * `Xᵀu`  — gather:  `t[j] = Σ_k vals[k] · u[rows[k]]`
 //! * `X·t`  — scatter: `y[rows[k]] += vals[k] · t[j]`
 //!
-//! Row blocks (DiSCO-F shards) are extracted by filtering row indices,
-//! producing a CSC with re-based rows; column blocks (DiSCO-S shards) are
-//! pointer-range slices.
+//! The scatter is store-port bound; the hybrid kernel
+//! ([`crate::linalg::HvpKernel`]) therefore mirrors hot shards into a CSR
+//! layout ([`crate::linalg::CsrMatrix`]) so `X·t` becomes a gather too.
+//!
+//! ## Storage sharing
+//!
+//! `rowidx`/`values` live behind `Arc`s and `colptr` holds **absolute**
+//! offsets into them, so a column block (DiSCO-S shard) is a zero-copy
+//! view: it clones the two `Arc`s and slices the small `colptr` array —
+//! no per-shard deep copy of the nonzeros. Row blocks (DiSCO-F shards)
+//! still filter and re-base row indices, producing fresh buffers.
 
+use crate::linalg::ops;
 use crate::util::prng::Xoshiro256pp;
+use std::sync::Arc;
 
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct CscMatrix {
     nrows: usize,
     ncols: usize,
     /// `colptr[j]..colptr[j+1]` indexes `rowidx`/`values` for column `j`.
+    /// Offsets are absolute into the shared buffers (a block view starts
+    /// at `colptr[0] > 0`), so `nnz = colptr[ncols] − colptr[0]`.
     colptr: Vec<usize>,
-    rowidx: Vec<u32>,
-    values: Vec<f64>,
+    rowidx: Arc<[u32]>,
+    values: Arc<[f64]>,
+}
+
+/// Logical equality (shape + per-column contents); two views of the same
+/// data through different shared buffers compare equal.
+impl PartialEq for CscMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        self.nrows == other.nrows
+            && self.ncols == other.ncols
+            && (0..self.ncols).all(|j| self.col(j) == other.col(j))
+    }
 }
 
 impl CscMatrix {
@@ -49,8 +71,8 @@ impl CscMatrix {
             nrows,
             ncols: cols.len(),
             colptr,
-            rowidx,
-            values,
+            rowidx: rowidx.into(),
+            values: values.into(),
         }
     }
 
@@ -87,11 +109,27 @@ impl CscMatrix {
 
     #[inline]
     pub fn nnz(&self) -> usize {
-        self.values.len()
+        self.colptr[self.ncols] - self.colptr[0]
     }
 
     pub fn density(&self) -> f64 {
         self.nnz() as f64 / (self.nrows * self.ncols) as f64
+    }
+
+    /// True when `self` aliases the same nonzero buffers as `other`
+    /// (zero-copy block views do; deep copies don't).
+    pub fn shares_storage_with(&self, other: &CscMatrix) -> bool {
+        Arc::ptr_eq(&self.values, &other.values) && Arc::ptr_eq(&self.rowidx, &other.rowidx)
+    }
+
+    /// True when `self` and `other` are the *same view*: same shared
+    /// buffers, same shape, same column window. O(1) — used by
+    /// [`crate::linalg::HvpKernel`] to reject a stale CSR mirror.
+    pub fn is_same_view(&self, other: &CscMatrix) -> bool {
+        self.shares_storage_with(other)
+            && self.nrows == other.nrows
+            && self.ncols == other.ncols
+            && self.colptr.first() == other.colptr.first()
     }
 
     /// Sparse column `j` as (rows, values) slices.
@@ -102,28 +140,79 @@ impl CscMatrix {
         (&self.rowidx[lo..hi], &self.values[lo..hi])
     }
 
-    /// `t ← Xᵀ u` (gather). 4-way unrolled accumulators break the serial
-    /// FP dependency chain of the gather reduction (§Perf).
+    /// `t ← Xᵀ u` (gather, one [`ops::sparse_dot`] per column).
     pub fn at_mul_into(&self, u: &[f64], t: &mut [f64]) {
         assert_eq!(u.len(), self.nrows);
         assert_eq!(t.len(), self.ncols);
         for j in 0..self.ncols {
             let (rows, vals) = self.col(j);
-            let k = rows.len();
-            let chunks = k / 4;
-            let (mut a0, mut a1, mut a2, mut a3) = (0.0, 0.0, 0.0, 0.0);
-            for c in 0..chunks {
-                let i = c * 4;
-                a0 += vals[i] * u[rows[i] as usize];
-                a1 += vals[i + 1] * u[rows[i + 1] as usize];
-                a2 += vals[i + 2] * u[rows[i + 2] as usize];
-                a3 += vals[i + 3] * u[rows[i + 3] as usize];
+            t[j] = ops::sparse_dot(rows, vals, u);
+        }
+    }
+
+    /// Fused pass 1 of the HVP pipeline: `t ← s ∘ (Xᵀ u)` — the per-sample
+    /// Hessian scaling is folded into the gather epilogue, eliminating the
+    /// separate elementwise sweep over `t`. Bitwise identical to
+    /// `at_mul_into` + `t[j] *= s[j]`.
+    pub fn at_mul_scaled_into(&self, u: &[f64], s: &[f64], t: &mut [f64]) {
+        assert_eq!(u.len(), self.nrows);
+        assert_eq!(s.len(), self.ncols);
+        assert_eq!(t.len(), self.ncols);
+        for j in 0..self.ncols {
+            let (rows, vals) = self.col(j);
+            t[j] = s[j] * ops::sparse_dot(rows, vals, u);
+        }
+    }
+
+    /// Parallel [`CscMatrix::at_mul_into`]: columns are chunked by nnz
+    /// weight and each thread writes its disjoint slice of `t` — no
+    /// synchronization beyond the scope join.
+    pub fn at_mul_into_par(&self, u: &[f64], t: &mut [f64], threads: usize) {
+        self.gather_cols_par(u, None, t, threads)
+    }
+
+    /// Parallel [`CscMatrix::at_mul_scaled_into`].
+    pub fn at_mul_scaled_into_par(&self, u: &[f64], s: &[f64], t: &mut [f64], threads: usize) {
+        self.gather_cols_par(u, Some(s), t, threads)
+    }
+
+    fn gather_cols_par(&self, u: &[f64], s: Option<&[f64]>, t: &mut [f64], threads: usize) {
+        assert_eq!(u.len(), self.nrows);
+        assert_eq!(t.len(), self.ncols);
+        if let Some(s) = s {
+            assert_eq!(s.len(), self.ncols);
+        }
+        if threads <= 1 || self.ncols < 2 {
+            match s {
+                Some(s) => self.at_mul_scaled_into(u, s, t),
+                None => self.at_mul_into(u, t),
             }
-            let mut tail = 0.0;
-            for i in chunks * 4..k {
-                tail += vals[i] * u[rows[i] as usize];
+            return;
+        }
+        let ranges = ops::balanced_weight_ranges(&self.colptr, threads);
+        let (last, head) = ranges.split_last().expect("ranges nonempty");
+        std::thread::scope(|scope| {
+            let mut rest: &mut [f64] = t;
+            for &(lo, hi) in head {
+                let (chunk, tail) = rest.split_at_mut(hi - lo);
+                rest = tail;
+                scope.spawn(move || self.gather_cols_range(lo, hi, u, s, chunk));
             }
-            t[j] = (a0 + a1) + (a2 + a3) + tail;
+            // Last chunk runs on the calling thread: N-way parallelism
+            // spawns N−1 threads instead of leaving the caller idle at
+            // the join.
+            self.gather_cols_range(last.0, last.1, u, s, rest);
+        });
+    }
+
+    fn gather_cols_range(&self, lo: usize, hi: usize, u: &[f64], s: Option<&[f64]>, out: &mut [f64]) {
+        for j in lo..hi {
+            let (rows, vals) = self.col(j);
+            let acc = ops::sparse_dot(rows, vals, u);
+            out[j - lo] = match s {
+                Some(s) => s[j] * acc,
+                None => acc,
+            };
         }
     }
 
@@ -137,6 +226,9 @@ impl CscMatrix {
         // §Perf note: a 4-wide unroll of this scatter (targets are distinct
         // since rows strictly increase within a column) measured within
         // noise (<5 %) and was reverted — the loop is store-port bound.
+        // That bound is why the HVP pipeline prefers the CSR mirror
+        // (gather) for this pass; this scatter stays as the mirror-free
+        // fallback and the §Perf A/B baseline.
         for j in 0..self.ncols {
             let tj = t[j];
             if tj == 0.0 {
@@ -178,23 +270,23 @@ impl CscMatrix {
         vals.iter().map(|v| v * v).sum()
     }
 
-    /// Column block `[start, end)` — a sample shard (DiSCO-S).
+    /// Column block `[start, end)` — a sample shard (DiSCO-S). Zero-copy:
+    /// the nonzero buffers are shared with the parent via `Arc`; only the
+    /// `end−start+1` column offsets are materialized.
     pub fn col_block(&self, start: usize, end: usize) -> CscMatrix {
         assert!(start <= end && end <= self.ncols);
-        let lo = self.colptr[start];
-        let hi = self.colptr[end];
-        let colptr = self.colptr[start..=end].iter().map(|p| p - lo).collect();
         CscMatrix {
             nrows: self.nrows,
             ncols: end - start,
-            colptr,
-            rowidx: self.rowidx[lo..hi].to_vec(),
-            values: self.values[lo..hi].to_vec(),
+            colptr: self.colptr[start..=end].to_vec(),
+            rowidx: Arc::clone(&self.rowidx),
+            values: Arc::clone(&self.values),
         }
     }
 
     /// Row block `[start, end)` — a feature shard (DiSCO-F). Row indices
-    /// are re-based to the block.
+    /// are re-based to the block; this is a filtering deep copy (a row
+    /// slice of CSC storage is not representable as a view).
     pub fn row_block(&self, start: usize, end: usize) -> CscMatrix {
         assert!(start <= end && end <= self.nrows);
         let mut colptr = Vec::with_capacity(self.ncols + 1);
@@ -216,8 +308,8 @@ impl CscMatrix {
             nrows: end - start,
             ncols: self.ncols,
             colptr,
-            rowidx,
-            values,
+            rowidx: rowidx.into(),
+            values: values.into(),
         }
     }
 
@@ -289,12 +381,69 @@ mod tests {
     }
 
     #[test]
+    fn scaled_gather_fuses_exactly() {
+        let mut rng = Xoshiro256pp::seed_from_u64(19);
+        let m = CscMatrix::rand_sparse(25, 18, 0.3, &mut rng);
+        let u: Vec<f64> = (0..25).map(|i| (i as f64 * 0.7).sin()).collect();
+        let s: Vec<f64> = (0..18).map(|i| 0.1 + (i % 5) as f64).collect();
+        let mut unfused = vec![0.0; 18];
+        m.at_mul_into(&u, &mut unfused);
+        for (ti, si) in unfused.iter_mut().zip(s.iter()) {
+            *ti *= *si;
+        }
+        let mut fused = vec![0.0; 18];
+        m.at_mul_scaled_into(&u, &s, &mut fused);
+        // Fusing only reorders nothing: the products are bit-identical.
+        assert_eq!(fused, unfused);
+    }
+
+    #[test]
+    fn parallel_gathers_match_serial() {
+        let mut rng = Xoshiro256pp::seed_from_u64(20);
+        let m = CscMatrix::rand_sparse(40, 33, 0.25, &mut rng);
+        let u: Vec<f64> = (0..40).map(|i| (i as f64 * 0.13).cos()).collect();
+        let s: Vec<f64> = (0..33).map(|i| 0.5 + (i % 3) as f64).collect();
+        let serial = m.at_mul(&u);
+        for threads in [1, 2, 3, 8, 64] {
+            let mut t = vec![0.0; 33];
+            m.at_mul_into_par(&u, &mut t, threads);
+            assert_eq!(t, serial, "threads={threads}");
+            let mut ts = vec![0.0; 33];
+            m.at_mul_scaled_into_par(&u, &s, &mut ts, threads);
+            for j in 0..33 {
+                assert_eq!(ts[j], s[j] * serial[j], "threads={threads} col {j}");
+            }
+        }
+    }
+
+    #[test]
     fn col_block_matches_dense_block() {
         let mut rng = Xoshiro256pp::seed_from_u64(10);
         let m = CscMatrix::rand_sparse(12, 9, 0.3, &mut rng);
         let blk = m.col_block(3, 7);
         assert_eq!(blk.ncols(), 4);
         assert_eq!(blk.to_dense(), m.to_dense().col_block(3, 7));
+    }
+
+    #[test]
+    fn col_block_is_zero_copy_and_self_consistent() {
+        let mut rng = Xoshiro256pp::seed_from_u64(14);
+        let m = CscMatrix::rand_sparse(10, 12, 0.4, &mut rng);
+        let blk = m.col_block(4, 10);
+        assert!(blk.shares_storage_with(&m), "column block must alias parent");
+        assert!(!m.row_block(0, 5).shares_storage_with(&m), "row block re-bases");
+        // nnz of a view counts only its own columns.
+        let expect: usize = (4..10).map(|j| m.col(j).0.len()).sum();
+        assert_eq!(blk.nnz(), expect);
+        // Nested views still work (block of a block).
+        let nested = blk.col_block(1, 4);
+        assert!(nested.shares_storage_with(&m));
+        assert_eq!(nested.to_dense(), m.to_dense().col_block(5, 8));
+        // Products through the view match the dense block.
+        let u: Vec<f64> = (0..10).map(|i| (i as f64).sin()).collect();
+        for (a, b) in blk.at_mul(&u).iter().zip(m.to_dense().col_block(4, 10).at_mul(&u)) {
+            assert!((a - b).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! solvers, and as the per-shard local objective inside the distributed
 //! algorithms (where `X` is a shard and the 1/n is the *global* n).
 
-use crate::linalg::{ops, DataMatrix};
+use crate::linalg::{ops, DataMatrix, HvpKernel};
 use crate::loss::Loss;
 
 pub struct Objective<'a> {
@@ -102,8 +102,13 @@ impl<'a> Objective<'a> {
             .collect()
     }
 
-    /// Hessian-vector product `f''(w)·u` given precomputed scalings.
-    /// This is the PCG hot path (Algorithm 2/3 step 4).
+    /// Unfused reference Hessian-vector product `f''(w)·u` given
+    /// precomputed scalings: three separate passes (gather, elementwise
+    /// scale, scatter, plus the epilogue sweep) over the CSC layout.
+    ///
+    /// The PCG hot path uses [`Objective::hvp_with_kernel_into`] instead;
+    /// this variant is kept as the equivalence oracle for tests and the
+    /// honest A/B baseline in `bench_hotpaths`.
     pub fn hvp_with_scalings_into(&self, s: &[f64], u: &[f64], scratch_n: &mut [f64], out: &mut [f64]) {
         assert_eq!(s.len(), self.nsamples());
         assert_eq!(scratch_n.len(), self.nsamples());
@@ -116,6 +121,30 @@ impl<'a> Objective<'a> {
         for (oi, ui) in out.iter_mut().zip(u.iter()) {
             *oi = *oi * inv_n + self.lambda * *ui;
         }
+    }
+
+    /// Build the fused hybrid HVP kernel for this objective's data matrix
+    /// (CSR mirror per the layout heuristic). Build once per outer scope,
+    /// then call [`Objective::hvp_with_kernel_into`] every PCG step.
+    pub fn hvp_kernel(&self) -> HvpKernel {
+        HvpKernel::new(self.x)
+    }
+
+    /// Fused HVP — the PCG hot path (Algorithm 2/3 step 4): two sweeps
+    /// over the nonzeros, scalings and the `(1/n)·(…) + λu` epilogue
+    /// folded in, zero allocation (`scratch_n`/`out` are caller-owned).
+    pub fn hvp_with_kernel_into(
+        &self,
+        kernel: &HvpKernel,
+        s: &[f64],
+        u: &[f64],
+        scratch_n: &mut [f64],
+        out: &mut [f64],
+    ) {
+        assert_eq!(s.len(), self.nsamples());
+        assert_eq!(scratch_n.len(), self.nsamples());
+        let inv_n = 1.0 / self.n_global as f64;
+        kernel.apply(self.x, s, u, inv_n, self.lambda, scratch_n, out);
     }
 
     /// Convenience allocating HVP at `w`.
@@ -190,6 +219,31 @@ mod tests {
         for k in 0..10 {
             let fd = (gp[k] - gm[k]) / (2.0 * h);
             assert!((fd - hv[k]).abs() < 1e-5 * (1.0 + hv[k].abs()), "coord {k}");
+        }
+    }
+
+    #[test]
+    fn fused_kernel_hvp_matches_unfused() {
+        let (x, y) = problem(11, 12, 18);
+        let loss = Logistic;
+        let obj = Objective::new(&x, &y, &loss, 0.07);
+        let mut rng = Xoshiro256pp::seed_from_u64(12);
+        let w: Vec<f64> = (0..12).map(|_| 0.3 * rng.normal()).collect();
+        let u: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let s = obj.hessian_scalings(&w);
+        let mut scratch = vec![0.0; 18];
+        let mut unfused = vec![0.0; 12];
+        obj.hvp_with_scalings_into(&s, &u, &mut scratch, &mut unfused);
+        for use_csr in [false, true] {
+            let kernel = crate::linalg::HvpKernel::with_layout(&x, use_csr);
+            let mut fused = vec![0.0; 12];
+            obj.hvp_with_kernel_into(&kernel, &s, &u, &mut scratch, &mut fused);
+            for (a, b) in fused.iter().zip(unfused.iter()) {
+                assert!(
+                    (a - b).abs() < 1e-12 * (1.0 + b.abs()),
+                    "csr={use_csr}: {a} vs {b}"
+                );
+            }
         }
     }
 

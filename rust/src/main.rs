@@ -31,6 +31,7 @@ fn main() {
     .opt("max-outer", Some("100"), "outer (Newton) iteration cap")
     .opt("grad-tol", Some("1e-8"), "stop when ‖∇f‖ ≤ this")
     .opt("hessian-fraction", Some("1.0"), "Fig. 5 Hessian subsampling fraction")
+    .opt("node-threads", Some("1"), "intra-node threads for the HVP kernels")
     .opt("local-epochs", Some("5"), "CoCoA+/DANE local solver epochs")
     .opt("seed", Some("42"), "PRNG seed")
     .opt("net", Some("default"), "network cost model: default | zero | slow")
@@ -112,6 +113,7 @@ fn build_config(args: &Args) -> Result<RunConfig, String> {
     cfg.max_outer = args.get_usize("max-outer").map_err(|e| e.to_string())?;
     cfg.grad_tol = args.get_f64("grad-tol").map_err(|e| e.to_string())?;
     cfg.hessian_fraction = args.get_f64("hessian-fraction").map_err(|e| e.to_string())?;
+    cfg.node_threads = args.get_usize("node-threads").map_err(|e| e.to_string())?.max(1);
     cfg.local_epochs = args.get_usize("local-epochs").map_err(|e| e.to_string())?;
     cfg.seed = args.get_u64("seed").map_err(|e| e.to_string())?;
     cfg.cost = parse_cost(&args.req("net").map_err(|e| e.to_string())?)?;

@@ -10,6 +10,8 @@ pub mod sdca;
 pub mod woodbury;
 
 pub use newton_ref::{newton_reference, NewtonResult};
-pub use pcg::{pcg, IdentityPrecond, LinearOperator, PcgResult, Preconditioner};
+pub use pcg::{
+    pcg, pcg_into, IdentityPrecond, LinearOperator, PcgResult, PcgScratch, PcgStats, Preconditioner,
+};
 pub use sdca::SdcaLocal;
 pub use woodbury::Woodbury;

@@ -6,13 +6,15 @@
 //! solve on one machine — no preconditioning games, no distribution — so
 //! distributed runs can be validated against it.
 
-use crate::linalg::ops;
+use crate::linalg::{ops, HvpKernel};
 use crate::loss::Objective;
-use crate::solvers::pcg::{pcg, IdentityPrecond, LinearOperator};
+use crate::solvers::pcg::{pcg_into, IdentityPrecond, LinearOperator, PcgScratch};
 
-/// Hessian operator at a fixed point (scalings precomputed).
+/// Hessian operator at a fixed point (scalings precomputed, fused hybrid
+/// kernel shared across outer iterations).
 struct HessOp<'a> {
     obj: &'a Objective<'a>,
+    kernel: &'a HvpKernel,
     s: Vec<f64>,
     scratch: std::cell::RefCell<Vec<f64>>,
 }
@@ -23,7 +25,8 @@ impl<'a> LinearOperator for HessOp<'a> {
     }
     fn apply_into(&self, x: &[f64], y: &mut [f64]) {
         let mut scratch = self.scratch.borrow_mut();
-        self.obj.hvp_with_scalings_into(&self.s, x, &mut scratch, y);
+        self.obj
+            .hvp_with_kernel_into(self.kernel, &self.s, x, &mut scratch, y);
     }
 }
 
@@ -47,6 +50,10 @@ pub fn newton_reference(
     let d = obj.dim();
     let mut w = vec![0.0; d];
     let mut total_cg = 0;
+    // Fused hybrid kernel + PCG scratch: built once, reused by every
+    // inner solve — no allocation inside the CG loop.
+    let kernel = obj.hvp_kernel();
+    let mut ws = PcgScratch::new(d);
     for outer in 0..max_outer {
         let g = obj.grad(&w);
         let gnorm = ops::norm2(&g);
@@ -62,17 +69,18 @@ pub fn newton_reference(
         }
         let op = HessOp {
             obj,
+            kernel: &kernel,
             s: obj.hessian_scalings(&w),
             scratch: std::cell::RefCell::new(vec![0.0; obj.nsamples()]),
         };
         // Zhang–Xiao style forcing term: ε_k = min(0.25, ‖g‖)·‖g‖/20.
         let eps = (gnorm / 20.0).min(0.25 * gnorm).max(grad_tol * 0.1);
-        let res = pcg(&op, &g, &IdentityPrecond, eps, max_cg);
-        total_cg += res.iterations;
+        let stats = pcg_into(&op, &g, &IdentityPrecond, eps, max_cg, &mut ws);
+        total_cg += stats.iterations;
         // Damped step: δ = √(vᵀHv).
-        let delta = ops::dot(&res.v, &res.hv).max(0.0).sqrt();
+        let delta = ops::dot(&ws.v, &ws.hv).max(0.0).sqrt();
         let scale = 1.0 / (1.0 + delta);
-        ops::axpy(-scale, &res.v, &mut w);
+        ops::axpy(-scale, &ws.v, &mut w);
     }
     let g = obj.grad(&w);
     NewtonResult {

@@ -60,9 +60,107 @@ pub struct PcgResult {
     pub converged: bool,
 }
 
+/// Convergence facts of an in-place solve ([`pcg_into`]); the iterate
+/// itself stays in the caller's [`PcgScratch`].
+#[derive(Clone, Copy, Debug)]
+pub struct PcgStats {
+    pub iterations: usize,
+    pub residual_norm: f64,
+    pub converged: bool,
+}
+
+/// Caller-owned PCG work vectors. Allocate once (per Newton solve, per
+/// node, …) and hand to [`pcg_into`] repeatedly: no PCG iteration — and
+/// no repeated solve — touches the heap.
+#[derive(Clone, Debug)]
+pub struct PcgScratch {
+    /// Solution iterate (valid after `pcg_into` returns).
+    pub v: Vec<f64>,
+    /// `A·v`, tracked incrementally (Algorithm 2 line 6).
+    pub hv: Vec<f64>,
+    r: Vec<f64>,
+    s: Vec<f64>,
+    u: Vec<f64>,
+    hu: Vec<f64>,
+}
+
+impl PcgScratch {
+    pub fn new(n: usize) -> Self {
+        Self {
+            v: vec![0.0; n],
+            hv: vec![0.0; n],
+            r: vec![0.0; n],
+            s: vec![0.0; n],
+            u: vec![0.0; n],
+            hu: vec![0.0; n],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.v.len()
+    }
+}
+
 /// Solve `A v = b` to `‖r‖ ≤ tol`, at most `max_iter` steps, with
-/// preconditioner `M⁻¹`. Follows the paper's Algorithm 2 update order
-/// (tracks `Hv` incrementally, line 6).
+/// preconditioner `M⁻¹`, entirely inside `ws` (no allocation). Follows
+/// the paper's Algorithm 2 update order (tracks `Hv` incrementally,
+/// line 6). The solution is left in `ws.v` (with `A·v` in `ws.hv`).
+pub fn pcg_into(
+    a: &impl LinearOperator,
+    b: &[f64],
+    m_inv: &impl Preconditioner,
+    tol: f64,
+    max_iter: usize,
+    ws: &mut PcgScratch,
+) -> PcgStats {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    assert_eq!(ws.dim(), n, "scratch sized for a different system");
+    ops::zero(&mut ws.v);
+    ops::zero(&mut ws.hv);
+    ws.r.copy_from_slice(b); // r_0 = b − A·0
+    m_inv.apply_into(&ws.r, &mut ws.s);
+    ws.u.copy_from_slice(&ws.s);
+    let mut rs = ops::dot(&ws.r, &ws.s);
+    let mut iterations = 0;
+    let mut rnorm = ops::norm2(&ws.r);
+
+    while rnorm > tol && iterations < max_iter {
+        a.apply_into(&ws.u, &mut ws.hu);
+        let uhu = ops::dot(&ws.u, &ws.hu);
+        if uhu <= 0.0 {
+            // Operator not PD along u (numerical breakdown) — bail with
+            // the current iterate rather than diverging.
+            break;
+        }
+        let alpha = rs / uhu;
+        ops::axpy(alpha, &ws.u, &mut ws.v);
+        ops::axpy(alpha, &ws.hu, &mut ws.hv);
+        ops::axpy(-alpha, &ws.hu, &mut ws.r);
+        m_inv.apply_into(&ws.r, &mut ws.s);
+        let rs_new = ops::dot(&ws.r, &ws.s);
+        rnorm = ops::norm2(&ws.r);
+        iterations += 1;
+        if rs_new == 0.0 {
+            // The preconditioned residual vanished exactly. Either we are
+            // done (r = 0) or M⁻¹ annihilated a nonzero residual
+            // (rank-deficient/indefinite preconditioner); in both cases
+            // β = rs_new/rs next round would be 0/0 → NaN poisoning every
+            // vector. Break cleanly with the current iterate.
+            break;
+        }
+        let beta = rs_new / rs;
+        rs = rs_new;
+        ops::axpby(1.0, &ws.s, beta, &mut ws.u);
+    }
+    PcgStats {
+        iterations,
+        residual_norm: rnorm,
+        converged: rnorm <= tol,
+    }
+}
+
+/// Allocating convenience wrapper around [`pcg_into`].
 pub fn pcg(
     a: &impl LinearOperator,
     b: &[f64],
@@ -70,45 +168,14 @@ pub fn pcg(
     tol: f64,
     max_iter: usize,
 ) -> PcgResult {
-    let n = a.dim();
-    assert_eq!(b.len(), n);
-    let mut v = vec![0.0; n];
-    let mut hv = vec![0.0; n];
-    let mut r = b.to_vec(); // r_0 = b − A·0
-    let mut s = vec![0.0; n];
-    m_inv.apply_into(&r, &mut s);
-    let mut u = s.clone();
-    let mut hu = vec![0.0; n];
-    let mut rs = ops::dot(&r, &s);
-    let mut iterations = 0;
-    let mut rnorm = ops::norm2(&r);
-
-    while rnorm > tol && iterations < max_iter {
-        a.apply_into(&u, &mut hu);
-        let uhu = ops::dot(&u, &hu);
-        if uhu <= 0.0 {
-            // Operator not PD along u (numerical breakdown) — bail with
-            // the current iterate rather than diverging.
-            break;
-        }
-        let alpha = rs / uhu;
-        ops::axpy(alpha, &u, &mut v);
-        ops::axpy(alpha, &hu, &mut hv);
-        ops::axpy(-alpha, &hu, &mut r);
-        m_inv.apply_into(&r, &mut s);
-        let rs_new = ops::dot(&r, &s);
-        let beta = rs_new / rs;
-        rs = rs_new;
-        ops::axpby(1.0, &s, beta, &mut u);
-        rnorm = ops::norm2(&r);
-        iterations += 1;
-    }
+    let mut ws = PcgScratch::new(a.dim());
+    let stats = pcg_into(a, b, m_inv, tol, max_iter, &mut ws);
     PcgResult {
-        v,
-        hv,
-        iterations,
-        residual_norm: rnorm,
-        converged: rnorm <= tol,
+        v: ws.v,
+        hv: ws.hv,
+        iterations: stats.iterations,
+        residual_norm: stats.residual_norm,
+        converged: stats.converged,
     }
 }
 
@@ -203,6 +270,79 @@ mod tests {
         let res = pcg(&a, &b, &IdentityPrecond, 1e-16, 3);
         assert_eq!(res.iterations, 3);
         assert!(!res.converged);
+    }
+
+    /// Rank-1 "preconditioner" that annihilates every coordinate but the
+    /// first — after one step the preconditioned residual is exactly zero
+    /// while ‖r‖ > 0.
+    struct E1Projector;
+    impl Preconditioner for E1Projector {
+        fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+            for v in y.iter_mut() {
+                *v = 0.0;
+            }
+            y[0] = x[0];
+        }
+    }
+
+    /// 90° rotation: sᵀr = 0 always, so rs = 0 from the very first
+    /// iteration while s (and hence u) is nonzero — the exact setup where
+    /// the unguarded β = rs_new/rs division turns 0/0 into NaN and
+    /// poisons every PCG vector.
+    struct Rotator;
+    impl Preconditioner for Rotator {
+        fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+            y[0] = -x[1];
+            y[1] = x[0];
+        }
+    }
+
+    #[test]
+    fn vanishing_preconditioned_residual_breaks_cleanly() {
+        // A = diag(1, 2), b = [1, 1]: step 1 solves the e1 component
+        // exactly, then M⁻¹r = 0 with r = [0, 1] ≠ 0. The solver must
+        // stop after that one step with a finite iterate.
+        let mut a = SquareMatrix::zeros(2);
+        a.set(0, 0, 1.0);
+        a.set(1, 1, 2.0);
+        let res = pcg(&a, &[1.0, 1.0], &E1Projector, 1e-12, 50);
+        assert_eq!(res.iterations, 1, "must break at the vanishing rs");
+        assert!(!res.converged);
+        assert!(res.v.iter().all(|v| v.is_finite()));
+        assert!((res.v[0] - 1.0).abs() < 1e-12);
+        assert!((res.residual_norm - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_preconditioner_never_produces_nan() {
+        let a = spd(2, 8, 0.3);
+        let res = pcg(&a, &[1.0, 0.0], &Rotator, 1e-12, 100);
+        assert!(res.v.iter().all(|v| v.is_finite()), "iterate poisoned: {:?}", res.v);
+        assert!(res.hv.iter().all(|v| v.is_finite()));
+        assert!(res.residual_norm.is_finite());
+        assert!(res.iterations <= 1, "must stop once rs vanishes");
+    }
+
+    #[test]
+    fn pcg_into_reuses_scratch_across_solves() {
+        let n = 20;
+        let a = spd(n, 6, 0.4);
+        let mut ws = PcgScratch::new(n);
+        for seed in 0..3u64 {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let xtrue: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.mul(&xtrue);
+            let stats = pcg_into(&a, &b, &IdentityPrecond, 1e-10, 500, &mut ws);
+            assert!(stats.converged, "seed {seed}: {}", stats.residual_norm);
+            for (x, t) in ws.v.iter().zip(&xtrue) {
+                assert!((x - t).abs() < 1e-7, "seed {seed}");
+            }
+            // Scratch state from the previous solve must not leak in:
+            // result equals the fresh-scratch wrapper's.
+            let fresh = pcg(&a, &b, &IdentityPrecond, 1e-10, 500);
+            assert_eq!(ws.v, fresh.v);
+            assert_eq!(ws.hv, fresh.hv);
+        }
     }
 
     #[test]

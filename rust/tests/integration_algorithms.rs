@@ -352,6 +352,26 @@ fn deterministic_across_identical_runs() {
 }
 
 #[test]
+fn intra_node_threads_do_not_change_the_math() {
+    // The parallel HVP kernels chunk by nnz with a fixed reduction order,
+    // so node_threads must be a pure wall-clock knob: identical iterates,
+    // bit for bit, and identical communication counts.
+    let ds = tiny(25);
+    for algo in [AlgoKind::DiscoF, AlgoKind::DiscoS] {
+        let cfg1 = base_cfg(algo, LossKind::Logistic);
+        let mut cfg2 = cfg1.clone();
+        cfg2.node_threads = 2;
+        let a = run(&ds, &cfg1);
+        let b = run(&ds, &cfg2);
+        assert!(a.converged && b.converged, "{}", algo.name());
+        assert_eq!(a.stats.vector_rounds, b.stats.vector_rounds, "{}", algo.name());
+        for (wa, wb) in a.w.iter().zip(b.w.iter()) {
+            assert_eq!(wa.to_bits(), wb.to_bits(), "{}: threads changed the math", algo.name());
+        }
+    }
+}
+
+#[test]
 fn slow_network_punishes_disco_f_on_wide_n() {
     // Ablation (the rcv1 finding inverted): with a slow network and n ≫ d,
     // DiSCO-F's ℝⁿ messages must cost it the elapsed-time win even while

@@ -9,7 +9,7 @@
 //!   HVP linearity/symmetry, loss conjugacy (batching of the dual step).
 
 use disco::data::{balanced_ranges, Partition, SyntheticConfig};
-use disco::linalg::{lu_solve, ops, CscMatrix, DataMatrix, SquareMatrix};
+use disco::linalg::{lu_solve, ops, CscMatrix, CsrMatrix, DataMatrix, HvpKernel, SquareMatrix};
 use disco::loss::{Logistic, Loss, Objective, Quadratic, SquaredHinge};
 use disco::net::{Cluster, CostModel};
 use disco::solvers::{pcg, IdentityPrecond, Woodbury};
@@ -159,6 +159,91 @@ fn prop_pcg_solves_random_spd() {
         ensure(res.converged, "pcg converged")?;
         for (x, t) in res.v.iter().zip(xtrue.iter()) {
             ensure_close(*x, *t, 1e-6, "pcg solution")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hvp_layouts_agree() {
+    // CSR, CSC, fused-hybrid, and dense HVPs (and both raw products) must
+    // agree to 1e-12 across random shapes and densities — including
+    // density 0 (empty columns everywhere), single-row matrices, and
+    // single-column matrices.
+    check("hvp_layouts", 60, |g: &mut Gen| {
+        let d = g.usize_in(1, 48);
+        let n = g.usize_in(1, 56);
+        // Bias toward degenerate densities: ~1 case in 6 is all-empty.
+        let density = if g.usize_in(0, 5) == 0 { 0.0 } else { g.f64_in(0.02, 0.6) };
+        let mut cols: Vec<Vec<(u32, f64)>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut col = Vec::new();
+            for i in 0..d {
+                if g.f64_in(0.0, 1.0) < density {
+                    col.push((i as u32, g.rng().normal()));
+                }
+            }
+            col.sort_by_key(|(r, _)| *r);
+            cols.push(col);
+        }
+        let csc = CscMatrix::from_columns(d, &cols);
+        let csr = CsrMatrix::from_csc(&csc);
+        let dense = csc.to_dense();
+        ensure(csr.nnz() == csc.nnz(), "nnz preserved by mirror")?;
+
+        let u = g.normal_vec(d);
+        let t = g.normal_vec(n);
+        // Raw products across the three layouts.
+        let t_csc = csc.at_mul(&u);
+        let t_csr = csr.at_mul(&u);
+        let t_de = dense.at_mul(&u);
+        for j in 0..n {
+            ensure_close(t_csc[j], t_de[j], 1e-12, "Xᵀu csc vs dense")?;
+            ensure_close(t_csr[j], t_de[j], 1e-12, "Xᵀu csr vs dense")?;
+        }
+        let y_csc = csc.a_mul(&t);
+        let y_csr = csr.a_mul(&t);
+        let y_de = dense.a_mul(&t);
+        for i in 0..d {
+            ensure_close(y_csc[i], y_de[i], 1e-12, "X·t csc vs dense")?;
+            ensure_close(y_csr[i], y_de[i], 1e-12, "X·t csr vs dense")?;
+        }
+
+        // Full HVP: unfused CSC vs fused kernel (both layouts, threaded)
+        // vs the dense objective.
+        let lambda = g.f64_in(0.0, 0.5);
+        let s: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 2.0)).collect();
+        let x_sp = DataMatrix::Sparse(csc.clone());
+        let x_de = DataMatrix::Dense(dense);
+        let y_lab = g.labels(n);
+        let loss = Quadratic;
+        let mut obj_sp = Objective::new(&x_sp, &y_lab, &loss, lambda);
+        obj_sp.n_global = n.max(2); // exercise shard-style divisors too
+        let mut obj_de = Objective::new(&x_de, &y_lab, &loss, lambda);
+        obj_de.n_global = obj_sp.n_global;
+
+        let mut scratch = vec![0.0; n];
+        let mut unfused = vec![0.0; d];
+        obj_sp.hvp_with_scalings_into(&s, &u, &mut scratch, &mut unfused);
+        let mut dense_out = vec![0.0; d];
+        obj_de.hvp_with_scalings_into(&s, &u, &mut scratch, &mut dense_out);
+        for i in 0..d {
+            ensure_close(unfused[i], dense_out[i], 1e-12, "unfused sparse vs dense")?;
+        }
+        for use_csr in [false, true] {
+            for threads in [1usize, 3] {
+                let kernel = HvpKernel::with_layout(&x_sp, use_csr).with_threads(threads);
+                let mut fused = vec![0.0; d];
+                obj_sp.hvp_with_kernel_into(&kernel, &s, &u, &mut scratch, &mut fused);
+                for i in 0..d {
+                    ensure_close(
+                        fused[i],
+                        unfused[i],
+                        1e-12,
+                        &format!("fused(csr={use_csr},threads={threads}) vs unfused"),
+                    )?;
+                }
+            }
         }
         Ok(())
     });
