@@ -31,7 +31,7 @@ fn main() {
             "bandwidth", "DiSCO-F", "DiSCO-S", "winner"
         );
         for beta in [12.5e6, 125e6, 1.25e9, 12.5e9, f64::INFINITY] {
-            let cost = CostModel { alpha: 50e-6, beta };
+            let cost = CostModel { alpha: 50e-6, beta, ..CostModel::default() };
             let mut times = Vec::new();
             for algo in [AlgoKind::DiscoF, AlgoKind::DiscoS] {
                 let mut cfg = RunConfig::new(algo, LossKind::Logistic, lambda);

@@ -12,16 +12,19 @@ use crate::algorithms::{OpCounts, RunConfig, RunResult};
 use crate::data::{Dataset, Partition};
 use crate::linalg::ops;
 use crate::loss::Loss;
-use crate::net::{Cluster, NodeCtx};
+use crate::net::NodeCtx;
 use crate::solvers::SdcaLocal;
 use crate::util::prng::Xoshiro256pp;
 
 pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
-    let partition = Partition::by_samples(ds, cfg.m);
+    let partition = match cfg.partition_speeds() {
+        Some(speeds) => Partition::by_samples_weighted(ds, speeds),
+        None => Partition::by_samples(ds, cfg.m),
+    };
     let loss = cfg.loss.make();
     let n = ds.nsamples();
 
-    let cluster = Cluster::new(cfg.m).with_cost(cfg.cost).with_trace(cfg.trace);
+    let cluster = cfg.cluster();
     let run = cluster.run(|ctx| node_main(ctx, &partition, loss.as_ref(), cfg, n));
 
     let mut records = Vec::new();
@@ -59,6 +62,7 @@ fn node_main(
     let y = &shard.y;
     let d = x.nrows();
     let n_local = x.ncols();
+    let nnz = x.nnz() as f64;
 
     let mut w = vec![0.0; d];
     let mut recorder = Recorder::new(ctx.rank);
@@ -73,7 +77,7 @@ fn node_main(
     for outer in 0..cfg.max_outer {
         // ---- metrics: global gradient norm + objective (metrics channel,
         // CoCoA+ itself never forms the gradient) ----
-        ctx.compute("metrics", || {
+        ctx.compute_costed("metrics", || {
             x.at_mul_into(&w, &mut z);
             for i in 0..n_local {
                 g_scal[i] = loss.deriv(z[i], y[i]);
@@ -86,6 +90,7 @@ fn node_main(
                 .map(|(zi, yi)| loss.value(*zi, *yi))
                 .sum();
             gplus[d] = f / n as f64;
+            ((), 4.0 * nnz + 2.0 * n_local as f64 + d as f64)
         });
         ctx.metric_reduce_all(&mut gplus);
         let data_sum = gplus[d];
@@ -100,12 +105,17 @@ fn node_main(
         }
 
         // ---- H local SDCA epochs, then ONE ℝᵈ ReduceAll of Δv ----
-        let mut dv = ctx.compute("sdca_epochs", || local.epoch(&w, cfg.local_epochs, &mut rng));
+        let mut dv = ctx.compute_costed("sdca_epochs", || {
+            let dv = local.epoch(&w, cfg.local_epochs, &mut rng);
+            // Each SDCA epoch touches every local sample's column twice.
+            (dv, cfg.local_epochs as f64 * 6.0 * nnz)
+        });
         ctx.reduce_all(&mut dv);
-        ctx.compute("apply_update", || {
+        ctx.compute_costed("apply_update", || {
             for (wi, di) in w.iter_mut().zip(dv.iter()) {
                 *wi += di;
             }
+            ((), d as f64)
         });
     }
 

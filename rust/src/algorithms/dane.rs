@@ -17,16 +17,19 @@ use crate::algorithms::{OpCounts, RunConfig, RunResult};
 use crate::data::{Dataset, Partition};
 use crate::linalg::ops;
 use crate::loss::Loss;
-use crate::net::{Cluster, NodeCtx};
+use crate::net::NodeCtx;
 use crate::solvers::sag::SagSolver;
 use crate::util::prng::Xoshiro256pp;
 
 pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
-    let partition = Partition::by_samples(ds, cfg.m);
+    let partition = match cfg.partition_speeds() {
+        Some(speeds) => Partition::by_samples_weighted(ds, speeds),
+        None => Partition::by_samples(ds, cfg.m),
+    };
     let loss = cfg.loss.make();
     let n = ds.nsamples();
 
-    let cluster = Cluster::new(cfg.m).with_cost(cfg.cost).with_trace(cfg.trace);
+    let cluster = cfg.cluster();
     let run = cluster.run(|ctx| node_main(ctx, &partition, loss.as_ref(), cfg, n));
 
     let mut records = Vec::new();
@@ -64,6 +67,7 @@ fn node_main(
     let y = &shard.y;
     let d = x.nrows();
     let n_local = x.ncols();
+    let nnz = x.nnz() as f64;
     let inv_nl = 1.0 / n_local as f64;
 
     let mut w = vec![0.0; d];
@@ -83,7 +87,7 @@ fn node_main(
     for outer in 0..cfg.max_outer {
         // ---- local gradient of f_j at w_k (includes λw: f_j has its own
         // regularizer, Eq. (4)) and the global gradient (ReduceAll) ----
-        let data_f = ctx.compute("gradient", || {
+        let data_f = ctx.compute_costed("gradient", || {
             x.at_mul_into(&w, &mut z);
             for i in 0..n_local {
                 g_scal[i] = loss.deriv(z[i], y[i]);
@@ -96,10 +100,24 @@ fn node_main(
                 .zip(y.iter())
                 .map(|(zi, yi)| loss.value(*zi, *yi))
                 .sum();
-            f / n as f64
+            (f / n as f64, 4.0 * nnz + 2.0 * n_local as f64 + 3.0 * d as f64)
         });
-        // Global gradient = (1/m) Σ_j ∇f_j (each f_j carries λw).
+        // Global gradient = (1/m) Σ_j p_j ∇f_j (each f_j carries λw).
+        // On a speed-weighted partition the shards are deliberately
+        // unequal and the classic unweighted average would silently
+        // overweight the small shards' samples; the sample-share weight
+        // p_j = n_j·m/n makes Σ p_j ∇f_j / m exactly ∇f. Uniform
+        // partitions keep p_j = 1 (the seed arithmetic, bit-for-bit —
+        // including the ±1-sample shards of a non-divisible n).
+        let pj = if cfg.partition_speeds().is_some() {
+            n_local as f64 * cfg.m as f64 / n as f64
+        } else {
+            1.0
+        };
         let mut grad = grad_local.clone();
+        if pj != 1.0 {
+            ops::scale(pj, &mut grad);
+        }
         ctx.reduce_all(&mut grad);
         ops::scale(1.0 / cfg.m as f64, &mut grad);
 
@@ -122,18 +140,27 @@ fn node_main(
         for i in 0..d {
             linear[i] = -grad_local[i] + cfg.dane_eta * grad[i] - cfg.mu * w[i];
         }
-        let w_new = ctx.compute("local_solve", || {
+        let w_new = ctx.compute_costed("local_solve", || {
             let solver = SagSolver {
                 x,
                 kappa: cfg.lambda + cfg.mu,
                 linear: &linear,
                 lmax,
             };
-            solver.run(|j, zj| loss.deriv(zj, y[j]), &w, cfg.local_epochs, &mut rng)
+            let w_new = solver.run(|j, zj| loss.deriv(zj, y[j]), &w, cfg.local_epochs, &mut rng);
+            // Per epoch: one sweep of the shard's nonzeros plus an O(d)
+            // dense update per visited sample.
+            let flops = cfg.local_epochs as f64 * (6.0 * nnz + 3.0 * (n_local * d) as f64);
+            (w_new, flops)
         });
 
-        // ---- average the local solutions (second ReduceAll) ----
+        // ---- average the local solutions (second ReduceAll); same
+        // sample-share weighting as the gradient so unequal shards
+        // contribute proportionally to the data they saw ----
         let mut wsum = w_new;
+        if pj != 1.0 {
+            ops::scale(pj, &mut wsum);
+        }
         ctx.reduce_all(&mut wsum);
         for (wi, si) in w.iter_mut().zip(wsum.iter()) {
             *wi = si / cfg.m as f64;

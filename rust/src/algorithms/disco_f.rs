@@ -12,6 +12,14 @@
 //! The preconditioner is block-diagonal: node `j` applies Woodbury
 //! (Alg. 4) to the `d_j×d_j` block built from its feature-slice of the τ
 //! preconditioner samples.
+//!
+//! All node compute runs through `ctx.compute_costed` with flop
+//! estimates, so under [`crate::net::ComputeModel::Modeled`] the
+//! simulated timeline is bit-identical across runs. On heterogeneous
+//! fleets ([`RunConfig::speeds`]) the `weighted_partition` knob sizes the
+//! feature shards by modeled row work ∝ node speed
+//! ([`Partition::by_features_cost_balanced_weighted`]), equalizing
+//! work ÷ speed.
 
 use crate::algorithms::common::{
     damped_scale, forcing, hessian_scalings, precond_columns, HessianSubsample, Recorder,
@@ -20,16 +28,20 @@ use crate::algorithms::{OpCounts, RunConfig, RunResult};
 use crate::data::{Dataset, Partition};
 use crate::linalg::{ops, HvpKernel};
 use crate::loss::Loss;
-use crate::net::{Cluster, NodeCtx};
+use crate::net::NodeCtx;
 use crate::solvers::woodbury::{Woodbury, WoodburyFactory};
 
 pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
-    let partition = if cfg.balanced_partition {
-        // Per PCG step a feature row costs its nnz (HVP) plus ≈2τ flops of
-        // Woodbury apply and ~10 flops of vector updates.
-        Partition::by_features_cost_balanced(ds, cfg.m, 2.0 * cfg.tau as f64 + 10.0)
-    } else {
-        Partition::by_features(ds, cfg.m)
+    // Per PCG step a feature row costs its nnz (HVP) plus ≈2τ flops of
+    // Woodbury apply and ~10 flops of vector updates.
+    let row_overhead = 2.0 * cfg.tau as f64 + 10.0;
+    let partition = match cfg.partition_speeds() {
+        // Heterogeneous fleet: equalize modeled work ÷ speed.
+        Some(speeds) => Partition::by_features_cost_balanced_weighted(ds, speeds, row_overhead),
+        None if cfg.balanced_partition => {
+            Partition::by_features_cost_balanced(ds, cfg.m, row_overhead)
+        }
+        None => Partition::by_features(ds, cfg.m),
     };
     let n = ds.nsamples();
     let loss = cfg.loss.make();
@@ -38,7 +50,7 @@ pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
         seed: cfg.seed,
     };
 
-    let cluster = Cluster::new(cfg.m).with_cost(cfg.cost).with_trace(cfg.trace);
+    let cluster = cfg.cluster();
     let run = cluster.run(|ctx| node_main(ctx, &partition, loss.as_ref(), cfg, &subsample, n));
 
     // Assemble: node outputs are (records, w_slice, ops, converged).
@@ -80,6 +92,9 @@ fn node_main(
     let x = &shard.x; // d_j × n
     let y = &shard.y; // full labels (replicated)
     let dj = x.nrows();
+    let nnz = x.nnz() as f64;
+    let djf = dj as f64;
+    let nf = n as f64;
     let inv_n = 1.0 / n as f64;
 
     let mut w = vec![0.0; dj];
@@ -95,9 +110,17 @@ fn node_main(
     // never change — compute them once (WoodburyFactory); each outer
     // iteration only rescales + refactors the τ×τ system (O(τ²+τ³/3),
     // independent of d). With constant curvature (quadratic loss) even
-    // that is skipped after the first iteration.
-    let precond_factory = WoodburyFactory::new(dj, &precond_columns(x, cfg.tau));
+    // that is skipped after the first iteration. The setup is real
+    // per-node compute, so it runs inside `compute_costed` and lands in
+    // the trace.
+    let precond_factory = ctx.compute_costed("precond_setup", || {
+        let cols = precond_columns(x, cfg.tau);
+        let factory = WoodburyFactory::new(dj, &cols);
+        let tau_f = cols.len() as f64;
+        (factory, tau_f * djf * (1.0 + tau_f))
+    });
     let tau_eff = precond_factory.rank();
+    let tau_f = tau_eff.max(1) as f64;
     let mut cached_precond: Option<Woodbury> = None;
 
     // Fused hybrid HVP kernel for this feature slice (d_j × n): the tall
@@ -118,11 +141,14 @@ fn node_main(
 
     for outer in 0..cfg.max_outer {
         // ---- margins: z = Σ_j (X^[j])ᵀ w^[j] — ONE ℝⁿ ReduceAll ----
-        ctx.compute("margins", || kernel.up_plain_into(x, &w, &mut z));
+        ctx.compute_costed("margins", || {
+            kernel.up_plain_into(x, &w, &mut z);
+            ((), 2.0 * nnz)
+        });
         ctx.reduce_all(&mut z);
 
         // ---- local gradient slice (no communication) ----
-        let (gnorm, fval) = ctx.compute("gradient", || {
+        let (gnorm, fval) = ctx.compute_costed("gradient", || {
             for i in 0..n {
                 g_scal[i] = loss.deriv(z[i], y[i]);
             }
@@ -135,7 +161,10 @@ fn node_main(
                 .map(|(zi, yi)| loss.value(*zi, *yi))
                 .sum::<f64>()
                 * inv_n;
-            (ops::norm2_sq(&grad), data_f / cfg.m as f64 + 0.5 * cfg.lambda * ops::norm2_sq(&w))
+            (
+                (ops::norm2_sq(&grad), data_f / cfg.m as f64 + 0.5 * cfg.lambda * ops::norm2_sq(&w)),
+                2.0 * nnz + 3.0 * nf + 4.0 * djf,
+            )
         });
         // ‖∇f‖² and f pieces: one scalar bundle (metrics + stop test share).
         let (gnorm_sq, fval_sum) = ctx.reduce_all_scalar2(gnorm, fval);
@@ -149,32 +178,50 @@ fn node_main(
             break;
         }
 
-        // ---- Hessian scalings + block preconditioner ----
-        let mask = subsample.mask(n, outer);
-        let (s_hess, div) = hessian_scalings(loss, &z, y, mask.as_ref(), n);
+        // ---- Hessian scalings + block preconditioner; the mask draw and
+        // curvature sweep are real O(n) per-node work each outer
+        // iteration, so they are costed like any compute ----
+        let (s_hess, div, mask) = ctx.compute_costed("hess_scalings", || {
+            let mask = subsample.mask(n, outer);
+            let (s_hess, div) = hessian_scalings(loss, &z, y, mask.as_ref(), n);
+            ((s_hess, div, mask), 4.0 * nf)
+        });
         let inv_div = 1.0 / div;
         if cached_precond.is_none() || !loss.curvature_is_constant() {
-            cached_precond = Some(ctx.compute("precond_build", || {
+            cached_precond = Some(ctx.compute_costed("precond_build", || {
                 let weights: Vec<f64> = (0..tau_eff)
                     .map(|i| s_hess_at(&s_hess, mask.as_ref(), &z, y, loss, i) / tau_eff.max(1) as f64)
                     .collect();
-                precond_factory
-                    .build(&weights, cfg.lambda + cfg.mu)
-                    .expect("preconditioner factorization failed")
+                (
+                    precond_factory
+                        .build(&weights, cfg.lambda + cfg.mu)
+                        .expect("preconditioner factorization failed"),
+                    // τ×τ rescale + Cholesky τ³/3.
+                    tau_f * tau_f + tau_f * tau_f * tau_f / 3.0,
+                )
             }));
         }
         let precond = cached_precond.as_ref().unwrap();
 
         // ---- PCG (Algorithm 3) ----
         let eps = forcing(grad_norm, cfg.pcg_beta, cfg.grad_tol);
-        r.copy_from_slice(&grad);
-        ops::zero(&mut v);
-        ops::zero(&mut hv);
-        ctx.compute("precond_apply", || precond.apply_into(&r, &mut s_dir));
+        // Initialization (preconditioner apply + the ⟨r,s⟩ / ‖r‖² local
+        // products) is real per-node compute — wrapped so the trace's
+        // compute totals are exact.
+        let (rs_local, rn2_local) = ctx.compute_costed("pcg_init", || {
+            r.copy_from_slice(&grad);
+            ops::zero(&mut v);
+            ops::zero(&mut hv);
+            precond.apply_into(&r, &mut s_dir);
+            u.copy_from_slice(&s_dir);
+            (
+                (ops::dot(&r, &s_dir), ops::norm2_sq(&r)),
+                4.0 * djf * tau_f + 6.0 * djf,
+            )
+        });
         ops_count.precond_solve += 1;
-        u.copy_from_slice(&s_dir);
         // rs = Σ_j ⟨r,s⟩ and ‖r‖² — scalar bundle.
-        let (mut rs, rn2) = ctx.reduce_all_scalar2(ops::dot(&r, &s_dir), ops::norm2_sq(&r));
+        let (mut rs, rn2) = ctx.reduce_all_scalar2(rs_local, rn2_local);
         ops_count.dot += 2;
         let mut rnorm = rn2.sqrt();
         let mut pcg_iters = 0usize;
@@ -182,19 +229,23 @@ fn node_main(
         while rnorm > eps && pcg_iters < cfg.max_pcg {
             // (Hu)^[j]: ReduceAll ℝⁿ of (X^[j])ᵀu^[j], then local products.
             // Up pass writes straight into the reduce buffer; down pass is
-            // the fused gather with the (1/h)·(…)+λu epilogue folded in.
-            ctx.compute("hvp_up", || kernel.up_plain_into(x, &u, &mut tn));
+            // the fused gather with the (1/h)·(…)+λu epilogue folded in,
+            // and the ⟨u,Hu⟩ product rides in the same compute segment.
+            ctx.compute_costed("hvp_up", || {
+                kernel.up_plain_into(x, &u, &mut tn);
+                ((), 2.0 * nnz)
+            });
             ctx.reduce_all(&mut tn);
-            ctx.compute("hvp_down", || {
+            let uhu_local = ctx.compute_costed("hvp_down", || {
                 for i in 0..n {
                     tn[i] *= s_hess[i];
                 }
                 kernel.down_into(x, &tn, inv_div, cfg.lambda, &u, &mut hu);
+                (ops::dot(&u, &hu), nf + 2.0 * nnz + 4.0 * djf)
             });
             ops_count.hvp += 1;
 
             // α = Σ⟨r,s⟩ / Σ⟨u,Hu⟩ — one scalar round (numerator known).
-            let uhu_local = ops::dot(&u, &hu);
             ops_count.dot += 1;
             let uhu = ctx.reduce_all_scalar(uhu_local);
             if uhu <= 0.0 {
@@ -207,11 +258,17 @@ fn node_main(
             }
             let alpha = rs / uhu;
 
-            ctx.compute("pcg_update", || {
+            // Vector updates + preconditioner apply + the β-numerator /
+            // residual-norm products, one costed segment.
+            let (rs_new_local, rn2_local) = ctx.compute_costed("pcg_update", || {
                 ops::axpy(alpha, &u, &mut v);
                 ops::axpy(alpha, &hu, &mut hv);
                 ops::axpy(-alpha, &hu, &mut r);
                 precond.apply_into(&r, &mut s_dir);
+                (
+                    (ops::dot(&r, &s_dir), ops::norm2_sq(&r)),
+                    4.0 * djf * tau_f + 10.0 * djf,
+                )
             });
             ops_count.axpy += 3;
             ops_count.precond_solve += 1;
@@ -219,8 +276,6 @@ fn node_main(
             // β numerator + residual norm — one scalar bundle. (Counted as
             // 3 products here + the carried ⟨r_t,s_t⟩ = the paper's 4
             // xᵀy per step, Table 3.)
-            let rs_new_local = ops::dot(&r, &s_dir);
-            let rn2_local = ops::norm2_sq(&r);
             ops_count.dot += 3;
             let (rs_new, rn2) = ctx.reduce_all_scalar2(rs_new_local, rn2_local);
             rnorm = rn2.sqrt();
@@ -235,15 +290,22 @@ fn node_main(
             }
             let beta = rs_new / rs;
             rs = rs_new;
-            ctx.compute("dir_update", || ops::axpby(1.0, &s_dir, beta, &mut u));
+            ctx.compute_costed("dir_update", || {
+                ops::axpby(1.0, &s_dir, beta, &mut u);
+                ((), 3.0 * djf)
+            });
             ops_count.axpy += 1;
         }
 
         // ---- damped step: δ² = Σ_j ⟨v,Hv⟩ (scalar), local update ----
-        let vhv = ctx.reduce_all_scalar(ops::dot(&v, &hv));
+        let vhv_local = ctx.compute_costed("vhv", || (ops::dot(&v, &hv), 2.0 * djf));
+        let vhv = ctx.reduce_all_scalar(vhv_local);
         ops_count.dot += 1;
         let scale = damped_scale(vhv);
-        ctx.compute("step", || ops::axpy(-scale, &v, &mut w));
+        ctx.compute_costed("step", || {
+            ops::axpy(-scale, &v, &mut w);
+            ((), 2.0 * djf)
+        });
         ops_count.axpy += 1;
         last_inner = pcg_iters;
     }

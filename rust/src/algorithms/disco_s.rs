@@ -7,7 +7,11 @@
 //! the local Hessian products `f''_j(w)u_t ∈ ℝᵈ` — two ℝᵈ vector rounds.
 //! All PCG *vector operations* (α, β, updates, the preconditioner solve)
 //! run **on the master only** while workers idle — the load imbalance the
-//! paper's Figure 2 (top) depicts.
+//! paper's Figure 2 (top) depicts. Every master-side step (including the
+//! preconditioner setup and the PCG initialization products) runs inside
+//! `ctx.compute_costed`, so the Fig. 2 compute/idle totals account the
+//! serial fraction exactly and are deterministic under
+//! [`crate::net::ComputeModel::Modeled`].
 //!
 //! The two variants differ only in the master's preconditioner solve:
 //!
@@ -26,7 +30,7 @@ use crate::algorithms::{OpCounts, RunConfig, RunResult};
 use crate::data::{Dataset, Partition};
 use crate::linalg::{ops, HvpKernel};
 use crate::loss::Loss;
-use crate::net::{Cluster, NodeCtx};
+use crate::net::NodeCtx;
 use crate::solvers::sag;
 use crate::solvers::woodbury::{Woodbury, WoodburyFactory};
 use crate::util::prng::Xoshiro256pp;
@@ -39,7 +43,10 @@ pub enum Precond {
 }
 
 pub fn run(ds: &Dataset, cfg: &RunConfig, precond: Precond) -> RunResult {
-    let partition = Partition::by_samples(ds, cfg.m);
+    let partition = match cfg.partition_speeds() {
+        Some(speeds) => Partition::by_samples_weighted(ds, speeds),
+        None => Partition::by_samples(ds, cfg.m),
+    };
     let loss = cfg.loss.make();
     let n = ds.nsamples();
     let subsample = HessianSubsample {
@@ -47,7 +54,7 @@ pub fn run(ds: &Dataset, cfg: &RunConfig, precond: Precond) -> RunResult {
         seed: cfg.seed,
     };
 
-    let cluster = Cluster::new(cfg.m).with_cost(cfg.cost).with_trace(cfg.trace);
+    let cluster = cfg.cluster();
     let run = cluster.run(|ctx| {
         node_main(ctx, &partition, loss.as_ref(), cfg, &subsample, n, precond)
     });
@@ -96,9 +103,15 @@ enum MasterPrecond {
 }
 
 impl MasterPrecond {
-    fn apply(&mut self, r: &[f64], out: &mut [f64]) {
+    /// Solve `P out = r`; returns a flop estimate of the work done (exact
+    /// work for Woodbury, pass-proportional for the SAG fallback) so the
+    /// caller can cost the enclosing compute segment deterministically.
+    fn apply(&mut self, r: &[f64], out: &mut [f64]) -> f64 {
         match self {
-            MasterPrecond::Woodbury(wb) => wb.apply_into(r, out),
+            MasterPrecond::Woodbury(wb) => {
+                wb.apply_into(r, out);
+                4.0 * wb.dim() as f64 * wb.rank().max(1) as f64
+            }
             MasterPrecond::Sag {
                 columns,
                 weights,
@@ -113,6 +126,8 @@ impl MasterPrecond {
                     sag::solve_linear_system(columns, weights, *dreg, r, tol, *max_epochs, rng);
                 *passes += p;
                 out.copy_from_slice(&s);
+                // One SAG pass sweeps the τ dense columns of length d.
+                6.0 * (p.max(1) * columns.len().max(1)) as f64 * r.len() as f64
             }
             MasterPrecond::None => unreachable!("worker applied master preconditioner"),
         }
@@ -135,6 +150,8 @@ fn node_main(
     let y = &shard.y;
     let d = x.nrows();
     let n_local = x.ncols();
+    let nnz = x.nnz() as f64;
+    let df = d as f64;
     let is_master = ctx.rank == MASTER;
     // Global sample offset of this shard (for the subsample mask).
     let offset = shard.range.0;
@@ -151,18 +168,26 @@ fn node_main(
     // §Perf: densify the master's τ preconditioner columns (and for the
     // Woodbury path, their raw Gram) once; per outer iteration only the
     // τ×τ rescale+refactor runs. With constant curvature (quadratic loss)
-    // even that is skipped after the first iteration.
-    let precond_cols = if is_master {
-        precond_columns(x, cfg.tau)
+    // even that is skipped after the first iteration. This is master-only
+    // serial work, so it runs inside `compute_costed` — it belongs to the
+    // Fig. 2 serial fraction.
+    let (precond_cols, precond_factory) = if is_master {
+        ctx.compute_costed("precond_setup", || {
+            let cols = precond_columns(x, cfg.tau);
+            let tau_f = cols.len() as f64;
+            let factory = if precond_kind == Precond::Woodbury {
+                Some(WoodburyFactory::new(d, &cols))
+            } else {
+                None
+            };
+            // Column densify O(τ·d) plus the τ×τ Gram O(τ²·d) when built.
+            let flops = tau_f * df * if factory.is_some() { 1.0 + tau_f } else { 1.0 };
+            ((cols, factory), flops)
+        })
     } else {
-        Vec::new()
+        (Vec::new(), None)
     };
     let tau_eff = precond_cols.len();
-    let precond_factory = if is_master && precond_kind == Precond::Woodbury {
-        Some(WoodburyFactory::new(d, &precond_cols))
-    } else {
-        None
-    };
     let mut cached_precond: Option<MasterPrecond> = None;
 
     // Fused hybrid HVP kernel for this shard (CSR mirror per heuristic),
@@ -192,13 +217,14 @@ fn node_main(
         w = wbuf;
 
         // ---- local gradient + ReduceAll (1 ℝᵈ round) ----
-        ctx.compute("gradient", || {
+        ctx.compute_costed("gradient", || {
             x.at_mul_into(&w, &mut z);
             for i in 0..n_local {
                 g_scal[i] = loss.deriv(z[i], y[i]);
             }
             x.a_mul_into(&g_scal, &mut grad);
             ops::scale(1.0 / n as f64, &mut grad);
+            ((), 4.0 * nnz + n_local as f64 + df)
         });
         ctx.reduce_all(&mut grad);
         ops::axpy(cfg.lambda, &w, &mut grad); // every node adds λw
@@ -221,41 +247,57 @@ fn node_main(
             break;
         }
 
-        // ---- Hessian scalings (shard-local slice of the global mask) ----
-        let mask_global = subsample.mask(n, outer);
-        let local_mask = mask_global.as_ref().map(|(m, h)| {
-            (m[offset..offset + n_local].to_vec(), *h)
+        // ---- Hessian scalings (shard-local slice of the global mask);
+        // real per-node, per-outer-iteration work (O(n) mask draw +
+        // O(n_local) curvature sweep), so it is costed like any compute ----
+        let (s_hess, div) = ctx.compute_costed("hess_scalings", || {
+            let mask_global = subsample.mask(n, outer);
+            let local_mask = mask_global.as_ref().map(|(m, h)| {
+                (m[offset..offset + n_local].to_vec(), *h)
+            });
+            (
+                hessian_scalings(loss, &z, y, local_mask.as_ref(), n),
+                n as f64 + 3.0 * n_local as f64,
+            )
         });
-        let (s_hess, div) = hessian_scalings(loss, &z, y, local_mask.as_ref(), n);
         let inv_div = 1.0 / div;
 
         // ---- master builds (or reuses) its preconditioner ----
         if is_master && (cached_precond.is_none() || !loss.curvature_is_constant()) {
-            cached_precond = Some(ctx.compute("precond_build", || {
+            cached_precond = Some(ctx.compute_costed("precond_build", || {
+                let tau_f = tau_eff.max(1) as f64;
                 let weights: Vec<f64> = (0..tau_eff)
                     .map(|i| loss.second_deriv(z[i], y[i]) / tau_eff.max(1) as f64)
                     .collect();
                 match precond_kind {
-                    Precond::Woodbury => MasterPrecond::Woodbury(
-                        precond_factory
-                            .as_ref()
-                            .unwrap()
-                            .build(&weights, cfg.lambda + cfg.mu)
-                            .expect("preconditioner factorization failed"),
+                    Precond::Woodbury => (
+                        MasterPrecond::Woodbury(
+                            precond_factory
+                                .as_ref()
+                                .unwrap()
+                                .build(&weights, cfg.lambda + cfg.mu)
+                                .expect("preconditioner factorization failed"),
+                        ),
+                        // τ×τ rescale + Cholesky τ³/3.
+                        tau_f * tau_f + tau_f * tau_f * tau_f / 3.0,
                     ),
                     // Original DiSCO (paper §5.2): same τ-sample P, but the
                     // system P·s = r is solved *iteratively by SAG on the
                     // master* at every PCG step while workers idle — the
                     // serial bottleneck the paper measures at >50 %.
-                    Precond::MasterSag => MasterPrecond::Sag {
-                        columns: precond_cols.clone(),
-                        weights,
-                        dreg: cfg.lambda + cfg.mu,
-                        tol_factor: cfg.sag_inner_tol,
-                        max_epochs: cfg.sag_max_epochs,
-                        rng: Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xABCD ^ outer as u64),
-                        passes: 0,
-                    },
+                    Precond::MasterSag => (
+                        MasterPrecond::Sag {
+                            columns: precond_cols.clone(),
+                            weights,
+                            dreg: cfg.lambda + cfg.mu,
+                            tol_factor: cfg.sag_inner_tol,
+                            max_epochs: cfg.sag_max_epochs,
+                            rng: Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xABCD ^ outer as u64),
+                            passes: 0,
+                        },
+                        // Column-table clone O(τ·d).
+                        tau_f * df,
+                    ),
                 }
             }));
         }
@@ -269,19 +311,27 @@ fn node_main(
         // ---- PCG loop (Algorithm 2); master drives, workers serve HVPs --
         let eps = forcing(grad_norm, cfg.pcg_beta, cfg.grad_tol);
         let mut rnorm = f64::INFINITY;
+        let mut rs = 0.0;
         if is_master {
-            r.copy_from_slice(&grad);
-            ops::zero(&mut v);
-            ops::zero(&mut hv);
-            ctx.compute("precond_apply", || precond.apply(&r, &mut s_dir));
+            // The initial preconditioner apply and the ⟨r,s⟩ / ‖r‖ inner
+            // products are master-only serial work: run them inside
+            // `compute` so the Fig. 2 trace attributes them (they used to
+            // leak out of the compute accounting, understating the serial
+            // fraction).
+            let (rs0, rn0) = ctx.compute_costed("pcg_init", || {
+                r.copy_from_slice(&grad);
+                ops::zero(&mut v);
+                ops::zero(&mut hv);
+                let pf = precond.apply(&r, &mut s_dir);
+                u.copy_from_slice(&s_dir);
+                let rn0 = ops::norm2(&r);
+                let rs0 = ops::dot(&r, &s_dir);
+                ((rs0, rn0), pf + 6.0 * df)
+            });
+            rs = rs0;
+            rnorm = rn0;
             ops_count.precond_solve += 1;
-            u.copy_from_slice(&s_dir);
-            rnorm = ops::norm2(&r);
-            ops_count.dot += 1;
-        }
-        let mut rs = if is_master { ops::dot(&r, &s_dir) } else { 0.0 };
-        if is_master {
-            ops_count.dot += 1;
+            ops_count.dot += 2;
         }
         let mut pcg_iters = 0usize;
         // Master-side breakdown flag: set when the preconditioned residual
@@ -310,8 +360,9 @@ fn node_main(
             // Every node: local Hessian product (the balanced part) —
             // one fused two-sweep kernel call, scratch reused across
             // iterations, `hu` doubling as the ReduceAll buffer.
-            ctx.compute("hvp", || {
+            ctx.compute_costed("hvp", || {
                 hvp_kernel.apply(x, &s_hess, u_t, inv_div, 0.0, &mut tn, &mut hu);
+                ((), 4.0 * nnz + 2.0 * df)
             });
             ops_count.hvp += 1;
             ctx.reduce_all(&mut hu);
@@ -319,32 +370,32 @@ fn node_main(
             // Master-only vector operations (workers fall through to the
             // next broadcast and wait — idle time in the Fig. 2 sense).
             if is_master {
-                let completed = ctx.compute("pcg_update", || {
+                let completed = ctx.compute_costed("pcg_update", || {
                     ops::axpy(cfg.lambda, u_t, &mut hu); // + λu
                     let uhu = ops::dot(u_t, &hu);
                     if uhu <= 0.0 {
                         // Curvature vanished along u — α = rs/uhu would
                         // poison the iterate (same guard as `pcg_into`).
                         breakdown = true;
-                        return false;
+                        return (false, 4.0 * df);
                     }
                     let alpha = rs / uhu;
                     ops::axpy(alpha, u_t, &mut v);
                     ops::axpy(alpha, &hu, &mut hv);
                     ops::axpy(-alpha, &hu, &mut r);
-                    precond.apply(&r, &mut s_dir);
+                    let pf = precond.apply(&r, &mut s_dir);
                     let rs_new = ops::dot(&r, &s_dir);
                     rnorm = ops::norm2(&r);
                     if rs_new == 0.0 {
                         // β = rs_new/rs would be 0/0 next step — stop
                         // cleanly with the current iterate.
                         breakdown = true;
-                        return true;
+                        return (true, pf + 14.0 * df);
                     }
                     let beta = rs_new / rs;
                     rs = rs_new;
                     ops::axpby(1.0, &s_dir, beta, &mut u);
-                    true
+                    (true, pf + 17.0 * df)
                 });
                 if completed {
                     ops_count.axpy += 4;
@@ -361,10 +412,11 @@ fn node_main(
 
         // ---- damped step on master ----
         if is_master {
-            ctx.compute("step", || {
+            ctx.compute_costed("step", || {
                 let vhv = ops::dot(&v, &hv);
                 let scale = damped_scale(vhv);
                 ops::axpy(-scale, &v, &mut w);
+                ((), 4.0 * df)
             });
             ops_count.dot += 1;
             ops_count.axpy += 1;

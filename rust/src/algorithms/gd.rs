@@ -12,17 +12,20 @@ use crate::algorithms::{OpCounts, RunConfig, RunResult};
 use crate::data::{Dataset, Partition};
 use crate::linalg::ops;
 use crate::loss::Loss;
-use crate::net::{Cluster, NodeCtx};
+use crate::net::NodeCtx;
 
 pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
-    let partition = Partition::by_samples(ds, cfg.m);
+    let partition = match cfg.partition_speeds() {
+        Some(speeds) => Partition::by_samples_weighted(ds, speeds),
+        None => Partition::by_samples(ds, cfg.m),
+    };
     let loss = cfg.loss.make();
     let n = ds.nsamples();
     // Smoothness estimate: L ≤ φ''max·max‖x_i‖² + λ (margin Hessian bound).
     let max_norm_sq = (0..n).map(|j| ds.x.col_norm_sq(j)).fold(0.0, f64::max);
     let lips = loss.smoothness() * max_norm_sq + cfg.lambda;
 
-    let cluster = Cluster::new(cfg.m).with_cost(cfg.cost).with_trace(cfg.trace);
+    let cluster = cfg.cluster();
     let run = cluster.run(|ctx| node_main(ctx, &partition, loss.as_ref(), cfg, n, lips));
 
     let mut records = Vec::new();
@@ -61,6 +64,7 @@ fn node_main(
     let y = &shard.y;
     let d = x.nrows();
     let n_local = x.ncols();
+    let nnz = x.nnz() as f64;
     let step = 1.0 / lips;
 
     let mut w = vec![0.0; d];
@@ -71,7 +75,7 @@ fn node_main(
     let mut converged = false;
 
     for outer in 0..cfg.max_outer {
-        let data_f = ctx.compute("gradient", || {
+        let data_f = ctx.compute_costed("gradient", || {
             x.at_mul_into(&w, &mut z);
             for i in 0..n_local {
                 g_scal[i] = loss.deriv(z[i], y[i]);
@@ -83,7 +87,7 @@ fn node_main(
                 .zip(y.iter())
                 .map(|(zi, yi)| loss.value(*zi, *yi))
                 .sum();
-            f / n as f64
+            (f / n as f64, 4.0 * nnz + 2.0 * n_local as f64 + d as f64)
         });
         ctx.reduce_all(&mut grad);
         ops::axpy(cfg.lambda, &w, &mut grad);
@@ -97,7 +101,10 @@ fn node_main(
             converged = true;
             break;
         }
-        ctx.compute("step", || ops::axpy(-step, &grad, &mut w));
+        ctx.compute_costed("step", || {
+            ops::axpy(-step, &grad, &mut w);
+            ((), 2.0 * d as f64)
+        });
     }
 
     (recorder.records, w, converged)

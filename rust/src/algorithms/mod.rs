@@ -24,7 +24,7 @@ pub mod gd;
 
 use crate::data::Dataset;
 use crate::loss::LossKind;
-use crate::net::{CommStats, CostModel, Trace};
+use crate::net::{Cluster, CommStats, ComputeModel, CostModel, StragglerConfig, Trace};
 
 /// Algorithm selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -110,6 +110,21 @@ pub struct RunConfig {
     pub node_threads: usize,
     pub seed: u64,
     pub cost: CostModel,
+    /// Per-node relative compute speeds (empty = homogeneous fleet).
+    /// `speeds[j] = 0.25` models a 4× straggler: its simulated compute
+    /// time is divided by the speed.
+    pub speeds: Vec<f64>,
+    /// Size shards proportionally to `speeds` (sample counts for the
+    /// sample-partitioned algorithms, modeled row work for DiSCO-F) so
+    /// per-node work ÷ speed is equalized. No-op while `speeds` is empty.
+    pub weighted_partition: bool,
+    /// Deterministic seeded slowdown episodes (see
+    /// [`crate::net::StragglerConfig`]).
+    pub straggler: Option<StragglerConfig>,
+    /// How node compute advances the simulated clock; `Modeled` makes
+    /// seeded runs bit-identical (flop estimates / rate instead of
+    /// measured wallclock).
+    pub compute: ComputeModel,
     pub trace: bool,
     /// Local epochs for CoCoA+ (H) and DANE's SAG subproblem solver.
     pub local_epochs: usize,
@@ -139,11 +154,42 @@ impl RunConfig {
             node_threads: 1,
             seed: 42,
             cost: CostModel::default(),
+            speeds: Vec::new(),
+            weighted_partition: false,
+            straggler: None,
+            compute: ComputeModel::Measured,
             trace: false,
             local_epochs: 3,
             dane_eta: 1.0,
             sag_inner_tol: 0.05,
             sag_max_epochs: 30,
+        }
+    }
+
+    /// Cluster honoring every simulation knob (cost, trace, speeds,
+    /// straggler injection, compute model) — the single construction path
+    /// for all algorithms.
+    pub fn cluster(&self) -> Cluster {
+        let mut c = Cluster::new(self.m)
+            .with_cost(self.cost)
+            .with_trace(self.trace)
+            .with_compute(self.compute);
+        if !self.speeds.is_empty() {
+            c = c.with_speeds(self.speeds.clone());
+        }
+        if let Some(s) = self.straggler {
+            c = c.with_straggler(s);
+        }
+        c
+    }
+
+    /// Speeds slice when a weighted partition was requested (None ⇒ use
+    /// the uniform split).
+    pub fn partition_speeds(&self) -> Option<&[f64]> {
+        if self.weighted_partition && !self.speeds.is_empty() {
+            Some(&self.speeds)
+        } else {
+            None
         }
     }
 }

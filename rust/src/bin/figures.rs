@@ -5,9 +5,12 @@
 //! disco-figures all                 # everything (≈ minutes at --scale 4)
 //! disco-figures fig3 --scale 8      # one experiment, scaled down
 //! disco-figures table3              # measured per-PCG-step op counts
+//! disco-figures fig2h               # heterogeneity × load-balancing sweep
+//! disco-figures fig3 --collective ring   # reprice collectives (flat|binomial|ring)
 //! ```
 
 use disco::coordinator::experiments::{self, ExperimentConfig};
+use disco::net::CollectiveAlgo;
 use disco::util::cli::Args;
 
 fn main() {
@@ -17,6 +20,7 @@ fn main() {
         .opt("m", Some("4"), "number of simulated nodes")
         .opt("max-outer", Some("60"), "outer iteration cap per run")
         .opt("grad-target", Some("1e-8"), "target gradient norm")
+        .opt("collective", Some("binomial"), "collective pricing: flat | binomial | ring")
         .opt("seed", Some("42"), "PRNG seed");
     let args = match args.parse_env() {
         Ok(a) => a,
@@ -32,6 +36,14 @@ fn main() {
     cfg.max_outer = args.get_usize("max-outer").unwrap();
     cfg.grad_target = args.get_f64("grad-target").unwrap();
     cfg.seed = args.get_u64("seed").unwrap();
+    let calgo = args.get("collective").unwrap();
+    match CollectiveAlgo::parse(&calgo) {
+        Some(algo) => cfg.cost = cfg.cost.with_algo(algo),
+        None => {
+            eprintln!("unknown collective algorithm '{calgo}' (flat | binomial | ring)");
+            std::process::exit(2);
+        }
+    }
 
     let what = args
         .positionals()
@@ -44,6 +56,7 @@ fn main() {
         let summary = match which {
             "fig1" => experiments::figure1(cfg)?,
             "fig2" => experiments::figure2(cfg)?,
+            "fig2h" => experiments::figure2h(cfg)?,
             "fig3" => experiments::figure3(cfg)?,
             "fig4" => experiments::figure4(cfg)?,
             "fig5" => experiments::figure5(cfg)?,
@@ -61,7 +74,7 @@ fn main() {
     };
 
     let list: Vec<&str> = if what == "all" {
-        vec!["fig1", "fig2", "table2", "table34", "table5", "fig3", "fig4", "fig5"]
+        vec!["fig1", "fig2", "fig2h", "table2", "table34", "table5", "fig3", "fig4", "fig5"]
     } else {
         vec![what.as_str()]
     };

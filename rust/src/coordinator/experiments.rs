@@ -9,7 +9,7 @@ use crate::coordinator::complexity::{
 };
 use crate::data::registry;
 use crate::loss::LossKind;
-use crate::net::CostModel;
+use crate::net::{CollectiveAlgo, ComputeModel, CostModel};
 use crate::util::csv::{sci, secs, CsvWriter};
 use std::path::Path;
 
@@ -105,6 +105,9 @@ pub fn figure2(cfg: &ExperimentConfig) -> std::io::Result<String> {
         rc.trace = true;
         rc.max_outer = 3; // a few outer iterations, like the paper's diagram
         rc.grad_tol = 0.0;
+        // Deterministic virtual time: the emitted trace CSVs are a pure
+        // function of the seed (CI diffs two back-to-back runs).
+        rc.compute = ComputeModel::modeled();
         let res = run(&ds, &rc);
         std::fs::create_dir_all(&cfg.out_dir)?;
         std::fs::write(cfg.path(file), res.trace.to_csv())?;
@@ -118,6 +121,92 @@ pub fn figure2(cfg: &ExperimentConfig) -> std::io::Result<String> {
         ));
     }
     Ok(summary)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2h — heterogeneous fleet: straggler ratio × partition policy
+// ---------------------------------------------------------------------------
+
+/// Straggler ratios swept by `fig2h` (1× = homogeneous control).
+pub const FIG2H_RATIOS: &[f64] = &[1.0, 2.0, 4.0, 8.0];
+
+/// The experiment the paper is named for, extended to unequal hardware:
+/// the last node runs `ratio`× slower and the partition either ignores it
+/// (uniform — every node gets equal work, so the straggler gates every
+/// collective) or sizes shards by speed (work ÷ speed equalized). Emits
+/// makespan + utilization + compute-balance per (algo, ratio, partition),
+/// under deterministic modeled compute — rerunning the same seed yields
+/// bit-identical CSVs. The network is priced free here to isolate the
+/// load-balance effect (at down-scaled dataset sizes the α latency term
+/// would swamp the compute signal); comm pricing is covered by Table 4
+/// (including ring-vs-tree) and Fig. 3.
+pub fn figure2h(cfg: &ExperimentConfig) -> std::io::Result<String> {
+    // Always the unscaled "tiny" dataset (256×128 — cheap at any scale):
+    // down-scaling to single-digit feature counts would make the weighted
+    // cut points degenerate and the heterogeneity sweep meaningless.
+    let ds = registry::load("tiny").expect("registry dataset");
+    let lambda = registry::spec("tiny").unwrap().lambda;
+    let mut w = CsvWriter::create(
+        cfg.path("fig2h_hetero.csv"),
+        &[
+            "algo",
+            "ratio",
+            "partition",
+            "makespan_s",
+            "utilization",
+            "compute_balance",
+            "idle_s",
+        ],
+    )?;
+    let mut out = String::from(
+        "fig2h: straggler ratio × {uniform, speed-weighted} partition (modeled compute)\n",
+    );
+    for &ratio in FIG2H_RATIOS {
+        // Node m−1 is the straggler: `ratio`× slower than the rest.
+        let speeds: Vec<f64> = (0..cfg.m)
+            .map(|j| if j + 1 == cfg.m { 1.0 / ratio } else { 1.0 })
+            .collect();
+        for weighted in [false, true] {
+            for algo in [AlgoKind::DiscoS, AlgoKind::DiscoF, AlgoKind::DiscoOrig] {
+                let mut rc = cfg.run_config(algo, LossKind::Logistic, lambda);
+                rc.trace = true;
+                rc.max_outer = 3;
+                rc.grad_tol = 0.0;
+                rc.cost = CostModel::zero();
+                rc.compute = ComputeModel::modeled();
+                // Hold the cut *policy* fixed (cost-balanced rows for
+                // DiSCO-F) so the uniform-vs-weighted columns differ only
+                // by speed weighting — at ratio 1 the two partitions are
+                // identical and the makespan gap is exactly zero.
+                rc.balanced_partition = true;
+                rc.speeds = speeds.clone();
+                rc.weighted_partition = weighted;
+                let res = run(&ds, &rc);
+                let idle = (0..cfg.m).map(|node| res.trace.node_totals(node).1).sum::<f64>();
+                let partition = if weighted { "speed-weighted" } else { "uniform" };
+                w.row(&[
+                    algo.name().into(),
+                    format!("{ratio}"),
+                    partition.into(),
+                    sci(res.sim_seconds),
+                    format!("{:.4}", res.trace.utilization()),
+                    format!("{:.4}", res.trace.compute_balance()),
+                    sci(idle),
+                ])?;
+                out.push_str(&format!(
+                    "{:<8} ratio {ratio:<3} {partition:<14} makespan {:>10.3e} s  util {:>5.1}%  balance {:.2}\n",
+                    algo.name(),
+                    res.sim_seconds,
+                    100.0 * res.trace.utilization(),
+                    res.trace.compute_balance(),
+                ));
+            }
+        }
+    }
+    out.push_str(
+        "(speed-weighted shards equalize work/speed: the straggler stops gating the fleet)\n",
+    );
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------
@@ -164,12 +253,13 @@ pub fn table2(cfg: &ExperimentConfig) -> std::io::Result<String> {
 pub fn tables34(cfg: &ExperimentConfig) -> std::io::Result<String> {
     let ds = cfg.dataset("tiny");
     let lambda = registry::spec("tiny").unwrap().lambda;
-    let probe = |algo: AlgoKind, steps: usize| -> RunResult {
+    let probe = |algo: AlgoKind, steps: usize, calgo: CollectiveAlgo| -> RunResult {
         let mut rc = cfg.run_config(algo, LossKind::Logistic, lambda);
         rc.max_outer = 1;
         rc.max_pcg = steps;
         rc.grad_tol = 0.0;
         rc.pcg_beta = 0.0; // force exactly max_pcg steps
+        rc.cost = rc.cost.with_algo(calgo);
         run(&ds, &rc)
     };
     let mut table3 = CsvWriter::create(
@@ -178,12 +268,35 @@ pub fn tables34(cfg: &ExperimentConfig) -> std::io::Result<String> {
     )?;
     let mut table4 = CsvWriter::create(
         cfg.path("table4_comm.csv"),
-        &["algo", "vector_rounds_per_step", "doubles_per_step", "collectives"],
+        &[
+            "algo",
+            "vector_rounds_per_step",
+            "doubles_per_step",
+            "collectives",
+            "comm_s_flat",
+            "comm_s_binomial",
+            "comm_s_ring",
+        ],
     )?;
     let mut out = String::new();
     for algo in [AlgoKind::DiscoS, AlgoKind::DiscoF] {
-        let one = probe(algo, 1);
-        let two = probe(algo, 2);
+        // Ring-vs-tree accounting: one (1-step, 2-step) probe pair per
+        // collective algorithm; the pair matching the configured algo is
+        // reused for the op-count / round-count columns (the counts are
+        // pricing-independent), so nothing is simulated twice.
+        let pairs: Vec<(RunResult, RunResult)> = CollectiveAlgo::all()
+            .iter()
+            .map(|&calgo| (probe(algo, 1, calgo), probe(algo, 2, calgo)))
+            .collect();
+        let per_step_comm: Vec<f64> = pairs
+            .iter()
+            .map(|(o, t)| t.stats.modeled_comm_seconds - o.stats.modeled_comm_seconds)
+            .collect();
+        let sel = CollectiveAlgo::all()
+            .iter()
+            .position(|&c| c == cfg.cost.algo)
+            .expect("configured collective algo is always one of all()");
+        let (one, two) = &pairs[sel];
         out.push_str(&format!("--- {} (per PCG step) ---\n", algo.name()));
         for node in 0..cfg.m {
             let a = &one.node_ops[node];
@@ -225,9 +338,13 @@ pub fn tables34(cfg: &ExperimentConfig) -> std::io::Result<String> {
                 two.stats.reduce_all - one.stats.reduce_all,
                 two.stats.broadcast - one.stats.broadcast
             ),
+            sci(per_step_comm[0]),
+            sci(per_step_comm[1]),
+            sci(per_step_comm[2]),
         ])?;
         out.push_str(&format!(
-            "comm per step: {dr} vector rounds, {dd} doubles\n\n"
+            "comm per step: {dr} vector rounds, {dd} doubles; modeled s/step flat={:.2e} binomial={:.2e} ring={:.2e}\n\n",
+            per_step_comm[0], per_step_comm[1], per_step_comm[2]
         ));
     }
     Ok(out)

@@ -9,5 +9,5 @@ pub mod registry;
 pub mod synthetic;
 
 pub use dataset::Dataset;
-pub use partition::{balanced_ranges, Partition, PartitionKind, Shard};
+pub use partition::{balanced_ranges, weighted_ranges, Partition, PartitionKind, Shard};
 pub use synthetic::SyntheticConfig;

@@ -28,6 +28,35 @@ pub fn balanced_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// Contiguous split of `0..total` into parts sized proportionally to
+/// `weights` (every part gets ≥ 1 item). Cut `k` lands at
+/// `round(total · (w₁+…+w_k)/W)`, clamped so all parts stay nonempty —
+/// deterministic, order-preserving quota apportionment. Used to size
+/// shards by node *speed* so per-node work ÷ speed is equalized on a
+/// heterogeneous fleet.
+pub fn weighted_ranges(total: usize, weights: &[f64]) -> Vec<(usize, usize)> {
+    let parts = weights.len();
+    assert!(parts > 0, "need at least one part");
+    assert!(total >= parts, "cannot split {total} items into {parts} nonempty parts");
+    assert!(
+        weights.iter().all(|w| w.is_finite() && *w > 0.0),
+        "weights must be positive and finite"
+    );
+    let wsum: f64 = weights.iter().sum();
+    let mut cuts = Vec::with_capacity(parts + 1);
+    cuts.push(0usize);
+    let mut acc = 0.0;
+    for (j, wj) in weights.iter().enumerate().take(parts - 1) {
+        acc += *wj;
+        let ideal = (total as f64 * acc / wsum).round() as usize;
+        let lo = cuts[j] + 1; // keep part j nonempty
+        let hi = total - (parts - 1 - j); // leave room for the rest
+        cuts.push(ideal.clamp(lo, hi));
+    }
+    cuts.push(total);
+    cuts.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
 /// Which axis a shard slices.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PartitionKind {
@@ -70,12 +99,8 @@ pub struct Partition {
 }
 
 impl Partition {
-    /// Split by samples (columns): node j gets `X[:, r_j]`, `y[r_j]`.
-    /// Sparse shards are zero-copy views sharing the dataset's nonzero
-    /// buffers (see `CscMatrix::col_block`) — partitioning costs O(m·n̄)
-    /// pointer work, not O(nnz) copies.
-    pub fn by_samples(ds: &Dataset, m: usize) -> Partition {
-        let ranges = balanced_ranges(ds.nsamples(), m);
+    /// Build a sample (column-block) partition from explicit ranges.
+    fn samples_from_ranges(ds: &Dataset, ranges: &[(usize, usize)]) -> Partition {
         let shards = ranges
             .iter()
             .enumerate()
@@ -95,9 +120,8 @@ impl Partition {
         }
     }
 
-    /// Split by features (rows): node j gets `X[r_j, :]` and all labels.
-    pub fn by_features(ds: &Dataset, m: usize) -> Partition {
-        let ranges = balanced_ranges(ds.dim(), m);
+    /// Build a feature (row-block) partition from explicit ranges.
+    fn features_from_ranges(ds: &Dataset, ranges: &[(usize, usize)]) -> Partition {
         let shards = ranges
             .iter()
             .enumerate()
@@ -115,6 +139,35 @@ impl Partition {
             n: ds.nsamples(),
             d: ds.dim(),
         }
+    }
+
+    /// Split by samples (columns): node j gets `X[:, r_j]`, `y[r_j]`.
+    /// Sparse shards are zero-copy views sharing the dataset's nonzero
+    /// buffers (see `CscMatrix::col_block`) — partitioning costs O(m·n̄)
+    /// pointer work, not O(nnz) copies.
+    pub fn by_samples(ds: &Dataset, m: usize) -> Partition {
+        Self::samples_from_ranges(ds, &balanced_ranges(ds.nsamples(), m))
+    }
+
+    /// Speed-weighted sample split: node j's shard holds a sample count
+    /// proportional to `speeds[j]`, so on a heterogeneous fleet the
+    /// modeled per-node HVP work divided by node speed is equalized (the
+    /// load-balancing counterpart of the paper's Figure 2 story; cf. Ma &
+    /// Takáč 1510.06688 on partitioning as a load-balancing lever).
+    pub fn by_samples_weighted(ds: &Dataset, speeds: &[f64]) -> Partition {
+        Self::samples_from_ranges(ds, &weighted_ranges(ds.nsamples(), speeds))
+    }
+
+    /// Split by features (rows): node j gets `X[r_j, :]` and all labels.
+    pub fn by_features(ds: &Dataset, m: usize) -> Partition {
+        Self::features_from_ranges(ds, &balanced_ranges(ds.dim(), m))
+    }
+
+    /// Speed-weighted feature split by *count* (used directly for dense
+    /// data, where every row weighs the same; sparse data wants
+    /// [`Partition::by_features_cost_balanced_weighted`]).
+    pub fn by_features_weighted(ds: &Dataset, speeds: &[f64]) -> Partition {
+        Self::features_from_ranges(ds, &weighted_ranges(ds.dim(), speeds))
     }
 
     /// Work-balanced feature split: contiguous ranges whose **modeled
@@ -138,8 +191,29 @@ impl Partition {
     /// [`Partition::by_features_balanced`] with an explicit per-row
     /// overhead (in nnz-equivalent units). DiSCO-F uses `2τ + 10`.
     pub fn by_features_cost_balanced(ds: &Dataset, m: usize, row_overhead: f64) -> Partition {
+        Self::by_features_cost_balanced_weighted(ds, &vec![1.0; m], row_overhead)
+    }
+
+    /// Speed-weighted work-balanced feature split: contiguous ranges whose
+    /// modeled per-node work is proportional to `speeds[j]` — i.e.
+    /// `work_j / speed_j` is equalized, so a 4× straggler gets a quarter
+    /// of the nonzeros and stops gating every PCG step. Cut `k` lands
+    /// where the row-work prefix reaches `(s₁+…+s_k)/S` of the total;
+    /// uniform speeds reproduce [`Partition::by_features_cost_balanced`]
+    /// exactly (bit-for-bit cut points). Every node gets ≥ 1 feature.
+    pub fn by_features_cost_balanced_weighted(
+        ds: &Dataset,
+        speeds: &[f64],
+        row_overhead: f64,
+    ) -> Partition {
+        let m = speeds.len();
         let d = ds.dim();
+        assert!(m > 0, "need at least one node");
         assert!(d >= m, "cannot split {d} features over {m} nodes");
+        assert!(
+            speeds.iter().all(|s| s.is_finite() && *s > 0.0),
+            "speeds must be positive and finite"
+        );
         // Row nnz histogram (count once over the sparse structure).
         let mut row_nnz = vec![0u64; d];
         match &ds.x {
@@ -153,26 +227,35 @@ impl Partition {
             }
             crate::linalg::DataMatrix::Dense(_) => {
                 // Dense: every row weighs the same; degrade to the count
-                // split.
-                return Self::by_features(ds, m);
+                // split (speed-weighted when speeds are non-uniform).
+                return Self::by_features_weighted(ds, speeds);
             }
         }
         let weight = |nnz: u64| nnz as f64 + row_overhead;
         let total: f64 = row_nnz.iter().map(|&v| weight(v)).sum();
+        let wsum: f64 = speeds.iter().sum();
+        // Cumulative speed prefix: cut k belongs at the work quantile
+        // (s₁+…+s_k)/S. With uniform speeds cum[k-1]·total/wsum reduces to
+        // the old k/m quantile with identical float arithmetic.
+        let cum: Vec<f64> = speeds
+            .iter()
+            .scan(0.0, |a, s| {
+                *a += *s;
+                Some(*a)
+            })
+            .collect();
         let mut cuts = Vec::with_capacity(m + 1);
         cuts.push(0usize);
         let mut acc = 0.0;
-        let mut next_target = 1.0;
         for (i, w) in row_nnz.iter().enumerate() {
             acc += weight(*w);
             // Cut after row i once the k-th quantile is reached, keeping
             // enough rows for the remaining nodes.
             while cuts.len() <= m - 1
-                && acc * m as f64 >= next_target * total
+                && acc * wsum >= cum[cuts.len() - 1] * total
                 && i + 1 <= d - (m - cuts.len())
             {
                 cuts.push(i + 1);
-                next_target += 1.0;
             }
         }
         while cuts.len() < m {
@@ -181,23 +264,8 @@ impl Partition {
             cuts.push((last + 1).min(d - (m - cuts.len())));
         }
         cuts.push(d);
-        let shards = cuts
-            .windows(2)
-            .enumerate()
-            .map(|(node, wdw)| Shard {
-                node,
-                kind: PartitionKind::Features,
-                range: (wdw[0], wdw[1]),
-                x: ds.x.row_block(wdw[0], wdw[1]),
-                y: ds.y.clone(),
-            })
-            .collect();
-        Partition {
-            kind: PartitionKind::Features,
-            shards,
-            n: ds.nsamples(),
-            d,
-        }
+        let ranges: Vec<(usize, usize)> = cuts.windows(2).map(|w| (w[0], w[1])).collect();
+        Self::features_from_ranges(ds, &ranges)
     }
 
     pub fn m(&self) -> usize {
@@ -342,6 +410,112 @@ mod tests {
         assert_eq!(p.m(), 3);
         let sizes: Vec<usize> = p.shards.iter().map(|s| s.len()).collect();
         assert_eq!(sizes, vec![8, 8, 8]);
+    }
+
+    #[test]
+    fn weighted_ranges_cover_and_scale_with_weights() {
+        let w = [1.0, 1.0, 1.0, 0.25];
+        let r = weighted_ranges(130, &w);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r[0].0, 0);
+        assert_eq!(r.last().unwrap().1, 130);
+        for win in r.windows(2) {
+            assert_eq!(win[0].1, win[1].0, "gap or overlap");
+        }
+        let sizes: Vec<usize> = r.iter().map(|(s, e)| e - s).collect();
+        // 130 · 1/3.25 = 40 for the full-speed nodes, 10 for the straggler.
+        assert_eq!(sizes, vec![40, 40, 40, 10]);
+        // Uniform weights behave like a balanced split.
+        let u = weighted_ranges(10, &[1.0; 4]);
+        let usizes: Vec<usize> = u.iter().map(|(s, e)| e - s).collect();
+        assert_eq!(usizes.iter().sum::<usize>(), 10);
+        assert!(usizes.iter().all(|s| *s >= 2));
+    }
+
+    #[test]
+    fn weighted_ranges_keep_every_part_nonempty() {
+        // Extreme skew must still hand everyone ≥ 1 item.
+        let r = weighted_ranges(6, &[1000.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(r.len(), 6);
+        assert!(r.iter().all(|(s, e)| e > s), "{r:?}");
+        assert_eq!(r.last().unwrap().1, 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "weights must be positive")]
+    fn weighted_ranges_reject_nonpositive_weights() {
+        let _ = weighted_ranges(10, &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn weighted_sample_partition_reassembles() {
+        let ds = SyntheticConfig::new("t", 41, 13).seed(11).generate();
+        let p = Partition::by_samples_weighted(&ds, &[1.0, 1.0, 1.0, 0.25]);
+        assert_eq!(p.m(), 4);
+        assert!(p.shards[3].len() < p.shards[0].len() / 2, "straggler shard must shrink");
+        let full = ds.x.to_dense();
+        let mut col = 0;
+        for shard in &p.shards {
+            for jj in 0..shard.x.ncols() {
+                for i in 0..ds.dim() {
+                    assert_eq!(shard.x.to_dense().get(i, jj), full.get(i, col));
+                }
+                assert_eq!(shard.y[jj], ds.y[col]);
+                col += 1;
+            }
+        }
+        assert_eq!(col, ds.nsamples());
+    }
+
+    #[test]
+    fn uniform_weighted_cost_split_matches_unweighted() {
+        // The weighted generalization must reproduce the seed algorithm
+        // bit-for-bit at uniform speeds — same cut points.
+        let ds = SyntheticConfig::new("zipf", 300, 120).zipf(1.1).seed(12).generate();
+        let a = Partition::by_features_cost_balanced(&ds, 4, 42.0);
+        let b = Partition::by_features_cost_balanced_weighted(&ds, &[1.0; 4], 42.0);
+        let ranges = |p: &Partition| p.shards.iter().map(|s| s.range).collect::<Vec<_>>();
+        assert_eq!(ranges(&a), ranges(&b));
+    }
+
+    #[test]
+    fn speed_weighted_feature_split_reduces_straggler_makespan() {
+        // Makespan proxy: max_j work_j / speed_j. The speed-weighted split
+        // must strictly beat handing the 4× straggler a full-size shard.
+        let ds = SyntheticConfig::new("zipf", 400, 160).zipf(1.2).seed(8).generate();
+        let speeds = [1.0, 1.0, 1.0, 0.25];
+        let uniform = Partition::by_features_balanced(&ds, 4);
+        let weighted = Partition::by_features_cost_balanced_weighted(&ds, &speeds, 0.0);
+        let cover = |p: &Partition| {
+            assert_eq!(p.shards[0].range.0, 0);
+            assert_eq!(p.shards.last().unwrap().range.1, ds.dim());
+            for w in p.shards.windows(2) {
+                assert_eq!(w[0].range.1, w[1].range.0);
+            }
+            assert!(p.shards.iter().all(|s| !s.is_empty()));
+        };
+        cover(&weighted);
+        let nnz_total = |p: &Partition| p.shards.iter().map(|s| s.x.nnz()).sum::<usize>();
+        assert_eq!(nnz_total(&uniform), nnz_total(&weighted));
+        let makespan = |p: &Partition| {
+            p.shards
+                .iter()
+                .zip(speeds.iter())
+                .map(|(s, sp)| s.x.nnz() as f64 / sp)
+                .fold(0.0, f64::max)
+        };
+        assert!(
+            makespan(&weighted) < makespan(&uniform),
+            "weighted {:.0} !< uniform {:.0}",
+            makespan(&weighted),
+            makespan(&uniform)
+        );
+        // The straggler's shard carries a sub-uniform share of the work.
+        assert!(
+            (weighted.shards[3].x.nnz() as f64) < 0.6 * nnz_total(&weighted) as f64 / 4.0,
+            "straggler shard too heavy: {}",
+            weighted.shards[3].x.nnz()
+        );
     }
 
     #[test]

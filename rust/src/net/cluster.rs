@@ -11,16 +11,150 @@
 //! ## Simulated clock
 //!
 //! Each node carries a simulated clock (seconds). [`NodeCtx::compute`]
-//! advances it by measured wallclock of the closure; collectives
-//! synchronize all clocks to `max(arrival) + T_comm`, recording the
-//! waiting gap as *idle* and the transfer as *comm* in the trace —
-//! exactly the green/red/yellow boxes of the paper's Figure 2.
+//! advances it by measured wallclock of the closure (divided by the node's
+//! [`speed`](NodeCtx::speed)); [`NodeCtx::compute_costed`] additionally
+//! accepts a flop estimate so that under [`ComputeModel::Modeled`] the
+//! clock advances by `flops / rate` — fully deterministic, bit-identical
+//! across repeated runs. Collectives synchronize all clocks to
+//! `max(arrival) + T_comm`, recording the waiting gap as *idle* and the
+//! transfer as *comm* in the trace — exactly the green/red/yellow boxes of
+//! the paper's Figure 2.
+//!
+//! ## Heterogeneity
+//!
+//! [`Cluster::with_speeds`] assigns each node a relative compute speed
+//! (simulated compute time divides by it), and
+//! [`Cluster::with_straggler`] injects deterministic, seeded slowdown
+//! episodes (a node's speed is divided by `slowdown` for `len` consecutive
+//! compute segments). Both feed the trace's idle accounting: a slow node
+//! arrives late at the next collective and every peer's wait is recorded
+//! as idle — the load-imbalance experiment (`fig2h`) the paper's
+//! load-balancing claim is about.
+//!
+//! ## Failure semantics
+//!
+//! A panic inside one node's SPMD closure is caught on that node's thread,
+//! recorded, and both collective barriers are poisoned so peers blocked in
+//! (or later entering) a collective unwind instead of waiting forever.
+//! `Cluster::run` then panics with `cluster node failed: …` carrying the
+//! original message. (std's `Barrier` has no panic-poisoning — without
+//! this teardown a single failed node deadlocks the whole run.)
+//!
+//! ## Determinism
+//!
+//! All collective pricing is independent of thread scheduling: AllGather
+//! is priced from the *summed* deposited contribution sizes (not any one
+//! rank's guess — the barrier leader is an arbitrary thread), reductions
+//! combine contributions in rank order, and with `ComputeModel::Modeled`
+//! (plus `advance`/`compute_costed` compute) `sim_seconds`, traces, and
+//! `CommStats` are bit-identical run to run.
 
-use crate::net::cost::{CollectiveKind, CostModel};
+use crate::net::cost::{CollectiveKind, ComputeModel, CostModel};
 use crate::net::stats::CommStats;
 use crate::net::trace::{Activity, Segment, Trace};
-use std::sync::{Barrier, Condvar, Mutex};
+use crate::util::prng::Xoshiro256pp;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex};
 use std::time::Instant;
+
+/// Deterministic, seeded straggler injection: while an episode is active
+/// the node's effective speed is divided by `slowdown`. Episodes start
+/// and end on compute-segment boundaries, driven by a per-rank PRNG —
+/// identical across repeated runs of the same seed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerConfig {
+    /// Per-compute-segment probability that an idle node starts an episode.
+    pub prob: f64,
+    /// Speed divisor while an episode is active (≥ 1).
+    pub slowdown: f64,
+    /// Episode length, counted in compute segments.
+    pub len: u32,
+    /// Episode stream seed (mixed with the rank).
+    pub seed: u64,
+}
+
+impl StragglerConfig {
+    pub fn new(prob: f64, slowdown: f64, len: u32, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&prob), "episode probability in [0,1]");
+        assert!(slowdown >= 1.0, "slowdown is a divisor ≥ 1");
+        assert!(len >= 1, "episodes last at least one segment");
+        Self { prob, slowdown, len, seed }
+    }
+}
+
+struct StragglerState {
+    cfg: StragglerConfig,
+    rng: Xoshiro256pp,
+    /// Segments left in the current episode (0 = not straggling).
+    remaining: u32,
+}
+
+/// Marker payload for the panic that tears down peers after another node
+/// failed; `Cluster::run` recognizes it and keeps the original error.
+struct PeerAbort;
+
+fn peer_abort() -> ! {
+    std::panic::panic_any(PeerAbort)
+}
+
+/// Error returned by [`AbortBarrier::wait`] when the barrier was poisoned.
+struct Aborted;
+
+/// Reusable two-phase barrier with abort support. Unlike `std::Barrier`
+/// (which has **no** panic-poisoning — waiters sleep forever if a peer
+/// dies), `poison` wakes every current and future waiter with an error.
+struct AbortBarrier {
+    n: usize,
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    count: usize,
+    generation: u64,
+    poisoned: bool,
+}
+
+impl AbortBarrier {
+    fn new(n: usize) -> Self {
+        Self {
+            n,
+            state: Mutex::new(BarrierState { count: 0, generation: 0, poisoned: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until all `n` threads arrive. `Ok(true)` for exactly one
+    /// thread per generation (the leader — the last arriver).
+    fn wait(&self) -> Result<bool, Aborted> {
+        let mut st = self.state.lock().unwrap();
+        if st.poisoned {
+            return Err(Aborted);
+        }
+        let gen = st.generation;
+        st.count += 1;
+        if st.count == self.n {
+            st.count = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+            return Ok(true);
+        }
+        while st.generation == gen && !st.poisoned {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.poisoned {
+            return Err(Aborted);
+        }
+        Ok(false)
+    }
+
+    /// Mark the barrier dead and wake every waiter.
+    fn poison(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.poisoned = true;
+        self.cv.notify_all();
+    }
+}
 
 /// Shared collective state (the "network").
 struct Blackboard {
@@ -28,13 +162,11 @@ struct Blackboard {
     cost: CostModel,
     /// Per-rank deposited payloads for the in-flight collective.
     slots: Mutex<Slots>,
-    barrier_a: Barrier,
-    barrier_b: Barrier,
+    barrier_a: AbortBarrier,
+    barrier_b: AbortBarrier,
     stats: Mutex<CommStats>,
-    /// Panic flag: if any node panics, others unblock via poisoned barriers
-    /// anyway (std Barrier is panic-safe); this records it for reporting.
+    /// First failure (panic message) observed on any node.
     failed: Mutex<Option<String>>,
-    _cv: Condvar,
 }
 
 struct Slots {
@@ -46,6 +178,11 @@ struct Slots {
     depart_clock: f64,
     /// Max arrival clock (start of the comm window).
     comm_start: f64,
+    /// Priced message size of the current collective, set by the leader
+    /// (for AllGather: the true summed contribution size). Every rank
+    /// mirrors this value into its `local_stats` so the per-node and
+    /// global accounting agree and are scheduling-independent.
+    priced_doubles: usize,
 }
 
 /// Per-node handle passed to the SPMD closure.
@@ -55,6 +192,11 @@ pub struct NodeCtx<'a> {
     board: &'a Blackboard,
     /// Simulated clock, seconds.
     pub clock: f64,
+    /// Relative compute speed of this node (1.0 = baseline; 0.5 = half
+    /// speed). Simulated compute time is *divided* by it.
+    pub speed: f64,
+    compute_model: ComputeModel,
+    straggler: Option<StragglerState>,
     /// Node-local mirror of the global communication counters (identical
     /// on every node since all participate in every collective); lets the
     /// SPMD code snapshot rounds/bytes mid-run without touching the shared
@@ -66,46 +208,92 @@ pub struct NodeCtx<'a> {
 }
 
 impl<'a> NodeCtx<'a> {
-    /// Run `f` as node-local computation: advances the simulated clock by
-    /// the measured wallclock and records a compute segment.
-    pub fn compute<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
-        let t = Instant::now();
-        let out = f();
-        let dt = t.elapsed().as_secs_f64();
+    /// Draw the straggler factor for the next compute segment (1.0 when
+    /// healthy, `slowdown` while an episode is active).
+    fn straggle_factor(&mut self) -> f64 {
+        match &mut self.straggler {
+            None => 1.0,
+            Some(st) => {
+                if st.remaining > 0 {
+                    st.remaining -= 1;
+                    st.cfg.slowdown
+                } else if st.rng.next_f64() < st.cfg.prob {
+                    st.remaining = st.cfg.len - 1;
+                    st.cfg.slowdown
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Advance the clock by `base_seconds` scaled by this node's speed and
+    /// any active straggler episode, recording a compute segment.
+    fn push_compute(&mut self, label: &str, base_seconds: f64) {
+        let factor = self.straggle_factor();
+        let dt = base_seconds * factor / self.speed;
         if self.trace_enabled {
+            let label = if factor > 1.0 {
+                format!("{label}+straggle")
+            } else {
+                label.to_string()
+            };
             self.trace.push(Segment {
                 node: self.rank,
                 start: self.clock,
                 end: self.clock + dt,
                 activity: Activity::Compute,
-                label: label.to_string(),
+                label,
             });
         }
         self.clock += dt;
+    }
+
+    /// Run `f` as node-local computation: advances the simulated clock by
+    /// the measured wallclock (over the node's speed) and records a
+    /// compute segment.
+    pub fn compute<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.push_compute(label, t.elapsed().as_secs_f64());
         out
+    }
+
+    /// Like [`compute`](Self::compute), but the closure also returns a
+    /// flop estimate of its work. Under [`ComputeModel::Modeled`] the
+    /// clock advances by `flops / rate` — deterministic, bit-identical
+    /// across runs; under `Measured` the estimate is ignored and measured
+    /// wallclock is used (the seed behaviour).
+    pub fn compute_costed<T>(&mut self, label: &str, f: impl FnOnce() -> (T, f64)) -> T {
+        match self.compute_model {
+            ComputeModel::Measured => {
+                let t = Instant::now();
+                let (out, _flops) = f();
+                self.push_compute(label, t.elapsed().as_secs_f64());
+                out
+            }
+            ComputeModel::Modeled { flops_per_sec } => {
+                let (out, flops) = f();
+                self.push_compute(label, flops.max(0.0) / flops_per_sec);
+                out
+            }
+        }
     }
 
     /// Advance the simulated clock without running anything (models
     /// compute whose cost is known analytically; used in what-if benches).
+    /// Scaled by the node's speed / straggler state like any compute.
     pub fn advance(&mut self, label: &str, seconds: f64) {
-        if self.trace_enabled {
-            self.trace.push(Segment {
-                node: self.rank,
-                start: self.clock,
-                end: self.clock + seconds,
-                activity: Activity::Compute,
-                label: label.to_string(),
-            });
-        }
-        self.clock += seconds;
+        self.push_compute(label, seconds);
     }
 
     /// Core collective protocol. `combine` runs once (on the barrier
     /// leader) over all deposited contributions; its output is returned to
-    /// every node. `k_doubles` is the modeled message size. With
-    /// `metric = true` the collective is free and unaccounted — used by the
-    /// experiment harness to observe convergence without perturbing the
-    /// paper's round/byte counts.
+    /// every node. `k_doubles` is the modeled message size (ignored for
+    /// AllGather, which is priced from the true summed contribution
+    /// size). With `metric = true` the collective is free and unaccounted
+    /// — used by the experiment harness to observe convergence without
+    /// perturbing the paper's round/byte counts.
     fn collective(
         &mut self,
         kind: CollectiveKind,
@@ -130,34 +318,49 @@ impl<'a> NodeCtx<'a> {
             s.contribs[self.rank] = payload;
             s.clocks[self.rank] = arrival;
         }
-        let wr = self.board.barrier_a.wait();
-        if wr.is_leader() {
+        let leader = match self.board.barrier_a.wait() {
+            Ok(l) => l,
+            Err(Aborted) => peer_abort(),
+        };
+        if leader {
             let mut s = self.board.slots.lock().unwrap();
             let comm_start = s.clocks.iter().cloned().fold(0.0, f64::max);
+            // AllGather contributions may be ragged; price the true summed
+            // size rather than any single rank's guess — the leader is an
+            // arbitrary thread, so a rank-local size would make pricing
+            // (and CommStats) depend on thread scheduling.
+            let k_eff = if kind == CollectiveKind::AllGather {
+                s.contribs.iter().map(|c| c.len()).sum()
+            } else {
+                k_doubles
+            };
             let t_comm = if metric {
                 0.0
             } else {
-                self.board.cost.time(kind, k_doubles, self.m)
+                self.board.cost.time(kind, k_eff, self.m)
             };
             s.comm_start = comm_start;
             s.depart_clock = comm_start + t_comm;
+            s.priced_doubles = k_eff;
             combine(&mut s);
             if !metric {
                 self.board
                     .stats
                     .lock()
                     .unwrap()
-                    .record(kind, k_doubles, t_comm);
+                    .record(kind, k_eff, t_comm);
             }
         }
-        self.board.barrier_b.wait();
-        let (result, comm_start, depart) = {
+        if self.board.barrier_b.wait().is_err() {
+            peer_abort();
+        }
+        let (result, comm_start, depart, k_eff) = {
             let s = self.board.slots.lock().unwrap();
-            (s.result.clone(), s.comm_start, s.depart_clock)
+            (s.result.clone(), s.comm_start, s.depart_clock, s.priced_doubles)
         };
         if !metric {
             self.local_stats
-                .record(kind, k_doubles, (depart - comm_start).max(0.0));
+                .record(kind, k_eff, (depart - comm_start).max(0.0));
         }
         if self.trace_enabled {
             if comm_start > arrival + 1e-12 {
@@ -259,20 +462,12 @@ impl<'a> NodeCtx<'a> {
     }
 
     /// Concatenate per-node parts in rank order; everyone gets the result.
-    /// (DiSCO-F's final "Integration" step, Alg. 3 line 12.)
+    /// (DiSCO-F's final "Integration" step, Alg. 3 line 12.) Parts may be
+    /// ragged; the collective is priced from the true total gathered size
+    /// (computed by the leader from the deposits, deterministically).
     pub fn all_gather_concat(&mut self, part: &[f64]) -> Vec<f64> {
-        // Modeled size: total gathered vector.
-        let total: usize = {
-            // every node contributes its own part; leader sums sizes
-            part.len() // local; real total computed in combine
-        };
-        let _ = total;
         let payload = part.to_vec();
-        // Size for pricing is the full concatenated length; we cannot know
-        // it before the exchange, so combine computes it — price with the
-        // local part × m as the standard all-gather volume approximation.
-        let k_price = part.len() * self.m.max(1);
-        self.collective(CollectiveKind::AllGather, k_price, payload, |s| {
+        self.collective(CollectiveKind::AllGather, 0, payload, |s| {
             let mut acc = Vec::new();
             for c in &s.contribs {
                 acc.extend_from_slice(c);
@@ -307,6 +502,12 @@ pub struct Cluster {
     pub m: usize,
     pub cost: CostModel,
     pub trace: bool,
+    /// Per-node relative compute speeds (empty = uniform 1.0).
+    pub speeds: Vec<f64>,
+    /// Deterministic straggler-episode injection (None = healthy fleet).
+    pub straggler: Option<StragglerConfig>,
+    /// How node compute advances the simulated clock.
+    pub compute: ComputeModel,
 }
 
 impl Cluster {
@@ -315,6 +516,9 @@ impl Cluster {
             m,
             cost: CostModel::default(),
             trace: false,
+            speeds: Vec::new(),
+            straggler: None,
+            compute: ComputeModel::Measured,
         }
     }
 
@@ -328,9 +532,32 @@ impl Cluster {
         self
     }
 
+    /// Per-node compute-speed multipliers (len must equal `m`; all > 0).
+    pub fn with_speeds(mut self, speeds: Vec<f64>) -> Self {
+        assert_eq!(speeds.len(), self.m, "one speed per node");
+        assert!(
+            speeds.iter().all(|s| s.is_finite() && *s > 0.0),
+            "speeds must be positive and finite"
+        );
+        self.speeds = speeds;
+        self
+    }
+
+    pub fn with_straggler(mut self, cfg: StragglerConfig) -> Self {
+        self.straggler = Some(cfg);
+        self
+    }
+
+    pub fn with_compute(mut self, model: ComputeModel) -> Self {
+        self.compute = model;
+        self
+    }
+
     /// Run the SPMD closure on every node. The closure receives the node
     /// context and must follow SPMD discipline: all nodes execute the same
-    /// sequence of collectives.
+    /// sequence of collectives. A panic on any node aborts the whole run
+    /// (peers are woken out of their collectives) and this function panics
+    /// with `cluster node failed: …`.
     pub fn run<T: Send>(
         &self,
         f: impl Fn(&mut NodeCtx) -> T + Sync,
@@ -345,12 +572,12 @@ impl Cluster {
                 result: Vec::new(),
                 depart_clock: 0.0,
                 comm_start: 0.0,
+                priced_doubles: 0,
             }),
-            barrier_a: Barrier::new(self.m),
-            barrier_b: Barrier::new(self.m),
+            barrier_a: AbortBarrier::new(self.m),
+            barrier_b: AbortBarrier::new(self.m),
             stats: Mutex::new(CommStats::default()),
             failed: Mutex::new(None),
-            _cv: Condvar::new(),
         };
         let wall = Instant::now();
         let mut outputs: Vec<Option<(T, f64, Trace)>> = Vec::with_capacity(self.m);
@@ -363,29 +590,59 @@ impl Cluster {
             let f = &f;
             let mut handles = Vec::new();
             for (rank, slot) in outputs.iter_mut().enumerate() {
+                let speed = self.speeds.get(rank).copied().unwrap_or(1.0);
+                let straggler = self.straggler.map(|cfg| StragglerState {
+                    rng: Xoshiro256pp::seed_from_u64(
+                        cfg.seed ^ (rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    ),
+                    remaining: 0,
+                    cfg,
+                });
+                let compute_model = self.compute;
                 handles.push(scope.spawn(move || {
                     let mut ctx = NodeCtx {
                         rank,
                         m: board.m,
                         board,
                         clock: 0.0,
+                        speed,
+                        compute_model,
+                        straggler,
                         local_stats: CommStats::default(),
                         trace: Trace::new(board.m),
                         trace_enabled,
                     };
-                    let out = f(&mut ctx);
-                    *slot = Some((out, ctx.clock, std::mem::take(&mut ctx.trace)));
+                    match catch_unwind(AssertUnwindSafe(|| f(&mut ctx))) {
+                        Ok(out) => {
+                            *slot = Some((out, ctx.clock, std::mem::take(&mut ctx.trace)));
+                        }
+                        Err(payload) => {
+                            // Peer-abort panics are secondary: keep only
+                            // the original failure's message.
+                            if !payload.is::<PeerAbort>() {
+                                let msg = payload
+                                    .downcast_ref::<String>()
+                                    .cloned()
+                                    .or_else(|| {
+                                        payload.downcast_ref::<&str>().map(|s| s.to_string())
+                                    })
+                                    .unwrap_or_else(|| "node panicked".into());
+                                let mut failed = board.failed.lock().unwrap();
+                                if failed.is_none() {
+                                    *failed = Some(format!("rank {rank}: {msg}"));
+                                }
+                            }
+                            // Wake everyone blocked in (or entering) a
+                            // collective so the run tears down instead of
+                            // deadlocking.
+                            board.barrier_a.poison();
+                            board.barrier_b.poison();
+                        }
+                    }
                 }));
             }
             for h in handles {
-                if let Err(p) = h.join() {
-                    let msg = p
-                        .downcast_ref::<String>()
-                        .cloned()
-                        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
-                        .unwrap_or_else(|| "node panicked".into());
-                    *board.failed.lock().unwrap() = Some(msg);
-                }
+                let _ = h.join();
             }
         });
         if let Some(msg) = board.failed.lock().unwrap().take() {
@@ -474,6 +731,8 @@ mod tests {
         for out in run.outputs {
             assert_eq!(out, expect);
         }
+        // Priced from the true summed size: 1+2+3+4 = 10 doubles.
+        assert_eq!(run.stats.vector_doubles, 10);
     }
 
     #[test]
@@ -500,7 +759,7 @@ mod tests {
             }
             acc
         });
-        let expect: f64 = (0..200).map(|i| (0 + 1 + 2 + 3) as f64 * i as f64).sum();
+        let expect: f64 = (0..200).map(|i| 6.0 * i as f64).sum();
         for out in run.outputs {
             assert_eq!(out, expect);
         }
@@ -512,6 +771,7 @@ mod tests {
         let cost = CostModel {
             alpha: 1e-3,
             beta: f64::INFINITY,
+            ..CostModel::default()
         };
         let run = Cluster::new(4).with_cost(cost).with_trace(true).run(|ctx| {
             // Rank 3 is slow: everyone must wait for it.
@@ -558,5 +818,115 @@ mod tests {
         let (comp, _, _) = run.trace.node_totals(0);
         assert!(comp >= 0.005);
         assert!(run.trace.utilization() > 0.0);
+    }
+
+    #[test]
+    fn speeds_scale_simulated_compute() {
+        // Node 1 runs at half speed: its 10 ms of analytic work takes
+        // 20 ms of simulated time; the collective syncs everyone there.
+        let run = Cluster::new(2)
+            .with_cost(CostModel::zero())
+            .with_speeds(vec![1.0, 0.5])
+            .with_trace(true)
+            .run(|ctx| {
+                ctx.advance("work", 0.010);
+                ctx.barrier();
+                ctx.clock
+            });
+        for c in &run.outputs {
+            assert!((c - 0.020).abs() < 1e-12, "clock {c}");
+        }
+        let (_, idle0, _) = run.trace.node_totals(0);
+        assert!((idle0 - 0.010).abs() < 1e-12, "fast node idles {idle0}");
+    }
+
+    #[test]
+    fn modeled_compute_is_deterministic() {
+        let run_once = || {
+            Cluster::new(3)
+                .with_compute(ComputeModel::modeled())
+                .with_trace(true)
+                .run(|ctx| {
+                    let rank = ctx.rank;
+                    for i in 0..20 {
+                        ctx.compute_costed("flops", || ((), 1e6 * (1 + (rank + i) % 3) as f64));
+                        let _ = ctx.reduce_all_scalar(1.0);
+                    }
+                    ctx.clock
+                })
+        };
+        let a = run_once();
+        let b = run_once();
+        assert!(a.sim_seconds > 0.0);
+        assert_eq!(a.sim_seconds.to_bits(), b.sim_seconds.to_bits());
+        assert_eq!(a.trace.to_csv(), b.trace.to_csv());
+        for (x, y) in a.outputs.iter().zip(b.outputs.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn straggler_episodes_slow_and_are_deterministic() {
+        let cfg = StragglerConfig::new(0.3, 4.0, 2, 99);
+        let run_once = |straggle: bool| {
+            let mut c = Cluster::new(2).with_cost(CostModel::zero());
+            if straggle {
+                c = c.with_straggler(cfg);
+            }
+            c.run(|ctx| {
+                for _ in 0..50 {
+                    ctx.advance("work", 1e-3);
+                    ctx.barrier();
+                }
+                ctx.clock
+            })
+        };
+        let healthy = run_once(false);
+        let a = run_once(true);
+        let b = run_once(true);
+        assert_eq!(a.sim_seconds.to_bits(), b.sim_seconds.to_bits());
+        assert!(
+            a.sim_seconds > healthy.sim_seconds,
+            "episodes must add simulated time: {} !> {}",
+            a.sim_seconds,
+            healthy.sim_seconds
+        );
+    }
+
+    fn panic_payload_msg(p: Box<dyn std::any::Any + Send>) -> String {
+        p.downcast_ref::<String>()
+            .cloned()
+            .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "non-string panic".into())
+    }
+
+    #[test]
+    fn panicking_node_aborts_peers_instead_of_deadlocking() {
+        // Guarded by a timeout so a regression fails fast instead of
+        // hanging the test runner forever.
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let res = std::panic::catch_unwind(|| {
+                Cluster::new(3).with_cost(CostModel::zero()).run(|ctx| {
+                    if ctx.rank == 1 {
+                        panic!("boom on rank 1");
+                    }
+                    // Peers would block here forever without barrier abort.
+                    let mut v = vec![1.0; 4];
+                    ctx.reduce_all(&mut v);
+                    v[0]
+                })
+            });
+            let msg = match res {
+                Ok(_) => "run returned without panicking".to_string(),
+                Err(p) => panic_payload_msg(p),
+            };
+            let _ = tx.send(msg);
+        });
+        let msg = rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .expect("cluster deadlocked on a panicking node");
+        assert!(msg.contains("cluster node failed"), "{msg}");
+        assert!(msg.contains("boom on rank 1"), "{msg}");
     }
 }

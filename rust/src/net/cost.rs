@@ -1,19 +1,47 @@
-//! α–β communication cost model.
+//! α–β communication cost model with pluggable collective algorithms.
 //!
 //! The paper's experiments ran MPI on four EC2 m3.large instances; here the
 //! cluster is simulated in-process (DESIGN.md §3), so elapsed time on the
-//! Fig. 3 x-axis is *compute wallclock + modeled network time*. The model
-//! is the standard postal/LogP-style α–β form:
+//! Fig. 3 x-axis is *compute + modeled network time*. The model is the
+//! standard postal/LogP-style α–β form, generalized over the algorithm
+//! implementing each collective:
 //!
 //! ```text
-//! T(collective, k doubles) = α·⌈log₂ m⌉ + factor(collective)·(8k)/β
+//! T(collective, k doubles, m nodes) = α·hops(algo, m) + factor(algo, m)·(8k)/β
 //! ```
 //!
-//! with `factor` 2 for ReduceAll (reduce-scatter + all-gather), 1 for
-//! one-way Broadcast/Reduce/AllGather. Defaults approximate 10 GbE with
-//! ~50 µs per-message latency, the m3.large-era fabric.
+//! ## Pricing table
+//!
+//! `hops` is the latency-critical-path length and `factor` scales the
+//! bandwidth term (per [`CollectiveAlgo`]); one-way = Broadcast / Reduce /
+//! AllGather, RA = ReduceAll:
+//!
+//! | algorithm         | hops one-way | hops RA  | factor one-way | factor RA    |
+//! |-------------------|--------------|----------|----------------|--------------|
+//! | [`FlatTree`]      | m−1          | 2(m−1)   | m−1            | 2(m−1)       |
+//! | [`BinomialTree`]  | ⌈log₂ m⌉     | ⌈log₂ m⌉ | 1              | 2            |
+//! | [`Ring`]          | m−1          | 2(m−1)   | (m−1)/m        | 2(m−1)/m     |
+//!
+//! * **Flat tree**: the root exchanges a full-size message with each of the
+//!   m−1 peers serially — the naive bound, worst everywhere but m = 2.
+//! * **Binomial tree** (default; matches the seed model bit-for-bit):
+//!   recursive doubling, pipelined so ReduceAll's reduce-scatter +
+//!   all-gather halves share the ⌈log₂ m⌉ critical path while moving the
+//!   data twice (factor 2).
+//! * **Ring / recursive halving**: bandwidth-optimal long-message
+//!   algorithms — each of the m−1 (resp. 2(m−1)) steps moves only k/m
+//!   values, so the bandwidth term approaches the 8k/β (resp. 16k/β)
+//!   lower bound at the price of Θ(m) latency hops.
+//!
+//! The crossover (tree wins small messages, ring wins large ones) is
+//! exactly the tradeoff MPI implementations switch on; the `fig2h` /
+//! Table 4 accounting exposes it for the paper's workloads.
+//!
+//! [`FlatTree`]: CollectiveAlgo::FlatTree
+//! [`BinomialTree`]: CollectiveAlgo::BinomialTree
+//! [`Ring`]: CollectiveAlgo::Ring
 
-/// Which collective is being priced (affects the bandwidth factor).
+/// Which collective is being priced (affects hops and bandwidth factor).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CollectiveKind {
     ReduceAll,
@@ -31,12 +59,100 @@ impl CollectiveKind {
             CollectiveKind::AllGather => "all_gather",
         }
     }
+}
 
-    fn bandwidth_factor(&self) -> f64 {
+/// Which algorithm implements the collectives (see module pricing table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveAlgo {
+    /// Root exchanges full-size messages with every peer, serially.
+    FlatTree,
+    /// Binomial/recursive-doubling tree — MPI's short-message default.
+    BinomialTree,
+    /// Ring (one-way) / recursive-halving (ReduceAll) — bandwidth-optimal
+    /// for long messages.
+    Ring,
+}
+
+impl CollectiveAlgo {
+    pub fn name(&self) -> &'static str {
         match self {
-            CollectiveKind::ReduceAll => 2.0,
-            _ => 1.0,
+            CollectiveAlgo::FlatTree => "flat",
+            CollectiveAlgo::BinomialTree => "binomial",
+            CollectiveAlgo::Ring => "ring",
         }
+    }
+
+    pub fn parse(s: &str) -> Option<CollectiveAlgo> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "flat" | "flat-tree" => Some(CollectiveAlgo::FlatTree),
+            "binomial" | "tree" | "binomial-tree" => Some(CollectiveAlgo::BinomialTree),
+            "ring" | "recursive-halving" => Some(CollectiveAlgo::Ring),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> &'static [CollectiveAlgo] {
+        &[
+            CollectiveAlgo::FlatTree,
+            CollectiveAlgo::BinomialTree,
+            CollectiveAlgo::Ring,
+        ]
+    }
+
+    /// Latency critical-path length (messages on the slowest chain).
+    fn hops(&self, kind: CollectiveKind, m: usize) -> f64 {
+        let mf = m as f64;
+        match self {
+            CollectiveAlgo::BinomialTree => mf.log2().ceil(),
+            CollectiveAlgo::FlatTree | CollectiveAlgo::Ring => match kind {
+                CollectiveKind::ReduceAll => 2.0 * (mf - 1.0),
+                _ => mf - 1.0,
+            },
+        }
+    }
+
+    /// Bandwidth multiplier on the 8k/β term.
+    fn bandwidth_factor(&self, kind: CollectiveKind, m: usize) -> f64 {
+        let mf = m as f64;
+        match self {
+            CollectiveAlgo::BinomialTree => match kind {
+                CollectiveKind::ReduceAll => 2.0,
+                _ => 1.0,
+            },
+            CollectiveAlgo::FlatTree => match kind {
+                CollectiveKind::ReduceAll => 2.0 * (mf - 1.0),
+                _ => mf - 1.0,
+            },
+            CollectiveAlgo::Ring => match kind {
+                CollectiveKind::ReduceAll => 2.0 * (mf - 1.0) / mf,
+                _ => (mf - 1.0) / mf,
+            },
+        }
+    }
+}
+
+/// How node-local compute advances the simulated clock.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum ComputeModel {
+    /// Measured wallclock of each compute closure (the seed behaviour:
+    /// real execution time on this machine's cores).
+    #[default]
+    Measured,
+    /// Deterministic virtual time: costed closures advance the clock by
+    /// their flop estimate divided by this rate. Closures without an
+    /// estimate (plain [`crate::net::NodeCtx::compute`]) fall back to
+    /// measured wallclock, so fully reproducible runs must use
+    /// [`crate::net::NodeCtx::compute_costed`] /
+    /// [`crate::net::NodeCtx::advance`] throughout (the DiSCO family
+    /// does).
+    Modeled { flops_per_sec: f64 },
+}
+
+impl ComputeModel {
+    /// Deterministic virtual time at ~2 Gflop/s per node — the m3.large-era
+    /// single-core throughput the α–β defaults are calibrated against.
+    pub fn modeled() -> Self {
+        ComputeModel::Modeled { flops_per_sec: 2e9 }
     }
 }
 
@@ -46,6 +162,9 @@ pub struct CostModel {
     pub alpha: f64,
     /// Bandwidth, bytes/second (default 1.25 GB/s ≈ 10 GbE).
     pub beta: f64,
+    /// Collective algorithm the fabric runs (default binomial tree — the
+    /// seed model's pricing, bit-for-bit).
+    pub algo: CollectiveAlgo,
 }
 
 impl Default for CostModel {
@@ -53,6 +172,7 @@ impl Default for CostModel {
         Self {
             alpha: 50e-6,
             beta: 1.25e9,
+            algo: CollectiveAlgo::BinomialTree,
         }
     }
 }
@@ -60,7 +180,11 @@ impl Default for CostModel {
 impl CostModel {
     /// A free network (rounds-only accounting; useful in unit tests).
     pub fn zero() -> Self {
-        Self { alpha: 0.0, beta: f64::INFINITY }
+        Self {
+            alpha: 0.0,
+            beta: f64::INFINITY,
+            algo: CollectiveAlgo::BinomialTree,
+        }
     }
 
     /// A deliberately slow network (stress communication-bound behaviour —
@@ -69,7 +193,14 @@ impl CostModel {
         Self {
             alpha: 1e-3,
             beta: 125e6, // ~1 GbE
+            algo: CollectiveAlgo::BinomialTree,
         }
+    }
+
+    /// Select the collective algorithm (builder style).
+    pub fn with_algo(mut self, algo: CollectiveAlgo) -> Self {
+        self.algo = algo;
+        self
     }
 
     /// Modeled wall time for one collective over `k` f64 values among `m`
@@ -78,9 +209,9 @@ impl CostModel {
         if m <= 1 {
             return 0.0;
         }
-        let hops = (m as f64).log2().ceil();
         let bytes = 8.0 * k_doubles as f64;
-        self.alpha * hops + kind.bandwidth_factor() * bytes / self.beta
+        self.alpha * self.algo.hops(kind, m)
+            + self.algo.bandwidth_factor(kind, m) * bytes / self.beta
     }
 }
 
@@ -112,7 +243,11 @@ mod tests {
 
     #[test]
     fn reduceall_twice_oneway_cost() {
-        let c = CostModel { alpha: 0.0, beta: 1e9 };
+        let c = CostModel {
+            alpha: 0.0,
+            beta: 1e9,
+            ..CostModel::default()
+        };
         let ra = c.time(CollectiveKind::ReduceAll, 1000, 4);
         let bc = c.time(CollectiveKind::Broadcast, 1000, 4);
         assert!((ra - 2.0 * bc).abs() < 1e-12);
@@ -130,5 +265,71 @@ mod tests {
         assert!(
             c.time(CollectiveKind::Broadcast, 1, 16) > c.time(CollectiveKind::Broadcast, 1, 4)
         );
+    }
+
+    #[test]
+    fn algo_parse_round_trips() {
+        for &a in CollectiveAlgo::all() {
+            assert_eq!(CollectiveAlgo::parse(a.name()), Some(a));
+        }
+        assert_eq!(CollectiveAlgo::parse("tree"), Some(CollectiveAlgo::BinomialTree));
+        assert_eq!(CollectiveAlgo::parse("nope"), None);
+    }
+
+    #[test]
+    fn tree_wins_latency_ring_wins_bandwidth() {
+        let c = CostModel::default();
+        let m = 8;
+        // Scalar message: binomial's 3 hops beat ring's 14.
+        let tree = c.with_algo(CollectiveAlgo::BinomialTree);
+        let ring = c.with_algo(CollectiveAlgo::Ring);
+        assert!(
+            tree.time(CollectiveKind::ReduceAll, 1, m) < ring.time(CollectiveKind::ReduceAll, 1, m)
+        );
+        // 10M doubles: ring's 2(m−1)/m factor beats the tree's 2.
+        assert!(
+            ring.time(CollectiveKind::ReduceAll, 10_000_000, m)
+                < tree.time(CollectiveKind::ReduceAll, 10_000_000, m)
+        );
+    }
+
+    #[test]
+    fn flat_tree_is_worst_at_scale() {
+        let c = CostModel::default();
+        let flat = c.with_algo(CollectiveAlgo::FlatTree);
+        for k in [1usize, 1_000_000] {
+            for &other in &[CollectiveAlgo::BinomialTree, CollectiveAlgo::Ring] {
+                assert!(
+                    flat.time(CollectiveKind::ReduceAll, k, 8)
+                        >= c.with_algo(other).time(CollectiveKind::ReduceAll, k, 8),
+                    "flat must not beat {} at k={k}",
+                    other.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_bandwidth_approaches_lower_bound() {
+        // factor → 1 per one-way direction as m grows: at m=16 the ring's
+        // ReduceAll factor is 2·15/16 = 1.875 < 2.
+        let c = CostModel {
+            alpha: 0.0,
+            ..CostModel::default()
+        }
+        .with_algo(CollectiveAlgo::Ring);
+        let t = c.time(CollectiveKind::ReduceAll, 1000, 16);
+        let bound = 2.0 * 8.0 * 1000.0 / c.beta;
+        assert!(t < bound, "{t} !< {bound}");
+        assert!(t > 0.9 * bound);
+    }
+
+    #[test]
+    fn compute_model_default_is_measured() {
+        assert_eq!(ComputeModel::default(), ComputeModel::Measured);
+        match ComputeModel::modeled() {
+            ComputeModel::Modeled { flops_per_sec } => assert!(flops_per_sec > 0.0),
+            ComputeModel::Measured => panic!("modeled() must be Modeled"),
+        }
     }
 }

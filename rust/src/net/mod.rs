@@ -1,17 +1,20 @@
 //! Simulated distributed runtime: SPMD cluster over threads, MPI-style
-//! collectives with exact round/byte accounting, an α–β network cost
-//! model, and per-node activity traces (Figure 2).
+//! collectives with exact round/byte accounting, a pluggable α–β network
+//! cost model (flat-tree / binomial-tree / ring collectives), per-node
+//! compute-speed multipliers with deterministic straggler injection, and
+//! per-node activity traces (Figure 2).
 //!
-//! Known limitation (shared with real MPI): a panic inside one node's SPMD
-//! closure while peers wait at a collective deadlocks the run; SPMD code
-//! must not panic between matched collectives.
+//! Failure semantics: a panic inside one node's SPMD closure aborts the
+//! whole run — the barriers are poisoned, peers blocked in a collective
+//! unwind, and [`Cluster::run`] panics with `cluster node failed: …`
+//! (earlier revisions deadlocked here; see `net::cluster` module docs).
 
 pub mod cluster;
 pub mod cost;
 pub mod stats;
 pub mod trace;
 
-pub use cluster::{Cluster, ClusterRun, NodeCtx};
-pub use cost::{CollectiveKind, CostModel};
+pub use cluster::{Cluster, ClusterRun, NodeCtx, StragglerConfig};
+pub use cost::{CollectiveAlgo, CollectiveKind, ComputeModel, CostModel};
 pub use stats::CommStats;
 pub use trace::{Activity, Segment, Trace};

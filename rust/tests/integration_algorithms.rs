@@ -384,6 +384,7 @@ fn slow_network_punishes_disco_f_on_wide_n() {
     cfg_f.cost = disco::net::CostModel {
         alpha: 0.0,
         beta: 125e6,
+        ..disco::net::CostModel::default()
     };
     cfg_f.tau = 32;
     let mut cfg_s = cfg_f.clone();
@@ -398,4 +399,83 @@ fn slow_network_punishes_disco_f_on_wide_n() {
         rf.stats.modeled_comm_seconds,
         rs.stats.modeled_comm_seconds
     );
+}
+
+#[test]
+fn speed_weighted_partition_beats_uniform_on_seeded_straggler() {
+    // A seeded 4× straggler (last node at quarter speed) under the
+    // deterministic compute model: sizing shards by speed must strictly
+    // cut the simulated makespan for both partitioning regimes, with a
+    // fixed PCG budget so both runs do identical algorithmic work.
+    let ds = SyntheticConfig::new("lb", 256, 96)
+        .density(0.15)
+        .label_noise(0.05)
+        .seed(31)
+        .generate();
+    for algo in [AlgoKind::DiscoS, AlgoKind::DiscoF] {
+        let mut cfg = base_cfg(algo, LossKind::Logistic);
+        cfg.compute = disco::net::ComputeModel::modeled();
+        cfg.speeds = vec![1.0, 1.0, 1.0, 0.25];
+        // Fix the cut policy (cost-balanced rows for DiSCO-F) so the two
+        // runs differ only by speed weighting, not by balancing strategy.
+        cfg.balanced_partition = true;
+        cfg.tau = 16;
+        cfg.max_outer = 2;
+        cfg.max_pcg = 8;
+        cfg.pcg_beta = 0.0; // force exactly max_pcg steps per outer
+        cfg.grad_tol = 0.0;
+        let uniform = run(&ds, &cfg);
+        let mut cfg_w = cfg.clone();
+        cfg_w.weighted_partition = true;
+        let weighted = run(&ds, &cfg_w);
+        assert!(
+            weighted.sim_seconds < uniform.sim_seconds,
+            "{}: weighted {:.6}s !< uniform {:.6}s",
+            algo.name(),
+            weighted.sim_seconds,
+            uniform.sim_seconds
+        );
+        // Identical communication volume: the win is pure load balance.
+        assert_eq!(
+            weighted.stats.vector_rounds, uniform.stats.vector_rounds,
+            "{}: partitioning must not change the round count",
+            algo.name()
+        );
+    }
+}
+
+#[test]
+fn modeled_runs_are_bit_identical_end_to_end() {
+    // The acceptance bar for the simulator: a seeded config under
+    // ComputeModel::Modeled reproduces sim_seconds, the trace CSV, and
+    // CommStats bit-for-bit across repeats — for the master-driven, the
+    // balanced, and the SAG-preconditioned variants.
+    let ds = tiny(29);
+    for algo in [AlgoKind::DiscoS, AlgoKind::DiscoF, AlgoKind::DiscoOrig] {
+        let mut cfg = base_cfg(algo, LossKind::Logistic);
+        cfg.compute = disco::net::ComputeModel::modeled();
+        cfg.cost = disco::net::CostModel::default();
+        cfg.trace = true;
+        cfg.max_outer = 3;
+        cfg.grad_tol = 0.0;
+        let a = run(&ds, &cfg);
+        let b = run(&ds, &cfg);
+        assert!(a.sim_seconds > 0.0, "{}", algo.name());
+        assert_eq!(
+            a.sim_seconds.to_bits(),
+            b.sim_seconds.to_bits(),
+            "{}: sim_seconds flapped",
+            algo.name()
+        );
+        assert_eq!(a.stats, b.stats, "{}: CommStats flapped", algo.name());
+        assert_eq!(
+            a.trace.to_csv(),
+            b.trace.to_csv(),
+            "{}: trace flapped",
+            algo.name()
+        );
+        for (wa, wb) in a.w.iter().zip(b.w.iter()) {
+            assert_eq!(wa.to_bits(), wb.to_bits(), "{}: iterate flapped", algo.name());
+        }
+    }
 }

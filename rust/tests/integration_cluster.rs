@@ -122,6 +122,101 @@ fn trace_covers_makespan_without_negative_segments() {
     assert!(idle0 > 0.0, "node 0 (fastest) should have idled");
 }
 
+fn panic_payload_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    p.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "non-string panic".into())
+}
+
+#[test]
+fn panicking_rank_aborts_the_run_instead_of_hanging() {
+    // A node that dies *between* matched collectives used to leave its
+    // peers blocked in Barrier::wait forever. The run must now tear down
+    // and report the failure. Timeout-guarded so a regression fails the
+    // test instead of hanging the suite.
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let res = std::panic::catch_unwind(|| {
+            Cluster::new(4).with_cost(CostModel::zero()).run(|ctx| {
+                let mut v = vec![1.0; 8];
+                ctx.reduce_all(&mut v); // one healthy round first
+                if ctx.rank == 2 {
+                    panic!("rank 2 exploded mid-iteration");
+                }
+                ctx.reduce_all(&mut v); // peers park here without the fix
+                v[0]
+            })
+        });
+        let msg = match res {
+            Ok(_) => "run returned without panicking".to_string(),
+            Err(p) => panic_payload_msg(p),
+        };
+        let _ = tx.send(msg);
+    });
+    let msg = rx
+        .recv_timeout(std::time::Duration::from_secs(60))
+        .expect("cluster deadlocked on a panicking node");
+    assert!(msg.contains("cluster node failed"), "{msg}");
+    assert!(msg.contains("rank 2 exploded"), "{msg}");
+}
+
+#[test]
+fn traced_ragged_all_gather_runs_are_bit_identical() {
+    // Ragged AllGather used to be priced with the barrier leader's local
+    // size guess — an arbitrary thread — making sim_seconds and CommStats
+    // flap run-to-run. Ten repeats must now agree bit-for-bit.
+    let run_once = || {
+        Cluster::new(4)
+            .with_cost(CostModel::default())
+            .with_trace(true)
+            .run(|ctx| {
+                let rank = ctx.rank;
+                let mut acc = 0.0;
+                for round in 0..25 {
+                    ctx.advance("work", 1e-3 * ((rank + round) % 4 + 1) as f64);
+                    let part = vec![rank as f64 + 1.0; 1 + (rank * 7 + round) % 5];
+                    let g = ctx.all_gather_concat(&part);
+                    acc += g.iter().sum::<f64>();
+                }
+                acc
+            })
+    };
+    let base = run_once();
+    assert!(base.sim_seconds > 0.0);
+    assert!(base.stats.vector_doubles > 0 || base.stats.scalar_doubles > 0);
+    for rep in 0..9 {
+        let r = run_once();
+        assert_eq!(
+            r.sim_seconds.to_bits(),
+            base.sim_seconds.to_bits(),
+            "sim_seconds diverged on repeat {rep}"
+        );
+        assert_eq!(r.stats, base.stats, "CommStats diverged on repeat {rep}");
+        assert_eq!(r.trace.to_csv(), base.trace.to_csv(), "trace diverged on repeat {rep}");
+        for (a, b) in r.outputs.iter().zip(base.outputs.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "outputs diverged on repeat {rep}");
+        }
+    }
+}
+
+#[test]
+fn ragged_all_gather_bytes_are_exact() {
+    // 4 ranks contributing 2,3,4,5 doubles: priced as the true total (14),
+    // identically in the global stats and every node-local mirror.
+    let run = Cluster::new(4).with_cost(CostModel::zero()).run(|ctx| {
+        let part = vec![1.0; ctx.rank + 2];
+        let g = ctx.all_gather_concat(&part);
+        (g.len(), ctx.local_stats.clone())
+    });
+    assert_eq!(run.stats.vector_doubles, 14);
+    assert_eq!(run.stats.all_gather, 1);
+    for (len, local) in &run.outputs {
+        assert_eq!(*len, 14);
+        assert_eq!(local.vector_doubles, 14, "local mirror disagrees with global stats");
+    }
+}
+
 #[test]
 fn many_nodes_smoke() {
     let run = Cluster::new(16).with_cost(CostModel::zero()).run(|ctx| {

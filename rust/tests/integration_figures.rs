@@ -53,6 +53,57 @@ fn fig2_load_balance_shape() {
 }
 
 #[test]
+fn fig2_is_deterministic_across_runs() {
+    // The seeded fig2 regeneration must be a pure function of its config:
+    // two back-to-back runs into different directories produce identical
+    // trace CSVs and summaries (CI enforces the same via `diff`).
+    let cfg_a = test_cfg("fig2det_a");
+    let cfg_b = test_cfg("fig2det_b");
+    let sum_a = experiments::figure2(&cfg_a).unwrap();
+    let sum_b = experiments::figure2(&cfg_b).unwrap();
+    assert_eq!(sum_a, sum_b, "fig2 summaries diverged");
+    for f in [
+        "fig2_trace_disco_s.csv",
+        "fig2_trace_disco_f.csv",
+        "fig2_trace_disco_orig.csv",
+    ] {
+        let a = std::fs::read_to_string(format!("{}/{f}", cfg_a.out_dir)).unwrap();
+        let b = std::fs::read_to_string(format!("{}/{f}", cfg_b.out_dir)).unwrap();
+        assert_eq!(a, b, "{f} diverged between seeded runs");
+    }
+}
+
+#[test]
+fn fig2h_weighted_partition_cuts_straggler_makespan() {
+    let cfg = test_cfg("fig2h");
+    let s = experiments::figure2h(&cfg).unwrap();
+    assert!(s.contains("speed-weighted"), "{s}");
+    let body = std::fs::read_to_string(format!("{}/fig2h_hetero.csv", cfg.out_dir)).unwrap();
+    // header + ratios × {uniform, weighted} × 3 algos
+    assert_eq!(
+        body.lines().count(),
+        1 + experiments::FIG2H_RATIOS.len() * 2 * 3,
+        "unexpected fig2h row count"
+    );
+    // Acceptance: at the 4× straggler, the speed-weighted partition
+    // strictly reduces makespan for DiSCO-S and DiSCO-F.
+    let mut makespan = std::collections::BTreeMap::new();
+    for line in body.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        let key = (f[0].to_string(), f[1].to_string(), f[2].to_string());
+        makespan.insert(key, f[3].parse::<f64>().unwrap());
+    }
+    for algo in ["DiSCO-S", "DiSCO-F"] {
+        let uni = makespan[&(algo.to_string(), "4".to_string(), "uniform".to_string())];
+        let wtd = makespan[&(algo.to_string(), "4".to_string(), "speed-weighted".to_string())];
+        assert!(
+            wtd < uni,
+            "{algo}: speed-weighted {wtd} !< uniform {uni} at 4× straggler"
+        );
+    }
+}
+
+#[test]
 fn table2_ordering() {
     let cfg = test_cfg("table2");
     let s = experiments::table2(&cfg).unwrap();
@@ -111,6 +162,7 @@ fn bandwidth_cost() -> CostModel {
     CostModel {
         alpha: 2e-6,
         beta: 1.25e9,
+        ..CostModel::default()
     }
 }
 
