@@ -2,11 +2,24 @@
 //! masks (Fig. 5), preconditioner sample selection, the damped-Newton step,
 //! and the per-iteration metric recorder.
 
-use crate::algorithms::IterRecord;
+use crate::algorithms::{IterRecord, RunConfig};
+use crate::data::{Dataset, Partition};
 use crate::linalg::DataMatrix;
 use crate::loss::Loss;
-use crate::net::NodeCtx;
+use crate::net::Collectives;
 use crate::util::prng::Xoshiro256pp;
+
+/// Sample partition shared by every sample-partitioned algorithm
+/// (DiSCO-S/orig, DANE, CoCoA+, GD): speed-weighted shard sizing when the
+/// heterogeneity knobs ask for it, the uniform split otherwise. One
+/// definition so the thread cluster and the per-process TCP ranks can
+/// never diverge on shard boundaries.
+pub(crate) fn sample_partition(ds: &Dataset, cfg: &RunConfig) -> Partition {
+    match cfg.partition_speeds() {
+        Some(speeds) => Partition::by_samples_weighted(ds, speeds),
+        None => Partition::by_samples(ds, cfg.m),
+    }
+}
 
 /// Forcing term for the inexact Newton solve:
 /// `ε_k = β·‖∇f(w_k)‖` (Zhang & Xiao's relative criterion), floored so the
@@ -120,16 +133,24 @@ impl Recorder {
         }
     }
 
-    pub fn push(&mut self, ctx: &NodeCtx, outer: usize, grad_norm: f64, fval: f64, inner: usize) {
+    pub fn push(
+        &mut self,
+        ctx: &impl Collectives,
+        outer: usize,
+        grad_norm: f64,
+        fval: f64,
+        inner: usize,
+    ) {
         if !self.enabled {
             return;
         }
+        let stats = ctx.comm_stats();
         self.records.push(IterRecord {
             outer,
-            rounds: ctx.local_stats.vector_rounds,
-            scalar_rounds: ctx.local_stats.scalar_rounds,
-            vector_doubles: ctx.local_stats.vector_doubles,
-            sim_time: ctx.clock,
+            rounds: stats.vector_rounds,
+            scalar_rounds: stats.scalar_rounds,
+            vector_doubles: stats.vector_doubles,
+            sim_time: ctx.clock(),
             grad_norm,
             fval,
             inner_iters: inner,

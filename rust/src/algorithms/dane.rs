@@ -12,57 +12,41 @@
 //! subproblem (1)"), followed by a second ReduceAll to average the local
 //! solutions — two ℝᵈ vector rounds per iteration.
 
-use crate::algorithms::common::Recorder;
-use crate::algorithms::{OpCounts, RunConfig, RunResult};
+use crate::algorithms::common::{sample_partition, Recorder};
+use crate::algorithms::{assemble, NodeOutput, RunConfig, RunResult};
 use crate::data::{Dataset, Partition};
 use crate::linalg::ops;
 use crate::loss::Loss;
-use crate::net::NodeCtx;
+use crate::net::Collectives;
 use crate::solvers::sag::SagSolver;
 use crate::util::prng::Xoshiro256pp;
 
 pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
-    let partition = match cfg.partition_speeds() {
-        Some(speeds) => Partition::by_samples_weighted(ds, speeds),
-        None => Partition::by_samples(ds, cfg.m),
-    };
+    let partition = sample_partition(ds, cfg);
     let loss = cfg.loss.make();
     let n = ds.nsamples();
 
     let cluster = cfg.cluster();
     let run = cluster.run(|ctx| node_main(ctx, &partition, loss.as_ref(), cfg, n));
-
-    let mut records = Vec::new();
-    let mut w = Vec::new();
-    let mut converged = false;
-    for (rank, (recs, w_full, conv)) in run.outputs.into_iter().enumerate() {
-        if rank == 0 {
-            records = recs;
-            w = w_full;
-            converged = conv;
-        }
-    }
-    RunResult {
-        algo: cfg.algo,
-        records,
-        w,
-        stats: run.stats,
-        trace: run.trace,
-        sim_seconds: run.sim_seconds,
-        wall_seconds: run.wall_seconds,
-        converged,
-        node_ops: vec![OpCounts::default(); cfg.m],
-    }
+    assemble(cfg.algo, run)
 }
 
-fn node_main(
-    ctx: &mut NodeCtx,
+/// Per-rank entry over any collective backend (multi-process runs).
+pub(crate) fn node_run<C: Collectives>(ctx: &mut C, ds: &Dataset, cfg: &RunConfig) -> NodeOutput {
+    let partition = sample_partition(ds, cfg);
+    let loss = cfg.loss.make();
+    node_main(ctx, &partition, loss.as_ref(), cfg, ds.nsamples())
+}
+
+fn node_main<C: Collectives>(
+    ctx: &mut C,
     partition: &Partition,
     loss: &dyn Loss,
     cfg: &RunConfig,
     n: usize,
-) -> (Vec<crate::algorithms::IterRecord>, Vec<f64>, bool) {
-    let shard = &partition.shards[ctx.rank];
+) -> NodeOutput {
+    let rank = ctx.rank();
+    let shard = &partition.shards[rank];
     let x = &shard.x; // d × n_j
     let y = &shard.y;
     let d = x.nrows();
@@ -71,9 +55,9 @@ fn node_main(
     let inv_nl = 1.0 / n_local as f64;
 
     let mut w = vec![0.0; d];
-    let mut recorder = Recorder::new(ctx.rank);
+    let mut recorder = Recorder::new(rank);
     let mut converged = false;
-    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed.wrapping_add(ctx.rank as u64 * 7919));
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed.wrapping_add(rank as u64 * 7919));
 
     // SAG step-size bound: max per-sample curvature of the subproblem.
     let lmax = (0..n_local)
@@ -167,5 +151,11 @@ fn node_main(
         }
     }
 
-    (recorder.records, w, converged)
+    NodeOutput {
+        records: recorder.records,
+        // Every rank holds the same averaged iterate; rank 0 reports it.
+        w_part: if rank == 0 { w } else { Vec::new() },
+        ops: Default::default(),
+        converged,
+    }
 }

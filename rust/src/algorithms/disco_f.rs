@@ -24,25 +24,29 @@
 use crate::algorithms::common::{
     damped_scale, forcing, hessian_scalings, precond_columns, HessianSubsample, Recorder,
 };
-use crate::algorithms::{OpCounts, RunConfig, RunResult};
+use crate::algorithms::{assemble, NodeOutput, OpCounts, RunConfig, RunResult};
 use crate::data::{Dataset, Partition};
 use crate::linalg::{ops, HvpKernel};
 use crate::loss::Loss;
-use crate::net::NodeCtx;
+use crate::net::Collectives;
 use crate::solvers::woodbury::{Woodbury, WoodburyFactory};
 
-pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
+fn make_partition(ds: &Dataset, cfg: &RunConfig) -> Partition {
     // Per PCG step a feature row costs its nnz (HVP) plus ≈2τ flops of
     // Woodbury apply and ~10 flops of vector updates.
     let row_overhead = 2.0 * cfg.tau as f64 + 10.0;
-    let partition = match cfg.partition_speeds() {
+    match cfg.partition_speeds() {
         // Heterogeneous fleet: equalize modeled work ÷ speed.
         Some(speeds) => Partition::by_features_cost_balanced_weighted(ds, speeds, row_overhead),
         None if cfg.balanced_partition => {
             Partition::by_features_cost_balanced(ds, cfg.m, row_overhead)
         }
         None => Partition::by_features(ds, cfg.m),
-    };
+    }
+}
+
+pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
+    let partition = make_partition(ds, cfg);
     let n = ds.nsamples();
     let loss = cfg.loss.make();
     let subsample = HessianSubsample {
@@ -52,43 +56,31 @@ pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
 
     let cluster = cfg.cluster();
     let run = cluster.run(|ctx| node_main(ctx, &partition, loss.as_ref(), cfg, &subsample, n));
+    assemble(cfg.algo, run)
+}
 
-    // Assemble: node outputs are (records, w_slice, ops, converged).
-    let mut w = Vec::with_capacity(ds.dim());
-    let mut records = Vec::new();
-    let mut node_ops = Vec::new();
-    let mut converged = false;
-    for (rank, (recs, w_j, ops_j, conv)) in run.outputs.into_iter().enumerate() {
-        if rank == 0 {
-            records = recs;
-            converged = conv;
-        }
-        w.extend(w_j);
-        node_ops.push(ops_j);
-    }
-    RunResult {
-        algo: cfg.algo,
-        records,
-        w,
-        stats: run.stats,
-        trace: run.trace,
-        sim_seconds: run.sim_seconds,
-        wall_seconds: run.wall_seconds,
-        converged,
-        node_ops,
-    }
+/// Per-rank entry over any collective backend (multi-process runs).
+pub(crate) fn node_run<C: Collectives>(ctx: &mut C, ds: &Dataset, cfg: &RunConfig) -> NodeOutput {
+    let partition = make_partition(ds, cfg);
+    let loss = cfg.loss.make();
+    let subsample = HessianSubsample {
+        fraction: cfg.hessian_fraction,
+        seed: cfg.seed,
+    };
+    node_main(ctx, &partition, loss.as_ref(), cfg, &subsample, ds.nsamples())
 }
 
 #[allow(clippy::too_many_arguments)]
-fn node_main(
-    ctx: &mut NodeCtx,
+fn node_main<C: Collectives>(
+    ctx: &mut C,
     partition: &Partition,
     loss: &dyn Loss,
     cfg: &RunConfig,
     subsample: &HessianSubsample,
     n: usize,
-) -> (Vec<crate::algorithms::IterRecord>, Vec<f64>, OpCounts, bool) {
-    let shard = &partition.shards[ctx.rank];
+) -> NodeOutput {
+    let rank = ctx.rank();
+    let shard = &partition.shards[rank];
     let x = &shard.x; // d_j × n
     let y = &shard.y; // full labels (replicated)
     let dj = x.nrows();
@@ -98,7 +90,7 @@ fn node_main(
     let inv_n = 1.0 / n as f64;
 
     let mut w = vec![0.0; dj];
-    let mut recorder = Recorder::new(ctx.rank);
+    let mut recorder = Recorder::new(rank);
     let mut ops_count = OpCounts {
         dim: dj,
         ..Default::default()
@@ -161,8 +153,9 @@ fn node_main(
                 .map(|(zi, yi)| loss.value(*zi, *yi))
                 .sum::<f64>()
                 * inv_n;
+            let fval_piece = data_f / cfg.m as f64 + 0.5 * cfg.lambda * ops::norm2_sq(&w);
             (
-                (ops::norm2_sq(&grad), data_f / cfg.m as f64 + 0.5 * cfg.lambda * ops::norm2_sq(&w)),
+                (ops::norm2_sq(&grad), fval_piece),
                 2.0 * nnz + 3.0 * nf + 4.0 * djf,
             )
         });
@@ -190,7 +183,9 @@ fn node_main(
         if cached_precond.is_none() || !loss.curvature_is_constant() {
             cached_precond = Some(ctx.compute_costed("precond_build", || {
                 let weights: Vec<f64> = (0..tau_eff)
-                    .map(|i| s_hess_at(&s_hess, mask.as_ref(), &z, y, loss, i) / tau_eff.max(1) as f64)
+                    .map(|i| {
+                        s_hess_at(&s_hess, mask.as_ref(), &z, y, loss, i) / tau_eff.max(1) as f64
+                    })
                     .collect();
                 (
                     precond_factory
@@ -310,7 +305,13 @@ fn node_main(
         last_inner = pcg_iters;
     }
 
-    (recorder.records, w, ops_count, converged)
+    NodeOutput {
+        records: recorder.records,
+        // Every rank owns its feature slice of the iterate.
+        w_part: w,
+        ops: ops_count,
+        converged,
+    }
 }
 
 /// Second-derivative scaling for preconditioner sample `i` — identical to

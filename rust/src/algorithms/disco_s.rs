@@ -24,13 +24,14 @@
 //!   each step (the >50 % figure in §1.2).
 
 use crate::algorithms::common::{
-    damped_scale, forcing, hessian_scalings, precond_columns, HessianSubsample, Recorder,
+    damped_scale, forcing, hessian_scalings, precond_columns, sample_partition, HessianSubsample,
+    Recorder,
 };
-use crate::algorithms::{OpCounts, RunConfig, RunResult};
+use crate::algorithms::{assemble, NodeOutput, OpCounts, RunConfig, RunResult};
 use crate::data::{Dataset, Partition};
 use crate::linalg::{ops, HvpKernel};
 use crate::loss::Loss;
-use crate::net::NodeCtx;
+use crate::net::Collectives;
 use crate::solvers::sag;
 use crate::solvers::woodbury::{Woodbury, WoodburyFactory};
 use crate::util::prng::Xoshiro256pp;
@@ -43,10 +44,7 @@ pub enum Precond {
 }
 
 pub fn run(ds: &Dataset, cfg: &RunConfig, precond: Precond) -> RunResult {
-    let partition = match cfg.partition_speeds() {
-        Some(speeds) => Partition::by_samples_weighted(ds, speeds),
-        None => Partition::by_samples(ds, cfg.m),
-    };
+    let partition = sample_partition(ds, cfg);
     let loss = cfg.loss.make();
     let n = ds.nsamples();
     let subsample = HessianSubsample {
@@ -58,30 +56,23 @@ pub fn run(ds: &Dataset, cfg: &RunConfig, precond: Precond) -> RunResult {
     let run = cluster.run(|ctx| {
         node_main(ctx, &partition, loss.as_ref(), cfg, &subsample, n, precond)
     });
+    assemble(cfg.algo, run)
+}
 
-    let mut records = Vec::new();
-    let mut w = Vec::new();
-    let mut node_ops = Vec::new();
-    let mut converged = false;
-    for (rank, (recs, w_full, ops_j, conv)) in run.outputs.into_iter().enumerate() {
-        if rank == 0 {
-            records = recs;
-            w = w_full;
-            converged = conv;
-        }
-        node_ops.push(ops_j);
-    }
-    RunResult {
-        algo: cfg.algo,
-        records,
-        w,
-        stats: run.stats,
-        trace: run.trace,
-        sim_seconds: run.sim_seconds,
-        wall_seconds: run.wall_seconds,
-        converged,
-        node_ops,
-    }
+/// Per-rank entry over any collective backend (multi-process runs).
+pub(crate) fn node_run<C: Collectives>(
+    ctx: &mut C,
+    ds: &Dataset,
+    cfg: &RunConfig,
+    precond: Precond,
+) -> NodeOutput {
+    let partition = sample_partition(ds, cfg);
+    let loss = cfg.loss.make();
+    let subsample = HessianSubsample {
+        fraction: cfg.hessian_fraction,
+        seed: cfg.seed,
+    };
+    node_main(ctx, &partition, loss.as_ref(), cfg, &subsample, ds.nsamples(), precond)
 }
 
 /// Master-side preconditioner: either a factored Woodbury or the SAG
@@ -135,29 +126,30 @@ impl MasterPrecond {
 }
 
 #[allow(clippy::too_many_arguments)]
-fn node_main(
-    ctx: &mut NodeCtx,
+fn node_main<C: Collectives>(
+    ctx: &mut C,
     partition: &Partition,
     loss: &dyn Loss,
     cfg: &RunConfig,
     subsample: &HessianSubsample,
     n: usize,
     precond_kind: Precond,
-) -> (Vec<crate::algorithms::IterRecord>, Vec<f64>, OpCounts, bool) {
+) -> NodeOutput {
     const MASTER: usize = 0;
-    let shard = &partition.shards[ctx.rank];
+    let rank = ctx.rank();
+    let shard = &partition.shards[rank];
     let x = &shard.x; // d × n_j
     let y = &shard.y;
     let d = x.nrows();
     let n_local = x.ncols();
     let nnz = x.nnz() as f64;
     let df = d as f64;
-    let is_master = ctx.rank == MASTER;
+    let is_master = rank == MASTER;
     // Global sample offset of this shard (for the subsample mask).
     let offset = shard.range.0;
 
     let mut w = vec![0.0; d];
-    let mut recorder = Recorder::new(ctx.rank);
+    let mut recorder = Recorder::new(rank);
     let mut ops_count = OpCounts {
         dim: d,
         ..Default::default()
@@ -424,5 +416,12 @@ fn node_main(
         last_inner = pcg_iters;
     }
 
-    (recorder.records, w, ops_count, converged)
+    NodeOutput {
+        records: recorder.records,
+        // Only the master's iterate is final (workers' w is one broadcast
+        // stale); rank-order concatenation reassembles it.
+        w_part: if is_master { w } else { Vec::new() },
+        ops: ops_count,
+        converged,
+    }
 }

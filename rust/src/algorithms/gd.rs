@@ -7,59 +7,49 @@
 //! One ℝᵈ ReduceAll per iteration; fixed step 1/L with
 //! `L = smoothness·max‖x‖²/n·n? ` estimated as `smoothness·max_i‖x_i‖² + λ`.
 
-use crate::algorithms::common::Recorder;
-use crate::algorithms::{OpCounts, RunConfig, RunResult};
+use crate::algorithms::common::{sample_partition, Recorder};
+use crate::algorithms::{assemble, NodeOutput, RunConfig, RunResult};
 use crate::data::{Dataset, Partition};
 use crate::linalg::ops;
 use crate::loss::Loss;
-use crate::net::NodeCtx;
+use crate::net::Collectives;
+
+/// Smoothness estimate: L ≤ φ''max·max‖x_i‖² + λ (margin Hessian bound).
+fn lipschitz(ds: &Dataset, cfg: &RunConfig, loss: &dyn Loss) -> f64 {
+    let n = ds.nsamples();
+    let max_norm_sq = (0..n).map(|j| ds.x.col_norm_sq(j)).fold(0.0, f64::max);
+    loss.smoothness() * max_norm_sq + cfg.lambda
+}
 
 pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
-    let partition = match cfg.partition_speeds() {
-        Some(speeds) => Partition::by_samples_weighted(ds, speeds),
-        None => Partition::by_samples(ds, cfg.m),
-    };
+    let partition = sample_partition(ds, cfg);
     let loss = cfg.loss.make();
     let n = ds.nsamples();
-    // Smoothness estimate: L ≤ φ''max·max‖x_i‖² + λ (margin Hessian bound).
-    let max_norm_sq = (0..n).map(|j| ds.x.col_norm_sq(j)).fold(0.0, f64::max);
-    let lips = loss.smoothness() * max_norm_sq + cfg.lambda;
+    let lips = lipschitz(ds, cfg, loss.as_ref());
 
     let cluster = cfg.cluster();
     let run = cluster.run(|ctx| node_main(ctx, &partition, loss.as_ref(), cfg, n, lips));
-
-    let mut records = Vec::new();
-    let mut w = Vec::new();
-    let mut converged = false;
-    for (rank, (recs, w_full, conv)) in run.outputs.into_iter().enumerate() {
-        if rank == 0 {
-            records = recs;
-            w = w_full;
-            converged = conv;
-        }
-    }
-    RunResult {
-        algo: cfg.algo,
-        records,
-        w,
-        stats: run.stats,
-        trace: run.trace,
-        sim_seconds: run.sim_seconds,
-        wall_seconds: run.wall_seconds,
-        converged,
-        node_ops: vec![OpCounts::default(); cfg.m],
-    }
+    assemble(cfg.algo, run)
 }
 
-fn node_main(
-    ctx: &mut NodeCtx,
+/// Per-rank entry over any collective backend (multi-process runs).
+pub(crate) fn node_run<C: Collectives>(ctx: &mut C, ds: &Dataset, cfg: &RunConfig) -> NodeOutput {
+    let partition = sample_partition(ds, cfg);
+    let loss = cfg.loss.make();
+    let lips = lipschitz(ds, cfg, loss.as_ref());
+    node_main(ctx, &partition, loss.as_ref(), cfg, ds.nsamples(), lips)
+}
+
+fn node_main<C: Collectives>(
+    ctx: &mut C,
     partition: &Partition,
     loss: &dyn Loss,
     cfg: &RunConfig,
     n: usize,
     lips: f64,
-) -> (Vec<crate::algorithms::IterRecord>, Vec<f64>, bool) {
-    let shard = &partition.shards[ctx.rank];
+) -> NodeOutput {
+    let rank = ctx.rank();
+    let shard = &partition.shards[rank];
     let x = &shard.x;
     let y = &shard.y;
     let d = x.nrows();
@@ -71,7 +61,7 @@ fn node_main(
     let mut z = vec![0.0; n_local];
     let mut g_scal = vec![0.0; n_local];
     let mut grad = vec![0.0; d];
-    let mut recorder = Recorder::new(ctx.rank);
+    let mut recorder = Recorder::new(rank);
     let mut converged = false;
 
     for outer in 0..cfg.max_outer {
@@ -107,5 +97,11 @@ fn node_main(
         });
     }
 
-    (recorder.records, w, converged)
+    NodeOutput {
+        records: recorder.records,
+        // Every rank holds the same iterate; rank 0 reports it.
+        w_part: if rank == 0 { w } else { Vec::new() },
+        ops: Default::default(),
+        converged,
+    }
 }

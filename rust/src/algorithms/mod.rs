@@ -21,10 +21,15 @@ pub mod dane;
 pub mod disco_f;
 pub mod disco_s;
 pub mod gd;
+pub mod remote;
+
+pub use remote::run_over;
 
 use crate::data::Dataset;
 use crate::loss::LossKind;
-use crate::net::{Cluster, CommStats, ComputeModel, CostModel, StragglerConfig, Trace};
+use crate::net::{
+    Cluster, ClusterRun, Collectives, CommStats, ComputeModel, CostModel, StragglerConfig, Trace,
+};
 
 /// Algorithm selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -268,7 +273,26 @@ impl RunResult {
     }
 }
 
-/// Dispatch a run.
+/// One rank's share of a distributed run — what each algorithm's SPMD
+/// entry returns, uniformly across sample- and feature-partitioned
+/// methods so a single assembly rule applies:
+///
+/// * `w_part` concatenated in rank order reassembles the final iterate
+///   (feature-partitioned algorithms return their slice; sample-
+///   partitioned ones return the full vector on rank 0 and an empty part
+///   elsewhere);
+/// * `records`/`converged` are authoritative on rank 0 (the recorder is
+///   rank-0-only; convergence is decided on reduced scalars, so every
+///   rank agrees).
+#[derive(Clone, Debug, Default)]
+pub struct NodeOutput {
+    pub records: Vec<IterRecord>,
+    pub w_part: Vec<f64>,
+    pub ops: OpCounts,
+    pub converged: bool,
+}
+
+/// Dispatch a run over the in-process thread cluster (shm transport).
 pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
     match cfg.algo {
         AlgoKind::DiscoF => disco_f::run(ds, cfg),
@@ -277,6 +301,49 @@ pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
         AlgoKind::Dane => dane::run(ds, cfg),
         AlgoKind::CocoaPlus => cocoa::run(ds, cfg),
         AlgoKind::Gd => gd::run(ds, cfg),
+    }
+}
+
+/// Run this rank's share of `cfg.algo` over any collective backend — the
+/// per-rank entry used by multi-process (TCP) runs. Every rank builds the
+/// same deterministic partition locally and executes the same SPMD code
+/// the thread cluster runs.
+pub fn node_run<C: Collectives>(ctx: &mut C, ds: &Dataset, cfg: &RunConfig) -> NodeOutput {
+    match cfg.algo {
+        AlgoKind::DiscoF => disco_f::node_run(ctx, ds, cfg),
+        AlgoKind::DiscoS => disco_s::node_run(ctx, ds, cfg, disco_s::Precond::Woodbury),
+        AlgoKind::DiscoOrig => disco_s::node_run(ctx, ds, cfg, disco_s::Precond::MasterSag),
+        AlgoKind::Dane => dane::node_run(ctx, ds, cfg),
+        AlgoKind::CocoaPlus => cocoa::node_run(ctx, ds, cfg),
+        AlgoKind::Gd => gd::node_run(ctx, ds, cfg),
+    }
+}
+
+/// Assemble a [`RunResult`] from per-rank outputs (shared by every
+/// algorithm's thread-cluster driver).
+pub(crate) fn assemble(algo: AlgoKind, run: ClusterRun<NodeOutput>) -> RunResult {
+    let mut records = Vec::new();
+    let mut w = Vec::new();
+    let mut node_ops = Vec::new();
+    let mut converged = false;
+    for (rank, out) in run.outputs.into_iter().enumerate() {
+        if rank == 0 {
+            records = out.records;
+            converged = out.converged;
+        }
+        w.extend(out.w_part);
+        node_ops.push(out.ops);
+    }
+    RunResult {
+        algo,
+        records,
+        w,
+        stats: run.stats,
+        trace: run.trace,
+        sim_seconds: run.sim_seconds,
+        wall_seconds: run.wall_seconds,
+        converged,
+        node_ops,
     }
 }
 

@@ -1,0 +1,240 @@
+//! Distributed-run driver for real (multi-process) transports.
+//!
+//! The thread-cluster path collects per-rank outputs in memory
+//! ([`crate::net::Cluster::run`]); a multi-process run has no shared
+//! memory, so after the SPMD algorithm finishes every rank serializes a
+//! [`NodeReport`] (final-iterate part, op counts, comm-stats mirror,
+//! final clock, trace segments) and ships it to rank 0 over the
+//! transport's out-of-band report channel
+//! ([`Transport::exchange_reports`] — unpriced, so it does not perturb
+//! the paper's round/byte accounting). Rank 0 assembles the same
+//! [`RunResult`] the simulator would have produced: under
+//! [`ComputeModel::Modeled`](crate::net::ComputeModel) the two are
+//! bit-identical (f64s round-trip through the little-endian codec
+//! exactly).
+
+use crate::algorithms::{node_run, NodeOutput, OpCounts, RunConfig, RunResult};
+use crate::data::Dataset;
+use crate::net::transport::{NodeCtx, Transport};
+use crate::net::{Activity, CommStats, Segment, Trace};
+use crate::util::bytes::{put_f64, put_f64s, put_u16, put_u32, put_u64, put_u8, ByteReader};
+use std::time::Instant;
+
+/// Run `cfg.algo` as this rank's share of a multi-process job. Returns
+/// `Some(RunResult)` on rank 0 (assembled from every rank's report) and
+/// `None` on the other ranks.
+///
+/// The transport's world size must equal `cfg.m`; heterogeneity knobs
+/// (`speeds`, `straggler`, `compute`, `trace`) apply exactly as in the
+/// thread cluster.
+pub fn run_over<T: Transport>(ds: &Dataset, cfg: &RunConfig, transport: T) -> Option<RunResult> {
+    assert_eq!(
+        transport.world(),
+        cfg.m,
+        "transport world size must equal cfg.m"
+    );
+    let wall = Instant::now();
+    let mut ctx = NodeCtx::new(transport)
+        .with_compute(cfg.compute)
+        .with_trace(cfg.trace);
+    let rank = ctx.rank;
+    if let Some(&speed) = cfg.speeds.get(rank) {
+        ctx = ctx.with_speed(speed);
+    }
+    if let Some(s) = cfg.straggler {
+        ctx = ctx.with_straggler(s);
+    }
+
+    let out = node_run(&mut ctx, ds, cfg);
+
+    let report = encode_report(&out, &ctx.local_stats, ctx.clock, &ctx.trace);
+    let reports = ctx.transport_mut().exchange_reports(report)?;
+
+    // Rank 0: merge the fleet's reports into a RunResult.
+    let mut w = Vec::new();
+    let mut node_ops: Vec<OpCounts> = Vec::with_capacity(cfg.m);
+    let mut trace = Trace::new(cfg.m);
+    let mut sim = 0.0f64;
+    let mut stats = CommStats::default();
+    for (r, bytes) in reports.iter().enumerate() {
+        let rep = match decode_report(bytes) {
+            Ok(rep) => rep,
+            Err(e) => panic!("cluster node failed: rank 0: bad report from rank {r}: {e}"),
+        };
+        w.extend_from_slice(&rep.w_part);
+        node_ops.push(rep.ops);
+        sim = sim.max(rep.clock);
+        for seg in rep.segments {
+            trace.push(seg);
+        }
+        if r == 0 {
+            // Every rank's priced mirror is identical by construction;
+            // rank 0's stands in for the global ledger (its wire_bytes
+            // are rank-0's own, the closest analogue to "what this
+            // process moved").
+            stats = rep.stats;
+        }
+    }
+    Some(RunResult {
+        algo: cfg.algo,
+        records: out.records,
+        w,
+        stats,
+        trace,
+        sim_seconds: sim,
+        wall_seconds: wall.elapsed().as_secs_f64(),
+        converged: out.converged,
+        node_ops,
+    })
+}
+
+struct NodeReport {
+    w_part: Vec<f64>,
+    ops: OpCounts,
+    stats: CommStats,
+    clock: f64,
+    segments: Vec<Segment>,
+}
+
+fn activity_code(a: Activity) -> u8 {
+    match a {
+        Activity::Compute => 0,
+        Activity::Idle => 1,
+        Activity::Comm => 2,
+    }
+}
+
+fn activity_from(code: u8) -> Result<Activity, String> {
+    match code {
+        0 => Ok(Activity::Compute),
+        1 => Ok(Activity::Idle),
+        2 => Ok(Activity::Comm),
+        other => Err(format!("unknown activity code {other}")),
+    }
+}
+
+fn encode_report(out: &NodeOutput, stats: &CommStats, clock: f64, trace: &Trace) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + 8 * out.w_part.len() + 48 * trace.segments.len());
+    put_u32(&mut buf, out.w_part.len() as u32);
+    put_f64s(&mut buf, &out.w_part);
+    put_u64(&mut buf, out.ops.hvp);
+    put_u64(&mut buf, out.ops.precond_solve);
+    put_u64(&mut buf, out.ops.axpy);
+    put_u64(&mut buf, out.ops.dot);
+    put_u64(&mut buf, out.ops.dim as u64);
+    put_u64(&mut buf, stats.vector_rounds);
+    put_u64(&mut buf, stats.scalar_rounds);
+    put_u64(&mut buf, stats.vector_doubles);
+    put_u64(&mut buf, stats.scalar_doubles);
+    put_f64(&mut buf, stats.modeled_comm_seconds);
+    put_u64(&mut buf, stats.reduce_all);
+    put_u64(&mut buf, stats.broadcast);
+    put_u64(&mut buf, stats.reduce);
+    put_u64(&mut buf, stats.all_gather);
+    put_u64(&mut buf, stats.wire_bytes);
+    put_f64(&mut buf, clock);
+    put_u32(&mut buf, trace.segments.len() as u32);
+    for seg in &trace.segments {
+        put_u32(&mut buf, seg.node as u32);
+        put_f64(&mut buf, seg.start);
+        put_f64(&mut buf, seg.end);
+        put_u8(&mut buf, activity_code(seg.activity));
+        let label = seg.label.as_bytes();
+        let len = label.len().min(u16::MAX as usize);
+        put_u16(&mut buf, len as u16);
+        buf.extend_from_slice(&label[..len]);
+    }
+    buf
+}
+
+fn decode_report(bytes: &[u8]) -> Result<NodeReport, String> {
+    let mut r = ByteReader::new(bytes);
+    let w_len = r.u32()? as usize;
+    let w_part = r.f64s(w_len)?;
+    let ops = OpCounts {
+        hvp: r.u64()?,
+        precond_solve: r.u64()?,
+        axpy: r.u64()?,
+        dot: r.u64()?,
+        dim: r.u64()? as usize,
+    };
+    let stats = CommStats {
+        vector_rounds: r.u64()?,
+        scalar_rounds: r.u64()?,
+        vector_doubles: r.u64()?,
+        scalar_doubles: r.u64()?,
+        modeled_comm_seconds: r.f64()?,
+        reduce_all: r.u64()?,
+        broadcast: r.u64()?,
+        reduce: r.u64()?,
+        all_gather: r.u64()?,
+        wire_bytes: r.u64()?,
+    };
+    let clock = r.f64()?;
+    let nseg = r.u32()? as usize;
+    let mut segments = Vec::with_capacity(nseg);
+    for _ in 0..nseg {
+        let node = r.u32()? as usize;
+        let start = r.f64()?;
+        let end = r.f64()?;
+        let activity = activity_from(r.u8()?)?;
+        let label_len = r.u16()? as usize;
+        let label = String::from_utf8(r.take(label_len)?.to_vec())
+            .map_err(|_| "non-utf8 segment label".to_string())?;
+        segments.push(Segment { node, start, end, activity, label });
+    }
+    r.finish()?;
+    Ok(NodeReport { w_part, ops, stats, clock, segments })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_round_trips_bit_exactly() {
+        let out = NodeOutput {
+            records: Vec::new(),
+            w_part: vec![1.5, -0.25, f64::MIN_POSITIVE, 3.0f64.sqrt()],
+            ops: OpCounts {
+                hvp: 7,
+                precond_solve: 3,
+                axpy: 11,
+                dot: 13,
+                dim: 42,
+            },
+            converged: true,
+        };
+        let mut stats = CommStats::default();
+        stats.record(crate::net::CollectiveKind::ReduceAll, 100, 1.25e-4);
+        stats.wire_bytes = 12345;
+        let mut trace = Trace::new(2);
+        trace.push(Segment {
+            node: 1,
+            start: 0.0,
+            end: 0.5,
+            activity: Activity::Comm,
+            label: "reduce_all".into(),
+        });
+        let bytes = encode_report(&out, &stats, 0.625, &trace);
+        let rep = decode_report(&bytes).unwrap();
+        assert_eq!(rep.w_part.len(), 4);
+        for (a, b) in rep.w_part.iter().zip(out.w_part.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(rep.ops, out.ops);
+        assert_eq!(rep.stats, stats);
+        assert_eq!(rep.clock.to_bits(), 0.625f64.to_bits());
+        assert_eq!(rep.segments.len(), 1);
+        assert_eq!(rep.segments[0].node, 1);
+        assert_eq!(rep.segments[0].label, "reduce_all");
+    }
+
+    #[test]
+    fn truncated_report_is_an_error() {
+        let out = NodeOutput::default();
+        let bytes = encode_report(&out, &CommStats::default(), 0.0, &Trace::new(1));
+        assert!(decode_report(&bytes[..bytes.len() - 1]).is_err());
+        assert!(decode_report(&[]).is_err());
+    }
+}

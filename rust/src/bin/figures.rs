@@ -7,11 +7,18 @@
 //! disco-figures table3              # measured per-PCG-step op counts
 //! disco-figures fig2h               # heterogeneity × load-balancing sweep
 //! disco-figures fig3 --collective ring   # reprice collectives (flat|binomial|ring)
+//! disco-figures fig2 --transport tcp --m 3   # fig2 as 3 real OS processes
 //! ```
+//!
+//! With `--transport tcp`, fig2 is executed by `--m` genuine `disco-node`
+//! worker processes over localhost sockets (this process spawns them and
+//! waits); the resulting CSVs are byte-identical to the in-process run —
+//! CI diffs them.
 
 use disco::coordinator::experiments::{self, ExperimentConfig};
 use disco::net::CollectiveAlgo;
-use disco::util::cli::Args;
+use disco::util::cli::{Args, TransportCli, TransportKind};
+use std::process::Command;
 
 fn main() {
     let args = Args::new("disco-figures", "regenerate the paper's tables and figures")
@@ -21,7 +28,8 @@ fn main() {
         .opt("max-outer", Some("60"), "outer iteration cap per run")
         .opt("grad-target", Some("1e-8"), "target gradient norm")
         .opt("collective", Some("binomial"), "collective pricing: flat | binomial | ring")
-        .opt("seed", Some("42"), "PRNG seed");
+        .opt("seed", Some("42"), "PRNG seed")
+        .with_transport_flags();
     let args = match args.parse_env() {
         Ok(a) => a,
         Err(e) => {
@@ -44,6 +52,13 @@ fn main() {
             std::process::exit(2);
         }
     }
+    let transport = match TransportCli::parse(&args) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
 
     let what = args
         .positionals()
@@ -51,6 +66,15 @@ fn main() {
         .map(String::as_str)
         .unwrap_or("all")
         .to_string();
+
+    if transport.kind == TransportKind::Tcp {
+        if what != "fig2" {
+            eprintln!("--transport tcp currently drives only fig2 (got '{what}')");
+            std::process::exit(2);
+        }
+        std::process::exit(launch_tcp_fig2(&args, &cfg, &transport));
+    }
+
     let run = |cfg: &ExperimentConfig, which: &str| -> std::io::Result<()> {
         let t = std::time::Instant::now();
         let summary = match which {
@@ -84,4 +108,89 @@ fn main() {
             std::process::exit(1);
         }
     }
+}
+
+/// Spawn `--m` `disco-node` workers (rank 0 last, foreground-equivalent)
+/// and wait for the whole fleet; returns the exit code.
+fn launch_tcp_fig2(args: &Args, cfg: &ExperimentConfig, transport: &TransportCli) -> i32 {
+    let node_bin = match std::env::current_exe()
+        .ok()
+        .and_then(|p| p.parent().map(|d| d.join("disco-node")))
+    {
+        Some(p) if p.exists() => p,
+        _ => {
+            eprintln!(
+                "disco-node binary not found next to disco-figures \
+                 (build with `cargo build --release --bins`)"
+            );
+            return 2;
+        }
+    };
+    // Fleet size: an explicit --world wins (it is the transport-level
+    // knob), otherwise the experiment's --m.
+    let world = if transport.world > 1 {
+        transport.world
+    } else {
+        cfg.m
+    };
+    if world < 1 {
+        eprintln!("--m must be at least 1");
+        return 2;
+    }
+    let mut common: Vec<String> = vec![
+        "fig2".into(),
+        "--transport".into(),
+        "tcp".into(),
+        "--world".into(),
+        world.to_string(),
+        "--addr".into(),
+        transport.addr.clone(),
+        "--net-timeout".into(),
+        transport.timeout_secs.to_string(),
+        "--scale".into(),
+        cfg.scale.to_string(),
+        "--out".into(),
+        cfg.out_dir.clone(),
+        "--max-outer".into(),
+        cfg.max_outer.to_string(),
+        "--grad-target".into(),
+        cfg.grad_target.to_string(),
+        "--seed".into(),
+        cfg.seed.to_string(),
+        "--tau".into(),
+        cfg.tau.to_string(),
+    ];
+    common.push("--collective".into());
+    common.push(args.get("collective").unwrap_or_else(|| "binomial".into()));
+
+    let mut children = Vec::new();
+    for rank in 0..world {
+        let mut cmd = Command::new(&node_bin);
+        cmd.args(&common).arg("--rank").arg(rank.to_string());
+        match cmd.spawn() {
+            Ok(c) => children.push((rank, c)),
+            Err(e) => {
+                eprintln!("failed to spawn disco-node rank {rank}: {e}");
+                for (_, mut c) in children {
+                    let _ = c.kill();
+                }
+                return 1;
+            }
+        }
+    }
+    let mut code = 0;
+    for (rank, mut c) in children {
+        match c.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => {
+                eprintln!("disco-node rank {rank} exited with {status}");
+                code = 1;
+            }
+            Err(e) => {
+                eprintln!("disco-node rank {rank} unwaitable: {e}");
+                code = 1;
+            }
+        }
+    }
+    code
 }

@@ -1,0 +1,213 @@
+//! `disco-node` — worker process for multi-process (TCP transport) runs.
+//!
+//! Every rank of the fleet runs the same command; rank 0 additionally
+//! hosts the rendezvous listener, assembles the results, and writes the
+//! outputs. A 3-process tiny fig2 whose CSVs are byte-identical to the
+//! in-process simulator's:
+//!
+//! ```text
+//! disco-node fig2 --transport tcp --rank 1 --world 3 --addr 127.0.0.1:29500 --scale 8 --out results/tcp &
+//! disco-node fig2 --transport tcp --rank 2 --world 3 --addr 127.0.0.1:29500 --scale 8 --out results/tcp &
+//! disco-node fig2 --transport tcp --rank 0 --world 3 --addr 127.0.0.1:29500 --scale 8 --out results/tcp
+//! disco-figures fig2 --m 3 --scale 8 --out results/shm   # then: diff -r results/shm results/tcp
+//! ```
+//!
+//! Single-algorithm runs work the same way:
+//!
+//! ```text
+//! disco-node run --transport tcp --rank R --world N --addr HOST:PORT --dataset rcv1s --algo disco-f
+//! ```
+//!
+//! With `--transport shm` (the default) the same subcommands execute over
+//! the in-process thread cluster — handy for diffing the two backends
+//! from one entrypoint.
+
+use disco::algorithms::{run, run_over, AlgoKind, RunConfig};
+use disco::coordinator::experiments::{self, ExperimentConfig};
+use disco::data::registry;
+use disco::loss::LossKind;
+use disco::net::{CollectiveAlgo, TcpOptions, TcpTransport};
+use disco::util::cli::{Args, TransportCli, TransportKind};
+use std::time::Duration;
+
+fn main() {
+    let args = Args::new(
+        "disco-node",
+        "worker process for multi-process DiSCO runs (one rank of a TCP fleet)",
+    )
+    .with_transport_flags()
+    .opt("scale", Some("4"), "dataset down-scale factor (fig2)")
+    .opt("out", Some("results"), "output directory for CSVs (rank 0 writes)")
+    .opt("max-outer", Some("60"), "outer iteration cap per run")
+    .opt("grad-target", Some("1e-8"), "target gradient norm (fig2)")
+    .opt("collective", Some("binomial"), "collective pricing: flat | binomial | ring")
+    .opt("seed", Some("42"), "PRNG seed")
+    .opt("tau", Some("100"), "preconditioner sample count")
+    .opt("dataset", Some("tiny"), "registered dataset name (run)")
+    .opt("algo", Some("disco-f"), "disco-f | disco-s | disco | dane | cocoa+ | gd (run)")
+    .opt("loss", Some("logistic"), "logistic | quadratic | squared_hinge (run)")
+    .opt("lambda", None, "ℓ2 regularization (default: dataset registry value)")
+    .opt("grad-tol", Some("1e-8"), "stop when ‖∇f‖ ≤ this (run)")
+    .switch("records", "print per-iteration convergence records (run, rank 0)");
+
+    let args = match args.parse_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let transport = match TransportCli::parse(&args) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args
+        .positionals()
+        .first()
+        .map(String::as_str)
+        .unwrap_or("fig2")
+        .to_string();
+
+    let result = match cmd.as_str() {
+        "fig2" => cmd_fig2(&args, &transport),
+        "run" => cmd_run(&args, &transport),
+        other => Err(format!("unknown command '{other}' (fig2, run)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn experiment_config(args: &Args, world: usize) -> Result<ExperimentConfig, String> {
+    let mut cfg = ExperimentConfig {
+        scale: args.get_usize("scale").map_err(|e| e.to_string())?,
+        out_dir: args.req("out").map_err(|e| e.to_string())?,
+        m: world,
+        ..ExperimentConfig::default()
+    };
+    cfg.max_outer = args.get_usize("max-outer").map_err(|e| e.to_string())?;
+    cfg.grad_target = args.get_f64("grad-target").map_err(|e| e.to_string())?;
+    cfg.seed = args.get_u64("seed").map_err(|e| e.to_string())?;
+    cfg.tau = args.get_usize("tau").map_err(|e| e.to_string())?;
+    let calgo = args.req("collective").map_err(|e| e.to_string())?;
+    match CollectiveAlgo::parse(&calgo) {
+        Some(algo) => cfg.cost = cfg.cost.with_algo(algo),
+        None => return Err(format!("unknown collective algorithm '{calgo}'")),
+    }
+    Ok(cfg)
+}
+
+fn tcp_options(t: &TransportCli, cost: disco::net::CostModel) -> TcpOptions {
+    TcpOptions::new(t.rank, t.world, &t.addr)
+        .with_timeout(Duration::from_secs_f64(t.timeout_secs))
+        .with_cost(cost)
+}
+
+fn cmd_fig2(args: &Args, transport: &TransportCli) -> Result<(), String> {
+    match transport.kind {
+        TransportKind::Shm => {
+            // In-process fallback: identical to `disco-figures fig2`.
+            let cfg = experiment_config(args, transport.world.max(1))?;
+            let summary = experiments::figure2(&cfg).map_err(|e| e.to_string())?;
+            experiments::write_summary(&cfg, "fig2_summary.txt", &summary)
+                .map_err(|e| e.to_string())?;
+            println!("=== fig2 (shm) ===\n{summary}");
+            Ok(())
+        }
+        TransportKind::Tcp => {
+            let cfg = experiment_config(args, transport.world)?;
+            let mut t = TcpTransport::establish(&tcp_options(transport, cfg.cost));
+            match experiments::figure2_over(&cfg, &mut t).map_err(|e| e.to_string())? {
+                Some(summary) => {
+                    experiments::write_summary(&cfg, "fig2_summary.txt", &summary)
+                        .map_err(|e| e.to_string())?;
+                    println!("=== fig2 (tcp, {} ranks) ===\n{summary}", transport.world);
+                }
+                None => {
+                    println!("rank {}/{} done (fig2)", transport.rank, transport.world);
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+fn run_config(args: &Args, transport: &TransportCli) -> Result<RunConfig, String> {
+    let algo = AlgoKind::parse(&args.req("algo").map_err(|e| e.to_string())?)
+        .ok_or("bad --algo")?;
+    let loss = LossKind::parse(&args.req("loss").map_err(|e| e.to_string())?)
+        .ok_or("bad --loss")?;
+    let ds_name = args.req("dataset").map_err(|e| e.to_string())?;
+    let lambda = match args.get("lambda") {
+        Some(l) => l.parse().map_err(|_| "bad --lambda")?,
+        None => registry::spec(&ds_name).map(|s| s.lambda).unwrap_or(1e-4),
+    };
+    let mut cfg = RunConfig::new(algo, loss, lambda);
+    cfg.m = transport.world.max(1);
+    cfg.tau = args.get_usize("tau").map_err(|e| e.to_string())?;
+    cfg.max_outer = args.get_usize("max-outer").map_err(|e| e.to_string())?;
+    cfg.grad_tol = args.get_f64("grad-tol").map_err(|e| e.to_string())?;
+    cfg.seed = args.get_u64("seed").map_err(|e| e.to_string())?;
+    let calgo = args.req("collective").map_err(|e| e.to_string())?;
+    match CollectiveAlgo::parse(&calgo) {
+        Some(a) => cfg.cost = cfg.cost.with_algo(a),
+        None => return Err(format!("unknown collective algorithm '{calgo}'")),
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args, transport: &TransportCli) -> Result<(), String> {
+    let cfg = run_config(args, transport)?;
+    let ds_name = args.req("dataset").map_err(|e| e.to_string())?;
+    let scale = args.get_usize("scale").map_err(|e| e.to_string())?;
+    let ds = if scale <= 1 {
+        registry::load(&ds_name)
+    } else {
+        registry::load_scaled(&ds_name, scale)
+    }
+    .ok_or_else(|| format!("unknown dataset '{ds_name}'"))?;
+
+    let res = match transport.kind {
+        TransportKind::Shm => Some(run(&ds, &cfg)),
+        TransportKind::Tcp => {
+            let t = TcpTransport::establish(&tcp_options(transport, cfg.cost));
+            run_over(&ds, &cfg, t)
+        }
+    };
+    match res {
+        Some(res) => {
+            if args.flag("records") {
+                println!(
+                    "{:>5} {:>8} {:>12} {:>12} {:>12}",
+                    "outer", "rounds", "sim_time", "grad_norm", "f"
+                );
+                for r in &res.records {
+                    println!(
+                        "{:>5} {:>8} {:>12.4} {:>12.3e} {:>12.6e}",
+                        r.outer, r.rounds, r.sim_time, r.grad_norm, r.fval
+                    );
+                }
+            }
+            println!(
+                "{}: converged={} final ‖∇f‖={:.3e} f={:.6e}",
+                res.algo.name(),
+                res.converged,
+                res.final_grad_norm(),
+                res.final_fval()
+            );
+            println!("  comm: {}", res.stats);
+            println!(
+                "  time: simulated {:.3}s (wall {:.3}s)",
+                res.sim_seconds, res.wall_seconds
+            );
+        }
+        None => {
+            println!("rank {}/{} done (run)", transport.rank, transport.world);
+        }
+    }
+    Ok(())
+}

@@ -3,13 +3,13 @@
 //! Driven by the `disco-figures` binary and the end-to-end benches; see
 //! DESIGN.md §4 for the experiment index.
 
-use crate::algorithms::{run, AlgoKind, RunConfig, RunResult};
+use crate::algorithms::{run, run_over, AlgoKind, RunConfig, RunResult};
 use crate::coordinator::complexity::{
     figure1_series, table2_logistic, table2_quadratic, Table2Algo,
 };
-use crate::data::registry;
+use crate::data::{registry, Dataset};
 use crate::loss::LossKind;
-use crate::net::{CollectiveAlgo, ComputeModel, CostModel};
+use crate::net::{CollectiveAlgo, ComputeModel, CostModel, Transport};
 use crate::util::csv::{sci, secs, CsvWriter};
 use std::path::Path;
 
@@ -93,9 +93,31 @@ pub fn figure1(cfg: &ExperimentConfig) -> std::io::Result<String> {
 // ---------------------------------------------------------------------------
 
 pub fn figure2(cfg: &ExperimentConfig) -> std::io::Result<String> {
+    let summary = figure2_body(cfg, &mut |ds, rc| Some(run(ds, rc)))?;
+    Ok(summary.expect("the shm runner always produces results"))
+}
+
+/// `fig2` over an explicit transport — the multi-process path used by
+/// `disco-node`. Every rank executes the same three traced runs; rank 0
+/// writes the CSVs and returns `Some(summary)` (byte-identical to the shm
+/// [`figure2`] output under the modeled clock), the other ranks write
+/// nothing and return `None`. The transport's world size must equal
+/// `cfg.m`.
+pub fn figure2_over<T: Transport>(
+    cfg: &ExperimentConfig,
+    transport: &mut T,
+) -> std::io::Result<Option<String>> {
+    figure2_body(cfg, &mut |ds, rc| run_over(ds, rc, &mut *transport))
+}
+
+fn figure2_body(
+    cfg: &ExperimentConfig,
+    run_one: &mut dyn FnMut(&Dataset, &RunConfig) -> Option<RunResult>,
+) -> std::io::Result<Option<String>> {
     let ds = cfg.dataset("tiny");
     let lambda = registry::spec("tiny").unwrap().lambda;
     let mut summary = String::new();
+    let mut produced = false;
     for (algo, file) in [
         (AlgoKind::DiscoS, "fig2_trace_disco_s.csv"),
         (AlgoKind::DiscoF, "fig2_trace_disco_f.csv"),
@@ -106,9 +128,14 @@ pub fn figure2(cfg: &ExperimentConfig) -> std::io::Result<String> {
         rc.max_outer = 3; // a few outer iterations, like the paper's diagram
         rc.grad_tol = 0.0;
         // Deterministic virtual time: the emitted trace CSVs are a pure
-        // function of the seed (CI diffs two back-to-back runs).
+        // function of the seed (CI diffs two back-to-back runs, and diffs
+        // a 3-process TCP run against the shm run).
         rc.compute = ComputeModel::modeled();
-        let res = run(&ds, &rc);
+        let res = match run_one(&ds, &rc) {
+            Some(res) => res,
+            None => continue, // non-zero rank of a multi-process run
+        };
+        produced = true;
         std::fs::create_dir_all(&cfg.out_dir)?;
         std::fs::write(cfg.path(file), res.trace.to_csv())?;
         let util = res.trace.utilization();
@@ -120,7 +147,7 @@ pub fn figure2(cfg: &ExperimentConfig) -> std::io::Result<String> {
             res.trace.render_ascii(96)
         ));
     }
-    Ok(summary)
+    Ok(if produced { Some(summary) } else { None })
 }
 
 // ---------------------------------------------------------------------------
@@ -219,7 +246,10 @@ pub fn table2(cfg: &ExperimentConfig) -> std::io::Result<String> {
         cfg.path("table2_complexity.csv"),
         &["algorithm", "dataset", "n", "d", "quadratic_rounds", "logistic_rounds"],
     )?;
-    let mut out = format!("{:<10} {:<10} {:>14} {:>14}\n", "algo", "dataset", "quadratic", "logistic");
+    let mut out = format!(
+        "{:<10} {:<10} {:>14} {:>14}\n",
+        "algo", "dataset", "quadratic", "logistic"
+    );
     for spec in registry::SPECS.iter().filter(|s| s.name != "tiny" && s.name != "e2e") {
         for algo in [Table2Algo::Dane, Table2Algo::CocoaPlus, Table2Algo::Disco] {
             let q = table2_quadratic(algo, m, spec.n, eps);

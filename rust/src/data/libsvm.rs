@@ -48,14 +48,23 @@ pub fn parse_reader(r: impl BufRead, name: &str, min_dim: usize) -> Result<Datas
             continue;
         }
         let mut parts = line.split_ascii_whitespace();
-        let label: f64 = parts
-            .next()
-            .unwrap()
-            .parse()
-            .map_err(|_| LibsvmError::Parse {
+        // (A trimmed non-empty line always has a first token, but an
+        // `unwrap()` here is a latent panic if that invariant ever shifts
+        // — surface a parse error instead.)
+        let label_tok = parts.next().ok_or_else(|| LibsvmError::Parse {
+            line: lineno + 1,
+            msg: "missing label".into(),
+        })?;
+        let label: f64 = label_tok.parse().map_err(|_| LibsvmError::Parse {
+            line: lineno + 1,
+            msg: format!("bad label '{label_tok}'"),
+        })?;
+        if !label.is_finite() {
+            return Err(LibsvmError::Parse {
                 line: lineno + 1,
-                msg: "bad label".into(),
-            })?;
+                msg: format!("non-finite label '{label_tok}'"),
+            });
+        }
         let mut col: Vec<(u32, f64)> = Vec::new();
         for tok in parts {
             let (i, v) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
@@ -159,6 +168,23 @@ mod tests {
         assert!(parse_reader(Cursor::new("1 0:2\n"), "t", 0).is_err()); // 0-based
         assert!(parse_reader(Cursor::new("1 2:1 2:3\n"), "t", 0).is_err()); // dup
         assert!(parse_reader(Cursor::new(""), "t", 0).is_err()); // empty
+        assert!(parse_reader(Cursor::new("nan 1:2\n"), "t", 0).is_err()); // non-finite
+        assert!(parse_reader(Cursor::new("inf 1:2\n"), "t", 0).is_err());
+    }
+
+    #[test]
+    fn duplicate_indices_report_line_and_index() {
+        let err = parse_reader(Cursor::new("1 1:1\n-1 3:1 3:2\n"), "t", 0).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("duplicate feature index 3"), "{msg}");
+    }
+
+    #[test]
+    fn bad_label_reports_token() {
+        let err = parse_reader(Cursor::new("one 1:2\n"), "t", 0).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("bad label 'one'"), "{msg}");
     }
 
     #[test]

@@ -173,7 +173,12 @@ mod tests {
     use crate::linalg::sparse::CscMatrix;
     use crate::util::prng::Xoshiro256pp;
 
-    fn problem(seed: u64, d: usize, n: usize, p: f64) -> (DataMatrix, Vec<f64>, Vec<f64>, Vec<f64>) {
+    fn problem(
+        seed: u64,
+        d: usize,
+        n: usize,
+        p: f64,
+    ) -> (DataMatrix, Vec<f64>, Vec<f64>, Vec<f64>) {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
         let x = DataMatrix::Sparse(CscMatrix::rand_sparse(d, n, p, &mut rng));
         let u: Vec<f64> = (0..d).map(|_| rng.normal()).collect();

@@ -205,7 +205,14 @@ impl CscMatrix {
         });
     }
 
-    fn gather_cols_range(&self, lo: usize, hi: usize, u: &[f64], s: Option<&[f64]>, out: &mut [f64]) {
+    fn gather_cols_range(
+        &self,
+        lo: usize,
+        hi: usize,
+        u: &[f64],
+        s: Option<&[f64]>,
+        out: &mut [f64],
+    ) {
         for j in lo..hi {
             let (rows, vals) = self.col(j);
             let acc = ops::sparse_dot(rows, vals, u);

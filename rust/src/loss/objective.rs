@@ -109,7 +109,13 @@ impl<'a> Objective<'a> {
     /// The PCG hot path uses [`Objective::hvp_with_kernel_into`] instead;
     /// this variant is kept as the equivalence oracle for tests and the
     /// honest A/B baseline in `bench_hotpaths`.
-    pub fn hvp_with_scalings_into(&self, s: &[f64], u: &[f64], scratch_n: &mut [f64], out: &mut [f64]) {
+    pub fn hvp_with_scalings_into(
+        &self,
+        s: &[f64],
+        u: &[f64],
+        scratch_n: &mut [f64],
+        out: &mut [f64],
+    ) {
         assert_eq!(s.len(), self.nsamples());
         assert_eq!(scratch_n.len(), self.nsamples());
         self.x.at_mul_into(u, scratch_n); // t = Xᵀu

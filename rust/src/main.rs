@@ -3,17 +3,24 @@
 //!
 //! ```text
 //! disco run      --dataset rcv1s --algo disco-f --loss logistic [...]
+//! disco run      --transport tcp --rank R --world N --addr HOST:PORT [...]
 //! disco xla-run  --dataset-shape 1024x4096 --loss logistic [...]
 //! disco datasets            list the registered datasets (Table 5)
 //! disco artifacts           list loaded AOT artifacts
 //! ```
+//!
+//! With `--transport tcp` this process becomes rank R of an N-process
+//! fleet (every rank runs the same command with its own `--rank`); rank 0
+//! prints the assembled result. See `disco-node` for the dedicated worker
+//! binary and README "Running multi-process" for the rendezvous flow.
 
-use disco::algorithms::{run, AlgoKind, RunConfig};
+use disco::algorithms::{run, run_over, AlgoKind, RunConfig};
 use disco::data::registry;
 use disco::loss::LossKind;
-use disco::net::CostModel;
+use disco::net::{CostModel, TcpOptions, TcpTransport};
 use disco::runtime::{artifact_dir, run_disco_f_xla, Engine};
-use disco::util::cli::Args;
+use disco::util::cli::{Args, TransportCli, TransportKind};
+use std::time::Duration;
 
 fn main() {
     let args = Args::new(
@@ -37,7 +44,8 @@ fn main() {
     .opt("net", Some("default"), "network cost model: default | zero | slow")
     .opt("dataset-shape", Some("1024x4096"), "xla-run: dense d×n problem shape")
     .switch("trace", "record + print the per-node activity trace (Fig. 2)")
-    .switch("records", "print the per-iteration convergence records");
+    .switch("records", "print the per-iteration convergence records")
+    .with_transport_flags();
 
     let args = match args.parse_env() {
         Ok(a) => a,
@@ -123,7 +131,10 @@ fn build_config(args: &Args) -> Result<RunConfig, String> {
 
 fn print_result(res: &disco::algorithms::RunResult, records: bool) {
     if records {
-        println!("{:>5} {:>8} {:>12} {:>12} {:>12}", "outer", "rounds", "sim_time", "grad_norm", "f");
+        println!(
+            "{:>5} {:>8} {:>12} {:>12} {:>12}",
+            "outer", "rounds", "sim_time", "grad_norm", "f"
+        );
         for r in &res.records {
             println!(
                 "{:>5} {:>8} {:>12.4} {:>12.3e} {:>12.6e}",
@@ -149,7 +160,8 @@ fn print_result(res: &disco::algorithms::RunResult, records: bool) {
 }
 
 fn cmd_run(args: &Args) -> Result<(), String> {
-    let cfg = build_config(args)?;
+    let mut cfg = build_config(args)?;
+    let transport = TransportCli::parse(args).map_err(|e| e.to_string())?;
     let ds_name = args.req("dataset").map_err(|e| e.to_string())?;
     let scale = args.get_usize("scale").map_err(|e| e.to_string())?;
     let ds = if scale <= 1 {
@@ -158,17 +170,43 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         registry::load_scaled(&ds_name, scale)
     }
     .ok_or_else(|| format!("unknown dataset '{ds_name}'"))?;
-    println!("{}", ds.describe());
-    println!(
-        "running {} on {} nodes, loss={}, λ={:.0e}, τ={}",
-        cfg.algo.name(),
-        cfg.m,
-        cfg.loss.name(),
-        cfg.lambda,
-        cfg.tau
-    );
-    let res = run(&ds, &cfg);
-    print_result(&res, args.flag("records"));
+    match transport.kind {
+        TransportKind::Shm => {
+            println!("{}", ds.describe());
+            println!(
+                "running {} on {} simulated nodes, loss={}, λ={:.0e}, τ={}",
+                cfg.algo.name(),
+                cfg.m,
+                cfg.loss.name(),
+                cfg.lambda,
+                cfg.tau
+            );
+            let res = run(&ds, &cfg);
+            print_result(&res, args.flag("records"));
+        }
+        TransportKind::Tcp => {
+            // One genuine OS process per rank; the fleet size overrides --m.
+            cfg.m = transport.world;
+            let opts = TcpOptions::new(transport.rank, transport.world, &transport.addr)
+                .with_timeout(Duration::from_secs_f64(transport.timeout_secs))
+                .with_cost(cfg.cost);
+            let t = TcpTransport::establish(&opts);
+            match run_over(&ds, &cfg, t) {
+                Some(res) => {
+                    println!(
+                        "running {} over tcp on {} processes, loss={}, λ={:.0e}, τ={}",
+                        cfg.algo.name(),
+                        cfg.m,
+                        cfg.loss.name(),
+                        cfg.lambda,
+                        cfg.tau
+                    );
+                    print_result(&res, args.flag("records"));
+                }
+                None => println!("rank {}/{} done", transport.rank, transport.world),
+            }
+        }
+    }
     Ok(())
 }
 

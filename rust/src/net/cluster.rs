@@ -1,22 +1,27 @@
-//! Simulated m-node SPMD cluster.
+//! Simulated m-node SPMD cluster (thread driver for the shm transport).
 //!
 //! The paper runs MPI over four EC2 instances; here each node is an OS
-//! thread executing the same program (SPMD) against its shard, and the MPI
-//! collectives (ReduceAll / Broadcast / Reduce / AllGather) are implemented
-//! with a shared blackboard + two-phase barrier. This keeps *computation*
+//! thread executing the same program (SPMD) against its shard, with the
+//! MPI collectives provided by [`ShmTransport`] — a shared blackboard +
+//! two-phase abortable barrier behind the
+//! [`Transport`](crate::net::Transport) trait. This keeps *computation*
 //! real (every node does exactly the work the algorithm prescribes, on its
 //! own core) while *communication* is priced by the α–β model
 //! ([`crate::net::cost`]) and accounted exactly ([`crate::net::stats`]).
+//! The same SPMD closures run unchanged over the multi-process
+//! [`TcpTransport`](crate::net::TcpTransport) backend — see
+//! [`crate::net::transport`] for the trait layering and the bit-identical
+//! equivalence guarantee between the two.
 //!
 //! ## Simulated clock
 //!
 //! Each node carries a simulated clock (seconds). [`NodeCtx::compute`]
 //! advances it by measured wallclock of the closure (divided by the node's
-//! [`speed`](NodeCtx::speed)); [`NodeCtx::compute_costed`] additionally
-//! accepts a flop estimate so that under [`ComputeModel::Modeled`] the
-//! clock advances by `flops / rate` — fully deterministic, bit-identical
-//! across repeated runs. Collectives synchronize all clocks to
-//! `max(arrival) + T_comm`, recording the waiting gap as *idle* and the
+//! speed); [`NodeCtx::compute_costed`] additionally accepts a flop
+//! estimate so that under [`ComputeModel::Modeled`](crate::net::ComputeModel)
+//! the clock advances by `flops / rate` — fully deterministic,
+//! bit-identical across repeated runs. Collectives synchronize all clocks
+//! to `max(arrival) + T_comm`, recording the waiting gap as *idle* and the
 //! transfer as *comm* in the trace — exactly the green/red/yellow boxes of
 //! the paper's Figure 2.
 //!
@@ -49,438 +54,14 @@
 //! (plus `advance`/`compute_costed` compute) `sim_seconds`, traces, and
 //! `CommStats` are bit-identical run to run.
 
-use crate::net::cost::{CollectiveKind, ComputeModel, CostModel};
+use crate::net::cost::{ComputeModel, CostModel};
 use crate::net::stats::CommStats;
-use crate::net::trace::{Activity, Segment, Trace};
-use crate::util::prng::Xoshiro256pp;
+use crate::net::trace::Trace;
+use crate::net::transport::shm::{Blackboard, PeerAbort, ShmTransport};
+use crate::net::transport::{NodeCtx, StragglerConfig};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
-
-/// Deterministic, seeded straggler injection: while an episode is active
-/// the node's effective speed is divided by `slowdown`. Episodes start
-/// and end on compute-segment boundaries, driven by a per-rank PRNG —
-/// identical across repeated runs of the same seed.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct StragglerConfig {
-    /// Per-compute-segment probability that an idle node starts an episode.
-    pub prob: f64,
-    /// Speed divisor while an episode is active (≥ 1).
-    pub slowdown: f64,
-    /// Episode length, counted in compute segments.
-    pub len: u32,
-    /// Episode stream seed (mixed with the rank).
-    pub seed: u64,
-}
-
-impl StragglerConfig {
-    pub fn new(prob: f64, slowdown: f64, len: u32, seed: u64) -> Self {
-        assert!((0.0..=1.0).contains(&prob), "episode probability in [0,1]");
-        assert!(slowdown >= 1.0, "slowdown is a divisor ≥ 1");
-        assert!(len >= 1, "episodes last at least one segment");
-        Self { prob, slowdown, len, seed }
-    }
-}
-
-struct StragglerState {
-    cfg: StragglerConfig,
-    rng: Xoshiro256pp,
-    /// Segments left in the current episode (0 = not straggling).
-    remaining: u32,
-}
-
-/// Marker payload for the panic that tears down peers after another node
-/// failed; `Cluster::run` recognizes it and keeps the original error.
-struct PeerAbort;
-
-fn peer_abort() -> ! {
-    std::panic::panic_any(PeerAbort)
-}
-
-/// Error returned by [`AbortBarrier::wait`] when the barrier was poisoned.
-struct Aborted;
-
-/// Reusable two-phase barrier with abort support. Unlike `std::Barrier`
-/// (which has **no** panic-poisoning — waiters sleep forever if a peer
-/// dies), `poison` wakes every current and future waiter with an error.
-struct AbortBarrier {
-    n: usize,
-    state: Mutex<BarrierState>,
-    cv: Condvar,
-}
-
-struct BarrierState {
-    count: usize,
-    generation: u64,
-    poisoned: bool,
-}
-
-impl AbortBarrier {
-    fn new(n: usize) -> Self {
-        Self {
-            n,
-            state: Mutex::new(BarrierState { count: 0, generation: 0, poisoned: false }),
-            cv: Condvar::new(),
-        }
-    }
-
-    /// Block until all `n` threads arrive. `Ok(true)` for exactly one
-    /// thread per generation (the leader — the last arriver).
-    fn wait(&self) -> Result<bool, Aborted> {
-        let mut st = self.state.lock().unwrap();
-        if st.poisoned {
-            return Err(Aborted);
-        }
-        let gen = st.generation;
-        st.count += 1;
-        if st.count == self.n {
-            st.count = 0;
-            st.generation += 1;
-            self.cv.notify_all();
-            return Ok(true);
-        }
-        while st.generation == gen && !st.poisoned {
-            st = self.cv.wait(st).unwrap();
-        }
-        if st.poisoned {
-            return Err(Aborted);
-        }
-        Ok(false)
-    }
-
-    /// Mark the barrier dead and wake every waiter.
-    fn poison(&self) {
-        let mut st = self.state.lock().unwrap();
-        st.poisoned = true;
-        self.cv.notify_all();
-    }
-}
-
-/// Shared collective state (the "network").
-struct Blackboard {
-    m: usize,
-    cost: CostModel,
-    /// Per-rank deposited payloads for the in-flight collective.
-    slots: Mutex<Slots>,
-    barrier_a: AbortBarrier,
-    barrier_b: AbortBarrier,
-    stats: Mutex<CommStats>,
-    /// First failure (panic message) observed on any node.
-    failed: Mutex<Option<String>>,
-}
-
-struct Slots {
-    contribs: Vec<Vec<f64>>,
-    clocks: Vec<f64>,
-    /// Result of the current collective (valid between barrier A and B+read).
-    result: Vec<f64>,
-    /// Synchronized departure clock for the current collective.
-    depart_clock: f64,
-    /// Max arrival clock (start of the comm window).
-    comm_start: f64,
-    /// Priced message size of the current collective, set by the leader
-    /// (for AllGather: the true summed contribution size). Every rank
-    /// mirrors this value into its `local_stats` so the per-node and
-    /// global accounting agree and are scheduling-independent.
-    priced_doubles: usize,
-}
-
-/// Per-node handle passed to the SPMD closure.
-pub struct NodeCtx<'a> {
-    pub rank: usize,
-    pub m: usize,
-    board: &'a Blackboard,
-    /// Simulated clock, seconds.
-    pub clock: f64,
-    /// Relative compute speed of this node (1.0 = baseline; 0.5 = half
-    /// speed). Simulated compute time is *divided* by it.
-    pub speed: f64,
-    compute_model: ComputeModel,
-    straggler: Option<StragglerState>,
-    /// Node-local mirror of the global communication counters (identical
-    /// on every node since all participate in every collective); lets the
-    /// SPMD code snapshot rounds/bytes mid-run without touching the shared
-    /// stats lock.
-    pub local_stats: CommStats,
-    /// Node-local trace (merged by the driver at the end).
-    pub trace: Trace,
-    trace_enabled: bool,
-}
-
-impl<'a> NodeCtx<'a> {
-    /// Draw the straggler factor for the next compute segment (1.0 when
-    /// healthy, `slowdown` while an episode is active).
-    fn straggle_factor(&mut self) -> f64 {
-        match &mut self.straggler {
-            None => 1.0,
-            Some(st) => {
-                if st.remaining > 0 {
-                    st.remaining -= 1;
-                    st.cfg.slowdown
-                } else if st.rng.next_f64() < st.cfg.prob {
-                    st.remaining = st.cfg.len - 1;
-                    st.cfg.slowdown
-                } else {
-                    1.0
-                }
-            }
-        }
-    }
-
-    /// Advance the clock by `base_seconds` scaled by this node's speed and
-    /// any active straggler episode, recording a compute segment.
-    fn push_compute(&mut self, label: &str, base_seconds: f64) {
-        let factor = self.straggle_factor();
-        let dt = base_seconds * factor / self.speed;
-        if self.trace_enabled {
-            let label = if factor > 1.0 {
-                format!("{label}+straggle")
-            } else {
-                label.to_string()
-            };
-            self.trace.push(Segment {
-                node: self.rank,
-                start: self.clock,
-                end: self.clock + dt,
-                activity: Activity::Compute,
-                label,
-            });
-        }
-        self.clock += dt;
-    }
-
-    /// Run `f` as node-local computation: advances the simulated clock by
-    /// the measured wallclock (over the node's speed) and records a
-    /// compute segment.
-    pub fn compute<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
-        let t = Instant::now();
-        let out = f();
-        self.push_compute(label, t.elapsed().as_secs_f64());
-        out
-    }
-
-    /// Like [`compute`](Self::compute), but the closure also returns a
-    /// flop estimate of its work. Under [`ComputeModel::Modeled`] the
-    /// clock advances by `flops / rate` — deterministic, bit-identical
-    /// across runs; under `Measured` the estimate is ignored and measured
-    /// wallclock is used (the seed behaviour).
-    pub fn compute_costed<T>(&mut self, label: &str, f: impl FnOnce() -> (T, f64)) -> T {
-        match self.compute_model {
-            ComputeModel::Measured => {
-                let t = Instant::now();
-                let (out, _flops) = f();
-                self.push_compute(label, t.elapsed().as_secs_f64());
-                out
-            }
-            ComputeModel::Modeled { flops_per_sec } => {
-                let (out, flops) = f();
-                self.push_compute(label, flops.max(0.0) / flops_per_sec);
-                out
-            }
-        }
-    }
-
-    /// Advance the simulated clock without running anything (models
-    /// compute whose cost is known analytically; used in what-if benches).
-    /// Scaled by the node's speed / straggler state like any compute.
-    pub fn advance(&mut self, label: &str, seconds: f64) {
-        self.push_compute(label, seconds);
-    }
-
-    /// Core collective protocol. `combine` runs once (on the barrier
-    /// leader) over all deposited contributions; its output is returned to
-    /// every node. `k_doubles` is the modeled message size (ignored for
-    /// AllGather, which is priced from the true summed contribution
-    /// size). With `metric = true` the collective is free and unaccounted
-    /// — used by the experiment harness to observe convergence without
-    /// perturbing the paper's round/byte counts.
-    fn collective(
-        &mut self,
-        kind: CollectiveKind,
-        k_doubles: usize,
-        payload: Vec<f64>,
-        combine: impl FnOnce(&mut Slots),
-    ) -> Vec<f64> {
-        self.collective_inner(kind, k_doubles, payload, false, combine)
-    }
-
-    fn collective_inner(
-        &mut self,
-        kind: CollectiveKind,
-        k_doubles: usize,
-        payload: Vec<f64>,
-        metric: bool,
-        combine: impl FnOnce(&mut Slots),
-    ) -> Vec<f64> {
-        let arrival = self.clock;
-        {
-            let mut s = self.board.slots.lock().unwrap();
-            s.contribs[self.rank] = payload;
-            s.clocks[self.rank] = arrival;
-        }
-        let leader = match self.board.barrier_a.wait() {
-            Ok(l) => l,
-            Err(Aborted) => peer_abort(),
-        };
-        if leader {
-            let mut s = self.board.slots.lock().unwrap();
-            let comm_start = s.clocks.iter().cloned().fold(0.0, f64::max);
-            // AllGather contributions may be ragged; price the true summed
-            // size rather than any single rank's guess — the leader is an
-            // arbitrary thread, so a rank-local size would make pricing
-            // (and CommStats) depend on thread scheduling.
-            let k_eff = if kind == CollectiveKind::AllGather {
-                s.contribs.iter().map(|c| c.len()).sum()
-            } else {
-                k_doubles
-            };
-            let t_comm = if metric {
-                0.0
-            } else {
-                self.board.cost.time(kind, k_eff, self.m)
-            };
-            s.comm_start = comm_start;
-            s.depart_clock = comm_start + t_comm;
-            s.priced_doubles = k_eff;
-            combine(&mut s);
-            if !metric {
-                self.board
-                    .stats
-                    .lock()
-                    .unwrap()
-                    .record(kind, k_eff, t_comm);
-            }
-        }
-        if self.board.barrier_b.wait().is_err() {
-            peer_abort();
-        }
-        let (result, comm_start, depart, k_eff) = {
-            let s = self.board.slots.lock().unwrap();
-            (s.result.clone(), s.comm_start, s.depart_clock, s.priced_doubles)
-        };
-        if !metric {
-            self.local_stats
-                .record(kind, k_eff, (depart - comm_start).max(0.0));
-        }
-        if self.trace_enabled {
-            if comm_start > arrival + 1e-12 {
-                self.trace.push(Segment {
-                    node: self.rank,
-                    start: arrival,
-                    end: comm_start,
-                    activity: Activity::Idle,
-                    label: format!("wait:{}", kind.name()),
-                });
-            }
-            if depart > comm_start + 1e-15 {
-                self.trace.push(Segment {
-                    node: self.rank,
-                    start: comm_start,
-                    end: depart,
-                    activity: Activity::Comm,
-                    label: kind.name().to_string(),
-                });
-            }
-        }
-        self.clock = depart;
-        result
-    }
-
-    /// Sum across nodes; result to all. `buf` is replaced by the sum.
-    pub fn reduce_all(&mut self, buf: &mut Vec<f64>) {
-        let k = buf.len();
-        let payload = std::mem::take(buf);
-        let out = self.collective(CollectiveKind::ReduceAll, k, payload, |s| {
-            let mut acc = vec![0.0; k];
-            for c in &s.contribs {
-                debug_assert_eq!(c.len(), k, "reduce_all arity mismatch across nodes");
-                for (a, b) in acc.iter_mut().zip(c.iter()) {
-                    *a += *b;
-                }
-            }
-            s.result = acc;
-        });
-        *buf = out;
-    }
-
-    /// Scalar ReduceAll (counted as a scalar round, see stats).
-    pub fn reduce_all_scalar(&mut self, x: f64) -> f64 {
-        let mut v = vec![x];
-        self.reduce_all(&mut v);
-        v[0]
-    }
-
-    /// Two scalars bundled in one message (the paper's Alg. 3 sends α's
-    /// numerator+denominator together).
-    pub fn reduce_all_scalar2(&mut self, x: f64, y: f64) -> (f64, f64) {
-        let mut v = vec![x, y];
-        self.reduce_all(&mut v);
-        (v[0], v[1])
-    }
-
-    /// Metrics-channel ReduceAll: free and unaccounted (harness-only).
-    pub fn metric_reduce_all(&mut self, buf: &mut Vec<f64>) {
-        let k = buf.len();
-        let payload = std::mem::take(buf);
-        let out = self.collective_inner(CollectiveKind::ReduceAll, k, payload, true, |s| {
-            let mut acc = vec![0.0; k];
-            for c in &s.contribs {
-                for (a, b) in acc.iter_mut().zip(c.iter()) {
-                    *a += *b;
-                }
-            }
-            s.result = acc;
-        });
-        *buf = out;
-    }
-
-    /// Root's buffer is copied to every node.
-    pub fn broadcast(&mut self, root: usize, buf: &mut Vec<f64>) {
-        let k = buf.len();
-        let payload = std::mem::take(buf);
-        let out = self.collective(CollectiveKind::Broadcast, k, payload, |s| {
-            s.result = s.contribs[root].clone();
-        });
-        *buf = out;
-    }
-
-    /// Sum to `root`; non-root nodes receive an empty vec and must not use
-    /// the value (mirrors MPI_Reduce semantics).
-    pub fn reduce(&mut self, root: usize, buf: &mut Vec<f64>) {
-        let k = buf.len();
-        let payload = std::mem::take(buf);
-        let out = self.collective(CollectiveKind::Reduce, k, payload, |s| {
-            let mut acc = vec![0.0; k];
-            for c in &s.contribs {
-                for (a, b) in acc.iter_mut().zip(c.iter()) {
-                    *a += *b;
-                }
-            }
-            s.result = acc;
-        });
-        *buf = if self.rank == root { out } else { Vec::new() };
-    }
-
-    /// Concatenate per-node parts in rank order; everyone gets the result.
-    /// (DiSCO-F's final "Integration" step, Alg. 3 line 12.) Parts may be
-    /// ragged; the collective is priced from the true total gathered size
-    /// (computed by the leader from the deposits, deterministically).
-    pub fn all_gather_concat(&mut self, part: &[f64]) -> Vec<f64> {
-        let payload = part.to_vec();
-        self.collective(CollectiveKind::AllGather, 0, payload, |s| {
-            let mut acc = Vec::new();
-            for c in &s.contribs {
-                acc.extend_from_slice(c);
-            }
-            s.result = acc;
-        })
-    }
-
-    /// Synchronize clocks without data (pure barrier; prices as a scalar).
-    pub fn barrier(&mut self) {
-        let _ = self.reduce_all_scalar(0.0);
-    }
-}
 
 /// Result of a cluster run.
 pub struct ClusterRun<T> {
@@ -560,25 +141,10 @@ impl Cluster {
     /// with `cluster node failed: …`.
     pub fn run<T: Send>(
         &self,
-        f: impl Fn(&mut NodeCtx) -> T + Sync,
+        f: impl Fn(&mut NodeCtx<ShmTransport>) -> T + Sync,
     ) -> ClusterRun<T> {
         assert!(self.m >= 1, "cluster needs at least one node");
-        let board = Blackboard {
-            m: self.m,
-            cost: self.cost,
-            slots: Mutex::new(Slots {
-                contribs: vec![Vec::new(); self.m],
-                clocks: vec![0.0; self.m],
-                result: Vec::new(),
-                depart_clock: 0.0,
-                comm_start: 0.0,
-                priced_doubles: 0,
-            }),
-            barrier_a: AbortBarrier::new(self.m),
-            barrier_b: AbortBarrier::new(self.m),
-            stats: Mutex::new(CommStats::default()),
-            failed: Mutex::new(None),
-        };
+        let board = Arc::new(Blackboard::new(self.m, self.cost));
         let wall = Instant::now();
         let mut outputs: Vec<Option<(T, f64, Trace)>> = Vec::with_capacity(self.m);
         for _ in 0..self.m {
@@ -586,32 +152,22 @@ impl Cluster {
         }
         let trace_enabled = self.trace;
         std::thread::scope(|scope| {
-            let board = &board;
             let f = &f;
             let mut handles = Vec::new();
             for (rank, slot) in outputs.iter_mut().enumerate() {
                 let speed = self.speeds.get(rank).copied().unwrap_or(1.0);
-                let straggler = self.straggler.map(|cfg| StragglerState {
-                    rng: Xoshiro256pp::seed_from_u64(
-                        cfg.seed ^ (rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
-                    ),
-                    remaining: 0,
-                    cfg,
-                });
+                let straggler = self.straggler;
                 let compute_model = self.compute;
+                let board_node = Arc::clone(&board);
                 handles.push(scope.spawn(move || {
-                    let mut ctx = NodeCtx {
-                        rank,
-                        m: board.m,
-                        board,
-                        clock: 0.0,
-                        speed,
-                        compute_model,
-                        straggler,
-                        local_stats: CommStats::default(),
-                        trace: Trace::new(board.m),
-                        trace_enabled,
-                    };
+                    let board_fail = Arc::clone(&board_node);
+                    let mut ctx = NodeCtx::new(ShmTransport::new(board_node, rank))
+                        .with_speed(speed)
+                        .with_compute(compute_model)
+                        .with_trace(trace_enabled);
+                    if let Some(cfg) = straggler {
+                        ctx = ctx.with_straggler(cfg);
+                    }
                     match catch_unwind(AssertUnwindSafe(|| f(&mut ctx))) {
                         Ok(out) => {
                             *slot = Some((out, ctx.clock, std::mem::take(&mut ctx.trace)));
@@ -627,16 +183,12 @@ impl Cluster {
                                         payload.downcast_ref::<&str>().map(|s| s.to_string())
                                     })
                                     .unwrap_or_else(|| "node panicked".into());
-                                let mut failed = board.failed.lock().unwrap();
-                                if failed.is_none() {
-                                    *failed = Some(format!("rank {rank}: {msg}"));
-                                }
+                                board_fail.record_failure(rank, msg);
                             }
                             // Wake everyone blocked in (or entering) a
                             // collective so the run tears down instead of
                             // deadlocking.
-                            board.barrier_a.poison();
-                            board.barrier_b.poison();
+                            board_fail.poison();
                         }
                     }
                 }));
@@ -645,7 +197,7 @@ impl Cluster {
                 let _ = h.join();
             }
         });
-        if let Some(msg) = board.failed.lock().unwrap().take() {
+        if let Some(msg) = board.take_failure() {
             panic!("cluster node failed: {msg}");
         }
         let wall_seconds = wall.elapsed().as_secs_f64();
@@ -662,7 +214,7 @@ impl Cluster {
             .collect();
         ClusterRun {
             outputs: outs,
-            stats: board.stats.into_inner().unwrap(),
+            stats: board.stats_snapshot(),
             trace,
             sim_seconds: sim,
             wall_seconds,

@@ -1,20 +1,30 @@
-//! Simulated distributed runtime: SPMD cluster over threads, MPI-style
-//! collectives with exact round/byte accounting, a pluggable α–β network
-//! cost model (flat-tree / binomial-tree / ring collectives), per-node
-//! compute-speed multipliers with deterministic straggler injection, and
-//! per-node activity traces (Figure 2).
+//! Distributed runtime: trait-abstracted MPI-style collectives
+//! ([`Collectives`] / [`Transport`]) with two interchangeable backends —
+//! the in-process SPMD thread cluster ([`ShmTransport`], exact round/byte
+//! accounting plus a pluggable α–β network cost model with flat-tree /
+//! binomial-tree / ring collective pricing, per-node compute-speed
+//! multipliers, deterministic straggler injection, and per-node activity
+//! traces for Figure 2) and a real multi-process TCP backend
+//! ([`TcpTransport`]: rank-0 rendezvous, length-prefixed binary frames,
+//! binomial-tree reduce/broadcast + ring all-gather over sockets). Seeded
+//! [`ComputeModel::Modeled`] runs are bit-identical across the two — see
+//! [`transport`] for the guarantee.
 //!
 //! Failure semantics: a panic inside one node's SPMD closure aborts the
-//! whole run — the barriers are poisoned, peers blocked in a collective
-//! unwind, and [`Cluster::run`] panics with `cluster node failed: …`
-//! (earlier revisions deadlocked here; see `net::cluster` module docs).
+//! whole run — the shm barriers are poisoned (TCP peers observe EOF or a
+//! socket deadline), peers blocked in a collective unwind, and the run
+//! fails with `cluster node failed: rank N: …` instead of hanging.
 
 pub mod cluster;
 pub mod cost;
 pub mod stats;
 pub mod trace;
+pub mod transport;
 
-pub use cluster::{Cluster, ClusterRun, NodeCtx, StragglerConfig};
+pub use cluster::{Cluster, ClusterRun};
 pub use cost::{CollectiveAlgo, CollectiveKind, ComputeModel, CostModel};
 pub use stats::CommStats;
 pub use trace::{Activity, Segment, Trace};
+pub use transport::{
+    Collectives, NodeCtx, ShmTransport, StragglerConfig, TcpOptions, TcpTransport, Transport,
+};

@@ -30,6 +30,15 @@ pub struct CommStats {
     pub broadcast: u64,
     pub reduce: u64,
     pub all_gather: u64,
+    /// Bytes this rank actually moved over a real wire during *priced
+    /// collectives* (frames sent + received by the TCP transport, headers
+    /// included; always 0 under the shm simulation). The measured
+    /// counterpart to the *priced* `modeled_comm_seconds` — the two
+    /// coexist so a real run can be compared against its α–β model.
+    /// Handshake, metrics-channel, and end-of-run report traffic is
+    /// deliberately excluded (free and unaccounted by contract), so this
+    /// undercounts what the OS socket counters see for a whole process.
+    pub wire_bytes: u64,
 }
 
 impl CommStats {
@@ -70,6 +79,7 @@ impl CommStats {
         self.broadcast += o.broadcast;
         self.reduce += o.reduce;
         self.all_gather += o.all_gather;
+        self.wire_bytes += o.wire_bytes;
     }
 }
 
@@ -77,12 +87,13 @@ impl std::fmt::Display for CommStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "rounds={} (scalar {}) doubles={} ({} KB) comm_time={:.3}ms [ra={} bc={} rd={} ag={}]",
+            "rounds={} (scalar {}) doubles={} ({} KB) comm_time={:.3}ms wire={}B [ra={} bc={} rd={} ag={}]",
             self.vector_rounds,
             self.scalar_rounds,
             self.vector_doubles,
             self.vector_bytes() / 1024,
             self.modeled_comm_seconds * 1e3,
+            self.wire_bytes,
             self.reduce_all,
             self.broadcast,
             self.reduce,

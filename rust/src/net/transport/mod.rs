@@ -1,0 +1,596 @@
+//! Transport layer: the collective surface of the runtime, abstracted over
+//! *how* bytes move.
+//!
+//! Three layers, bottom to top:
+//!
+//! 1. [`Transport`] — the raw, clock-aware collective engine. One method
+//!    executes a whole collective: it moves this rank's `payload` (and its
+//!    simulated arrival clock) to wherever the combine happens, and returns
+//!    the combined result plus the synchronized clock window
+//!    (`comm_start = max` arrival across ranks, `depart = comm_start +
+//!    T_comm` from the α–β [`CostModel`](crate::net::CostModel)). Two
+//!    implementations ship:
+//!    * [`shm::ShmTransport`] — the original in-process thread cluster
+//!      (shared blackboard + two-phase abortable barrier), bit-identical
+//!      to the pre-refactor simulator;
+//!    * [`tcp::TcpTransport`] — a real multi-process backend over TCP
+//!      sockets (rank-0 rendezvous, length-prefixed binary frames,
+//!      binomial-tree reduce/broadcast, ring all-gather).
+//! 2. [`NodeCtx`] — the per-rank context generic over a `Transport`. It
+//!    owns everything backend-independent: the simulated clock, compute
+//!    accounting ([`ComputeModel`]), per-node speed and straggler
+//!    injection, the [`CommStats`] mirror, and the Figure-2 activity
+//!    trace.
+//! 3. [`Collectives`] — the trait the *algorithms* are written against
+//!    (`reduce_all`, `broadcast`, `reduce`, `all_gather_concat`,
+//!    `barrier`, the scalar bundles, the free metrics channel, and the
+//!    compute-accounting hooks). `NodeCtx<T>` implements it for every
+//!    transport, so algorithm code contains no backend-specific branches.
+//!
+//! ## The equivalence guarantee
+//!
+//! A seeded run under [`ComputeModel::Modeled`] produces **bit-identical**
+//! results, clocks, traces, and priced [`CommStats`] on both backends.
+//! Three design rules make this hold:
+//!
+//! * every collective's combine is the *single* shared [`combine`]
+//!   function, and reductions always sum contributions **in rank order**
+//!   (floating-point addition is not associative, so the TCP tree moves
+//!   raw contributions to rank 0 rather than forming partial sums
+//!   in-tree);
+//! * the clock window is a pure function of the per-rank arrival clocks
+//!   and the cost model (`comm_start = fold(0, max)`, identical fold
+//!   order), both of which ride the wire alongside the data;
+//! * pricing inputs (`k` doubles, world size, collective kind) are the
+//!   same on every rank by SPMD discipline, so every rank computes the
+//!   same `T_comm` bits.
+//!
+//! Real wire traffic is additionally recorded per rank in
+//! [`CommStats::wire_bytes`] (always 0 under shm) — the measured
+//! counterpart to the priced α–β model. The frame layout itself is
+//! documented in [`tcp`].
+
+pub mod shm;
+pub mod tcp;
+
+pub use shm::ShmTransport;
+pub use tcp::{TcpOptions, TcpTransport};
+
+use crate::net::cost::{CollectiveKind, ComputeModel};
+use crate::net::stats::CommStats;
+use crate::net::trace::{Activity, Segment, Trace};
+use crate::util::prng::Xoshiro256pp;
+use std::time::Instant;
+
+/// Deterministic, seeded straggler injection: while an episode is active
+/// the node's effective speed is divided by `slowdown`. Episodes start
+/// and end on compute-segment boundaries, driven by a per-rank PRNG —
+/// identical across repeated runs of the same seed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerConfig {
+    /// Per-compute-segment probability that an idle node starts an episode.
+    pub prob: f64,
+    /// Speed divisor while an episode is active (≥ 1).
+    pub slowdown: f64,
+    /// Episode length, counted in compute segments.
+    pub len: u32,
+    /// Episode stream seed (mixed with the rank).
+    pub seed: u64,
+}
+
+impl StragglerConfig {
+    pub fn new(prob: f64, slowdown: f64, len: u32, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&prob), "episode probability in [0,1]");
+        assert!(slowdown >= 1.0, "slowdown is a divisor ≥ 1");
+        assert!(len >= 1, "episodes last at least one segment");
+        Self { prob, slowdown, len, seed }
+    }
+}
+
+struct StragglerState {
+    cfg: StragglerConfig,
+    rng: Xoshiro256pp,
+    /// Segments left in the current episode (0 = not straggling).
+    remaining: u32,
+}
+
+/// Result of one clock-synchronized collective, as produced by a
+/// [`Transport`].
+#[derive(Clone, Debug)]
+pub struct CollectiveOutcome {
+    /// Combined value delivered to this rank (see [`combine`]).
+    pub result: Vec<f64>,
+    /// Max arrival clock across ranks — start of the communication window.
+    pub comm_start: f64,
+    /// `comm_start + T_comm`; every rank's clock jumps here.
+    pub depart: f64,
+    /// Message size the collective was priced at (for AllGather: the true
+    /// summed contribution size).
+    pub priced_doubles: usize,
+}
+
+/// Raw collective engine: moves payloads + clocks, combines in rank order,
+/// prices the transfer. Implementations must be SPMD-lockstep: every rank
+/// calls `collective` with the same `kind`/`root`/`k_doubles`/`metric`
+/// sequence.
+///
+/// Failure contract: a dead or desynchronized peer must surface as a panic
+/// whose message starts with `cluster node failed: rank N: …` within a
+/// bounded deadline — never a hang (the shm backend poisons its barriers;
+/// the TCP backend enforces socket deadlines).
+pub trait Transport {
+    fn rank(&self) -> usize;
+    fn world(&self) -> usize;
+
+    /// Execute one collective. `root` is the data source for Broadcast and
+    /// the receiver for Reduce (combining itself is root-agnostic; the
+    /// caller discards non-root results for Reduce). `k_doubles` is the
+    /// priced message size (ignored for AllGather, which is priced from
+    /// the true summed contribution size). With `metric = true` the
+    /// collective is free: `T_comm = 0` and nothing is recorded in the
+    /// global stats.
+    fn collective(
+        &mut self,
+        kind: CollectiveKind,
+        root: usize,
+        k_doubles: usize,
+        payload: Vec<f64>,
+        arrival_clock: f64,
+        metric: bool,
+    ) -> CollectiveOutcome;
+
+    /// Cumulative bytes this rank actually moved over a wire (0 for shm).
+    fn wire_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Out-of-band end-of-run report exchange (unpriced, unaccounted):
+    /// every rank submits its serialized report; rank 0 receives all
+    /// `world` reports in rank order, other ranks get `None`.
+    fn exchange_reports(&mut self, report: Vec<u8>) -> Option<Vec<Vec<u8>>>;
+}
+
+impl<T: Transport + ?Sized> Transport for &mut T {
+    fn rank(&self) -> usize {
+        (**self).rank()
+    }
+
+    fn world(&self) -> usize {
+        (**self).world()
+    }
+
+    fn collective(
+        &mut self,
+        kind: CollectiveKind,
+        root: usize,
+        k_doubles: usize,
+        payload: Vec<f64>,
+        arrival_clock: f64,
+        metric: bool,
+    ) -> CollectiveOutcome {
+        (**self).collective(kind, root, k_doubles, payload, arrival_clock, metric)
+    }
+
+    fn wire_bytes(&self) -> u64 {
+        (**self).wire_bytes()
+    }
+
+    fn exchange_reports(&mut self, report: Vec<u8>) -> Option<Vec<Vec<u8>>> {
+        (**self).exchange_reports(report)
+    }
+}
+
+/// The single combine implementation shared by every backend — reductions
+/// sum **in rank order** so results are bit-identical regardless of which
+/// transport moved the contributions.
+pub(crate) fn combine(kind: CollectiveKind, root: usize, contribs: &[Vec<f64>]) -> Vec<f64> {
+    match kind {
+        CollectiveKind::ReduceAll | CollectiveKind::Reduce => {
+            let k = contribs[0].len();
+            let mut acc = vec![0.0; k];
+            for c in contribs {
+                debug_assert_eq!(c.len(), k, "reduction arity mismatch across nodes");
+                for (a, b) in acc.iter_mut().zip(c.iter()) {
+                    *a += *b;
+                }
+            }
+            acc
+        }
+        CollectiveKind::Broadcast => contribs[root].clone(),
+        CollectiveKind::AllGather => {
+            let total = contribs.iter().map(|c| c.len()).sum();
+            let mut acc = Vec::with_capacity(total);
+            for c in contribs {
+                acc.extend_from_slice(c);
+            }
+            acc
+        }
+    }
+}
+
+/// Per-rank handle passed to the SPMD closure: simulated clock, compute
+/// accounting, trace, and the collective surface — generic over the
+/// [`Transport`] that moves the bytes.
+pub struct NodeCtx<T: Transport> {
+    pub rank: usize,
+    pub m: usize,
+    transport: T,
+    /// Simulated clock, seconds.
+    pub clock: f64,
+    /// Relative compute speed of this node (1.0 = baseline; 0.5 = half
+    /// speed). Simulated compute time is *divided* by it.
+    pub speed: f64,
+    compute_model: ComputeModel,
+    straggler: Option<StragglerState>,
+    /// Node-local mirror of the global communication counters (identical
+    /// on every node since all participate in every collective); lets the
+    /// SPMD code snapshot rounds/bytes mid-run without any shared lock.
+    pub local_stats: CommStats,
+    /// Node-local trace (merged by the driver at the end).
+    pub trace: Trace,
+    trace_enabled: bool,
+}
+
+impl<T: Transport> NodeCtx<T> {
+    pub fn new(transport: T) -> Self {
+        let rank = transport.rank();
+        let m = transport.world();
+        assert!(m >= 1, "transport must span at least one rank");
+        assert!(rank < m, "rank out of range");
+        Self {
+            rank,
+            m,
+            transport,
+            clock: 0.0,
+            speed: 1.0,
+            compute_model: ComputeModel::Measured,
+            straggler: None,
+            local_stats: CommStats::default(),
+            trace: Trace::new(m),
+            trace_enabled: false,
+        }
+    }
+
+    pub fn with_speed(mut self, speed: f64) -> Self {
+        assert!(speed.is_finite() && speed > 0.0, "speed must be positive and finite");
+        self.speed = speed;
+        self
+    }
+
+    /// Seeded straggler episodes; the stream is mixed with this context's
+    /// rank exactly like the thread cluster does, so shm and tcp runs draw
+    /// identical episodes.
+    pub fn with_straggler(mut self, cfg: StragglerConfig) -> Self {
+        self.straggler = Some(StragglerState {
+            rng: Xoshiro256pp::seed_from_u64(
+                cfg.seed ^ (self.rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ),
+            remaining: 0,
+            cfg,
+        });
+        self
+    }
+
+    pub fn with_compute(mut self, model: ComputeModel) -> Self {
+        self.compute_model = model;
+        self
+    }
+
+    pub fn with_trace(mut self, on: bool) -> Self {
+        self.trace_enabled = on;
+        self
+    }
+
+    /// Direct access to the underlying transport (end-of-run report
+    /// exchange; not for mid-run communication).
+    pub fn transport_mut(&mut self) -> &mut T {
+        &mut self.transport
+    }
+
+    /// Draw the straggler factor for the next compute segment (1.0 when
+    /// healthy, `slowdown` while an episode is active).
+    fn straggle_factor(&mut self) -> f64 {
+        match &mut self.straggler {
+            None => 1.0,
+            Some(st) => {
+                if st.remaining > 0 {
+                    st.remaining -= 1;
+                    st.cfg.slowdown
+                } else if st.rng.next_f64() < st.cfg.prob {
+                    st.remaining = st.cfg.len - 1;
+                    st.cfg.slowdown
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Advance the clock by `base_seconds` scaled by this node's speed and
+    /// any active straggler episode, recording a compute segment.
+    fn push_compute(&mut self, label: &str, base_seconds: f64) {
+        let factor = self.straggle_factor();
+        let dt = base_seconds * factor / self.speed;
+        if self.trace_enabled {
+            let label = if factor > 1.0 {
+                format!("{label}+straggle")
+            } else {
+                label.to_string()
+            };
+            self.trace.push(Segment {
+                node: self.rank,
+                start: self.clock,
+                end: self.clock + dt,
+                activity: Activity::Compute,
+                label,
+            });
+        }
+        self.clock += dt;
+    }
+
+    /// Run `f` as node-local computation: advances the simulated clock by
+    /// the measured wallclock (over the node's speed) and records a
+    /// compute segment.
+    pub fn compute<R>(&mut self, label: &str, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let out = f();
+        self.push_compute(label, t.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Like [`compute`](Self::compute), but the closure also returns a
+    /// flop estimate of its work. Under [`ComputeModel::Modeled`] the
+    /// clock advances by `flops / rate` — deterministic, bit-identical
+    /// across runs; under `Measured` the estimate is ignored and measured
+    /// wallclock is used (the seed behaviour).
+    pub fn compute_costed<R>(&mut self, label: &str, f: impl FnOnce() -> (R, f64)) -> R {
+        match self.compute_model {
+            ComputeModel::Measured => {
+                let t = Instant::now();
+                let (out, _flops) = f();
+                self.push_compute(label, t.elapsed().as_secs_f64());
+                out
+            }
+            ComputeModel::Modeled { flops_per_sec } => {
+                let (out, flops) = f();
+                self.push_compute(label, flops.max(0.0) / flops_per_sec);
+                out
+            }
+        }
+    }
+
+    /// Advance the simulated clock without running anything (models
+    /// compute whose cost is known analytically; used in what-if benches).
+    /// Scaled by the node's speed / straggler state like any compute.
+    pub fn advance(&mut self, label: &str, seconds: f64) {
+        self.push_compute(label, seconds);
+    }
+
+    /// Core collective wrapper: delegates the data movement + clock
+    /// synchronization to the transport, then does the backend-independent
+    /// accounting (local stats mirror, wire-byte delta, trace segments,
+    /// clock jump).
+    fn collective_inner(
+        &mut self,
+        kind: CollectiveKind,
+        root: usize,
+        k_doubles: usize,
+        payload: Vec<f64>,
+        metric: bool,
+    ) -> Vec<f64> {
+        let arrival = self.clock;
+        let wire_before = self.transport.wire_bytes();
+        let out = self
+            .transport
+            .collective(kind, root, k_doubles, payload, arrival, metric);
+        if !metric {
+            self.local_stats
+                .record(kind, out.priced_doubles, (out.depart - out.comm_start).max(0.0));
+            self.local_stats.wire_bytes += self.transport.wire_bytes() - wire_before;
+        }
+        if self.trace_enabled {
+            if out.comm_start > arrival + 1e-12 {
+                self.trace.push(Segment {
+                    node: self.rank,
+                    start: arrival,
+                    end: out.comm_start,
+                    activity: Activity::Idle,
+                    label: format!("wait:{}", kind.name()),
+                });
+            }
+            if out.depart > out.comm_start + 1e-15 {
+                self.trace.push(Segment {
+                    node: self.rank,
+                    start: out.comm_start,
+                    end: out.depart,
+                    activity: Activity::Comm,
+                    label: kind.name().to_string(),
+                });
+            }
+        }
+        self.clock = out.depart;
+        out.result
+    }
+
+    /// Sum across nodes; result to all. `buf` is replaced by the sum.
+    pub fn reduce_all(&mut self, buf: &mut Vec<f64>) {
+        let k = buf.len();
+        let payload = std::mem::take(buf);
+        *buf = self.collective_inner(CollectiveKind::ReduceAll, 0, k, payload, false);
+    }
+
+    /// Scalar ReduceAll (counted as a scalar round, see stats).
+    pub fn reduce_all_scalar(&mut self, x: f64) -> f64 {
+        let mut v = vec![x];
+        self.reduce_all(&mut v);
+        v[0]
+    }
+
+    /// Two scalars bundled in one message (the paper's Alg. 3 sends α's
+    /// numerator+denominator together).
+    pub fn reduce_all_scalar2(&mut self, x: f64, y: f64) -> (f64, f64) {
+        let mut v = vec![x, y];
+        self.reduce_all(&mut v);
+        (v[0], v[1])
+    }
+
+    /// Metrics-channel ReduceAll: free and unaccounted (harness-only).
+    pub fn metric_reduce_all(&mut self, buf: &mut Vec<f64>) {
+        let k = buf.len();
+        let payload = std::mem::take(buf);
+        *buf = self.collective_inner(CollectiveKind::ReduceAll, 0, k, payload, true);
+    }
+
+    /// Root's buffer is copied to every node.
+    pub fn broadcast(&mut self, root: usize, buf: &mut Vec<f64>) {
+        let k = buf.len();
+        let payload = std::mem::take(buf);
+        *buf = self.collective_inner(CollectiveKind::Broadcast, root, k, payload, false);
+    }
+
+    /// Sum to `root`; non-root nodes receive an empty vec and must not use
+    /// the value (mirrors MPI_Reduce semantics).
+    pub fn reduce(&mut self, root: usize, buf: &mut Vec<f64>) {
+        let k = buf.len();
+        let payload = std::mem::take(buf);
+        let out = self.collective_inner(CollectiveKind::Reduce, root, k, payload, false);
+        *buf = if self.rank == root { out } else { Vec::new() };
+    }
+
+    /// Concatenate per-node parts in rank order; everyone gets the result.
+    /// (DiSCO-F's final "Integration" step, Alg. 3 line 12.) Parts may be
+    /// ragged; the collective is priced from the true total gathered size.
+    pub fn all_gather_concat(&mut self, part: &[f64]) -> Vec<f64> {
+        self.collective_inner(CollectiveKind::AllGather, 0, 0, part.to_vec(), false)
+    }
+
+    /// Synchronize clocks without data (pure barrier; prices as a scalar).
+    pub fn barrier(&mut self) {
+        let _ = self.reduce_all_scalar(0.0);
+    }
+}
+
+/// The algorithm-facing collective surface. Every distributed algorithm is
+/// written against this trait (no concrete backend types), which is what
+/// lets the same SPMD code run over the thread simulator and over real
+/// sockets.
+pub trait Collectives {
+    fn rank(&self) -> usize;
+    fn world(&self) -> usize;
+    /// Simulated clock, seconds.
+    fn clock(&self) -> f64;
+    /// Node-local mirror of the communication counters.
+    fn comm_stats(&self) -> &CommStats;
+
+    fn compute<R, F: FnOnce() -> R>(&mut self, label: &str, f: F) -> R;
+    fn compute_costed<R, F: FnOnce() -> (R, f64)>(&mut self, label: &str, f: F) -> R;
+    fn advance(&mut self, label: &str, seconds: f64);
+
+    fn reduce_all(&mut self, buf: &mut Vec<f64>);
+    fn metric_reduce_all(&mut self, buf: &mut Vec<f64>);
+    fn broadcast(&mut self, root: usize, buf: &mut Vec<f64>);
+    fn reduce(&mut self, root: usize, buf: &mut Vec<f64>);
+    fn all_gather_concat(&mut self, part: &[f64]) -> Vec<f64>;
+
+    fn reduce_all_scalar(&mut self, x: f64) -> f64 {
+        let mut v = vec![x];
+        self.reduce_all(&mut v);
+        v[0]
+    }
+
+    fn reduce_all_scalar2(&mut self, x: f64, y: f64) -> (f64, f64) {
+        let mut v = vec![x, y];
+        self.reduce_all(&mut v);
+        (v[0], v[1])
+    }
+
+    fn barrier(&mut self) {
+        let _ = self.reduce_all_scalar(0.0);
+    }
+}
+
+impl<T: Transport> Collectives for NodeCtx<T> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.m
+    }
+
+    fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    fn comm_stats(&self) -> &CommStats {
+        &self.local_stats
+    }
+
+    fn compute<R, F: FnOnce() -> R>(&mut self, label: &str, f: F) -> R {
+        NodeCtx::compute(self, label, f)
+    }
+
+    fn compute_costed<R, F: FnOnce() -> (R, f64)>(&mut self, label: &str, f: F) -> R {
+        NodeCtx::compute_costed(self, label, f)
+    }
+
+    fn advance(&mut self, label: &str, seconds: f64) {
+        NodeCtx::advance(self, label, seconds)
+    }
+
+    fn reduce_all(&mut self, buf: &mut Vec<f64>) {
+        NodeCtx::reduce_all(self, buf)
+    }
+
+    fn metric_reduce_all(&mut self, buf: &mut Vec<f64>) {
+        NodeCtx::metric_reduce_all(self, buf)
+    }
+
+    fn broadcast(&mut self, root: usize, buf: &mut Vec<f64>) {
+        NodeCtx::broadcast(self, root, buf)
+    }
+
+    fn reduce(&mut self, root: usize, buf: &mut Vec<f64>) {
+        NodeCtx::reduce(self, root, buf)
+    }
+
+    fn all_gather_concat(&mut self, part: &[f64]) -> Vec<f64> {
+        NodeCtx::all_gather_concat(self, part)
+    }
+
+    fn reduce_all_scalar(&mut self, x: f64) -> f64 {
+        NodeCtx::reduce_all_scalar(self, x)
+    }
+
+    fn reduce_all_scalar2(&mut self, x: f64, y: f64) -> (f64, f64) {
+        NodeCtx::reduce_all_scalar2(self, x, y)
+    }
+
+    fn barrier(&mut self) {
+        NodeCtx::barrier(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combine_sums_in_rank_order() {
+        let contribs = vec![vec![1.0, 2.0], vec![10.0, 20.0], vec![100.0, 200.0]];
+        let out = combine(CollectiveKind::ReduceAll, 0, &contribs);
+        assert_eq!(out, vec![111.0, 222.0]);
+        let out = combine(CollectiveKind::Reduce, 2, &contribs);
+        assert_eq!(out, vec![111.0, 222.0]);
+    }
+
+    #[test]
+    fn combine_broadcast_and_gather() {
+        let contribs = vec![vec![1.0], vec![2.0, 3.0], Vec::new()];
+        assert_eq!(combine(CollectiveKind::Broadcast, 1, &contribs), vec![2.0, 3.0]);
+        assert_eq!(
+            combine(CollectiveKind::AllGather, 0, &contribs),
+            vec![1.0, 2.0, 3.0]
+        );
+    }
+}

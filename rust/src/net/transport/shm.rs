@@ -1,0 +1,268 @@
+//! Shared-memory transport: the original in-process thread cluster,
+//! refactored behind the [`Transport`] trait.
+//!
+//! Each rank is an OS thread; the "network" is a [`Blackboard`] — per-rank
+//! payload slots plus a reusable two-phase abortable barrier. The barrier
+//! leader (last arriver) combines the deposited contributions in rank
+//! order and prices the transfer; every rank then reads the same result
+//! and clock window, so the outcome is independent of thread scheduling.
+//! Seeded [`ComputeModel::Modeled`](crate::net::ComputeModel) runs through
+//! this backend are bit-identical to the pre-refactor simulator.
+//!
+//! ## Failure semantics
+//!
+//! A panic inside one rank's SPMD closure is caught by
+//! [`Cluster::run`](crate::net::Cluster), which records the failure and
+//! [`poison`](Blackboard::poison)s both barriers so peers blocked in (or
+//! later entering) a collective unwind (with a [`PeerAbort`] payload)
+//! instead of waiting forever. (std's `Barrier` has no panic-poisoning —
+//! without this teardown a single failed node deadlocks the whole run.)
+
+use crate::net::cost::{CollectiveKind, CostModel};
+use crate::net::stats::CommStats;
+use crate::net::transport::{combine, CollectiveOutcome, Transport};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Marker payload for the panic that tears down peers after another node
+/// failed; [`crate::net::Cluster::run`] recognizes it and keeps only the
+/// original error.
+pub(crate) struct PeerAbort;
+
+fn peer_abort() -> ! {
+    std::panic::panic_any(PeerAbort)
+}
+
+/// Error returned by [`AbortBarrier::wait`] when the barrier was poisoned.
+struct Aborted;
+
+/// Reusable two-phase barrier with abort support. Unlike `std::Barrier`
+/// (which has **no** panic-poisoning — waiters sleep forever if a peer
+/// dies), `poison` wakes every current and future waiter with an error.
+struct AbortBarrier {
+    n: usize,
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    count: usize,
+    generation: u64,
+    poisoned: bool,
+}
+
+impl AbortBarrier {
+    fn new(n: usize) -> Self {
+        Self {
+            n,
+            state: Mutex::new(BarrierState { count: 0, generation: 0, poisoned: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until all `n` threads arrive. `Ok(true)` for exactly one
+    /// thread per generation (the leader — the last arriver).
+    fn wait(&self) -> Result<bool, Aborted> {
+        let mut st = self.state.lock().unwrap();
+        if st.poisoned {
+            return Err(Aborted);
+        }
+        let gen = st.generation;
+        st.count += 1;
+        if st.count == self.n {
+            st.count = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+            return Ok(true);
+        }
+        while st.generation == gen && !st.poisoned {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.poisoned {
+            return Err(Aborted);
+        }
+        Ok(false)
+    }
+
+    /// Mark the barrier dead and wake every waiter.
+    fn poison(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.poisoned = true;
+        self.cv.notify_all();
+    }
+}
+
+struct Slots {
+    contribs: Vec<Vec<f64>>,
+    clocks: Vec<f64>,
+    /// Result of the current collective (valid between barrier A and B+read).
+    result: Vec<f64>,
+    /// Synchronized departure clock for the current collective.
+    depart_clock: f64,
+    /// Max arrival clock (start of the comm window).
+    comm_start: f64,
+    /// Priced message size of the current collective, set by the leader
+    /// (for AllGather: the true summed contribution size). Every rank
+    /// mirrors this value so per-node and global accounting agree and are
+    /// scheduling-independent.
+    priced_doubles: usize,
+}
+
+/// Shared collective state (the "network" of the thread cluster).
+pub struct Blackboard {
+    m: usize,
+    cost: CostModel,
+    slots: Mutex<Slots>,
+    barrier_a: AbortBarrier,
+    barrier_b: AbortBarrier,
+    stats: Mutex<CommStats>,
+    reports: Mutex<Vec<Vec<u8>>>,
+    /// First failure (panic message) observed on any node.
+    failed: Mutex<Option<String>>,
+}
+
+impl Blackboard {
+    pub fn new(m: usize, cost: CostModel) -> Self {
+        assert!(m >= 1, "cluster needs at least one node");
+        Self {
+            m,
+            cost,
+            slots: Mutex::new(Slots {
+                contribs: vec![Vec::new(); m],
+                clocks: vec![0.0; m],
+                result: Vec::new(),
+                depart_clock: 0.0,
+                comm_start: 0.0,
+                priced_doubles: 0,
+            }),
+            barrier_a: AbortBarrier::new(m),
+            barrier_b: AbortBarrier::new(m),
+            stats: Mutex::new(CommStats::default()),
+            reports: Mutex::new(vec![Vec::new(); m]),
+            failed: Mutex::new(None),
+        }
+    }
+
+    /// Wake every rank blocked in (or entering) a collective with an
+    /// abort; used by the driver when one rank panics.
+    pub fn poison(&self) {
+        self.barrier_a.poison();
+        self.barrier_b.poison();
+    }
+
+    /// Record the first failure (later ones are dropped — peers unwinding
+    /// on [`PeerAbort`] are secondary).
+    pub fn record_failure(&self, rank: usize, msg: String) {
+        let mut failed = self.failed.lock().unwrap();
+        if failed.is_none() {
+            *failed = Some(format!("rank {rank}: {msg}"));
+        }
+    }
+
+    pub fn take_failure(&self) -> Option<String> {
+        self.failed.lock().unwrap().take()
+    }
+
+    /// Snapshot of the globally recorded communication statistics.
+    pub fn stats_snapshot(&self) -> CommStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+/// One rank's handle onto the shared blackboard.
+pub struct ShmTransport {
+    rank: usize,
+    board: Arc<Blackboard>,
+}
+
+impl ShmTransport {
+    pub fn new(board: Arc<Blackboard>, rank: usize) -> Self {
+        assert!(rank < board.m, "rank out of range");
+        Self { rank, board }
+    }
+}
+
+impl Transport for ShmTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.board.m
+    }
+
+    fn collective(
+        &mut self,
+        kind: CollectiveKind,
+        root: usize,
+        k_doubles: usize,
+        payload: Vec<f64>,
+        arrival_clock: f64,
+        metric: bool,
+    ) -> CollectiveOutcome {
+        let board = &*self.board;
+        {
+            let mut s = board.slots.lock().unwrap();
+            s.contribs[self.rank] = payload;
+            s.clocks[self.rank] = arrival_clock;
+        }
+        let leader = match board.barrier_a.wait() {
+            Ok(l) => l,
+            Err(Aborted) => peer_abort(),
+        };
+        if leader {
+            let mut s = board.slots.lock().unwrap();
+            let comm_start = s.clocks.iter().cloned().fold(0.0, f64::max);
+            // AllGather contributions may be ragged; price the true summed
+            // size rather than any single rank's guess — the leader is an
+            // arbitrary thread, so a rank-local size would make pricing
+            // (and CommStats) depend on thread scheduling.
+            let k_eff = if kind == CollectiveKind::AllGather {
+                s.contribs.iter().map(|c| c.len()).sum()
+            } else {
+                k_doubles
+            };
+            let t_comm = if metric {
+                0.0
+            } else {
+                board.cost.time(kind, k_eff, board.m)
+            };
+            s.comm_start = comm_start;
+            s.depart_clock = comm_start + t_comm;
+            s.priced_doubles = k_eff;
+            let result = combine(kind, root, &s.contribs);
+            s.result = result;
+            if !metric {
+                board.stats.lock().unwrap().record(kind, k_eff, t_comm);
+            }
+        }
+        if board.barrier_b.wait().is_err() {
+            peer_abort();
+        }
+        let s = board.slots.lock().unwrap();
+        CollectiveOutcome {
+            result: s.result.clone(),
+            comm_start: s.comm_start,
+            depart: s.depart_clock,
+            priced_doubles: s.priced_doubles,
+        }
+    }
+
+    fn exchange_reports(&mut self, report: Vec<u8>) -> Option<Vec<Vec<u8>>> {
+        let board = &*self.board;
+        {
+            board.reports.lock().unwrap()[self.rank] = report;
+        }
+        if board.barrier_a.wait().is_err() {
+            peer_abort();
+        }
+        let out = if self.rank == 0 {
+            Some(board.reports.lock().unwrap().clone())
+        } else {
+            None
+        };
+        if board.barrier_b.wait().is_err() {
+            peer_abort();
+        }
+        out
+    }
+}

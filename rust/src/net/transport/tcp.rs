@@ -1,0 +1,864 @@
+//! TCP transport: real multi-process collectives over localhost (or LAN)
+//! sockets, executing the same SPMD programs as the thread simulator.
+//!
+//! ## Rendezvous flow
+//!
+//! 1. Rank 0 binds the well-known `--addr` (host:port) and waits for the
+//!    other `world − 1` workers.
+//! 2. Every worker binds its own ephemeral mesh listener, connects to
+//!    rank 0, and sends `HELLO {rank, world, mesh_port}`. Rank 0 validates
+//!    (matching world size, no duplicate ranks) and replies `WELCOME` with
+//!    the full `rank → (ip, mesh_port)` table (ips as observed by rank 0).
+//! 3. The mesh is completed pairwise: rank `j` dials rank `i`'s mesh
+//!    listener for every `1 ≤ i < j` and identifies itself with
+//!    `PEER_ID {j}`. After this every pair of ranks shares a dedicated
+//!    stream.
+//!
+//! Every step — and every later collective read/write — runs under the
+//! configured deadline ([`TcpOptions::timeout`]): a dropped peer surfaces
+//! as an EOF/reset immediately and a hung peer as a socket timeout, and
+//! either panics with `cluster node failed: rank N: …`. Never a hang.
+//!
+//! ## Wire format
+//!
+//! Everything is little-endian, length-prefixed frames:
+//!
+//! ```text
+//! frame   := magic:u32 ("DSCO") | tag:u8 | seq:u64 | len:u32 | payload[len]
+//! HELLO   := version:u8 | rank:u32 | world:u32 | mesh_port:u16
+//! WELCOME := version:u8 | world:u32 | (ip_len:u8 | ip:utf8 | port:u16)^(world-1)
+//! PEER_ID := rank:u32
+//! GATHER  := count:u32 | (origin:u32 | clock:f64 | len:u32 | f64^len)^count
+//! DOWN    := comm_start:f64 | depart:f64 | priced:u64 | len:u32 | f64^len
+//! RING    := origin:u32 | clock:f64 | len:u32 | f64^len
+//! REPORT  := opaque bytes (see algorithms::remote)
+//! ```
+//!
+//! `seq` counts collectives (handshake frames use 0) and is validated on
+//! every receive, so an SPMD desync fails loudly instead of silently
+//! combining mismatched rounds.
+//!
+//! ## Collective algorithms
+//!
+//! Reduce/ReduceAll/Broadcast run over a **binomial tree** rooted at rank
+//! 0 (`parent(r) = r & (r−1)`): an up-phase gathers the raw per-rank
+//! contributions and arrival clocks to the root, which combines **in rank
+//! order** (see [`super::combine`]) and prices the collective; a
+//! down-phase broadcasts the result plus the synchronized clock window.
+//! Partial sums are deliberately *not* formed in-tree: floating-point
+//! addition is not associative, and moving raw contributions is what
+//! keeps TCP results bit-identical to the shm backend. AllGather runs as
+//! a **ring**: `world − 1` steps, each forwarding the block received in
+//! the previous step to the right neighbour (even ranks send-then-recv,
+//! odd ranks recv-then-send, so the cycle can never be all-senders).
+//!
+//! The α–β cost model still prices every collective (that is what the
+//! simulated clocks advance by); the bytes actually crossing the sockets
+//! are recorded separately in [`CommStats::wire_bytes`]
+//! (crate::net::CommStats).
+
+use crate::net::cost::{CollectiveKind, CostModel};
+use crate::net::transport::{combine, CollectiveOutcome, Transport};
+use crate::util::bytes::{put_f64, put_f64s, put_u16, put_u32, put_u64, put_u8, ByteReader};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+const MAGIC: u32 = 0x4F43_5344; // "DSCO" as little-endian bytes
+const VERSION: u8 = 1;
+const HEADER_LEN: usize = 17;
+/// Frames beyond this are treated as protocol corruption.
+const MAX_FRAME: u32 = 1 << 30;
+
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_PEER_ID: u8 = 3;
+const TAG_GATHER: u8 = 4;
+const TAG_DOWN: u8 = 5;
+const TAG_RING: u8 = 6;
+const TAG_REPORT: u8 = 7;
+
+/// Configuration for [`TcpTransport::establish`].
+#[derive(Clone, Debug)]
+pub struct TcpOptions {
+    /// This process's rank in `0..world`.
+    pub rank: usize,
+    /// Total number of processes.
+    pub world: usize,
+    /// Rank-0 rendezvous address, `host:port`.
+    pub addr: String,
+    /// Deadline for the handshake and for every collective socket
+    /// operation. A peer that produces nothing for this long is treated
+    /// as dead and the run aborts.
+    pub timeout: Duration,
+    /// α–β model used to price collectives (must be identical on every
+    /// rank — it feeds the shared simulated clock).
+    pub cost: CostModel,
+}
+
+impl TcpOptions {
+    pub fn new(rank: usize, world: usize, addr: &str) -> Self {
+        Self {
+            rank,
+            world,
+            addr: addr.to_string(),
+            timeout: Duration::from_secs(120),
+            cost: CostModel::default(),
+        }
+    }
+
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+
+    pub fn with_cost(mut self, cost: CostModel) -> Self {
+        self.cost = cost;
+        self
+    }
+}
+
+/// Abort this rank with the uniform failure prefix (mirrors the thread
+/// cluster's `cluster node failed: rank N: …` contract).
+fn fail(rank: usize, msg: String) -> ! {
+    panic!("cluster node failed: rank {rank}: {msg}")
+}
+
+fn io_fail(rank: usize, what: &str, peer: &str, e: &std::io::Error) -> ! {
+    let detail = match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+            "timed out (peer hung or died)".to_string()
+        }
+        ErrorKind::UnexpectedEof => "connection closed (peer died)".to_string(),
+        _ => e.to_string(),
+    };
+    fail(rank, format!("{what} {peer}: {detail}"))
+}
+
+/// Binomial-tree parent (tree rooted at rank 0): clear the lowest set bit.
+fn tree_parent(rank: usize) -> usize {
+    debug_assert!(rank > 0);
+    rank & (rank - 1)
+}
+
+/// Binomial-tree children of `rank` in a `world`-rank tree, ascending.
+fn tree_children(rank: usize, world: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut bit = 1usize;
+    // Children are rank + 2^k for 2^k below rank's lowest set bit
+    // (all bits for the root).
+    let limit = if rank == 0 {
+        usize::MAX
+    } else {
+        rank & rank.wrapping_neg()
+    };
+    while bit < limit {
+        let c = rank + bit;
+        if c >= world {
+            break;
+        }
+        out.push(c);
+        bit <<= 1;
+    }
+    out
+}
+
+fn write_frame(
+    stream: &mut TcpStream,
+    tag: u8,
+    seq: u64,
+    payload: &[u8],
+    self_rank: usize,
+    peer: &str,
+) -> u64 {
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    hdr[4] = tag;
+    hdr[5..13].copy_from_slice(&seq.to_le_bytes());
+    hdr[13..17].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    if let Err(e) = stream.write_all(&hdr).and_then(|_| stream.write_all(payload)) {
+        io_fail(self_rank, "send to", peer, &e);
+    }
+    (HEADER_LEN + payload.len()) as u64
+}
+
+fn read_frame(
+    stream: &mut TcpStream,
+    want_tag: u8,
+    want_seq: u64,
+    self_rank: usize,
+    peer: &str,
+) -> (Vec<u8>, u64) {
+    let mut hdr = [0u8; HEADER_LEN];
+    if let Err(e) = stream.read_exact(&mut hdr) {
+        io_fail(self_rank, "recv from", peer, &e);
+    }
+    let magic = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]);
+    if magic != MAGIC {
+        fail(self_rank, format!("protocol corruption from {peer}: bad magic {magic:#010x}"));
+    }
+    let tag = hdr[4];
+    let mut seq_b = [0u8; 8];
+    seq_b.copy_from_slice(&hdr[5..13]);
+    let seq = u64::from_le_bytes(seq_b);
+    if tag != want_tag || seq != want_seq {
+        fail(
+            self_rank,
+            format!(
+                "collective desync with {peer}: got frame tag {tag} seq {seq}, \
+                 expected tag {want_tag} seq {want_seq}"
+            ),
+        );
+    }
+    let len = u32::from_le_bytes([hdr[13], hdr[14], hdr[15], hdr[16]]);
+    if len > MAX_FRAME {
+        fail(self_rank, format!("protocol corruption from {peer}: frame length {len}"));
+    }
+    let mut payload = vec![0u8; len as usize];
+    if let Err(e) = stream.read_exact(&mut payload) {
+        io_fail(self_rank, "recv from", peer, &e);
+    }
+    (payload, (HEADER_LEN + len as usize) as u64)
+}
+
+fn configure_stream(s: &TcpStream, timeout: Duration, rank: usize) {
+    let apply = || -> std::io::Result<()> {
+        s.set_nodelay(true)?;
+        s.set_read_timeout(Some(timeout))?;
+        s.set_write_timeout(Some(timeout))
+    };
+    if let Err(e) = apply() {
+        fail(rank, format!("socket configuration failed: {e}"));
+    }
+}
+
+/// Multi-process collective backend over TCP (see module docs).
+pub struct TcpTransport {
+    rank: usize,
+    world: usize,
+    cost: CostModel,
+    /// Dedicated stream per peer rank (`None` at the own-rank slot).
+    peers: Vec<Option<TcpStream>>,
+    /// Collective sequence number (handshake = 0, first collective = 1).
+    seq: u64,
+    wire_bytes: u64,
+}
+
+impl TcpTransport {
+    /// Join (or, for rank 0, host) the rendezvous and build the full mesh.
+    /// Panics with `cluster node failed: rank N: …` if the fleet does not
+    /// assemble within `opts.timeout`.
+    pub fn establish(opts: &TcpOptions) -> TcpTransport {
+        Self::validate(opts);
+        if opts.world == 1 {
+            return Self::solo(opts);
+        }
+        if opts.rank == 0 {
+            let listener = match TcpListener::bind(opts.addr.as_str()) {
+                Ok(l) => l,
+                Err(e) => fail(0, format!("bind rendezvous {}: {e}", opts.addr)),
+            };
+            Self::establish_rank0(listener, opts)
+        } else {
+            Self::establish_worker(opts)
+        }
+    }
+
+    /// Rank-0 variant taking a pre-bound listener (lets tests bind
+    /// `127.0.0.1:0` and hand the resolved port to the workers without a
+    /// reuse race).
+    pub fn establish_with_listener(listener: TcpListener, opts: &TcpOptions) -> TcpTransport {
+        Self::validate(opts);
+        assert_eq!(opts.rank, 0, "only rank 0 hosts the rendezvous listener");
+        if opts.world == 1 {
+            return Self::solo(opts);
+        }
+        Self::establish_rank0(listener, opts)
+    }
+
+    fn validate(opts: &TcpOptions) {
+        assert!(opts.world >= 1, "world size must be at least 1");
+        assert!(opts.world <= 4096, "world size {} is unreasonable", opts.world);
+        assert!(opts.rank < opts.world, "rank {} out of range 0..{}", opts.rank, opts.world);
+    }
+
+    fn solo(opts: &TcpOptions) -> TcpTransport {
+        TcpTransport {
+            rank: 0,
+            world: 1,
+            cost: opts.cost,
+            peers: vec![None],
+            seq: 0,
+            wire_bytes: 0,
+        }
+    }
+
+    fn establish_rank0(listener: TcpListener, opts: &TcpOptions) -> TcpTransport {
+        let deadline = Instant::now() + opts.timeout;
+        if let Err(e) = listener.set_nonblocking(true) {
+            fail(0, format!("rendezvous listener setup failed: {e}"));
+        }
+        let mut pending: Vec<TcpStream> = Vec::new();
+        while pending.len() < opts.world - 1 {
+            match listener.accept() {
+                Ok((s, _)) => {
+                    if let Err(e) = s.set_nonblocking(false) {
+                        fail(0, format!("rendezvous accept setup failed: {e}"));
+                    }
+                    configure_stream(&s, opts.timeout, 0);
+                    pending.push(s);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        fail(
+                            0,
+                            format!(
+                                "rendezvous timeout: {}/{} workers connected within {:?}",
+                                pending.len(),
+                                opts.world - 1,
+                                opts.timeout
+                            ),
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => fail(0, format!("rendezvous accept failed: {e}")),
+            }
+        }
+        let mut wire = 0u64;
+        let mut peers: Vec<Option<TcpStream>> = (0..opts.world).map(|_| None).collect();
+        let mut endpoints: Vec<(String, u16)> = vec![(String::new(), 0); opts.world];
+        for mut s in pending {
+            let peer_ip = match s.peer_addr() {
+                Ok(a) => a.ip().to_string(),
+                Err(e) => fail(0, format!("worker address unreadable: {e}")),
+            };
+            let (payload, n) = read_frame(&mut s, TAG_HELLO, 0, 0, "worker");
+            wire += n;
+            let mut r = ByteReader::new(&payload);
+            let parsed = (|| -> Result<(u8, u32, u32, u16), String> {
+                Ok((r.u8()?, r.u32()?, r.u32()?, r.u16()?))
+            })();
+            let (version, rank, world, port) = match parsed {
+                Ok(t) => t,
+                Err(e) => fail(0, format!("malformed HELLO: {e}")),
+            };
+            if version != VERSION {
+                fail(0, format!("worker protocol version {version} != {VERSION}"));
+            }
+            if world as usize != opts.world {
+                fail(
+                    0,
+                    format!("worker joined with world {world}, this fleet is {}", opts.world),
+                );
+            }
+            let rank = rank as usize;
+            if rank == 0 || rank >= opts.world {
+                fail(0, format!("worker announced invalid rank {rank}"));
+            }
+            if peers[rank].is_some() {
+                fail(0, format!("two workers announced rank {rank}"));
+            }
+            endpoints[rank] = (peer_ip, port);
+            peers[rank] = Some(s);
+        }
+        // Everyone checked in: publish the mesh table.
+        let mut table = Vec::new();
+        put_u8(&mut table, VERSION);
+        put_u32(&mut table, opts.world as u32);
+        for endpoint in endpoints.iter().skip(1) {
+            let (ip, port) = endpoint;
+            put_u8(&mut table, ip.len() as u8);
+            table.extend_from_slice(ip.as_bytes());
+            put_u16(&mut table, *port);
+        }
+        for r in 1..opts.world {
+            let s = peers[r].as_mut().expect("all workers present");
+            wire += write_frame(s, TAG_WELCOME, 0, &table, 0, &format!("rank {r}"));
+        }
+        TcpTransport {
+            rank: 0,
+            world: opts.world,
+            cost: opts.cost,
+            peers,
+            seq: 0,
+            wire_bytes: wire,
+        }
+    }
+
+    fn establish_worker(opts: &TcpOptions) -> TcpTransport {
+        let rank = opts.rank;
+        let deadline = Instant::now() + opts.timeout;
+        let root_addr = resolve(&opts.addr, rank);
+        // Match the rendezvous address family so an IPv6 fleet can dial
+        // the mesh listeners back.
+        let mesh_bind = if root_addr.is_ipv6() {
+            "[::]:0"
+        } else {
+            "0.0.0.0:0"
+        };
+        let mesh_listener = match TcpListener::bind(mesh_bind) {
+            Ok(l) => l,
+            Err(e) => fail(rank, format!("mesh listener bind failed: {e}")),
+        };
+        let mesh_port = match mesh_listener.local_addr() {
+            Ok(a) => a.port(),
+            Err(e) => fail(rank, format!("mesh listener address unreadable: {e}")),
+        };
+        let mut root = connect_retry(&root_addr, deadline, rank, "rendezvous");
+        configure_stream(&root, opts.timeout, rank);
+        let mut wire = 0u64;
+        let mut hello = Vec::new();
+        put_u8(&mut hello, VERSION);
+        put_u32(&mut hello, rank as u32);
+        put_u32(&mut hello, opts.world as u32);
+        put_u16(&mut hello, mesh_port);
+        wire += write_frame(&mut root, TAG_HELLO, 0, &hello, rank, "rank 0");
+        let (payload, n) = read_frame(&mut root, TAG_WELCOME, 0, rank, "rank 0");
+        wire += n;
+        let mut r = ByteReader::new(&payload);
+        let endpoints = (|| -> Result<Vec<(String, u16)>, String> {
+            let version = r.u8()?;
+            if version != VERSION {
+                return Err(format!("protocol version {version} != {VERSION}"));
+            }
+            let world = r.u32()? as usize;
+            if world != opts.world {
+                return Err(format!("rendezvous world {world} != {}", opts.world));
+            }
+            let mut eps = vec![(String::new(), 0u16)];
+            for _ in 1..world {
+                let ip_len = r.u8()? as usize;
+                let ip = String::from_utf8(r.take(ip_len)?.to_vec())
+                    .map_err(|_| "non-utf8 ip in WELCOME".to_string())?;
+                let port = r.u16()?;
+                eps.push((ip, port));
+            }
+            Ok(eps)
+        })();
+        let endpoints = match endpoints {
+            Ok(e) => e,
+            Err(e) => fail(rank, format!("malformed WELCOME: {e}")),
+        };
+
+        let mut peers: Vec<Option<TcpStream>> = (0..opts.world).map(|_| None).collect();
+        peers[0] = Some(root);
+        // Dial every lower-ranked worker's mesh listener.
+        for (i, (ip, port)) in endpoints.iter().enumerate().take(rank).skip(1) {
+            // IPv6 peer addresses need brackets in host:port notation.
+            let dial = if ip.contains(':') {
+                format!("[{ip}]:{port}")
+            } else {
+                format!("{ip}:{port}")
+            };
+            let addr = resolve(&dial, rank);
+            let mut s = connect_retry(&addr, deadline, rank, &format!("rank {i}"));
+            configure_stream(&s, opts.timeout, rank);
+            let mut id = Vec::new();
+            put_u32(&mut id, rank as u32);
+            wire += write_frame(&mut s, TAG_PEER_ID, 0, &id, rank, &format!("rank {i}"));
+            peers[i] = Some(s);
+        }
+        // Accept every higher-ranked worker.
+        if let Err(e) = mesh_listener.set_nonblocking(true) {
+            fail(rank, format!("mesh listener setup failed: {e}"));
+        }
+        let mut need = opts.world - 1 - rank;
+        while need > 0 {
+            match mesh_listener.accept() {
+                Ok((s, _)) => {
+                    if let Err(e) = s.set_nonblocking(false) {
+                        fail(rank, format!("mesh accept setup failed: {e}"));
+                    }
+                    configure_stream(&s, opts.timeout, rank);
+                    let mut s = s;
+                    let (payload, n) = read_frame(&mut s, TAG_PEER_ID, 0, rank, "mesh peer");
+                    wire += n;
+                    let mut r = ByteReader::new(&payload);
+                    let j = match r.u32() {
+                        Ok(j) => j as usize,
+                        Err(e) => fail(rank, format!("malformed PEER_ID: {e}")),
+                    };
+                    if j <= rank || j >= opts.world {
+                        fail(rank, format!("mesh peer announced invalid rank {j}"));
+                    }
+                    if peers[j].is_some() {
+                        fail(rank, format!("two mesh peers announced rank {j}"));
+                    }
+                    peers[j] = Some(s);
+                    need -= 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        fail(
+                            rank,
+                            format!("mesh timeout: {need} higher-ranked workers never dialed in"),
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => fail(rank, format!("mesh accept failed: {e}")),
+            }
+        }
+        TcpTransport {
+            rank,
+            world: opts.world,
+            cost: opts.cost,
+            peers,
+            seq: 0,
+            wire_bytes: wire,
+        }
+    }
+
+    fn send(&mut self, peer: usize, tag: u8, payload: &[u8]) {
+        let rank = self.rank;
+        let seq = self.seq;
+        let stream = match self.peers[peer].as_mut() {
+            Some(s) => s,
+            None => fail(rank, format!("no connection to rank {peer}")),
+        };
+        self.wire_bytes += write_frame(stream, tag, seq, payload, rank, &format!("rank {peer}"));
+    }
+
+    fn recv(&mut self, peer: usize, tag: u8) -> Vec<u8> {
+        let rank = self.rank;
+        let seq = self.seq;
+        let stream = match self.peers[peer].as_mut() {
+            Some(s) => s,
+            None => fail(rank, format!("no connection to rank {peer}")),
+        };
+        let (payload, n) = read_frame(stream, tag, seq, rank, &format!("rank {peer}"));
+        self.wire_bytes += n;
+        payload
+    }
+
+    /// Binomial-tree collective (ReduceAll / Broadcast / Reduce): gather
+    /// raw contributions + clocks to rank 0, combine in rank order, price,
+    /// broadcast result + clock window back down.
+    fn tree_collective(
+        &mut self,
+        kind: CollectiveKind,
+        root: usize,
+        k_doubles: usize,
+        payload: Vec<f64>,
+        arrival_clock: f64,
+        metric: bool,
+    ) -> CollectiveOutcome {
+        let rank = self.rank;
+        let world = self.world;
+        // Broadcast only needs the root's data on the wire; the other
+        // ranks still contribute their arrival clock.
+        let send_data = kind != CollectiveKind::Broadcast || rank == root;
+        let own = (
+            rank as u32,
+            arrival_clock,
+            if send_data { payload } else { Vec::new() },
+        );
+        let mut entries: Vec<(u32, f64, Vec<f64>)> = vec![own];
+        let kids = tree_children(rank, world);
+        for &c in &kids {
+            let frame = self.recv(c, TAG_GATHER);
+            decode_entries(&frame, &mut entries, rank, c, world);
+        }
+        if rank == 0 {
+            let mut contribs: Vec<Vec<f64>> = vec![Vec::new(); world];
+            let mut clocks = vec![0.0f64; world];
+            let mut seen = vec![false; world];
+            for (origin, clock, data) in entries {
+                let o = origin as usize;
+                if seen[o] {
+                    fail(rank, format!("gather desync: duplicate contribution from rank {o}"));
+                }
+                seen[o] = true;
+                clocks[o] = clock;
+                contribs[o] = data;
+            }
+            if let Some(missing) = seen.iter().position(|s| !s) {
+                fail(rank, format!("gather desync: no contribution from rank {missing}"));
+            }
+            let comm_start = clocks.iter().cloned().fold(0.0, f64::max);
+            let t_comm = if metric {
+                0.0
+            } else {
+                self.cost.time(kind, k_doubles, world)
+            };
+            let depart = comm_start + t_comm;
+            let result = combine(kind, root, &contribs);
+            let mut down = Vec::with_capacity(28 + 8 * result.len());
+            put_f64(&mut down, comm_start);
+            put_f64(&mut down, depart);
+            put_u64(&mut down, k_doubles as u64);
+            put_u32(&mut down, result.len() as u32);
+            put_f64s(&mut down, &result);
+            for &c in &kids {
+                self.send(c, TAG_DOWN, &down);
+            }
+            CollectiveOutcome {
+                result,
+                comm_start,
+                depart,
+                priced_doubles: k_doubles,
+            }
+        } else {
+            let mut up = Vec::new();
+            put_u32(&mut up, entries.len() as u32);
+            for (origin, clock, data) in &entries {
+                put_u32(&mut up, *origin);
+                put_f64(&mut up, *clock);
+                put_u32(&mut up, data.len() as u32);
+                put_f64s(&mut up, data);
+            }
+            let parent = tree_parent(rank);
+            self.send(parent, TAG_GATHER, &up);
+            let down = self.recv(parent, TAG_DOWN);
+            for &c in &kids {
+                self.send(c, TAG_DOWN, &down);
+            }
+            let mut r = ByteReader::new(&down);
+            let parsed = (|| -> Result<CollectiveOutcome, String> {
+                let comm_start = r.f64()?;
+                let depart = r.f64()?;
+                let priced_doubles = r.u64()? as usize;
+                let len = r.u32()? as usize;
+                let result = r.f64s(len)?;
+                Ok(CollectiveOutcome { result, comm_start, depart, priced_doubles })
+            })();
+            match parsed {
+                Ok(out) => out,
+                Err(e) => fail(rank, format!("malformed DOWN frame: {e}")),
+            }
+        }
+    }
+
+    /// Ring AllGather: `world − 1` steps; every rank learns every block
+    /// (and every arrival clock), so the clock window and pricing are
+    /// computed identically everywhere without a down-phase.
+    fn ring_all_gather(
+        &mut self,
+        payload: Vec<f64>,
+        arrival_clock: f64,
+        metric: bool,
+    ) -> CollectiveOutcome {
+        let rank = self.rank;
+        let world = self.world;
+        let right = (rank + 1) % world;
+        let left = (rank + world - 1) % world;
+        let mut blocks: Vec<Option<(f64, Vec<f64>)>> = (0..world).map(|_| None).collect();
+        blocks[rank] = Some((arrival_clock, payload));
+        let mut cur = rank;
+        for _step in 0..world - 1 {
+            let frame = {
+                let (clock, data) = blocks[cur].as_ref().expect("current block present");
+                let mut f = Vec::with_capacity(16 + 8 * data.len());
+                put_u32(&mut f, cur as u32);
+                put_f64(&mut f, *clock);
+                put_u32(&mut f, data.len() as u32);
+                put_f64s(&mut f, data);
+                f
+            };
+            // Even ranks send first, odd ranks receive first: the ring can
+            // never be all-senders, so full socket buffers cannot deadlock
+            // the step.
+            let incoming = if rank % 2 == 0 {
+                self.send(right, TAG_RING, &frame);
+                self.recv(left, TAG_RING)
+            } else {
+                let inc = self.recv(left, TAG_RING);
+                self.send(right, TAG_RING, &frame);
+                inc
+            };
+            let mut r = ByteReader::new(&incoming);
+            let parsed = (|| -> Result<(u32, f64, Vec<f64>), String> {
+                let origin = r.u32()?;
+                let clock = r.f64()?;
+                let len = r.u32()? as usize;
+                let data = r.f64s(len)?;
+                r.finish()?;
+                Ok((origin, clock, data))
+            })();
+            let (origin, clock, data) = match parsed {
+                Ok(t) => t,
+                Err(e) => fail(rank, format!("malformed RING frame: {e}")),
+            };
+            let o = origin as usize;
+            if o >= world || blocks[o].is_some() {
+                fail(rank, format!("ring desync: unexpected block from origin {o}"));
+            }
+            blocks[o] = Some((clock, data));
+            cur = o;
+        }
+        let mut comm_start = 0.0f64;
+        let mut k_eff = 0usize;
+        let mut result = Vec::new();
+        for b in &blocks {
+            let (clock, data) = b.as_ref().expect("ring completed");
+            comm_start = comm_start.max(*clock);
+            k_eff += data.len();
+        }
+        result.reserve(k_eff);
+        for b in &blocks {
+            result.extend_from_slice(&b.as_ref().expect("ring completed").1);
+        }
+        let t_comm = if metric {
+            0.0
+        } else {
+            self.cost.time(CollectiveKind::AllGather, k_eff, world)
+        };
+        CollectiveOutcome {
+            result,
+            comm_start,
+            depart: comm_start + t_comm,
+            priced_doubles: k_eff,
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn collective(
+        &mut self,
+        kind: CollectiveKind,
+        root: usize,
+        k_doubles: usize,
+        payload: Vec<f64>,
+        arrival_clock: f64,
+        metric: bool,
+    ) -> CollectiveOutcome {
+        assert!(root < self.world, "collective root out of range");
+        self.seq += 1;
+        if self.world == 1 {
+            // Degenerate fleet: mirror the shm pricing exactly (T = 0 at
+            // m = 1; AllGather priced from the contribution size).
+            let k_eff = if kind == CollectiveKind::AllGather {
+                payload.len()
+            } else {
+                k_doubles
+            };
+            let contribs = vec![payload];
+            return CollectiveOutcome {
+                result: combine(kind, root, &contribs),
+                comm_start: arrival_clock,
+                depart: arrival_clock,
+                priced_doubles: k_eff,
+            };
+        }
+        match kind {
+            CollectiveKind::AllGather => self.ring_all_gather(payload, arrival_clock, metric),
+            _ => self.tree_collective(kind, root, k_doubles, payload, arrival_clock, metric),
+        }
+    }
+
+    fn wire_bytes(&self) -> u64 {
+        self.wire_bytes
+    }
+
+    fn exchange_reports(&mut self, report: Vec<u8>) -> Option<Vec<Vec<u8>>> {
+        self.seq += 1;
+        if self.world == 1 {
+            return Some(vec![report]);
+        }
+        if self.rank == 0 {
+            let mut all = vec![Vec::new(); self.world];
+            all[0] = report;
+            for r in 1..self.world {
+                all[r] = self.recv(r, TAG_REPORT);
+            }
+            Some(all)
+        } else {
+            self.send(0, TAG_REPORT, &report);
+            None
+        }
+    }
+}
+
+fn resolve(addr: &str, rank: usize) -> SocketAddr {
+    match addr.to_socket_addrs() {
+        Ok(mut it) => match it.next() {
+            Some(a) => a,
+            None => fail(rank, format!("address '{addr}' resolved to nothing")),
+        },
+        Err(e) => fail(rank, format!("cannot resolve '{addr}': {e}")),
+    }
+}
+
+fn connect_retry(addr: &SocketAddr, deadline: Instant, rank: usize, peer: &str) -> TcpStream {
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            fail(rank, format!("handshake timeout: {peer} at {addr} unreachable"));
+        }
+        let attempt = (deadline - now).min(Duration::from_millis(500));
+        match TcpStream::connect_timeout(addr, attempt) {
+            Ok(s) => return s,
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+fn decode_entries(
+    frame: &[u8],
+    entries: &mut Vec<(u32, f64, Vec<f64>)>,
+    rank: usize,
+    from: usize,
+    world: usize,
+) {
+    let mut r = ByteReader::new(frame);
+    let parsed = (|| -> Result<(), String> {
+        let count = r.u32()? as usize;
+        if count > world {
+            return Err(format!("{count} entries in a {world}-rank fleet"));
+        }
+        for _ in 0..count {
+            let origin = r.u32()?;
+            if origin as usize >= world {
+                return Err(format!("origin rank {origin} out of range"));
+            }
+            let clock = r.f64()?;
+            let len = r.u32()? as usize;
+            let data = r.f64s(len)?;
+            entries.push((origin, clock, data));
+        }
+        r.finish()
+    })();
+    if let Err(e) = parsed {
+        fail(rank, format!("malformed GATHER frame from rank {from}: {e}"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomial_topology_covers_every_rank_once() {
+        for world in 1..=17 {
+            let mut seen = vec![0usize; world];
+            seen[0] += 1; // root
+            for r in 0..world {
+                for c in tree_children(r, world) {
+                    assert!(c < world);
+                    assert_eq!(tree_parent(c), r, "child {c} of {r}");
+                    seen[c] += 1;
+                }
+            }
+            for (r, n) in seen.iter().enumerate() {
+                assert_eq!(*n, 1, "rank {r} appears {n} times in world {world}");
+            }
+        }
+    }
+
+    #[test]
+    fn parents_strictly_decrease() {
+        for r in 1..64usize {
+            let p = tree_parent(r);
+            assert!(p < r);
+        }
+    }
+}

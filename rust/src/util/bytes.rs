@@ -1,0 +1,149 @@
+//! Little-endian binary encode/decode helpers shared by the TCP transport
+//! wire format and the end-of-run node reports. All multi-byte values are
+//! little-endian; `f64` round-trips bit-exactly (`to_le_bytes` /
+//! `from_le_bytes`), which the shm-vs-tcp equivalence guarantee depends on.
+
+/// Append primitives to a byte buffer (little-endian).
+pub fn put_u8(buf: &mut Vec<u8>, x: u8) {
+    buf.push(x);
+}
+
+pub fn put_u16(buf: &mut Vec<u8>, x: u16) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+pub fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+pub fn put_f64(buf: &mut Vec<u8>, x: f64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+pub fn put_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
+    buf.reserve(8 * xs.len());
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Strict sequential reader over a byte slice; every accessor fails with a
+/// message instead of panicking so callers can attach peer/rank context.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated message: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, String> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, String> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(f64::from_le_bytes(a))
+    }
+
+    pub fn f64s(&mut self, n: usize) -> Result<Vec<f64>, String> {
+        let b = self.take(8 * n)?;
+        let mut out = Vec::with_capacity(n);
+        for c in b.chunks_exact(8) {
+            let mut a = [0u8; 8];
+            a.copy_from_slice(c);
+            out.push(f64::from_le_bytes(a));
+        }
+        Ok(out)
+    }
+
+    /// Everything was consumed (guards against trailing garbage / desync).
+    pub fn finish(self) -> Result<(), String> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes after message", self.remaining()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_primitives() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7);
+        put_u16(&mut buf, 513);
+        put_u32(&mut buf, 70_000);
+        put_u64(&mut buf, u64::MAX - 3);
+        put_f64(&mut buf, -0.125);
+        put_f64s(&mut buf, &[1.5, f64::MIN_POSITIVE, -0.0]);
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 513);
+        assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.125f64).to_bits());
+        let v = r.f64s(3).unwrap();
+        assert_eq!(v[0], 1.5);
+        assert_eq!(v[1], f64::MIN_POSITIVE);
+        assert_eq!(v[2].to_bits(), (-0.0f64).to_bits());
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn underrun_and_trailing_detected() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 1);
+        let mut r = ByteReader::new(&buf);
+        assert!(r.u64().is_err());
+        assert!(r.u32().is_ok());
+        let mut r2 = ByteReader::new(&buf);
+        assert!(r2.u16().is_ok());
+        assert!(r2.finish().is_err());
+    }
+}

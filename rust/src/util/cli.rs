@@ -94,7 +94,9 @@ impl Args {
                 };
                 let spec = self
                     .spec(&name)
-                    .ok_or_else(|| CliError(format!("unknown flag --{name}\n\n{}", self.help_text())))?
+                    .ok_or_else(|| {
+                        CliError(format!("unknown flag --{name}\n\n{}", self.help_text()))
+                    })?
                     .clone();
                 match spec.kind {
                     Kind::Switch => {
@@ -171,6 +173,30 @@ impl Args {
             .map_err(|_| CliError(format!("--{name}: expected integer, got '{v}'")))
     }
 
+    /// Declare the standard transport flags shared by every binary that
+    /// can run multi-process (`--transport`, `--rank`, `--world`,
+    /// `--addr`, `--net-timeout`); parse them back with
+    /// [`TransportCli::parse`].
+    pub fn with_transport_flags(self) -> Self {
+        self.opt(
+            "transport",
+            Some("shm"),
+            "collective backend: shm (in-process thread simulation) | tcp (multi-process sockets)",
+        )
+        .opt("rank", Some("0"), "this process's rank, 0..world (tcp transport)")
+        .opt("world", Some("1"), "total number of processes in the fleet (tcp transport)")
+        .opt(
+            "addr",
+            Some("127.0.0.1:29500"),
+            "rank-0 rendezvous address host:port (tcp transport)",
+        )
+        .opt(
+            "net-timeout",
+            Some("120"),
+            "tcp deadline in seconds for the handshake and each collective socket op",
+        )
+    }
+
     pub fn help_text(&self) -> String {
         let mut out = String::new();
         let _ = writeln!(out, "{} — {}", self.program, self.about);
@@ -184,6 +210,57 @@ impl Args {
             let _ = writeln!(out, "  --{}{}\n        {}", s.name, meta, s.help);
         }
         out
+    }
+}
+
+/// Which collective backend a binary should run over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process thread cluster (the simulator; the default).
+    Shm,
+    /// Multi-process TCP mesh — this process is one rank of `world`.
+    Tcp,
+}
+
+/// Parsed transport selection (see [`Args::with_transport_flags`]).
+#[derive(Clone, Debug)]
+pub struct TransportCli {
+    pub kind: TransportKind,
+    pub rank: usize,
+    pub world: usize,
+    pub addr: String,
+    pub timeout_secs: f64,
+}
+
+impl TransportCli {
+    pub fn parse(args: &Args) -> Result<TransportCli, CliError> {
+        let kind = match args.req("transport")?.as_str() {
+            "shm" => TransportKind::Shm,
+            "tcp" => TransportKind::Tcp,
+            other => {
+                return Err(CliError(format!(
+                    "unknown transport '{other}' (expected shm | tcp)"
+                )))
+            }
+        };
+        let rank = args.get_usize("rank")?;
+        let world = args.get_usize("world")?;
+        let addr = args.req("addr")?;
+        let timeout_secs = args.get_f64("net-timeout")?;
+        if kind == TransportKind::Tcp {
+            if world == 0 {
+                return Err(CliError("--world must be at least 1".into()));
+            }
+            if rank >= world {
+                return Err(CliError(format!(
+                    "--rank {rank} out of range for --world {world}"
+                )));
+            }
+            if !(timeout_secs.is_finite() && timeout_secs > 0.0) {
+                return Err(CliError("--net-timeout must be a positive number".into()));
+            }
+        }
+        Ok(TransportCli { kind, rank, world, addr, timeout_secs })
     }
 }
 
@@ -249,5 +326,56 @@ mod tests {
         let err = schema().parse(&argv(&["--help"])).unwrap_err();
         assert!(err.0.contains("--dataset"));
         assert!(err.0.contains("--verbose"));
+    }
+
+    #[test]
+    fn transport_flags_default_to_shm() {
+        let a = Args::new("t", "t")
+            .with_transport_flags()
+            .parse(&argv(&[]))
+            .unwrap();
+        let t = TransportCli::parse(&a).unwrap();
+        assert_eq!(t.kind, TransportKind::Shm);
+        assert_eq!(t.rank, 0);
+        assert_eq!(t.world, 1);
+    }
+
+    #[test]
+    fn transport_flags_parse_tcp() {
+        let a = Args::new("t", "t")
+            .with_transport_flags()
+            .parse(&argv(&[
+                "--transport",
+                "tcp",
+                "--rank",
+                "2",
+                "--world",
+                "3",
+                "--addr",
+                "127.0.0.1:4100",
+                "--net-timeout",
+                "5",
+            ]))
+            .unwrap();
+        let t = TransportCli::parse(&a).unwrap();
+        assert_eq!(t.kind, TransportKind::Tcp);
+        assert_eq!(t.rank, 2);
+        assert_eq!(t.world, 3);
+        assert_eq!(t.addr, "127.0.0.1:4100");
+        assert!((t.timeout_secs - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transport_flags_reject_bad_rank_and_kind() {
+        let a = Args::new("t", "t")
+            .with_transport_flags()
+            .parse(&argv(&["--transport", "tcp", "--rank", "3", "--world", "3"]))
+            .unwrap();
+        assert!(TransportCli::parse(&a).is_err());
+        let a = Args::new("t", "t")
+            .with_transport_flags()
+            .parse(&argv(&["--transport", "carrier-pigeon"]))
+            .unwrap();
+        assert!(TransportCli::parse(&a).is_err());
     }
 }

@@ -3,6 +3,7 @@
 //! property-test driver. See DESIGN.md §7 for why these are in-tree.
 
 pub mod bench;
+pub mod bytes;
 pub mod cli;
 pub mod csv;
 pub mod json;

@@ -1,0 +1,298 @@
+//! Property: [`ShmTransport`] (thread simulator) and [`TcpTransport`]
+//! (real multi-process sockets, here exercised with one OS thread per
+//! rank over localhost) implement the *same* collectives — bit-identical
+//! results, synchronized clocks, and priced accounting — for every
+//! collective kind, random vector lengths, world sizes 2–5, and ragged
+//! `all_gather_concat` contributions. Plus the failure-semantics
+//! regression: a peer that dies mid-collective must abort the fleet with
+//! `cluster node failed: rank N: …` within a bounded deadline, never hang.
+
+use disco::net::{
+    Cluster, CollectiveAlgo, Collectives, CommStats, CostModel, NodeCtx, TcpOptions, TcpTransport,
+};
+use disco::util::prop::{check, ensure, Gen};
+use std::net::TcpListener;
+use std::time::Duration;
+
+/// One SPMD program step, with per-rank inputs pre-generated so both
+/// backends consume identical data.
+#[derive(Clone, Debug)]
+enum Op {
+    /// Per-rank analytic compute (desynchronizes the clocks so the
+    /// max-arrival window is actually exercised).
+    Advance(Vec<f64>),
+    ReduceAll(Vec<Vec<f64>>),
+    MetricReduceAll(Vec<Vec<f64>>),
+    Broadcast { root: usize, data: Vec<Vec<f64>> },
+    Reduce { root: usize, data: Vec<Vec<f64>> },
+    /// Ragged all-gather parts (possibly empty on some ranks).
+    Gather(Vec<Vec<f64>>),
+    Scalar2(Vec<(f64, f64)>),
+    Barrier,
+}
+
+fn gen_program(g: &mut Gen, m: usize) -> Vec<Op> {
+    let n_ops = g.usize_in(3, 8);
+    let mut ops = Vec::with_capacity(n_ops);
+    for _ in 0..n_ops {
+        let op = match g.usize_in(0, 7) {
+            0 => Op::Advance((0..m).map(|_| g.f64_in(0.0, 2e-3)).collect()),
+            1 => {
+                let k = g.usize_in(1, 96);
+                Op::ReduceAll((0..m).map(|_| g.normal_vec(k)).collect())
+            }
+            2 => {
+                let k = g.usize_in(1, 48);
+                Op::MetricReduceAll((0..m).map(|_| g.normal_vec(k)).collect())
+            }
+            3 => {
+                let k = g.usize_in(1, 64);
+                Op::Broadcast {
+                    root: g.usize_in(0, m - 1),
+                    data: (0..m).map(|_| g.normal_vec(k)).collect(),
+                }
+            }
+            4 => {
+                let k = g.usize_in(1, 64);
+                Op::Reduce {
+                    root: g.usize_in(0, m - 1),
+                    data: (0..m).map(|_| g.normal_vec(k)).collect(),
+                }
+            }
+            5 => Op::Gather(
+                (0..m)
+                    .map(|_| {
+                        let len = g.usize_in(0, 9); // ragged, possibly empty
+                        g.normal_vec(len)
+                    })
+                    .collect(),
+            ),
+            6 => Op::Scalar2(
+                (0..m)
+                    .map(|_| (g.f64_reasonable(), g.f64_reasonable()))
+                    .collect(),
+            ),
+            _ => Op::Barrier,
+        };
+        ops.push(op);
+    }
+    ops
+}
+
+/// Execute the program on any backend, collecting every result bit.
+fn exec<C: Collectives>(ctx: &mut C, ops: &[Op]) -> (Vec<f64>, f64, CommStats) {
+    let rank = ctx.rank();
+    let mut sink: Vec<f64> = Vec::new();
+    for op in ops {
+        match op {
+            Op::Advance(bases) => ctx.advance("work", bases[rank]),
+            Op::ReduceAll(data) => {
+                let mut v = data[rank].clone();
+                ctx.reduce_all(&mut v);
+                sink.extend_from_slice(&v);
+            }
+            Op::MetricReduceAll(data) => {
+                let mut v = data[rank].clone();
+                ctx.metric_reduce_all(&mut v);
+                sink.extend_from_slice(&v);
+            }
+            Op::Broadcast { root, data } => {
+                let mut v = data[rank].clone();
+                ctx.broadcast(*root, &mut v);
+                sink.extend_from_slice(&v);
+            }
+            Op::Reduce { root, data } => {
+                let mut v = data[rank].clone();
+                ctx.reduce(*root, &mut v);
+                sink.push(v.len() as f64);
+                sink.extend_from_slice(&v);
+            }
+            Op::Gather(data) => {
+                let g = ctx.all_gather_concat(&data[rank]);
+                sink.extend_from_slice(&g);
+            }
+            Op::Scalar2(data) => {
+                let (a, b) = ctx.reduce_all_scalar2(data[rank].0, data[rank].1);
+                sink.push(a);
+                sink.push(b);
+            }
+            Op::Barrier => ctx.barrier(),
+        }
+        sink.push(ctx.clock());
+    }
+    (sink, ctx.clock(), ctx.comm_stats().clone())
+}
+
+/// Run the SPMD closure over a real TCP mesh, one thread per rank on
+/// localhost (an ephemeral rendezvous port per call, so tests can run in
+/// parallel).
+fn run_tcp<T: Send>(
+    m: usize,
+    cost: CostModel,
+    timeout: Duration,
+    f: impl Fn(&mut NodeCtx<TcpTransport>) -> T + Sync,
+) -> Vec<T> {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind rendezvous");
+    let addr = listener.local_addr().expect("rendezvous addr").to_string();
+    let mut listener = Some(listener);
+    let mut outs: Vec<Option<T>> = (0..m).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        let addr = &addr;
+        for (rank, slot) in outs.iter_mut().enumerate() {
+            let l = listener.take(); // Some only for rank 0
+            s.spawn(move || {
+                let opts = TcpOptions::new(rank, m, addr)
+                    .with_cost(cost)
+                    .with_timeout(timeout);
+                let t = match l {
+                    Some(l) => TcpTransport::establish_with_listener(l, &opts),
+                    None => TcpTransport::establish(&opts),
+                };
+                let mut ctx = NodeCtx::new(t);
+                *slot = Some(f(&mut ctx));
+            });
+        }
+    });
+    outs.into_iter().map(|o| o.expect("rank output")).collect()
+}
+
+fn without_wire(s: &CommStats) -> CommStats {
+    let mut c = s.clone();
+    c.wire_bytes = 0;
+    c
+}
+
+#[test]
+fn prop_shm_and_tcp_collectives_are_bit_identical() {
+    check("transport_equivalence", 6, |g: &mut Gen| {
+        let m = g.usize_in(2, 5);
+        let cost = match g.usize_in(0, 2) {
+            0 => CostModel::default(),
+            1 => CostModel::slow(),
+            _ => CostModel::default().with_algo(CollectiveAlgo::Ring),
+        };
+        let ops = gen_program(g, m);
+
+        let shm = Cluster::new(m).with_cost(cost).run(|ctx| exec(ctx, &ops));
+        let tcp = run_tcp(m, cost, Duration::from_secs(20), |ctx| exec(ctx, &ops));
+
+        for rank in 0..m {
+            let (shm_sink, shm_clock, shm_stats) = &shm.outputs[rank];
+            let (tcp_sink, tcp_clock, tcp_stats) = &tcp[rank];
+            ensure(
+                shm_sink.len() == tcp_sink.len(),
+                &format!("rank {rank}: sink lengths {} vs {}", shm_sink.len(), tcp_sink.len()),
+            )?;
+            for (i, (a, b)) in shm_sink.iter().zip(tcp_sink.iter()).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "rank {rank} sink[{i}]: shm {a:?} != tcp {b:?} (bitwise)"
+                    ));
+                }
+            }
+            ensure(
+                shm_clock.to_bits() == tcp_clock.to_bits(),
+                &format!("rank {rank}: clocks {shm_clock} vs {tcp_clock}"),
+            )?;
+            ensure(
+                without_wire(shm_stats) == without_wire(tcp_stats),
+                &format!("rank {rank}: stats {shm_stats:?} vs {tcp_stats:?}"),
+            )?;
+            ensure(shm_stats.wire_bytes == 0, "shm must move no wire bytes")?;
+            ensure(tcp_stats.wire_bytes > 0, "tcp must record real wire bytes")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tcp_single_rank_fleet_matches_shm() {
+    let ops = vec![
+        Op::ReduceAll(vec![vec![1.5, -2.5, 4.0]]),
+        Op::Gather(vec![vec![7.0, 8.0]]),
+        Op::Scalar2(vec![(0.25, -0.75)]),
+    ];
+    let shm = Cluster::new(1).run(|ctx| exec(ctx, &ops));
+    let tcp = run_tcp(1, CostModel::default(), Duration::from_secs(10), |ctx| {
+        exec(ctx, &ops)
+    });
+    let (a, _, _) = &shm.outputs[0];
+    let (b, _, _) = &tcp[0];
+    assert_eq!(a, b);
+}
+
+fn panic_payload_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    p.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "non-string panic".into())
+}
+
+#[test]
+fn tcp_dropped_peer_fails_fast_instead_of_hanging() {
+    // 3 ranks; rank 1 completes one healthy collective and then dies
+    // (drops its transport, closing every socket). The survivors attempt
+    // a second collective and must abort with the uniform failure message
+    // within the socket deadline — mirroring the thread cluster's
+    // abortable-barrier guarantee. The whole test is guarded by an outer
+    // timeout so a regression fails instead of hanging the suite.
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let outcomes = run_tcp(3, CostModel::zero(), Duration::from_secs(3), |ctx| {
+            let rank = ctx.rank;
+            let first = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut v = vec![1.0; 8];
+                ctx.reduce_all(&mut v); // healthy round, all three ranks
+                if rank != 1 {
+                    // Rank 1 exits here; its sockets close on drop.
+                    ctx.reduce_all(&mut v);
+                }
+            }));
+            match first {
+                Ok(()) => (rank, None),
+                Err(p) => (rank, Some(panic_payload_msg(p))),
+            }
+        });
+        let _ = tx.send(outcomes);
+    });
+    let outcomes = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("tcp fleet hung on a dropped peer");
+    for (rank, msg) in outcomes {
+        if rank == 1 {
+            assert!(msg.is_none(), "the dying rank itself saw: {msg:?}");
+        } else {
+            let msg = msg.expect("surviving rank must abort");
+            assert!(
+                msg.contains("cluster node failed: rank"),
+                "rank {rank} panicked without the failure prefix: {msg}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tcp_handshake_timeout_is_bounded() {
+    // A worker pointed at a rendezvous that never answers must give up
+    // within the deadline with the failure prefix.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    drop(listener); // nothing listens here any more
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let res = std::panic::catch_unwind(|| {
+            let opts = TcpOptions::new(1, 3, &addr).with_timeout(Duration::from_millis(400));
+            TcpTransport::establish(&opts)
+        });
+        let msg = match res {
+            Ok(_) => "established against a dead rendezvous".to_string(),
+            Err(p) => panic_payload_msg(p),
+        };
+        let _ = tx.send(msg);
+    });
+    let msg = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("worker hung in the handshake");
+    assert!(msg.contains("cluster node failed: rank 1"), "{msg}");
+}
