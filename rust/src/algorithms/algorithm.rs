@@ -1,0 +1,122 @@
+//! The step-wise solver interface: one object-safe surface that all six
+//! distributed algorithms implement, so a single driver
+//! ([`crate::algorithms::session::Session`]) can own the outer loop over
+//! any transport.
+//!
+//! The paper frames DiSCO-S, DiSCO-F, the original DiSCO, DANE, CoCoA+
+//! (and our GD sanity baseline) as the *same* outer iteration — compute a
+//! global gradient, test the stopping rule, run some inner machinery,
+//! update the iterate — differing only in what the inner machinery is and
+//! which collectives it spends (Zhang & Xiao 2015; Ma & Takáč 2016). This
+//! module makes that structural claim an API:
+//!
+//! * [`Algorithm`] — a stateless factory ("which method"), object-safe per
+//!   [`Collectives`] backend `C`. [`Algorithm::setup`] builds this rank's
+//!   solver state: it partitions the dataset, takes its shard, allocates
+//!   every buffer, and runs the pre-loop compute (e.g. the Woodbury
+//!   preconditioner setup) through the context so the simulated timeline
+//!   accounts it exactly like the legacy run-to-completion entrypoints.
+//! * [`AlgorithmNode`] — one rank's live solver state.
+//!   [`AlgorithmNode::step`] executes **exactly one outer iteration**
+//!   (SPMD: every rank must call it in lockstep) and yields control;
+//!   [`AlgorithmNode::finish`] drains the state into the per-rank
+//!   [`NodeOutput`]. `save_state`/`restore_state` serialize the evolving
+//!   solver state (iterate shard, RNG streams, dual variables, metric
+//!   records) for the session checkpoint format — everything derivable
+//!   (shards, kernels, factorizations) is rebuilt, not stored.
+//!
+//! Between `step` calls a driver can observe convergence, enforce
+//! composable stop policies, checkpoint, or (future work) re-balance the
+//! partition — the degrees of freedom the run-to-completion API hid.
+//!
+//! # Example
+//!
+//! ```
+//! use disco::algorithms::{AlgoKind, RunSpec, Session, SessionStatus};
+//! use disco::data::SyntheticConfig;
+//! use disco::loss::LossKind;
+//! use disco::net::Cluster;
+//!
+//! let ds = SyntheticConfig::new("doc", 64, 24).density(0.3).seed(1).generate();
+//! let spec = RunSpec::new(AlgoKind::DiscoF, LossKind::Logistic, 1e-2);
+//! // Drive one rank per thread; each rank owns its own Session (SPMD).
+//! let run = Cluster::new(spec.sim.m).run(|ctx| {
+//!     let mut session = Session::new(ctx, &ds, &spec);
+//!     let mut outers = 0;
+//!     loop {
+//!         match session.step(ctx) {
+//!             SessionStatus::Running(_) => outers += 1,
+//!             SessionStatus::Stopped(..) => break,
+//!         }
+//!     }
+//!     (session.finish(), outers)
+//! });
+//! assert!(run.outputs.iter().all(|(_, outers)| *outers > 0));
+//! ```
+
+use crate::algorithms::spec::RunSpec;
+use crate::algorithms::{AlgoKind, IterRecord, NodeOutput};
+use crate::data::Dataset;
+use crate::net::Collectives;
+use crate::util::bytes::ByteReader;
+
+/// What one outer iteration produced — the per-step slice of the run's
+/// metrics, identical on every rank (all fields derive from reduced
+/// scalars and the synchronized clock).
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    /// The Figure-3 data point for this outer iteration (also appended to
+    /// rank 0's record list).
+    pub record: IterRecord,
+    /// The gradient-tolerance test fired at the top of this iteration: the
+    /// iterate recorded in `record` is final and no inner work ran.
+    pub converged: bool,
+}
+
+/// A distributed optimization method, as a factory for per-rank solver
+/// state. Object-safe for any fixed [`Collectives`] backend `C`, so
+/// drivers hold `Box<dyn Algorithm<C>>` / `Box<dyn AlgorithmNode<C>>` and
+/// contain no per-algorithm dispatch.
+pub trait Algorithm<C: Collectives> {
+    /// Which method this is (naming, checkpoints, result assembly).
+    fn kind(&self) -> AlgoKind;
+
+    /// Build this rank's solver state: deterministic partition (every rank
+    /// computes the same cuts from `ds` + `spec`), shard extraction,
+    /// buffer allocation, and any pre-loop compute — costed through `ctx`
+    /// exactly as the legacy entrypoints did, so setup lands in the
+    /// simulated timeline.
+    fn setup(&self, ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Box<dyn AlgorithmNode<C>>;
+}
+
+/// One rank's live solver state, advanced one outer iteration at a time.
+///
+/// SPMD contract: every rank must call [`AlgorithmNode::step`] the same
+/// number of times with the same `outer` values — the step executes the
+/// same collective sequence on all ranks. The convergence decision inside
+/// `step` is made on reduced scalars, so every rank agrees without extra
+/// communication.
+pub trait AlgorithmNode<C: Collectives> {
+    fn kind(&self) -> AlgoKind;
+
+    /// Execute outer iteration `outer` (0-based): gradient + metrics
+    /// round(s), the tolerance test, and — unless converged — the inner
+    /// solve and iterate update. Yields after exactly one iteration.
+    fn step(&mut self, ctx: &mut C, outer: usize) -> StepReport;
+
+    /// Serialize the evolving solver state (iterate shard, RNG streams,
+    /// metric records, operation counters) for a checkpoint. Derived state
+    /// (shards, kernels, factorizations) is *not* stored; `restore_state`
+    /// rebuilds it without touching the simulated clock.
+    fn save_state(&self, buf: &mut Vec<u8>);
+
+    /// Restore state written by [`AlgorithmNode::save_state`] on a node
+    /// that was just [`Algorithm::setup`] from the same dataset and spec.
+    /// Must not advance the simulated clock — the restored clock already
+    /// accounts for everything up to the checkpoint.
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<(), String>;
+
+    /// Drain the node into its share of the run (final iterate part on the
+    /// owning rank(s), records on rank 0, per-node op counts).
+    fn finish(self: Box<Self>) -> NodeOutput;
+}

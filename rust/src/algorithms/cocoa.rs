@@ -6,67 +6,139 @@
 //! `σ′ = m` (the "adding" variant), then the primal deltas
 //! `Δv_j = (1/λn) X_j Δα_j` are combined with **one ℝᵈ ReduceAll per
 //! iteration** — the communication profile Table 2 credits CoCoA+ with.
+//!
+//! Step-wise [`AlgorithmNode`]: the dual block α_j and the SDCA sampling
+//! stream both evolve across outer iterations, so checkpoints serialize
+//! them and a resumed run continues the exact dual trajectory.
 
-use crate::algorithms::common::{sample_partition, Recorder};
-use crate::algorithms::{assemble, NodeOutput, RunConfig, RunResult};
-use crate::data::{Dataset, Partition};
-use crate::linalg::ops;
+use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, StepReport};
+use crate::algorithms::common::{decode_records, encode_records, put_bool, put_vec, read_bool};
+use crate::algorithms::common::{read_vec_into, sample_partition, Recorder};
+use crate::algorithms::spec::{CocoaParams, RunSpec};
+use crate::algorithms::{AlgoKind, NodeOutput};
+use crate::data::Dataset;
+use crate::linalg::{ops, DataMatrix};
 use crate::loss::Loss;
 use crate::net::Collectives;
 use crate::solvers::SdcaLocal;
+use crate::util::bytes::{put_u64, ByteReader};
 use crate::util::prng::Xoshiro256pp;
 
-pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
-    let partition = sample_partition(ds, cfg);
-    let loss = cfg.loss.make();
-    let n = ds.nsamples();
+/// The CoCoA+ baseline (factory for per-rank `CocoaNode` state).
+pub struct CocoaPlus;
 
-    let cluster = cfg.cluster();
-    let run = cluster.run(|ctx| node_main(ctx, &partition, loss.as_ref(), cfg, n));
-    assemble(cfg.algo, run)
+impl<C: Collectives> Algorithm<C> for CocoaPlus {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::CocoaPlus
+    }
+
+    fn setup(&self, ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Box<dyn AlgorithmNode<C>> {
+        Box::new(CocoaNode::new(ctx.rank(), ds, spec))
+    }
 }
 
-/// Per-rank entry over any collective backend (multi-process runs).
-pub(crate) fn node_run<C: Collectives>(ctx: &mut C, ds: &Dataset, cfg: &RunConfig) -> NodeOutput {
-    let partition = sample_partition(ds, cfg);
-    let loss = cfg.loss.make();
-    node_main(ctx, &partition, loss.as_ref(), cfg, ds.nsamples())
-}
-
-fn node_main<C: Collectives>(
-    ctx: &mut C,
-    partition: &Partition,
-    loss: &dyn Loss,
-    cfg: &RunConfig,
+struct CocoaNode {
+    // -- problem data / derived --
+    x: DataMatrix,
+    y: Vec<f64>,
+    loss: Box<dyn Loss>,
+    p: CocoaParams,
+    lambda: f64,
+    grad_tol: f64,
     n: usize,
-) -> NodeOutput {
-    let rank = ctx.rank();
-    let shard = &partition.shards[rank];
-    let x = &shard.x;
-    let y = &shard.y;
-    let d = x.nrows();
-    let n_local = x.ncols();
-    let nnz = x.nnz() as f64;
+    n_local: usize,
+    d: usize,
+    nnz: f64,
+    // -- evolving solver state (serialized: w, α, rng stream) --
+    w: Vec<f64>,
+    local: SdcaLocal,
+    rng: Xoshiro256pp,
+    recorder: Recorder,
+    converged: bool,
+    // -- scratch --
+    z: Vec<f64>,
+    g_scal: Vec<f64>,
+    /// Gradient slice + objective piece bundled in one metrics message.
+    gplus: Vec<f64>,
+}
 
-    let mut w = vec![0.0; d];
-    let mut recorder = Recorder::new(rank);
-    let mut converged = false;
-    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed.wrapping_add(rank as u64 * 104729));
-    let mut local = SdcaLocal::new(x, y, loss, cfg.lambda, n, cfg.m as f64);
-    let mut z = vec![0.0; n_local];
-    let mut g_scal = vec![0.0; n_local];
-    // Gradient slice + objective piece bundled in one metrics message.
-    let mut gplus = vec![0.0; d + 1];
+impl CocoaNode {
+    fn new(rank: usize, ds: &Dataset, spec: &RunSpec) -> CocoaNode {
+        let p = match &spec.algo {
+            crate::algorithms::AlgoParams::CocoaPlus(p) => *p,
+            other => panic!("CoCoA+ spec carries {:?}", other.kind()),
+        };
+        let mut partition = sample_partition(ds, spec.sim.m, spec.sim.partition_speeds());
+        let shard = partition.shards.swap_remove(rank);
+        drop(partition);
+        let x = shard.x;
+        let y = shard.y;
+        let n = ds.nsamples();
+        let d = x.nrows();
+        let n_local = x.ncols();
+        let loss = spec.loss.make();
+        let rng = Xoshiro256pp::seed_from_u64(spec.sim.seed.wrapping_add(rank as u64 * 104729));
+        let local = SdcaLocal::new(&x, spec.lambda, n, spec.sim.m as f64);
 
-    for outer in 0..cfg.max_outer {
+        CocoaNode {
+            y,
+            loss,
+            p,
+            lambda: spec.lambda,
+            grad_tol: spec.stop.grad_tol,
+            n,
+            n_local,
+            d,
+            nnz: x.nnz() as f64,
+            w: vec![0.0; d],
+            local,
+            rng,
+            recorder: Recorder::new(rank),
+            converged: false,
+            z: vec![0.0; n_local],
+            g_scal: vec![0.0; n_local],
+            gplus: vec![0.0; d + 1],
+            x,
+        }
+    }
+}
+
+impl<C: Collectives> AlgorithmNode<C> for CocoaNode {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::CocoaPlus
+    }
+
+    fn step(&mut self, ctx: &mut C, outer: usize) -> StepReport {
+        let (n, n_local, d, nnz, lambda, grad_tol) = (
+            self.n, self.n_local, self.d, self.nnz, self.lambda, self.grad_tol,
+        );
+        let p = self.p;
+        let CocoaNode {
+            x,
+            y,
+            loss,
+            w,
+            local,
+            rng,
+            recorder,
+            converged,
+            z,
+            g_scal,
+            gplus,
+            ..
+        } = self;
+        let x: &DataMatrix = x;
+        let y: &[f64] = y;
+        let loss: &dyn Loss = loss.as_ref();
+
         // ---- metrics: global gradient norm + objective (metrics channel,
         // CoCoA+ itself never forms the gradient) ----
         ctx.compute_costed("metrics", || {
-            x.at_mul_into(&w, &mut z);
+            x.at_mul_into(w, z);
             for i in 0..n_local {
                 g_scal[i] = loss.deriv(z[i], y[i]);
             }
-            x.a_mul_into(&g_scal, &mut gplus[..d]);
+            x.a_mul_into(g_scal, &mut gplus[..d]);
             ops::scale(1.0 / n as f64, &mut gplus[..d]);
             let f: f64 = z
                 .iter()
@@ -76,23 +148,23 @@ fn node_main<C: Collectives>(
             gplus[d] = f / n as f64;
             ((), 4.0 * nnz + 2.0 * n_local as f64 + d as f64)
         });
-        ctx.metric_reduce_all(&mut gplus);
+        ctx.metric_reduce_all(gplus);
         let data_sum = gplus[d];
-        ops::axpy(cfg.lambda, &w, &mut gplus[..d]);
+        ops::axpy(lambda, w, &mut gplus[..d]);
         let grad_norm = ops::norm2(&gplus[..d]);
-        let fval = data_sum + 0.5 * cfg.lambda * ops::norm2_sq(&w);
+        let fval = data_sum + 0.5 * lambda * ops::norm2_sq(w);
 
-        recorder.push(ctx, outer, grad_norm, fval, 0);
-        if grad_norm <= cfg.grad_tol {
-            converged = true;
-            break;
+        let record = recorder.push(ctx, outer, grad_norm, fval, 0);
+        if grad_norm <= grad_tol {
+            *converged = true;
+            return StepReport { record, converged: true };
         }
 
         // ---- H local SDCA epochs, then ONE ℝᵈ ReduceAll of Δv ----
         let mut dv = ctx.compute_costed("sdca_epochs", || {
-            let dv = local.epoch(&w, cfg.local_epochs, &mut rng);
+            let dv = local.epoch(x, y, loss, w, p.local_epochs, rng);
             // Each SDCA epoch touches every local sample's column twice.
-            (dv, cfg.local_epochs as f64 * 6.0 * nnz)
+            (dv, p.local_epochs as f64 * 6.0 * nnz)
         });
         ctx.reduce_all(&mut dv);
         ctx.compute_costed("apply_update", || {
@@ -101,13 +173,39 @@ fn node_main<C: Collectives>(
             }
             ((), d as f64)
         });
+
+        StepReport { record, converged: false }
     }
 
-    NodeOutput {
-        records: recorder.records,
-        // Every rank holds the same primal iterate; rank 0 reports it.
-        w_part: if rank == 0 { w } else { Vec::new() },
-        ops: Default::default(),
-        converged,
+    fn save_state(&self, buf: &mut Vec<u8>) {
+        put_vec(buf, &self.w);
+        put_vec(buf, &self.local.alpha);
+        for word in self.rng.state() {
+            put_u64(buf, word);
+        }
+        put_bool(buf, self.converged);
+        encode_records(buf, &self.recorder.records);
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<(), String> {
+        read_vec_into(r, &mut self.w)?;
+        read_vec_into(r, &mut self.local.alpha)?;
+        let state = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+        self.rng = Xoshiro256pp::from_state(state);
+        self.converged = read_bool(r)?;
+        self.recorder.records = decode_records(r)?;
+        Ok(())
+    }
+
+    fn finish(self: Box<Self>) -> NodeOutput {
+        let me = *self;
+        let primary = me.recorder.is_primary();
+        NodeOutput {
+            records: me.recorder.records,
+            // Every rank holds the same primal iterate; rank 0 reports it.
+            w_part: if primary { me.w } else { Vec::new() },
+            ops: Default::default(),
+            converged: me.converged,
+        }
     }
 }

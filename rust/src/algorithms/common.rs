@@ -2,22 +2,23 @@
 //! masks (Fig. 5), preconditioner sample selection, the damped-Newton step,
 //! and the per-iteration metric recorder.
 
-use crate::algorithms::{IterRecord, RunConfig};
+use crate::algorithms::{IterRecord, OpCounts};
 use crate::data::{Dataset, Partition};
 use crate::linalg::DataMatrix;
 use crate::loss::Loss;
 use crate::net::Collectives;
+use crate::util::bytes::{put_f64, put_f64s, put_u32, put_u64, put_u8, ByteReader};
 use crate::util::prng::Xoshiro256pp;
 
 /// Sample partition shared by every sample-partitioned algorithm
 /// (DiSCO-S/orig, DANE, CoCoA+, GD): speed-weighted shard sizing when the
-/// heterogeneity knobs ask for it, the uniform split otherwise. One
-/// definition so the thread cluster and the per-process TCP ranks can
-/// never diverge on shard boundaries.
-pub(crate) fn sample_partition(ds: &Dataset, cfg: &RunConfig) -> Partition {
-    match cfg.partition_speeds() {
+/// heterogeneity knobs ask for it (`speeds = Some`), the uniform split
+/// otherwise. One definition so the thread cluster and the per-process TCP
+/// ranks can never diverge on shard boundaries.
+pub(crate) fn sample_partition(ds: &Dataset, m: usize, speeds: Option<&[f64]>) -> Partition {
+    match speeds {
         Some(speeds) => Partition::by_samples_weighted(ds, speeds),
-        None => Partition::by_samples(ds, cfg.m),
+        None => Partition::by_samples(ds, m),
     }
 }
 
@@ -133,6 +134,17 @@ impl Recorder {
         }
     }
 
+    /// True on the rank whose records are authoritative (rank 0) — the
+    /// rank that also reports the full iterate for the replicated-iterate
+    /// algorithms.
+    pub fn is_primary(&self) -> bool {
+        self.enabled
+    }
+
+    /// Build this iteration's record (every rank computes the identical
+    /// one: the inputs are reduced scalars, the synchronized clock, and
+    /// the rank-mirrored counters); rank 0 also appends it to its list.
+    /// The returned record feeds [`crate::algorithms::StepReport`].
     pub fn push(
         &mut self,
         ctx: &impl Collectives,
@@ -140,12 +152,9 @@ impl Recorder {
         grad_norm: f64,
         fval: f64,
         inner: usize,
-    ) {
-        if !self.enabled {
-            return;
-        }
+    ) -> IterRecord {
         let stats = ctx.comm_stats();
-        self.records.push(IterRecord {
+        let record = IterRecord {
             outer,
             rounds: stats.vector_rounds,
             scalar_rounds: stats.scalar_rounds,
@@ -154,8 +163,99 @@ impl Recorder {
             grad_norm,
             fval,
             inner_iters: inner,
+        };
+        if self.enabled {
+            self.records.push(record.clone());
+        }
+        record
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint codec helpers shared by the AlgorithmNode implementations
+// ---------------------------------------------------------------------------
+
+pub(crate) fn put_bool(buf: &mut Vec<u8>, b: bool) {
+    put_u8(buf, u8::from(b));
+}
+
+pub(crate) fn read_bool(r: &mut ByteReader<'_>) -> Result<bool, String> {
+    match r.u8()? {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => Err(format!("bad bool byte {other}")),
+    }
+}
+
+/// Length-prefixed f64 vector.
+pub(crate) fn put_vec(buf: &mut Vec<u8>, v: &[f64]) {
+    put_u32(buf, v.len() as u32);
+    put_f64s(buf, v);
+}
+
+/// Read a length-prefixed f64 vector *into* `v`, enforcing that the
+/// checkpointed length matches the freshly set-up buffer (a mismatch means
+/// the checkpoint belongs to a different dataset/partition).
+pub(crate) fn read_vec_into(r: &mut ByteReader<'_>, v: &mut Vec<f64>) -> Result<(), String> {
+    let len = r.u32()? as usize;
+    if len != v.len() {
+        return Err(format!(
+            "checkpoint vector has {len} entries, this run expects {}",
+            v.len()
+        ));
+    }
+    *v = r.f64s(len)?;
+    Ok(())
+}
+
+pub(crate) fn encode_records(buf: &mut Vec<u8>, records: &[IterRecord]) {
+    put_u32(buf, records.len() as u32);
+    for rec in records {
+        put_u64(buf, rec.outer as u64);
+        put_u64(buf, rec.rounds);
+        put_u64(buf, rec.scalar_rounds);
+        put_u64(buf, rec.vector_doubles);
+        put_f64(buf, rec.sim_time);
+        put_f64(buf, rec.grad_norm);
+        put_f64(buf, rec.fval);
+        put_u64(buf, rec.inner_iters as u64);
+    }
+}
+
+pub(crate) fn decode_records(r: &mut ByteReader<'_>) -> Result<Vec<IterRecord>, String> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(IterRecord {
+            outer: r.u64()? as usize,
+            rounds: r.u64()?,
+            scalar_rounds: r.u64()?,
+            vector_doubles: r.u64()?,
+            sim_time: r.f64()?,
+            grad_norm: r.f64()?,
+            fval: r.f64()?,
+            inner_iters: r.u64()? as usize,
         });
     }
+    Ok(out)
+}
+
+pub(crate) fn encode_ops(buf: &mut Vec<u8>, ops: &OpCounts) {
+    put_u64(buf, ops.hvp);
+    put_u64(buf, ops.precond_solve);
+    put_u64(buf, ops.axpy);
+    put_u64(buf, ops.dot);
+    put_u64(buf, ops.dim as u64);
+}
+
+pub(crate) fn decode_ops(r: &mut ByteReader<'_>) -> Result<OpCounts, String> {
+    Ok(OpCounts {
+        hvp: r.u64()?,
+        precond_solve: r.u64()?,
+        axpy: r.u64()?,
+        dot: r.u64()?,
+        dim: r.u64()? as usize,
+    })
 }
 
 #[cfg(test)]

@@ -11,81 +11,88 @@
 //! with SAG (as in the paper's experiments: "we apply SAG to solve …
 //! subproblem (1)"), followed by a second ReduceAll to average the local
 //! solutions — two ℝᵈ vector rounds per iteration.
+//!
+//! Step-wise [`AlgorithmNode`]: the per-rank SAG stream is part of the
+//! solver state (it advances every outer iteration), so checkpoints
+//! serialize it and a resumed run draws the exact same sample sequence.
 
-use crate::algorithms::common::{sample_partition, Recorder};
-use crate::algorithms::{assemble, NodeOutput, RunConfig, RunResult};
-use crate::data::{Dataset, Partition};
-use crate::linalg::ops;
+use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, StepReport};
+use crate::algorithms::common::{decode_records, encode_records, put_bool, put_vec, read_bool};
+use crate::algorithms::common::{read_vec_into, sample_partition, Recorder};
+use crate::algorithms::spec::{DaneParams, RunSpec};
+use crate::algorithms::{AlgoKind, NodeOutput};
+use crate::data::Dataset;
+use crate::linalg::{ops, DataMatrix};
 use crate::loss::Loss;
 use crate::net::Collectives;
 use crate::solvers::sag::SagSolver;
+use crate::util::bytes::{put_u64, ByteReader};
 use crate::util::prng::Xoshiro256pp;
 
-pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
-    let partition = sample_partition(ds, cfg);
-    let loss = cfg.loss.make();
-    let n = ds.nsamples();
+/// The DANE baseline (factory for per-rank `DaneNode` state).
+pub struct Dane;
 
-    let cluster = cfg.cluster();
-    let run = cluster.run(|ctx| node_main(ctx, &partition, loss.as_ref(), cfg, n));
-    assemble(cfg.algo, run)
+impl<C: Collectives> Algorithm<C> for Dane {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::Dane
+    }
+
+    fn setup(&self, ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Box<dyn AlgorithmNode<C>> {
+        Box::new(DaneNode::new(ctx.rank(), ds, spec))
+    }
 }
 
-/// Per-rank entry over any collective backend (multi-process runs).
-pub(crate) fn node_run<C: Collectives>(ctx: &mut C, ds: &Dataset, cfg: &RunConfig) -> NodeOutput {
-    let partition = sample_partition(ds, cfg);
-    let loss = cfg.loss.make();
-    node_main(ctx, &partition, loss.as_ref(), cfg, ds.nsamples())
-}
-
-fn node_main<C: Collectives>(
-    ctx: &mut C,
-    partition: &Partition,
-    loss: &dyn Loss,
-    cfg: &RunConfig,
+struct DaneNode {
+    // -- problem data / derived --
+    x: DataMatrix,
+    y: Vec<f64>,
+    loss: Box<dyn Loss>,
+    p: DaneParams,
+    lambda: f64,
+    m: usize,
+    grad_tol: f64,
     n: usize,
-) -> NodeOutput {
-    let rank = ctx.rank();
-    let shard = &partition.shards[rank];
-    let x = &shard.x; // d × n_j
-    let y = &shard.y;
-    let d = x.nrows();
-    let n_local = x.ncols();
-    let nnz = x.nnz() as f64;
-    let inv_nl = 1.0 / n_local as f64;
+    n_local: usize,
+    nnz: f64,
+    inv_nl: f64,
+    /// SAG step-size bound: max per-sample curvature of the subproblem.
+    lmax: f64,
+    /// Sample-share weight p_j = n_j·m/n on weighted partitions (1.0 on
+    /// uniform ones — the seed arithmetic bit-for-bit).
+    pj: f64,
+    // -- evolving solver state (serialized) --
+    w: Vec<f64>,
+    rng: Xoshiro256pp,
+    recorder: Recorder,
+    converged: bool,
+    // -- scratch --
+    z: Vec<f64>,
+    g_scal: Vec<f64>,
+    grad_local: Vec<f64>,
+}
 
-    let mut w = vec![0.0; d];
-    let mut recorder = Recorder::new(rank);
-    let mut converged = false;
-    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed.wrapping_add(rank as u64 * 7919));
+impl DaneNode {
+    fn new(rank: usize, ds: &Dataset, spec: &RunSpec) -> DaneNode {
+        let p = match &spec.algo {
+            crate::algorithms::AlgoParams::Dane(p) => *p,
+            other => panic!("DANE spec carries {:?}", other.kind()),
+        };
+        let mut partition = sample_partition(ds, spec.sim.m, spec.sim.partition_speeds());
+        let shard = partition.shards.swap_remove(rank);
+        drop(partition);
+        let x = shard.x; // d × n_j
+        let y = shard.y;
+        let n = ds.nsamples();
+        let d = x.nrows();
+        let n_local = x.ncols();
+        let loss = spec.loss.make();
+        let rng = Xoshiro256pp::seed_from_u64(spec.sim.seed.wrapping_add(rank as u64 * 7919));
 
-    // SAG step-size bound: max per-sample curvature of the subproblem.
-    let lmax = (0..n_local)
-        .map(|j| loss.smoothness() * x.col_norm_sq(j))
-        .fold(0.0, f64::max);
+        // SAG step-size bound: max per-sample curvature of the subproblem.
+        let lmax = (0..n_local)
+            .map(|j| loss.smoothness() * x.col_norm_sq(j))
+            .fold(0.0, f64::max);
 
-    let mut z = vec![0.0; n_local];
-    let mut g_scal = vec![0.0; n_local];
-    let mut grad_local = vec![0.0; d];
-
-    for outer in 0..cfg.max_outer {
-        // ---- local gradient of f_j at w_k (includes λw: f_j has its own
-        // regularizer, Eq. (4)) and the global gradient (ReduceAll) ----
-        let data_f = ctx.compute_costed("gradient", || {
-            x.at_mul_into(&w, &mut z);
-            for i in 0..n_local {
-                g_scal[i] = loss.deriv(z[i], y[i]);
-            }
-            x.a_mul_into(&g_scal, &mut grad_local);
-            ops::scale(inv_nl, &mut grad_local);
-            ops::axpy(cfg.lambda, &w, &mut grad_local);
-            let f: f64 = z
-                .iter()
-                .zip(y.iter())
-                .map(|(zi, yi)| loss.value(*zi, *yi))
-                .sum();
-            (f / n as f64, 4.0 * nnz + 2.0 * n_local as f64 + 3.0 * d as f64)
-        });
         // Global gradient = (1/m) Σ_j p_j ∇f_j (each f_j carries λw).
         // On a speed-weighted partition the shards are deliberately
         // unequal and the classic unweighted average would silently
@@ -93,27 +100,106 @@ fn node_main<C: Collectives>(
         // p_j = n_j·m/n makes Σ p_j ∇f_j / m exactly ∇f. Uniform
         // partitions keep p_j = 1 (the seed arithmetic, bit-for-bit —
         // including the ±1-sample shards of a non-divisible n).
-        let pj = if cfg.partition_speeds().is_some() {
-            n_local as f64 * cfg.m as f64 / n as f64
+        let pj = if spec.sim.partition_speeds().is_some() {
+            n_local as f64 * spec.sim.m as f64 / n as f64
         } else {
             1.0
         };
+
+        DaneNode {
+            y,
+            loss,
+            p,
+            lambda: spec.lambda,
+            m: spec.sim.m,
+            grad_tol: spec.stop.grad_tol,
+            n,
+            n_local,
+            nnz: x.nnz() as f64,
+            inv_nl: 1.0 / n_local as f64,
+            lmax,
+            pj,
+            w: vec![0.0; d],
+            rng,
+            recorder: Recorder::new(rank),
+            converged: false,
+            z: vec![0.0; n_local],
+            g_scal: vec![0.0; n_local],
+            grad_local: vec![0.0; d],
+            x,
+        }
+    }
+}
+
+impl<C: Collectives> AlgorithmNode<C> for DaneNode {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::Dane
+    }
+
+    fn step(&mut self, ctx: &mut C, outer: usize) -> StepReport {
+        let (n, n_local, nnz, inv_nl, lmax, pj, lambda, m, grad_tol) = (
+            self.n,
+            self.n_local,
+            self.nnz,
+            self.inv_nl,
+            self.lmax,
+            self.pj,
+            self.lambda,
+            self.m,
+            self.grad_tol,
+        );
+        let p = self.p;
+        let DaneNode {
+            x,
+            y,
+            loss,
+            w,
+            rng,
+            recorder,
+            converged,
+            z,
+            g_scal,
+            grad_local,
+            ..
+        } = self;
+        let x: &DataMatrix = x;
+        let y: &[f64] = y;
+        let loss: &dyn Loss = loss.as_ref();
+        let d = w.len();
+
+        // ---- local gradient of f_j at w_k (includes λw: f_j has its own
+        // regularizer, Eq. (4)) and the global gradient (ReduceAll) ----
+        let data_f = ctx.compute_costed("gradient", || {
+            x.at_mul_into(w, z);
+            for i in 0..n_local {
+                g_scal[i] = loss.deriv(z[i], y[i]);
+            }
+            x.a_mul_into(g_scal, grad_local);
+            ops::scale(inv_nl, grad_local);
+            ops::axpy(lambda, w, grad_local);
+            let f: f64 = z
+                .iter()
+                .zip(y.iter())
+                .map(|(zi, yi)| loss.value(*zi, *yi))
+                .sum();
+            (f / n as f64, 4.0 * nnz + 2.0 * n_local as f64 + 3.0 * d as f64)
+        });
         let mut grad = grad_local.clone();
         if pj != 1.0 {
             ops::scale(pj, &mut grad);
         }
         ctx.reduce_all(&mut grad);
-        ops::scale(1.0 / cfg.m as f64, &mut grad);
+        ops::scale(1.0 / m as f64, &mut grad);
 
         let grad_norm = ops::norm2(&grad);
         let mut fv = vec![data_f];
         ctx.metric_reduce_all(&mut fv);
-        let fval = fv[0] + 0.5 * cfg.lambda * ops::norm2_sq(&w);
+        let fval = fv[0] + 0.5 * lambda * ops::norm2_sq(w);
 
-        recorder.push(ctx, outer, grad_norm, fval, 0);
-        if grad_norm <= cfg.grad_tol {
-            converged = true;
-            break;
+        let record = recorder.push(ctx, outer, grad_norm, fval, 0);
+        if grad_norm <= grad_tol {
+            *converged = true;
+            return StepReport { record, converged: true };
         }
 
         // ---- local subproblem via SAG ----
@@ -122,19 +208,19 @@ fn node_main<C: Collectives>(
         // linear = −∇f_j(w_k) + η∇f(w_k) − μ w_k.
         let mut linear = vec![0.0; d];
         for i in 0..d {
-            linear[i] = -grad_local[i] + cfg.dane_eta * grad[i] - cfg.mu * w[i];
+            linear[i] = -grad_local[i] + p.eta * grad[i] - p.mu * w[i];
         }
         let w_new = ctx.compute_costed("local_solve", || {
             let solver = SagSolver {
                 x,
-                kappa: cfg.lambda + cfg.mu,
+                kappa: lambda + p.mu,
                 linear: &linear,
                 lmax,
             };
-            let w_new = solver.run(|j, zj| loss.deriv(zj, y[j]), &w, cfg.local_epochs, &mut rng);
+            let w_new = solver.run(|j, zj| loss.deriv(zj, y[j]), w, p.local_epochs, rng);
             // Per epoch: one sweep of the shard's nonzeros plus an O(d)
             // dense update per visited sample.
-            let flops = cfg.local_epochs as f64 * (6.0 * nnz + 3.0 * (n_local * d) as f64);
+            let flops = p.local_epochs as f64 * (6.0 * nnz + 3.0 * (n_local * d) as f64);
             (w_new, flops)
         });
 
@@ -147,15 +233,40 @@ fn node_main<C: Collectives>(
         }
         ctx.reduce_all(&mut wsum);
         for (wi, si) in w.iter_mut().zip(wsum.iter()) {
-            *wi = si / cfg.m as f64;
+            *wi = si / m as f64;
         }
+
+        StepReport { record, converged: false }
     }
 
-    NodeOutput {
-        records: recorder.records,
-        // Every rank holds the same averaged iterate; rank 0 reports it.
-        w_part: if rank == 0 { w } else { Vec::new() },
-        ops: Default::default(),
-        converged,
+    fn save_state(&self, buf: &mut Vec<u8>) {
+        put_vec(buf, &self.w);
+        for word in self.rng.state() {
+            put_u64(buf, word);
+        }
+        put_bool(buf, self.converged);
+        encode_records(buf, &self.recorder.records);
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<(), String> {
+        read_vec_into(r, &mut self.w)?;
+        let state = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+        self.rng = Xoshiro256pp::from_state(state);
+        self.converged = read_bool(r)?;
+        self.recorder.records = decode_records(r)?;
+        Ok(())
+    }
+
+    fn finish(self: Box<Self>) -> NodeOutput {
+        let me = *self;
+        let primary = me.recorder.is_primary();
+        NodeOutput {
+            records: me.recorder.records,
+            // Every rank holds the same averaged iterate; rank 0 reports
+            // it.
+            w_part: if primary { me.w } else { Vec::new() },
+            ops: Default::default(),
+            converged: me.converged,
+        }
     }
 }

@@ -13,131 +13,239 @@
 //! (Alg. 4) to the `d_j×d_j` block built from its feature-slice of the τ
 //! preconditioner samples.
 //!
+//! Implemented as a step-wise [`AlgorithmNode`]: [`Algorithm::setup`] builds
+//! the shard, kernel, and preconditioner factory (costed exactly as the
+//! legacy run-to-completion loop did), and each
+//! per-rank `step` executes one outer iteration — the same compute
+//! segments and collective sequence, so spec-driven sessions are
+//! bit-identical to the pre-redesign runs under
+//! [`crate::net::ComputeModel::Modeled`].
+//!
 //! All node compute runs through `ctx.compute_costed` with flop
 //! estimates, so under [`crate::net::ComputeModel::Modeled`] the
 //! simulated timeline is bit-identical across runs. On heterogeneous
-//! fleets ([`RunConfig::speeds`]) the `weighted_partition` knob sizes the
+//! fleets (`sim.speeds`) the `weighted_partition` knob sizes the
 //! feature shards by modeled row work ∝ node speed
 //! ([`Partition::by_features_cost_balanced_weighted`]), equalizing
 //! work ÷ speed.
 
-use crate::algorithms::common::{
-    damped_scale, forcing, hessian_scalings, precond_columns, HessianSubsample, Recorder,
-};
-use crate::algorithms::{assemble, NodeOutput, OpCounts, RunConfig, RunResult};
+use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, StepReport};
+use crate::algorithms::common::{damped_scale, forcing, hessian_scalings, precond_columns};
+use crate::algorithms::common::{decode_ops, decode_records, encode_ops, encode_records};
+use crate::algorithms::common::{put_bool, put_vec, read_bool, read_vec_into};
+use crate::algorithms::common::{HessianSubsample, Recorder};
+use crate::algorithms::spec::{DiscoParams, RunSpec};
+use crate::algorithms::{AlgoKind, NodeOutput, OpCounts};
 use crate::data::{Dataset, Partition};
-use crate::linalg::{ops, HvpKernel};
+use crate::linalg::{ops, DataMatrix, HvpKernel};
 use crate::loss::Loss;
 use crate::net::Collectives;
 use crate::solvers::woodbury::{Woodbury, WoodburyFactory};
+use crate::util::bytes::{put_u64, ByteReader};
 
-fn make_partition(ds: &Dataset, cfg: &RunConfig) -> Partition {
+fn make_partition(ds: &Dataset, spec: &RunSpec, p: &DiscoParams) -> Partition {
     // Per PCG step a feature row costs its nnz (HVP) plus ≈2τ flops of
     // Woodbury apply and ~10 flops of vector updates.
-    let row_overhead = 2.0 * cfg.tau as f64 + 10.0;
-    match cfg.partition_speeds() {
+    let row_overhead = 2.0 * p.tau as f64 + 10.0;
+    match spec.sim.partition_speeds() {
         // Heterogeneous fleet: equalize modeled work ÷ speed.
         Some(speeds) => Partition::by_features_cost_balanced_weighted(ds, speeds, row_overhead),
-        None if cfg.balanced_partition => {
-            Partition::by_features_cost_balanced(ds, cfg.m, row_overhead)
+        None if p.balanced_partition => {
+            Partition::by_features_cost_balanced(ds, spec.sim.m, row_overhead)
         }
-        None => Partition::by_features(ds, cfg.m),
+        None => Partition::by_features(ds, spec.sim.m),
     }
 }
 
-pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
-    let partition = make_partition(ds, cfg);
-    let n = ds.nsamples();
-    let loss = cfg.loss.make();
-    let subsample = HessianSubsample {
-        fraction: cfg.hessian_fraction,
-        seed: cfg.seed,
-    };
+/// The DiSCO-F algorithm (factory for per-rank `DiscoFNode` state).
+pub struct DiscoF;
 
-    let cluster = cfg.cluster();
-    let run = cluster.run(|ctx| node_main(ctx, &partition, loss.as_ref(), cfg, &subsample, n));
-    assemble(cfg.algo, run)
+impl<C: Collectives> Algorithm<C> for DiscoF {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::DiscoF
+    }
+
+    fn setup(&self, ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Box<dyn AlgorithmNode<C>> {
+        Box::new(DiscoFNode::new(ctx, ds, spec))
+    }
 }
 
-/// Per-rank entry over any collective backend (multi-process runs).
-pub(crate) fn node_run<C: Collectives>(ctx: &mut C, ds: &Dataset, cfg: &RunConfig) -> NodeOutput {
-    let partition = make_partition(ds, cfg);
-    let loss = cfg.loss.make();
-    let subsample = HessianSubsample {
-        fraction: cfg.hessian_fraction,
-        seed: cfg.seed,
-    };
-    node_main(ctx, &partition, loss.as_ref(), cfg, &subsample, ds.nsamples())
-}
-
-#[allow(clippy::too_many_arguments)]
-fn node_main<C: Collectives>(
-    ctx: &mut C,
-    partition: &Partition,
-    loss: &dyn Loss,
-    cfg: &RunConfig,
-    subsample: &HessianSubsample,
+/// One rank's DiSCO-F state: its feature shard, the fused HVP kernel, the
+/// Woodbury factory for its preconditioner block, the iterate slice, and
+/// every PCG buffer (allocated once, reused each step).
+struct DiscoFNode {
+    // -- problem data / derived (rebuilt on restore, never serialized) --
+    x: DataMatrix,
+    y: Vec<f64>,
+    loss: Box<dyn Loss>,
+    p: DiscoParams,
+    lambda: f64,
+    m: usize,
+    grad_tol: f64,
+    subsample: HessianSubsample,
     n: usize,
-) -> NodeOutput {
-    let rank = ctx.rank();
-    let shard = &partition.shards[rank];
-    let x = &shard.x; // d_j × n
-    let y = &shard.y; // full labels (replicated)
-    let dj = x.nrows();
-    let nnz = x.nnz() as f64;
-    let djf = dj as f64;
-    let nf = n as f64;
-    let inv_n = 1.0 / n as f64;
+    nnz: f64,
+    djf: f64,
+    nf: f64,
+    inv_n: f64,
+    kernel: HvpKernel,
+    precond_factory: WoodburyFactory,
+    tau_eff: usize,
+    tau_f: f64,
+    // -- evolving solver state (serialized by save_state) --
+    w: Vec<f64>,
+    cached_precond: Option<Woodbury>,
+    recorder: Recorder,
+    ops_count: OpCounts,
+    converged: bool,
+    last_inner: usize,
+    // -- scratch (write-before-read every iteration) --
+    z: Vec<f64>,
+    g_scal: Vec<f64>,
+    grad: Vec<f64>,
+    tn: Vec<f64>,
+    hu: Vec<f64>,
+    r: Vec<f64>,
+    s_dir: Vec<f64>,
+    u: Vec<f64>,
+    v: Vec<f64>,
+    hv: Vec<f64>,
+}
 
-    let mut w = vec![0.0; dj];
-    let mut recorder = Recorder::new(rank);
-    let mut ops_count = OpCounts {
-        dim: dj,
-        ..Default::default()
-    };
-    let mut converged = false;
-    let mut last_inner = 0usize;
+impl DiscoFNode {
+    fn new<C: Collectives>(ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> DiscoFNode {
+        let p = *spec.algo.disco().expect("DiscoF needs DiscoParams");
+        let mut partition = make_partition(ds, spec, &p);
+        let rank = ctx.rank();
+        let shard = partition.shards.swap_remove(rank);
+        drop(partition);
+        let x = shard.x;
+        let y = shard.y; // full labels (replicated)
+        let n = ds.nsamples();
+        let dj = x.nrows();
+        let loss = spec.loss.make();
+        let subsample = HessianSubsample {
+            fraction: p.hessian_fraction,
+            seed: spec.sim.seed,
+        };
+        let nnz = x.nnz() as f64;
+        let djf = dj as f64;
 
-    // §Perf: the preconditioner's τ sample columns and their raw Gram
-    // never change — compute them once (WoodburyFactory); each outer
-    // iteration only rescales + refactors the τ×τ system (O(τ²+τ³/3),
-    // independent of d). With constant curvature (quadratic loss) even
-    // that is skipped after the first iteration. The setup is real
-    // per-node compute, so it runs inside `compute_costed` and lands in
-    // the trace.
-    let precond_factory = ctx.compute_costed("precond_setup", || {
-        let cols = precond_columns(x, cfg.tau);
-        let factory = WoodburyFactory::new(dj, &cols);
-        let tau_f = cols.len() as f64;
-        (factory, tau_f * djf * (1.0 + tau_f))
-    });
-    let tau_eff = precond_factory.rank();
-    let tau_f = tau_eff.max(1) as f64;
-    let mut cached_precond: Option<Woodbury> = None;
+        // §Perf: the preconditioner's τ sample columns and their raw Gram
+        // never change — compute them once (WoodburyFactory); each outer
+        // iteration only rescales + refactors the τ×τ system (O(τ²+τ³/3),
+        // independent of d). With constant curvature (quadratic loss) even
+        // that is skipped after the first iteration. The setup is real
+        // per-node compute, so it runs inside `compute_costed` and lands in
+        // the trace.
+        let precond_factory = ctx.compute_costed("precond_setup", || {
+            let cols = precond_columns(&x, p.tau);
+            let factory = WoodburyFactory::new(dj, &cols);
+            let tau_f = cols.len() as f64;
+            (factory, tau_f * djf * (1.0 + tau_f))
+        });
+        let tau_eff = precond_factory.rank();
+        let tau_f = tau_eff.max(1) as f64;
 
-    // Fused hybrid HVP kernel for this feature slice (d_j × n): the tall
-    // sparse shards of DiSCO-F are exactly where the CSR mirror pays.
-    let kernel = HvpKernel::new(x).with_threads(cfg.node_threads);
+        // Fused hybrid HVP kernel for this feature slice (d_j × n): the
+        // tall sparse shards of DiSCO-F are exactly where the CSR mirror
+        // pays.
+        let kernel = HvpKernel::new(&x).with_threads(spec.sim.node_threads);
 
-    // Preallocated buffers; `z` and `tn` double as ReduceAll buffers.
-    let mut z = vec![0.0; n]; // margins ℝⁿ
-    let mut g_scal = vec![0.0; n];
-    let mut grad = vec![0.0; dj];
-    let mut tn = vec![0.0; n];
-    let mut hu = vec![0.0; dj];
-    let mut r = vec![0.0; dj];
-    let mut s_dir = vec![0.0; dj];
-    let mut u = vec![0.0; dj];
-    let mut v = vec![0.0; dj];
-    let mut hv = vec![0.0; dj];
+        DiscoFNode {
+            y,
+            loss,
+            p,
+            lambda: spec.lambda,
+            m: spec.sim.m,
+            grad_tol: spec.stop.grad_tol,
+            subsample,
+            n,
+            nnz,
+            djf,
+            nf: n as f64,
+            inv_n: 1.0 / n as f64,
+            kernel,
+            precond_factory,
+            tau_eff,
+            tau_f,
+            w: vec![0.0; dj],
+            cached_precond: None,
+            recorder: Recorder::new(rank),
+            ops_count: OpCounts {
+                dim: dj,
+                ..Default::default()
+            },
+            converged: false,
+            last_inner: 0,
+            // Preallocated buffers; `z` and `tn` double as ReduceAll
+            // buffers.
+            z: vec![0.0; n],
+            g_scal: vec![0.0; n],
+            grad: vec![0.0; dj],
+            tn: vec![0.0; n],
+            hu: vec![0.0; dj],
+            r: vec![0.0; dj],
+            s_dir: vec![0.0; dj],
+            u: vec![0.0; dj],
+            v: vec![0.0; dj],
+            hv: vec![0.0; dj],
+            x,
+        }
+    }
+}
 
-    for outer in 0..cfg.max_outer {
+impl<C: Collectives> AlgorithmNode<C> for DiscoFNode {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::DiscoF
+    }
+
+    fn step(&mut self, ctx: &mut C, outer: usize) -> StepReport {
+        // Copy the scalars, then split the borrows field-by-field so the
+        // costed closures can mix them exactly like the legacy loop's
+        // locals did.
+        let (n, nnz, djf, nf, inv_n, m, lambda, grad_tol) = (
+            self.n, self.nnz, self.djf, self.nf, self.inv_n, self.m, self.lambda, self.grad_tol,
+        );
+        let p = self.p;
+        let (tau_eff, tau_f) = (self.tau_eff, self.tau_f);
+        let DiscoFNode {
+            x,
+            y,
+            loss,
+            subsample,
+            kernel,
+            precond_factory,
+            w,
+            cached_precond,
+            recorder,
+            ops_count,
+            converged,
+            last_inner,
+            z,
+            g_scal,
+            grad,
+            tn,
+            hu,
+            r,
+            s_dir,
+            u,
+            v,
+            hv,
+            ..
+        } = self;
+        let x: &DataMatrix = x;
+        let y: &[f64] = y;
+        let loss: &dyn Loss = loss.as_ref();
+        let kernel: &HvpKernel = kernel;
+        let precond_factory: &WoodburyFactory = precond_factory;
+
         // ---- margins: z = Σ_j (X^[j])ᵀ w^[j] — ONE ℝⁿ ReduceAll ----
         ctx.compute_costed("margins", || {
-            kernel.up_plain_into(x, &w, &mut z);
+            kernel.up_plain_into(x, w, z);
             ((), 2.0 * nnz)
         });
-        ctx.reduce_all(&mut z);
+        ctx.reduce_all(z);
 
         // ---- local gradient slice (no communication) ----
         let (gnorm, fval) = ctx.compute_costed("gradient", || {
@@ -146,16 +254,16 @@ fn node_main<C: Collectives>(
             }
             // grad = (1/n)·X g + λw — fused epilogue (CSR gather when
             // mirrored).
-            kernel.down_into(x, &g_scal, inv_n, cfg.lambda, &w, &mut grad);
+            kernel.down_into(x, g_scal, inv_n, lambda, w, grad);
             let data_f: f64 = z
                 .iter()
                 .zip(y.iter())
                 .map(|(zi, yi)| loss.value(*zi, *yi))
                 .sum::<f64>()
                 * inv_n;
-            let fval_piece = data_f / cfg.m as f64 + 0.5 * cfg.lambda * ops::norm2_sq(&w);
+            let fval_piece = data_f / m as f64 + 0.5 * lambda * ops::norm2_sq(w);
             (
-                (ops::norm2_sq(&grad), fval_piece),
+                (ops::norm2_sq(grad), fval_piece),
                 2.0 * nnz + 3.0 * nf + 4.0 * djf,
             )
         });
@@ -165,10 +273,10 @@ fn node_main<C: Collectives>(
 
         // Record the state at w_k against the communication spent to reach
         // it (Fig. 3 pairing).
-        recorder.push(ctx, outer, grad_norm, fval_sum, last_inner);
-        if grad_norm <= cfg.grad_tol {
-            converged = true;
-            break;
+        let record = recorder.push(ctx, outer, grad_norm, fval_sum, *last_inner);
+        if grad_norm <= grad_tol {
+            *converged = true;
+            return StepReport { record, converged: true };
         }
 
         // ---- Hessian scalings + block preconditioner; the mask draw and
@@ -176,20 +284,20 @@ fn node_main<C: Collectives>(
         // iteration, so they are costed like any compute ----
         let (s_hess, div, mask) = ctx.compute_costed("hess_scalings", || {
             let mask = subsample.mask(n, outer);
-            let (s_hess, div) = hessian_scalings(loss, &z, y, mask.as_ref(), n);
+            let (s_hess, div) = hessian_scalings(loss, z, y, mask.as_ref(), n);
             ((s_hess, div, mask), 4.0 * nf)
         });
         let inv_div = 1.0 / div;
         if cached_precond.is_none() || !loss.curvature_is_constant() {
-            cached_precond = Some(ctx.compute_costed("precond_build", || {
+            *cached_precond = Some(ctx.compute_costed("precond_build", || {
                 let weights: Vec<f64> = (0..tau_eff)
                     .map(|i| {
-                        s_hess_at(&s_hess, mask.as_ref(), &z, y, loss, i) / tau_eff.max(1) as f64
+                        s_hess_at(&s_hess, mask.as_ref(), z, y, loss, i) / tau_eff.max(1) as f64
                     })
                     .collect();
                 (
                     precond_factory
-                        .build(&weights, cfg.lambda + cfg.mu)
+                        .build(&weights, lambda + p.mu)
                         .expect("preconditioner factorization failed"),
                     // τ×τ rescale + Cholesky τ³/3.
                     tau_f * tau_f + tau_f * tau_f * tau_f / 3.0,
@@ -199,18 +307,18 @@ fn node_main<C: Collectives>(
         let precond = cached_precond.as_ref().unwrap();
 
         // ---- PCG (Algorithm 3) ----
-        let eps = forcing(grad_norm, cfg.pcg_beta, cfg.grad_tol);
+        let eps = forcing(grad_norm, p.pcg_beta, grad_tol);
         // Initialization (preconditioner apply + the ⟨r,s⟩ / ‖r‖² local
         // products) is real per-node compute — wrapped so the trace's
         // compute totals are exact.
         let (rs_local, rn2_local) = ctx.compute_costed("pcg_init", || {
-            r.copy_from_slice(&grad);
-            ops::zero(&mut v);
-            ops::zero(&mut hv);
-            precond.apply_into(&r, &mut s_dir);
-            u.copy_from_slice(&s_dir);
+            r.copy_from_slice(grad);
+            ops::zero(v);
+            ops::zero(hv);
+            precond.apply_into(r, s_dir);
+            u.copy_from_slice(s_dir);
             (
-                (ops::dot(&r, &s_dir), ops::norm2_sq(&r)),
+                (ops::dot(r, s_dir), ops::norm2_sq(r)),
                 4.0 * djf * tau_f + 6.0 * djf,
             )
         });
@@ -221,22 +329,22 @@ fn node_main<C: Collectives>(
         let mut rnorm = rn2.sqrt();
         let mut pcg_iters = 0usize;
 
-        while rnorm > eps && pcg_iters < cfg.max_pcg {
+        while rnorm > eps && pcg_iters < p.max_pcg {
             // (Hu)^[j]: ReduceAll ℝⁿ of (X^[j])ᵀu^[j], then local products.
             // Up pass writes straight into the reduce buffer; down pass is
             // the fused gather with the (1/h)·(…)+λu epilogue folded in,
             // and the ⟨u,Hu⟩ product rides in the same compute segment.
             ctx.compute_costed("hvp_up", || {
-                kernel.up_plain_into(x, &u, &mut tn);
+                kernel.up_plain_into(x, u, tn);
                 ((), 2.0 * nnz)
             });
-            ctx.reduce_all(&mut tn);
+            ctx.reduce_all(tn);
             let uhu_local = ctx.compute_costed("hvp_down", || {
                 for i in 0..n {
                     tn[i] *= s_hess[i];
                 }
-                kernel.down_into(x, &tn, inv_div, cfg.lambda, &u, &mut hu);
-                (ops::dot(&u, &hu), nf + 2.0 * nnz + 4.0 * djf)
+                kernel.down_into(x, tn, inv_div, lambda, u, hu);
+                (ops::dot(u, hu), nf + 2.0 * nnz + 4.0 * djf)
             });
             ops_count.hvp += 1;
 
@@ -256,12 +364,12 @@ fn node_main<C: Collectives>(
             // Vector updates + preconditioner apply + the β-numerator /
             // residual-norm products, one costed segment.
             let (rs_new_local, rn2_local) = ctx.compute_costed("pcg_update", || {
-                ops::axpy(alpha, &u, &mut v);
-                ops::axpy(alpha, &hu, &mut hv);
-                ops::axpy(-alpha, &hu, &mut r);
-                precond.apply_into(&r, &mut s_dir);
+                ops::axpy(alpha, u, v);
+                ops::axpy(alpha, hu, hv);
+                ops::axpy(-alpha, hu, r);
+                precond.apply_into(r, s_dir);
                 (
-                    (ops::dot(&r, &s_dir), ops::norm2_sq(&r)),
+                    (ops::dot(r, s_dir), ops::norm2_sq(r)),
                     4.0 * djf * tau_f + 10.0 * djf,
                 )
             });
@@ -286,31 +394,76 @@ fn node_main<C: Collectives>(
             let beta = rs_new / rs;
             rs = rs_new;
             ctx.compute_costed("dir_update", || {
-                ops::axpby(1.0, &s_dir, beta, &mut u);
+                ops::axpby(1.0, s_dir, beta, u);
                 ((), 3.0 * djf)
             });
             ops_count.axpy += 1;
         }
 
         // ---- damped step: δ² = Σ_j ⟨v,Hv⟩ (scalar), local update ----
-        let vhv_local = ctx.compute_costed("vhv", || (ops::dot(&v, &hv), 2.0 * djf));
+        let vhv_local = ctx.compute_costed("vhv", || (ops::dot(v, hv), 2.0 * djf));
         let vhv = ctx.reduce_all_scalar(vhv_local);
         ops_count.dot += 1;
         let scale = damped_scale(vhv);
         ctx.compute_costed("step", || {
-            ops::axpy(-scale, &v, &mut w);
+            ops::axpy(-scale, v, w);
             ((), 2.0 * djf)
         });
         ops_count.axpy += 1;
-        last_inner = pcg_iters;
+        *last_inner = pcg_iters;
+
+        StepReport { record, converged: false }
     }
 
-    NodeOutput {
-        records: recorder.records,
-        // Every rank owns its feature slice of the iterate.
-        w_part: w,
-        ops: ops_count,
-        converged,
+    fn save_state(&self, buf: &mut Vec<u8>) {
+        put_vec(buf, &self.w);
+        put_bool(buf, self.cached_precond.is_some());
+        put_bool(buf, self.converged);
+        put_u64(buf, self.last_inner as u64);
+        encode_ops(buf, &self.ops_count);
+        encode_records(buf, &self.recorder.records);
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<(), String> {
+        read_vec_into(r, &mut self.w)?;
+        let precond_built = read_bool(r)?;
+        self.converged = read_bool(r)?;
+        self.last_inner = r.u64()? as usize;
+        self.ops_count = decode_ops(r)?;
+        self.recorder.records = decode_records(r)?;
+        // The preconditioner itself is derived state. With constant
+        // curvature (quadratic loss) the uninterrupted run built — and
+        // costed — it exactly once, at outer 0; rebuild it here *without*
+        // costing (the restored clock already accounts for that build).
+        // With margin-dependent curvature the cached factorization is
+        // rebuilt (and costed) at the top of every step anyway, matching
+        // the uninterrupted sequence, so `None` is correct.
+        self.cached_precond = None;
+        if precond_built && self.loss.curvature_is_constant() {
+            let tau_eff = self.tau_eff;
+            // curvature_is_constant ⇒ φ'' ignores the margin; z = 0 gives
+            // the identical weight bits the original build used.
+            let weights: Vec<f64> = (0..tau_eff)
+                .map(|i| self.loss.second_deriv(0.0, self.y[i]) / tau_eff.max(1) as f64)
+                .collect();
+            self.cached_precond = Some(
+                self.precond_factory
+                    .build(&weights, self.lambda + self.p.mu)
+                    .map_err(|e| format!("preconditioner rebuild failed: {e:?}"))?,
+            );
+        }
+        Ok(())
+    }
+
+    fn finish(self: Box<Self>) -> NodeOutput {
+        let me = *self;
+        NodeOutput {
+            records: me.recorder.records,
+            // Every rank owns its feature slice of the iterate.
+            w_part: me.w,
+            ops: me.ops_count,
+            converged: me.converged,
+        }
     }
 }
 

@@ -22,18 +22,29 @@
 //!   the paper's §5.2): same `P`, but `P s = r` is solved *iteratively by
 //!   SAG on the master* at every PCG step, serializing a large fraction of
 //!   each step (the >50 % figure in §1.2).
+//!
+//! Both are step-wise [`AlgorithmNode`]s ([`DiscoS`] / [`DiscoOrig`]
+//! factories): one per-rank `step` = one outer iteration with the
+//! exact compute/collective sequence of the legacy run-to-completion
+//! loop. Checkpoints serialize the iterate, the master's SAG
+//! preconditioner stream (the only RNG that persists across outer
+//! iterations — it lives as long as the cached factorization, i.e. only
+//! under constant curvature), and the metric records.
 
-use crate::algorithms::common::{
-    damped_scale, forcing, hessian_scalings, precond_columns, sample_partition, HessianSubsample,
-    Recorder,
-};
-use crate::algorithms::{assemble, NodeOutput, OpCounts, RunConfig, RunResult};
-use crate::data::{Dataset, Partition};
-use crate::linalg::{ops, HvpKernel};
+use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, StepReport};
+use crate::algorithms::common::{damped_scale, forcing, hessian_scalings, precond_columns};
+use crate::algorithms::common::{decode_ops, decode_records, encode_ops, encode_records};
+use crate::algorithms::common::{put_bool, put_vec, read_bool, read_vec_into, sample_partition};
+use crate::algorithms::common::{HessianSubsample, Recorder};
+use crate::algorithms::spec::{DiscoParams, RunSpec, SagParams};
+use crate::algorithms::{AlgoKind, AlgoParams, NodeOutput, OpCounts};
+use crate::data::Dataset;
+use crate::linalg::{ops, DataMatrix, HvpKernel};
 use crate::loss::Loss;
 use crate::net::Collectives;
 use crate::solvers::sag;
 use crate::solvers::woodbury::{Woodbury, WoodburyFactory};
+use crate::util::bytes::{put_u64, put_u8, ByteReader};
 use crate::util::prng::Xoshiro256pp;
 
 /// Master preconditioner strategy.
@@ -43,36 +54,30 @@ pub enum Precond {
     MasterSag,
 }
 
-pub fn run(ds: &Dataset, cfg: &RunConfig, precond: Precond) -> RunResult {
-    let partition = sample_partition(ds, cfg);
-    let loss = cfg.loss.make();
-    let n = ds.nsamples();
-    let subsample = HessianSubsample {
-        fraction: cfg.hessian_fraction,
-        seed: cfg.seed,
-    };
+/// The DiSCO-S algorithm (Woodbury master preconditioner).
+pub struct DiscoS;
 
-    let cluster = cfg.cluster();
-    let run = cluster.run(|ctx| {
-        node_main(ctx, &partition, loss.as_ref(), cfg, &subsample, n, precond)
-    });
-    assemble(cfg.algo, run)
+impl<C: Collectives> Algorithm<C> for DiscoS {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::DiscoS
+    }
+
+    fn setup(&self, ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Box<dyn AlgorithmNode<C>> {
+        Box::new(DiscoSNode::new(ctx, ds, spec, Precond::Woodbury))
+    }
 }
 
-/// Per-rank entry over any collective backend (multi-process runs).
-pub(crate) fn node_run<C: Collectives>(
-    ctx: &mut C,
-    ds: &Dataset,
-    cfg: &RunConfig,
-    precond: Precond,
-) -> NodeOutput {
-    let partition = sample_partition(ds, cfg);
-    let loss = cfg.loss.make();
-    let subsample = HessianSubsample {
-        fraction: cfg.hessian_fraction,
-        seed: cfg.seed,
-    };
-    node_main(ctx, &partition, loss.as_ref(), cfg, &subsample, ds.nsamples(), precond)
+/// The original DiSCO baseline (master-only SAG preconditioner solve).
+pub struct DiscoOrig;
+
+impl<C: Collectives> Algorithm<C> for DiscoOrig {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::DiscoOrig
+    }
+
+    fn setup(&self, ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Box<dyn AlgorithmNode<C>> {
+        Box::new(DiscoSNode::new(ctx, ds, spec, Precond::MasterSag))
+    }
 }
 
 /// Master-side preconditioner: either a factored Woodbury or the SAG
@@ -125,104 +130,247 @@ impl MasterPrecond {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn node_main<C: Collectives>(
-    ctx: &mut C,
-    partition: &Partition,
-    loss: &dyn Loss,
-    cfg: &RunConfig,
-    subsample: &HessianSubsample,
-    n: usize,
+const MASTER: usize = 0;
+
+/// One rank's DiSCO-S / original-DiSCO state.
+struct DiscoSNode {
+    kind: AlgoKind,
     precond_kind: Precond,
-) -> NodeOutput {
-    const MASTER: usize = 0;
-    let rank = ctx.rank();
-    let shard = &partition.shards[rank];
-    let x = &shard.x; // d × n_j
-    let y = &shard.y;
-    let d = x.nrows();
-    let n_local = x.ncols();
-    let nnz = x.nnz() as f64;
-    let df = d as f64;
-    let is_master = rank == MASTER;
-    // Global sample offset of this shard (for the subsample mask).
-    let offset = shard.range.0;
+    // -- problem data / derived (rebuilt on restore) --
+    x: DataMatrix,
+    y: Vec<f64>,
+    loss: Box<dyn Loss>,
+    p: DiscoParams,
+    sag_params: SagParams,
+    lambda: f64,
+    grad_tol: f64,
+    seed: u64,
+    subsample: HessianSubsample,
+    n: usize,
+    d: usize,
+    n_local: usize,
+    nnz: f64,
+    df: f64,
+    is_master: bool,
+    /// Global sample offset of this shard (for the subsample mask).
+    offset: usize,
+    precond_cols: Vec<Vec<f64>>,
+    precond_factory: Option<WoodburyFactory>,
+    tau_eff: usize,
+    hvp_kernel: HvpKernel,
+    // -- evolving solver state (serialized) --
+    w: Vec<f64>,
+    cached_precond: Option<MasterPrecond>,
+    recorder: Recorder,
+    ops_count: OpCounts,
+    converged: bool,
+    last_inner: usize,
+    // -- scratch (write-before-read each iteration; `ubuf` is sourced from
+    // the broadcast root, so its stale content is never observed) --
+    z: Vec<f64>,
+    g_scal: Vec<f64>,
+    tn: Vec<f64>,
+    hu: Vec<f64>,
+    grad: Vec<f64>,
+    ubuf: Vec<f64>,
+    r: Vec<f64>,
+    s_dir: Vec<f64>,
+    u: Vec<f64>,
+    v: Vec<f64>,
+    hv: Vec<f64>,
+}
 
-    let mut w = vec![0.0; d];
-    let mut recorder = Recorder::new(rank);
-    let mut ops_count = OpCounts {
-        dim: d,
-        ..Default::default()
-    };
-    let mut converged = false;
-    let mut last_inner = 0usize;
+impl DiscoSNode {
+    fn new<C: Collectives>(
+        ctx: &mut C,
+        ds: &Dataset,
+        spec: &RunSpec,
+        precond_kind: Precond,
+    ) -> DiscoSNode {
+        let p = *spec.algo.disco().expect("DiscoS needs DiscoParams");
+        let sag_params = match &spec.algo {
+            AlgoParams::DiscoOrig(_, sag) => *sag,
+            _ => SagParams::default(),
+        };
+        let mut partition = sample_partition(ds, spec.sim.m, spec.sim.partition_speeds());
+        let rank = ctx.rank();
+        let shard = partition.shards.swap_remove(rank);
+        drop(partition);
+        let x = shard.x; // d × n_j
+        let y = shard.y;
+        let n = ds.nsamples();
+        let d = x.nrows();
+        let n_local = x.ncols();
+        let df = d as f64;
+        let is_master = rank == MASTER;
+        let loss = spec.loss.make();
+        let subsample = HessianSubsample {
+            fraction: p.hessian_fraction,
+            seed: spec.sim.seed,
+        };
 
-    // §Perf: densify the master's τ preconditioner columns (and for the
-    // Woodbury path, their raw Gram) once; per outer iteration only the
-    // τ×τ rescale+refactor runs. With constant curvature (quadratic loss)
-    // even that is skipped after the first iteration. This is master-only
-    // serial work, so it runs inside `compute_costed` — it belongs to the
-    // Fig. 2 serial fraction.
-    let (precond_cols, precond_factory) = if is_master {
-        ctx.compute_costed("precond_setup", || {
-            let cols = precond_columns(x, cfg.tau);
-            let tau_f = cols.len() as f64;
-            let factory = if precond_kind == Precond::Woodbury {
-                Some(WoodburyFactory::new(d, &cols))
+        // §Perf: densify the master's τ preconditioner columns (and for the
+        // Woodbury path, their raw Gram) once; per outer iteration only the
+        // τ×τ rescale+refactor runs. With constant curvature (quadratic
+        // loss) even that is skipped after the first iteration. This is
+        // master-only serial work, so it runs inside `compute_costed` — it
+        // belongs to the Fig. 2 serial fraction.
+        let (precond_cols, precond_factory) = if is_master {
+            ctx.compute_costed("precond_setup", || {
+                let cols = precond_columns(&x, p.tau);
+                let tau_f = cols.len() as f64;
+                let factory = if precond_kind == Precond::Woodbury {
+                    Some(WoodburyFactory::new(d, &cols))
+                } else {
+                    None
+                };
+                // Column densify O(τ·d) plus the τ×τ Gram O(τ²·d) when
+                // built.
+                let flops = tau_f * df * if factory.is_some() { 1.0 + tau_f } else { 1.0 };
+                ((cols, factory), flops)
+            })
+        } else {
+            (Vec::new(), None)
+        };
+        let tau_eff = precond_cols.len();
+
+        // Fused hybrid HVP kernel for this shard (CSR mirror per
+        // heuristic), built once and reused by every PCG step of every
+        // outer iteration.
+        let hvp_kernel = HvpKernel::new(&x).with_threads(spec.sim.node_threads);
+
+        DiscoSNode {
+            kind: if precond_kind == Precond::Woodbury {
+                AlgoKind::DiscoS
             } else {
-                None
-            };
-            // Column densify O(τ·d) plus the τ×τ Gram O(τ²·d) when built.
-            let flops = tau_f * df * if factory.is_some() { 1.0 + tau_f } else { 1.0 };
-            ((cols, factory), flops)
-        })
-    } else {
-        (Vec::new(), None)
-    };
-    let tau_eff = precond_cols.len();
-    let mut cached_precond: Option<MasterPrecond> = None;
+                AlgoKind::DiscoOrig
+            },
+            precond_kind,
+            y,
+            loss,
+            p,
+            sag_params,
+            lambda: spec.lambda,
+            grad_tol: spec.stop.grad_tol,
+            seed: spec.sim.seed,
+            subsample,
+            n,
+            d,
+            n_local,
+            nnz: x.nnz() as f64,
+            df,
+            is_master,
+            offset: shard.range.0,
+            precond_cols,
+            precond_factory,
+            tau_eff,
+            hvp_kernel,
+            w: vec![0.0; d],
+            cached_precond: None,
+            recorder: Recorder::new(rank),
+            ops_count: OpCounts {
+                dim: d,
+                ..Default::default()
+            },
+            converged: false,
+            last_inner: 0,
+            z: vec![0.0; n_local],
+            g_scal: vec![0.0; n_local],
+            tn: vec![0.0; n_local],
+            // HVP output; doubles as the ReduceAll buffer (summed in
+            // place).
+            hu: vec![0.0; d],
+            grad: vec![0.0; d],
+            // Broadcast buffer for u_t plus the continue flag (d+1
+            // doubles).
+            ubuf: vec![0.0; d + 1],
+            // Master-only PCG state (allocated on all ranks for
+            // simplicity; workers never touch it).
+            r: vec![0.0; d],
+            s_dir: vec![0.0; d],
+            u: vec![0.0; d],
+            v: vec![0.0; d],
+            hv: vec![0.0; d],
+            x,
+        }
+    }
+}
 
-    // Fused hybrid HVP kernel for this shard (CSR mirror per heuristic),
-    // built once and reused by every PCG step of every outer iteration.
-    let hvp_kernel = HvpKernel::new(x).with_threads(cfg.node_threads);
+impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
+    fn kind(&self) -> AlgoKind {
+        self.kind
+    }
 
-    let mut z = vec![0.0; n_local];
-    let mut g_scal = vec![0.0; n_local];
-    let mut tn = vec![0.0; n_local];
-    // HVP output; doubles as the ReduceAll buffer (summed in place).
-    let mut hu = vec![0.0; d];
-    let mut grad = vec![0.0; d];
-    // Broadcast buffer for u_t plus the continue flag (d+1 doubles).
-    let mut ubuf = vec![0.0; d + 1];
-    // Master-only PCG state (allocated on all ranks for simplicity; workers
-    // never touch it).
-    let mut r = vec![0.0; d];
-    let mut s_dir = vec![0.0; d];
-    let mut u = vec![0.0; d];
-    let mut v = vec![0.0; d];
-    let mut hv = vec![0.0; d];
+    fn step(&mut self, ctx: &mut C, outer: usize) -> StepReport {
+        let (n, d, n_local, nnz, df, is_master, offset, lambda, grad_tol, seed, tau_eff) = (
+            self.n,
+            self.d,
+            self.n_local,
+            self.nnz,
+            self.df,
+            self.is_master,
+            self.offset,
+            self.lambda,
+            self.grad_tol,
+            self.seed,
+            self.tau_eff,
+        );
+        let p = self.p;
+        let sag_params = self.sag_params;
+        let precond_kind = self.precond_kind;
+        let DiscoSNode {
+            x,
+            y,
+            loss,
+            subsample,
+            precond_cols,
+            precond_factory,
+            hvp_kernel,
+            w,
+            cached_precond,
+            recorder,
+            ops_count,
+            converged,
+            last_inner,
+            z,
+            g_scal,
+            tn,
+            hu,
+            grad,
+            ubuf,
+            r,
+            s_dir,
+            u,
+            v,
+            hv,
+            ..
+        } = self;
+        let x: &DataMatrix = x;
+        let y: &[f64] = y;
+        let loss: &dyn Loss = loss.as_ref();
+        let hvp_kernel: &HvpKernel = hvp_kernel;
 
-    for outer in 0..cfg.max_outer {
         // ---- Broadcast w_k from master (paper's flow; 1 ℝᵈ round) ----
         let mut wbuf = if is_master { w.clone() } else { vec![0.0; d] };
         ctx.broadcast(MASTER, &mut wbuf);
-        w = wbuf;
+        *w = wbuf;
 
         // ---- local gradient + ReduceAll (1 ℝᵈ round) ----
         ctx.compute_costed("gradient", || {
-            x.at_mul_into(&w, &mut z);
+            x.at_mul_into(w, z);
             for i in 0..n_local {
                 g_scal[i] = loss.deriv(z[i], y[i]);
             }
-            x.a_mul_into(&g_scal, &mut grad);
-            ops::scale(1.0 / n as f64, &mut grad);
+            x.a_mul_into(g_scal, grad);
+            ops::scale(1.0 / n as f64, grad);
             ((), 4.0 * nnz + n_local as f64 + df)
         });
-        ctx.reduce_all(&mut grad);
-        ops::axpy(cfg.lambda, &w, &mut grad); // every node adds λw
+        ctx.reduce_all(grad);
+        ops::axpy(lambda, w, grad); // every node adds λw
 
-        let grad_norm = ops::norm2(&grad);
-        // Objective value (metrics channel: data terms summed, ‖w‖² global).
+        let grad_norm = ops::norm2(grad);
+        // Objective value (metrics channel: data terms summed, ‖w‖²
+        // global).
         let data_f: f64 = z
             .iter()
             .zip(y.iter())
@@ -231,12 +379,12 @@ fn node_main<C: Collectives>(
             / n as f64;
         let mut fv = vec![data_f];
         ctx.metric_reduce_all(&mut fv);
-        let fval = fv[0] + 0.5 * cfg.lambda * ops::norm2_sq(&w);
+        let fval = fv[0] + 0.5 * lambda * ops::norm2_sq(w);
 
-        recorder.push(ctx, outer, grad_norm, fval, last_inner);
-        if grad_norm <= cfg.grad_tol {
-            converged = true;
-            break;
+        let record = recorder.push(ctx, outer, grad_norm, fval, *last_inner);
+        if grad_norm <= grad_tol {
+            *converged = true;
+            return StepReport { record, converged: true };
         }
 
         // ---- Hessian scalings (shard-local slice of the global mask);
@@ -244,11 +392,11 @@ fn node_main<C: Collectives>(
         // O(n_local) curvature sweep), so it is costed like any compute ----
         let (s_hess, div) = ctx.compute_costed("hess_scalings", || {
             let mask_global = subsample.mask(n, outer);
-            let local_mask = mask_global.as_ref().map(|(m, h)| {
-                (m[offset..offset + n_local].to_vec(), *h)
-            });
+            let local_mask = mask_global
+                .as_ref()
+                .map(|(mask, h)| (mask[offset..offset + n_local].to_vec(), *h));
             (
-                hessian_scalings(loss, &z, y, local_mask.as_ref(), n),
+                hessian_scalings(loss, z, y, local_mask.as_ref(), n),
                 n as f64 + 3.0 * n_local as f64,
             )
         });
@@ -256,7 +404,7 @@ fn node_main<C: Collectives>(
 
         // ---- master builds (or reuses) its preconditioner ----
         if is_master && (cached_precond.is_none() || !loss.curvature_is_constant()) {
-            cached_precond = Some(ctx.compute_costed("precond_build", || {
+            *cached_precond = Some(ctx.compute_costed("precond_build", || {
                 let tau_f = tau_eff.max(1) as f64;
                 let weights: Vec<f64> = (0..tau_eff)
                     .map(|i| loss.second_deriv(z[i], y[i]) / tau_eff.max(1) as f64)
@@ -267,7 +415,7 @@ fn node_main<C: Collectives>(
                             precond_factory
                                 .as_ref()
                                 .unwrap()
-                                .build(&weights, cfg.lambda + cfg.mu)
+                                .build(&weights, lambda + p.mu)
                                 .expect("preconditioner factorization failed"),
                         ),
                         // τ×τ rescale + Cholesky τ³/3.
@@ -281,10 +429,10 @@ fn node_main<C: Collectives>(
                         MasterPrecond::Sag {
                             columns: precond_cols.clone(),
                             weights,
-                            dreg: cfg.lambda + cfg.mu,
-                            tol_factor: cfg.sag_inner_tol,
-                            max_epochs: cfg.sag_max_epochs,
-                            rng: Xoshiro256pp::seed_from_u64(cfg.seed ^ 0xABCD ^ outer as u64),
+                            dreg: lambda + p.mu,
+                            tol_factor: sag_params.inner_tol,
+                            max_epochs: sag_params.max_epochs,
+                            rng: Xoshiro256pp::seed_from_u64(seed ^ 0xABCD ^ outer as u64),
                             passes: 0,
                         },
                         // Column-table clone O(τ·d).
@@ -301,7 +449,7 @@ fn node_main<C: Collectives>(
         };
 
         // ---- PCG loop (Algorithm 2); master drives, workers serve HVPs --
-        let eps = forcing(grad_norm, cfg.pcg_beta, cfg.grad_tol);
+        let eps = forcing(grad_norm, p.pcg_beta, grad_tol);
         let mut rnorm = f64::INFINITY;
         let mut rs = 0.0;
         if is_master {
@@ -311,13 +459,13 @@ fn node_main<C: Collectives>(
             // leak out of the compute accounting, understating the serial
             // fraction).
             let (rs0, rn0) = ctx.compute_costed("pcg_init", || {
-                r.copy_from_slice(&grad);
-                ops::zero(&mut v);
-                ops::zero(&mut hv);
-                let pf = precond.apply(&r, &mut s_dir);
-                u.copy_from_slice(&s_dir);
-                let rn0 = ops::norm2(&r);
-                let rs0 = ops::dot(&r, &s_dir);
+                r.copy_from_slice(grad);
+                ops::zero(v);
+                ops::zero(hv);
+                let pf = precond.apply(r, s_dir);
+                u.copy_from_slice(s_dir);
+                let rn0 = ops::norm2(r);
+                let rs0 = ops::dot(r, s_dir);
                 ((rs0, rn0), pf + 6.0 * df)
             });
             rs = rs0;
@@ -334,15 +482,15 @@ fn node_main<C: Collectives>(
             // Master decides continuation; flag rides with the broadcast of
             // u (d+1 doubles — one ℝᵈ-sized round, paper Table 4).
             let cont = if is_master {
-                !breakdown && rnorm > eps && pcg_iters < cfg.max_pcg
+                !breakdown && rnorm > eps && pcg_iters < p.max_pcg
             } else {
                 false
             };
             if is_master {
-                ubuf[..d].copy_from_slice(&u);
+                ubuf[..d].copy_from_slice(u);
                 ubuf[d] = if cont { 1.0 } else { 0.0 };
             }
-            ctx.broadcast(MASTER, &mut ubuf);
+            ctx.broadcast(MASTER, ubuf);
             let cont = ubuf[d] > 0.5;
             if !cont {
                 break;
@@ -353,18 +501,18 @@ fn node_main<C: Collectives>(
             // one fused two-sweep kernel call, scratch reused across
             // iterations, `hu` doubling as the ReduceAll buffer.
             ctx.compute_costed("hvp", || {
-                hvp_kernel.apply(x, &s_hess, u_t, inv_div, 0.0, &mut tn, &mut hu);
+                hvp_kernel.apply(x, &s_hess, u_t, inv_div, 0.0, tn, hu);
                 ((), 4.0 * nnz + 2.0 * df)
             });
             ops_count.hvp += 1;
-            ctx.reduce_all(&mut hu);
+            ctx.reduce_all(hu);
 
             // Master-only vector operations (workers fall through to the
             // next broadcast and wait — idle time in the Fig. 2 sense).
             if is_master {
                 let completed = ctx.compute_costed("pcg_update", || {
-                    ops::axpy(cfg.lambda, u_t, &mut hu); // + λu
-                    let uhu = ops::dot(u_t, &hu);
+                    ops::axpy(lambda, u_t, hu); // + λu
+                    let uhu = ops::dot(u_t, hu);
                     if uhu <= 0.0 {
                         // Curvature vanished along u — α = rs/uhu would
                         // poison the iterate (same guard as `pcg_into`).
@@ -372,12 +520,12 @@ fn node_main<C: Collectives>(
                         return (false, 4.0 * df);
                     }
                     let alpha = rs / uhu;
-                    ops::axpy(alpha, u_t, &mut v);
-                    ops::axpy(alpha, &hu, &mut hv);
-                    ops::axpy(-alpha, &hu, &mut r);
-                    let pf = precond.apply(&r, &mut s_dir);
-                    let rs_new = ops::dot(&r, &s_dir);
-                    rnorm = ops::norm2(&r);
+                    ops::axpy(alpha, u_t, v);
+                    ops::axpy(alpha, hu, hv);
+                    ops::axpy(-alpha, hu, r);
+                    let pf = precond.apply(r, s_dir);
+                    let rs_new = ops::dot(r, s_dir);
+                    rnorm = ops::norm2(r);
                     if rs_new == 0.0 {
                         // β = rs_new/rs would be 0/0 next step — stop
                         // cleanly with the current iterate.
@@ -386,7 +534,7 @@ fn node_main<C: Collectives>(
                     }
                     let beta = rs_new / rs;
                     rs = rs_new;
-                    ops::axpby(1.0, &s_dir, beta, &mut u);
+                    ops::axpby(1.0, s_dir, beta, u);
                     (true, pf + 17.0 * df)
                 });
                 if completed {
@@ -405,23 +553,109 @@ fn node_main<C: Collectives>(
         // ---- damped step on master ----
         if is_master {
             ctx.compute_costed("step", || {
-                let vhv = ops::dot(&v, &hv);
+                let vhv = ops::dot(v, hv);
                 let scale = damped_scale(vhv);
-                ops::axpy(-scale, &v, &mut w);
+                ops::axpy(-scale, v, w);
                 ((), 4.0 * df)
             });
             ops_count.dot += 1;
             ops_count.axpy += 1;
         }
-        last_inner = pcg_iters;
+        *last_inner = pcg_iters;
+
+        StepReport { record, converged: false }
     }
 
-    NodeOutput {
-        records: recorder.records,
-        // Only the master's iterate is final (workers' w is one broadcast
-        // stale); rank-order concatenation reassembles it.
-        w_part: if is_master { w } else { Vec::new() },
-        ops: ops_count,
-        converged,
+    fn save_state(&self, buf: &mut Vec<u8>) {
+        put_vec(buf, &self.w);
+        // Preconditioner cache tag: 0 = none yet, 1 = Woodbury,
+        // 2 = master SAG (rng stream + pass counter follow), 3 = worker
+        // placeholder. Factorizations/columns are derived state and are
+        // rebuilt on restore.
+        match &self.cached_precond {
+            None => put_u8(buf, 0),
+            Some(MasterPrecond::Woodbury(_)) => put_u8(buf, 1),
+            Some(MasterPrecond::Sag { rng, passes, .. }) => {
+                put_u8(buf, 2);
+                for word in rng.state() {
+                    put_u64(buf, word);
+                }
+                put_u64(buf, *passes as u64);
+            }
+            Some(MasterPrecond::None) => put_u8(buf, 3),
+        }
+        put_bool(buf, self.converged);
+        put_u64(buf, self.last_inner as u64);
+        encode_ops(buf, &self.ops_count);
+        encode_records(buf, &self.recorder.records);
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<(), String> {
+        read_vec_into(r, &mut self.w)?;
+        let tag = r.u8()?;
+        let sag_stream = if tag == 2 {
+            let state = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+            Some((state, r.u64()? as usize))
+        } else {
+            None
+        };
+        self.converged = read_bool(r)?;
+        self.last_inner = r.u64()? as usize;
+        self.ops_count = decode_ops(r)?;
+        self.recorder.records = decode_records(r)?;
+        // Rebuild the cached preconditioner without costing: the cache
+        // only survives an outer iteration under constant curvature, where
+        // the uninterrupted run built (and costed) it exactly once at
+        // outer 0 — the restored clock already covers that. With
+        // margin-dependent curvature the step rebuilds (and costs) it
+        // every iteration, so `None` reproduces the uninterrupted
+        // sequence.
+        self.cached_precond = match tag {
+            0 => None,
+            3 => Some(MasterPrecond::None),
+            1 | 2 if !self.loss.curvature_is_constant() => None,
+            1 | 2 => {
+                let tau_eff = self.tau_eff;
+                // Constant curvature ⇒ φ'' ignores the margin; z = 0
+                // reproduces the original weight bits.
+                let weights: Vec<f64> = (0..tau_eff)
+                    .map(|i| self.loss.second_deriv(0.0, self.y[i]) / tau_eff.max(1) as f64)
+                    .collect();
+                if tag == 1 {
+                    Some(MasterPrecond::Woodbury(
+                        self.precond_factory
+                            .as_ref()
+                            .ok_or("checkpoint has a Woodbury cache on a non-master rank")?
+                            .build(&weights, self.lambda + self.p.mu)
+                            .map_err(|e| format!("preconditioner rebuild failed: {e}"))?,
+                    ))
+                } else {
+                    let (state, passes) = sag_stream.unwrap();
+                    Some(MasterPrecond::Sag {
+                        columns: self.precond_cols.clone(),
+                        weights,
+                        dreg: self.lambda + self.p.mu,
+                        tol_factor: self.sag_params.inner_tol,
+                        max_epochs: self.sag_params.max_epochs,
+                        rng: Xoshiro256pp::from_state(state),
+                        passes,
+                    })
+                }
+            }
+            other => return Err(format!("bad preconditioner tag {other}")),
+        };
+        Ok(())
+    }
+
+    fn finish(self: Box<Self>) -> NodeOutput {
+        let me = *self;
+        NodeOutput {
+            records: me.recorder.records,
+            // Only the master's iterate is final (workers' w is one
+            // broadcast stale); rank-order concatenation reassembles it.
+            w_part: if me.is_master { me.w } else { Vec::new() },
+            ops: me.ops_count,
+            converged: me.converged,
+        }
     }
 }

@@ -5,73 +5,132 @@
 //! simplest possible SPMD program).
 //!
 //! One ℝᵈ ReduceAll per iteration; fixed step 1/L with
-//! `L = smoothness·max‖x‖²/n·n? ` estimated as `smoothness·max_i‖x_i‖² + λ`.
+//! `L = smoothness·max_i‖x_i‖² + λ`.
+//!
+//! Step-wise [`AlgorithmNode`]: the only evolving state is the iterate
+//! (and the metric records), which makes GD the smallest example of the
+//! solver interface.
 
-use crate::algorithms::common::{sample_partition, Recorder};
-use crate::algorithms::{assemble, NodeOutput, RunConfig, RunResult};
-use crate::data::{Dataset, Partition};
-use crate::linalg::ops;
+use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, StepReport};
+use crate::algorithms::common::{decode_records, encode_records, put_bool, put_vec, read_bool};
+use crate::algorithms::common::{read_vec_into, sample_partition, Recorder};
+use crate::algorithms::spec::RunSpec;
+use crate::algorithms::{AlgoKind, NodeOutput};
+use crate::data::Dataset;
+use crate::linalg::{ops, DataMatrix};
 use crate::loss::Loss;
 use crate::net::Collectives;
+use crate::util::bytes::ByteReader;
 
 /// Smoothness estimate: L ≤ φ''max·max‖x_i‖² + λ (margin Hessian bound).
-fn lipschitz(ds: &Dataset, cfg: &RunConfig, loss: &dyn Loss) -> f64 {
+fn lipschitz(ds: &Dataset, lambda: f64, loss: &dyn Loss) -> f64 {
     let n = ds.nsamples();
     let max_norm_sq = (0..n).map(|j| ds.x.col_norm_sq(j)).fold(0.0, f64::max);
-    loss.smoothness() * max_norm_sq + cfg.lambda
+    loss.smoothness() * max_norm_sq + lambda
 }
 
-pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
-    let partition = sample_partition(ds, cfg);
-    let loss = cfg.loss.make();
-    let n = ds.nsamples();
-    let lips = lipschitz(ds, cfg, loss.as_ref());
+/// The GD baseline (factory for per-rank `GdNode` state).
+pub struct Gd;
 
-    let cluster = cfg.cluster();
-    let run = cluster.run(|ctx| node_main(ctx, &partition, loss.as_ref(), cfg, n, lips));
-    assemble(cfg.algo, run)
+impl<C: Collectives> Algorithm<C> for Gd {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::Gd
+    }
+
+    fn setup(&self, ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Box<dyn AlgorithmNode<C>> {
+        Box::new(GdNode::new(ctx.rank(), ds, spec))
+    }
 }
 
-/// Per-rank entry over any collective backend (multi-process runs).
-pub(crate) fn node_run<C: Collectives>(ctx: &mut C, ds: &Dataset, cfg: &RunConfig) -> NodeOutput {
-    let partition = sample_partition(ds, cfg);
-    let loss = cfg.loss.make();
-    let lips = lipschitz(ds, cfg, loss.as_ref());
-    node_main(ctx, &partition, loss.as_ref(), cfg, ds.nsamples(), lips)
-}
-
-fn node_main<C: Collectives>(
-    ctx: &mut C,
-    partition: &Partition,
-    loss: &dyn Loss,
-    cfg: &RunConfig,
+struct GdNode {
+    x: DataMatrix,
+    y: Vec<f64>,
+    loss: Box<dyn Loss>,
+    lambda: f64,
+    grad_tol: f64,
     n: usize,
-    lips: f64,
-) -> NodeOutput {
-    let rank = ctx.rank();
-    let shard = &partition.shards[rank];
-    let x = &shard.x;
-    let y = &shard.y;
-    let d = x.nrows();
-    let n_local = x.ncols();
-    let nnz = x.nnz() as f64;
-    let step = 1.0 / lips;
+    n_local: usize,
+    d: usize,
+    nnz: f64,
+    /// Fixed 1/L step size.
+    step_size: f64,
+    // -- evolving solver state --
+    w: Vec<f64>,
+    recorder: Recorder,
+    converged: bool,
+    // -- scratch --
+    z: Vec<f64>,
+    g_scal: Vec<f64>,
+    grad: Vec<f64>,
+}
 
-    let mut w = vec![0.0; d];
-    let mut z = vec![0.0; n_local];
-    let mut g_scal = vec![0.0; n_local];
-    let mut grad = vec![0.0; d];
-    let mut recorder = Recorder::new(rank);
-    let mut converged = false;
+impl GdNode {
+    fn new(rank: usize, ds: &Dataset, spec: &RunSpec) -> GdNode {
+        let loss = spec.loss.make();
+        // Uncosted setup, like the legacy driver: the bound is a harness
+        // constant, not part of the algorithm's measured work.
+        let lips = lipschitz(ds, spec.lambda, loss.as_ref());
+        let mut partition = sample_partition(ds, spec.sim.m, spec.sim.partition_speeds());
+        let shard = partition.shards.swap_remove(rank);
+        drop(partition);
+        let x = shard.x;
+        let y = shard.y;
+        let d = x.nrows();
+        let n_local = x.ncols();
 
-    for outer in 0..cfg.max_outer {
+        GdNode {
+            y,
+            loss,
+            lambda: spec.lambda,
+            grad_tol: spec.stop.grad_tol,
+            n: ds.nsamples(),
+            n_local,
+            d,
+            nnz: x.nnz() as f64,
+            step_size: 1.0 / lips,
+            w: vec![0.0; d],
+            recorder: Recorder::new(rank),
+            converged: false,
+            z: vec![0.0; n_local],
+            g_scal: vec![0.0; n_local],
+            grad: vec![0.0; d],
+            x,
+        }
+    }
+}
+
+impl<C: Collectives> AlgorithmNode<C> for GdNode {
+    fn kind(&self) -> AlgoKind {
+        AlgoKind::Gd
+    }
+
+    fn step(&mut self, ctx: &mut C, outer: usize) -> StepReport {
+        let (n, n_local, d, nnz, lambda, grad_tol, step_size) = (
+            self.n, self.n_local, self.d, self.nnz, self.lambda, self.grad_tol, self.step_size,
+        );
+        let GdNode {
+            x,
+            y,
+            loss,
+            w,
+            recorder,
+            converged,
+            z,
+            g_scal,
+            grad,
+            ..
+        } = self;
+        let x: &DataMatrix = x;
+        let y: &[f64] = y;
+        let loss: &dyn Loss = loss.as_ref();
+
         let data_f = ctx.compute_costed("gradient", || {
-            x.at_mul_into(&w, &mut z);
+            x.at_mul_into(w, z);
             for i in 0..n_local {
                 g_scal[i] = loss.deriv(z[i], y[i]);
             }
-            x.a_mul_into(&g_scal, &mut grad);
-            ops::scale(1.0 / n as f64, &mut grad);
+            x.a_mul_into(g_scal, grad);
+            ops::scale(1.0 / n as f64, grad);
             let f: f64 = z
                 .iter()
                 .zip(y.iter())
@@ -79,29 +138,48 @@ fn node_main<C: Collectives>(
                 .sum();
             (f / n as f64, 4.0 * nnz + 2.0 * n_local as f64 + d as f64)
         });
-        ctx.reduce_all(&mut grad);
-        ops::axpy(cfg.lambda, &w, &mut grad);
-        let grad_norm = ops::norm2(&grad);
+        ctx.reduce_all(grad);
+        ops::axpy(lambda, w, grad);
+        let grad_norm = ops::norm2(grad);
         let mut fv = vec![data_f];
         ctx.metric_reduce_all(&mut fv);
-        let fval = fv[0] + 0.5 * cfg.lambda * ops::norm2_sq(&w);
+        let fval = fv[0] + 0.5 * lambda * ops::norm2_sq(w);
 
-        recorder.push(ctx, outer, grad_norm, fval, 0);
-        if grad_norm <= cfg.grad_tol {
-            converged = true;
-            break;
+        let record = recorder.push(ctx, outer, grad_norm, fval, 0);
+        if grad_norm <= grad_tol {
+            *converged = true;
+            return StepReport { record, converged: true };
         }
         ctx.compute_costed("step", || {
-            ops::axpy(-step, &grad, &mut w);
+            ops::axpy(-step_size, grad, w);
             ((), 2.0 * d as f64)
         });
+
+        StepReport { record, converged: false }
     }
 
-    NodeOutput {
-        records: recorder.records,
-        // Every rank holds the same iterate; rank 0 reports it.
-        w_part: if rank == 0 { w } else { Vec::new() },
-        ops: Default::default(),
-        converged,
+    fn save_state(&self, buf: &mut Vec<u8>) {
+        put_vec(buf, &self.w);
+        put_bool(buf, self.converged);
+        encode_records(buf, &self.recorder.records);
+    }
+
+    fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<(), String> {
+        read_vec_into(r, &mut self.w)?;
+        self.converged = read_bool(r)?;
+        self.recorder.records = decode_records(r)?;
+        Ok(())
+    }
+
+    fn finish(self: Box<Self>) -> NodeOutput {
+        let me = *self;
+        let primary = me.recorder.is_primary();
+        NodeOutput {
+            records: me.recorder.records,
+            // Every rank holds the same iterate; rank 0 reports it.
+            w_part: if primary { me.w } else { Vec::new() },
+            ops: Default::default(),
+            converged: me.converged,
+        }
     }
 }

@@ -1,5 +1,6 @@
 //! Distributed optimization algorithms — the paper's contribution and its
-//! baselines, all running SPMD over [`crate::net::Cluster`]:
+//! baselines, all running SPMD over the trait-abstracted collectives
+//! ([`crate::net::Collectives`]):
 //!
 //! | module      | algorithm            | paper reference                |
 //! |-------------|----------------------|--------------------------------|
@@ -10,11 +11,22 @@
 //! | `cocoa`     | CoCoA+ (SDCA local)  | §1.1 item 4                    |
 //! | `gd`        | distributed GD       | (extra sanity baseline)        |
 //!
+//! Every algorithm implements the step-wise, object-safe
+//! [`Algorithm`]/[`AlgorithmNode`] interface ([`algorithm`]): `setup`
+//! builds a rank's solver state, each `step` executes exactly one outer
+//! iteration, `finish` drains the per-rank output. The [`session`] module
+//! owns the outer loop (composable stop policies, observers,
+//! checkpoint/resume), and the [`spec`] module is the declarative
+//! [`RunSpec`] every entrypoint constructs runs from. There is no
+//! per-algorithm dispatch anywhere in this module — selection happens
+//! once, in [`AlgoParams::algorithm`].
+//!
 //! Every run returns per-outer-iteration records of `(‖∇f‖, f, cumulative
 //! communication rounds, simulated elapsed time)` — precisely the axes of
 //! the paper's Figure 3 — plus per-node operation counts (Table 3) and the
 //! full communication/trace accounting (Tables 2/4, Figure 2).
 
+pub mod algorithm;
 pub mod cocoa;
 pub mod common;
 pub mod dane;
@@ -22,8 +34,19 @@ pub mod disco_f;
 pub mod disco_s;
 pub mod gd;
 pub mod remote;
+pub mod session;
+pub mod spec;
 
-pub use remote::run_over;
+pub use algorithm::{Algorithm, AlgorithmNode, StepReport};
+pub use remote::{run_over, run_over_spec};
+pub use session::{
+    drive_session, node_run_spec, run_spec, run_spec_with, CheckpointPlan, Session, SessionStatus,
+    StopReason,
+};
+pub use spec::{
+    AlgoParams, CocoaParams, DaneParams, DataSpec, DiscoParams, RunSpec, SagParams, SimSpec,
+    StopSpec, GRAD_TOL_DEFAULT,
+};
 
 use crate::data::Dataset;
 use crate::loss::LossKind;
@@ -69,6 +92,30 @@ impl AlgoKind {
         }
     }
 
+    /// Stable wire code (checkpoint headers).
+    pub fn code(&self) -> u8 {
+        match self {
+            AlgoKind::DiscoF => 0,
+            AlgoKind::DiscoS => 1,
+            AlgoKind::DiscoOrig => 2,
+            AlgoKind::Dane => 3,
+            AlgoKind::CocoaPlus => 4,
+            AlgoKind::Gd => 5,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Result<AlgoKind, String> {
+        match code {
+            0 => Ok(AlgoKind::DiscoF),
+            1 => Ok(AlgoKind::DiscoS),
+            2 => Ok(AlgoKind::DiscoOrig),
+            3 => Ok(AlgoKind::Dane),
+            4 => Ok(AlgoKind::CocoaPlus),
+            5 => Ok(AlgoKind::Gd),
+            other => Err(format!("unknown algorithm code {other}")),
+        }
+    }
+
     pub fn all() -> &'static [AlgoKind] {
         &[
             AlgoKind::DiscoF,
@@ -81,7 +128,11 @@ impl AlgoKind {
     }
 }
 
-/// Full run configuration. Defaults follow the paper's §5 settings.
+/// Flat legacy run configuration (every knob for every algorithm in one
+/// struct). Kept as a compatibility bridge: [`RunConfig::to_spec`] lifts
+/// it into the typed [`RunSpec`] that the solver stack actually consumes,
+/// and [`RunSpec::to_config`] flattens back. New code should construct a
+/// [`RunSpec`] directly. Defaults follow the paper's §5 settings.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub algo: AlgoKind,
@@ -100,7 +151,9 @@ pub struct RunConfig {
     pub max_outer: usize,
     /// PCG steps cap per outer iteration.
     pub max_pcg: usize,
-    /// Stop when ‖∇f‖ ≤ grad_tol.
+    /// Stop when ‖∇f‖ ≤ grad_tol (default [`GRAD_TOL_DEFAULT`] — one
+    /// value shared with the CLI; the seed code had 1e-9 here vs 1e-8 on
+    /// the CLI).
     pub grad_tol: f64,
     /// Fraction of samples used for Hessian-vector products (Fig. 5;
     /// 1.0 = exact Hessian).
@@ -153,7 +206,7 @@ impl RunConfig {
             pcg_beta: 1.0 / 20.0,
             max_outer: 100,
             max_pcg: 500,
-            grad_tol: 1e-9,
+            grad_tol: GRAD_TOL_DEFAULT,
             hessian_fraction: 1.0,
             balanced_partition: false,
             node_threads: 1,
@@ -172,20 +225,10 @@ impl RunConfig {
     }
 
     /// Cluster honoring every simulation knob (cost, trace, speeds,
-    /// straggler injection, compute model) — the single construction path
-    /// for all algorithms.
+    /// straggler injection, compute model). Legacy surface —
+    /// [`SimSpec::cluster`] is the spec-side equivalent.
     pub fn cluster(&self) -> Cluster {
-        let mut c = Cluster::new(self.m)
-            .with_cost(self.cost)
-            .with_trace(self.trace)
-            .with_compute(self.compute);
-        if !self.speeds.is_empty() {
-            c = c.with_speeds(self.speeds.clone());
-        }
-        if let Some(s) = self.straggler {
-            c = c.with_straggler(s);
-        }
-        c
+        self.to_spec().sim.cluster()
     }
 
     /// Speeds slice when a weighted partition was requested (None ⇒ use
@@ -274,8 +317,8 @@ impl RunResult {
 }
 
 /// One rank's share of a distributed run — what each algorithm's SPMD
-/// entry returns, uniformly across sample- and feature-partitioned
-/// methods so a single assembly rule applies:
+/// state yields from [`AlgorithmNode::finish`], uniformly across sample-
+/// and feature-partitioned methods so a single assembly rule applies:
 ///
 /// * `w_part` concatenated in rank order reassembles the final iterate
 ///   (feature-partitioned algorithms return their slice; sample-
@@ -293,30 +336,20 @@ pub struct NodeOutput {
 }
 
 /// Dispatch a run over the in-process thread cluster (shm transport).
+/// Legacy run-to-completion surface: equivalent to
+/// [`run_spec`]`(ds, &cfg.to_spec())` — one [`Session`] per rank driving
+/// the step-wise [`AlgorithmNode`]s to the stop policy.
 pub fn run(ds: &Dataset, cfg: &RunConfig) -> RunResult {
-    match cfg.algo {
-        AlgoKind::DiscoF => disco_f::run(ds, cfg),
-        AlgoKind::DiscoS => disco_s::run(ds, cfg, disco_s::Precond::Woodbury),
-        AlgoKind::DiscoOrig => disco_s::run(ds, cfg, disco_s::Precond::MasterSag),
-        AlgoKind::Dane => dane::run(ds, cfg),
-        AlgoKind::CocoaPlus => cocoa::run(ds, cfg),
-        AlgoKind::Gd => gd::run(ds, cfg),
-    }
+    session::run_spec(ds, &cfg.to_spec())
 }
 
 /// Run this rank's share of `cfg.algo` over any collective backend — the
 /// per-rank entry used by multi-process (TCP) runs. Every rank builds the
 /// same deterministic partition locally and executes the same SPMD code
-/// the thread cluster runs.
+/// the thread cluster runs. Legacy surface over
+/// [`node_run_spec`].
 pub fn node_run<C: Collectives>(ctx: &mut C, ds: &Dataset, cfg: &RunConfig) -> NodeOutput {
-    match cfg.algo {
-        AlgoKind::DiscoF => disco_f::node_run(ctx, ds, cfg),
-        AlgoKind::DiscoS => disco_s::node_run(ctx, ds, cfg, disco_s::Precond::Woodbury),
-        AlgoKind::DiscoOrig => disco_s::node_run(ctx, ds, cfg, disco_s::Precond::MasterSag),
-        AlgoKind::Dane => dane::node_run(ctx, ds, cfg),
-        AlgoKind::CocoaPlus => cocoa::node_run(ctx, ds, cfg),
-        AlgoKind::Gd => gd::node_run(ctx, ds, cfg),
-    }
+    session::node_run_spec(ctx, ds, &cfg.to_spec())
 }
 
 /// Assemble a [`RunResult`] from per-rank outputs (shared by every
@@ -361,11 +394,21 @@ mod tests {
     }
 
     #[test]
+    fn algo_codes_round_trip() {
+        for &kind in AlgoKind::all() {
+            assert_eq!(AlgoKind::from_code(kind.code()).unwrap(), kind);
+        }
+        assert!(AlgoKind::from_code(42).is_err());
+    }
+
+    #[test]
     fn config_defaults_match_paper() {
         let c = RunConfig::new(AlgoKind::DiscoF, LossKind::Logistic, 1e-4);
         assert_eq!(c.tau, 100); // §5.2
         assert_eq!(c.mu, 1e-2); // §5.2
         assert_eq!(c.m, 4); // 4 EC2 instances
         assert_eq!(c.hessian_fraction, 1.0);
+        // One grad-tol default, shared with the CLI (satellite fix).
+        assert_eq!(c.grad_tol, GRAD_TOL_DEFAULT);
     }
 }

@@ -2,8 +2,8 @@
 //!
 //! The thread-cluster path collects per-rank outputs in memory
 //! ([`crate::net::Cluster::run`]); a multi-process run has no shared
-//! memory, so after the SPMD algorithm finishes every rank serializes a
-//! [`NodeReport`] (final-iterate part, op counts, comm-stats mirror,
+//! memory, so after the SPMD session finishes every rank serializes a
+//! `NodeReport` (final-iterate part, op counts, comm-stats mirror,
 //! final clock, trace segments) and ships it to rank 0 over the
 //! transport's out-of-band report channel
 //! ([`Transport::exchange_reports`] — unpriced, so it does not perturb
@@ -12,48 +12,73 @@
 //! [`ComputeModel::Modeled`](crate::net::ComputeModel) the two are
 //! bit-identical (f64s round-trip through the little-endian codec
 //! exactly).
+//!
+//! [`run_over_spec`] additionally honors a [`CheckpointPlan`]: each rank
+//! saves/restores its own `<prefix>.rank<r>` file, so a TCP fleet can be
+//! checkpointed and resumed with the same bit-identity guarantee as the
+//! shm path (the TCP priced ledger *is* the per-rank mirror, which the
+//! checkpoint carries).
 
-use crate::algorithms::{node_run, NodeOutput, OpCounts, RunConfig, RunResult};
+use crate::algorithms::session::{drive_session, CheckpointPlan};
+use crate::algorithms::spec::RunSpec;
+use crate::algorithms::{NodeOutput, OpCounts, RunConfig, RunResult};
 use crate::data::Dataset;
 use crate::net::transport::{NodeCtx, Transport};
-use crate::net::{Activity, CommStats, Segment, Trace};
-use crate::util::bytes::{put_f64, put_f64s, put_u16, put_u32, put_u64, put_u8, ByteReader};
+use crate::net::{CommStats, Segment, Trace};
+use crate::util::bytes::{put_f64, put_f64s, put_u32, put_u64, ByteReader};
 use std::time::Instant;
 
 /// Run `cfg.algo` as this rank's share of a multi-process job. Returns
 /// `Some(RunResult)` on rank 0 (assembled from every rank's report) and
-/// `None` on the other ranks.
-///
-/// The transport's world size must equal `cfg.m`; heterogeneity knobs
-/// (`speeds`, `straggler`, `compute`, `trace`) apply exactly as in the
-/// thread cluster.
+/// `None` on the other ranks. Legacy surface over [`run_over_spec`].
 pub fn run_over<T: Transport>(ds: &Dataset, cfg: &RunConfig, transport: T) -> Option<RunResult> {
+    run_over_spec(ds, &cfg.to_spec(), transport, &CheckpointPlan::none())
+}
+
+/// Run one rank's share of a spec-driven multi-process job, with optional
+/// per-rank checkpoint/resume.
+///
+/// The transport's world size must equal `spec.sim.m`; heterogeneity
+/// knobs (`speeds`, `straggler`, `compute`, `trace`) apply exactly as in
+/// the thread cluster.
+pub fn run_over_spec<T: Transport>(
+    ds: &Dataset,
+    spec: &RunSpec,
+    transport: T,
+    plan: &CheckpointPlan,
+) -> Option<RunResult> {
     assert_eq!(
         transport.world(),
-        cfg.m,
-        "transport world size must equal cfg.m"
+        spec.sim.m,
+        "transport world size must equal spec.sim.m"
     );
+    if let Err(e) = spec.validate() {
+        panic!("invalid run spec: {e}");
+    }
     let wall = Instant::now();
     let mut ctx = NodeCtx::new(transport)
-        .with_compute(cfg.compute)
-        .with_trace(cfg.trace);
+        .with_compute(spec.sim.compute)
+        .with_trace(spec.sim.trace);
     let rank = ctx.rank;
-    if let Some(&speed) = cfg.speeds.get(rank) {
+    if let Some(&speed) = spec.sim.speeds.get(rank) {
         ctx = ctx.with_speed(speed);
     }
-    if let Some(s) = cfg.straggler {
+    if let Some(s) = spec.sim.straggler {
         ctx = ctx.with_straggler(s);
     }
 
-    let out = node_run(&mut ctx, ds, cfg);
+    let out = match drive_session(&mut ctx, ds, spec, plan) {
+        Ok(out) => out,
+        Err(e) => panic!("cluster node failed: rank {rank}: {e}"),
+    };
 
     let report = encode_report(&out, &ctx.local_stats, ctx.clock, &ctx.trace);
     let reports = ctx.transport_mut().exchange_reports(report)?;
 
     // Rank 0: merge the fleet's reports into a RunResult.
     let mut w = Vec::new();
-    let mut node_ops: Vec<OpCounts> = Vec::with_capacity(cfg.m);
-    let mut trace = Trace::new(cfg.m);
+    let mut node_ops: Vec<OpCounts> = Vec::with_capacity(spec.sim.m);
+    let mut trace = Trace::new(spec.sim.m);
     let mut sim = 0.0f64;
     let mut stats = CommStats::default();
     for (r, bytes) in reports.iter().enumerate() {
@@ -76,7 +101,7 @@ pub fn run_over<T: Transport>(ds: &Dataset, cfg: &RunConfig, transport: T) -> Op
         }
     }
     Some(RunResult {
-        algo: cfg.algo,
+        algo: spec.kind(),
         records: out.records,
         w,
         stats,
@@ -96,23 +121,6 @@ struct NodeReport {
     segments: Vec<Segment>,
 }
 
-fn activity_code(a: Activity) -> u8 {
-    match a {
-        Activity::Compute => 0,
-        Activity::Idle => 1,
-        Activity::Comm => 2,
-    }
-}
-
-fn activity_from(code: u8) -> Result<Activity, String> {
-    match code {
-        0 => Ok(Activity::Compute),
-        1 => Ok(Activity::Idle),
-        2 => Ok(Activity::Comm),
-        other => Err(format!("unknown activity code {other}")),
-    }
-}
-
 fn encode_report(out: &NodeOutput, stats: &CommStats, clock: f64, trace: &Trace) -> Vec<u8> {
     let mut buf = Vec::with_capacity(64 + 8 * out.w_part.len() + 48 * trace.segments.len());
     put_u32(&mut buf, out.w_part.len() as u32);
@@ -122,27 +130,11 @@ fn encode_report(out: &NodeOutput, stats: &CommStats, clock: f64, trace: &Trace)
     put_u64(&mut buf, out.ops.axpy);
     put_u64(&mut buf, out.ops.dot);
     put_u64(&mut buf, out.ops.dim as u64);
-    put_u64(&mut buf, stats.vector_rounds);
-    put_u64(&mut buf, stats.scalar_rounds);
-    put_u64(&mut buf, stats.vector_doubles);
-    put_u64(&mut buf, stats.scalar_doubles);
-    put_f64(&mut buf, stats.modeled_comm_seconds);
-    put_u64(&mut buf, stats.reduce_all);
-    put_u64(&mut buf, stats.broadcast);
-    put_u64(&mut buf, stats.reduce);
-    put_u64(&mut buf, stats.all_gather);
-    put_u64(&mut buf, stats.wire_bytes);
+    stats.encode(&mut buf);
     put_f64(&mut buf, clock);
     put_u32(&mut buf, trace.segments.len() as u32);
     for seg in &trace.segments {
-        put_u32(&mut buf, seg.node as u32);
-        put_f64(&mut buf, seg.start);
-        put_f64(&mut buf, seg.end);
-        put_u8(&mut buf, activity_code(seg.activity));
-        let label = seg.label.as_bytes();
-        let len = label.len().min(u16::MAX as usize);
-        put_u16(&mut buf, len as u16);
-        buf.extend_from_slice(&label[..len]);
+        seg.encode(&mut buf);
     }
     buf
 }
@@ -158,30 +150,12 @@ fn decode_report(bytes: &[u8]) -> Result<NodeReport, String> {
         dot: r.u64()?,
         dim: r.u64()? as usize,
     };
-    let stats = CommStats {
-        vector_rounds: r.u64()?,
-        scalar_rounds: r.u64()?,
-        vector_doubles: r.u64()?,
-        scalar_doubles: r.u64()?,
-        modeled_comm_seconds: r.f64()?,
-        reduce_all: r.u64()?,
-        broadcast: r.u64()?,
-        reduce: r.u64()?,
-        all_gather: r.u64()?,
-        wire_bytes: r.u64()?,
-    };
+    let stats = CommStats::decode(&mut r)?;
     let clock = r.f64()?;
     let nseg = r.u32()? as usize;
     let mut segments = Vec::with_capacity(nseg);
     for _ in 0..nseg {
-        let node = r.u32()? as usize;
-        let start = r.f64()?;
-        let end = r.f64()?;
-        let activity = activity_from(r.u8()?)?;
-        let label_len = r.u16()? as usize;
-        let label = String::from_utf8(r.take(label_len)?.to_vec())
-            .map_err(|_| "non-utf8 segment label".to_string())?;
-        segments.push(Segment { node, start, end, activity, label });
+        segments.push(Segment::decode(&mut r)?);
     }
     r.finish()?;
     Ok(NodeReport { w_part, ops, stats, clock, segments })
@@ -190,6 +164,7 @@ fn decode_report(bytes: &[u8]) -> Result<NodeReport, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::Activity;
 
     #[test]
     fn report_round_trips_bit_exactly() {

@@ -1,0 +1,618 @@
+//! Resumable step-wise run driver.
+//!
+//! A [`Session`] owns the outer loop that the legacy run-to-completion
+//! entrypoints hid: each [`Session::step`] executes exactly one outer
+//! iteration of the configured [`Algorithm`](crate::algorithms::Algorithm)
+//! through the object-safe [`AlgorithmNode`] surface, then evaluates the
+//! composable [`StopSpec`] policy (gradient tolerance ∧ outer cap ∧
+//! simulated-time budget ∧ communication-round budget). Between steps the
+//! caller can observe [`StepReport`]s, feed dashboards, or
+//! [`Session::checkpoint`] the run.
+//!
+//! Sessions are **per-rank** objects, like everything else in the SPMD
+//! runtime: every rank drives its own session in lockstep, and all stop
+//! decisions derive from reduced scalars (or, for the simulated-time
+//! budget, one *free* metrics round per iteration) so ranks can never
+//! disagree.
+//!
+//! ## Checkpoint format
+//!
+//! [`Session::checkpoint`] serializes, per rank, through the
+//! little-endian codec of [`crate::util::bytes`]:
+//!
+//! ```text
+//! "DSK1" | algo u8 | rank u32 | world u32 | outer u64
+//! global-ledger flag u8 [CommStats]        (shm blackboard snapshot)
+//! clock f64 | CommStats mirror | straggler flag u8 [rng 4×u64, left u32]
+//! trace: nseg u32, Segment*                (empty when tracing is off)
+//! algorithm payload                        (AlgorithmNode::save_state)
+//! ```
+//!
+//! Everything *derivable* — shards, CSR mirrors, Woodbury factorizations —
+//! is rebuilt on restore without touching the simulated clock, so under
+//! [`ComputeModel::Modeled`](crate::net::ComputeModel) a resumed run is
+//! **bit-identical** to an uninterrupted one: same records, same
+//! `sim_seconds`, same traces, same [`CommStats`] (the shm global ledger
+//! is re-seeded so its f64 accumulation *continues* rather than restarts
+//! — see [`crate::net::Cluster::with_initial_stats`]). Restore a
+//! checkpoint only on the transport kind that wrote it.
+
+use crate::algorithms::algorithm::{AlgorithmNode, StepReport};
+use crate::algorithms::spec::{RunSpec, StopSpec};
+use crate::algorithms::{assemble, AlgoKind, NodeOutput, RunResult};
+use crate::data::Dataset;
+use crate::net::{Collectives, CommStats, CtxState, Segment};
+use crate::util::bytes::{put_f64, put_u32, put_u64, put_u8, ByteReader};
+
+const CKPT_MAGIC: &[u8; 4] = b"DSK1";
+
+/// Why a session stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// ‖∇f‖ reached `stop.grad_tol`.
+    Converged,
+    /// `stop.max_outer` iterations ran.
+    OuterCap,
+    /// The simulated clock passed `stop.max_sim_seconds`.
+    SimTimeBudget,
+    /// `stop.max_rounds` vector rounds were spent.
+    RoundBudget,
+}
+
+impl StopReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StopReason::Converged => "converged",
+            StopReason::OuterCap => "outer-cap",
+            StopReason::SimTimeBudget => "sim-time-budget",
+            StopReason::RoundBudget => "round-budget",
+        }
+    }
+}
+
+/// Outcome of one [`Session::step`] call.
+#[derive(Clone, Debug)]
+pub enum SessionStatus {
+    /// One outer iteration ran; the run continues.
+    Running(StepReport),
+    /// The run is over. When the final iteration executed during this call
+    /// its report is attached; `None` means a pre-step policy (the outer
+    /// cap) fired or the session was already stopped.
+    Stopped(StopReason, Option<StepReport>),
+}
+
+/// Per-rank step-wise driver. See the module docs; construct with
+/// [`Session::new`], advance with [`Session::step`], drain with
+/// [`Session::finish`].
+///
+/// # Example
+///
+/// ```
+/// use disco::algorithms::{run_spec, AlgoKind, RunSpec};
+/// use disco::data::SyntheticConfig;
+/// use disco::loss::LossKind;
+///
+/// let ds = SyntheticConfig::new("doc", 64, 24).density(0.3).seed(2).generate();
+/// let mut spec = RunSpec::new(AlgoKind::Gd, LossKind::Quadratic, 1e-2);
+/// spec.stop.max_outer = 5;
+/// spec.stop.grad_tol = 0.0; // run all 5 iterations
+/// let res = run_spec(&ds, &spec);
+/// assert_eq!(res.records.len(), 5);
+/// ```
+pub struct Session<C: Collectives> {
+    node: Box<dyn AlgorithmNode<C>>,
+    stop: StopSpec,
+    outer: usize,
+    stopped: Option<StopReason>,
+}
+
+impl<C: Collectives> Session<C> {
+    /// Build this rank's solver state for `spec` (runs
+    /// [`Algorithm::setup`](crate::algorithms::Algorithm::setup), which
+    /// costs the pre-loop compute through `ctx`).
+    pub fn new(ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Session<C> {
+        let algorithm = spec.algo.algorithm::<C>();
+        let node = algorithm.setup(ctx, ds, spec);
+        Session {
+            node,
+            stop: spec.stop.clone(),
+            outer: 0,
+            stopped: None,
+        }
+    }
+
+    /// Outer iterations completed so far (equals the restored count after
+    /// [`Session::restore`]).
+    pub fn outer(&self) -> usize {
+        self.outer
+    }
+
+    pub fn kind(&self) -> AlgoKind {
+        self.node.kind()
+    }
+
+    /// `Some(reason)` once the stop policy has fired.
+    pub fn stopped(&self) -> Option<StopReason> {
+        self.stopped
+    }
+
+    /// Execute one outer iteration (SPMD: all ranks in lockstep), then
+    /// evaluate the stop policy.
+    pub fn step(&mut self, ctx: &mut C) -> SessionStatus {
+        if let Some(reason) = self.stopped {
+            return SessionStatus::Stopped(reason, None);
+        }
+        if self.outer >= self.stop.max_outer {
+            self.stopped = Some(StopReason::OuterCap);
+            return SessionStatus::Stopped(StopReason::OuterCap, None);
+        }
+        let report = self.node.step(ctx, self.outer);
+        self.outer += 1;
+        if report.converged {
+            self.stopped = Some(StopReason::Converged);
+            return SessionStatus::Stopped(StopReason::Converged, Some(report));
+        }
+        if let Some(max_rounds) = self.stop.max_rounds {
+            // The priced counters are identical on every rank (SPMD), so
+            // this needs no extra communication.
+            if ctx.comm_stats().rounds() >= max_rounds {
+                self.stopped = Some(StopReason::RoundBudget);
+                return SessionStatus::Stopped(StopReason::RoundBudget, Some(report));
+            }
+        }
+        if let Some(budget) = self.stop.max_sim_seconds {
+            // Clocks differ across ranks between collectives, so the
+            // decision must be agreed on: one *free* metrics round (never
+            // priced, never counted) carries the OR of the per-rank tests.
+            let over = if ctx.clock() >= budget { 1.0 } else { 0.0 };
+            let mut flag = vec![over];
+            ctx.metric_reduce_all(&mut flag);
+            if flag[0] > 0.0 {
+                self.stopped = Some(StopReason::SimTimeBudget);
+                return SessionStatus::Stopped(StopReason::SimTimeBudget, Some(report));
+            }
+        }
+        SessionStatus::Running(report)
+    }
+
+    /// Drive until the stop policy fires, feeding each iteration's record
+    /// to `on_iter` (rank-agnostic: every rank sees identical records).
+    pub fn run_to_stop(
+        &mut self,
+        ctx: &mut C,
+        mut on_iter: impl FnMut(&crate::algorithms::IterRecord),
+    ) -> StopReason {
+        loop {
+            match self.step(ctx) {
+                SessionStatus::Running(report) => on_iter(&report.record),
+                SessionStatus::Stopped(reason, last) => {
+                    if let Some(report) = last {
+                        on_iter(&report.record);
+                    }
+                    return reason;
+                }
+            }
+        }
+    }
+
+    /// Drain this rank's output (final iterate part, records, op counts).
+    pub fn finish(self) -> NodeOutput {
+        self.node.finish()
+    }
+
+    /// Serialize this rank's full resumable state (module docs describe
+    /// the layout). Call at an iteration boundary only — i.e. between
+    /// `step` calls — which is the only place the SPMD contract lets a
+    /// driver run.
+    pub fn checkpoint(&self, ctx: &C) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(4096);
+        buf.extend_from_slice(CKPT_MAGIC);
+        put_u8(&mut buf, self.node.kind().code());
+        put_u32(&mut buf, ctx.rank() as u32);
+        put_u32(&mut buf, ctx.world() as u32);
+        put_u64(&mut buf, self.outer as u64);
+        match ctx.global_stats() {
+            Some(stats) => {
+                put_u8(&mut buf, 1);
+                stats.encode(&mut buf);
+            }
+            None => put_u8(&mut buf, 0),
+        }
+        let st = ctx.export_state();
+        put_f64(&mut buf, st.clock);
+        st.stats.encode(&mut buf);
+        match st.straggler {
+            Some((rng, remaining)) => {
+                put_u8(&mut buf, 1);
+                for word in rng {
+                    put_u64(&mut buf, word);
+                }
+                put_u32(&mut buf, remaining);
+            }
+            None => put_u8(&mut buf, 0),
+        }
+        put_u32(&mut buf, st.segments.len() as u32);
+        for seg in &st.segments {
+            seg.encode(&mut buf);
+        }
+        self.node.save_state(&mut buf);
+        buf
+    }
+
+    /// Restore a checkpoint written by [`Session::checkpoint`] for the
+    /// same `(spec, dataset, rank, world, transport kind)`. Replaces the
+    /// context's clock/stats/trace and the solver state; the simulated
+    /// clock is **not** advanced (setup side effects are discarded).
+    pub fn restore(&mut self, ctx: &mut C, bytes: &[u8]) -> Result<(), String> {
+        let mut r = ByteReader::new(bytes);
+        let header = decode_header(&mut r)?;
+        if header.algo != self.node.kind() {
+            return Err(format!(
+                "checkpoint is for {}, session runs {}",
+                header.algo.name(),
+                self.node.kind().name()
+            ));
+        }
+        if header.rank != ctx.rank() || header.world != ctx.world() {
+            return Err(format!(
+                "checkpoint is for rank {}/{}, context is rank {}/{}",
+                header.rank,
+                header.world,
+                ctx.rank(),
+                ctx.world()
+            ));
+        }
+        ctx.import_state(CtxState {
+            clock: header.clock,
+            stats: header.mirror,
+            segments: header.segments,
+            straggler: header.straggler,
+        })?;
+        self.node.restore_state(&mut r)?;
+        r.finish()?;
+        self.outer = header.outer;
+        self.stopped = None;
+        Ok(())
+    }
+}
+
+struct CkptHeader {
+    algo: AlgoKind,
+    rank: usize,
+    world: usize,
+    outer: usize,
+    global: Option<CommStats>,
+    clock: f64,
+    mirror: CommStats,
+    straggler: Option<([u64; 4], u32)>,
+    segments: Vec<Segment>,
+}
+
+fn decode_header(r: &mut ByteReader<'_>) -> Result<CkptHeader, String> {
+    if r.take(4)? != CKPT_MAGIC {
+        return Err("not a disco checkpoint (bad magic)".into());
+    }
+    let algo = AlgoKind::from_code(r.u8()?)?;
+    let rank = r.u32()? as usize;
+    let world = r.u32()? as usize;
+    let outer = r.u64()? as usize;
+    let global = if r.u8()? == 1 {
+        Some(CommStats::decode(r)?)
+    } else {
+        None
+    };
+    let clock = r.f64()?;
+    let mirror = CommStats::decode(r)?;
+    let straggler = if r.u8()? == 1 {
+        let rng = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+        let remaining = r.u32()?;
+        Some((rng, remaining))
+    } else {
+        None
+    };
+    let nseg = r.u32()? as usize;
+    let mut segments = Vec::with_capacity(nseg);
+    for _ in 0..nseg {
+        segments.push(Segment::decode(r)?);
+    }
+    Ok(CkptHeader {
+        algo,
+        rank,
+        world,
+        outer,
+        global,
+        clock,
+        mirror,
+        straggler,
+        segments,
+    })
+}
+
+/// Read just the global-ledger snapshot out of a checkpoint blob (the shm
+/// resume driver seeds the fresh blackboard with it before launching the
+/// cluster; `None` for checkpoints written over tcp).
+pub fn peek_global_stats(bytes: &[u8]) -> Result<Option<CommStats>, String> {
+    let mut r = ByteReader::new(bytes);
+    Ok(decode_header(&mut r)?.global)
+}
+
+// ---------------------------------------------------------------------------
+// Drivers
+// ---------------------------------------------------------------------------
+
+/// Where (and whether) a run saves / restores per-rank checkpoints. Rank
+/// `r` uses `<prefix>.rank<r>`; under shm all files land on one machine,
+/// under tcp each process touches only its own.
+#[derive(Clone, Debug, Default)]
+pub struct CheckpointPlan {
+    /// Save before executing this outer iteration (0 = before the first).
+    pub save_at: Option<usize>,
+    /// Path prefix for the per-rank files.
+    pub prefix: String,
+    /// Restore from the per-rank files before stepping.
+    pub resume: bool,
+}
+
+impl CheckpointPlan {
+    /// No checkpointing at all.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Save once, before outer iteration `at`.
+    pub fn save(prefix: &str, at: usize) -> Self {
+        Self {
+            save_at: Some(at),
+            prefix: prefix.to_string(),
+            resume: false,
+        }
+    }
+
+    /// Resume from a previously saved prefix.
+    pub fn resume(prefix: &str) -> Self {
+        Self {
+            save_at: None,
+            prefix: prefix.to_string(),
+            resume: true,
+        }
+    }
+
+    pub fn rank_path(&self, rank: usize) -> String {
+        format!("{}.rank{rank}", self.prefix)
+    }
+
+    fn is_none(&self) -> bool {
+        self.save_at.is_none() && !self.resume
+    }
+
+    /// Declare the checkpoint/resume flags shared by the `disco` and
+    /// `disco-node` binaries; parse them back with
+    /// [`CheckpointPlan::from_args`].
+    pub fn with_flags(args: crate::util::cli::Args) -> crate::util::cli::Args {
+        args.opt("checkpoint-at", None, "save a checkpoint before this outer iteration (run)")
+            .opt(
+                "checkpoint",
+                Some("results/ckpt"),
+                "checkpoint prefix (per-rank files <prefix>.rankN)",
+            )
+            .opt("resume", None, "resume from this checkpoint path prefix (run)")
+    }
+
+    /// Build the plan from [`CheckpointPlan::with_flags`]. With `--resume`,
+    /// its prefix is used for both reading and any later
+    /// `--checkpoint-at` save.
+    pub fn from_args(args: &crate::util::cli::Args) -> Result<CheckpointPlan, String> {
+        let mut plan = CheckpointPlan::none();
+        if args.provided("resume") {
+            plan.resume = true;
+            plan.prefix = args.req("resume").map_err(|e| e.to_string())?;
+        }
+        if args.provided("checkpoint-at") {
+            plan.save_at = Some(args.get_usize("checkpoint-at").map_err(|e| e.to_string())?);
+            if plan.prefix.is_empty() {
+                plan.prefix = args.req("checkpoint").map_err(|e| e.to_string())?;
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Per-rank driver: build (and optionally restore) a session, run it to
+/// the stop policy, saving a checkpoint when the plan asks for one.
+/// Shared verbatim by the shm thread cluster and the multi-process
+/// transports — one loop, any backend.
+pub fn drive_session<C: Collectives>(
+    ctx: &mut C,
+    ds: &Dataset,
+    spec: &RunSpec,
+    plan: &CheckpointPlan,
+) -> Result<NodeOutput, String> {
+    let mut session = Session::new(ctx, ds, spec);
+    if plan.resume {
+        let path = plan.rank_path(ctx.rank());
+        let bytes =
+            std::fs::read(&path).map_err(|e| format!("cannot read checkpoint '{path}': {e}"))?;
+        session.restore(ctx, &bytes)?;
+    }
+    loop {
+        if plan.save_at == Some(session.outer()) {
+            let path = plan.rank_path(ctx.rank());
+            if let Some(dir) = std::path::Path::new(&path).parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)
+                        .map_err(|e| format!("cannot create checkpoint dir: {e}"))?;
+                }
+            }
+            std::fs::write(&path, session.checkpoint(ctx))
+                .map_err(|e| format!("cannot write checkpoint '{path}': {e}"))?;
+        }
+        match session.step(ctx) {
+            SessionStatus::Running(_) => {}
+            SessionStatus::Stopped(..) => break,
+        }
+    }
+    Ok(session.finish())
+}
+
+/// Run a spec over the in-process thread cluster (shm transport) — the
+/// spec-driven counterpart of the legacy `algorithms::run`, which now
+/// delegates here.
+pub fn run_spec(ds: &Dataset, spec: &RunSpec) -> RunResult {
+    run_spec_with(ds, spec, &CheckpointPlan::none())
+}
+
+/// [`run_spec`] with checkpoint/resume. Panics with `cluster node failed:
+/// …` on any rank error (matching the cluster's failure contract).
+pub fn run_spec_with(ds: &Dataset, spec: &RunSpec, plan: &CheckpointPlan) -> RunResult {
+    if let Err(e) = spec.validate() {
+        panic!("invalid run spec: {e}");
+    }
+    let mut cluster = spec.sim.cluster();
+    if plan.resume {
+        // Seed the global priced ledger from the checkpoint so its f64
+        // accumulation continues the interrupted run bit-exactly.
+        let path = plan.rank_path(0);
+        let bytes = std::fs::read(&path)
+            .unwrap_or_else(|e| panic!("cannot read checkpoint '{path}': {e}"));
+        match peek_global_stats(&bytes).unwrap_or_else(|e| panic!("bad checkpoint '{path}': {e}"))
+        {
+            Some(stats) => cluster = cluster.with_initial_stats(stats),
+            // A checkpoint without a global-ledger snapshot was written
+            // over a transport whose ledger is the per-rank mirror (tcp).
+            // Resuming it here would silently restart the shm blackboard
+            // from zero and report inconsistent stats — refuse instead.
+            None => panic!(
+                "checkpoint '{path}' was written over a transport without a \
+                 global ledger (tcp); resume it with --transport tcp"
+            ),
+        }
+    }
+    let plan = plan.clone();
+    let run = cluster.run(|ctx| {
+        if plan.is_none() {
+            // Fast path without filesystem access.
+            let mut session = Session::new(ctx, ds, spec);
+            session.run_to_stop(ctx, |_| {});
+            session.finish()
+        } else {
+            drive_session(ctx, ds, spec, &plan).unwrap_or_else(|e| panic!("{e}"))
+        }
+    });
+    assemble(spec.kind(), run)
+}
+
+/// Run one rank's share of a spec over any [`Collectives`] backend — the
+/// per-rank entry multi-process runs go through (no checkpointing).
+pub fn node_run_spec<C: Collectives>(ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> NodeOutput {
+    let mut session = Session::new(ctx, ds, spec);
+    session.run_to_stop(ctx, |_| {});
+    session.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::RunConfig;
+    use crate::data::SyntheticConfig;
+    use crate::loss::LossKind;
+    use crate::net::{Cluster, ComputeModel, CostModel};
+
+    fn tiny() -> crate::data::Dataset {
+        SyntheticConfig::new("t", 96, 48).density(0.2).seed(4).generate()
+    }
+
+    fn spec(kind: AlgoKind) -> RunSpec {
+        let mut cfg = RunConfig::new(kind, LossKind::Logistic, 1e-2);
+        cfg.m = 3;
+        cfg.tau = 12;
+        cfg.max_outer = 4;
+        cfg.grad_tol = 0.0;
+        cfg.compute = ComputeModel::modeled();
+        cfg.cost = CostModel::default();
+        cfg.to_spec()
+    }
+
+    #[test]
+    fn session_steps_once_per_outer_iteration() {
+        let ds = tiny();
+        let spec = spec(AlgoKind::DiscoF);
+        let run = Cluster::new(3).with_compute(ComputeModel::modeled()).run(|ctx| {
+            let mut session = Session::new(ctx, &ds, &spec);
+            let mut steps = 0usize;
+            let reason = loop {
+                match session.step(ctx) {
+                    SessionStatus::Running(report) => {
+                        assert_eq!(report.record.outer, steps);
+                        steps += 1;
+                    }
+                    SessionStatus::Stopped(reason, last) => {
+                        if last.is_some() {
+                            steps += 1;
+                        }
+                        break reason;
+                    }
+                }
+            };
+            (steps, reason, session.finish())
+        });
+        for (steps, reason, out) in &run.outputs {
+            assert_eq!(*steps, 4, "grad_tol 0 must exhaust the outer cap");
+            assert_eq!(*reason, StopReason::OuterCap);
+            // Records live on rank 0 only.
+            assert!(out.records.len() == 4 || out.records.is_empty());
+        }
+    }
+
+    #[test]
+    fn round_budget_stops_early_and_agrees_across_ranks() {
+        let ds = tiny();
+        let mut s = spec(AlgoKind::DiscoS);
+        s.stop.max_outer = 50;
+        s.stop.max_rounds = Some(6);
+        let res = run_spec(&ds, &s);
+        assert!(!res.converged);
+        assert!(
+            res.records.len() < 50,
+            "round budget should cut the run short"
+        );
+        // The budget fires on the post-step counters, which the final
+        // stats reflect.
+        assert!(res.stats.rounds() >= 6, "stopped before spending the budget");
+    }
+
+    #[test]
+    fn sim_time_budget_stops_early() {
+        let ds = tiny();
+        let mut s = spec(AlgoKind::DiscoF);
+        s.stop.max_outer = 50;
+        // Modeled compute at default rate: a handful of iterations pass
+        // this budget comfortably.
+        s.stop.max_sim_seconds = Some(1e-9);
+        let res = run_spec(&ds, &s);
+        assert!(res.records.len() < 50);
+        assert!(res.sim_seconds >= 1e-9);
+    }
+
+    #[test]
+    fn checkpoint_restore_rejects_mismatches() {
+        let ds = tiny();
+        let spec_f = spec(AlgoKind::DiscoF);
+        let spec_s = spec(AlgoKind::DiscoS);
+        let run = Cluster::new(3).with_compute(ComputeModel::modeled()).run(|ctx| {
+            let mut session = Session::new(ctx, &ds, &spec_f);
+            let _ = session.step(ctx);
+            let blob = session.checkpoint(ctx);
+            // Wrong algorithm.
+            let mut other = Session::new(ctx, &ds, &spec_s);
+            let err = other.restore(ctx, &blob).unwrap_err();
+            assert!(err.contains("DiSCO"), "{err}");
+            // Truncated blob.
+            let mut same = Session::new(ctx, &ds, &spec_f);
+            assert!(same.restore(ctx, &blob[..blob.len() - 2]).is_err());
+            // Garbage.
+            assert!(same.restore(ctx, b"nope").is_err());
+            0u8
+        });
+        assert_eq!(run.outputs.len(), 3);
+    }
+}

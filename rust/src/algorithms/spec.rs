@@ -1,0 +1,1273 @@
+//! Declarative run specification — the single artifact every entrypoint
+//! constructs a run from.
+//!
+//! [`RunSpec`] replaces the monolithic flat [`RunConfig`] with typed
+//! sub-structs:
+//!
+//! * [`AlgoParams`] — which method, carrying *only* that method's knobs
+//!   (the flat config kept `dane_eta` next to `tau` for every algorithm;
+//!   the enum makes "which knob belongs to whom" a type-level fact);
+//! * [`DataSpec`] — registry dataset name + down-scale factor;
+//! * [`SimSpec`] — cluster shape and simulation knobs (m, seed, α–β cost
+//!   model, compute model, heterogeneity, tracing);
+//! * [`StopSpec`] — the composable stop policy: gradient tolerance ∧ outer
+//!   cap ∧ optional simulated-time budget ∧ optional communication-round
+//!   budget.
+//!
+//! Defaults follow the paper's §5 settings ([`RunSpec::new`]); the JSON
+//! round-trip ([`RunSpec::to_json_string`] / [`RunSpec::from_json_str`])
+//! lets `disco run --spec run.json`, `disco-node`, `disco-figures`, and
+//! the benches all drive the same run from one file. `f64` knobs survive
+//! the round trip bit-exactly (shortest-round-trip formatting; non-finite
+//! values are encoded as strings since JSON has no `inf`).
+//!
+//! [`RunConfig::to_spec`] / [`RunSpec::to_config`] bridge the legacy
+//! surface; the old run-to-completion entrypoints are thin wrappers over
+//! the spec + [`Session`](crate::algorithms::session::Session) path.
+//!
+//! # Example
+//!
+//! ```
+//! use disco::algorithms::{AlgoKind, RunSpec};
+//! use disco::loss::LossKind;
+//!
+//! let spec = RunSpec::new(AlgoKind::DiscoF, LossKind::Logistic, 1e-4);
+//! let json = spec.to_json_string();
+//! let back = RunSpec::from_json_str(&json).unwrap();
+//! assert_eq!(spec, back);
+//! ```
+
+use crate::algorithms::algorithm::Algorithm;
+use crate::algorithms::{cocoa, dane, disco_f, disco_s, gd, AlgoKind, RunConfig};
+use crate::data::{registry, Dataset};
+use crate::loss::LossKind;
+use crate::net::{Cluster, CollectiveAlgo, Collectives, ComputeModel, CostModel, StragglerConfig};
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+
+/// The one gradient-tolerance default, stated once. The paper's Figure 3
+/// plots runs down to ‖∇f‖ ≈ 1e-8; both the CLI and [`RunConfig::new`]
+/// now share this value (the seed code had 1e-9 in the library default
+/// and 1e-8 on the CLI — a drift this constant removes).
+pub const GRAD_TOL_DEFAULT: f64 = 1e-8;
+
+/// Knobs of the inexact damped Newton family (DiSCO-S / DiSCO-F /
+/// original DiSCO). Defaults are the paper's §5.2 settings.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DiscoParams {
+    /// Preconditioner sample count τ (paper default 100).
+    pub tau: usize,
+    /// Preconditioner damping μ (paper: 1e-2).
+    pub mu: f64,
+    /// PCG forcing factor: ε_k = pcg_beta·‖∇f(w_k)‖.
+    pub pcg_beta: f64,
+    /// PCG steps cap per outer iteration.
+    pub max_pcg: usize,
+    /// Fraction of samples used for Hessian-vector products (Fig. 5;
+    /// 1.0 = exact Hessian).
+    pub hessian_fraction: f64,
+    /// DiSCO-F only: balance feature shards by modeled row work instead of
+    /// feature count (no-op for the sample-partitioned variants).
+    pub balanced_partition: bool,
+}
+
+impl Default for DiscoParams {
+    fn default() -> Self {
+        Self {
+            tau: 100,
+            mu: 1e-2,
+            pcg_beta: 1.0 / 20.0,
+            max_pcg: 500,
+            hessian_fraction: 1.0,
+            balanced_partition: false,
+        }
+    }
+}
+
+/// Original DiSCO's master-only SAG preconditioner solve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SagParams {
+    /// Inner solve tolerance factor (relative to ‖r‖).
+    pub inner_tol: f64,
+    /// Epoch cap per preconditioner solve.
+    pub max_epochs: usize,
+}
+
+impl Default for SagParams {
+    fn default() -> Self {
+        Self { inner_tol: 0.05, max_epochs: 30 }
+    }
+}
+
+/// DANE's subproblem knobs (paper Eq. (1); SAG local solver).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DaneParams {
+    /// Gradient weight η.
+    pub eta: f64,
+    /// Subproblem regularization μ.
+    pub mu: f64,
+    /// SAG epochs per local solve.
+    pub local_epochs: usize,
+}
+
+impl Default for DaneParams {
+    fn default() -> Self {
+        Self { eta: 1.0, mu: 1e-2, local_epochs: 3 }
+    }
+}
+
+/// CoCoA+ knobs (SDCA local solver, σ′ = m "adding" variant).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CocoaParams {
+    /// SDCA epochs per outer iteration (the paper's H).
+    pub local_epochs: usize,
+}
+
+impl Default for CocoaParams {
+    fn default() -> Self {
+        Self { local_epochs: 3 }
+    }
+}
+
+/// Which algorithm runs, with exactly its knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AlgoParams {
+    /// Feature-partitioned DiSCO (the paper's contribution).
+    DiscoF(DiscoParams),
+    /// Sample-partitioned DiSCO with Woodbury preconditioning.
+    DiscoS(DiscoParams),
+    /// Original DiSCO: Woodbury replaced by a master-only SAG inner solve.
+    DiscoOrig(DiscoParams, SagParams),
+    Dane(DaneParams),
+    CocoaPlus(CocoaParams),
+    Gd,
+}
+
+impl AlgoParams {
+    /// Paper-default parameters for `kind`.
+    pub fn for_kind(kind: AlgoKind) -> AlgoParams {
+        match kind {
+            AlgoKind::DiscoF => AlgoParams::DiscoF(DiscoParams::default()),
+            AlgoKind::DiscoS => AlgoParams::DiscoS(DiscoParams::default()),
+            AlgoKind::DiscoOrig => {
+                AlgoParams::DiscoOrig(DiscoParams::default(), SagParams::default())
+            }
+            AlgoKind::Dane => AlgoParams::Dane(DaneParams::default()),
+            AlgoKind::CocoaPlus => AlgoParams::CocoaPlus(CocoaParams::default()),
+            AlgoKind::Gd => AlgoParams::Gd,
+        }
+    }
+
+    pub fn kind(&self) -> AlgoKind {
+        match self {
+            AlgoParams::DiscoF(_) => AlgoKind::DiscoF,
+            AlgoParams::DiscoS(_) => AlgoKind::DiscoS,
+            AlgoParams::DiscoOrig(..) => AlgoKind::DiscoOrig,
+            AlgoParams::Dane(_) => AlgoKind::Dane,
+            AlgoParams::CocoaPlus(_) => AlgoKind::CocoaPlus,
+            AlgoParams::Gd => AlgoKind::Gd,
+        }
+    }
+
+    /// The Newton-family knobs when this is a DiSCO variant.
+    pub fn disco(&self) -> Option<&DiscoParams> {
+        match self {
+            AlgoParams::DiscoF(p) | AlgoParams::DiscoS(p) | AlgoParams::DiscoOrig(p, _) => Some(p),
+            _ => None,
+        }
+    }
+
+    pub fn disco_mut(&mut self) -> Option<&mut DiscoParams> {
+        match self {
+            AlgoParams::DiscoF(p) | AlgoParams::DiscoS(p) | AlgoParams::DiscoOrig(p, _) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Resolve the solver implementation — the *only* algorithm dispatch
+    /// in the crate; everything downstream goes through the object-safe
+    /// [`Algorithm`] / [`AlgorithmNode`](crate::algorithms::AlgorithmNode)
+    /// surface.
+    pub fn algorithm<C: Collectives>(&self) -> Box<dyn Algorithm<C>> {
+        match self {
+            AlgoParams::DiscoF(_) => Box::new(disco_f::DiscoF),
+            AlgoParams::DiscoS(_) => Box::new(disco_s::DiscoS),
+            AlgoParams::DiscoOrig(..) => Box::new(disco_s::DiscoOrig),
+            AlgoParams::Dane(_) => Box::new(dane::Dane),
+            AlgoParams::CocoaPlus(_) => Box::new(cocoa::CocoaPlus),
+            AlgoParams::Gd => Box::new(gd::Gd),
+        }
+    }
+}
+
+/// Which dataset a spec-driven binary loads ([`DataSpec::load`]). Library
+/// callers that already hold a [`Dataset`] pass it directly and this field
+/// is ignored (`name` may stay empty).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataSpec {
+    /// Registry name (see `disco datasets`); empty = caller-supplied.
+    pub name: String,
+    /// Down-scale factor (1 = full registry size).
+    pub scale: usize,
+}
+
+impl DataSpec {
+    /// A spec whose dataset the caller supplies in code.
+    pub fn inline() -> Self {
+        Self { name: String::new(), scale: 1 }
+    }
+
+    pub fn named(name: &str) -> Self {
+        Self { name: name.to_string(), scale: 1 }
+    }
+
+    /// Load from the registry (None for unknown / empty names).
+    pub fn load(&self) -> Option<Dataset> {
+        if self.name.is_empty() {
+            return None;
+        }
+        if self.scale <= 1 {
+            registry::load(&self.name)
+        } else {
+            registry::load_scaled(&self.name, self.scale)
+        }
+    }
+}
+
+/// Cluster shape + simulation knobs (everything that is about *how* the
+/// run executes rather than *what* is optimized).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimSpec {
+    /// Number of nodes m.
+    pub m: usize,
+    pub seed: u64,
+    /// α–β network cost model (incl. the collective algorithm).
+    pub cost: CostModel,
+    /// How node compute advances the simulated clock; `Modeled` makes
+    /// seeded runs bit-identical.
+    pub compute: ComputeModel,
+    /// Intra-node threads for the HVP kernels (1 = serial).
+    pub node_threads: usize,
+    /// Per-node relative compute speeds (empty = homogeneous fleet).
+    pub speeds: Vec<f64>,
+    /// Size shards proportionally to `speeds` so work ÷ speed equalizes.
+    pub weighted_partition: bool,
+    /// Deterministic seeded slowdown episodes.
+    pub straggler: Option<StragglerConfig>,
+    /// Record the per-node activity trace (Fig. 2).
+    pub trace: bool,
+}
+
+impl Default for SimSpec {
+    fn default() -> Self {
+        Self {
+            m: 4, // the paper's 4 EC2 instances
+            seed: 42,
+            cost: CostModel::default(),
+            compute: ComputeModel::Measured,
+            node_threads: 1,
+            speeds: Vec::new(),
+            weighted_partition: false,
+            straggler: None,
+            trace: false,
+        }
+    }
+}
+
+impl SimSpec {
+    /// Thread cluster honoring every simulation knob — the single
+    /// construction path for shm runs.
+    pub fn cluster(&self) -> Cluster {
+        let mut c = Cluster::new(self.m)
+            .with_cost(self.cost)
+            .with_trace(self.trace)
+            .with_compute(self.compute);
+        if !self.speeds.is_empty() {
+            c = c.with_speeds(self.speeds.clone());
+        }
+        if let Some(s) = self.straggler {
+            c = c.with_straggler(s);
+        }
+        c
+    }
+
+    /// Speeds slice when a weighted partition was requested (None ⇒ use
+    /// the uniform split).
+    pub fn partition_speeds(&self) -> Option<&[f64]> {
+        if self.weighted_partition && !self.speeds.is_empty() {
+            Some(&self.speeds)
+        } else {
+            None
+        }
+    }
+}
+
+/// Composable stop policy, evaluated by the
+/// [`Session`](crate::algorithms::session::Session) driver after every
+/// outer iteration. All configured conditions are OR-ed: the run stops at
+/// the first one that fires.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StopSpec {
+    /// Stop when ‖∇f‖ ≤ grad_tol (checked inside the step, before the
+    /// inner solve — the converged iterate does no extra work).
+    pub grad_tol: f64,
+    /// Outer-iteration cap.
+    pub max_outer: usize,
+    /// Simulated-seconds budget (None = unbounded). Enforcing it costs one
+    /// *free* metrics round per outer iteration so every rank agrees.
+    pub max_sim_seconds: Option<f64>,
+    /// Vector-communication-round budget (None = unbounded). Free to
+    /// enforce: the round counters are identical on every rank.
+    pub max_rounds: Option<u64>,
+}
+
+impl Default for StopSpec {
+    fn default() -> Self {
+        Self {
+            grad_tol: GRAD_TOL_DEFAULT,
+            max_outer: 100,
+            max_sim_seconds: None,
+            max_rounds: None,
+        }
+    }
+}
+
+/// Full declarative run description. See the module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    pub algo: AlgoParams,
+    pub loss: LossKind,
+    /// ℓ2 regularization λ.
+    pub lambda: f64,
+    pub data: DataSpec,
+    pub sim: SimSpec,
+    pub stop: StopSpec,
+}
+
+impl RunSpec {
+    /// Paper-§5 defaults for `kind` (m = 4, τ = 100, μ = 1e-2,
+    /// β = 1/20, grad_tol = [`GRAD_TOL_DEFAULT`], 100 outer iterations,
+    /// binomial-tree α–β pricing, measured compute).
+    pub fn new(kind: AlgoKind, loss: LossKind, lambda: f64) -> RunSpec {
+        RunSpec {
+            algo: AlgoParams::for_kind(kind),
+            loss,
+            lambda,
+            data: DataSpec::inline(),
+            sim: SimSpec::default(),
+            stop: StopSpec::default(),
+        }
+    }
+
+    pub fn kind(&self) -> AlgoKind {
+        self.algo.kind()
+    }
+
+    // -- small builder conveniences (field access works too) --------------
+
+    pub fn with_m(mut self, m: usize) -> Self {
+        self.sim.m = m;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.sim.seed = seed;
+        self
+    }
+
+    pub fn with_compute(mut self, compute: ComputeModel) -> Self {
+        self.sim.compute = compute;
+        self
+    }
+
+    pub fn with_cost(mut self, cost: CostModel) -> Self {
+        self.sim.cost = cost;
+        self
+    }
+
+    pub fn with_grad_tol(mut self, tol: f64) -> Self {
+        self.stop.grad_tol = tol;
+        self
+    }
+
+    pub fn with_max_outer(mut self, cap: usize) -> Self {
+        self.stop.max_outer = cap;
+        self
+    }
+
+    pub fn with_trace(mut self, on: bool) -> Self {
+        self.sim.trace = on;
+        self
+    }
+
+    pub fn with_data(mut self, name: &str, scale: usize) -> Self {
+        self.data = DataSpec { name: name.to_string(), scale: scale.max(1) };
+        self
+    }
+
+    /// Structural sanity checks shared by every entrypoint.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.sim.m < 1 {
+            return Err("sim.m must be at least 1".into());
+        }
+        if !self.sim.speeds.is_empty() && self.sim.speeds.len() != self.sim.m {
+            return Err(format!(
+                "sim.speeds has {} entries for m = {}",
+                self.sim.speeds.len(),
+                self.sim.m
+            ));
+        }
+        if self.sim.speeds.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+            return Err("sim.speeds must be positive and finite".into());
+        }
+        if !(self.lambda.is_finite() && self.lambda >= 0.0) {
+            return Err("lambda must be finite and ≥ 0".into());
+        }
+        if !(self.stop.grad_tol.is_finite() && self.stop.grad_tol >= 0.0) {
+            return Err("stop.grad_tol must be finite and ≥ 0".into());
+        }
+        if let Some(p) = self.algo.disco() {
+            if !(p.hessian_fraction > 0.0 && p.hessian_fraction <= 1.0) {
+                return Err("hessian_fraction must be in (0, 1]".into());
+            }
+        }
+        if let Some(s) = self.stop.max_sim_seconds {
+            if !(s.is_finite() && s > 0.0) {
+                return Err("stop.max_sim_seconds must be positive and finite".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RunConfig bridge
+// ---------------------------------------------------------------------------
+
+impl RunConfig {
+    /// Lift the flat legacy config into the typed spec. Knobs that don't
+    /// belong to `self.algo` (e.g. `tau` for DANE) are dropped — they were
+    /// dead weight in the flat struct.
+    pub fn to_spec(&self) -> RunSpec {
+        let disco = DiscoParams {
+            tau: self.tau,
+            mu: self.mu,
+            pcg_beta: self.pcg_beta,
+            max_pcg: self.max_pcg,
+            hessian_fraction: self.hessian_fraction,
+            balanced_partition: self.balanced_partition,
+        };
+        let algo = match self.algo {
+            AlgoKind::DiscoF => AlgoParams::DiscoF(disco),
+            AlgoKind::DiscoS => AlgoParams::DiscoS(disco),
+            AlgoKind::DiscoOrig => AlgoParams::DiscoOrig(
+                disco,
+                SagParams {
+                    inner_tol: self.sag_inner_tol,
+                    max_epochs: self.sag_max_epochs,
+                },
+            ),
+            AlgoKind::Dane => AlgoParams::Dane(DaneParams {
+                eta: self.dane_eta,
+                mu: self.mu,
+                local_epochs: self.local_epochs,
+            }),
+            AlgoKind::CocoaPlus => AlgoParams::CocoaPlus(CocoaParams {
+                local_epochs: self.local_epochs,
+            }),
+            AlgoKind::Gd => AlgoParams::Gd,
+        };
+        RunSpec {
+            algo,
+            loss: self.loss,
+            lambda: self.lambda,
+            data: DataSpec::inline(),
+            sim: SimSpec {
+                m: self.m,
+                seed: self.seed,
+                cost: self.cost,
+                compute: self.compute,
+                node_threads: self.node_threads,
+                speeds: self.speeds.clone(),
+                weighted_partition: self.weighted_partition,
+                straggler: self.straggler,
+                trace: self.trace,
+            },
+            stop: StopSpec {
+                grad_tol: self.grad_tol,
+                max_outer: self.max_outer,
+                max_sim_seconds: None,
+                max_rounds: None,
+            },
+        }
+    }
+}
+
+impl RunSpec {
+    /// Flatten back into the legacy config (compat for code that still
+    /// reads flat fields, e.g. the XLA runtime path). Knobs foreign to the
+    /// spec's algorithm take their paper defaults.
+    pub fn to_config(&self) -> RunConfig {
+        let mut c = RunConfig::new(self.kind(), self.loss, self.lambda);
+        c.m = self.sim.m;
+        c.seed = self.sim.seed;
+        c.cost = self.sim.cost;
+        c.compute = self.sim.compute;
+        c.node_threads = self.sim.node_threads;
+        c.speeds = self.sim.speeds.clone();
+        c.weighted_partition = self.sim.weighted_partition;
+        c.straggler = self.sim.straggler;
+        c.trace = self.sim.trace;
+        c.grad_tol = self.stop.grad_tol;
+        c.max_outer = self.stop.max_outer;
+        if let Some(p) = self.algo.disco() {
+            c.tau = p.tau;
+            c.mu = p.mu;
+            c.pcg_beta = p.pcg_beta;
+            c.max_pcg = p.max_pcg;
+            c.hessian_fraction = p.hessian_fraction;
+            c.balanced_partition = p.balanced_partition;
+        }
+        match &self.algo {
+            AlgoParams::DiscoOrig(_, sag) => {
+                c.sag_inner_tol = sag.inner_tol;
+                c.sag_max_epochs = sag.max_epochs;
+            }
+            AlgoParams::Dane(d) => {
+                c.dane_eta = d.eta;
+                c.mu = d.mu;
+                c.local_epochs = d.local_epochs;
+            }
+            AlgoParams::CocoaPlus(cp) => {
+                c.local_epochs = cp.local_epochs;
+            }
+            _ => {}
+        }
+        c
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON round trip
+// ---------------------------------------------------------------------------
+
+/// Emit an `f64` as a JSON number; non-finite values (the zero-cost model
+/// uses β = ∞) become the strings `"inf"` / `"-inf"` / `"nan"`.
+fn jnum(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else if x.is_nan() {
+        json::s("nan")
+    } else if x > 0.0 {
+        json::s("inf")
+    } else {
+        json::s("-inf")
+    }
+}
+
+fn take_f64(v: &Json, key: &str) -> Result<f64, String> {
+    match v.get(key) {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.as_str() {
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            "nan" => Ok(f64::NAN),
+            other => other
+                .parse::<f64>()
+                .map_err(|_| format!("'{key}': bad float '{other}'")),
+        },
+        Json::Null => Err(format!("missing key '{key}'")),
+        _ => Err(format!("'{key}': expected a number")),
+    }
+}
+
+fn take_usize(v: &Json, key: &str) -> Result<usize, String> {
+    v.get(key)
+        .as_usize()
+        .ok_or_else(|| format!("'{key}': expected a non-negative integer"))
+}
+
+fn take_bool(v: &Json, key: &str) -> Result<bool, String> {
+    match v.get(key) {
+        Json::Bool(b) => Ok(*b),
+        _ => Err(format!("'{key}': expected a boolean")),
+    }
+}
+
+fn take_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, String> {
+    v.get(key)
+        .as_str()
+        .ok_or_else(|| format!("'{key}': expected a string"))
+}
+
+/// Seeds are emitted as decimal strings: the JSON number path goes through
+/// `f64`, which would silently round seeds above 2⁵³.
+fn take_u64(v: &Json, key: &str) -> Result<u64, String> {
+    match v.get(key) {
+        Json::Str(s) => s
+            .parse::<u64>()
+            .map_err(|_| format!("'{key}': bad u64 '{s}'")),
+        Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= 9.007_199_254_740_992e15 => {
+            Ok(*x as u64)
+        }
+        _ => Err(format!("'{key}': expected a u64 (string or integer)")),
+    }
+}
+
+impl RunSpec {
+    pub fn to_json(&self) -> Json {
+        let mut algo: Vec<(&str, Json)> = vec![("kind", json::s(self.kind().name()))];
+        if let Some(p) = self.algo.disco() {
+            algo.push(("tau", json::num(p.tau as f64)));
+            algo.push(("mu", jnum(p.mu)));
+            algo.push(("pcg_beta", jnum(p.pcg_beta)));
+            algo.push(("max_pcg", json::num(p.max_pcg as f64)));
+            algo.push(("hessian_fraction", jnum(p.hessian_fraction)));
+            algo.push(("balanced_partition", Json::Bool(p.balanced_partition)));
+        }
+        match &self.algo {
+            AlgoParams::DiscoOrig(_, sag) => {
+                algo.push(("sag_inner_tol", jnum(sag.inner_tol)));
+                algo.push(("sag_max_epochs", json::num(sag.max_epochs as f64)));
+            }
+            AlgoParams::Dane(d) => {
+                algo.push(("eta", jnum(d.eta)));
+                algo.push(("mu", jnum(d.mu)));
+                algo.push(("local_epochs", json::num(d.local_epochs as f64)));
+            }
+            AlgoParams::CocoaPlus(cp) => {
+                algo.push(("local_epochs", json::num(cp.local_epochs as f64)));
+            }
+            _ => {}
+        }
+        let compute = match self.sim.compute {
+            ComputeModel::Measured => json::obj(vec![("kind", json::s("measured"))]),
+            ComputeModel::Modeled { flops_per_sec } => json::obj(vec![
+                ("kind", json::s("modeled")),
+                ("flops_per_sec", jnum(flops_per_sec)),
+            ]),
+        };
+        let straggler = match self.sim.straggler {
+            None => Json::Null,
+            Some(s) => json::obj(vec![
+                ("prob", jnum(s.prob)),
+                ("slowdown", jnum(s.slowdown)),
+                ("len", json::num(s.len as f64)),
+                ("seed", json::s(&s.seed.to_string())),
+            ]),
+        };
+        json::obj(vec![
+            ("algo", json::obj(algo)),
+            ("loss", json::s(self.loss.name())),
+            ("lambda", jnum(self.lambda)),
+            (
+                "data",
+                json::obj(vec![
+                    ("name", json::s(&self.data.name)),
+                    ("scale", json::num(self.data.scale as f64)),
+                ]),
+            ),
+            (
+                "sim",
+                json::obj(vec![
+                    ("m", json::num(self.sim.m as f64)),
+                    ("seed", json::s(&self.sim.seed.to_string())),
+                    (
+                        "cost",
+                        json::obj(vec![
+                            ("alpha", jnum(self.sim.cost.alpha)),
+                            ("beta", jnum(self.sim.cost.beta)),
+                            ("collective", json::s(self.sim.cost.algo.name())),
+                        ]),
+                    ),
+                    ("compute", compute),
+                    ("node_threads", json::num(self.sim.node_threads as f64)),
+                    (
+                        "speeds",
+                        json::arr(self.sim.speeds.iter().map(|s| jnum(*s)).collect()),
+                    ),
+                    ("weighted_partition", Json::Bool(self.sim.weighted_partition)),
+                    ("straggler", straggler),
+                    ("trace", Json::Bool(self.sim.trace)),
+                ]),
+            ),
+            (
+                "stop",
+                json::obj(vec![
+                    ("grad_tol", jnum(self.stop.grad_tol)),
+                    ("max_outer", json::num(self.stop.max_outer as f64)),
+                    (
+                        "max_sim_seconds",
+                        self.stop.max_sim_seconds.map_or(Json::Null, jnum),
+                    ),
+                    (
+                        "max_rounds",
+                        self.stop
+                            .max_rounds
+                            .map_or(Json::Null, |r| json::s(&r.to_string())),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunSpec, String> {
+        let a = v.get("algo");
+        let kind_name = take_str(a, "kind")?;
+        let kind =
+            AlgoKind::parse(kind_name).ok_or_else(|| format!("unknown algo kind '{kind_name}'"))?;
+        let disco = || -> Result<DiscoParams, String> {
+            Ok(DiscoParams {
+                tau: take_usize(a, "tau")?,
+                mu: take_f64(a, "mu")?,
+                pcg_beta: take_f64(a, "pcg_beta")?,
+                max_pcg: take_usize(a, "max_pcg")?,
+                hessian_fraction: take_f64(a, "hessian_fraction")?,
+                balanced_partition: take_bool(a, "balanced_partition")?,
+            })
+        };
+        let algo = match kind {
+            AlgoKind::DiscoF => AlgoParams::DiscoF(disco()?),
+            AlgoKind::DiscoS => AlgoParams::DiscoS(disco()?),
+            AlgoKind::DiscoOrig => AlgoParams::DiscoOrig(
+                disco()?,
+                SagParams {
+                    inner_tol: take_f64(a, "sag_inner_tol")?,
+                    max_epochs: take_usize(a, "sag_max_epochs")?,
+                },
+            ),
+            AlgoKind::Dane => AlgoParams::Dane(DaneParams {
+                eta: take_f64(a, "eta")?,
+                mu: take_f64(a, "mu")?,
+                local_epochs: take_usize(a, "local_epochs")?,
+            }),
+            AlgoKind::CocoaPlus => AlgoParams::CocoaPlus(CocoaParams {
+                local_epochs: take_usize(a, "local_epochs")?,
+            }),
+            AlgoKind::Gd => AlgoParams::Gd,
+        };
+        let loss = LossKind::parse(take_str(v, "loss")?)
+            .ok_or_else(|| format!("unknown loss '{}'", take_str(v, "loss")?))?;
+        let d = v.get("data");
+        let data = DataSpec {
+            name: take_str(d, "name")?.to_string(),
+            scale: take_usize(d, "scale")?.max(1),
+        };
+        let s = v.get("sim");
+        let cost_v = s.get("cost");
+        let collective = take_str(cost_v, "collective")?;
+        let cost = CostModel {
+            alpha: take_f64(cost_v, "alpha")?,
+            beta: take_f64(cost_v, "beta")?,
+            algo: CollectiveAlgo::parse(collective)
+                .ok_or_else(|| format!("unknown collective algorithm '{collective}'"))?,
+        };
+        let compute_v = s.get("compute");
+        let compute = match take_str(compute_v, "kind")? {
+            "measured" => ComputeModel::Measured,
+            "modeled" => ComputeModel::Modeled {
+                flops_per_sec: take_f64(compute_v, "flops_per_sec")?,
+            },
+            other => return Err(format!("unknown compute model '{other}'")),
+        };
+        let speeds = match s.get("speeds") {
+            Json::Arr(xs) => xs
+                .iter()
+                .enumerate()
+                .map(|(i, x)| {
+                    x.as_f64()
+                        .ok_or_else(|| format!("sim.speeds[{i}]: expected a number"))
+                })
+                .collect::<Result<Vec<f64>, String>>()?,
+            Json::Null => Vec::new(),
+            _ => return Err("sim.speeds: expected an array".into()),
+        };
+        let straggler = match s.get("straggler") {
+            Json::Null => None,
+            st @ Json::Obj(_) => {
+                let prob = take_f64(st, "prob")?;
+                let slowdown = take_f64(st, "slowdown")?;
+                let len = take_usize(st, "len")?;
+                if !(0.0..=1.0).contains(&prob) {
+                    return Err("straggler.prob must be in [0, 1]".into());
+                }
+                if slowdown < 1.0 || slowdown.is_nan() {
+                    return Err("straggler.slowdown must be ≥ 1".into());
+                }
+                if len < 1 || len > u32::MAX as usize {
+                    return Err("straggler.len must be in [1, u32::MAX]".into());
+                }
+                Some(StragglerConfig::new(
+                    prob,
+                    slowdown,
+                    len as u32,
+                    take_u64(st, "seed")?,
+                ))
+            }
+            _ => return Err("sim.straggler: expected an object or null".into()),
+        };
+        let sim = SimSpec {
+            m: take_usize(s, "m")?,
+            seed: take_u64(s, "seed")?,
+            cost,
+            compute,
+            node_threads: take_usize(s, "node_threads")?.max(1),
+            speeds,
+            weighted_partition: take_bool(s, "weighted_partition")?,
+            straggler,
+            trace: take_bool(s, "trace")?,
+        };
+        let st = v.get("stop");
+        let stop = StopSpec {
+            grad_tol: take_f64(st, "grad_tol")?,
+            max_outer: take_usize(st, "max_outer")?,
+            max_sim_seconds: match st.get("max_sim_seconds") {
+                Json::Null => None,
+                _ => Some(take_f64(st, "max_sim_seconds")?),
+            },
+            max_rounds: match st.get("max_rounds") {
+                Json::Null => None,
+                _ => Some(take_u64(st, "max_rounds")?),
+            },
+        };
+        let spec = RunSpec { algo, loss, lambda: take_f64(v, "lambda")?, data, sim, stop };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<RunSpec, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        RunSpec::from_json(&v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI bridge — the spec-backed flag surface shared by `disco` and
+// `disco-node`
+// ---------------------------------------------------------------------------
+
+/// Declare every spec-backed solver flag on a CLI schema. Defaults shown
+/// in `--help` are the spec defaults; a flag only overrides the spec when
+/// it is given explicitly (so `--spec run.json` plus a few overrides
+/// composes as expected).
+pub fn with_spec_flags(args: Args) -> Args {
+    args.opt("spec", None, "load a RunSpec JSON file; explicit flags override its fields")
+        .opt("dataset", Some("tiny"), "registered dataset name (see `disco datasets`)")
+        .opt("scale", Some("1"), "down-scale factor for the dataset")
+        .opt("algo", Some("disco-f"), "disco-f | disco-s | disco | dane | cocoa+ | gd")
+        .opt("loss", Some("logistic"), "logistic | quadratic | squared_hinge")
+        .opt("lambda", None, "ℓ2 regularization (default: dataset registry value)")
+        .opt("m", Some("4"), "number of simulated nodes")
+        .opt("tau", Some("100"), "preconditioner sample count (paper §5.2; DiSCO variants)")
+        .opt("mu", Some("0.01"), "preconditioner / DANE subproblem damping μ")
+        .opt("pcg-beta", Some("0.05"), "PCG forcing factor: ε_k = β·‖∇f(w_k)‖ (DiSCO variants)")
+        .opt("max-pcg", Some("500"), "PCG steps cap per outer iteration (DiSCO variants)")
+        .opt("max-outer", Some("100"), "outer (Newton) iteration cap")
+        .opt("grad-tol", Some("1e-8"), "stop when ‖∇f‖ ≤ this")
+        .opt("max-sim-seconds", None, "stop once the simulated clock passes this budget")
+        .opt("max-rounds", None, "stop once this many vector communication rounds were spent")
+        .opt("hessian-fraction", Some("1.0"), "Fig. 5 Hessian subsampling fraction")
+        .switch("balanced-partition", "DiSCO-F: balance feature shards by modeled row work")
+        .opt("node-threads", Some("1"), "intra-node threads for the HVP kernels")
+        .opt("local-epochs", Some("3"), "CoCoA+/DANE local solver epochs")
+        .opt("dane-eta", Some("1.0"), "DANE gradient weight η")
+        .opt("sag-inner-tol", Some("0.05"), "original DiSCO: SAG inner solve tolerance factor")
+        .opt("sag-max-epochs", Some("30"), "original DiSCO: SAG epoch cap per solve")
+        .opt("seed", Some("42"), "PRNG seed")
+        .opt("net", Some("default"), "network cost model preset: default | zero | slow")
+        .opt("collective", Some("binomial"), "collective pricing: flat | binomial | ring")
+        .opt(
+            "compute",
+            Some("measured"),
+            "clock model: measured | modeled | modeled:<rate> (modeled = bit-identical runs)",
+        )
+        .opt("speeds", None, "per-node relative speeds, comma-separated (e.g. 1,1,1,0.25)")
+        .switch("weighted-partition", "size shards by node speed (heterogeneous fleets)")
+        .opt("straggler", None, "seeded slowdown episodes: prob,slowdown,len,seed")
+        .switch("trace", "record + print the per-node activity trace (Fig. 2)")
+}
+
+fn parse_cost_preset(s: &str) -> Result<CostModel, String> {
+    match s {
+        "default" => Ok(CostModel::default()),
+        "zero" => Ok(CostModel::zero()),
+        "slow" => Ok(CostModel::slow()),
+        other => Err(format!("unknown net model '{other}'")),
+    }
+}
+
+fn parse_compute(s: &str) -> Result<ComputeModel, String> {
+    match s {
+        "measured" => Ok(ComputeModel::Measured),
+        "modeled" => Ok(ComputeModel::modeled()),
+        other => match other.strip_prefix("modeled:") {
+            Some(rate) => {
+                let r: f64 = rate
+                    .parse()
+                    .map_err(|_| format!("bad modeled rate '{rate}'"))?;
+                if !(r.is_finite() && r > 0.0) {
+                    return Err("modeled rate must be positive and finite".into());
+                }
+                Ok(ComputeModel::Modeled { flops_per_sec: r })
+            }
+            None => Err(format!("unknown compute model '{other}'")),
+        },
+    }
+}
+
+fn parse_straggler(s: &str) -> Result<StragglerConfig, String> {
+    let parts: Vec<&str> = s.split(',').collect();
+    if parts.len() != 4 {
+        return Err("--straggler wants prob,slowdown,len,seed".into());
+    }
+    let prob: f64 = parts[0].parse().map_err(|_| "bad straggler prob")?;
+    let slowdown: f64 = parts[1].parse().map_err(|_| "bad straggler slowdown")?;
+    let len: u32 = parts[2].parse().map_err(|_| "bad straggler len")?;
+    let seed: u64 = parts[3].parse().map_err(|_| "bad straggler seed")?;
+    if !(0.0..=1.0).contains(&prob) || slowdown < 1.0 || slowdown.is_nan() || len < 1 {
+        return Err("straggler: prob ∈ [0,1], slowdown ≥ 1, len ≥ 1".into());
+    }
+    Ok(StragglerConfig::new(prob, slowdown, len, seed))
+}
+
+/// Apply every *explicitly provided* flag onto `spec` (defaults never
+/// override a loaded spec file). Knobs foreign to the selected algorithm
+/// are ignored, mirroring the flat CLI they replace.
+pub fn apply_args(spec: &mut RunSpec, args: &Args) -> Result<(), String> {
+    let e = |err: crate::util::cli::CliError| err.to_string();
+    // Algorithm/loss first: they decide which knob flags are meaningful.
+    if args.provided("algo") {
+        let name = args.req("algo").map_err(e)?;
+        let kind = AlgoKind::parse(&name).ok_or_else(|| format!("bad --algo '{name}'"))?;
+        if kind != spec.kind() {
+            spec.algo = AlgoParams::for_kind(kind);
+        }
+    }
+    if args.provided("loss") {
+        let name = args.req("loss").map_err(e)?;
+        spec.loss = LossKind::parse(&name).ok_or_else(|| format!("bad --loss '{name}'"))?;
+    }
+    if args.provided("lambda") {
+        spec.lambda = args.get_f64("lambda").map_err(e)?;
+    }
+    if args.provided("dataset") {
+        spec.data.name = args.req("dataset").map_err(e)?;
+    }
+    if args.provided("scale") {
+        spec.data.scale = args.get_usize("scale").map_err(e)?.max(1);
+    }
+    if let Some(p) = spec.algo.disco_mut() {
+        if args.provided("tau") {
+            p.tau = args.get_usize("tau").map_err(e)?;
+        }
+        if args.provided("mu") {
+            p.mu = args.get_f64("mu").map_err(e)?;
+        }
+        if args.provided("pcg-beta") {
+            p.pcg_beta = args.get_f64("pcg-beta").map_err(e)?;
+        }
+        if args.provided("max-pcg") {
+            p.max_pcg = args.get_usize("max-pcg").map_err(e)?;
+        }
+        if args.provided("hessian-fraction") {
+            p.hessian_fraction = args.get_f64("hessian-fraction").map_err(e)?;
+        }
+        if args.flag("balanced-partition") {
+            p.balanced_partition = true;
+        }
+    }
+    match &mut spec.algo {
+        AlgoParams::DiscoOrig(_, sag) => {
+            if args.provided("sag-inner-tol") {
+                sag.inner_tol = args.get_f64("sag-inner-tol").map_err(e)?;
+            }
+            if args.provided("sag-max-epochs") {
+                sag.max_epochs = args.get_usize("sag-max-epochs").map_err(e)?;
+            }
+        }
+        AlgoParams::Dane(d) => {
+            if args.provided("dane-eta") {
+                d.eta = args.get_f64("dane-eta").map_err(e)?;
+            }
+            if args.provided("mu") {
+                d.mu = args.get_f64("mu").map_err(e)?;
+            }
+            if args.provided("local-epochs") {
+                d.local_epochs = args.get_usize("local-epochs").map_err(e)?;
+            }
+        }
+        AlgoParams::CocoaPlus(cp) => {
+            if args.provided("local-epochs") {
+                cp.local_epochs = args.get_usize("local-epochs").map_err(e)?;
+            }
+        }
+        _ => {}
+    }
+    if args.provided("m") {
+        spec.sim.m = args.get_usize("m").map_err(e)?;
+    }
+    if args.provided("seed") {
+        spec.sim.seed = args.get_u64("seed").map_err(e)?;
+    }
+    if args.provided("net") {
+        let preset = parse_cost_preset(&args.req("net").map_err(e)?)?;
+        // Keep an explicitly chosen collective algorithm (applied below).
+        let algo = spec.sim.cost.algo;
+        spec.sim.cost = CostModel { algo, ..preset };
+    }
+    if args.provided("collective") {
+        let name = args.req("collective").map_err(e)?;
+        spec.sim.cost.algo = CollectiveAlgo::parse(&name)
+            .ok_or_else(|| format!("unknown collective algorithm '{name}'"))?;
+    }
+    if args.provided("compute") {
+        spec.sim.compute = parse_compute(&args.req("compute").map_err(e)?)?;
+    }
+    if args.provided("node-threads") {
+        spec.sim.node_threads = args.get_usize("node-threads").map_err(e)?.max(1);
+    }
+    if args.provided("speeds") {
+        let raw = args.req("speeds").map_err(e)?;
+        spec.sim.speeds = raw
+            .split(',')
+            .map(|t| t.trim().parse::<f64>().map_err(|_| format!("bad speed '{t}'")))
+            .collect::<Result<Vec<f64>, String>>()?;
+    }
+    if args.flag("weighted-partition") {
+        spec.sim.weighted_partition = true;
+    }
+    if args.provided("straggler") {
+        spec.sim.straggler = Some(parse_straggler(&args.req("straggler").map_err(e)?)?);
+    }
+    if args.flag("trace") {
+        spec.sim.trace = true;
+    }
+    if args.provided("grad-tol") {
+        spec.stop.grad_tol = args.get_f64("grad-tol").map_err(e)?;
+    }
+    if args.provided("max-outer") {
+        spec.stop.max_outer = args.get_usize("max-outer").map_err(e)?;
+    }
+    if args.provided("max-sim-seconds") {
+        spec.stop.max_sim_seconds = Some(args.get_f64("max-sim-seconds").map_err(e)?);
+    }
+    if args.provided("max-rounds") {
+        spec.stop.max_rounds = Some(args.get_u64("max-rounds").map_err(e)?);
+    }
+    Ok(())
+}
+
+/// Resolve the full spec from a CLI: `--spec file.json` (when given) as
+/// the base, paper defaults otherwise (λ falling back to the dataset's
+/// registry value), then explicit flags on top. Validates before
+/// returning.
+pub fn spec_from_args(args: &Args) -> Result<RunSpec, String> {
+    let mut spec = if args.provided("spec") {
+        let path = args.req("spec").map_err(|e| e.to_string())?;
+        let text = std::fs::read_to_string(&path)
+            .map_err(|err| format!("cannot read spec '{path}': {err}"))?;
+        RunSpec::from_json_str(&text).map_err(|err| format!("bad spec '{path}': {err}"))?
+    } else {
+        let algo_name = args.get("algo").unwrap_or_else(|| "disco-f".into());
+        let kind = AlgoKind::parse(&algo_name).ok_or_else(|| format!("bad --algo '{algo_name}'"))?;
+        let loss_name = args.get("loss").unwrap_or_else(|| "logistic".into());
+        let loss = LossKind::parse(&loss_name).ok_or_else(|| format!("bad --loss '{loss_name}'"))?;
+        let dataset = args.get("dataset").unwrap_or_else(|| "tiny".into());
+        let lambda = match args.get("lambda") {
+            Some(l) => l.parse().map_err(|_| "bad --lambda")?,
+            None => registry::spec(&dataset).map(|s| s.lambda).unwrap_or(1e-4),
+        };
+        RunSpec::new(kind, loss, lambda).with_data(&dataset, 1)
+    };
+    apply_args(&mut spec, args)?;
+    spec.validate()?;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256pp;
+
+    fn sample_spec(kind: AlgoKind) -> RunSpec {
+        let mut spec = RunSpec::new(kind, LossKind::Logistic, 1e-4).with_data("tiny", 8);
+        spec.sim.compute = ComputeModel::modeled();
+        spec
+    }
+
+    #[test]
+    fn defaults_match_paper() {
+        let spec = RunSpec::new(AlgoKind::DiscoF, LossKind::Logistic, 1e-4);
+        let p = spec.algo.disco().unwrap();
+        assert_eq!(p.tau, 100); // §5.2
+        assert_eq!(p.mu, 1e-2); // §5.2
+        assert_eq!(spec.sim.m, 4); // 4 EC2 instances
+        assert_eq!(spec.stop.grad_tol, GRAD_TOL_DEFAULT);
+        assert_eq!(p.hessian_fraction, 1.0);
+    }
+
+    #[test]
+    fn json_round_trips_every_kind() {
+        for &kind in AlgoKind::all() {
+            let spec = sample_spec(kind);
+            let text = spec.to_json_string();
+            let back = RunSpec::from_json_str(&text).unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+            assert_eq!(spec, back, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn json_round_trips_non_finite_and_options() {
+        let mut spec = sample_spec(AlgoKind::DiscoS);
+        spec.sim.cost = CostModel::zero(); // β = ∞
+        spec.sim.speeds = vec![1.0, 1.0, 1.0, 0.25];
+        spec.sim.weighted_partition = true;
+        spec.sim.straggler = Some(StragglerConfig::new(0.25, 4.0, 2, u64::MAX - 3));
+        spec.stop.max_sim_seconds = Some(1.5);
+        spec.stop.max_rounds = Some(123_456_789_012_345);
+        let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(spec, back);
+        assert_eq!(back.sim.cost.beta, f64::INFINITY);
+        assert_eq!(back.sim.straggler.unwrap().seed, u64::MAX - 3);
+    }
+
+    /// Property: a randomized spec survives the JSON round trip bit-exactly
+    /// (f64 knobs compare by bits via PartialEq on finite values; the
+    /// generator draws awkward magnitudes on purpose).
+    #[test]
+    fn prop_json_round_trip_random_specs() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2024);
+        for trial in 0..200 {
+            let kind = AlgoKind::all()[rng.index(AlgoKind::all().len())];
+            let loss = [LossKind::Logistic, LossKind::Quadratic, LossKind::SquaredHinge]
+                [rng.index(3)];
+            let mut spec = RunSpec::new(kind, loss, 10f64.powf(rng.uniform(-9.0, 0.0)));
+            if let Some(p) = spec.algo.disco_mut() {
+                p.tau = rng.index(500);
+                p.mu = 10f64.powf(rng.uniform(-6.0, 0.0));
+                p.pcg_beta = rng.next_f64();
+                p.max_pcg = 1 + rng.index(1000);
+                p.hessian_fraction = (rng.next_f64()).max(1e-3);
+                p.balanced_partition = rng.next_f64() < 0.5;
+            }
+            spec.sim.m = 1 + rng.index(8);
+            spec.sim.seed = rng.next_u64();
+            spec.sim.cost.alpha = rng.next_f64() * 1e-3;
+            spec.sim.cost.beta = if rng.next_f64() < 0.2 {
+                f64::INFINITY
+            } else {
+                1.0 + rng.next_f64() * 1e9
+            };
+            spec.sim.cost.algo =
+                CollectiveAlgo::all()[rng.index(CollectiveAlgo::all().len())];
+            spec.sim.compute = if rng.next_f64() < 0.5 {
+                ComputeModel::Measured
+            } else {
+                ComputeModel::Modeled { flops_per_sec: 1.0 + rng.next_f64() * 4e9 }
+            };
+            spec.sim.node_threads = 1 + rng.index(4);
+            if rng.next_f64() < 0.5 {
+                spec.sim.speeds = (0..spec.sim.m).map(|_| 0.1 + rng.next_f64()).collect();
+                spec.sim.weighted_partition = rng.next_f64() < 0.5;
+            }
+            if rng.next_f64() < 0.3 {
+                spec.sim.straggler = Some(StragglerConfig::new(
+                    rng.next_f64(),
+                    1.0 + rng.next_f64() * 7.0,
+                    1 + rng.index(5) as u32,
+                    rng.next_u64(),
+                ));
+            }
+            spec.sim.trace = rng.next_f64() < 0.5;
+            spec.stop.grad_tol = 10f64.powf(rng.uniform(-12.0, -3.0));
+            spec.stop.max_outer = 1 + rng.index(500);
+            if rng.next_f64() < 0.4 {
+                spec.stop.max_sim_seconds = Some(rng.next_f64() * 100.0 + 1e-6);
+            }
+            if rng.next_f64() < 0.4 {
+                spec.stop.max_rounds = Some(rng.next_u64() >> 12);
+            }
+            let text = spec.to_json_string();
+            let back = RunSpec::from_json_str(&text)
+                .unwrap_or_else(|err| panic!("trial {trial}: {err}\n{text}"));
+            assert_eq!(spec, back, "trial {trial} diverged\n{text}");
+        }
+    }
+
+    #[test]
+    fn config_round_trip_preserves_relevant_knobs() {
+        for &kind in AlgoKind::all() {
+            let mut cfg = RunConfig::new(kind, LossKind::Quadratic, 3e-3);
+            cfg.m = 5;
+            cfg.tau = 17;
+            cfg.pcg_beta = 0.125;
+            cfg.dane_eta = 0.75;
+            cfg.local_epochs = 9;
+            cfg.sag_inner_tol = 0.01;
+            cfg.seed = 31;
+            cfg.trace = true;
+            let spec = cfg.to_spec();
+            assert_eq!(spec.kind(), kind);
+            let back = spec.to_config();
+            assert_eq!(back.m, 5);
+            assert_eq!(back.seed, 31);
+            assert_eq!(back.grad_tol, cfg.grad_tol);
+            match kind {
+                AlgoKind::DiscoF | AlgoKind::DiscoS | AlgoKind::DiscoOrig => {
+                    assert_eq!(back.tau, 17);
+                    assert_eq!(back.pcg_beta, 0.125);
+                }
+                AlgoKind::Dane => {
+                    assert_eq!(back.dane_eta, 0.75);
+                    assert_eq!(back.local_epochs, 9);
+                }
+                AlgoKind::CocoaPlus => assert_eq!(back.local_epochs, 9),
+                AlgoKind::Gd => {}
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        let mut spec = sample_spec(AlgoKind::DiscoF);
+        spec.sim.speeds = vec![1.0, 2.0]; // m = 4
+        assert!(spec.validate().is_err());
+        let mut spec = sample_spec(AlgoKind::DiscoF);
+        spec.algo.disco_mut().unwrap().hessian_fraction = 0.0;
+        assert!(spec.validate().is_err());
+        let mut spec = sample_spec(AlgoKind::DiscoF);
+        spec.sim.m = 0;
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn cli_flags_override_spec() {
+        let schema = with_spec_flags(Args::new("t", "t"));
+        let argv: Vec<String> = [
+            "--algo", "dane", "--dane-eta", "0.5", "--m", "3", "--compute", "modeled:1e9",
+            "--max-rounds", "250", "--speeds", "1,1,0.5", "--weighted-partition",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let args = schema.parse(&argv).unwrap();
+        let spec = spec_from_args(&args).unwrap();
+        assert_eq!(spec.kind(), AlgoKind::Dane);
+        match &spec.algo {
+            AlgoParams::Dane(d) => assert_eq!(d.eta, 0.5),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(spec.sim.m, 3);
+        assert_eq!(spec.sim.compute, ComputeModel::Modeled { flops_per_sec: 1e9 });
+        assert_eq!(spec.stop.max_rounds, Some(250));
+        assert_eq!(spec.sim.speeds, vec![1.0, 1.0, 0.5]);
+        assert!(spec.sim.weighted_partition);
+        // Defaults that were not provided stay at spec defaults.
+        assert_eq!(spec.stop.max_outer, 100);
+        assert_eq!(spec.stop.grad_tol, GRAD_TOL_DEFAULT);
+    }
+}

@@ -12,42 +12,34 @@
 //! disco-figures fig2 --m 3 --scale 8 --out results/shm   # then: diff -r results/shm results/tcp
 //! ```
 //!
-//! Single-algorithm runs work the same way:
+//! Single-algorithm runs are spec-backed exactly like `disco run` (same
+//! flags, `--spec` files, and per-rank checkpoint/resume):
 //!
 //! ```text
 //! disco-node run --transport tcp --rank R --world N --addr HOST:PORT --dataset rcv1s --algo disco-f
+//! disco-node run --transport tcp [...] --checkpoint-at 3 --checkpoint results/ckpt
+//! disco-node run --transport tcp [...] --resume results/ckpt
 //! ```
 //!
 //! With `--transport shm` (the default) the same subcommands execute over
 //! the in-process thread cluster — handy for diffing the two backends
 //! from one entrypoint.
 
-use disco::algorithms::{run, run_over, AlgoKind, RunConfig};
+use disco::algorithms::spec::{spec_from_args, with_spec_flags};
+use disco::algorithms::{run_over_spec, run_spec_with, CheckpointPlan};
 use disco::coordinator::experiments::{self, ExperimentConfig};
-use disco::data::registry;
-use disco::loss::LossKind;
-use disco::net::{CollectiveAlgo, TcpOptions, TcpTransport};
+use disco::net::CollectiveAlgo;
 use disco::util::cli::{Args, TransportCli, TransportKind};
 use std::time::Duration;
 
 fn main() {
-    let args = Args::new(
+    let args = CheckpointPlan::with_flags(with_spec_flags(Args::new(
         "disco-node",
         "worker process for multi-process DiSCO runs (one rank of a TCP fleet)",
-    )
+    )))
     .with_transport_flags()
-    .opt("scale", Some("4"), "dataset down-scale factor (fig2)")
-    .opt("out", Some("results"), "output directory for CSVs (rank 0 writes)")
-    .opt("max-outer", Some("60"), "outer iteration cap per run")
+    .opt("out", Some("results"), "output directory for CSVs (rank 0 writes; fig2)")
     .opt("grad-target", Some("1e-8"), "target gradient norm (fig2)")
-    .opt("collective", Some("binomial"), "collective pricing: flat | binomial | ring")
-    .opt("seed", Some("42"), "PRNG seed")
-    .opt("tau", Some("100"), "preconditioner sample count")
-    .opt("dataset", Some("tiny"), "registered dataset name (run)")
-    .opt("algo", Some("disco-f"), "disco-f | disco-s | disco | dane | cocoa+ | gd (run)")
-    .opt("loss", Some("logistic"), "logistic | quadratic | squared_hinge (run)")
-    .opt("lambda", None, "ℓ2 regularization (default: dataset registry value)")
-    .opt("grad-tol", Some("1e-8"), "stop when ‖∇f‖ ≤ this (run)")
     .switch("records", "print per-iteration convergence records (run, rank 0)");
 
     let args = match args.parse_env() {
@@ -84,12 +76,23 @@ fn main() {
 
 fn experiment_config(args: &Args, world: usize) -> Result<ExperimentConfig, String> {
     let mut cfg = ExperimentConfig {
-        scale: args.get_usize("scale").map_err(|e| e.to_string())?,
         out_dir: args.req("out").map_err(|e| e.to_string())?,
         m: world,
         ..ExperimentConfig::default()
     };
-    cfg.max_outer = args.get_usize("max-outer").map_err(|e| e.to_string())?;
+    // fig2 keeps its historical defaults (scale 4, 60 outer iterations)
+    // regardless of the spec-flag defaults — CI diffs its CSVs against
+    // `disco-figures`, which uses the same values.
+    cfg.scale = if args.provided("scale") {
+        args.get_usize("scale").map_err(|e| e.to_string())?
+    } else {
+        4
+    };
+    cfg.max_outer = if args.provided("max-outer") {
+        args.get_usize("max-outer").map_err(|e| e.to_string())?
+    } else {
+        60
+    };
     cfg.grad_target = args.get_f64("grad-target").map_err(|e| e.to_string())?;
     cfg.seed = args.get_u64("seed").map_err(|e| e.to_string())?;
     cfg.tau = args.get_usize("tau").map_err(|e| e.to_string())?;
@@ -101,8 +104,8 @@ fn experiment_config(args: &Args, world: usize) -> Result<ExperimentConfig, Stri
     Ok(cfg)
 }
 
-fn tcp_options(t: &TransportCli, cost: disco::net::CostModel) -> TcpOptions {
-    TcpOptions::new(t.rank, t.world, &t.addr)
+fn tcp_options(t: &TransportCli, cost: disco::net::CostModel) -> disco::net::TcpOptions {
+    disco::net::TcpOptions::new(t.rank, t.world, &t.addr)
         .with_timeout(Duration::from_secs_f64(t.timeout_secs))
         .with_cost(cost)
 }
@@ -120,7 +123,7 @@ fn cmd_fig2(args: &Args, transport: &TransportCli) -> Result<(), String> {
         }
         TransportKind::Tcp => {
             let cfg = experiment_config(args, transport.world)?;
-            let mut t = TcpTransport::establish(&tcp_options(transport, cfg.cost));
+            let mut t = disco::net::TcpTransport::establish(&tcp_options(transport, cfg.cost));
             match experiments::figure2_over(&cfg, &mut t).map_err(|e| e.to_string())? {
                 Some(summary) => {
                     experiments::write_summary(&cfg, "fig2_summary.txt", &summary)
@@ -136,46 +139,21 @@ fn cmd_fig2(args: &Args, transport: &TransportCli) -> Result<(), String> {
     }
 }
 
-fn run_config(args: &Args, transport: &TransportCli) -> Result<RunConfig, String> {
-    let algo = AlgoKind::parse(&args.req("algo").map_err(|e| e.to_string())?)
-        .ok_or("bad --algo")?;
-    let loss = LossKind::parse(&args.req("loss").map_err(|e| e.to_string())?)
-        .ok_or("bad --loss")?;
-    let ds_name = args.req("dataset").map_err(|e| e.to_string())?;
-    let lambda = match args.get("lambda") {
-        Some(l) => l.parse().map_err(|_| "bad --lambda")?,
-        None => registry::spec(&ds_name).map(|s| s.lambda).unwrap_or(1e-4),
-    };
-    let mut cfg = RunConfig::new(algo, loss, lambda);
-    cfg.m = transport.world.max(1);
-    cfg.tau = args.get_usize("tau").map_err(|e| e.to_string())?;
-    cfg.max_outer = args.get_usize("max-outer").map_err(|e| e.to_string())?;
-    cfg.grad_tol = args.get_f64("grad-tol").map_err(|e| e.to_string())?;
-    cfg.seed = args.get_u64("seed").map_err(|e| e.to_string())?;
-    let calgo = args.req("collective").map_err(|e| e.to_string())?;
-    match CollectiveAlgo::parse(&calgo) {
-        Some(a) => cfg.cost = cfg.cost.with_algo(a),
-        None => return Err(format!("unknown collective algorithm '{calgo}'")),
-    }
-    Ok(cfg)
-}
-
 fn cmd_run(args: &Args, transport: &TransportCli) -> Result<(), String> {
-    let cfg = run_config(args, transport)?;
-    let ds_name = args.req("dataset").map_err(|e| e.to_string())?;
-    let scale = args.get_usize("scale").map_err(|e| e.to_string())?;
-    let ds = if scale <= 1 {
-        registry::load(&ds_name)
-    } else {
-        registry::load_scaled(&ds_name, scale)
-    }
-    .ok_or_else(|| format!("unknown dataset '{ds_name}'"))?;
+    let mut spec = spec_from_args(args)?;
+    spec.sim.m = transport.world.max(1);
+    spec.validate()?;
+    let ds = spec
+        .data
+        .load()
+        .ok_or_else(|| format!("unknown dataset '{}'", spec.data.name))?;
+    let plan = CheckpointPlan::from_args(args)?;
 
     let res = match transport.kind {
-        TransportKind::Shm => Some(run(&ds, &cfg)),
+        TransportKind::Shm => Some(run_spec_with(&ds, &spec, &plan)),
         TransportKind::Tcp => {
-            let t = TcpTransport::establish(&tcp_options(transport, cfg.cost));
-            run_over(&ds, &cfg, t)
+            let t = disco::net::TcpTransport::establish(&tcp_options(transport, spec.sim.cost));
+            run_over_spec(&ds, &spec, t, &plan)
         }
     };
     match res {

@@ -3,7 +3,9 @@
 //! Driven by the `disco-figures` binary and the end-to-end benches; see
 //! DESIGN.md §4 for the experiment index.
 
-use crate::algorithms::{run, run_over, AlgoKind, RunConfig, RunResult};
+use crate::algorithms::{
+    run, run_over_spec, run_spec, AlgoKind, CheckpointPlan, RunConfig, RunResult, RunSpec,
+};
 use crate::coordinator::complexity::{
     figure1_series, table2_logistic, table2_quadratic, Table2Algo,
 };
@@ -58,7 +60,8 @@ impl ExperimentConfig {
         }
     }
 
-    fn run_config(&self, algo: AlgoKind, loss: LossKind, lambda: f64) -> RunConfig {
+    /// Flat-config form of [`ExperimentConfig::run_spec`] (legacy surface).
+    pub fn run_config(&self, algo: AlgoKind, loss: LossKind, lambda: f64) -> RunConfig {
         let mut cfg = RunConfig::new(algo, loss, lambda);
         cfg.tau = self.tau;
         cfg.m = self.m;
@@ -73,6 +76,15 @@ impl ExperimentConfig {
             cfg.local_epochs = 5;
         }
         cfg
+    }
+
+    /// The declarative artifact behind [`ExperimentConfig::run_config`]:
+    /// every regenerated figure/table run is a pure function of this
+    /// [`RunSpec`] (and the dataset name) — the same artifact `disco run
+    /// --spec` consumes, so any experiment cell can be replayed
+    /// standalone.
+    pub fn run_spec(&self, algo: AlgoKind, loss: LossKind, lambda: f64) -> RunSpec {
+        self.run_config(algo, loss, lambda).to_spec()
     }
 }
 
@@ -93,7 +105,7 @@ pub fn figure1(cfg: &ExperimentConfig) -> std::io::Result<String> {
 // ---------------------------------------------------------------------------
 
 pub fn figure2(cfg: &ExperimentConfig) -> std::io::Result<String> {
-    let summary = figure2_body(cfg, &mut |ds, rc| Some(run(ds, rc)))?;
+    let summary = figure2_body(cfg, &mut |ds, spec| Some(run_spec(ds, spec)))?;
     Ok(summary.expect("the shm runner always produces results"))
 }
 
@@ -107,12 +119,14 @@ pub fn figure2_over<T: Transport>(
     cfg: &ExperimentConfig,
     transport: &mut T,
 ) -> std::io::Result<Option<String>> {
-    figure2_body(cfg, &mut |ds, rc| run_over(ds, rc, &mut *transport))
+    figure2_body(cfg, &mut |ds, spec| {
+        run_over_spec(ds, spec, &mut *transport, &CheckpointPlan::none())
+    })
 }
 
 fn figure2_body(
     cfg: &ExperimentConfig,
-    run_one: &mut dyn FnMut(&Dataset, &RunConfig) -> Option<RunResult>,
+    run_one: &mut dyn FnMut(&Dataset, &RunSpec) -> Option<RunResult>,
 ) -> std::io::Result<Option<String>> {
     let ds = cfg.dataset("tiny");
     let lambda = registry::spec("tiny").unwrap().lambda;
@@ -123,15 +137,15 @@ fn figure2_body(
         (AlgoKind::DiscoF, "fig2_trace_disco_f.csv"),
         (AlgoKind::DiscoOrig, "fig2_trace_disco_orig.csv"),
     ] {
-        let mut rc = cfg.run_config(algo, LossKind::Logistic, lambda);
-        rc.trace = true;
-        rc.max_outer = 3; // a few outer iterations, like the paper's diagram
-        rc.grad_tol = 0.0;
+        let mut spec = cfg.run_spec(algo, LossKind::Logistic, lambda);
+        spec.sim.trace = true;
+        spec.stop.max_outer = 3; // a few outer iterations, like the paper
+        spec.stop.grad_tol = 0.0;
         // Deterministic virtual time: the emitted trace CSVs are a pure
         // function of the seed (CI diffs two back-to-back runs, and diffs
         // a 3-process TCP run against the shm run).
-        rc.compute = ComputeModel::modeled();
-        let res = match run_one(&ds, &rc) {
+        spec.sim.compute = ComputeModel::modeled();
+        let res = match run_one(&ds, &spec) {
             Some(res) => res,
             None => continue, // non-zero rank of a multi-process run
         };

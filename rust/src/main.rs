@@ -3,47 +3,40 @@
 //!
 //! ```text
 //! disco run      --dataset rcv1s --algo disco-f --loss logistic [...]
+//! disco run      --spec run.json [overrides...]
+//! disco run      --emit-spec run.json [...]        write the resolved RunSpec and exit
+//! disco run      --checkpoint-at 5 --checkpoint results/ckpt [...]
+//! disco run      --resume results/ckpt [...]       bit-identical continuation
 //! disco run      --transport tcp --rank R --world N --addr HOST:PORT [...]
 //! disco xla-run  --dataset-shape 1024x4096 --loss logistic [...]
 //! disco datasets            list the registered datasets (Table 5)
 //! disco artifacts           list loaded AOT artifacts
 //! ```
 //!
-//! With `--transport tcp` this process becomes rank R of an N-process
-//! fleet (every rank runs the same command with its own `--rank`); rank 0
-//! prints the assembled result. See `disco-node` for the dedicated worker
-//! binary and README "Running multi-process" for the rendezvous flow.
+//! Every solver knob is spec-backed: flags are declarative overrides over
+//! a [`disco::algorithms::RunSpec`] (optionally loaded from `--spec`), so
+//! the CLI, `disco-node`, `disco-figures`, and library callers all
+//! construct runs from the same artifact. With `--transport tcp` this
+//! process becomes rank R of an N-process fleet (every rank runs the same
+//! command with its own `--rank`); rank 0 prints the assembled result.
+//! See `disco-node` for the dedicated worker binary and README "Running
+//! multi-process" for the rendezvous flow.
 
-use disco::algorithms::{run, run_over, AlgoKind, RunConfig};
+use disco::algorithms::spec::{spec_from_args, with_spec_flags};
+use disco::algorithms::{run_over_spec, run_spec_with, AlgoKind, CheckpointPlan, RunSpec};
 use disco::data::registry;
-use disco::loss::LossKind;
-use disco::net::{CostModel, TcpOptions, TcpTransport};
+use disco::net::{TcpOptions, TcpTransport};
 use disco::runtime::{artifact_dir, run_disco_f_xla, Engine};
 use disco::util::cli::{Args, TransportCli, TransportKind};
 use std::time::Duration;
 
 fn main() {
-    let args = Args::new(
+    let args = CheckpointPlan::with_flags(with_spec_flags(Args::new(
         "disco",
         "Distributed Inexact Damped Newton (DiSCO-S/DiSCO-F) — Ma & Takáč 2016 reproduction",
-    )
-    .opt("dataset", Some("tiny"), "registered dataset name (see `disco datasets`)")
-    .opt("scale", Some("1"), "down-scale factor for the dataset")
-    .opt("algo", Some("disco-f"), "disco-f | disco-s | disco | dane | cocoa+ | gd")
-    .opt("loss", Some("logistic"), "logistic | quadratic | squared_hinge")
-    .opt("lambda", None, "ℓ2 regularization (default: dataset registry value)")
-    .opt("m", Some("4"), "number of simulated nodes")
-    .opt("tau", Some("100"), "preconditioner sample count (paper §5.2)")
-    .opt("mu", Some("0.01"), "preconditioner damping μ")
-    .opt("max-outer", Some("100"), "outer (Newton) iteration cap")
-    .opt("grad-tol", Some("1e-8"), "stop when ‖∇f‖ ≤ this")
-    .opt("hessian-fraction", Some("1.0"), "Fig. 5 Hessian subsampling fraction")
-    .opt("node-threads", Some("1"), "intra-node threads for the HVP kernels")
-    .opt("local-epochs", Some("5"), "CoCoA+/DANE local solver epochs")
-    .opt("seed", Some("42"), "PRNG seed")
-    .opt("net", Some("default"), "network cost model: default | zero | slow")
+    )))
     .opt("dataset-shape", Some("1024x4096"), "xla-run: dense d×n problem shape")
-    .switch("trace", "record + print the per-node activity trace (Fig. 2)")
+    .opt("emit-spec", None, "write the resolved RunSpec JSON to this path ('-' = stdout) and exit")
     .switch("records", "print the per-iteration convergence records")
     .with_transport_flags();
 
@@ -95,40 +88,6 @@ fn cmd_artifacts() -> Result<(), String> {
     Ok(())
 }
 
-fn parse_cost(s: &str) -> Result<CostModel, String> {
-    match s {
-        "default" => Ok(CostModel::default()),
-        "zero" => Ok(CostModel::zero()),
-        "slow" => Ok(CostModel::slow()),
-        other => Err(format!("unknown net model '{other}'")),
-    }
-}
-
-fn build_config(args: &Args) -> Result<RunConfig, String> {
-    let algo = AlgoKind::parse(&args.req("algo").map_err(|e| e.to_string())?)
-        .ok_or("bad --algo")?;
-    let loss = LossKind::parse(&args.req("loss").map_err(|e| e.to_string())?)
-        .ok_or("bad --loss")?;
-    let ds_name = args.req("dataset").map_err(|e| e.to_string())?;
-    let lambda = match args.get("lambda") {
-        Some(l) => l.parse().map_err(|_| "bad --lambda")?,
-        None => registry::spec(&ds_name).map(|s| s.lambda).unwrap_or(1e-4),
-    };
-    let mut cfg = RunConfig::new(algo, loss, lambda);
-    cfg.m = args.get_usize("m").map_err(|e| e.to_string())?;
-    cfg.tau = args.get_usize("tau").map_err(|e| e.to_string())?;
-    cfg.mu = args.get_f64("mu").map_err(|e| e.to_string())?;
-    cfg.max_outer = args.get_usize("max-outer").map_err(|e| e.to_string())?;
-    cfg.grad_tol = args.get_f64("grad-tol").map_err(|e| e.to_string())?;
-    cfg.hessian_fraction = args.get_f64("hessian-fraction").map_err(|e| e.to_string())?;
-    cfg.node_threads = args.get_usize("node-threads").map_err(|e| e.to_string())?.max(1);
-    cfg.local_epochs = args.get_usize("local-epochs").map_err(|e| e.to_string())?;
-    cfg.seed = args.get_u64("seed").map_err(|e| e.to_string())?;
-    cfg.cost = parse_cost(&args.req("net").map_err(|e| e.to_string())?)?;
-    cfg.trace = args.flag("trace");
-    Ok(cfg)
-}
-
 fn print_result(res: &disco::algorithms::RunResult, records: bool) {
     if records {
         println!(
@@ -159,48 +118,58 @@ fn print_result(res: &disco::algorithms::RunResult, records: bool) {
     }
 }
 
+fn describe(spec: &RunSpec, how: &str) -> String {
+    let tau = spec
+        .algo
+        .disco()
+        .map(|p| format!(", τ={}", p.tau))
+        .unwrap_or_default();
+    format!(
+        "running {} {how}, loss={}, λ={:.0e}{tau}",
+        spec.kind().name(),
+        spec.loss.name(),
+        spec.lambda
+    )
+}
+
 fn cmd_run(args: &Args) -> Result<(), String> {
-    let mut cfg = build_config(args)?;
-    let transport = TransportCli::parse(args).map_err(|e| e.to_string())?;
-    let ds_name = args.req("dataset").map_err(|e| e.to_string())?;
-    let scale = args.get_usize("scale").map_err(|e| e.to_string())?;
-    let ds = if scale <= 1 {
-        registry::load(&ds_name)
-    } else {
-        registry::load_scaled(&ds_name, scale)
+    let mut spec = spec_from_args(args)?;
+    if let Some(path) = args.get("emit-spec") {
+        let json = spec.to_json_string();
+        if path == "-" {
+            println!("{json}");
+        } else {
+            std::fs::write(&path, json).map_err(|e| format!("cannot write '{path}': {e}"))?;
+            println!("wrote {path}");
+        }
+        return Ok(());
     }
-    .ok_or_else(|| format!("unknown dataset '{ds_name}'"))?;
+    let transport = TransportCli::parse(args).map_err(|e| e.to_string())?;
+    let ds = spec
+        .data
+        .load()
+        .ok_or_else(|| format!("unknown dataset '{}'", spec.data.name))?;
+    let plan = CheckpointPlan::from_args(args)?;
     match transport.kind {
         TransportKind::Shm => {
             println!("{}", ds.describe());
-            println!(
-                "running {} on {} simulated nodes, loss={}, λ={:.0e}, τ={}",
-                cfg.algo.name(),
-                cfg.m,
-                cfg.loss.name(),
-                cfg.lambda,
-                cfg.tau
-            );
-            let res = run(&ds, &cfg);
+            println!("{}", describe(&spec, &format!("on {} simulated nodes", spec.sim.m)));
+            let res = run_spec_with(&ds, &spec, &plan);
             print_result(&res, args.flag("records"));
         }
         TransportKind::Tcp => {
-            // One genuine OS process per rank; the fleet size overrides --m.
-            cfg.m = transport.world;
+            // One genuine OS process per rank; the fleet size overrides
+            // --m.
+            spec.sim.m = transport.world;
+            spec.validate()?;
             let opts = TcpOptions::new(transport.rank, transport.world, &transport.addr)
                 .with_timeout(Duration::from_secs_f64(transport.timeout_secs))
-                .with_cost(cfg.cost);
+                .with_cost(spec.sim.cost);
             let t = TcpTransport::establish(&opts);
-            match run_over(&ds, &cfg, t) {
+            match run_over_spec(&ds, &spec, t, &plan) {
                 Some(res) => {
-                    println!(
-                        "running {} over tcp on {} processes, loss={}, λ={:.0e}, τ={}",
-                        cfg.algo.name(),
-                        cfg.m,
-                        cfg.loss.name(),
-                        cfg.lambda,
-                        cfg.tau
-                    );
+                    let how = format!("over tcp on {} processes", spec.sim.m);
+                    println!("{}", describe(&spec, &how));
                     print_result(&res, args.flag("records"));
                 }
                 None => println!("rank {}/{} done", transport.rank, transport.world),
@@ -211,7 +180,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_xla_run(args: &Args) -> Result<(), String> {
-    let mut cfg = build_config(args)?;
+    let mut spec = spec_from_args(args)?;
+    spec.algo = disco::algorithms::AlgoParams::for_kind(AlgoKind::DiscoF);
+    let mut cfg = spec.to_config();
     cfg.algo = AlgoKind::DiscoF;
     let shape = args.req("dataset-shape").map_err(|e| e.to_string())?;
     let (d, n) = shape

@@ -89,6 +89,10 @@ pub struct Cluster {
     pub straggler: Option<StragglerConfig>,
     /// How node compute advances the simulated clock.
     pub compute: ComputeModel,
+    /// Seed for the global priced ledger (session resume): the blackboard
+    /// starts from this snapshot instead of zero, continuing the
+    /// checkpointed run's accumulation bit-exactly.
+    pub initial_stats: Option<CommStats>,
 }
 
 impl Cluster {
@@ -100,6 +104,7 @@ impl Cluster {
             speeds: Vec::new(),
             straggler: None,
             compute: ComputeModel::Measured,
+            initial_stats: None,
         }
     }
 
@@ -134,6 +139,13 @@ impl Cluster {
         self
     }
 
+    /// Start the global priced ledger from a checkpointed snapshot (see
+    /// [`Cluster::initial_stats`]).
+    pub fn with_initial_stats(mut self, stats: CommStats) -> Self {
+        self.initial_stats = Some(stats);
+        self
+    }
+
     /// Run the SPMD closure on every node. The closure receives the node
     /// context and must follow SPMD discipline: all nodes execute the same
     /// sequence of collectives. A panic on any node aborts the whole run
@@ -145,6 +157,9 @@ impl Cluster {
     ) -> ClusterRun<T> {
         assert!(self.m >= 1, "cluster needs at least one node");
         let board = Arc::new(Blackboard::new(self.m, self.cost));
+        if let Some(stats) = &self.initial_stats {
+            board.seed_stats(stats.clone());
+        }
         let wall = Instant::now();
         let mut outputs: Vec<Option<(T, f64, Trace)>> = Vec::with_capacity(self.m);
         for _ in 0..self.m {

@@ -156,7 +156,7 @@ impl ComputeModel {
     }
 }
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CostModel {
     /// Per-message latency, seconds (default 50 µs).
     pub alpha: f64,

@@ -26,5 +26,6 @@ pub use cost::{CollectiveAlgo, CollectiveKind, ComputeModel, CostModel};
 pub use stats::CommStats;
 pub use trace::{Activity, Segment, Trace};
 pub use transport::{
-    Collectives, NodeCtx, ShmTransport, StragglerConfig, TcpOptions, TcpTransport, Transport,
+    Collectives, CtxState, NodeCtx, ShmTransport, StragglerConfig, TcpOptions, TcpTransport,
+    Transport,
 };

@@ -7,6 +7,7 @@
 //! claim (Table 4 lists only the vector traffic).
 
 use crate::net::cost::CollectiveKind;
+use crate::util::bytes::{put_f64, put_u64, ByteReader};
 
 /// Threshold below which a collective counts as "scalar" (α_t, β_t and the
 /// paired (num, den) bundles are ≤ 4 doubles).
@@ -67,6 +68,38 @@ impl CommStats {
     /// The paper's "rounds of communication".
     pub fn rounds(&self) -> u64 {
         self.vector_rounds
+    }
+
+    /// Little-endian binary encoding (node reports, checkpoints). The f64
+    /// field round-trips bit-exactly — the shm≡tcp and resume≡uninterrupted
+    /// equivalence guarantees depend on it.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        put_u64(buf, self.vector_rounds);
+        put_u64(buf, self.scalar_rounds);
+        put_u64(buf, self.vector_doubles);
+        put_u64(buf, self.scalar_doubles);
+        put_f64(buf, self.modeled_comm_seconds);
+        put_u64(buf, self.reduce_all);
+        put_u64(buf, self.broadcast);
+        put_u64(buf, self.reduce);
+        put_u64(buf, self.all_gather);
+        put_u64(buf, self.wire_bytes);
+    }
+
+    /// Inverse of [`CommStats::encode`].
+    pub fn decode(r: &mut ByteReader<'_>) -> Result<CommStats, String> {
+        Ok(CommStats {
+            vector_rounds: r.u64()?,
+            scalar_rounds: r.u64()?,
+            vector_doubles: r.u64()?,
+            scalar_doubles: r.u64()?,
+            modeled_comm_seconds: r.f64()?,
+            reduce_all: r.u64()?,
+            broadcast: r.u64()?,
+            reduce: r.u64()?,
+            all_gather: r.u64()?,
+            wire_bytes: r.u64()?,
+        })
     }
 
     pub fn merge(&mut self, o: &CommStats) {
@@ -132,6 +165,24 @@ mod tests {
         assert_eq!(a.vector_doubles, 300);
         assert_eq!(a.reduce, 1);
         assert_eq!(a.all_gather, 1);
+    }
+
+    #[test]
+    fn codec_round_trips_bit_exactly() {
+        let mut s = CommStats::default();
+        s.record(CollectiveKind::ReduceAll, 1024, 1.25e-4);
+        s.record(CollectiveKind::Broadcast, 2, 3.0f64.sqrt() * 1e-6);
+        s.wire_bytes = 987_654_321;
+        let mut buf = Vec::new();
+        s.encode(&mut buf);
+        let mut r = ByteReader::new(&buf);
+        let back = CommStats::decode(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back, s);
+        assert_eq!(
+            back.modeled_comm_seconds.to_bits(),
+            s.modeled_comm_seconds.to_bits()
+        );
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! synchronize it; see [`crate::net::cluster`]). The recorder renders an
 //! ASCII Gantt chart and a tidy CSV for external plotting.
 
+use crate::util::bytes::{put_f64, put_u16, put_u32, put_u8, ByteReader};
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Activity {
     Compute,
@@ -19,6 +21,24 @@ impl Activity {
             Activity::Compute => "compute",
             Activity::Idle => "idle",
             Activity::Comm => "comm",
+        }
+    }
+
+    /// Stable wire code (node reports, checkpoints).
+    pub fn code(&self) -> u8 {
+        match self {
+            Activity::Compute => 0,
+            Activity::Idle => 1,
+            Activity::Comm => 2,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Result<Activity, String> {
+        match code {
+            0 => Ok(Activity::Compute),
+            1 => Ok(Activity::Idle),
+            2 => Ok(Activity::Comm),
+            other => Err(format!("unknown activity code {other}")),
         }
     }
 
@@ -38,6 +58,34 @@ pub struct Segment {
     pub end: f64,
     pub activity: Activity,
     pub label: String,
+}
+
+impl Segment {
+    /// Little-endian binary encoding shared by the multi-process node
+    /// reports and the session checkpoint format; clocks round-trip
+    /// bit-exactly. Labels longer than `u16::MAX` bytes are truncated.
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        put_u32(buf, self.node as u32);
+        put_f64(buf, self.start);
+        put_f64(buf, self.end);
+        put_u8(buf, self.activity.code());
+        let label = self.label.as_bytes();
+        let len = label.len().min(u16::MAX as usize);
+        put_u16(buf, len as u16);
+        buf.extend_from_slice(&label[..len]);
+    }
+
+    /// Inverse of [`Segment::encode`].
+    pub fn decode(r: &mut ByteReader<'_>) -> Result<Segment, String> {
+        let node = r.u32()? as usize;
+        let start = r.f64()?;
+        let end = r.f64()?;
+        let activity = Activity::from_code(r.u8()?)?;
+        let label_len = r.u16()? as usize;
+        let label = String::from_utf8(r.take(label_len)?.to_vec())
+            .map_err(|_| "non-utf8 segment label".to_string())?;
+        Ok(Segment { node, start, end, activity, label })
+    }
 }
 
 /// Trace of one distributed run: all nodes' segments.
@@ -211,6 +259,28 @@ mod tests {
         let csv = t.to_csv();
         assert!(csv.starts_with("node,start,end,activity,label\n"));
         assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn segment_codec_round_trips() {
+        let s = Segment {
+            node: 3,
+            start: 0.125,
+            end: 2.0f64.sqrt(),
+            activity: Activity::Comm,
+            label: "reduce_all".into(),
+        };
+        let mut buf = Vec::new();
+        s.encode(&mut buf);
+        let mut r = ByteReader::new(&buf);
+        let back = Segment::decode(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.node, 3);
+        assert_eq!(back.start.to_bits(), s.start.to_bits());
+        assert_eq!(back.end.to_bits(), s.end.to_bits());
+        assert_eq!(back.activity, Activity::Comm);
+        assert_eq!(back.label, "reduce_all");
+        assert!(Activity::from_code(9).is_err());
     }
 
     #[test]

@@ -33,7 +33,7 @@
 //! results, clocks, traces, and priced [`CommStats`] on both backends.
 //! Three design rules make this hold:
 //!
-//! * every collective's combine is the *single* shared [`combine`]
+//! * every collective's combine is the *single* shared `combine`
 //!   function, and reductions always sum contributions **in rank order**
 //!   (floating-point addition is not associative, so the TCP tree moves
 //!   raw contributions to rank 0 rather than forming partial sums
@@ -98,7 +98,7 @@ struct StragglerState {
 /// [`Transport`].
 #[derive(Clone, Debug)]
 pub struct CollectiveOutcome {
-    /// Combined value delivered to this rank (see [`combine`]).
+    /// Combined value delivered to this rank (see the shared `combine`).
     pub result: Vec<f64>,
     /// Max arrival clock across ranks — start of the communication window.
     pub comm_start: f64,
@@ -144,6 +144,15 @@ pub trait Transport {
         0
     }
 
+    /// Snapshot of a backend-global priced ledger, when the backend keeps
+    /// one (the shm blackboard does; TCP's ledger *is* the per-rank mirror,
+    /// so it returns `None`). Session checkpoints capture this so a resumed
+    /// shm run can seed the fresh blackboard and keep the assembled
+    /// `RunResult::stats` bit-identical to an uninterrupted run.
+    fn global_stats(&self) -> Option<CommStats> {
+        None
+    }
+
     /// Out-of-band end-of-run report exchange (unpriced, unaccounted):
     /// every rank submits its serialized report; rank 0 receives all
     /// `world` reports in rank order, other ranks get `None`.
@@ -175,9 +184,33 @@ impl<T: Transport + ?Sized> Transport for &mut T {
         (**self).wire_bytes()
     }
 
+    fn global_stats(&self) -> Option<CommStats> {
+        (**self).global_stats()
+    }
+
     fn exchange_reports(&mut self, report: Vec<u8>) -> Option<Vec<Vec<u8>>> {
         (**self).exchange_reports(report)
     }
+}
+
+/// Backend-independent per-rank context state — everything a
+/// [`Collectives`] context carries *besides* solver state: the simulated
+/// clock, the node-local stats mirror, the activity trace, and (when
+/// straggler injection is configured) the episode stream position. This is
+/// what a session checkpoint must persist so a resumed run continues the
+/// exact timeline ([`Collectives::export_state`] /
+/// [`Collectives::import_state`]).
+#[derive(Clone, Debug)]
+pub struct CtxState {
+    /// Simulated clock, seconds.
+    pub clock: f64,
+    /// Node-local mirror of the priced communication counters.
+    pub stats: CommStats,
+    /// This rank's trace segments (empty when tracing is off).
+    pub segments: Vec<Segment>,
+    /// Straggler stream state: `(rng state, segments left in the current
+    /// episode)`; `None` when no straggler injection is configured.
+    pub straggler: Option<([u64; 4], u32)>,
 }
 
 /// The single combine implementation shared by every backend — reductions
@@ -468,6 +501,47 @@ impl<T: Transport> NodeCtx<T> {
     pub fn barrier(&mut self) {
         let _ = self.reduce_all_scalar(0.0);
     }
+
+    /// Snapshot the backend-independent context state (see [`CtxState`]).
+    pub fn export_state(&self) -> CtxState {
+        CtxState {
+            clock: self.clock,
+            stats: self.local_stats.clone(),
+            segments: self.trace.segments.clone(),
+            straggler: self
+                .straggler
+                .as_ref()
+                .map(|st| (st.rng.state(), st.remaining)),
+        }
+    }
+
+    /// Restore a [`CtxState`] snapshot, *replacing* the current clock,
+    /// stats mirror, trace, and straggler stream position. The context's
+    /// configuration (speed, compute model, straggler config, trace flag)
+    /// must already match the run that produced the snapshot.
+    pub fn import_state(&mut self, st: CtxState) -> Result<(), String> {
+        match (&mut self.straggler, st.straggler) {
+            (Some(s), Some((rng, remaining))) => {
+                s.rng = Xoshiro256pp::from_state(rng);
+                s.remaining = remaining;
+            }
+            (None, None) => {}
+            (Some(_), None) => {
+                return Err(
+                    "checkpoint has no straggler state but this context injects episodes".into(),
+                )
+            }
+            (None, Some(_)) => {
+                return Err(
+                    "checkpoint carries straggler state but this context injects none".into(),
+                )
+            }
+        }
+        self.clock = st.clock;
+        self.local_stats = st.stats;
+        self.trace.segments = st.segments;
+        Ok(())
+    }
 }
 
 /// The algorithm-facing collective surface. Every distributed algorithm is
@@ -507,6 +581,20 @@ pub trait Collectives {
     fn barrier(&mut self) {
         let _ = self.reduce_all_scalar(0.0);
     }
+
+    // --- checkpoint hooks (session resume) ---------------------------------
+
+    /// Snapshot the backend-independent context state (clock, stats mirror,
+    /// trace, straggler stream) for a checkpoint.
+    fn export_state(&self) -> CtxState;
+
+    /// Restore a snapshot taken by [`Collectives::export_state`] on a
+    /// context with the same configuration.
+    fn import_state(&mut self, st: CtxState) -> Result<(), String>;
+
+    /// Backend-global priced ledger snapshot when one exists (shm); `None`
+    /// when the per-rank mirror is the ledger (tcp).
+    fn global_stats(&self) -> Option<CommStats>;
 }
 
 impl<T: Transport> Collectives for NodeCtx<T> {
@@ -568,6 +656,18 @@ impl<T: Transport> Collectives for NodeCtx<T> {
 
     fn barrier(&mut self) {
         NodeCtx::barrier(self)
+    }
+
+    fn export_state(&self) -> CtxState {
+        NodeCtx::export_state(self)
+    }
+
+    fn import_state(&mut self, st: CtxState) -> Result<(), String> {
+        NodeCtx::import_state(self, st)
+    }
+
+    fn global_stats(&self) -> Option<CommStats> {
+        self.transport.global_stats()
     }
 }
 

@@ -14,7 +14,7 @@
 //! A panic inside one rank's SPMD closure is caught by
 //! [`Cluster::run`](crate::net::Cluster), which records the failure and
 //! [`poison`](Blackboard::poison)s both barriers so peers blocked in (or
-//! later entering) a collective unwind (with a [`PeerAbort`] payload)
+//! later entering) a collective unwind (with a `PeerAbort` payload)
 //! instead of waiting forever. (std's `Barrier` has no panic-poisoning —
 //! without this teardown a single failed node deadlocks the whole run.)
 
@@ -150,7 +150,7 @@ impl Blackboard {
     }
 
     /// Record the first failure (later ones are dropped — peers unwinding
-    /// on [`PeerAbort`] are secondary).
+    /// on `PeerAbort` are secondary).
     pub fn record_failure(&self, rank: usize, msg: String) {
         let mut failed = self.failed.lock().unwrap();
         if failed.is_none() {
@@ -165,6 +165,16 @@ impl Blackboard {
     /// Snapshot of the globally recorded communication statistics.
     pub fn stats_snapshot(&self) -> CommStats {
         self.stats.lock().unwrap().clone()
+    }
+
+    /// Seed the global ledger with a restored snapshot (session resume).
+    /// Must run before any collective: the ledger then *continues* the
+    /// checkpointed run's left-to-right accumulation, so a resumed run's
+    /// final stats are bit-identical to an uninterrupted one (f64 addition
+    /// is order-sensitive — re-summing a prefix separately would drift in
+    /// the low bits).
+    pub fn seed_stats(&self, stats: CommStats) {
+        *self.stats.lock().unwrap() = stats;
     }
 }
 
@@ -245,6 +255,13 @@ impl Transport for ShmTransport {
             depart: s.depart_clock,
             priced_doubles: s.priced_doubles,
         }
+    }
+
+    fn global_stats(&self) -> Option<CommStats> {
+        // The blackboard keeps the run-wide priced ledger (recorded once
+        // per collective by the barrier leader); checkpoints capture it so
+        // a resumed run can seed it and keep `RunResult::stats` bit-exact.
+        Some(self.board.stats_snapshot())
     }
 
     fn exchange_reports(&mut self, report: Vec<u8>) -> Option<Vec<Vec<u8>>> {

@@ -43,7 +43,7 @@
 //! Reduce/ReduceAll/Broadcast run over a **binomial tree** rooted at rank
 //! 0 (`parent(r) = r & (r−1)`): an up-phase gathers the raw per-rank
 //! contributions and arrival clocks to the root, which combines **in rank
-//! order** (see [`super::combine`]) and prices the collective; a
+//! order** (see the transport module's shared `combine`) and prices the collective; a
 //! down-phase broadcasts the result plus the synchronized clock window.
 //! Partial sums are deliberately *not* formed in-tree: floating-point
 //! addition is not associative, and moving raw contributions is what

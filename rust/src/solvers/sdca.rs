@@ -12,11 +12,12 @@ use crate::linalg::DataMatrix;
 use crate::loss::Loss;
 use crate::util::prng::Xoshiro256pp;
 
-/// Node-local SDCA state for one shard.
-pub struct SdcaLocal<'a> {
-    pub x: &'a DataMatrix,
-    pub y: &'a [f64],
-    pub loss: &'a dyn Loss,
+/// Node-local SDCA state for one shard. The struct owns only the evolving
+/// solver state (the dual block `α_j` plus cached column norms); the shard
+/// data and loss are passed to each call, so distributed drivers can hold
+/// the state in a long-lived per-rank object — and serialize `alpha` into
+/// a session checkpoint — without self-referential borrows.
+pub struct SdcaLocal {
     /// Global regularization λ and global sample count n.
     pub lambda: f64,
     pub n_global: usize,
@@ -28,22 +29,11 @@ pub struct SdcaLocal<'a> {
     norms_sq: Vec<f64>,
 }
 
-impl<'a> SdcaLocal<'a> {
-    pub fn new(
-        x: &'a DataMatrix,
-        y: &'a [f64],
-        loss: &'a dyn Loss,
-        lambda: f64,
-        n_global: usize,
-        sigma: f64,
-    ) -> Self {
+impl SdcaLocal {
+    pub fn new(x: &DataMatrix, lambda: f64, n_global: usize, sigma: f64) -> Self {
         let n_local = x.ncols();
-        assert_eq!(y.len(), n_local);
         let norms_sq = (0..n_local).map(|j| x.col_norm_sq(j)).collect();
         Self {
-            x,
-            y,
-            loss,
             lambda,
             n_global,
             sigma,
@@ -54,14 +44,25 @@ impl<'a> SdcaLocal<'a> {
 
     /// Run `epochs` passes of SDCA against the (fixed) global iterate `w`.
     /// Returns the accumulated primal delta `Δv = (1/λn) X_j Δα_j` that
-    /// CoCoA+ aggregates with one ReduceAll.
+    /// CoCoA+ aggregates with one ReduceAll. `x`/`y` must be the shard the
+    /// state was built for.
     ///
     /// Margins are computed against `w + σ′·Δv_local`, the "adding"
     /// subproblem's local view of the moving iterate.
-    pub fn epoch(&mut self, w: &[f64], epochs: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
-        let d = self.x.nrows();
+    pub fn epoch(
+        &mut self,
+        x: &DataMatrix,
+        y: &[f64],
+        loss: &dyn Loss,
+        w: &[f64],
+        epochs: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> Vec<f64> {
+        let d = x.nrows();
         assert_eq!(w.len(), d);
         let n_local = self.alpha.len();
+        assert_eq!(x.ncols(), n_local, "shard does not match the SDCA state");
+        assert_eq!(y.len(), n_local);
         let inv_ln = 1.0 / (self.lambda * self.n_global as f64);
         let mut dv = vec![0.0; d];
         // w_local = w + σ′·Δv, maintained incrementally.
@@ -69,16 +70,16 @@ impl<'a> SdcaLocal<'a> {
         for _ in 0..epochs {
             for _ in 0..n_local {
                 let j = rng.index(n_local);
-                let z = self.x.col_dot(j, &w_local);
+                let z = x.col_dot(j, &w_local);
                 let q = self.sigma * self.norms_sq[j] * inv_ln;
-                let delta = self.loss.sdca_delta(self.y[j], z, self.alpha[j], q);
+                let delta = loss.sdca_delta(y[j], z, self.alpha[j], q);
                 if delta == 0.0 {
                     continue;
                 }
                 self.alpha[j] += delta;
                 let coef = delta * inv_ln;
-                self.x.col_axpy(j, coef, &mut dv);
-                self.x.col_axpy(j, self.sigma * coef, &mut w_local);
+                x.col_axpy(j, coef, &mut dv);
+                x.col_axpy(j, self.sigma * coef, &mut w_local);
             }
         }
         dv
@@ -86,10 +87,10 @@ impl<'a> SdcaLocal<'a> {
 
     /// Local dual objective contribution `−(1/n) Σ φ*(−α_i)` (the ‖v‖² part
     /// is global and added by the caller).
-    pub fn dual_data_term(&self) -> f64 {
+    pub fn dual_data_term(&self, y: &[f64], loss: &dyn Loss) -> f64 {
         let mut s = 0.0;
-        for (a, y) in self.alpha.iter().zip(self.y.iter()) {
-            s -= self.loss.conjugate(-a, *y);
+        for (a, yi) in self.alpha.iter().zip(y.iter()) {
+            s -= loss.conjugate(-a, *yi);
         }
         s / self.n_global as f64
     }
@@ -111,10 +112,10 @@ mod tests {
             .map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 })
             .collect();
         let lambda = 0.05;
-        let mut local = SdcaLocal::new(&x, &y, loss, lambda, n, 1.0);
+        let mut local = SdcaLocal::new(&x, lambda, n, 1.0);
         let mut w = vec![0.0; d];
         for _ in 0..80 {
-            let dv = local.epoch(&w, 1, &mut rng);
+            let dv = local.epoch(&x, &y, loss, &w, 1, &mut rng);
             for (wi, di) in w.iter_mut().zip(dv.iter()) {
                 *wi += di;
             }
@@ -150,16 +151,16 @@ mod tests {
         let lambda = 0.1;
         let loss = Quadratic;
         let obj = Objective::new(&x, &y, &loss, lambda);
-        let mut local = SdcaLocal::new(&x, &y, &loss, lambda, n, 1.0);
+        let mut local = SdcaLocal::new(&x, lambda, n, 1.0);
         let mut w = vec![0.0; d];
         let mut gaps = Vec::new();
         for _ in 0..30 {
-            let dv = local.epoch(&w, 1, &mut rng);
+            let dv = local.epoch(&x, &y, &loss, &w, 1, &mut rng);
             for (wi, di) in w.iter_mut().zip(dv.iter()) {
                 *wi += di;
             }
             let primal = obj.value(&w);
-            let dual = local.dual_data_term() - 0.5 * lambda * ops::norm2_sq(&w);
+            let dual = local.dual_data_term(&y, &loss) - 0.5 * lambda * ops::norm2_sq(&w);
             let gap = primal - dual;
             assert!(gap > -1e-9, "weak duality violated: {gap}");
             gaps.push(gap);
@@ -185,18 +186,18 @@ mod tests {
         let obj = Objective::new(&x, &y, &loss, lambda);
         let xa = x.col_block(0, 30);
         let xb = x.col_block(30, 60);
-        let mut la = SdcaLocal::new(&xa, &y[..30], &loss, lambda, n, 2.0);
-        let mut lb = SdcaLocal::new(&xb, &y[30..], &loss, lambda, n, 2.0);
+        let mut la = SdcaLocal::new(&xa, lambda, n, 2.0);
+        let mut lb = SdcaLocal::new(&xb, lambda, n, 2.0);
         let mut w = vec![0.0; d];
         let mut prev_dual = f64::NEG_INFINITY;
         for it in 0..40 {
-            let da = la.epoch(&w, 1, &mut rng);
-            let db = lb.epoch(&w, 1, &mut rng);
+            let da = la.epoch(&xa, &y[..30], &loss, &w, 1, &mut rng);
+            let db = lb.epoch(&xb, &y[30..], &loss, &w, 1, &mut rng);
             for i in 0..d {
                 w[i] += da[i] + db[i];
             }
-            let dual =
-                la.dual_data_term() + lb.dual_data_term() - 0.5 * lambda * ops::norm2_sq(&w);
+            let dual = la.dual_data_term(&y[..30], &loss) + lb.dual_data_term(&y[30..], &loss)
+                - 0.5 * lambda * ops::norm2_sq(&w);
             assert!(
                 dual >= prev_dual - 1e-9,
                 "dual decreased at iter {it}: {prev_dual} → {dual}"

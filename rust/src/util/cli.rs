@@ -137,6 +137,13 @@ impl Args {
         *self.switches.get(name).unwrap_or(&false)
     }
 
+    /// True when the flag was explicitly given on the command line
+    /// (declared defaults don't count). Spec-backed CLIs use this to apply
+    /// only the user's overrides on top of a loaded `--spec` file.
+    pub fn provided(&self, name: &str) -> bool {
+        self.values.contains_key(name) || self.switches.contains_key(name)
+    }
+
     pub fn get(&self, name: &str) -> Option<String> {
         if let Some(v) = self.values.get(name) {
             return Some(v.clone());
@@ -307,6 +314,15 @@ mod tests {
     #[test]
     fn missing_value_rejected() {
         assert!(schema().parse(&argv(&["--tau"])).is_err());
+    }
+
+    #[test]
+    fn provided_distinguishes_defaults_from_explicit() {
+        let a = schema().parse(&argv(&["--tau", "50", "--verbose"])).unwrap();
+        assert!(a.provided("tau"));
+        assert!(a.provided("verbose"));
+        assert!(!a.provided("dataset"), "default must not count as provided");
+        assert!(!a.provided("lambda"));
     }
 
     #[test]

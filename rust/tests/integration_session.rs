@@ -1,0 +1,178 @@
+//! Integration: the step-wise Session/RunSpec stack must be a faithful
+//! re-skin of the legacy run-to-completion API — spec-driven runs (even
+//! after a JSON round trip) bit-identical to `run(ds, cfg)`, and a
+//! checkpointed-then-resumed run bit-identical to an uninterrupted one —
+//! for all six algorithms under the deterministic modeled clock.
+
+use disco::algorithms::{
+    run, run_spec, run_spec_with, AlgoKind, CheckpointPlan, RunConfig, RunResult, RunSpec,
+};
+use disco::data::SyntheticConfig;
+use disco::loss::LossKind;
+use disco::net::{ComputeModel, CostModel, StragglerConfig};
+
+fn tiny(seed: u64) -> disco::data::Dataset {
+    SyntheticConfig::new("tiny", 96, 48)
+        .density(0.2)
+        .label_noise(0.05)
+        .seed(seed)
+        .generate()
+}
+
+/// A config that runs a fixed number of outer iterations (grad_tol 0) with
+/// the fully deterministic clock, tracing on so the comparison covers the
+/// Figure-2 timeline too.
+fn base_cfg(algo: AlgoKind, loss: LossKind) -> RunConfig {
+    let mut c = RunConfig::new(algo, loss, 1e-2);
+    c.m = 3;
+    c.tau = 12;
+    c.grad_tol = 0.0;
+    c.max_outer = 5;
+    c.cost = CostModel::default();
+    c.compute = ComputeModel::modeled();
+    c.trace = true;
+    c.seed = 7;
+    c.local_epochs = 2;
+    c.sag_max_epochs = 5;
+    c
+}
+
+/// Bit-level RunResult comparison (everything except wallclock).
+fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.algo, b.algo, "{what}: algo");
+    assert_eq!(a.converged, b.converged, "{what}: converged");
+    assert_eq!(
+        a.sim_seconds.to_bits(),
+        b.sim_seconds.to_bits(),
+        "{what}: sim_seconds {} vs {}",
+        a.sim_seconds,
+        b.sim_seconds
+    );
+    assert_eq!(a.stats, b.stats, "{what}: CommStats");
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(ra.outer, rb.outer, "{what}: outer");
+        assert_eq!(ra.rounds, rb.rounds, "{what}: rounds");
+        assert_eq!(ra.scalar_rounds, rb.scalar_rounds, "{what}: scalar rounds");
+        assert_eq!(ra.vector_doubles, rb.vector_doubles, "{what}: doubles");
+        assert_eq!(ra.inner_iters, rb.inner_iters, "{what}: inner iters");
+        assert_eq!(ra.sim_time.to_bits(), rb.sim_time.to_bits(), "{what}: sim_time");
+        assert_eq!(ra.grad_norm.to_bits(), rb.grad_norm.to_bits(), "{what}: grad_norm");
+        assert_eq!(ra.fval.to_bits(), rb.fval.to_bits(), "{what}: fval");
+    }
+    assert_eq!(a.w.len(), b.w.len(), "{what}: iterate length");
+    for (wa, wb) in a.w.iter().zip(b.w.iter()) {
+        assert_eq!(wa.to_bits(), wb.to_bits(), "{what}: iterate bits");
+    }
+    assert_eq!(a.node_ops, b.node_ops, "{what}: op counts");
+    assert_eq!(a.trace.to_csv(), b.trace.to_csv(), "{what}: trace");
+}
+
+fn ckpt_prefix(tag: &str) -> String {
+    format!(
+        "{}/disco_session_test_{tag}/ckpt",
+        std::env::temp_dir().display()
+    )
+}
+
+#[test]
+fn spec_runs_bit_identical_to_legacy_through_json() {
+    // The spec satellite's acceptance test: legacy run(ds, cfg) vs a
+    // Session run driven by the JSON-round-tripped spec — identical
+    // sim_seconds, records, CommStats, iterate, traces for all six
+    // algorithms.
+    let ds = tiny(1);
+    for &algo in AlgoKind::all() {
+        let cfg = base_cfg(algo, LossKind::Logistic);
+        let legacy = run(&ds, &cfg);
+        let json = cfg.to_spec().to_json_string();
+        let spec = RunSpec::from_json_str(&json)
+            .unwrap_or_else(|e| panic!("{}: bad spec json: {e}", algo.name()));
+        let via_spec = run_spec(&ds, &spec);
+        assert!(legacy.sim_seconds > 0.0, "{}", algo.name());
+        assert_bit_identical(&legacy, &via_spec, algo.name());
+    }
+}
+
+#[test]
+fn checkpoint_resume_bit_identical_all_algorithms() {
+    // Resume satellite: checkpoint before outer iteration 2, resume, and
+    // the final RunResult must be bit-identical to the uninterrupted run —
+    // including the mid-run checkpoint write not perturbing anything.
+    let ds = tiny(2);
+    for &algo in AlgoKind::all() {
+        let spec = base_cfg(algo, LossKind::Logistic).to_spec();
+        let prefix = ckpt_prefix(&format!("logistic_{}", algo.name().replace('+', "p")));
+        let full = run_spec(&ds, &spec);
+        assert_eq!(full.records.len(), 5, "{}", algo.name());
+        let saved = run_spec_with(&ds, &spec, &CheckpointPlan::save(&prefix, 2));
+        assert_bit_identical(&full, &saved, &format!("{} save pass", algo.name()));
+        let resumed = run_spec_with(&ds, &spec, &CheckpointPlan::resume(&prefix));
+        assert_bit_identical(&full, &resumed, &format!("{} resume", algo.name()));
+    }
+}
+
+#[test]
+fn checkpoint_resume_constant_curvature_preconditioner_paths() {
+    // Quadratic loss keeps the cached preconditioner (and, for original
+    // DiSCO, its master SAG stream) alive across outer iterations — the
+    // restore paths that must rebuild derived state without re-costing it.
+    let ds = tiny(3);
+    for &algo in &[AlgoKind::DiscoF, AlgoKind::DiscoS, AlgoKind::DiscoOrig] {
+        let spec = base_cfg(algo, LossKind::Quadratic).to_spec();
+        let prefix = ckpt_prefix(&format!("quadratic_{}", algo.name()));
+        let full = run_spec(&ds, &spec);
+        let _ = run_spec_with(&ds, &spec, &CheckpointPlan::save(&prefix, 3));
+        let resumed = run_spec_with(&ds, &spec, &CheckpointPlan::resume(&prefix));
+        assert_bit_identical(&full, &resumed, &format!("{} quadratic resume", algo.name()));
+    }
+}
+
+#[test]
+fn checkpoint_resume_with_heterogeneity_and_straggler() {
+    // The context side of the checkpoint: per-rank clocks, speed scaling,
+    // and the straggler episode RNG stream must all survive resume.
+    let ds = tiny(4);
+    let mut cfg = base_cfg(AlgoKind::DiscoF, LossKind::Logistic);
+    cfg.speeds = vec![1.0, 1.0, 0.25];
+    cfg.weighted_partition = true;
+    cfg.balanced_partition = true;
+    cfg.straggler = Some(StragglerConfig::new(0.4, 4.0, 2, 99));
+    let spec = cfg.to_spec();
+    let prefix = ckpt_prefix("hetero");
+    let full = run_spec(&ds, &spec);
+    let _ = run_spec_with(&ds, &spec, &CheckpointPlan::save(&prefix, 2));
+    let resumed = run_spec_with(&ds, &spec, &CheckpointPlan::resume(&prefix));
+    assert_bit_identical(&full, &resumed, "hetero resume");
+}
+
+#[test]
+fn checkpoint_at_zero_resumes_from_scratch() {
+    let ds = tiny(5);
+    let spec = base_cfg(AlgoKind::CocoaPlus, LossKind::Logistic).to_spec();
+    let prefix = ckpt_prefix("at_zero");
+    let full = run_spec(&ds, &spec);
+    let _ = run_spec_with(&ds, &spec, &CheckpointPlan::save(&prefix, 0));
+    let resumed = run_spec_with(&ds, &spec, &CheckpointPlan::resume(&prefix));
+    assert_bit_identical(&full, &resumed, "resume from iteration 0");
+}
+
+#[test]
+fn resumed_run_converges_like_uninterrupted() {
+    // With a real tolerance (not the forced grad_tol 0 above), a run that
+    // converges at some outer iteration > k must converge identically when
+    // resumed from k.
+    let ds = tiny(6);
+    let mut cfg = base_cfg(AlgoKind::DiscoS, LossKind::Logistic);
+    cfg.grad_tol = 1e-9;
+    cfg.max_outer = 50;
+    let spec = cfg.to_spec();
+    let full = run_spec(&ds, &spec);
+    assert!(full.converged, "baseline must converge");
+    assert!(full.records.len() > 3, "need iterations after the checkpoint");
+    let prefix = ckpt_prefix("converging");
+    let _ = run_spec_with(&ds, &spec, &CheckpointPlan::save(&prefix, 2));
+    let resumed = run_spec_with(&ds, &spec, &CheckpointPlan::resume(&prefix));
+    assert!(resumed.converged);
+    assert_bit_identical(&full, &resumed, "converging resume");
+}
