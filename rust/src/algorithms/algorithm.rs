@@ -26,8 +26,18 @@
 //!   (shards, kernels, factorizations) is rebuilt, not stored.
 //!
 //! Between `step` calls a driver can observe convergence, enforce
-//! composable stop policies, checkpoint, or (future work) re-balance the
-//! partition — the degrees of freedom the run-to-completion API hid.
+//! composable stop policies, checkpoint, or **re-balance the partition**
+//! — the degrees of freedom the run-to-completion API hid. The
+//! re-balancing hooks are the [`Handoff`] protocol: at an
+//! outer-iteration boundary a driver drains a node
+//! ([`AlgorithmNode::export_handoff`]), exchanges the cut-axis state
+//! across ranks
+//! ([`Collectives::reshard_exchange`](crate::net::Collectives)), sets a
+//! fresh node up from an externally supplied cut table
+//! ([`Algorithm::setup`] with `ranges`), and re-installs the evolving
+//! state ([`AlgorithmNode::import_handoff`]). See
+//! [`crate::algorithms::repartition`] for the driver that closes this
+//! loop from measured speeds.
 //!
 //! # Example
 //!
@@ -73,6 +83,32 @@ pub struct StepReport {
     pub converged: bool,
 }
 
+/// State one rank hands to its successor node when the partition is
+/// re-cut at an outer-iteration boundary (adaptive load balancing).
+///
+/// The evolving solver state splits cleanly in two:
+///
+/// * `cut_axis` — this rank's contiguous slice of the one global vector
+///   that is sharded on the partition axis (the iterate slice `w^[j]`
+///   for feature-partitioned DiSCO-F, the dual block `α_j` for CoCoA+;
+///   empty for algorithms whose evolving state is replicated). It must
+///   cross rank boundaries on a re-cut, via
+///   [`Collectives::reshard_exchange`](crate::net::Collectives).
+/// * `bytes` — the rank-local remainder (replicated iterate, RNG
+///   streams, metric records, op counters, flags), serialized through
+///   the same `util::bytes` codec the checkpoints use; it never leaves
+///   the rank.
+///
+/// Derived state — shards, CSR mirrors, preconditioner factorizations —
+/// is *not* carried: the successor rebuilds it from its new shard (and
+/// re-costs what the algorithm would genuinely recompute).
+pub struct Handoff {
+    /// This rank's slice of the cut-axis global vector (may be empty).
+    pub cut_axis: Vec<f64>,
+    /// Opaque rank-local payload for [`AlgorithmNode::import_handoff`].
+    pub bytes: Vec<u8>,
+}
+
 /// A distributed optimization method, as a factory for per-rank solver
 /// state. Object-safe for any fixed [`Collectives`] backend `C`, so
 /// drivers hold `Box<dyn Algorithm<C>>` / `Box<dyn AlgorithmNode<C>>` and
@@ -81,12 +117,27 @@ pub trait Algorithm<C: Collectives> {
     /// Which method this is (naming, checkpoints, result assembly).
     fn kind(&self) -> AlgoKind;
 
-    /// Build this rank's solver state: deterministic partition (every rank
-    /// computes the same cuts from `ds` + `spec`), shard extraction,
-    /// buffer allocation, and any pre-loop compute — costed through `ctx`
-    /// exactly as the legacy entrypoints did, so setup lands in the
-    /// simulated timeline.
-    fn setup(&self, ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Box<dyn AlgorithmNode<C>>;
+    /// Build this rank's solver state: deterministic cut table (every
+    /// rank computes the same cuts from `ds` + `spec`), extraction of
+    /// **only this rank's shard** from its cut range (never the full
+    /// m-shard partition — under shm that was ~m× transient work and
+    /// memory), buffer allocation, and any pre-loop compute — costed
+    /// through `ctx` exactly as the legacy entrypoints did, so setup
+    /// lands in the simulated timeline.
+    ///
+    /// `ranges` supplies an external cut table (adaptive mid-run
+    /// re-partitioning hands the *measured-speed* cuts in here); `None`
+    /// derives the deterministic default cuts from the spec's
+    /// partitioning knobs. An external table must be identical on every
+    /// rank and cover the cut axis with `spec.sim.m` contiguous,
+    /// nonempty ranges.
+    fn setup(
+        &self,
+        ctx: &mut C,
+        ds: &Dataset,
+        spec: &RunSpec,
+        ranges: Option<&[(usize, usize)]>,
+    ) -> Box<dyn AlgorithmNode<C>>;
 }
 
 /// One rank's live solver state, advanced one outer iteration at a time.
@@ -119,4 +170,35 @@ pub trait AlgorithmNode<C: Collectives> {
     /// Drain the node into its share of the run (final iterate part on the
     /// owning rank(s), records on rank 0, per-node op counts).
     fn finish(self: Box<Self>) -> NodeOutput;
+
+    // --- adaptive re-partitioning hooks ------------------------------------
+
+    /// Global cut-axis range `[lo, hi)` of this rank's shard (features
+    /// for DiSCO-F, samples for everything else).
+    fn shard_range(&self) -> (usize, usize);
+
+    /// Modeled workload of this rank's shard, in the units its cut
+    /// policy balances — sample count for the sample-partitioned
+    /// algorithms ([`weighted_ranges`](crate::data::weighted_ranges)
+    /// splits counts), `nnz + row_overhead·rows` for DiSCO-F
+    /// ([`Partition::feature_cost_cuts`](crate::data::Partition)). The
+    /// repartitioner divides this by windowed busy seconds to estimate
+    /// the rank's effective speed.
+    fn shard_work(&self) -> f64;
+
+    /// Drain this node's evolving state for a mid-run partition handoff
+    /// (the node is dead afterwards; build its successor with
+    /// [`Algorithm::setup`] + [`AlgorithmNode::import_handoff`]). Must
+    /// not touch the simulated clock.
+    fn export_handoff(&mut self) -> Handoff;
+
+    /// Install handoff state into a freshly set-up node: `cut_axis` is
+    /// the full re-assembled cut-axis global vector (empty when the
+    /// algorithm shards nothing on that axis — this node takes its
+    /// [`AlgorithmNode::shard_range`] slice of it), `bytes` the same
+    /// rank's opaque payload from [`AlgorithmNode::export_handoff`].
+    /// Derived caches are dropped/rebuilt (and re-costed by the next
+    /// step where the algorithm would genuinely recompute them). Must
+    /// not touch the simulated clock.
+    fn import_handoff(&mut self, cut_axis: &[f64], bytes: &[u8]) -> Result<(), String>;
 }

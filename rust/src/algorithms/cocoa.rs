@@ -11,12 +11,12 @@
 //! stream both evolve across outer iterations, so checkpoints serialize
 //! them and a resumed run continues the exact dual trajectory.
 
-use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, StepReport};
+use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, Handoff, StepReport};
 use crate::algorithms::common::{decode_records, encode_records, put_bool, put_vec, read_bool};
-use crate::algorithms::common::{read_vec_into, sample_partition, Recorder};
+use crate::algorithms::common::{read_vec_into, resolve_cuts, Recorder};
 use crate::algorithms::spec::{CocoaParams, RunSpec};
 use crate::algorithms::{AlgoKind, NodeOutput};
-use crate::data::Dataset;
+use crate::data::{Dataset, Partition};
 use crate::linalg::{ops, DataMatrix};
 use crate::loss::Loss;
 use crate::net::Collectives;
@@ -32,8 +32,14 @@ impl<C: Collectives> Algorithm<C> for CocoaPlus {
         AlgoKind::CocoaPlus
     }
 
-    fn setup(&self, ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Box<dyn AlgorithmNode<C>> {
-        Box::new(CocoaNode::new(ctx.rank(), ds, spec))
+    fn setup(
+        &self,
+        ctx: &mut C,
+        ds: &Dataset,
+        spec: &RunSpec,
+        ranges: Option<&[(usize, usize)]>,
+    ) -> Box<dyn AlgorithmNode<C>> {
+        Box::new(CocoaNode::new(ctx.rank(), ds, spec, ranges))
     }
 }
 
@@ -49,6 +55,9 @@ struct CocoaNode {
     n_local: usize,
     d: usize,
     nnz: f64,
+    /// Global sample range of this rank's shard (the cut axis α is
+    /// sharded on).
+    range: (usize, usize),
     // -- evolving solver state (serialized: w, α, rng stream) --
     w: Vec<f64>,
     local: SdcaLocal,
@@ -63,14 +72,41 @@ struct CocoaNode {
 }
 
 impl CocoaNode {
-    fn new(rank: usize, ds: &Dataset, spec: &RunSpec) -> CocoaNode {
+    /// Rank-local evolving state shared by the checkpoint and handoff
+    /// codecs — everything except the sample-sharded dual block α, which
+    /// the checkpoint appends and the handoff ships as cut-axis state.
+    /// One serializer to keep in sync.
+    fn save_local(&self, buf: &mut Vec<u8>) {
+        put_vec(buf, &self.w);
+        for word in self.rng.state() {
+            put_u64(buf, word);
+        }
+        put_bool(buf, self.converged);
+        encode_records(buf, &self.recorder.records);
+    }
+
+    fn restore_local(&mut self, r: &mut ByteReader<'_>) -> Result<(), String> {
+        read_vec_into(r, &mut self.w)?;
+        let state = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+        self.rng = Xoshiro256pp::from_state(state);
+        self.converged = read_bool(r)?;
+        self.recorder.records = decode_records(r)?;
+        Ok(())
+    }
+
+    fn new(
+        rank: usize,
+        ds: &Dataset,
+        spec: &RunSpec,
+        ranges: Option<&[(usize, usize)]>,
+    ) -> CocoaNode {
         let p = match &spec.algo {
             crate::algorithms::AlgoParams::CocoaPlus(p) => *p,
             other => panic!("CoCoA+ spec carries {:?}", other.kind()),
         };
-        let mut partition = sample_partition(ds, spec.sim.m, spec.sim.partition_speeds());
-        let shard = partition.shards.swap_remove(rank);
-        drop(partition);
+        let cuts = resolve_cuts(ds, spec, ranges);
+        let range = cuts[rank];
+        let shard = Partition::sample_shard(ds, rank, range);
         let x = shard.x;
         let y = shard.y;
         let n = ds.nsamples();
@@ -90,6 +126,7 @@ impl CocoaNode {
             n_local,
             d,
             nnz: x.nnz() as f64,
+            range,
             w: vec![0.0; d],
             local,
             rng,
@@ -178,23 +215,13 @@ impl<C: Collectives> AlgorithmNode<C> for CocoaNode {
     }
 
     fn save_state(&self, buf: &mut Vec<u8>) {
-        put_vec(buf, &self.w);
+        self.save_local(buf);
         put_vec(buf, &self.local.alpha);
-        for word in self.rng.state() {
-            put_u64(buf, word);
-        }
-        put_bool(buf, self.converged);
-        encode_records(buf, &self.recorder.records);
     }
 
     fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<(), String> {
-        read_vec_into(r, &mut self.w)?;
-        read_vec_into(r, &mut self.local.alpha)?;
-        let state = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
-        self.rng = Xoshiro256pp::from_state(state);
-        self.converged = read_bool(r)?;
-        self.recorder.records = decode_records(r)?;
-        Ok(())
+        self.restore_local(r)?;
+        read_vec_into(r, &mut self.local.alpha)
     }
 
     fn finish(self: Box<Self>) -> NodeOutput {
@@ -207,5 +234,42 @@ impl<C: Collectives> AlgorithmNode<C> for CocoaNode {
             ops: Default::default(),
             converged: me.converged,
         }
+    }
+
+    fn shard_range(&self) -> (usize, usize) {
+        self.range
+    }
+
+    fn shard_work(&self) -> f64 {
+        self.n_local as f64
+    }
+
+    fn export_handoff(&mut self) -> Handoff {
+        // The dual block α_j is sharded on the sample axis: rank-order
+        // concatenation reassembles the global dual vector, and the
+        // primal iterate v = w(α) is invariant under redistributing the
+        // α entries — re-sharding α preserves the optimization state
+        // exactly. The primal copy and the SDCA stream stay rank-local
+        // (the checkpoint codec minus α).
+        let mut bytes = Vec::new();
+        self.save_local(&mut bytes);
+        Handoff {
+            cut_axis: std::mem::take(&mut self.local.alpha),
+            bytes,
+        }
+    }
+
+    fn import_handoff(&mut self, cut_axis: &[f64], bytes: &[u8]) -> Result<(), String> {
+        let (lo, hi) = self.range;
+        if cut_axis.len() < hi {
+            return Err(format!(
+                "re-shard dual vector has {} entries, shard covers {lo}..{hi}",
+                cut_axis.len()
+            ));
+        }
+        self.local.alpha.copy_from_slice(&cut_axis[lo..hi]);
+        let mut r = ByteReader::new(bytes);
+        self.restore_local(&mut r)?;
+        r.finish()
     }
 }

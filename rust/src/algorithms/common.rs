@@ -2,23 +2,66 @@
 //! masks (Fig. 5), preconditioner sample selection, the damped-Newton step,
 //! and the per-iteration metric recorder.
 
+use crate::algorithms::spec::{DiscoParams, RunSpec};
 use crate::algorithms::{IterRecord, OpCounts};
-use crate::data::{Dataset, Partition};
+use crate::data::{balanced_ranges, weighted_ranges, Dataset, Partition, PartitionKind};
 use crate::linalg::DataMatrix;
 use crate::loss::Loss;
 use crate::net::Collectives;
 use crate::util::bytes::{put_f64, put_f64s, put_u32, put_u64, put_u8, ByteReader};
 use crate::util::prng::Xoshiro256pp;
 
-/// Sample partition shared by every sample-partitioned algorithm
-/// (DiSCO-S/orig, DANE, CoCoA+, GD): speed-weighted shard sizing when the
-/// heterogeneity knobs ask for it (`speeds = Some`), the uniform split
-/// otherwise. One definition so the thread cluster and the per-process TCP
-/// ranks can never diverge on shard boundaries.
-pub(crate) fn sample_partition(ds: &Dataset, m: usize, speeds: Option<&[f64]>) -> Partition {
-    match speeds {
-        Some(speeds) => Partition::by_samples_weighted(ds, speeds),
-        None => Partition::by_samples(ds, m),
+/// Per-row overhead (in nnz-equivalent flops) of a DiSCO-F PCG step
+/// beyond the HVP sweeps: ≈2τ of Woodbury apply plus ~10 of vector
+/// updates. One definition shared by the setup-time cut policy and the
+/// repartitioner's re-cut, so they can never drift.
+pub(crate) fn feature_row_overhead(p: &DiscoParams) -> f64 {
+    2.0 * p.tau as f64 + 10.0
+}
+
+/// The deterministic default cut table for `spec` — the exact ranges
+/// `Algorithm::setup` shards by when no external cut is supplied, and the
+/// repartitioner's notion of "the current partition" before any re-cut.
+/// Every rank computes the identical table (pure function of `ds` +
+/// `spec`), then extracts only its own shard, so the thread cluster and
+/// the per-process TCP ranks can never diverge on shard boundaries.
+pub(crate) fn default_cuts(ds: &Dataset, spec: &RunSpec) -> Vec<(usize, usize)> {
+    match spec.kind().cut_axis() {
+        PartitionKind::Features => {
+            let p = spec
+                .algo
+                .disco()
+                .expect("feature-partitioned algorithms carry DiscoParams");
+            let row_overhead = feature_row_overhead(p);
+            match spec.sim.partition_speeds() {
+                // Heterogeneous fleet: equalize modeled work ÷ speed.
+                Some(speeds) => Partition::feature_cost_cuts(ds, speeds, row_overhead),
+                None if p.balanced_partition => {
+                    Partition::feature_cost_cuts(ds, &vec![1.0; spec.sim.m], row_overhead)
+                }
+                None => balanced_ranges(ds.dim(), spec.sim.m),
+            }
+        }
+        PartitionKind::Samples => match spec.sim.partition_speeds() {
+            Some(speeds) => weighted_ranges(ds.nsamples(), speeds),
+            None => balanced_ranges(ds.nsamples(), spec.sim.m),
+        },
+    }
+}
+
+/// Resolve the cut table an `Algorithm::setup` shards by: the externally
+/// supplied one (adaptive re-cut) or the spec default.
+pub(crate) fn resolve_cuts(
+    ds: &Dataset,
+    spec: &RunSpec,
+    ranges: Option<&[(usize, usize)]>,
+) -> Vec<(usize, usize)> {
+    match ranges {
+        Some(r) => {
+            assert_eq!(r.len(), spec.sim.m, "external cut table must have one range per rank");
+            r.to_vec()
+        }
+        None => default_cuts(ds, spec),
     }
 }
 

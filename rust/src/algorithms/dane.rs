@@ -16,12 +16,12 @@
 //! solver state (it advances every outer iteration), so checkpoints
 //! serialize it and a resumed run draws the exact same sample sequence.
 
-use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, StepReport};
+use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, Handoff, StepReport};
 use crate::algorithms::common::{decode_records, encode_records, put_bool, put_vec, read_bool};
-use crate::algorithms::common::{read_vec_into, sample_partition, Recorder};
+use crate::algorithms::common::{read_vec_into, resolve_cuts, Recorder};
 use crate::algorithms::spec::{DaneParams, RunSpec};
 use crate::algorithms::{AlgoKind, NodeOutput};
-use crate::data::Dataset;
+use crate::data::{Dataset, Partition};
 use crate::linalg::{ops, DataMatrix};
 use crate::loss::Loss;
 use crate::net::Collectives;
@@ -37,8 +37,14 @@ impl<C: Collectives> Algorithm<C> for Dane {
         AlgoKind::Dane
     }
 
-    fn setup(&self, ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Box<dyn AlgorithmNode<C>> {
-        Box::new(DaneNode::new(ctx.rank(), ds, spec))
+    fn setup(
+        &self,
+        ctx: &mut C,
+        ds: &Dataset,
+        spec: &RunSpec,
+        ranges: Option<&[(usize, usize)]>,
+    ) -> Box<dyn AlgorithmNode<C>> {
+        Box::new(DaneNode::new(ctx.rank(), ds, spec, ranges))
     }
 }
 
@@ -60,6 +66,8 @@ struct DaneNode {
     /// Sample-share weight p_j = n_j·m/n on weighted partitions (1.0 on
     /// uniform ones — the seed arithmetic bit-for-bit).
     pj: f64,
+    /// Global sample range of this rank's shard (the cut axis).
+    range: (usize, usize),
     // -- evolving solver state (serialized) --
     w: Vec<f64>,
     rng: Xoshiro256pp,
@@ -72,14 +80,20 @@ struct DaneNode {
 }
 
 impl DaneNode {
-    fn new(rank: usize, ds: &Dataset, spec: &RunSpec) -> DaneNode {
+    fn new(
+        rank: usize,
+        ds: &Dataset,
+        spec: &RunSpec,
+        ranges: Option<&[(usize, usize)]>,
+    ) -> DaneNode {
         let p = match &spec.algo {
             crate::algorithms::AlgoParams::Dane(p) => *p,
             other => panic!("DANE spec carries {:?}", other.kind()),
         };
-        let mut partition = sample_partition(ds, spec.sim.m, spec.sim.partition_speeds());
-        let shard = partition.shards.swap_remove(rank);
-        drop(partition);
+        let uniform_cut = ranges.is_none() && spec.sim.partition_speeds().is_none();
+        let cuts = resolve_cuts(ds, spec, ranges);
+        let range = cuts[rank];
+        let shard = Partition::sample_shard(ds, rank, range);
         let x = shard.x; // d × n_j
         let y = shard.y;
         let n = ds.nsamples();
@@ -94,16 +108,17 @@ impl DaneNode {
             .fold(0.0, f64::max);
 
         // Global gradient = (1/m) Σ_j p_j ∇f_j (each f_j carries λw).
-        // On a speed-weighted partition the shards are deliberately
+        // On a weighted partition — speed knobs up front, or an adaptive
+        // re-cut handing in external ranges — the shards are deliberately
         // unequal and the classic unweighted average would silently
         // overweight the small shards' samples; the sample-share weight
-        // p_j = n_j·m/n makes Σ p_j ∇f_j / m exactly ∇f. Uniform
-        // partitions keep p_j = 1 (the seed arithmetic, bit-for-bit —
-        // including the ±1-sample shards of a non-divisible n).
-        let pj = if spec.sim.partition_speeds().is_some() {
-            n_local as f64 * spec.sim.m as f64 / n as f64
-        } else {
+        // p_j = n_j·m/n makes Σ p_j ∇f_j / m exactly ∇f. The uniform cut
+        // keeps p_j = 1 (the seed arithmetic, bit-for-bit — including
+        // the ±1-sample shards of a non-divisible n).
+        let pj = if uniform_cut {
             1.0
+        } else {
+            n_local as f64 * spec.sim.m as f64 / n as f64
         };
 
         DaneNode {
@@ -119,6 +134,7 @@ impl DaneNode {
             inv_nl: 1.0 / n_local as f64,
             lmax,
             pj,
+            range,
             w: vec![0.0; d],
             rng,
             recorder: Recorder::new(rank),
@@ -268,5 +284,29 @@ impl<C: Collectives> AlgorithmNode<C> for DaneNode {
             ops: Default::default(),
             converged: me.converged,
         }
+    }
+
+    fn shard_range(&self) -> (usize, usize) {
+        self.range
+    }
+
+    fn shard_work(&self) -> f64 {
+        self.n_local as f64
+    }
+
+    fn export_handoff(&mut self) -> Handoff {
+        // Iterate replicated, SAG stream per-rank: nothing crosses rank
+        // boundaries on a re-cut (lmax and p_j are derived, rebuilt by
+        // setup from the new shard), so the rank-local payload is exactly
+        // the checkpoint codec — one serializer to keep in sync.
+        let mut bytes = Vec::new();
+        <DaneNode as AlgorithmNode<C>>::save_state(self, &mut bytes);
+        Handoff { cut_axis: Vec::new(), bytes }
+    }
+
+    fn import_handoff(&mut self, _cut_axis: &[f64], bytes: &[u8]) -> Result<(), String> {
+        let mut r = ByteReader::new(bytes);
+        <DaneNode as AlgorithmNode<C>>::restore_state(self, &mut r)?;
+        r.finish()
     }
 }

@@ -29,11 +29,11 @@
 //! ([`Partition::by_features_cost_balanced_weighted`]), equalizing
 //! work ÷ speed.
 
-use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, StepReport};
+use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, Handoff, StepReport};
 use crate::algorithms::common::{damped_scale, forcing, hessian_scalings, precond_columns};
 use crate::algorithms::common::{decode_ops, decode_records, encode_ops, encode_records};
-use crate::algorithms::common::{put_bool, put_vec, read_bool, read_vec_into};
-use crate::algorithms::common::{HessianSubsample, Recorder};
+use crate::algorithms::common::{feature_row_overhead, put_bool, put_vec, read_bool};
+use crate::algorithms::common::{read_vec_into, resolve_cuts, HessianSubsample, Recorder};
 use crate::algorithms::spec::{DiscoParams, RunSpec};
 use crate::algorithms::{AlgoKind, NodeOutput, OpCounts};
 use crate::data::{Dataset, Partition};
@@ -43,20 +43,6 @@ use crate::net::Collectives;
 use crate::solvers::woodbury::{Woodbury, WoodburyFactory};
 use crate::util::bytes::{put_u64, ByteReader};
 
-fn make_partition(ds: &Dataset, spec: &RunSpec, p: &DiscoParams) -> Partition {
-    // Per PCG step a feature row costs its nnz (HVP) plus ≈2τ flops of
-    // Woodbury apply and ~10 flops of vector updates.
-    let row_overhead = 2.0 * p.tau as f64 + 10.0;
-    match spec.sim.partition_speeds() {
-        // Heterogeneous fleet: equalize modeled work ÷ speed.
-        Some(speeds) => Partition::by_features_cost_balanced_weighted(ds, speeds, row_overhead),
-        None if p.balanced_partition => {
-            Partition::by_features_cost_balanced(ds, spec.sim.m, row_overhead)
-        }
-        None => Partition::by_features(ds, spec.sim.m),
-    }
-}
-
 /// The DiSCO-F algorithm (factory for per-rank `DiscoFNode` state).
 pub struct DiscoF;
 
@@ -65,8 +51,14 @@ impl<C: Collectives> Algorithm<C> for DiscoF {
         AlgoKind::DiscoF
     }
 
-    fn setup(&self, ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Box<dyn AlgorithmNode<C>> {
-        Box::new(DiscoFNode::new(ctx, ds, spec))
+    fn setup(
+        &self,
+        ctx: &mut C,
+        ds: &Dataset,
+        spec: &RunSpec,
+        ranges: Option<&[(usize, usize)]>,
+    ) -> Box<dyn AlgorithmNode<C>> {
+        Box::new(DiscoFNode::new(ctx, ds, spec, ranges))
     }
 }
 
@@ -82,6 +74,10 @@ struct DiscoFNode {
     lambda: f64,
     m: usize,
     grad_tol: f64,
+    /// Global feature range of this rank's shard (the cut axis).
+    range: (usize, usize),
+    /// Per-row cost term of the feature cut policy (2τ + 10).
+    row_overhead: f64,
     subsample: HessianSubsample,
     n: usize,
     nnz: f64,
@@ -113,12 +109,41 @@ struct DiscoFNode {
 }
 
 impl DiscoFNode {
-    fn new<C: Collectives>(ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> DiscoFNode {
+    /// Rank-local evolving state shared by the checkpoint and handoff
+    /// codecs (the checkpoint prepends the iterate slice + cache flag;
+    /// the handoff ships the slice as cut-axis state and drops the
+    /// cache). One serializer to keep in sync. The op counters keep the
+    /// node's own `dim` — the current shard's size.
+    fn save_local(&self, buf: &mut Vec<u8>) {
+        put_bool(buf, self.converged);
+        put_u64(buf, self.last_inner as u64);
+        encode_ops(buf, &self.ops_count);
+        encode_records(buf, &self.recorder.records);
+    }
+
+    fn restore_local(&mut self, r: &mut ByteReader<'_>) -> Result<(), String> {
+        self.converged = read_bool(r)?;
+        self.last_inner = r.u64()? as usize;
+        let dim = self.ops_count.dim;
+        self.ops_count = decode_ops(r)?;
+        self.ops_count.dim = dim;
+        self.recorder.records = decode_records(r)?;
+        Ok(())
+    }
+
+    fn new<C: Collectives>(
+        ctx: &mut C,
+        ds: &Dataset,
+        spec: &RunSpec,
+        ranges: Option<&[(usize, usize)]>,
+    ) -> DiscoFNode {
         let p = *spec.algo.disco().expect("DiscoF needs DiscoParams");
-        let mut partition = make_partition(ds, spec, &p);
+        // Cut table first (cheap, identical on every rank), then only
+        // this rank's row block — never the full m-shard partition.
+        let cuts = resolve_cuts(ds, spec, ranges);
         let rank = ctx.rank();
-        let shard = partition.shards.swap_remove(rank);
-        drop(partition);
+        let range = cuts[rank];
+        let shard = Partition::feature_shard(ds, rank, range);
         let x = shard.x;
         let y = shard.y; // full labels (replicated)
         let n = ds.nsamples();
@@ -159,6 +184,8 @@ impl DiscoFNode {
             lambda: spec.lambda,
             m: spec.sim.m,
             grad_tol: spec.stop.grad_tol,
+            range,
+            row_overhead: feature_row_overhead(&p),
             subsample,
             n,
             nnz,
@@ -418,19 +445,13 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoFNode {
     fn save_state(&self, buf: &mut Vec<u8>) {
         put_vec(buf, &self.w);
         put_bool(buf, self.cached_precond.is_some());
-        put_bool(buf, self.converged);
-        put_u64(buf, self.last_inner as u64);
-        encode_ops(buf, &self.ops_count);
-        encode_records(buf, &self.recorder.records);
+        self.save_local(buf);
     }
 
     fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<(), String> {
         read_vec_into(r, &mut self.w)?;
         let precond_built = read_bool(r)?;
-        self.converged = read_bool(r)?;
-        self.last_inner = r.u64()? as usize;
-        self.ops_count = decode_ops(r)?;
-        self.recorder.records = decode_records(r)?;
+        self.restore_local(r)?;
         // The preconditioner itself is derived state. With constant
         // curvature (quadratic loss) the uninterrupted run built — and
         // costed — it exactly once, at outer 0; rebuild it here *without*
@@ -464,6 +485,47 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoFNode {
             ops: me.ops_count,
             converged: me.converged,
         }
+    }
+
+    fn shard_range(&self) -> (usize, usize) {
+        self.range
+    }
+
+    fn shard_work(&self) -> f64 {
+        // The measure the cost-balanced feature cut equalizes: nonzeros
+        // plus the per-row PCG overhead.
+        self.nnz + self.row_overhead * self.djf
+    }
+
+    fn export_handoff(&mut self) -> Handoff {
+        let mut bytes = Vec::new();
+        self.save_local(&mut bytes);
+        Handoff {
+            // The iterate slice w^[j] is the cut-axis state: rank-order
+            // concatenation of these IS the global iterate.
+            cut_axis: std::mem::take(&mut self.w),
+            bytes,
+        }
+    }
+
+    fn import_handoff(&mut self, cut_axis: &[f64], bytes: &[u8]) -> Result<(), String> {
+        let (lo, hi) = self.range;
+        if cut_axis.len() < hi {
+            return Err(format!(
+                "re-shard vector has {} entries, shard covers {lo}..{hi}",
+                cut_axis.len()
+            ));
+        }
+        self.w.copy_from_slice(&cut_axis[lo..hi]);
+        let mut r = ByteReader::new(bytes);
+        self.restore_local(&mut r)?;
+        r.finish()?;
+        // The preconditioner block is derived from the (new) feature
+        // slice: drop the cache so the next step rebuilds — and costs —
+        // it, which is exactly the work the algorithm genuinely redoes
+        // after a re-cut.
+        self.cached_precond = None;
+        Ok(())
     }
 }
 

@@ -31,14 +31,14 @@
 //! iterations — it lives as long as the cached factorization, i.e. only
 //! under constant curvature), and the metric records.
 
-use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, StepReport};
+use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, Handoff, StepReport};
 use crate::algorithms::common::{damped_scale, forcing, hessian_scalings, precond_columns};
 use crate::algorithms::common::{decode_ops, decode_records, encode_ops, encode_records};
-use crate::algorithms::common::{put_bool, put_vec, read_bool, read_vec_into, sample_partition};
+use crate::algorithms::common::{put_bool, put_vec, read_bool, read_vec_into, resolve_cuts};
 use crate::algorithms::common::{HessianSubsample, Recorder};
 use crate::algorithms::spec::{DiscoParams, RunSpec, SagParams};
 use crate::algorithms::{AlgoKind, AlgoParams, NodeOutput, OpCounts};
-use crate::data::Dataset;
+use crate::data::{Dataset, Partition};
 use crate::linalg::{ops, DataMatrix, HvpKernel};
 use crate::loss::Loss;
 use crate::net::Collectives;
@@ -62,8 +62,14 @@ impl<C: Collectives> Algorithm<C> for DiscoS {
         AlgoKind::DiscoS
     }
 
-    fn setup(&self, ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Box<dyn AlgorithmNode<C>> {
-        Box::new(DiscoSNode::new(ctx, ds, spec, Precond::Woodbury))
+    fn setup(
+        &self,
+        ctx: &mut C,
+        ds: &Dataset,
+        spec: &RunSpec,
+        ranges: Option<&[(usize, usize)]>,
+    ) -> Box<dyn AlgorithmNode<C>> {
+        Box::new(DiscoSNode::new(ctx, ds, spec, ranges, Precond::Woodbury))
     }
 }
 
@@ -75,8 +81,14 @@ impl<C: Collectives> Algorithm<C> for DiscoOrig {
         AlgoKind::DiscoOrig
     }
 
-    fn setup(&self, ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Box<dyn AlgorithmNode<C>> {
-        Box::new(DiscoSNode::new(ctx, ds, spec, Precond::MasterSag))
+    fn setup(
+        &self,
+        ctx: &mut C,
+        ds: &Dataset,
+        spec: &RunSpec,
+        ranges: Option<&[(usize, usize)]>,
+    ) -> Box<dyn AlgorithmNode<C>> {
+        Box::new(DiscoSNode::new(ctx, ds, spec, ranges, Precond::MasterSag))
     }
 }
 
@@ -152,8 +164,9 @@ struct DiscoSNode {
     nnz: f64,
     df: f64,
     is_master: bool,
-    /// Global sample offset of this shard (for the subsample mask).
-    offset: usize,
+    /// Global sample range of this rank's shard (the cut axis; `range.0`
+    /// offsets the subsample mask).
+    range: (usize, usize),
     precond_cols: Vec<Vec<f64>>,
     precond_factory: Option<WoodburyFactory>,
     tau_eff: usize,
@@ -181,10 +194,36 @@ struct DiscoSNode {
 }
 
 impl DiscoSNode {
+    /// Rank-local evolving state shared by the checkpoint and handoff
+    /// codecs (the checkpoint appends the preconditioner-cache tag; the
+    /// handoff drops the cache — a sample re-cut changes the master's τ
+    /// columns, so it must be rebuilt and re-costed). One serializer to
+    /// keep in sync. The op counters keep the node's own `dim`, which for
+    /// this algorithm is always the full d.
+    fn save_local(&self, buf: &mut Vec<u8>) {
+        put_vec(buf, &self.w);
+        put_bool(buf, self.converged);
+        put_u64(buf, self.last_inner as u64);
+        encode_ops(buf, &self.ops_count);
+        encode_records(buf, &self.recorder.records);
+    }
+
+    fn restore_local(&mut self, r: &mut ByteReader<'_>) -> Result<(), String> {
+        read_vec_into(r, &mut self.w)?;
+        self.converged = read_bool(r)?;
+        self.last_inner = r.u64()? as usize;
+        let dim = self.ops_count.dim;
+        self.ops_count = decode_ops(r)?;
+        self.ops_count.dim = dim;
+        self.recorder.records = decode_records(r)?;
+        Ok(())
+    }
+
     fn new<C: Collectives>(
         ctx: &mut C,
         ds: &Dataset,
         spec: &RunSpec,
+        ranges: Option<&[(usize, usize)]>,
         precond_kind: Precond,
     ) -> DiscoSNode {
         let p = *spec.algo.disco().expect("DiscoS needs DiscoParams");
@@ -192,10 +231,12 @@ impl DiscoSNode {
             AlgoParams::DiscoOrig(_, sag) => *sag,
             _ => SagParams::default(),
         };
-        let mut partition = sample_partition(ds, spec.sim.m, spec.sim.partition_speeds());
+        // Cut table first (cheap, identical on every rank), then only
+        // this rank's column block.
+        let cuts = resolve_cuts(ds, spec, ranges);
         let rank = ctx.rank();
-        let shard = partition.shards.swap_remove(rank);
-        drop(partition);
+        let range = cuts[rank];
+        let shard = Partition::sample_shard(ds, rank, range);
         let x = shard.x; // d × n_j
         let y = shard.y;
         let n = ds.nsamples();
@@ -260,7 +301,7 @@ impl DiscoSNode {
             nnz: x.nnz() as f64,
             df,
             is_master,
-            offset: shard.range.0,
+            range,
             precond_cols,
             precond_factory,
             tau_eff,
@@ -309,7 +350,7 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
             self.nnz,
             self.df,
             self.is_master,
-            self.offset,
+            self.range.0,
             self.lambda,
             self.grad_tol,
             self.seed,
@@ -567,7 +608,7 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
     }
 
     fn save_state(&self, buf: &mut Vec<u8>) {
-        put_vec(buf, &self.w);
+        self.save_local(buf);
         // Preconditioner cache tag: 0 = none yet, 1 = Woodbury,
         // 2 = master SAG (rng stream + pass counter follow), 3 = worker
         // placeholder. Factorizations/columns are derived state and are
@@ -584,14 +625,10 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
             }
             Some(MasterPrecond::None) => put_u8(buf, 3),
         }
-        put_bool(buf, self.converged);
-        put_u64(buf, self.last_inner as u64);
-        encode_ops(buf, &self.ops_count);
-        encode_records(buf, &self.recorder.records);
     }
 
     fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<(), String> {
-        read_vec_into(r, &mut self.w)?;
+        self.restore_local(r)?;
         let tag = r.u8()?;
         let sag_stream = if tag == 2 {
             let state = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
@@ -599,10 +636,6 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
         } else {
             None
         };
-        self.converged = read_bool(r)?;
-        self.last_inner = r.u64()? as usize;
-        self.ops_count = decode_ops(r)?;
-        self.recorder.records = decode_records(r)?;
         // Rebuild the cached preconditioner without costing: the cache
         // only survives an outer iteration under constant curvature, where
         // the uninterrupted run built (and costed) it exactly once at
@@ -657,5 +690,36 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
             ops: me.ops_count,
             converged: me.converged,
         }
+    }
+
+    fn shard_range(&self) -> (usize, usize) {
+        self.range
+    }
+
+    fn shard_work(&self) -> f64 {
+        // The sample-count measure the weighted sample cut splits by.
+        self.n_local as f64
+    }
+
+    fn export_handoff(&mut self) -> Handoff {
+        // The iterate is replicated per rank (every rank carries a full
+        // ℝᵈ copy) — nothing is sharded on the cut axis, so the handoff
+        // stays rank-local (the checkpoint codec minus the cache tag).
+        let mut bytes = Vec::new();
+        self.save_local(&mut bytes);
+        Handoff { cut_axis: Vec::new(), bytes }
+    }
+
+    fn import_handoff(&mut self, _cut_axis: &[f64], bytes: &[u8]) -> Result<(), String> {
+        let mut r = ByteReader::new(bytes);
+        self.restore_local(&mut r)?;
+        r.finish()?;
+        // The master's preconditioner is built from its *local* first τ
+        // samples, which a sample re-cut changes: drop the cache so the
+        // next step rebuilds — and costs — it from the new shard (the
+        // master SAG stream restarts with its per-outer seed, as it does
+        // every iteration under non-constant curvature).
+        self.cached_precond = None;
+        Ok(())
     }
 }

@@ -11,12 +11,12 @@
 //! (and the metric records), which makes GD the smallest example of the
 //! solver interface.
 
-use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, StepReport};
+use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, Handoff, StepReport};
 use crate::algorithms::common::{decode_records, encode_records, put_bool, put_vec, read_bool};
-use crate::algorithms::common::{read_vec_into, sample_partition, Recorder};
+use crate::algorithms::common::{read_vec_into, resolve_cuts, Recorder};
 use crate::algorithms::spec::RunSpec;
 use crate::algorithms::{AlgoKind, NodeOutput};
-use crate::data::Dataset;
+use crate::data::{Dataset, Partition};
 use crate::linalg::{ops, DataMatrix};
 use crate::loss::Loss;
 use crate::net::Collectives;
@@ -37,8 +37,14 @@ impl<C: Collectives> Algorithm<C> for Gd {
         AlgoKind::Gd
     }
 
-    fn setup(&self, ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Box<dyn AlgorithmNode<C>> {
-        Box::new(GdNode::new(ctx.rank(), ds, spec))
+    fn setup(
+        &self,
+        ctx: &mut C,
+        ds: &Dataset,
+        spec: &RunSpec,
+        ranges: Option<&[(usize, usize)]>,
+    ) -> Box<dyn AlgorithmNode<C>> {
+        Box::new(GdNode::new(ctx.rank(), ds, spec, ranges))
     }
 }
 
@@ -54,6 +60,8 @@ struct GdNode {
     nnz: f64,
     /// Fixed 1/L step size.
     step_size: f64,
+    /// Global sample range of this rank's shard (the cut axis).
+    range: (usize, usize),
     // -- evolving solver state --
     w: Vec<f64>,
     recorder: Recorder,
@@ -65,14 +73,23 @@ struct GdNode {
 }
 
 impl GdNode {
-    fn new(rank: usize, ds: &Dataset, spec: &RunSpec) -> GdNode {
+    fn new(
+        rank: usize,
+        ds: &Dataset,
+        spec: &RunSpec,
+        ranges: Option<&[(usize, usize)]>,
+    ) -> GdNode {
         let loss = spec.loss.make();
         // Uncosted setup, like the legacy driver: the bound is a harness
-        // constant, not part of the algorithm's measured work.
+        // constant, not part of the algorithm's measured work. A mid-run
+        // re-cut rebuilds the node and repeats this O(nnz) scan even
+        // though the bound is a pure function of (ds, λ, loss) —
+        // accepted: it is uncosted wall-clock on the sanity baseline, and
+        // re-cuts are rare events.
         let lips = lipschitz(ds, spec.lambda, loss.as_ref());
-        let mut partition = sample_partition(ds, spec.sim.m, spec.sim.partition_speeds());
-        let shard = partition.shards.swap_remove(rank);
-        drop(partition);
+        let cuts = resolve_cuts(ds, spec, ranges);
+        let range = cuts[rank];
+        let shard = Partition::sample_shard(ds, rank, range);
         let x = shard.x;
         let y = shard.y;
         let d = x.nrows();
@@ -88,6 +105,7 @@ impl GdNode {
             d,
             nnz: x.nnz() as f64,
             step_size: 1.0 / lips,
+            range,
             w: vec![0.0; d],
             recorder: Recorder::new(rank),
             converged: false,
@@ -181,5 +199,28 @@ impl<C: Collectives> AlgorithmNode<C> for GdNode {
             ops: Default::default(),
             converged: me.converged,
         }
+    }
+
+    fn shard_range(&self) -> (usize, usize) {
+        self.range
+    }
+
+    fn shard_work(&self) -> f64 {
+        self.n_local as f64
+    }
+
+    fn export_handoff(&mut self) -> Handoff {
+        // Replicated iterate, no RNG: the rank-local payload is exactly
+        // the checkpoint codec — the smallest instance of the handoff
+        // protocol.
+        let mut bytes = Vec::new();
+        <GdNode as AlgorithmNode<C>>::save_state(self, &mut bytes);
+        Handoff { cut_axis: Vec::new(), bytes }
+    }
+
+    fn import_handoff(&mut self, _cut_axis: &[f64], bytes: &[u8]) -> Result<(), String> {
+        let mut r = ByteReader::new(bytes);
+        <GdNode as AlgorithmNode<C>>::restore_state(self, &mut r)?;
+        r.finish()
     }
 }

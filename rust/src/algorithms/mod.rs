@@ -16,10 +16,12 @@
 //! builds a rank's solver state, each `step` executes exactly one outer
 //! iteration, `finish` drains the per-rank output. The [`session`] module
 //! owns the outer loop (composable stop policies, observers,
-//! checkpoint/resume), and the [`spec`] module is the declarative
-//! [`RunSpec`] every entrypoint constructs runs from. There is no
-//! per-algorithm dispatch anywhere in this module — selection happens
-//! once, in [`AlgoParams::algorithm`].
+//! checkpoint/resume, mid-run partition handoff), the [`repartition`]
+//! module closes the adaptive load-balancing loop (measured speeds →
+//! re-cut → re-shard → resume), and the [`spec`] module is the
+//! declarative [`RunSpec`] every entrypoint constructs runs from. There
+//! is no per-algorithm dispatch anywhere in this module — selection
+//! happens once, in [`AlgoParams::algorithm`].
 //!
 //! Every run returns per-outer-iteration records of `(‖∇f‖, f, cumulative
 //! communication rounds, simulated elapsed time)` — precisely the axes of
@@ -34,21 +36,23 @@ pub mod disco_f;
 pub mod disco_s;
 pub mod gd;
 pub mod remote;
+pub mod repartition;
 pub mod session;
 pub mod spec;
 
-pub use algorithm::{Algorithm, AlgorithmNode, StepReport};
+pub use algorithm::{Algorithm, AlgorithmNode, Handoff, StepReport};
 pub use remote::{run_over, run_over_spec};
+pub use repartition::Repartitioner;
 pub use session::{
-    drive_session, node_run_spec, run_spec, run_spec_with, CheckpointPlan, Session, SessionStatus,
-    StopReason,
+    drive_session, node_run_spec, run_spec, run_spec_adaptive, run_spec_full, run_spec_with,
+    CheckpointPlan, Session, SessionStatus, StopReason,
 };
 pub use spec::{
-    AlgoParams, CocoaParams, DaneParams, DataSpec, DiscoParams, RunSpec, SagParams, SimSpec,
-    StopSpec, GRAD_TOL_DEFAULT,
+    AlgoParams, CocoaParams, DaneParams, DataSpec, DiscoParams, RepartitionPolicy,
+    RepartitionSpec, RunSpec, SagParams, SimSpec, StopSpec, GRAD_TOL_DEFAULT,
 };
 
-use crate::data::Dataset;
+use crate::data::{Dataset, PartitionKind};
 use crate::loss::LossKind;
 use crate::net::{
     Cluster, ClusterRun, Collectives, CommStats, ComputeModel, CostModel, StragglerConfig, Trace,
@@ -113,6 +117,16 @@ impl AlgoKind {
             4 => Ok(AlgoKind::CocoaPlus),
             5 => Ok(AlgoKind::Gd),
             other => Err(format!("unknown algorithm code {other}")),
+        }
+    }
+
+    /// Which data axis this algorithm shards — the axis adaptive
+    /// re-partitioning re-cuts (features for DiSCO-F, samples for the
+    /// sample-partitioned methods).
+    pub fn cut_axis(&self) -> PartitionKind {
+        match self {
+            AlgoKind::DiscoF => PartitionKind::Features,
+            _ => PartitionKind::Samples,
         }
     }
 

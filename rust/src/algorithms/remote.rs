@@ -20,7 +20,7 @@
 //! checkpoint carries).
 
 use crate::algorithms::session::{drive_session, CheckpointPlan};
-use crate::algorithms::spec::RunSpec;
+use crate::algorithms::spec::{RepartitionSpec, RunSpec};
 use crate::algorithms::{NodeOutput, OpCounts, RunConfig, RunResult};
 use crate::data::Dataset;
 use crate::net::transport::{NodeCtx, Transport};
@@ -32,11 +32,19 @@ use std::time::Instant;
 /// `Some(RunResult)` on rank 0 (assembled from every rank's report) and
 /// `None` on the other ranks. Legacy surface over [`run_over_spec`].
 pub fn run_over<T: Transport>(ds: &Dataset, cfg: &RunConfig, transport: T) -> Option<RunResult> {
-    run_over_spec(ds, &cfg.to_spec(), transport, &CheckpointPlan::none())
+    run_over_spec(
+        ds,
+        &cfg.to_spec(),
+        transport,
+        &CheckpointPlan::none(),
+        &RepartitionSpec::none(),
+    )
 }
 
 /// Run one rank's share of a spec-driven multi-process job, with optional
-/// per-rank checkpoint/resume.
+/// per-rank checkpoint/resume and adaptive mid-run re-partitioning (the
+/// re-shard exchange rides the transport's AllGather, so a real TCP fleet
+/// re-cuts exactly like the simulator).
 ///
 /// The transport's world size must equal `spec.sim.m`; heterogeneity
 /// knobs (`speeds`, `straggler`, `compute`, `trace`) apply exactly as in
@@ -46,6 +54,7 @@ pub fn run_over_spec<T: Transport>(
     spec: &RunSpec,
     transport: T,
     plan: &CheckpointPlan,
+    repartition: &RepartitionSpec,
 ) -> Option<RunResult> {
     assert_eq!(
         transport.world(),
@@ -67,7 +76,7 @@ pub fn run_over_spec<T: Transport>(
         ctx = ctx.with_straggler(s);
     }
 
-    let out = match drive_session(&mut ctx, ds, spec, plan) {
+    let (out, _recuts) = match drive_session(&mut ctx, ds, spec, plan, repartition) {
         Ok(out) => out,
         Err(e) => panic!("cluster node failed: rank {rank}: {e}"),
     };

@@ -1,0 +1,239 @@
+//! Adaptive mid-run re-partitioning — load balancing from **measured**
+//! speeds.
+//!
+//! The paper's load-balancing story (Ma & Takáč 2016; and the companion
+//! partitioning study, Ma & Takáč 2015) sizes shards by *known* relative
+//! node speeds before the run starts. Real fleets don't announce their
+//! speeds: they demonstrate them. The [`Repartitioner`] closes that loop
+//! on top of the step-wise [`Session`] driver:
+//!
+//! 1. **Observe** — over a window of `every` outer iterations it
+//!    accumulates each rank's busy (compute) seconds from the context's
+//!    always-on idle accounting
+//!    ([`Collectives::compute_seconds`](crate::net::Collectives)), and
+//!    gathers the per-rank `(busy, shard work)` table in one *free*
+//!    metrics round, so every rank sees identical data.
+//! 2. **Estimate** — effective speed of rank `j` ∝ `work_j / busy_j`:
+//!    the work units are exactly what the cut policy balances (sample
+//!    counts for the sample-partitioned algorithms, `nnz + overhead·rows`
+//!    for DiSCO-F), so the ratio is a direct quota weight.
+//! 3. **Trigger** — re-cut only when the windowed busy imbalance
+//!    `max/min` reaches `threshold`; a balanced fleet never pays the
+//!    re-shard cost.
+//! 4. **Re-cut & resume** — the session stops at the outer-iteration
+//!    boundary it is already on, re-cuts via the *same* weighted policies
+//!    the up-front heterogeneity knobs use
+//!    ([`weighted_ranges`] / [`Partition::feature_cost_cuts`]), re-shards
+//!    the cut-axis state through the handoff codec (one priced AllGather
+//!    — see [`Session::repartition`]) and resumes.
+//!
+//! Everything the decision depends on is either reduced (the probe
+//! table) or a pure function of the spec, so all ranks take the same
+//! branch — SPMD-safe on the thread cluster and on a real TCP fleet
+//! alike. Under [`ComputeModel::Modeled`](crate::net::ComputeModel) the
+//! measured busy seconds are themselves deterministic, so an adaptive
+//! run is **bit-identical across reruns and across transports**
+//! (test- and CI-enforced via the `fig2h-adaptive` double-run diff).
+//! With the trigger disabled (`every = None`) the driver adds zero
+//! communication and zero branching: the run is bit-identical to a plain
+//! [`Session`] run.
+
+use crate::algorithms::common::{default_cuts, feature_row_overhead};
+use crate::algorithms::session::Session;
+use crate::algorithms::spec::{RepartitionPolicy, RepartitionSpec, RunSpec};
+use crate::data::{weighted_ranges, Dataset, Partition, PartitionKind};
+use crate::net::Collectives;
+
+/// Per-rank adaptive load-balancing driver layered on [`Session`]; see
+/// the module docs. Construct once per run, call
+/// [`Repartitioner::after_step`] after every `Running` step.
+pub struct Repartitioner {
+    rp: RepartitionSpec,
+    /// The current cut table — identical on every rank by construction
+    /// (initial cuts and every re-cut are pure functions of reduced
+    /// data), so re-cut idempotence needs no agreement traffic. Derived
+    /// lazily at the first trigger (empty until then): `Session::setup`
+    /// already computed the identical default table, and re-deriving it
+    /// up front would double the O(nnz) row-work scan on every adaptive
+    /// run — including the balanced fleets that never re-cut.
+    ranges: Vec<(usize, usize)>,
+    /// This rank's busy-seconds mark at the start of the current window.
+    window_busy_mark: f64,
+    steps_in_window: usize,
+    recuts: usize,
+}
+
+impl Repartitioner {
+    pub fn new<C: Collectives>(
+        ctx: &C,
+        _ds: &Dataset,
+        _spec: &RunSpec,
+        rp: RepartitionSpec,
+    ) -> Repartitioner {
+        Repartitioner {
+            rp,
+            ranges: Vec::new(),
+            window_busy_mark: ctx.compute_seconds(),
+            steps_in_window: 0,
+            recuts: 0,
+        }
+    }
+
+    /// Mid-run re-cuts performed so far (identical on every rank).
+    pub fn recuts(&self) -> usize {
+        self.recuts
+    }
+
+    /// The cut table currently in force (empty while disabled or until
+    /// the first trigger evaluated one — after a re-cut it is always
+    /// populated).
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// Adopt the cut table a resumed checkpoint recorded — the baseline
+    /// for the re-cut idempotence check. No-op while the trigger is
+    /// disabled (the table is unused then).
+    pub fn set_ranges(&mut self, ranges: Vec<(usize, usize)>) {
+        if self.rp.enabled() {
+            self.ranges = ranges;
+        }
+    }
+
+    /// Observe one completed outer iteration; at window boundaries,
+    /// measure, and re-cut when the trigger fires. Returns whether a
+    /// re-cut happened. SPMD: every rank calls this after every
+    /// `Running` step; all ranks take identical branches.
+    pub fn after_step<C: Collectives>(
+        &mut self,
+        ctx: &mut C,
+        session: &mut Session<C>,
+        ds: &Dataset,
+        spec: &RunSpec,
+    ) -> Result<bool, String> {
+        let Some(every) = self.rp.every else {
+            return Ok(false);
+        };
+        self.steps_in_window += 1;
+        if self.steps_in_window < every {
+            return Ok(false);
+        }
+        self.steps_in_window = 0;
+
+        // One free metrics round gathers the per-rank (busy, work)
+        // table: each slot has exactly one contributor, so the reduced
+        // vector is the full table — identical on every rank.
+        let m = ctx.world();
+        let rank = ctx.rank();
+        let mut probe = vec![0.0; 2 * m];
+        probe[rank] = ctx.compute_seconds() - self.window_busy_mark;
+        probe[m + rank] = session.shard_work();
+        ctx.metric_reduce_all(&mut probe);
+        let (busy, work) = probe.split_at(m);
+
+        let new_ranges = self.decide(busy, work, ds, spec);
+        let did = match new_ranges {
+            Some(ranges) => {
+                session.repartition(ctx, ds, spec, &ranges)?;
+                self.ranges = ranges;
+                self.recuts += 1;
+                true
+            }
+            None => false,
+        };
+        // Fresh window either way — and never attribute the re-cut's own
+        // setup compute to the next observation window.
+        self.window_busy_mark = ctx.compute_seconds();
+        Ok(did)
+    }
+
+    /// The trigger + estimator (pure function of the reduced probe table
+    /// and the spec, so every rank decides identically). `None` = keep
+    /// the current cut.
+    fn decide(
+        &mut self,
+        busy: &[f64],
+        work: &[f64],
+        ds: &Dataset,
+        spec: &RunSpec,
+    ) -> Option<Vec<(usize, usize)>> {
+        let bmax = busy.iter().cloned().fold(0.0, f64::max);
+        let bmin = busy.iter().cloned().fold(f64::INFINITY, f64::min);
+        // An unmeasurable window (a rank that did no costed compute, or a
+        // non-finite reading) cannot support a speed estimate.
+        if bmin <= 0.0 || !bmin.is_finite() || !bmax.is_finite() {
+            return None;
+        }
+        if bmax / bmin < self.rp.threshold {
+            return None;
+        }
+        let weights: Vec<f64> = match self.rp.policy {
+            // Effective speed ∝ demonstrated throughput: shard work per
+            // busy second.
+            RepartitionPolicy::Measured => {
+                busy.iter().zip(work.iter()).map(|(b, w)| w / b).collect()
+            }
+            RepartitionPolicy::Known => {
+                if spec.sim.speeds.len() == busy.len() {
+                    spec.sim.speeds.clone()
+                } else {
+                    return None; // no configured speeds to re-cut from
+                }
+            }
+        };
+        if !weights.iter().all(|w| w.is_finite() && *w > 0.0) {
+            return None;
+        }
+        // Lazily derive the baseline the first time a trigger fires (the
+        // session computed — and shards by — the identical table).
+        if self.ranges.is_empty() {
+            self.ranges = default_cuts(ds, spec);
+        }
+        let ranges = recut(ds, spec, &weights);
+        if ranges == self.ranges {
+            None
+        } else {
+            Some(ranges)
+        }
+    }
+}
+
+/// Re-cut `spec`'s partition axis with explicit weights, via the same
+/// weighted policies the up-front heterogeneity knobs use:
+/// [`Partition::feature_cost_cuts`] (work-balanced, speed-weighted) on
+/// the feature axis, [`weighted_ranges`] on the sample axis.
+pub fn recut(ds: &Dataset, spec: &RunSpec, weights: &[f64]) -> Vec<(usize, usize)> {
+    match spec.kind().cut_axis() {
+        PartitionKind::Features => {
+            let p = spec
+                .algo
+                .disco()
+                .expect("feature-partitioned algorithms carry DiscoParams");
+            Partition::feature_cost_cuts(ds, weights, feature_row_overhead(p))
+        }
+        PartitionKind::Samples => weighted_ranges(ds.nsamples(), weights),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{AlgoKind, RunSpec};
+    use crate::data::SyntheticConfig;
+    use crate::loss::LossKind;
+
+    #[test]
+    fn recut_uses_the_axis_appropriate_policy() {
+        let ds = SyntheticConfig::new("t", 60, 30).density(0.2).seed(3).generate();
+        let mut spec = RunSpec::new(AlgoKind::DiscoF, LossKind::Logistic, 1e-2);
+        spec.sim.m = 3;
+        let f = recut(&ds, &spec, &[1.0, 1.0, 0.5]);
+        assert_eq!(f.len(), 3);
+        assert_eq!(f.last().unwrap().1, ds.dim(), "feature axis");
+        let spec = RunSpec::new(AlgoKind::Dane, LossKind::Logistic, 1e-2).with_m(3);
+        let s = recut(&ds, &spec, &[1.0, 1.0, 0.5]);
+        assert_eq!(s.last().unwrap().1, ds.nsamples(), "sample axis");
+        // The straggler's shard shrinks on both axes.
+        assert!(s[2].1 - s[2].0 < s[0].1 - s[0].0);
+    }
+}

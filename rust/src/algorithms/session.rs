@@ -21,12 +21,19 @@
 //! little-endian codec of [`crate::util::bytes`]:
 //!
 //! ```text
-//! "DSK1" | algo u8 | rank u32 | world u32 | outer u64
+//! "DSK2" | algo u8 | rank u32 | world u32 | outer u64
+//! cuts: ncuts u32, (lo u64, hi u64)*       (0 = the spec-default cut table)
 //! global-ledger flag u8 [CommStats]        (shm blackboard snapshot)
-//! clock f64 | CommStats mirror | straggler flag u8 [rng 4×u64, left u32]
+//! clock f64 | busy f64 | CommStats mirror | straggler flag u8 [rng 4×u64, left u32]
 //! trace: nseg u32, Segment*                (empty when tracing is off)
 //! algorithm payload                        (AlgorithmNode::save_state)
 //! ```
+//!
+//! The cut table is recorded whenever the run had re-partitioned away
+//! from the spec defaults (adaptive load balancing), so a resumed run
+//! rebuilds its solver node on the cuts actually in force — without it,
+//! the replicated-state algorithms would restore cleanly onto the wrong
+//! shards and silently diverge.
 //!
 //! Everything *derivable* — shards, CSR mirrors, Woodbury factorizations —
 //! is rebuilt on restore without touching the simulated clock, so under
@@ -38,13 +45,14 @@
 //! checkpoint only on the transport kind that wrote it.
 
 use crate::algorithms::algorithm::{AlgorithmNode, StepReport};
-use crate::algorithms::spec::{RunSpec, StopSpec};
+use crate::algorithms::repartition::Repartitioner;
+use crate::algorithms::spec::{RepartitionSpec, RunSpec, StopSpec};
 use crate::algorithms::{assemble, AlgoKind, NodeOutput, RunResult};
 use crate::data::Dataset;
 use crate::net::{Collectives, CommStats, CtxState, Segment};
 use crate::util::bytes::{put_f64, put_u32, put_u64, put_u8, ByteReader};
 
-const CKPT_MAGIC: &[u8; 4] = b"DSK1";
+const CKPT_MAGIC: &[u8; 4] = b"DSK2";
 
 /// Why a session stopped.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -111,14 +119,74 @@ impl<C: Collectives> Session<C> {
     /// [`Algorithm::setup`](crate::algorithms::Algorithm::setup), which
     /// costs the pre-loop compute through `ctx`).
     pub fn new(ctx: &mut C, ds: &Dataset, spec: &RunSpec) -> Session<C> {
+        Session::with_cuts(ctx, ds, spec, None)
+    }
+
+    /// [`Session::new`] on an explicit cut table: resuming a checkpoint
+    /// written after a mid-run re-cut must rebuild the solver node on the
+    /// cuts in force at save time ([`peek_cuts`]), not the spec defaults.
+    /// `None` = the spec-default cuts.
+    pub fn with_cuts(
+        ctx: &mut C,
+        ds: &Dataset,
+        spec: &RunSpec,
+        cuts: Option<&[(usize, usize)]>,
+    ) -> Session<C> {
         let algorithm = spec.algo.algorithm::<C>();
-        let node = algorithm.setup(ctx, ds, spec);
+        let node = algorithm.setup(ctx, ds, spec, cuts);
         Session {
             node,
             stop: spec.stop.clone(),
             outer: 0,
             stopped: None,
         }
+    }
+
+    /// Global cut-axis range of this rank's current shard.
+    pub fn shard_range(&self) -> (usize, usize) {
+        self.node.shard_range()
+    }
+
+    /// Modeled workload of this rank's current shard, in the units its
+    /// cut policy balances (see [`AlgorithmNode::shard_work`]).
+    pub fn shard_work(&self) -> f64 {
+        self.node.shard_work()
+    }
+
+    /// Mid-run re-partition at an outer-iteration boundary: drain the
+    /// current solver node, exchange the cut-axis state across ranks
+    /// (one priced AllGather via
+    /// [`Collectives::reshard_exchange`] — the re-shard traffic lands in
+    /// the simulated timeline), set a fresh node up from the externally
+    /// supplied cut table (costed like any setup: rebuilding shards and
+    /// preconditioner factories is work the fleet genuinely redoes), and
+    /// re-install the evolving solver state.
+    ///
+    /// SPMD contract: every rank must call this at the same boundary
+    /// with the identical `ranges`. The outer counter and stop policy
+    /// carry over; under the modeled clock the whole exchange is
+    /// bit-deterministic across reruns and across transports.
+    pub fn repartition(
+        &mut self,
+        ctx: &mut C,
+        ds: &Dataset,
+        spec: &RunSpec,
+        ranges: &[(usize, usize)],
+    ) -> Result<(), String> {
+        let handoff = self.node.export_handoff();
+        // Whether anything is sharded on the cut axis is a property of
+        // the algorithm (identical on every rank), so skipping the
+        // exchange for replicated-state methods needs no agreement round.
+        let cut_axis = if handoff.cut_axis.is_empty() {
+            Vec::new()
+        } else {
+            ctx.reshard_exchange(&handoff.cut_axis)
+        };
+        let algorithm = spec.algo.algorithm::<C>();
+        let mut node = algorithm.setup(ctx, ds, spec, Some(ranges));
+        node.import_handoff(&cut_axis, &handoff.bytes)?;
+        self.node = node;
+        Ok(())
     }
 
     /// Outer iterations completed so far (equals the restored count after
@@ -205,12 +273,30 @@ impl<C: Collectives> Session<C> {
     /// `step` calls — which is the only place the SPMD contract lets a
     /// driver run.
     pub fn checkpoint(&self, ctx: &C) -> Vec<u8> {
+        self.checkpoint_with_cuts(ctx, None)
+    }
+
+    /// [`Session::checkpoint`] recording a non-default cut table
+    /// (adaptive re-partitioning): the restore driver feeds it back to
+    /// [`Session::with_cuts`] so the rebuilt node shards exactly as the
+    /// saved run did. `None` = the run is still on the spec-default cuts.
+    pub fn checkpoint_with_cuts(&self, ctx: &C, cuts: Option<&[(usize, usize)]>) -> Vec<u8> {
         let mut buf = Vec::with_capacity(4096);
         buf.extend_from_slice(CKPT_MAGIC);
         put_u8(&mut buf, self.node.kind().code());
         put_u32(&mut buf, ctx.rank() as u32);
         put_u32(&mut buf, ctx.world() as u32);
         put_u64(&mut buf, self.outer as u64);
+        match cuts {
+            None => put_u32(&mut buf, 0),
+            Some(cuts) => {
+                put_u32(&mut buf, cuts.len() as u32);
+                for &(lo, hi) in cuts {
+                    put_u64(&mut buf, lo as u64);
+                    put_u64(&mut buf, hi as u64);
+                }
+            }
+        }
         match ctx.global_stats() {
             Some(stats) => {
                 put_u8(&mut buf, 1);
@@ -220,6 +306,7 @@ impl<C: Collectives> Session<C> {
         }
         let st = ctx.export_state();
         put_f64(&mut buf, st.clock);
+        put_f64(&mut buf, st.compute_seconds);
         st.stats.encode(&mut buf);
         match st.straggler {
             Some((rng, remaining)) => {
@@ -262,8 +349,27 @@ impl<C: Collectives> Session<C> {
                 ctx.world()
             ));
         }
+        // A checkpoint written after a mid-run re-cut records the cut
+        // table in force; the session must have been set up on it
+        // (`Session::with_cuts` + [`peek_cuts`]). Refusing here keeps the
+        // replicated-state algorithms — whose serialized vectors are
+        // full-length and would pass every size check — from silently
+        // resuming onto the wrong shards.
+        if let Some(cuts) = &header.cuts {
+            let expect = cuts.get(header.rank).copied();
+            if expect != Some(self.node.shard_range()) {
+                return Err(format!(
+                    "checkpoint was saved on cut {:?} for rank {}, session shards {:?}; \
+                     rebuild the session from the checkpoint's cut table (peek_cuts)",
+                    expect,
+                    header.rank,
+                    self.node.shard_range()
+                ));
+            }
+        }
         ctx.import_state(CtxState {
             clock: header.clock,
+            compute_seconds: header.compute_seconds,
             stats: header.mirror,
             segments: header.segments,
             straggler: header.straggler,
@@ -281,8 +387,10 @@ struct CkptHeader {
     rank: usize,
     world: usize,
     outer: usize,
+    cuts: Option<Vec<(usize, usize)>>,
     global: Option<CommStats>,
     clock: f64,
+    compute_seconds: f64,
     mirror: CommStats,
     straggler: Option<([u64; 4], u32)>,
     segments: Vec<Segment>,
@@ -296,12 +404,26 @@ fn decode_header(r: &mut ByteReader<'_>) -> Result<CkptHeader, String> {
     let rank = r.u32()? as usize;
     let world = r.u32()? as usize;
     let outer = r.u64()? as usize;
+    let ncuts = r.u32()? as usize;
+    let cuts = if ncuts == 0 {
+        None
+    } else {
+        if ncuts != world {
+            return Err(format!("checkpoint cut table has {ncuts} ranges for world {world}"));
+        }
+        let mut cuts = Vec::with_capacity(ncuts);
+        for _ in 0..ncuts {
+            cuts.push((r.u64()? as usize, r.u64()? as usize));
+        }
+        Some(cuts)
+    };
     let global = if r.u8()? == 1 {
         Some(CommStats::decode(r)?)
     } else {
         None
     };
     let clock = r.f64()?;
+    let compute_seconds = r.f64()?;
     let mirror = CommStats::decode(r)?;
     let straggler = if r.u8()? == 1 {
         let rng = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
@@ -320,8 +442,10 @@ fn decode_header(r: &mut ByteReader<'_>) -> Result<CkptHeader, String> {
         rank,
         world,
         outer,
+        cuts,
         global,
         clock,
+        compute_seconds,
         mirror,
         straggler,
         segments,
@@ -336,21 +460,43 @@ pub fn peek_global_stats(bytes: &[u8]) -> Result<Option<CommStats>, String> {
     Ok(decode_header(&mut r)?.global)
 }
 
+/// Read just the recorded cut table out of a checkpoint blob (`None` =
+/// the run was on the spec-default cuts). The resume driver feeds this to
+/// [`Session::with_cuts`] so the rebuilt node shards as the saved run did.
+pub fn peek_cuts(bytes: &[u8]) -> Result<Option<Vec<(usize, usize)>>, String> {
+    let mut r = ByteReader::new(bytes);
+    Ok(decode_header(&mut r)?.cuts)
+}
+
 // ---------------------------------------------------------------------------
 // Drivers
 // ---------------------------------------------------------------------------
 
 /// Where (and whether) a run saves / restores per-rank checkpoints. Rank
-/// `r` uses `<prefix>.rank<r>`; under shm all files land on one machine,
-/// under tcp each process touches only its own.
+/// `r` uses `<prefix>.rank<r>` for the one-shot save and
+/// `<prefix>.o<outer>.rank<r>` for periodic saves; under shm all files
+/// land on one machine, under tcp each process touches only its own.
+/// Saves and resume reads have independent prefixes: resuming a periodic
+/// save (`--resume <prefix>.o<k>`) with `--checkpoint <prefix>` keeps
+/// new saves — and the rotation window — in the original file series
+/// instead of nesting under the resume path.
 #[derive(Clone, Debug, Default)]
 pub struct CheckpointPlan {
     /// Save before executing this outer iteration (0 = before the first).
     pub save_at: Option<usize>,
-    /// Path prefix for the per-rank files.
+    /// Also save before every `k`-th outer iteration (k ≥ 1), to
+    /// outer-tagged files — long (and adaptive) runs checkpoint
+    /// periodically instead of once.
+    pub save_every: Option<usize>,
+    /// Rotation: keep only the newest `keep` periodic saves per rank,
+    /// deleting older `<prefix>.o<outer>.rank<r>` files as new ones land
+    /// (0 = keep everything). One-shot `save_at` files are never rotated.
+    pub keep: usize,
+    /// Path prefix for the per-rank save files.
     pub prefix: String,
-    /// Restore from the per-rank files before stepping.
-    pub resume: bool,
+    /// Resume source: path prefix whose per-rank files are restored
+    /// before stepping (`None` = fresh run).
+    pub resume_from: Option<String>,
 }
 
 impl CheckpointPlan {
@@ -364,16 +510,31 @@ impl CheckpointPlan {
         Self {
             save_at: Some(at),
             prefix: prefix.to_string(),
-            resume: false,
+            ..Self::default()
         }
     }
 
-    /// Resume from a previously saved prefix.
+    /// Save before every `k`-th outer iteration, keeping the newest
+    /// `keep` files per rank (0 = all).
+    pub fn save_every(prefix: &str, every: usize, keep: usize) -> Self {
+        assert!(every >= 1, "periodic saves need a period of at least 1");
+        Self {
+            save_every: Some(every),
+            keep,
+            prefix: prefix.to_string(),
+            ..Self::default()
+        }
+    }
+
+    /// Resume from a previously saved prefix (which doubles as the save
+    /// prefix for any later saves, the legacy behaviour — set
+    /// [`CheckpointPlan::prefix`] separately to keep saving in another
+    /// series).
     pub fn resume(prefix: &str) -> Self {
         Self {
-            save_at: None,
             prefix: prefix.to_string(),
-            resume: true,
+            resume_from: Some(prefix.to_string()),
+            ..Self::default()
         }
     }
 
@@ -381,8 +542,19 @@ impl CheckpointPlan {
         format!("{}.rank{rank}", self.prefix)
     }
 
+    /// Per-rank path of the periodic save taken before `outer`. Resuming
+    /// one is `--resume <prefix>.o<outer>`.
+    pub fn rank_path_at(&self, outer: usize, rank: usize) -> String {
+        format!("{}.o{outer}.rank{rank}", self.prefix)
+    }
+
+    /// Per-rank path this run resumes from, when it does.
+    pub fn resume_rank_path(&self, rank: usize) -> Option<String> {
+        self.resume_from.as_ref().map(|p| format!("{p}.rank{rank}"))
+    }
+
     fn is_none(&self) -> bool {
-        self.save_at.is_none() && !self.resume
+        self.save_at.is_none() && self.save_every.is_none() && self.resume_from.is_none()
     }
 
     /// Declare the checkpoint/resume flags shared by the `disco` and
@@ -395,63 +567,204 @@ impl CheckpointPlan {
                 Some("results/ckpt"),
                 "checkpoint prefix (per-rank files <prefix>.rankN)",
             )
+            .opt(
+                "checkpoint-every",
+                None,
+                "also save before every k-th outer iteration (<prefix>.o<k>.rankN)",
+            )
+            .opt(
+                "checkpoint-keep",
+                Some("0"),
+                "rotation: keep only the newest N periodic checkpoints per rank (0 = all)",
+            )
             .opt("resume", None, "resume from this checkpoint path prefix (run)")
     }
 
-    /// Build the plan from [`CheckpointPlan::with_flags`]. With `--resume`,
-    /// its prefix is used for both reading and any later
-    /// `--checkpoint-at` save.
+    /// Build the plan from [`CheckpointPlan::with_flags`]. An explicit
+    /// `--checkpoint` prefix always names the save series; without one,
+    /// `--resume`'s prefix doubles as the save prefix (legacy) — so a
+    /// resumed periodic run should pass `--checkpoint <orig>` to keep
+    /// rotating the original `<orig>.o<k>` files.
     pub fn from_args(args: &crate::util::cli::Args) -> Result<CheckpointPlan, String> {
         let mut plan = CheckpointPlan::none();
         if args.provided("resume") {
-            plan.resume = true;
-            plan.prefix = args.req("resume").map_err(|e| e.to_string())?;
+            plan.resume_from = Some(args.req("resume").map_err(|e| e.to_string())?);
         }
         if args.provided("checkpoint-at") {
             plan.save_at = Some(args.get_usize("checkpoint-at").map_err(|e| e.to_string())?);
-            if plan.prefix.is_empty() {
-                plan.prefix = args.req("checkpoint").map_err(|e| e.to_string())?;
+        }
+        if args.provided("checkpoint-every") {
+            let every = args.get_usize("checkpoint-every").map_err(|e| e.to_string())?;
+            if every == 0 {
+                return Err("--checkpoint-every must be at least 1".into());
             }
+            plan.save_every = Some(every);
+        }
+        plan.keep = args.get_usize("checkpoint-keep").map_err(|e| e.to_string())?;
+        if plan.save_at.is_some() || plan.save_every.is_some() {
+            plan.prefix = if !args.provided("checkpoint") && plan.resume_from.is_some() {
+                plan.resume_from.clone().unwrap()
+            } else {
+                args.req("checkpoint").map_err(|e| e.to_string())?
+            };
         }
         Ok(plan)
     }
 }
 
+/// Rotation bookkeeping for periodic saves: `saved` lists the outers with
+/// a save on disk, oldest first, the newest just appended; returns the
+/// outers whose files must be deleted so only the newest `keep` remain
+/// (`keep = 0` keeps everything).
+fn rotate_out(saved: &mut Vec<usize>, keep: usize) -> Vec<usize> {
+    if keep == 0 || saved.len() <= keep {
+        return Vec::new();
+    }
+    let drop = saved.len() - keep;
+    saved.drain(..drop).collect()
+}
+
+/// Write one rank's checkpoint blob, creating parent directories.
+fn write_checkpoint(path: &str, bytes: &[u8]) -> Result<(), String> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| format!("cannot create checkpoint dir: {e}"))?;
+        }
+    }
+    std::fs::write(path, bytes).map_err(|e| format!("cannot write checkpoint '{path}': {e}"))
+}
+
 /// Per-rank driver: build (and optionally restore) a session, run it to
-/// the stop policy, saving a checkpoint when the plan asks for one.
-/// Shared verbatim by the shm thread cluster and the multi-process
-/// transports — one loop, any backend.
+/// the stop policy, saving checkpoints when the plan asks for them and
+/// letting the [`Repartitioner`] re-cut the partition from measured
+/// speeds when its trigger fires. Shared verbatim by the shm thread
+/// cluster and the multi-process transports — one loop, any backend.
+/// Returns this rank's output plus the number of re-cuts performed
+/// (identical on every rank — the trigger decides on reduced data).
+///
+/// Combining `--resume` with adaptive re-partitioning is supported: the
+/// checkpoint records the cut table in force, the restored session is
+/// rebuilt on it, and the repartitioner adopts it as its baseline
+/// (test-enforced bit-identical continuation in
+/// `integration_adaptive.rs`). One caveat: the observation window's
+/// *phase* restarts at the resume point, so a resumed run is
+/// bit-identical to the uninterrupted one when the save landed on a
+/// window boundary (always true for `--repartition-every 1`, and for
+/// `--checkpoint-every` periods that are multiples of the window);
+/// otherwise the first post-resume check just happens up to `every − 1`
+/// iterations later — still deterministic, merely phase-shifted.
 pub fn drive_session<C: Collectives>(
     ctx: &mut C,
     ds: &Dataset,
     spec: &RunSpec,
     plan: &CheckpointPlan,
-) -> Result<NodeOutput, String> {
-    let mut session = Session::new(ctx, ds, spec);
-    if plan.resume {
-        let path = plan.rank_path(ctx.rank());
-        let bytes =
-            std::fs::read(&path).map_err(|e| format!("cannot read checkpoint '{path}': {e}"))?;
-        session.restore(ctx, &bytes)?;
+    repartition: &RepartitionSpec,
+) -> Result<(NodeOutput, usize), String> {
+    // Resume reads the blob first: a checkpoint written after a mid-run
+    // re-cut records the cut table in force, and the fresh node must be
+    // set up on it (the spec defaults would silently put the
+    // replicated-state algorithms on the wrong shards).
+    let resume_bytes = match plan.resume_rank_path(ctx.rank()) {
+        Some(path) => Some(
+            std::fs::read(&path).map_err(|e| format!("cannot read checkpoint '{path}': {e}"))?,
+        ),
+        None => None,
+    };
+    let mut active_cuts = match &resume_bytes {
+        Some(bytes) => peek_cuts(bytes)?,
+        None => None,
+    };
+    let mut session = Session::with_cuts(ctx, ds, spec, active_cuts.as_deref());
+    if let Some(bytes) = &resume_bytes {
+        session.restore(ctx, bytes)?;
+    }
+    let mut balancer = Repartitioner::new(ctx, ds, spec, repartition.clone());
+    if let Some(cuts) = &active_cuts {
+        balancer.set_ranges(cuts.clone());
+    }
+    // Rotation bookkeeping spans interrupt + resume cycles: a *resumed*
+    // run seeds it with the periodic saves already on disk in its save
+    // series (oldest first). Fresh runs start empty — files left by an
+    // unrelated earlier run under the same prefix are not this run's to
+    // rotate.
+    let mut saved: Vec<usize> = if plan.resume_from.is_some() && plan.save_every.is_some() {
+        saved_outers(plan, ctx.rank())
+    } else {
+        Vec::new()
+    };
+    // Enforce `keep` on what the interrupted run left behind right away —
+    // a resumed run that tightened the budget (or stops before its next
+    // fresh boundary) must not strand extra files. Safe even if this
+    // prunes the resume source: its bytes are already in memory.
+    for old in rotate_out(&mut saved, plan.keep) {
+        let _ = std::fs::remove_file(plan.rank_path_at(old, ctx.rank()));
     }
     loop {
-        if plan.save_at == Some(session.outer()) {
-            let path = plan.rank_path(ctx.rank());
-            if let Some(dir) = std::path::Path::new(&path).parent() {
-                if !dir.as_os_str().is_empty() {
-                    std::fs::create_dir_all(dir)
-                        .map_err(|e| format!("cannot create checkpoint dir: {e}"))?;
+        let outer = session.outer();
+        if plan.save_at == Some(outer) {
+            write_checkpoint(
+                &plan.rank_path(ctx.rank()),
+                &session.checkpoint_with_cuts(ctx, active_cuts.as_deref()),
+            )?;
+        }
+        if let Some(every) = plan.save_every {
+            if outer > 0 && outer % every == 0 {
+                // Always (re)write — idempotent for faithful resumes,
+                // corrective otherwise; the bookkeeping dedups so a
+                // re-executed boundary keeps its original rotation slot.
+                write_checkpoint(
+                    &plan.rank_path_at(outer, ctx.rank()),
+                    &session.checkpoint_with_cuts(ctx, active_cuts.as_deref()),
+                )?;
+                if !saved.contains(&outer) {
+                    saved.push(outer);
+                    for old in rotate_out(&mut saved, plan.keep) {
+                        // Best-effort prune: a hand-deleted file is fine.
+                        let _ = std::fs::remove_file(plan.rank_path_at(old, ctx.rank()));
+                    }
                 }
             }
-            std::fs::write(&path, session.checkpoint(ctx))
-                .map_err(|e| format!("cannot write checkpoint '{path}': {e}"))?;
         }
         match session.step(ctx) {
-            SessionStatus::Running(_) => {}
+            SessionStatus::Running(_) => {
+                if balancer.after_step(ctx, &mut session, ds, spec)? {
+                    active_cuts = Some(balancer.ranges().to_vec());
+                }
+            }
             SessionStatus::Stopped(..) => break,
         }
     }
-    Ok(session.finish())
+    Ok((session.finish(), balancer.recuts()))
+}
+
+/// Outers with a periodic save on disk for `rank` under `plan`'s prefix,
+/// sorted ascending — rotation bookkeeping survives interrupt + resume
+/// cycles instead of restarting empty and stranding old files.
+fn saved_outers(plan: &CheckpointPlan, rank: usize) -> Vec<usize> {
+    let prefix = std::path::Path::new(&plan.prefix);
+    let dir = match prefix.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    let Some(base) = prefix.file_name().and_then(|s| s.to_str()) else {
+        return Vec::new();
+    };
+    let suffix = format!(".rank{rank}");
+    let mut outers = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(rest) = name.strip_prefix(base) else { continue };
+            let Some(tag) = rest.strip_prefix(".o") else { continue };
+            let Some(num) = tag.strip_suffix(&suffix) else { continue };
+            if let Ok(outer) = num.parse::<usize>() {
+                outers.push(outer);
+            }
+        }
+    }
+    outers.sort_unstable();
+    outers
 }
 
 /// Run a spec over the in-process thread cluster (shm transport) — the
@@ -464,14 +777,36 @@ pub fn run_spec(ds: &Dataset, spec: &RunSpec) -> RunResult {
 /// [`run_spec`] with checkpoint/resume. Panics with `cluster node failed:
 /// …` on any rank error (matching the cluster's failure contract).
 pub fn run_spec_with(ds: &Dataset, spec: &RunSpec, plan: &CheckpointPlan) -> RunResult {
+    run_spec_full(ds, spec, plan, &RepartitionSpec::none()).0
+}
+
+/// [`run_spec`] with adaptive mid-run re-partitioning; returns the result
+/// plus the number of re-cuts the driver performed.
+pub fn run_spec_adaptive(
+    ds: &Dataset,
+    spec: &RunSpec,
+    repartition: &RepartitionSpec,
+) -> (RunResult, usize) {
+    run_spec_full(ds, spec, &CheckpointPlan::none(), repartition)
+}
+
+/// The full shm driver: checkpoint plan + adaptive re-partitioning.
+/// Panics with `cluster node failed: …` on any rank error (matching the
+/// cluster's failure contract). The returned count is the number of
+/// mid-run re-cuts (0 when the trigger is disabled or never fires).
+pub fn run_spec_full(
+    ds: &Dataset,
+    spec: &RunSpec,
+    plan: &CheckpointPlan,
+    repartition: &RepartitionSpec,
+) -> (RunResult, usize) {
     if let Err(e) = spec.validate() {
         panic!("invalid run spec: {e}");
     }
     let mut cluster = spec.sim.cluster();
-    if plan.resume {
+    if let Some(path) = plan.resume_rank_path(0) {
         // Seed the global priced ledger from the checkpoint so its f64
         // accumulation continues the interrupted run bit-exactly.
-        let path = plan.rank_path(0);
         let bytes = std::fs::read(&path)
             .unwrap_or_else(|e| panic!("cannot read checkpoint '{path}': {e}"));
         match peek_global_stats(&bytes).unwrap_or_else(|e| panic!("bad checkpoint '{path}': {e}"))
@@ -488,17 +823,28 @@ pub fn run_spec_with(ds: &Dataset, spec: &RunSpec, plan: &CheckpointPlan) -> Run
         }
     }
     let plan = plan.clone();
+    let rp = repartition.clone();
     let run = cluster.run(|ctx| {
-        if plan.is_none() {
-            // Fast path without filesystem access.
+        if plan.is_none() && !rp.enabled() {
+            // Fast path without filesystem access or balancing probes.
             let mut session = Session::new(ctx, ds, spec);
             session.run_to_stop(ctx, |_| {});
-            session.finish()
+            (session.finish(), 0usize)
         } else {
-            drive_session(ctx, ds, spec, &plan).unwrap_or_else(|e| panic!("{e}"))
+            drive_session(ctx, ds, spec, &plan, &rp).unwrap_or_else(|e| panic!("{e}"))
         }
     });
-    assemble(spec.kind(), run)
+    // Re-cut count is identical on every rank (SPMD trigger on reduced
+    // data); report rank 0's.
+    let recuts = run.outputs.first().map(|(_, r)| *r).unwrap_or(0);
+    let run = crate::net::ClusterRun {
+        outputs: run.outputs.into_iter().map(|(out, _)| out).collect(),
+        stats: run.stats,
+        trace: run.trace,
+        sim_seconds: run.sim_seconds,
+        wall_seconds: run.wall_seconds,
+    };
+    (assemble(spec.kind(), run), recuts)
 }
 
 /// Run one rank's share of a spec over any [`Collectives`] backend — the
@@ -591,6 +937,134 @@ mod tests {
         let res = run_spec(&ds, &s);
         assert!(res.records.len() < 50);
         assert!(res.sim_seconds >= 1e-9);
+    }
+
+    #[test]
+    fn rotation_keeps_only_the_newest_saves() {
+        let mut saved = Vec::new();
+        // keep = 0: nothing is ever rotated out.
+        for outer in [2, 4, 6] {
+            saved.push(outer);
+            assert!(rotate_out(&mut saved, 0).is_empty());
+        }
+        assert_eq!(saved, vec![2, 4, 6]);
+        // keep = 2: each new save beyond the window evicts the oldest.
+        let mut saved = Vec::new();
+        let mut evicted = Vec::new();
+        for outer in [2, 4, 6, 8, 10] {
+            saved.push(outer);
+            evicted.extend(rotate_out(&mut saved, 2));
+        }
+        assert_eq!(saved, vec![8, 10], "newest two stay on disk");
+        assert_eq!(evicted, vec![2, 4, 6], "older saves pruned oldest-first");
+        // keep larger than what exists: no-op.
+        let mut saved = vec![3];
+        assert!(rotate_out(&mut saved, 5).is_empty());
+        assert_eq!(saved, vec![3]);
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn checkpoint_plan_flags_parse_rotation() {
+        let schema = CheckpointPlan::with_flags(crate::util::cli::Args::new("t", "t"));
+        let a = schema
+            .clone()
+            .parse(&argv(&["--checkpoint-every", "5", "--checkpoint-keep", "3"]))
+            .unwrap();
+        let plan = CheckpointPlan::from_args(&a).unwrap();
+        assert_eq!(plan.save_every, Some(5));
+        assert_eq!(plan.keep, 3);
+        assert_eq!(plan.prefix, "results/ckpt", "default prefix applies");
+        assert!(!plan.is_none());
+        assert_eq!(plan.rank_path_at(10, 2), "results/ckpt.o10.rank2");
+        // A zero period is rejected; keep defaults to 0 (keep all).
+        let a = schema
+            .clone()
+            .parse(&argv(&["--checkpoint-every", "0"]))
+            .unwrap();
+        assert!(CheckpointPlan::from_args(&a).is_err());
+        // An explicit --checkpoint names the save series even when
+        // resuming — the resumed run keeps rotating the original
+        // <prefix>.o<k> files instead of nesting under the resume path.
+        let a = schema
+            .clone()
+            .parse(&argv(&[
+                "--resume",
+                "c.o4",
+                "--checkpoint",
+                "c",
+                "--checkpoint-every",
+                "2",
+            ]))
+            .unwrap();
+        let plan = CheckpointPlan::from_args(&a).unwrap();
+        assert_eq!(plan.resume_from.as_deref(), Some("c.o4"));
+        assert_eq!(plan.prefix, "c");
+        // Without it, the resume prefix doubles as the save prefix
+        // (legacy behaviour).
+        let a = schema
+            .clone()
+            .parse(&argv(&["--resume", "c.o4", "--checkpoint-at", "9"]))
+            .unwrap();
+        assert_eq!(CheckpointPlan::from_args(&a).unwrap().prefix, "c.o4");
+        let a = schema.parse(&argv(&["--checkpoint-at", "3"])).unwrap();
+        assert_eq!(CheckpointPlan::from_args(&a).unwrap().keep, 0);
+    }
+
+    #[test]
+    fn periodic_saves_rotate_on_disk() {
+        let ds = tiny();
+        let mut s = spec(AlgoKind::Gd);
+        s.stop.max_outer = 7;
+        let prefix = format!(
+            "{}/disco_session_rotation/ckpt",
+            std::env::temp_dir().display()
+        );
+        let _ = std::fs::remove_dir_all(std::path::Path::new(&prefix).parent().unwrap());
+        let plan = CheckpointPlan::save_every(&prefix, 2, 2);
+        let res = run_spec_with(&ds, &s, &plan);
+        assert_eq!(res.records.len(), 7);
+        // Saves land before outers 2, 4, 6; keep = 2 leaves only 4 and 6.
+        for rank in 0..s.sim.m {
+            assert!(!std::path::Path::new(&plan.rank_path_at(2, rank)).exists());
+            assert!(std::path::Path::new(&plan.rank_path_at(4, rank)).exists());
+            assert!(std::path::Path::new(&plan.rank_path_at(6, rank)).exists());
+        }
+        assert_eq!(saved_outers(&plan, 0), vec![4, 6]);
+        assert_eq!(saved_outers(&plan, 9), Vec::<usize>::new());
+        // A periodic save resumes like any checkpoint — bit-identically.
+        let resumed = run_spec_with(&ds, &s, &CheckpointPlan::resume(&format!("{prefix}.o4")));
+        assert_eq!(resumed.records.len(), res.records.len());
+        for (a, b) in resumed.records.iter().zip(res.records.iter()) {
+            assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits());
+            assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+        }
+        assert_eq!(resumed.sim_seconds.to_bits(), res.sim_seconds.to_bits());
+        // Rotation bookkeeping reloads from disk on resume, so the `keep`
+        // window keeps sliding over the original file series: resume from
+        // o4 with a longer cap (saves stay in `prefix`'s series) — the
+        // new o8 save evicts o4; re-executed boundaries (o4, o6) keep
+        // their original rotation slots instead of double-counting.
+        let mut s9 = s.clone();
+        s9.stop.max_outer = 9;
+        let resume_plan = CheckpointPlan {
+            save_at: None,
+            save_every: Some(2),
+            keep: 2,
+            prefix: prefix.clone(),
+            resume_from: Some(format!("{prefix}.o4")),
+        };
+        let long = run_spec_with(&ds, &s9, &resume_plan);
+        assert_eq!(long.records.len(), 9);
+        for rank in 0..s.sim.m {
+            assert!(!std::path::Path::new(&plan.rank_path_at(4, rank)).exists());
+            assert!(std::path::Path::new(&plan.rank_path_at(6, rank)).exists());
+            assert!(std::path::Path::new(&plan.rank_path_at(8, rank)).exists());
+        }
+        assert_eq!(saved_outers(&plan, 0), vec![6, 8]);
     }
 
     #[test]

@@ -332,6 +332,133 @@ impl Default for StopSpec {
     }
 }
 
+/// Default trigger for adaptive re-partitioning: re-cut once the
+/// windowed per-rank busy seconds differ by ≥ 20 % (max/min across the
+/// fleet). Below that, a re-cut's setup + re-shard cost outweighs the
+/// projected win on the short windows it is measured over.
+pub const REPARTITION_THRESHOLD_DEFAULT: f64 = 1.2;
+
+/// How an adaptive re-cut chooses its shard-sizing weights (see
+/// [`crate::algorithms::repartition::Repartitioner`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RepartitionPolicy {
+    /// Weights = measured shard work ÷ windowed busy seconds per rank —
+    /// the effective speeds the fleet *demonstrated*. The paper assumes
+    /// speeds are known up front; this discovers them mid-run.
+    Measured,
+    /// Weights = `sim.speeds` (oracle re-cut from the configured speeds;
+    /// an ablation/diagnostic of the measured estimator).
+    Known,
+}
+
+impl RepartitionPolicy {
+    pub fn parse(s: &str) -> Option<RepartitionPolicy> {
+        match s {
+            "measured" => Some(RepartitionPolicy::Measured),
+            "known" => Some(RepartitionPolicy::Known),
+            _ => None,
+        }
+    }
+}
+
+/// Adaptive mid-run re-partitioning knobs. Like
+/// [`CheckpointPlan`](crate::algorithms::session::CheckpointPlan) this is
+/// a property of *how a run is driven*, not of the problem being solved,
+/// so it rides beside [`RunSpec`] (and outside its JSON) into
+/// [`run_spec_full`](crate::algorithms::session::run_spec_full) /
+/// `run_over_spec`.
+///
+/// With `every = None` the trigger is **disabled** and the driver adds
+/// zero communication and zero branching — a run is bit-identical to a
+/// plain [`Session`](crate::algorithms::session::Session) run
+/// (test-enforced).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RepartitionSpec {
+    /// Observation window: check the windowed busy-seconds imbalance
+    /// every this many outer iterations (None = disabled).
+    pub every: Option<usize>,
+    /// Re-cut only when the windowed busy max/min across ranks reaches
+    /// this ratio (≥ 1; [`REPARTITION_THRESHOLD_DEFAULT`]).
+    pub threshold: f64,
+    pub policy: RepartitionPolicy,
+}
+
+impl Default for RepartitionSpec {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl RepartitionSpec {
+    /// Trigger disabled: the driver is a plain Session run.
+    pub fn none() -> Self {
+        Self {
+            every: None,
+            threshold: REPARTITION_THRESHOLD_DEFAULT,
+            policy: RepartitionPolicy::Measured,
+        }
+    }
+
+    /// Measured-speed re-cuts every `window` outer iterations at the
+    /// given imbalance threshold.
+    pub fn every(window: usize, threshold: f64) -> Self {
+        assert!(window >= 1, "observation window is at least one iteration");
+        assert!(threshold >= 1.0, "imbalance threshold is a max/min ratio ≥ 1");
+        Self {
+            every: Some(window),
+            threshold,
+            policy: RepartitionPolicy::Measured,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.every.is_some()
+    }
+
+    /// Declare the adaptive-load-balancing flags shared by the `disco`
+    /// and `disco-node` binaries; parse them back with
+    /// [`RepartitionSpec::from_args`].
+    pub fn with_flags(args: Args) -> Args {
+        args.opt(
+            "repartition-every",
+            None,
+            "adaptive balancing: re-check measured speeds every N outer iterations (0 = off)",
+        )
+        .opt(
+            "repartition-threshold",
+            Some("1.2"),
+            "re-cut when windowed busy seconds max/min across ranks reaches this ratio",
+        )
+        .opt(
+            "repartition-policy",
+            Some("measured"),
+            "re-cut weights: measured (shard work ÷ busy time) | known (sim speeds)",
+        )
+    }
+
+    /// Build the spec from [`RepartitionSpec::with_flags`]
+    /// (`--repartition-every 0` and an absent flag both mean disabled).
+    pub fn from_args(args: &Args) -> Result<RepartitionSpec, String> {
+        let mut rp = RepartitionSpec::none();
+        if args.provided("repartition-every") {
+            let every = args.get_usize("repartition-every").map_err(|e| e.to_string())?;
+            rp.every = if every == 0 { None } else { Some(every) };
+        }
+        if args.provided("repartition-threshold") {
+            rp.threshold = args.get_f64("repartition-threshold").map_err(|e| e.to_string())?;
+            if rp.threshold.is_nan() || rp.threshold < 1.0 {
+                return Err("--repartition-threshold is a max/min ratio and must be ≥ 1".into());
+            }
+        }
+        if args.provided("repartition-policy") {
+            let name = args.req("repartition-policy").map_err(|e| e.to_string())?;
+            rp.policy = RepartitionPolicy::parse(&name)
+                .ok_or_else(|| format!("bad --repartition-policy '{name}' (measured | known)"))?;
+        }
+        Ok(rp)
+    }
+}
+
 /// Full declarative run description. See the module docs.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunSpec {
@@ -1242,6 +1369,50 @@ mod tests {
         let mut spec = sample_spec(AlgoKind::DiscoF);
         spec.sim.m = 0;
         assert!(spec.validate().is_err());
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn repartition_flags_parse_and_validate() {
+        let schema = RepartitionSpec::with_flags(Args::new("t", "t"));
+        // Absent flags: disabled.
+        let rp = RepartitionSpec::from_args(&schema.clone().parse(&argv(&[])).unwrap()).unwrap();
+        assert_eq!(rp, RepartitionSpec::none());
+        assert!(!rp.enabled());
+        // Window + threshold + policy.
+        let a = schema
+            .clone()
+            .parse(&argv(&[
+                "--repartition-every",
+                "3",
+                "--repartition-threshold",
+                "1.5",
+                "--repartition-policy",
+                "known",
+            ]))
+            .unwrap();
+        let rp = RepartitionSpec::from_args(&a).unwrap();
+        assert_eq!(rp.every, Some(3));
+        assert_eq!(rp.threshold, 1.5);
+        assert_eq!(rp.policy, RepartitionPolicy::Known);
+        // 0 window = explicit off; bad threshold rejected.
+        let a = schema
+            .clone()
+            .parse(&argv(&["--repartition-every", "0"]))
+            .unwrap();
+        assert!(!RepartitionSpec::from_args(&a).unwrap().enabled());
+        let a = schema
+            .clone()
+            .parse(&argv(&["--repartition-threshold", "0.5"]))
+            .unwrap();
+        assert!(RepartitionSpec::from_args(&a).is_err());
+        let a = schema
+            .parse(&argv(&["--repartition-policy", "psychic"]))
+            .unwrap();
+        assert!(RepartitionSpec::from_args(&a).is_err());
     }
 
     #[test]

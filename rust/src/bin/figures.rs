@@ -6,6 +6,7 @@
 //! disco-figures fig3 --scale 8      # one experiment, scaled down
 //! disco-figures table3              # measured per-PCG-step op counts
 //! disco-figures fig2h               # heterogeneity × load-balancing sweep
+//! disco-figures fig2h-adaptive      # adaptive re-partitioning vs static vs oracle
 //! disco-figures fig3 --collective ring   # reprice collectives (flat|binomial|ring)
 //! disco-figures fig2 --transport tcp --m 3   # fig2 as 3 real OS processes
 //! ```
@@ -81,6 +82,7 @@ fn main() {
             "fig1" => experiments::figure1(cfg)?,
             "fig2" => experiments::figure2(cfg)?,
             "fig2h" => experiments::figure2h(cfg)?,
+            "fig2h-adaptive" => experiments::figure2h_adaptive(cfg)?,
             "fig3" => experiments::figure3(cfg)?,
             "fig4" => experiments::figure4(cfg)?,
             "fig5" => experiments::figure5(cfg)?,
@@ -98,7 +100,18 @@ fn main() {
     };
 
     let list: Vec<&str> = if what == "all" {
-        vec!["fig1", "fig2", "fig2h", "table2", "table34", "table5", "fig3", "fig4", "fig5"]
+        vec![
+            "fig1",
+            "fig2",
+            "fig2h",
+            "fig2h-adaptive",
+            "table2",
+            "table34",
+            "table5",
+            "fig3",
+            "fig4",
+            "fig5",
+        ]
     } else {
         vec![what.as_str()]
     };

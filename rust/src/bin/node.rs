@@ -26,17 +26,17 @@
 //! from one entrypoint.
 
 use disco::algorithms::spec::{spec_from_args, with_spec_flags};
-use disco::algorithms::{run_over_spec, run_spec_with, CheckpointPlan};
+use disco::algorithms::{run_over_spec, run_spec_full, CheckpointPlan, RepartitionSpec};
 use disco::coordinator::experiments::{self, ExperimentConfig};
 use disco::net::CollectiveAlgo;
 use disco::util::cli::{Args, TransportCli, TransportKind};
 use std::time::Duration;
 
 fn main() {
-    let args = CheckpointPlan::with_flags(with_spec_flags(Args::new(
+    let args = RepartitionSpec::with_flags(CheckpointPlan::with_flags(with_spec_flags(Args::new(
         "disco-node",
         "worker process for multi-process DiSCO runs (one rank of a TCP fleet)",
-    )))
+    ))))
     .with_transport_flags()
     .opt("out", Some("results"), "output directory for CSVs (rank 0 writes; fig2)")
     .opt("grad-target", Some("1e-8"), "target gradient norm (fig2)")
@@ -148,12 +148,13 @@ fn cmd_run(args: &Args, transport: &TransportCli) -> Result<(), String> {
         .load()
         .ok_or_else(|| format!("unknown dataset '{}'", spec.data.name))?;
     let plan = CheckpointPlan::from_args(args)?;
+    let repartition = RepartitionSpec::from_args(args)?;
 
     let res = match transport.kind {
-        TransportKind::Shm => Some(run_spec_with(&ds, &spec, &plan)),
+        TransportKind::Shm => Some(run_spec_full(&ds, &spec, &plan, &repartition).0),
         TransportKind::Tcp => {
             let t = disco::net::TcpTransport::establish(&tcp_options(transport, spec.sim.cost));
-            run_over_spec(&ds, &spec, t, &plan)
+            run_over_spec(&ds, &spec, t, &plan, &repartition)
         }
     };
     match res {

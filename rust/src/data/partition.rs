@@ -28,20 +28,42 @@ pub fn balanced_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// Replace weight entries a measured-speed estimator can produce but a
+/// quota cut cannot honor (NaN, ±∞, ≤ 0) with zero quota; an all-invalid
+/// vector degrades to the uniform split. Any all-valid vector is returned
+/// untouched, so the strict-weight cut points are reproduced bit-for-bit.
+fn sanitize_weights(weights: &[f64]) -> Vec<f64> {
+    let valid = |w: &f64| w.is_finite() && *w > 0.0;
+    if weights.iter().any(valid) {
+        weights
+            .iter()
+            .map(|w| if valid(w) { *w } else { 0.0 })
+            .collect()
+    } else {
+        vec![1.0; weights.len()]
+    }
+}
+
 /// Contiguous split of `0..total` into parts sized proportionally to
 /// `weights` (every part gets ≥ 1 item). Cut `k` lands at
 /// `round(total · (w₁+…+w_k)/W)`, clamped so all parts stay nonempty —
 /// deterministic, order-preserving quota apportionment. Used to size
 /// shards by node *speed* so per-node work ÷ speed is equalized on a
 /// heterogeneous fleet.
+///
+/// Weights are sanitized rather than asserted: mid-run re-partitioning
+/// feeds *measured* work ÷ busy-time ratios in here, and a pathological
+/// observation window (an idle rank, a denormal busy time) must still
+/// re-cut to a valid partition instead of panicking. Non-finite or
+/// non-positive entries contribute zero quota (their part keeps the
+/// minimum one item); an all-invalid vector degrades to the uniform
+/// split. For any all-valid weight vector the arithmetic is unchanged, so
+/// pre-existing cut points are reproduced bit-for-bit.
 pub fn weighted_ranges(total: usize, weights: &[f64]) -> Vec<(usize, usize)> {
     let parts = weights.len();
     assert!(parts > 0, "need at least one part");
     assert!(total >= parts, "cannot split {total} items into {parts} nonempty parts");
-    assert!(
-        weights.iter().all(|w| w.is_finite() && *w > 0.0),
-        "weights must be positive and finite"
-    );
+    let weights = sanitize_weights(weights);
     let wsum: f64 = weights.iter().sum();
     let mut cuts = Vec::with_capacity(parts + 1);
     cuts.push(0usize);
@@ -99,18 +121,42 @@ pub struct Partition {
 }
 
 impl Partition {
+    /// Build **only** node `node`'s sample (column-block) shard from its
+    /// cut range — O(shard) pointer work instead of materializing the
+    /// full m-shard partition. This is what every rank's
+    /// `Algorithm::setup` does (each rank computes the identical cut
+    /// table, then extracts just its own shard) and what the adaptive
+    /// re-partitioning handoff rebuilds from after a re-cut.
+    pub fn sample_shard(ds: &Dataset, node: usize, range: (usize, usize)) -> Shard {
+        let (s, e) = range;
+        Shard {
+            node,
+            kind: PartitionKind::Samples,
+            range,
+            x: ds.x.col_block(s, e),
+            y: ds.y[s..e].to_vec(),
+        }
+    }
+
+    /// Build only node `node`'s feature (row-block) shard from its cut
+    /// range (see [`Partition::sample_shard`]).
+    pub fn feature_shard(ds: &Dataset, node: usize, range: (usize, usize)) -> Shard {
+        let (s, e) = range;
+        Shard {
+            node,
+            kind: PartitionKind::Features,
+            range,
+            x: ds.x.row_block(s, e),
+            y: ds.y.clone(),
+        }
+    }
+
     /// Build a sample (column-block) partition from explicit ranges.
     fn samples_from_ranges(ds: &Dataset, ranges: &[(usize, usize)]) -> Partition {
         let shards = ranges
             .iter()
             .enumerate()
-            .map(|(node, &(s, e))| Shard {
-                node,
-                kind: PartitionKind::Samples,
-                range: (s, e),
-                x: ds.x.col_block(s, e),
-                y: ds.y[s..e].to_vec(),
-            })
+            .map(|(node, &r)| Self::sample_shard(ds, node, r))
             .collect();
         Partition {
             kind: PartitionKind::Samples,
@@ -125,13 +171,7 @@ impl Partition {
         let shards = ranges
             .iter()
             .enumerate()
-            .map(|(node, &(s, e))| Shard {
-                node,
-                kind: PartitionKind::Features,
-                range: (s, e),
-                x: ds.x.row_block(s, e),
-                y: ds.y.clone(),
-            })
+            .map(|(node, &r)| Self::feature_shard(ds, node, r))
             .collect();
         Partition {
             kind: PartitionKind::Features,
@@ -206,14 +246,27 @@ impl Partition {
         speeds: &[f64],
         row_overhead: f64,
     ) -> Partition {
+        Self::features_from_ranges(ds, &Self::feature_cost_cuts(ds, speeds, row_overhead))
+    }
+
+    /// The cut table behind
+    /// [`Partition::by_features_cost_balanced_weighted`], without building
+    /// any shard — every rank of a distributed setup computes these
+    /// ranges identically and then extracts only its own row block
+    /// ([`Partition::feature_shard`]); the adaptive repartitioner calls
+    /// this with *measured* weights to re-cut mid-run. Weights are
+    /// sanitized like [`weighted_ranges`]'s (invalid entries get zero
+    /// quota but keep ≥ 1 feature).
+    pub fn feature_cost_cuts(
+        ds: &Dataset,
+        speeds: &[f64],
+        row_overhead: f64,
+    ) -> Vec<(usize, usize)> {
         let m = speeds.len();
         let d = ds.dim();
         assert!(m > 0, "need at least one node");
         assert!(d >= m, "cannot split {d} features over {m} nodes");
-        assert!(
-            speeds.iter().all(|s| s.is_finite() && *s > 0.0),
-            "speeds must be positive and finite"
-        );
+        let speeds = sanitize_weights(speeds);
         // Row nnz histogram (count once over the sparse structure).
         let mut row_nnz = vec![0u64; d];
         match &ds.x {
@@ -228,7 +281,7 @@ impl Partition {
             crate::linalg::DataMatrix::Dense(_) => {
                 // Dense: every row weighs the same; degrade to the count
                 // split (speed-weighted when speeds are non-uniform).
-                return Self::by_features_weighted(ds, speeds);
+                return weighted_ranges(d, &speeds);
             }
         }
         let weight = |nnz: u64| nnz as f64 + row_overhead;
@@ -250,10 +303,15 @@ impl Partition {
         for (i, w) in row_nnz.iter().enumerate() {
             acc += weight(*w);
             // Cut after row i once the k-th quantile is reached, keeping
-            // enough rows for the remaining nodes.
+            // enough rows for the remaining nodes. Cuts must be strictly
+            // increasing: when one heavy row (or a zero-quota weight —
+            // sanitized measured speeds allow them) crosses several
+            // quantiles at once, the later cuts defer to the following
+            // rows so every part stays nonempty.
             while cuts.len() <= m - 1
                 && acc * wsum >= cum[cuts.len() - 1] * total
                 && i + 1 <= d - (m - cuts.len())
+                && *cuts.last().unwrap() < i + 1
             {
                 cuts.push(i + 1);
             }
@@ -264,8 +322,7 @@ impl Partition {
             cuts.push((last + 1).min(d - (m - cuts.len())));
         }
         cuts.push(d);
-        let ranges: Vec<(usize, usize)> = cuts.windows(2).map(|w| (w[0], w[1])).collect();
-        Self::features_from_ranges(ds, &ranges)
+        cuts.windows(2).map(|w| (w[0], w[1])).collect()
     }
 
     pub fn m(&self) -> usize {
@@ -442,9 +499,82 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "weights must be positive")]
-    fn weighted_ranges_reject_nonpositive_weights() {
-        let _ = weighted_ranges(10, &[1.0, 0.0]);
+    fn weighted_ranges_sanitize_invalid_weights() {
+        // Measured weights can contain zeros / NaN / ∞ (an idle rank, a
+        // denormal busy window): the cut must stay a valid partition with
+        // every part nonempty, never panic.
+        for weights in [
+            vec![1.0, 0.0],
+            vec![0.0, 0.0, 0.0],
+            vec![f64::NAN, 1.0, 2.0],
+            vec![f64::INFINITY, 1.0],
+            vec![-3.0, 1.0, 1.0],
+            vec![f64::MIN_POSITIVE, 5e-324, 1.0],
+        ] {
+            let total = 17;
+            let r = weighted_ranges(total, &weights);
+            assert_eq!(r.len(), weights.len(), "{weights:?}");
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r.last().unwrap().1, total);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap or overlap for {weights:?}");
+            }
+            assert!(r.iter().all(|(s, e)| e > s), "empty part for {weights:?}: {r:?}");
+        }
+        // All-invalid weights degrade to the uniform split.
+        assert_eq!(
+            weighted_ranges(12, &[0.0, f64::NAN, -1.0]),
+            weighted_ranges(12, &[1.0, 1.0, 1.0])
+        );
+    }
+
+    #[test]
+    fn feature_cost_cuts_stay_nonempty_under_degenerate_weights() {
+        // Zero-quota (sanitized) weights and extreme skew must never
+        // produce an empty feature shard: cuts stay strictly increasing
+        // even when one row crosses several quantiles at once.
+        let ds = SyntheticConfig::new("zipf", 200, 60).zipf(1.4).seed(21).generate();
+        for weights in [
+            vec![1.0, 0.0, 1.0, 0.0],
+            vec![0.0, 0.0, 1.0],
+            vec![1e9, 1.0, 1e-9, 1.0],
+            vec![f64::NAN, 1.0, f64::INFINITY, 1.0],
+        ] {
+            let cuts = Partition::feature_cost_cuts(&ds, &weights, 5.0);
+            assert_eq!(cuts.len(), weights.len(), "{weights:?}");
+            assert_eq!(cuts[0].0, 0);
+            assert_eq!(cuts.last().unwrap().1, ds.dim());
+            for w in cuts.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap or overlap for {weights:?}");
+            }
+            assert!(
+                cuts.iter().all(|(s, e)| e > s),
+                "empty shard for {weights:?}: {cuts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_shard_builders_match_full_partition() {
+        let ds = SyntheticConfig::new("t", 37, 19).seed(13).generate();
+        let ps = Partition::by_samples(&ds, 3);
+        for shard in &ps.shards {
+            let solo = Partition::sample_shard(&ds, shard.node, shard.range);
+            assert_eq!(solo.range, shard.range);
+            assert_eq!(solo.y, shard.y);
+            assert_eq!(solo.x.nnz(), shard.x.nnz());
+        }
+        let pf = Partition::by_features(&ds, 3);
+        for shard in &pf.shards {
+            let solo = Partition::feature_shard(&ds, shard.node, shard.range);
+            assert_eq!(solo.range, shard.range);
+            assert_eq!(solo.y, shard.y);
+            assert_eq!(solo.x.nnz(), shard.x.nnz());
+        }
+        // Cut tables come out of the ds+policy alone.
+        let cuts = Partition::feature_cost_cuts(&ds, &[1.0; 3], 10.0);
+        let full = Partition::by_features_cost_balanced(&ds, 3, 10.0);
+        assert_eq!(cuts, full.shards.iter().map(|s| s.range).collect::<Vec<_>>());
     }
 
     #[test]

@@ -23,7 +23,9 @@
 //! multi-process" for the rendezvous flow.
 
 use disco::algorithms::spec::{spec_from_args, with_spec_flags};
-use disco::algorithms::{run_over_spec, run_spec_with, AlgoKind, CheckpointPlan, RunSpec};
+use disco::algorithms::{
+    run_over_spec, run_spec_full, AlgoKind, CheckpointPlan, RepartitionSpec, RunSpec,
+};
 use disco::data::registry;
 use disco::net::{TcpOptions, TcpTransport};
 use disco::runtime::{artifact_dir, run_disco_f_xla, Engine};
@@ -31,10 +33,10 @@ use disco::util::cli::{Args, TransportCli, TransportKind};
 use std::time::Duration;
 
 fn main() {
-    let args = CheckpointPlan::with_flags(with_spec_flags(Args::new(
+    let args = RepartitionSpec::with_flags(CheckpointPlan::with_flags(with_spec_flags(Args::new(
         "disco",
         "Distributed Inexact Damped Newton (DiSCO-S/DiSCO-F) — Ma & Takáč 2016 reproduction",
-    )))
+    ))))
     .opt("dataset-shape", Some("1024x4096"), "xla-run: dense d×n problem shape")
     .opt("emit-spec", None, "write the resolved RunSpec JSON to this path ('-' = stdout) and exit")
     .switch("records", "print the per-iteration convergence records")
@@ -150,11 +152,15 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         .load()
         .ok_or_else(|| format!("unknown dataset '{}'", spec.data.name))?;
     let plan = CheckpointPlan::from_args(args)?;
+    let repartition = RepartitionSpec::from_args(args)?;
     match transport.kind {
         TransportKind::Shm => {
             println!("{}", ds.describe());
             println!("{}", describe(&spec, &format!("on {} simulated nodes", spec.sim.m)));
-            let res = run_spec_with(&ds, &spec, &plan);
+            let (res, recuts) = run_spec_full(&ds, &spec, &plan, &repartition);
+            if repartition.enabled() {
+                println!("  adaptive load balancing: {recuts} mid-run re-cut(s)");
+            }
             print_result(&res, args.flag("records"));
         }
         TransportKind::Tcp => {
@@ -166,7 +172,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                 .with_timeout(Duration::from_secs_f64(transport.timeout_secs))
                 .with_cost(spec.sim.cost);
             let t = TcpTransport::establish(&opts);
-            match run_over_spec(&ds, &spec, t, &plan) {
+            match run_over_spec(&ds, &spec, t, &plan, &repartition) {
                 Some(res) => {
                     let how = format!("over tcp on {} processes", spec.sim.m);
                     println!("{}", describe(&spec, &how));

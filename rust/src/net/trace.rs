@@ -131,6 +131,55 @@ impl Trace {
         t
     }
 
+    /// Per-node totals by activity restricted to the window `[t0, t1)`,
+    /// with segments clipped at the window edges: `(compute, idle, comm)`
+    /// seconds. This is the accounting behind the adaptive
+    /// repartitioner's observation windows and the `fig2h-adaptive`
+    /// before/after-re-cut summaries.
+    pub fn node_totals_window(&self, node: usize, t0: f64, t1: f64) -> (f64, f64, f64) {
+        let mut t = (0.0, 0.0, 0.0);
+        for s in self.segments.iter().filter(|s| s.node == node) {
+            let overlap = (s.end.min(t1) - s.start.max(t0)).max(0.0);
+            if overlap <= 0.0 {
+                continue;
+            }
+            match s.activity {
+                Activity::Compute => t.0 += overlap,
+                Activity::Idle => t.1 += overlap,
+                Activity::Comm => t.2 += overlap,
+            }
+        }
+        t
+    }
+
+    /// Windowed compute balance: min over nodes of clipped compute time
+    /// divided by max (1.0 = perfectly balanced within `[t0, t1)`). Lets
+    /// a single trace show the balance *before* and *after* a mid-run
+    /// re-cut.
+    pub fn compute_balance_window(&self, t0: f64, t1: f64) -> f64 {
+        let totals: Vec<f64> = (0..self.m)
+            .map(|n| self.node_totals_window(n, t0, t1).0)
+            .collect();
+        let max = totals.iter().cloned().fold(0.0, f64::max);
+        let min = totals.iter().cloned().fold(f64::INFINITY, f64::min);
+        if max == 0.0 {
+            return 1.0;
+        }
+        min / max
+    }
+
+    /// Windowed utilization: clipped compute time / (m × window length).
+    pub fn utilization_window(&self, t0: f64, t1: f64) -> f64 {
+        let len = t1 - t0;
+        if len <= 0.0 || self.m == 0 {
+            return 0.0;
+        }
+        let compute: f64 = (0..self.m)
+            .map(|n| self.node_totals_window(n, t0, t1).0)
+            .sum();
+        compute / (self.m as f64 * len)
+    }
+
     /// Cluster-wide utilization: compute-time / (m × makespan). The paper's
     /// load-balancing claim is that DiSCO-F pushes this toward 1 while
     /// DiSCO-S leaves workers idle during master-only PCG vector ops.
@@ -238,6 +287,29 @@ mod tests {
         assert_eq!(t.node_totals(1), (2.0, 0.0, 0.0));
         assert!((t.utilization() - 3.0 / 4.0).abs() < 1e-12);
         assert_eq!(t.end_time(), 2.0);
+    }
+
+    #[test]
+    fn windowed_totals_clip_segments() {
+        let mut t = Trace::new(2);
+        t.push(seg(0, 0.0, 1.0, Activity::Compute));
+        t.push(seg(0, 1.0, 2.0, Activity::Idle));
+        t.push(seg(1, 0.5, 2.0, Activity::Compute));
+        // Window [0.5, 1.5): half of node 0's compute + idle, a full unit
+        // of node 1's compute.
+        let (c0, i0, m0) = t.node_totals_window(0, 0.5, 1.5);
+        assert!((c0 - 0.5).abs() < 1e-12 && (i0 - 0.5).abs() < 1e-12 && m0 == 0.0);
+        let (c1, _, _) = t.node_totals_window(1, 0.5, 1.5);
+        assert!((c1 - 1.0).abs() < 1e-12);
+        // Empty window, and a window past the trace.
+        assert_eq!(t.node_totals_window(0, 1.5, 1.5), (0.0, 0.0, 0.0));
+        assert_eq!(t.node_totals_window(0, 5.0, 9.0), (0.0, 0.0, 0.0));
+        // Full-span window reproduces the unwindowed totals.
+        assert_eq!(t.node_totals_window(0, 0.0, 2.0), t.node_totals(0));
+        // Balance within [0, 1): node 0 computed 1.0, node 1 only 0.5.
+        assert!((t.compute_balance_window(0.0, 1.0) - 0.5).abs() < 1e-12);
+        assert!((t.utilization_window(0.0, 1.0) - 0.75).abs() < 1e-12);
+        assert_eq!(t.utilization_window(1.0, 1.0), 0.0);
     }
 
     #[test]

@@ -204,6 +204,10 @@ impl<T: Transport + ?Sized> Transport for &mut T {
 pub struct CtxState {
     /// Simulated clock, seconds.
     pub clock: f64,
+    /// Cumulative simulated compute (busy) seconds — the always-on
+    /// counterpart of the trace's compute totals, maintained even when
+    /// tracing is off so the adaptive repartitioner can window it.
+    pub compute_seconds: f64,
     /// Node-local mirror of the priced communication counters.
     pub stats: CommStats,
     /// This rank's trace segments (empty when tracing is off).
@@ -250,6 +254,12 @@ pub struct NodeCtx<T: Transport> {
     transport: T,
     /// Simulated clock, seconds.
     pub clock: f64,
+    /// Cumulative simulated compute (busy) seconds on this rank. Unlike
+    /// the trace (opt-in, per-segment) this scalar is always maintained:
+    /// idle accounting derives as `clock − compute − comm`, and the
+    /// adaptive repartitioner estimates effective node speeds from
+    /// windowed differences of it.
+    compute_seconds: f64,
     /// Relative compute speed of this node (1.0 = baseline; 0.5 = half
     /// speed). Simulated compute time is *divided* by it.
     pub speed: f64,
@@ -275,6 +285,7 @@ impl<T: Transport> NodeCtx<T> {
             m,
             transport,
             clock: 0.0,
+            compute_seconds: 0.0,
             speed: 1.0,
             compute_model: ComputeModel::Measured,
             straggler: None,
@@ -359,6 +370,7 @@ impl<T: Transport> NodeCtx<T> {
             });
         }
         self.clock += dt;
+        self.compute_seconds += dt;
     }
 
     /// Run `f` as node-local computation: advances the simulated clock by
@@ -502,10 +514,16 @@ impl<T: Transport> NodeCtx<T> {
         let _ = self.reduce_all_scalar(0.0);
     }
 
+    /// Cumulative simulated compute (busy) seconds on this rank.
+    pub fn compute_seconds(&self) -> f64 {
+        self.compute_seconds
+    }
+
     /// Snapshot the backend-independent context state (see [`CtxState`]).
     pub fn export_state(&self) -> CtxState {
         CtxState {
             clock: self.clock,
+            compute_seconds: self.compute_seconds,
             stats: self.local_stats.clone(),
             segments: self.trace.segments.clone(),
             straggler: self
@@ -538,6 +556,7 @@ impl<T: Transport> NodeCtx<T> {
             }
         }
         self.clock = st.clock;
+        self.compute_seconds = st.compute_seconds;
         self.local_stats = st.stats;
         self.trace.segments = st.segments;
         Ok(())
@@ -553,6 +572,11 @@ pub trait Collectives {
     fn world(&self) -> usize;
     /// Simulated clock, seconds.
     fn clock(&self) -> f64;
+    /// Cumulative simulated compute (busy) seconds on this rank — always
+    /// maintained, independent of the trace flag. Windowed differences of
+    /// this (against the synchronized clock) are the idle accounting the
+    /// adaptive repartitioner estimates effective node speeds from.
+    fn compute_seconds(&self) -> f64;
     /// Node-local mirror of the communication counters.
     fn comm_stats(&self) -> &CommStats;
 
@@ -582,6 +606,21 @@ pub trait Collectives {
         let _ = self.reduce_all_scalar(0.0);
     }
 
+    /// Re-shard exchange for adaptive mid-run re-partitioning: every rank
+    /// contributes its contiguous slice of a cut-axis global vector (the
+    /// iterate slice for feature-partitioned algorithms, the dual block
+    /// for CoCoA+) and receives the full vector back — rank-order
+    /// concatenation *is* global index order because cut tables are
+    /// contiguous and ordered, so each rank then takes the boundary
+    /// slices its new range needs. Executes as a **priced** AllGather on
+    /// whichever transport backs the context (the shm blackboard or the
+    /// TCP ring), so the re-partition traffic lands in the simulated
+    /// timeline and in [`CommStats`], and the exchange is bit-identical
+    /// across backends under the modeled clock.
+    fn reshard_exchange(&mut self, part: &[f64]) -> Vec<f64> {
+        self.all_gather_concat(part)
+    }
+
     // --- checkpoint hooks (session resume) ---------------------------------
 
     /// Snapshot the backend-independent context state (clock, stats mirror,
@@ -608,6 +647,10 @@ impl<T: Transport> Collectives for NodeCtx<T> {
 
     fn clock(&self) -> f64 {
         self.clock
+    }
+
+    fn compute_seconds(&self) -> f64 {
+        NodeCtx::compute_seconds(self)
     }
 
     fn comm_stats(&self) -> &CommStats {

@@ -1,0 +1,245 @@
+//! Integration: adaptive mid-run re-partitioning (PR 5's tentpole).
+//!
+//! The acceptance claims, test-enforced here:
+//!
+//! * with **unknown a-priori speeds** and a 4× straggler starting from a
+//!   uniform cut, the adaptive run's makespan is strictly below the
+//!   static uniform run and within a bounded factor of the oracle
+//!   speed-weighted run (via the `fig2h-adaptive` experiment and its
+//!   `fig2h_adaptive.csv`);
+//! * an adaptive run with the trigger disabled is **bit-identical** to a
+//!   plain `Session` run;
+//! * re-cuts preserve solver correctness for all six algorithms (the
+//!   handoff protocol: replicated iterates, the DiSCO-F iterate slice
+//!   and the CoCoA+ dual block re-sharded through the priced AllGather),
+//!   and adaptive runs are bit-deterministic across reruns under the
+//!   modeled clock.
+
+use disco::algorithms::{
+    run_spec, run_spec_adaptive, run_spec_full, AlgoKind, CheckpointPlan, RepartitionSpec,
+    RunConfig, RunResult,
+};
+use disco::coordinator::experiments::{self, ExperimentConfig};
+use disco::data::SyntheticConfig;
+use disco::loss::LossKind;
+use disco::net::{ComputeModel, CostModel};
+
+fn tiny(seed: u64) -> disco::data::Dataset {
+    SyntheticConfig::new("tiny", 120, 45)
+        .density(0.2)
+        .label_noise(0.05)
+        .seed(seed)
+        .generate()
+}
+
+/// Heterogeneous 3-node fleet (rank 2 at half speed) that starts from the
+/// *uniform* cut — the repartitioner has something real to discover.
+fn hetero_cfg(algo: AlgoKind, loss: LossKind) -> RunConfig {
+    let mut c = RunConfig::new(algo, loss, 1e-2);
+    c.m = 3;
+    c.tau = 10;
+    c.grad_tol = 0.0;
+    c.max_outer = 4;
+    c.cost = CostModel::default();
+    c.compute = ComputeModel::modeled();
+    c.trace = true;
+    c.seed = 7;
+    c.local_epochs = 2;
+    c.sag_max_epochs = 5;
+    c.speeds = vec![1.0, 1.0, 0.5];
+    c.weighted_partition = false; // speeds exist but the cut ignores them
+    c
+}
+
+/// Bit-level RunResult comparison (everything except wallclock).
+fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.algo, b.algo, "{what}: algo");
+    assert_eq!(a.converged, b.converged, "{what}: converged");
+    assert_eq!(
+        a.sim_seconds.to_bits(),
+        b.sim_seconds.to_bits(),
+        "{what}: sim_seconds {} vs {}",
+        a.sim_seconds,
+        b.sim_seconds
+    );
+    assert_eq!(a.stats, b.stats, "{what}: CommStats");
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(ra.sim_time.to_bits(), rb.sim_time.to_bits(), "{what}: sim_time");
+        assert_eq!(ra.grad_norm.to_bits(), rb.grad_norm.to_bits(), "{what}: grad_norm");
+        assert_eq!(ra.fval.to_bits(), rb.fval.to_bits(), "{what}: fval");
+        assert_eq!(ra.rounds, rb.rounds, "{what}: rounds");
+    }
+    assert_eq!(a.w.len(), b.w.len(), "{what}: iterate length");
+    for (wa, wb) in a.w.iter().zip(b.w.iter()) {
+        assert_eq!(wa.to_bits(), wb.to_bits(), "{what}: iterate bits");
+    }
+    assert_eq!(a.trace.to_csv(), b.trace.to_csv(), "{what}: trace");
+}
+
+#[test]
+fn disabled_trigger_is_bit_identical_to_plain_session_run() {
+    // The contract behind `RepartitionSpec::none()`: the adaptive driver
+    // adds zero communication and zero branching, so the full results —
+    // clocks, stats, iterate bits, traces — match a plain Session run.
+    let ds = tiny(1);
+    for &algo in &[AlgoKind::DiscoF, AlgoKind::CocoaPlus] {
+        let spec = hetero_cfg(algo, LossKind::Logistic).to_spec();
+        let plain = run_spec(&ds, &spec);
+        let (adaptive_off, recuts) =
+            run_spec_full(&ds, &spec, &CheckpointPlan::none(), &RepartitionSpec::none());
+        assert_eq!(recuts, 0);
+        assert_bit_identical(&plain, &adaptive_off, &format!("{} trigger off", algo.name()));
+    }
+}
+
+#[test]
+fn forced_recut_preserves_correctness_for_all_six_algorithms() {
+    // Every algorithm must survive a real mid-run handoff: the 2× slow
+    // rank trips the 1.1 trigger on the first window, so the uniform cut
+    // is re-cut from measured speeds at least once. The run must stay
+    // deterministic (bit-identical rerun), keep its record cadence, and
+    // land at an objective value equivalent to the static run's (the
+    // re-cut redistributes data, it must not change what is optimized).
+    let ds = tiny(2);
+    for &algo in AlgoKind::all() {
+        let spec = hetero_cfg(algo, LossKind::Logistic).to_spec();
+        let rp = RepartitionSpec::every(1, 1.1);
+        let static_run = run_spec(&ds, &spec);
+        let (a, recuts_a) = run_spec_adaptive(&ds, &spec, &rp);
+        let (b, recuts_b) = run_spec_adaptive(&ds, &spec, &rp);
+        assert!(recuts_a >= 1, "{}: the 2× imbalance must trigger a re-cut", algo.name());
+        assert_eq!(recuts_a, recuts_b, "{}: re-cut count must be deterministic", algo.name());
+        assert_bit_identical(&a, &b, &format!("{} adaptive rerun", algo.name()));
+        assert_eq!(a.records.len(), static_run.records.len(), "{}", algo.name());
+        let fa = a.final_fval();
+        let fs = static_run.final_fval();
+        assert!(fa.is_finite(), "{}: adaptive objective diverged", algo.name());
+        assert!(
+            (fa - fs).abs() <= 0.1 * fs.abs() + 1e-12,
+            "{}: adaptive objective {fa} strays from static {fs}",
+            algo.name()
+        );
+        // The full iterate reassembles to the problem dimension even
+        // though the final shards differ from the initial cut.
+        assert_eq!(a.w.len(), ds.dim(), "{}", algo.name());
+        assert!(a.w.iter().all(|x| x.is_finite()), "{}", algo.name());
+    }
+}
+
+#[test]
+fn checkpoint_resume_across_a_recut_is_bit_identical() {
+    // A checkpoint written *after* the trigger fired records the cut
+    // table in force; resuming rebuilds the solver node on those cuts
+    // (not the spec defaults) and continues bit-identically. DANE pins
+    // the replicated-state path (its full-ℝᵈ vectors would pass every
+    // length check on the wrong shards — the silent-divergence case),
+    // DiSCO-F the re-sharded-iterate path.
+    let ds = tiny(3);
+    for &algo in &[AlgoKind::Dane, AlgoKind::DiscoF] {
+        let spec = hetero_cfg(algo, LossKind::Logistic).to_spec();
+        let rp = RepartitionSpec::every(1, 1.1);
+        let prefix = format!(
+            "{}/disco_adaptive_ckpt_{}/c",
+            std::env::temp_dir().display(),
+            algo.name().replace('+', "p")
+        );
+        let (full, recuts) = run_spec_adaptive(&ds, &spec, &rp);
+        assert!(recuts >= 1, "{}: need a re-cut before the save point", algo.name());
+        let plan = CheckpointPlan::save(&prefix, 3);
+        let (saved, _) = run_spec_full(&ds, &spec, &plan, &rp);
+        assert_bit_identical(&full, &saved, &format!("{} save pass", algo.name()));
+        let (resumed, _) = run_spec_full(&ds, &spec, &CheckpointPlan::resume(&prefix), &rp);
+        assert_bit_identical(&full, &resumed, &format!("{} resume across re-cut", algo.name()));
+        // A session built on the default cuts must refuse the blob
+        // instead of silently resuming onto the wrong shards.
+        let bytes = std::fs::read(format!("{prefix}.rank0")).unwrap();
+        assert!(
+            disco::algorithms::session::peek_cuts(&bytes).unwrap().is_some(),
+            "{}: checkpoint after a re-cut must record its cut table",
+            algo.name()
+        );
+    }
+}
+
+fn adaptive_test_cfg(out: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        out_dir: format!("{}/disco_adaptive_test_{out}", std::env::temp_dir().display()),
+        ..ExperimentConfig::default()
+    }
+}
+
+fn makespans(dir: &str) -> std::collections::BTreeMap<(String, String), (f64, usize)> {
+    let body = std::fs::read_to_string(format!("{dir}/fig2h_adaptive.csv")).unwrap();
+    let mut out = std::collections::BTreeMap::new();
+    for line in body.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        out.insert(
+            (f[0].to_string(), f[1].to_string()),
+            (f[2].parse::<f64>().unwrap(), f[5].parse::<usize>().unwrap()),
+        );
+    }
+    out
+}
+
+#[test]
+fn fig2h_adaptive_beats_static_and_approaches_oracle() {
+    // The tentpole acceptance, enforced on the emitted CSV: with a 4×
+    // straggler hidden from the partitioner, adaptive re-partitioning
+    // strictly cuts makespan versus the static uniform cut and stays
+    // within a bounded factor of the oracle speed-weighted cut.
+    let cfg = adaptive_test_cfg("claims");
+    let s = experiments::figure2h_adaptive(&cfg).unwrap();
+    assert!(s.contains("adaptive"), "{s}");
+    let rows = makespans(&cfg.out_dir);
+    // Both algorithms must discover the straggler and re-cut.
+    for algo in ["DiSCO-F", "DiSCO-S"] {
+        let (_, recuts) = rows[&(algo.to_string(), "adaptive".to_string())];
+        assert!(recuts >= 1, "{algo}: adaptive mode never re-cut");
+    }
+    // The makespan claims are enforced on DiSCO-F, the paper's balanced
+    // algorithm: every rank does identical per-iteration work, so busy
+    // time is a clean speed signal. (DiSCO-S's master does *serial* PCG
+    // vector work that no re-cut can shrink — its busy time conflates
+    // "slow" with "coordinator", which is exactly the Figure-2 imbalance
+    // the paper builds DiSCO-F to remove; its rows stay in the CSV for
+    // observation.)
+    let (uniform, _) = rows[&("DiSCO-F".to_string(), "static-uniform".to_string())];
+    let (adaptive, _) = rows[&("DiSCO-F".to_string(), "adaptive".to_string())];
+    let (oracle, _) = rows[&("DiSCO-F".to_string(), "oracle".to_string())];
+    assert!(
+        adaptive < uniform,
+        "DiSCO-F: adaptive {adaptive} !< static uniform {uniform}"
+    );
+    // The bounded-factor claim, two-sided: one observation window runs on
+    // the uniform cut (straggler-gated), the rest at ≈ oracle speed plus
+    // re-shard/setup overhead — within 2× of the oracle (the static cut
+    // sits near 2.5–3× at a 4× straggler). The lower bound is loose on
+    // purpose: the measured policy compensates per-rank *constant* costs
+    // the oracle's pure work-÷-speed cut ignores, so adaptive may land
+    // slightly below the oracle in later iterations.
+    assert!(
+        adaptive <= 2.0 * oracle,
+        "DiSCO-F: adaptive {adaptive} beyond 2× oracle {oracle}"
+    );
+    assert!(
+        adaptive >= 0.5 * oracle,
+        "DiSCO-F: adaptive {adaptive} implausibly below oracle {oracle} — check the accounting"
+    );
+}
+
+#[test]
+fn fig2h_adaptive_is_deterministic_across_runs() {
+    // The CI `hetero-smoke` double-run `diff`, locally: regenerating the
+    // adaptive sweep twice yields byte-identical CSVs and summaries.
+    let cfg_a = adaptive_test_cfg("det_a");
+    let cfg_b = adaptive_test_cfg("det_b");
+    let sum_a = experiments::figure2h_adaptive(&cfg_a).unwrap();
+    let sum_b = experiments::figure2h_adaptive(&cfg_b).unwrap();
+    assert_eq!(sum_a, sum_b, "fig2h-adaptive summaries diverged");
+    let a = std::fs::read_to_string(format!("{}/fig2h_adaptive.csv", cfg_a.out_dir)).unwrap();
+    let b = std::fs::read_to_string(format!("{}/fig2h_adaptive.csv", cfg_b.out_dir)).unwrap();
+    assert_eq!(a, b, "fig2h_adaptive.csv diverged between seeded runs");
+    // Row shape: header + 2 algos × 3 modes.
+    assert_eq!(a.lines().count(), 1 + 2 * experiments::FIG2H_ADAPTIVE_MODES.len());
+}

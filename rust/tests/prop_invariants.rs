@@ -8,7 +8,7 @@
 //! * solver algebra: Woodbury ≡ direct inverse, PCG solves SPD systems,
 //!   HVP linearity/symmetry, loss conjugacy (batching of the dual step).
 
-use disco::data::{balanced_ranges, Partition, SyntheticConfig};
+use disco::data::{balanced_ranges, weighted_ranges, Partition, SyntheticConfig};
 use disco::linalg::{lu_solve, ops, CscMatrix, CsrMatrix, DataMatrix, HvpKernel, SquareMatrix};
 use disco::loss::{Logistic, Loss, Objective, Quadratic, SquaredHinge};
 use disco::net::{Cluster, CostModel};
@@ -33,6 +33,77 @@ fn prop_balanced_ranges_partition() {
             sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1,
             "balance",
         )
+    });
+}
+
+#[test]
+fn prop_weighted_ranges_recut_valid_for_arbitrary_measured_weights() {
+    // The adaptive repartitioner feeds *measured* work ÷ busy ratios into
+    // weighted_ranges — including the pathological readings a bad window
+    // can produce (zero weights from idle ranks, denormals from tiny busy
+    // times, NaN/∞ from corrupt probes). Every re-cut must still be a
+    // valid partition: contiguous, exhaustive, non-overlapping, nonempty.
+    check("weighted_ranges_measured", 300, |g: &mut Gen| {
+        let parts = g.usize_in(1, 12);
+        let total = g.usize_in(parts, 5000);
+        let weights: Vec<f64> = (0..parts)
+            .map(|_| match g.usize_in(0, 9) {
+                0 => 0.0,
+                1 => f64::MIN_POSITIVE * g.f64_in(0.0, 1.0), // denormal / zero
+                2 => f64::NAN,
+                3 => f64::INFINITY,
+                4 => -g.f64_in(0.0, 10.0),
+                // Wild but valid magnitudes, like work/busy ratios.
+                _ => 10f64.powf(g.f64_in(-12.0, 12.0)),
+            })
+            .collect();
+        let r = weighted_ranges(total, &weights);
+        ensure(r.len() == parts, "one range per part")?;
+        ensure(r[0].0 == 0 && r.last().unwrap().1 == total, "exhaustive coverage")?;
+        for w in r.windows(2) {
+            ensure(w[0].1 == w[1].0, "contiguous, non-overlapping")?;
+        }
+        for (s, e) in &r {
+            ensure(e > s, "every part nonempty")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weighted_ranges_uniform_weights_recut_round_trip() {
+    // A perfectly balanced measurement (all ranks demonstrate the same
+    // speed, at whatever common scale) must reproduce the uniform-weight
+    // seed cuts bit-for-bit — and re-cutting from those cuts' own
+    // balanced observation is a fixed point, so the adaptive driver never
+    // churns a homogeneous fleet.
+    check("weighted_ranges_uniform_round_trip", 200, |g: &mut Gen| {
+        let parts = g.usize_in(1, 12);
+        let total = g.usize_in(parts, 5000);
+        let seed_cuts = weighted_ranges(total, &vec![1.0; parts]);
+        // Round trip: measure "work ÷ busy" on the seed cuts, every rank
+        // at the same power-of-two speed (IEEE-exact division, so every
+        // part's measured weight comes out as exactly the same 2^k even
+        // though shard sizes differ by ±1), and re-cut. The quota
+        // arithmetic cancels the common 2^k factor exactly, so the cut
+        // points reproduce the seed cuts bit-for-bit — a homogeneous
+        // fleet's re-cut is a fixed point and the adaptive driver never
+        // churns it.
+        let speed = 2f64.powi(g.usize_in(0, 16) as i32 - 8);
+        let measured: Vec<f64> = seed_cuts
+            .iter()
+            .map(|(s, e)| {
+                let work = (e - s) as f64;
+                let busy = work / speed;
+                work / busy
+            })
+            .collect();
+        ensure(
+            measured.iter().all(|w| *w == speed),
+            "equal demonstrated speeds must measure bit-equal",
+        )?;
+        let recut = weighted_ranges(total, &measured);
+        ensure(recut == seed_cuts, "uniform re-cut round trip must be bit-stable")
     });
 }
 
