@@ -192,6 +192,13 @@ pub trait AlgorithmNode<C: Collectives> {
     /// not touch the simulated clock.
     fn export_handoff(&mut self) -> Handoff;
 
+    /// Non-destructive [`AlgorithmNode::export_handoff`]: the same
+    /// cut-axis slice and rank-local payload, but the node stays live.
+    /// Elastic drivers call this at every outer boundary to keep a
+    /// rollback snapshot without disturbing the run. Must not touch the
+    /// simulated clock.
+    fn snapshot_handoff(&self) -> Handoff;
+
     /// Install handoff state into a freshly set-up node: `cut_axis` is
     /// the full re-assembled cut-axis global vector (empty when the
     /// algorithm shards nothing on that axis — this node takes its

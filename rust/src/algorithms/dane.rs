@@ -304,6 +304,12 @@ impl<C: Collectives> AlgorithmNode<C> for DaneNode {
         Handoff { cut_axis: Vec::new(), bytes }
     }
 
+    fn snapshot_handoff(&self) -> Handoff {
+        let mut bytes = Vec::new();
+        <DaneNode as AlgorithmNode<C>>::save_state(self, &mut bytes);
+        Handoff { cut_axis: Vec::new(), bytes }
+    }
+
     fn import_handoff(&mut self, _cut_axis: &[f64], bytes: &[u8]) -> Result<(), String> {
         let mut r = ByteReader::new(bytes);
         <DaneNode as AlgorithmNode<C>>::restore_state(self, &mut r)?;

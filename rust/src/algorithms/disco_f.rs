@@ -508,6 +508,12 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoFNode {
         }
     }
 
+    fn snapshot_handoff(&self) -> Handoff {
+        let mut bytes = Vec::new();
+        self.save_local(&mut bytes);
+        Handoff { cut_axis: self.w.clone(), bytes }
+    }
+
     fn import_handoff(&mut self, cut_axis: &[f64], bytes: &[u8]) -> Result<(), String> {
         let (lo, hi) = self.range;
         if cut_axis.len() < hi {

@@ -9,9 +9,12 @@
 //! run **on the master only** while workers idle — the load imbalance the
 //! paper's Figure 2 (top) depicts. Every master-side step (including the
 //! preconditioner setup and the PCG initialization products) runs inside
-//! `ctx.compute_costed`, so the Fig. 2 compute/idle totals account the
-//! serial fraction exactly and are deterministic under
-//! [`crate::net::ComputeModel::Modeled`].
+//! `ctx.compute_costed_serial`, so the Fig. 2 compute/idle totals account
+//! the serial fraction exactly, stay deterministic under
+//! [`crate::net::ComputeModel::Modeled`], *and* are tagged
+//! shard-independent — the adaptive repartitioner subtracts them from the
+//! busy-seconds it divides by, so "rank 0 is doing serial PCG vector ops"
+//! is no longer mistaken for "rank 0 is slow".
 //!
 //! The two variants differ only in the master's preconditioner solve:
 //!
@@ -257,7 +260,7 @@ impl DiscoSNode {
         // master-only serial work, so it runs inside `compute_costed` — it
         // belongs to the Fig. 2 serial fraction.
         let (precond_cols, precond_factory) = if is_master {
-            ctx.compute_costed("precond_setup", || {
+            ctx.compute_costed_serial("precond_setup", || {
                 let cols = precond_columns(&x, p.tau);
                 let tau_f = cols.len() as f64;
                 let factory = if precond_kind == Precond::Woodbury {
@@ -445,7 +448,7 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
 
         // ---- master builds (or reuses) its preconditioner ----
         if is_master && (cached_precond.is_none() || !loss.curvature_is_constant()) {
-            *cached_precond = Some(ctx.compute_costed("precond_build", || {
+            *cached_precond = Some(ctx.compute_costed_serial("precond_build", || {
                 let tau_f = tau_eff.max(1) as f64;
                 let weights: Vec<f64> = (0..tau_eff)
                     .map(|i| loss.second_deriv(z[i], y[i]) / tau_eff.max(1) as f64)
@@ -499,7 +502,7 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
             // `compute` so the Fig. 2 trace attributes them (they used to
             // leak out of the compute accounting, understating the serial
             // fraction).
-            let (rs0, rn0) = ctx.compute_costed("pcg_init", || {
+            let (rs0, rn0) = ctx.compute_costed_serial("pcg_init", || {
                 r.copy_from_slice(grad);
                 ops::zero(v);
                 ops::zero(hv);
@@ -551,7 +554,7 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
             // Master-only vector operations (workers fall through to the
             // next broadcast and wait — idle time in the Fig. 2 sense).
             if is_master {
-                let completed = ctx.compute_costed("pcg_update", || {
+                let completed = ctx.compute_costed_serial("pcg_update", || {
                     ops::axpy(lambda, u_t, hu); // + λu
                     let uhu = ops::dot(u_t, hu);
                     if uhu <= 0.0 {
@@ -593,7 +596,7 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
 
         // ---- damped step on master ----
         if is_master {
-            ctx.compute_costed("step", || {
+            ctx.compute_costed_serial("step", || {
                 let vhv = ops::dot(v, hv);
                 let scale = damped_scale(vhv);
                 ops::axpy(-scale, v, w);
@@ -705,6 +708,12 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
         // The iterate is replicated per rank (every rank carries a full
         // ℝᵈ copy) — nothing is sharded on the cut axis, so the handoff
         // stays rank-local (the checkpoint codec minus the cache tag).
+        let mut bytes = Vec::new();
+        self.save_local(&mut bytes);
+        Handoff { cut_axis: Vec::new(), bytes }
+    }
+
+    fn snapshot_handoff(&self) -> Handoff {
         let mut bytes = Vec::new();
         self.save_local(&mut bytes);
         Handoff { cut_axis: Vec::new(), bytes }

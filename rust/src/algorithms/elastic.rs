@@ -1,0 +1,1064 @@
+//! Elastic fault-tolerant fleets: epoch-based membership, survivor
+//! re-forming, and deterministic fault injection.
+//!
+//! The plain drivers treat any membership change as fatal: a dead peer
+//! poisons the collectives and the whole run aborts with
+//! `cluster node failed`. This module upgrades the step-wise [`Session`]
+//! driver to *survive* membership changes instead:
+//!
+//! * **Boundary snapshots** — at every outer-iteration boundary each rank
+//!   snapshots its resumable state in memory: the context timeline
+//!   ([`Collectives::export_state`]), the rank-local handoff bytes, and
+//!   the *full* cut-axis vector (one free metrics AllGather re-assembles
+//!   it in rank order — the same world-independent representation the
+//!   PR-5 re-partition handoff ships). Two snapshots are kept: a fault
+//!   can strike while a boundary gather is still in flight on some rank,
+//!   leaving the fleet's newest snapshots one outer apart.
+//! * **Typed faults** — under elastic membership the TCP transport raises
+//!   [`EpochFault`]`{epoch, rank, kind}` instead of `fail()`-aborting
+//!   (socket symptoms are classified and *announced* so every survivor
+//!   names the same origin). Planned faults ([`FaultPlan`]) never wait
+//!   for socket symptoms: the target departs cleanly and survivors raise
+//!   the matching `Injected` fault immediately — bit-deterministic on
+//!   both transports under the modeled clock.
+//! * **Re-form & resume** — survivors re-rendezvous at rank 0 into epoch
+//!   `e+1` with contiguous re-numbered ranks
+//!   ([`TcpTransport::reform`](crate::net::TcpTransport::reform)), agree
+//!   on the newest boundary every survivor holds (one free metrics
+//!   round), re-cut the data over the new world via the *same* weighted
+//!   partition policies the up-front heterogeneity knobs use, re-shard
+//!   the boundary's cut-axis state through the handoff codec, and resume.
+//!   The recovery rebuild is priced on top of the restored simulated
+//!   clock, so recovery work lands in the modeled timeline. Joiners adopt
+//!   rank 0's boundary timeline from a bootstrap blob published in one
+//!   free ragged AllGather.
+//!
+//! Rank 0 hosts the rendezvous, is never re-numbered (survivor ranks are
+//! renumbered in sorted old-rank order), and cannot be killed — its death
+//! is fatal, exactly like the non-elastic contract.
+//!
+//! With elasticity disabled the entrypoints route through the *exact*
+//! plain-session code path — zero extra rounds, zero branching — so a
+//! disabled run is bit-identical to a plain [`Session`] run on both
+//! transports (test-enforced, mirroring the adaptive repartitioner's
+//! disabled⇒identical precedent).
+
+use crate::algorithms::remote::exchange_and_assemble;
+use crate::algorithms::session::{run_spec_full, CheckpointPlan, Session, SessionStatus};
+use crate::algorithms::spec::{ElasticSpec, FaultAction, FaultPlan, RepartitionSpec, RunSpec};
+use crate::algorithms::{assemble, NodeOutput, RunResult};
+use crate::data::Dataset;
+use crate::net::transport::tcp::{ReformInfo, TcpTransport};
+use crate::net::{
+    ClusterRun, Collectives, CommStats, CtxState, EpochFault, FaultKind, NodeCtx, Trace, Transport,
+};
+use crate::util::bytes::{put_f64, put_f64s, put_u32, put_u64, ByteReader};
+use std::collections::{HashSet, VecDeque};
+use std::io::Write;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Boundary snapshots
+// ---------------------------------------------------------------------------
+
+/// Everything one rank needs to roll back to an outer-iteration boundary
+/// — and everything the *fleet* needs to re-shard that boundary over a
+/// different world, because the cut-axis state is stored as the full
+/// gathered vector (world-independent).
+#[derive(Clone)]
+struct BoundarySnap {
+    outer: usize,
+    /// Context timeline (clock, busy/serial seconds, stats mirror, trace
+    /// segments, straggler stream).
+    ctx: CtxState,
+    /// Full cut-axis vector, rank-order gathered (empty for algorithms
+    /// with no sharded evolving state).
+    cut_axis: Vec<f64>,
+    /// Rank-local handoff bytes (iterate, rng streams, records, …).
+    bytes: Vec<u8>,
+    /// Backend-global priced ledger at the boundary (`Some` on shm, where
+    /// the blackboard is the ledger; `None` on TCP, where the per-rank
+    /// mirror is).
+    global: Option<CommStats>,
+}
+
+/// Take the boundary snapshot and run the join-poll metrics round. The
+/// boundary protocol is identical on both transports (same free rounds at
+/// the same points), so a planned-fault run is bit-deterministic across
+/// them. Returns `(snapshot, a joiner is waiting)`.
+fn take_boundary<C: Collectives>(
+    ctx: &mut C,
+    session: &Session<C>,
+    join_pending: bool,
+) -> (BoundarySnap, bool) {
+    let h = session.snapshot_handoff();
+    let cut_axis = if h.cut_axis.is_empty() {
+        Vec::new()
+    } else {
+        ctx.metric_all_gather_concat(&h.cut_axis)
+    };
+    let snap = BoundarySnap {
+        outer: session.outer(),
+        ctx: ctx.export_state(),
+        cut_axis,
+        bytes: h.bytes,
+        global: ctx.global_stats(),
+    };
+    let mut flag = vec![if join_pending { 1.0 } else { 0.0 }];
+    ctx.metric_reduce_all(&mut flag);
+    (snap, flag[0] > 0.0)
+}
+
+/// Keep the newest two snapshots (see the module docs for why two).
+fn push_snap(snaps: &mut VecDeque<BoundarySnap>, snap: BoundarySnap) {
+    if snaps.back().map(|s| s.outer) == Some(snap.outer) {
+        snaps.pop_back();
+    }
+    snaps.push_back(snap);
+    while snaps.len() > 2 {
+        snaps.pop_front();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Planned fault execution
+// ---------------------------------------------------------------------------
+
+enum PlanOutcome {
+    None,
+    Fault(EpochFault),
+    /// This rank is a planned kill's target: leave the fleet cleanly.
+    Depart,
+}
+
+/// Fire this boundary's unfired plan events, in plan order. Every rank
+/// scans the identical plan with an identical `fired` set, so all ranks
+/// take the same branch without any agreement traffic. `Kill`/`Join`
+/// events stop the scan (later same-boundary events fire when the
+/// boundary is revisited after recovery); a rolled-back `Delay` stays
+/// fired — a transient stall that the recovery undid is not replayed.
+fn apply_plan_events<C: Collectives>(
+    ctx: &mut C,
+    plan: &FaultPlan,
+    fired: &mut HashSet<usize>,
+    outer: usize,
+    epoch: u64,
+) -> PlanOutcome {
+    for (idx, ev) in plan.events.iter().enumerate() {
+        if ev.at_outer != outer || fired.contains(&idx) {
+            continue;
+        }
+        fired.insert(idx);
+        match ev.action {
+            FaultAction::Delay(secs) => {
+                if ctx.rank() == ev.rank {
+                    // Priced under the modeled clock: the stall is part of
+                    // the simulated timeline, deterministically.
+                    ctx.advance("fault-delay", secs);
+                }
+            }
+            FaultAction::Kill => {
+                if ev.rank >= ctx.world() {
+                    continue; // target already left in an earlier epoch
+                }
+                if ctx.rank() == ev.rank {
+                    return PlanOutcome::Depart;
+                }
+                return PlanOutcome::Fault(EpochFault {
+                    epoch,
+                    rank: ev.rank,
+                    kind: FaultKind::Injected,
+                    detail: format!("planned kill at outer {outer}"),
+                });
+            }
+            FaultAction::Join => {
+                return PlanOutcome::Fault(EpochFault {
+                    epoch,
+                    rank: ctx.world(),
+                    kind: FaultKind::Join,
+                    detail: format!("planned join at outer {outer}"),
+                });
+            }
+        }
+    }
+    PlanOutcome::None
+}
+
+// ---------------------------------------------------------------------------
+// Joiner bootstrap blob (rank 0's boundary snapshot, shipped as f64 words
+// over the free metrics AllGather)
+// ---------------------------------------------------------------------------
+
+struct Bootstrap {
+    outer: usize,
+    clock: f64,
+    compute: f64,
+    serial: f64,
+    stats: CommStats,
+    cut_axis: Vec<f64>,
+    bytes: Vec<u8>,
+    fired: HashSet<usize>,
+}
+
+fn encode_bootstrap(
+    agreed: i64,
+    snaps: &VecDeque<BoundarySnap>,
+    fired: &HashSet<usize>,
+) -> Result<Vec<u8>, String> {
+    let snap = snaps
+        .iter()
+        .find(|s| s.outer as i64 == agreed)
+        .ok_or_else(|| format!("elastic: rank 0 has no boundary snapshot at outer {agreed}"))?;
+    let mut buf = Vec::new();
+    put_u64(&mut buf, snap.outer as u64);
+    put_f64(&mut buf, snap.ctx.clock);
+    put_f64(&mut buf, snap.ctx.compute_seconds);
+    put_f64(&mut buf, snap.ctx.serial_seconds);
+    snap.ctx.stats.encode(&mut buf);
+    put_u32(&mut buf, snap.cut_axis.len() as u32);
+    put_f64s(&mut buf, &snap.cut_axis);
+    put_u32(&mut buf, snap.bytes.len() as u32);
+    buf.extend_from_slice(&snap.bytes);
+    let mut idxs: Vec<usize> = fired.iter().copied().collect();
+    idxs.sort_unstable();
+    put_u32(&mut buf, idxs.len() as u32);
+    for i in idxs {
+        put_u64(&mut buf, i as u64);
+    }
+    Ok(buf)
+}
+
+fn decode_bootstrap(bytes: &[u8]) -> Result<Bootstrap, String> {
+    let mut r = ByteReader::new(bytes);
+    let outer = r.u64()? as usize;
+    let clock = r.f64()?;
+    let compute = r.f64()?;
+    let serial = r.f64()?;
+    let stats = CommStats::decode(&mut r)?;
+    let ncut = r.u32()? as usize;
+    let cut_axis = r.f64s(ncut)?;
+    let nbytes = r.u32()? as usize;
+    let payload = r.take(nbytes)?.to_vec();
+    let nfired = r.u32()? as usize;
+    let mut fired = HashSet::with_capacity(nfired);
+    for _ in 0..nfired {
+        fired.insert(r.u64()? as usize);
+    }
+    r.finish()?;
+    Ok(Bootstrap {
+        outer,
+        clock,
+        compute,
+        serial,
+        stats,
+        cut_axis,
+        bytes: payload,
+        fired,
+    })
+}
+
+/// Pack bytes into f64 words (length header + bit-preserving chunks) so a
+/// blob can ride the metrics AllGather. Reductions never touch AllGather
+/// payloads, so arbitrary bit patterns survive both transports intact.
+fn bytes_to_words(bytes: &[u8]) -> Vec<f64> {
+    let mut words = Vec::with_capacity(1 + bytes.len() / 8 + 1);
+    words.push(f64::from_bits(bytes.len() as u64));
+    for chunk in bytes.chunks(8) {
+        let mut b = [0u8; 8];
+        b[..chunk.len()].copy_from_slice(chunk);
+        words.push(f64::from_bits(u64::from_le_bytes(b)));
+    }
+    words
+}
+
+fn words_to_bytes(words: &[f64]) -> Result<Vec<u8>, String> {
+    let n = words
+        .first()
+        .map(|w| w.to_bits() as usize)
+        .ok_or("elastic: empty bootstrap blob")?;
+    if words.len() < 1 + n.div_ceil(8) {
+        return Err(format!(
+            "elastic: bootstrap blob truncated ({} bytes claimed, {} words present)",
+            n,
+            words.len() - 1
+        ));
+    }
+    let mut bytes = Vec::with_capacity((words.len() - 1) * 8);
+    for w in &words[1..] {
+        bytes.extend_from_slice(&w.to_bits().to_le_bytes());
+    }
+    bytes.truncate(n);
+    Ok(bytes)
+}
+
+// ---------------------------------------------------------------------------
+// TCP elastic driver
+// ---------------------------------------------------------------------------
+
+enum EpochEnd {
+    Done,
+    Departed,
+    Fault(EpochFault),
+}
+
+fn build_tcp_ctx(transport: TcpTransport, spec: &RunSpec) -> NodeCtx<TcpTransport> {
+    let mut ctx = NodeCtx::new(transport)
+        .with_compute(spec.sim.compute)
+        .with_trace(spec.sim.trace);
+    if let Some(&speed) = spec.sim.speeds.get(ctx.rank) {
+        ctx = ctx.with_speed(speed);
+    }
+    if let Some(s) = spec.sim.straggler {
+        ctx = ctx.with_straggler(s);
+    }
+    ctx
+}
+
+/// Run one rank's share of an **elastic** multi-process job. Requires a
+/// transport established with elastic membership
+/// ([`TcpTransport::establish_elastic`]). Returns `Some(RunResult)` on
+/// rank 0, `None` elsewhere — and `None` on a rank a planned kill removed.
+pub fn run_elastic_over_tcp(
+    ds: &Dataset,
+    spec: &RunSpec,
+    transport: TcpTransport,
+    es: &ElasticSpec,
+) -> Option<RunResult> {
+    assert_eq!(
+        transport.world(),
+        spec.sim.m,
+        "transport world size must equal spec.sim.m"
+    );
+    if let Err(e) = spec.validate() {
+        panic!("invalid run spec: {e}");
+    }
+    let wall = Instant::now();
+    let mut ctx = build_tcp_ctx(transport, spec);
+    let spec_now = spec.clone();
+    let session = Session::new(&mut ctx, ds, &spec_now);
+    elastic_tcp_loop(
+        ctx,
+        session,
+        spec_now,
+        ds,
+        spec,
+        es,
+        HashSet::new(),
+        VecDeque::new(),
+        wall,
+    )
+}
+
+/// Entry point for a fresh worker joining a *running* elastic fleet:
+/// dial the rendezvous ([`TcpTransport::join`]), then bootstrap from the
+/// survivors' agreed boundary and run the same elastic loop.
+pub fn run_elastic_joiner(
+    ds: &Dataset,
+    spec: &RunSpec,
+    transport: TcpTransport,
+    info: ReformInfo,
+    es: &ElasticSpec,
+) -> Option<RunResult> {
+    if let Err(e) = spec.validate() {
+        panic!("invalid run spec: {e}");
+    }
+    let wall = Instant::now();
+    let mut ctx = build_tcp_ctx(transport, spec);
+    let mut snaps = VecDeque::new();
+    let (spec_now, session, fired) =
+        match bootstrap(&mut ctx, &info, None, ds, spec, &mut snaps, HashSet::new()) {
+            Ok(v) => v,
+            Err(e) => panic!("cluster node failed: rank {}: {e}", ctx.rank),
+        };
+    println!(
+        "elastic: epoch {}: joined as rank {} of {}",
+        info.epoch, info.rank, info.world
+    );
+    elastic_tcp_loop(ctx, session, spec_now, ds, spec, es, fired, snaps, wall)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn elastic_tcp_loop(
+    mut ctx: NodeCtx<TcpTransport>,
+    mut session: Session<NodeCtx<TcpTransport>>,
+    mut spec_now: RunSpec,
+    ds: &Dataset,
+    base: &RunSpec,
+    es: &ElasticSpec,
+    mut fired: HashSet<usize>,
+    mut snaps: VecDeque<BoundarySnap>,
+    wall: Instant,
+) -> Option<RunResult> {
+    let mut pending: Option<EpochFault> = None;
+    let mut recoveries = 0usize;
+    loop {
+        // One catch-all unwind boundary per epoch: a typed EpochFault can
+        // surface from the step loop *or* from the recovery rounds
+        // themselves (cascading failures) — both re-enter recovery.
+        let end = catch_unwind(AssertUnwindSafe(|| -> Result<EpochEnd, String> {
+            if let Some(fault) = pending.take() {
+                let old_rank = ctx.rank;
+                let info = ctx
+                    .transport_mut()
+                    .reform(&fault)
+                    .map_err(|e| format!("elastic: reform after [{fault}] failed: {e}"))?;
+                if info.world < es.min_world {
+                    return Err(format!(
+                        "elastic: re-formed world {} is below --elastic-min-world {}",
+                        info.world, es.min_world
+                    ));
+                }
+                let taken = std::mem::take(&mut fired);
+                let (sp, se, fi) =
+                    bootstrap(&mut ctx, &info, Some(old_rank), ds, base, &mut snaps, taken)?;
+                spec_now = sp;
+                session = se;
+                fired = fi;
+                let _ = &spec_now; // re-cut spec lives as long as the session
+                if ctx.rank == 0 {
+                    println!(
+                        "elastic: epoch {}: re-formed world {} (joined {}) after [{}]",
+                        info.epoch, info.world, info.joined, fault
+                    );
+                    let _ = std::io::stdout().flush();
+                }
+            }
+            Ok(run_epoch(&mut ctx, &mut session, &mut snaps, &mut fired, es))
+        }));
+        let fault = match end {
+            Ok(Ok(EpochEnd::Done)) => break,
+            Ok(Ok(EpochEnd::Departed)) => {
+                println!("elastic: rank {} departed (planned kill)", ctx.rank);
+                return None;
+            }
+            Ok(Ok(EpochEnd::Fault(f))) => f,
+            Ok(Err(e)) => panic!("cluster node failed: rank {}: {e}", ctx.rank),
+            Err(payload) => match payload.downcast::<EpochFault>() {
+                Ok(f) => *f,
+                Err(p) => resume_unwind(p),
+            },
+        };
+        recoveries += 1;
+        if recoveries > es.max_recoveries {
+            panic!(
+                "cluster node failed: rank {}: elastic: giving up after {} recoveries (last fault: {})",
+                ctx.rank, es.max_recoveries, fault
+            );
+        }
+        pending = Some(fault);
+    }
+    let out = session.finish();
+    let wall_seconds = wall.elapsed().as_secs_f64();
+    exchange_and_assemble(&mut ctx, base.kind(), out, wall_seconds)
+}
+
+/// Drive boundaries until the stop policy fires or a fault interrupts the
+/// epoch. Unplanned faults (a SIGKILLed peer, a socket deadline) surface
+/// as [`EpochFault`] panics out of the collectives; planned ones return.
+fn run_epoch(
+    ctx: &mut NodeCtx<TcpTransport>,
+    session: &mut Session<NodeCtx<TcpTransport>>,
+    snaps: &mut VecDeque<BoundarySnap>,
+    fired: &mut HashSet<usize>,
+    es: &ElasticSpec,
+) -> EpochEnd {
+    loop {
+        let join_pending = ctx.rank == 0 && ctx.transport_mut().pending_joiner();
+        let (snap, join) = take_boundary(ctx, session, join_pending);
+        push_snap(snaps, snap);
+        let epoch = ctx.transport_mut().epoch();
+        if join {
+            return EpochEnd::Fault(EpochFault {
+                epoch,
+                rank: ctx.m,
+                kind: FaultKind::Join,
+                detail: "worker asked to join".into(),
+            });
+        }
+        match apply_plan_events(ctx, &es.plan, fired, session.outer(), epoch) {
+            PlanOutcome::Depart => {
+                ctx.transport_mut().depart();
+                return EpochEnd::Departed;
+            }
+            PlanOutcome::Fault(f) => return EpochEnd::Fault(f),
+            PlanOutcome::None => {}
+        }
+        if es.pace_ms > 0 {
+            // Wall-clock only — gives external chaos (SIGKILL, joiners) a
+            // window to land mid-run; the simulated clock never sees it.
+            std::thread::sleep(Duration::from_millis(es.pace_ms));
+        }
+        match session.step(ctx) {
+            SessionStatus::Running(_) => {}
+            SessionStatus::Stopped(..) => return EpochEnd::Done,
+        }
+    }
+}
+
+/// Post-reform recovery sync, SPMD over the new epoch's mesh. Two free
+/// metrics rounds: (1) gather `(old rank, newest snapshot, second-newest)`
+/// per rank and agree on the rollback boundary — the minimum newest outer
+/// over survivors, which the two-deep window guarantees every survivor
+/// holds; (2) when joiners were admitted, rank 0 publishes its
+/// agreed-boundary snapshot as a bootstrap blob (everyone else contributes
+/// an empty part to the ragged gather). Then each rank rebuilds: restore
+/// the boundary timeline, let `Session` setup price the re-cut rebuild on
+/// top of it, re-shard the boundary's cut-axis state, reposition the
+/// outer counter. `old_rank = None` marks a joiner.
+fn bootstrap(
+    ctx: &mut NodeCtx<TcpTransport>,
+    info: &ReformInfo,
+    old_rank: Option<usize>,
+    ds: &Dataset,
+    base: &RunSpec,
+    snaps: &mut VecDeque<BoundarySnap>,
+    fired: HashSet<usize>,
+) -> Result<(RunSpec, Session<NodeCtx<TcpTransport>>, HashSet<usize>), String> {
+    // The transport already renumbered us; mirror it into the context.
+    ctx.rank = info.rank;
+    ctx.m = info.world;
+    ctx.trace = Trace::new(info.world);
+
+    let latest = snaps.back().map(|s| s.outer as f64).unwrap_or(-1.0);
+    let prev = if snaps.len() >= 2 {
+        snaps[snaps.len() - 2].outer as f64
+    } else {
+        -1.0
+    };
+    let mine = [old_rank.map(|r| r as f64).unwrap_or(-1.0), latest, prev];
+    let table = ctx.metric_all_gather_concat(&mine);
+    if table.len() != 3 * info.world {
+        return Err(format!(
+            "elastic: recovery sync expected {} slots, got {}",
+            3 * info.world,
+            table.len()
+        ));
+    }
+
+    // Rollback boundary: min(newest) over survivors. A survivor with no
+    // snapshot at all (a fault before the first boundary) forces a fresh
+    // restart over the new world (agreed = -1).
+    let mut agreed = i64::MAX;
+    for i in 0..info.world {
+        if table[3 * i] >= 0.0 {
+            agreed = agreed.min(table[3 * i + 1] as i64);
+        }
+    }
+    if agreed == i64::MAX {
+        agreed = -1;
+    }
+
+    // Re-cut over the new world: survivors keep their configured speeds
+    // (mapped through the old→new renumbering), joiners start at 1.0.
+    // `Session` setup then re-cuts with the same weighted policies the
+    // up-front heterogeneity knobs use.
+    let mut spec_now = base.clone();
+    spec_now.sim.m = info.world;
+    spec_now.sim.speeds = if base.sim.speeds.is_empty() {
+        Vec::new()
+    } else {
+        (0..info.world)
+            .map(|i| {
+                let old = table[3 * i];
+                if old >= 0.0 {
+                    base.sim.speeds.get(old as usize).copied().unwrap_or(1.0)
+                } else {
+                    1.0
+                }
+            })
+            .collect()
+    };
+
+    let blob_words = if info.joined > 0 {
+        let mine = if ctx.rank == 0 && agreed >= 0 {
+            bytes_to_words(&encode_bootstrap(agreed, snaps, &fired)?)
+        } else {
+            Vec::new()
+        };
+        ctx.metric_all_gather_concat(&mine)
+    } else {
+        Vec::new()
+    };
+
+    let mut fired = fired;
+    let session = if agreed < 0 {
+        // Fresh restart over the new world: zeroed timeline, fresh state.
+        let straggler = ctx.export_state().straggler;
+        ctx.import_state(CtxState {
+            clock: 0.0,
+            compute_seconds: 0.0,
+            serial_seconds: 0.0,
+            stats: CommStats::default(),
+            segments: Vec::new(),
+            straggler,
+        })?;
+        Session::with_cuts(ctx, ds, &spec_now, None)
+    } else if old_rank.is_some() {
+        let snap = snaps
+            .iter()
+            .find(|s| s.outer as i64 == agreed)
+            .ok_or_else(|| format!("elastic: no boundary snapshot at outer {agreed}"))?
+            .clone();
+        ctx.import_state(snap.ctx)?;
+        let mut session = Session::with_cuts(ctx, ds, &spec_now, None);
+        session.import_handoff(&snap.cut_axis, &snap.bytes)?;
+        session.resume_at(agreed as usize);
+        session
+    } else {
+        // Joiner: adopt rank 0's boundary timeline (identical on every
+        // rank by construction) with a fresh trace and this rank's own
+        // straggler stream.
+        let boot = decode_bootstrap(&words_to_bytes(&blob_words)?)?;
+        if boot.outer as i64 != agreed {
+            return Err(format!(
+                "elastic: bootstrap blob is for outer {}, agreed boundary is {agreed}",
+                boot.outer
+            ));
+        }
+        let straggler = ctx.export_state().straggler;
+        ctx.import_state(CtxState {
+            clock: boot.clock,
+            compute_seconds: boot.compute,
+            serial_seconds: boot.serial,
+            stats: boot.stats,
+            segments: Vec::new(),
+            straggler,
+        })?;
+        let mut session = Session::with_cuts(ctx, ds, &spec_now, None);
+        session.import_handoff(&boot.cut_axis, &boot.bytes)?;
+        session.resume_at(boot.outer);
+        fired = boot.fired;
+        session
+    };
+    // Old-world snapshots are dead after a re-cut; the next boundary
+    // starts a fresh window.
+    snaps.clear();
+    Ok((spec_now, session, fired))
+}
+
+// ---------------------------------------------------------------------------
+// shm elastic driver (plan-driven)
+// ---------------------------------------------------------------------------
+
+/// One rank's verdict on an epoch of the shm elastic driver.
+enum ShmOutcome {
+    Done(NodeOutput),
+    Fault {
+        snap: BoundarySnap,
+        fault: EpochFault,
+        fired: HashSet<usize>,
+    },
+    Departed,
+}
+
+/// How a rank of the *next* epoch restores: survivors from their own
+/// boundary snapshot, a joiner from rank 0's (timeline adopted, state
+/// re-sharded, own straggler stream).
+#[derive(Clone)]
+enum RestoreSlot {
+    Survivor(BoundarySnap),
+    Joiner(BoundarySnap),
+}
+
+fn shm_epoch<C: Collectives>(
+    ctx: &mut C,
+    ds: &Dataset,
+    spec_e: &RunSpec,
+    es: &ElasticSpec,
+    epoch: u64,
+    slot: Option<&RestoreSlot>,
+    mut fired: HashSet<usize>,
+) -> ShmOutcome {
+    match shm_epoch_inner(ctx, ds, spec_e, es, epoch, slot, &mut fired) {
+        Ok(out) => out,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+fn shm_epoch_inner<C: Collectives>(
+    ctx: &mut C,
+    ds: &Dataset,
+    spec_e: &RunSpec,
+    es: &ElasticSpec,
+    epoch: u64,
+    slot: Option<&RestoreSlot>,
+    fired: &mut HashSet<usize>,
+) -> Result<ShmOutcome, String> {
+    let mut session = match slot {
+        None => Session::new(ctx, ds, spec_e),
+        Some(RestoreSlot::Survivor(snap)) => {
+            ctx.import_state(snap.ctx.clone())?;
+            let mut s = Session::with_cuts(ctx, ds, spec_e, None);
+            s.import_handoff(&snap.cut_axis, &snap.bytes)?;
+            s.resume_at(snap.outer);
+            s
+        }
+        Some(RestoreSlot::Joiner(snap)) => {
+            let straggler = ctx.export_state().straggler;
+            ctx.import_state(CtxState {
+                clock: snap.ctx.clock,
+                compute_seconds: snap.ctx.compute_seconds,
+                serial_seconds: snap.ctx.serial_seconds,
+                stats: snap.ctx.stats.clone(),
+                segments: Vec::new(),
+                straggler,
+            })?;
+            let mut s = Session::with_cuts(ctx, ds, spec_e, None);
+            s.import_handoff(&snap.cut_axis, &snap.bytes)?;
+            s.resume_at(snap.outer);
+            s
+        }
+    };
+    loop {
+        let (snap, _join) = take_boundary(ctx, &session, false);
+        match apply_plan_events(ctx, &es.plan, fired, session.outer(), epoch) {
+            PlanOutcome::Depart => return Ok(ShmOutcome::Departed),
+            PlanOutcome::Fault(fault) => {
+                return Ok(ShmOutcome::Fault {
+                    snap,
+                    fault,
+                    fired: fired.clone(),
+                })
+            }
+            PlanOutcome::None => {}
+        }
+        if es.pace_ms > 0 {
+            std::thread::sleep(Duration::from_millis(es.pace_ms));
+        }
+        match session.step(ctx) {
+            SessionStatus::Running(_) => {}
+            SessionStatus::Stopped(..) => return Ok(ShmOutcome::Done(session.finish())),
+        }
+    }
+}
+
+/// Plan-driven elastic run on the thread cluster: one [`Cluster::run`]
+/// per epoch; between epochs the driver re-maps survivor snapshots by
+/// sorted old rank (exactly the TCP renumbering rule), synthesizes a
+/// joiner's restore slot from rank 0's snapshot, seeds the next epoch's
+/// priced ledger from the boundary's global stats, and re-launches at the
+/// new world. Returns the assembled result plus the number of recoveries.
+///
+/// [`Cluster::run`]: crate::net::Cluster::run
+pub fn run_spec_elastic(ds: &Dataset, spec: &RunSpec, es: &ElasticSpec) -> (RunResult, usize) {
+    if let Err(e) = spec.validate() {
+        panic!("invalid run spec: {e}");
+    }
+    let wall = Instant::now();
+    let mut world = spec.sim.m;
+    let mut speeds = spec.sim.speeds.clone();
+    let mut restore: Option<Vec<RestoreSlot>> = None;
+    let mut fired: HashSet<usize> = HashSet::new();
+    let mut global_seed: Option<CommStats> = None;
+    let mut recoveries = 0usize;
+    let mut epoch: u64 = 1;
+    loop {
+        let mut spec_e = spec.clone();
+        spec_e.sim.m = world;
+        spec_e.sim.speeds = speeds.clone();
+        let mut cluster = spec_e.sim.cluster();
+        if let Some(stats) = global_seed.clone() {
+            cluster = cluster.with_initial_stats(stats);
+        }
+        let fired_in = fired.clone();
+        let restore_in = restore.take();
+        let spec_ref = &spec_e;
+        let run = cluster.run(|ctx| {
+            let slot = restore_in.as_ref().map(|v| &v[ctx.rank()]);
+            shm_epoch(ctx, ds, spec_ref, es, epoch, slot, fired_in.clone())
+        });
+
+        let mut outs: Vec<NodeOutput> = Vec::new();
+        let mut fault: Option<EpochFault> = None;
+        let mut snaps: Vec<Option<BoundarySnap>> = (0..world).map(|_| None).collect();
+        for (r, o) in run.outputs.into_iter().enumerate() {
+            match o {
+                ShmOutcome::Done(out) => outs.push(out),
+                ShmOutcome::Fault {
+                    snap,
+                    fault: f,
+                    fired: fi,
+                } => {
+                    snaps[r] = Some(snap);
+                    fired = fi; // identical on every survivor
+                    fault = Some(f);
+                }
+                ShmOutcome::Departed => {}
+            }
+        }
+        let Some(f) = fault else {
+            if outs.len() != world {
+                panic!("cluster node failed: elastic: epoch outcomes diverged");
+            }
+            let crun = ClusterRun {
+                outputs: outs,
+                stats: run.stats,
+                trace: run.trace,
+                sim_seconds: run.sim_seconds,
+                wall_seconds: wall.elapsed().as_secs_f64(),
+            };
+            return (assemble(spec.kind(), crun), recoveries);
+        };
+
+        recoveries += 1;
+        if recoveries > es.max_recoveries {
+            panic!(
+                "cluster node failed: elastic: giving up after {} recoveries (last fault: {f})",
+                es.max_recoveries
+            );
+        }
+        let root_snap = snaps[0]
+            .clone()
+            .unwrap_or_else(|| panic!("cluster node failed: elastic: rank 0 left the fleet"));
+        global_seed = root_snap.global.clone();
+        match f.kind {
+            FaultKind::Join => {
+                let mut slots = Vec::with_capacity(world + 1);
+                for snap in snaps.iter_mut() {
+                    match snap.take() {
+                        Some(s) => slots.push(RestoreSlot::Survivor(s)),
+                        None => panic!(
+                            "cluster node failed: elastic: a survivor has no boundary snapshot"
+                        ),
+                    }
+                }
+                slots.push(RestoreSlot::Joiner(root_snap));
+                restore = Some(slots);
+                if !speeds.is_empty() {
+                    speeds.push(1.0);
+                }
+                world += 1;
+            }
+            _ => {
+                let dead = f.rank;
+                if world - 1 < es.min_world {
+                    panic!(
+                        "cluster node failed: elastic: re-formed world {} is below min world {}",
+                        world - 1,
+                        es.min_world
+                    );
+                }
+                let mut slots = Vec::with_capacity(world - 1);
+                for (r, snap) in snaps.iter_mut().enumerate() {
+                    if r == dead {
+                        continue;
+                    }
+                    match snap.take() {
+                        Some(s) => slots.push(RestoreSlot::Survivor(s)),
+                        None => panic!(
+                            "cluster node failed: elastic: survivor rank {r} has no boundary snapshot"
+                        ),
+                    }
+                }
+                restore = Some(slots);
+                if !speeds.is_empty() {
+                    speeds.remove(dead);
+                }
+                world -= 1;
+            }
+        }
+        epoch = f.epoch + 1;
+        println!("elastic: epoch {epoch}: re-formed world {world} after [{f}]");
+    }
+}
+
+/// Route a (possibly elastic) shm run: with elasticity disabled this *is*
+/// `run_spec_full` with no plan and no repartitioner — the exact plain
+/// code path, zero extra rounds — so disabled ⇒ bit-identical is
+/// structural, not incidental.
+pub fn run_spec_maybe_elastic(
+    ds: &Dataset,
+    spec: &RunSpec,
+    es: &ElasticSpec,
+) -> (RunResult, usize) {
+    if es.enabled() {
+        run_spec_elastic(ds, spec, es)
+    } else {
+        let (result, _recuts) =
+            run_spec_full(ds, spec, &CheckpointPlan::none(), &RepartitionSpec::none());
+        (result, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::session::run_spec;
+    use crate::algorithms::{AlgoKind, RunSpec};
+    use crate::data::SyntheticConfig;
+    use crate::loss::LossKind;
+    use crate::net::ComputeModel;
+
+    fn ds() -> Dataset {
+        SyntheticConfig::new("elastic-test", 90, 24)
+            .density(0.4)
+            .seed(7)
+            .generate()
+    }
+
+    fn spec(kind: AlgoKind, m: usize) -> RunSpec {
+        let mut spec = RunSpec::new(kind, LossKind::Logistic, 1e-3).with_m(m);
+        spec.sim.compute = ComputeModel::modeled();
+        spec.stop.grad_tol = 1e-6;
+        spec.stop.max_outer = 60;
+        spec
+    }
+
+    #[test]
+    fn words_round_trip_arbitrary_bytes() {
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65] {
+            let bytes: Vec<u8> = (0..len).map(|i| (i * 37 + 11) as u8).collect();
+            let words = bytes_to_words(&bytes);
+            assert_eq!(words_to_bytes(&words).unwrap(), bytes);
+        }
+        assert!(words_to_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn bootstrap_blob_round_trips() {
+        let mut stats = CommStats::default();
+        stats.wire_bytes = 99;
+        let snap = BoundarySnap {
+            outer: 5,
+            ctx: CtxState {
+                clock: 1.25,
+                compute_seconds: 0.75,
+                serial_seconds: 0.125,
+                stats: stats.clone(),
+                segments: Vec::new(),
+                straggler: None,
+            },
+            cut_axis: vec![1.5, -2.25, 0.0],
+            bytes: vec![1, 2, 3, 4, 5],
+            global: None,
+        };
+        let mut snaps = VecDeque::new();
+        snaps.push_back(snap);
+        let fired: HashSet<usize> = [3usize, 1].into_iter().collect();
+        let blob = encode_bootstrap(5, &snaps, &fired).unwrap();
+        let boot = decode_bootstrap(&blob).unwrap();
+        assert_eq!(boot.outer, 5);
+        assert_eq!(boot.clock.to_bits(), 1.25f64.to_bits());
+        assert_eq!(boot.stats, stats);
+        assert_eq!(boot.cut_axis, vec![1.5, -2.25, 0.0]);
+        assert_eq!(boot.bytes, vec![1, 2, 3, 4, 5]);
+        assert_eq!(boot.fired, fired);
+        // And the blob survives the f64-word packing it rides on.
+        let rt = words_to_bytes(&bytes_to_words(&blob)).unwrap();
+        assert_eq!(rt, blob);
+    }
+
+    #[test]
+    fn planned_kill_reforms_and_converges_disco_f() {
+        let ds = ds();
+        let spec3 = spec(AlgoKind::DiscoF, 3);
+        let baseline = run_spec(&ds, &spec3);
+        assert!(baseline.converged, "baseline must converge");
+
+        let mut es = ElasticSpec::on();
+        es.plan = FaultPlan::parse("kill@2:2").unwrap();
+        let (result, recoveries) = run_spec_elastic(&ds, &spec3, &es);
+        assert_eq!(recoveries, 1);
+        assert_eq!(result.node_ops.len(), 2, "survivors re-formed at world-1");
+        assert!(result.converged, "survivors must still converge");
+        assert!(
+            result.final_grad_norm() <= spec3.stop.grad_tol,
+            "converged to the same tolerance"
+        );
+        let df = (result.final_fval() - baseline.final_fval()).abs();
+        assert!(df < 1e-6, "same objective to tolerance (Δf = {df:.3e})");
+        assert_eq!(result.w.len(), ds.dim(), "iterate re-assembled over new cuts");
+    }
+
+    #[test]
+    fn planned_kill_reforms_and_converges_sample_partitioned() {
+        let ds = ds();
+        for kind in [AlgoKind::Dane, AlgoKind::CocoaPlus, AlgoKind::Gd] {
+            let spec3 = spec(kind, 3);
+            let baseline = run_spec(&ds, &spec3);
+            let mut es = ElasticSpec::on();
+            es.plan = FaultPlan::parse("kill@1:1").unwrap();
+            let (result, recoveries) = run_spec_elastic(&ds, &spec3, &es);
+            assert_eq!(recoveries, 1, "{kind:?}");
+            assert_eq!(result.node_ops.len(), 2, "{kind:?}");
+            assert_eq!(result.converged, baseline.converged, "{kind:?}");
+            if baseline.converged {
+                let df = (result.final_fval() - baseline.final_fval()).abs();
+                assert!(df < 1e-5, "{kind:?}: Δf = {df:.3e}");
+            }
+        }
+    }
+
+    #[test]
+    fn planned_join_grows_the_world() {
+        let ds = ds();
+        let spec2 = spec(AlgoKind::DiscoF, 2);
+        let mut es = ElasticSpec::on();
+        es.plan = FaultPlan::parse("join@2").unwrap();
+        let (result, recoveries) = run_spec_elastic(&ds, &spec2, &es);
+        assert_eq!(recoveries, 1);
+        assert_eq!(result.node_ops.len(), 3, "world grew to 3");
+        assert!(result.converged);
+        assert_eq!(result.w.len(), ds.dim());
+    }
+
+    #[test]
+    fn delay_fault_is_priced_and_deterministic() {
+        let ds = ds();
+        let spec3 = spec(AlgoKind::Gd, 3);
+        let mut es = ElasticSpec::on();
+        es.plan = FaultPlan::parse("delay@1:1:0.5").unwrap();
+        let (a, _) = run_spec_elastic(&ds, &spec3, &es);
+        let (b, _) = run_spec_elastic(&ds, &spec3, &es);
+        assert_eq!(a.sim_seconds.to_bits(), b.sim_seconds.to_bits());
+        for (x, y) in a.w.iter().zip(b.w.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // The stall lands in the modeled timeline.
+        let (plain, _) = run_spec_elastic(&ds, &spec3, &ElasticSpec::on());
+        assert!(a.sim_seconds > plain.sim_seconds + 0.49);
+    }
+
+    #[test]
+    fn disabled_routes_through_the_plain_path_bit_identically() {
+        let ds = ds();
+        let spec3 = spec(AlgoKind::DiscoS, 3);
+        let (a, recoveries) = run_spec_maybe_elastic(&ds, &spec3, &ElasticSpec::none());
+        assert_eq!(recoveries, 0);
+        let b = run_spec(&ds, &spec3);
+        assert_eq!(a.sim_seconds.to_bits(), b.sim_seconds.to_bits());
+        assert_eq!(a.stats, b.stats);
+        for (x, y) in a.w.iter().zip(b.w.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn second_kill_in_a_later_epoch_reforms_again() {
+        let ds = ds();
+        let spec4 = spec(AlgoKind::Gd, 4);
+        let mut es = ElasticSpec::on();
+        // Rank numbering is per-epoch: after kill@1:3 the world is 0..3,
+        // and kill@3:2 targets the re-numbered rank 2.
+        es.plan = FaultPlan::parse("kill@1:3,kill@3:2").unwrap();
+        let (result, recoveries) = run_spec_elastic(&ds, &spec4, &es);
+        assert_eq!(recoveries, 2);
+        assert_eq!(result.node_ops.len(), 2);
+    }
+
+    #[test]
+    fn min_world_is_enforced() {
+        let ds = ds();
+        let spec2 = spec(AlgoKind::Gd, 2);
+        let mut es = ElasticSpec::on();
+        es.min_world = 2;
+        es.plan = FaultPlan::parse("kill@1:1").unwrap();
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            run_spec_elastic(&ds, &spec2, &es);
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("below min world"), "got: {msg}");
+    }
+}

@@ -34,6 +34,7 @@ pub mod common;
 pub mod dane;
 pub mod disco_f;
 pub mod disco_s;
+pub mod elastic;
 pub mod gd;
 pub mod remote;
 pub mod repartition;
@@ -41,6 +42,9 @@ pub mod session;
 pub mod spec;
 
 pub use algorithm::{Algorithm, AlgorithmNode, Handoff, StepReport};
+pub use elastic::{
+    run_elastic_joiner, run_elastic_over_tcp, run_spec_elastic, run_spec_maybe_elastic,
+};
 pub use remote::{run_over, run_over_spec};
 pub use repartition::Repartitioner;
 pub use session::{
@@ -48,8 +52,9 @@ pub use session::{
     CheckpointPlan, Session, SessionStatus, StopReason,
 };
 pub use spec::{
-    AlgoParams, CocoaParams, DaneParams, DataSpec, DiscoParams, RepartitionPolicy,
-    RepartitionSpec, RunSpec, SagParams, SimSpec, StopSpec, GRAD_TOL_DEFAULT,
+    AlgoParams, CocoaParams, DaneParams, DataSpec, DiscoParams, ElasticSpec, FaultAction,
+    FaultEvent, FaultPlan, RepartitionPolicy, RepartitionSpec, RunSpec, SagParams, SimSpec,
+    StopSpec, GRAD_TOL_DEFAULT,
 };
 
 use crate::data::{Dataset, PartitionKind};

@@ -21,7 +21,7 @@
 
 use crate::algorithms::session::{drive_session, CheckpointPlan};
 use crate::algorithms::spec::{RepartitionSpec, RunSpec};
-use crate::algorithms::{NodeOutput, OpCounts, RunConfig, RunResult};
+use crate::algorithms::{AlgoKind, NodeOutput, OpCounts, RunConfig, RunResult};
 use crate::data::Dataset;
 use crate::net::transport::{NodeCtx, Transport};
 use crate::net::{CommStats, Segment, Trace};
@@ -81,13 +81,29 @@ pub fn run_over_spec<T: Transport>(
         Err(e) => panic!("cluster node failed: rank {rank}: {e}"),
     };
 
+    exchange_and_assemble(&mut ctx, spec.kind(), out, wall.elapsed().as_secs_f64())
+}
+
+/// Final report exchange + rank-0 assembly, shared by the plain and
+/// elastic multi-process drivers. Ships this rank's `NodeReport` over the
+/// transport's out-of-band channel and, on rank 0, merges the fleet's
+/// reports into a [`RunResult`]. The world size is taken from the report
+/// set itself (not the spec) so an elastically re-formed fleet assembles
+/// at its *current* membership.
+pub(crate) fn exchange_and_assemble<T: Transport>(
+    ctx: &mut NodeCtx<T>,
+    algo: AlgoKind,
+    out: NodeOutput,
+    wall_seconds: f64,
+) -> Option<RunResult> {
     let report = encode_report(&out, &ctx.local_stats, ctx.clock, &ctx.trace);
     let reports = ctx.transport_mut().exchange_reports(report)?;
 
     // Rank 0: merge the fleet's reports into a RunResult.
+    let world = reports.len();
     let mut w = Vec::new();
-    let mut node_ops: Vec<OpCounts> = Vec::with_capacity(spec.sim.m);
-    let mut trace = Trace::new(spec.sim.m);
+    let mut node_ops: Vec<OpCounts> = Vec::with_capacity(world);
+    let mut trace = Trace::new(world);
     let mut sim = 0.0f64;
     let mut stats = CommStats::default();
     for (r, bytes) in reports.iter().enumerate() {
@@ -110,13 +126,13 @@ pub fn run_over_spec<T: Transport>(
         }
     }
     Some(RunResult {
-        algo: spec.kind(),
+        algo,
         records: out.records,
         w,
         stats,
         trace,
         sim_seconds: sim,
-        wall_seconds: wall.elapsed().as_secs_f64(),
+        wall_seconds,
         converged: out.converged,
         node_ops,
     })

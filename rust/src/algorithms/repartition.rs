@@ -10,9 +10,14 @@
 //! 1. **Observe** — over a window of `every` outer iterations it
 //!    accumulates each rank's busy (compute) seconds from the context's
 //!    always-on idle accounting
-//!    ([`Collectives::compute_seconds`](crate::net::Collectives)), and
-//!    gathers the per-rank `(busy, shard work)` table in one *free*
-//!    metrics round, so every rank sees identical data.
+//!    ([`Collectives::compute_seconds`](crate::net::Collectives)), *minus*
+//!    the shard-independent serial fraction
+//!    ([`Collectives::serial_seconds`](crate::net::Collectives) — rank 0's
+//!    master-side PCG vector algebra in DiSCO-S/orig does not shrink with
+//!    its shard, so counting it would misread "doing serial work" as
+//!    "slow node" and starve the master of data), and gathers the
+//!    per-rank `(busy, shard work)` table in one *free* metrics round, so
+//!    every rank sees identical data.
 //! 2. **Estimate** — effective speed of rank `j` ∝ `work_j / busy_j`:
 //!    the work units are exactly what the cut policy balances (sample
 //!    counts for the sample-partitioned algorithms, `nnz + overhead·rows`
@@ -59,6 +64,9 @@ pub struct Repartitioner {
     ranges: Vec<(usize, usize)>,
     /// This rank's busy-seconds mark at the start of the current window.
     window_busy_mark: f64,
+    /// Serial (shard-independent) busy-seconds mark at the window start:
+    /// the window's serial delta is excluded from the speed probe.
+    window_serial_mark: f64,
     steps_in_window: usize,
     recuts: usize,
 }
@@ -74,6 +82,7 @@ impl Repartitioner {
             rp,
             ranges: Vec::new(),
             window_busy_mark: ctx.compute_seconds(),
+            window_serial_mark: ctx.serial_seconds(),
             steps_in_window: 0,
             recuts: 0,
         }
@@ -126,7 +135,10 @@ impl Repartitioner {
         let m = ctx.world();
         let rank = ctx.rank();
         let mut probe = vec![0.0; 2 * m];
-        probe[rank] = ctx.compute_seconds() - self.window_busy_mark;
+        // Shard-proportional busy only: the serial delta is work whose
+        // cost would not move if this rank's shard changed.
+        probe[rank] = (ctx.compute_seconds() - self.window_busy_mark)
+            - (ctx.serial_seconds() - self.window_serial_mark);
         probe[m + rank] = session.shard_work();
         ctx.metric_reduce_all(&mut probe);
         let (busy, work) = probe.split_at(m);
@@ -144,6 +156,7 @@ impl Repartitioner {
         // Fresh window either way — and never attribute the re-cut's own
         // setup compute to the next observation window.
         self.window_busy_mark = ctx.compute_seconds();
+        self.window_serial_mark = ctx.serial_seconds();
         Ok(did)
     }
 

@@ -21,13 +21,17 @@
 //! little-endian codec of [`crate::util::bytes`]:
 //!
 //! ```text
-//! "DSK2" | algo u8 | rank u32 | world u32 | outer u64
+//! "DSK3" | algo u8 | rank u32 | world u32 | outer u64
 //! cuts: ncuts u32, (lo u64, hi u64)*       (0 = the spec-default cut table)
 //! global-ledger flag u8 [CommStats]        (shm blackboard snapshot)
-//! clock f64 | busy f64 | CommStats mirror | straggler flag u8 [rng 4×u64, left u32]
+//! clock f64 | busy f64 | serial f64 | CommStats mirror
+//! straggler flag u8 [rng 4×u64, left u32]
 //! trace: nseg u32, Segment*                (empty when tracing is off)
 //! algorithm payload                        (AlgorithmNode::save_state)
 //! ```
+//!
+//! (v3 added the serial busy-seconds scalar for serial-work-aware speed
+//! estimation; v2 checkpoints are refused with a version message.)
 //!
 //! The cut table is recorded whenever the run had re-partitioned away
 //! from the spec defaults (adaptive load balancing), so a resumed run
@@ -52,7 +56,7 @@ use crate::data::Dataset;
 use crate::net::{Collectives, CommStats, CtxState, Segment};
 use crate::util::bytes::{put_f64, put_u32, put_u64, put_u8, ByteReader};
 
-const CKPT_MAGIC: &[u8; 4] = b"DSK2";
+const CKPT_MAGIC: &[u8; 4] = b"DSK3";
 
 /// Why a session stopped.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -189,6 +193,29 @@ impl<C: Collectives> Session<C> {
         Ok(())
     }
 
+    /// Non-destructive handoff snapshot of the live solver node (see
+    /// [`AlgorithmNode::snapshot_handoff`]): the elastic driver keeps one
+    /// per outer boundary as its rollback point. Free of communication
+    /// and clock effects.
+    pub fn snapshot_handoff(&self) -> crate::algorithms::algorithm::Handoff {
+        self.node.snapshot_handoff()
+    }
+
+    /// Install handoff state into this session's freshly set-up node (the
+    /// recovery half of [`Session::snapshot_handoff`]): `cut_axis` is the
+    /// full re-assembled cut-axis vector, `bytes` the rank-local payload.
+    pub fn import_handoff(&mut self, cut_axis: &[f64], bytes: &[u8]) -> Result<(), String> {
+        self.node.import_handoff(cut_axis, bytes)
+    }
+
+    /// Reposition the outer counter after an elastic recovery rolled the
+    /// solver state back to the boundary before `outer`, and clear any
+    /// stop decision (the resumed loop re-evaluates the policy).
+    pub fn resume_at(&mut self, outer: usize) {
+        self.outer = outer;
+        self.stopped = None;
+    }
+
     /// Outer iterations completed so far (equals the restored count after
     /// [`Session::restore`]).
     pub fn outer(&self) -> usize {
@@ -307,6 +334,7 @@ impl<C: Collectives> Session<C> {
         let st = ctx.export_state();
         put_f64(&mut buf, st.clock);
         put_f64(&mut buf, st.compute_seconds);
+        put_f64(&mut buf, st.serial_seconds);
         st.stats.encode(&mut buf);
         match st.straggler {
             Some((rng, remaining)) => {
@@ -370,6 +398,7 @@ impl<C: Collectives> Session<C> {
         ctx.import_state(CtxState {
             clock: header.clock,
             compute_seconds: header.compute_seconds,
+            serial_seconds: header.serial_seconds,
             stats: header.mirror,
             segments: header.segments,
             straggler: header.straggler,
@@ -391,13 +420,20 @@ struct CkptHeader {
     global: Option<CommStats>,
     clock: f64,
     compute_seconds: f64,
+    serial_seconds: f64,
     mirror: CommStats,
     straggler: Option<([u64; 4], u32)>,
     segments: Vec<Segment>,
 }
 
 fn decode_header(r: &mut ByteReader<'_>) -> Result<CkptHeader, String> {
-    if r.take(4)? != CKPT_MAGIC {
+    let magic = r.take(4)?;
+    if magic != CKPT_MAGIC {
+        if magic == b"DSK2" {
+            return Err(
+                "checkpoint format v2 (pre serial-accounting); re-save with this build".into(),
+            );
+        }
         return Err("not a disco checkpoint (bad magic)".into());
     }
     let algo = AlgoKind::from_code(r.u8()?)?;
@@ -424,6 +460,7 @@ fn decode_header(r: &mut ByteReader<'_>) -> Result<CkptHeader, String> {
     };
     let clock = r.f64()?;
     let compute_seconds = r.f64()?;
+    let serial_seconds = r.f64()?;
     let mirror = CommStats::decode(r)?;
     let straggler = if r.u8()? == 1 {
         let rng = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
@@ -446,6 +483,7 @@ fn decode_header(r: &mut ByteReader<'_>) -> Result<CkptHeader, String> {
         global,
         clock,
         compute_seconds,
+        serial_seconds,
         mirror,
         straggler,
         segments,

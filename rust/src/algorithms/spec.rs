@@ -459,6 +459,253 @@ impl RepartitionSpec {
     }
 }
 
+/// What a planned fault does to its target rank.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// The rank departs at the boundary; survivors re-form at world − 1.
+    Kill,
+    /// The rank's clock is advanced by this many *priced* simulated
+    /// seconds at the boundary (a transient stall, not a death).
+    Delay(f64),
+    /// A fresh worker joins at the boundary (shm driver spawns a node;
+    /// under TCP real joiner processes arrive on their own, so the event
+    /// is ignored there).
+    Join,
+}
+
+/// One planned fault: at the *start* of outer iteration `at_outer`
+/// (0-based, counted like `--save-at`), `action` happens to `rank`
+/// (current-epoch numbering; ignored for `Join`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub at_outer: usize,
+    pub rank: usize,
+    pub action: FaultAction,
+}
+
+/// Deterministic fault-injection schedule. Every rank holds the identical
+/// plan (SPMD), so planned kills fire without waiting for socket
+/// symptoms: the target departs cleanly and the survivors raise the
+/// matching typed fault immediately — bit-deterministic on both
+/// transports under the modeled clock.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn none() -> Self {
+        Self { events: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events scheduled for the boundary at the start of outer `k`.
+    pub fn at(&self, outer: usize) -> impl Iterator<Item = &FaultEvent> {
+        self.events.iter().filter(move |e| e.at_outer == outer)
+    }
+
+    /// Parse the `--fault` flag: comma-separated events,
+    /// `kill@K:R | delay@K:R:SECS | join@K`
+    /// (K = outer iteration, R = rank). Example:
+    /// `kill@6:2,delay@4:1:0.5,join@8`.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for item in s.split(',').map(str::trim).filter(|i| !i.is_empty()) {
+            let (verb, rest) = item
+                .split_once('@')
+                .ok_or_else(|| format!("bad fault '{item}': expected action@outer[:…]"))?;
+            let parts: Vec<&str> = rest.split(':').collect();
+            let outer = |p: &str| -> Result<usize, String> {
+                p.parse().map_err(|_| format!("bad fault '{item}': '{p}' is not an iteration"))
+            };
+            let rank = |p: &str| -> Result<usize, String> {
+                p.parse().map_err(|_| format!("bad fault '{item}': '{p}' is not a rank"))
+            };
+            let ev = match (verb, parts.as_slice()) {
+                ("kill", [k, r]) => FaultEvent {
+                    at_outer: outer(k)?,
+                    rank: rank(r)?,
+                    action: FaultAction::Kill,
+                },
+                ("delay", [k, r, secs]) => FaultEvent {
+                    at_outer: outer(k)?,
+                    rank: rank(r)?,
+                    action: FaultAction::Delay(secs.parse().map_err(|_| {
+                        format!("bad fault '{item}': '{secs}' is not a duration")
+                    })?),
+                },
+                ("join", [k]) => FaultEvent {
+                    at_outer: outer(k)?,
+                    rank: 0,
+                    action: FaultAction::Join,
+                },
+                _ => {
+                    return Err(format!(
+                        "bad fault '{item}': expected kill@K:R, delay@K:R:SECS, or join@K"
+                    ))
+                }
+            };
+            if ev.action == FaultAction::Kill && ev.rank == 0 {
+                return Err(format!(
+                    "bad fault '{item}': rank 0 hosts the rendezvous and cannot be killed"
+                ));
+            }
+            events.push(ev);
+        }
+        events.sort_by_key(|e| e.at_outer);
+        Ok(FaultPlan { events })
+    }
+}
+
+/// Elastic-fleet knobs. Like [`RepartitionSpec`] this describes *how a
+/// run is driven*, not the problem being solved, so it rides beside
+/// [`RunSpec`] into the drivers. With `enabled = false` the driver adds
+/// zero communication and zero branching — a run is bit-identical to a
+/// plain [`Session`](crate::algorithms::session::Session) run on both
+/// transports (test-enforced).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ElasticSpec {
+    pub enabled: bool,
+    /// Abort (fail-fast) if a reform leaves fewer than this many ranks.
+    pub min_world: usize,
+    /// Wall-clock window a reform waits for survivors/joiners to
+    /// re-rendezvous (TCP).
+    pub rejoin_window_secs: f64,
+    /// Give up after this many recoveries in one run.
+    pub max_recoveries: usize,
+    /// Base delay of the seeded exponential-backoff reconnect loop (TCP).
+    pub backoff_secs: f64,
+    /// Wall-clock sleep per outer boundary, milliseconds (0 = off). Gives
+    /// external chaos (SIGKILL, joiners) a window to land mid-run in
+    /// tests/CI; the simulated clock never sees it.
+    pub pace_ms: u64,
+    /// This process is a fresh joiner: dial the rendezvous and wait for
+    /// admission instead of holding a rank (TCP only).
+    pub join: bool,
+    /// Planned, deterministic faults.
+    pub plan: FaultPlan,
+    /// Seed for the reconnect jitter stream.
+    pub fault_seed: u64,
+}
+
+impl Default for ElasticSpec {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl ElasticSpec {
+    /// Elasticity off: the driver is a plain Session run.
+    pub fn none() -> Self {
+        Self {
+            enabled: false,
+            min_world: 1,
+            rejoin_window_secs: 5.0,
+            max_recoveries: 8,
+            backoff_secs: 0.05,
+            pace_ms: 0,
+            join: false,
+            plan: FaultPlan::none(),
+            fault_seed: 0x5EED_E1A5_71C0_0000,
+        }
+    }
+
+    /// Elasticity on with the defaults.
+    pub fn on() -> Self {
+        Self { enabled: true, ..Self::none() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled || self.join || !self.plan.is_empty()
+    }
+
+    /// Declare the elastic-fleet flags shared by the `disco` and
+    /// `disco-node` binaries; parse them back with
+    /// [`ElasticSpec::from_args`].
+    pub fn with_flags(args: Args) -> Args {
+        args.switch("elastic", "survive membership changes: re-form in epochs instead of aborting")
+            .opt("elastic-min-world", Some("1"), "abort if a re-form leaves fewer ranks than this")
+            .opt(
+                "elastic-rejoin-window",
+                Some("5"),
+                "seconds a re-form waits for survivors/joiners to re-rendezvous",
+            )
+            .opt("elastic-max-recoveries", Some("8"), "give up after this many recoveries")
+            .opt(
+                "elastic-backoff",
+                Some("0.05"),
+                "base seconds of the seeded exponential-backoff reconnect loop",
+            )
+            .opt(
+                "elastic-pace-ms",
+                Some("0"),
+                "wall-clock sleep per outer boundary, ms (lets external chaos land mid-run)",
+            )
+            .switch("elastic-join", "join a running elastic fleet instead of holding a rank")
+            .opt(
+                "fault",
+                None,
+                "deterministic fault plan: kill@K:R,delay@K:R:SECS,join@K (comma-separated)",
+            )
+            .opt("fault-seed", None, "seed for the reconnect jitter stream")
+    }
+
+    /// Build the spec from [`ElasticSpec::with_flags`]. `--elastic-join`
+    /// and `--fault` imply `--elastic`.
+    pub fn from_args(args: &Args) -> Result<ElasticSpec, String> {
+        let mut es = ElasticSpec::none();
+        es.enabled = args.flag("elastic");
+        es.join = args.flag("elastic-join");
+        if args.provided("fault") {
+            let plan = args.req("fault").map_err(|e| e.to_string())?;
+            es.plan = FaultPlan::parse(&plan)?;
+        }
+        if args.provided("elastic-min-world") {
+            es.min_world = args.get_usize("elastic-min-world").map_err(|e| e.to_string())?;
+            if es.min_world == 0 {
+                return Err("--elastic-min-world must be ≥ 1".into());
+            }
+        }
+        if args.provided("elastic-rejoin-window") {
+            es.rejoin_window_secs =
+                args.get_f64("elastic-rejoin-window").map_err(|e| e.to_string())?;
+            if !es.rejoin_window_secs.is_finite() || es.rejoin_window_secs <= 0.0 {
+                return Err("--elastic-rejoin-window must be positive".into());
+            }
+        }
+        if args.provided("elastic-max-recoveries") {
+            es.max_recoveries =
+                args.get_usize("elastic-max-recoveries").map_err(|e| e.to_string())?;
+        }
+        if args.provided("elastic-backoff") {
+            es.backoff_secs = args.get_f64("elastic-backoff").map_err(|e| e.to_string())?;
+            if !es.backoff_secs.is_finite() || es.backoff_secs < 0.0 {
+                return Err("--elastic-backoff must be ≥ 0".into());
+            }
+        }
+        if args.provided("elastic-pace-ms") {
+            es.pace_ms = args.get_u64("elastic-pace-ms").map_err(|e| e.to_string())?;
+        }
+        if args.provided("fault-seed") {
+            es.fault_seed = args.get_u64("fault-seed").map_err(|e| e.to_string())?;
+        }
+        Ok(es)
+    }
+
+    /// The transport-layer membership knobs this spec implies (TCP).
+    pub fn tcp_options(&self) -> crate::net::ElasticOptions {
+        crate::net::ElasticOptions {
+            rejoin_window: std::time::Duration::from_secs_f64(self.rejoin_window_secs),
+            min_world: self.min_world,
+            backoff: std::time::Duration::from_secs_f64(self.backoff_secs),
+            seed: self.fault_seed,
+        }
+    }
+}
+
 /// Full declarative run description. See the module docs.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunSpec {

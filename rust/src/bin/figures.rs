@@ -7,6 +7,7 @@
 //! disco-figures table3              # measured per-PCG-step op counts
 //! disco-figures fig2h               # heterogeneity × load-balancing sweep
 //! disco-figures fig2h-adaptive      # adaptive re-partitioning vs static vs oracle
+//! disco-figures chaos               # elastic fleets: planned kill / join mid-run
 //! disco-figures fig3 --collective ring   # reprice collectives (flat|binomial|ring)
 //! disco-figures fig2 --transport tcp --m 3   # fig2 as 3 real OS processes
 //! ```
@@ -83,6 +84,7 @@ fn main() {
             "fig2" => experiments::figure2(cfg)?,
             "fig2h" => experiments::figure2h(cfg)?,
             "fig2h-adaptive" => experiments::figure2h_adaptive(cfg)?,
+            "chaos" => experiments::chaos(cfg)?,
             "fig3" => experiments::figure3(cfg)?,
             "fig4" => experiments::figure4(cfg)?,
             "fig5" => experiments::figure5(cfg)?,
@@ -105,6 +107,7 @@ fn main() {
             "fig2",
             "fig2h",
             "fig2h-adaptive",
+            "chaos",
             "table2",
             "table34",
             "table5",

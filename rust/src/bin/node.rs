@@ -24,19 +24,35 @@
 //! With `--transport shm` (the default) the same subcommands execute over
 //! the in-process thread cluster — handy for diffing the two backends
 //! from one entrypoint.
+//!
+//! `--elastic` runs under epoch-based membership: a dead peer re-forms
+//! the surviving fleet instead of aborting it, and `--elastic-join`
+//! grows a running fleet. `--fault kill@K:R,…` injects planned faults
+//! deterministically on either transport:
+//!
+//! ```text
+//! disco-node run --transport tcp [...] --elastic --elastic-pace-ms 20
+//! disco-node run --transport tcp --addr HOST:PORT --elastic-join --dataset rcv1s --algo disco-f
+//! disco-node run --fault kill@6:2 --dataset rcv1s --algo disco-f   # shm, deterministic
+//! ```
 
 use disco::algorithms::spec::{spec_from_args, with_spec_flags};
-use disco::algorithms::{run_over_spec, run_spec_full, CheckpointPlan, RepartitionSpec};
+use disco::algorithms::{
+    run_elastic_joiner, run_elastic_over_tcp, run_over_spec, run_spec_elastic, run_spec_full,
+    CheckpointPlan, ElasticSpec, RepartitionSpec,
+};
 use disco::coordinator::experiments::{self, ExperimentConfig};
 use disco::net::CollectiveAlgo;
 use disco::util::cli::{Args, TransportCli, TransportKind};
 use std::time::Duration;
 
 fn main() {
-    let args = RepartitionSpec::with_flags(CheckpointPlan::with_flags(with_spec_flags(Args::new(
-        "disco-node",
-        "worker process for multi-process DiSCO runs (one rank of a TCP fleet)",
-    ))))
+    let args = ElasticSpec::with_flags(RepartitionSpec::with_flags(CheckpointPlan::with_flags(
+        with_spec_flags(Args::new(
+            "disco-node",
+            "worker process for multi-process DiSCO runs (one rank of a TCP fleet)",
+        )),
+    )))
     .with_transport_flags()
     .opt("out", Some("results"), "output directory for CSVs (rank 0 writes; fig2)")
     .opt("grad-target", Some("1e-8"), "target gradient norm (fig2)")
@@ -149,9 +165,43 @@ fn cmd_run(args: &Args, transport: &TransportCli) -> Result<(), String> {
         .ok_or_else(|| format!("unknown dataset '{}'", spec.data.name))?;
     let plan = CheckpointPlan::from_args(args)?;
     let repartition = RepartitionSpec::from_args(args)?;
+    let es = ElasticSpec::from_args(args)?;
+    if es.enabled() {
+        // Elastic recovery has its own in-memory boundary snapshots and
+        // re-cuts on every re-form; the file-checkpoint and adaptive
+        // re-partition drivers assume fixed membership.
+        if plan.save_at.is_some() || plan.save_every.is_some() || plan.resume_from.is_some() {
+            return Err("--elastic cannot be combined with checkpoint/resume".into());
+        }
+        if repartition.every.is_some() {
+            return Err(
+                "--elastic cannot be combined with --repartition-every (a re-form re-cuts)".into(),
+            );
+        }
+        if es.join && transport.kind != TransportKind::Tcp {
+            return Err("--elastic-join requires --transport tcp".into());
+        }
+    }
 
     let res = match transport.kind {
+        TransportKind::Shm if es.enabled() => {
+            let (res, recoveries) = run_spec_elastic(&ds, &spec, &es);
+            if recoveries > 0 {
+                println!("elastic: run survived {recoveries} membership change(s)");
+            }
+            Some(res)
+        }
         TransportKind::Shm => Some(run_spec_full(&ds, &spec, &plan, &repartition).0),
+        TransportKind::Tcp if es.enabled() => {
+            let opts = tcp_options(transport, spec.sim.cost);
+            if es.join {
+                let (t, info) = disco::net::TcpTransport::join(&opts, es.tcp_options());
+                run_elastic_joiner(&ds, &spec, t, info, &es)
+            } else {
+                let t = disco::net::TcpTransport::establish_elastic(&opts, es.tcp_options());
+                run_elastic_over_tcp(&ds, &spec, t, &es)
+            }
+        }
         TransportKind::Tcp => {
             let t = disco::net::TcpTransport::establish(&tcp_options(transport, spec.sim.cost));
             run_over_spec(&ds, &spec, t, &plan, &repartition)

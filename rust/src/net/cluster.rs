@@ -58,7 +58,7 @@ use crate::net::cost::{ComputeModel, CostModel};
 use crate::net::stats::CommStats;
 use crate::net::trace::Trace;
 use crate::net::transport::shm::{Blackboard, PeerAbort, ShmTransport};
-use crate::net::transport::{NodeCtx, StragglerConfig};
+use crate::net::transport::{EpochFault, NodeCtx, StragglerConfig};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Instant;
@@ -189,13 +189,23 @@ impl Cluster {
                         }
                         Err(payload) => {
                             // Peer-abort panics are secondary: keep only
-                            // the original failure's message.
+                            // the original failure's message. A typed
+                            // EpochFault that escapes to here (no elastic
+                            // recovery driver caught it) is formatted with
+                            // its structured origin, so the abort names the
+                            // true faulty rank/epoch — not just whichever
+                            // rank observed the symptom.
                             if !payload.is::<PeerAbort>() {
                                 let msg = payload
                                     .downcast_ref::<String>()
                                     .cloned()
                                     .or_else(|| {
                                         payload.downcast_ref::<&str>().map(|s| s.to_string())
+                                    })
+                                    .or_else(|| {
+                                        payload
+                                            .downcast_ref::<EpochFault>()
+                                            .map(|f| f.to_string())
                                     })
                                     .unwrap_or_else(|| "node panicked".into());
                                 board_fail.record_failure(rank, msg);

@@ -13,7 +13,13 @@
 //! Failure semantics: a panic inside one node's SPMD closure aborts the
 //! whole run — the shm barriers are poisoned (TCP peers observe EOF or a
 //! socket deadline), peers blocked in a collective unwind, and the run
-//! fails with `cluster node failed: rank N: …` instead of hanging.
+//! fails with `cluster node failed: rank N: …` instead of hanging. Under
+//! **elastic membership** ([`TcpTransport::establish_elastic`]) a peer
+//! failure is raised as a typed [`EpochFault`] instead: survivors
+//! re-rendezvous at rank 0 into a numbered epoch with contiguous
+//! re-numbered ranks ([`TcpTransport::reform`]) and the elastic session
+//! driver ([`crate::algorithms::elastic`]) rolls back to the last outer
+//! boundary and resumes.
 
 pub mod cluster;
 pub mod cost;
@@ -26,6 +32,6 @@ pub use cost::{CollectiveAlgo, CollectiveKind, ComputeModel, CostModel};
 pub use stats::CommStats;
 pub use trace::{Activity, Segment, Trace};
 pub use transport::{
-    Collectives, CtxState, NodeCtx, ShmTransport, StragglerConfig, TcpOptions, TcpTransport,
-    Transport,
+    Collectives, CtxState, ElasticOptions, EpochFault, FaultKind, NodeCtx, ReformInfo,
+    ShmTransport, StragglerConfig, TcpOptions, TcpTransport, Transport,
 };

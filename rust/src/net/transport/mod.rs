@@ -54,7 +54,7 @@ pub mod shm;
 pub mod tcp;
 
 pub use shm::ShmTransport;
-pub use tcp::{TcpOptions, TcpTransport};
+pub use tcp::{ElasticOptions, ReformInfo, TcpOptions, TcpTransport};
 
 use crate::net::cost::{CollectiveKind, ComputeModel};
 use crate::net::stats::CommStats;
@@ -92,6 +92,88 @@ struct StragglerState {
     rng: Xoshiro256pp,
     /// Segments left in the current episode (0 = not straggling).
     remaining: u32,
+}
+
+/// Classified cause of a membership fault: *why* a collective could not
+/// complete over the current fleet. Codes ride the wire in fault
+/// announcement frames, so the numbering is part of the TCP protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A peer's connection closed (process died or departed).
+    PeerDead,
+    /// A peer exceeded its socket deadline (hung or unreachable).
+    Timeout,
+    /// Frame-level protocol desync (bad epoch, tag, or sequence).
+    Desync,
+    /// Planned fault injected by a [`FaultPlan`](crate::algorithms::FaultPlan).
+    Injected,
+    /// A new worker asked to join the fleet (not an error — handled by
+    /// the same re-form path so membership changes stay epoch-atomic).
+    Join,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::PeerDead => "peer-dead",
+            FaultKind::Timeout => "timeout",
+            FaultKind::Desync => "desync",
+            FaultKind::Injected => "injected",
+            FaultKind::Join => "join",
+        }
+    }
+
+    pub fn code(self) -> u8 {
+        match self {
+            FaultKind::PeerDead => 0,
+            FaultKind::Timeout => 1,
+            FaultKind::Desync => 2,
+            FaultKind::Injected => 3,
+            FaultKind::Join => 4,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<FaultKind> {
+        Some(match c {
+            0 => FaultKind::PeerDead,
+            1 => FaultKind::Timeout,
+            2 => FaultKind::Desync,
+            3 => FaultKind::Injected,
+            4 => FaultKind::Join,
+            _ => return None,
+        })
+    }
+}
+
+/// Typed membership fault. With elastic membership enabled the transports
+/// raise this (via `std::panic::panic_any`) instead of the fail-fast
+/// string abort; the recovery driver downcasts it, rolls the survivors
+/// back to the last consistent outer-iteration boundary, and re-forms the
+/// fleet in epoch `epoch + 1`. Without elasticity the same structured
+/// origin is threaded into the abort string, so every
+/// `cluster node failed` message names the true faulty rank and epoch
+/// even when the observer is not the faulty peer.
+#[derive(Clone, Debug)]
+pub struct EpochFault {
+    /// Epoch the fault was observed in.
+    pub epoch: u64,
+    /// The faulty (or joining) peer — the *origin*, not the observer.
+    pub rank: usize,
+    pub kind: FaultKind,
+    pub detail: String,
+}
+
+impl std::fmt::Display for EpochFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "epoch {}: peer rank {} {}: {}",
+            self.epoch,
+            self.rank,
+            self.kind.name(),
+            self.detail
+        )
+    }
 }
 
 /// Result of one clock-synchronized collective, as produced by a
@@ -208,6 +290,12 @@ pub struct CtxState {
     /// counterpart of the trace's compute totals, maintained even when
     /// tracing is off so the adaptive repartitioner can window it.
     pub compute_seconds: f64,
+    /// The shard-*independent* subset of `compute_seconds`: serial work
+    /// whose cost does not scale with this rank's shard (e.g. rank 0's
+    /// master-side PCG vector algebra in DiSCO-S). The repartitioner
+    /// subtracts it so "rank 0 does serial work" is not mistaken for
+    /// "rank 0 is a slow node".
+    pub serial_seconds: f64,
     /// Node-local mirror of the priced communication counters.
     pub stats: CommStats,
     /// This rank's trace segments (empty when tracing is off).
@@ -260,6 +348,9 @@ pub struct NodeCtx<T: Transport> {
     /// adaptive repartitioner estimates effective node speeds from
     /// windowed differences of it.
     compute_seconds: f64,
+    /// Shard-independent subset of `compute_seconds` (see
+    /// [`CtxState::serial_seconds`]).
+    serial_seconds: f64,
     /// Relative compute speed of this node (1.0 = baseline; 0.5 = half
     /// speed). Simulated compute time is *divided* by it.
     pub speed: f64,
@@ -286,6 +377,7 @@ impl<T: Transport> NodeCtx<T> {
             transport,
             clock: 0.0,
             compute_seconds: 0.0,
+            serial_seconds: 0.0,
             speed: 1.0,
             compute_model: ComputeModel::Measured,
             straggler: None,
@@ -351,8 +443,10 @@ impl<T: Transport> NodeCtx<T> {
     }
 
     /// Advance the clock by `base_seconds` scaled by this node's speed and
-    /// any active straggler episode, recording a compute segment.
-    fn push_compute(&mut self, label: &str, base_seconds: f64) {
+    /// any active straggler episode, recording a compute segment. `serial`
+    /// marks shard-independent work (tracked separately for the
+    /// repartitioner's speed estimate; the clock advances identically).
+    fn push_compute(&mut self, label: &str, base_seconds: f64, serial: bool) {
         let factor = self.straggle_factor();
         let dt = base_seconds * factor / self.speed;
         if self.trace_enabled {
@@ -371,6 +465,9 @@ impl<T: Transport> NodeCtx<T> {
         }
         self.clock += dt;
         self.compute_seconds += dt;
+        if serial {
+            self.serial_seconds += dt;
+        }
     }
 
     /// Run `f` as node-local computation: advances the simulated clock by
@@ -379,7 +476,7 @@ impl<T: Transport> NodeCtx<T> {
     pub fn compute<R>(&mut self, label: &str, f: impl FnOnce() -> R) -> R {
         let t = Instant::now();
         let out = f();
-        self.push_compute(label, t.elapsed().as_secs_f64());
+        self.push_compute(label, t.elapsed().as_secs_f64(), false);
         out
     }
 
@@ -389,16 +486,36 @@ impl<T: Transport> NodeCtx<T> {
     /// across runs; under `Measured` the estimate is ignored and measured
     /// wallclock is used (the seed behaviour).
     pub fn compute_costed<R>(&mut self, label: &str, f: impl FnOnce() -> (R, f64)) -> R {
+        self.compute_costed_inner(label, f, false)
+    }
+
+    /// Like [`compute_costed`](Self::compute_costed), but the work is
+    /// flagged *shard-independent* (serial): it advances the clock and
+    /// busy seconds identically, and additionally accrues
+    /// [`serial_seconds`](Self::serial_seconds) so the adaptive
+    /// repartitioner can exclude it from its per-rank speed estimate.
+    /// Use for master-side work whose cost does not shrink when the
+    /// rank's shard does (e.g. DiSCO-S PCG vector algebra on rank 0).
+    pub fn compute_costed_serial<R>(&mut self, label: &str, f: impl FnOnce() -> (R, f64)) -> R {
+        self.compute_costed_inner(label, f, true)
+    }
+
+    fn compute_costed_inner<R>(
+        &mut self,
+        label: &str,
+        f: impl FnOnce() -> (R, f64),
+        serial: bool,
+    ) -> R {
         match self.compute_model {
             ComputeModel::Measured => {
                 let t = Instant::now();
                 let (out, _flops) = f();
-                self.push_compute(label, t.elapsed().as_secs_f64());
+                self.push_compute(label, t.elapsed().as_secs_f64(), serial);
                 out
             }
             ComputeModel::Modeled { flops_per_sec } => {
                 let (out, flops) = f();
-                self.push_compute(label, flops.max(0.0) / flops_per_sec);
+                self.push_compute(label, flops.max(0.0) / flops_per_sec, serial);
                 out
             }
         }
@@ -408,7 +525,7 @@ impl<T: Transport> NodeCtx<T> {
     /// compute whose cost is known analytically; used in what-if benches).
     /// Scaled by the node's speed / straggler state like any compute.
     pub fn advance(&mut self, label: &str, seconds: f64) {
-        self.push_compute(label, seconds);
+        self.push_compute(label, seconds, false);
     }
 
     /// Core collective wrapper: delegates the data movement + clock
@@ -509,6 +626,14 @@ impl<T: Transport> NodeCtx<T> {
         self.collective_inner(CollectiveKind::AllGather, 0, 0, part.to_vec(), false)
     }
 
+    /// Metrics-channel all-gather: free and unaccounted, like
+    /// [`metric_reduce_all`](Self::metric_reduce_all). The elastic driver
+    /// uses it to capture the full cut-axis vector at outer-iteration
+    /// boundaries without perturbing the priced timeline.
+    pub fn metric_all_gather_concat(&mut self, part: &[f64]) -> Vec<f64> {
+        self.collective_inner(CollectiveKind::AllGather, 0, 0, part.to_vec(), true)
+    }
+
     /// Synchronize clocks without data (pure barrier; prices as a scalar).
     pub fn barrier(&mut self) {
         let _ = self.reduce_all_scalar(0.0);
@@ -519,11 +644,18 @@ impl<T: Transport> NodeCtx<T> {
         self.compute_seconds
     }
 
+    /// Shard-independent (serial) subset of
+    /// [`compute_seconds`](Self::compute_seconds).
+    pub fn serial_seconds(&self) -> f64 {
+        self.serial_seconds
+    }
+
     /// Snapshot the backend-independent context state (see [`CtxState`]).
     pub fn export_state(&self) -> CtxState {
         CtxState {
             clock: self.clock,
             compute_seconds: self.compute_seconds,
+            serial_seconds: self.serial_seconds,
             stats: self.local_stats.clone(),
             segments: self.trace.segments.clone(),
             straggler: self
@@ -557,6 +689,7 @@ impl<T: Transport> NodeCtx<T> {
         }
         self.clock = st.clock;
         self.compute_seconds = st.compute_seconds;
+        self.serial_seconds = st.serial_seconds;
         self.local_stats = st.stats;
         self.trace.segments = st.segments;
         Ok(())
@@ -577,11 +710,20 @@ pub trait Collectives {
     /// this (against the synchronized clock) are the idle accounting the
     /// adaptive repartitioner estimates effective node speeds from.
     fn compute_seconds(&self) -> f64;
+    /// Shard-independent (serial) subset of
+    /// [`compute_seconds`](Collectives::compute_seconds) — work recorded
+    /// through [`compute_costed_serial`](Collectives::compute_costed_serial)
+    /// whose cost does not scale with this rank's shard.
+    fn serial_seconds(&self) -> f64;
     /// Node-local mirror of the communication counters.
     fn comm_stats(&self) -> &CommStats;
 
     fn compute<R, F: FnOnce() -> R>(&mut self, label: &str, f: F) -> R;
     fn compute_costed<R, F: FnOnce() -> (R, f64)>(&mut self, label: &str, f: F) -> R;
+    /// Shard-independent compute: priced like
+    /// [`compute_costed`](Collectives::compute_costed) but excluded from
+    /// the repartitioner's shard-proportional busy accounting.
+    fn compute_costed_serial<R, F: FnOnce() -> (R, f64)>(&mut self, label: &str, f: F) -> R;
     fn advance(&mut self, label: &str, seconds: f64);
 
     fn reduce_all(&mut self, buf: &mut Vec<f64>);
@@ -589,6 +731,9 @@ pub trait Collectives {
     fn broadcast(&mut self, root: usize, buf: &mut Vec<f64>);
     fn reduce(&mut self, root: usize, buf: &mut Vec<f64>);
     fn all_gather_concat(&mut self, part: &[f64]) -> Vec<f64>;
+    /// Free, unaccounted all-gather on the metrics channel (harness-only;
+    /// see [`NodeCtx::metric_all_gather_concat`]).
+    fn metric_all_gather_concat(&mut self, part: &[f64]) -> Vec<f64>;
 
     fn reduce_all_scalar(&mut self, x: f64) -> f64 {
         let mut v = vec![x];
@@ -653,6 +798,10 @@ impl<T: Transport> Collectives for NodeCtx<T> {
         NodeCtx::compute_seconds(self)
     }
 
+    fn serial_seconds(&self) -> f64 {
+        NodeCtx::serial_seconds(self)
+    }
+
     fn comm_stats(&self) -> &CommStats {
         &self.local_stats
     }
@@ -663,6 +812,10 @@ impl<T: Transport> Collectives for NodeCtx<T> {
 
     fn compute_costed<R, F: FnOnce() -> (R, f64)>(&mut self, label: &str, f: F) -> R {
         NodeCtx::compute_costed(self, label, f)
+    }
+
+    fn compute_costed_serial<R, F: FnOnce() -> (R, f64)>(&mut self, label: &str, f: F) -> R {
+        NodeCtx::compute_costed_serial(self, label, f)
     }
 
     fn advance(&mut self, label: &str, seconds: f64) {
@@ -687,6 +840,10 @@ impl<T: Transport> Collectives for NodeCtx<T> {
 
     fn all_gather_concat(&mut self, part: &[f64]) -> Vec<f64> {
         NodeCtx::all_gather_concat(self, part)
+    }
+
+    fn metric_all_gather_concat(&mut self, part: &[f64]) -> Vec<f64> {
+        NodeCtx::metric_all_gather_concat(self, part)
     }
 
     fn reduce_all_scalar(&mut self, x: f64) -> f64 {

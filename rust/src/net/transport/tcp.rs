@@ -24,19 +24,43 @@
 //! Everything is little-endian, length-prefixed frames:
 //!
 //! ```text
-//! frame   := magic:u32 ("DSCO") | tag:u8 | seq:u64 | len:u32 | payload[len]
-//! HELLO   := version:u8 | rank:u32 | world:u32 | mesh_port:u16
-//! WELCOME := version:u8 | world:u32 | (ip_len:u8 | ip:utf8 | port:u16)^(world-1)
-//! PEER_ID := rank:u32
-//! GATHER  := count:u32 | (origin:u32 | clock:f64 | len:u32 | f64^len)^count
-//! DOWN    := comm_start:f64 | depart:f64 | priced:u64 | len:u32 | f64^len
-//! RING    := origin:u32 | clock:f64 | len:u32 | f64^len
-//! REPORT  := opaque bytes (see algorithms::remote)
+//! frame    := magic:u32 ("DSCO") | tag:u8 | epoch:u64 | seq:u64 | len:u32 | payload[len]
+//! HELLO    := version:u8 | rank:u32 | world:u32 | mesh_port:u16
+//! WELCOME  := version:u8 | world:u32 | (ip_len:u8 | ip:utf8 | port:u16)^(world-1)
+//! WELCOME2 := version:u8 | epoch:u64 | your_rank:u32 | world:u32 | joined:u32
+//!             | (ip_len:u8 | ip:utf8 | port:u16)^(world-1)
+//! PEER_ID  := rank:u32
+//! GATHER   := count:u32 | (origin:u32 | clock:f64 | len:u32 | f64^len)^count
+//! DOWN     := comm_start:f64 | depart:f64 | priced:u64 | len:u32 | f64^len
+//! RING     := origin:u32 | clock:f64 | len:u32 | f64^len
+//! REPORT   := opaque bytes (see algorithms::remote)
+//! EPOCH    := epoch:u64 | origin:u32 | kind:u8 | detail_len:u32 | detail:utf8
 //! ```
 //!
 //! `seq` counts collectives (handshake frames use 0) and is validated on
 //! every receive, so an SPMD desync fails loudly instead of silently
-//! combining mismatched rounds.
+//! combining mismatched rounds. `epoch` numbers the fleet's membership
+//! generation (the first assembly is epoch 1) and is validated alongside
+//! `seq`, so a stale pre-reform frame can never be combined into a
+//! post-reform collective.
+//!
+//! ## Elastic membership
+//!
+//! With [`TcpTransport::establish_elastic`] the fleet can survive
+//! membership changes. Rank 0 keeps its rendezvous listener open for the
+//! whole run; fresh workers dial it with a *join* HELLO
+//! (`rank = u32::MAX`, epoch 0) and are parked until the next
+//! outer-iteration boundary. When a peer dies (EOF / deadline) or a
+//! membership change is requested, the observing rank best-effort
+//! broadcasts an `EPOCH` fault-announcement frame to every open stream
+//! and raises a typed [`EpochFault`] (instead of the fail-fast string
+//! abort), so every survivor learns the *true* faulty origin within one
+//! hop. The recovery driver then calls [`TcpTransport::reform`]:
+//! survivors re-dial rank 0, re-HELLO with their old rank at epoch
+//! `e + 1`, rank 0 re-numbers everyone contiguously (survivors by old
+//! rank, joiners after), publishes a `WELCOME2` table, and the pairwise
+//! mesh is rebuilt. Rank 0 itself is the one non-survivable rank: it
+//! hosts the rendezvous, so its death still fail-fast aborts the run.
 //!
 //! ## Collective algorithms
 //!
@@ -58,15 +82,16 @@
 //! (crate::net::CommStats).
 
 use crate::net::cost::{CollectiveKind, CostModel};
-use crate::net::transport::{combine, CollectiveOutcome, Transport};
+use crate::net::transport::{combine, CollectiveOutcome, EpochFault, FaultKind, Transport};
 use crate::util::bytes::{put_f64, put_f64s, put_u16, put_u32, put_u64, put_u8, ByteReader};
+use crate::util::prng::Xoshiro256pp;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 const MAGIC: u32 = 0x4F43_5344; // "DSCO" as little-endian bytes
-const VERSION: u8 = 1;
-const HEADER_LEN: usize = 17;
+const VERSION: u8 = 2;
+const HEADER_LEN: usize = 25;
 /// Frames beyond this are treated as protocol corruption.
 const MAX_FRAME: u32 = 1 << 30;
 
@@ -77,6 +102,14 @@ const TAG_GATHER: u8 = 4;
 const TAG_DOWN: u8 = 5;
 const TAG_RING: u8 = 6;
 const TAG_REPORT: u8 = 7;
+/// Fault announcement / membership-change frame (see module docs).
+const TAG_EPOCH: u8 = 8;
+
+/// Joiner sentinel in a HELLO's rank field: "I have no rank yet".
+const RANK_JOIN: u32 = u32::MAX;
+
+/// The first membership generation; bumped by every [`TcpTransport::reform`].
+const FIRST_EPOCH: u64 = 1;
 
 /// Configuration for [`TcpTransport::establish`].
 #[derive(Clone, Debug)]
@@ -125,14 +158,80 @@ fn fail(rank: usize, msg: String) -> ! {
 }
 
 fn io_fail(rank: usize, what: &str, peer: &str, e: &std::io::Error) -> ! {
-    let detail = match e.kind() {
-        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
-            "timed out (peer hung or died)".to_string()
-        }
-        ErrorKind::UnexpectedEof => "connection closed (peer died)".to_string(),
-        _ => e.to_string(),
-    };
+    let (_, detail) = classify_io(e);
     fail(rank, format!("{what} {peer}: {detail}"))
+}
+
+/// Map an I/O error to a structured fault kind + human detail.
+fn classify_io(e: &std::io::Error) -> (FaultKind, String) {
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+            (FaultKind::Timeout, "timed out (peer hung or died)".to_string())
+        }
+        ErrorKind::UnexpectedEof => {
+            (FaultKind::PeerDead, "connection closed (peer died)".to_string())
+        }
+        _ => (FaultKind::PeerDead, e.to_string()),
+    }
+}
+
+/// Why a frame could not be read/written — classified so elastic mode can
+/// turn it into a typed [`EpochFault`] while fail-fast mode keeps the
+/// string abort.
+enum FrameError {
+    Io(std::io::Error),
+    /// Bad magic / absurd length — the stream is garbage.
+    Corrupt(String),
+    /// Valid frame, wrong tag/epoch/seq — SPMD desync.
+    Desync(String),
+    /// The peer sent a `TAG_EPOCH` fault announcement instead of the
+    /// expected frame: the fault happened elsewhere and this names its
+    /// true origin.
+    Announced(EpochFault),
+}
+
+impl FrameError {
+    /// Collapse to (kind, detail) naming the fault origin. `peer` is the
+    /// rank the frame was exchanged with (the presumed origin for I/O
+    /// faults); announced faults carry their own origin.
+    fn fault(self, epoch: u64, peer: usize, what: &str) -> EpochFault {
+        match self {
+            FrameError::Io(e) => {
+                let (kind, detail) = classify_io(&e);
+                EpochFault { epoch, rank: peer, kind, detail: format!("{what}: {detail}") }
+            }
+            FrameError::Corrupt(d) | FrameError::Desync(d) => EpochFault {
+                epoch,
+                rank: peer,
+                kind: FaultKind::Desync,
+                detail: format!("{what}: {d}"),
+            },
+            FrameError::Announced(f) => f,
+        }
+    }
+}
+
+/// Encode a `TAG_EPOCH` fault announcement payload.
+fn encode_fault(fault: &EpochFault) -> Vec<u8> {
+    let mut p = Vec::with_capacity(17 + fault.detail.len());
+    put_u64(&mut p, fault.epoch);
+    put_u32(&mut p, fault.rank as u32);
+    put_u8(&mut p, fault.kind.code());
+    put_u32(&mut p, fault.detail.len() as u32);
+    p.extend_from_slice(fault.detail.as_bytes());
+    p
+}
+
+fn decode_fault(payload: &[u8]) -> Result<EpochFault, String> {
+    let mut r = ByteReader::new(payload);
+    let epoch = r.u64()?;
+    let rank = r.u32()? as usize;
+    let kind = FaultKind::from_code(r.u8()?).ok_or("unknown fault kind code")?;
+    let len = r.u32()? as usize;
+    let detail = String::from_utf8(r.take(len)?.to_vec())
+        .map_err(|_| "non-utf8 fault detail".to_string())?;
+    r.finish()?;
+    Ok(EpochFault { epoch, rank, kind, detail })
 }
 
 /// Binomial-tree parent (tree rooted at rank 0): clear the lowest set bit.
@@ -163,62 +262,116 @@ fn tree_children(rank: usize, world: usize) -> Vec<usize> {
     out
 }
 
+fn try_write_frame(
+    stream: &mut TcpStream,
+    tag: u8,
+    epoch: u64,
+    seq: u64,
+    payload: &[u8],
+) -> Result<u64, std::io::Error> {
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    hdr[4] = tag;
+    hdr[5..13].copy_from_slice(&epoch.to_le_bytes());
+    hdr[13..21].copy_from_slice(&seq.to_le_bytes());
+    hdr[21..25].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    stream.write_all(&hdr)?;
+    stream.write_all(payload)?;
+    Ok((HEADER_LEN + payload.len()) as u64)
+}
+
+/// Read one frame expecting `want_tag`/`want_epoch`/`want_seq`
+/// (`want_epoch = None` accepts any epoch — the joiner's first read, which
+/// *learns* the epoch from rank 0). A `TAG_EPOCH` announcement arriving in
+/// place of any other frame is decoded and surfaced as
+/// [`FrameError::Announced`], never a desync: it names the true fault
+/// origin.
+fn try_read_frame(
+    stream: &mut TcpStream,
+    want_tag: u8,
+    want_epoch: Option<u64>,
+    want_seq: u64,
+    peer: &str,
+) -> Result<(Vec<u8>, u64), FrameError> {
+    let mut hdr = [0u8; HEADER_LEN];
+    stream.read_exact(&mut hdr).map_err(FrameError::Io)?;
+    let magic = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]);
+    if magic != MAGIC {
+        return Err(FrameError::Corrupt(format!(
+            "protocol corruption from {peer}: bad magic {magic:#010x}"
+        )));
+    }
+    let tag = hdr[4];
+    let mut epoch_b = [0u8; 8];
+    epoch_b.copy_from_slice(&hdr[5..13]);
+    let epoch = u64::from_le_bytes(epoch_b);
+    let mut seq_b = [0u8; 8];
+    seq_b.copy_from_slice(&hdr[13..21]);
+    let seq = u64::from_le_bytes(seq_b);
+    let len = u32::from_le_bytes([hdr[21], hdr[22], hdr[23], hdr[24]]);
+    if len > MAX_FRAME {
+        return Err(FrameError::Corrupt(format!(
+            "protocol corruption from {peer}: frame length {len}"
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    stream.read_exact(&mut payload).map_err(FrameError::Io)?;
+    if tag == TAG_EPOCH && want_tag != TAG_EPOCH {
+        return match decode_fault(&payload) {
+            Ok(f) => Err(FrameError::Announced(f)),
+            Err(e) => Err(FrameError::Corrupt(format!(
+                "malformed fault announcement from {peer}: {e}"
+            ))),
+        };
+    }
+    if tag != want_tag || seq != want_seq {
+        return Err(FrameError::Desync(format!(
+            "collective desync with {peer}: got frame tag {tag} seq {seq}, \
+             expected tag {want_tag} seq {want_seq}"
+        )));
+    }
+    if let Some(want_epoch) = want_epoch {
+        if epoch != want_epoch {
+            return Err(FrameError::Desync(format!(
+                "epoch desync with {peer}: got epoch {epoch}, expected {want_epoch}"
+            )));
+        }
+    }
+    Ok((payload, (HEADER_LEN + len as usize) as u64))
+}
+
+/// Fail-fast frame write used by the handshake paths (the collective path
+/// goes through `TcpTransport::send`, which classifies).
 fn write_frame(
     stream: &mut TcpStream,
     tag: u8,
+    epoch: u64,
     seq: u64,
     payload: &[u8],
     self_rank: usize,
     peer: &str,
 ) -> u64 {
-    let mut hdr = [0u8; HEADER_LEN];
-    hdr[0..4].copy_from_slice(&MAGIC.to_le_bytes());
-    hdr[4] = tag;
-    hdr[5..13].copy_from_slice(&seq.to_le_bytes());
-    hdr[13..17].copy_from_slice(&(payload.len() as u32).to_le_bytes());
-    if let Err(e) = stream.write_all(&hdr).and_then(|_| stream.write_all(payload)) {
-        io_fail(self_rank, "send to", peer, &e);
+    match try_write_frame(stream, tag, epoch, seq, payload) {
+        Ok(n) => n,
+        Err(e) => io_fail(self_rank, "send to", peer, &e),
     }
-    (HEADER_LEN + payload.len()) as u64
 }
 
+/// Fail-fast frame read used by the handshake paths.
 fn read_frame(
     stream: &mut TcpStream,
     want_tag: u8,
+    epoch: u64,
     want_seq: u64,
     self_rank: usize,
     peer: &str,
 ) -> (Vec<u8>, u64) {
-    let mut hdr = [0u8; HEADER_LEN];
-    if let Err(e) = stream.read_exact(&mut hdr) {
-        io_fail(self_rank, "recv from", peer, &e);
+    match try_read_frame(stream, want_tag, Some(epoch), want_seq, peer) {
+        Ok(out) => out,
+        Err(FrameError::Io(e)) => io_fail(self_rank, "recv from", peer, &e),
+        Err(FrameError::Corrupt(d)) | Err(FrameError::Desync(d)) => fail(self_rank, d),
+        Err(FrameError::Announced(f)) => fail(self_rank, f.to_string()),
     }
-    let magic = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]);
-    if magic != MAGIC {
-        fail(self_rank, format!("protocol corruption from {peer}: bad magic {magic:#010x}"));
-    }
-    let tag = hdr[4];
-    let mut seq_b = [0u8; 8];
-    seq_b.copy_from_slice(&hdr[5..13]);
-    let seq = u64::from_le_bytes(seq_b);
-    if tag != want_tag || seq != want_seq {
-        fail(
-            self_rank,
-            format!(
-                "collective desync with {peer}: got frame tag {tag} seq {seq}, \
-                 expected tag {want_tag} seq {want_seq}"
-            ),
-        );
-    }
-    let len = u32::from_le_bytes([hdr[13], hdr[14], hdr[15], hdr[16]]);
-    if len > MAX_FRAME {
-        fail(self_rank, format!("protocol corruption from {peer}: frame length {len}"));
-    }
-    let mut payload = vec![0u8; len as usize];
-    if let Err(e) = stream.read_exact(&mut payload) {
-        io_fail(self_rank, "recv from", peer, &e);
-    }
-    (payload, (HEADER_LEN + len as usize) as u64)
 }
 
 fn configure_stream(s: &TcpStream, timeout: Duration, rank: usize) {
@@ -232,6 +385,61 @@ fn configure_stream(s: &TcpStream, timeout: Duration, rank: usize) {
     }
 }
 
+/// Knobs for elastic membership ([`TcpTransport::establish_elastic`]).
+#[derive(Clone, Debug)]
+pub struct ElasticOptions {
+    /// How long a [`reform`](TcpTransport::reform) waits for survivors
+    /// (and joiners) to re-rendezvous before presuming the missing dead.
+    pub rejoin_window: Duration,
+    /// Reform fails (fail-fast abort) if fewer than this many ranks
+    /// re-assemble.
+    pub min_world: usize,
+    /// Base delay for the seeded exponential-backoff reconnect loop.
+    pub backoff: Duration,
+    /// Seed for the backoff jitter stream (mixed with the rank).
+    pub seed: u64,
+}
+
+impl Default for ElasticOptions {
+    fn default() -> Self {
+        Self {
+            rejoin_window: Duration::from_secs(5),
+            min_world: 1,
+            backoff: Duration::from_millis(25),
+            seed: 0x5EED_E1A5_71C0_0000,
+        }
+    }
+}
+
+/// Elastic-membership state carried by a [`TcpTransport`] established via
+/// [`establish_elastic`](TcpTransport::establish_elastic) /
+/// [`join`](TcpTransport::join).
+struct ElasticState {
+    opts: ElasticOptions,
+    /// Rank 0 only: the persistent (nonblocking) rendezvous listener.
+    listener: Option<TcpListener>,
+    /// Every rank: the rendezvous address, re-dialed at each reform.
+    root_addr: String,
+    /// Socket deadline (mirrors [`TcpOptions::timeout`]).
+    timeout: Duration,
+    /// Rank 0 only: joiner streams accepted mid-epoch, parked with their
+    /// announced mesh ports until the next reform.
+    parked: Vec<(TcpStream, u16)>,
+}
+
+/// What [`TcpTransport::reform`] re-assembled.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReformInfo {
+    /// This process's new (contiguous) rank.
+    pub rank: usize,
+    /// New world size.
+    pub world: usize,
+    /// How many fresh joiners were admitted this epoch.
+    pub joined: usize,
+    /// The new epoch number.
+    pub epoch: u64,
+}
+
 /// Multi-process collective backend over TCP (see module docs).
 pub struct TcpTransport {
     rank: usize,
@@ -239,9 +447,14 @@ pub struct TcpTransport {
     cost: CostModel,
     /// Dedicated stream per peer rank (`None` at the own-rank slot).
     peers: Vec<Option<TcpStream>>,
-    /// Collective sequence number (handshake = 0, first collective = 1).
+    /// Collective sequence number within the current epoch (handshake =
+    /// 0, first collective = 1; reset by every reform).
     seq: u64,
     wire_bytes: u64,
+    /// Membership generation (first assembly = 1).
+    epoch: u64,
+    /// `Some` when elastic membership is enabled.
+    elastic: Option<ElasticState>,
 }
 
 impl TcpTransport {
@@ -290,6 +503,8 @@ impl TcpTransport {
             peers: vec![None],
             seq: 0,
             wire_bytes: 0,
+            epoch: FIRST_EPOCH,
+            elastic: None,
         }
     }
 
@@ -333,7 +548,7 @@ impl TcpTransport {
                 Ok(a) => a.ip().to_string(),
                 Err(e) => fail(0, format!("worker address unreadable: {e}")),
             };
-            let (payload, n) = read_frame(&mut s, TAG_HELLO, 0, 0, "worker");
+            let (payload, n) = read_frame(&mut s, TAG_HELLO, FIRST_EPOCH, 0, 0, "worker");
             wire += n;
             let mut r = ByteReader::new(&payload);
             let parsed = (|| -> Result<(u8, u32, u32, u16), String> {
@@ -374,7 +589,7 @@ impl TcpTransport {
         }
         for r in 1..opts.world {
             let s = peers[r].as_mut().expect("all workers present");
-            wire += write_frame(s, TAG_WELCOME, 0, &table, 0, &format!("rank {r}"));
+            wire += write_frame(s, TAG_WELCOME, FIRST_EPOCH, 0, &table, 0, &format!("rank {r}"));
         }
         TcpTransport {
             rank: 0,
@@ -383,6 +598,8 @@ impl TcpTransport {
             peers,
             seq: 0,
             wire_bytes: wire,
+            epoch: FIRST_EPOCH,
+            elastic: None,
         }
     }
 
@@ -390,31 +607,14 @@ impl TcpTransport {
         let rank = opts.rank;
         let deadline = Instant::now() + opts.timeout;
         let root_addr = resolve(&opts.addr, rank);
-        // Match the rendezvous address family so an IPv6 fleet can dial
-        // the mesh listeners back.
-        let mesh_bind = if root_addr.is_ipv6() {
-            "[::]:0"
-        } else {
-            "0.0.0.0:0"
-        };
-        let mesh_listener = match TcpListener::bind(mesh_bind) {
-            Ok(l) => l,
-            Err(e) => fail(rank, format!("mesh listener bind failed: {e}")),
-        };
-        let mesh_port = match mesh_listener.local_addr() {
-            Ok(a) => a.port(),
-            Err(e) => fail(rank, format!("mesh listener address unreadable: {e}")),
-        };
-        let mut root = connect_retry(&root_addr, deadline, rank, "rendezvous");
+        let (mesh_listener, mesh_port) = bind_mesh_listener(root_addr.is_ipv6(), rank);
+        let mut backoff = BackoffState::new(Duration::from_millis(25), 0, rank);
+        let mut root = connect_backoff(&root_addr, deadline, rank, "rendezvous", &mut backoff);
         configure_stream(&root, opts.timeout, rank);
         let mut wire = 0u64;
-        let mut hello = Vec::new();
-        put_u8(&mut hello, VERSION);
-        put_u32(&mut hello, rank as u32);
-        put_u32(&mut hello, opts.world as u32);
-        put_u16(&mut hello, mesh_port);
-        wire += write_frame(&mut root, TAG_HELLO, 0, &hello, rank, "rank 0");
-        let (payload, n) = read_frame(&mut root, TAG_WELCOME, 0, rank, "rank 0");
+        let hello = encode_hello(rank as u32, opts.world as u32, mesh_port);
+        wire += write_frame(&mut root, TAG_HELLO, FIRST_EPOCH, 0, &hello, rank, "rank 0");
+        let (payload, n) = read_frame(&mut root, TAG_WELCOME, FIRST_EPOCH, 0, rank, "rank 0");
         wire += n;
         let mut r = ByteReader::new(&payload);
         let endpoints = (|| -> Result<Vec<(String, u16)>, String> {
@@ -426,15 +626,7 @@ impl TcpTransport {
             if world != opts.world {
                 return Err(format!("rendezvous world {world} != {}", opts.world));
             }
-            let mut eps = vec![(String::new(), 0u16)];
-            for _ in 1..world {
-                let ip_len = r.u8()? as usize;
-                let ip = String::from_utf8(r.take(ip_len)?.to_vec())
-                    .map_err(|_| "non-utf8 ip in WELCOME".to_string())?;
-                let port = r.u16()?;
-                eps.push((ip, port));
-            }
-            Ok(eps)
+            read_endpoint_table(&mut r, world)
         })();
         let endpoints = match endpoints {
             Ok(e) => e,
@@ -443,63 +635,16 @@ impl TcpTransport {
 
         let mut peers: Vec<Option<TcpStream>> = (0..opts.world).map(|_| None).collect();
         peers[0] = Some(root);
-        // Dial every lower-ranked worker's mesh listener.
-        for (i, (ip, port)) in endpoints.iter().enumerate().take(rank).skip(1) {
-            // IPv6 peer addresses need brackets in host:port notation.
-            let dial = if ip.contains(':') {
-                format!("[{ip}]:{port}")
-            } else {
-                format!("{ip}:{port}")
-            };
-            let addr = resolve(&dial, rank);
-            let mut s = connect_retry(&addr, deadline, rank, &format!("rank {i}"));
-            configure_stream(&s, opts.timeout, rank);
-            let mut id = Vec::new();
-            put_u32(&mut id, rank as u32);
-            wire += write_frame(&mut s, TAG_PEER_ID, 0, &id, rank, &format!("rank {i}"));
-            peers[i] = Some(s);
-        }
-        // Accept every higher-ranked worker.
-        if let Err(e) = mesh_listener.set_nonblocking(true) {
-            fail(rank, format!("mesh listener setup failed: {e}"));
-        }
-        let mut need = opts.world - 1 - rank;
-        while need > 0 {
-            match mesh_listener.accept() {
-                Ok((s, _)) => {
-                    if let Err(e) = s.set_nonblocking(false) {
-                        fail(rank, format!("mesh accept setup failed: {e}"));
-                    }
-                    configure_stream(&s, opts.timeout, rank);
-                    let mut s = s;
-                    let (payload, n) = read_frame(&mut s, TAG_PEER_ID, 0, rank, "mesh peer");
-                    wire += n;
-                    let mut r = ByteReader::new(&payload);
-                    let j = match r.u32() {
-                        Ok(j) => j as usize,
-                        Err(e) => fail(rank, format!("malformed PEER_ID: {e}")),
-                    };
-                    if j <= rank || j >= opts.world {
-                        fail(rank, format!("mesh peer announced invalid rank {j}"));
-                    }
-                    if peers[j].is_some() {
-                        fail(rank, format!("two mesh peers announced rank {j}"));
-                    }
-                    peers[j] = Some(s);
-                    need -= 1;
-                }
-                Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                    if Instant::now() >= deadline {
-                        fail(
-                            rank,
-                            format!("mesh timeout: {need} higher-ranked workers never dialed in"),
-                        );
-                    }
-                    std::thread::sleep(Duration::from_millis(5));
-                }
-                Err(e) => fail(rank, format!("mesh accept failed: {e}")),
-            }
-        }
+        wire += build_mesh(
+            &mut peers,
+            &endpoints,
+            rank,
+            opts.world,
+            FIRST_EPOCH,
+            &mesh_listener,
+            deadline,
+            opts.timeout,
+        );
         TcpTransport {
             rank,
             world: opts.world,
@@ -507,29 +652,474 @@ impl TcpTransport {
             peers,
             seq: 0,
             wire_bytes: wire,
+            epoch: FIRST_EPOCH,
+            elastic: None,
         }
     }
 
     fn send(&mut self, peer: usize, tag: u8, payload: &[u8]) {
         let rank = self.rank;
-        let seq = self.seq;
+        let (epoch, seq) = (self.epoch, self.seq);
         let stream = match self.peers[peer].as_mut() {
             Some(s) => s,
             None => fail(rank, format!("no connection to rank {peer}")),
         };
-        self.wire_bytes += write_frame(stream, tag, seq, payload, rank, &format!("rank {peer}"));
+        match try_write_frame(stream, tag, epoch, seq, payload) {
+            Ok(n) => self.wire_bytes += n,
+            Err(e) => {
+                let fault = FrameError::Io(e).fault(epoch, peer, &format!("send to rank {peer}"));
+                self.raise(fault);
+            }
+        }
     }
 
     fn recv(&mut self, peer: usize, tag: u8) -> Vec<u8> {
         let rank = self.rank;
-        let seq = self.seq;
+        let (epoch, seq) = (self.epoch, self.seq);
         let stream = match self.peers[peer].as_mut() {
             Some(s) => s,
             None => fail(rank, format!("no connection to rank {peer}")),
         };
-        let (payload, n) = read_frame(stream, tag, seq, rank, &format!("rank {peer}"));
-        self.wire_bytes += n;
-        payload
+        match try_read_frame(stream, tag, Some(epoch), seq, &format!("rank {peer}")) {
+            Ok((payload, n)) => {
+                self.wire_bytes += n;
+                payload
+            }
+            Err(e) => {
+                let fault = e.fault(epoch, peer, &format!("recv from rank {peer}"));
+                self.raise(fault);
+            }
+        }
+    }
+
+    /// Best-effort fault announcement: write a `TAG_EPOCH` frame on every
+    /// open peer stream (errors ignored — the peer may already be gone).
+    /// One hop reaches everyone because the mesh is complete, so every
+    /// survivor's abort (or recovery) names the fault's true origin even
+    /// when it only observes a secondary symptom (its own stream to the
+    /// announcer going quiet).
+    fn announce_fault(&mut self, fault: &EpochFault) {
+        let payload = encode_fault(fault);
+        for s in self.peers.iter_mut().flatten() {
+            let _ = try_write_frame(s, TAG_EPOCH, fault.epoch, 0, &payload);
+        }
+    }
+
+    /// Surface a classified fault: announce it to the peers, then either
+    /// raise a typed [`EpochFault`] (elastic mode — caught by the recovery
+    /// driver) or abort fail-fast with the structured origin in the
+    /// message.
+    fn raise(&mut self, fault: EpochFault) -> ! {
+        self.announce_fault(&fault);
+        if self.elastic.is_some() {
+            std::panic::panic_any(fault);
+        }
+        fail(self.rank, fault.to_string())
+    }
+
+    /// Raise a *planned* fault (deterministic fault injection): the plan
+    /// says `origin` departs/changes at this boundary, so every survivor
+    /// raises the identical typed fault without waiting for socket
+    /// symptoms. Elastic mode only.
+    pub fn raise_injected(&mut self, origin: usize, detail: &str) -> ! {
+        let fault = EpochFault {
+            epoch: self.epoch,
+            rank: origin,
+            kind: FaultKind::Injected,
+            detail: detail.to_string(),
+        };
+        self.raise(fault)
+    }
+
+    /// Like [`establish`](Self::establish), but with elastic membership:
+    /// faults raise a typed [`EpochFault`] instead of aborting, rank 0
+    /// keeps the rendezvous open for joiners, and [`reform`](Self::reform)
+    /// re-assembles the fleet after a membership change.
+    pub fn establish_elastic(opts: &TcpOptions, eopts: ElasticOptions) -> TcpTransport {
+        Self::validate(opts);
+        if opts.rank == 0 {
+            let listener = match TcpListener::bind(opts.addr.as_str()) {
+                Ok(l) => l,
+                Err(e) => fail(0, format!("bind rendezvous {}: {e}", opts.addr)),
+            };
+            Self::establish_elastic_with_listener(listener, opts, eopts)
+        } else {
+            let mut t = Self::establish_worker(opts);
+            t.elastic = Some(ElasticState {
+                opts: eopts,
+                listener: None,
+                root_addr: opts.addr.clone(),
+                timeout: opts.timeout,
+                parked: Vec::new(),
+            });
+            t
+        }
+    }
+
+    /// Elastic rank-0 variant taking a pre-bound listener (tests bind
+    /// `127.0.0.1:0`). The listener stays open for the whole run.
+    pub fn establish_elastic_with_listener(
+        listener: TcpListener,
+        opts: &TcpOptions,
+        eopts: ElasticOptions,
+    ) -> TcpTransport {
+        Self::validate(opts);
+        assert_eq!(opts.rank, 0, "only rank 0 hosts the rendezvous listener");
+        let keep = match listener.try_clone() {
+            Ok(k) => k,
+            Err(e) => fail(0, format!("rendezvous listener clone failed: {e}")),
+        };
+        if let Err(e) = keep.set_nonblocking(true) {
+            fail(0, format!("rendezvous listener setup failed: {e}"));
+        }
+        let mut t = if opts.world == 1 {
+            Self::solo(opts)
+        } else {
+            Self::establish_rank0(listener, opts)
+        };
+        t.elastic = Some(ElasticState {
+            opts: eopts,
+            listener: Some(keep),
+            root_addr: opts.addr.clone(),
+            timeout: opts.timeout,
+            parked: Vec::new(),
+        });
+        t
+    }
+
+    /// Join a *running* elastic fleet as a fresh worker: dial the
+    /// rendezvous, announce as a joiner, and block until the fleet's next
+    /// reform admits us (bounded by `opts.timeout`). Returns the transport
+    /// plus the admission info (our assigned rank, the new world, the
+    /// epoch we joined in).
+    pub fn join(opts: &TcpOptions, eopts: ElasticOptions) -> (TcpTransport, ReformInfo) {
+        let deadline = Instant::now() + opts.timeout;
+        let root_addr = resolve(&opts.addr, 0);
+        let (mesh_listener, mesh_port) = bind_mesh_listener(root_addr.is_ipv6(), 0);
+        let mut backoff = BackoffState::new(eopts.backoff, eopts.seed, 0);
+        let mut root = connect_backoff(&root_addr, deadline, 0, "rendezvous", &mut backoff);
+        configure_stream(&root, opts.timeout, 0);
+        let mut wire = 0u64;
+        let hello = encode_hello(RANK_JOIN, 0, mesh_port);
+        wire += write_frame(&mut root, TAG_HELLO, 0, 0, &hello, 0, "rank 0");
+        // The admitting WELCOME2 only arrives at the fleet's next reform;
+        // we learn the epoch from it (any-epoch read).
+        let (payload, n) = match try_read_frame(&mut root, TAG_WELCOME, None, 0, "rank 0") {
+            Ok(out) => out,
+            Err(FrameError::Io(e)) => io_fail(0, "recv from", "rank 0 (awaiting admission)", &e),
+            Err(FrameError::Corrupt(d)) | Err(FrameError::Desync(d)) => fail(0, d),
+            Err(FrameError::Announced(f)) => fail(0, f.to_string()),
+        };
+        wire += n;
+        let (info, endpoints) = match decode_welcome2(&payload) {
+            Ok(t) => t,
+            Err(e) => fail(0, format!("malformed WELCOME2: {e}")),
+        };
+        let mut peers: Vec<Option<TcpStream>> = (0..info.world).map(|_| None).collect();
+        peers[0] = Some(root);
+        wire += build_mesh(
+            &mut peers,
+            &endpoints,
+            info.rank,
+            info.world,
+            info.epoch,
+            &mesh_listener,
+            Instant::now() + opts.timeout,
+            opts.timeout,
+        );
+        let t = TcpTransport {
+            rank: info.rank,
+            world: info.world,
+            cost: opts.cost,
+            peers,
+            seq: 0,
+            wire_bytes: wire,
+            epoch: info.epoch,
+            elastic: Some(ElasticState {
+                opts: eopts,
+                listener: None,
+                root_addr: opts.addr.clone(),
+                timeout: opts.timeout,
+                parked: Vec::new(),
+            }),
+        };
+        (t, info)
+    }
+
+    /// Current membership epoch (first assembly = 1).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Whether elastic membership is enabled on this transport.
+    pub fn is_elastic(&self) -> bool {
+        self.elastic.is_some()
+    }
+
+    /// Rank 0, at an outer-iteration boundary: sweep the rendezvous
+    /// listener for joiner HELLOs and park them. Returns whether any
+    /// joiner is waiting for admission (the driver then triggers a
+    /// [`FaultKind::Join`] reform).
+    pub fn pending_joiner(&mut self) -> bool {
+        let rank = self.rank;
+        let Some(est) = self.elastic.as_mut() else {
+            return false;
+        };
+        let Some(listener) = est.listener.as_ref() else {
+            return false;
+        };
+        loop {
+            match listener.accept() {
+                Ok((s, _)) => {
+                    if s.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    configure_stream(&s, est.timeout, rank);
+                    let mut s = s;
+                    // Joiner HELLOs are tagged epoch 0 (they don't know
+                    // the fleet's epoch yet).
+                    match try_read_frame(&mut s, TAG_HELLO, Some(0), 0, "joiner") {
+                        Ok((payload, _)) => {
+                            let mut r = ByteReader::new(&payload);
+                            let parsed = (|| -> Result<(u8, u32, u32, u16), String> {
+                                Ok((r.u8()?, r.u32()?, r.u32()?, r.u16()?))
+                            })();
+                            match parsed {
+                                Ok((version, rank_field, _world, port))
+                                    if version == VERSION && rank_field == RANK_JOIN =>
+                                {
+                                    est.parked.push((s, port));
+                                }
+                                // Stale or malformed contact: drop it.
+                                _ => {}
+                            }
+                        }
+                        Err(_) => {}
+                    }
+                }
+                Err(_) => break, // WouldBlock (no joiner) or transient error
+            }
+        }
+        !est.parked.is_empty()
+    }
+
+    /// Announce this rank's planned departure to the fleet and close every
+    /// stream (deterministic fault injection: the survivors raise the
+    /// matching [`FaultKind::Injected`] fault from their own copy of the
+    /// plan).
+    pub fn depart(&mut self) {
+        let fault = EpochFault {
+            epoch: self.epoch,
+            rank: self.rank,
+            kind: FaultKind::Injected,
+            detail: "planned departure".to_string(),
+        };
+        self.announce_fault(&fault);
+        for s in self.peers.iter_mut() {
+            *s = None;
+        }
+    }
+
+    /// Re-form the fleet in epoch `e + 1` after `fault` (see module docs).
+    /// On success the transport's rank/world/epoch are updated in place
+    /// and per-epoch sequence numbers restart. `Err` means the fleet
+    /// cannot continue (below `min_world`, rank 0 gone, …) — the caller
+    /// aborts fail-fast.
+    pub fn reform(&mut self, fault: &EpochFault) -> Result<ReformInfo, String> {
+        if self.elastic.is_none() {
+            return Err("reform requires elastic membership".to_string());
+        }
+        if fault.rank == 0 && fault.kind != FaultKind::Join {
+            return Err(format!(
+                "rank 0 (the rendezvous host) is faulty and cannot be replaced: {fault}"
+            ));
+        }
+        if self.rank == 0 {
+            self.reform_root(fault)
+        } else {
+            self.reform_worker(fault)
+        }
+    }
+
+    fn reform_root(&mut self, fault: &EpochFault) -> Result<ReformInfo, String> {
+        let new_epoch = self.epoch.max(fault.epoch) + 1;
+        let old_world = self.world;
+        // Ranks the fault names dead (a Join fault kills nobody).
+        let presumed_dead = if fault.kind == FaultKind::Join {
+            None
+        } else {
+            Some(fault.rank)
+        };
+        let expected_survivors =
+            old_world - 1 - presumed_dead.map_or(0, |r| usize::from(r != 0 && r < old_world));
+        // Drop the old mesh; survivors re-dial the persistent rendezvous.
+        for s in self.peers.iter_mut() {
+            *s = None;
+        }
+        let est = self.elastic.as_mut().expect("reform_root requires elastic state");
+        let timeout = est.timeout;
+        let (rejoin_window, min_world) = (est.opts.rejoin_window, est.opts.min_world);
+        let mut joiners: Vec<(TcpStream, u16)> = std::mem::take(&mut est.parked);
+        let listener = est.listener.as_ref().expect("rank 0 keeps the rendezvous listener");
+        let listener = match listener.try_clone() {
+            Ok(l) => l,
+            Err(e) => return Err(format!("rendezvous listener clone failed: {e}")),
+        };
+        let mut survivors: Vec<Option<(TcpStream, u16)>> =
+            (0..old_world).map(|_| None).collect();
+        let mut checked_in = 0usize;
+        let deadline = Instant::now() + rejoin_window;
+        while checked_in < expected_survivors {
+            match listener.accept() {
+                Ok((s, _)) => {
+                    if s.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    configure_stream(&s, timeout, 0);
+                    let mut s = s;
+                    // Survivor re-HELLOs carry the new epoch; joiner
+                    // HELLOs carry epoch 0 — accept both.
+                    let payload = match try_read_frame(&mut s, TAG_HELLO, None, 0, "survivor") {
+                        Ok((p, _)) => p,
+                        Err(_) => continue, // half-open contact: skip it
+                    };
+                    let mut r = ByteReader::new(&payload);
+                    let parsed = (|| -> Result<(u8, u32, u32, u16), String> {
+                        Ok((r.u8()?, r.u32()?, r.u32()?, r.u16()?))
+                    })();
+                    let (version, rank_field, _world, port) = match parsed {
+                        Ok(t) => t,
+                        Err(_) => continue,
+                    };
+                    if version != VERSION {
+                        continue;
+                    }
+                    if rank_field == RANK_JOIN {
+                        joiners.push((s, port));
+                        continue;
+                    }
+                    let old = rank_field as usize;
+                    if old == 0 || old >= old_world || survivors[old].is_some() {
+                        continue; // impossible rank or duplicate: ignore
+                    }
+                    if presumed_dead == Some(old) {
+                        continue; // a zombie the plan declared dead
+                    }
+                    survivors[old] = Some((s, port));
+                    checked_in += 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        break; // missing survivors are presumed dead
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+        // Contiguous re-numbering: rank 0 stays 0, survivors by old rank,
+        // joiners after in arrival order.
+        let mut members: Vec<(TcpStream, u16)> = Vec::new();
+        for slot in survivors.into_iter().flatten() {
+            members.push(slot);
+        }
+        let joined = joiners.len();
+        members.extend(joiners);
+        let new_world = 1 + members.len();
+        if new_world < min_world.max(1) {
+            return Err(format!(
+                "epoch {new_epoch}: only {new_world} ranks re-assembled (min world {min_world})"
+            ));
+        }
+        if new_world > 4096 {
+            return Err(format!("epoch {new_epoch}: world size {new_world} is unreasonable"));
+        }
+        // Endpoint table for ranks 1..new_world.
+        let mut endpoints: Vec<(String, u16)> = vec![(String::new(), 0)];
+        for (s, port) in &members {
+            let ip = s
+                .peer_addr()
+                .map(|a| a.ip().to_string())
+                .map_err(|e| format!("member address unreadable: {e}"))?;
+            endpoints.push((ip, *port));
+        }
+        let mut wire = 0u64;
+        let mut peers: Vec<Option<TcpStream>> = (0..new_world).map(|_| None).collect();
+        for (i, (mut s, _)) in members.into_iter().enumerate() {
+            let new_rank = i + 1;
+            let body = encode_welcome2(new_epoch, new_rank, new_world, joined, &endpoints);
+            wire += write_frame(
+                &mut s,
+                TAG_WELCOME,
+                new_epoch,
+                0,
+                &body,
+                0,
+                &format!("rank {new_rank}"),
+            );
+            peers[new_rank] = Some(s);
+        }
+        self.peers = peers;
+        self.world = new_world;
+        self.epoch = new_epoch;
+        self.seq = 0;
+        self.wire_bytes += wire;
+        Ok(ReformInfo { rank: 0, world: new_world, joined, epoch: new_epoch })
+    }
+
+    fn reform_worker(&mut self, fault: &EpochFault) -> Result<ReformInfo, String> {
+        let new_epoch = self.epoch.max(fault.epoch) + 1;
+        let old_rank = self.rank;
+        let old_world = self.world;
+        for s in self.peers.iter_mut() {
+            *s = None;
+        }
+        let est = self.elastic.as_ref().expect("reform_worker requires elastic state");
+        let timeout = est.timeout;
+        let (rejoin_window, backoff_base, seed) =
+            (est.opts.rejoin_window, est.opts.backoff, est.opts.seed);
+        let root_addr = est.root_addr.clone();
+        let deadline = Instant::now() + rejoin_window + timeout;
+        let root_sock = resolve(&root_addr, old_rank);
+        let (mesh_listener, mesh_port) = bind_mesh_listener(root_sock.is_ipv6(), old_rank);
+        let mut backoff = BackoffState::new(backoff_base, seed ^ new_epoch, old_rank);
+        let mut root =
+            connect_backoff(&root_sock, deadline, old_rank, "rendezvous", &mut backoff);
+        configure_stream(&root, rejoin_window + timeout, old_rank);
+        let mut wire = 0u64;
+        let hello = encode_hello(old_rank as u32, old_world as u32, mesh_port);
+        wire += write_frame(&mut root, TAG_HELLO, new_epoch, 0, &hello, old_rank, "rank 0");
+        let (payload, n) =
+            read_frame(&mut root, TAG_WELCOME, new_epoch, 0, old_rank, "rank 0");
+        wire += n;
+        configure_stream(&root, timeout, old_rank);
+        let (info, endpoints) = decode_welcome2(&payload)
+            .map_err(|e| format!("malformed WELCOME2: {e}"))?;
+        if info.epoch != new_epoch {
+            return Err(format!(
+                "rendezvous answered epoch {}, expected {new_epoch}",
+                info.epoch
+            ));
+        }
+        let mut peers: Vec<Option<TcpStream>> = (0..info.world).map(|_| None).collect();
+        peers[0] = Some(root);
+        wire += build_mesh(
+            &mut peers,
+            &endpoints,
+            info.rank,
+            info.world,
+            new_epoch,
+            &mesh_listener,
+            Instant::now() + timeout,
+            timeout,
+        );
+        self.peers = peers;
+        self.rank = info.rank;
+        self.world = info.world;
+        self.epoch = new_epoch;
+        self.seq = 0;
+        self.wire_bytes += wire;
+        Ok(info)
     }
 
     /// Binomial-tree collective (ReduceAll / Broadcast / Reduce): gather
@@ -788,7 +1378,48 @@ fn resolve(addr: &str, rank: usize) -> SocketAddr {
     }
 }
 
-fn connect_retry(addr: &SocketAddr, deadline: Instant, rank: usize, peer: &str) -> TcpStream {
+/// Exponential backoff with seeded jitter for the reconnect loops. The
+/// delay sequence is `base · 2^attempt · (1 + u)` with `u ∈ [0, 1)` drawn
+/// from a per-rank seeded stream, capped at 1 s — bounded retries that
+/// de-thunder a herd of workers racing one listener, yet fully
+/// reproducible for a given seed (the jitter only shapes *wall-clock*
+/// retry timing; the modeled clock never sees it).
+struct BackoffState {
+    delay: Duration,
+    rng: Xoshiro256pp,
+}
+
+const BACKOFF_CAP: Duration = Duration::from_secs(1);
+
+impl BackoffState {
+    fn new(base: Duration, seed: u64, rank: usize) -> Self {
+        Self {
+            delay: base.max(Duration::from_millis(1)),
+            rng: Xoshiro256pp::seed_from_u64(
+                seed ^ (rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ),
+        }
+    }
+
+    /// Sleep the current jittered delay (clamped to the remaining budget)
+    /// and double the base for next time.
+    fn sleep(&mut self, deadline: Instant) {
+        let jittered = self.delay.mul_f64(1.0 + self.rng.next_f64());
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        std::thread::sleep(jittered.min(remaining));
+        self.delay = (self.delay * 2).min(BACKOFF_CAP);
+    }
+}
+
+/// Dial `addr` until it answers or `deadline` passes, backing off between
+/// attempts (see [`BackoffState`]).
+fn connect_backoff(
+    addr: &SocketAddr,
+    deadline: Instant,
+    rank: usize,
+    peer: &str,
+    backoff: &mut BackoffState,
+) -> TcpStream {
     loop {
         let now = Instant::now();
         if now >= deadline {
@@ -797,9 +1428,167 @@ fn connect_retry(addr: &SocketAddr, deadline: Instant, rank: usize, peer: &str) 
         let attempt = (deadline - now).min(Duration::from_millis(500));
         match TcpStream::connect_timeout(addr, attempt) {
             Ok(s) => return s,
-            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+            Err(_) => backoff.sleep(deadline),
         }
     }
+}
+
+fn bind_mesh_listener(ipv6: bool, rank: usize) -> (TcpListener, u16) {
+    // Match the rendezvous address family so an IPv6 fleet can dial the
+    // mesh listeners back.
+    let mesh_bind = if ipv6 { "[::]:0" } else { "0.0.0.0:0" };
+    let listener = match TcpListener::bind(mesh_bind) {
+        Ok(l) => l,
+        Err(e) => fail(rank, format!("mesh listener bind failed: {e}")),
+    };
+    let port = match listener.local_addr() {
+        Ok(a) => a.port(),
+        Err(e) => fail(rank, format!("mesh listener address unreadable: {e}")),
+    };
+    (listener, port)
+}
+
+fn encode_hello(rank: u32, world: u32, mesh_port: u16) -> Vec<u8> {
+    let mut hello = Vec::with_capacity(11);
+    put_u8(&mut hello, VERSION);
+    put_u32(&mut hello, rank);
+    put_u32(&mut hello, world);
+    put_u16(&mut hello, mesh_port);
+    hello
+}
+
+/// Decode the `(ip, port)^(world−1)` table shared by WELCOME and
+/// WELCOME2 (rank 0's entry is implicit — every reader already holds a
+/// stream to it).
+fn read_endpoint_table(r: &mut ByteReader, world: usize) -> Result<Vec<(String, u16)>, String> {
+    let mut eps = vec![(String::new(), 0u16)];
+    for _ in 1..world {
+        let ip_len = r.u8()? as usize;
+        let ip = String::from_utf8(r.take(ip_len)?.to_vec())
+            .map_err(|_| "non-utf8 ip in WELCOME".to_string())?;
+        let port = r.u16()?;
+        eps.push((ip, port));
+    }
+    Ok(eps)
+}
+
+fn encode_welcome2(
+    epoch: u64,
+    your_rank: usize,
+    world: usize,
+    joined: usize,
+    endpoints: &[(String, u16)],
+) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u8(&mut body, VERSION);
+    put_u64(&mut body, epoch);
+    put_u32(&mut body, your_rank as u32);
+    put_u32(&mut body, world as u32);
+    put_u32(&mut body, joined as u32);
+    encode_endpoint_table(&mut body, endpoints);
+    body
+}
+
+fn decode_welcome2(payload: &[u8]) -> Result<(ReformInfo, Vec<(String, u16)>), String> {
+    let mut r = ByteReader::new(payload);
+    let version = r.u8()?;
+    if version != VERSION {
+        return Err(format!("protocol version {version} != {VERSION}"));
+    }
+    let epoch = r.u64()?;
+    let rank = r.u32()? as usize;
+    let world = r.u32()? as usize;
+    let joined = r.u32()? as usize;
+    if world == 0 || rank >= world {
+        return Err(format!("rank {rank} out of range for world {world}"));
+    }
+    let endpoints = read_endpoint_table(&mut r, world)?;
+    r.finish()?;
+    Ok((ReformInfo { rank, world, joined, epoch }, endpoints))
+}
+
+fn encode_endpoint_table(table: &mut Vec<u8>, endpoints: &[(String, u16)]) {
+    for (ip, port) in endpoints.iter().skip(1) {
+        put_u8(table, ip.len() as u8);
+        table.extend_from_slice(ip.as_bytes());
+        put_u16(table, *port);
+    }
+}
+
+/// Complete the pairwise mesh for `rank` at `epoch`: dial every
+/// lower-ranked worker's mesh listener (identifying with PEER_ID), accept
+/// every higher-ranked one. `peers[0]` (the rendezvous stream) must
+/// already be set by the caller. Returns the wire bytes moved.
+#[allow(clippy::too_many_arguments)]
+fn build_mesh(
+    peers: &mut [Option<TcpStream>],
+    endpoints: &[(String, u16)],
+    rank: usize,
+    world: usize,
+    epoch: u64,
+    mesh_listener: &TcpListener,
+    deadline: Instant,
+    timeout: Duration,
+) -> u64 {
+    let mut wire = 0u64;
+    let mut backoff = BackoffState::new(Duration::from_millis(25), epoch, rank);
+    for (i, (ip, port)) in endpoints.iter().enumerate().take(rank).skip(1) {
+        // IPv6 peer addresses need brackets in host:port notation.
+        let dial = if ip.contains(':') {
+            format!("[{ip}]:{port}")
+        } else {
+            format!("{ip}:{port}")
+        };
+        let addr = resolve(&dial, rank);
+        let mut s = connect_backoff(&addr, deadline, rank, &format!("rank {i}"), &mut backoff);
+        configure_stream(&s, timeout, rank);
+        let mut id = Vec::new();
+        put_u32(&mut id, rank as u32);
+        wire += write_frame(&mut s, TAG_PEER_ID, epoch, 0, &id, rank, &format!("rank {i}"));
+        peers[i] = Some(s);
+    }
+    // Accept every higher-ranked worker.
+    if let Err(e) = mesh_listener.set_nonblocking(true) {
+        fail(rank, format!("mesh listener setup failed: {e}"));
+    }
+    let mut need = world - 1 - rank;
+    while need > 0 {
+        match mesh_listener.accept() {
+            Ok((s, _)) => {
+                if let Err(e) = s.set_nonblocking(false) {
+                    fail(rank, format!("mesh accept setup failed: {e}"));
+                }
+                configure_stream(&s, timeout, rank);
+                let mut s = s;
+                let (payload, n) = read_frame(&mut s, TAG_PEER_ID, epoch, 0, rank, "mesh peer");
+                wire += n;
+                let mut r = ByteReader::new(&payload);
+                let j = match r.u32() {
+                    Ok(j) => j as usize,
+                    Err(e) => fail(rank, format!("malformed PEER_ID: {e}")),
+                };
+                if j <= rank || j >= world {
+                    fail(rank, format!("mesh peer announced invalid rank {j}"));
+                }
+                if peers[j].is_some() {
+                    fail(rank, format!("two mesh peers announced rank {j}"));
+                }
+                peers[j] = Some(s);
+                need -= 1;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    fail(
+                        rank,
+                        format!("mesh timeout: {need} higher-ranked workers never dialed in"),
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => fail(rank, format!("mesh accept failed: {e}")),
+        }
+    }
+    wire
 }
 
 fn decode_entries(
@@ -860,5 +1649,48 @@ mod tests {
             let p = tree_parent(r);
             assert!(p < r);
         }
+    }
+
+    #[test]
+    fn fault_announcement_round_trips() {
+        let f = EpochFault {
+            epoch: 7,
+            rank: 3,
+            kind: FaultKind::Timeout,
+            detail: "recv from rank 3: timed out (peer hung or died)".to_string(),
+        };
+        let back = decode_fault(&encode_fault(&f)).expect("decode");
+        assert_eq!(back.epoch, 7);
+        assert_eq!(back.rank, 3);
+        assert_eq!(back.kind, FaultKind::Timeout);
+        assert_eq!(back.detail, f.detail);
+    }
+
+    #[test]
+    fn welcome2_round_trips() {
+        let endpoints = vec![
+            (String::new(), 0u16),
+            ("127.0.0.1".to_string(), 4001),
+            ("10.0.0.7".to_string(), 4002),
+        ];
+        let body = encode_welcome2(3, 2, 3, 1, &endpoints);
+        let (info, eps) = decode_welcome2(&body).expect("decode");
+        assert_eq!(info, ReformInfo { rank: 2, world: 3, joined: 1, epoch: 3 });
+        assert_eq!(eps, endpoints);
+    }
+
+    #[test]
+    fn backoff_is_seeded_and_bounded() {
+        // Same seed + rank → same jitter stream; delays double up to the cap.
+        let mut a = BackoffState::new(Duration::from_millis(10), 42, 1);
+        let mut b = BackoffState::new(Duration::from_millis(10), 42, 1);
+        for _ in 0..12 {
+            assert_eq!(a.rng.next_u64(), b.rng.next_u64());
+            a.delay = (a.delay * 2).min(BACKOFF_CAP);
+            b.delay = (b.delay * 2).min(BACKOFF_CAP);
+        }
+        assert_eq!(a.delay, BACKOFF_CAP);
+        let mut c = BackoffState::new(Duration::from_millis(10), 43, 1);
+        assert_ne!(a.rng.next_u64(), c.rng.next_u64());
     }
 }

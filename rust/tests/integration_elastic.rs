@@ -1,0 +1,263 @@
+//! Elastic-fleet integration: planned and unplanned membership changes
+//! on both transports. Covers the tentpole contract end to end —
+//! survivors re-form at world−1 within one epoch and still converge to
+//! the same objective tolerance; a joiner grows the fleet and shrinks the
+//! makespan; elasticity disabled (or enabled with no faults) perturbs a
+//! run by exactly nothing. Every TCP test is guarded by an outer timeout
+//! so a recovery regression fails instead of hanging the suite.
+
+use disco::algorithms::{
+    run_elastic_over_tcp, run_over_spec, run_spec, run_spec_elastic, run_spec_maybe_elastic,
+    AlgoKind, CheckpointPlan, ElasticSpec, FaultPlan, RepartitionSpec, RunResult, RunSpec,
+};
+use disco::data::{Dataset, SyntheticConfig};
+use disco::loss::LossKind;
+use disco::net::{ComputeModel, CostModel, TcpOptions, TcpTransport};
+use std::net::TcpListener;
+use std::process::{Command, Stdio};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::time::Duration;
+
+fn ds() -> Dataset {
+    SyntheticConfig::new("elastic-int", 240, 32)
+        .density(0.5)
+        .seed(11)
+        .generate()
+}
+
+fn spec(kind: AlgoKind, m: usize) -> RunSpec {
+    let mut spec = RunSpec::new(kind, LossKind::Logistic, 1e-3).with_m(m);
+    spec.sim.compute = ComputeModel::modeled();
+    spec.stop.grad_tol = 1e-6;
+    spec.stop.max_outer = 80;
+    spec
+}
+
+/// Run a closure with a hard wall-clock deadline; a hang fails the test.
+fn with_deadline<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => v,
+        Err(RecvTimeoutError::Timeout) => panic!("deadline exceeded: the fleet hung"),
+        Err(RecvTimeoutError::Disconnected) => panic!("fleet worker panicked (see stderr)"),
+    }
+}
+
+/// One OS thread per rank over a real localhost TCP mesh (elastic when
+/// `es` is given), ephemeral rendezvous port per call.
+fn run_tcp_fleet<T: Send>(
+    m: usize,
+    es: Option<&ElasticSpec>,
+    timeout: Duration,
+    f: impl Fn(TcpTransport) -> T + Sync,
+) -> Vec<T> {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind rendezvous");
+    let addr = listener.local_addr().expect("rendezvous addr").to_string();
+    let mut listener = Some(listener);
+    let mut outs: Vec<Option<T>> = (0..m).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        let addr = &addr;
+        for (rank, slot) in outs.iter_mut().enumerate() {
+            let l = listener.take(); // Some only for rank 0
+            s.spawn(move || {
+                let opts = TcpOptions::new(rank, m, addr).with_timeout(timeout);
+                let t = match (l, es) {
+                    (Some(l), Some(es)) => {
+                        TcpTransport::establish_elastic_with_listener(l, &opts, es.tcp_options())
+                    }
+                    (Some(l), None) => TcpTransport::establish_with_listener(l, &opts),
+                    (None, Some(es)) => TcpTransport::establish_elastic(&opts, es.tcp_options()),
+                    (None, None) => TcpTransport::establish(&opts),
+                };
+                *slot = Some(f(t));
+            });
+        }
+    });
+    outs.into_iter().map(|o| o.expect("rank output")).collect()
+}
+
+#[test]
+fn shm_planned_kill_converges_to_the_baseline_objective() {
+    let ds = ds();
+    let spec3 = spec(AlgoKind::DiscoF, 3);
+    let baseline = run_spec(&ds, &spec3);
+    assert!(baseline.converged);
+
+    let mut es = ElasticSpec::on();
+    es.plan = FaultPlan::parse("kill@3:2").unwrap();
+    let (res, recoveries) = run_spec_elastic(&ds, &spec3, &es);
+    assert_eq!(recoveries, 1);
+    assert_eq!(res.node_ops.len(), 2, "re-formed at world-1");
+    assert!(res.converged);
+    assert!(res.final_grad_norm() <= spec3.stop.grad_tol);
+    let df = (res.final_fval() - baseline.final_fval()).abs();
+    assert!(df < 1e-6, "objective drifted after recovery: Δf = {df:.3e}");
+}
+
+#[test]
+fn shm_join_mid_run_shrinks_the_makespan() {
+    let ds = ds();
+    // Fixed outer budget on the modeled clock with a free network: the
+    // only thing that can change the makespan is how the rows are spread.
+    let mut spec2 = spec(AlgoKind::Gd, 2);
+    spec2.stop.grad_tol = 0.0;
+    spec2.stop.max_outer = 12;
+    spec2.sim.cost = CostModel::zero();
+
+    let (steady, _) = run_spec_elastic(&ds, &spec2, &ElasticSpec::on());
+    let mut es = ElasticSpec::on();
+    es.plan = FaultPlan::parse("join@2").unwrap();
+    let (grown, recoveries) = run_spec_elastic(&ds, &spec2, &es);
+    assert_eq!(recoveries, 1);
+    assert_eq!(grown.node_ops.len(), 3, "the joiner holds a rank at the end");
+    assert!(
+        grown.sim_seconds < steady.sim_seconds,
+        "growing the fleet mid-run must shrink the makespan: {} vs {}",
+        grown.sim_seconds,
+        steady.sim_seconds
+    );
+}
+
+#[test]
+fn shm_elastic_disabled_is_bit_identical_to_plain_session() {
+    let ds = ds();
+    let spec3 = spec(AlgoKind::DiscoS, 3);
+    let plain = run_spec(&ds, &spec3);
+    let (routed, recoveries) = run_spec_maybe_elastic(&ds, &spec3, &ElasticSpec::none());
+    assert_eq!(recoveries, 0);
+    assert_eq!(routed.sim_seconds.to_bits(), plain.sim_seconds.to_bits());
+    assert_eq!(routed.stats, plain.stats);
+    assert_eq!(routed.w.len(), plain.w.len());
+    for (a, b) in routed.w.iter().zip(plain.w.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn tcp_planned_kill_reforms_at_world_minus_one_and_converges() {
+    let outcomes: (RunResult, Vec<Option<RunResult>>) = with_deadline(120, || {
+        let ds = ds();
+        let spec3 = spec(AlgoKind::DiscoF, 3);
+        let baseline = run_spec(&ds, &spec3);
+        let mut es = ElasticSpec::on();
+        es.plan = FaultPlan::parse("kill@3:2").unwrap();
+        let outs = run_tcp_fleet(3, Some(&es), Duration::from_secs(10), |t| {
+            run_elastic_over_tcp(&ds, &spec3, t, &es)
+        });
+        (baseline, outs)
+    });
+    let (baseline, outs) = outcomes;
+    assert!(outs[1].is_none(), "non-zero ranks return no result");
+    assert!(outs[2].is_none(), "the killed rank departs with no result");
+    let res = outs[0].as_ref().expect("rank 0 assembles the result");
+    assert_eq!(res.node_ops.len(), 2, "survivors re-formed at world-1");
+    assert!(res.converged, "survivors must still converge");
+    assert!(res.final_grad_norm() <= 1e-6);
+    let df = (res.final_fval() - baseline.final_fval()).abs();
+    assert!(df < 1e-6, "objective drifted after TCP recovery: Δf = {df:.3e}");
+}
+
+#[test]
+fn tcp_elastic_with_no_faults_matches_the_plain_run_bitwise() {
+    let (plain, elastic) = with_deadline(120, || {
+        let ds = ds();
+        let spec2 = spec(AlgoKind::DiscoF, 2);
+        let plain = run_tcp_fleet(2, None, Duration::from_secs(10), |t| {
+            run_over_spec(&ds, &spec2, t, &CheckpointPlan::none(), &RepartitionSpec::none())
+        });
+        let es = ElasticSpec::on();
+        let elastic = run_tcp_fleet(2, Some(&es), Duration::from_secs(10), |t| {
+            run_elastic_over_tcp(&ds, &spec2, t, &es)
+        });
+        (plain, elastic)
+    });
+    let a = plain[0].as_ref().expect("plain rank 0 result");
+    let b = elastic[0].as_ref().expect("elastic rank 0 result");
+    // The boundary protocol only adds *free* metric rounds, so the priced
+    // timeline, the stats ledger, and every iterate bit must agree.
+    assert_eq!(a.sim_seconds.to_bits(), b.sim_seconds.to_bits());
+    assert_eq!(a.stats, b.stats);
+    assert_eq!(a.w.len(), b.w.len());
+    for (x, y) in a.w.iter().zip(b.w.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    assert_eq!(a.converged, b.converged);
+}
+
+#[test]
+fn tcp_sigkill_mid_run_reforms_at_world_minus_one() {
+    // Real processes, real sockets, a real SIGKILL: three disco-node
+    // workers run elastically; rank 2 is killed mid-run; ranks 0 and 1
+    // must re-form at world 2 within one epoch and finish. (The planned
+    // -fault tests pin down the numerics; this pins down *detection*.)
+    let bin = env!("CARGO_BIN_EXE_disco-node");
+    let listener = TcpListener::bind("127.0.0.1:0").expect("probe port");
+    let addr = listener.local_addr().expect("addr").to_string();
+    drop(listener); // rank 0 re-binds it below (small reuse race, test-only)
+
+    let common = [
+        "run",
+        "--transport",
+        "tcp",
+        "--world",
+        "3",
+        "--addr",
+        &addr,
+        "--net-timeout",
+        "6",
+        "--dataset",
+        "tiny",
+        "--scale",
+        "4",
+        "--algo",
+        "gd",
+        "--loss",
+        "quadratic",
+        "--compute",
+        "modeled",
+        "--max-outer",
+        "40",
+        "--grad-tol",
+        "0",
+        "--elastic",
+        "--elastic-pace-ms",
+        "40",
+        "--elastic-rejoin-window",
+        "2",
+    ];
+    let mut children = Vec::new();
+    for rank in 0..3usize {
+        let mut cmd = Command::new(bin);
+        cmd.args(common).arg("--rank").arg(rank.to_string());
+        cmd.stderr(Stdio::null());
+        cmd.stdout(if rank == 0 { Stdio::piped() } else { Stdio::null() });
+        children.push(cmd.spawn().expect("spawn disco-node"));
+    }
+    // Let the fleet form and make progress, then SIGKILL rank 2. The
+    // 40 ms/outer pacing guarantees the run is still going.
+    std::thread::sleep(Duration::from_millis(800));
+    let mut victim = children.remove(2);
+    victim.kill().expect("SIGKILL rank 2");
+    let _ = victim.wait();
+
+    let rank1 = children.remove(1);
+    let rank0 = children.remove(0);
+    let out = with_deadline(90, move || {
+        let out = rank0.wait_with_output().expect("rank 0 exit");
+        let mut rank1 = rank1;
+        let s1 = rank1.wait().expect("rank 1 exit");
+        (out, s1)
+    });
+    let (out0, status1) = out;
+    let stdout = String::from_utf8_lossy(&out0.stdout);
+    assert!(out0.status.success(), "rank 0 failed after the kill:\n{stdout}");
+    assert!(status1.success(), "rank 1 failed after the kill");
+    assert!(
+        stdout.contains("re-formed world 2"),
+        "rank 0 never reported the epoch-2 re-form:\n{stdout}"
+    );
+}
