@@ -23,7 +23,7 @@ use crate::algorithms::session::{drive_session, CheckpointPlan};
 use crate::algorithms::spec::{RepartitionSpec, RunSpec};
 use crate::algorithms::{AlgoKind, NodeOutput, OpCounts, RunConfig, RunResult};
 use crate::data::Dataset;
-use crate::net::transport::{NodeCtx, Transport};
+use crate::net::transport::{Checked, NodeCtx, Transport};
 use crate::net::{CommStats, Segment, Trace};
 use crate::util::bytes::{put_f64, put_f64s, put_u32, put_u64, ByteReader};
 use std::time::Instant;
@@ -64,8 +64,8 @@ pub fn run_over_spec<T: Transport>(
     if let Err(e) = spec.validate() {
         panic!("invalid run spec: {e}");
     }
-    let wall = Instant::now();
-    let mut ctx = NodeCtx::new(transport)
+    let wall = Instant::now(); // lint: allow(wall-clock) — diagnostic wall_seconds only
+    let mut ctx = NodeCtx::new(Checked::from_env(transport))
         .with_compute(spec.sim.compute)
         .with_trace(spec.sim.trace);
     let rank = ctx.rank;

@@ -57,6 +57,7 @@
 use crate::net::cost::{ComputeModel, CostModel};
 use crate::net::stats::CommStats;
 use crate::net::trace::Trace;
+use crate::net::transport::checked::Checked;
 use crate::net::transport::shm::{Blackboard, PeerAbort, ShmTransport};
 use crate::net::transport::{EpochFault, NodeCtx, StragglerConfig};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -93,6 +94,9 @@ pub struct Cluster {
     /// starts from this snapshot instead of zero, continuing the
     /// checkpointed run's accumulation bit-exactly.
     pub initial_stats: Option<CommStats>,
+    /// Collective-schedule checking ([`Checked`]): `None` consults the
+    /// `DISCO_CHECKED` env var, `Some(v)` forces the mode (tests).
+    pub checked: Option<bool>,
 }
 
 impl Cluster {
@@ -105,6 +109,7 @@ impl Cluster {
             straggler: None,
             compute: ComputeModel::Measured,
             initial_stats: None,
+            checked: None,
         }
     }
 
@@ -146,6 +151,13 @@ impl Cluster {
         self
     }
 
+    /// Force the collective-schedule checker on or off, overriding the
+    /// `DISCO_CHECKED` env var (see [`Checked`]).
+    pub fn with_checked(mut self, on: bool) -> Self {
+        self.checked = Some(on);
+        self
+    }
+
     /// Run the SPMD closure on every node. The closure receives the node
     /// context and must follow SPMD discipline: all nodes execute the same
     /// sequence of collectives. A panic on any node aborts the whole run
@@ -153,13 +165,14 @@ impl Cluster {
     /// with `cluster node failed: …`.
     pub fn run<T: Send>(
         &self,
-        f: impl Fn(&mut NodeCtx<ShmTransport>) -> T + Sync,
+        f: impl Fn(&mut NodeCtx<Checked<ShmTransport>>) -> T + Sync,
     ) -> ClusterRun<T> {
         assert!(self.m >= 1, "cluster needs at least one node");
         let board = Arc::new(Blackboard::new(self.m, self.cost));
         if let Some(stats) = &self.initial_stats {
             board.seed_stats(stats.clone());
         }
+        let checked = self.checked.unwrap_or_else(Checked::<ShmTransport>::env_enabled);
         let wall = Instant::now();
         let mut outputs: Vec<Option<(T, f64, Trace)>> = Vec::with_capacity(self.m);
         for _ in 0..self.m {
@@ -176,7 +189,8 @@ impl Cluster {
                 let board_node = Arc::clone(&board);
                 handles.push(scope.spawn(move || {
                     let board_fail = Arc::clone(&board_node);
-                    let mut ctx = NodeCtx::new(ShmTransport::new(board_node, rank))
+                    let transport = Checked::new(ShmTransport::new(board_node, rank), checked);
+                    let mut ctx = NodeCtx::new(transport)
                         .with_speed(speed)
                         .with_compute(compute_model)
                         .with_trace(trace_enabled);

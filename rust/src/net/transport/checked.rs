@@ -1,0 +1,327 @@
+//! Runtime collective-schedule checker: [`Checked`] wraps any
+//! [`Transport`] and cross-validates the *schedule* of collectives across
+//! ranks before each call executes, so a rank-divergent program — rank 2
+//! entering an AllGather while rank 0 entered a Reduce — fails with a
+//! named report (`schedule-divergence at call #k: …`) instead of a silent
+//! bit-diff on shm or a hang/desync on TCP.
+//!
+//! ## Why the *Transport* layer, not `Collectives`
+//!
+//! Validation must not perturb the priced timeline. A collective — even a
+//! free metric one — synchronizes every rank's clock to the max arrival,
+//! so a checker that issued its own round *through* [`NodeCtx`] would move
+//! `comm_start` of the following real collective and break the
+//! bit-identity guarantee. Down here the checker hands the validation
+//! round straight to the inner transport and **discards its clock
+//! outcome**; `NodeCtx` never sees it, so the simulated clocks, traces,
+//! and priced [`CommStats`](crate::net::CommStats) are bit-identical with
+//! the checker on or off. Real wire traffic spent on validation is
+//! likewise subtracted from [`Transport::wire_bytes`], keeping the
+//! measured ledger identical too.
+//!
+//! ## Protocol
+//!
+//! Before forwarding a rank's `k`-th collective, the checker AllGathers a
+//! fixed 5-word descriptor `[kind, root, k_doubles, payload_len, metric]`
+//! as a free metric collective. Every rank then holds the full descriptor
+//! table: on any mismatch, every rank panics with the *same* message
+//! (rank 0's descriptor is the reference), naming the first divergent
+//! rank and the last few calls from this rank's ring buffer. Because the
+//! validation round itself is one-per-collective on every rank, it stays
+//! aligned precisely until the first divergence — which it reports before
+//! the divergent payload ever touches the wire.
+//!
+//! Enable for any integration run with `DISCO_CHECKED=1` (see
+//! [`Checked::from_env`]); the thread cluster and the TCP session drivers
+//! wrap their transports unconditionally and consult the env var, so one
+//! variable covers every test binary.
+
+use std::collections::VecDeque;
+
+use crate::net::cost::CollectiveKind;
+use crate::net::stats::CommStats;
+use crate::net::transport::{CollectiveOutcome, Transport};
+
+/// How many completed calls the ring buffer keeps for divergence reports.
+const RING_CAP: usize = 16;
+/// How many ring entries a report prints.
+const RING_SHOWN: usize = 8;
+/// Words per rank in the validation descriptor.
+const DESC_WORDS: usize = 5;
+
+/// One completed collective as the ring buffer remembers it.
+#[derive(Clone, Copy, Debug)]
+struct RingEntry {
+    call: u64,
+    kind: CollectiveKind,
+    count: usize,
+}
+
+/// One rank's view of a collective about to execute, as carried by the
+/// validation round. All fields are small non-negative integers, so they
+/// round-trip exactly through the `f64` payload words.
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct Descriptor {
+    kind_code: u8,
+    root: usize,
+    k_doubles: usize,
+    payload_len: usize,
+    metric: bool,
+}
+
+impl Descriptor {
+    fn to_words(self) -> [f64; DESC_WORDS] {
+        [
+            self.kind_code as f64,
+            self.root as f64,
+            self.k_doubles as f64,
+            self.payload_len as f64,
+            if self.metric { 1.0 } else { 0.0 },
+        ]
+    }
+
+    fn from_words(w: &[f64]) -> Descriptor {
+        Descriptor {
+            kind_code: w[0] as u8,
+            root: w[1] as usize,
+            k_doubles: w[2] as usize,
+            payload_len: w[3] as usize,
+            metric: w[4] != 0.0,
+        }
+    }
+
+    /// `AllGather(512)`-style summary used in divergence reports.
+    fn summary(self) -> String {
+        format!("{}({})", kind_name(self.kind_code), self.payload_len)
+    }
+}
+
+fn kind_code(kind: CollectiveKind) -> u8 {
+    match kind {
+        CollectiveKind::ReduceAll => 0,
+        CollectiveKind::Broadcast => 1,
+        CollectiveKind::Reduce => 2,
+        CollectiveKind::AllGather => 3,
+    }
+}
+
+fn kind_name(code: u8) -> &'static str {
+    match code {
+        0 => "ReduceAll",
+        1 => "Broadcast",
+        2 => "Reduce",
+        3 => "AllGather",
+        _ => "Unknown",
+    }
+}
+
+/// Schedule-checking decorator over any [`Transport`]. Disabled it is a
+/// transparent pass-through (one branch per call); enabled it validates
+/// the fleet-wide collective schedule call-by-call. Construction:
+/// [`Checked::from_env`] for the `DISCO_CHECKED` gate, [`Checked::new`]
+/// to force a mode (tests).
+pub struct Checked<T: Transport> {
+    inner: T,
+    enabled: bool,
+    /// Completed (validated + forwarded) collective calls on this rank.
+    calls: u64,
+    recent: VecDeque<RingEntry>,
+    /// Wire bytes spent on validation rounds, subtracted from
+    /// [`Transport::wire_bytes`] so the measured ledger matches an
+    /// unchecked run exactly.
+    validation_wire: u64,
+}
+
+impl<T: Transport> Checked<T> {
+    /// Wrap `inner`, checking only when `enabled`.
+    pub fn new(inner: T, enabled: bool) -> Checked<T> {
+        Checked {
+            inner,
+            enabled,
+            calls: 0,
+            recent: VecDeque::with_capacity(RING_CAP),
+            validation_wire: 0,
+        }
+    }
+
+    /// Wrap `inner`, enabled iff the `DISCO_CHECKED` environment variable
+    /// is `1`, `true`, or `on` — the one switch every integration driver
+    /// consults.
+    pub fn from_env(inner: T) -> Checked<T> {
+        let enabled = Self::env_enabled();
+        Checked::new(inner, enabled)
+    }
+
+    /// The `DISCO_CHECKED` gate, exposed so drivers can report the mode.
+    pub fn env_enabled() -> bool {
+        matches!(
+            std::env::var("DISCO_CHECKED").ok().as_deref(),
+            Some("1") | Some("true") | Some("on")
+        )
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Completed collective calls on this rank (0 when disabled).
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+
+    /// The wrapped transport (backend-specific surface: elastic
+    /// membership, rendezvous state, …).
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    /// Mutable access to the wrapped transport, for backend-specific
+    /// calls (`reform`, `join`, `depart`, …) that are not collectives.
+    pub fn inner_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+
+    /// AllGather every rank's descriptor as a free metric round and panic
+    /// with a named report on the first mismatch. The outcome's clocks are
+    /// discarded, so the priced timeline is untouched.
+    fn validate(&mut self, mine: Descriptor) {
+        let world = self.inner.world();
+        let rank = self.inner.rank();
+        let wire_before = self.inner.wire_bytes();
+        let out = self.inner.collective(
+            CollectiveKind::AllGather,
+            0,
+            0,
+            mine.to_words().to_vec(),
+            0.0,
+            true,
+        );
+        self.validation_wire += self.inner.wire_bytes() - wire_before;
+        let call = self.calls + 1;
+        if out.result.len() != DESC_WORDS * world {
+            // A short table means a peer's checker is not running the
+            // same protocol — itself a schedule divergence.
+            panic!(
+                "schedule-divergence at call #{call}: rank {rank} received a \
+                 {}-word descriptor table, expected {} ({} ranks)",
+                out.result.len(),
+                DESC_WORDS * world,
+                world
+            );
+        }
+        let table: Vec<Descriptor> = (0..world)
+            .map(|r| Descriptor::from_words(&out.result[r * DESC_WORDS..(r + 1) * DESC_WORDS]))
+            .collect();
+        let reference = table[0];
+        if let Some(r) = (1..world).find(|&r| table[r] != reference) {
+            panic!(
+                "{}",
+                self.divergence_report(call, rank, r, table[r], reference)
+            );
+        }
+    }
+
+    /// Every rank holds the same descriptor table, so this message is
+    /// bit-identical fleet-wide up to the rank-local ring tail.
+    fn divergence_report(
+        &self,
+        call: u64,
+        rank: usize,
+        divergent: usize,
+        got: Descriptor,
+        reference: Descriptor,
+    ) -> String {
+        let mut msg = format!(
+            "schedule-divergence at call #{call}: rank {divergent} issued {}, rank 0 issued {}",
+            got.summary(),
+            reference.summary()
+        );
+        let mut details = Vec::new();
+        if got.root != reference.root {
+            details.push(format!("root {} vs {}", got.root, reference.root));
+        }
+        if got.k_doubles != reference.k_doubles {
+            details.push(format!("priced {} vs {}", got.k_doubles, reference.k_doubles));
+        }
+        if got.metric != reference.metric {
+            details.push(format!("metric {} vs {}", got.metric, reference.metric));
+        }
+        if !details.is_empty() {
+            msg.push_str(&format!(" ({})", details.join(", ")));
+        }
+        if !self.recent.is_empty() {
+            let tail: Vec<String> = self
+                .recent
+                .iter()
+                .rev()
+                .take(RING_SHOWN)
+                .rev()
+                .map(|e| format!("#{} {}({})", e.call, kind_name(kind_code(e.kind)), e.count))
+                .collect();
+            msg.push_str(&format!(
+                "; last completed on rank {rank}: {}",
+                tail.join(", ")
+            ));
+        }
+        msg
+    }
+
+    fn record(&mut self, kind: CollectiveKind, count: usize) {
+        self.calls += 1;
+        if self.recent.len() == RING_CAP {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(RingEntry { call: self.calls, kind, count });
+    }
+}
+
+impl<T: Transport> Transport for Checked<T> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.inner.world()
+    }
+
+    fn collective(
+        &mut self,
+        kind: CollectiveKind,
+        root: usize,
+        k_doubles: usize,
+        payload: Vec<f64>,
+        arrival_clock: f64,
+        metric: bool,
+    ) -> CollectiveOutcome {
+        if self.enabled && self.inner.world() > 1 {
+            self.validate(Descriptor {
+                kind_code: kind_code(kind),
+                root,
+                k_doubles,
+                payload_len: payload.len(),
+                metric,
+            });
+            self.record(kind, payload.len());
+        }
+        self.inner
+            .collective(kind, root, k_doubles, payload, arrival_clock, metric)
+    }
+
+    fn wire_bytes(&self) -> u64 {
+        self.inner.wire_bytes() - self.validation_wire
+    }
+
+    fn global_stats(&self) -> Option<CommStats> {
+        self.inner.global_stats()
+    }
+
+    fn exchange_reports(&mut self, report: Vec<u8>) -> Option<Vec<Vec<u8>>> {
+        // Out-of-band and unpriced on every backend; not part of the
+        // collective schedule.
+        self.inner.exchange_reports(report)
+    }
+}

@@ -50,9 +50,11 @@
 //! counterpart to the priced α–β model. The frame layout itself is
 //! documented in [`tcp`].
 
+pub mod checked;
 pub mod shm;
 pub mod tcp;
 
+pub use checked::Checked;
 pub use shm::ShmTransport;
 pub use tcp::{ElasticOptions, ReformInfo, TcpOptions, TcpTransport};
 
