@@ -50,10 +50,11 @@ use crate::algorithms::{assemble, NodeOutput, RunResult};
 use crate::data::Dataset;
 use crate::net::transport::tcp::{ReformInfo, TcpTransport};
 use crate::net::{
-    ClusterRun, Collectives, CommStats, CtxState, EpochFault, FaultKind, NodeCtx, Trace, Transport,
+    Checked, ClusterRun, Collectives, CommStats, CtxState, EpochFault, FaultKind, NodeCtx, Trace,
+    Transport,
 };
 use crate::util::bytes::{put_f64, put_f64s, put_u32, put_u64, ByteReader};
-use std::collections::{HashSet, VecDeque};
+use std::collections::{BTreeSet, VecDeque};
 use std::io::Write;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::time::{Duration, Instant};
@@ -141,7 +142,7 @@ enum PlanOutcome {
 fn apply_plan_events<C: Collectives>(
     ctx: &mut C,
     plan: &FaultPlan,
-    fired: &mut HashSet<usize>,
+    fired: &mut BTreeSet<usize>,
     outer: usize,
     epoch: u64,
 ) -> PlanOutcome {
@@ -198,13 +199,13 @@ struct Bootstrap {
     stats: CommStats,
     cut_axis: Vec<f64>,
     bytes: Vec<u8>,
-    fired: HashSet<usize>,
+    fired: BTreeSet<usize>,
 }
 
 fn encode_bootstrap(
     agreed: i64,
     snaps: &VecDeque<BoundarySnap>,
-    fired: &HashSet<usize>,
+    fired: &BTreeSet<usize>,
 ) -> Result<Vec<u8>, String> {
     let snap = snaps
         .iter()
@@ -220,10 +221,9 @@ fn encode_bootstrap(
     put_f64s(&mut buf, &snap.cut_axis);
     put_u32(&mut buf, snap.bytes.len() as u32);
     buf.extend_from_slice(&snap.bytes);
-    let mut idxs: Vec<usize> = fired.iter().copied().collect();
-    idxs.sort_unstable();
-    put_u32(&mut buf, idxs.len() as u32);
-    for i in idxs {
+    // BTreeSet iterates in ascending order — the wire order is canonical.
+    put_u32(&mut buf, fired.len() as u32);
+    for &i in fired {
         put_u64(&mut buf, i as u64);
     }
     Ok(buf)
@@ -241,7 +241,7 @@ fn decode_bootstrap(bytes: &[u8]) -> Result<Bootstrap, String> {
     let nbytes = r.u32()? as usize;
     let payload = r.take(nbytes)?.to_vec();
     let nfired = r.u32()? as usize;
-    let mut fired = HashSet::with_capacity(nfired);
+    let mut fired = BTreeSet::new();
     for _ in 0..nfired {
         fired.insert(r.u64()? as usize);
     }
@@ -302,8 +302,8 @@ enum EpochEnd {
     Fault(EpochFault),
 }
 
-fn build_tcp_ctx(transport: TcpTransport, spec: &RunSpec) -> NodeCtx<TcpTransport> {
-    let mut ctx = NodeCtx::new(transport)
+fn build_tcp_ctx(transport: TcpTransport, spec: &RunSpec) -> NodeCtx<Checked<TcpTransport>> {
+    let mut ctx = NodeCtx::new(Checked::from_env(transport))
         .with_compute(spec.sim.compute)
         .with_trace(spec.sim.trace);
     if let Some(&speed) = spec.sim.speeds.get(ctx.rank) {
@@ -333,7 +333,7 @@ pub fn run_elastic_over_tcp(
     if let Err(e) = spec.validate() {
         panic!("invalid run spec: {e}");
     }
-    let wall = Instant::now();
+    let wall = Instant::now(); // lint: allow(wall-clock) — diagnostic wall_seconds only
     let mut ctx = build_tcp_ctx(transport, spec);
     let spec_now = spec.clone();
     let session = Session::new(&mut ctx, ds, &spec_now);
@@ -344,7 +344,7 @@ pub fn run_elastic_over_tcp(
         ds,
         spec,
         es,
-        HashSet::new(),
+        BTreeSet::new(),
         VecDeque::new(),
         wall,
     )
@@ -363,11 +363,11 @@ pub fn run_elastic_joiner(
     if let Err(e) = spec.validate() {
         panic!("invalid run spec: {e}");
     }
-    let wall = Instant::now();
+    let wall = Instant::now(); // lint: allow(wall-clock) — diagnostic wall_seconds only
     let mut ctx = build_tcp_ctx(transport, spec);
     let mut snaps = VecDeque::new();
     let (spec_now, session, fired) =
-        match bootstrap(&mut ctx, &info, None, ds, spec, &mut snaps, HashSet::new()) {
+        match bootstrap(&mut ctx, &info, None, ds, spec, &mut snaps, BTreeSet::new()) {
             Ok(v) => v,
             Err(e) => panic!("cluster node failed: rank {}: {e}", ctx.rank),
         };
@@ -380,13 +380,13 @@ pub fn run_elastic_joiner(
 
 #[allow(clippy::too_many_arguments)]
 fn elastic_tcp_loop(
-    mut ctx: NodeCtx<TcpTransport>,
-    mut session: Session<NodeCtx<TcpTransport>>,
+    mut ctx: NodeCtx<Checked<TcpTransport>>,
+    mut session: Session<NodeCtx<Checked<TcpTransport>>>,
     mut spec_now: RunSpec,
     ds: &Dataset,
     base: &RunSpec,
     es: &ElasticSpec,
-    mut fired: HashSet<usize>,
+    mut fired: BTreeSet<usize>,
     mut snaps: VecDeque<BoundarySnap>,
     wall: Instant,
 ) -> Option<RunResult> {
@@ -401,6 +401,7 @@ fn elastic_tcp_loop(
                 let old_rank = ctx.rank;
                 let info = ctx
                     .transport_mut()
+                    .inner_mut()
                     .reform(&fault)
                     .map_err(|e| format!("elastic: reform after [{fault}] failed: {e}"))?;
                 if info.world < es.min_world {
@@ -457,17 +458,17 @@ fn elastic_tcp_loop(
 /// epoch. Unplanned faults (a SIGKILLed peer, a socket deadline) surface
 /// as [`EpochFault`] panics out of the collectives; planned ones return.
 fn run_epoch(
-    ctx: &mut NodeCtx<TcpTransport>,
-    session: &mut Session<NodeCtx<TcpTransport>>,
+    ctx: &mut NodeCtx<Checked<TcpTransport>>,
+    session: &mut Session<NodeCtx<Checked<TcpTransport>>>,
     snaps: &mut VecDeque<BoundarySnap>,
-    fired: &mut HashSet<usize>,
+    fired: &mut BTreeSet<usize>,
     es: &ElasticSpec,
 ) -> EpochEnd {
     loop {
-        let join_pending = ctx.rank == 0 && ctx.transport_mut().pending_joiner();
+        let join_pending = ctx.rank == 0 && ctx.transport_mut().inner_mut().pending_joiner();
         let (snap, join) = take_boundary(ctx, session, join_pending);
         push_snap(snaps, snap);
-        let epoch = ctx.transport_mut().epoch();
+        let epoch = ctx.transport_mut().inner_mut().epoch();
         if join {
             return EpochEnd::Fault(EpochFault {
                 epoch,
@@ -478,7 +479,7 @@ fn run_epoch(
         }
         match apply_plan_events(ctx, &es.plan, fired, session.outer(), epoch) {
             PlanOutcome::Depart => {
-                ctx.transport_mut().depart();
+                ctx.transport_mut().inner_mut().depart();
                 return EpochEnd::Departed;
             }
             PlanOutcome::Fault(f) => return EpochEnd::Fault(f),
@@ -507,14 +508,14 @@ fn run_epoch(
 /// top of it, re-shard the boundary's cut-axis state, reposition the
 /// outer counter. `old_rank = None` marks a joiner.
 fn bootstrap(
-    ctx: &mut NodeCtx<TcpTransport>,
+    ctx: &mut NodeCtx<Checked<TcpTransport>>,
     info: &ReformInfo,
     old_rank: Option<usize>,
     ds: &Dataset,
     base: &RunSpec,
     snaps: &mut VecDeque<BoundarySnap>,
-    fired: HashSet<usize>,
-) -> Result<(RunSpec, Session<NodeCtx<TcpTransport>>, HashSet<usize>), String> {
+    fired: BTreeSet<usize>,
+) -> Result<(RunSpec, Session<NodeCtx<Checked<TcpTransport>>>, BTreeSet<usize>), String> {
     // The transport already renumbered us; mirror it into the context.
     ctx.rank = info.rank;
     ctx.m = info.world;
@@ -540,6 +541,7 @@ fn bootstrap(
     // snapshot at all (a fault before the first boundary) forces a fresh
     // restart over the new world (agreed = -1).
     let mut agreed = i64::MAX;
+    // lint: allow(uncosted-compute) — O(world) membership vote over a metric gather, not numeric work
     for i in 0..info.world {
         if table[3 * i] >= 0.0 {
             agreed = agreed.min(table[3 * i + 1] as i64);
@@ -647,7 +649,7 @@ enum ShmOutcome {
     Fault {
         snap: BoundarySnap,
         fault: EpochFault,
-        fired: HashSet<usize>,
+        fired: BTreeSet<usize>,
     },
     Departed,
 }
@@ -668,7 +670,7 @@ fn shm_epoch<C: Collectives>(
     es: &ElasticSpec,
     epoch: u64,
     slot: Option<&RestoreSlot>,
-    mut fired: HashSet<usize>,
+    mut fired: BTreeSet<usize>,
 ) -> ShmOutcome {
     match shm_epoch_inner(ctx, ds, spec_e, es, epoch, slot, &mut fired) {
         Ok(out) => out,
@@ -683,7 +685,7 @@ fn shm_epoch_inner<C: Collectives>(
     es: &ElasticSpec,
     epoch: u64,
     slot: Option<&RestoreSlot>,
-    fired: &mut HashSet<usize>,
+    fired: &mut BTreeSet<usize>,
 ) -> Result<ShmOutcome, String> {
     let mut session = match slot {
         None => Session::new(ctx, ds, spec_e),
@@ -745,11 +747,11 @@ pub fn run_spec_elastic(ds: &Dataset, spec: &RunSpec, es: &ElasticSpec) -> (RunR
     if let Err(e) = spec.validate() {
         panic!("invalid run spec: {e}");
     }
-    let wall = Instant::now();
+    let wall = Instant::now(); // lint: allow(wall-clock) — diagnostic wall_seconds only
     let mut world = spec.sim.m;
     let mut speeds = spec.sim.speeds.clone();
     let mut restore: Option<Vec<RestoreSlot>> = None;
-    let mut fired: HashSet<usize> = HashSet::new();
+    let mut fired: BTreeSet<usize> = BTreeSet::new();
     let mut global_seed: Option<CommStats> = None;
     let mut recoveries = 0usize;
     let mut epoch: u64 = 1;
@@ -935,7 +937,7 @@ mod tests {
         };
         let mut snaps = VecDeque::new();
         snaps.push_back(snap);
-        let fired: HashSet<usize> = [3usize, 1].into_iter().collect();
+        let fired: BTreeSet<usize> = [3usize, 1].into_iter().collect();
         let blob = encode_bootstrap(5, &snaps, &fired).unwrap();
         let boot = decode_bootstrap(&blob).unwrap();
         assert_eq!(boot.outer, 5);
