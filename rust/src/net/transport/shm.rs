@@ -21,7 +21,25 @@
 use crate::net::cost::{CollectiveKind, CostModel};
 use crate::net::stats::CommStats;
 use crate::net::transport::{combine, CollectiveOutcome, Transport};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
+#[cfg(not(loom))]
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+// Under `--cfg loom` the barrier's primitives come from loom, whose model
+// checker explores every interleaving of `wait`/`poison` (see the
+// `loom_tests` module and the CI `loom` job). Only the barrier swaps:
+// `Arc` stays std so the blackboard handle type is unchanged.
+#[cfg(loom)]
+use loom::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(loom)]
+use std::sync::PoisonError;
+
+/// Poison-tolerant lock. A rank that panics mid-collective leaves the std
+/// mutex poisoned, but failure propagation is the [`AbortBarrier`]'s job
+/// (`poison` + `PeerAbort`): survivors must reach the barrier to unwind
+/// cleanly, not die on a second uncontrolled panic inside the transport.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Marker payload for the panic that tears down peers after another node
 /// failed; [`crate::net::Cluster::run`] recognizes it and keeps only the
@@ -62,7 +80,7 @@ impl AbortBarrier {
     /// Block until all `n` threads arrive. `Ok(true)` for exactly one
     /// thread per generation (the leader — the last arriver).
     fn wait(&self) -> Result<bool, Aborted> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_ignore_poison(&self.state);
         if st.poisoned {
             return Err(Aborted);
         }
@@ -75,7 +93,7 @@ impl AbortBarrier {
             return Ok(true);
         }
         while st.generation == gen && !st.poisoned {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         if st.poisoned {
             return Err(Aborted);
@@ -85,7 +103,7 @@ impl AbortBarrier {
 
     /// Mark the barrier dead and wake every waiter.
     fn poison(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_ignore_poison(&self.state);
         st.poisoned = true;
         self.cv.notify_all();
     }
@@ -152,19 +170,19 @@ impl Blackboard {
     /// Record the first failure (later ones are dropped — peers unwinding
     /// on `PeerAbort` are secondary).
     pub fn record_failure(&self, rank: usize, msg: String) {
-        let mut failed = self.failed.lock().unwrap();
+        let mut failed = lock_ignore_poison(&self.failed);
         if failed.is_none() {
             *failed = Some(format!("rank {rank}: {msg}"));
         }
     }
 
     pub fn take_failure(&self) -> Option<String> {
-        self.failed.lock().unwrap().take()
+        lock_ignore_poison(&self.failed).take()
     }
 
     /// Snapshot of the globally recorded communication statistics.
     pub fn stats_snapshot(&self) -> CommStats {
-        self.stats.lock().unwrap().clone()
+        lock_ignore_poison(&self.stats).clone()
     }
 
     /// Seed the global ledger with a restored snapshot (session resume).
@@ -174,7 +192,7 @@ impl Blackboard {
     /// is order-sensitive — re-summing a prefix separately would drift in
     /// the low bits).
     pub fn seed_stats(&self, stats: CommStats) {
-        *self.stats.lock().unwrap() = stats;
+        *lock_ignore_poison(&self.stats) = stats;
     }
 }
 
@@ -211,7 +229,7 @@ impl Transport for ShmTransport {
     ) -> CollectiveOutcome {
         let board = &*self.board;
         {
-            let mut s = board.slots.lock().unwrap();
+            let mut s = lock_ignore_poison(&board.slots);
             s.contribs[self.rank] = payload;
             s.clocks[self.rank] = arrival_clock;
         }
@@ -220,7 +238,7 @@ impl Transport for ShmTransport {
             Err(Aborted) => peer_abort(),
         };
         if leader {
-            let mut s = board.slots.lock().unwrap();
+            let mut s = lock_ignore_poison(&board.slots);
             let comm_start = s.clocks.iter().cloned().fold(0.0, f64::max);
             // AllGather contributions may be ragged; price the true summed
             // size rather than any single rank's guess — the leader is an
@@ -242,13 +260,13 @@ impl Transport for ShmTransport {
             let result = combine(kind, root, &s.contribs);
             s.result = result;
             if !metric {
-                board.stats.lock().unwrap().record(kind, k_eff, t_comm);
+                lock_ignore_poison(&board.stats).record(kind, k_eff, t_comm);
             }
         }
         if board.barrier_b.wait().is_err() {
             peer_abort();
         }
-        let s = board.slots.lock().unwrap();
+        let s = lock_ignore_poison(&board.slots);
         CollectiveOutcome {
             result: s.result.clone(),
             comm_start: s.comm_start,
@@ -267,13 +285,13 @@ impl Transport for ShmTransport {
     fn exchange_reports(&mut self, report: Vec<u8>) -> Option<Vec<Vec<u8>>> {
         let board = &*self.board;
         {
-            board.reports.lock().unwrap()[self.rank] = report;
+            lock_ignore_poison(&board.reports)[self.rank] = report;
         }
         if board.barrier_a.wait().is_err() {
             peer_abort();
         }
         let out = if self.rank == 0 {
-            Some(board.reports.lock().unwrap().clone())
+            Some(lock_ignore_poison(&board.reports).clone())
         } else {
             None
         };
@@ -281,5 +299,68 @@ impl Transport for ShmTransport {
             peer_abort();
         }
         out
+    }
+}
+
+/// Loom model-checks of the abortable barrier: every interleaving of
+/// `wait` against `poison` and of barrier-generation reuse. Compiled only
+/// under `RUSTFLAGS="--cfg loom"` with the loom crate added by the CI
+/// `loom` job (the committed manifest stays dependency-free); run with
+/// `cargo test --lib loom_`.
+#[cfg(loom)]
+mod loom_tests {
+    use super::{AbortBarrier, Aborted};
+    use loom::sync::Arc;
+    use loom::thread;
+
+    #[test]
+    fn loom_poison_always_releases_a_lone_waiter() {
+        loom::model(|| {
+            let b = Arc::new(AbortBarrier::new(2));
+            let b2 = Arc::clone(&b);
+            let waiter = thread::spawn(move || b2.wait().is_err());
+            // With only one of two parties arriving, the waiter can never
+            // complete a generation: poison must wake it in every
+            // interleaving (arrive-then-poison and poison-then-arrive).
+            b.poison();
+            assert!(waiter.join().unwrap(), "waiter survived a poisoned barrier");
+        });
+    }
+
+    #[test]
+    fn loom_full_generation_elects_exactly_one_leader() {
+        loom::model(|| {
+            let b = Arc::new(AbortBarrier::new(2));
+            let b2 = Arc::clone(&b);
+            let other = thread::spawn(move || b2.wait());
+            let mine = b.wait();
+            let theirs = other.join().unwrap();
+            let leaders = [&mine, &theirs]
+                .iter()
+                .filter(|r| matches!(r, Ok(true)))
+                .count();
+            assert!(mine.is_ok() && theirs.is_ok());
+            assert_eq!(leaders, 1, "exactly one thread per generation leads");
+        });
+    }
+
+    #[test]
+    fn loom_generation_reuse_then_poison() {
+        loom::model(|| {
+            let b = Arc::new(AbortBarrier::new(2));
+            let b2 = Arc::clone(&b);
+            let other = thread::spawn(move || {
+                let first = b2.wait();
+                let second = b2.wait();
+                (first, second)
+            });
+            let first = b.wait();
+            // First generation completed on both sides; the peer is now
+            // alone in generation two when the poison lands.
+            b.poison();
+            let (peer_first, peer_second) = other.join().unwrap();
+            assert!(first.is_ok() && peer_first.is_ok());
+            assert!(matches!(peer_second, Err(Aborted)));
+        });
     }
 }

@@ -588,7 +588,10 @@ impl TcpTransport {
             put_u16(&mut table, *port);
         }
         for r in 1..opts.world {
-            let s = peers[r].as_mut().expect("all workers present");
+            let s = match peers[r].as_mut() {
+                Some(s) => s,
+                None => fail(0, format!("rendezvous bookkeeping lost rank {r}'s socket")),
+            };
             wire += write_frame(s, TAG_WELCOME, FIRST_EPOCH, 0, &table, 0, &format!("rank {r}"));
         }
         TcpTransport {
@@ -956,11 +959,15 @@ impl TcpTransport {
         for s in self.peers.iter_mut() {
             *s = None;
         }
-        let est = self.elastic.as_mut().expect("reform_root requires elastic state");
+        let Some(est) = self.elastic.as_mut() else {
+            return Err("reform on a non-elastic transport (no rendezvous state)".to_string());
+        };
         let timeout = est.timeout;
         let (rejoin_window, min_world) = (est.opts.rejoin_window, est.opts.min_world);
         let mut joiners: Vec<(TcpStream, u16)> = std::mem::take(&mut est.parked);
-        let listener = est.listener.as_ref().expect("rank 0 keeps the rendezvous listener");
+        let Some(listener) = est.listener.as_ref() else {
+            return Err("reform on rank 0 without the rendezvous listener".to_string());
+        };
         let listener = match listener.try_clone() {
             Ok(l) => l,
             Err(e) => return Err(format!("rendezvous listener clone failed: {e}")),
@@ -1074,7 +1081,9 @@ impl TcpTransport {
         for s in self.peers.iter_mut() {
             *s = None;
         }
-        let est = self.elastic.as_ref().expect("reform_worker requires elastic state");
+        let Some(est) = self.elastic.as_ref() else {
+            return Err("reform on a non-elastic transport (no rendezvous state)".to_string());
+        };
         let timeout = est.timeout;
         let (rejoin_window, backoff_base, seed) =
             (est.opts.rejoin_window, est.opts.backoff, est.opts.seed);
@@ -1238,7 +1247,10 @@ impl TcpTransport {
         let mut cur = rank;
         for _step in 0..world - 1 {
             let frame = {
-                let (clock, data) = blocks[cur].as_ref().expect("current block present");
+                let (clock, data) = match blocks[cur].as_ref() {
+                    Some(b) => b,
+                    None => fail(rank, format!("ring desync: block {cur} missing at send")),
+                };
                 let mut f = Vec::with_capacity(16 + 8 * data.len());
                 put_u32(&mut f, cur as u32);
                 put_f64(&mut f, *clock);
@@ -1280,14 +1292,18 @@ impl TcpTransport {
         let mut comm_start = 0.0f64;
         let mut k_eff = 0usize;
         let mut result = Vec::new();
-        for b in &blocks {
-            let (clock, data) = b.as_ref().expect("ring completed");
+        for (o, b) in blocks.iter().enumerate() {
+            let (clock, data) = match b.as_ref() {
+                Some(b) => b,
+                None => fail(rank, format!("ring incomplete: block {o} never arrived")),
+            };
             comm_start = comm_start.max(*clock);
             k_eff += data.len();
         }
         result.reserve(k_eff);
-        for b in &blocks {
-            result.extend_from_slice(&b.as_ref().expect("ring completed").1);
+        // Every block was just verified present.
+        for (_, data) in blocks.iter().flatten() {
+            result.extend_from_slice(data);
         }
         let t_comm = if metric {
             0.0
