@@ -1,0 +1,63 @@
+//! disco-lint — determinism & collective-schedule static analysis.
+//!
+//! Usage:
+//!   disco-lint [--root <dir>] [--list-rules]
+//!
+//! Walks `<dir>` (default `rust/src`) for `.rs` files, applies every rule
+//! in [`disco::lint`], prints violations as `path:line:col: rule: message`
+//! (sorted — the output is diffable run to run), and exits nonzero when
+//! any are found. The runtime half of the contract (`schedule-divergence`)
+//! runs under `DISCO_CHECKED=1`; `--list-rules` documents both halves.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use disco::lint;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from("rust/src");
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("disco-lint: --root requires a directory");
+                    return ExitCode::from(2);
+                }
+            },
+            "--list-rules" => {
+                for (name, doc) in lint::RULES {
+                    println!("{name:<20} {doc}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => {
+                println!("usage: disco-lint [--root <dir>] [--list-rules]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("disco-lint: unknown argument {other:?} (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let violations = match lint::lint_tree(&root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("disco-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        println!("disco-lint: clean ({} rules)", lint::RULES.len());
+        ExitCode::SUCCESS
+    } else {
+        println!("disco-lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}

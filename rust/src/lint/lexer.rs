@@ -1,0 +1,385 @@
+//! A minimal Rust lexer for `disco-lint`.
+//!
+//! The crate deliberately carries zero dependencies, so there is no `syn`
+//! here: this is a hand-rolled token scanner that understands exactly as
+//! much Rust surface syntax as the rules need — comments (line, nested
+//! block), string/char/byte/raw-string literals, lifetimes, numeric
+//! literals with suffixes and exponents, identifiers, and single-char
+//! punctuation. Everything the rules match on (identifier sequences,
+//! float literals, brace structure) survives; everything else is noise
+//! the rules ignore.
+//!
+//! Line comments are additionally scanned for suppression directives:
+//!
+//! ```text
+//! // lint: allow(rule-name)            — this line and the next
+//! // lint: allow(rule-a, rule-b)       — several rules at once
+//! // lint: allow-file(rule-name)       — the whole file
+//! ```
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Token classes. Keywords are `Ident`s — the parser layer decides what
+/// is a keyword by spelling, which is all the rules need.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Lifetime,
+    /// Numeric literal. `float` is true for `1.0`, `1.`, `1e3`, `1f64` …;
+    /// `suffix` is the trailing type suffix (`"f32"`, `"u64"`, `""`).
+    Number { float: bool, suffix: String },
+    /// Any string, char, or byte literal (contents irrelevant to rules).
+    Str,
+    /// One punctuation character (`::` arrives as two `Punct(':')`).
+    Punct(char),
+}
+
+/// One token with its 1-based source position.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+    pub col: usize,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct(c)
+    }
+}
+
+/// Per-file suppression state collected from `// lint:` directives.
+#[derive(Debug, Default)]
+pub struct Allows {
+    file: BTreeSet<String>,
+    lines: BTreeMap<usize, BTreeSet<String>>,
+}
+
+impl Allows {
+    /// Is `rule` suppressed at `line` (same-line or preceding-line
+    /// comment, or a file-wide directive)?
+    pub fn allowed(&self, rule: &str, line: usize) -> bool {
+        self.file.contains(rule)
+            || self
+                .lines
+                .get(&line)
+                .is_some_and(|rules| rules.contains(rule))
+    }
+
+    fn add_line(&mut self, line: usize, rule: &str) {
+        // The directive covers its own line (trailing comment) and the
+        // next (comment above the flagged code).
+        self.lines.entry(line).or_default().insert(rule.to_string());
+        self.lines.entry(line + 1).or_default().insert(rule.to_string());
+    }
+
+    fn parse_comment(&mut self, line: usize, text: &str) {
+        let Some(pos) = text.find("lint:") else { return };
+        let rest = text[pos + 5..].trim_start();
+        let (file_wide, rest) = if let Some(r) = rest.strip_prefix("allow-file(") {
+            (true, r)
+        } else if let Some(r) = rest.strip_prefix("allow(") {
+            (false, r)
+        } else {
+            return;
+        };
+        let Some(close) = rest.find(')') else { return };
+        for rule in rest[..close].split(',') {
+            let rule = rule.trim();
+            if rule.is_empty() {
+                continue;
+            }
+            if file_wide {
+                self.file.insert(rule.to_string());
+            } else {
+                self.add_line(line, rule);
+            }
+        }
+    }
+}
+
+/// Lexed file: the token stream plus the suppression directives.
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Allows,
+}
+
+struct Cursor<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: usize,
+    col: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.src.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.src.get(self.pos).copied()?;
+        self.pos += 1;
+        if b == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(b)
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_' || b >= 0x80
+}
+
+fn is_ident_continue(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+/// Tokenize `src`. Unterminated constructs (possible only on a file that
+/// `rustc` would reject anyway) terminate at end of input rather than
+/// erroring: a linter must never be the tool that fails first.
+pub fn lex(src: &str) -> Lexed {
+    let mut c = Cursor { src: src.as_bytes(), pos: 0, line: 1, col: 1 };
+    let mut toks = Vec::new();
+    let mut allows = Allows::default();
+
+    while let Some(b) = c.peek(0) {
+        let (line, col) = (c.line, c.col);
+        match b {
+            b' ' | b'\t' | b'\r' | b'\n' => {
+                c.bump();
+            }
+            b'/' if c.peek(1) == Some(b'/') => {
+                let start = c.pos + 2;
+                while c.peek(0).is_some_and(|b| b != b'\n') {
+                    c.bump();
+                }
+                let text = std::str::from_utf8(&c.src[start..c.pos]).unwrap_or("");
+                allows.parse_comment(line, text);
+            }
+            b'/' if c.peek(1) == Some(b'*') => {
+                c.bump();
+                c.bump();
+                let mut depth = 1usize;
+                while depth > 0 {
+                    match (c.peek(0), c.peek(1)) {
+                        (Some(b'/'), Some(b'*')) => {
+                            c.bump();
+                            c.bump();
+                            depth += 1;
+                        }
+                        (Some(b'*'), Some(b'/')) => {
+                            c.bump();
+                            c.bump();
+                            depth -= 1;
+                        }
+                        (Some(_), _) => {
+                            c.bump();
+                        }
+                        (None, _) => break,
+                    }
+                }
+            }
+            b'"' => {
+                lex_cooked_string(&mut c);
+                toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+            }
+            b'\'' => {
+                lex_quote(&mut c, &mut toks, line, col);
+            }
+            _ if b.is_ascii_digit() => {
+                let tok = lex_number(&mut c, line, col);
+                toks.push(tok);
+            }
+            _ if is_ident_start(b) => {
+                let start = c.pos;
+                while c.peek(0).is_some_and(is_ident_continue) {
+                    c.bump();
+                }
+                let text = std::str::from_utf8(&c.src[start..c.pos]).unwrap_or("").to_string();
+                // String prefixes: r"…", r#"…"#, b"…", br#"…"#.
+                let raw_follows = matches!(c.peek(0), Some(b'"') | Some(b'#'));
+                if raw_follows && matches!(text.as_str(), "r" | "br" | "rb") {
+                    lex_raw_string(&mut c);
+                    toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+                } else if c.peek(0) == Some(b'"') && text == "b" {
+                    c.bump();
+                    lex_cooked_string_tail(&mut c);
+                    toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+                } else {
+                    toks.push(Tok { kind: TokKind::Ident, text, line, col });
+                }
+            }
+            _ => {
+                c.bump();
+                toks.push(Tok {
+                    kind: TokKind::Punct(b as char),
+                    text: (b as char).to_string(),
+                    line,
+                    col,
+                });
+            }
+        }
+    }
+    Lexed { toks, allows }
+}
+
+/// Consume a `"…"` literal starting at the opening quote.
+fn lex_cooked_string(c: &mut Cursor) {
+    c.bump(); // opening quote
+    lex_cooked_string_tail(c);
+}
+
+/// Consume the remainder of a `"…"` literal after the opening quote.
+fn lex_cooked_string_tail(c: &mut Cursor) {
+    while let Some(b) = c.peek(0) {
+        match b {
+            b'\\' => {
+                c.bump();
+                c.bump();
+            }
+            b'"' => {
+                c.bump();
+                return;
+            }
+            _ => {
+                c.bump();
+            }
+        }
+    }
+}
+
+/// Consume `r"…"` / `r#"…"#` (any `#` count); cursor sits after the
+/// `r`/`br` prefix.
+fn lex_raw_string(c: &mut Cursor) {
+    let mut hashes = 0usize;
+    while c.peek(0) == Some(b'#') {
+        c.bump();
+        hashes += 1;
+    }
+    if c.peek(0) != Some(b'"') {
+        return; // `r#` in attribute position (raw ident) — not a string
+    }
+    c.bump();
+    'scan: while let Some(b) = c.bump() {
+        if b == b'"' {
+            for i in 0..hashes {
+                if c.peek(i) != Some(b'#') {
+                    continue 'scan;
+                }
+            }
+            for _ in 0..hashes {
+                c.bump();
+            }
+            return;
+        }
+    }
+}
+
+/// Disambiguate `'a'` (char literal) from `'a` (lifetime) at a `'`.
+fn lex_quote(c: &mut Cursor, toks: &mut Vec<Tok>, line: usize, col: usize) {
+    c.bump(); // the quote
+    match c.peek(0) {
+        Some(b'\\') => {
+            // Escaped char literal: skip the escape, then run to the
+            // closing quote (covers \n, \', \u{…}).
+            c.bump();
+            c.bump();
+            while c.peek(0).is_some_and(|b| b != b'\'') {
+                c.bump();
+            }
+            c.bump();
+            toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+        }
+        Some(b) if c.peek(1) == Some(b'\'') => {
+            // 'x' — one char then the closing quote.
+            let _ = b;
+            c.bump();
+            c.bump();
+            toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+        }
+        Some(b) if is_ident_start(b) => {
+            let start = c.pos;
+            while c.peek(0).is_some_and(is_ident_continue) {
+                c.bump();
+            }
+            let text = std::str::from_utf8(&c.src[start..c.pos]).unwrap_or("").to_string();
+            toks.push(Tok { kind: TokKind::Lifetime, text, line, col });
+        }
+        _ => {
+            toks.push(Tok { kind: TokKind::Punct('\''), text: "'".into(), line, col });
+        }
+    }
+}
+
+fn lex_number(c: &mut Cursor, line: usize, col: usize) -> Tok {
+    let start = c.pos;
+    let mut float = false;
+    if c.peek(0) == Some(b'0') && matches!(c.peek(1), Some(b'x') | Some(b'o') | Some(b'b')) {
+        c.bump();
+        c.bump();
+        while c.peek(0).is_some_and(|b| b.is_ascii_hexdigit() || b == b'_') {
+            c.bump();
+        }
+    } else {
+        while c.peek(0).is_some_and(|b| b.is_ascii_digit() || b == b'_') {
+            c.bump();
+        }
+        // Fractional part: `1.25`, or trailing-dot `1.` when the dot is
+        // not a range (`0..n`) or a method/field access (`1.max`).
+        if c.peek(0) == Some(b'.') {
+            match c.peek(1) {
+                Some(d) if d.is_ascii_digit() => {
+                    float = true;
+                    c.bump();
+                    while c.peek(0).is_some_and(|b| b.is_ascii_digit() || b == b'_') {
+                        c.bump();
+                    }
+                }
+                Some(b'.') => {}
+                Some(d) if is_ident_start(d) => {}
+                _ => {
+                    float = true;
+                    c.bump();
+                }
+            }
+        }
+        // Exponent.
+        if matches!(c.peek(0), Some(b'e') | Some(b'E')) {
+            let (a, b2) = (c.peek(1), c.peek(2));
+            let exp = match a {
+                Some(d) if d.is_ascii_digit() => true,
+                Some(b'+') | Some(b'-') => b2.is_some_and(|d| d.is_ascii_digit()),
+                _ => false,
+            };
+            if exp {
+                float = true;
+                c.bump(); // e
+                if matches!(c.peek(0), Some(b'+') | Some(b'-')) {
+                    c.bump();
+                }
+                while c.peek(0).is_some_and(|b| b.is_ascii_digit() || b == b'_') {
+                    c.bump();
+                }
+            }
+        }
+    }
+    // Type suffix (`f64`, `u32`, `usize`, …).
+    let suffix_start = c.pos;
+    while c.peek(0).is_some_and(is_ident_continue) {
+        c.bump();
+    }
+    let suffix = std::str::from_utf8(&c.src[suffix_start..c.pos]).unwrap_or("").to_string();
+    if suffix == "f32" || suffix == "f64" {
+        float = true;
+    }
+    let text = std::str::from_utf8(&c.src[start..c.pos]).unwrap_or("").to_string();
+    Tok { kind: TokKind::Number { float, suffix }, text, line, col }
+}

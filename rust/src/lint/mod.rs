@@ -1,0 +1,274 @@
+//! disco-lint: the determinism & collective-schedule analysis pass.
+//!
+//! The repo's core guarantee — a seeded run is bit-identical across the
+//! simulator, the shm thread cluster, and a real TCP fleet — is easy to
+//! break with one innocent-looking line: an `Instant::now()` in an
+//! algorithm, a `HashMap` iteration feeding a serializer, an unwrap on a
+//! socket path that turns a peer failure into a silent hang. This module
+//! is a small static analyzer (hand-rolled lexer + span pass; the crate
+//! is dependency-free, so no `syn`) that enforces those invariants as
+//! CI-fatal rules, plus the documentation anchor for the runtime
+//! `schedule-divergence` checker ([`crate::net::Checked`]).
+//!
+//! Rules (static):
+//!
+//! * `wall-clock` — `Instant::now()`/`SystemTime::now()` outside the
+//!   transport/chaos whitelist.
+//! * `transport-unwrap` — `.unwrap()`/`.expect()` under `net/transport/`.
+//! * `hash-iter` — `HashMap`/`HashSet` in numeric/pricing code.
+//! * `unseeded-rng` — `thread_rng`/`rand::random`/entropy-seeded RNGs.
+//! * `f32-literal` — `f32` in the f64 numeric spine.
+//! * `uncosted-compute` — floating-point loops in `algorithms/` not
+//!   reachable through `ctx.compute*` (call-graph approximation).
+//!
+//! Runtime (documented here, enforced by [`crate::net::Checked`]):
+//!
+//! * `schedule-divergence` — ranks issuing different collective
+//!   sequences, caught *before* the mismatched collective deadlocks.
+//!
+//! Suppression: `// lint: allow(<rule>) — why` on the offending line or
+//! the line above; `// lint: allow-file(<rule>)` anywhere in a file for
+//! the whole file. Items under `#[test]`/`#[cfg(test)]`/`#[cfg(loom)]`
+//! are exempt from all rules.
+//!
+//! Run it as `cargo run --bin disco-lint` (CI does, and fails on any
+//! violation).
+
+pub mod lexer;
+pub mod parse;
+pub mod rules;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use rules::SourceFile;
+
+/// One rule hit: `path:line:col: rule: message`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    /// Path relative to the walk root, `/`-separated.
+    pub path: String,
+    pub line: usize,
+    pub col: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}:{}: {}: {}",
+            self.path, self.line, self.col, self.rule, self.message
+        )
+    }
+}
+
+/// The rule table (`disco-lint --list-rules`). `schedule-divergence` is
+/// the runtime half — listed so the tool documents the full contract.
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "wall-clock",
+        "Instant::now()/SystemTime::now() outside net/transport, cluster, timer/bench, runtime, bin",
+    ),
+    (
+        "transport-unwrap",
+        "unwrap()/expect() on net/transport/ socket paths (must map to fail()/FrameError)",
+    ),
+    (
+        "hash-iter",
+        "HashMap/HashSet in numeric or pricing code (nondeterministic iteration order)",
+    ),
+    (
+        "unseeded-rng",
+        "thread_rng/rand::random/entropy-seeded RNGs (all draws must use the seeded streams)",
+    ),
+    (
+        "f32-literal",
+        "f32 types or literals in the f64 numeric spine (runtime/ is the f32 boundary)",
+    ),
+    (
+        "uncosted-compute",
+        "floating-point loop in algorithms/ not priced through ctx.compute* (call-graph approx.)",
+    ),
+    (
+        "schedule-divergence",
+        "runtime: ranks issued different collective sequences (enforced by net::Checked, DISCO_CHECKED=1)",
+    ),
+];
+
+/// Lex + parse one source buffer into the form the rules consume.
+/// `path` must already be root-relative and `/`-separated.
+pub fn load_source(path: &str, src: &str) -> SourceFile {
+    let lexed = lexer::lex(src);
+    let info = parse::parse(&lexed.toks);
+    SourceFile {
+        path: path.to_string(),
+        toks: lexed.toks,
+        allows: lexed.allows,
+        info,
+    }
+}
+
+/// Walk `root` for `.rs` files (sorted, so output order is deterministic)
+/// and return every violation. I/O errors surface as `Err` rather than
+/// silently shrinking the tree being checked.
+pub fn lint_tree(root: &Path) -> Result<Vec<Violation>, String> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let src = std::fs::read_to_string(p)
+            .map_err(|e| format!("read {}: {e}", p.display()))?;
+        files.push(load_source(&rel_path(root, p), &src));
+    }
+    Ok(lint_files(&files))
+}
+
+/// Rule pass over pre-loaded sources (the tests feed fixtures directly).
+pub fn lint_files(files: &[SourceFile]) -> Vec<Violation> {
+    let costed = rules::build_costed_fns(files);
+    let mut out = Vec::new();
+    for f in files {
+        out.extend(rules::check_file(f, &costed));
+    }
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|ext| ext == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    let rel = p.strip_prefix(root).unwrap_or(p);
+    let parts: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    parts.join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn violation_formats_as_grep_line() {
+        let v = Violation {
+            path: "algorithms/x.rs".into(),
+            line: 3,
+            col: 7,
+            rule: "wall-clock",
+            message: "nope".into(),
+        };
+        assert_eq!(v.to_string(), "algorithms/x.rs:3:7: wall-clock: nope");
+    }
+
+    #[test]
+    fn rules_table_names_are_unique_and_kebab() {
+        let mut seen = std::collections::BTreeSet::new();
+        for (name, doc) in RULES {
+            assert!(seen.insert(*name), "duplicate rule {name}");
+            assert!(
+                name.chars().all(|c| c.is_ascii_lowercase() || c == '-' || c.is_ascii_digit()),
+                "rule {name} is not kebab-case"
+            );
+            assert!(!doc.is_empty());
+        }
+    }
+
+    #[test]
+    fn clean_source_has_no_violations() {
+        let f = load_source(
+            "algorithms/clean.rs",
+            "pub fn grad(xs: &[f64]) -> f64 {\n    xs.iter().sum::<f64>() * 0.5\n}\n",
+        );
+        assert!(lint_files(&[f]).is_empty());
+    }
+
+    #[test]
+    fn allow_comment_suppresses_on_same_and_next_line() {
+        let src = "\
+fn t() {
+    // lint: allow(hash-iter) — tracked set, never iterated
+    let x: HashMap<u32, u32> = HashMap::new();
+    let _ = x;
+}
+";
+        let f = load_source("algorithms/a.rs", src);
+        // Directive covers its own line and the next — the second
+        // `HashMap` (same line 3) is covered too.
+        assert!(lint_files(&[f]).is_empty());
+        let src_noallow =
+            src.replace("// lint: allow(hash-iter) — tracked set, never iterated", "");
+        let f = load_source("algorithms/a.rs", &src_noallow);
+        assert_eq!(lint_files(&[f]).len(), 2);
+    }
+
+    #[test]
+    fn test_items_are_exempt() {
+        let src = "\
+#[cfg(test)]
+mod tests {
+    fn helper() {
+        let _ = std::time::Instant::now();
+    }
+}
+";
+        let f = load_source("algorithms/a.rs", src);
+        assert!(lint_files(&[f]).is_empty());
+    }
+
+    #[test]
+    fn cfg_not_test_is_still_linted() {
+        let src = "\
+#[cfg(not(test))]
+fn prod() {
+    let _ = Instant::now();
+}
+";
+        let f = load_source("algorithms/a.rs", src);
+        let v = lint_files(&[f]);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "wall-clock");
+    }
+
+    #[test]
+    fn costed_fn_exempts_its_loops() {
+        // `inner_kernel` is only ever called inside a compute span, so its
+        // float loop is priced and must not flag; `rogue` is called from
+        // plain driver code and must flag.
+        let src = "\
+fn inner_kernel(xs: &mut [f64]) {
+    for x in xs.iter_mut() {
+        *x *= 0.5;
+    }
+}
+fn rogue(xs: &mut [f64]) {
+    for x in xs.iter_mut() {
+        *x *= 0.5;
+    }
+}
+fn driver(ctx: &mut Ctx, xs: &mut [f64]) {
+    ctx.compute_costed(1.0, |_| inner_kernel(xs));
+    rogue(xs);
+}
+";
+        let f = load_source("algorithms/a.rs", src);
+        let v = lint_files(&[f]);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "uncosted-compute");
+        assert_eq!(v[0].line, 7);
+    }
+}

@@ -1,0 +1,262 @@
+//! Structural pass over the token stream: spans the rules scope by.
+//!
+//! Nothing here builds a real AST. The rules only need to answer span
+//! questions — "is this token inside a `#[cfg(test)]` item?", "is this
+//! loop body inside a `ctx.compute_costed(..)` argument list?", "which
+//! `fn` encloses this index?" — so this pass records brace-matched token
+//! ranges for: test/loom items, `fn` bodies, `.compute*(…)` argument
+//! lists, `for`/`while`/`loop` bodies, and name-call sites (the input to
+//! the call-graph approximation in [`crate::lint::rules`]).
+
+use crate::lint::lexer::{Tok, TokKind};
+
+/// Inclusive token-index range.
+pub type Span = (usize, usize);
+
+/// A `fn` item: its name, the index of the `fn` keyword, and the body
+/// brace span (functions without bodies — trait method declarations —
+/// are not recorded).
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    pub kw: usize,
+    pub body: Span,
+}
+
+/// A `for`/`while`/`loop` with its body brace span.
+#[derive(Clone, Debug)]
+pub struct LoopSpan {
+    pub kw: usize,
+    pub body: Span,
+}
+
+/// A call site `name(` / `.name(` — the raw material of the call graph.
+#[derive(Clone, Debug)]
+pub struct CallSite {
+    pub name: String,
+    pub idx: usize,
+}
+
+/// Everything the rules need to know about one file's structure.
+#[derive(Debug, Default)]
+pub struct FileInfo {
+    /// Items under `#[test]`, `#[cfg(test)]`, or `#[cfg(loom)]` (and any
+    /// `cfg` whose arguments mention `test`/`loom` without `not`):
+    /// exempt from every rule.
+    pub test_spans: Vec<Span>,
+    pub fns: Vec<FnSpan>,
+    /// Argument-list spans of `.compute*(…)` calls — work inside these is
+    /// priced by the modeled clock.
+    pub compute_spans: Vec<Span>,
+    pub loops: Vec<LoopSpan>,
+    pub calls: Vec<CallSite>,
+}
+
+impl FileInfo {
+    pub fn in_test(&self, idx: usize) -> bool {
+        span_contains(&self.test_spans, idx)
+    }
+
+    pub fn in_compute(&self, idx: usize) -> bool {
+        span_contains(&self.compute_spans, idx)
+    }
+
+    /// Innermost enclosing `fn` body, if any.
+    pub fn enclosing_fn(&self, idx: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.body.0 <= idx && idx <= f.body.1)
+            .min_by_key(|f| f.body.1 - f.body.0)
+    }
+}
+
+fn span_contains(spans: &[Span], idx: usize) -> bool {
+    spans.iter().any(|&(a, b)| a <= idx && idx <= b)
+}
+
+/// Index of the matching closing delimiter for the opener at `open`
+/// (same delimiter class only — the streams are well-nested in any file
+/// `rustc` accepts). Returns the last index if unbalanced.
+fn match_delim(toks: &[Tok], open: usize, open_ch: char, close_ch: char) -> usize {
+    let mut depth = 0usize;
+    for (i, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct(open_ch) {
+            depth += 1;
+        } else if t.is_punct(close_ch) {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+const KEYWORDS: &[&str] = &[
+    "as", "break", "const", "continue", "crate", "dyn", "else", "enum", "extern", "false", "fn",
+    "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut", "pub", "ref",
+    "return", "self", "Self", "static", "struct", "super", "trait", "true", "type", "unsafe",
+    "use", "where", "while", "async", "await",
+];
+
+/// One linear walk collecting every span kind.
+pub fn parse(toks: &[Tok]) -> FileInfo {
+    let mut info = FileInfo::default();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        match &t.kind {
+            TokKind::Punct('#') if toks.get(i + 1).is_some_and(|t| t.is_punct('[')) => {
+                let close = match_delim(toks, i + 1, '[', ']');
+                if attr_is_test(&toks[i + 1..=close]) {
+                    let end = item_end(toks, close + 1);
+                    info.test_spans.push((i, end));
+                }
+                i += 1; // walk *into* the attribute (other rules see it)
+            }
+            TokKind::Ident => {
+                match t.text.as_str() {
+                    "fn" => {
+                        if let Some(name) = toks.get(i + 1).filter(|t| t.kind == TokKind::Ident) {
+                            if let Some(open) = body_open(toks, i + 2) {
+                                let close = match_delim(toks, open, '{', '}');
+                                info.fns.push(FnSpan {
+                                    name: name.text.clone(),
+                                    kw: i,
+                                    body: (open, close),
+                                });
+                            }
+                        }
+                    }
+                    "loop" => {
+                        if toks.get(i + 1).is_some_and(|t| t.is_punct('{')) {
+                            let close = match_delim(toks, i + 1, '{', '}');
+                            info.loops.push(LoopSpan { kw: i, body: (i + 1, close) });
+                        }
+                    }
+                    "for" | "while" => {
+                        if let Some(open) = loop_body_open(toks, i, t.text == "for") {
+                            let close = match_delim(toks, open, '{', '}');
+                            info.loops.push(LoopSpan { kw: i, body: (open, close) });
+                        }
+                    }
+                    name => {
+                        // `.compute*(…)` argument spans.
+                        let dotted = i > 0 && toks[i - 1].is_punct('.');
+                        let called = toks.get(i + 1).is_some_and(|t| t.is_punct('('));
+                        if dotted && called && name.starts_with("compute") {
+                            let close = match_delim(toks, i + 1, '(', ')');
+                            info.compute_spans.push((i + 1, close));
+                        }
+                        // Call sites for the call graph: `name(` that is
+                        // not a definition, macro, or keyword.
+                        let defined = i > 0 && toks[i - 1].is_ident("fn");
+                        let macro_bang = toks.get(i + 1).is_some_and(|t| t.is_punct('!'));
+                        if called && !defined && !macro_bang && !KEYWORDS.contains(&name) {
+                            info.calls.push(CallSite { name: name.to_string(), idx: i });
+                        }
+                    }
+                }
+                i += 1;
+            }
+            _ => {
+                i += 1;
+            }
+        }
+    }
+    info
+}
+
+/// Does this bracketed attribute mark a test/loom-only item? True for
+/// `#[test]`, `#[cfg(test)]`, `#[cfg(loom)]`, `#[cfg(all(test, …))]` — any
+/// `cfg`/`test` mention *without* a `not(…)` (so `#[cfg(not(test))]` code
+/// is still linted).
+fn attr_is_test(attr: &[Tok]) -> bool {
+    let mut test = false;
+    let mut negated = false;
+    for t in attr {
+        if t.is_ident("test") || t.is_ident("loom") {
+            test = true;
+        }
+        if t.is_ident("not") {
+            negated = true;
+        }
+    }
+    test && !negated
+}
+
+/// End of the item following an attribute: the matching `}` of its first
+/// top-level brace, or the first `;` if one comes sooner (use/mod decls,
+/// trait methods). Skips stacked attributes.
+fn item_end(toks: &[Tok], mut i: usize) -> usize {
+    while i < toks.len() {
+        if toks[i].is_punct('#') && toks.get(i + 1).is_some_and(|t| t.is_punct('[')) {
+            i = match_delim(toks, i + 1, '[', ']') + 1;
+            continue;
+        }
+        break;
+    }
+    let mut depth_paren = 0i64;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.is_punct('(') || t.is_punct('[') {
+            depth_paren += 1;
+        } else if t.is_punct(')') || t.is_punct(']') {
+            depth_paren -= 1;
+        } else if depth_paren == 0 && t.is_punct(';') {
+            return i;
+        } else if depth_paren == 0 && t.is_punct('{') {
+            return match_delim(toks, i, '{', '}');
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Body `{` of a `fn`: first top-level `{` after the signature, unless a
+/// `;` ends a bodiless declaration first.
+fn body_open(toks: &[Tok], mut i: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.is_punct('(') || t.is_punct('[') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') {
+            depth -= 1;
+        } else if depth == 0 && t.is_punct(';') {
+            return None;
+        } else if depth == 0 && t.is_punct('{') {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Body `{` of a `for`/`while` loop header. For `for`, an `in` at
+/// delimiter depth 0 must appear first — `impl Trait for Type { … }` and
+/// HRTB `for<'a>` have none and are rejected.
+fn loop_body_open(toks: &[Tok], kw: usize, is_for: bool) -> Option<usize> {
+    let mut depth = 0i64;
+    let mut saw_in = false;
+    let mut i = kw + 1;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.is_punct('(') || t.is_punct('[') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') {
+            depth -= 1;
+        } else if depth == 0 && t.is_ident("in") {
+            saw_in = true;
+        } else if depth == 0 && t.is_punct('{') {
+            if is_for && !saw_in {
+                return None;
+            }
+            return Some(i);
+        } else if depth == 0 && t.is_punct(';') {
+            return None;
+        }
+        i += 1;
+    }
+    None
+}

@@ -1,0 +1,309 @@
+//! The rule set: each of the repo's written-but-unchecked determinism
+//! invariants as a machine-checked rule over the lexed/parsed sources.
+//!
+//! Rules are scoped by path (relative to the walk root, `/`-separated,
+//! e.g. `algorithms/disco_f.rs`), skip `#[cfg(test)]`/`#[cfg(loom)]`
+//! items, and honor `// lint: allow(<rule>)` suppressions (same line or
+//! the line above; `allow-file` for a whole file). The runtime
+//! counterpart `schedule-divergence` is enforced by
+//! [`Checked`](crate::net::Checked), not here — it is listed in
+//! [`RULES`](crate::lint::RULES) for documentation symmetry.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lint::lexer::{Allows, Tok, TokKind};
+use crate::lint::parse::FileInfo;
+use crate::lint::Violation;
+
+/// One lexed + parsed source file, path-normalized.
+pub struct SourceFile {
+    pub path: String,
+    pub toks: Vec<Tok>,
+    pub allows: Allows,
+    pub info: FileInfo,
+}
+
+impl SourceFile {
+    fn in_dir(&self, dir: &str) -> bool {
+        self.path.starts_with(dir)
+    }
+}
+
+/// Fns whose every call site sits inside a `.compute*` argument span (or
+/// inside another such fn): work in their bodies is priced through the
+/// compute hooks even though the tokens sit outside the closure. Built
+/// crate-wide by name (a deliberate approximation: free functions and
+/// methods sharing a name pool their call sites, which only ever widens
+/// the *non*-exempt set).
+pub struct CostedFns(BTreeSet<String>);
+
+pub fn build_costed_fns(files: &[SourceFile]) -> CostedFns {
+    // name -> call sites as (costed-span?, enclosing fn name)
+    let mut sites: BTreeMap<&str, Vec<(bool, Option<&str>)>> = BTreeMap::new();
+    let mut defined: BTreeSet<&str> = BTreeSet::new();
+    for f in files {
+        for fun in &f.info.fns {
+            defined.insert(fun.name.as_str());
+        }
+        for call in &f.info.calls {
+            let encl = f.info.enclosing_fn(call.idx).map(|x| x.name.as_str());
+            sites
+                .entry(call.name.as_str())
+                .or_default()
+                .push((f.info.in_compute(call.idx), encl));
+        }
+    }
+    let mut costed: BTreeSet<String> = BTreeSet::new();
+    // Fixpoint: transitively costed callees converge in a few rounds;
+    // cycles conservatively stay uncosted.
+    for _ in 0..10 {
+        let mut changed = false;
+        for &name in &defined {
+            if costed.contains(name) {
+                continue;
+            }
+            let Some(calls) = sites.get(name) else { continue };
+            if calls.is_empty() {
+                continue;
+            }
+            let all_costed = calls.iter().all(|(in_compute, encl)| {
+                *in_compute || encl.is_some_and(|e| costed.contains(e))
+            });
+            if all_costed {
+                costed.insert(name.to_string());
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    CostedFns(costed)
+}
+
+/// Apply every rule to one file. `costed` comes from
+/// [`build_costed_fns`] over the whole walked set.
+pub fn check_file(f: &SourceFile, costed: &CostedFns) -> Vec<Violation> {
+    let mut out = Vec::new();
+    wall_clock(f, &mut out);
+    transport_unwrap(f, &mut out);
+    hash_iter(f, &mut out);
+    unseeded_rng(f, &mut out);
+    f32_literal(f, &mut out);
+    uncosted_compute(f, costed, &mut out);
+    out.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
+    out
+}
+
+/// Shared emit path: test spans and allow-directives filter here, so
+/// every rule body stays a pure detector.
+fn emit(f: &SourceFile, idx: usize, rule: &'static str, message: String, out: &mut Vec<Violation>) {
+    if f.info.in_test(idx) {
+        return;
+    }
+    let t = &f.toks[idx];
+    if f.allows.allowed(rule, t.line) {
+        return;
+    }
+    out.push(Violation {
+        path: f.path.clone(),
+        line: t.line,
+        col: t.col,
+        rule,
+        message,
+    });
+}
+
+fn seq_ident2(toks: &[Tok], i: usize, a: &str, b: &str) -> bool {
+    // `a::b` — the lexer splits `::` into two ':' puncts.
+    toks[i].is_ident(a)
+        && toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+        && toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
+        && toks.get(i + 3).is_some_and(|t| t.is_ident(b))
+}
+
+/// `wall-clock`: `Instant::now()` / `SystemTime::now()` outside the
+/// transport/chaos whitelist. Wall time feeds the *measured* compute
+/// model and transport deadlines only; anywhere else it breaks the
+/// modeled clock's bit-determinism.
+fn wall_clock(f: &SourceFile, out: &mut Vec<Violation>) {
+    let whitelisted = f.in_dir("net/transport/")
+        || f.path == "net/cluster.rs"
+        || f.path == "util/timer.rs"
+        || f.path == "util/bench.rs"
+        || f.in_dir("runtime/")
+        || f.in_dir("bin/")
+        || f.in_dir("lint/")
+        || f.path == "main.rs";
+    if whitelisted {
+        return;
+    }
+    for i in 0..f.toks.len() {
+        if seq_ident2(&f.toks, i, "Instant", "now") || seq_ident2(&f.toks, i, "SystemTime", "now")
+        {
+            emit(
+                f,
+                i,
+                "wall-clock",
+                format!(
+                    "{}::now() outside the transport/chaos whitelist — wall time \
+                     breaks modeled-clock determinism",
+                    f.toks[i].text
+                ),
+                out,
+            );
+        }
+    }
+}
+
+/// `transport-unwrap`: `.unwrap()` / `.expect(` on the socket paths under
+/// `net/transport/`. A panic there tears a peer down without the
+/// `fail()` / `FrameError` contract, so the fleet sees a hang instead of
+/// a named failure.
+fn transport_unwrap(f: &SourceFile, out: &mut Vec<Violation>) {
+    if !f.in_dir("net/transport/") {
+        return;
+    }
+    for i in 1..f.toks.len() {
+        let t = &f.toks[i];
+        let is_target = t.is_ident("unwrap") || t.is_ident("expect");
+        if is_target
+            && f.toks[i - 1].is_punct('.')
+            && f.toks.get(i + 1).is_some_and(|t| t.is_punct('('))
+        {
+            emit(
+                f,
+                i,
+                "transport-unwrap",
+                format!(
+                    ".{}() on a transport path — map the failure through fail()/\
+                     FrameError so peers see `cluster node failed` instead of a hang",
+                    t.text
+                ),
+                out,
+            );
+        }
+    }
+}
+
+/// `hash-iter`: `HashMap`/`HashSet` in numeric or pricing code. Their
+/// iteration order is randomized per process, so any fold, serialization,
+/// or schedule derived from it diverges across ranks and runs. (Usage is
+/// flagged, not just iteration: a hash container in deterministic code is
+/// one `for` loop away from a bit-diff.) `runtime/` is exempt — the XLA
+/// boundary never feeds the priced spine.
+fn hash_iter(f: &SourceFile, out: &mut Vec<Violation>) {
+    if f.in_dir("runtime/") {
+        return;
+    }
+    for i in 0..f.toks.len() {
+        let t = &f.toks[i];
+        if t.is_ident("HashMap") || t.is_ident("HashSet") {
+            emit(
+                f,
+                i,
+                "hash-iter",
+                format!(
+                    "{} iterates in nondeterministic order — use BTreeMap/BTreeSet \
+                     or a rank-indexed Vec in numeric/pricing code",
+                    t.text
+                ),
+                out,
+            );
+        }
+    }
+}
+
+/// `unseeded-rng`: ambient randomness (`thread_rng`, `rand::random`,
+/// entropy-seeded constructors). Every random draw must flow through the
+/// seeded `Xoshiro256pp` streams or repeated runs stop being comparable.
+fn unseeded_rng(f: &SourceFile, out: &mut Vec<Violation>) {
+    const BANNED: &[&str] = &["thread_rng", "from_entropy", "OsRng", "StdRng", "SmallRng"];
+    for i in 0..f.toks.len() {
+        let t = &f.toks[i];
+        let hit = (t.kind == TokKind::Ident && BANNED.contains(&t.text.as_str()))
+            || seq_ident2(&f.toks, i, "rand", "random");
+        if hit {
+            emit(
+                f,
+                i,
+                "unseeded-rng",
+                format!(
+                    "{} is ambient RNG — all randomness must flow through the seeded \
+                     Xoshiro256pp streams",
+                    t.text
+                ),
+                out,
+            );
+        }
+    }
+}
+
+/// `f32-literal`: `f32` anywhere in the f64 numeric spine. Accumulating
+/// or truncating through f32 silently changes bits between code paths;
+/// `runtime/` (the XLA boundary, which is f32 by design) is exempt.
+fn f32_literal(f: &SourceFile, out: &mut Vec<Violation>) {
+    if f.in_dir("runtime/") {
+        return;
+    }
+    for i in 0..f.toks.len() {
+        let t = &f.toks[i];
+        let hit = t.is_ident("f32")
+            || matches!(&t.kind, TokKind::Number { suffix, .. } if suffix == "f32");
+        if hit {
+            emit(
+                f,
+                i,
+                "f32-literal",
+                "f32 in the f64 numeric spine — the paper's accounting and the \
+                 bit-identity guarantee are f64-only (runtime/ is the f32 boundary)"
+                    .to_string(),
+                out,
+            );
+        }
+    }
+}
+
+/// `uncosted-compute`: a floating-point loop in `algorithms/` that is not
+/// priced. Legitimate loops either live inside a `.compute*` closure
+/// (priced directly), mention `ctx` (communication/driver loops — their
+/// work *is* collectives and costed segments), or sit in a fn reachable
+/// only from compute spans (the call-graph approximation). Anything else
+/// is numeric work the modeled clock never sees — exactly the Fig. 2
+/// attribution hole the cost model exists to prevent.
+fn uncosted_compute(f: &SourceFile, costed: &CostedFns, out: &mut Vec<Violation>) {
+    if !f.in_dir("algorithms/") {
+        return;
+    }
+    for l in &f.info.loops {
+        if f.info.in_compute(l.kw) {
+            continue;
+        }
+        let body = &f.toks[l.body.0..=l.body.1];
+        let has_float = body
+            .iter()
+            .any(|t| matches!(&t.kind, TokKind::Number { float: true, .. }));
+        if !has_float {
+            continue;
+        }
+        let mentions_ctx = body.iter().any(|t| t.is_ident("ctx"));
+        if mentions_ctx {
+            continue;
+        }
+        if let Some(encl) = f.info.enclosing_fn(l.kw) {
+            if costed.0.contains(&encl.name) {
+                continue;
+            }
+        }
+        emit(
+            f,
+            l.kw,
+            "uncosted-compute",
+            "floating-point loop outside ctx.compute*() — this work is invisible \
+             to the modeled clock (price it via compute_costed, or justify with an \
+             allow comment)"
+                .to_string(),
+            out,
+        );
+    }
+}

@@ -1,0 +1,7 @@
+// Fixture: a would-be violation suppressed by an allow directive — must
+// produce NO findings. Never compiled — disco-lint input only.
+pub fn stamp_allowed() -> f64 {
+    // lint: allow(wall-clock) — fixture demonstrating suppression syntax
+    let t = Instant::now();
+    t.elapsed().as_secs_f64()
+}

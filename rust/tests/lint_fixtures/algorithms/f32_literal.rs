@@ -1,0 +1,5 @@
+// Fixture: exactly one `f32-literal` violation in the f64 spine.
+// Never compiled — disco-lint input only.
+pub fn half() -> f64 {
+    (1.5f32 as f64) * 0.5
+}

@@ -1,0 +1,5 @@
+// Fixture: exactly one `hash-iter` violation (hash containers in numeric
+// code). Never compiled — disco-lint input only.
+pub fn sum_counts(counts: &std::collections::HashMap<usize, u64>) -> u64 {
+    counts.values().sum()
+}

@@ -1,0 +1,8 @@
+// Fixture: exactly one `uncosted-compute` violation — a floating-point
+// loop the modeled clock never prices. Never compiled — disco-lint input
+// only.
+pub fn scale(xs: &mut [f64]) {
+    for x in xs.iter_mut() {
+        *x *= 0.5;
+    }
+}

@@ -1,0 +1,6 @@
+// Fixture: exactly one `unseeded-rng` violation (ambient randomness).
+// Never compiled — disco-lint input only.
+pub fn draw() -> u64 {
+    let mut rng = thread_rng();
+    rng.gen()
+}

@@ -1,0 +1,5 @@
+// Fixture: exactly one `wall-clock` violation (algorithms/ is not on the
+// transport/chaos whitelist). Never compiled — disco-lint input only.
+pub fn stamp() -> std::time::Instant {
+    Instant::now()
+}

@@ -1,0 +1,5 @@
+// Fixture: exactly one `transport-unwrap` violation on a socket path.
+// Never compiled — disco-lint input only.
+pub fn read_frame(buf: Option<Vec<u8>>) -> Vec<u8> {
+    buf.unwrap()
+}

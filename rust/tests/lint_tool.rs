@@ -1,0 +1,219 @@
+//! End-to-end coverage for the PR's two analysis halves:
+//!
+//! * **disco-lint (static)** — the fixture tree under
+//!   `rust/tests/lint_fixtures/` carries exactly one violation per static
+//!   rule (plus one suppressed by an allow directive); the real source
+//!   tree must be clean. The fixtures are lint *inputs*, never compiled.
+//! * **Checked (runtime)** — a rank-divergent collective schedule is
+//!   reported as `schedule-divergence at call #k: …` instead of hanging,
+//!   and a checked run is bit-identical to an unchecked one.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use disco::lint::{lint_tree, RULES};
+use disco::net::{Cluster, ComputeModel, CostModel};
+
+fn fixtures_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/lint_fixtures")
+}
+
+fn static_rules() -> Vec<&'static str> {
+    RULES
+        .iter()
+        .map(|(name, _)| *name)
+        .filter(|name| *name != "schedule-divergence")
+        .collect()
+}
+
+#[test]
+fn fixtures_flag_each_static_rule_exactly_once() {
+    let violations = lint_tree(&fixtures_root()).expect("fixture tree readable");
+    let mut by_rule: BTreeMap<&str, usize> = BTreeMap::new();
+    for v in &violations {
+        *by_rule.entry(v.rule).or_default() += 1;
+    }
+    for rule in static_rules() {
+        assert_eq!(
+            by_rule.get(rule).copied().unwrap_or(0),
+            1,
+            "rule {rule} must flag exactly once in fixtures; got {violations:#?}"
+        );
+    }
+    assert_eq!(
+        violations.len(),
+        static_rules().len(),
+        "no extra findings expected: {violations:#?}"
+    );
+}
+
+#[test]
+fn fixtures_flag_in_the_matching_scope() {
+    let violations = lint_tree(&fixtures_root()).expect("fixture tree readable");
+    let find = |rule: &str| {
+        violations
+            .iter()
+            .find(|v| v.rule == rule)
+            .unwrap_or_else(|| panic!("no {rule} finding"))
+    };
+    assert_eq!(find("transport-unwrap").path, "net/transport/unwrap.rs");
+    assert_eq!(find("wall-clock").path, "algorithms/wall_clock.rs");
+    assert_eq!(find("uncosted-compute").path, "algorithms/uncosted_compute.rs");
+    // The allow-directive fixture must contribute nothing.
+    assert!(
+        violations.iter().all(|v| v.path != "algorithms/allowed.rs"),
+        "allow directive failed to suppress: {violations:#?}"
+    );
+}
+
+/// The PR's acceptance criterion: disco-lint exits clean on the tree it
+/// polices. Any regression fails here before CI's `lint` job even runs.
+#[test]
+fn repo_source_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let violations = lint_tree(&root).expect("source tree readable");
+    let listing: Vec<String> = violations.iter().map(|v| v.to_string()).collect();
+    assert!(
+        violations.is_empty(),
+        "disco-lint must pass on rust/src:\n{}",
+        listing.join("\n")
+    );
+}
+
+#[test]
+fn rules_table_documents_the_runtime_rule() {
+    assert!(
+        RULES.iter().any(|(name, _)| *name == "schedule-divergence"),
+        "the runtime rule must appear in --list-rules output"
+    );
+}
+
+/// Injected divergence: rank 1 issues an AllGather where rank 0 issues a
+/// ReduceAll. Unchecked, the shm backend would *silently combine
+/// mismatched contributions* (and a TCP fleet would desync or hang);
+/// checked, every rank reports the named rule before the payload moves.
+/// Guarded by a timeout so a checker regression fails instead of hanging
+/// the suite.
+#[test]
+fn checked_reports_injected_divergence() {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let res = std::panic::catch_unwind(|| {
+            Cluster::new(2)
+                .with_cost(CostModel::zero())
+                .with_checked(true)
+                .run(|ctx| {
+                    if ctx.rank == 0 {
+                        let mut v = vec![1.0, 2.0];
+                        ctx.reduce_all(&mut v);
+                        v[0]
+                    } else {
+                        ctx.all_gather_concat(&[1.0, 2.0])[0]
+                    }
+                })
+        });
+        let msg = match res {
+            Ok(_) => "run returned without panicking".to_string(),
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_else(|| "non-string panic".into()),
+        };
+        let _ = tx.send(msg);
+    });
+    let msg = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("checked cluster hung on a divergent schedule");
+    assert!(msg.contains("schedule-divergence at call #1"), "{msg}");
+    assert!(msg.contains("rank 1 issued AllGather(2)"), "{msg}");
+    assert!(msg.contains("rank 0 issued ReduceAll(2)"), "{msg}");
+}
+
+/// A later divergence carries the ring-buffer tail of completed calls.
+#[test]
+fn divergence_report_includes_recent_schedule() {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let res = std::panic::catch_unwind(|| {
+            Cluster::new(2)
+                .with_cost(CostModel::zero())
+                .with_checked(true)
+                .run(|ctx| {
+                    let mut v = vec![1.0; 4];
+                    ctx.reduce_all(&mut v);
+                    ctx.reduce_all(&mut v);
+                    if ctx.rank == 0 {
+                        ctx.broadcast(0, &mut v);
+                    } else {
+                        ctx.reduce(0, &mut v);
+                    }
+                    v.first().copied().unwrap_or(0.0)
+                })
+        });
+        let msg = match res {
+            Ok(_) => "run returned without panicking".to_string(),
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_else(|| "non-string panic".into()),
+        };
+        let _ = tx.send(msg);
+    });
+    let msg = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("checked cluster hung on a divergent schedule");
+    assert!(msg.contains("schedule-divergence at call #3"), "{msg}");
+    assert!(msg.contains("last completed on rank"), "{msg}");
+    assert!(msg.contains("#2 ReduceAll(4)"), "{msg}");
+}
+
+/// The checker must be invisible to the priced timeline: same seeds, same
+/// workload, checker on vs off — bit-identical outputs, stats, traces,
+/// and simulated clock.
+#[test]
+fn checked_run_is_bit_identical_to_unchecked() {
+    let run_with = |checked: bool| {
+        Cluster::new(3)
+            .with_compute(ComputeModel::modeled())
+            .with_trace(true)
+            .with_checked(checked)
+            .run(|ctx| {
+                let rank = ctx.rank;
+                let mut acc = vec![0.0f64; 8];
+                for i in 0..12 {
+                    ctx.compute_costed("flops", || ((), 1e6 * (1 + (rank + i) % 3) as f64));
+                    let mut v = vec![(rank * 31 + i) as f64; 8];
+                    ctx.reduce_all(&mut v);
+                    for (a, b) in acc.iter_mut().zip(v.iter()) {
+                        *a += b;
+                    }
+                    let g = ctx.all_gather_concat(&[rank as f64, i as f64]);
+                    acc[0] += g.iter().sum::<f64>();
+                }
+                (acc, ctx.clock)
+            })
+    };
+    let off = run_with(false);
+    let on = run_with(true);
+    assert_eq!(off.sim_seconds.to_bits(), on.sim_seconds.to_bits());
+    assert_eq!(off.stats, on.stats, "checker must not perturb the priced ledger");
+    assert_eq!(off.trace.to_csv(), on.trace.to_csv());
+    for ((a, ca), (b, cb)) in off.outputs.iter().zip(on.outputs.iter()) {
+        assert_eq!(ca.to_bits(), cb.to_bits());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}
+
+/// Single-rank runs skip validation entirely (nothing to diverge from).
+#[test]
+fn checked_single_node_is_a_no_op() {
+    let run = Cluster::new(1).with_checked(true).run(|ctx| {
+        let mut v = vec![2.0; 3];
+        ctx.reduce_all(&mut v);
+        v[0]
+    });
+    assert_eq!(run.outputs[0], 2.0);
+}
