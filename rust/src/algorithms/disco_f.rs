@@ -40,6 +40,7 @@ use crate::data::{Dataset, Partition};
 use crate::linalg::{ops, DataMatrix, HvpKernel};
 use crate::loss::Loss;
 use crate::net::Collectives;
+use crate::obs::{EventKind, Phase};
 use crate::solvers::woodbury::{Woodbury, WoodburyFactory};
 use crate::util::bytes::{put_u64, ByteReader};
 
@@ -335,6 +336,12 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoFNode {
 
         // ---- PCG (Algorithm 3) ----
         let eps = forcing(grad_norm, p.pcg_beta, grad_tol);
+        if ctx.obs_enabled() {
+            ctx.obs_emit(EventKind::SpanBegin {
+                phase: Phase::Pcg,
+                label: format!("pcg outer {outer}"),
+            });
+        }
         // Initialization (preconditioner apply + the ⟨r,s⟩ / ‖r‖² local
         // products) is real per-node compute — wrapped so the trace's
         // compute totals are exact.
@@ -425,6 +432,12 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoFNode {
                 ((), 3.0 * djf)
             });
             ops_count.axpy += 1;
+        }
+        if ctx.obs_enabled() {
+            ctx.obs_emit(EventKind::SpanEnd {
+                phase: Phase::Pcg,
+                label: format!("pcg outer {outer}"),
+            });
         }
 
         // ---- damped step: δ² = Σ_j ⟨v,Hv⟩ (scalar), local update ----

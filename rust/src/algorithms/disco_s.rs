@@ -45,6 +45,7 @@ use crate::data::{Dataset, Partition};
 use crate::linalg::{ops, DataMatrix, HvpKernel};
 use crate::loss::Loss;
 use crate::net::Collectives;
+use crate::obs::{EventKind, Phase};
 use crate::solvers::sag;
 use crate::solvers::woodbury::{Woodbury, WoodburyFactory};
 use crate::util::bytes::{put_u64, put_u8, ByteReader};
@@ -494,6 +495,12 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
 
         // ---- PCG loop (Algorithm 2); master drives, workers serve HVPs --
         let eps = forcing(grad_norm, p.pcg_beta, grad_tol);
+        if ctx.obs_enabled() {
+            ctx.obs_emit(EventKind::SpanBegin {
+                phase: Phase::Pcg,
+                label: format!("pcg outer {outer}"),
+            });
+        }
         let mut rnorm = f64::INFINITY;
         let mut rs = 0.0;
         if is_master {
@@ -592,6 +599,12 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
                 }
             }
             pcg_iters += 1;
+        }
+        if ctx.obs_enabled() {
+            ctx.obs_emit(EventKind::SpanEnd {
+                phase: Phase::Pcg,
+                label: format!("pcg outer {outer}"),
+            });
         }
 
         // ---- damped step on master ----

@@ -53,6 +53,7 @@ use crate::net::{
     Checked, ClusterRun, Collectives, CommStats, CtxState, EpochFault, FaultKind, NodeCtx, Trace,
     Transport,
 };
+use crate::obs::{EventKind, Phase};
 use crate::util::bytes::{put_f64, put_f64s, put_u32, put_u64, ByteReader};
 use std::collections::{BTreeSet, VecDeque};
 use std::io::Write;
@@ -305,7 +306,8 @@ enum EpochEnd {
 fn build_tcp_ctx(transport: TcpTransport, spec: &RunSpec) -> NodeCtx<Checked<TcpTransport>> {
     let mut ctx = NodeCtx::new(Checked::from_env(transport))
         .with_compute(spec.sim.compute)
-        .with_trace(spec.sim.trace);
+        .with_trace(spec.sim.trace)
+        .with_obs(spec.sim.events);
     if let Some(&speed) = spec.sim.speeds.get(ctx.rank) {
         ctx = ctx.with_speed(speed);
     }
@@ -371,6 +373,7 @@ pub fn run_elastic_joiner(
             Ok(v) => v,
             Err(e) => panic!("cluster node failed: rank {}: {e}", ctx.rank),
         };
+    // lint: allow(raw-print) — operator-facing chaos/progress line
     println!(
         "elastic: epoch {}: joined as rank {} of {}",
         info.epoch, info.rank, info.world
@@ -399,6 +402,16 @@ fn elastic_tcp_loop(
         let end = catch_unwind(AssertUnwindSafe(|| -> Result<EpochEnd, String> {
             if let Some(fault) = pending.take() {
                 let old_rank = ctx.rank;
+                if ctx.obs_enabled() {
+                    // Incident stamped with the *old* epoch coordinates;
+                    // the flight-recorder tail names the collectives that
+                    // completed right before the fault.
+                    let detail = format!("{fault}{}", ctx.flight_tail());
+                    ctx.obs_emit(EventKind::Incident {
+                        kind: "epoch_fault".into(),
+                        detail,
+                    });
+                }
                 let info = ctx
                     .transport_mut()
                     .inner_mut()
@@ -418,9 +431,14 @@ fn elastic_tcp_loop(
                 fired = fi;
                 let _ = &spec_now; // re-cut spec lives as long as the session
                 if ctx.rank == 0 {
+                    // lint: allow(raw-print) — operator-facing chaos/progress line
                     println!(
-                        "elastic: epoch {}: re-formed world {} (joined {}) after [{}]",
-                        info.epoch, info.world, info.joined, fault
+                        "elastic: epoch {}: re-formed world {} (joined {}) after [{}]{}",
+                        info.epoch,
+                        info.world,
+                        info.joined,
+                        fault,
+                        ctx.flight_tail()
                     );
                     let _ = std::io::stdout().flush();
                 }
@@ -430,6 +448,7 @@ fn elastic_tcp_loop(
         let fault = match end {
             Ok(Ok(EpochEnd::Done)) => break,
             Ok(Ok(EpochEnd::Departed)) => {
+                // lint: allow(raw-print) — operator-facing chaos/progress line
                 println!("elastic: rank {} departed (planned kill)", ctx.rank);
                 return None;
             }
@@ -443,8 +462,11 @@ fn elastic_tcp_loop(
         recoveries += 1;
         if recoveries > es.max_recoveries {
             panic!(
-                "cluster node failed: rank {}: elastic: giving up after {} recoveries (last fault: {})",
-                ctx.rank, es.max_recoveries, fault
+                "cluster node failed: rank {}: elastic: giving up after {} recoveries (last fault: {}){}",
+                ctx.rank,
+                es.max_recoveries,
+                fault,
+                ctx.flight_tail()
             );
         }
         pending = Some(fault);
@@ -516,10 +538,13 @@ fn bootstrap(
     snaps: &mut VecDeque<BoundarySnap>,
     fired: BTreeSet<usize>,
 ) -> Result<(RunSpec, Session<NodeCtx<Checked<TcpTransport>>>, BTreeSet<usize>), String> {
-    // The transport already renumbered us; mirror it into the context.
+    // The transport already renumbered us; mirror it into the context
+    // (and into the event recorder's coordinate stamps).
     ctx.rank = info.rank;
     ctx.m = info.world;
     ctx.trace = Trace::new(info.world);
+    ctx.obs.set_rank(info.rank);
+    ctx.obs.set_epoch(info.epoch as u32);
 
     let latest = snaps.back().map(|s| s.outer as f64).unwrap_or(-1.0);
     let prev = if snaps.len() >= 2 {
@@ -595,6 +620,12 @@ fn bootstrap(
             segments: Vec::new(),
             straggler,
         })?;
+        if ctx.obs_enabled() {
+            ctx.obs_emit(EventKind::SpanBegin {
+                phase: Phase::EpochReform,
+                label: format!("epoch {}", info.epoch),
+            });
+        }
         Session::with_cuts(ctx, ds, &spec_now, None)
     } else if old_rank.is_some() {
         let snap = snaps
@@ -603,6 +634,12 @@ fn bootstrap(
             .ok_or_else(|| format!("elastic: no boundary snapshot at outer {agreed}"))?
             .clone();
         ctx.import_state(snap.ctx)?;
+        if ctx.obs_enabled() {
+            ctx.obs_emit(EventKind::SpanBegin {
+                phase: Phase::EpochReform,
+                label: format!("epoch {}", info.epoch),
+            });
+        }
         let mut session = Session::with_cuts(ctx, ds, &spec_now, None);
         session.import_handoff(&snap.cut_axis, &snap.bytes)?;
         session.resume_at(agreed as usize);
@@ -627,12 +664,27 @@ fn bootstrap(
             segments: Vec::new(),
             straggler,
         })?;
+        if ctx.obs_enabled() {
+            ctx.obs_emit(EventKind::SpanBegin {
+                phase: Phase::EpochReform,
+                label: format!("epoch {}", info.epoch),
+            });
+        }
         let mut session = Session::with_cuts(ctx, ds, &spec_now, None);
         session.import_handoff(&boot.cut_axis, &boot.bytes)?;
         session.resume_at(boot.outer);
         fired = boot.fired;
         session
     };
+    // The span brackets exactly the priced recovery rebuild: begin at the
+    // restored boundary clock, end after `Session` setup priced the
+    // re-cut on top of it.
+    if ctx.obs_enabled() {
+        ctx.obs_emit(EventKind::SpanEnd {
+            phase: Phase::EpochReform,
+            label: format!("epoch {}", info.epoch),
+        });
+    }
     // Old-world snapshots are dead after a re-cut; the next boundary
     // starts a fresh window.
     snaps.clear();
@@ -687,10 +739,17 @@ fn shm_epoch_inner<C: Collectives>(
     slot: Option<&RestoreSlot>,
     fired: &mut BTreeSet<usize>,
 ) -> Result<ShmOutcome, String> {
+    ctx.obs_set_epoch(epoch as u32);
     let mut session = match slot {
         None => Session::new(ctx, ds, spec_e),
         Some(RestoreSlot::Survivor(snap)) => {
             ctx.import_state(snap.ctx.clone())?;
+            if ctx.obs_enabled() {
+                ctx.obs_emit(EventKind::SpanBegin {
+                    phase: Phase::EpochReform,
+                    label: format!("epoch {epoch}"),
+                });
+            }
             let mut s = Session::with_cuts(ctx, ds, spec_e, None);
             s.import_handoff(&snap.cut_axis, &snap.bytes)?;
             s.resume_at(snap.outer);
@@ -706,17 +765,41 @@ fn shm_epoch_inner<C: Collectives>(
                 segments: Vec::new(),
                 straggler,
             })?;
+            if ctx.obs_enabled() {
+                ctx.obs_emit(EventKind::SpanBegin {
+                    phase: Phase::EpochReform,
+                    label: format!("epoch {epoch}"),
+                });
+            }
             let mut s = Session::with_cuts(ctx, ds, spec_e, None);
             s.import_handoff(&snap.cut_axis, &snap.bytes)?;
             s.resume_at(snap.outer);
             s
         }
     };
+    if slot.is_some() && ctx.obs_enabled() {
+        // Brackets the priced recovery rebuild, boundary clock → post-re-cut.
+        ctx.obs_emit(EventKind::SpanEnd {
+            phase: Phase::EpochReform,
+            label: format!("epoch {epoch}"),
+        });
+    }
     loop {
         let (snap, _join) = take_boundary(ctx, &session, false);
         match apply_plan_events(ctx, &es.plan, fired, session.outer(), epoch) {
             PlanOutcome::Depart => return Ok(ShmOutcome::Departed),
-            PlanOutcome::Fault(fault) => {
+            PlanOutcome::Fault(mut fault) => {
+                // The flight-recorder tail rides in the fault detail, so
+                // the driver's re-formed line (and a giving-up panic)
+                // names the last completed collectives.
+                fault.detail.push_str(&ctx.flight_tail());
+                if ctx.obs_enabled() {
+                    let detail = fault.to_string();
+                    ctx.obs_emit(EventKind::Incident {
+                        kind: "epoch_fault".into(),
+                        detail,
+                    });
+                }
                 return Ok(ShmOutcome::Fault {
                     snap,
                     fault,
@@ -755,6 +838,9 @@ pub fn run_spec_elastic(ds: &Dataset, spec: &RunSpec, es: &ElasticSpec) -> (RunR
     let mut global_seed: Option<CommStats> = None;
     let mut recoveries = 0usize;
     let mut epoch: u64 = 1;
+    // Event streams accumulate across epochs (each epoch is its own
+    // Cluster::run); the epoch stamp keeps them apart in the output.
+    let mut all_events = Vec::new();
     loop {
         let mut spec_e = spec.clone();
         spec_e.sim.m = world;
@@ -771,6 +857,7 @@ pub fn run_spec_elastic(ds: &Dataset, spec: &RunSpec, es: &ElasticSpec) -> (RunR
             shm_epoch(ctx, ds, spec_ref, es, epoch, slot, fired_in.clone())
         });
 
+        all_events.extend(run.events);
         let mut outs: Vec<NodeOutput> = Vec::new();
         let mut fault: Option<EpochFault> = None;
         let mut snaps: Vec<Option<BoundarySnap>> = (0..world).map(|_| None).collect();
@@ -799,6 +886,7 @@ pub fn run_spec_elastic(ds: &Dataset, spec: &RunSpec, es: &ElasticSpec) -> (RunR
                 trace: run.trace,
                 sim_seconds: run.sim_seconds,
                 wall_seconds: wall.elapsed().as_secs_f64(),
+                events: all_events,
             };
             return (assemble(spec.kind(), crun), recoveries);
         };
@@ -861,6 +949,7 @@ pub fn run_spec_elastic(ds: &Dataset, spec: &RunSpec, es: &ElasticSpec) -> (RunR
             }
         }
         epoch = f.epoch + 1;
+        // lint: allow(raw-print) — operator-facing chaos/progress line
         println!("elastic: epoch {epoch}: re-formed world {world} after [{f}]");
     }
 }

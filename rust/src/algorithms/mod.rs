@@ -62,6 +62,7 @@ use crate::loss::LossKind;
 use crate::net::{
     Cluster, ClusterRun, Collectives, CommStats, ComputeModel, CostModel, StragglerConfig, Trace,
 };
+use crate::obs::Event;
 
 /// Algorithm selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -307,6 +308,9 @@ pub struct RunResult {
     pub converged: bool,
     /// Per-node PCG-loop operation counts (empty for non-PCG baselines).
     pub node_ops: Vec<OpCounts>,
+    /// Structured event stream, rank order (empty unless the run was
+    /// instrumented — `--events` / [`SimSpec::events`]).
+    pub events: Vec<Event>,
 }
 
 impl RunResult {
@@ -396,6 +400,7 @@ pub(crate) fn assemble(algo: AlgoKind, run: ClusterRun<NodeOutput>) -> RunResult
         wall_seconds: run.wall_seconds,
         converged,
         node_ops,
+        events: run.events,
     }
 }
 

@@ -25,6 +25,7 @@ use crate::algorithms::{AlgoKind, NodeOutput, OpCounts, RunConfig, RunResult};
 use crate::data::Dataset;
 use crate::net::transport::{Checked, NodeCtx, Transport};
 use crate::net::{CommStats, Segment, Trace};
+use crate::obs::{decode_events, encode_events, Event};
 use crate::util::bytes::{put_f64, put_f64s, put_u32, put_u64, ByteReader};
 use std::time::Instant;
 
@@ -67,7 +68,8 @@ pub fn run_over_spec<T: Transport>(
     let wall = Instant::now(); // lint: allow(wall-clock) — diagnostic wall_seconds only
     let mut ctx = NodeCtx::new(Checked::from_env(transport))
         .with_compute(spec.sim.compute)
-        .with_trace(spec.sim.trace);
+        .with_trace(spec.sim.trace)
+        .with_obs(spec.sim.events);
     let rank = ctx.rank;
     if let Some(&speed) = spec.sim.speeds.get(rank) {
         ctx = ctx.with_speed(speed);
@@ -96,7 +98,17 @@ pub(crate) fn exchange_and_assemble<T: Transport>(
     out: NodeOutput,
     wall_seconds: f64,
 ) -> Option<RunResult> {
-    let report = encode_report(&out, &ctx.local_stats, ctx.clock, &ctx.trace);
+    // Snapshot the unpriced wire ledger *before* encoding the report, so
+    // the report frames themselves are never counted — and so the ledger
+    // is identical whether or not the (unpriced) event stream rides
+    // along, preserving the instrumentation-invisibility contract.
+    let mut local_stats = ctx.local_stats.clone();
+    local_stats.unpriced_wire_bytes = ctx
+        .transport()
+        .wire_bytes_total()
+        .saturating_sub(local_stats.wire_bytes);
+    let events = ctx.obs.take();
+    let report = encode_report(&out, &local_stats, ctx.clock, &ctx.trace, &events);
     let reports = ctx.transport_mut().exchange_reports(report)?;
 
     // Rank 0: merge the fleet's reports into a RunResult.
@@ -106,6 +118,7 @@ pub(crate) fn exchange_and_assemble<T: Transport>(
     let mut trace = Trace::new(world);
     let mut sim = 0.0f64;
     let mut stats = CommStats::default();
+    let mut events = Vec::new();
     for (r, bytes) in reports.iter().enumerate() {
         let rep = match decode_report(bytes) {
             Ok(rep) => rep,
@@ -117,6 +130,7 @@ pub(crate) fn exchange_and_assemble<T: Transport>(
         for seg in rep.segments {
             trace.push(seg);
         }
+        events.extend(rep.events);
         if r == 0 {
             // Every rank's priced mirror is identical by construction;
             // rank 0's stands in for the global ledger (its wire_bytes
@@ -135,6 +149,7 @@ pub(crate) fn exchange_and_assemble<T: Transport>(
         wall_seconds,
         converged: out.converged,
         node_ops,
+        events,
     })
 }
 
@@ -144,9 +159,16 @@ struct NodeReport {
     stats: CommStats,
     clock: f64,
     segments: Vec<Segment>,
+    events: Vec<Event>,
 }
 
-fn encode_report(out: &NodeOutput, stats: &CommStats, clock: f64, trace: &Trace) -> Vec<u8> {
+fn encode_report(
+    out: &NodeOutput,
+    stats: &CommStats,
+    clock: f64,
+    trace: &Trace,
+    events: &[Event],
+) -> Vec<u8> {
     let mut buf = Vec::with_capacity(64 + 8 * out.w_part.len() + 48 * trace.segments.len());
     put_u32(&mut buf, out.w_part.len() as u32);
     put_f64s(&mut buf, &out.w_part);
@@ -161,6 +183,7 @@ fn encode_report(out: &NodeOutput, stats: &CommStats, clock: f64, trace: &Trace)
     for seg in &trace.segments {
         seg.encode(&mut buf);
     }
+    encode_events(&mut buf, events);
     buf
 }
 
@@ -182,8 +205,9 @@ fn decode_report(bytes: &[u8]) -> Result<NodeReport, String> {
     for _ in 0..nseg {
         segments.push(Segment::decode(&mut r)?);
     }
+    let events = decode_events(&mut r)?;
     r.finish()?;
-    Ok(NodeReport { w_part, ops, stats, clock, segments })
+    Ok(NodeReport { w_part, ops, stats, clock, segments, events })
 }
 
 #[cfg(test)]
@@ -216,7 +240,17 @@ mod tests {
             activity: Activity::Comm,
             label: "reduce_all".into(),
         });
-        let bytes = encode_report(&out, &stats, 0.625, &trace);
+        let events = vec![crate::obs::Event {
+            epoch: 1,
+            rank: 1,
+            outer: 3,
+            sim_time: 0.5,
+            kind: crate::obs::EventKind::SpanBegin {
+                phase: crate::obs::Phase::Outer,
+                label: "outer 3".into(),
+            },
+        }];
+        let bytes = encode_report(&out, &stats, 0.625, &trace, &events);
         let rep = decode_report(&bytes).unwrap();
         assert_eq!(rep.w_part.len(), 4);
         for (a, b) in rep.w_part.iter().zip(out.w_part.iter()) {
@@ -228,12 +262,15 @@ mod tests {
         assert_eq!(rep.segments.len(), 1);
         assert_eq!(rep.segments[0].node, 1);
         assert_eq!(rep.segments[0].label, "reduce_all");
+        assert_eq!(rep.events.len(), 1);
+        assert_eq!(rep.events[0].outer, 3);
+        assert_eq!(rep.events[0].sim_time.to_bits(), 0.5f64.to_bits());
     }
 
     #[test]
     fn truncated_report_is_an_error() {
         let out = NodeOutput::default();
-        let bytes = encode_report(&out, &CommStats::default(), 0.0, &Trace::new(1));
+        let bytes = encode_report(&out, &CommStats::default(), 0.0, &Trace::new(1), &[]);
         assert!(decode_report(&bytes[..bytes.len() - 1]).is_err());
         assert!(decode_report(&[]).is_err());
     }

@@ -48,6 +48,7 @@ use crate::algorithms::session::Session;
 use crate::algorithms::spec::{RepartitionPolicy, RepartitionSpec, RunSpec};
 use crate::data::{weighted_ranges, Dataset, Partition, PartitionKind};
 use crate::net::Collectives;
+use crate::obs::{EventKind, Phase};
 
 /// Per-rank adaptive load-balancing driver layered on [`Session`]; see
 /// the module docs. Construct once per run, call
@@ -146,7 +147,19 @@ impl Repartitioner {
         let new_ranges = self.decide(busy, work, ds, spec);
         let did = match new_ranges {
             Some(ranges) => {
+                if ctx.obs_enabled() {
+                    ctx.obs_emit(EventKind::SpanBegin {
+                        phase: Phase::Handoff,
+                        label: format!("recut {}", self.recuts + 1),
+                    });
+                }
                 session.repartition(ctx, ds, spec, &ranges)?;
+                if ctx.obs_enabled() {
+                    ctx.obs_emit(EventKind::SpanEnd {
+                        phase: Phase::Handoff,
+                        label: format!("recut {}", self.recuts + 1),
+                    });
+                }
                 self.ranges = ranges;
                 self.recuts += 1;
                 true

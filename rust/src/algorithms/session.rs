@@ -21,7 +21,7 @@
 //! little-endian codec of [`crate::util::bytes`]:
 //!
 //! ```text
-//! "DSK3" | algo u8 | rank u32 | world u32 | outer u64
+//! "DSK4" | algo u8 | rank u32 | world u32 | outer u64
 //! cuts: ncuts u32, (lo u64, hi u64)*       (0 = the spec-default cut table)
 //! global-ledger flag u8 [CommStats]        (shm blackboard snapshot)
 //! clock f64 | busy f64 | serial f64 | CommStats mirror
@@ -30,8 +30,11 @@
 //! algorithm payload                        (AlgorithmNode::save_state)
 //! ```
 //!
-//! (v3 added the serial busy-seconds scalar for serial-work-aware speed
-//! estimation; v2 checkpoints are refused with a version message.)
+//! (v4 widened the embedded [`CommStats`] codec with the unpriced wire
+//! ledger; v3 added the serial busy-seconds scalar for serial-work-aware
+//! speed estimation; older checkpoints are refused with a version
+//! message. The structured event stream is deliberately *not*
+//! checkpointed — events are diagnostics, not resumable state.)
 //!
 //! The cut table is recorded whenever the run had re-partitioned away
 //! from the spec defaults (adaptive load balancing), so a resumed run
@@ -54,9 +57,10 @@ use crate::algorithms::spec::{RepartitionSpec, RunSpec, StopSpec};
 use crate::algorithms::{assemble, AlgoKind, NodeOutput, RunResult};
 use crate::data::Dataset;
 use crate::net::{Collectives, CommStats, CtxState, Segment};
+use crate::obs::{EventKind, Phase};
 use crate::util::bytes::{put_f64, put_u32, put_u64, put_u8, ByteReader};
 
-const CKPT_MAGIC: &[u8; 4] = b"DSK3";
+const CKPT_MAGIC: &[u8; 4] = b"DSK4";
 
 /// Why a session stopped.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -241,8 +245,40 @@ impl<C: Collectives> Session<C> {
             self.stopped = Some(StopReason::OuterCap);
             return SessionStatus::Stopped(StopReason::OuterCap, None);
         }
+        // Event emission is append-only to rank-local memory (no clock,
+        // stats, or collective effects), so instrumented and plain runs
+        // stay bit-identical.
+        let before = if ctx.obs_enabled() {
+            ctx.obs_set_outer(self.outer as u32);
+            ctx.obs_emit(EventKind::SpanBegin {
+                phase: Phase::Outer,
+                label: format!("outer {}", self.outer),
+            });
+            Some(ctx.comm_stats().clone())
+        } else {
+            None
+        };
         let report = self.node.step(ctx, self.outer);
         self.outer += 1;
+        if let Some(before) = before {
+            let after = ctx.comm_stats().clone();
+            ctx.obs_emit(EventKind::Counter {
+                rounds: after.vector_rounds - before.vector_rounds,
+                scalar_rounds: after.scalar_rounds - before.scalar_rounds,
+                doubles: after.vector_doubles - before.vector_doubles,
+                comm_seconds: after.modeled_comm_seconds - before.modeled_comm_seconds,
+            });
+            ctx.obs_emit(EventKind::Step {
+                grad_norm: report.record.grad_norm,
+                fval: report.record.fval,
+                inner_iters: report.record.inner_iters as u32,
+                rounds: after.vector_rounds,
+            });
+            ctx.obs_emit(EventKind::SpanEnd {
+                phase: Phase::Outer,
+                label: format!("outer {}", self.outer - 1),
+            });
+        }
         if report.converged {
             self.stopped = Some(StopReason::Converged);
             return SessionStatus::Stopped(StopReason::Converged, Some(report));
@@ -429,6 +465,12 @@ struct CkptHeader {
 fn decode_header(r: &mut ByteReader<'_>) -> Result<CkptHeader, String> {
     let magic = r.take(4)?;
     if magic != CKPT_MAGIC {
+        if magic == b"DSK3" {
+            return Err(
+                "checkpoint format v3 (pre unpriced-wire accounting); re-save with this build"
+                    .into(),
+            );
+        }
         if magic == b"DSK2" {
             return Err(
                 "checkpoint format v2 (pre serial-accounting); re-save with this build".into(),
@@ -881,6 +923,7 @@ pub fn run_spec_full(
         trace: run.trace,
         sim_seconds: run.sim_seconds,
         wall_seconds: run.wall_seconds,
+        events: run.events,
     };
     (assemble(spec.kind(), run), recuts)
 }

@@ -256,6 +256,9 @@ pub struct SimSpec {
     pub straggler: Option<StragglerConfig>,
     /// Record the per-node activity trace (Fig. 2).
     pub trace: bool,
+    /// Record the structured event stream (spans, counters, incidents) —
+    /// unpriced and bit-invisible to the run itself.
+    pub events: bool,
 }
 
 impl Default for SimSpec {
@@ -270,6 +273,7 @@ impl Default for SimSpec {
             weighted_partition: false,
             straggler: None,
             trace: false,
+            events: false,
         }
     }
 }
@@ -281,6 +285,7 @@ impl SimSpec {
         let mut c = Cluster::new(self.m)
             .with_cost(self.cost)
             .with_trace(self.trace)
+            .with_obs(self.events)
             .with_compute(self.compute);
         if !self.speeds.is_empty() {
             c = c.with_speeds(self.speeds.clone());
@@ -866,6 +871,7 @@ impl RunConfig {
                 weighted_partition: self.weighted_partition,
                 straggler: self.straggler,
                 trace: self.trace,
+                events: false,
             },
             stop: StopSpec {
                 grad_tol: self.grad_tol,
@@ -1063,6 +1069,7 @@ impl RunSpec {
                     ("weighted_partition", Json::Bool(self.sim.weighted_partition)),
                     ("straggler", straggler),
                     ("trace", Json::Bool(self.sim.trace)),
+                    ("events", Json::Bool(self.sim.events)),
                 ]),
             ),
             (
@@ -1194,6 +1201,8 @@ impl RunSpec {
             weighted_partition: take_bool(s, "weighted_partition")?,
             straggler,
             trace: take_bool(s, "trace")?,
+            // Lenient: absent in pre-events spec files ⇒ off.
+            events: matches!(s.get("events"), Json::Bool(true)),
         };
         let st = v.get("stop");
         let stop = StopSpec {
@@ -1263,6 +1272,11 @@ pub fn with_spec_flags(args: Args) -> Args {
         .switch("weighted-partition", "size shards by node speed (heterogeneous fleets)")
         .opt("straggler", None, "seeded slowdown episodes: prob,slowdown,len,seed")
         .switch("trace", "record + print the per-node activity trace (Fig. 2)")
+        .opt(
+            "events",
+            None,
+            "record the structured event stream and write it as JSONL to this path",
+        )
 }
 
 fn parse_cost_preset(s: &str) -> Result<CostModel, String> {
@@ -1420,6 +1434,9 @@ pub fn apply_args(spec: &mut RunSpec, args: &Args) -> Result<(), String> {
     if args.flag("trace") {
         spec.sim.trace = true;
     }
+    if args.provided("events") {
+        spec.sim.events = true;
+    }
     if args.provided("grad-tol") {
         spec.stop.grad_tol = args.get_f64("grad-tol").map_err(e)?;
     }
@@ -1557,6 +1574,7 @@ mod tests {
                 ));
             }
             spec.sim.trace = rng.next_f64() < 0.5;
+            spec.sim.events = rng.next_f64() < 0.5;
             spec.stop.grad_tol = 10f64.powf(rng.uniform(-12.0, -3.0));
             spec.stop.max_outer = 1 + rng.index(500);
             if rng.next_f64() < 0.4 {

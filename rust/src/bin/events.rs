@@ -1,0 +1,70 @@
+//! `disco-events` — offline converter for structured event streams.
+//!
+//! Reads the JSONL a run wrote via `--events` and renders it:
+//!
+//! ```text
+//! disco-events run.jsonl --chrome trace.json   # open in Perfetto / chrome://tracing
+//! disco-events run.jsonl --csv summary.csv     # per-phase summary as CSV
+//! disco-events run.jsonl --summary             # per-phase summary table (default)
+//! ```
+//!
+//! The Chrome export lays the stream out with one lane per rank (and one
+//! process group per membership epoch), mirroring the paper's Fig. 2 flow
+//! diagrams on the modeled clock.
+
+use disco::obs::{from_jsonl, summarize, to_chrome_trace};
+use disco::util::cli::Args;
+
+fn main() {
+    let args = Args::new(
+        "disco-events",
+        "convert an --events JSONL stream: Chrome trace, summary table, summary CSV",
+    )
+    .opt(
+        "chrome",
+        None,
+        "write a Chrome trace_event JSON to this path (Perfetto / chrome://tracing)",
+    )
+    .opt("csv", None, "write the per-phase summary as CSV to this path")
+    .switch(
+        "summary",
+        "print the per-phase summary table (the default when no output is selected)",
+    );
+    let args = match args.parse_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    let input = args.positionals().first().cloned().ok_or(
+        "usage: disco-events <events.jsonl> [--chrome out.json] [--csv out.csv] [--summary]",
+    )?;
+    let text =
+        std::fs::read_to_string(&input).map_err(|e| format!("cannot read '{input}': {e}"))?;
+    let events = from_jsonl(&text)?;
+    let mut did = false;
+    if let Some(path) = args.get("chrome") {
+        std::fs::write(&path, to_chrome_trace(&events))
+            .map_err(|e| format!("cannot write '{path}': {e}"))?;
+        println!("chrome trace: {} event(s) -> {path}", events.len());
+        did = true;
+    }
+    if let Some(path) = args.get("csv") {
+        std::fs::write(&path, summarize(&events).to_csv())
+            .map_err(|e| format!("cannot write '{path}': {e}"))?;
+        println!("summary csv -> {path}");
+        did = true;
+    }
+    if args.flag("summary") || !did {
+        print!("{}", summarize(&events).render_table(None));
+    }
+    Ok(())
+}

@@ -31,6 +31,11 @@ fn main() {
         .opt("grad-target", Some("1e-8"), "target gradient norm")
         .opt("collective", Some("binomial"), "collective pricing: flat | binomial | ring")
         .opt("seed", Some("42"), "PRNG seed")
+        .opt(
+            "events",
+            None,
+            "fig2: record event streams; write JSONL + Chrome traces under this directory",
+        )
         .with_transport_flags();
     let args = match args.parse_env() {
         Ok(a) => a,
@@ -46,6 +51,7 @@ fn main() {
     cfg.max_outer = args.get_usize("max-outer").unwrap();
     cfg.grad_target = args.get_f64("grad-target").unwrap();
     cfg.seed = args.get_u64("seed").unwrap();
+    cfg.events_dir = args.get("events");
     let calgo = args.get("collective").unwrap();
     match CollectiveAlgo::parse(&calgo) {
         Some(algo) => cfg.cost = cfg.cost.with_algo(algo),
@@ -178,6 +184,10 @@ fn launch_tcp_fig2(args: &Args, cfg: &ExperimentConfig, transport: &TransportCli
     ];
     common.push("--collective".into());
     common.push(args.get("collective").unwrap_or_else(|| "binomial".into()));
+    if let Some(dir) = &cfg.events_dir {
+        common.push("--events".into());
+        common.push(dir.clone());
+    }
 
     let mut children = Vec::new();
     for rank in 0..world {

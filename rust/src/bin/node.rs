@@ -112,6 +112,9 @@ fn experiment_config(args: &Args, world: usize) -> Result<ExperimentConfig, Stri
     cfg.grad_target = args.get_f64("grad-target").map_err(|e| e.to_string())?;
     cfg.seed = args.get_u64("seed").map_err(|e| e.to_string())?;
     cfg.tau = args.get_usize("tau").map_err(|e| e.to_string())?;
+    // For fig2 the spec-level `--events` path is reused as a *directory*:
+    // one JSONL + Chrome-trace pair per traced run lands there.
+    cfg.events_dir = args.get("events");
     let calgo = args.req("collective").map_err(|e| e.to_string())?;
     match CollectiveAlgo::parse(&calgo) {
         Some(algo) => cfg.cost = cfg.cost.with_algo(algo),
@@ -233,6 +236,15 @@ fn cmd_run(args: &Args, transport: &TransportCli) -> Result<(), String> {
                 "  time: simulated {:.3}s (wall {:.3}s)",
                 res.sim_seconds, res.wall_seconds
             );
+            if let Some(path) = args.get("events") {
+                std::fs::write(&path, disco::obs::to_jsonl(&res.events))
+                    .map_err(|e| format!("cannot write '{path}': {e}"))?;
+                println!("  events: {} event(s) -> {path}", res.events.len());
+                print!(
+                    "{}",
+                    disco::obs::summarize(&res.events).render_table(Some(&res.stats))
+                );
+            }
         }
         None => {
             println!("rank {}/{} done (run)", transport.rank, transport.world);

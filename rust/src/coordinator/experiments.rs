@@ -31,6 +31,13 @@ pub struct ExperimentConfig {
     /// Preconditioner sample count (paper default 100). Scaled-down test
     /// datasets must keep τ ≪ n for the paper's regime to apply.
     pub tau: usize,
+    /// When set, fig2 records the structured event stream and writes one
+    /// JSONL + Chrome-trace pair per traced run under this directory.
+    /// Kept apart from `out_dir` so the byte-diffed CSV outputs stay
+    /// exactly what they were without instrumentation (which they are
+    /// anyway — the contract is test-enforced — but the artifact layout
+    /// should not depend on it).
+    pub events_dir: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -44,6 +51,7 @@ impl Default for ExperimentConfig {
             max_outer: 60,
             seed: 42,
             tau: 100,
+            events_dir: None,
         }
     }
 }
@@ -152,6 +160,7 @@ fn figure2_body(
         // function of the seed (CI diffs two back-to-back runs, and diffs
         // a 3-process TCP run against the shm run).
         spec.sim.compute = ComputeModel::modeled();
+        spec.sim.events = cfg.events_dir.is_some();
         let res = match run_one(&ds, &spec) {
             Some(res) => res,
             None => continue, // non-zero rank of a multi-process run
@@ -159,6 +168,18 @@ fn figure2_body(
         produced = true;
         std::fs::create_dir_all(&cfg.out_dir)?;
         std::fs::write(cfg.path(file), res.trace.to_csv())?;
+        if let Some(dir) = &cfg.events_dir {
+            std::fs::create_dir_all(dir)?;
+            // Reuse the trace CSV's slug (disco_s / disco_f / disco_orig)
+            // so the artifact families line up side by side.
+            let slug = file.trim_start_matches("fig2_trace_").trim_end_matches(".csv");
+            let stem = format!("{dir}/fig2_events_{slug}");
+            std::fs::write(format!("{stem}.jsonl"), crate::obs::to_jsonl(&res.events))?;
+            std::fs::write(
+                format!("{stem}.trace.json"),
+                crate::obs::to_chrome_trace(&res.events),
+            )?;
+        }
         let util = res.trace.utilization();
         summary.push_str(&format!(
             "{:<8} utilization {:>5.1}%  (trace → {})\n{}\n",

@@ -20,6 +20,8 @@
 //! * `f32-literal` — `f32` in the f64 numeric spine.
 //! * `uncosted-compute` — floating-point loops in `algorithms/` not
 //!   reachable through `ctx.compute*` (call-graph approximation).
+//! * `raw-print` — `println!`/`eprintln!` in library code outside the CLI
+//!   entrypoints, the obs sinks, and the bench harness.
 //!
 //! Runtime (documented here, enforced by [`crate::net::Checked`]):
 //!
@@ -90,6 +92,10 @@ pub const RULES: &[(&str, &str)] = &[
     (
         "uncosted-compute",
         "floating-point loop in algorithms/ not priced through ctx.compute* (call-graph approx.)",
+    ),
+    (
+        "raw-print",
+        "println!/eprintln!/print!/eprint! outside bin/, main.rs, obs/ sinks, and util/bench.rs (stray prints corrupt machine-read stdout)",
     ),
     (
         "schedule-divergence",

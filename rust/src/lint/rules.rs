@@ -91,6 +91,7 @@ pub fn check_file(f: &SourceFile, costed: &CostedFns) -> Vec<Violation> {
     unseeded_rng(f, &mut out);
     f32_literal(f, &mut out);
     uncosted_compute(f, costed, &mut out);
+    raw_print(f, &mut out);
     out.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
     out
 }
@@ -305,5 +306,43 @@ fn uncosted_compute(f: &SourceFile, costed: &CostedFns, out: &mut Vec<Violation>
                 .to_string(),
             out,
         );
+    }
+}
+
+/// `raw-print`: `println!`/`eprintln!`/`print!`/`eprint!` in library code.
+/// The binaries' stdout is machine-read (CI greps it, `--events` summaries
+/// and figure previews flow through it), so stray prints from deep inside
+/// the library corrupt those surfaces and differ per rank. Printing is
+/// confined to the CLI entrypoints (`bin/`, `main.rs`), the obs sinks
+/// (`obs/`), and the bench harness; operator-facing progress lines
+/// elsewhere carry an explicit allow.
+fn raw_print(f: &SourceFile, out: &mut Vec<Violation>) {
+    let whitelisted = f.in_dir("bin/")
+        || f.path == "main.rs"
+        || f.in_dir("obs/")
+        || f.path == "util/bench.rs";
+    if whitelisted {
+        return;
+    }
+    const MACROS: &[&str] = &["println", "eprintln", "print", "eprint"];
+    for i in 0..f.toks.len() {
+        let t = &f.toks[i];
+        let hit = t.kind == TokKind::Ident
+            && MACROS.contains(&t.text.as_str())
+            && f.toks.get(i + 1).is_some_and(|n| n.is_punct('!'));
+        if hit {
+            emit(
+                f,
+                i,
+                "raw-print",
+                format!(
+                    "{}! in library code — stdout/stderr are machine-read surfaces; \
+                     route output through the CLI layer or an obs sink, or justify \
+                     an operator-facing line with an allow comment",
+                    t.text
+                ),
+                out,
+            );
+        }
     }
 }

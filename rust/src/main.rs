@@ -120,6 +120,19 @@ fn print_result(res: &disco::algorithms::RunResult, records: bool) {
     }
 }
 
+/// `--events <path>`: write the structured stream as JSONL and print the
+/// per-phase summary (with the priced/unpriced wire ledger).
+fn write_events(args: &Args, res: &disco::algorithms::RunResult) -> Result<(), String> {
+    let Some(path) = args.get("events") else {
+        return Ok(());
+    };
+    std::fs::write(&path, disco::obs::to_jsonl(&res.events))
+        .map_err(|e| format!("cannot write '{path}': {e}"))?;
+    println!("  events: {} event(s) -> {path}", res.events.len());
+    print!("{}", disco::obs::summarize(&res.events).render_table(Some(&res.stats)));
+    Ok(())
+}
+
 fn describe(spec: &RunSpec, how: &str) -> String {
     let tau = spec
         .algo
@@ -162,6 +175,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                 println!("  adaptive load balancing: {recuts} mid-run re-cut(s)");
             }
             print_result(&res, args.flag("records"));
+            write_events(args, &res)?;
         }
         TransportKind::Tcp => {
             // One genuine OS process per rank; the fleet size overrides
@@ -177,6 +191,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                     let how = format!("over tcp on {} processes", spec.sim.m);
                     println!("{}", describe(&spec, &how));
                     print_result(&res, args.flag("records"));
+                    write_events(args, &res)?;
                 }
                 None => println!("rank {}/{} done", transport.rank, transport.world),
             }

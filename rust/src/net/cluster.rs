@@ -60,6 +60,7 @@ use crate::net::trace::Trace;
 use crate::net::transport::checked::Checked;
 use crate::net::transport::shm::{Blackboard, PeerAbort, ShmTransport};
 use crate::net::transport::{EpochFault, NodeCtx, StragglerConfig};
+use crate::obs::Event;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Instant;
@@ -76,6 +77,9 @@ pub struct ClusterRun<T> {
     pub sim_seconds: f64,
     /// Real wallclock of the whole run (diagnostics).
     pub wall_seconds: f64,
+    /// Structured event stream, rank order (empty unless
+    /// [`Cluster::with_obs`] enabled recording).
+    pub events: Vec<Event>,
 }
 
 /// Cluster configuration.
@@ -97,6 +101,10 @@ pub struct Cluster {
     /// Collective-schedule checking ([`Checked`]): `None` consults the
     /// `DISCO_CHECKED` env var, `Some(v)` forces the mode (tests).
     pub checked: Option<bool>,
+    /// Structured event recording ([`crate::obs`]); off by default. Only
+    /// appends to rank-local memory — never perturbs clocks, stats, or
+    /// traces.
+    pub obs: bool,
 }
 
 impl Cluster {
@@ -110,6 +118,7 @@ impl Cluster {
             compute: ComputeModel::Measured,
             initial_stats: None,
             checked: None,
+            obs: false,
         }
     }
 
@@ -158,6 +167,12 @@ impl Cluster {
         self
     }
 
+    /// Record the structured event stream ([`crate::obs`]) on every node.
+    pub fn with_obs(mut self, on: bool) -> Self {
+        self.obs = on;
+        self
+    }
+
     /// Run the SPMD closure on every node. The closure receives the node
     /// context and must follow SPMD discipline: all nodes execute the same
     /// sequence of collectives. A panic on any node aborts the whole run
@@ -174,11 +189,12 @@ impl Cluster {
         }
         let checked = self.checked.unwrap_or_else(Checked::<ShmTransport>::env_enabled);
         let wall = Instant::now();
-        let mut outputs: Vec<Option<(T, f64, Trace)>> = Vec::with_capacity(self.m);
+        let mut outputs: Vec<Option<(T, f64, Trace, Vec<Event>)>> = Vec::with_capacity(self.m);
         for _ in 0..self.m {
             outputs.push(None);
         }
         let trace_enabled = self.trace;
+        let obs_enabled = self.obs;
         std::thread::scope(|scope| {
             let f = &f;
             let mut handles = Vec::new();
@@ -193,13 +209,19 @@ impl Cluster {
                     let mut ctx = NodeCtx::new(transport)
                         .with_speed(speed)
                         .with_compute(compute_model)
-                        .with_trace(trace_enabled);
+                        .with_trace(trace_enabled)
+                        .with_obs(obs_enabled);
                     if let Some(cfg) = straggler {
                         ctx = ctx.with_straggler(cfg);
                     }
                     match catch_unwind(AssertUnwindSafe(|| f(&mut ctx))) {
                         Ok(out) => {
-                            *slot = Some((out, ctx.clock, std::mem::take(&mut ctx.trace)));
+                            *slot = Some((
+                                out,
+                                ctx.clock,
+                                std::mem::take(&mut ctx.trace),
+                                ctx.obs.take(),
+                            ));
                         }
                         Err(payload) => {
                             // Peer-abort panics are secondary: keep only
@@ -222,7 +244,11 @@ impl Cluster {
                                             .map(|f| f.to_string())
                                     })
                                     .unwrap_or_else(|| "node panicked".into());
-                                board_fail.record_failure(rank, msg);
+                                // The flight-recorder tail turns "node
+                                // failed" into "node failed right after
+                                // these collectives".
+                                let tail = ctx.flight().tail_suffix(rank);
+                                board_fail.record_failure(rank, format!("{msg}{tail}"));
                             }
                             // Wake everyone blocked in (or entering) a
                             // collective so the run tears down instead of
@@ -242,12 +268,14 @@ impl Cluster {
         let wall_seconds = wall.elapsed().as_secs_f64();
         let mut trace = Trace::new(self.m);
         let mut sim = 0.0;
+        let mut events = Vec::new();
         let outs: Vec<T> = outputs
             .into_iter()
             .map(|o| {
-                let (out, clock, t) = o.expect("node produced no output");
+                let (out, clock, t, ev) = o.expect("node produced no output");
                 sim = f64::max(sim, clock);
                 trace.merge(t);
+                events.extend(ev);
                 out
             })
             .collect();
@@ -257,6 +285,7 @@ impl Cluster {
             trace,
             sim_seconds: sim,
             wall_seconds,
+            events,
         }
     }
 }

@@ -37,9 +37,18 @@ pub struct CommStats {
     /// counterpart to the *priced* `modeled_comm_seconds` — the two
     /// coexist so a real run can be compared against its α–β model.
     /// Handshake, metrics-channel, and end-of-run report traffic is
-    /// deliberately excluded (free and unaccounted by contract), so this
-    /// undercounts what the OS socket counters see for a whole process.
+    /// deliberately excluded (free by contract) — it is accounted
+    /// separately in `unpriced_wire_bytes`.
     pub wire_bytes: u64,
+    /// Bytes this rank moved outside priced collectives: rendezvous
+    /// handshake, the free metric channel, schedule-validation rounds
+    /// (`DISCO_CHECKED=1`), and report traffic sent before the final
+    /// snapshot. Always 0 under the shm simulation. Together with
+    /// `wire_bytes` this matches what the OS socket counters see for the
+    /// process up to the snapshot point; the final end-of-run report
+    /// frames themselves are exchanged *after* the ledger is captured
+    /// and so are never counted.
+    pub unpriced_wire_bytes: u64,
 }
 
 impl CommStats {
@@ -84,6 +93,7 @@ impl CommStats {
         put_u64(buf, self.reduce);
         put_u64(buf, self.all_gather);
         put_u64(buf, self.wire_bytes);
+        put_u64(buf, self.unpriced_wire_bytes);
     }
 
     /// Inverse of [`CommStats::encode`].
@@ -99,6 +109,7 @@ impl CommStats {
             reduce: r.u64()?,
             all_gather: r.u64()?,
             wire_bytes: r.u64()?,
+            unpriced_wire_bytes: r.u64()?,
         })
     }
 
@@ -113,6 +124,7 @@ impl CommStats {
         self.reduce += o.reduce;
         self.all_gather += o.all_gather;
         self.wire_bytes += o.wire_bytes;
+        self.unpriced_wire_bytes += o.unpriced_wire_bytes;
     }
 }
 
@@ -120,13 +132,14 @@ impl std::fmt::Display for CommStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "rounds={} (scalar {}) doubles={} ({} KB) comm_time={:.3}ms wire={}B [ra={} bc={} rd={} ag={}]",
+            "rounds={} (scalar {}) doubles={} ({} KB) comm_time={:.3}ms wire={}B (+{}B unpriced) [ra={} bc={} rd={} ag={}]",
             self.vector_rounds,
             self.scalar_rounds,
             self.vector_doubles,
             self.vector_bytes() / 1024,
             self.modeled_comm_seconds * 1e3,
             self.wire_bytes,
+            self.unpriced_wire_bytes,
             self.reduce_all,
             self.broadcast,
             self.reduce,
@@ -173,6 +186,7 @@ mod tests {
         s.record(CollectiveKind::ReduceAll, 1024, 1.25e-4);
         s.record(CollectiveKind::Broadcast, 2, 3.0f64.sqrt() * 1e-6);
         s.wire_bytes = 987_654_321;
+        s.unpriced_wire_bytes = 123_456_789;
         let mut buf = Vec::new();
         s.encode(&mut buf);
         let mut r = ByteReader::new(&buf);

@@ -205,17 +205,39 @@ impl Trace {
         min / max
     }
 
-    /// ASCII Gantt chart, `width` characters across the makespan.
+    /// Widest Gantt row [`Trace::render_ascii`] will draw; wider requests
+    /// are capped so a long run never wraps into an unreadable smear on a
+    /// normal terminal.
+    pub const MAX_ASCII_WIDTH: usize = 160;
+
+    /// ASCII Gantt chart, `width` characters across the makespan
+    /// (clamped to [`Trace::MAX_ASCII_WIDTH`]). Each column buckets
+    /// `makespan / width` seconds with priority rendering
+    /// (█ over ▒ over ·); when the busiest node has more segments than
+    /// columns the chart says so with an explicit `compression: Nx`
+    /// note instead of silently swallowing short phases.
     pub fn render_ascii(&self, width: usize) -> String {
         let end = self.end_time();
         if end == 0.0 {
             return String::from("(empty trace)\n");
         }
+        let width = width.clamp(1, Self::MAX_ASCII_WIDTH);
         let mut out = String::new();
         out.push_str(&format!(
             "time →  0 .. {:.3} ms   (█ compute, ▒ comm, · idle)\n",
             end * 1e3
         ));
+        let busiest = (0..self.m)
+            .map(|n| self.segments.iter().filter(|s| s.node == n).count())
+            .max()
+            .unwrap_or(0);
+        if busiest > width {
+            let factor = busiest.div_ceil(width);
+            out.push_str(&format!(
+                "compression: {factor}x — up to {factor} segments share a column, \
+                 rendered by priority (use --trace CSV for the full resolution)\n"
+            ));
+        }
         for node in 0..self.m {
             let mut row = vec!['·'; width];
             for s in self.segments.iter().filter(|s| s.node == node) {
@@ -322,6 +344,28 @@ mod tests {
         assert!(s.contains("node 1"));
         assert!(s.contains('█'));
         assert!(s.contains('▒'));
+    }
+
+    #[test]
+    fn long_runs_compress_with_a_note_instead_of_wrapping() {
+        let mut t = Trace::new(1);
+        for i in 0..2000 {
+            let (a, b) = (i as f64 * 1e-3, (i + 1) as f64 * 1e-3);
+            let act = if i % 2 == 0 { Activity::Compute } else { Activity::Comm };
+            t.push(seg(0, a, b, act));
+        }
+        let s = t.render_ascii(100_000);
+        assert!(s.contains("compression:"), "{s}");
+        let row = s.lines().find(|l| l.starts_with("node 0")).unwrap();
+        assert!(
+            row.chars().count() <= Trace::MAX_ASCII_WIDTH + "node 0 ||".len(),
+            "row too wide: {} chars",
+            row.chars().count()
+        );
+        // Short traces stay note-free.
+        let mut small = Trace::new(1);
+        small.push(seg(0, 0.0, 1.0, Activity::Compute));
+        assert!(!small.render_ascii(80).contains("compression:"));
     }
 
     #[test]

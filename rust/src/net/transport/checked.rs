@@ -36,26 +36,13 @@
 //! wrap their transports unconditionally and consult the env var, so one
 //! variable covers every test binary.
 
-use std::collections::VecDeque;
-
 use crate::net::cost::CollectiveKind;
 use crate::net::stats::CommStats;
 use crate::net::transport::{CollectiveOutcome, Transport};
+use crate::obs::FlightRecorder;
 
-/// How many completed calls the ring buffer keeps for divergence reports.
-const RING_CAP: usize = 16;
-/// How many ring entries a report prints.
-const RING_SHOWN: usize = 8;
 /// Words per rank in the validation descriptor.
 const DESC_WORDS: usize = 5;
-
-/// One completed collective as the ring buffer remembers it.
-#[derive(Clone, Copy, Debug)]
-struct RingEntry {
-    call: u64,
-    kind: CollectiveKind,
-    count: usize,
-}
 
 /// One rank's view of a collective about to execute, as carried by the
 /// validation round. All fields are small non-negative integers, so they
@@ -123,12 +110,14 @@ fn kind_name(code: u8) -> &'static str {
 pub struct Checked<T: Transport> {
     inner: T,
     enabled: bool,
-    /// Completed (validated + forwarded) collective calls on this rank.
-    calls: u64,
-    recent: VecDeque<RingEntry>,
+    /// Ring of completed (validated + forwarded) collective calls —
+    /// PR 7's fixed 16-deep ring, generalized to the shared
+    /// [`FlightRecorder`] (depth from `DISCO_FLIGHT`).
+    flight: FlightRecorder,
     /// Wire bytes spent on validation rounds, subtracted from
     /// [`Transport::wire_bytes`] so the measured ledger matches an
-    /// unchecked run exactly.
+    /// unchecked run exactly. They stay visible in
+    /// [`Transport::wire_bytes_total`] as unpriced traffic.
     validation_wire: u64,
 }
 
@@ -138,8 +127,7 @@ impl<T: Transport> Checked<T> {
         Checked {
             inner,
             enabled,
-            calls: 0,
-            recent: VecDeque::with_capacity(RING_CAP),
+            flight: FlightRecorder::from_env(),
             validation_wire: 0,
         }
     }
@@ -166,7 +154,7 @@ impl<T: Transport> Checked<T> {
 
     /// Completed collective calls on this rank (0 when disabled).
     pub fn calls(&self) -> u64 {
-        self.calls
+        self.flight.seq()
     }
 
     /// The wrapped transport (backend-specific surface: elastic
@@ -201,7 +189,7 @@ impl<T: Transport> Checked<T> {
             true,
         );
         self.validation_wire += self.inner.wire_bytes() - wire_before;
-        let call = self.calls + 1;
+        let call = self.flight.seq() + 1;
         if out.result.len() != DESC_WORDS * world {
             // A short table means a peer's checker is not running the
             // same protocol — itself a schedule divergence.
@@ -253,29 +241,12 @@ impl<T: Transport> Checked<T> {
         if !details.is_empty() {
             msg.push_str(&format!(" ({})", details.join(", ")));
         }
-        if !self.recent.is_empty() {
-            let tail: Vec<String> = self
-                .recent
-                .iter()
-                .rev()
-                .take(RING_SHOWN)
-                .rev()
-                .map(|e| format!("#{} {}({})", e.call, kind_name(kind_code(e.kind)), e.count))
-                .collect();
-            msg.push_str(&format!(
-                "; last completed on rank {rank}: {}",
-                tail.join(", ")
-            ));
-        }
+        msg.push_str(&self.flight.tail_suffix(rank));
         msg
     }
 
     fn record(&mut self, kind: CollectiveKind, count: usize) {
-        self.calls += 1;
-        if self.recent.len() == RING_CAP {
-            self.recent.pop_front();
-        }
-        self.recent.push_back(RingEntry { call: self.calls, kind, count });
+        self.flight.record(|| format!("{}({count})", kind_name(kind_code(kind))));
     }
 }
 
@@ -313,6 +284,12 @@ impl<T: Transport> Transport for Checked<T> {
 
     fn wire_bytes(&self) -> u64 {
         self.inner.wire_bytes() - self.validation_wire
+    }
+
+    fn wire_bytes_total(&self) -> u64 {
+        // Validation traffic is real wire movement: absent from the
+        // priced ledger, present in the total (= unpriced).
+        self.inner.wire_bytes_total()
     }
 
     fn global_stats(&self) -> Option<CommStats> {

@@ -19,8 +19,9 @@
 //! 2. [`NodeCtx`] — the per-rank context generic over a `Transport`. It
 //!    owns everything backend-independent: the simulated clock, compute
 //!    accounting ([`ComputeModel`]), per-node speed and straggler
-//!    injection, the [`CommStats`] mirror, and the Figure-2 activity
-//!    trace.
+//!    injection, the [`CommStats`] mirror, the Figure-2 activity
+//!    trace, and the structured event stream + flight recorder
+//!    ([`crate::obs`] — append-only, invisible to the priced timeline).
 //! 3. [`Collectives`] — the trait the *algorithms* are written against
 //!    (`reduce_all`, `broadcast`, `reduce`, `all_gather_concat`,
 //!    `barrier`, the scalar bundles, the free metrics channel, and the
@@ -61,6 +62,7 @@ pub use tcp::{ElasticOptions, ReformInfo, TcpOptions, TcpTransport};
 use crate::net::cost::{CollectiveKind, ComputeModel};
 use crate::net::stats::CommStats;
 use crate::net::trace::{Activity, Segment, Trace};
+use crate::obs::{EventKind, EventRecorder, FlightRecorder, Phase};
 use crate::util::prng::Xoshiro256pp;
 use std::time::Instant;
 
@@ -228,6 +230,15 @@ pub trait Transport {
         0
     }
 
+    /// Cumulative bytes including the deliberately-unpriced traffic
+    /// (rendezvous handshake, metric channel, schedule-validation
+    /// rounds). Defaults to [`wire_bytes`](Transport::wire_bytes);
+    /// backends and decorators that move unpriced bytes override it so
+    /// `wire_bytes_total() - wire_bytes()` is the unpriced ledger.
+    fn wire_bytes_total(&self) -> u64 {
+        self.wire_bytes()
+    }
+
     /// Snapshot of a backend-global priced ledger, when the backend keeps
     /// one (the shm blackboard does; TCP's ledger *is* the per-rank mirror,
     /// so it returns `None`). Session checkpoints capture this so a resumed
@@ -266,6 +277,10 @@ impl<T: Transport + ?Sized> Transport for &mut T {
 
     fn wire_bytes(&self) -> u64 {
         (**self).wire_bytes()
+    }
+
+    fn wire_bytes_total(&self) -> u64 {
+        (**self).wire_bytes_total()
     }
 
     fn global_stats(&self) -> Option<CommStats> {
@@ -365,6 +380,14 @@ pub struct NodeCtx<T: Transport> {
     /// Node-local trace (merged by the driver at the end).
     pub trace: Trace,
     trace_enabled: bool,
+    /// Structured event stream (disabled by default; see [`crate::obs`]).
+    /// Recording appends to a rank-local vector and never touches the
+    /// clock, stats, or trace — bit-invisible to the priced timeline.
+    pub obs: EventRecorder,
+    /// Ring of recent collective calls whose tail lands in failure
+    /// reports (depth from `DISCO_FLIGHT`). Shared: the cluster driver
+    /// keeps a clone so the tail survives this context's unwind.
+    flight: FlightRecorder,
 }
 
 impl<T: Transport> NodeCtx<T> {
@@ -386,6 +409,8 @@ impl<T: Transport> NodeCtx<T> {
             local_stats: CommStats::default(),
             trace: Trace::new(m),
             trace_enabled: false,
+            obs: EventRecorder::disabled(),
+            flight: FlightRecorder::from_env(),
         }
     }
 
@@ -419,10 +444,43 @@ impl<T: Transport> NodeCtx<T> {
         self
     }
 
+    /// Enable (or keep disabled) the structured event stream.
+    pub fn with_obs(mut self, on: bool) -> Self {
+        if on {
+            self.obs = EventRecorder::new(self.rank);
+        }
+        self
+    }
+
+    /// Adopt an existing recorder (elastic re-forms carry the stream
+    /// across epochs into the fresh context).
+    pub fn with_obs_recorder(mut self, obs: EventRecorder) -> Self {
+        self.obs = obs;
+        self.obs.set_rank(self.rank);
+        self
+    }
+
+    /// Share a flight-recorder handle (the cluster driver keeps a clone
+    /// per rank so failure reports can dump the tail post-unwind).
+    pub fn with_flight(mut self, flight: FlightRecorder) -> Self {
+        self.flight = flight;
+        self
+    }
+
+    /// This context's flight-recorder handle.
+    pub fn flight(&self) -> &FlightRecorder {
+        &self.flight
+    }
+
     /// Direct access to the underlying transport (end-of-run report
     /// exchange; not for mid-run communication).
     pub fn transport_mut(&mut self) -> &mut T {
         &mut self.transport
+    }
+
+    /// Read-only transport access (wire-byte ledger snapshots).
+    pub fn transport(&self) -> &T {
+        &self.transport
     }
 
     /// Draw the straggler factor for the next compute segment (1.0 when
@@ -463,6 +521,22 @@ impl<T: Transport> NodeCtx<T> {
                 end: self.clock + dt,
                 activity: Activity::Compute,
                 label,
+            });
+        }
+        // Events are recorded after the costs are fixed and only append
+        // to the rank-local stream — the priced timeline cannot see them.
+        self.obs.emit(self.clock, || EventKind::SpanBegin {
+            phase: Phase::Compute,
+            label: label.to_string(),
+        });
+        self.obs.emit(self.clock + dt, || EventKind::SpanEnd {
+            phase: Phase::Compute,
+            label: label.to_string(),
+        });
+        if factor > 1.0 {
+            self.obs.emit(self.clock, || EventKind::Incident {
+                kind: "stall".to_string(),
+                detail: format!("{label}: straggle ×{factor}"),
             });
         }
         self.clock += dt;
@@ -543,10 +617,12 @@ impl<T: Transport> NodeCtx<T> {
         metric: bool,
     ) -> Vec<f64> {
         let arrival = self.clock;
+        let payload_len = payload.len();
         let wire_before = self.transport.wire_bytes();
         let out = self
             .transport
             .collective(kind, root, k_doubles, payload, arrival, metric);
+        self.flight.record(|| format!("{kind:?}({payload_len})"));
         if !metric {
             self.local_stats
                 .record(kind, out.priced_doubles, (out.depart - out.comm_start).max(0.0));
@@ -571,6 +647,18 @@ impl<T: Transport> NodeCtx<T> {
                     label: kind.name().to_string(),
                 });
             }
+        }
+        // Span over the priced window (metric collectives are free and
+        // invisible, matching the stats/trace contract).
+        if !metric && out.depart > out.comm_start {
+            self.obs.emit(out.comm_start, || EventKind::SpanBegin {
+                phase: Phase::Collective,
+                label: kind.name().to_string(),
+            });
+            self.obs.emit(out.depart, || EventKind::SpanEnd {
+                phase: Phase::Collective,
+                label: kind.name().to_string(),
+            });
         }
         self.clock = out.depart;
         out.result
@@ -768,6 +856,32 @@ pub trait Collectives {
         self.all_gather_concat(part)
     }
 
+    // --- observability hooks (structured event layer) ----------------------
+
+    /// Whether the structured event stream is recording. Emission sites
+    /// must guard with this before building an [`EventKind`] so that
+    /// uninstrumented runs pay nothing:
+    /// `if ctx.obs_enabled() { ctx.obs_emit(...) }`.
+    fn obs_enabled(&self) -> bool {
+        false
+    }
+
+    /// Record one event stamped at the current modeled clock and the
+    /// current `(epoch, rank, outer)` coordinates. No-op by default.
+    fn obs_emit(&mut self, _kind: EventKind) {}
+
+    /// Stamp subsequent events with this outer-iteration number.
+    fn obs_set_outer(&mut self, _outer: u32) {}
+
+    /// Stamp subsequent events with this membership epoch.
+    fn obs_set_epoch(&mut self, _epoch: u32) {}
+
+    /// Flight-recorder tail for failure reports (empty when nothing was
+    /// recorded; see [`crate::obs::FlightRecorder::tail_suffix`]).
+    fn flight_tail(&self) -> String {
+        String::new()
+    }
+
     // --- checkpoint hooks (session resume) ---------------------------------
 
     /// Snapshot the backend-independent context state (clock, stats mirror,
@@ -858,6 +972,27 @@ impl<T: Transport> Collectives for NodeCtx<T> {
 
     fn barrier(&mut self) {
         NodeCtx::barrier(self)
+    }
+
+    fn obs_enabled(&self) -> bool {
+        self.obs.is_enabled()
+    }
+
+    fn obs_emit(&mut self, kind: EventKind) {
+        let t = self.clock;
+        self.obs.emit(t, || kind);
+    }
+
+    fn obs_set_outer(&mut self, outer: u32) {
+        self.obs.set_outer(outer);
+    }
+
+    fn obs_set_epoch(&mut self, epoch: u32) {
+        self.obs.set_epoch(epoch);
+    }
+
+    fn flight_tail(&self) -> String {
+        self.flight.tail_suffix(self.rank)
     }
 
     fn export_state(&self) -> CtxState {

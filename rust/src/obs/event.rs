@@ -1,0 +1,484 @@
+//! Typed structured events and their codecs.
+//!
+//! One [`Event`] is a `(epoch, rank, outer, sim_time)`-stamped record of
+//! something the run did: a phase span opening or closing, a per-outer
+//! counter sample, a solver step observation, or an incident (stall,
+//! fault, divergence). Timestamps are **modeled-clock** seconds — the
+//! same clock the traces and CommStats are priced on — so an event stream
+//! from the shm thread cluster and one from a TCP fleet line up exactly.
+//!
+//! Two codecs, both deterministic:
+//!
+//! * **binary** (little-endian, [`crate::util::bytes`] idioms) — used to
+//!   ship per-rank streams inside the end-of-run node reports;
+//! * **JSONL** ([`crate::util::json`], sorted keys) — the on-disk sink
+//!   format (`--events out.jsonl`) and the input to `disco-events`.
+
+use crate::util::bytes::{put_f64, put_u16, put_u32, put_u64, put_u8, ByteReader};
+use crate::util::json::{self, Json};
+
+/// Which phase of the run a span covers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// One outer (Newton) iteration.
+    Outer,
+    /// One inner PCG step.
+    Pcg,
+    /// One collective call (priced region between `comm_start` and
+    /// `depart`).
+    Collective,
+    /// One priced compute block.
+    Compute,
+    /// A mid-run partition handoff (re-cut + re-shard).
+    Handoff,
+    /// Elastic membership: tearing down / re-forming a numbered epoch.
+    EpochReform,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Outer => "outer",
+            Phase::Pcg => "pcg",
+            Phase::Collective => "collective",
+            Phase::Compute => "compute",
+            Phase::Handoff => "handoff",
+            Phase::EpochReform => "epoch_reform",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Phase> {
+        match s {
+            "outer" => Some(Phase::Outer),
+            "pcg" => Some(Phase::Pcg),
+            "collective" => Some(Phase::Collective),
+            "compute" => Some(Phase::Compute),
+            "handoff" => Some(Phase::Handoff),
+            "epoch_reform" => Some(Phase::EpochReform),
+            _ => None,
+        }
+    }
+
+    fn code(&self) -> u8 {
+        match self {
+            Phase::Outer => 0,
+            Phase::Pcg => 1,
+            Phase::Collective => 2,
+            Phase::Compute => 3,
+            Phase::Handoff => 4,
+            Phase::EpochReform => 5,
+        }
+    }
+
+    fn from_code(code: u8) -> Result<Phase, String> {
+        match code {
+            0 => Ok(Phase::Outer),
+            1 => Ok(Phase::Pcg),
+            2 => Ok(Phase::Collective),
+            3 => Ok(Phase::Compute),
+            4 => Ok(Phase::Handoff),
+            5 => Ok(Phase::EpochReform),
+            other => Err(format!("unknown phase code {other}")),
+        }
+    }
+
+    pub fn all() -> &'static [Phase] {
+        &[
+            Phase::Outer,
+            Phase::Pcg,
+            Phase::Collective,
+            Phase::Compute,
+            Phase::Handoff,
+            Phase::EpochReform,
+        ]
+    }
+}
+
+/// What happened (the variant payload of an [`Event`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// A phase opened at the event's `sim_time`.
+    SpanBegin { phase: Phase, label: String },
+    /// The matching phase closed.
+    SpanEnd { phase: Phase, label: String },
+    /// Per-outer-iteration deltas of the priced communication counters.
+    /// Wire bytes are deliberately absent: they are backend-measured
+    /// (0 on shm), so leaving them out keeps the shm and TCP event
+    /// streams of one seeded run byte-identical.
+    Counter {
+        rounds: u64,
+        scalar_rounds: u64,
+        doubles: u64,
+        comm_seconds: f64,
+    },
+    /// One solver step observation (a Figure-3 data point as an event).
+    Step {
+        grad_norm: f64,
+        fval: f64,
+        inner_iters: u32,
+        rounds: u64,
+    },
+    /// Something irregular: a straggler stall, an injected fault, an
+    /// epoch re-form, a schedule divergence.
+    Incident { kind: String, detail: String },
+}
+
+impl EventKind {
+    fn tag(&self) -> u8 {
+        match self {
+            EventKind::SpanBegin { .. } => 0,
+            EventKind::SpanEnd { .. } => 1,
+            EventKind::Counter { .. } => 2,
+            EventKind::Step { .. } => 3,
+            EventKind::Incident { .. } => 4,
+        }
+    }
+
+    /// JSONL `ev` field value.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::SpanBegin { .. } => "span_begin",
+            EventKind::SpanEnd { .. } => "span_end",
+            EventKind::Counter { .. } => "counter",
+            EventKind::Step { .. } => "step",
+            EventKind::Incident { .. } => "incident",
+        }
+    }
+}
+
+/// One stamped event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    /// Elastic-membership epoch (0 for fixed-membership runs).
+    pub epoch: u32,
+    pub rank: u32,
+    /// Outer iteration the event belongs to (0 before the first step).
+    pub outer: u32,
+    /// Modeled-clock seconds.
+    pub sim_time: f64,
+    pub kind: EventKind,
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    // Labels are short human strings; u16 length caps them at 64 KiB.
+    let bytes = s.as_bytes();
+    put_u16(buf, bytes.len().min(u16::MAX as usize) as u16);
+    buf.extend_from_slice(&bytes[..bytes.len().min(u16::MAX as usize)]);
+}
+
+fn read_str(r: &mut ByteReader) -> Result<String, String> {
+    let len = r.u16()? as usize;
+    let bytes = r.take(len)?;
+    String::from_utf8(bytes.to_vec()).map_err(|_| "event string is not utf-8".to_string())
+}
+
+impl Event {
+    /// Append the little-endian binary form (report codec).
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        put_u8(buf, self.kind.tag());
+        put_u32(buf, self.epoch);
+        put_u32(buf, self.rank);
+        put_u32(buf, self.outer);
+        put_f64(buf, self.sim_time);
+        match &self.kind {
+            EventKind::SpanBegin { phase, label } | EventKind::SpanEnd { phase, label } => {
+                put_u8(buf, phase.code());
+                put_str(buf, label);
+            }
+            EventKind::Counter { rounds, scalar_rounds, doubles, comm_seconds } => {
+                put_u64(buf, *rounds);
+                put_u64(buf, *scalar_rounds);
+                put_u64(buf, *doubles);
+                put_f64(buf, *comm_seconds);
+            }
+            EventKind::Step { grad_norm, fval, inner_iters, rounds } => {
+                put_f64(buf, *grad_norm);
+                put_f64(buf, *fval);
+                put_u32(buf, *inner_iters);
+                put_u64(buf, *rounds);
+            }
+            EventKind::Incident { kind, detail } => {
+                put_str(buf, kind);
+                put_str(buf, detail);
+            }
+        }
+    }
+
+    pub fn decode(r: &mut ByteReader) -> Result<Event, String> {
+        let tag = r.u8()?;
+        let epoch = r.u32()?;
+        let rank = r.u32()?;
+        let outer = r.u32()?;
+        let sim_time = r.f64()?;
+        let kind = match tag {
+            0 | 1 => {
+                let phase = Phase::from_code(r.u8()?)?;
+                let label = read_str(r)?;
+                if tag == 0 {
+                    EventKind::SpanBegin { phase, label }
+                } else {
+                    EventKind::SpanEnd { phase, label }
+                }
+            }
+            2 => EventKind::Counter {
+                rounds: r.u64()?,
+                scalar_rounds: r.u64()?,
+                doubles: r.u64()?,
+                comm_seconds: r.f64()?,
+            },
+            3 => EventKind::Step {
+                grad_norm: r.f64()?,
+                fval: r.f64()?,
+                inner_iters: r.u32()?,
+                rounds: r.u64()?,
+            },
+            4 => EventKind::Incident { kind: read_str(r)?, detail: read_str(r)? },
+            other => return Err(format!("unknown event tag {other}")),
+        };
+        Ok(Event { epoch, rank, outer, sim_time, kind })
+    }
+
+    /// One JSONL line (no trailing newline). Keys are sorted by the JSON
+    /// emitter, so the line is deterministic.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("ev", json::s(self.kind.name())),
+            ("epoch", json::num(self.epoch as f64)),
+            ("rank", json::num(self.rank as f64)),
+            ("outer", json::num(self.outer as f64)),
+            ("t", json::num(self.sim_time)),
+        ];
+        match &self.kind {
+            EventKind::SpanBegin { phase, label } | EventKind::SpanEnd { phase, label } => {
+                pairs.push(("phase", json::s(phase.name())));
+                pairs.push(("label", json::s(label)));
+            }
+            EventKind::Counter { rounds, scalar_rounds, doubles, comm_seconds } => {
+                pairs.push(("rounds", json::num(*rounds as f64)));
+                pairs.push(("scalar_rounds", json::num(*scalar_rounds as f64)));
+                pairs.push(("doubles", json::num(*doubles as f64)));
+                pairs.push(("comm_s", json::num(*comm_seconds)));
+            }
+            EventKind::Step { grad_norm, fval, inner_iters, rounds } => {
+                pairs.push(("grad_norm", json::num(*grad_norm)));
+                pairs.push(("fval", json::num(*fval)));
+                pairs.push(("inner_iters", json::num(*inner_iters as f64)));
+                pairs.push(("rounds", json::num(*rounds as f64)));
+            }
+            EventKind::Incident { kind, detail } => {
+                pairs.push(("kind", json::s(kind)));
+                pairs.push(("detail", json::s(detail)));
+            }
+        }
+        json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Event, String> {
+        let field = |key: &str| -> Result<f64, String> {
+            v.get(key)
+                .as_f64()
+                .ok_or_else(|| format!("event: '{key}' missing or not a number"))
+        };
+        let sfield = |key: &str| -> Result<String, String> {
+            v.get(key)
+                .as_str()
+                .map(|s| s.to_string())
+                .ok_or_else(|| format!("event: '{key}' missing or not a string"))
+        };
+        let ev = sfield("ev")?;
+        let kind = match ev.as_str() {
+            "span_begin" | "span_end" => {
+                let phase_name = sfield("phase")?;
+                let phase = Phase::parse(&phase_name)
+                    .ok_or_else(|| format!("event: unknown phase '{phase_name}'"))?;
+                let label = sfield("label")?;
+                if ev == "span_begin" {
+                    EventKind::SpanBegin { phase, label }
+                } else {
+                    EventKind::SpanEnd { phase, label }
+                }
+            }
+            "counter" => EventKind::Counter {
+                rounds: field("rounds")? as u64,
+                scalar_rounds: field("scalar_rounds")? as u64,
+                doubles: field("doubles")? as u64,
+                comm_seconds: field("comm_s")?,
+            },
+            "step" => EventKind::Step {
+                grad_norm: field("grad_norm")?,
+                fval: field("fval")?,
+                inner_iters: field("inner_iters")? as u32,
+                rounds: field("rounds")? as u64,
+            },
+            "incident" => EventKind::Incident { kind: sfield("kind")?, detail: sfield("detail")? },
+            other => return Err(format!("event: unknown ev '{other}'")),
+        };
+        Ok(Event {
+            epoch: field("epoch")? as u32,
+            rank: field("rank")? as u32,
+            outer: field("outer")? as u32,
+            sim_time: field("t")?,
+            kind,
+        })
+    }
+}
+
+/// Encode a stream as `u32 count` + events (report codec framing).
+pub fn encode_events(buf: &mut Vec<u8>, events: &[Event]) {
+    put_u32(buf, events.len() as u32);
+    for e in events {
+        e.encode_into(buf);
+    }
+}
+
+pub fn decode_events(r: &mut ByteReader) -> Result<Vec<Event>, String> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        out.push(Event::decode(r)?);
+    }
+    Ok(out)
+}
+
+/// Render a stream as JSONL (one event per line, trailing newline).
+pub fn to_jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&e.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL stream (blank lines ignored).
+pub fn from_jsonl(text: &str) -> Result<Vec<Event>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        out.push(Event::from_json(&v).map_err(|e| format!("line {}: {e}", i + 1))?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// One sample of every variant with awkward payloads (empty strings,
+    /// huge counters, negative-zero and subnormal floats).
+    pub(crate) fn sample_events() -> Vec<Event> {
+        vec![
+            Event {
+                epoch: 0,
+                rank: 0,
+                outer: 0,
+                sim_time: 0.0,
+                kind: EventKind::SpanBegin { phase: Phase::Outer, label: "outer:0".into() },
+            },
+            Event {
+                epoch: 3,
+                rank: 2,
+                outer: 7,
+                sim_time: -0.0,
+                kind: EventKind::SpanEnd { phase: Phase::EpochReform, label: String::new() },
+            },
+            Event {
+                epoch: 1,
+                rank: 1,
+                outer: 2,
+                sim_time: 1.25e-3,
+                kind: EventKind::Counter {
+                    rounds: u64::MAX >> 12,
+                    scalar_rounds: 0,
+                    doubles: 987_654_321,
+                    comm_seconds: f64::MIN_POSITIVE,
+                },
+            },
+            Event {
+                epoch: 0,
+                rank: 3,
+                outer: 42,
+                sim_time: 17.5,
+                kind: EventKind::Step {
+                    grad_norm: 1e-9,
+                    fval: -0.6931471805599453,
+                    inner_iters: 13,
+                    rounds: 512,
+                },
+            },
+            Event {
+                epoch: 2,
+                rank: 0,
+                outer: 9,
+                sim_time: 3.0,
+                kind: EventKind::Incident {
+                    kind: "stall".into(),
+                    detail: "straggle ×4 — émoji λ".into(),
+                },
+            },
+        ]
+    }
+
+    #[test]
+    fn binary_codec_round_trips_every_variant() {
+        // Also exercise every Phase through the span variants.
+        let mut events = sample_events();
+        for (i, &phase) in Phase::all().iter().enumerate() {
+            events.push(Event {
+                epoch: 0,
+                rank: i as u32,
+                outer: i as u32,
+                sim_time: i as f64 * 0.5,
+                kind: EventKind::SpanBegin { phase, label: format!("p{i}") },
+            });
+        }
+        let mut buf = Vec::new();
+        encode_events(&mut buf, &events);
+        let mut r = ByteReader::new(&buf);
+        let back = decode_events(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(events, back);
+        // f64 stamps must survive bit-exactly (the -0.0 sample).
+        assert_eq!(back[1].sim_time.to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn jsonl_round_trips_every_variant() {
+        let events = sample_events();
+        let text = to_jsonl(&events);
+        assert_eq!(text.lines().count(), events.len());
+        let back = from_jsonl(&text).unwrap();
+        assert_eq!(events, back);
+    }
+
+    #[test]
+    fn truncated_binary_stream_is_an_error() {
+        let mut buf = Vec::new();
+        encode_events(&mut buf, &sample_events());
+        for cut in [buf.len() - 1, buf.len() / 2, 5] {
+            let mut r = ByteReader::new(&buf[..cut]);
+            assert!(decode_events(&mut r).is_err(), "cut at {cut} parsed");
+        }
+    }
+
+    #[test]
+    fn bad_jsonl_reports_line_numbers() {
+        let err = from_jsonl("{\"ev\":\"step\"}\n").unwrap_err();
+        assert!(err.starts_with("line 1:"), "{err}");
+        let err = from_jsonl("{\"ev\":\"nope\",\"epoch\":0}\n").unwrap_err();
+        assert!(err.contains("unknown ev"), "{err}");
+    }
+
+    #[test]
+    fn phase_names_round_trip() {
+        for &p in Phase::all() {
+            assert_eq!(Phase::parse(p.name()), Some(p));
+            assert_eq!(Phase::from_code(p.code()).unwrap(), p);
+        }
+        assert_eq!(Phase::parse("bogus"), None);
+        assert!(Phase::from_code(250).is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Flight recorder: a bounded ring of recent call descriptions whose
+//! tail is dumped into failure reports.
+//!
+//! PR 7's schedule checker kept a fixed 16-deep ring of completed
+//! collectives for its divergence reports; this generalizes that ring
+//! into a shared, configurably-deep recorder that every failure surface
+//! taps: `cluster node failed` panics, elastic `EpochFault` re-form
+//! notices, and `schedule-divergence` reports all append the tail of the
+//! recent schedule. Depth comes from `DISCO_FLIGHT` (default
+//! [`DEFAULT_DEPTH`]; `0` disables recording entirely).
+//!
+//! Handles are cheap clones over a shared ring, so the cluster driver
+//! can keep one per rank and read the tail even after the rank's node
+//! context was destroyed by an unwind. Recording only appends to the
+//! ring — never touches the modeled clock, stats, or traces — so it is
+//! invisible to the priced timeline.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+/// Ring depth when `DISCO_FLIGHT` is unset (PR 7's ring size).
+pub const DEFAULT_DEPTH: usize = 16;
+/// How many tail entries a report prints.
+pub const TAIL_SHOWN: usize = 8;
+
+struct Ring {
+    cap: usize,
+    /// Completed calls (monotone; counts even when `cap == 0`).
+    seq: u64,
+    entries: VecDeque<(u64, String)>,
+}
+
+/// Shared bounded ring of `#seq description` entries.
+#[derive(Clone)]
+pub struct FlightRecorder {
+    ring: Arc<Mutex<Ring>>,
+}
+
+impl FlightRecorder {
+    pub fn with_depth(cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            ring: Arc::new(Mutex::new(Ring {
+                cap,
+                seq: 0,
+                entries: VecDeque::with_capacity(cap.min(1024)),
+            })),
+        }
+    }
+
+    /// Depth from `DISCO_FLIGHT` (default [`DEFAULT_DEPTH`], `0`
+    /// disables).
+    pub fn from_env() -> FlightRecorder {
+        FlightRecorder::with_depth(Self::env_depth())
+    }
+
+    /// The `DISCO_FLIGHT` knob (unparsable values fall back to the
+    /// default rather than failing a run over a typo).
+    pub fn env_depth() -> usize {
+        match std::env::var("DISCO_FLIGHT") {
+            Ok(v) => v.trim().parse().unwrap_or(DEFAULT_DEPTH),
+            Err(_) => DEFAULT_DEPTH,
+        }
+    }
+
+    /// Record one completed call; returns its sequence number (1-based).
+    /// The closure only runs when the ring stores entries, so a
+    /// `DISCO_FLIGHT=0` run does not pay for formatting.
+    pub fn record(&self, describe: impl FnOnce() -> String) -> u64 {
+        let mut ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        ring.seq += 1;
+        if ring.cap > 0 {
+            if ring.entries.len() == ring.cap {
+                ring.entries.pop_front();
+            }
+            let seq = ring.seq;
+            let desc = describe();
+            ring.entries.push_back((seq, desc));
+        }
+        ring.seq
+    }
+
+    /// Completed calls recorded so far (monotone even at depth 0).
+    pub fn seq(&self) -> u64 {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).seq
+    }
+
+    /// The last `shown` entries, oldest first, formatted `#seq desc`.
+    pub fn tail(&self, shown: usize) -> Vec<String> {
+        let ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        let skip = ring.entries.len().saturating_sub(shown);
+        ring.entries
+            .iter()
+            .skip(skip)
+            .map(|(seq, desc)| format!("#{seq} {desc}"))
+            .collect()
+    }
+
+    /// Report suffix `"; last completed on rank R: #1 a, #2 b"` (empty
+    /// when nothing was recorded) — the exact shape the divergence
+    /// reports used before the ring was shared.
+    pub fn tail_suffix(&self, rank: usize) -> String {
+        let tail = self.tail(TAIL_SHOWN);
+        if tail.is_empty() {
+            String::new()
+        } else {
+            format!("; last completed on rank {rank}: {}", tail.join(", "))
+        }
+    }
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let ring = self.ring.lock().unwrap_or_else(|e| e.into_inner());
+        write!(f, "FlightRecorder(cap {}, seq {})", ring.cap, ring.seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_only_the_newest_entries() {
+        let fr = FlightRecorder::with_depth(3);
+        for i in 1..=5 {
+            let seq = fr.record(|| format!("call{i}"));
+            assert_eq!(seq, i);
+        }
+        assert_eq!(fr.seq(), 5);
+        assert_eq!(fr.tail(8), vec!["#3 call3", "#4 call4", "#5 call5"]);
+        assert_eq!(fr.tail(2), vec!["#4 call4", "#5 call5"]);
+    }
+
+    #[test]
+    fn depth_zero_counts_but_stores_nothing() {
+        let fr = FlightRecorder::with_depth(0);
+        let mut formatted = false;
+        fr.record(|| {
+            formatted = true;
+            "x".into()
+        });
+        assert!(!formatted, "depth-0 ring must not format descriptions");
+        assert_eq!(fr.seq(), 1);
+        assert!(fr.tail(8).is_empty());
+        assert_eq!(fr.tail_suffix(0), "");
+    }
+
+    #[test]
+    fn clones_share_one_ring() {
+        let fr = FlightRecorder::with_depth(4);
+        let other = fr.clone();
+        other.record(|| "ReduceAll(4)".into());
+        assert_eq!(fr.tail_suffix(1), "; last completed on rank 1: #1 ReduceAll(4)");
+    }
+}

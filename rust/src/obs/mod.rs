@@ -1,0 +1,46 @@
+//! disco-events: the structured observability layer.
+//!
+//! Every instrumentation surface the repo grew — per-node activity
+//! traces ([`crate::net::trace`]), communication counters
+//! ([`crate::net::stats`]), per-step [`StepReport`]s — feeds one typed,
+//! rank-local event stream here:
+//!
+//! * [`Event`] / [`EventKind`] / [`Phase`] ([`event`]) — typed events
+//!   stamped `(epoch, rank, outer, sim_time)`, with deterministic binary
+//!   and JSONL codecs;
+//! * [`EventRecorder`] ([`recorder`]) — the rank-local accumulator
+//!   carried by [`NodeCtx`](crate::net::transport::NodeCtx) and reached
+//!   from algorithm code via the `obs_*` hooks on
+//!   [`Collectives`](crate::net::Collectives);
+//! * [`FlightRecorder`] ([`flight`]) — the configurable ring
+//!   (`DISCO_FLIGHT`, default 16) of recent calls whose tail lands in
+//!   `cluster node failed` / `EpochFault` / `schedule-divergence`
+//!   reports;
+//! * sinks — JSONL (`--events out.jsonl` on all three binaries), Chrome
+//!   `trace_event` export ([`chrome`], `disco-events --chrome`, one
+//!   Perfetto lane per rank), and the end-of-run per-phase summary
+//!   ([`summary`], table + CSV).
+//!
+//! ## The invisibility contract
+//!
+//! Events are stamped on the **modeled** clock and recorded strictly
+//! outside priced regions: recording appends to a rank-local vector and
+//! never touches the clock, `CommStats`, or the trace, and event streams
+//! ride the unpriced end-of-run report channel. An instrumented run is
+//! therefore bit-identical — outputs, `sim_seconds`, stats, trace CSV —
+//! to an uninstrumented one on both transports, the same contract
+//! [`Checked`](crate::net::Checked) honors (and CI enforces for both).
+//!
+//! [`StepReport`]: crate::algorithms::StepReport
+
+pub mod chrome;
+pub mod event;
+pub mod flight;
+pub mod recorder;
+pub mod summary;
+
+pub use chrome::to_chrome_trace;
+pub use event::{decode_events, encode_events, from_jsonl, to_jsonl, Event, EventKind, Phase};
+pub use flight::FlightRecorder;
+pub use recorder::EventRecorder;
+pub use summary::{summarize, Summary};

@@ -1,0 +1,159 @@
+//! End-of-run aggregation: fold an event stream into per-phase
+//! sim-seconds and global counters, rendered as a fixed-width table and
+//! as CSV.
+
+use super::event::{Event, EventKind, Phase};
+use crate::net::stats::CommStats;
+
+/// Aggregated view of one event stream.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct Summary {
+    /// `(phase, completed spans, total sim-seconds)` in [`Phase::all`]
+    /// order; phases that never opened a span are omitted.
+    pub phases: Vec<(Phase, u64, f64)>,
+    /// Summed counter samples.
+    pub rounds: u64,
+    pub scalar_rounds: u64,
+    pub doubles: u64,
+    pub comm_seconds: f64,
+    pub steps: u64,
+    /// Incidents with kind `"stall"` / all incidents.
+    pub stalls: u64,
+    pub incidents: u64,
+}
+
+/// Fold a stream. Span seconds are accumulated per `(rank, phase)` with
+/// a begin-time stack, so overlapping spans from different ranks (or
+/// nested spans of different phases) don't double-count each other;
+/// unmatched begins (aborted runs) are dropped.
+pub fn summarize(events: &[Event]) -> Summary {
+    let mut sum = Summary::default();
+    let mut spans: Vec<(Phase, u64, f64)> =
+        Phase::all().iter().map(|&p| (p, 0u64, 0.0f64)).collect();
+    // (epoch, rank, phase) -> stack of begin times.
+    let mut open: Vec<((u32, u32, u8), Vec<f64>)> = Vec::new();
+    let key_of = |e: &Event, p: Phase| (e.epoch, e.rank, p as u8);
+    for e in events {
+        match &e.kind {
+            EventKind::SpanBegin { phase, .. } => {
+                let key = key_of(e, *phase);
+                match open.iter_mut().find(|(k, _)| *k == key) {
+                    Some((_, stack)) => stack.push(e.sim_time),
+                    None => open.push((key, vec![e.sim_time])),
+                }
+            }
+            EventKind::SpanEnd { phase, .. } => {
+                let key = key_of(e, *phase);
+                if let Some((_, stack)) = open.iter_mut().find(|(k, _)| *k == key) {
+                    if let Some(begin) = stack.pop() {
+                        let row = spans.iter_mut().find(|(p, _, _)| p == phase).unwrap();
+                        row.1 += 1;
+                        row.2 += (e.sim_time - begin).max(0.0);
+                    }
+                }
+            }
+            EventKind::Counter { rounds, scalar_rounds, doubles, comm_seconds } => {
+                sum.rounds += rounds;
+                sum.scalar_rounds += scalar_rounds;
+                sum.doubles += doubles;
+                sum.comm_seconds += comm_seconds;
+            }
+            EventKind::Step { .. } => sum.steps += 1,
+            EventKind::Incident { kind, .. } => {
+                sum.incidents += 1;
+                if kind == "stall" {
+                    sum.stalls += 1;
+                }
+            }
+        }
+    }
+    sum.phases = spans.into_iter().filter(|(_, n, _)| *n > 0).collect();
+    sum
+}
+
+impl Summary {
+    /// Fixed-width table for terminals; `stats` (when available) adds
+    /// the wire-byte ledger line, including the deliberately-unpriced
+    /// traffic.
+    pub fn render_table(&self, stats: Option<&CommStats>) -> String {
+        let mut out = String::from("phase         spans  sim_seconds\n");
+        for (phase, n, secs) in &self.phases {
+            out.push_str(&format!("{:<13} {:>5}  {:>11.6}\n", phase.name(), n, secs));
+        }
+        out.push_str(&format!(
+            "events: rounds={} (scalar {}) doubles={} comm_time={:.3}ms steps={} stalls={} incidents={}\n",
+            self.rounds,
+            self.scalar_rounds,
+            self.doubles,
+            self.comm_seconds * 1e3,
+            self.steps,
+            self.stalls,
+            self.incidents,
+        ));
+        if let Some(s) = stats {
+            out.push_str(&format!(
+                "wire: priced={}B unpriced={}B\n",
+                s.wire_bytes, s.unpriced_wire_bytes
+            ));
+        }
+        out
+    }
+
+    /// CSV: one row per phase plus a `totals` row. Floats use the
+    /// shortest round-trip form, so the file is deterministic.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("phase,spans,sim_seconds\n");
+        for (phase, n, secs) in &self.phases {
+            out.push_str(&format!("{},{},{}\n", phase.name(), n, secs));
+        }
+        out.push_str(&format!(
+            "totals(rounds={};scalar={};doubles={};stalls={}),{},{}\n",
+            self.rounds, self.scalar_rounds, self.doubles, self.stalls, self.steps,
+            self.comm_seconds,
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(rank: u32, t: f64, kind: EventKind) -> Event {
+        Event { epoch: 0, rank, outer: 0, sim_time: t, kind }
+    }
+
+    #[test]
+    fn spans_accumulate_per_rank_and_phase() {
+        let events = vec![
+            ev(0, 0.0, EventKind::SpanBegin { phase: Phase::Outer, label: "o".into() }),
+            ev(1, 0.0, EventKind::SpanBegin { phase: Phase::Outer, label: "o".into() }),
+            ev(0, 1.0, EventKind::SpanEnd { phase: Phase::Outer, label: "o".into() }),
+            ev(1, 3.0, EventKind::SpanEnd { phase: Phase::Outer, label: "o".into() }),
+            ev(0, 5.0, EventKind::SpanBegin { phase: Phase::Pcg, label: "p".into() }),
+            // Unmatched begin: dropped, not counted.
+        ];
+        let s = summarize(&events);
+        assert_eq!(s.phases, vec![(Phase::Outer, 2, 4.0)]);
+    }
+
+    #[test]
+    fn counters_steps_and_stalls_total_up() {
+        let events = vec![
+            ev(0, 0.1, EventKind::Counter { rounds: 3, scalar_rounds: 1, doubles: 64, comm_seconds: 0.5 }),
+            ev(0, 0.2, EventKind::Counter { rounds: 2, scalar_rounds: 0, doubles: 36, comm_seconds: 0.25 }),
+            ev(0, 0.2, EventKind::Step { grad_norm: 1.0, fval: 2.0, inner_iters: 3, rounds: 5 }),
+            ev(0, 0.3, EventKind::Incident { kind: "stall".into(), detail: "x".into() }),
+            ev(0, 0.4, EventKind::Incident { kind: "fault".into(), detail: "y".into() }),
+        ];
+        let s = summarize(&events);
+        assert_eq!((s.rounds, s.scalar_rounds, s.doubles), (5, 1, 100));
+        assert_eq!(s.comm_seconds, 0.75);
+        assert_eq!((s.steps, s.stalls, s.incidents), (1, 1, 2));
+        let table = s.render_table(None);
+        assert!(table.contains("rounds=5"), "{table}");
+        let csv = s.to_csv();
+        assert!(csv.starts_with("phase,spans,sim_seconds\n"), "{csv}");
+        assert!(csv.contains("stalls=1"), "{csv}");
+    }
+}

@@ -20,6 +20,7 @@ fn test_cfg(out: &str) -> ExperimentConfig {
         // τ ≈ n the master preconditioner becomes near-exact and the
         // regime comparison degenerates.
         tau: 16,
+        events_dir: None,
     }
 }
 

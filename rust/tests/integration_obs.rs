@@ -1,0 +1,293 @@
+//! Observability integration: the structured event layer end to end.
+//!
+//! The contract under test is *bit-invisibility*: turning the recorder on
+//! must not move a single bit of the run it observes — same outputs, same
+//! simulated clock, same priced ledger, same trace — on both transports.
+//! On top of that, the stream itself must be transport-agnostic (shm and
+//! tcp runs of the same spec emit byte-identical JSONL), carry the
+//! expected span/counter/step shapes, survive the JSONL round-trip, and
+//! surface the flight-recorder tail in fault reports.
+
+use disco::algorithms::{
+    run_over_spec, run_spec, run_spec_elastic, AlgoKind, CheckpointPlan, ElasticSpec, FaultPlan,
+    RepartitionSpec, RunResult, RunSpec,
+};
+use disco::coordinator::experiments::{self, ExperimentConfig};
+use disco::data::{Dataset, SyntheticConfig};
+use disco::loss::LossKind;
+use disco::net::{Cluster, ComputeModel, TcpOptions, TcpTransport};
+use disco::obs::{from_jsonl, to_chrome_trace, to_jsonl, EventKind, Phase};
+use std::net::TcpListener;
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::time::Duration;
+
+fn ds() -> Dataset {
+    SyntheticConfig::new("obs-int", 240, 32)
+        .density(0.5)
+        .seed(11)
+        .generate()
+}
+
+fn spec(kind: AlgoKind, m: usize, events: bool) -> RunSpec {
+    let mut spec = RunSpec::new(kind, LossKind::Logistic, 1e-3).with_m(m);
+    spec.sim.compute = ComputeModel::modeled();
+    spec.sim.events = events;
+    spec.stop.grad_tol = 1e-6;
+    spec.stop.max_outer = 40;
+    spec
+}
+
+/// Run a closure with a hard wall-clock deadline; a hang fails the test.
+fn with_deadline<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => v,
+        Err(RecvTimeoutError::Timeout) => panic!("deadline exceeded: the fleet hung"),
+        Err(RecvTimeoutError::Disconnected) => panic!("fleet worker panicked (see stderr)"),
+    }
+}
+
+/// One OS thread per rank over a real localhost TCP mesh, ephemeral
+/// rendezvous port per call (the `integration_elastic` idiom).
+fn run_tcp_fleet<T: Send>(
+    m: usize,
+    timeout: Duration,
+    f: impl Fn(TcpTransport) -> T + Sync,
+) -> Vec<T> {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind rendezvous");
+    let addr = listener.local_addr().expect("rendezvous addr").to_string();
+    let mut listener = Some(listener);
+    let mut outs: Vec<Option<T>> = (0..m).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        let addr = &addr;
+        for (rank, slot) in outs.iter_mut().enumerate() {
+            let l = listener.take(); // Some only for rank 0
+            s.spawn(move || {
+                let opts = TcpOptions::new(rank, m, addr).with_timeout(timeout);
+                let t = match l {
+                    Some(l) => TcpTransport::establish_with_listener(l, &opts),
+                    None => TcpTransport::establish(&opts),
+                };
+                *slot = Some(f(t));
+            });
+        }
+    });
+    outs.into_iter().map(|o| o.expect("rank output")).collect()
+}
+
+/// The core contract on the shm backend: recorder on vs off — identical
+/// outputs, clock, priced ledger, and trace, with the stream itself as
+/// the only difference.
+#[test]
+fn obs_is_bit_invisible_on_shm() {
+    let run_with = |obs: bool| {
+        Cluster::new(3)
+            .with_compute(ComputeModel::modeled())
+            .with_trace(true)
+            .with_obs(obs)
+            .run(|ctx| {
+                let rank = ctx.rank;
+                let mut acc = vec![0.0f64; 8];
+                for i in 0..12 {
+                    ctx.compute_costed("flops", || ((), 1e6 * (1 + (rank + i) % 3) as f64));
+                    let mut v = vec![(rank * 31 + i) as f64; 8];
+                    ctx.reduce_all(&mut v);
+                    for (a, b) in acc.iter_mut().zip(v.iter()) {
+                        *a += b;
+                    }
+                    let g = ctx.all_gather_concat(&[rank as f64, i as f64]);
+                    acc[0] += g.iter().sum::<f64>();
+                }
+                (acc, ctx.clock)
+            })
+    };
+    let off = run_with(false);
+    let on = run_with(true);
+    assert_eq!(off.sim_seconds.to_bits(), on.sim_seconds.to_bits());
+    assert_eq!(off.stats, on.stats, "recorder must not perturb the priced ledger");
+    assert_eq!(off.trace.to_csv(), on.trace.to_csv());
+    for ((a, ca), (b, cb)) in off.outputs.iter().zip(on.outputs.iter()) {
+        assert_eq!(ca.to_bits(), cb.to_bits());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+    assert!(off.events.is_empty(), "disabled recorder must collect nothing");
+    assert!(!on.events.is_empty(), "enabled recorder must see the run");
+}
+
+/// Same contract over real sockets: an instrumented fleet must match an
+/// uninstrumented one bit for bit (iterates, clock, priced ledger —
+/// including the unpriced wire column, which is snapshotted before the
+/// event stream rides the report frames).
+#[test]
+fn obs_is_bit_invisible_on_tcp() {
+    let (off, on) = with_deadline(120, || {
+        let ds = ds();
+        let run = |events: bool| -> Vec<Option<RunResult>> {
+            let spec2 = spec(AlgoKind::DiscoF, 2, events);
+            run_tcp_fleet(2, Duration::from_secs(10), |t| {
+                run_over_spec(&ds, &spec2, t, &CheckpointPlan::none(), &RepartitionSpec::none())
+            })
+        };
+        (run(false), run(true))
+    });
+    let a = off[0].as_ref().expect("uninstrumented rank 0 result");
+    let b = on[0].as_ref().expect("instrumented rank 0 result");
+    assert_eq!(a.sim_seconds.to_bits(), b.sim_seconds.to_bits());
+    assert_eq!(a.stats, b.stats, "events must ride outside the wire ledger");
+    assert_eq!(a.w.len(), b.w.len());
+    for (x, y) in a.w.iter().zip(b.w.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    assert_eq!(a.converged, b.converged);
+    assert!(a.events.is_empty());
+    assert!(!b.events.is_empty());
+}
+
+/// The stream is transport-agnostic: the same seeded spec emits
+/// byte-identical JSONL over the in-process cluster and a real TCP fleet.
+#[test]
+fn shm_and_tcp_event_streams_are_byte_identical() {
+    let (shm, tcp) = with_deadline(120, || {
+        let ds = ds();
+        let spec2 = spec(AlgoKind::DiscoF, 2, true);
+        let shm = run_spec(&ds, &spec2);
+        let tcp = run_tcp_fleet(2, Duration::from_secs(10), |t| {
+            run_over_spec(&ds, &spec2, t, &CheckpointPlan::none(), &RepartitionSpec::none())
+        });
+        (shm, tcp)
+    });
+    let tcp = tcp[0].as_ref().expect("tcp rank 0 result");
+    assert!(!shm.events.is_empty());
+    assert_eq!(
+        to_jsonl(&shm.events),
+        to_jsonl(&tcp.events),
+        "event streams diverged between transports"
+    );
+}
+
+/// An instrumented algorithm run carries every shape the layer promises:
+/// balanced Outer and PCG spans, per-step counter samples and step
+/// records, all on epoch 0 with in-range ranks.
+#[test]
+fn instrumented_run_carries_the_expected_event_shapes() {
+    let ds = ds();
+    let res = run_spec(&ds, &spec(AlgoKind::DiscoF, 3, true));
+    assert!(res.converged);
+    let ev = &res.events;
+    assert!(!ev.is_empty());
+
+    let begins = |p: Phase| {
+        ev.iter()
+            .filter(|e| matches!(&e.kind, EventKind::SpanBegin { phase, .. } if *phase == p))
+            .count()
+    };
+    let ends = |p: Phase| {
+        ev.iter()
+            .filter(|e| matches!(&e.kind, EventKind::SpanEnd { phase, .. } if *phase == p))
+            .count()
+    };
+    for p in [Phase::Outer, Phase::Pcg, Phase::Compute, Phase::Collective] {
+        assert!(begins(p) > 0, "no {} spans recorded", p.name());
+        assert_eq!(begins(p), ends(p), "unbalanced {} spans", p.name());
+    }
+    assert!(
+        ev.iter().any(|e| matches!(e.kind, EventKind::Counter { .. })),
+        "no counter samples"
+    );
+    assert!(
+        ev.iter().any(|e| matches!(e.kind, EventKind::Step { .. })),
+        "no step records"
+    );
+    for e in ev {
+        assert_eq!(e.epoch, 0, "plain runs stamp epoch 0");
+        assert!((e.rank as usize) < 3, "rank {} out of range", e.rank);
+        assert!(e.sim_time >= 0.0);
+    }
+}
+
+/// JSONL round-trips losslessly and the Chrome export names one lane per
+/// rank — the two offline surfaces `disco-events` serves.
+#[test]
+fn jsonl_roundtrips_and_chrome_trace_has_rank_lanes() {
+    let ds = ds();
+    let res = run_spec(&ds, &spec(AlgoKind::DiscoS, 2, true));
+    let jsonl = to_jsonl(&res.events);
+    let back = from_jsonl(&jsonl).expect("JSONL must parse back");
+    assert_eq!(back, res.events, "JSONL round-trip lost information");
+
+    let chrome = to_chrome_trace(&res.events);
+    assert!(chrome.contains("\"traceEvents\""));
+    for rank in 0..2 {
+        assert!(chrome.contains(&format!("rank {rank}")), "missing lane for rank {rank}");
+    }
+}
+
+/// A planned kill under the elastic driver surfaces the fault as an
+/// Incident event whose detail carries the flight-recorder tail (the last
+/// completed collectives before the failure).
+#[test]
+fn fault_incident_carries_the_flight_recorder_tail() {
+    let ds = ds();
+    let mut spec3 = spec(AlgoKind::DiscoF, 3, true);
+    spec3.stop.max_outer = 80;
+    let mut es = ElasticSpec::on();
+    es.plan = FaultPlan::parse("kill@3:2").unwrap();
+    let (res, recoveries) = run_spec_elastic(&ds, &spec3, &es);
+    assert_eq!(recoveries, 1);
+    assert!(res.converged);
+    let incident = res
+        .events
+        .iter()
+        .find_map(|e| match &e.kind {
+            EventKind::Incident { kind, detail } if kind == "epoch_fault" => Some(detail.clone()),
+            _ => None,
+        })
+        .expect("the kill must be recorded as an epoch_fault incident");
+    assert!(
+        incident.contains("last completed on rank"),
+        "incident lacks the flight-recorder tail: {incident}"
+    );
+    // Recovery itself is spanned: the re-formed epoch prices its rebuild.
+    assert!(
+        res.events
+            .iter()
+            .any(|e| matches!(&e.kind, EventKind::SpanBegin { phase: Phase::EpochReform, .. })),
+        "no epoch-reform span after recovery"
+    );
+}
+
+/// The fig2 experiment wrapper drops one JSONL + Chrome-trace pair per
+/// algorithm into `events_dir` — outside `out_dir`, whose CSVs CI diffs
+/// byte-for-byte against the uninstrumented layout.
+#[test]
+fn fig2_writes_event_artifacts_when_asked() {
+    let tmp = std::env::temp_dir();
+    let cfg = ExperimentConfig {
+        scale: 16,
+        out_dir: format!("{}/disco_obs_fig2_out", tmp.display()),
+        m: 4,
+        grad_target: 1e-7,
+        max_outer: 30,
+        seed: 42,
+        tau: 16,
+        events_dir: Some(format!("{}/disco_obs_fig2_events", tmp.display())),
+        ..ExperimentConfig::default()
+    };
+    experiments::figure2(&cfg).expect("fig2 runs");
+    let dir = cfg.events_dir.as_ref().unwrap();
+    for algo in ["disco_s", "disco_f", "disco_orig"] {
+        let jsonl = std::fs::read_to_string(format!("{dir}/fig2_events_{algo}.jsonl"))
+            .unwrap_or_else(|e| panic!("missing JSONL for {algo}: {e}"));
+        assert!(!jsonl.is_empty());
+        assert!(!from_jsonl(&jsonl).expect("parseable").is_empty());
+        let trace = std::fs::read_to_string(format!("{dir}/fig2_events_{algo}.trace.json"))
+            .unwrap_or_else(|e| panic!("missing Chrome trace for {algo}: {e}"));
+        assert!(trace.contains("\"traceEvents\""));
+    }
+}

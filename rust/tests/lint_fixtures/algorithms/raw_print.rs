@@ -1,0 +1,5 @@
+// Fixture: exactly one `raw-print` violation — a stray print in library
+// code off the CLI/obs whitelist. Never compiled — disco-lint input only.
+pub fn report_progress(outer: usize) {
+    println!("outer iteration {outer} done");
+}
