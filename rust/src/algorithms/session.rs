@@ -141,7 +141,23 @@ impl<C: Collectives> Session<C> {
         cuts: Option<&[(usize, usize)]>,
     ) -> Session<C> {
         let algorithm = spec.algo.algorithm::<C>();
+        // Store-backed setup reads shard files off disk; span it so the
+        // IO shows up in traces. Unpriced and append-only (like every
+        // event): the simulated clock and the run are bit-unaffected.
+        let ingest_span = ctx.obs_enabled() && ds.x.is_store_backed();
+        if ingest_span {
+            ctx.obs_emit(EventKind::SpanBegin {
+                phase: Phase::Ingest,
+                label: "shard load".into(),
+            });
+        }
         let node = algorithm.setup(ctx, ds, spec, cuts);
+        if ingest_span {
+            ctx.obs_emit(EventKind::SpanEnd {
+                phase: Phase::Ingest,
+                label: "shard load".into(),
+            });
+        }
         Session {
             node,
             stop: spec.stop.clone(),
@@ -191,7 +207,22 @@ impl<C: Collectives> Session<C> {
             ctx.reshard_exchange(&handoff.cut_axis)
         };
         let algorithm = spec.algo.algorithm::<C>();
+        // A re-cut over a store-backed dataset re-slices shard files on
+        // the cut axis — span the IO like the initial shard load.
+        let ingest_span = ctx.obs_enabled() && ds.x.is_store_backed();
+        if ingest_span {
+            ctx.obs_emit(EventKind::SpanBegin {
+                phase: Phase::Ingest,
+                label: "re-shard load".into(),
+            });
+        }
         let mut node = algorithm.setup(ctx, ds, spec, Some(ranges));
+        if ingest_span {
+            ctx.obs_emit(EventKind::SpanEnd {
+                phase: Phase::Ingest,
+                label: "re-shard load".into(),
+            });
+        }
         node.import_handoff(&cut_axis, &handoff.bytes)?;
         self.node = node;
         Ok(())

@@ -209,28 +209,60 @@ pub struct DataSpec {
     pub name: String,
     /// Down-scale factor (1 = full registry size).
     pub scale: usize,
+    /// Shard-store directory (`disco ingest`). When set, the dataset is
+    /// opened out-of-core from its shard files instead of the registry;
+    /// a non-empty `name` then acts as a cross-check against the store's
+    /// manifest.
+    pub store: Option<String>,
 }
 
 impl DataSpec {
     /// A spec whose dataset the caller supplies in code.
     pub fn inline() -> Self {
-        Self { name: String::new(), scale: 1 }
+        Self { name: String::new(), scale: 1, store: None }
     }
 
     pub fn named(name: &str) -> Self {
-        Self { name: name.to_string(), scale: 1 }
+        Self { name: name.to_string(), scale: 1, store: None }
     }
 
-    /// Load from the registry (None for unknown / empty names).
+    /// Load from the registry (None for unknown / empty names). Store
+    /// errors are silently mapped to None here — spec-driven binaries use
+    /// [`DataSpec::load_checked`] so a corrupt store aborts with its
+    /// actual IO error instead of a generic "unknown dataset".
     pub fn load(&self) -> Option<Dataset> {
-        if self.name.is_empty() {
-            return None;
+        self.load_checked().ok().flatten()
+    }
+
+    /// Like [`DataSpec::load`], but store problems (missing directory,
+    /// checksum mismatch, manifest/name disagreement) surface as errors.
+    pub fn load_checked(&self) -> Result<Option<Dataset>, String> {
+        if let Some(dir) = &self.store {
+            if self.scale > 1 {
+                return Err(format!(
+                    "--scale {} cannot be applied to a shard store; re-ingest the scaled \
+                     dataset instead",
+                    self.scale
+                ));
+            }
+            let ds = crate::store::open_dataset(std::path::Path::new(dir))
+                .map_err(|e| format!("cannot open store '{dir}': {e}"))?;
+            if !self.name.is_empty() && ds.name != self.name {
+                return Err(format!(
+                    "store '{dir}' holds dataset '{}', but the spec names '{}'",
+                    ds.name, self.name
+                ));
+            }
+            return Ok(Some(ds));
         }
-        if self.scale <= 1 {
+        if self.name.is_empty() {
+            return Ok(None);
+        }
+        Ok(if self.scale <= 1 {
             registry::load(&self.name)
         } else {
             registry::load_scaled(&self.name, self.scale)
-        }
+        })
     }
 }
 
@@ -780,7 +812,7 @@ impl RunSpec {
     }
 
     pub fn with_data(mut self, name: &str, scale: usize) -> Self {
-        self.data = DataSpec { name: name.to_string(), scale: scale.max(1) };
+        self.data = DataSpec { name: name.to_string(), scale: scale.max(1), store: None };
         self
     }
 
@@ -1045,6 +1077,10 @@ impl RunSpec {
                 json::obj(vec![
                     ("name", json::s(&self.data.name)),
                     ("scale", json::num(self.data.scale as f64)),
+                    (
+                        "store",
+                        self.data.store.as_deref().map_or(Json::Null, json::s),
+                    ),
                 ]),
             ),
             (
@@ -1137,6 +1173,11 @@ impl RunSpec {
         let data = DataSpec {
             name: take_str(d, "name")?.to_string(),
             scale: take_usize(d, "scale")?.max(1),
+            // Lenient: absent in pre-store spec files ⇒ registry path.
+            store: match d.get("store") {
+                Json::Str(dir) => Some(dir.clone()),
+                _ => None,
+            },
         };
         let s = v.get("sim");
         let cost_v = s.get("cost");
@@ -1241,6 +1282,7 @@ pub fn with_spec_flags(args: Args) -> Args {
     args.opt("spec", None, "load a RunSpec JSON file; explicit flags override its fields")
         .opt("dataset", Some("tiny"), "registered dataset name (see `disco datasets`)")
         .opt("scale", Some("1"), "down-scale factor for the dataset")
+        .opt("store", None, "load the dataset out-of-core from this shard store (see `disco ingest`)")
         .opt("algo", Some("disco-f"), "disco-f | disco-s | disco | dane | cocoa+ | gd")
         .opt("loss", Some("logistic"), "logistic | quadratic | squared_hinge")
         .opt("lambda", None, "ℓ2 regularization (default: dataset registry value)")
@@ -1347,6 +1389,15 @@ pub fn apply_args(spec: &mut RunSpec, args: &Args) -> Result<(), String> {
     }
     if args.provided("scale") {
         spec.data.scale = args.get_usize("scale").map_err(e)?.max(1);
+    }
+    if args.provided("store") {
+        spec.data.store = Some(args.req("store").map_err(e)?);
+        // The schema's `--dataset` default ("tiny") is not an assertion
+        // about the store's content: the manifest name-check only applies
+        // to an *explicitly* named dataset.
+        if !args.provided("dataset") && spec.data.name == "tiny" {
+            spec.data.name.clear();
+        }
     }
     if let Some(p) = spec.algo.disco_mut() {
         if args.provided("tau") {
@@ -1520,7 +1571,9 @@ mod tests {
         spec.sim.straggler = Some(StragglerConfig::new(0.25, 4.0, 2, u64::MAX - 3));
         spec.stop.max_sim_seconds = Some(1.5);
         spec.stop.max_rounds = Some(123_456_789_012_345);
+        spec.data.store = Some("/tmp/rcv1s.store".into());
         let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(back.data.store.as_deref(), Some("/tmp/rcv1s.store"));
         assert_eq!(spec, back);
         assert_eq!(back.sim.cost.beta, f64::INFINITY);
         assert_eq!(back.sim.straggler.unwrap().seed, u64::MAX - 3);
@@ -1575,6 +1628,9 @@ mod tests {
             }
             spec.sim.trace = rng.next_f64() < 0.5;
             spec.sim.events = rng.next_f64() < 0.5;
+            if rng.next_f64() < 0.3 {
+                spec.data.store = Some(format!("stores/trial-{trial}"));
+            }
             spec.stop.grad_tol = 10f64.powf(rng.uniform(-12.0, -3.0));
             spec.stop.max_outer = 1 + rng.index(500);
             if rng.next_f64() < 0.4 {

@@ -36,6 +36,11 @@ fn main() {
             None,
             "fig2: record event streams; write JSONL + Chrome traces under this directory",
         )
+        .opt(
+            "store",
+            None,
+            "load experiment datasets out-of-core from this shard store (see `disco ingest`)",
+        )
         .with_transport_flags();
     let args = match args.parse_env() {
         Ok(a) => a,
@@ -52,6 +57,7 @@ fn main() {
     cfg.grad_target = args.get_f64("grad-target").unwrap();
     cfg.seed = args.get_u64("seed").unwrap();
     cfg.events_dir = args.get("events");
+    cfg.store = args.get("store");
     let calgo = args.get("collective").unwrap();
     match CollectiveAlgo::parse(&calgo) {
         Some(algo) => cfg.cost = cfg.cost.with_algo(algo),
@@ -186,6 +192,10 @@ fn launch_tcp_fig2(args: &Args, cfg: &ExperimentConfig, transport: &TransportCli
     common.push(args.get("collective").unwrap_or_else(|| "binomial".into()));
     if let Some(dir) = &cfg.events_dir {
         common.push("--events".into());
+        common.push(dir.clone());
+    }
+    if let Some(dir) = &cfg.store {
+        common.push("--store".into());
         common.push(dir.clone());
     }
 

@@ -115,6 +115,8 @@ fn experiment_config(args: &Args, world: usize) -> Result<ExperimentConfig, Stri
     // For fig2 the spec-level `--events` path is reused as a *directory*:
     // one JSONL + Chrome-trace pair per traced run lands there.
     cfg.events_dir = args.get("events");
+    // Out-of-core: load the experiment's dataset from a shard store.
+    cfg.store = args.get("store");
     let calgo = args.req("collective").map_err(|e| e.to_string())?;
     match CollectiveAlgo::parse(&calgo) {
         Some(algo) => cfg.cost = cfg.cost.with_algo(algo),
@@ -164,7 +166,7 @@ fn cmd_run(args: &Args, transport: &TransportCli) -> Result<(), String> {
     spec.validate()?;
     let ds = spec
         .data
-        .load()
+        .load_checked()?
         .ok_or_else(|| format!("unknown dataset '{}'", spec.data.name))?;
     let plan = CheckpointPlan::from_args(args)?;
     let repartition = RepartitionSpec::from_args(args)?;

@@ -38,6 +38,13 @@ pub struct ExperimentConfig {
     /// anyway — the contract is test-enforced — but the artifact layout
     /// should not depend on it).
     pub events_dir: Option<String>,
+    /// When set, experiment datasets load out-of-core from this shard
+    /// store directory (`disco ingest`) instead of the in-RAM registry.
+    /// The store's manifest name must match the dataset the experiment
+    /// asks for; `scale` is ignored (the store was ingested at a fixed
+    /// scale — ingest at the scale the experiment expects). Runs are
+    /// bit-identical to the registry path.
+    pub store: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -52,6 +59,7 @@ impl Default for ExperimentConfig {
             seed: 42,
             tau: 100,
             events_dir: None,
+            store: None,
         }
     }
 }
@@ -62,6 +70,20 @@ impl ExperimentConfig {
     }
 
     fn dataset(&self, name: &str) -> crate::data::Dataset {
+        if let Some(dir) = &self.store {
+            // The store was ingested at a fixed scale; `self.scale` only
+            // describes the registry path. The caller is responsible for
+            // ingesting at the scale the experiment expects (CI ingests
+            // and runs from the same flags).
+            let ds = crate::store::open_dataset(std::path::Path::new(dir))
+                .unwrap_or_else(|e| panic!("cannot open store '{dir}': {e}"));
+            assert_eq!(
+                ds.name, name,
+                "store '{dir}' holds dataset '{}', but this experiment wants '{name}'",
+                ds.name
+            );
+            return ds;
+        }
         if self.scale <= 1 {
             registry::load(name).expect("unknown dataset")
         } else {

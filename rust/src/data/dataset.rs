@@ -36,11 +36,14 @@ impl Dataset {
         self.x.nnz()
     }
 
-    /// In-memory size of the value+index arrays, in bytes.
+    /// Materialized size of the value+index arrays, in bytes. For a
+    /// store-backed dataset this is what the data *would* occupy fully
+    /// resident (the CSC sections of its shard files) — the RSS budget a
+    /// store-backed run must stay under.
     pub fn size_bytes(&self) -> usize {
         match &self.x {
             DataMatrix::Dense(_) => self.nnz() * 8,
-            DataMatrix::Sparse(_) => self.nnz() * (8 + 4),
+            DataMatrix::Sparse(_) | DataMatrix::Stored(_) => self.nnz() * (8 + 4),
         }
     }
 

@@ -34,72 +34,111 @@ impl From<std::io::Error> for LibsvmError {
     }
 }
 
+/// One parsed libsvm sample line.
+#[derive(Clone, Debug)]
+pub struct ParsedLine {
+    pub label: f64,
+    /// Sorted, duplicate-checked (0-based index, value) pairs.
+    pub col: Vec<(u32, f64)>,
+    /// Largest 1-based feature index on this line (0 if featureless).
+    pub max_idx: usize,
+}
+
+/// Parse one raw libsvm text line (`lineno` is 1-based and only used for
+/// error messages). Strips `#` comments; returns `Ok(None)` for blank or
+/// comment-only lines. Shared by [`parse_reader`] and the streaming store
+/// ingest ([`crate::store::ingest`]), so both accept exactly the same
+/// dialect and report identical errors.
+pub fn parse_line(raw: &str, lineno: usize) -> Result<Option<ParsedLine>, LibsvmError> {
+    let line = raw.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.split_ascii_whitespace();
+    // (A trimmed non-empty line always has a first token, but an
+    // `unwrap()` here is a latent panic if that invariant ever shifts
+    // — surface a parse error instead.)
+    let label_tok = parts.next().ok_or_else(|| LibsvmError::Parse {
+        line: lineno,
+        msg: "missing label".into(),
+    })?;
+    let label: f64 = label_tok.parse().map_err(|_| LibsvmError::Parse {
+        line: lineno,
+        msg: format!("bad label '{label_tok}'"),
+    })?;
+    if !label.is_finite() {
+        return Err(LibsvmError::Parse {
+            line: lineno,
+            msg: format!("non-finite label '{label_tok}'"),
+        });
+    }
+    let mut max_idx: usize = 0;
+    let mut col: Vec<(u32, f64)> = Vec::new();
+    for tok in parts {
+        let (i, v) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
+            line: lineno,
+            msg: format!("expected idx:val, got '{tok}'"),
+        })?;
+        let idx: usize = i.parse().map_err(|_| LibsvmError::Parse {
+            line: lineno,
+            msg: format!("bad index '{i}'"),
+        })?;
+        if idx == 0 {
+            return Err(LibsvmError::Parse {
+                line: lineno,
+                msg: "libsvm indices are 1-based".into(),
+            });
+        }
+        let val: f64 = v.parse().map_err(|_| LibsvmError::Parse {
+            line: lineno,
+            msg: format!("bad value '{v}'"),
+        })?;
+        max_idx = max_idx.max(idx);
+        col.push(((idx - 1) as u32, val));
+    }
+    col.sort_unstable_by_key(|(i, _)| *i);
+    // Duplicate feature indices in one sample are invalid.
+    for w in col.windows(2) {
+        if w[0].0 == w[1].0 {
+            return Err(LibsvmError::Parse {
+                line: lineno,
+                msg: format!("duplicate feature index {}", w[0].0 + 1),
+            });
+        }
+    }
+    Ok(Some(ParsedLine {
+        label,
+        col,
+        max_idx,
+    }))
+}
+
 /// Parse LIBSVM text from any reader. `min_dim` forces at least that many
 /// features (useful when train/test splits must share a dimension).
-pub fn parse_reader(r: impl BufRead, name: &str, min_dim: usize) -> Result<Dataset, LibsvmError> {
+/// Reads through one reused line buffer (`read_line`, not `lines()`), so
+/// no per-line `String` is allocated — the same hot path the streaming
+/// store ingest sits on.
+pub fn parse_reader(
+    mut r: impl BufRead,
+    name: &str,
+    min_dim: usize,
+) -> Result<Dataset, LibsvmError> {
     let mut cols: Vec<Vec<(u32, f64)>> = Vec::new();
     let mut labels: Vec<f64> = Vec::new();
     let mut max_idx: usize = 0;
-
-    for (lineno, line) in r.lines().enumerate() {
-        let line = line?;
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
-            continue;
+    let mut buf = String::new();
+    let mut lineno = 0usize;
+    loop {
+        buf.clear();
+        if r.read_line(&mut buf)? == 0 {
+            break;
         }
-        let mut parts = line.split_ascii_whitespace();
-        // (A trimmed non-empty line always has a first token, but an
-        // `unwrap()` here is a latent panic if that invariant ever shifts
-        // — surface a parse error instead.)
-        let label_tok = parts.next().ok_or_else(|| LibsvmError::Parse {
-            line: lineno + 1,
-            msg: "missing label".into(),
-        })?;
-        let label: f64 = label_tok.parse().map_err(|_| LibsvmError::Parse {
-            line: lineno + 1,
-            msg: format!("bad label '{label_tok}'"),
-        })?;
-        if !label.is_finite() {
-            return Err(LibsvmError::Parse {
-                line: lineno + 1,
-                msg: format!("non-finite label '{label_tok}'"),
-            });
+        lineno += 1;
+        if let Some(p) = parse_line(&buf, lineno)? {
+            max_idx = max_idx.max(p.max_idx);
+            cols.push(p.col);
+            labels.push(p.label);
         }
-        let mut col: Vec<(u32, f64)> = Vec::new();
-        for tok in parts {
-            let (i, v) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
-                line: lineno + 1,
-                msg: format!("expected idx:val, got '{tok}'"),
-            })?;
-            let idx: usize = i.parse().map_err(|_| LibsvmError::Parse {
-                line: lineno + 1,
-                msg: format!("bad index '{i}'"),
-            })?;
-            if idx == 0 {
-                return Err(LibsvmError::Parse {
-                    line: lineno + 1,
-                    msg: "libsvm indices are 1-based".into(),
-                });
-            }
-            let val: f64 = v.parse().map_err(|_| LibsvmError::Parse {
-                line: lineno + 1,
-                msg: format!("bad value '{v}'"),
-            })?;
-            max_idx = max_idx.max(idx);
-            col.push(((idx - 1) as u32, val));
-        }
-        col.sort_unstable_by_key(|(i, _)| *i);
-        // Duplicate feature indices in one sample are invalid.
-        for w in col.windows(2) {
-            if w[0].0 == w[1].0 {
-                return Err(LibsvmError::Parse {
-                    line: lineno + 1,
-                    msg: format!("duplicate feature index {}", w[0].0 + 1),
-                });
-            }
-        }
-        cols.push(col);
-        labels.push(label);
     }
     if cols.is_empty() {
         return Err(LibsvmError::Parse {

@@ -267,7 +267,11 @@ impl Partition {
         assert!(m > 0, "need at least one node");
         assert!(d >= m, "cannot split {d} features over {m} nodes");
         let speeds = sanitize_weights(speeds);
-        // Row nnz histogram (count once over the sparse structure).
+        // Row nnz histogram (count once over the sparse structure). A
+        // store-backed dataset already carries the exact histogram as
+        // ingest metadata (`rownnz.bin`) — same u64 counts the sweep
+        // would produce, so the cuts are bit-identical, without touching
+        // any shard bytes.
         let mut row_nnz = vec![0u64; d];
         match &ds.x {
             crate::linalg::DataMatrix::Sparse(sp) => {
@@ -278,12 +282,30 @@ impl Partition {
                     }
                 }
             }
+            crate::linalg::DataMatrix::Stored(sm) => {
+                row_nnz.copy_from_slice(sm.row_nnz());
+            }
             crate::linalg::DataMatrix::Dense(_) => {
                 // Dense: every row weighs the same; degrade to the count
                 // split (speed-weighted when speeds are non-uniform).
                 return weighted_ranges(d, &speeds);
             }
         }
+        Self::cost_cuts_from_row_nnz(&row_nnz, &speeds, row_overhead)
+    }
+
+    /// The quantile-cut arithmetic of [`Partition::feature_cost_cuts`],
+    /// over an explicit per-row nnz histogram. Split out so the in-RAM
+    /// sweep and the store's ingest-time metadata feed the *same* float
+    /// arithmetic — identical histogram in, bit-identical cuts out.
+    /// `speeds` must already be sanitized.
+    fn cost_cuts_from_row_nnz(
+        row_nnz: &[u64],
+        speeds: &[f64],
+        row_overhead: f64,
+    ) -> Vec<(usize, usize)> {
+        let m = speeds.len();
+        let d = row_nnz.len();
         let weight = |nnz: u64| nnz as f64 + row_overhead;
         let total: f64 = row_nnz.iter().map(|&v| weight(v)).sum();
         let wsum: f64 = speeds.iter().sum();

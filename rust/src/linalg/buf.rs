@@ -1,0 +1,167 @@
+//! Shared nonzero buffers with a heap/mmap backing axis.
+//!
+//! [`crate::linalg::CscMatrix`] historically held its `rowidx`/`values`
+//! arrays behind `Arc<[T]>`. The out-of-core shard store
+//! ([`crate::store`]) needs the *same* matrix type to run over bytes that
+//! live in a memory-mapped shard file, so the two arrays now live behind
+//! [`Buf<T>`]: either a heap `Arc<[T]>` (exactly the old representation)
+//! or a typed window into a shared [`Mmap`](crate::store::Mmap). A `Buf`
+//! derefs to `&[T]`, so every kernel (`sparse_dot` gathers, scatters, the
+//! CSR mirror build) is byte-for-byte the same code over either backing —
+//! which is what makes store-backed runs bit-identical to heap-backed
+//! ones.
+//!
+//! Mapped windows are only ever constructed by the shard reader, which
+//! guarantees 8-byte section alignment and little-endian on-disk layout
+//! (and refuses the mapped path entirely on big-endian targets — see
+//! [`crate::store::mmap`]).
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::store::Mmap;
+
+/// Where a buffer's bytes live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backing {
+    /// Ordinary heap allocation (`Arc<[T]>`).
+    Heap,
+    /// Window into a memory-mapped shard file.
+    Mapped,
+}
+
+/// Marker for element types that may be reinterpreted directly from
+/// little-endian file bytes.
+///
+/// # Safety
+///
+/// Implementors must be plain-old-data: no padding, no invalid bit
+/// patterns, and a stable layout (`u32`, `u64`, `f64`).
+pub unsafe trait Plain: Copy + Send + Sync + 'static {}
+unsafe impl Plain for u32 {}
+unsafe impl Plain for u64 {}
+unsafe impl Plain for f64 {}
+
+enum BufInner<T: Plain> {
+    Heap(Arc<[T]>),
+    Mapped {
+        map: Arc<Mmap>,
+        /// Byte offset of the window into the mapping (validated to be a
+        /// multiple of `align_of::<T>()` at construction).
+        off: usize,
+        /// Element count.
+        len: usize,
+    },
+}
+
+impl<T: Plain> Clone for BufInner<T> {
+    fn clone(&self) -> Self {
+        match self {
+            BufInner::Heap(a) => BufInner::Heap(Arc::clone(a)),
+            BufInner::Mapped { map, off, len } => BufInner::Mapped {
+                map: Arc::clone(map),
+                off: *off,
+                len: *len,
+            },
+        }
+    }
+}
+
+/// A shared, immutable `[T]` buffer over heap or mapped storage.
+#[derive(Clone)]
+pub struct Buf<T: Plain> {
+    inner: BufInner<T>,
+}
+
+impl<T: Plain> Buf<T> {
+    /// Typed window into a mapped shard file. `off` is a byte offset;
+    /// `len` an element count. The window must lie inside the mapping and
+    /// be element-aligned — shard sections are laid out on 8-byte
+    /// boundaries precisely so this holds for `u32`/`u64`/`f64`.
+    pub fn mapped(map: Arc<Mmap>, off: usize, len: usize) -> Self {
+        let size = std::mem::size_of::<T>();
+        let align = std::mem::align_of::<T>();
+        assert!(off % align == 0, "mapped buffer offset {off} not {align}-aligned");
+        assert!(
+            map.bytes().as_ptr() as usize % align == 0,
+            "mapping base not {align}-aligned"
+        );
+        assert!(
+            off.checked_add(len * size).is_some_and(|end| end <= map.len()),
+            "mapped buffer [{off}, {off}+{len}·{size}) exceeds mapping of {} bytes",
+            map.len()
+        );
+        Self {
+            inner: BufInner::Mapped { map, off, len },
+        }
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        match &self.inner {
+            BufInner::Heap(a) => a,
+            BufInner::Mapped { map, off, len } => {
+                // Sound: the constructor validated bounds + alignment, T is
+                // Plain (any bit pattern valid), and the mapping is
+                // immutable for its lifetime (PROT_READ, MAP_PRIVATE).
+                unsafe {
+                    std::slice::from_raw_parts(map.bytes().as_ptr().add(*off) as *const T, *len)
+                }
+            }
+        }
+    }
+
+    pub fn backing(&self) -> Backing {
+        match &self.inner {
+            BufInner::Heap(_) => Backing::Heap,
+            BufInner::Mapped { .. } => Backing::Mapped,
+        }
+    }
+
+    /// Identity of the underlying storage: data pointer + length. Two
+    /// clones (or two views of one shared buffer) compare equal; deep
+    /// copies don't — the basis of `CscMatrix::shares_storage_with`.
+    pub fn storage_id(&self) -> (usize, usize) {
+        let s = self.as_slice();
+        (s.as_ptr() as usize, s.len())
+    }
+}
+
+impl<T: Plain> From<Vec<T>> for Buf<T> {
+    fn from(v: Vec<T>) -> Self {
+        Self {
+            inner: BufInner::Heap(v.into()),
+        }
+    }
+}
+
+impl<T: Plain> std::ops::Deref for Buf<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Plain + fmt::Debug> fmt::Debug for Buf<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Buf<{:?}>[len {}]", self.backing(), self.as_slice().len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_buf_derefs_and_shares() {
+        let b: Buf<f64> = vec![1.0, 2.0, 3.0].into();
+        assert_eq!(&b[..], &[1.0, 2.0, 3.0]);
+        assert_eq!(b.backing(), Backing::Heap);
+        let c = b.clone();
+        assert_eq!(b.storage_id(), c.storage_id());
+        let d: Buf<f64> = vec![1.0, 2.0, 3.0].into();
+        assert_ne!(b.storage_id(), d.storage_id());
+    }
+}

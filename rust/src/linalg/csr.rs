@@ -66,6 +66,48 @@ impl CsrMatrix {
         }
     }
 
+    /// Assemble from raw arrays (shard-file CSR mirror decode): `rowptr`
+    /// must have `nrows+1` nondecreasing entries starting at 0, column
+    /// indices strictly increasing in-bounds within each row. Panics on
+    /// violation — corrupt mirrors fail at decode, not in a kernel.
+    pub fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        rowptr: Vec<usize>,
+        colidx: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Self {
+        assert_eq!(rowptr.len(), nrows + 1, "rowptr must have nrows+1 entries");
+        assert_eq!(rowptr[0], 0, "rowptr must start at 0");
+        assert_eq!(*rowptr.last().unwrap(), colidx.len(), "rowptr/nnz mismatch");
+        assert_eq!(colidx.len(), values.len(), "colidx/values length mismatch");
+        for i in 0..nrows {
+            assert!(rowptr[i] <= rowptr[i + 1], "rowptr must be nondecreasing");
+            let row = &colidx[rowptr[i]..rowptr[i + 1]];
+            let mut last: Option<u32> = None;
+            for &c in row {
+                assert!((c as usize) < ncols, "col {c} out of bounds ({ncols})");
+                if let Some(l) = last {
+                    assert!(c > l, "cols must be strictly increasing within a row");
+                }
+                last = Some(c);
+            }
+        }
+        Self {
+            nrows,
+            ncols,
+            rowptr,
+            colidx,
+            values,
+        }
+    }
+
+    /// Row-pointer array (shard-file serialization).
+    #[inline]
+    pub fn rowptr(&self) -> &[usize] {
+        &self.rowptr
+    }
+
     #[inline]
     pub fn nrows(&self) -> usize {
         self.nrows

@@ -108,6 +108,9 @@ impl HvpKernel {
         match x {
             DataMatrix::Sparse(sp) => sp.at_mul_scaled_into_par(u, s, t, self.threads),
             DataMatrix::Dense(m) => m.at_mul_scaled_into(u, s, t),
+            DataMatrix::Stored(_) => {
+                panic!("store-backed matrix reached the HVP kernel — extract a shard block first")
+            }
         }
     }
 
@@ -118,6 +121,9 @@ impl HvpKernel {
         match x {
             DataMatrix::Sparse(sp) => sp.at_mul_into_par(u, t, self.threads),
             DataMatrix::Dense(m) => m.at_mul_into(u, t),
+            DataMatrix::Stored(_) => {
+                panic!("store-backed matrix reached the HVP kernel — extract a shard block first")
+            }
         }
     }
 

@@ -1,16 +1,26 @@
-//! Unified data-matrix abstraction over dense and sparse storage.
+//! Unified data-matrix abstraction over dense, sparse, and store-backed
+//! storage.
 //!
 //! Algorithms (PCG, SDCA, SAG, gradient/HVP evaluation) are written once
 //! against [`DataMatrix`]; datasets pick the representation (synthetic text
-//! corpora are sparse, the XLA runtime path is dense).
+//! corpora are sparse, the XLA runtime path is dense, `--store` runs are
+//! [`Stored`](DataMatrix::Stored) — shard files opened lazily, visited in
+//! global column order so every delegated op is bit-identical to the heap
+//! sparse path).
 
+use crate::linalg::buf::Backing;
 use crate::linalg::dense::DenseMatrix;
 use crate::linalg::sparse::CscMatrix;
+use crate::store::StoreMatrix;
 
 #[derive(Clone, Debug)]
 pub enum DataMatrix {
     Dense(DenseMatrix),
     Sparse(CscMatrix),
+    /// Out-of-core: columns live in per-rank shard files
+    /// ([`crate::store`]). Block extraction yields ordinary `Sparse`
+    /// matrices (mapped or heap), so kernels never see this variant.
+    Stored(StoreMatrix),
 }
 
 impl DataMatrix {
@@ -19,6 +29,7 @@ impl DataMatrix {
         match self {
             DataMatrix::Dense(m) => m.nrows(),
             DataMatrix::Sparse(m) => m.nrows(),
+            DataMatrix::Stored(m) => m.nrows(),
         }
     }
 
@@ -27,6 +38,7 @@ impl DataMatrix {
         match self {
             DataMatrix::Dense(m) => m.ncols(),
             DataMatrix::Sparse(m) => m.ncols(),
+            DataMatrix::Stored(m) => m.ncols(),
         }
     }
 
@@ -36,6 +48,7 @@ impl DataMatrix {
         match self {
             DataMatrix::Dense(m) => m.nnz(),
             DataMatrix::Sparse(m) => m.nnz(),
+            DataMatrix::Stored(m) => m.nnz(),
         }
     }
 
@@ -44,6 +57,7 @@ impl DataMatrix {
         match self {
             DataMatrix::Dense(m) => m.at_mul_into(u, t),
             DataMatrix::Sparse(m) => m.at_mul_into(u, t),
+            DataMatrix::Stored(m) => m.at_mul_into(u, t),
         }
     }
 
@@ -52,6 +66,7 @@ impl DataMatrix {
         match self {
             DataMatrix::Dense(m) => m.a_mul_into(t, y),
             DataMatrix::Sparse(m) => m.a_mul_into(t, y),
+            DataMatrix::Stored(m) => m.a_mul_into(t, y),
         }
     }
 
@@ -72,6 +87,7 @@ impl DataMatrix {
         match self {
             DataMatrix::Dense(m) => m.col(j).to_vec(),
             DataMatrix::Sparse(m) => m.col_dense(j),
+            DataMatrix::Stored(m) => m.col_dense(j),
         }
     }
 
@@ -87,6 +103,7 @@ impl DataMatrix {
                 }
                 acc
             }
+            DataMatrix::Stored(m) => m.col_dot(j, w),
         }
     }
 
@@ -100,6 +117,7 @@ impl DataMatrix {
                     w[*r as usize] += a * *v;
                 }
             }
+            DataMatrix::Stored(m) => m.col_axpy(j, a, w),
         }
     }
 
@@ -108,22 +126,29 @@ impl DataMatrix {
         match self {
             DataMatrix::Dense(m) => crate::linalg::ops::norm2_sq(m.col(j)),
             DataMatrix::Sparse(m) => m.col_norm_sq(j),
+            DataMatrix::Stored(m) => m.col_norm_sq(j),
         }
     }
 
-    /// Column block (sample shard).
+    /// Column block (sample shard). A `Stored` matrix yields an ordinary
+    /// `Sparse` block — zero-copy out of the owning shard's mapping when
+    /// the range is shard-aligned.
     pub fn col_block(&self, start: usize, end: usize) -> DataMatrix {
         match self {
             DataMatrix::Dense(m) => DataMatrix::Dense(m.col_block(start, end)),
             DataMatrix::Sparse(m) => DataMatrix::Sparse(m.col_block(start, end)),
+            DataMatrix::Stored(m) => DataMatrix::Sparse(m.col_block(start, end)),
         }
     }
 
-    /// Row block (feature shard).
+    /// Row block (feature shard). A `Stored` matrix streams its shards in
+    /// global column order, producing the same heap block the sparse path
+    /// builds.
     pub fn row_block(&self, start: usize, end: usize) -> DataMatrix {
         match self {
             DataMatrix::Dense(m) => DataMatrix::Dense(m.row_block(start, end)),
             DataMatrix::Sparse(m) => DataMatrix::Sparse(m.row_block(start, end)),
+            DataMatrix::Stored(m) => DataMatrix::Sparse(m.row_block(start, end)),
         }
     }
 
@@ -131,11 +156,29 @@ impl DataMatrix {
         match self {
             DataMatrix::Dense(m) => m.clone(),
             DataMatrix::Sparse(m) => m.to_dense(),
+            DataMatrix::Stored(m) => m.to_dense(),
         }
     }
 
+    /// Sparse in the storage-format sense — `Stored` shards are CSC too.
     pub fn is_sparse(&self) -> bool {
-        matches!(self, DataMatrix::Sparse(_))
+        matches!(self, DataMatrix::Sparse(_) | DataMatrix::Stored(_))
+    }
+
+    /// Out-of-core: the columns live in shard files, not RAM.
+    pub fn is_store_backed(&self) -> bool {
+        matches!(self, DataMatrix::Stored(_))
+    }
+
+    /// Where the nonzero bytes live. `Stored` reports the backing its
+    /// shards will open with under the current mmap policy; an extracted
+    /// block reports its own actual backing.
+    pub fn backing(&self) -> Backing {
+        match self {
+            DataMatrix::Dense(_) => Backing::Heap,
+            DataMatrix::Sparse(m) => m.backing(),
+            DataMatrix::Stored(m) => m.backing(),
+        }
     }
 }
 

@@ -4,6 +4,7 @@
 //! [`matrix::DataMatrix`], and small dense factorizations for the
 //! Woodbury inner solve.
 
+pub mod buf;
 pub mod cholesky;
 pub mod csr;
 pub mod dense;
@@ -12,6 +13,7 @@ pub mod matrix;
 pub mod ops;
 pub mod sparse;
 
+pub use buf::{Backing, Buf};
 pub use cholesky::{lu_solve, Cholesky};
 pub use csr::CsrMatrix;
 pub use dense::{DenseMatrix, SquareMatrix};

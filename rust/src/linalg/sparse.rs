@@ -14,15 +14,19 @@
 //!
 //! ## Storage sharing
 //!
-//! `rowidx`/`values` live behind `Arc`s and `colptr` holds **absolute**
-//! offsets into them, so a column block (DiSCO-S shard) is a zero-copy
-//! view: it clones the two `Arc`s and slices the small `colptr` array —
-//! no per-shard deep copy of the nonzeros. Row blocks (DiSCO-F shards)
-//! still filter and re-base row indices, producing fresh buffers.
+//! `rowidx`/`values` live behind shared [`Buf`] buffers and `colptr`
+//! holds **absolute** offsets into them, so a column block (DiSCO-S
+//! shard) is a zero-copy view: it clones the two buffer handles and
+//! slices the small `colptr` array — no per-shard deep copy of the
+//! nonzeros. Row blocks (DiSCO-F shards) still filter and re-base row
+//! indices, producing fresh buffers. A `Buf` is either an ordinary heap
+//! `Arc<[T]>` or a window into a memory-mapped shard file
+//! ([`crate::store`]); every kernel below runs the same code over either
+//! backing.
 
+use crate::linalg::buf::{Backing, Buf};
 use crate::linalg::ops;
 use crate::util::prng::Xoshiro256pp;
-use std::sync::Arc;
 
 #[derive(Clone, Debug)]
 pub struct CscMatrix {
@@ -32,8 +36,8 @@ pub struct CscMatrix {
     /// Offsets are absolute into the shared buffers (a block view starts
     /// at `colptr[0] > 0`), so `nnz = colptr[ncols] − colptr[0]`.
     colptr: Vec<usize>,
-    rowidx: Arc<[u32]>,
-    values: Arc<[f64]>,
+    rowidx: Buf<u32>,
+    values: Buf<f64>,
 }
 
 /// Logical equality (shape + per-column contents); two views of the same
@@ -119,7 +123,57 @@ impl CscMatrix {
     /// True when `self` aliases the same nonzero buffers as `other`
     /// (zero-copy block views do; deep copies don't).
     pub fn shares_storage_with(&self, other: &CscMatrix) -> bool {
-        Arc::ptr_eq(&self.values, &other.values) && Arc::ptr_eq(&self.rowidx, &other.rowidx)
+        self.values.storage_id() == other.values.storage_id()
+            && self.rowidx.storage_id() == other.rowidx.storage_id()
+    }
+
+    /// Where the nonzero buffers live: [`Backing::Mapped`] when this matrix
+    /// is a zero-copy view into an mmapped shard file, [`Backing::Heap`]
+    /// otherwise. (`colptr` is always heap — it is tiny and per-view.)
+    pub fn backing(&self) -> Backing {
+        if self.values.backing() == Backing::Mapped || self.rowidx.backing() == Backing::Mapped {
+            Backing::Mapped
+        } else {
+            Backing::Heap
+        }
+    }
+
+    /// Assemble a matrix directly over store-provided buffers (mapped or
+    /// decoded): `colptr` must be absolute offsets into `rowidx`/`values`
+    /// with `colptr[0] == 0`, nondecreasing, and row indices strictly
+    /// increasing in-bounds within each column. Validation is O(nnz) and
+    /// runs once per shard open — corrupt shard files fail here rather
+    /// than in a kernel.
+    pub fn from_store_parts(
+        nrows: usize,
+        colptr: Vec<usize>,
+        rowidx: Buf<u32>,
+        values: Buf<f64>,
+    ) -> CscMatrix {
+        assert!(!colptr.is_empty(), "colptr must have ncols+1 entries");
+        let ncols = colptr.len() - 1;
+        assert_eq!(colptr[0], 0, "store colptr must start at 0");
+        assert_eq!(*colptr.last().unwrap(), rowidx.len(), "colptr/nnz mismatch");
+        assert_eq!(rowidx.len(), values.len(), "rowidx/values length mismatch");
+        for j in 0..ncols {
+            assert!(colptr[j] <= colptr[j + 1], "colptr must be nondecreasing");
+            let col = &rowidx[colptr[j]..colptr[j + 1]];
+            let mut last: Option<u32> = None;
+            for &r in col {
+                assert!((r as usize) < nrows, "row {r} out of bounds ({nrows})");
+                if let Some(l) = last {
+                    assert!(r > l, "rows must be strictly increasing within a column");
+                }
+                last = Some(r);
+            }
+        }
+        CscMatrix {
+            nrows,
+            ncols,
+            colptr,
+            rowidx,
+            values,
+        }
     }
 
     /// True when `self` and `other` are the *same view*: same shared
@@ -286,8 +340,8 @@ impl CscMatrix {
             nrows: self.nrows,
             ncols: end - start,
             colptr: self.colptr[start..=end].to_vec(),
-            rowidx: Arc::clone(&self.rowidx),
-            values: Arc::clone(&self.values),
+            rowidx: self.rowidx.clone(),
+            values: self.values.clone(),
         }
     }
 
@@ -469,6 +523,27 @@ mod tests {
         let a = m.row_block(0, 7);
         let b = m.row_block(7, 20);
         assert_eq!(a.nnz() + b.nnz(), m.nnz());
+    }
+
+    #[test]
+    fn from_store_parts_round_trips() {
+        let m = sample();
+        let colptr = m.colptr.clone();
+        let rebuilt = CscMatrix::from_store_parts(
+            m.nrows(),
+            colptr,
+            m.rowidx.clone(),
+            m.values.clone(),
+        );
+        assert_eq!(rebuilt, m);
+        assert!(rebuilt.shares_storage_with(&m));
+        assert_eq!(rebuilt.backing(), Backing::Heap);
+    }
+
+    #[test]
+    #[should_panic(expected = "colptr/nnz mismatch")]
+    fn from_store_parts_rejects_bad_colptr() {
+        let _ = CscMatrix::from_store_parts(4, vec![0, 3], vec![0u32, 2].into(), vec![1.0, 2.0].into());
     }
 
     #[test]

@@ -22,6 +22,9 @@
 //!   reachable through `ctx.compute*` (call-graph approximation).
 //! * `raw-print` — `println!`/`eprintln!` in library code outside the CLI
 //!   entrypoints, the obs sinks, and the bench harness.
+//! * `unbounded-read` — `read_to_string`/`read_to_end`/`lines().collect()`
+//!   in `data/`/`store/` library code (the out-of-core data path must
+//!   stream; bounded reads carry an allow comment).
 //!
 //! Runtime (documented here, enforced by [`crate::net::Checked`]):
 //!
@@ -96,6 +99,10 @@ pub const RULES: &[(&str, &str)] = &[
     (
         "raw-print",
         "println!/eprintln!/print!/eprint! outside bin/, main.rs, obs/ sinks, and util/bench.rs (stray prints corrupt machine-read stdout)",
+    ),
+    (
+        "unbounded-read",
+        "read_to_string/read_to_end/lines().collect() in data//store/ library code (the out-of-core data path streams)",
     ),
     (
         "schedule-divergence",

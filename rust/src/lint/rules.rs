@@ -92,6 +92,7 @@ pub fn check_file(f: &SourceFile, costed: &CostedFns) -> Vec<Violation> {
     f32_literal(f, &mut out);
     uncosted_compute(f, costed, &mut out);
     raw_print(f, &mut out);
+    unbounded_read(f, &mut out);
     out.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
     out
 }
@@ -306,6 +307,55 @@ fn uncosted_compute(f: &SourceFile, costed: &CostedFns, out: &mut Vec<Violation>
                 .to_string(),
             out,
         );
+    }
+}
+
+/// `unbounded-read`: whole-input materialization (`read_to_string`,
+/// `read_to_end`, `lines().collect()`) in the data-path library code
+/// (`data/`, `store/`). The out-of-core contract is that the global
+/// matrix is never resident — loaders stream through a reused
+/// `read_line` buffer or a validated fixed-size section. Intentionally
+/// bounded reads (a KB-scale manifest, one checksummed shard) carry an
+/// allow comment.
+fn unbounded_read(f: &SourceFile, out: &mut Vec<Violation>) {
+    if !(f.in_dir("data/") || f.in_dir("store/")) {
+        return;
+    }
+    for i in 0..f.toks.len() {
+        let t = &f.toks[i];
+        let called = f.toks.get(i + 1).is_some_and(|n| n.is_punct('('));
+        let is_def = i > 0 && f.toks[i - 1].is_ident("fn");
+        if (t.is_ident("read_to_string") || t.is_ident("read_to_end")) && called && !is_def {
+            emit(
+                f,
+                i,
+                "unbounded-read",
+                format!(
+                    "{}() materializes the whole input — the data path streams \
+                     (read_line over a reused buffer); justify a bounded read with \
+                     an allow comment",
+                    t.text
+                ),
+                out,
+            );
+        }
+        // `lines().collect()` — one heap String per line of the input.
+        if t.is_ident("lines")
+            && called
+            && f.toks.get(i + 2).is_some_and(|n| n.is_punct(')'))
+            && f.toks.get(i + 3).is_some_and(|n| n.is_punct('.'))
+            && f.toks.get(i + 4).is_some_and(|n| n.is_ident("collect"))
+        {
+            emit(
+                f,
+                i,
+                "unbounded-read",
+                "lines().collect() materializes every line — stream through one \
+                 reused read_line buffer instead"
+                    .to_string(),
+                out,
+            );
+        }
     }
 }
 

@@ -9,9 +9,18 @@
 //! disco run      --resume results/ckpt [...]       bit-identical continuation
 //! disco run      --transport tcp --rank R --world N --addr HOST:PORT [...]
 //! disco xla-run  --dataset-shape 1024x4096 --loss logistic [...]
+//! disco ingest   --dataset rcv1s --out rcv1s.store --shards 4
+//! disco ingest   --libsvm data.libsvm --out data.store --shards 4
+//! disco export   --dataset e2e --out big.libsvm --repeat 16
 //! disco datasets            list the registered datasets (Table 5)
 //! disco artifacts           list loaded AOT artifacts
 //! ```
+//!
+//! `ingest` writes an out-of-core shard store (streaming two-pass over
+//! libsvm text — the global matrix is never resident); `run --store DIR`
+//! then loads shards lazily per rank. `export` writes a registry dataset
+//! back out as libsvm text (optionally repeated, for out-of-core RSS
+//! testing at sizes the registry doesn't carry).
 //!
 //! Every solver knob is spec-backed: flags are declarative overrides over
 //! a [`disco::algorithms::RunSpec`] (optionally loaded from `--spec`), so
@@ -40,6 +49,11 @@ fn main() {
     .opt("dataset-shape", Some("1024x4096"), "xla-run: dense d×n problem shape")
     .opt("emit-spec", None, "write the resolved RunSpec JSON to this path ('-' = stdout) and exit")
     .switch("records", "print the per-iteration convergence records")
+    .opt("libsvm", None, "ingest: source libsvm text file (instead of --dataset)")
+    .opt("out", None, "ingest/export: output store directory / libsvm path")
+    .opt("shards", Some("4"), "ingest: number of column shards to cut")
+    .switch("csr-mirror", "ingest: also store the CSR mirror in each shard file")
+    .opt("repeat", Some("1"), "export: repeat the dataset this many times")
     .with_transport_flags();
 
     let args = match args.parse_env() {
@@ -61,7 +75,11 @@ fn main() {
         "artifacts" => cmd_artifacts(),
         "run" => cmd_run(&args),
         "xla-run" => cmd_xla_run(&args),
-        other => Err(format!("unknown command '{other}' (run, xla-run, datasets, artifacts)")),
+        "ingest" => cmd_ingest(&args),
+        "export" => cmd_export(&args),
+        other => Err(format!(
+            "unknown command '{other}' (run, xla-run, ingest, export, datasets, artifacts)"
+        )),
     };
     if let Err(e) = result {
         eprintln!("error: {e}");
@@ -162,7 +180,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let transport = TransportCli::parse(args).map_err(|e| e.to_string())?;
     let ds = spec
         .data
-        .load()
+        .load_checked()?
         .ok_or_else(|| format!("unknown dataset '{}'", spec.data.name))?;
     let plan = CheckpointPlan::from_args(args)?;
     let repartition = RepartitionSpec::from_args(args)?;
@@ -197,6 +215,75 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             }
         }
     }
+    Ok(())
+}
+
+/// `disco ingest`: write a dataset as an out-of-core shard store. From
+/// `--libsvm` this streams the text in two passes (metadata, then shard
+/// bytes) so the global matrix is never resident; from `--dataset` it
+/// re-shards an in-RAM registry dataset (a convenience for tests and
+/// small stores).
+fn cmd_ingest(args: &Args) -> Result<(), String> {
+    let out = args
+        .get("out")
+        .ok_or("ingest needs --out <store directory>")?;
+    let dir = std::path::Path::new(&out);
+    let shards = args.get_usize("shards").map_err(|e| e.to_string())?;
+    if shards == 0 {
+        return Err("--shards must be ≥ 1".into());
+    }
+    let mirror = args.flag("csr-mirror");
+    let meta = if let Some(src) = args.get("libsvm") {
+        if args.provided("dataset") {
+            return Err("ingest takes --libsvm or --dataset, not both".into());
+        }
+        disco::store::ingest::ingest_libsvm(std::path::Path::new(&src), dir, shards, mirror, 0)
+            .map_err(|e| format!("ingest '{src}': {e}"))?
+    } else {
+        let name = args.req("dataset").map_err(|e| e.to_string())?;
+        let scale = args.get_usize("scale").map_err(|e| e.to_string())?.max(1);
+        let ds = if scale <= 1 {
+            registry::load(&name)
+        } else {
+            registry::load_scaled(&name, scale)
+        }
+        .ok_or_else(|| format!("unknown dataset '{name}'"))?;
+        disco::store::ingest::ingest_dataset(&ds, dir, shards, mirror)
+            .map_err(|e| format!("ingest '{name}': {e}"))?
+    };
+    println!(
+        "ingested '{}' -> {out}: n={} d={} nnz={} in {} shard(s){}",
+        meta.name,
+        meta.n,
+        meta.d,
+        meta.nnz,
+        meta.shards.len(),
+        if mirror { " with CSR mirrors" } else { "" }
+    );
+    Ok(())
+}
+
+/// `disco export`: write a registry dataset as libsvm text, optionally
+/// repeated `--repeat` times (the repeated file materializes to
+/// `repeat × size`, which is how CI builds an ingest input larger than
+/// the RSS budget it gates).
+fn cmd_export(args: &Args) -> Result<(), String> {
+    let out = args.get("out").ok_or("export needs --out <libsvm path>")?;
+    let name = args.req("dataset").map_err(|e| e.to_string())?;
+    let scale = args.get_usize("scale").map_err(|e| e.to_string())?.max(1);
+    let repeat = args.get_usize("repeat").map_err(|e| e.to_string())?.max(1);
+    let ds = if scale <= 1 {
+        registry::load(&name)
+    } else {
+        registry::load_scaled(&name, scale)
+    }
+    .ok_or_else(|| format!("unknown dataset '{name}'"))?;
+    disco::store::ingest::export_libsvm(&ds, std::path::Path::new(&out), repeat)
+        .map_err(|e| format!("export '{name}': {e}"))?;
+    println!(
+        "exported '{name}' ×{repeat} -> {out} ({} samples)",
+        ds.nsamples() * repeat
+    );
     Ok(())
 }
 

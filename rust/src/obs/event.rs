@@ -33,6 +33,10 @@ pub enum Phase {
     Handoff,
     /// Elastic membership: tearing down / re-forming a numbered epoch.
     EpochReform,
+    /// Out-of-core data loading: opening shard files / extracting the
+    /// rank's shard from a store-backed dataset (unpriced — the modeled
+    /// clock never sees it).
+    Ingest,
 }
 
 impl Phase {
@@ -44,6 +48,7 @@ impl Phase {
             Phase::Compute => "compute",
             Phase::Handoff => "handoff",
             Phase::EpochReform => "epoch_reform",
+            Phase::Ingest => "ingest",
         }
     }
 
@@ -55,6 +60,7 @@ impl Phase {
             "compute" => Some(Phase::Compute),
             "handoff" => Some(Phase::Handoff),
             "epoch_reform" => Some(Phase::EpochReform),
+            "ingest" => Some(Phase::Ingest),
             _ => None,
         }
     }
@@ -67,6 +73,7 @@ impl Phase {
             Phase::Compute => 3,
             Phase::Handoff => 4,
             Phase::EpochReform => 5,
+            Phase::Ingest => 6,
         }
     }
 
@@ -78,6 +85,7 @@ impl Phase {
             3 => Ok(Phase::Compute),
             4 => Ok(Phase::Handoff),
             5 => Ok(Phase::EpochReform),
+            6 => Ok(Phase::Ingest),
             other => Err(format!("unknown phase code {other}")),
         }
     }
@@ -90,6 +98,7 @@ impl Phase {
             Phase::Compute,
             Phase::Handoff,
             Phase::EpochReform,
+            Phase::Ingest,
         ]
     }
 }

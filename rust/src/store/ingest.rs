@@ -1,0 +1,449 @@
+//! Streaming ingest: libsvm text (or an in-RAM registry dataset) → a
+//! store directory of per-rank shard files.
+//!
+//! The libsvm path makes two passes through one reused `read_line`
+//! buffer (shared token parsing with
+//! [`parse_line`](crate::data::libsvm::parse_line)):
+//!
+//! 1. **Metadata** — `n`, `d` (max feature index), the per-feature nnz
+//!    histogram, total nnz. Only counters are held; no matrix bytes.
+//! 2. **Shards** — the sample-axis cut table (decided from pass-1
+//!    metadata, before any matrix bytes exist) drives a second sweep that
+//!    buffers exactly one shard's columns at a time, writing each
+//!    [`write_shard`] as its cut boundary passes. Peak memory is the
+//!    largest single shard plus the `n·8`-byte label vector — never the
+//!    global matrix.
+//!
+//! `export_libsvm` is the inverse (with an optional repeat factor), used
+//! to fabricate large on-disk inputs for the CI MaxRSS gate without ever
+//! materializing them in one address space.
+
+use std::fs::File;
+use std::io::{self, BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::data::dataset::Dataset;
+use crate::data::libsvm::{parse_line, LibsvmError};
+use crate::data::partition::balanced_ranges;
+use crate::linalg::{CscMatrix, DataMatrix};
+use crate::store::{write_shard, ShardEntry, StoreMeta, LABELS, ROWNNZ};
+use crate::util::bytes::{put_f64s, put_u64};
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn parse_err(e: LibsvmError) -> io::Error {
+    match e {
+        LibsvmError::Io(e) => e,
+        parse => bad(parse.to_string()),
+    }
+}
+
+fn shard_name(i: usize) -> String {
+    format!("shard-{i:04}.dsh")
+}
+
+struct Pass1 {
+    n: usize,
+    d: usize,
+    nnz: u64,
+    row_nnz: Vec<u64>,
+}
+
+/// First (cheap) pass: sample count, dimension, per-feature histogram.
+fn scan_metadata(src: &Path, min_dim: usize) -> io::Result<Pass1> {
+    let mut r = BufReader::new(File::open(src)?);
+    let mut buf = String::new();
+    let mut lineno = 0usize;
+    let mut n = 0usize;
+    let mut max_idx = 0usize;
+    let mut nnz = 0u64;
+    let mut row_nnz: Vec<u64> = Vec::new();
+    loop {
+        buf.clear();
+        if r.read_line(&mut buf)? == 0 {
+            break;
+        }
+        lineno += 1;
+        let Some(p) = parse_line(&buf, lineno).map_err(parse_err)? else {
+            continue;
+        };
+        n += 1;
+        for &(i, _) in &p.col {
+            let i = i as usize;
+            if i >= row_nnz.len() {
+                row_nnz.resize(i + 1, 0);
+            }
+            row_nnz[i] += 1;
+            nnz += 1;
+        }
+        max_idx = max_idx.max(p.max_idx);
+    }
+    if n == 0 {
+        return Err(bad(format!("{}: empty libsvm file", src.display())));
+    }
+    let d = max_idx.max(min_dim);
+    row_nnz.resize(d, 0);
+    Ok(Pass1 { n, d, nnz, row_nnz })
+}
+
+fn write_labels(dir: &Path, labels: &[f64]) -> io::Result<()> {
+    let mut b = Vec::with_capacity(labels.len() * 8);
+    put_f64s(&mut b, labels);
+    std::fs::write(dir.join(LABELS), b)
+}
+
+fn write_rownnz(dir: &Path, row_nnz: &[u64]) -> io::Result<()> {
+    let mut b = Vec::with_capacity(row_nnz.len() * 8);
+    for &v in row_nnz {
+        put_u64(&mut b, v);
+    }
+    std::fs::write(dir.join(ROWNNZ), b)
+}
+
+/// Stream a libsvm file into a store of `shards` column shards under
+/// `dir`. The global matrix is never resident: pass 1 holds counters,
+/// pass 2 holds one shard's columns. Returns the written manifest.
+pub fn ingest_libsvm(
+    src: &Path,
+    dir: &Path,
+    shards: usize,
+    csr_mirror: bool,
+    min_dim: usize,
+) -> io::Result<StoreMeta> {
+    assert!(shards > 0, "need at least one shard");
+    let p1 = scan_metadata(src, min_dim)?;
+    if p1.n < shards {
+        return Err(bad(format!(
+            "{}: cannot split {} samples into {shards} shards",
+            src.display(),
+            p1.n
+        )));
+    }
+    let cuts = balanced_ranges(p1.n, shards);
+    std::fs::create_dir_all(dir)?;
+    let name = src
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+
+    let mut r = BufReader::new(File::open(src)?);
+    let mut buf = String::new();
+    let mut lineno = 0usize;
+    let mut labels: Vec<f64> = Vec::with_capacity(p1.n);
+    let mut cols: Vec<Vec<(u32, f64)>> = Vec::new();
+    let mut entries: Vec<ShardEntry> = Vec::new();
+    let mut shard_i = 0usize;
+    loop {
+        buf.clear();
+        if r.read_line(&mut buf)? == 0 {
+            break;
+        }
+        lineno += 1;
+        let Some(p) = parse_line(&buf, lineno).map_err(parse_err)? else {
+            continue;
+        };
+        if p.max_idx > p1.d || labels.len() >= p1.n {
+            return Err(bad(format!(
+                "{}: file changed between ingest passes",
+                src.display()
+            )));
+        }
+        labels.push(p.label);
+        cols.push(p.col);
+        if shard_i < cuts.len() && labels.len() == cuts[shard_i].1 {
+            let m = CscMatrix::from_columns(p1.d, &cols);
+            let info = write_shard(
+                &dir.join(shard_name(shard_i)),
+                &m,
+                cuts[shard_i].0,
+                csr_mirror,
+            )?;
+            entries.push(ShardEntry {
+                file: shard_name(shard_i),
+                nnz: info.nnz,
+                checksum: info.checksum,
+            });
+            cols.clear();
+            shard_i += 1;
+        }
+    }
+    if labels.len() != p1.n || shard_i != cuts.len() {
+        return Err(bad(format!(
+            "{}: file changed between ingest passes ({} of {} samples seen)",
+            src.display(),
+            labels.len(),
+            p1.n
+        )));
+    }
+    write_labels(dir, &labels)?;
+    write_rownnz(dir, &p1.row_nnz)?;
+    let meta = StoreMeta {
+        name,
+        n: p1.n,
+        d: p1.d,
+        nnz: p1.nnz,
+        cuts,
+        shards: entries,
+    };
+    meta.save(dir)?;
+    Ok(meta)
+}
+
+/// Write an in-RAM (sparse) dataset — e.g. a registry synthetic — into a
+/// store of `shards` column shards. The generator already materialized
+/// the matrix, so this path is about producing the on-disk layout, not
+/// about memory; shards are zero-copy column views of the source.
+pub fn ingest_dataset(
+    ds: &Dataset,
+    dir: &Path,
+    shards: usize,
+    csr_mirror: bool,
+) -> io::Result<StoreMeta> {
+    assert!(shards > 0, "need at least one shard");
+    let sp = match &ds.x {
+        DataMatrix::Sparse(m) => m,
+        other => {
+            return Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                format!(
+                    "only sparse in-RAM datasets can be written to a store (got {})",
+                    match other {
+                        DataMatrix::Dense(_) => "dense",
+                        _ => "store-backed",
+                    }
+                ),
+            ))
+        }
+    };
+    let n = ds.nsamples();
+    if n < shards {
+        return Err(bad(format!(
+            "cannot split {n} samples into {shards} shards"
+        )));
+    }
+    let cuts = balanced_ranges(n, shards);
+    std::fs::create_dir_all(dir)?;
+    let mut row_nnz = vec![0u64; ds.dim()];
+    for j in 0..n {
+        let (rows, _) = sp.col(j);
+        for r in rows {
+            row_nnz[*r as usize] += 1;
+        }
+    }
+    let mut entries = Vec::with_capacity(shards);
+    for (i, &(s, e)) in cuts.iter().enumerate() {
+        let block = sp.col_block(s, e);
+        let info = write_shard(&dir.join(shard_name(i)), &block, s, csr_mirror)?;
+        entries.push(ShardEntry {
+            file: shard_name(i),
+            nnz: info.nnz,
+            checksum: info.checksum,
+        });
+    }
+    write_labels(dir, &ds.y)?;
+    write_rownnz(dir, &row_nnz)?;
+    let meta = StoreMeta {
+        name: ds.name.clone(),
+        n,
+        d: ds.dim(),
+        nnz: sp.nnz() as u64,
+        cuts,
+        shards: entries,
+    };
+    meta.save(dir)?;
+    Ok(meta)
+}
+
+/// Stream a dataset out as libsvm text, `repeat` ≥ 1 concatenated copies.
+/// Values print with Rust's shortest-round-trip `f64` formatting, so
+/// re-ingesting reproduces them bit-exactly. Used to fabricate inputs
+/// larger than any in-RAM dataset for the CI MaxRSS gate.
+pub fn export_libsvm(ds: &Dataset, path: &Path, repeat: usize) -> io::Result<()> {
+    let repeat = repeat.max(1);
+    let mut f = BufWriter::new(File::create(path)?);
+    for _ in 0..repeat {
+        for j in 0..ds.nsamples() {
+            write!(f, "{}", ds.y[j])?;
+            match &ds.x {
+                DataMatrix::Sparse(m) => {
+                    let (rows, vals) = m.col(j);
+                    for (r, v) in rows.iter().zip(vals.iter()) {
+                        write!(f, " {}:{}", *r as usize + 1, v)?;
+                    }
+                }
+                other => {
+                    for (i, v) in other.col_dense(j).iter().enumerate() {
+                        if *v != 0.0 {
+                            write!(f, " {}:{}", i + 1, v)?;
+                        }
+                    }
+                }
+            }
+            writeln!(f)?;
+        }
+    }
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::libsvm;
+    use crate::store::open_dataset;
+    use crate::util::prng::Xoshiro256pp;
+    use std::io::Cursor;
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "disco-ingest-test-{}-{name}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Random libsvm text with comments, blank lines, index gaps, ragged
+    /// nnz per line.
+    fn random_libsvm(rng: &mut Xoshiro256pp, n: usize, d: usize) -> String {
+        let mut out = String::new();
+        out.push_str("# header comment\n");
+        for s in 0..n {
+            if rng.next_f64() < 0.1 {
+                out.push('\n'); // blank line
+            }
+            if rng.next_f64() < 0.1 {
+                out.push_str("# interior comment\n");
+            }
+            let label = if rng.next_f64() < 0.5 { 1.0 } else { -1.0 };
+            out.push_str(&format!("{label}"));
+            let mut idx: Vec<usize> = (1..=d).filter(|_| rng.next_f64() < 0.3).collect();
+            if idx.is_empty() && s == 0 {
+                idx.push(d); // pin the dimension
+            }
+            // Scramble order: the parser must sort.
+            if idx.len() > 1 && rng.next_f64() < 0.5 {
+                idx.reverse();
+            }
+            for i in idx {
+                out.push_str(&format!(" {}:{}", i, rng.normal()));
+            }
+            if rng.next_f64() < 0.2 {
+                out.push_str(" # trailing comment");
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    #[test]
+    fn streamed_ingest_matches_one_shot_parse_bit_for_bit() {
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        for (case, (n, d)) in [(0usize, (13usize, 9usize)), (1, (29, 17)), (2, (64, 5))]
+            .into_iter()
+        {
+            let text = random_libsvm(&mut rng, n, d);
+            let heap = libsvm::parse_reader(Cursor::new(&text), "case", 0).unwrap();
+            let dir = tmp_dir(&format!("prop{case}"));
+            let src = dir.join("case.libsvm");
+            std::fs::write(&src, &text).unwrap();
+            // Shard counts chosen to exercise ragged cut boundaries.
+            for shards in [1usize, 2, 3, 5] {
+                let sub = dir.join(format!("store{shards}"));
+                let meta = ingest_libsvm(&src, &sub, shards, false, 0).unwrap();
+                assert_eq!(meta.m(), shards);
+                let stored = open_dataset(&sub).unwrap();
+                assert_eq!(stored.nsamples(), heap.nsamples());
+                assert_eq!(stored.dim(), heap.dim());
+                assert_eq!(stored.nnz(), heap.nnz());
+                // Labels and every column, bit-for-bit.
+                for (a, b) in stored.y.iter().zip(heap.y.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                for j in 0..heap.nsamples() {
+                    let (a, b) = (stored.x.col_dense(j), heap.x.col_dense(j));
+                    for (x, y) in a.iter().zip(b.iter()) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "col {j}");
+                    }
+                }
+            }
+            std::fs::remove_dir_all(&dir).unwrap();
+        }
+    }
+
+    #[test]
+    fn ingest_dataset_round_trips() {
+        use crate::data::synthetic::SyntheticConfig;
+        let ds = SyntheticConfig::new("rt", 40, 30).seed(5).generate();
+        let dir = tmp_dir("dataset");
+        let meta = ingest_dataset(&ds, &dir, 4, true).unwrap();
+        assert_eq!(meta.n, 30);
+        assert_eq!(meta.nnz as usize, ds.nnz());
+        let back = open_dataset(&dir).unwrap();
+        assert_eq!(back.name, "rt");
+        for (a, b) in back.y.iter().zip(ds.y.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for j in 0..ds.nsamples() {
+            let (a, b) = (back.x.col_dense(j), ds.x.col_dense(j));
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn export_then_ingest_preserves_values_bitwise() {
+        use crate::data::synthetic::SyntheticConfig;
+        let ds = SyntheticConfig::new("ex", 15, 12).seed(9).generate();
+        let dir = tmp_dir("export");
+        let path = dir.join("ex.libsvm");
+        export_libsvm(&ds, &path, 2).unwrap();
+        let back = libsvm::load(&path).unwrap();
+        assert_eq!(back.nsamples(), 2 * ds.nsamples());
+        for j in 0..ds.nsamples() {
+            for rep in [j, j + ds.nsamples()] {
+                assert_eq!(back.y[rep].to_bits(), ds.y[j].to_bits());
+                let (a, b) = (back.x.col_dense(rep), ds.x.col_dense(j));
+                for (x, y) in a.iter().zip(b.iter().take(a.len())) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn ingest_refuses_oversharding_and_empty() {
+        let dir = tmp_dir("refuse");
+        let src = dir.join("two.libsvm");
+        std::fs::write(&src, "1 1:1\n-1 2:1\n").unwrap();
+        assert!(ingest_libsvm(&src, &dir.join("s"), 3, false, 0).is_err());
+        let empty = dir.join("empty.libsvm");
+        std::fs::write(&empty, "# only a comment\n").unwrap();
+        let err = ingest_libsvm(&empty, &dir.join("e"), 1, false, 0).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rank_extraction_opens_one_shard() {
+        use crate::data::synthetic::SyntheticConfig;
+        let ds = SyntheticConfig::new("lazy", 30, 24).seed(6).generate();
+        let dir = tmp_dir("lazy");
+        let meta = ingest_dataset(&ds, &dir, 4, false).unwrap();
+        let stored = open_dataset(&dir).unwrap();
+        let sm = match &stored.x {
+            DataMatrix::Stored(m) => m.clone(),
+            _ => panic!("expected a store-backed matrix"),
+        };
+        assert_eq!(sm.shards_open(), 0, "open must not touch shard bytes");
+        let (s, e) = meta.cuts[2];
+        let _block = stored.x.col_block(s, e);
+        assert_eq!(sm.shards_open(), 1, "one rank's extraction maps one shard");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,176 @@
+//! Minimal read-only memory mapping, hand-rolled over the raw `mmap(2)`
+//! syscall so the crate stays dependency-free.
+//!
+//! Only whole-file, `PROT_READ` + `MAP_PRIVATE` mappings are supported —
+//! exactly what the shard reader needs. The mapping is immutable for its
+//! lifetime, which is what lets [`crate::linalg::Buf`] hand out `&[T]`
+//! views into it and mark them `Send + Sync`.
+//!
+//! # When mapping is disabled
+//!
+//! [`mmap_enabled`] gates the whole mapped path. It returns `false` under
+//! Miri (no syscalls), on non-unix targets, on big-endian targets (the
+//! shard format is little-endian on disk, so reinterpreting mapped bytes
+//! would be wrong), and when `DISCO_NO_MMAP=1` is set (portability /
+//! debugging escape hatch). When disabled, `ShardFile::open` falls back to
+//! an explicit `read()` + `from_le_bytes` decode into heap buffers — same
+//! values, same slices, just not zero-copy.
+
+use std::fs::File;
+use std::io;
+
+/// Whether the zero-copy mapped path is available on this target/run.
+pub fn mmap_enabled() -> bool {
+    if cfg!(miri) || cfg!(not(unix)) || cfg!(target_endian = "big") {
+        return false;
+    }
+    !matches!(std::env::var("DISCO_NO_MMAP"), Ok(v) if v == "1")
+}
+
+#[cfg(all(unix, not(miri)))]
+mod sys {
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+
+    pub fn map(file: &File, len: usize) -> io::Result<*const u8> {
+        if len == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "cannot map an empty file",
+            ));
+        }
+        // MAP_FAILED is (void*)-1, not null.
+        let failed = usize::MAX as *mut u8;
+        let ptr = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ,
+                MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == failed || ptr.is_null() {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(ptr as *const u8)
+    }
+
+    pub fn unmap(ptr: *const u8, len: usize) {
+        unsafe {
+            munmap(ptr as *mut u8, len);
+        }
+    }
+}
+
+/// A whole-file, read-only memory mapping.
+pub struct Mmap {
+    ptr: *const u8,
+    len: usize,
+}
+
+// Sound: the mapping is PROT_READ/MAP_PRIVATE and never mutated or
+// remapped until Drop, so shared references to its bytes are safe to send
+// and share across threads.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `file` in its entirety. Fails when [`mmap_enabled`] is false —
+    /// callers must check the policy first and take the decode fallback.
+    pub fn map(file: &File) -> io::Result<Mmap> {
+        if !mmap_enabled() {
+            return Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "mmap disabled on this target/run (DISCO_NO_MMAP, miri, or non-unix)",
+            ));
+        }
+        let len = file.metadata()?.len();
+        let len = usize::try_from(len)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "file too large to map"))?;
+        #[cfg(all(unix, not(miri)))]
+        {
+            let ptr = sys::map(file, len)?;
+            Ok(Mmap { ptr, len })
+        }
+        #[cfg(not(all(unix, not(miri))))]
+        {
+            unreachable!("mmap_enabled() is false on this target")
+        }
+    }
+
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        // Sound: ptr is a live PROT_READ mapping of exactly `len` bytes.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, not(miri)))]
+        sys::unmap(self.ptr, self.len);
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mmap[{} bytes]", self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn maps_whole_file_or_reports_disabled() {
+        let dir = std::env::temp_dir().join(format!("disco-mmap-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("probe.bin");
+        {
+            let mut f = std::fs::File::create(&path).unwrap();
+            f.write_all(&[1u8, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        }
+        let f = std::fs::File::open(&path).unwrap();
+        match Mmap::map(&f) {
+            Ok(m) => {
+                assert_eq!(m.len(), 8);
+                assert_eq!(m.bytes(), &[1, 2, 3, 4, 5, 6, 7, 8]);
+            }
+            Err(e) => {
+                assert!(!mmap_enabled(), "map failed while enabled: {e}");
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

@@ -1,0 +1,637 @@
+//! Out-of-core shard store — the file-based data path (DESIGN.md §5).
+//!
+//! The paper's headline run minimizes over a 273 GB splice-site dataset;
+//! no single node holds that in RAM. This module unbinds dataset size from
+//! memory by replacing "materialize `X`, then slice" with "decide cuts
+//! from metadata, then each rank opens *its own* shard file":
+//!
+//! * [`ingest`] streams a libsvm file (or a registry dataset) into a store
+//!   directory: `store.json` (manifest), `labels.bin` (f64 labels),
+//!   `rownnz.bin` (per-feature nnz histogram — partition-policy food), and
+//!   one `shard-NNNN.dsh` column shard per rank. The streaming path's
+//!   first pass gathers only `(n, d, row_nnz)`; the second writes one
+//!   shard at a time. The global matrix is never resident.
+//! * [`shard`] defines the `DSH1` shard container: versioned, checksummed
+//!   (FNV-1a 64), little-endian, 8-aligned CSC sections plus an optional
+//!   CSR mirror. Opened shards hand out [`CscMatrix`] views over the
+//!   mapping (zero-copy) or decoded heap buffers when mapping is off.
+//! * [`mmap`] is the dependency-free `mmap(2)` wrapper and its enable
+//!   policy.
+//! * [`StoreMatrix`] (this file) is the lazy, shard-granular
+//!   `DataMatrix::Stored` backend: per-column ops and full products
+//!   delegate to the owning shard **in global column order**, so every
+//!   float op lands in the same sequence as the heap path — store-backed
+//!   runs are bit-identical to heap-backed ones.
+
+pub mod ingest;
+pub mod mmap;
+pub mod shard;
+
+pub use mmap::{mmap_enabled, Mmap};
+pub use shard::{write_shard, ShardFile, ShardWriteInfo};
+
+use std::io::{self, Read};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::data::dataset::Dataset;
+use crate::linalg::{Backing, CscMatrix, DataMatrix};
+use crate::util::json::{self, Json};
+
+pub const STORE_VERSION: u32 = 1;
+pub const MANIFEST: &str = "store.json";
+pub const LABELS: &str = "labels.bin";
+pub const ROWNNZ: &str = "rownnz.bin";
+
+/// FNV-1a 64-bit — the store's checksum. Hand-rolled (no deps), stable
+/// across platforms, cheap enough to verify a whole shard at open.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// One shard's manifest entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardEntry {
+    pub file: String,
+    pub nnz: u64,
+    pub checksum: u64,
+}
+
+/// Parsed `store.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoreMeta {
+    pub name: String,
+    /// Samples (global columns).
+    pub n: usize,
+    /// Features (rows).
+    pub d: usize,
+    pub nnz: u64,
+    /// Sample-axis cut table: shard `i` holds global columns
+    /// `cuts[i].0 .. cuts[i].1`. Contiguous and covering `0..n`.
+    pub cuts: Vec<(usize, usize)>,
+    pub shards: Vec<ShardEntry>,
+}
+
+impl StoreMeta {
+    pub fn m(&self) -> usize {
+        self.cuts.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        assert!(self.nnz < (1u64 << 53), "nnz exceeds JSON-safe integer range");
+        json::obj(vec![
+            ("version", json::num(STORE_VERSION as f64)),
+            ("name", json::s(&self.name)),
+            ("n", json::num(self.n as f64)),
+            ("d", json::num(self.d as f64)),
+            ("nnz", json::num(self.nnz as f64)),
+            (
+                "cuts",
+                json::arr(
+                    self.cuts
+                        .iter()
+                        .map(|&(s, e)| json::arr(vec![json::num(s as f64), json::num(e as f64)]))
+                        .collect(),
+                ),
+            ),
+            (
+                "shards",
+                json::arr(
+                    self.shards
+                        .iter()
+                        .map(|sh| {
+                            json::obj(vec![
+                                ("file", json::s(&sh.file)),
+                                ("nnz", json::num(sh.nnz as f64)),
+                                ("checksum", json::s(&format!("{:#018x}", sh.checksum))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<StoreMeta, String> {
+        let version = j
+            .get("version")
+            .as_usize()
+            .ok_or("manifest missing 'version'")?;
+        if version != STORE_VERSION as usize {
+            return Err(format!(
+                "unsupported store version {version} (expected {STORE_VERSION})"
+            ));
+        }
+        let name = j
+            .get("name")
+            .as_str()
+            .ok_or("manifest missing 'name'")?
+            .to_string();
+        let n = j.get("n").as_usize().ok_or("manifest missing 'n'")?;
+        let d = j.get("d").as_usize().ok_or("manifest missing 'd'")?;
+        let nnz = j.get("nnz").as_f64().ok_or("manifest missing 'nnz'")? as u64;
+        let mut cuts = Vec::new();
+        for (i, c) in j
+            .get("cuts")
+            .as_arr()
+            .ok_or("manifest missing 'cuts'")?
+            .iter()
+            .enumerate()
+        {
+            let pair = c.as_arr().ok_or(format!("cuts[{i}] is not a pair"))?;
+            if pair.len() != 2 {
+                return Err(format!("cuts[{i}] is not a pair"));
+            }
+            let s = pair[0].as_usize().ok_or(format!("cuts[{i}].0 invalid"))?;
+            let e = pair[1].as_usize().ok_or(format!("cuts[{i}].1 invalid"))?;
+            cuts.push((s, e));
+        }
+        let mut shards = Vec::new();
+        for (i, sh) in j
+            .get("shards")
+            .as_arr()
+            .ok_or("manifest missing 'shards'")?
+            .iter()
+            .enumerate()
+        {
+            let file = sh
+                .get("file")
+                .as_str()
+                .ok_or(format!("shards[{i}] missing 'file'"))?
+                .to_string();
+            let snnz = sh
+                .get("nnz")
+                .as_f64()
+                .ok_or(format!("shards[{i}] missing 'nnz'"))? as u64;
+            let hex = sh
+                .get("checksum")
+                .as_str()
+                .ok_or(format!("shards[{i}] missing 'checksum'"))?;
+            let checksum = u64::from_str_radix(hex.trim_start_matches("0x"), 16)
+                .map_err(|_| format!("shards[{i}] bad checksum '{hex}'"))?;
+            shards.push(ShardEntry {
+                file,
+                nnz: snnz,
+                checksum,
+            });
+        }
+        let meta = StoreMeta {
+            name,
+            n,
+            d,
+            nnz,
+            cuts,
+            shards,
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.cuts.is_empty() || self.cuts.len() != self.shards.len() {
+            return Err(format!(
+                "manifest has {} cuts but {} shards",
+                self.cuts.len(),
+                self.shards.len()
+            ));
+        }
+        if self.cuts[0].0 != 0 || self.cuts.last().unwrap().1 != self.n {
+            return Err(format!("cuts do not cover 0..{}: {:?}", self.n, self.cuts));
+        }
+        for w in self.cuts.windows(2) {
+            if w[0].1 != w[1].0 {
+                return Err(format!("cuts have a gap or overlap: {:?}", self.cuts));
+            }
+        }
+        if self.cuts.iter().any(|&(s, e)| e <= s) {
+            return Err(format!("empty shard range in cuts: {:?}", self.cuts));
+        }
+        let total: u64 = self.shards.iter().map(|s| s.nnz).sum();
+        if total != self.nnz {
+            return Err(format!(
+                "shard nnz sum {total} disagrees with manifest nnz {}",
+                self.nnz
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, dir: &Path) -> io::Result<()> {
+        std::fs::write(dir.join(MANIFEST), format!("{}\n", self.to_json()))
+    }
+
+    pub fn load(dir: &Path) -> io::Result<StoreMeta> {
+        let path = dir.join(MANIFEST);
+        // Bounded: the manifest is a few KB of metadata, never matrix bytes.
+        let text = std::fs::read_to_string(&path) // lint: allow(unbounded-read)
+            .map_err(|e| io::Error::new(e.kind(), format!("{}: {e}", path.display())))?;
+        let j = Json::parse(&text)
+            .map_err(|e| bad(format!("{}: bad manifest JSON: {e}", path.display())))?;
+        StoreMeta::from_json(&j).map_err(|e| bad(format!("{}: {e}", path.display())))
+    }
+}
+
+fn read_f64s_file(path: &Path, n: usize) -> io::Result<Vec<f64>> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| io::Error::new(e.kind(), format!("{}: {e}", path.display())))?;
+    let mut buf = vec![0u8; n * 8];
+    f.read_exact(&mut buf)
+        .map_err(|e| io::Error::new(e.kind(), format!("{}: {e}", path.display())))?;
+    Ok(buf
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn read_u64s_file(path: &Path, n: usize) -> io::Result<Vec<u64>> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| io::Error::new(e.kind(), format!("{}: {e}", path.display())))?;
+    let mut buf = vec![0u8; n * 8];
+    f.read_exact(&mut buf)
+        .map_err(|e| io::Error::new(e.kind(), format!("{}: {e}", path.display())))?;
+    Ok(buf
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+struct StoreInner {
+    dir: PathBuf,
+    meta: StoreMeta,
+    /// Per-feature nnz histogram, loaded eagerly from `rownnz.bin` (d·8
+    /// bytes of metadata). Feeds the cost-balanced partition policies
+    /// without touching any matrix bytes.
+    row_nnz: Vec<u64>,
+    /// Lazily opened shards. A rank that only extracts its own column
+    /// block maps exactly one entry; nothing else is ever read.
+    shards: Mutex<Vec<Option<Arc<CscMatrix>>>>,
+}
+
+/// The `DataMatrix::Stored` backend: a `d×n` sparse matrix whose columns
+/// live in per-rank shard files, opened on demand.
+///
+/// Every operation visits columns in **global column order**, delegating
+/// to the owning shard's `CscMatrix` — the identical float-op sequence as
+/// the heap-backed matrix, hence bit-identical results.
+///
+/// IO errors after open (a shard file deleted mid-run, a checksum
+/// mismatch) panic: matrix ops have no error channel, and a store that
+/// validated at open and then lost a shard is not something an iteration
+/// can recover from.
+#[derive(Clone)]
+pub struct StoreMatrix {
+    inner: Arc<StoreInner>,
+}
+
+impl std::fmt::Debug for StoreMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "StoreMatrix[{} @ {}: {}x{}, {} shards]",
+            self.inner.meta.name,
+            self.inner.dir.display(),
+            self.inner.meta.d,
+            self.inner.meta.n,
+            self.inner.meta.m()
+        )
+    }
+}
+
+impl StoreMatrix {
+    /// Open a store directory's matrix (manifest + row histogram only; no
+    /// shard bytes are touched until a column is needed).
+    pub fn open(dir: &Path) -> io::Result<StoreMatrix> {
+        let meta = StoreMeta::load(dir)?;
+        let row_nnz = read_u64s_file(&dir.join(ROWNNZ), meta.d)?;
+        let hist_total: u64 = row_nnz.iter().sum();
+        if hist_total != meta.nnz {
+            return Err(bad(format!(
+                "{}: rownnz.bin sums to {hist_total}, manifest says {}",
+                dir.display(),
+                meta.nnz
+            )));
+        }
+        let m = meta.m();
+        Ok(StoreMatrix {
+            inner: Arc::new(StoreInner {
+                dir: dir.to_path_buf(),
+                meta,
+                row_nnz,
+                shards: Mutex::new(vec![None; m]),
+            }),
+        })
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.inner.meta.d
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.inner.meta.n
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.inner.meta.nnz as usize
+    }
+
+    pub fn name(&self) -> &str {
+        &self.inner.meta.name
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.inner.dir
+    }
+
+    /// The ingest-time sample-axis cut table (shard column ranges).
+    pub fn cuts(&self) -> &[(usize, usize)] {
+        &self.inner.meta.cuts
+    }
+
+    /// Per-feature nnz histogram (exact integer counts, from metadata).
+    pub fn row_nnz(&self) -> &[u64] {
+        &self.inner.row_nnz
+    }
+
+    /// Shard `i`'s matrix, opening (and caching) its file on first touch.
+    pub fn shard(&self, i: usize) -> Arc<CscMatrix> {
+        let mut cache = self.inner.shards.lock().unwrap();
+        if let Some(m) = &cache[i] {
+            return Arc::clone(m);
+        }
+        let entry = &self.inner.meta.shards[i];
+        let path = self.inner.dir.join(&entry.file);
+        let sf = ShardFile::open(&path)
+            .unwrap_or_else(|e| panic!("store shard {}: {e}", path.display()));
+        let (cs, ce) = self.inner.meta.cuts[i];
+        assert_eq!(
+            sf.col_range(),
+            (cs, ce),
+            "shard {} column range disagrees with manifest",
+            entry.file
+        );
+        assert_eq!(sf.nrows(), self.inner.meta.d, "shard {} nrows", entry.file);
+        assert_eq!(sf.nnz() as u64, entry.nnz, "shard {} nnz", entry.file);
+        assert_eq!(
+            sf.checksum(),
+            entry.checksum,
+            "shard {} checksum disagrees with manifest",
+            entry.file
+        );
+        let m = Arc::new(sf.matrix());
+        cache[i] = Some(Arc::clone(&m));
+        m
+    }
+
+    /// Index of the shard holding global column `j`, plus `j` local to it.
+    fn locate(&self, j: usize) -> (usize, usize) {
+        let cuts = &self.inner.meta.cuts;
+        let i = cuts.partition_point(|&(_, e)| e <= j);
+        assert!(i < cuts.len(), "column {j} out of range ({})", self.ncols());
+        (i, j - cuts[i].0)
+    }
+
+    pub fn col_dense(&self, j: usize) -> Vec<f64> {
+        let (i, lj) = self.locate(j);
+        self.shard(i).col_dense(lj)
+    }
+
+    pub fn col_dot(&self, j: usize, w: &[f64]) -> f64 {
+        let (i, lj) = self.locate(j);
+        let shard = self.shard(i);
+        let (rows, vals) = shard.col(lj);
+        let mut acc = 0.0;
+        for (r, v) in rows.iter().zip(vals.iter()) {
+            acc += *v * w[*r as usize];
+        }
+        acc
+    }
+
+    pub fn col_axpy(&self, j: usize, a: f64, w: &mut [f64]) {
+        let (i, lj) = self.locate(j);
+        let shard = self.shard(i);
+        let (rows, vals) = shard.col(lj);
+        for (r, v) in rows.iter().zip(vals.iter()) {
+            w[*r as usize] += a * *v;
+        }
+    }
+
+    pub fn col_norm_sq(&self, j: usize) -> f64 {
+        let (i, lj) = self.locate(j);
+        self.shard(i).col_norm_sq(lj)
+    }
+
+    /// `t ← Xᵀ u`, shard by shard in global column order — each shard
+    /// writes its own disjoint `t` slice, identically to the heap sweep.
+    pub fn at_mul_into(&self, u: &[f64], t: &mut [f64]) {
+        assert_eq!(u.len(), self.nrows());
+        assert_eq!(t.len(), self.ncols());
+        for (i, &(s, e)) in self.inner.meta.cuts.iter().enumerate() {
+            self.shard(i).at_mul_into(u, &mut t[s..e]);
+        }
+    }
+
+    /// `y ← X t`. Replicates the heap scatter exactly: zero once, then
+    /// columns in global order with the same `t[j] == 0` skip.
+    pub fn a_mul_into(&self, t: &[f64], y: &mut [f64]) {
+        assert_eq!(t.len(), self.ncols());
+        assert_eq!(y.len(), self.nrows());
+        for v in y.iter_mut() {
+            *v = 0.0;
+        }
+        for (i, &(s, e)) in self.inner.meta.cuts.iter().enumerate() {
+            let shard = self.shard(i);
+            for lj in 0..(e - s) {
+                let tj = t[s + lj];
+                if tj == 0.0 {
+                    continue;
+                }
+                let (rows, vals) = shard.col(lj);
+                for (r, v) in rows.iter().zip(vals.iter()) {
+                    y[*r as usize] += *v * tj;
+                }
+            }
+        }
+    }
+
+    /// Column block `[start, end)`. When the range lies inside one shard
+    /// this is that shard's zero-copy `col_block` (the common case: a
+    /// rank extracting its own cut range, which ingest aligned to the
+    /// shard boundaries). A spanning range is assembled on the heap —
+    /// bounded by the requested range, never the whole matrix.
+    pub fn col_block(&self, start: usize, end: usize) -> CscMatrix {
+        assert!(start <= end && end <= self.ncols());
+        if start == end {
+            return CscMatrix::from_columns(self.nrows(), &[]);
+        }
+        let (i, ls) = self.locate(start);
+        let (_, ie) = self.inner.meta.cuts[i];
+        if end <= ie {
+            return self.shard(i).col_block(ls, ls + (end - start));
+        }
+        let mut cols: Vec<Vec<(u32, f64)>> = Vec::with_capacity(end - start);
+        let cuts = &self.inner.meta.cuts;
+        for (si, &(s, e)) in cuts.iter().enumerate() {
+            if e <= start || s >= end {
+                continue;
+            }
+            let shard = self.shard(si);
+            let lo = start.max(s) - s;
+            let hi = end.min(e) - s;
+            for lj in lo..hi {
+                let (rows, vals) = shard.col(lj);
+                cols.push(rows.iter().copied().zip(vals.iter().copied()).collect());
+            }
+        }
+        CscMatrix::from_columns(self.nrows(), &cols)
+    }
+
+    /// Row block `[start, end)` — the DiSCO-F feature shard. Streams every
+    /// shard's columns in global order, filtering and re-basing rows: the
+    /// identical push sequence as `CscMatrix::row_block` over the heap
+    /// matrix, so the result is bit-identical. Output is bounded by the
+    /// block's nnz; input shards are visited one at a time.
+    pub fn row_block(&self, start: usize, end: usize) -> CscMatrix {
+        assert!(start <= end && end <= self.nrows());
+        let mut colptr = Vec::with_capacity(self.ncols() + 1);
+        let mut rowidx: Vec<u32> = Vec::new();
+        let mut values: Vec<f64> = Vec::new();
+        colptr.push(0);
+        for (i, &(s, e)) in self.inner.meta.cuts.iter().enumerate() {
+            let shard = self.shard(i);
+            for lj in 0..(e - s) {
+                let (rows, vals) = shard.col(lj);
+                for (r, v) in rows.iter().zip(vals.iter()) {
+                    let ri = *r as usize;
+                    if ri >= start && ri < end {
+                        rowidx.push((ri - start) as u32);
+                        values.push(*v);
+                    }
+                }
+                colptr.push(rowidx.len());
+            }
+        }
+        CscMatrix::from_store_parts(end - start, colptr, rowidx.into(), values.into())
+    }
+
+    /// Dense materialization (tests / small stores only).
+    pub fn to_dense(&self) -> crate::linalg::DenseMatrix {
+        let mut m = crate::linalg::DenseMatrix::zeros(self.nrows(), self.ncols());
+        for (i, &(s, e)) in self.inner.meta.cuts.iter().enumerate() {
+            let shard = self.shard(i);
+            for lj in 0..(e - s) {
+                let (rows, vals) = shard.col(lj);
+                for (r, v) in rows.iter().zip(vals.iter()) {
+                    m.set(*r as usize, s + lj, *v);
+                }
+            }
+        }
+        m
+    }
+
+    /// How many shards are currently open (test/diagnostic hook: a rank
+    /// that extracted its own block should have touched exactly one).
+    pub fn shards_open(&self) -> usize {
+        self.inner
+            .shards
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.is_some())
+            .count()
+    }
+
+    /// Backing of the shards this matrix would open ([`Backing::Mapped`]
+    /// when the mmap policy is on; decoded heap buffers otherwise).
+    pub fn backing(&self) -> Backing {
+        if mmap_enabled() {
+            Backing::Mapped
+        } else {
+            Backing::Heap
+        }
+    }
+}
+
+/// Open a store directory as a [`Dataset`] (labels eager — n·8 bytes —
+/// matrix lazy/shard-granular).
+pub fn open_dataset(dir: &Path) -> io::Result<Dataset> {
+    let matrix = StoreMatrix::open(dir)?;
+    let y = read_f64s_file(&dir.join(LABELS), matrix.ncols())?;
+    let name = matrix.name().to_string();
+    Ok(Dataset::new(&name, DataMatrix::Stored(matrix), y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn meta_round_trips_through_json() {
+        let meta = StoreMeta {
+            name: "tiny".into(),
+            n: 10,
+            d: 7,
+            nnz: 30,
+            cuts: vec![(0, 5), (5, 10)],
+            shards: vec![
+                ShardEntry {
+                    file: "shard-0000.dsh".into(),
+                    nnz: 14,
+                    checksum: 0xdeadbeefcafef00d,
+                },
+                ShardEntry {
+                    file: "shard-0001.dsh".into(),
+                    nnz: 16,
+                    checksum: 1,
+                },
+            ],
+        };
+        let text = meta.to_json().to_string();
+        let back = StoreMeta::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, meta);
+    }
+
+    #[test]
+    fn meta_validation_rejects_bad_cuts() {
+        let mut meta = StoreMeta {
+            name: "x".into(),
+            n: 10,
+            d: 4,
+            nnz: 5,
+            cuts: vec![(0, 4), (5, 10)],
+            shards: vec![
+                ShardEntry {
+                    file: "a".into(),
+                    nnz: 2,
+                    checksum: 0,
+                },
+                ShardEntry {
+                    file: "b".into(),
+                    nnz: 3,
+                    checksum: 0,
+                },
+            ],
+        };
+        assert!(meta.validate().unwrap_err().contains("gap"));
+        meta.cuts = vec![(0, 5), (5, 10)];
+        assert!(meta.validate().is_ok());
+        meta.shards[0].nnz = 99;
+        assert!(meta.validate().unwrap_err().contains("disagrees"));
+    }
+}

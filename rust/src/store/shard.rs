@@ -1,0 +1,536 @@
+//! `ShardFile` — the on-disk container for one rank's column shard.
+//!
+//! Layout (all integers little-endian, sections 8-byte aligned):
+//!
+//! | offset | bytes          | field                                      |
+//! |-------:|----------------|--------------------------------------------|
+//! | 0      | 4              | magic `DSH1`                               |
+//! | 4      | 4              | format version (`1`)                       |
+//! | 8      | 4              | flags (bit 0: CSR mirror present)          |
+//! | 12     | 4              | reserved (zero)                            |
+//! | 16     | 8              | `nrows` (features d)                       |
+//! | 24     | 8              | `ncols` (samples in this shard)            |
+//! | 32     | 8              | `col_start` (global column of local col 0) |
+//! | 40     | 8              | `nnz`                                      |
+//! | 48     | 8              | FNV-1a 64 checksum of all bytes after 64   |
+//! | 56     | 8              | reserved (zero)                            |
+//! | 64     | `(ncols+1)·8`  | `colptr: u64[]`, local (`colptr[0] = 0`)   |
+//! |        | `nnz·4` (+pad) | `rowidx: u32[]`                            |
+//! |        | `nnz·8`        | `values: f64[]`                            |
+//!
+//! With flag bit 0, a CSR mirror of the same nonzeros follows: `rowptr:
+//! u64[nrows+1]`, `colidx: u32[nnz]` (+pad), `values: f64[nnz]` — written
+//! by the same [`CsrMatrix::from_csc`] conversion the runtime kernel uses,
+//! so the file mirror is bit-identical to what the kernel would build.
+//!
+//! Opening validates magic, version, exact file size, and the checksum,
+//! then exposes the CSC arrays as [`Buf`] windows into the mapping
+//! (zero-copy) — or, when [`mmap_enabled`](super::mmap::mmap_enabled) is
+//! false, decodes them into heap buffers via `from_le_bytes`. Both paths
+//! yield byte-identical slices on little-endian hosts, and the decode path
+//! is also correct on big-endian ones.
+
+use std::fs::File;
+use std::io::{self, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::linalg::{Backing, Buf, CscMatrix, CsrMatrix};
+use crate::store::fnv1a64;
+use crate::store::mmap::{mmap_enabled, Mmap};
+use crate::util::bytes::{put_f64s, put_u32, put_u64};
+
+pub const SHARD_MAGIC: [u8; 4] = *b"DSH1";
+pub const SHARD_VERSION: u32 = 1;
+const FLAG_CSR_MIRROR: u32 = 1;
+const HEADER_LEN: usize = 64;
+
+fn align8(x: usize) -> usize {
+    (x + 7) & !7
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn pad8(buf: &mut Vec<u8>) {
+    while buf.len() % 8 != 0 {
+        buf.push(0);
+    }
+}
+
+/// Summary of a written shard, recorded in `store.json`.
+#[derive(Clone, Debug)]
+pub struct ShardWriteInfo {
+    pub nnz: u64,
+    pub checksum: u64,
+    pub bytes: u64,
+}
+
+/// Serialize `m` (one rank's column shard; `col_start` is the global
+/// column index of its local column 0) to `path`. Returns nnz/checksum
+/// for the store manifest.
+pub fn write_shard(
+    path: &Path,
+    m: &CscMatrix,
+    col_start: usize,
+    with_mirror: bool,
+) -> io::Result<ShardWriteInfo> {
+    let nnz = m.nnz();
+    let ncols = m.ncols();
+    let mut body = Vec::with_capacity((ncols + 1) * 8 + align8(nnz * 4) + nnz * 8);
+    let mut acc = 0u64;
+    put_u64(&mut body, 0);
+    for j in 0..ncols {
+        acc += m.col(j).0.len() as u64;
+        put_u64(&mut body, acc);
+    }
+    for j in 0..ncols {
+        for &r in m.col(j).0 {
+            put_u32(&mut body, r);
+        }
+    }
+    pad8(&mut body);
+    for j in 0..ncols {
+        put_f64s(&mut body, m.col(j).1);
+    }
+    if with_mirror {
+        let csr = CsrMatrix::from_csc(m);
+        for &p in csr.rowptr() {
+            put_u64(&mut body, p as u64);
+        }
+        for i in 0..csr.nrows() {
+            for &c in csr.row(i).0 {
+                put_u32(&mut body, c);
+            }
+        }
+        pad8(&mut body);
+        for i in 0..csr.nrows() {
+            put_f64s(&mut body, csr.row(i).1);
+        }
+    }
+    let checksum = fnv1a64(&body);
+
+    let mut hdr = Vec::with_capacity(HEADER_LEN);
+    hdr.extend_from_slice(&SHARD_MAGIC);
+    put_u32(&mut hdr, SHARD_VERSION);
+    put_u32(&mut hdr, if with_mirror { FLAG_CSR_MIRROR } else { 0 });
+    put_u32(&mut hdr, 0);
+    put_u64(&mut hdr, m.nrows() as u64);
+    put_u64(&mut hdr, ncols as u64);
+    put_u64(&mut hdr, col_start as u64);
+    put_u64(&mut hdr, nnz as u64);
+    put_u64(&mut hdr, checksum);
+    put_u64(&mut hdr, 0);
+    debug_assert_eq!(hdr.len(), HEADER_LEN);
+
+    let mut f = File::create(path)?;
+    f.write_all(&hdr)?;
+    f.write_all(&body)?;
+    f.sync_all()?;
+    Ok(ShardWriteInfo {
+        nnz: nnz as u64,
+        checksum,
+        bytes: (HEADER_LEN + body.len()) as u64,
+    })
+}
+
+/// Byte offsets (absolute into the file) of the post-header sections.
+struct Sections {
+    colptr: usize,
+    rowidx: usize,
+    values: usize,
+    mirror: Option<MirrorSections>,
+    total: usize,
+}
+
+struct MirrorSections {
+    rowptr: usize,
+    colidx: usize,
+    values: usize,
+}
+
+fn layout(nrows: usize, ncols: usize, nnz: usize, with_mirror: bool) -> Option<Sections> {
+    let colptr = HEADER_LEN;
+    let rowidx = colptr.checked_add(ncols.checked_add(1)?.checked_mul(8)?)?;
+    let values = align8(rowidx.checked_add(nnz.checked_mul(4)?)?);
+    let mut total = values.checked_add(nnz.checked_mul(8)?)?;
+    let mirror = if with_mirror {
+        let rowptr = total;
+        let colidx = rowptr.checked_add(nrows.checked_add(1)?.checked_mul(8)?)?;
+        let mvalues = align8(colidx.checked_add(nnz.checked_mul(4)?)?);
+        total = mvalues.checked_add(nnz.checked_mul(8)?)?;
+        Some(MirrorSections {
+            rowptr,
+            colidx,
+            values: mvalues,
+        })
+    } else {
+        None
+    };
+    Some(Sections {
+        colptr,
+        rowidx,
+        values,
+        mirror,
+        total,
+    })
+}
+
+fn u64s_at(bytes: &[u8], off: usize, n: usize) -> Vec<u64> {
+    bytes[off..off + n * 8]
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn u32s_at(bytes: &[u8], off: usize, n: usize) -> Vec<u32> {
+    bytes[off..off + n * 4]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn f64s_at(bytes: &[u8], off: usize, n: usize) -> Vec<f64> {
+    bytes[off..off + n * 8]
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// An opened, verified shard. The CSC arrays stay backed by the mapping
+/// (or by decoded heap buffers when mapping is disabled) for the life of
+/// any [`CscMatrix`] handed out by [`ShardFile::matrix`].
+pub struct ShardFile {
+    nrows: usize,
+    ncols: usize,
+    col_start: usize,
+    nnz: usize,
+    checksum: u64,
+    matrix: CscMatrix,
+    mirror: Option<CsrMatrix>,
+}
+
+impl ShardFile {
+    pub fn open(path: &Path) -> io::Result<ShardFile> {
+        let mut file = File::open(path)?;
+        let file_len = usize::try_from(file.metadata()?.len())
+            .map_err(|_| bad(format!("{}: shard file too large for this host", path.display())))?;
+        if file_len < HEADER_LEN {
+            return Err(bad(format!(
+                "{}: truncated shard file ({file_len} bytes, header needs {HEADER_LEN})",
+                path.display()
+            )));
+        }
+        let mut hdr = [0u8; HEADER_LEN];
+        file.read_exact(&mut hdr)?;
+        if hdr[0..4] != SHARD_MAGIC {
+            return Err(bad(format!(
+                "{}: bad magic {:02x?} (not a DSH1 shard file)",
+                path.display(),
+                &hdr[0..4]
+            )));
+        }
+        let mut r = crate::util::bytes::ByteReader::new(&hdr[4..]);
+        let parse = |e: String| bad(format!("{}: bad shard header: {e}", path.display()));
+        let version = r.u32().map_err(parse)?;
+        if version != SHARD_VERSION {
+            return Err(bad(format!(
+                "{}: unsupported shard version {version} (expected {SHARD_VERSION})",
+                path.display()
+            )));
+        }
+        let parse = |e: String| bad(format!("{}: bad shard header: {e}", path.display()));
+        let flags = r.u32().map_err(parse)?;
+        let parse = |e: String| bad(format!("{}: bad shard header: {e}", path.display()));
+        let _reserved = r.u32().map_err(parse)?;
+        let mut usize_field = |name: &str| -> io::Result<usize> {
+            let v = r
+                .u64()
+                .map_err(|e| bad(format!("{}: bad shard header: {e}", path.display())))?;
+            usize::try_from(v)
+                .map_err(|_| bad(format!("{}: {name} {v} overflows usize", path.display())))
+        };
+        let nrows = usize_field("nrows")?;
+        let ncols = usize_field("ncols")?;
+        let col_start = usize_field("col_start")?;
+        let nnz = usize_field("nnz")?;
+        let checksum = r
+            .u64()
+            .map_err(|e| bad(format!("{}: bad shard header: {e}", path.display())))?;
+        let with_mirror = flags & FLAG_CSR_MIRROR != 0;
+        let sec = layout(nrows, ncols, nnz, with_mirror)
+            .ok_or_else(|| bad(format!("{}: shard dimensions overflow", path.display())))?;
+        if file_len != sec.total {
+            return Err(bad(format!(
+                "{}: truncated or oversized shard file: expected {} bytes, found {file_len}",
+                path.display(),
+                sec.total
+            )));
+        }
+
+        // From here the two backings diverge only in where the bytes live.
+        let bytes_holder: ShardBytes;
+        let rowidx: Buf<u32>;
+        let values: Buf<f64>;
+        if mmap_enabled() {
+            let map = Arc::new(Mmap::map(&file)?);
+            let got = fnv1a64(&map.bytes()[HEADER_LEN..]);
+            if got != checksum {
+                return Err(bad(format!(
+                    "{}: checksum mismatch: header {checksum:#018x}, computed {got:#018x}",
+                    path.display()
+                )));
+            }
+            rowidx = Buf::mapped(Arc::clone(&map), sec.rowidx, nnz);
+            values = Buf::mapped(Arc::clone(&map), sec.values, nnz);
+            bytes_holder = ShardBytes::Mapped(map);
+        } else {
+            let mut rest = Vec::with_capacity(file_len - HEADER_LEN);
+            // Bounded by construction: reads exactly one shard file whose
+            // size was just validated against the header.
+            file.read_to_end(&mut rest)?; // lint: allow(unbounded-read)
+            if rest.len() != file_len - HEADER_LEN {
+                return Err(bad(format!(
+                    "{}: short read: got {} body bytes, expected {}",
+                    path.display(),
+                    rest.len(),
+                    file_len - HEADER_LEN
+                )));
+            }
+            let got = fnv1a64(&rest);
+            if got != checksum {
+                return Err(bad(format!(
+                    "{}: checksum mismatch: header {checksum:#018x}, computed {got:#018x}",
+                    path.display()
+                )));
+            }
+            // Offsets in `sec` are absolute; the heap body starts at 64.
+            rowidx = u32s_at(&rest, sec.rowidx - HEADER_LEN, nnz).into();
+            values = f64s_at(&rest, sec.values - HEADER_LEN, nnz).into();
+            bytes_holder = ShardBytes::Heap(rest);
+        }
+
+        let raw_colptr = match &bytes_holder {
+            ShardBytes::Mapped(map) => u64s_at(map.bytes(), sec.colptr, ncols + 1),
+            ShardBytes::Heap(body) => u64s_at(body, sec.colptr - HEADER_LEN, ncols + 1),
+        };
+        let mut colptr = Vec::with_capacity(ncols + 1);
+        for (j, &p) in raw_colptr.iter().enumerate() {
+            let p = usize::try_from(p)
+                .map_err(|_| bad(format!("{}: colptr[{j}] overflows usize", path.display())))?;
+            if p > nnz || colptr.last().is_some_and(|&l| p < l) {
+                return Err(bad(format!(
+                    "{}: corrupt colptr at column {j} (value {p}, nnz {nnz})",
+                    path.display()
+                )));
+            }
+            colptr.push(p);
+        }
+        if colptr[0] != 0 || colptr[ncols] != nnz {
+            return Err(bad(format!(
+                "{}: corrupt colptr endpoints (start {}, end {}, nnz {nnz})",
+                path.display(),
+                colptr[0],
+                colptr[ncols]
+            )));
+        }
+
+        let matrix = CscMatrix::from_store_parts(nrows, colptr, rowidx, values);
+
+        let mirror = match (&sec.mirror, &bytes_holder) {
+            (None, _) => None,
+            (Some(ms), holder) => {
+                let (bytes, base) = match holder {
+                    ShardBytes::Mapped(map) => (map.bytes(), 0usize),
+                    ShardBytes::Heap(body) => (body.as_slice(), HEADER_LEN),
+                };
+                let rowptr: Vec<usize> = u64s_at(bytes, ms.rowptr - base, nrows + 1)
+                    .into_iter()
+                    .map(|p| p as usize)
+                    .collect();
+                let colidx = u32s_at(bytes, ms.colidx - base, nnz);
+                let mvals = f64s_at(bytes, ms.values - base, nnz);
+                Some(CsrMatrix::from_parts(nrows, ncols, rowptr, colidx, mvals))
+            }
+        };
+
+        Ok(ShardFile {
+            nrows,
+            ncols,
+            col_start,
+            nnz,
+            checksum,
+            matrix,
+            mirror,
+        })
+    }
+
+    /// The shard as a [`CscMatrix`] over the file's buffers (cheap clone:
+    /// buffer handles + the small `colptr`).
+    pub fn matrix(&self) -> CscMatrix {
+        self.matrix.clone()
+    }
+
+    /// Decoded CSR mirror, when the shard was written with one. Heap
+    /// buffers — the mirror is an opt-in extra, not part of the zero-copy
+    /// path.
+    pub fn csr_mirror(&self) -> Option<CsrMatrix> {
+        self.mirror.clone()
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Global column range `[col_start, col_start + ncols)` this shard
+    /// covers.
+    pub fn col_range(&self) -> (usize, usize) {
+        (self.col_start, self.col_start + self.ncols)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    pub fn checksum(&self) -> u64 {
+        self.checksum
+    }
+
+    pub fn backing(&self) -> Backing {
+        self.matrix.backing()
+    }
+}
+
+/// Keeps the shard's bytes alive alongside the decoded views. (In the
+/// mapped case the `CscMatrix` buffers also hold the map; this exists so
+/// the mirror decode can reach the raw bytes uniformly.)
+enum ShardBytes {
+    Mapped(Arc<Mmap>),
+    Heap(Vec<u8>),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256pp;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("disco-shard-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample(seed: u64) -> CscMatrix {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        CscMatrix::rand_sparse(23, 17, 0.2, &mut rng)
+    }
+
+    #[test]
+    fn round_trips_matrix_and_mirror() {
+        let m = sample(41);
+        let path = tmp("roundtrip.dsh");
+        let info = write_shard(&path, &m, 5, true).unwrap();
+        assert_eq!(info.nnz as usize, m.nnz());
+        let sf = ShardFile::open(&path).unwrap();
+        assert_eq!(sf.col_range(), (5, 5 + 17));
+        assert_eq!(sf.nnz(), m.nnz());
+        assert_eq!(sf.checksum(), info.checksum);
+        let got = sf.matrix();
+        assert_eq!(got, m);
+        // The file mirror is the same conversion the runtime kernel does.
+        assert_eq!(sf.csr_mirror().unwrap(), CsrMatrix::from_csc(&m));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn no_mirror_when_not_requested() {
+        let m = sample(42);
+        let path = tmp("nomirror.dsh");
+        write_shard(&path, &m, 0, false).unwrap();
+        let sf = ShardFile::open(&path).unwrap();
+        assert!(sf.csr_mirror().is_none());
+        assert_eq!(sf.matrix(), m);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupted_byte_fails_checksum() {
+        let m = sample(43);
+        let path = tmp("corrupt.dsh");
+        write_shard(&path, &m, 0, false).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = HEADER_LEN + (bytes.len() - HEADER_LEN) / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ShardFile::open(&path).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncated_file_refused() {
+        let m = sample(44);
+        let path = tmp("truncated.dsh");
+        write_shard(&path, &m, 0, false).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
+        let err = ShardFile::open(&path).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // Header alone is also refused.
+        std::fs::write(&path, &bytes[..40]).unwrap();
+        let err = ShardFile::open(&path).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn bad_magic_and_version_refused() {
+        let m = sample(45);
+        let path = tmp("magic.dsh");
+        write_shard(&path, &m, 0, false).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let mut bytes = good.clone();
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ShardFile::open(&path).unwrap_err().to_string().contains("bad magic"));
+        let mut bytes = good;
+        bytes[4] = 9;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ShardFile::open(&path)
+            .unwrap_err()
+            .to_string()
+            .contains("unsupported shard version"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn decode_fallback_is_bit_identical_to_mapped() {
+        let m = sample(46);
+        let path = tmp("fallback.dsh");
+        write_shard(&path, &m, 2, true).unwrap();
+        let mapped = ShardFile::open(&path).unwrap();
+        std::env::set_var("DISCO_NO_MMAP", "1");
+        let decoded = ShardFile::open(&path);
+        std::env::remove_var("DISCO_NO_MMAP");
+        let decoded = decoded.unwrap();
+        assert_eq!(decoded.backing(), Backing::Heap);
+        let (a, b) = (mapped.matrix(), decoded.matrix());
+        assert_eq!(a, b);
+        for j in 0..a.ncols() {
+            let (ra, va) = a.col(j);
+            let (rb, vb) = b.col(j);
+            assert_eq!(ra, rb);
+            // Bit-level, not just numeric, equality.
+            for (x, y) in va.iter().zip(vb.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(mapped.csr_mirror(), decoded.csr_mirror());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

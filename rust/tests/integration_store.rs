@@ -1,0 +1,346 @@
+//! Integration: the out-of-core shard store (disco-store).
+//!
+//! The acceptance claims, test-enforced here:
+//!
+//! * every [`StoreMatrix`] delegated op and extracted block is
+//!   **bit-identical** to the heap sparse path, on both registry sparse
+//!   regimes (n ≫ d and d ≫ n);
+//! * the fused HVP kernel runs unchanged over mapped shard bytes and
+//!   produces the same bits as over heap buffers, with and without the
+//!   CSR mirror;
+//! * all six algorithms run **bit-identically** from a store and from
+//!   RAM under the modeled clock — plain runs, adaptive re-partitioning
+//!   runs (mid-run re-cuts re-slice shard files), and a real 2-process
+//!   TCP fleet;
+//! * with the recorder on, a store-backed run prices nothing extra (same
+//!   records, stats, simulated clock) and marks its IO with unpriced
+//!   `Phase::Ingest` spans that a heap run never emits.
+
+use disco::algorithms::{
+    run_over_spec, run_spec, run_spec_adaptive, AlgoKind, CheckpointPlan, RepartitionSpec,
+    RunConfig, RunResult,
+};
+use disco::data::{registry, Dataset, SyntheticConfig};
+use disco::linalg::{Backing, DataMatrix, HvpKernel};
+use disco::loss::LossKind;
+use disco::net::{ComputeModel, CostModel, TcpOptions, TcpTransport};
+use disco::obs::{EventKind, Phase};
+use disco::store::{ingest::ingest_dataset, mmap_enabled, open_dataset};
+use disco::util::prng::Xoshiro256pp;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn tmp_store(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("disco-store-int-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Ingest `ds` into a fresh store and open it back as a dataset whose
+/// matrix is [`DataMatrix::Stored`].
+fn store_copy(ds: &Dataset, name: &str, shards: usize) -> (Dataset, PathBuf) {
+    let dir = tmp_store(name);
+    ingest_dataset(ds, &dir, shards, false).expect("ingest");
+    let stored = open_dataset(&dir).expect("open store");
+    assert!(stored.x.is_store_backed());
+    (stored, dir)
+}
+
+fn assert_bits(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+/// Bit-level RunResult comparison (everything except wallclock and the
+/// event stream — store runs legitimately add Ingest spans).
+fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.algo, b.algo, "{what}: algo");
+    assert_eq!(a.converged, b.converged, "{what}: converged");
+    assert_eq!(
+        a.sim_seconds.to_bits(),
+        b.sim_seconds.to_bits(),
+        "{what}: sim_seconds {} vs {}",
+        a.sim_seconds,
+        b.sim_seconds
+    );
+    assert_eq!(a.stats, b.stats, "{what}: CommStats");
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(ra.sim_time.to_bits(), rb.sim_time.to_bits(), "{what}: sim_time");
+        assert_eq!(ra.grad_norm.to_bits(), rb.grad_norm.to_bits(), "{what}: grad_norm");
+        assert_eq!(ra.fval.to_bits(), rb.fval.to_bits(), "{what}: fval");
+        assert_eq!(ra.rounds, rb.rounds, "{what}: rounds");
+    }
+    assert_bits(&a.w, &b.w, &format!("{what}: iterate"));
+    assert_eq!(a.trace.to_csv(), b.trace.to_csv(), "{what}: trace");
+}
+
+/// Both sparse regimes from the registry, scaled to test size: rcv1s is
+/// n ≫ d (sample-partition friendly), news20s is d ≫ n (feature-partition
+/// friendly). Shard counts are coprime to every block range used below so
+/// extraction crosses shard boundaries.
+fn both_shapes() -> Vec<(Dataset, Dataset, PathBuf)> {
+    ["rcv1s", "news20s"]
+        .iter()
+        .map(|name| {
+            let heap = registry::load_scaled(name, 16).expect("registry");
+            let (stored, dir) = store_copy(&heap, &format!("shape-{name}"), 5);
+            (heap, stored, dir)
+        })
+        .collect()
+}
+
+#[test]
+fn store_matrix_ops_match_heap_bitwise_on_both_registry_shapes() {
+    for (heap, stored, dir) in both_shapes() {
+        let (d, n) = (heap.dim(), heap.nsamples());
+        let mut rng = Xoshiro256pp::seed_from_u64(4242);
+        let u: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let t: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+        assert_eq!(stored.name, heap.name);
+        assert_eq!(stored.nnz(), heap.nnz());
+        assert_bits(&stored.y, &heap.y, "labels");
+        assert_bits(&stored.x.at_mul(&u), &heap.x.at_mul(&u), "at_mul");
+        assert_bits(&stored.x.a_mul(&t), &heap.x.a_mul(&t), "a_mul");
+
+        for j in [0, 1, n / 3, n / 2, n - 1] {
+            assert_eq!(
+                stored.x.col_dot(j, &u).to_bits(),
+                heap.x.col_dot(j, &u).to_bits(),
+                "col_dot {j}"
+            );
+            assert_eq!(
+                stored.x.col_norm_sq(j).to_bits(),
+                heap.x.col_norm_sq(j).to_bits(),
+                "col_norm_sq {j}"
+            );
+            let (mut ws, mut wh) = (u.clone(), u.clone());
+            stored.x.col_axpy(j, 0.75, &mut ws);
+            heap.x.col_axpy(j, 0.75, &mut wh);
+            assert_bits(&ws, &wh, &format!("col_axpy {j}"));
+        }
+
+        // Blocks: shard-interior, shard-straddling, and full-width ranges.
+        for (s, e) in [(0, n / 5), (n / 5, n / 2 + 3), (1, n - 1), (0, n)] {
+            let a = stored.x.col_block(s, e).to_dense();
+            let b = heap.x.col_block(s, e).to_dense();
+            assert_eq!(a, b, "col_block [{s},{e})");
+        }
+        for (s, e) in [(0, d / 3), (d / 3, d - 1), (0, d)] {
+            let a = stored.x.row_block(s, e).to_dense();
+            let b = heap.x.row_block(s, e).to_dense();
+            assert_eq!(a, b, "row_block [{s},{e})");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+#[test]
+fn hvp_kernel_is_bit_identical_over_mapped_blocks() {
+    for (heap, stored, dir) in both_shapes() {
+        let sm = match &stored.x {
+            DataMatrix::Stored(m) => m.clone(),
+            _ => unreachable!(),
+        };
+        // A shard-aligned extraction is a zero-copy view of the mapping
+        // (when the platform maps at all); the kernel must not care.
+        let (cs, ce) = sm.cuts()[1];
+        let aligned = stored.x.col_block(cs, ce);
+        if mmap_enabled() {
+            assert_eq!(aligned.backing(), Backing::Mapped, "aligned block should be zero-copy");
+        }
+        let n = heap.nsamples();
+        let ranges = [(cs, ce), (0, n / 2 + 1), (n / 3, n)];
+        for (s, e) in ranges {
+            let mapped_block = stored.x.col_block(s, e);
+            let heap_block = heap.x.col_block(s, e);
+            let (d, w) = (mapped_block.nrows(), e - s);
+            let mut rng = Xoshiro256pp::seed_from_u64(7 + s as u64);
+            let u: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let sc: Vec<f64> = (0..w).map(|_| rng.next_f64() + 0.1).collect();
+            for use_csr in [false, true] {
+                let km = HvpKernel::with_layout(&mapped_block, use_csr);
+                let kh = HvpKernel::with_layout(&heap_block, use_csr);
+                let what = format!("[{s},{e}) csr={use_csr}");
+
+                let (mut tm, mut th) = (vec![0.0; w], vec![0.0; w]);
+                km.up_into(&mapped_block, &u, &sc, &mut tm);
+                kh.up_into(&heap_block, &u, &sc, &mut th);
+                assert_bits(&tm, &th, &format!("up {what}"));
+
+                km.up_plain_into(&mapped_block, &u, &mut tm);
+                kh.up_plain_into(&heap_block, &u, &mut th);
+                assert_bits(&tm, &th, &format!("up_plain {what}"));
+
+                let (mut ym, mut yh) = (vec![0.0; d], vec![0.0; d]);
+                km.down_into(&mapped_block, &tm, 0.25, 1e-3, &u, &mut ym);
+                kh.down_into(&heap_block, &th, 0.25, 1e-3, &u, &mut yh);
+                assert_bits(&ym, &yh, &format!("down {what}"));
+
+                let (mut om, mut oh) = (vec![0.0; d], vec![0.0; d]);
+                km.apply(&mapped_block, &sc, &u, 0.5, 1e-2, &mut tm, &mut om);
+                kh.apply(&heap_block, &sc, &u, 0.5, 1e-2, &mut th, &mut oh);
+                assert_bits(&om, &oh, &format!("apply {what}"));
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+fn solver_ds(seed: u64) -> Dataset {
+    SyntheticConfig::new("store-int", 120, 45)
+        .density(0.2)
+        .label_noise(0.05)
+        .seed(seed)
+        .generate()
+}
+
+/// Heterogeneous 3-node fleet starting from the uniform cut — the
+/// repartitioner has something real to discover (the PR-5 idiom).
+fn hetero_cfg(algo: AlgoKind) -> RunConfig {
+    let mut c = RunConfig::new(algo, LossKind::Logistic, 1e-2);
+    c.m = 3;
+    c.tau = 10;
+    c.grad_tol = 0.0;
+    c.max_outer = 4;
+    c.cost = CostModel::default();
+    c.compute = ComputeModel::modeled();
+    c.trace = true;
+    c.seed = 7;
+    c.local_epochs = 2;
+    c.sag_max_epochs = 5;
+    c.speeds = vec![1.0, 1.0, 0.5];
+    c.weighted_partition = false;
+    c
+}
+
+#[test]
+fn all_six_algorithms_run_bit_identically_from_a_store() {
+    // Shard count (4) deliberately mismatches the fleet (m = 3): every
+    // rank's range straddles a shard boundary, so the streaming (non
+    // zero-copy) extraction path carries real solver traffic.
+    let heap = solver_ds(2);
+    let (stored, dir) = store_copy(&heap, "sixalgo", 4);
+    for &algo in AlgoKind::all() {
+        let spec = hetero_cfg(algo).to_spec();
+        let from_ram = run_spec(&heap, &spec);
+        let from_store = run_spec(&stored, &spec);
+        assert_bit_identical(&from_ram, &from_store, &format!("{} plain", algo.name()));
+
+        // Mid-run re-cuts re-slice shard files instead of a heap matrix;
+        // the priced timeline must not move by one bit.
+        let rp = RepartitionSpec::every(1, 1.1);
+        let (ram_a, recuts_ram) = run_spec_adaptive(&heap, &spec, &rp);
+        let (store_a, recuts_store) = run_spec_adaptive(&stored, &spec, &rp);
+        assert!(
+            recuts_ram >= 1,
+            "{}: the 2× imbalance must trigger a re-cut",
+            algo.name()
+        );
+        assert_eq!(recuts_ram, recuts_store, "{}: re-cut count", algo.name());
+        assert_bit_identical(&ram_a, &store_a, &format!("{} adaptive", algo.name()));
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// One OS thread per rank over a real localhost TCP mesh, ephemeral
+/// rendezvous port per call (the `integration_obs` idiom).
+fn run_tcp_fleet<T: Send>(
+    m: usize,
+    timeout: Duration,
+    f: impl Fn(TcpTransport) -> T + Sync,
+) -> Vec<T> {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind rendezvous");
+    let addr = listener.local_addr().expect("rendezvous addr").to_string();
+    let mut listener = Some(listener);
+    let mut outs: Vec<Option<T>> = (0..m).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        let addr = &addr;
+        for (rank, slot) in outs.iter_mut().enumerate() {
+            let l = listener.take(); // Some only for rank 0
+            s.spawn(move || {
+                let opts = TcpOptions::new(rank, m, addr).with_timeout(timeout);
+                let t = match l {
+                    Some(l) => TcpTransport::establish_with_listener(l, &opts),
+                    None => TcpTransport::establish(&opts),
+                };
+                *slot = Some(f(t));
+            });
+        }
+    });
+    outs.into_iter().map(|o| o.expect("rank output")).collect()
+}
+
+#[test]
+fn store_run_over_tcp_matches_shm_and_ram_bit_for_bit() {
+    // Every TCP worker opens the store and maps only its own slice —
+    // there is no rank that ever holds the global matrix — yet the
+    // result must carry the exact bits of the in-RAM shm run, across a
+    // mid-run re-cut.
+    let heap = solver_ds(3);
+    let (stored, dir) = store_copy(&heap, "tcp", 2);
+    let mut cfg = hetero_cfg(AlgoKind::DiscoS);
+    cfg.m = 2;
+    cfg.speeds = vec![1.0, 0.5];
+    let spec = cfg.to_spec();
+    let rp = RepartitionSpec::every(1, 1.1);
+
+    let (ram_shm, _) = run_spec_adaptive(&heap, &spec, &rp);
+    let (store_shm, _) = run_spec_adaptive(&stored, &spec, &rp);
+    let tcp = run_tcp_fleet(2, Duration::from_secs(20), |t| {
+        run_over_spec(&stored, &spec, t, &CheckpointPlan::none(), &rp)
+    });
+    let store_tcp = tcp[0].as_ref().expect("rank 0 result");
+
+    assert_bit_identical(&ram_shm, &store_shm, "store vs ram (shm)");
+    assert_bit_identical(&store_shm, store_tcp, "store shm vs store tcp");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn store_events_price_nothing_and_mark_the_ingest() {
+    // Recorder on: the store must stay bit-invisible to the numbers
+    // (records, ledger, clock) while its IO becomes visible as unpriced
+    // Ingest spans — absent from the heap run's stream, present (as
+    // "shard load" plus a post-re-cut "re-shard load") in the store
+    // run's.
+    let heap = solver_ds(5);
+    let (stored, dir) = store_copy(&heap, "events", 3);
+    let mut spec = hetero_cfg(AlgoKind::DiscoF).to_spec();
+    spec.sim.events = true;
+    let rp = RepartitionSpec::every(1, 1.1);
+
+    let (ram, _) = run_spec_adaptive(&heap, &spec, &rp);
+    let (store, recuts) = run_spec_adaptive(&stored, &spec, &rp);
+    assert!(recuts >= 1, "need a re-cut to exercise the re-shard span");
+    assert_bit_identical(&ram, &store, "events-on store vs ram");
+
+    let labels = |res: &RunResult| -> Vec<String> {
+        res.events
+            .iter()
+            .filter_map(|e| match &e.kind {
+                EventKind::SpanBegin { phase: Phase::Ingest, label } => Some(label.clone()),
+                _ => None,
+            })
+            .collect()
+    };
+    assert!(labels(&ram).is_empty(), "heap runs must not emit Ingest spans");
+    let store_labels = labels(&store);
+    assert!(
+        store_labels.iter().any(|l| l == "shard load"),
+        "missing setup ingest span: {store_labels:?}"
+    );
+    assert!(
+        store_labels.iter().any(|l| l == "re-shard load"),
+        "missing re-cut ingest span: {store_labels:?}"
+    );
+    // Unpriced: span bookkeeping already proven bit-invisible above; the
+    // ledger comparison pins it to the priced counters too.
+    assert_eq!(ram.stats, store.stats, "Ingest spans must never touch the priced ledger");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

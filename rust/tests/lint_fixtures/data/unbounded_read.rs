@@ -1,0 +1,17 @@
+//! Fixture: whole-input materialization in the streaming data path.
+//! Exactly one live violation (the `read_to_string`); the bounded
+//! `read_to_end` carries an allow directive and must stay silent.
+
+use std::io::Read;
+
+pub fn slurp(path: &std::path::Path) -> std::io::Result<String> {
+    // Flags: materializes the whole file in data/ library code.
+    std::fs::read_to_string(path)
+}
+
+pub fn bounded(file: &mut std::fs::File) -> std::io::Result<Vec<u8>> {
+    let mut rest = Vec::new();
+    // lint: allow(unbounded-read) — one validated, size-checked section
+    file.read_to_end(&mut rest)?;
+    Ok(rest)
+}

@@ -60,6 +60,7 @@ fn fixtures_flag_in_the_matching_scope() {
     assert_eq!(find("transport-unwrap").path, "net/transport/unwrap.rs");
     assert_eq!(find("wall-clock").path, "algorithms/wall_clock.rs");
     assert_eq!(find("uncosted-compute").path, "algorithms/uncosted_compute.rs");
+    assert_eq!(find("unbounded-read").path, "data/unbounded_read.rs");
     // The allow-directive fixture must contribute nothing.
     assert!(
         violations.iter().all(|v| v.path != "algorithms/allowed.rs"),
