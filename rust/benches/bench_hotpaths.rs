@@ -12,7 +12,7 @@
 //! `X·t` scatter-vs-gather comparison that explains the difference.
 
 use disco::data::SyntheticConfig;
-use disco::linalg::{ops, CsrMatrix, DataMatrix, HvpKernel};
+use disco::linalg::{block_ranges, ops, CsrMatrix, DataMatrix, HvpKernel};
 use disco::loss::{Logistic, Objective};
 use disco::solvers::Woodbury;
 use disco::util::bench::{black_box, Bench};
@@ -100,6 +100,38 @@ fn main() {
             b.run(&format!("a_mul {name} csr-gather"), Some(pass_flops), || {
                 csr.a_mul_into(&t, &mut out);
                 black_box(out[0])
+            });
+        }
+
+        // D: split-phase overlap A/B — the *compute-side* price of running
+        //    each sweep in 4 block slices (what the overlapped DiSCO-S/F
+        //    PCG loops interleave with collective start/wait) versus one
+        //    full sweep. The network win itself is modeled, not wall-clock;
+        //    this measures that the slicing is (near-)free, i.e. the
+        //    overlap's only real cost is extra per-round latency.
+        {
+            let pass_flops = 2.0 * ds.nnz() as f64;
+            let row_blocks = block_ranges(d, 4);
+            let col_blocks = block_ranges(nsamples, 4);
+            b.run(&format!("overlap {name} down-full"), Some(pass_flops), || {
+                kernel.down_into(&ds.x, &scratch, 1.0, 0.0, &u, &mut out);
+                black_box(out[0])
+            });
+            b.run(&format!("overlap {name} down-4blocks"), Some(pass_flops), || {
+                for &(lo, hi) in &row_blocks {
+                    kernel.down_rows_into(&ds.x, &scratch, 1.0, 0.0, &u, lo, hi, &mut out[lo..hi]);
+                }
+                black_box(out[0])
+            });
+            b.run(&format!("overlap {name} up-full"), Some(pass_flops), || {
+                kernel.up_plain_into(&ds.x, &u, &mut scratch);
+                black_box(scratch[0])
+            });
+            b.run(&format!("overlap {name} up-4blocks"), Some(pass_flops), || {
+                for &(lo, hi) in &col_blocks {
+                    kernel.up_plain_cols_into(&ds.x, &u, lo, hi, &mut scratch[lo..hi]);
+                }
+                black_box(scratch[0])
             });
         }
     }

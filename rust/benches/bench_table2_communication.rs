@@ -9,7 +9,7 @@ use disco::algorithms::{run, AlgoKind, RunConfig};
 use disco::coordinator::complexity::{table2_logistic, table2_quadratic, Table2Algo};
 use disco::data::registry;
 use disco::loss::LossKind;
-use disco::net::{Cluster, CostModel};
+use disco::net::{Cluster, Collectives, CostModel};
 use disco::util::bench::{black_box, Bench};
 
 fn main() {

@@ -11,6 +11,14 @@ use crate::net::Collectives;
 use crate::util::bytes::{put_f64, put_f64s, put_u32, put_u64, put_u8, ByteReader};
 use crate::util::prng::Xoshiro256pp;
 
+/// Block count for the split-phase (overlapped) PCG sweeps
+/// (`SimSpec::overlap`): with B blocks only the last block's bandwidth
+/// term is exposed (saved ≈ bw·(1−1/B), see DESIGN.md §3), so returns
+/// diminish quickly; 4 keeps per-block latency and handle bookkeeping
+/// negligible. `block_ranges` clamps to the sweep dimension, so tiny
+/// problems degrade gracefully.
+pub(crate) const OVERLAP_BLOCKS: usize = 4;
+
 /// Per-row overhead (in nnz-equivalent flops) of a DiSCO-F PCG step
 /// beyond the HVP sweeps: ≈2τ of Woodbury apply plus ~10 of vector
 /// updates. One definition shared by the setup-time cut policy and the

@@ -34,10 +34,11 @@ use crate::algorithms::common::{damped_scale, forcing, hessian_scalings, precond
 use crate::algorithms::common::{decode_ops, decode_records, encode_ops, encode_records};
 use crate::algorithms::common::{feature_row_overhead, put_bool, put_vec, read_bool};
 use crate::algorithms::common::{read_vec_into, resolve_cuts, HessianSubsample, Recorder};
+use crate::algorithms::common::OVERLAP_BLOCKS;
 use crate::algorithms::spec::{DiscoParams, RunSpec};
 use crate::algorithms::{AlgoKind, NodeOutput, OpCounts};
 use crate::data::{Dataset, Partition};
-use crate::linalg::{ops, DataMatrix, HvpKernel};
+use crate::linalg::{block_ranges, ops, DataMatrix, HvpKernel};
 use crate::loss::Loss;
 use crate::net::Collectives;
 use crate::obs::{EventKind, Phase};
@@ -86,6 +87,9 @@ struct DiscoFNode {
     nf: f64,
     inv_n: f64,
     kernel: HvpKernel,
+    /// Split-phase PCG requested (`SimSpec::overlap`); takes effect only
+    /// when the shard supports independent column blocks (sparse CSC).
+    overlap: bool,
     precond_factory: WoodburyFactory,
     tau_eff: usize,
     tau_f: f64,
@@ -194,6 +198,7 @@ impl DiscoFNode {
             nf: n as f64,
             inv_n: 1.0 / n as f64,
             kernel,
+            overlap: spec.sim.overlap,
             precond_factory,
             tau_eff,
             tau_f,
@@ -237,6 +242,7 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoFNode {
         );
         let p = self.p;
         let (tau_eff, tau_f) = (self.tau_eff, self.tau_f);
+        let overlap = self.overlap;
         let DiscoFNode {
             x,
             y,
@@ -368,11 +374,36 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoFNode {
             // Up pass writes straight into the reduce buffer; down pass is
             // the fused gather with the (1/h)·(…)+λu epilogue folded in,
             // and the ⟨u,Hu⟩ product rides in the same compute segment.
-            ctx.compute_costed("hvp_up", || {
-                kernel.up_plain_into(x, u, tn);
-                ((), 2.0 * nnz)
-            });
-            ctx.reduce_all(tn);
+            if overlap && kernel.supports_col_blocks(x) {
+                // Split-phase: the up sweep in sample (column) blocks —
+                // the ℝⁿ ReduceAll of block b is in flight while block
+                // b+1 computes, so only the last block's bandwidth term
+                // is exposed on the modeled clock. Each block is the
+                // bit-identical slice of the full sweep
+                // (`up_plain_cols_into`), and `combine` sums the same
+                // values in the same rank order, so `tn` is bit-identical
+                // to the blocking path.
+                let blocks = block_ranges(n, OVERLAP_BLOCKS);
+                let mut handles = Vec::with_capacity(blocks.len());
+                for (lo, hi) in blocks {
+                    let part = ctx.compute_costed("hvp_up", || {
+                        let mut part = vec![0.0; hi - lo];
+                        kernel.up_plain_cols_into(x, u, lo, hi, &mut part);
+                        (part, 2.0 * kernel.cols_nnz(x, lo, hi) as f64)
+                    });
+                    handles.push((lo, hi, ctx.start_reduce_all(part)));
+                }
+                for (lo, hi, h) in handles {
+                    let summed = ctx.wait_collective(h);
+                    tn[lo..hi].copy_from_slice(&summed);
+                }
+            } else {
+                ctx.compute_costed("hvp_up", || {
+                    kernel.up_plain_into(x, u, tn);
+                    ((), 2.0 * nnz)
+                });
+                ctx.reduce_all(tn);
+            }
             let uhu_local = ctx.compute_costed("hvp_down", || {
                 for i in 0..n {
                     tn[i] *= s_hess[i];

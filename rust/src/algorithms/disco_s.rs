@@ -36,13 +36,14 @@
 
 use crate::algorithms::algorithm::{Algorithm, AlgorithmNode, Handoff, StepReport};
 use crate::algorithms::common::{damped_scale, forcing, hessian_scalings, precond_columns};
+use crate::algorithms::common::OVERLAP_BLOCKS;
 use crate::algorithms::common::{decode_ops, decode_records, encode_ops, encode_records};
 use crate::algorithms::common::{put_bool, put_vec, read_bool, read_vec_into, resolve_cuts};
 use crate::algorithms::common::{HessianSubsample, Recorder};
 use crate::algorithms::spec::{DiscoParams, RunSpec, SagParams};
 use crate::algorithms::{AlgoKind, AlgoParams, NodeOutput, OpCounts};
 use crate::data::{Dataset, Partition};
-use crate::linalg::{ops, DataMatrix, HvpKernel};
+use crate::linalg::{block_ranges, ops, DataMatrix, HvpKernel};
 use crate::loss::Loss;
 use crate::net::Collectives;
 use crate::obs::{EventKind, Phase};
@@ -175,6 +176,9 @@ struct DiscoSNode {
     precond_factory: Option<WoodburyFactory>,
     tau_eff: usize,
     hvp_kernel: HvpKernel,
+    /// Split-phase PCG requested (`SimSpec::overlap`); takes effect only
+    /// when the kernel supports independent row blocks (CSR mirror).
+    overlap: bool,
     // -- evolving solver state (serialized) --
     w: Vec<f64>,
     cached_precond: Option<MasterPrecond>,
@@ -310,6 +314,7 @@ impl DiscoSNode {
             precond_factory,
             tau_eff,
             hvp_kernel,
+            overlap: spec.sim.overlap,
             w: vec![0.0; d],
             cached_precond: None,
             recorder: Recorder::new(rank),
@@ -363,6 +368,7 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
         let p = self.p;
         let sag_params = self.sag_params;
         let precond_kind = self.precond_kind;
+        let overlap = self.overlap;
         let DiscoSNode {
             x,
             y,
@@ -548,15 +554,48 @@ impl<C: Collectives> AlgorithmNode<C> for DiscoSNode {
             }
             let u_t = &ubuf[..d];
 
-            // Every node: local Hessian product (the balanced part) —
-            // one fused two-sweep kernel call, scratch reused across
-            // iterations, `hu` doubling as the ReduceAll buffer.
-            ctx.compute_costed("hvp", || {
-                hvp_kernel.apply(x, &s_hess, u_t, inv_div, 0.0, tn, hu);
-                ((), 4.0 * nnz + 2.0 * df)
-            });
-            ops_count.hvp += 1;
-            ctx.reduce_all(hu);
+            // Every node: local Hessian product (the balanced part).
+            if overlap && hvp_kernel.supports_row_blocks() {
+                // Split-phase: full up sweep, then the down sweep in
+                // feature blocks — the ReduceAll of block b is in flight
+                // while block b+1 computes, so only the last block's
+                // bandwidth term is exposed on the modeled clock. Each
+                // block is the bit-identical slice of the fused sweep
+                // (`down_rows_into`), and `combine` sums the same values
+                // in the same rank order, so `hu` is bit-identical to the
+                // blocking path.
+                ctx.compute_costed("hvp_up", || {
+                    hvp_kernel.up_into(x, u_t, &s_hess, tn);
+                    ((), 2.0 * nnz)
+                });
+                let blocks = block_ranges(d, OVERLAP_BLOCKS);
+                let mut handles = Vec::with_capacity(blocks.len());
+                for (lo, hi) in blocks {
+                    let part = ctx.compute_costed("hvp_down", || {
+                        let mut part = vec![0.0; hi - lo];
+                        hvp_kernel.down_rows_into(x, tn, inv_div, 0.0, u_t, lo, hi, &mut part);
+                        let flops =
+                            2.0 * hvp_kernel.rows_nnz(lo, hi) as f64 + 2.0 * (hi - lo) as f64;
+                        (part, flops)
+                    });
+                    handles.push((lo, hi, ctx.start_reduce_all(part)));
+                }
+                for (lo, hi, h) in handles {
+                    let summed = ctx.wait_collective(h);
+                    hu[lo..hi].copy_from_slice(&summed);
+                }
+                ops_count.hvp += 1;
+            } else {
+                // Blocking path (also the dense / unmirrored fallback):
+                // one fused two-sweep kernel call, scratch reused across
+                // iterations, `hu` doubling as the ReduceAll buffer.
+                ctx.compute_costed("hvp", || {
+                    hvp_kernel.apply(x, &s_hess, u_t, inv_div, 0.0, tn, hu);
+                    ((), 4.0 * nnz + 2.0 * df)
+                });
+                ops_count.hvp += 1;
+                ctx.reduce_all(hu);
+            }
 
             // Master-only vector operations (workers fall through to the
             // next broadcast and wait — idle time in the Fig. 2 sense).

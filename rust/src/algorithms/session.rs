@@ -285,19 +285,20 @@ impl<C: Collectives> Session<C> {
                 phase: Phase::Outer,
                 label: format!("outer {}", self.outer),
             });
-            Some(ctx.comm_stats().clone())
+            Some((ctx.comm_stats().clone(), ctx.overlap_seconds()))
         } else {
             None
         };
         let report = self.node.step(ctx, self.outer);
         self.outer += 1;
-        if let Some(before) = before {
+        if let Some((before, overlap_before)) = before {
             let after = ctx.comm_stats().clone();
             ctx.obs_emit(EventKind::Counter {
                 rounds: after.vector_rounds - before.vector_rounds,
                 scalar_rounds: after.scalar_rounds - before.scalar_rounds,
                 doubles: after.vector_doubles - before.vector_doubles,
                 comm_seconds: after.modeled_comm_seconds - before.modeled_comm_seconds,
+                overlap_seconds: ctx.overlap_seconds() - overlap_before,
             });
             ctx.obs_emit(EventKind::Step {
                 grad_norm: report.record.grad_norm,

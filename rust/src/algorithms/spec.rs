@@ -291,6 +291,10 @@ pub struct SimSpec {
     /// Record the structured event stream (spans, counters, incidents) —
     /// unpriced and bit-invisible to the run itself.
     pub events: bool,
+    /// Split-phase PCG: overlap the HVP collective of block k with the
+    /// compute of block k+1 (DiSCO-S/F, sparse shards only). Off ⇒ the
+    /// blocking code path, bit-identical to pre-overlap runs.
+    pub overlap: bool,
 }
 
 impl Default for SimSpec {
@@ -306,6 +310,7 @@ impl Default for SimSpec {
             straggler: None,
             trace: false,
             events: false,
+            overlap: false,
         }
     }
 }
@@ -904,6 +909,7 @@ impl RunConfig {
                 straggler: self.straggler,
                 trace: self.trace,
                 events: false,
+                overlap: false,
             },
             stop: StopSpec {
                 grad_tol: self.grad_tol,
@@ -1106,6 +1112,7 @@ impl RunSpec {
                     ("straggler", straggler),
                     ("trace", Json::Bool(self.sim.trace)),
                     ("events", Json::Bool(self.sim.events)),
+                    ("overlap", Json::Bool(self.sim.overlap)),
                 ]),
             ),
             (
@@ -1244,6 +1251,8 @@ impl RunSpec {
             trace: take_bool(s, "trace")?,
             // Lenient: absent in pre-events spec files ⇒ off.
             events: matches!(s.get("events"), Json::Bool(true)),
+            // Lenient: absent in pre-overlap spec files ⇒ blocking.
+            overlap: matches!(s.get("overlap"), Json::Bool(true)),
         };
         let st = v.get("stop");
         let stop = StopSpec {
@@ -1314,6 +1323,7 @@ pub fn with_spec_flags(args: Args) -> Args {
         .switch("weighted-partition", "size shards by node speed (heterogeneous fleets)")
         .opt("straggler", None, "seeded slowdown episodes: prob,slowdown,len,seed")
         .switch("trace", "record + print the per-node activity trace (Fig. 2)")
+        .switch("overlap", "split-phase PCG: overlap HVP collectives with blocked compute")
         .opt(
             "events",
             None,
@@ -1488,6 +1498,9 @@ pub fn apply_args(spec: &mut RunSpec, args: &Args) -> Result<(), String> {
     if args.provided("events") {
         spec.sim.events = true;
     }
+    if args.flag("overlap") {
+        spec.sim.overlap = true;
+    }
     if args.provided("grad-tol") {
         spec.stop.grad_tol = args.get_f64("grad-tol").map_err(e)?;
     }
@@ -1628,6 +1641,7 @@ mod tests {
             }
             spec.sim.trace = rng.next_f64() < 0.5;
             spec.sim.events = rng.next_f64() < 0.5;
+            spec.sim.overlap = rng.next_f64() < 0.5;
             if rng.next_f64() < 0.3 {
                 spec.data.store = Some(format!("stores/trial-{trial}"));
             }
@@ -1741,7 +1755,7 @@ mod tests {
         let schema = with_spec_flags(Args::new("t", "t"));
         let argv: Vec<String> = [
             "--algo", "dane", "--dane-eta", "0.5", "--m", "3", "--compute", "modeled:1e9",
-            "--max-rounds", "250", "--speeds", "1,1,0.5", "--weighted-partition",
+            "--max-rounds", "250", "--speeds", "1,1,0.5", "--weighted-partition", "--overlap",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -1758,6 +1772,7 @@ mod tests {
         assert_eq!(spec.stop.max_rounds, Some(250));
         assert_eq!(spec.sim.speeds, vec![1.0, 1.0, 0.5]);
         assert!(spec.sim.weighted_partition);
+        assert!(spec.sim.overlap);
         // Defaults that were not provided stay at spec defaults.
         assert_eq!(spec.stop.max_outer, 100);
         assert_eq!(spec.stop.grad_tol, GRAD_TOL_DEFAULT);

@@ -185,6 +185,37 @@ impl CsrMatrix {
         });
     }
 
+    /// Nonzeros in rows `lo..hi` — block flop accounting for the
+    /// split-phase HVP down sweep (O(1): two rowptr reads).
+    #[inline]
+    pub fn nnz_in_rows(&self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi && hi <= self.nrows, "row block out of bounds");
+        self.rowptr[hi] - self.rowptr[lo]
+    }
+
+    /// Row-block slice of the fused pass 2: `out[i−lo] ← a·(X t)[i] + b·u[i]`
+    /// for `i ∈ lo..hi`. Each block is bitwise identical to the same slice
+    /// of [`CsrMatrix::a_mul_axpby_into`] — the split-phase PCG path
+    /// (overlapped collectives) assembles `y` block by block without
+    /// changing a single bit of the result.
+    #[allow(clippy::too_many_arguments)]
+    pub fn a_mul_axpby_rows_into(
+        &self,
+        lo: usize,
+        hi: usize,
+        t: &[f64],
+        a: f64,
+        b: f64,
+        u: &[f64],
+        out: &mut [f64],
+    ) {
+        assert!(lo <= hi && hi <= self.nrows, "row block out of bounds");
+        assert_eq!(t.len(), self.ncols);
+        assert_eq!(u.len(), self.nrows);
+        assert_eq!(out.len(), hi - lo);
+        self.gather_rows_range(lo, hi, t, a, b, u, out);
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn gather_rows_range(
         &self,

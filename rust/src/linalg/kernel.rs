@@ -156,6 +156,82 @@ impl HvpKernel {
         self.down_into(x, scratch_n, a, b, u, out);
     }
 
+    /// True when pass 2 can be computed in independent row blocks (the
+    /// CSR mirror is present, making each output row a gather) — the gate
+    /// for DiSCO-S split-phase overlap. Without the mirror, pass 2 is a
+    /// scatter whose output rows are not independent.
+    pub fn supports_row_blocks(&self) -> bool {
+        self.csr.is_some()
+    }
+
+    /// True when pass 1 over `x` can be computed in independent column
+    /// blocks (sparse CSC storage: each output entry is a per-column
+    /// gather) — the gate for DiSCO-F split-phase overlap.
+    pub fn supports_col_blocks(&self, x: &DataMatrix) -> bool {
+        matches!(x, DataMatrix::Sparse(_))
+    }
+
+    /// Nonzeros in the mirror's rows `lo..hi` — flop pricing of one
+    /// down-sweep block. Requires [`HvpKernel::supports_row_blocks`].
+    pub fn rows_nnz(&self, lo: usize, hi: usize) -> usize {
+        self.csr
+            .as_ref()
+            .expect("row blocks need the CSR mirror")
+            .nnz_in_rows(lo, hi)
+    }
+
+    /// Nonzeros in columns `lo..hi` of `x` — flop pricing of one up-sweep
+    /// block. Requires [`HvpKernel::supports_col_blocks`].
+    pub fn cols_nnz(&self, x: &DataMatrix, lo: usize, hi: usize) -> usize {
+        match x {
+            DataMatrix::Sparse(sp) => sp.nnz_in_cols(lo, hi),
+            _ => panic!("column blocks need sparse CSC storage"),
+        }
+    }
+
+    /// Row-block slice of pass 2: `y_block[i−lo] ← a·(X t)[i] + b·u[i]`
+    /// for `i ∈ lo..hi`. Bitwise identical to the same slice of
+    /// [`HvpKernel::down_into`] — the split-phase PCG loop interleaves
+    /// these blocks with collective start/wait without perturbing results.
+    /// Requires [`HvpKernel::supports_row_blocks`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn down_rows_into(
+        &self,
+        x: &DataMatrix,
+        t: &[f64],
+        a: f64,
+        b: f64,
+        u: &[f64],
+        lo: usize,
+        hi: usize,
+        y_block: &mut [f64],
+    ) {
+        self.check(x);
+        self.csr
+            .as_ref()
+            .expect("split-phase down sweep needs the CSR mirror")
+            .a_mul_axpby_rows_into(lo, hi, t, a, b, u, y_block);
+    }
+
+    /// Column-block slice of the unscaled pass 1: `t_block[j−lo] ← (Xᵀu)[j]`
+    /// for `j ∈ lo..hi`. Bitwise identical to the same slice of
+    /// [`HvpKernel::up_plain_into`]. Requires
+    /// [`HvpKernel::supports_col_blocks`].
+    pub fn up_plain_cols_into(
+        &self,
+        x: &DataMatrix,
+        u: &[f64],
+        lo: usize,
+        hi: usize,
+        t_block: &mut [f64],
+    ) {
+        self.check(x);
+        match x {
+            DataMatrix::Sparse(sp) => sp.at_mul_cols_into(lo, hi, u, t_block),
+            _ => panic!("split-phase up sweep needs sparse CSC storage"),
+        }
+    }
+
     /// Hard (release-mode) guard: two usize compares plus, when
     /// mirrored, an O(1) view-identity check — negligible next to the
     /// O(nnz) sweeps, and the failure mode it prevents (pass 1 over one
@@ -171,6 +247,19 @@ impl HvpKernel {
             );
         }
     }
+}
+
+/// Even contiguous partition of `0..dim` into at most `blocks` ranges —
+/// the block schedule of the split-phase PCG sweeps. The block count is
+/// clamped to `dim` (no empty blocks); `dim == 0` yields no ranges. The
+/// ranges tile `0..dim` exactly, in order, with sizes differing by at
+/// most one.
+pub fn block_ranges(dim: usize, blocks: usize) -> Vec<(usize, usize)> {
+    if dim == 0 {
+        return Vec::new();
+    }
+    let b = blocks.clamp(1, dim);
+    (0..b).map(|k| (k * dim / b, (k + 1) * dim / b)).collect()
 }
 
 #[cfg(test)]
@@ -265,6 +354,75 @@ mod tests {
         let mut scratch = vec![0.0; 15];
         let mut out = vec![0.0; 20];
         k.apply(&b, &s, &u, 1.0, 0.0, &mut scratch, &mut out);
+    }
+
+    #[test]
+    fn block_ranges_tile_exactly() {
+        assert!(block_ranges(0, 4).is_empty());
+        assert_eq!(block_ranges(1, 4), vec![(0, 1)]); // clamped to dim
+        assert_eq!(block_ranges(10, 1), vec![(0, 10)]);
+        for (dim, blocks) in [(7, 3), (12, 4), (5, 5), (100, 7), (3, 16)] {
+            let r = block_ranges(dim, blocks);
+            assert_eq!(r.len(), blocks.min(dim));
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r[r.len() - 1].1, dim);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges must abut: {r:?}");
+            }
+            let (min, max) = r
+                .iter()
+                .map(|&(lo, hi)| hi - lo)
+                .fold((usize::MAX, 0), |(a, b), s| (a.min(s), b.max(s)));
+            assert!(max - min <= 1, "uneven blocks: {r:?}");
+        }
+    }
+
+    #[test]
+    fn blocked_sweeps_are_bitwise_identical_to_full() {
+        let (x, u, s, mut scratch) = problem(7, 96, 60, 0.15);
+        let k = HvpKernel::with_layout(&x, true);
+        assert!(k.supports_row_blocks());
+        assert!(k.supports_col_blocks(&x));
+
+        // Full down sweep vs. block-assembled down sweep: same bits.
+        k.up_into(&x, &u, &s, &mut scratch);
+        let mut full = vec![0.0; 96];
+        k.down_into(&x, &scratch, 0.25, 1e-2, &u, &mut full);
+        let mut blocked = vec![0.0; 96];
+        let mut nnz_sum = 0;
+        for (lo, hi) in block_ranges(96, 4) {
+            nnz_sum += k.rows_nnz(lo, hi);
+            k.down_rows_into(&x, &scratch, 0.25, 1e-2, &u, lo, hi, &mut blocked[lo..hi]);
+        }
+        assert_eq!(nnz_sum, x.nnz(), "row-block nnz must sum to total");
+        for (a, b) in blocked.iter().zip(full.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // Full plain up sweep vs. block-assembled: same bits.
+        let mut t_full = vec![0.0; 60];
+        k.up_plain_into(&x, &u, &mut t_full);
+        let mut t_blocked = vec![0.0; 60];
+        let mut nnz_sum = 0;
+        for (lo, hi) in block_ranges(60, 3) {
+            nnz_sum += k.cols_nnz(&x, lo, hi);
+            k.up_plain_cols_into(&x, &u, lo, hi, &mut t_blocked[lo..hi]);
+        }
+        assert_eq!(nnz_sum, x.nnz(), "col-block nnz must sum to total");
+        for (a, b) in t_blocked.iter().zip(t_full.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn unmirrored_kernel_rejects_row_blocks() {
+        let (x, ..) = problem(8, 30, 20, 0.3);
+        let k = HvpKernel::with_layout(&x, false);
+        assert!(!k.supports_row_blocks());
+        assert!(k.supports_col_blocks(&x)); // sparse: up blocks still fine
+        let dense = DataMatrix::Dense(crate::linalg::dense::DenseMatrix::zeros(8, 8));
+        let kd = HvpKernel::new(&dense);
+        assert!(!kd.supports_col_blocks(&dense));
     }
 
     #[test]

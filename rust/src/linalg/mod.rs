@@ -17,6 +17,6 @@ pub use buf::{Backing, Buf};
 pub use cholesky::{lu_solve, Cholesky};
 pub use csr::CsrMatrix;
 pub use dense::{DenseMatrix, SquareMatrix};
-pub use kernel::HvpKernel;
+pub use kernel::{block_ranges, HvpKernel};
 pub use matrix::DataMatrix;
 pub use sparse::CscMatrix;

@@ -259,6 +259,27 @@ impl CscMatrix {
         });
     }
 
+    /// Nonzeros in columns `lo..hi` — block flop accounting for the
+    /// split-phase HVP up sweep (O(1): two colptr reads; offsets are
+    /// absolute, so this is exact for block views too).
+    #[inline]
+    pub fn nnz_in_cols(&self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi && hi <= self.ncols, "column block out of bounds");
+        self.colptr[hi] - self.colptr[lo]
+    }
+
+    /// Column-block slice of `t ← Xᵀu`: `out[j−lo] = (Xᵀu)[j]` for
+    /// `j ∈ lo..hi`. Each block is bitwise identical to the same slice of
+    /// [`CscMatrix::at_mul_into`] — the split-phase PCG path (overlapped
+    /// collectives) assembles `t` block by block without changing a single
+    /// bit of the result.
+    pub fn at_mul_cols_into(&self, lo: usize, hi: usize, u: &[f64], out: &mut [f64]) {
+        assert!(lo <= hi && hi <= self.ncols, "column block out of bounds");
+        assert_eq!(u.len(), self.nrows);
+        assert_eq!(out.len(), hi - lo);
+        self.gather_cols_range(lo, hi, u, None, out);
+    }
+
     fn gather_cols_range(
         &self,
         lo: usize,

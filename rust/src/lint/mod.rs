@@ -25,6 +25,9 @@
 //! * `unbounded-read` — `read_to_string`/`read_to_end`/`lines().collect()`
 //!   in `data/`/`store/` library code (the out-of-core data path must
 //!   stream; bounded reads carry an allow comment).
+//! * `unawaited-handle` — a split-phase `.start_*()` in `algorithms/`
+//!   with no `wait_collective` later in the same fn (completion is
+//!   priced at the wait; a dropped handle undercounts the clock).
 //!
 //! Runtime (documented here, enforced by [`crate::net::Checked`]):
 //!
@@ -103,6 +106,10 @@ pub const RULES: &[(&str, &str)] = &[
     (
         "unbounded-read",
         "read_to_string/read_to_end/lines().collect() in data//store/ library code (the out-of-core data path streams)",
+    ),
+    (
+        "unawaited-handle",
+        "split-phase .start_*() in algorithms/ with no later wait_collective in the same fn (completion is priced at the wait)",
     ),
     (
         "schedule-divergence",

@@ -93,6 +93,7 @@ pub fn check_file(f: &SourceFile, costed: &CostedFns) -> Vec<Violation> {
     uncosted_compute(f, costed, &mut out);
     raw_print(f, &mut out);
     unbounded_read(f, &mut out);
+    unawaited_handle(f, &mut out);
     out.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
     out
 }
@@ -353,6 +354,49 @@ fn unbounded_read(f: &SourceFile, out: &mut Vec<Violation>) {
                 "lines().collect() materializes every line — stream through one \
                  reused read_line buffer instead"
                     .to_string(),
+                out,
+            );
+        }
+    }
+}
+
+/// `unawaited-handle`: a split-phase `.start_*()` call in `algorithms/`
+/// whose enclosing fn never mentions `wait_collective` afterwards. Every
+/// started collective must be waited — the completion time is *priced at
+/// the wait*, and on TCP the wire round itself only runs there, so a
+/// dropped handle undercounts the modeled clock and desyncs the
+/// schedule that [`Checked`](crate::net::Checked) verifies. (Token-level
+/// approximation: the wait must appear later in the same fn body; a
+/// handle legitimately returned to a caller carries an allow comment.)
+fn unawaited_handle(f: &SourceFile, out: &mut Vec<Violation>) {
+    if !f.in_dir("algorithms/") {
+        return;
+    }
+    for i in 1..f.toks.len() {
+        let t = &f.toks[i];
+        let is_start = t.kind == TokKind::Ident && t.text.starts_with("start_");
+        if !(is_start
+            && f.toks[i - 1].is_punct('.')
+            && f.toks.get(i + 1).is_some_and(|n| n.is_punct('(')))
+        {
+            continue;
+        }
+        let end = f.info.enclosing_fn(i).map_or(f.toks.len() - 1, |fun| fun.body.1);
+        let waited = f.toks[i + 1..=end]
+            .iter()
+            .any(|t| t.is_ident("wait_collective"));
+        if !waited {
+            emit(
+                f,
+                i,
+                "unawaited-handle",
+                format!(
+                    "{}() handle never reaches wait_collective in this fn — split-phase \
+                     completion is priced at the wait, so a dropped handle undercounts \
+                     the modeled clock (wait it, or justify handing it to the caller \
+                     with an allow comment)",
+                    t.text
+                ),
                 out,
             );
         }

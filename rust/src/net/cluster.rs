@@ -293,6 +293,7 @@ impl Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::transport::Collectives;
 
     #[test]
     fn reduce_all_sums_across_nodes() {

@@ -215,6 +215,25 @@ impl CostModel {
     }
 }
 
+/// Completion clock of a split-phase collective: the waiting rank resumes
+/// at `max(local_clock, depart)` — it pays only the part of the modeled
+/// communication window its own compute did not cover. With zero compute
+/// issued between `start` and `wait`, `local_clock` equals the arrival
+/// clock (≤ `comm_start` ≤ `depart`), so the result is exactly `depart` —
+/// bit-identical to the blocking rule (DESIGN.md §3).
+pub fn split_phase_completion(local_clock: f64, depart: f64) -> f64 {
+    local_clock.max(depart)
+}
+
+/// Seconds of the priced communication window `[comm_start, depart]`
+/// hidden behind compute issued between `start` and `wait`: the overlap
+/// credit `clamp(min(local_clock, depart) − comm_start, 0, depart −
+/// comm_start)`. Zero for every blocking call (there `local_clock` is the
+/// arrival clock, which can never exceed `comm_start = max` of arrivals).
+pub fn overlap_credit(local_clock: f64, comm_start: f64, depart: f64) -> f64 {
+    (local_clock.min(depart) - comm_start).max(0.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -322,6 +341,34 @@ mod tests {
         let bound = 2.0 * 8.0 * 1000.0 / c.beta;
         assert!(t < bound, "{t} !< {bound}");
         assert!(t > 0.9 * bound);
+    }
+
+    #[test]
+    fn zero_overlap_reduces_to_blocking() {
+        // No compute between start and wait: local clock == arrival, which
+        // is ≤ comm_start by the max-fold — completion is exactly depart
+        // and the credit is exactly zero (the bit-identity invariant).
+        let (arrival, comm_start, depart) = (1.0, 1.5, 1.9);
+        assert_eq!(split_phase_completion(arrival, depart).to_bits(), depart.to_bits());
+        assert_eq!(overlap_credit(arrival, comm_start, depart), 0.0);
+    }
+
+    #[test]
+    fn partial_overlap_charges_the_max() {
+        // Compute ran to 1.7 inside the window [1.5, 1.9]: 0.2 s hidden,
+        // completion still at depart.
+        let (comm_start, depart) = (1.5, 1.9);
+        assert_eq!(split_phase_completion(1.7, depart), 1.9);
+        assert!((overlap_credit(1.7, comm_start, depart) - 0.2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn full_overlap_hides_the_whole_window() {
+        // Compute ran past depart: the collective is free on the critical
+        // path and the credit saturates at the window length.
+        let (comm_start, depart) = (1.5, 1.9);
+        assert_eq!(split_phase_completion(2.4, depart), 2.4);
+        assert!((overlap_credit(2.4, comm_start, depart) - 0.4).abs() < 1e-15);
     }
 
     #[test]

@@ -32,6 +32,6 @@ pub use cost::{CollectiveAlgo, CollectiveKind, ComputeModel, CostModel};
 pub use stats::CommStats;
 pub use trace::{Activity, Segment, Trace};
 pub use transport::{
-    Checked, Collectives, CtxState, ElasticOptions, EpochFault, FaultKind, NodeCtx, ReformInfo,
-    ShmTransport, StragglerConfig, TcpOptions, TcpTransport, Transport,
+    Checked, CollectiveHandle, Collectives, CtxState, ElasticOptions, EpochFault, FaultKind,
+    NodeCtx, ReformInfo, ShmTransport, StragglerConfig, TcpOptions, TcpTransport, Transport,
 };

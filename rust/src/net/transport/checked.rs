@@ -38,7 +38,7 @@
 
 use crate::net::cost::CollectiveKind;
 use crate::net::stats::CommStats;
-use crate::net::transport::{CollectiveOutcome, Transport};
+use crate::net::transport::{CollectiveHandle, CollectiveOutcome, Transport};
 use crate::obs::FlightRecorder;
 
 /// Words per rank in the validation descriptor.
@@ -259,7 +259,7 @@ impl<T: Transport> Transport for Checked<T> {
         self.inner.world()
     }
 
-    fn collective(
+    fn start_collective(
         &mut self,
         kind: CollectiveKind,
         root: usize,
@@ -267,7 +267,14 @@ impl<T: Transport> Transport for Checked<T> {
         payload: Vec<f64>,
         arrival_clock: f64,
         metric: bool,
-    ) -> CollectiveOutcome {
+    ) -> CollectiveHandle {
+        // Validation runs at *start*, before any payload is posted to the
+        // inner backend: a divergent schedule is caught even if the
+        // divergent round is never waited. The validation round itself is
+        // a blocking metric AllGather on the inner transport — legal while
+        // user rounds are in flight because the inner backends order
+        // streams by the wait sequence, which this round enters and leaves
+        // synchronously on every rank.
         if self.enabled && self.inner.world() > 1 {
             self.validate(Descriptor {
                 kind_code: kind_code(kind),
@@ -279,7 +286,11 @@ impl<T: Transport> Transport for Checked<T> {
             self.record(kind, payload.len());
         }
         self.inner
-            .collective(kind, root, k_doubles, payload, arrival_clock, metric)
+            .start_collective(kind, root, k_doubles, payload, arrival_clock, metric)
+    }
+
+    fn wait_collective(&mut self, handle: CollectiveHandle) -> CollectiveOutcome {
+        self.inner.wait_collective(handle)
     }
 
     fn wire_bytes(&self) -> u64 {

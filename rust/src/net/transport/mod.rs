@@ -3,13 +3,16 @@
 //!
 //! Three layers, bottom to top:
 //!
-//! 1. [`Transport`] — the raw, clock-aware collective engine. One method
-//!    executes a whole collective: it moves this rank's `payload` (and its
-//!    simulated arrival clock) to wherever the combine happens, and returns
-//!    the combined result plus the synchronized clock window
-//!    (`comm_start = max` arrival across ranks, `depart = comm_start +
-//!    T_comm` from the α–β [`CostModel`](crate::net::CostModel)). Two
-//!    implementations ship:
+//! 1. [`Transport`] — the raw, clock-aware collective engine, now
+//!    **split-phase**: [`Transport::start_collective`] posts this rank's
+//!    `payload` (and its simulated arrival clock) and returns a
+//!    [`CollectiveHandle`]; [`Transport::wait_collective`] completes the
+//!    exchange and returns the combined result plus the synchronized clock
+//!    window (`comm_start = max` arrival across ranks, `depart =
+//!    comm_start + T_comm` from the α–β
+//!    [`CostModel`](crate::net::CostModel)). The blocking
+//!    [`Transport::collective`] is a default method — `start` followed by
+//!    an immediate `wait`. Two implementations ship:
 //!    * [`shm::ShmTransport`] — the original in-process thread cluster
 //!      (shared blackboard + two-phase abortable barrier), bit-identical
 //!      to the pre-refactor simulator;
@@ -24,9 +27,36 @@
 //!    ([`crate::obs`] — append-only, invisible to the priced timeline).
 //! 3. [`Collectives`] — the trait the *algorithms* are written against
 //!    (`reduce_all`, `broadcast`, `reduce`, `all_gather_concat`,
-//!    `barrier`, the scalar bundles, the free metrics channel, and the
-//!    compute-accounting hooks). `NodeCtx<T>` implements it for every
-//!    transport, so algorithm code contains no backend-specific branches.
+//!    `barrier`, the scalar bundles, the free metrics channel, the
+//!    split-phase `start_*`/`wait_collective` surface, and the
+//!    compute-accounting hooks). `NodeCtx<T>` implements the two
+//!    primitives ([`Collectives::start_collective`] /
+//!    [`Collectives::wait_collective`]); every blocking operation is a
+//!    trait *default* — start + immediate wait — so there is exactly one
+//!    collective surface and one copy of the pricing/trace/stats code.
+//!
+//! ## Split-phase pricing
+//!
+//! A split-phase collective is priced honestly against overlap: `start`
+//! captures the rank's arrival clock; compute issued between `start` and
+//! `wait` advances the local clock as usual; `wait` resumes the rank at
+//! `max(local_clock, depart)`
+//! ([`crate::net::cost::split_phase_completion`]) and credits the hidden
+//! window seconds to the per-rank [`Collectives::overlap_seconds`] ledger
+//! ([`crate::net::cost::overlap_credit`]). With zero compute issued
+//! between `start`
+//! and `wait` the local clock equals the arrival clock, which the max-fold
+//! guarantees is ≤ `comm_start` — so the completion clock, stats, trace,
+//! and events are **bit-identical** to the blocking call (test-enforced in
+//! `tests/prop_transport.rs`).
+//!
+//! Waits may complete in-flight handles in any order, but the *set* of
+//! outstanding starts and waits must stay SPMD-consistent across ranks:
+//! every rank issues the same `start` sequence and eventually waits every
+//! handle. The shm backend asserts on cross-rank wait-order divergence,
+//! the TCP backend validates per-frame sequence numbers, [`Checked`]
+//! cross-validates descriptors at `start`, and disco-lint's
+//! `unawaited-handle` rule rejects algorithm code that drops a handle.
 //!
 //! ## The equivalence guarantee
 //!
@@ -59,7 +89,7 @@ pub use checked::Checked;
 pub use shm::ShmTransport;
 pub use tcp::{ElasticOptions, ReformInfo, TcpOptions, TcpTransport};
 
-use crate::net::cost::{CollectiveKind, ComputeModel};
+use crate::net::cost::{overlap_credit, split_phase_completion, CollectiveKind, ComputeModel};
 use crate::net::stats::CommStats;
 use crate::net::trace::{Activity, Segment, Trace};
 use crate::obs::{EventKind, EventRecorder, FlightRecorder, Phase};
@@ -195,10 +225,71 @@ pub struct CollectiveOutcome {
     pub priced_doubles: usize,
 }
 
+/// An in-flight split-phase collective, returned by
+/// [`Transport::start_collective`] and consumed (exactly once) by
+/// [`Transport::wait_collective`]. Deliberately neither `Clone` nor
+/// `Copy`: a handle is a linear capability — dropping one leaks a posted
+/// round (disco-lint's `unawaited-handle` rule rejects that statically in
+/// algorithm code), waiting it twice is a type error.
+#[derive(Debug)]
+pub struct CollectiveHandle {
+    /// Backend round token (the per-rank collective sequence number —
+    /// identical across ranks under SPMD discipline).
+    pub(crate) token: u64,
+    pub(crate) kind: CollectiveKind,
+    pub(crate) root: usize,
+    /// Priced message size (ignored for AllGather — priced at `wait` from
+    /// the true summed contribution size).
+    pub(crate) k_doubles: usize,
+    pub(crate) metric: bool,
+    /// Length of the payload posted at `start` (flight-recorder label).
+    pub(crate) payload_len: usize,
+    /// This rank's clock when the round was posted.
+    pub(crate) arrival: f64,
+    /// Wire-byte ledger at `start` (NodeCtx accounting; the delta to the
+    /// ledger at `wait` is what this collective actually moved).
+    pub(crate) wire_before: u64,
+    /// `true` for handles obtained through the public `start_*` surface;
+    /// `false` when a blocking default wraps start + immediate wait (the
+    /// observability span then uses the legacy `[comm_start, depart]`
+    /// window so blocking runs stay byte-identical to the seed).
+    pub(crate) split: bool,
+}
+
+impl CollectiveHandle {
+    pub(crate) fn new(
+        token: u64,
+        kind: CollectiveKind,
+        root: usize,
+        k_doubles: usize,
+        metric: bool,
+        payload_len: usize,
+        arrival: f64,
+    ) -> Self {
+        Self {
+            token,
+            kind,
+            root,
+            k_doubles,
+            metric,
+            payload_len,
+            arrival,
+            wire_before: 0,
+            split: true,
+        }
+    }
+
+    /// Which collective this handle belongs to.
+    pub fn kind(&self) -> CollectiveKind {
+        self.kind
+    }
+}
+
 /// Raw collective engine: moves payloads + clocks, combines in rank order,
 /// prices the transfer. Implementations must be SPMD-lockstep: every rank
-/// calls `collective` with the same `kind`/`root`/`k_doubles`/`metric`
-/// sequence.
+/// calls `start_collective` with the same `kind`/`root`/`k_doubles`/
+/// `metric` sequence, and eventually waits every handle. Waits need not be
+/// FIFO, but their order must agree across ranks.
 ///
 /// Failure contract: a dead or desynchronized peer must surface as a panic
 /// whose message starts with `cluster node failed: rank N: …` within a
@@ -208,13 +299,36 @@ pub trait Transport {
     fn rank(&self) -> usize;
     fn world(&self) -> usize;
 
-    /// Execute one collective. `root` is the data source for Broadcast and
-    /// the receiver for Reduce (combining itself is root-agnostic; the
-    /// caller discards non-root results for Reduce). `k_doubles` is the
-    /// priced message size (ignored for AllGather, which is priced from
-    /// the true summed contribution size). With `metric = true` the
-    /// collective is free: `T_comm = 0` and nothing is recorded in the
-    /// global stats.
+    /// Post this rank's contribution to one collective and return the
+    /// round's handle. `root` is the data source for Broadcast and the
+    /// receiver for Reduce (combining itself is root-agnostic; the caller
+    /// discards non-root results for Reduce). `k_doubles` is the priced
+    /// message size (ignored for AllGather, which is priced from the true
+    /// summed contribution size). With `metric = true` the collective is
+    /// free: `T_comm = 0` and nothing is recorded in the global stats.
+    ///
+    /// `start` must not block on peers: it records the round locally (shm:
+    /// blackboard deposit; tcp: pending-round queue) so the caller can
+    /// keep computing while the round is outstanding.
+    fn start_collective(
+        &mut self,
+        kind: CollectiveKind,
+        root: usize,
+        k_doubles: usize,
+        payload: Vec<f64>,
+        arrival_clock: f64,
+        metric: bool,
+    ) -> CollectiveHandle;
+
+    /// Complete a round posted by
+    /// [`start_collective`](Transport::start_collective): synchronize with
+    /// the peers, combine in rank order, and price the window. Consumes
+    /// the handle.
+    fn wait_collective(&mut self, handle: CollectiveHandle) -> CollectiveOutcome;
+
+    /// Execute one blocking collective — `start` + immediate `wait`. The
+    /// legacy surface; every caller that doesn't overlap goes through
+    /// this default.
     fn collective(
         &mut self,
         kind: CollectiveKind,
@@ -223,7 +337,10 @@ pub trait Transport {
         payload: Vec<f64>,
         arrival_clock: f64,
         metric: bool,
-    ) -> CollectiveOutcome;
+    ) -> CollectiveOutcome {
+        let h = self.start_collective(kind, root, k_doubles, payload, arrival_clock, metric);
+        self.wait_collective(h)
+    }
 
     /// Cumulative bytes this rank actually moved over a wire (0 for shm).
     fn wire_bytes(&self) -> u64 {
@@ -261,6 +378,22 @@ impl<T: Transport + ?Sized> Transport for &mut T {
 
     fn world(&self) -> usize {
         (**self).world()
+    }
+
+    fn start_collective(
+        &mut self,
+        kind: CollectiveKind,
+        root: usize,
+        k_doubles: usize,
+        payload: Vec<f64>,
+        arrival_clock: f64,
+        metric: bool,
+    ) -> CollectiveHandle {
+        (**self).start_collective(kind, root, k_doubles, payload, arrival_clock, metric)
+    }
+
+    fn wait_collective(&mut self, handle: CollectiveHandle) -> CollectiveOutcome {
+        (**self).wait_collective(handle)
     }
 
     fn collective(
@@ -388,6 +521,11 @@ pub struct NodeCtx<T: Transport> {
     /// reports (depth from `DISCO_FLIGHT`). Shared: the cluster driver
     /// keeps a clone so the tail survives this context's unwind.
     flight: FlightRecorder,
+    /// Cumulative seconds of priced communication windows hidden behind
+    /// compute issued between `start` and `wait`
+    /// ([`crate::net::cost::overlap_credit`]). Observability only: it
+    /// never feeds back into the clock, so it is not part of [`CtxState`].
+    overlap_seconds: f64,
 }
 
 impl<T: Transport> NodeCtx<T> {
@@ -411,6 +549,7 @@ impl<T: Transport> NodeCtx<T> {
             trace_enabled: false,
             obs: EventRecorder::disabled(),
             flight: FlightRecorder::from_env(),
+            overlap_seconds: 0.0,
         }
     }
 
@@ -604,129 +743,115 @@ impl<T: Transport> NodeCtx<T> {
         self.push_compute(label, seconds, false);
     }
 
-    /// Core collective wrapper: delegates the data movement + clock
-    /// synchronization to the transport, then does the backend-independent
-    /// accounting (local stats mirror, wire-byte delta, trace segments,
-    /// clock jump).
-    fn collective_inner(
+    /// Post one collective round: delegates to the transport's `start`,
+    /// stamps the handle with this rank's wire-byte position, and logs the
+    /// call in the flight recorder. The priced message size is the payload
+    /// length, except for AllGather which the backend prices from the true
+    /// summed contribution size.
+    fn start_inner(
         &mut self,
         kind: CollectiveKind,
         root: usize,
-        k_doubles: usize,
         payload: Vec<f64>,
         metric: bool,
-    ) -> Vec<f64> {
-        let arrival = self.clock;
+    ) -> CollectiveHandle {
+        let k_doubles = match kind {
+            CollectiveKind::AllGather => 0,
+            _ => payload.len(),
+        };
         let payload_len = payload.len();
+        let arrival = self.clock;
         let wire_before = self.transport.wire_bytes();
-        let out = self
+        let mut h = self
             .transport
-            .collective(kind, root, k_doubles, payload, arrival, metric);
+            .start_collective(kind, root, k_doubles, payload, arrival, metric);
+        h.wire_before = wire_before;
         self.flight.record(|| format!("{kind:?}({payload_len})"));
+        h
+    }
+
+    /// Complete a round: delegates the data movement + clock
+    /// synchronization to the transport, then does the backend-independent
+    /// accounting (local stats mirror, wire-byte delta, overlap credit,
+    /// trace segments, clock jump). The completion clock is
+    /// `max(local clock, depart)` — for a blocking call the local clock is
+    /// the arrival clock (≤ `comm_start`), so this reduces exactly to the
+    /// legacy `clock = depart` rule.
+    fn wait_inner(&mut self, h: CollectiveHandle) -> Vec<f64> {
+        let CollectiveHandle {
+            kind,
+            metric,
+            arrival,
+            wire_before,
+            split,
+            ..
+        } = h;
+        let local = self.clock;
+        let out = self.transport.wait_collective(h);
         if !metric {
             self.local_stats
                 .record(kind, out.priced_doubles, (out.depart - out.comm_start).max(0.0));
             self.local_stats.wire_bytes += self.transport.wire_bytes() - wire_before;
+            self.overlap_seconds += overlap_credit(local, out.comm_start, out.depart);
         }
+        let resumed = split_phase_completion(local, out.depart);
         if self.trace_enabled {
-            if out.comm_start > arrival + 1e-12 {
+            // One path for both shapes: the rank idles from its *current*
+            // clock (for blocking calls that is the arrival clock —
+            // exactly the legacy segment), and the visible communication
+            // is whatever part of the priced window its compute did not
+            // already cover.
+            if out.comm_start > local + 1e-12 {
                 self.trace.push(Segment {
                     node: self.rank,
-                    start: arrival,
+                    start: local,
                     end: out.comm_start,
                     activity: Activity::Idle,
                     label: format!("wait:{}", kind.name()),
                 });
             }
-            if out.depart > out.comm_start + 1e-15 {
+            let comm_from = out.comm_start.max(local);
+            if out.depart > comm_from + 1e-15 {
                 self.trace.push(Segment {
                     node: self.rank,
-                    start: out.comm_start,
+                    start: comm_from,
                     end: out.depart,
                     activity: Activity::Comm,
                     label: kind.name().to_string(),
                 });
             }
         }
-        // Span over the priced window (metric collectives are free and
-        // invisible, matching the stats/trace contract).
-        if !metric && out.depart > out.comm_start {
-            self.obs.emit(out.comm_start, || EventKind::SpanBegin {
-                phase: Phase::Collective,
-                label: kind.name().to_string(),
-            });
-            self.obs.emit(out.depart, || EventKind::SpanEnd {
-                phase: Phase::Collective,
-                label: kind.name().to_string(),
-            });
+        // Span over the collective's lifetime (metric collectives are free
+        // and invisible, matching the stats/trace contract). Split-phase
+        // handles span start→wait; blocking handles keep the legacy priced
+        // window so instrumented blocking runs stay byte-identical to the
+        // seed. Both events are emitted here — the stream is append-order,
+        // and nothing was known about the window at `start` anyway.
+        if !metric {
+            if split {
+                if resumed > arrival {
+                    self.obs.emit(arrival, || EventKind::SpanBegin {
+                        phase: Phase::Collective,
+                        label: kind.name().to_string(),
+                    });
+                    self.obs.emit(resumed, || EventKind::SpanEnd {
+                        phase: Phase::Collective,
+                        label: kind.name().to_string(),
+                    });
+                }
+            } else if out.depart > out.comm_start {
+                self.obs.emit(out.comm_start, || EventKind::SpanBegin {
+                    phase: Phase::Collective,
+                    label: kind.name().to_string(),
+                });
+                self.obs.emit(out.depart, || EventKind::SpanEnd {
+                    phase: Phase::Collective,
+                    label: kind.name().to_string(),
+                });
+            }
         }
-        self.clock = out.depart;
+        self.clock = resumed;
         out.result
-    }
-
-    /// Sum across nodes; result to all. `buf` is replaced by the sum.
-    pub fn reduce_all(&mut self, buf: &mut Vec<f64>) {
-        let k = buf.len();
-        let payload = std::mem::take(buf);
-        *buf = self.collective_inner(CollectiveKind::ReduceAll, 0, k, payload, false);
-    }
-
-    /// Scalar ReduceAll (counted as a scalar round, see stats).
-    pub fn reduce_all_scalar(&mut self, x: f64) -> f64 {
-        let mut v = vec![x];
-        self.reduce_all(&mut v);
-        v[0]
-    }
-
-    /// Two scalars bundled in one message (the paper's Alg. 3 sends α's
-    /// numerator+denominator together).
-    pub fn reduce_all_scalar2(&mut self, x: f64, y: f64) -> (f64, f64) {
-        let mut v = vec![x, y];
-        self.reduce_all(&mut v);
-        (v[0], v[1])
-    }
-
-    /// Metrics-channel ReduceAll: free and unaccounted (harness-only).
-    pub fn metric_reduce_all(&mut self, buf: &mut Vec<f64>) {
-        let k = buf.len();
-        let payload = std::mem::take(buf);
-        *buf = self.collective_inner(CollectiveKind::ReduceAll, 0, k, payload, true);
-    }
-
-    /// Root's buffer is copied to every node.
-    pub fn broadcast(&mut self, root: usize, buf: &mut Vec<f64>) {
-        let k = buf.len();
-        let payload = std::mem::take(buf);
-        *buf = self.collective_inner(CollectiveKind::Broadcast, root, k, payload, false);
-    }
-
-    /// Sum to `root`; non-root nodes receive an empty vec and must not use
-    /// the value (mirrors MPI_Reduce semantics).
-    pub fn reduce(&mut self, root: usize, buf: &mut Vec<f64>) {
-        let k = buf.len();
-        let payload = std::mem::take(buf);
-        let out = self.collective_inner(CollectiveKind::Reduce, root, k, payload, false);
-        *buf = if self.rank == root { out } else { Vec::new() };
-    }
-
-    /// Concatenate per-node parts in rank order; everyone gets the result.
-    /// (DiSCO-F's final "Integration" step, Alg. 3 line 12.) Parts may be
-    /// ragged; the collective is priced from the true total gathered size.
-    pub fn all_gather_concat(&mut self, part: &[f64]) -> Vec<f64> {
-        self.collective_inner(CollectiveKind::AllGather, 0, 0, part.to_vec(), false)
-    }
-
-    /// Metrics-channel all-gather: free and unaccounted, like
-    /// [`metric_reduce_all`](Self::metric_reduce_all). The elastic driver
-    /// uses it to capture the full cut-axis vector at outer-iteration
-    /// boundaries without perturbing the priced timeline.
-    pub fn metric_all_gather_concat(&mut self, part: &[f64]) -> Vec<f64> {
-        self.collective_inner(CollectiveKind::AllGather, 0, 0, part.to_vec(), true)
-    }
-
-    /// Synchronize clocks without data (pure barrier; prices as a scalar).
-    pub fn barrier(&mut self) {
-        let _ = self.reduce_all_scalar(0.0);
     }
 
     /// Cumulative simulated compute (busy) seconds on this rank.
@@ -816,27 +941,141 @@ pub trait Collectives {
     fn compute_costed_serial<R, F: FnOnce() -> (R, f64)>(&mut self, label: &str, f: F) -> R;
     fn advance(&mut self, label: &str, seconds: f64);
 
-    fn reduce_all(&mut self, buf: &mut Vec<f64>);
-    fn metric_reduce_all(&mut self, buf: &mut Vec<f64>);
-    fn broadcast(&mut self, root: usize, buf: &mut Vec<f64>);
-    fn reduce(&mut self, root: usize, buf: &mut Vec<f64>);
-    fn all_gather_concat(&mut self, part: &[f64]) -> Vec<f64>;
-    /// Free, unaccounted all-gather on the metrics channel (harness-only;
-    /// see [`NodeCtx::metric_all_gather_concat`]).
-    fn metric_all_gather_concat(&mut self, part: &[f64]) -> Vec<f64>;
+    // --- the two collective primitives -------------------------------------
+    //
+    // Everything below them — the blocking surface and the typed `start_*`
+    // helpers — is a default method, so implementations carry exactly one
+    // copy of the pricing/trace/stats accounting.
 
+    /// Post one collective round and return its handle. The round is
+    /// priced from the payload length (AllGather: from the true summed
+    /// contribution size, resolved at `wait`). Every rank must issue the
+    /// same `start` sequence (SPMD) and eventually wait every handle;
+    /// waits may complete in-flight handles in any order as long as that
+    /// order agrees across ranks.
+    fn start_collective(
+        &mut self,
+        kind: CollectiveKind,
+        root: usize,
+        payload: Vec<f64>,
+        metric: bool,
+    ) -> CollectiveHandle;
+
+    /// Complete a round posted by
+    /// [`start_collective`](Collectives::start_collective): returns the
+    /// combined result and resumes this rank's clock at
+    /// `max(local clock, depart)`, crediting the hidden window seconds to
+    /// [`overlap_seconds`](Collectives::overlap_seconds). For Reduce the
+    /// combined vector is delivered to every rank; non-root callers must
+    /// discard it (the blocking [`reduce`](Collectives::reduce) default
+    /// does).
+    fn wait_collective(&mut self, h: CollectiveHandle) -> Vec<f64>;
+
+    /// Cumulative seconds of priced communication hidden behind compute
+    /// issued between `start` and `wait` (0 for contexts that never
+    /// overlap).
+    fn overlap_seconds(&self) -> f64 {
+        0.0
+    }
+
+    // --- split-phase surface ------------------------------------------------
+
+    /// Begin a sum-across-nodes round;
+    /// [`wait_collective`](Collectives::wait_collective) returns the sum
+    /// to every rank.
+    fn start_reduce_all(&mut self, payload: Vec<f64>) -> CollectiveHandle {
+        self.start_collective(CollectiveKind::ReduceAll, 0, payload, false)
+    }
+
+    /// Begin a broadcast of `root`'s payload (other ranks' payloads are
+    /// carried for arity but ignored by the combine).
+    fn start_broadcast(&mut self, root: usize, payload: Vec<f64>) -> CollectiveHandle {
+        self.start_collective(CollectiveKind::Broadcast, root, payload, false)
+    }
+
+    /// Begin a sum-to-`root` round; non-root ranks must discard the waited
+    /// result.
+    fn start_reduce(&mut self, root: usize, payload: Vec<f64>) -> CollectiveHandle {
+        self.start_collective(CollectiveKind::Reduce, root, payload, false)
+    }
+
+    /// Begin a rank-order concatenation round (parts may be ragged; priced
+    /// from the true total gathered size).
+    fn start_all_gather_concat(&mut self, part: &[f64]) -> CollectiveHandle {
+        self.start_collective(CollectiveKind::AllGather, 0, part.to_vec(), false)
+    }
+
+    // --- blocking surface (start + immediate wait) -------------------------
+
+    /// Sum across nodes; result to all. `buf` is replaced by the sum.
+    fn reduce_all(&mut self, buf: &mut Vec<f64>) {
+        let payload = std::mem::take(buf);
+        let mut h = self.start_collective(CollectiveKind::ReduceAll, 0, payload, false);
+        h.split = false;
+        *buf = self.wait_collective(h);
+    }
+
+    /// Metrics-channel ReduceAll: free and unaccounted (harness-only).
+    fn metric_reduce_all(&mut self, buf: &mut Vec<f64>) {
+        let payload = std::mem::take(buf);
+        let mut h = self.start_collective(CollectiveKind::ReduceAll, 0, payload, true);
+        h.split = false;
+        *buf = self.wait_collective(h);
+    }
+
+    /// Root's buffer is copied to every node.
+    fn broadcast(&mut self, root: usize, buf: &mut Vec<f64>) {
+        let payload = std::mem::take(buf);
+        let mut h = self.start_collective(CollectiveKind::Broadcast, root, payload, false);
+        h.split = false;
+        *buf = self.wait_collective(h);
+    }
+
+    /// Sum to `root`; non-root nodes receive an empty vec and must not use
+    /// the value (mirrors MPI_Reduce semantics).
+    fn reduce(&mut self, root: usize, buf: &mut Vec<f64>) {
+        let payload = std::mem::take(buf);
+        let mut h = self.start_collective(CollectiveKind::Reduce, root, payload, false);
+        h.split = false;
+        let out = self.wait_collective(h);
+        *buf = if self.rank() == root { out } else { Vec::new() };
+    }
+
+    /// Concatenate per-node parts in rank order; everyone gets the result.
+    /// (DiSCO-F's final "Integration" step, Alg. 3 line 12.) Parts may be
+    /// ragged; the collective is priced from the true total gathered size.
+    fn all_gather_concat(&mut self, part: &[f64]) -> Vec<f64> {
+        let mut h = self.start_collective(CollectiveKind::AllGather, 0, part.to_vec(), false);
+        h.split = false;
+        self.wait_collective(h)
+    }
+
+    /// Metrics-channel all-gather: free and unaccounted, like
+    /// [`metric_reduce_all`](Collectives::metric_reduce_all). The elastic
+    /// driver uses it to capture the full cut-axis vector at
+    /// outer-iteration boundaries without perturbing the priced timeline.
+    fn metric_all_gather_concat(&mut self, part: &[f64]) -> Vec<f64> {
+        let mut h = self.start_collective(CollectiveKind::AllGather, 0, part.to_vec(), true);
+        h.split = false;
+        self.wait_collective(h)
+    }
+
+    /// Scalar ReduceAll (counted as a scalar round, see stats).
     fn reduce_all_scalar(&mut self, x: f64) -> f64 {
         let mut v = vec![x];
         self.reduce_all(&mut v);
         v[0]
     }
 
+    /// Two scalars bundled in one message (the paper's Alg. 3 sends α's
+    /// numerator+denominator together).
     fn reduce_all_scalar2(&mut self, x: f64, y: f64) -> (f64, f64) {
         let mut v = vec![x, y];
         self.reduce_all(&mut v);
         (v[0], v[1])
     }
 
+    /// Synchronize clocks without data (pure barrier; prices as a scalar).
     fn barrier(&mut self) {
         let _ = self.reduce_all_scalar(0.0);
     }
@@ -938,40 +1177,22 @@ impl<T: Transport> Collectives for NodeCtx<T> {
         NodeCtx::advance(self, label, seconds)
     }
 
-    fn reduce_all(&mut self, buf: &mut Vec<f64>) {
-        NodeCtx::reduce_all(self, buf)
+    fn start_collective(
+        &mut self,
+        kind: CollectiveKind,
+        root: usize,
+        payload: Vec<f64>,
+        metric: bool,
+    ) -> CollectiveHandle {
+        self.start_inner(kind, root, payload, metric)
     }
 
-    fn metric_reduce_all(&mut self, buf: &mut Vec<f64>) {
-        NodeCtx::metric_reduce_all(self, buf)
+    fn wait_collective(&mut self, h: CollectiveHandle) -> Vec<f64> {
+        self.wait_inner(h)
     }
 
-    fn broadcast(&mut self, root: usize, buf: &mut Vec<f64>) {
-        NodeCtx::broadcast(self, root, buf)
-    }
-
-    fn reduce(&mut self, root: usize, buf: &mut Vec<f64>) {
-        NodeCtx::reduce(self, root, buf)
-    }
-
-    fn all_gather_concat(&mut self, part: &[f64]) -> Vec<f64> {
-        NodeCtx::all_gather_concat(self, part)
-    }
-
-    fn metric_all_gather_concat(&mut self, part: &[f64]) -> Vec<f64> {
-        NodeCtx::metric_all_gather_concat(self, part)
-    }
-
-    fn reduce_all_scalar(&mut self, x: f64) -> f64 {
-        NodeCtx::reduce_all_scalar(self, x)
-    }
-
-    fn reduce_all_scalar2(&mut self, x: f64, y: f64) -> (f64, f64) {
-        NodeCtx::reduce_all_scalar2(self, x, y)
-    }
-
-    fn barrier(&mut self) {
-        NodeCtx::barrier(self)
+    fn overlap_seconds(&self) -> f64 {
+        self.overlap_seconds
     }
 
     fn obs_enabled(&self) -> bool {

@@ -1,13 +1,22 @@
 //! Shared-memory transport: the original in-process thread cluster,
 //! refactored behind the [`Transport`] trait.
 //!
-//! Each rank is an OS thread; the "network" is a [`Blackboard`] — per-rank
-//! payload slots plus a reusable two-phase abortable barrier. The barrier
+//! Each rank is an OS thread; the "network" is a [`Blackboard`] — a map of
+//! in-flight collective *rounds* (keyed by the per-rank round sequence
+//! number, identical across ranks under SPMD discipline) plus a reusable
+//! two-phase abortable barrier. `start` deposits this rank's contribution
+//! into the round without blocking; `wait` joins the barrier, where the
 //! leader (last arriver) combines the deposited contributions in rank
 //! order and prices the transfer; every rank then reads the same result
 //! and clock window, so the outcome is independent of thread scheduling.
 //! Seeded [`ComputeModel::Modeled`](crate::net::ComputeModel) runs through
 //! this backend are bit-identical to the pre-refactor simulator.
+//!
+//! Waits need not be FIFO, but their order must agree across ranks: each
+//! barrier generation completes exactly one round, and every rank reads
+//! the round named by *its own* handle — a cross-rank wait-order
+//! divergence leaves that round uncombined and fails loudly on the
+//! `combined` assertion instead of silently mixing rounds.
 //!
 //! ## Failure semantics
 //!
@@ -20,7 +29,8 @@
 
 use crate::net::cost::{CollectiveKind, CostModel};
 use crate::net::stats::CommStats;
-use crate::net::transport::{combine, CollectiveOutcome, Transport};
+use crate::net::transport::{combine, CollectiveHandle, CollectiveOutcome, Transport};
+use std::collections::BTreeMap;
 use std::sync::Arc;
 #[cfg(not(loom))]
 use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
@@ -109,27 +119,52 @@ impl AbortBarrier {
     }
 }
 
-struct Slots {
+/// One in-flight collective round: contributions deposited at `start`,
+/// combined and priced by the barrier leader at `wait`, removed when the
+/// last rank has read the result.
+struct Round {
     contribs: Vec<Vec<f64>>,
     clocks: Vec<f64>,
-    /// Result of the current collective (valid between barrier A and B+read).
+    /// Result of the round (valid between barrier A and the last read).
     result: Vec<f64>,
-    /// Synchronized departure clock for the current collective.
+    /// Synchronized departure clock.
     depart_clock: f64,
     /// Max arrival clock (start of the comm window).
     comm_start: f64,
-    /// Priced message size of the current collective, set by the leader
-    /// (for AllGather: the true summed contribution size). Every rank
-    /// mirrors this value so per-node and global accounting agree and are
+    /// Priced message size, set by the leader (for AllGather: the true
+    /// summed contribution size). Every rank mirrors this value so
+    /// per-node and global accounting agree and are
     /// scheduling-independent.
     priced_doubles: usize,
+    /// Set by the leader once the round is combined; a reader finding it
+    /// unset caught the ranks waiting different rounds in the same
+    /// barrier generation.
+    combined: bool,
+    /// Ranks that have read the result; the last one removes the round.
+    readers: usize,
+}
+
+impl Round {
+    fn new(m: usize) -> Self {
+        Self {
+            contribs: vec![Vec::new(); m],
+            clocks: vec![0.0; m],
+            result: Vec::new(),
+            depart_clock: 0.0,
+            comm_start: 0.0,
+            priced_doubles: 0,
+            combined: false,
+            readers: 0,
+        }
+    }
 }
 
 /// Shared collective state (the "network" of the thread cluster).
 pub struct Blackboard {
     m: usize,
     cost: CostModel,
-    slots: Mutex<Slots>,
+    /// In-flight rounds, keyed by the per-rank round sequence number.
+    rounds: Mutex<BTreeMap<u64, Round>>,
     barrier_a: AbortBarrier,
     barrier_b: AbortBarrier,
     stats: Mutex<CommStats>,
@@ -144,14 +179,7 @@ impl Blackboard {
         Self {
             m,
             cost,
-            slots: Mutex::new(Slots {
-                contribs: vec![Vec::new(); m],
-                clocks: vec![0.0; m],
-                result: Vec::new(),
-                depart_clock: 0.0,
-                comm_start: 0.0,
-                priced_doubles: 0,
-            }),
+            rounds: Mutex::new(BTreeMap::new()),
             barrier_a: AbortBarrier::new(m),
             barrier_b: AbortBarrier::new(m),
             stats: Mutex::new(CommStats::default()),
@@ -200,12 +228,16 @@ impl Blackboard {
 pub struct ShmTransport {
     rank: usize,
     board: Arc<Blackboard>,
+    /// This rank's round sequence number (next `start` posts round
+    /// `seq + 1`). SPMD discipline makes it identical across ranks at
+    /// every program point, so it doubles as the shared round key.
+    seq: u64,
 }
 
 impl ShmTransport {
     pub fn new(board: Arc<Blackboard>, rank: usize) -> Self {
         assert!(rank < board.m, "rank out of range");
-        Self { rank, board }
+        Self { rank, board, seq: 0 }
     }
 }
 
@@ -218,7 +250,7 @@ impl Transport for ShmTransport {
         self.board.m
     }
 
-    fn collective(
+    fn start_collective(
         &mut self,
         kind: CollectiveKind,
         root: usize,
@@ -226,53 +258,87 @@ impl Transport for ShmTransport {
         payload: Vec<f64>,
         arrival_clock: f64,
         metric: bool,
-    ) -> CollectiveOutcome {
+    ) -> CollectiveHandle {
+        self.seq += 1;
+        let token = self.seq;
+        let payload_len = payload.len();
         let board = &*self.board;
         {
-            let mut s = lock_ignore_poison(&board.slots);
-            s.contribs[self.rank] = payload;
-            s.clocks[self.rank] = arrival_clock;
+            let m = board.m;
+            let mut rounds = lock_ignore_poison(&board.rounds);
+            let r = rounds.entry(token).or_insert_with(|| Round::new(m));
+            r.contribs[self.rank] = payload;
+            r.clocks[self.rank] = arrival_clock;
         }
+        CollectiveHandle::new(token, kind, root, k_doubles, metric, payload_len, arrival_clock)
+    }
+
+    fn wait_collective(&mut self, h: CollectiveHandle) -> CollectiveOutcome {
+        let board = &*self.board;
+        // Every rank deposited this round at `start` (start precedes wait
+        // on each rank), so once all m ranks are in this barrier the
+        // leader sees a complete contribution set for *its* round.
         let leader = match board.barrier_a.wait() {
             Ok(l) => l,
             Err(Aborted) => peer_abort(),
         };
         if leader {
-            let mut s = lock_ignore_poison(&board.slots);
-            let comm_start = s.clocks.iter().cloned().fold(0.0, f64::max);
+            let mut rounds = lock_ignore_poison(&board.rounds);
+            let r = rounds
+                .get_mut(&h.token)
+                .expect("shm round vanished before its wait");
+            let comm_start = r.clocks.iter().cloned().fold(0.0, f64::max);
             // AllGather contributions may be ragged; price the true summed
             // size rather than any single rank's guess — the leader is an
             // arbitrary thread, so a rank-local size would make pricing
             // (and CommStats) depend on thread scheduling.
-            let k_eff = if kind == CollectiveKind::AllGather {
-                s.contribs.iter().map(|c| c.len()).sum()
+            let k_eff = if h.kind == CollectiveKind::AllGather {
+                r.contribs.iter().map(|c| c.len()).sum()
             } else {
-                k_doubles
+                h.k_doubles
             };
-            let t_comm = if metric {
+            let t_comm = if h.metric {
                 0.0
             } else {
-                board.cost.time(kind, k_eff, board.m)
+                board.cost.time(h.kind, k_eff, board.m)
             };
-            s.comm_start = comm_start;
-            s.depart_clock = comm_start + t_comm;
-            s.priced_doubles = k_eff;
-            let result = combine(kind, root, &s.contribs);
-            s.result = result;
-            if !metric {
-                lock_ignore_poison(&board.stats).record(kind, k_eff, t_comm);
+            r.comm_start = comm_start;
+            r.depart_clock = comm_start + t_comm;
+            r.priced_doubles = k_eff;
+            r.result = combine(h.kind, h.root, &r.contribs);
+            r.combined = true;
+            if !h.metric {
+                lock_ignore_poison(&board.stats).record(h.kind, k_eff, t_comm);
             }
         }
         if board.barrier_b.wait().is_err() {
             peer_abort();
         }
-        let s = lock_ignore_poison(&board.slots);
-        CollectiveOutcome {
-            result: s.result.clone(),
-            comm_start: s.comm_start,
-            depart: s.depart_clock,
-            priced_doubles: s.priced_doubles,
+        let mut rounds = lock_ignore_poison(&board.rounds);
+        let r = rounds
+            .get_mut(&h.token)
+            .expect("shm round vanished before its read");
+        assert!(
+            r.combined,
+            "cluster node failed: rank {}: split-phase wait order diverged \
+             across ranks (round {} reached its barrier uncombined)",
+            self.rank, h.token
+        );
+        r.readers += 1;
+        let out = CollectiveOutcome {
+            result: if r.readers == board.m {
+                std::mem::take(&mut r.result)
+            } else {
+                r.result.clone()
+            },
+            comm_start: r.comm_start,
+            depart: r.depart_clock,
+            priced_doubles: r.priced_doubles,
+        };
+        if r.readers == board.m {
+            rounds.remove(&h.token);
         }
+        out
     }
 
     fn global_stats(&self) -> Option<CommStats> {

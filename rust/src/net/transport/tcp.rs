@@ -76,13 +76,32 @@
 //! the previous step to the right neighbour (even ranks send-then-recv,
 //! odd ranks recv-then-send, so the cycle can never be all-senders).
 //!
+//! ## Split-phase rounds
+//!
+//! `start_collective` performs **no I/O**: it claims the next `seq` and
+//! queues the round (kind, payloads, arrival clock) locally; the whole
+//! tree/ring protocol runs at `wait_collective` under the round's captured
+//! `seq`. Writing frames eagerly at `start` would be wrong here: each peer
+//! pair shares one ordered stream, and a *blocking* collective issued
+//! between another round's `start` and `wait` (the metric channel, or
+//! `Checked`'s validation round) would find the eager frames of the
+//! not-yet-waited round ahead of its own and desync on the seq check.
+//! Deferring all I/O to `wait` keeps every stream's frame order equal to
+//! the global wait order, which SPMD discipline makes identical on all
+//! ranks — so any cross-rank-consistent wait order is safe, FIFO or not.
+//! The deferral is invisible to the modeled timeline (the priced window is
+//! a pure function of the arrival clocks captured at `start`) and to the
+//! wire ledger (the same frames move, at `wait`).
+//!
 //! The α–β cost model still prices every collective (that is what the
 //! simulated clocks advance by); the bytes actually crossing the sockets
 //! are recorded separately in [`CommStats::wire_bytes`]
 //! (crate::net::CommStats).
 
 use crate::net::cost::{CollectiveKind, CostModel};
-use crate::net::transport::{combine, CollectiveOutcome, EpochFault, FaultKind, Transport};
+use crate::net::transport::{
+    combine, CollectiveHandle, CollectiveOutcome, EpochFault, FaultKind, Transport,
+};
 use crate::util::bytes::{put_f64, put_f64s, put_u16, put_u32, put_u64, put_u8, ByteReader};
 use crate::util::prng::Xoshiro256pp;
 use std::io::{ErrorKind, Read, Write};
@@ -440,6 +459,19 @@ pub struct ReformInfo {
     pub epoch: u64,
 }
 
+/// One round claimed by `start_collective` but not yet executed: all the
+/// protocol I/O runs at `wait_collective` under the captured `seq` (see
+/// the module's split-phase notes).
+struct PendingRound {
+    seq: u64,
+    kind: CollectiveKind,
+    root: usize,
+    k_doubles: usize,
+    payload: Vec<f64>,
+    arrival_clock: f64,
+    metric: bool,
+}
+
 /// Multi-process collective backend over TCP (see module docs).
 pub struct TcpTransport {
     rank: usize,
@@ -455,6 +487,9 @@ pub struct TcpTransport {
     epoch: u64,
     /// `Some` when elastic membership is enabled.
     elastic: Option<ElasticState>,
+    /// Rounds started but not yet waited (cleared by every reform — a
+    /// pre-reform handle is stale and its wait fails loudly).
+    pending: Vec<PendingRound>,
 }
 
 impl TcpTransport {
@@ -505,6 +540,7 @@ impl TcpTransport {
             wire_bytes: 0,
             epoch: FIRST_EPOCH,
             elastic: None,
+            pending: Vec::new(),
         }
     }
 
@@ -603,6 +639,7 @@ impl TcpTransport {
             wire_bytes: wire,
             epoch: FIRST_EPOCH,
             elastic: None,
+            pending: Vec::new(),
         }
     }
 
@@ -657,12 +694,21 @@ impl TcpTransport {
             wire_bytes: wire,
             epoch: FIRST_EPOCH,
             elastic: None,
+            pending: Vec::new(),
         }
     }
 
     fn send(&mut self, peer: usize, tag: u8, payload: &[u8]) {
+        let seq = self.seq;
+        self.send_seq(peer, tag, payload, seq)
+    }
+
+    /// Frame write under an explicit collective sequence number — the one
+    /// captured by the round's `start` (split-phase waits run the protocol
+    /// after `self.seq` has moved on).
+    fn send_seq(&mut self, peer: usize, tag: u8, payload: &[u8], seq: u64) {
         let rank = self.rank;
-        let (epoch, seq) = (self.epoch, self.seq);
+        let epoch = self.epoch;
         let stream = match self.peers[peer].as_mut() {
             Some(s) => s,
             None => fail(rank, format!("no connection to rank {peer}")),
@@ -677,8 +723,15 @@ impl TcpTransport {
     }
 
     fn recv(&mut self, peer: usize, tag: u8) -> Vec<u8> {
+        let seq = self.seq;
+        self.recv_seq(peer, tag, seq)
+    }
+
+    /// Frame read validating an explicit collective sequence number (see
+    /// [`send_seq`](Self::send_seq)).
+    fn recv_seq(&mut self, peer: usize, tag: u8, seq: u64) -> Vec<u8> {
         let rank = self.rank;
-        let (epoch, seq) = (self.epoch, self.seq);
+        let epoch = self.epoch;
         let stream = match self.peers[peer].as_mut() {
             Some(s) => s,
             None => fail(rank, format!("no connection to rank {peer}")),
@@ -1070,6 +1123,7 @@ impl TcpTransport {
         self.world = new_world;
         self.epoch = new_epoch;
         self.seq = 0;
+        self.pending.clear();
         self.wire_bytes += wire;
         Ok(ReformInfo { rank: 0, world: new_world, joined, epoch: new_epoch })
     }
@@ -1127,6 +1181,7 @@ impl TcpTransport {
         self.world = info.world;
         self.epoch = new_epoch;
         self.seq = 0;
+        self.pending.clear();
         self.wire_bytes += wire;
         Ok(info)
     }
@@ -1142,6 +1197,7 @@ impl TcpTransport {
         payload: Vec<f64>,
         arrival_clock: f64,
         metric: bool,
+        seq: u64,
     ) -> CollectiveOutcome {
         let rank = self.rank;
         let world = self.world;
@@ -1156,7 +1212,7 @@ impl TcpTransport {
         let mut entries: Vec<(u32, f64, Vec<f64>)> = vec![own];
         let kids = tree_children(rank, world);
         for &c in &kids {
-            let frame = self.recv(c, TAG_GATHER);
+            let frame = self.recv_seq(c, TAG_GATHER, seq);
             decode_entries(&frame, &mut entries, rank, c, world);
         }
         if rank == 0 {
@@ -1190,7 +1246,7 @@ impl TcpTransport {
             put_u32(&mut down, result.len() as u32);
             put_f64s(&mut down, &result);
             for &c in &kids {
-                self.send(c, TAG_DOWN, &down);
+                self.send_seq(c, TAG_DOWN, &down, seq);
             }
             CollectiveOutcome {
                 result,
@@ -1208,10 +1264,10 @@ impl TcpTransport {
                 put_f64s(&mut up, data);
             }
             let parent = tree_parent(rank);
-            self.send(parent, TAG_GATHER, &up);
-            let down = self.recv(parent, TAG_DOWN);
+            self.send_seq(parent, TAG_GATHER, &up, seq);
+            let down = self.recv_seq(parent, TAG_DOWN, seq);
             for &c in &kids {
-                self.send(c, TAG_DOWN, &down);
+                self.send_seq(c, TAG_DOWN, &down, seq);
             }
             let mut r = ByteReader::new(&down);
             let parsed = (|| -> Result<CollectiveOutcome, String> {
@@ -1237,6 +1293,7 @@ impl TcpTransport {
         payload: Vec<f64>,
         arrival_clock: f64,
         metric: bool,
+        seq: u64,
     ) -> CollectiveOutcome {
         let rank = self.rank;
         let world = self.world;
@@ -1262,11 +1319,11 @@ impl TcpTransport {
             // never be all-senders, so full socket buffers cannot deadlock
             // the step.
             let incoming = if rank % 2 == 0 {
-                self.send(right, TAG_RING, &frame);
-                self.recv(left, TAG_RING)
+                self.send_seq(right, TAG_RING, &frame, seq);
+                self.recv_seq(left, TAG_RING, seq)
             } else {
-                let inc = self.recv(left, TAG_RING);
-                self.send(right, TAG_RING, &frame);
+                let inc = self.recv_seq(left, TAG_RING, seq);
+                self.send_seq(right, TAG_RING, &frame, seq);
                 inc
             };
             let mut r = ByteReader::new(&incoming);
@@ -1328,7 +1385,7 @@ impl Transport for TcpTransport {
         self.world
     }
 
-    fn collective(
+    fn start_collective(
         &mut self,
         kind: CollectiveKind,
         root: usize,
@@ -1336,28 +1393,64 @@ impl Transport for TcpTransport {
         payload: Vec<f64>,
         arrival_clock: f64,
         metric: bool,
-    ) -> CollectiveOutcome {
+    ) -> CollectiveHandle {
         assert!(root < self.world, "collective root out of range");
         self.seq += 1;
+        let payload_len = payload.len();
+        self.pending.push(PendingRound {
+            seq: self.seq,
+            kind,
+            root,
+            k_doubles,
+            payload,
+            arrival_clock,
+            metric,
+        });
+        CollectiveHandle::new(self.seq, kind, root, k_doubles, metric, payload_len, arrival_clock)
+    }
+
+    fn wait_collective(&mut self, handle: CollectiveHandle) -> CollectiveOutcome {
+        let idx = match self.pending.iter().position(|p| p.seq == handle.token) {
+            Some(i) => i,
+            None => fail(
+                self.rank,
+                format!(
+                    "wait on unknown collective round {} (already waited, or a \
+                     stale pre-reform handle)",
+                    handle.token
+                ),
+            ),
+        };
+        let p = self.pending.swap_remove(idx);
         if self.world == 1 {
             // Degenerate fleet: mirror the shm pricing exactly (T = 0 at
             // m = 1; AllGather priced from the contribution size).
-            let k_eff = if kind == CollectiveKind::AllGather {
-                payload.len()
+            let k_eff = if p.kind == CollectiveKind::AllGather {
+                p.payload.len()
             } else {
-                k_doubles
+                p.k_doubles
             };
-            let contribs = vec![payload];
+            let contribs = vec![p.payload];
             return CollectiveOutcome {
-                result: combine(kind, root, &contribs),
-                comm_start: arrival_clock,
-                depart: arrival_clock,
+                result: combine(p.kind, p.root, &contribs),
+                comm_start: p.arrival_clock,
+                depart: p.arrival_clock,
                 priced_doubles: k_eff,
             };
         }
-        match kind {
-            CollectiveKind::AllGather => self.ring_all_gather(payload, arrival_clock, metric),
-            _ => self.tree_collective(kind, root, k_doubles, payload, arrival_clock, metric),
+        match p.kind {
+            CollectiveKind::AllGather => {
+                self.ring_all_gather(p.payload, p.arrival_clock, p.metric, p.seq)
+            }
+            _ => self.tree_collective(
+                p.kind,
+                p.root,
+                p.k_doubles,
+                p.payload,
+                p.arrival_clock,
+                p.metric,
+                p.seq,
+            ),
         }
     }
 

@@ -56,7 +56,7 @@ pub fn to_chrome_trace(events: &[Event]) -> String {
                 json::obj(base(e, "B", label, phase.name()))
             }
             EventKind::SpanEnd { phase, label } => json::obj(base(e, "E", label, phase.name())),
-            EventKind::Counter { rounds, scalar_rounds, doubles, comm_seconds } => {
+            EventKind::Counter { rounds, scalar_rounds, doubles, comm_seconds, overlap_seconds } => {
                 let mut pairs = base(e, "C", "comm", "counter");
                 pairs.push((
                     "args",
@@ -65,6 +65,7 @@ pub fn to_chrome_trace(events: &[Event]) -> String {
                         ("scalar_rounds", json::num(*scalar_rounds as f64)),
                         ("doubles", json::num(*doubles as f64)),
                         ("comm_s", json::num(*comm_seconds)),
+                        ("overlap_s", json::num(*overlap_seconds)),
                     ]),
                 ));
                 json::obj(pairs)

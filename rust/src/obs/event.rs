@@ -119,6 +119,9 @@ pub enum EventKind {
         scalar_rounds: u64,
         doubles: u64,
         comm_seconds: f64,
+        /// Seconds of communication hidden under compute by split-phase
+        /// collectives this outer iteration (0 for blocking runs).
+        overlap_seconds: f64,
     },
     /// One solver step observation (a Figure-3 data point as an event).
     Step {
@@ -194,11 +197,12 @@ impl Event {
                 put_u8(buf, phase.code());
                 put_str(buf, label);
             }
-            EventKind::Counter { rounds, scalar_rounds, doubles, comm_seconds } => {
+            EventKind::Counter { rounds, scalar_rounds, doubles, comm_seconds, overlap_seconds } => {
                 put_u64(buf, *rounds);
                 put_u64(buf, *scalar_rounds);
                 put_u64(buf, *doubles);
                 put_f64(buf, *comm_seconds);
+                put_f64(buf, *overlap_seconds);
             }
             EventKind::Step { grad_norm, fval, inner_iters, rounds } => {
                 put_f64(buf, *grad_norm);
@@ -234,6 +238,7 @@ impl Event {
                 scalar_rounds: r.u64()?,
                 doubles: r.u64()?,
                 comm_seconds: r.f64()?,
+                overlap_seconds: r.f64()?,
             },
             3 => EventKind::Step {
                 grad_norm: r.f64()?,
@@ -262,11 +267,12 @@ impl Event {
                 pairs.push(("phase", json::s(phase.name())));
                 pairs.push(("label", json::s(label)));
             }
-            EventKind::Counter { rounds, scalar_rounds, doubles, comm_seconds } => {
+            EventKind::Counter { rounds, scalar_rounds, doubles, comm_seconds, overlap_seconds } => {
                 pairs.push(("rounds", json::num(*rounds as f64)));
                 pairs.push(("scalar_rounds", json::num(*scalar_rounds as f64)));
                 pairs.push(("doubles", json::num(*doubles as f64)));
                 pairs.push(("comm_s", json::num(*comm_seconds)));
+                pairs.push(("overlap_s", json::num(*overlap_seconds)));
             }
             EventKind::Step { grad_norm, fval, inner_iters, rounds } => {
                 pairs.push(("grad_norm", json::num(*grad_norm)));
@@ -312,6 +318,8 @@ impl Event {
                 scalar_rounds: field("scalar_rounds")? as u64,
                 doubles: field("doubles")? as u64,
                 comm_seconds: field("comm_s")?,
+                // Lenient: absent in pre-overlap streams ⇒ 0.
+                overlap_seconds: v.get("overlap_s").as_f64().unwrap_or(0.0),
             },
             "step" => EventKind::Step {
                 grad_norm: field("grad_norm")?,
@@ -404,6 +412,7 @@ pub(crate) mod tests {
                     scalar_rounds: 0,
                     doubles: 987_654_321,
                     comm_seconds: f64::MIN_POSITIVE,
+                    overlap_seconds: 0.125,
                 },
             },
             Event {

@@ -16,6 +16,8 @@ pub struct Summary {
     pub scalar_rounds: u64,
     pub doubles: u64,
     pub comm_seconds: f64,
+    /// Modeled seconds hidden under compute by split-phase collectives.
+    pub overlap_seconds: f64,
     pub steps: u64,
     /// Incidents with kind `"stall"` / all incidents.
     pub stalls: u64,
@@ -52,11 +54,12 @@ pub fn summarize(events: &[Event]) -> Summary {
                     }
                 }
             }
-            EventKind::Counter { rounds, scalar_rounds, doubles, comm_seconds } => {
+            EventKind::Counter { rounds, scalar_rounds, doubles, comm_seconds, overlap_seconds } => {
                 sum.rounds += rounds;
                 sum.scalar_rounds += scalar_rounds;
                 sum.doubles += doubles;
                 sum.comm_seconds += comm_seconds;
+                sum.overlap_seconds += overlap_seconds;
             }
             EventKind::Step { .. } => sum.steps += 1,
             EventKind::Incident { kind, .. } => {
@@ -81,11 +84,12 @@ impl Summary {
             out.push_str(&format!("{:<13} {:>5}  {:>11.6}\n", phase.name(), n, secs));
         }
         out.push_str(&format!(
-            "events: rounds={} (scalar {}) doubles={} comm_time={:.3}ms steps={} stalls={} incidents={}\n",
+            "events: rounds={} (scalar {}) doubles={} comm_time={:.3}ms overlap={:.3}ms steps={} stalls={} incidents={}\n",
             self.rounds,
             self.scalar_rounds,
             self.doubles,
             self.comm_seconds * 1e3,
+            self.overlap_seconds * 1e3,
             self.steps,
             self.stalls,
             self.incidents,
@@ -107,9 +111,9 @@ impl Summary {
             out.push_str(&format!("{},{},{}\n", phase.name(), n, secs));
         }
         out.push_str(&format!(
-            "totals(rounds={};scalar={};doubles={};stalls={}),{},{}\n",
-            self.rounds, self.scalar_rounds, self.doubles, self.stalls, self.steps,
-            self.comm_seconds,
+            "totals(rounds={};scalar={};doubles={};stalls={};overlap_s={}),{},{}\n",
+            self.rounds, self.scalar_rounds, self.doubles, self.stalls, self.overlap_seconds,
+            self.steps, self.comm_seconds,
         ));
         out
     }
@@ -140,8 +144,8 @@ mod tests {
     #[test]
     fn counters_steps_and_stalls_total_up() {
         let events = vec![
-            ev(0, 0.1, EventKind::Counter { rounds: 3, scalar_rounds: 1, doubles: 64, comm_seconds: 0.5 }),
-            ev(0, 0.2, EventKind::Counter { rounds: 2, scalar_rounds: 0, doubles: 36, comm_seconds: 0.25 }),
+            ev(0, 0.1, EventKind::Counter { rounds: 3, scalar_rounds: 1, doubles: 64, comm_seconds: 0.5, overlap_seconds: 0.125 }),
+            ev(0, 0.2, EventKind::Counter { rounds: 2, scalar_rounds: 0, doubles: 36, comm_seconds: 0.25, overlap_seconds: 0.0 }),
             ev(0, 0.2, EventKind::Step { grad_norm: 1.0, fval: 2.0, inner_iters: 3, rounds: 5 }),
             ev(0, 0.3, EventKind::Incident { kind: "stall".into(), detail: "x".into() }),
             ev(0, 0.4, EventKind::Incident { kind: "fault".into(), detail: "y".into() }),
@@ -149,6 +153,7 @@ mod tests {
         let s = summarize(&events);
         assert_eq!((s.rounds, s.scalar_rounds, s.doubles), (5, 1, 100));
         assert_eq!(s.comm_seconds, 0.75);
+        assert_eq!(s.overlap_seconds, 0.125);
         assert_eq!((s.steps, s.stalls, s.incidents), (1, 1, 2));
         let table = s.render_table(None);
         assert!(table.contains("rounds=5"), "{table}");

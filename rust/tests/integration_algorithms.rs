@@ -479,3 +479,99 @@ fn modeled_runs_are_bit_identical_end_to_end() {
         }
     }
 }
+
+/// Tentpole acceptance for split-phase PCG: with `sim.overlap` off the
+/// blocking path runs (bit-identical to the seed by construction);
+/// turning it on must (a) leave every iterate and convergence record
+/// bit-identical — the block sweeps slice the same per-row/per-column
+/// gathers and the combine sums in rank order per element — while moving
+/// the *same* doubles through more, smaller rounds, and (b) strictly cut
+/// the modeled wall time on a comm-bound config, because pipelining
+/// leaves only the last block's bandwidth term exposed.
+#[test]
+fn split_phase_overlap_preserves_bits_and_cuts_modeled_time() {
+    use disco::algorithms::{run_spec, RunSpec};
+    // d = 160 ≥ 128 with ≈3.8k nnz per shard, so DiSCO-S shards build the
+    // CSR mirror (feature-row blocks); sparse storage gives DiSCO-F its
+    // sample-column blocks. Slow network + modeled compute = comm-bound.
+    let ds = SyntheticConfig::new("overlap", 480, 160)
+        .density(0.2)
+        .label_noise(0.05)
+        .seed(33)
+        .generate();
+    for kind in [AlgoKind::DiscoS, AlgoKind::DiscoF] {
+        let mut spec = RunSpec::new(kind, LossKind::Logistic, 1e-3)
+            .with_m(4)
+            .with_compute(disco::net::ComputeModel::modeled())
+            .with_cost(CostModel::slow())
+            .with_grad_tol(0.0)
+            .with_max_outer(3);
+        let blocking = run_spec(&ds, &spec);
+        spec.sim.overlap = true;
+        let overlapped = run_spec(&ds, &spec);
+
+        assert_eq!(blocking.w.len(), overlapped.w.len(), "{}", kind.name());
+        for (a, b) in blocking.w.iter().zip(overlapped.w.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{}: overlap changed the math", kind.name());
+        }
+        assert_eq!(blocking.records.len(), overlapped.records.len(), "{}", kind.name());
+        for (ra, rb) in blocking.records.iter().zip(overlapped.records.iter()) {
+            assert_eq!(ra.grad_norm.to_bits(), rb.grad_norm.to_bits(), "{}", kind.name());
+            assert_eq!(ra.fval.to_bits(), rb.fval.to_bits(), "{}", kind.name());
+            assert_eq!(ra.inner_iters, rb.inner_iters, "{}", kind.name());
+        }
+        // Volume is conserved; the HVP reduce is merely split into
+        // OVERLAP_BLOCKS smaller rounds.
+        assert_eq!(
+            blocking.stats.vector_doubles, overlapped.stats.vector_doubles,
+            "{}: overlap must not change communication volume",
+            kind.name()
+        );
+        assert!(
+            overlapped.stats.vector_rounds > blocking.stats.vector_rounds,
+            "{}: split rounds expected ({} !> {})",
+            kind.name(),
+            overlapped.stats.vector_rounds,
+            blocking.stats.vector_rounds
+        );
+        assert!(
+            overlapped.sim_seconds < blocking.sim_seconds,
+            "{}: overlap must strictly cut modeled time ({:.6}s !< {:.6}s)",
+            kind.name(),
+            overlapped.sim_seconds,
+            blocking.sim_seconds
+        );
+    }
+}
+
+/// Overlap is a no-op where the kernels cannot block: a dense dataset has
+/// neither a CSR mirror nor CSC columns, so the flag falls back to the
+/// blocking path and the runs are bit-identical clocks included.
+#[test]
+fn overlap_flag_is_inert_on_dense_data() {
+    use disco::algorithms::{run_spec, RunSpec};
+    let ds = SyntheticConfig::new("dense-overlap", 96, 48)
+        .density(0.2)
+        .seed(35)
+        .generate_dense();
+    for kind in [AlgoKind::DiscoS, AlgoKind::DiscoF] {
+        let mut spec = RunSpec::new(kind, LossKind::Logistic, 1e-2)
+            .with_m(4)
+            .with_compute(disco::net::ComputeModel::modeled())
+            .with_grad_tol(0.0)
+            .with_max_outer(2);
+        let off = run_spec(&ds, &spec);
+        spec.sim.overlap = true;
+        let on = run_spec(&ds, &spec);
+        assert_eq!(
+            off.sim_seconds.to_bits(),
+            on.sim_seconds.to_bits(),
+            "{}: dense fallback must be the blocking path exactly",
+            kind.name()
+        );
+        assert_eq!(off.stats, on.stats, "{}", kind.name());
+        for (a, b) in off.w.iter().zip(on.w.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{}", kind.name());
+        }
+    }
+}

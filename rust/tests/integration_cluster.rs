@@ -3,7 +3,7 @@
 //! `net::cluster`).
 
 use disco::linalg::ops;
-use disco::net::{Cluster, CostModel};
+use disco::net::{Cluster, Collectives, CostModel};
 
 #[test]
 fn distributed_dot_products_match_serial() {

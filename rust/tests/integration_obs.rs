@@ -15,7 +15,7 @@ use disco::algorithms::{
 use disco::coordinator::experiments::{self, ExperimentConfig};
 use disco::data::{Dataset, SyntheticConfig};
 use disco::loss::LossKind;
-use disco::net::{Cluster, ComputeModel, TcpOptions, TcpTransport};
+use disco::net::{Cluster, Collectives, ComputeModel, TcpOptions, TcpTransport};
 use disco::obs::{from_jsonl, to_chrome_trace, to_jsonl, EventKind, Phase};
 use std::net::TcpListener;
 use std::sync::mpsc::{self, RecvTimeoutError};
@@ -209,6 +209,76 @@ fn instrumented_run_carries_the_expected_event_shapes() {
         assert!((e.rank as usize) < 3, "rank {} out of range", e.rank);
         assert!(e.sim_time >= 0.0);
     }
+}
+
+/// The byte-identity contract extends to *overlapped* runs: a split-phase
+/// DiSCO-F spec emits byte-identical JSONL over shm and tcp, the stream
+/// carries a positive `overlap_seconds` counter, and the start→wait
+/// Collective spans stay balanced.
+#[test]
+fn overlapped_event_streams_are_byte_identical_across_transports() {
+    let (shm, tcp) = with_deadline(120, || {
+        let ds = ds();
+        let mut spec2 = spec(AlgoKind::DiscoF, 2, true);
+        spec2.sim.overlap = true;
+        let shm = run_spec(&ds, &spec2);
+        let tcp = run_tcp_fleet(2, Duration::from_secs(10), |t| {
+            run_over_spec(&ds, &spec2, t, &CheckpointPlan::none(), &RepartitionSpec::none())
+        });
+        (shm, tcp)
+    });
+    let tcp = tcp[0].as_ref().expect("tcp rank 0 result");
+    assert!(!shm.events.is_empty());
+    assert_eq!(
+        to_jsonl(&shm.events),
+        to_jsonl(&tcp.events),
+        "overlapped event streams diverged between transports"
+    );
+    let overlap_total: f64 = shm
+        .events
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::Counter { overlap_seconds, .. } => Some(overlap_seconds),
+            _ => None,
+        })
+        .sum();
+    assert!(
+        overlap_total > 0.0,
+        "split-phase run must credit hidden communication to the counter"
+    );
+    let begins = shm
+        .events
+        .iter()
+        .filter(|e| matches!(&e.kind, EventKind::SpanBegin { phase: Phase::Collective, .. }))
+        .count();
+    let ends = shm
+        .events
+        .iter()
+        .filter(|e| matches!(&e.kind, EventKind::SpanEnd { phase: Phase::Collective, .. }))
+        .count();
+    assert!(begins > 0, "no Collective spans in an overlapped run");
+    assert_eq!(begins, ends, "unbalanced Collective spans");
+}
+
+/// Bit-invisibility holds on the overlapped code path too: recording a
+/// split-phase run must not move its clock, ledger, or iterates.
+#[test]
+fn obs_is_bit_invisible_on_overlapped_runs() {
+    let ds = ds();
+    let run = |events: bool| {
+        let mut s = spec(AlgoKind::DiscoF, 3, events);
+        s.sim.overlap = true;
+        run_spec(&ds, &s)
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.sim_seconds.to_bits(), on.sim_seconds.to_bits());
+    assert_eq!(off.stats, on.stats, "recorder must not perturb the priced ledger");
+    for (a, b) in off.w.iter().zip(on.w.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert!(off.events.is_empty());
+    assert!(!on.events.is_empty());
 }
 
 /// JSONL round-trips losslessly and the Chrome export names one lane per

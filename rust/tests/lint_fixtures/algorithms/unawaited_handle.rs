@@ -1,0 +1,12 @@
+//! Fixture: a split-phase start whose handle never reaches a wait (one
+//! `unawaited-handle` violation), next to a correctly paired start/wait
+//! (clean). Lint input only — never compiled.
+
+fn leaky(ctx: &mut Ctx, part: Vec<f64>) {
+    let _h = ctx.start_reduce_all(part);
+}
+
+fn paired(ctx: &mut Ctx, part: Vec<f64>) -> Vec<f64> {
+    let h = ctx.start_reduce_all(part);
+    ctx.wait_collective(h)
+}

@@ -13,7 +13,7 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use disco::lint::{lint_tree, RULES};
-use disco::net::{Cluster, ComputeModel, CostModel};
+use disco::net::{Cluster, Collectives, ComputeModel, CostModel};
 
 fn fixtures_root() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/lint_fixtures")
@@ -61,6 +61,7 @@ fn fixtures_flag_in_the_matching_scope() {
     assert_eq!(find("wall-clock").path, "algorithms/wall_clock.rs");
     assert_eq!(find("uncosted-compute").path, "algorithms/uncosted_compute.rs");
     assert_eq!(find("unbounded-read").path, "data/unbounded_read.rs");
+    assert_eq!(find("unawaited-handle").path, "algorithms/unawaited_handle.rs");
     // The allow-directive fixture must contribute nothing.
     assert!(
         violations.iter().all(|v| v.path != "algorithms/allowed.rs"),

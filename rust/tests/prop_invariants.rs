@@ -11,7 +11,7 @@
 use disco::data::{balanced_ranges, weighted_ranges, Partition, SyntheticConfig};
 use disco::linalg::{lu_solve, ops, CscMatrix, CsrMatrix, DataMatrix, HvpKernel, SquareMatrix};
 use disco::loss::{Logistic, Loss, Objective, Quadratic, SquaredHinge};
-use disco::net::{Cluster, CostModel};
+use disco::net::{Cluster, Collectives, CostModel};
 use disco::solvers::{pcg, IdentityPrecond, Woodbury};
 use disco::util::prop::{check, ensure, ensure_close, Gen};
 

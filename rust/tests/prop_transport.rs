@@ -8,7 +8,8 @@
 //! `cluster node failed: rank N: …` within a bounded deadline, never hang.
 
 use disco::net::{
-    Cluster, CollectiveAlgo, Collectives, CommStats, CostModel, NodeCtx, TcpOptions, TcpTransport,
+    Cluster, CollectiveAlgo, CollectiveHandle, Collectives, CommStats, CostModel, NodeCtx,
+    TcpOptions, TcpTransport,
 };
 use disco::util::prop::{check, ensure, Gen};
 use std::net::TcpListener;
@@ -204,6 +205,181 @@ fn prop_shm_and_tcp_collectives_are_bit_identical() {
         }
         Ok(())
     });
+}
+
+/// One step of a random *split-phase* program. Start ops push a handle
+/// onto the in-flight queue, `Wait` retires one (newest or oldest); the
+/// program is pre-generated and shared by every rank, so the wait order
+/// is rank-consistent by construction — exactly the contract the
+/// backends assert.
+#[derive(Clone, Debug)]
+enum SplitOp {
+    Advance(Vec<f64>),
+    StartReduceAll(Vec<Vec<f64>>),
+    /// Ragged (possibly empty) gather parts.
+    StartGather(Vec<Vec<f64>>),
+    StartBroadcast { root: usize, data: Vec<Vec<f64>> },
+    /// Retire one in-flight handle: newest (true) or oldest (false).
+    Wait(bool),
+}
+
+fn gen_split_program(g: &mut Gen, m: usize) -> Vec<SplitOp> {
+    let n_ops = g.usize_in(4, 10);
+    let mut ops = Vec::with_capacity(n_ops);
+    for _ in 0..n_ops {
+        let op = match g.usize_in(0, 5) {
+            0 => SplitOp::Advance((0..m).map(|_| g.f64_in(0.0, 2e-3)).collect()),
+            1 => {
+                let k = g.usize_in(1, 64);
+                SplitOp::StartReduceAll((0..m).map(|_| g.normal_vec(k)).collect())
+            }
+            2 => SplitOp::StartGather(
+                (0..m)
+                    .map(|_| {
+                        let len = g.usize_in(0, 9);
+                        g.normal_vec(len)
+                    })
+                    .collect(),
+            ),
+            3 => {
+                let k = g.usize_in(1, 32);
+                SplitOp::StartBroadcast {
+                    root: g.usize_in(0, m - 1),
+                    data: (0..m).map(|_| g.normal_vec(k)).collect(),
+                }
+            }
+            // Two weights for Wait so deep in-flight queues still drain.
+            _ => SplitOp::Wait(g.usize_in(0, 1) == 1),
+        };
+        ops.push(op);
+    }
+    ops
+}
+
+/// Execute a split-phase program, collecting every result bit and the
+/// clock after each step. Waits on an empty queue skip — identically on
+/// every rank, since the start/wait history is shared.
+fn exec_split<C: Collectives>(ctx: &mut C, ops: &[SplitOp]) -> (Vec<f64>, f64, CommStats, f64) {
+    let rank = ctx.rank();
+    let mut sink: Vec<f64> = Vec::new();
+    let mut inflight: Vec<CollectiveHandle> = Vec::new();
+    for op in ops {
+        match op {
+            SplitOp::Advance(bases) => ctx.advance("work", bases[rank]),
+            SplitOp::StartReduceAll(data) => {
+                inflight.push(ctx.start_reduce_all(data[rank].clone()));
+            }
+            SplitOp::StartGather(data) => {
+                inflight.push(ctx.start_all_gather_concat(&data[rank]));
+            }
+            SplitOp::StartBroadcast { root, data } => {
+                inflight.push(ctx.start_broadcast(*root, data[rank].clone()));
+            }
+            SplitOp::Wait(newest) => {
+                let h = if inflight.is_empty() {
+                    None
+                } else if *newest {
+                    inflight.pop()
+                } else {
+                    Some(inflight.remove(0))
+                };
+                if let Some(h) = h {
+                    sink.extend_from_slice(&ctx.wait_collective(h));
+                }
+            }
+        }
+        sink.push(ctx.clock());
+    }
+    // Every started handle must be waited: drain oldest-first.
+    for h in inflight {
+        sink.extend_from_slice(&ctx.wait_collective(h));
+        sink.push(ctx.clock());
+    }
+    (sink, ctx.clock(), ctx.comm_stats().clone(), ctx.overlap_seconds())
+}
+
+/// Split-phase rounds — multiple handles in flight, compute between start
+/// and wait, newest/oldest retirement orders, ragged gathers — are
+/// bit-identical between the thread simulator and real sockets, including
+/// the priced stats and the overlap-credit ledger.
+#[test]
+fn prop_split_phase_shm_and_tcp_are_bit_identical() {
+    check("split_phase_equivalence", 6, |g: &mut Gen| {
+        let m = g.usize_in(2, 5);
+        let cost = match g.usize_in(0, 2) {
+            0 => CostModel::default(),
+            1 => CostModel::slow(),
+            _ => CostModel::default().with_algo(CollectiveAlgo::Ring),
+        };
+        let ops = gen_split_program(g, m);
+
+        let shm = Cluster::new(m).with_cost(cost).run(|ctx| exec_split(ctx, &ops));
+        let tcp = run_tcp(m, cost, Duration::from_secs(20), |ctx| exec_split(ctx, &ops));
+
+        for rank in 0..m {
+            let (shm_sink, shm_clock, shm_stats, shm_overlap) = &shm.outputs[rank];
+            let (tcp_sink, tcp_clock, tcp_stats, tcp_overlap) = &tcp[rank];
+            ensure(
+                shm_sink.len() == tcp_sink.len(),
+                &format!("rank {rank}: sink lengths {} vs {}", shm_sink.len(), tcp_sink.len()),
+            )?;
+            for (i, (a, b)) in shm_sink.iter().zip(tcp_sink.iter()).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "rank {rank} sink[{i}]: shm {a:?} != tcp {b:?} (bitwise)"
+                    ));
+                }
+            }
+            ensure(
+                shm_clock.to_bits() == tcp_clock.to_bits(),
+                &format!("rank {rank}: clocks {shm_clock} vs {tcp_clock}"),
+            )?;
+            ensure(
+                shm_overlap.to_bits() == tcp_overlap.to_bits(),
+                &format!("rank {rank}: overlap credit {shm_overlap} vs {tcp_overlap}"),
+            )?;
+            ensure(
+                without_wire(shm_stats) == without_wire(tcp_stats),
+                &format!("rank {rank}: stats {shm_stats:?} vs {tcp_stats:?}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// A split-phase schedule that diverges at *start* is reported by the
+/// Checked wrapper before any payload moves — same rule and call index as
+/// the blocking surface, so overlapped algorithms get the same safety
+/// net.
+#[test]
+fn checked_reports_divergence_at_start() {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let res = std::panic::catch_unwind(|| {
+            Cluster::new(2)
+                .with_cost(CostModel::zero())
+                .with_checked(true)
+                .run(|ctx| {
+                    let h = if ctx.rank == 0 {
+                        ctx.start_reduce_all(vec![1.0, 2.0])
+                    } else {
+                        ctx.start_all_gather_concat(&[1.0, 2.0])
+                    };
+                    ctx.wait_collective(h)[0]
+                })
+        });
+        let msg = match res {
+            Ok(_) => "run returned without panicking".to_string(),
+            Err(p) => panic_payload_msg(p),
+        };
+        let _ = tx.send(msg);
+    });
+    let msg = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("checked cluster hung on a start-divergent schedule");
+    assert!(msg.contains("schedule-divergence at call #1"), "{msg}");
+    assert!(msg.contains("AllGather(2)"), "{msg}");
+    assert!(msg.contains("ReduceAll(2)"), "{msg}");
 }
 
 #[test]
